@@ -1,0 +1,93 @@
+//! Ablation (design Fig. 6) — parallel vs serial KV transfer.
+//!
+//! Sweeps the miss ratio (fraction of images whose cache expired and must
+//! be recomputed) with a bandwidth-modelled disk, comparing the overlapped
+//! transfer engine against the serial load-then-compute pipeline.
+//! Expected shape: at 0% and 100% misses the two coincide; in between the
+//! parallel engine approaches max(load, compute) instead of the sum.
+//!
+//! `cargo bench --bench ablation_transfer -- --images 8 --bandwidth-mbps 64`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mpic::harness;
+use mpic::kv::store::{KvStore, StoreConfig};
+use mpic::kv::{KvKey, TransferEngine};
+use mpic::mm::ImageId;
+use mpic::util::bench::{emit, Row, Table};
+use mpic::util::cli::Args;
+use mpic::util::threadpool::ThreadPool;
+
+fn main() {
+    mpic::util::logging::init();
+    if !harness::artifacts_ready() {
+        return;
+    }
+    let args = Args::parse(&["bench"]).unwrap();
+    let model = args.str_or("model", "mpic-sim-a");
+    let n_images = args.usize_or("images", 8).unwrap();
+    let bw_mbps = args.f64_or("bandwidth-mbps", 64.0).unwrap();
+
+    let engine = harness::experiment_engine(&model, "abl-transfer").unwrap();
+    let pool = Arc::new(ThreadPool::new(8));
+
+    let mut table = Table::new(&format!(
+        "Ablation Fig 6: parallel vs serial transfer ({n_images} images, disk @ {bw_mbps} MB/s)"
+    ));
+
+    for miss_pct in [0usize, 25, 50, 75, 100] {
+        let n_miss = n_images * miss_pct / 100;
+        let mut wall = [0f64; 2]; // [parallel, serial]
+        for (mode, slot) in [(true, 0usize), (false, 1usize)] {
+            // Fresh bandwidth-modelled store per run; hits live on disk only
+            // (worst-case load lane), misses are absent entirely.
+            let dir = std::env::temp_dir().join(format!(
+                "mpic-abl-transfer-{}-{miss_pct}-{mode}",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_dir_all(&dir);
+            let store = Arc::new(
+                KvStore::new(StoreConfig {
+                    device_capacity: 1, // force disk reads
+                    host_capacity: 1,
+                    disk_dir: dir,
+                    ttl: Duration::from_secs(600),
+                    disk_bandwidth: Some(bw_mbps * 1e6),
+                })
+                .unwrap(),
+            );
+            let keys: Vec<KvKey> = (0..n_images)
+                .map(|i| KvKey::new(&engine.meta().name, ImageId(0xAB1 + i as u64)))
+                .collect();
+            // Populate the hits (plus LRU filler so nothing stays in RAM).
+            for key in keys.iter().skip(n_miss) {
+                let kv = engine.encode_image(key.image).unwrap();
+                store.put(kv).unwrap();
+            }
+            store.put(engine.encode_image(ImageId(0xFFF1)).unwrap()).unwrap();
+            store.put(engine.encode_image(ImageId(0xFFF2)).unwrap()).unwrap();
+
+            let transfer = if mode {
+                TransferEngine::new(Arc::clone(&pool))
+            } else {
+                TransferEngine::serial(Arc::clone(&pool))
+            };
+            let t0 = std::time::Instant::now();
+            let (out, _rep) =
+                transfer.fetch(&store, &keys, |k| engine.encode_image(k.image)).unwrap();
+            assert_eq!(out.len(), n_images);
+            wall[slot] = t0.elapsed().as_secs_f64();
+        }
+        table.add(
+            Row::new()
+                .num("miss_pct", miss_pct as f64)
+                .num("parallel_ms", wall[0] * 1e3)
+                .num("serial_ms", wall[1] * 1e3)
+                .num("speedup", wall[1] / wall[0].max(1e-12)),
+        );
+    }
+
+    emit("ablation_transfer", &[table]);
+    println!("[shape] mid-range miss ratios should show the overlap win (speedup > 1)");
+}

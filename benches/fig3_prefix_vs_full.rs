@@ -1,0 +1,70 @@
+//! Figure 3 — prefix caching vs full reuse: TTFT (a) and generation
+//! quality (b) as the number of images grows (paper §3.2).
+//!
+//! Expected shape: prefix TTFT grows superlinearly with #images; full-reuse
+//! TTFT stays nearly flat but is *worse* than prefix at 1 image (two-step
+//! overhead); full-reuse quality collapses as images grow. The paper's
+//! headline: full reuse saves up to 69.4% TTFT at many images.
+//!
+//! `cargo bench --bench fig3_prefix_vs_full -- --model mpic-sim-b --convs 3 --max-images 10`
+
+use mpic::coordinator::Policy;
+use mpic::harness;
+use mpic::util::bench::{emit, Row, Table};
+use mpic::util::cli::Args;
+use mpic::workload::{generate, Dataset, WorkloadSpec};
+
+fn main() {
+    mpic::util::logging::init();
+    if !harness::artifacts_ready() {
+        return;
+    }
+    let args = Args::parse(&["bench"]).unwrap();
+    let model = args.str_or("model", "mpic-sim-b");
+    let convs_per_group = args.usize_or("convs", 3).unwrap();
+    let max_images = args.usize_or("max-images", 10).unwrap();
+    let max_new = args.usize_or("max-new", 12).unwrap();
+
+    let engine = harness::experiment_engine(&model, "fig3").unwrap();
+    let mut table = Table::new(&format!(
+        "Fig 3: prefix caching vs full reuse ({model}, MMDU-like, {convs_per_group} convs/group)"
+    ));
+
+    let mut best_saving = 0.0f64;
+    for n_images in 1..=max_images {
+        let spec = WorkloadSpec {
+            dataset: Dataset::Mmdu,
+            n_conversations: convs_per_group,
+            turns_per_conversation: 1,
+            images_min: n_images,
+            images_max: n_images,
+            seed: 0xF163 + n_images as u64,
+        };
+        let convs = generate(&spec);
+        harness::precompute_images(&engine, &convs).unwrap();
+        let prompts: Vec<_> = convs.iter().map(|c| c.turns[0].clone()).collect();
+
+        let (refs, prefix_ttft) = harness::exact_references(&engine, &prompts, max_new).unwrap();
+        let fr = harness::run_policy(&engine, &prompts, Policy::FullReuse, max_new, &refs).unwrap();
+
+        let saving = 1.0 - fr.ttft_s.mean() / prefix_ttft.mean();
+        best_saving = best_saving.max(saving);
+        table.add(
+            Row::new()
+                .num("images", n_images as f64)
+                .num("prefix_ttft_ms", prefix_ttft.mean() * 1e3)
+                .num("full_reuse_ttft_ms", fr.ttft_s.mean() * 1e3)
+                .num("ttft_saving_pct", saving * 100.0)
+                .num("prefix_score", 10.0)
+                .num("full_reuse_score", fr.score.mean())
+                .num("full_reuse_agree", fr.agreement.mean())
+                .num("full_reuse_kl", fr.kl.mean()),
+        );
+    }
+
+    emit("fig3_prefix_vs_full", &[table]);
+    println!(
+        "[headline] max TTFT saving of full reuse vs prefix: {:.1}% (paper: 69.4%)",
+        best_saving * 100.0
+    );
+}

@@ -1,0 +1,105 @@
+//! Figure 4 — attention-score analysis backing Insights 1 & 2 (§3.3):
+//!  (a) CDF of image-token attention scores w.r.t. the last query row
+//!      (log-x; the paper finds <5% of tokens above 1e-3);
+//!  (b) cumulative attention mass of the first n image tokens for three
+//!      representative layers (the paper finds ~80% early).
+//!
+//! `cargo bench --bench fig4_attention_cdf -- --model mpic-sim-a`
+
+use mpic::harness;
+use mpic::mm::{ImageId, Prompt, UserId};
+use mpic::util::bench::{emit, Row, Table};
+use mpic::util::cli::Args;
+
+fn main() {
+    mpic::util::logging::init();
+    if !harness::artifacts_ready() {
+        return;
+    }
+    let args = Args::parse(&["bench"]).unwrap();
+    let model = args.str_or("model", "mpic-sim-a");
+    let engine = harness::experiment_engine(&model, "fig4").unwrap();
+    let user = UserId(1);
+    for h in ["IMAGE#EIFFEL2025", "IMAGE#LOUVRE2025"] {
+        engine.upload_image(user, h).unwrap();
+    }
+    // The Fig. 1 first-round dialogue: interleaved text and images.
+    let prompt = Prompt::new(user)
+        .text("my partner and I took these photos during our trip")
+        .image(ImageId::from_handle("IMAGE#EIFFEL2025"))
+        .image(ImageId::from_handle("IMAGE#LOUVRE2025"))
+        .text("please describe the landmarks and share their history in detail");
+
+    let (layout, attn_last, _attn_l0) = engine.debug_attention(&prompt).unwrap();
+    let meta = engine.meta();
+    let data = attn_last.f32_data().unwrap(); // [L, H, S]
+    let s = data.len() / (meta.n_layers * meta.n_heads);
+
+    // Head-averaged per-layer attention of the last query over the *first*
+    // image's tokens (the paper's setup: scores of IMAGE#EIFFEL2025).
+    let (_, lo, hi) = layout.image_spans[0];
+    let mut per_layer: Vec<Vec<f64>> = vec![vec![0.0; hi - lo]; meta.n_layers];
+    for l in 0..meta.n_layers {
+        for h in 0..meta.n_heads {
+            let base = (l * meta.n_heads + h) * s;
+            for (j, slot) in (lo..hi).enumerate() {
+                per_layer[l][j] += data[base + slot] as f64 / meta.n_heads as f64;
+            }
+        }
+    }
+
+    // (a) CDF over all layers' image-token scores.
+    //
+    // Threshold adaptation: the paper's absolute 1e-3 lives in a ~2500-token
+    // regime where the uniform share is ~4e-4, i.e. 1e-3 ≈ 2.5× uniform. At
+    // our (shorter) sequence length the comparable axis is *multiples of the
+    // uniform share* 1/len (DESIGN.md §2 scaling note).
+    let uniform = 1.0 / layout.len() as f64;
+    let mut all: Vec<f64> = per_layer.iter().flatten().copied().collect();
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = all.len() as f64;
+    let mut cdf_table =
+        Table::new("Fig 4a: CDF of image-token attention scores (x = multiples of uniform share)");
+    for mult in [0.01, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 20.0, 50.0] {
+        let thr = mult * uniform;
+        let below = all.iter().filter(|&&x| x <= thr).count() as f64 / n;
+        cdf_table.add(
+            Row::new()
+                .num("uniform_multiple", mult)
+                .num("score_threshold", thr)
+                .num("cdf", below),
+        );
+    }
+    let above_1e3 = all.iter().filter(|&&x| x > 2.5 * uniform).count() as f64 / n;
+
+    // (b) cumulative mass of the first n tokens, three representative layers.
+    let picks = [0usize, meta.n_layers / 2, meta.n_layers - 1];
+    let mut cum_table = Table::new("Fig 4b: cumulative attention mass of first n image tokens");
+    let t = hi - lo;
+    for frac_idx in 1..=8 {
+        let n_tok = t * frac_idx / 8;
+        let mut row = Row::new().num("first_n_tokens", n_tok as f64);
+        for &l in &picks {
+            let total: f64 = per_layer[l].iter().sum();
+            let cum: f64 = per_layer[l][..n_tok].iter().sum();
+            row = row.num(
+                &format!("layer{l}_cum_frac"),
+                if total > 0.0 { cum / total } else { 0.0 },
+            );
+        }
+        cum_table.add(row);
+    }
+
+    emit("fig4_attention_cdf", &[cdf_table, cum_table]);
+    println!(
+        "[insight 1] fraction of image tokens above 2.5x the uniform share \
+         (the paper's 1e-3 in its ~2500-token regime): {:.1}% (paper: <5%)",
+        above_1e3 * 100.0
+    );
+    let total0: f64 = per_layer[0].iter().sum();
+    let head0: f64 = per_layer[0][..t * 4 / 10].iter().sum();
+    println!(
+        "[insight 2] first 40% of image tokens carry {:.0}% of layer-0 mass (paper: ~80%)",
+        100.0 * head0 / total0.max(1e-12)
+    );
+}

@@ -1,0 +1,155 @@
+//! L3 micro-benchmarks for the performance pass (EXPERIMENTS.md §Perf):
+//! linker assembly, KV codec, tier lookups, JSON manifest parse, thread
+//! pool dispatch. These are the coordinator-side hot-path costs that must
+//! stay well below device-execute time.
+//!
+//! `cargo bench --bench perf_micro`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mpic::coordinator::linker::Linker;
+use mpic::coordinator::selection::{plan, Policy};
+use mpic::kv::store::{KvStore, StoreConfig};
+use mpic::kv::{codec, ImageKv, KvKey, KvShape};
+use mpic::mm::{ImageId, LinkedLayout, Prompt, Tokenizer, UserId};
+use mpic::runtime::artifacts::Manifest;
+use mpic::util::bench::{emit, time_fn, Row, Table};
+use mpic::util::rng::Rng;
+use mpic::util::threadpool::ThreadPool;
+
+fn main() {
+    mpic::util::logging::init();
+    let manifest_path = std::path::Path::new("artifacts/manifest.json");
+
+    // Use the real model dims when available, else a stand-in.
+    let meta = if manifest_path.exists() {
+        Manifest::load(manifest_path).unwrap().models[0].clone()
+    } else {
+        eprintln!("note: artifacts not built; using synthetic model dims");
+        synthetic_meta()
+    };
+
+    let tok = Tokenizer::new(meta.vocab);
+    let mut prompt = Prompt::new(UserId(1)).text("please compare the following scenes");
+    for i in 0..6 {
+        prompt = prompt.image(ImageId(0x9E4F + i)).text("and also");
+    }
+    prompt = prompt.text("in full detail for the travel report");
+    let layout = LinkedLayout::build(&prompt, &tok, meta.img_tokens, "sys prompt");
+    let entries: Vec<ImageKv> =
+        layout.image_spans.iter().map(|&(id, _, _)| synth_entry(&meta, id)).collect();
+    let refs: Vec<&ImageKv> = entries.iter().collect();
+    let linker = Linker::new(&meta);
+    let bucket = layout.len().next_multiple_of(128).max(512);
+    let pl = plan(Policy::MpicK(32), &layout, &[]);
+    let n_bucket = pl.selected.len().next_multiple_of(32);
+
+    let mut table = Table::new("perf_micro: coordinator hot paths");
+    let mut bench = |name: &str, iters: usize, f: &mut dyn FnMut()| {
+        let s = time_fn(3, iters, f);
+        table.add(
+            Row::new()
+                .str("op", name)
+                .num("mean_us", s.mean() * 1e6)
+                .num("p95_us", s.p95() * 1e6)
+                .num("iters", iters as f64),
+        );
+    };
+
+    bench("layout_build", 200, &mut || {
+        std::hint::black_box(LinkedLayout::build(&prompt, &tok, meta.img_tokens, "sys prompt"));
+    });
+    bench("selection_plan_mpic32", 500, &mut || {
+        std::hint::black_box(plan(Policy::MpicK(32), &layout, &[]));
+    });
+    bench("linked_cache_assembly", 50, &mut || {
+        std::hint::black_box(linker.linked_cache(&layout, &refs, bucket).unwrap());
+    });
+    bench("selective_inputs_assembly", 50, &mut || {
+        let (k, v) = linker.linked_cache(&layout, &refs, bucket).unwrap();
+        std::hint::black_box(
+            linker.selective(&layout, &refs, &pl, k, v, bucket, n_bucket).unwrap(),
+        );
+    });
+
+    let entry = synth_entry(&meta, ImageId(1));
+    let encoded = codec::encode(&entry).unwrap();
+    bench("kv_codec_encode", 30, &mut || {
+        std::hint::black_box(codec::encode(&entry).unwrap());
+    });
+    bench("kv_codec_decode", 30, &mut || {
+        std::hint::black_box(codec::decode(&encoded).unwrap());
+    });
+
+    let dir = std::env::temp_dir().join(format!("mpic-perfmicro-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(
+        KvStore::new(StoreConfig {
+            disk_dir: dir,
+            ttl: Duration::from_secs(600),
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    store.put(entry.clone()).unwrap();
+    bench("store_get_device_hit", 100, &mut || {
+        std::hint::black_box(store.get(&entry.key).unwrap());
+    });
+
+    if manifest_path.exists() {
+        let text = std::fs::read_to_string(manifest_path).unwrap();
+        bench("manifest_json_parse", 20, &mut || {
+            std::hint::black_box(mpic::util::json::Value::parse(&text).unwrap());
+        });
+    }
+
+    let pool = ThreadPool::new(8);
+    bench("threadpool_map_64", 50, &mut || {
+        std::hint::black_box(pool.map((0..64).collect::<Vec<u64>>(), |x| x * 2));
+    });
+
+    emit("perf_micro", &[table]);
+}
+
+fn synthetic_meta() -> mpic::runtime::artifacts::ModelMeta {
+    mpic::runtime::artifacts::ModelMeta {
+        name: "synthetic".into(),
+        d_model: 256,
+        n_layers: 4,
+        n_heads: 8,
+        d_head: 32,
+        d_ff: 1024,
+        vocab: 4096,
+        img_tokens: 64,
+        patch_dim: 64,
+        rope_theta: 1e4,
+        sink_sigma: 3.0,
+        sink_tau: 8.0,
+        bos_bias: 2.0,
+        weights: mpic::runtime::artifacts::WeightsMeta {
+            file: String::new(),
+            total_bytes: 0,
+            sha256: String::new(),
+            tensors: vec![],
+        },
+    }
+}
+
+fn synth_entry(meta: &mpic::runtime::artifacts::ModelMeta, id: ImageId) -> ImageKv {
+    let shape = KvShape {
+        layers: meta.n_layers,
+        tokens: meta.img_tokens,
+        heads: meta.n_heads,
+        d_head: meta.d_head,
+        d_model: meta.d_model,
+    };
+    let mut rng = Rng::new(id.0);
+    ImageKv {
+        key: KvKey::new(&meta.name, id),
+        shape,
+        emb: (0..shape.emb_elems()).map(|_| rng.normal() as f32).collect(),
+        k: (0..shape.kv_elems()).map(|_| rng.normal() as f32).collect(),
+        v: (0..shape.kv_elems()).map(|_| rng.normal() as f32).collect(),
+    }
+}

@@ -1,0 +1,74 @@
+//! The paper's Fig. 1 dialogue as a live multi-turn session: interleaved
+//! text/images in round 1, retrieval in round 2, with per-turn TTFT
+//! comparison between prefix caching and MPIC.
+//!
+//! ```sh
+//! cargo run --release --example interleaved_chat
+//! ```
+
+use mpic::coordinator::session::SessionStore;
+use mpic::coordinator::Policy;
+use mpic::harness;
+use mpic::mm::{Prompt, UserId};
+
+fn main() -> mpic::Result<()> {
+    mpic::util::logging::init();
+    if !harness::artifacts_ready() {
+        return Ok(());
+    }
+    let engine = harness::experiment_engine("mpic-sim-a", "chat")?;
+    let user = UserId(2025);
+
+    // The user's photo uploads.
+    engine.upload_image(user, "IMAGE#EIFFEL2025")?;
+    engine.upload_image(user, "IMAGE#LOUVRE2025")?;
+    // The assistant's retrievable references.
+    engine.add_reference("IMAGE#HOTEL01", "hotel facade near the eiffel tower")?;
+    engine.add_reference("IMAGE#HOTEL02", "hotel room with louvre view")?;
+
+    let mut sessions = SessionStore::new();
+
+    // ---- round 1: interleaved text and images -------------------------
+    let turn1 = Prompt::parse(
+        user,
+        "My partner and I took these photos IMAGE#EIFFEL2025 IMAGE#LOUVRE2025 \
+         during our trip. Please describe the landmarks and their history.",
+    );
+    let full1 = sessions.session(user).user_turn(user, &turn1);
+    let exact1 = engine.infer(&full1, Policy::Prefix, 12)?;
+    let mpic1 = engine.infer(&full1, Policy::MpicK(32), 12)?;
+    println!("round 1 (interleaved text+images, {} tokens):", mpic1.seq_len);
+    println!(
+        "  prefix {:6.1} ms | mpic-32 {:6.1} ms | reused {} image tokens verbatim",
+        exact1.ttft.total_s * 1e3,
+        mpic1.ttft.total_s * 1e3,
+        mpic1.seq_len - mpic1.n_selected,
+    );
+    sessions.session(user).assistant_reply(&mpic1.tokens);
+
+    // ---- round 2: retrieval ---------------------------------------------
+    let turn2 = Prompt::parse(user, "We plan to visit both. Can you recommend hotels nearby?");
+    let full2 = sessions.session(user).user_turn(user, &turn2);
+    let (augmented, hits) = engine.mrag_augment(&full2, 2)?;
+    println!("\nround 2 (MRAG): retrieved {} references", hits.len());
+    let exact2 = engine.infer(&augmented, Policy::Prefix, 12)?;
+    let mpic2 = engine.infer(&augmented, Policy::MpicK(32), 12)?;
+    println!(
+        "  history + retrieval = {} tokens; prefix {:6.1} ms | mpic-32 {:6.1} ms ({:.0}% faster)",
+        mpic2.seq_len,
+        exact2.ttft.total_s * 1e3,
+        mpic2.ttft.total_s * 1e3,
+        100.0 * (1.0 - mpic2.ttft.total_s / exact2.ttft.total_s),
+    );
+    println!(
+        "  transfer: {} device hits, {} misses (all of round 1's images hit)",
+        mpic2.transfer.device_hits, mpic2.transfer.misses
+    );
+
+    // The punchline of position independence: round 2's prompt has a
+    // *different prefix* (new opening words), yet every image KV was
+    // reused at a new position without recomputation.
+    assert!(mpic2.transfer.device_hits >= 2);
+    println!("\nposition-independent reuse confirmed across turns ✓");
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! End-to-end serving driver (the EXPERIMENTS.md §E2E run).
+//!
+//! Loads a real (small) model from the AOT artifacts, uploads the workload's
+//! images, then serves batched multi-turn MMDU-like requests through the
+//! continuous-batching scheduler under every CC policy, reporting
+//! latency/throughput and quality vs the exact reference.
+//!
+//! ```sh
+//! cargo run --release --example serve_mmdu -- --convs 8 --turns 2 --max-new 8
+//! ```
+
+use mpic::coordinator::scheduler::{Request, Scheduler};
+use mpic::coordinator::session::SessionStore;
+use mpic::coordinator::Policy;
+use mpic::harness;
+use mpic::quality;
+use mpic::util::bench::{emit, Row, Table};
+use mpic::util::cli::Args;
+use mpic::util::stats::Samples;
+use mpic::workload::{generate, Dataset, WorkloadSpec};
+
+fn main() -> mpic::Result<()> {
+    mpic::util::logging::init();
+    if !harness::artifacts_ready() {
+        return Ok(());
+    }
+    let args = Args::parse(&[])?;
+    let model = args.str_or("model", "mpic-sim-a");
+    let convs = args.usize_or("convs", 8)?;
+    let turns = args.usize_or("turns", 2)?;
+    let max_new = args.usize_or("max-new", 8)?;
+
+    let engine = harness::experiment_engine(&model, "serve-mmdu")?;
+    let spec = WorkloadSpec {
+        dataset: Dataset::Mmdu,
+        n_conversations: convs,
+        turns_per_conversation: turns,
+        images_min: 2,
+        images_max: 4,
+        seed: 0x5E21,
+    };
+    let cs = generate(&spec);
+    let uploaded = harness::precompute_images(&engine, &cs)?;
+    println!("precomputed {uploaded} image KV caches (workflow ①)");
+
+    // Expand multi-turn conversations into full prompts via sessions.
+    let mut prompts = Vec::new();
+    for c in &cs {
+        let mut sessions = SessionStore::new();
+        for turn in &c.turns {
+            let full = sessions.session(c.user).user_turn(c.user, turn);
+            prompts.push(full);
+            sessions.session(c.user).assistant_reply(&[1, 2, 3]);
+        }
+    }
+    println!("serving {} requests ({} convs × {} turns)", prompts.len(), convs, turns);
+
+    // Exact references for scoring.
+    let (refs, _) = harness::exact_references(&engine, &prompts, max_new)?;
+
+    let mut table = Table::new(&format!(
+        "E2E serving: {model}, MMDU-like, {} requests, continuous batching",
+        prompts.len()
+    ));
+    for policy in [Policy::Prefix, Policy::FullReuse, Policy::CacheBlend(15.0), Policy::MpicK(32)]
+    {
+        let mut sched = Scheduler::new(8192, 16);
+        for (i, p) in prompts.iter().enumerate() {
+            sched.submit(Request { id: i as u64, prompt: p.clone(), policy, max_new });
+        }
+        let t0 = std::time::Instant::now();
+        let completions = sched.run_to_completion(&engine)?;
+        let wall = t0.elapsed().as_secs_f64();
+
+        let mut ttft = Samples::new();
+        let mut score = Samples::new();
+        let mut tokens_out = 0usize;
+        for c in &completions {
+            ttft.push(c.result.ttft.total_s);
+            tokens_out += c.result.tokens.len();
+            let s = quality::score(&refs[c.id as usize], &c.result);
+            score.push(s.score);
+        }
+        table.add(
+            Row::new()
+                .str("policy", &policy.name())
+                .num("ttft_p50_ms", ttft.p50() * 1e3)
+                .num("ttft_p95_ms", ttft.p95() * 1e3)
+                .num("score", score.mean())
+                .num("req_per_s", completions.len() as f64 / wall)
+                .num("tok_per_s", tokens_out as f64 / wall)
+                .num("mean_batch", sched.stats.mean_occupancy()),
+        );
+    }
+    emit("serve_mmdu_e2e", &[table]);
+    println!("engine metrics: {}", engine.metrics.snapshot().encode());
+    Ok(())
+}

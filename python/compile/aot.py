@@ -1,0 +1,463 @@
+"""AOT pipeline: lower every L2 entrypoint to HLO *text* artifacts.
+
+Run once by ``make artifacts``::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits, per model config:
+
+  * ``<model>.weights.bin``     — raw little-endian f32 tensors, concatenated
+    in ``model.weight_spec`` order (the Rust runtime feeds them as the
+    leading ``execute_b`` arguments of every artifact);
+  * ``<model>.<entry>.s<S>[.n<N>].hlo.txt`` — one HLO-text artifact per
+    (entrypoint x bucket);
+
+plus a single ``manifest.json`` describing models, tensors and artifacts —
+the contract parsed by ``rust/src/runtime/artifacts.rs``.
+
+HLO **text** (never ``.serialize()``) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape: Sequence[int], dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io_entry(name: str, shape: Sequence[int], dtype: str, kind: str) -> Dict:
+    return {"name": name, "shape": list(shape), "dtype": dtype, "kind": kind}
+
+
+def _weight_inputs(cfg: M.ModelConfig) -> List[Dict]:
+    return [
+        _io_entry(name, shape, "f32", "weight") for name, shape in M.weight_spec(cfg)
+    ]
+
+
+def _weight_specs(cfg: M.ModelConfig) -> List[jax.ShapeDtypeStruct]:
+    return [_spec(shape) for _, shape in M.weight_spec(cfg)]
+
+
+# ---------------------------------------------------------------------------
+# Entrypoint builders: each returns (fn, activation_specs, act_io, out_io).
+# Convention: fn(*weights, *activations); outputs are a flat tuple.
+# ---------------------------------------------------------------------------
+
+
+def build_encode_image_kv(cfg: M.ModelConfig):
+    nw = len(M.weight_spec(cfg))
+    t, l, h, dh = cfg.img_tokens, cfg.n_layers, cfg.n_heads, cfg.d_head
+
+    def fn(*args):
+        w, (patches,) = args[:nw], args[nw:]
+        emb, k, v = M.encode_image_kv(cfg, list(w), patches)
+        return emb, k, v
+
+    acts = [_spec((t, cfg.patch_dim))]
+    act_io = [_io_entry("patches", (t, cfg.patch_dim), "f32", "activation")]
+    out_io = [
+        _io_entry("emb", (t, cfg.d_model), "f32", "output"),
+        _io_entry("k", (l, t, h, dh), "f32", "output"),
+        _io_entry("v", (l, t, h, dh), "f32", "output"),
+    ]
+    return fn, acts, act_io, out_io
+
+
+def _prompt_act_specs(cfg: M.ModelConfig, s: int):
+    acts = [
+        _spec((s,), jnp.int32),  # ids
+        _spec((s, cfg.d_model)),  # img_emb
+        _spec((s,)),  # is_img
+        _spec((s,), jnp.int32),  # positions
+        _spec((s,)),  # valid
+        _spec((s,)),  # sink_bias
+        _spec((), jnp.int32),  # last_idx
+    ]
+    act_io = [
+        _io_entry("ids", (s,), "i32", "activation"),
+        _io_entry("img_emb", (s, cfg.d_model), "f32", "activation"),
+        _io_entry("is_img", (s,), "f32", "activation"),
+        _io_entry("positions", (s,), "i32", "activation"),
+        _io_entry("valid", (s,), "f32", "activation"),
+        _io_entry("sink_bias", (s,), "f32", "activation"),
+        _io_entry("last_idx", (), "i32", "activation"),
+    ]
+    return acts, act_io
+
+
+def build_prefill_full(cfg: M.ModelConfig, s: int):
+    nw = len(M.weight_spec(cfg))
+    l, h, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+
+    def fn(*args):
+        w, a = args[:nw], args[nw:]
+        ids, img_emb, is_img, positions, valid, sink_bias, last_idx = a
+        return M.prefill_full(
+            cfg, list(w), ids, img_emb, is_img, positions, valid, sink_bias, last_idx
+        )
+
+    acts, act_io = _prompt_act_specs(cfg, s)
+    out_io = [
+        _io_entry("logits", (cfg.vocab,), "f32", "output"),
+        _io_entry("k", (l, s, h, dh), "f32", "output"),
+        _io_entry("v", (l, s, h, dh), "f32", "output"),
+    ]
+    return fn, acts, act_io, out_io
+
+
+def build_prefill_debug(cfg: M.ModelConfig, s: int):
+    nw = len(M.weight_spec(cfg))
+    l, h = cfg.n_layers, cfg.n_heads
+
+    def fn(*args):
+        w, a = args[:nw], args[nw:]
+        ids, img_emb, is_img, positions, valid, sink_bias, last_idx = a
+        return M.prefill_debug(
+            cfg, list(w), ids, img_emb, is_img, positions, valid, sink_bias, last_idx
+        )
+
+    acts, act_io = _prompt_act_specs(cfg, s)
+    out_io = [
+        _io_entry("logits", (cfg.vocab,), "f32", "output"),
+        _io_entry("attn_last", (l, h, s), "f32", "output"),
+        _io_entry("attn_l0", (h, s, s), "f32", "output"),
+    ]
+    return fn, acts, act_io, out_io
+
+
+def build_prefill_selective(cfg: M.ModelConfig, s: int, n: int):
+    nw = len(M.weight_spec(cfg))
+    l, h, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+
+    def fn(*args):
+        w, a = args[:nw], args[nw:]
+        (
+            sel_ids,
+            sel_img_emb,
+            sel_is_img,
+            sel_pos,
+            sel_slot,
+            last_sel,
+            k_cache,
+            v_cache,
+            key_pos,
+            key_valid,
+            sink_bias,
+        ) = a
+        return M.prefill_selective(
+            cfg,
+            list(w),
+            sel_ids,
+            sel_img_emb,
+            sel_is_img,
+            sel_pos,
+            sel_slot,
+            last_sel,
+            k_cache,
+            v_cache,
+            key_pos,
+            key_valid,
+            sink_bias,
+        )
+
+    acts = [
+        _spec((n,), jnp.int32),
+        _spec((n, cfg.d_model)),
+        _spec((n,)),
+        _spec((n,), jnp.int32),
+        _spec((n,), jnp.int32),
+        _spec((), jnp.int32),
+        _spec((l, s, h, dh)),
+        _spec((l, s, h, dh)),
+        _spec((s,), jnp.int32),
+        _spec((s,)),
+        _spec((s,)),
+    ]
+    act_io = [
+        _io_entry("sel_ids", (n,), "i32", "activation"),
+        _io_entry("sel_img_emb", (n, cfg.d_model), "f32", "activation"),
+        _io_entry("sel_is_img", (n,), "f32", "activation"),
+        _io_entry("sel_pos", (n,), "i32", "activation"),
+        _io_entry("sel_slot", (n,), "i32", "activation"),
+        _io_entry("last_sel", (), "i32", "activation"),
+        _io_entry("k_cache", (l, s, h, dh), "f32", "activation"),
+        _io_entry("v_cache", (l, s, h, dh), "f32", "activation"),
+        _io_entry("key_pos", (s,), "i32", "activation"),
+        _io_entry("key_valid", (s,), "f32", "activation"),
+        _io_entry("sink_bias", (s,), "f32", "activation"),
+    ]
+    out_io = [
+        _io_entry("logits", (cfg.vocab,), "f32", "output"),
+        _io_entry("k_cache", (l, s, h, dh), "f32", "output"),
+        _io_entry("v_cache", (l, s, h, dh), "f32", "output"),
+    ]
+    return fn, acts, act_io, out_io
+
+
+def build_decode_step(cfg: M.ModelConfig, s: int):
+    nw = len(M.weight_spec(cfg))
+    l, h, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+
+    def fn(*args):
+        w, a = args[:nw], args[nw:]
+        token_id, pos, slot, k_cache, v_cache, key_pos, key_valid, sink_bias = a
+        return M.decode_step(
+            cfg, list(w), token_id, pos, slot, k_cache, v_cache, key_pos, key_valid, sink_bias
+        )
+
+    acts = [
+        _spec((), jnp.int32),
+        _spec((), jnp.int32),
+        _spec((), jnp.int32),
+        _spec((l, s, h, dh)),
+        _spec((l, s, h, dh)),
+        _spec((s,), jnp.int32),
+        _spec((s,)),
+        _spec((s,)),
+    ]
+    act_io = [
+        _io_entry("token_id", (), "i32", "activation"),
+        _io_entry("pos", (), "i32", "activation"),
+        _io_entry("slot", (), "i32", "activation"),
+        _io_entry("k_cache", (l, s, h, dh), "f32", "activation"),
+        _io_entry("v_cache", (l, s, h, dh), "f32", "activation"),
+        _io_entry("key_pos", (s,), "i32", "activation"),
+        _io_entry("key_valid", (s,), "f32", "activation"),
+        _io_entry("sink_bias", (s,), "f32", "activation"),
+    ]
+    out_io = [
+        _io_entry("logits", (cfg.vocab,), "f32", "output"),
+        _io_entry("k_cache", (l, s, h, dh), "f32", "output"),
+        _io_entry("v_cache", (l, s, h, dh), "f32", "output"),
+    ]
+    return fn, acts, act_io, out_io
+
+
+def build_decode_step_rows(cfg: M.ModelConfig, s: int):
+    nw = len(M.weight_spec(cfg))
+    l, h, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+    base = build_decode_step(cfg, s)
+
+    def fn(*args):
+        w, a = args[:nw], args[nw:]
+        token_id, pos, slot, k_cache, v_cache, key_pos, key_valid, sink_bias = a
+        return M.decode_step_rows(
+            cfg, list(w), token_id, pos, slot, k_cache, v_cache, key_pos, key_valid, sink_bias
+        )
+
+    _, acts, act_io, _ = base
+    out_io = [
+        _io_entry("logits", (cfg.vocab,), "f32", "output"),
+        _io_entry("k_row", (l, h, dh), "f32", "output"),
+        _io_entry("v_row", (l, h, dh), "f32", "output"),
+    ]
+    return fn, acts, act_io, out_io
+
+
+def build_layer0_k(cfg: M.ModelConfig, s: int):
+    nw = len(M.weight_spec(cfg))
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def fn(*args):
+        w, a = args[:nw], args[nw:]
+        ids, img_emb, is_img, positions = a
+        return (M.layer0_k(cfg, list(w), ids, img_emb, is_img, positions),)
+
+    acts = [
+        _spec((s,), jnp.int32),
+        _spec((s, cfg.d_model)),
+        _spec((s,)),
+        _spec((s,), jnp.int32),
+    ]
+    act_io = [
+        _io_entry("ids", (s,), "i32", "activation"),
+        _io_entry("img_emb", (s, cfg.d_model), "f32", "activation"),
+        _io_entry("is_img", (s,), "f32", "activation"),
+        _io_entry("positions", (s,), "i32", "activation"),
+    ]
+    out_io = [_io_entry("k0", (s, h, dh), "f32", "output")]
+    return fn, acts, act_io, out_io
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def artifact_plan(cfg: M.ModelConfig) -> List[Tuple[str, Dict, object]]:
+    """(artifact_name, bucket_meta, builder_result) for one model."""
+    plan = []
+    plan.append((f"{cfg.name}.encode_image_kv", {}, build_encode_image_kv(cfg)))
+    for s in M.SEQ_BUCKETS:
+        plan.append(
+            (f"{cfg.name}.prefill_full.s{s}", {"s": s}, build_prefill_full(cfg, s))
+        )
+        plan.append(
+            (f"{cfg.name}.decode_step.s{s}", {"s": s}, build_decode_step(cfg, s))
+        )
+        plan.append(
+            (
+                f"{cfg.name}.decode_step_rows.s{s}",
+                {"s": s},
+                build_decode_step_rows(cfg, s),
+            )
+        )
+        plan.append((f"{cfg.name}.layer0_k.s{s}", {"s": s}, build_layer0_k(cfg, s)))
+    for s, n in M.SELECTIVE_BUCKETS:
+        plan.append(
+            (
+                f"{cfg.name}.prefill_selective.s{s}.n{n}",
+                {"s": s, "n": n},
+                build_prefill_selective(cfg, s, n),
+            )
+        )
+    for s in M.DEBUG_BUCKETS:
+        plan.append(
+            (f"{cfg.name}.prefill_debug.s{s}", {"s": s}, build_prefill_debug(cfg, s))
+        )
+    return plan
+
+
+def write_weights(cfg: M.ModelConfig, out_dir: str) -> Dict:
+    w = M.init_weights(cfg)
+    spec = M.weight_spec(cfg)
+    path = os.path.join(out_dir, f"{cfg.name}.weights.bin")
+    tensors = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name, shape in spec:
+            arr = np.ascontiguousarray(w[name], dtype="<f4")
+            f.write(arr.tobytes())
+            nbytes = arr.nbytes
+            tensors.append(
+                {"name": name, "shape": list(shape), "offset": offset, "bytes": nbytes}
+            )
+            offset += nbytes
+    digest = hashlib.sha256(open(path, "rb").read()).hexdigest()
+    return {
+        "file": os.path.basename(path),
+        "total_bytes": offset,
+        "sha256": digest,
+        "tensors": tensors,
+    }
+
+
+def model_meta(cfg: M.ModelConfig) -> Dict:
+    return {
+        "name": cfg.name,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_head": cfg.d_head,
+        "d_ff": cfg.d_ff,
+        "vocab": cfg.vocab,
+        "img_tokens": cfg.img_tokens,
+        "patch_dim": cfg.patch_dim,
+        "rope_theta": cfg.rope_theta,
+        "sink_sigma": cfg.sink_sigma,
+        "sink_tau": cfg.sink_tau,
+        "bos_bias": cfg.bos_bias,
+        "seed": cfg.seed,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default=",".join(M.MODELS),
+        help="comma-separated subset of model configs to lower",
+    )
+    ap.add_argument(
+        "--only",
+        default="",
+        help="substring filter on artifact names (incremental builds)",
+    )
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {
+        "format": 1,
+        "seq_buckets": M.SEQ_BUCKETS,
+        "selective_buckets": [list(b) for b in M.SELECTIVE_BUCKETS],
+        "debug_buckets": M.DEBUG_BUCKETS,
+        "models": [],
+        "artifacts": [],
+    }
+
+    t_start = time.time()
+    for name in args.models.split(","):
+        cfg = M.MODELS[name]
+        print(f"[aot] model {name}: writing weights ...", flush=True)
+        wmeta = write_weights(cfg, out_dir)
+        manifest["models"].append({**model_meta(cfg), "weights": wmeta})
+
+        for art_name, bucket, built in artifact_plan(cfg):
+            if args.only and args.only not in art_name:
+                continue
+            fn, acts, act_io, out_io = built
+            t0 = time.time()
+            specs = _weight_specs(cfg) + acts
+            # keep_unused: every artifact takes the full weight list so the
+            # Rust runtime has one uniform calling convention.
+            lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+            text = to_hlo_text(lowered)
+            fname = f"{art_name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entry = art_name.split(".")[1]
+            manifest["artifacts"].append(
+                {
+                    "name": art_name,
+                    "model": cfg.name,
+                    "entry": entry,
+                    "bucket": bucket,
+                    "file": fname,
+                    "inputs": _weight_inputs(cfg) + act_io,
+                    "outputs": out_io,
+                }
+            )
+            print(
+                f"[aot]   {art_name}: {len(text)/1e6:.2f} MB HLO in {time.time()-t0:.1f}s",
+                flush=True,
+            )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done: {len(manifest['artifacts'])} artifacts in {time.time()-t_start:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,74 @@
+"""Pure-jnp oracle for the selective-attention kernel.
+
+This is the correctness reference the Pallas kernel is checked against in
+``python/tests/test_kernel.py``. It implements, without any tiling tricks,
+the blended attention of MPIC Fig. 7:
+
+  * every *selected* token contributes a freshly recomputed K/V row which
+    overrides the (position-stale) row of the reused cache at its slot;
+  * only selected queries are evaluated, each attending causally (by
+    *linked position*, not slot index) over the full linked sequence;
+  * an additive per-key attention-logit bias (the "sink bias", the
+    structural stand-in for the attention-sink behaviour of trained MLLMs —
+    see DESIGN.md section 2) is applied before the softmax;
+  * invalid key slots (beyond the linked length, or padding) are masked.
+
+Shapes (N = selected bucket, S = sequence bucket, H = heads, Dh = head dim):
+  q        [N, H, Dh]   queries of the selected tokens (RoPE already applied)
+  k_cache  [S, H, Dh]   reused K cache (RoPE at *stored* positions — stale)
+  v_cache  [S, H, Dh]   reused V cache
+  k_over   [S, H, Dh]   recomputed K rows scattered to their slots, 0 elsewhere
+  v_over   [S, H, Dh]   recomputed V rows scattered to their slots, 0 elsewhere
+  over_mask[S]          1.0 where a slot is overridden
+  q_pos    [N] int32    linked position of each selected query
+  key_pos  [S] int32    linked position of each key slot
+  key_valid[S]          1.0 for usable key slots
+  sink_bias[S]          additive attention-logit bias per key slot
+returns   [N, H, Dh]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def selective_attention_ref(
+    q,
+    k_cache,
+    v_cache,
+    k_over,
+    v_over,
+    over_mask,
+    q_pos,
+    key_pos,
+    key_valid,
+    sink_bias,
+):
+    n, h, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    om = over_mask[:, None, None]
+    k_link = jnp.where(om > 0, k_over, k_cache)  # [S,H,Dh]
+    v_link = jnp.where(om > 0, v_over, v_cache)
+
+    # [H, N, S]
+    scores = jnp.einsum("nhd,shd->hns", q, k_link) * scale
+    scores = scores + sink_bias[None, None, :]
+
+    causal = key_pos[None, :] <= q_pos[:, None]  # [N, S]
+    valid = key_valid[None, :] > 0
+    mask = jnp.logical_and(causal, valid)[None, :, :]  # [1,N,S]
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    denom = jnp.maximum(jnp.sum(probs, axis=-1, keepdims=True), 1e-30)
+    probs = probs / denom
+
+    out = jnp.einsum("hns,shd->nhd", probs, v_link)
+    # A query whose mask row is empty (padding) would otherwise emit an
+    # arbitrary uniform mixture; zero it for determinism.
+    any_valid = jnp.any(mask[0], axis=-1)  # [N]
+    out = jnp.where(any_valid[:, None, None], out, 0.0)
+    return out

@@ -1,0 +1,244 @@
+"""Pallas selective-attention kernel — the L1 hot spot of MPIC (Fig. 7).
+
+The paper's single-pass "partial reuse" prefill: recomputed K/V rows of the
+*selected* tokens are substituted into the reused (position-stale) KV cache
+and only the selected queries attend — causally by linked position — over the
+full linked sequence, with an additive per-key sink bias.
+
+TPU mapping (see DESIGN.md section 3, "Hardware adaptation"):
+
+  * grid = (heads, N // BQ): each program instance owns one head and one
+    BQ-row block of selected queries; BlockSpecs stage exactly that Q tile
+    plus this head's K/V/override planes into VMEM.
+  * the kernel streams the S-long key axis in BK-sized tiles with an
+    online-softmax (flash-style) running max / denominator, so the full
+    [BQ, S] score row never materialises;
+  * the cache-vs-recomputed substitution is a per-tile select
+    (``where(over_mask, k_over, k_cache)``) fused into the score loop — no
+    K_link array is ever materialised in HBM, which is precisely the
+    single-pass property MPIC claims over CacheBlend's two-step pipeline;
+  * MXU-friendly: the inner products are [BQ, Dh] x [Dh, BK] matmuls with
+    Dh in {32, 40}; tiles are multiples of the (8, 128) TPU tiling.
+
+``interpret=True`` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Correctness is pinned
+to ``ref.py`` by pytest; TPU performance is estimated analytically
+(EXPERIMENTS.md section Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# Tile profiles (see DESIGN.md "Hardware adaptation" and EXPERIMENTS.md
+# section Perf):
+#
+# * "tpu"  — BQ=32, BK=128: the MXU-oriented schedule; small tiles stream
+#   the key axis through VMEM with double-buffering headroom. This is what
+#   a real TPU deployment would compile.
+# * "cpu"  — BQ=256, BK=2048 (clamped to the actual bucket): large tiles so
+#   the interpret-mode lowering becomes a handful of big matmuls instead of
+#   thousands of tiny sequential loop steps. XLA-CPU then executes them on
+#   multithreaded GEMMs. The resulting VMEM footprint (reported by
+#   `vmem_bytes`) still fits a 16 MiB budget for every shipped bucket, so
+#   the schedule remains TPU-feasible — it just trades double-buffering
+#   slack for fewer grid steps.
+#
+# Both profiles are verified against the jnp oracle by pytest; the AOT
+# pipeline selects the profile via `MPIC_TILE_PROFILE` (default: cpu).
+DEFAULT_BQ = 32
+DEFAULT_BK = 128
+CPU_BQ = 256
+CPU_BK = 2048
+
+
+def profile_tiles(n: int, s: int, profile: str | None = None):
+    """Resolve (bq, bk) for a bucket under the given tile profile."""
+    import os
+
+    profile = profile or os.environ.get("MPIC_TILE_PROFILE", "cpu")
+    if profile == "tpu":
+        bq, bk = DEFAULT_BQ, DEFAULT_BK
+    else:
+        bq, bk = CPU_BQ, CPU_BK
+    bq = min(bq, n)
+    bk = min(bk, s)
+    # Tiles must divide the buckets; fall back to the largest divisor.
+    while n % bq:
+        bq -= 1
+    while s % bk:
+        bk -= 1
+    return bq, bk
+
+
+def _kernel(
+    # inputs (VMEM refs; leading head axis already indexed by BlockSpec)
+    q_ref,  # [1, BQ, Dh]
+    qpos_ref,  # [BQ]
+    kc_ref,  # [1, S, Dh]
+    vc_ref,  # [1, S, Dh]
+    ko_ref,  # [1, S, Dh]
+    vo_ref,  # [1, S, Dh]
+    om_ref,  # [S]
+    kpos_ref,  # [S]
+    kval_ref,  # [S]
+    bias_ref,  # [S]
+    # outputs
+    o_ref,  # [1, BQ, Dh]
+    *,
+    bk: int,
+    s_len: int,
+):
+    bq = q_ref.shape[1]
+    dh = q_ref.shape[2]
+    q = q_ref[0, :, :]  # [BQ, Dh]
+    q_pos = qpos_ref[...]  # [BQ] int32
+    scale = (1.0 / (dh**0.5)).__float__()
+
+    n_tiles = s_len // bk
+
+    def tile_step(t, carry):
+        m_prev, l_prev, acc_prev = carry
+        off = t * bk
+        kc = pl.load(kc_ref, (0, pl.dslice(off, bk), slice(None)))  # [BK,Dh]
+        vc = pl.load(vc_ref, (0, pl.dslice(off, bk), slice(None)))
+        ko = pl.load(ko_ref, (0, pl.dslice(off, bk), slice(None)))
+        vo = pl.load(vo_ref, (0, pl.dslice(off, bk), slice(None)))
+        om = pl.load(om_ref, (pl.dslice(off, bk),))  # [BK]
+        kpos = pl.load(kpos_ref, (pl.dslice(off, bk),))
+        kval = pl.load(kval_ref, (pl.dslice(off, bk),))
+        bias = pl.load(bias_ref, (pl.dslice(off, bk),))
+
+        # Fused substitution: recomputed rows override the stale cache.
+        sel = (om > 0)[:, None]
+        k_link = jnp.where(sel, ko, kc)  # [BK, Dh]
+        v_link = jnp.where(sel, vo, vc)
+
+        # [BQ, BK] scores on the MXU.
+        s = jax.lax.dot_general(
+            q,
+            k_link,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        s = s * scale + bias[None, :]
+
+        causal = kpos[None, :] <= q_pos[:, None]
+        ok = jnp.logical_and(causal, (kval > 0)[None, :])
+        s = jnp.where(ok, s, NEG_INF)
+
+        # Online softmax update.
+        m_cur = jnp.max(s, axis=1)  # [BQ]
+        m_new = jnp.maximum(m_prev, m_cur)
+        # Guard the all-masked case: when m_new is still NEG_INF,
+        # exp(NEG_INF - NEG_INF) would be 1 and the row would degenerate to
+        # a uniform mixture. Mask the contributions explicitly instead.
+        alpha = jnp.where(m_prev > NEG_INF * 0.5, jnp.exp(m_prev - m_new), 0.0)
+        p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)  # [BQ, BK]
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_new = acc_prev * alpha[:, None] + jax.lax.dot_general(
+            p,
+            v_link,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, dh), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_tiles, tile_step, (m0, l0, a0))
+
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0, :, :] = out
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk"))
+def selective_attention(
+    q,  # [N, H, Dh]
+    k_cache,  # [S, H, Dh]
+    v_cache,  # [S, H, Dh]
+    k_over,  # [S, H, Dh]
+    v_over,  # [S, H, Dh]
+    over_mask,  # [S]
+    q_pos,  # [N] int32
+    key_pos,  # [S] int32
+    key_valid,  # [S]
+    sink_bias,  # [S]
+    bq: int | None = None,
+    bk: int | None = None,
+):
+    """Blended (cache + recompute) attention over a linked KV layout.
+
+    Semantics are documented in :mod:`compile.kernels.ref`; this is the
+    tiled Pallas implementation. Tile sizes default to the active profile
+    (`MPIC_TILE_PROFILE`: "cpu" or "tpu" — see `profile_tiles`).
+    """
+    n, h, dh = q.shape
+    s = k_cache.shape[0]
+    if bq is None or bk is None:
+        pbq, pbk = profile_tiles(n, s)
+        bq = bq or pbq
+        bk = bk or pbk
+    bq = min(bq, n)
+    bk = min(bk, s)
+    if n % bq != 0:
+        raise ValueError(f"selected bucket {n} not a multiple of BQ={bq}")
+    if s % bk != 0:
+        raise ValueError(f"sequence bucket {s} not a multiple of BK={bk}")
+
+    # Head-major layout so the grid can tile over heads.
+    qh = jnp.transpose(q, (1, 0, 2))  # [H, N, Dh]
+    kch = jnp.transpose(k_cache, (1, 0, 2))  # [H, S, Dh]
+    vch = jnp.transpose(v_cache, (1, 0, 2))
+    koh = jnp.transpose(k_over, (1, 0, 2))
+    voh = jnp.transpose(v_over, (1, 0, 2))
+
+    grid = (h, n // bq)
+
+    kernel = functools.partial(_kernel, bk=bk, s_len=s)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda hh, i: (hh, i, 0)),  # q
+            pl.BlockSpec((bq,), lambda hh, i: (i,)),  # q_pos
+            pl.BlockSpec((1, s, dh), lambda hh, i: (hh, 0, 0)),  # k_cache
+            pl.BlockSpec((1, s, dh), lambda hh, i: (hh, 0, 0)),  # v_cache
+            pl.BlockSpec((1, s, dh), lambda hh, i: (hh, 0, 0)),  # k_over
+            pl.BlockSpec((1, s, dh), lambda hh, i: (hh, 0, 0)),  # v_over
+            pl.BlockSpec((s,), lambda hh, i: (0,)),  # over_mask
+            pl.BlockSpec((s,), lambda hh, i: (0,)),  # key_pos
+            pl.BlockSpec((s,), lambda hh, i: (0,)),  # key_valid
+            pl.BlockSpec((s,), lambda hh, i: (0,)),  # sink_bias
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda hh, i: (hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, n, dh), jnp.float32),
+        interpret=True,  # CPU-PJRT execution; see module docstring.
+    )(qh, q_pos, kch, vch, koh, voh, over_mask, key_pos, key_valid, sink_bias)
+
+    return jnp.transpose(out, (1, 0, 2))  # [N, H, Dh]
+
+
+def vmem_bytes(bq: int, bk: int, dh: int) -> int:
+    """Analytic VMEM footprint of one kernel instance (f32).
+
+    Used by the performance pass to pick tile sizes: Q tile + 4 K/V tiles +
+    score tile + softmax state + accumulator + per-key metadata.
+    """
+    floats = (
+        bq * dh  # q
+        + 4 * bk * dh  # k/v cache + override tiles
+        + bq * bk  # score tile
+        + 3 * bq  # m, l, alpha
+        + bq * dh  # acc
+        + 4 * bk  # over_mask, key_pos, key_valid, bias
+    )
+    return 4 * floats

@@ -1,0 +1,536 @@
+"""L2 — the multimodal transformer (JAX, build-time only).
+
+This module defines the synthetic *sink-calibrated MLLM* that stands in for
+the paper's LLaVA-1.6 7B models (substitution table: DESIGN.md section 2),
+plus every AOT entrypoint the Rust coordinator executes:
+
+  * ``encode_image_kv``    — upload path (workflow step 1): vision patch
+    encoder -> standalone prefill at canonical positions -> (emb, K, V).
+  * ``prefill_full``       — full causal prefill over a linked prompt
+    (prefix caching baseline, full-reuse step A, exact reference output).
+  * ``prefill_selective``  — the MPIC contribution: single-pass partial
+    reuse via the Pallas selective-attention kernel (Fig. 7).
+  * ``decode_step``        — one autoregressive step over a linked cache
+    (decode loop; full-reuse / CacheBlend step B first-token pass).
+  * ``layer0_k``           — layer-0 K projection at linked positions
+    (CacheBlend-r deviation estimation).
+  * ``prefill_debug``      — prefill that also exports attention
+    probabilities (Figs. 4, 8, 11 analysis benches).
+
+Architecture: pre-RMSNorm decoder, RoPE, SiLU MLP, tied embeddings, and an
+additive per-key *sink bias* supplied by the caller (the Linker builds it
+from the prompt's segment structure; ``make_sink_bias`` is the reference
+implementation mirrored by ``rust/src/mm/bias.rs``). The bias is part of the
+model — every attention path applies it — and is what installs the
+attention-sink structure (paper Insights 1-2) that trained MLLMs exhibit.
+
+All functions are pure and shape-static so they lower to HLO text via
+``aot.py``. Weights are *inputs* (not constants): the Rust runtime keeps
+them resident as PJRT buffers and passes them via ``execute_b``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.selective_attention import selective_attention
+from .kernels.ref import NEG_INF
+
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static hyper-parameters of one model variant."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    img_tokens: int  # tokens emitted by the vision encoder per image
+    patch_dim: int  # input feature dim of one image patch
+    rope_theta: float = 10000.0
+    # Sink calibration (DESIGN.md section 2): image keys get an additive
+    # attention-logit bias sigma*exp(-t/tau) where t is the position of the
+    # token inside its image block; the BOS slot gets bos_bias.
+    sink_sigma: float = 3.0
+    sink_tau: float = 8.0
+    bos_bias: float = 2.0
+    seed: int = 0x4D504943  # "MPIC"
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.d_head
+
+
+# The two stand-ins for LLaVA-1.6-vicuna-7B / LLaVA-1.6-mistral-7B.
+MODELS: Dict[str, ModelConfig] = {
+    "mpic-sim-a": ModelConfig(
+        name="mpic-sim-a",
+        d_model=256,
+        n_layers=4,
+        n_heads=8,
+        d_head=32,
+        d_ff=1024,
+        vocab=4096,
+        img_tokens=64,
+        patch_dim=64,
+        seed=0x4D504943,
+    ),
+    "mpic-sim-b": ModelConfig(
+        name="mpic-sim-b",
+        d_model=320,
+        n_layers=6,
+        n_heads=8,
+        d_head=40,
+        d_ff=1280,
+        vocab=4096,
+        img_tokens=64,
+        patch_dim=64,
+        seed=0x4D504944,
+    ),
+}
+
+# Sequence buckets an artifact is compiled for, and the selected-token
+# buckets of the selective entrypoint. The coordinator rounds every request
+# up to the nearest bucket (rust/src/runtime/artifacts.rs).
+SEQ_BUCKETS: List[int] = [128, 256, 512, 1024, 2048]
+SELECTIVE_BUCKETS: List[Tuple[int, int]] = [
+    (128, 32),
+    (128, 64),
+    (128, 128),
+    (256, 64),
+    (256, 128),
+    (256, 256),
+    (512, 128),
+    (512, 256),
+    (512, 512),
+    (1024, 256),
+    (1024, 512),
+    (2048, 512),
+]
+DEBUG_BUCKETS: List[int] = [256, 512]
+DECODE_BUCKETS: List[int] = SEQ_BUCKETS
+
+
+# --------------------------------------------------------------------------
+# Weights
+# --------------------------------------------------------------------------
+
+def weight_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) table — the wire format shared with Rust.
+
+    The Rust runtime memory-maps ``<model>.weights.bin`` (raw little-endian
+    f32, tensors concatenated in exactly this order) and feeds them as the
+    leading ``execute_b`` arguments of every artifact.
+    """
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("vp1", (cfg.patch_dim, cfg.d_model)),
+        ("vp2", (cfg.d_model, cfg.d_model)),
+        ("ln_f", (cfg.d_model,)),
+    ]
+    for layer in range(cfg.n_layers):
+        p = f"l{layer}."
+        spec += [
+            (p + "ln1", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.qkv_dim)),
+            (p + "wk", (cfg.d_model, cfg.qkv_dim)),
+            (p + "wv", (cfg.d_model, cfg.qkv_dim)),
+            (p + "wo", (cfg.qkv_dim, cfg.d_model)),
+            (p + "ln2", (cfg.d_model,)),
+            (p + "w1", (cfg.d_model, cfg.d_ff)),
+            (p + "w2", (cfg.d_ff, cfg.d_model)),
+        ]
+    return spec
+
+
+def init_weights(cfg: ModelConfig) -> Dict[str, np.ndarray]:
+    """Deterministic seeded init (numpy; identical across runs/platforms)."""
+    rng = np.random.default_rng(cfg.seed)
+    out: Dict[str, np.ndarray] = {}
+    for name, shape in weight_spec(cfg):
+        if name.endswith(("ln1", "ln2", "ln_f")) or name == "ln_f":
+            out[name] = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            std = 1.0 / np.sqrt(max(fan_in, 1))
+            out[name] = (rng.standard_normal(shape) * std).astype(np.float32)
+    return out
+
+
+def flatten_weights(cfg: ModelConfig, w: Dict[str, np.ndarray]) -> List[np.ndarray]:
+    return [w[name] for name, _ in weight_spec(cfg)]
+
+
+def unflatten_weights(cfg: ModelConfig, flat) -> Dict[str, jnp.ndarray]:
+    return {name: t for (name, _), t in zip(weight_spec(cfg), flat)}
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, scale):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def rope(x, positions, theta: float):
+    """Rotary position embedding. x: [T, H, Dh], positions: [T] int32."""
+    t, h, dh = x.shape
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [T, half]
+    cos = jnp.cos(ang)[:, None, :]  # [T,1,half]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def make_sink_bias(cfg: ModelConfig, kinds: np.ndarray, img_rel: np.ndarray) -> np.ndarray:
+    """Reference sink-bias builder (mirrored by rust/src/mm/bias.rs).
+
+    kinds:   [S] int — 0 pad, 1 text, 2 image token
+    img_rel: [S] int — position of an image token inside its image block
+    """
+    bias = np.zeros(kinds.shape, np.float32)
+    img = kinds == 2
+    bias[img] = cfg.sink_sigma * np.exp(-img_rel[img] / cfg.sink_tau)
+    if bias.shape[0] > 0 and kinds[0] != 0:
+        bias[0] += cfg.bos_bias
+    return bias
+
+
+def _qkv(cfg: ModelConfig, w, layer: int, x):
+    p = f"l{layer}."
+    t = x.shape[0]
+    q = (x @ w[p + "wq"]).reshape(t, cfg.n_heads, cfg.d_head)
+    k = (x @ w[p + "wk"]).reshape(t, cfg.n_heads, cfg.d_head)
+    v = (x @ w[p + "wv"]).reshape(t, cfg.n_heads, cfg.d_head)
+    return q, k, v
+
+
+def _ffn(cfg: ModelConfig, w, layer: int, x):
+    p = f"l{layer}."
+    return jax.nn.silu(x @ w[p + "w1"]) @ w[p + "w2"]
+
+
+def _embed_tokens(cfg, w, ids, img_emb, is_img):
+    """Layer-0 input: embedding-table lookup for text, encoder rows for images."""
+    safe_ids = jnp.clip(ids, 0, cfg.vocab - 1)
+    text = w["embed"][safe_ids]
+    return jnp.where(is_img[:, None] > 0, img_emb, text)
+
+
+def _dense_attention(q, k, v, q_pos, key_pos, q_valid, key_valid, sink_bias):
+    """Unfused reference attention used by the baseline (non-MPIC) paths.
+
+    q: [T,H,Dh]; k,v: [S,H,Dh]. Causality is by *position*, validity by mask.
+    Returns ([T,H,Dh], probs [H,T,S]).
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    scores = jnp.einsum("thd,shd->hts", q, k) * scale + sink_bias[None, None, :]
+    mask = (key_pos[None, :] <= q_pos[:, None]) & (key_valid[None, :] > 0)
+    mask = mask & (q_valid[:, None] > 0)
+    scores = jnp.where(mask[None], scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.exp(scores)
+    probs = probs / jnp.maximum(jnp.sum(probs, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("hts,shd->thd", probs, v)
+    return out, probs
+
+
+# --------------------------------------------------------------------------
+# Entrypoints
+# --------------------------------------------------------------------------
+
+def encode_image_kv(cfg: ModelConfig, weights_flat, patches):
+    """Upload-time compute (workflow step 1).
+
+    patches: [T_img, patch_dim] synthetic pixel features. Returns
+    (emb [T,d], k [L,T,H,Dh], v [L,T,H,Dh]) — KV at *canonical* positions
+    0..T-1 with the image sink bias; exactly what the Static Library stores.
+    """
+    w = unflatten_weights(cfg, weights_flat)
+    t = cfg.img_tokens
+    emb = jax.nn.silu(patches @ w["vp1"]) @ w["vp2"]  # [T, d]
+
+    pos = jnp.arange(t, dtype=jnp.int32)
+    valid = jnp.ones((t,), jnp.float32)
+    rel = np.arange(t)
+    bias = jnp.asarray(
+        make_sink_bias(cfg, np.full((t,), 2), rel), jnp.float32
+    )
+
+    h = emb
+    ks, vs = [], []
+    for layer in range(cfg.n_layers):
+        x = rmsnorm(h, w[f"l{layer}.ln1"])
+        q, k, v = _qkv(cfg, w, layer, x)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        ks.append(k)
+        vs.append(v)
+        att, _ = _dense_attention(q, k, v, pos, pos, valid, valid, bias)
+        h = h + att.reshape(t, cfg.qkv_dim) @ w[f"l{layer}.wo"]
+        h = h + _ffn(cfg, w, layer, rmsnorm(h, w[f"l{layer}.ln2"]))
+
+    return emb, jnp.stack(ks), jnp.stack(vs)
+
+
+def prefill_full(
+    cfg: ModelConfig,
+    weights_flat,
+    ids,  # [S] int32 token ids (0 where image/pad)
+    img_emb,  # [S, d] encoder embeddings at image slots, 0 elsewhere
+    is_img,  # [S] f32
+    positions,  # [S] int32 linked positions (monotone over valid slots)
+    valid,  # [S] f32 1.0 for real tokens
+    sink_bias,  # [S] f32
+    last_idx,  # scalar int32 — slot of the final prompt token
+    collect_attn: bool = False,
+):
+    """Full causal prefill. Exact; the quality reference for all algorithms.
+
+    Returns (logits [vocab], k [L,S,H,Dh], v [L,S,H,Dh]) and, when
+    ``collect_attn``, (attn_last [L,H,S], attn_l0 [H,S,S]) as well.
+    """
+    w = unflatten_weights(cfg, weights_flat)
+    s = ids.shape[0]
+    h = _embed_tokens(cfg, w, ids, img_emb, is_img)
+
+    ks, vs = [], []
+    attn_last = []
+    attn_l0 = None
+    for layer in range(cfg.n_layers):
+        x = rmsnorm(h, w[f"l{layer}.ln1"])
+        q, k, v = _qkv(cfg, w, layer, x)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        ks.append(k)
+        vs.append(v)
+        att, probs = _dense_attention(
+            q, k, v, positions, positions, valid, valid, sink_bias
+        )
+        if collect_attn:
+            attn_last.append(probs[:, :, :][..., :])  # [H,S,S]
+            if layer == 0:
+                attn_l0 = probs
+        h = h + att.reshape(s, cfg.qkv_dim) @ w[f"l{layer}.wo"]
+        h = h + _ffn(cfg, w, layer, rmsnorm(h, w[f"l{layer}.ln2"]))
+
+    h = rmsnorm(h, w["ln_f"])
+    logits = h[last_idx] @ w["embed"].T  # [vocab]
+
+    k_all = jnp.stack(ks)
+    v_all = jnp.stack(vs)
+    if collect_attn:
+        # Per-layer attention row of the last query: [L, H, S].
+        last_rows = jnp.stack([p[:, last_idx, :] for p in attn_last])
+        return logits, k_all, v_all, last_rows, attn_l0
+    return logits, k_all, v_all
+
+
+def prefill_selective(
+    cfg: ModelConfig,
+    weights_flat,
+    sel_ids,  # [N] int32 (token id; irrelevant where sel_is_img)
+    sel_img_emb,  # [N, d] encoder embedding rows for image-selected tokens
+    sel_is_img,  # [N] f32
+    sel_pos,  # [N] int32 linked positions
+    sel_slot,  # [N] int32 cache slot (>= S drops: padding)
+    last_sel,  # scalar int32 index into the selected axis of the final token
+    k_cache,  # [L, S, H, Dh]
+    v_cache,  # [L, S, H, Dh]
+    key_pos,  # [S] int32
+    key_valid,  # [S] f32
+    sink_bias,  # [S] f32
+):
+    """MPIC's single-pass partial-reuse prefill (the paper's contribution).
+
+    Selected tokens are recomputed through every layer, attending over the
+    blended (recomputed + reused) KV via the Pallas kernel; everything else
+    is reused verbatim from the linked cache. Text tokens ride on the
+    zero-filled "dummy cache" rows (section 5.1) that their recomputed K/V
+    replace, which is what makes this one engine call instead of two.
+
+    Returns (logits [vocab], k_cache' [L,S,H,Dh], v_cache' [L,S,H,Dh]) with
+    the recomputed rows patched in, ready for the decode loop.
+    """
+    w = unflatten_weights(cfg, weights_flat)
+    n = sel_ids.shape[0]
+    s = k_cache.shape[1]
+
+    h = _embed_tokens(cfg, w, sel_ids, sel_img_emb, sel_is_img)
+
+    new_k, new_v = [], []
+    for layer in range(cfg.n_layers):
+        x = rmsnorm(h, w[f"l{layer}.ln1"])
+        q, k, v = _qkv(cfg, w, layer, x)
+        q = rope(q, sel_pos, cfg.rope_theta)
+        k = rope(k, sel_pos, cfg.rope_theta)
+
+        # Scatter recomputed rows to their slots (padding slots >= S drop).
+        k_over = jnp.zeros((s, cfg.n_heads, cfg.d_head), jnp.float32)
+        v_over = jnp.zeros((s, cfg.n_heads, cfg.d_head), jnp.float32)
+        om = jnp.zeros((s,), jnp.float32)
+        k_over = k_over.at[sel_slot].set(k, mode="drop")
+        v_over = v_over.at[sel_slot].set(v, mode="drop")
+        om = om.at[sel_slot].set(1.0, mode="drop")
+
+        att = selective_attention(
+            q,
+            k_cache[layer],
+            v_cache[layer],
+            k_over,
+            v_over,
+            om,
+            sel_pos,
+            key_pos,
+            key_valid,
+            sink_bias,
+        )
+        h = h + att.reshape(n, cfg.qkv_dim) @ w[f"l{layer}.wo"]
+        h = h + _ffn(cfg, w, layer, rmsnorm(h, w[f"l{layer}.ln2"]))
+
+        new_k.append(jnp.where(om[:, None, None] > 0, k_over, k_cache[layer]))
+        new_v.append(jnp.where(om[:, None, None] > 0, v_over, v_cache[layer]))
+
+    h = rmsnorm(h, w["ln_f"])
+    logits = h[last_sel] @ w["embed"].T
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    weights_flat,
+    token_id,  # scalar int32
+    pos,  # scalar int32 linked position of this token
+    slot,  # scalar int32 cache slot to write
+    k_cache,  # [L, S, H, Dh]
+    v_cache,  # [L, S, H, Dh]
+    key_pos,  # [S] int32 (already includes this token's slot/pos)
+    key_valid,  # [S] f32 (already includes this token's slot)
+    sink_bias,  # [S] f32
+):
+    """One autoregressive step over a linked cache.
+
+    Also serves as step B of the two-step baselines (full reuse /
+    CacheBlend): the final prompt token is re-run over the concatenated
+    cache to produce the first output token's logits.
+
+    Returns (logits [vocab], k_cache', v_cache').
+    """
+    w = unflatten_weights(cfg, weights_flat)
+    s = k_cache.shape[1]
+
+    ids = token_id[None]
+    h = w["embed"][jnp.clip(ids, 0, cfg.vocab - 1)]  # [1, d]
+    pos1 = pos[None]
+
+    new_k, new_v = [], []
+    one = jnp.ones((1,), jnp.float32)
+    for layer in range(cfg.n_layers):
+        x = rmsnorm(h, w[f"l{layer}.ln1"])
+        q, k, v = _qkv(cfg, w, layer, x)
+        q = rope(q, pos1, cfg.rope_theta)
+        k = rope(k, pos1, cfg.rope_theta)
+
+        kl = jax.lax.dynamic_update_slice(k_cache[layer], k, (slot, 0, 0))
+        vl = jax.lax.dynamic_update_slice(v_cache[layer], v, (slot, 0, 0))
+        att, _ = _dense_attention(q, kl, vl, pos1, key_pos, one, key_valid, sink_bias)
+        h = h + att.reshape(1, cfg.qkv_dim) @ w[f"l{layer}.wo"]
+        h = h + _ffn(cfg, w, layer, rmsnorm(h, w[f"l{layer}.ln2"]))
+        new_k.append(kl)
+        new_v.append(vl)
+
+    h = rmsnorm(h, w["ln_f"])
+    logits = h[0] @ w["embed"].T
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def decode_step_rows(
+    cfg: ModelConfig,
+    weights_flat,
+    token_id,
+    pos,
+    slot,
+    k_cache,
+    v_cache,
+    key_pos,
+    key_valid,
+    sink_bias,
+):
+    """`decode_step` variant that returns only the new K/V *rows*.
+
+    Perf iteration 2 (EXPERIMENTS.md section Perf): the full-cache outputs of
+    `decode_step` force a [L,S,H,Dh] device->host->device round trip per
+    generated token; returning just this token's rows cuts the copied bytes
+    per step roughly in half (the host patches its authoritative cache and
+    re-uploads on the next call).
+
+    Returns (logits [vocab], k_row [L,H,Dh], v_row [L,H,Dh]).
+    """
+    logits, k_all, v_all = decode_step(
+        cfg, weights_flat, token_id, pos, slot, k_cache, v_cache, key_pos, key_valid, sink_bias
+    )
+    k_row = jax.lax.dynamic_slice(
+        k_all, (0, slot, 0, 0), (cfg.n_layers, 1, cfg.n_heads, cfg.d_head)
+    )[:, 0]
+    v_row = jax.lax.dynamic_slice(
+        v_all, (0, slot, 0, 0), (cfg.n_layers, 1, cfg.n_heads, cfg.d_head)
+    )[:, 0]
+    return logits, k_row, v_row
+
+
+def layer0_k(
+    cfg: ModelConfig,
+    weights_flat,
+    ids,  # [S] int32
+    img_emb,  # [S, d]
+    is_img,  # [S] f32
+    positions,  # [S] int32
+):
+    """Layer-0 K at linked positions — CacheBlend's deviation estimator.
+
+    Cheap (no attention needed: layer-0 K depends only on embeddings), and
+    comparable against the stored cache's layer-0 K rows.
+    """
+    w = unflatten_weights(cfg, weights_flat)
+    h = _embed_tokens(cfg, w, ids, img_emb, is_img)
+    x = rmsnorm(h, w["l0.ln1"])
+    k = (x @ w["l0.wk"]).reshape(ids.shape[0], cfg.n_heads, cfg.d_head)
+    return rope(k, positions, cfg.rope_theta)
+
+
+def prefill_debug(cfg: ModelConfig, weights_flat, ids, img_emb, is_img, positions, valid, sink_bias, last_idx):
+    """prefill_full + attention exports for the analysis benches.
+
+    Returns (logits, attn_last [L,H,S], attn_l0 [H,S,S]).
+    """
+    logits, _, _, attn_last, attn_l0 = prefill_full(
+        cfg,
+        weights_flat,
+        ids,
+        img_emb,
+        is_img,
+        positions,
+        valid,
+        sink_bias,
+        last_idx,
+        collect_attn=True,
+    )
+    return logits, attn_last, attn_l0

@@ -1,0 +1,112 @@
+"""AOT pipeline smoke tests: manifest contract, weights wire format."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_weight_spec_is_stable():
+    cfg = M.MODELS["mpic-sim-a"]
+    spec = M.weight_spec(cfg)
+    assert spec[0][0] == "embed"
+    names = [n for n, _ in spec]
+    assert len(names) == len(set(names))
+    assert len(spec) == 4 + 8 * cfg.n_layers
+
+
+def test_weights_roundtrip(tmp_path):
+    cfg = M.MODELS["mpic-sim-a"]
+    meta = aot.write_weights(cfg, str(tmp_path))
+    blob = open(tmp_path / meta["file"], "rb").read()
+    assert len(blob) == meta["total_bytes"]
+    w = M.init_weights(cfg)
+    for t in meta["tensors"]:
+        arr = np.frombuffer(
+            blob, "<f4", count=t["bytes"] // 4, offset=t["offset"]
+        ).reshape(t["shape"])
+        np.testing.assert_array_equal(arr, w[t["name"]])
+
+
+def test_weights_deterministic(tmp_path):
+    cfg = M.MODELS["mpic-sim-a"]
+    a = aot.write_weights(cfg, str(tmp_path / "a".replace("a", "x")) if False else str(tmp_path))
+    b_dir = tmp_path / "b"
+    b_dir.mkdir()
+    b = aot.write_weights(cfg, str(b_dir))
+    assert a["sha256"] == b["sha256"]
+
+
+def test_models_differ():
+    wa = aot.write_weights(M.MODELS["mpic-sim-a"], "/tmp")
+    wb = aot.write_weights(M.MODELS["mpic-sim-b"], "/tmp")
+    assert wa["sha256"] != wb["sha256"]
+
+
+def test_artifact_plan_covers_paper_algorithms():
+    cfg = M.MODELS["mpic-sim-a"]
+    names = [n for n, _, _ in aot.artifact_plan(cfg)]
+    for entry in ("encode_image_kv", "prefill_full", "prefill_selective",
+                  "decode_step", "layer0_k", "prefill_debug"):
+        assert any(entry in n for n in names), entry
+
+
+def test_selective_buckets_are_kernel_aligned():
+    for s, n in M.SELECTIVE_BUCKETS:
+        assert n % 32 == 0 and s % 128 == 0 and n <= s
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART_DIR, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_counts(self, manifest):
+        assert len(manifest["models"]) == 2
+        # encode + (prefill_full, decode_step, decode_step_rows, layer0_k)
+        # per seq bucket + selective pairs + debug buckets.
+        per_model = (
+            1
+            + 4 * len(M.SEQ_BUCKETS)
+            + len(M.SELECTIVE_BUCKETS)
+            + len(M.DEBUG_BUCKETS)
+        )
+        assert len(manifest["artifacts"]) == 2 * per_model
+
+    def test_files_exist(self, manifest):
+        for art in manifest["artifacts"]:
+            path = os.path.join(ART_DIR, art["file"])
+            assert os.path.exists(path), art["file"]
+            # HLO text, parseable header
+            head = open(path).read(64)
+            assert "HloModule" in head
+
+    def test_weight_inputs_lead(self, manifest):
+        for art in manifest["artifacts"]:
+            kinds = [i["kind"] for i in art["inputs"]]
+            nw = kinds.count("weight")
+            assert all(k == "weight" for k in kinds[:nw])
+            assert all(k == "activation" for k in kinds[nw:])
+
+    def test_hlo_param_count_matches_manifest(self, manifest):
+        art = manifest["artifacts"][0]
+        text = open(os.path.join(ART_DIR, art["file"])).read()
+        # ENTRY computation declares one parameter per manifest input.
+        import re
+        entry = [l for l in text.splitlines() if "ENTRY" in l][0]
+        assert entry.count("parameter") == 0  # signature on following lines
+        params = re.findall(r"parameter\((\d+)\)", text)
+        assert len(set(params)) == len(art["inputs"])

@@ -1,0 +1,203 @@
+"""Extended L1/L2 coverage: second model config, tile profiles, decode
+chains, two-step (full-reuse) semantics, and bias edge cases."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels.selective_attention import profile_tiles, selective_attention, vmem_bytes
+from compile.kernels.ref import selective_attention_ref
+
+
+CFG_B = M.MODELS["mpic-sim-b"]
+W_B = M.flatten_weights(CFG_B, M.init_weights(CFG_B))
+
+
+def make_prompt(cfg, rng, s, n_real, img_spans):
+    ids = np.zeros(s, np.int32)
+    ids[:n_real] = rng.integers(10, cfg.vocab, n_real)
+    img_emb = np.zeros((s, cfg.d_model), np.float32)
+    is_img = np.zeros(s, np.float32)
+    kinds = np.zeros(s, int)
+    kinds[:n_real] = 1
+    rel = np.zeros(s, int)
+    for lo, hi in img_spans:
+        is_img[lo:hi] = 1.0
+        img_emb[lo:hi] = rng.normal(size=(hi - lo, cfg.d_model)).astype(np.float32) * 0.1
+        kinds[lo:hi] = 2
+        rel[lo:hi] = np.arange(hi - lo)
+    pos = np.arange(s, dtype=np.int32)
+    pos[n_real:] = 1_000_000
+    valid = np.zeros(s, np.float32)
+    valid[:n_real] = 1.0
+    bias = M.make_sink_bias(cfg, kinds, rel)
+    return dict(ids=ids, img_emb=img_emb, is_img=is_img, pos=pos, valid=valid,
+                bias=bias, last=np.int32(n_real - 1), n_real=n_real)
+
+
+class TestModelB:
+    """The second model config satisfies the same core identities."""
+
+    def test_selective_all_equals_full(self):
+        rng = np.random.default_rng(42)
+        s, n_real = 128, 100
+        p = make_prompt(CFG_B, rng, s, n_real, [(20, 52)])
+        lg_full, kf, _ = M.prefill_full(
+            CFG_B, W_B, jnp.asarray(p["ids"]), jnp.asarray(p["img_emb"]),
+            jnp.asarray(p["is_img"]), jnp.asarray(p["pos"]), jnp.asarray(p["valid"]),
+            jnp.asarray(p["bias"]), p["last"])
+        sel_slot = np.arange(s, dtype=np.int32)
+        sel_slot[n_real:] = s + 7
+        kc = jnp.zeros((CFG_B.n_layers, s, CFG_B.n_heads, CFG_B.d_head), jnp.float32)
+        lg, _, _ = M.prefill_selective(
+            CFG_B, W_B, jnp.asarray(p["ids"]), jnp.asarray(p["img_emb"]),
+            jnp.asarray(p["is_img"]), jnp.asarray(p["pos"]), jnp.asarray(sel_slot),
+            p["last"], kc, kc, jnp.asarray(p["pos"]), jnp.asarray(p["valid"]),
+            jnp.asarray(p["bias"]))
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_full), rtol=1e-3, atol=1e-3)
+
+    def test_weight_table_dims(self):
+        spec = dict(M.weight_spec(CFG_B))
+        assert spec["embed"] == (CFG_B.vocab, CFG_B.d_model)
+        assert spec["l5.wq"] == (CFG_B.d_model, CFG_B.qkv_dim)
+        assert "l6.wq" not in spec
+
+
+class TestTileProfiles:
+    def test_profiles_agree_numerically(self):
+        rng = np.random.default_rng(7)
+        n, s, h, dh = 64, 256, 4, 32
+        args = [
+            jnp.asarray(rng.normal(size=(n, h, dh)), jnp.float32),
+            jnp.asarray(rng.normal(size=(s, h, dh)), jnp.float32),
+            jnp.asarray(rng.normal(size=(s, h, dh)), jnp.float32),
+            jnp.asarray(rng.normal(size=(s, h, dh)), jnp.float32),
+            jnp.asarray(rng.normal(size=(s, h, dh)), jnp.float32),
+            jnp.asarray(rng.integers(0, 2, s), jnp.float32),
+            jnp.asarray(np.sort(rng.integers(0, 300, n)), jnp.int32),
+            jnp.asarray(rng.integers(0, 300, s), jnp.int32),
+            jnp.asarray(rng.integers(0, 2, s), jnp.float32),
+            jnp.asarray(rng.normal(size=(s,)), jnp.float32),
+        ]
+        tpu = selective_attention(*args, bq=32, bk=128)
+        cpu = selective_attention(*args, bq=64, bk=256)
+        ref = selective_attention_ref(*args)
+        np.testing.assert_allclose(np.asarray(tpu), np.asarray(ref), rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(np.asarray(cpu), np.asarray(ref), rtol=3e-5, atol=3e-5)
+
+    def test_profile_tiles_divide_buckets(self):
+        for s, n in M.SELECTIVE_BUCKETS:
+            for profile in ("cpu", "tpu"):
+                bq, bk = profile_tiles(n, s, profile)
+                assert n % bq == 0 and s % bk == 0
+                # Shipped buckets stay within a 16 MiB VMEM budget.
+                assert vmem_bytes(bq, bk, 40) < 16 * 1024 * 1024
+
+    def test_env_override(self, monkeypatch):
+        monkeypatch.setenv("MPIC_TILE_PROFILE", "tpu")
+        assert profile_tiles(512, 2048) == (32, 128)
+        monkeypatch.setenv("MPIC_TILE_PROFILE", "cpu")
+        bq, bk = profile_tiles(512, 2048)
+        assert bq >= 128 and bk >= 1024
+
+
+class TestDecodeChain:
+    """Three chained decode steps equal one extended prefill."""
+
+    def test_chain_matches_prefill(self):
+        cfg = M.MODELS["mpic-sim-a"]
+        w = M.flatten_weights(cfg, M.init_weights(cfg))
+        rng = np.random.default_rng(11)
+        s, n0 = 128, 40
+        p = make_prompt(cfg, rng, s, n0, [(8, 24)])
+        _, k, v = M.prefill_full(
+            cfg, w, jnp.asarray(p["ids"]), jnp.asarray(p["img_emb"]),
+            jnp.asarray(p["is_img"]), jnp.asarray(p["pos"]), jnp.asarray(p["valid"]),
+            jnp.asarray(p["bias"]), p["last"])
+
+        extra = rng.integers(10, cfg.vocab, 3).astype(np.int32)
+        key_pos = p["pos"].copy()
+        key_valid = p["valid"].copy()
+        logits = None
+        for i, tid in enumerate(extra):
+            slot = n0 + i
+            key_pos[slot] = slot
+            key_valid[slot] = 1.0
+            logits, k, v = M.decode_step(
+                cfg, w, np.int32(tid), np.int32(slot), np.int32(slot), k, v,
+                jnp.asarray(key_pos), jnp.asarray(key_valid), jnp.asarray(p["bias"]))
+
+        # Extended prefill over prompt + 3 tokens.
+        p2 = {kk: (vv.copy() if isinstance(vv, np.ndarray) else vv) for kk, vv in p.items()}
+        p2["ids"][n0:n0 + 3] = extra
+        p2["valid"][n0:n0 + 3] = 1.0
+        p2["pos"][n0:n0 + 3] = np.arange(n0, n0 + 3)
+        lg_want, _, _ = M.prefill_full(
+            cfg, w, jnp.asarray(p2["ids"]), jnp.asarray(p2["img_emb"]),
+            jnp.asarray(p2["is_img"]), jnp.asarray(p2["pos"]), jnp.asarray(p2["valid"]),
+            jnp.asarray(p2["bias"]), np.int32(n0 + 2))
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(lg_want), rtol=1e-3, atol=1e-3)
+
+
+class TestDecodeRows:
+    """The rows-only decode artifact matches the full-cache variant."""
+
+    def test_rows_match_full_decode(self):
+        cfg = M.MODELS["mpic-sim-a"]
+        w = M.flatten_weights(cfg, M.init_weights(cfg))
+        rng = np.random.default_rng(21)
+        s, n0 = 128, 30
+        p = make_prompt(cfg, rng, s, n0, [(4, 20)])
+        _, k, v = M.prefill_full(
+            cfg, w, jnp.asarray(p["ids"]), jnp.asarray(p["img_emb"]),
+            jnp.asarray(p["is_img"]), jnp.asarray(p["pos"]), jnp.asarray(p["valid"]),
+            jnp.asarray(p["bias"]), p["last"])
+        key_pos = p["pos"].copy(); key_pos[n0] = n0
+        key_valid = p["valid"].copy(); key_valid[n0] = 1.0
+        args = (np.int32(99), np.int32(n0), np.int32(n0), k, v,
+                jnp.asarray(key_pos), jnp.asarray(key_valid), jnp.asarray(p["bias"]))
+        lg_a, k2, v2 = M.decode_step(cfg, w, *args)
+        lg_b, k_row, v_row = M.decode_step_rows(cfg, w, *args)
+        np.testing.assert_allclose(np.asarray(lg_a), np.asarray(lg_b), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(k2[:, n0]), np.asarray(k_row), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(v2[:, n0]), np.asarray(v_row), rtol=1e-5, atol=1e-5)
+
+
+class TestFullReuseSemantics:
+    """The two-step path (text-only prefill at linked positions + final-token
+    decode over the concatenated cache) is self-consistent: when the prompt
+    has NO images it must be exact."""
+
+    def test_text_only_prompt_two_step_is_exact(self):
+        cfg = M.MODELS["mpic-sim-a"]
+        w = M.flatten_weights(cfg, M.init_weights(cfg))
+        rng = np.random.default_rng(13)
+        s, n_real = 128, 60
+        p = make_prompt(cfg, rng, s, n_real, [])
+        lg_full, kf, vf = M.prefill_full(
+            cfg, w, jnp.asarray(p["ids"]), jnp.asarray(p["img_emb"]),
+            jnp.asarray(p["is_img"]), jnp.asarray(p["pos"]), jnp.asarray(p["valid"]),
+            jnp.asarray(p["bias"]), p["last"])
+        # Step A produced kf/vf already (text == whole prompt). Step B:
+        # recompute the last token over the full cache.
+        lg_b, _, _ = M.decode_step(
+            cfg, w, np.int32(p["ids"][n_real - 1]), np.int32(n_real - 1),
+            np.int32(n_real - 1), kf, vf, jnp.asarray(p["pos"]),
+            jnp.asarray(p["valid"]), jnp.asarray(p["bias"]))
+        np.testing.assert_allclose(np.asarray(lg_b), np.asarray(lg_full), rtol=1e-3, atol=1e-3)
+
+
+class TestBiasEdgeCases:
+    def test_empty(self):
+        assert M.make_sink_bias(CFG_B, np.zeros(0, int), np.zeros(0, int)).shape == (0,)
+
+    def test_all_pad(self):
+        b = M.make_sink_bias(CFG_B, np.zeros(5, int), np.zeros(5, int))
+        assert (b == 0).all()
+
+    def test_image_at_slot_zero_gets_both(self):
+        b = M.make_sink_bias(CFG_B, np.array([2, 2]), np.array([0, 1]))
+        assert b[0] == pytest.approx(CFG_B.sink_sigma + CFG_B.bos_bias)

@@ -1,0 +1,128 @@
+"""L1 correctness: the Pallas selective-attention kernel vs the jnp oracle.
+
+This is the core correctness signal of the compile path. Hypothesis sweeps
+shapes, masks, positions and tile sizes; every case asserts allclose against
+``ref.selective_attention_ref``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import selective_attention_ref
+from compile.kernels.selective_attention import selective_attention, vmem_bytes
+
+
+def _mk_case(rng, n, s, h, dh, *, pos_range=None, all_valid=False, no_override=False):
+    pos_range = pos_range or max(2 * s, 4)
+    q = rng.normal(size=(n, h, dh)).astype(np.float32)
+    kc = rng.normal(size=(s, h, dh)).astype(np.float32)
+    vc = rng.normal(size=(s, h, dh)).astype(np.float32)
+    ko = rng.normal(size=(s, h, dh)).astype(np.float32)
+    vo = rng.normal(size=(s, h, dh)).astype(np.float32)
+    om = np.zeros((s,), np.float32) if no_override else rng.integers(0, 2, s).astype(np.float32)
+    qpos = np.sort(rng.integers(0, pos_range, n)).astype(np.int32)
+    kpos = rng.integers(0, pos_range, s).astype(np.int32)
+    kval = np.ones((s,), np.float32) if all_valid else rng.integers(0, 2, s).astype(np.float32)
+    bias = (rng.normal(size=(s,)) * 0.7).astype(np.float32)
+    return (q, kc, vc, ko, vo, om, qpos, kpos, kval, bias)
+
+
+def _check(case, bq=32, bk=128, atol=3e-5):
+    args = [jnp.asarray(a) for a in case]
+    got = selective_attention(*args, bq=bq, bk=bk)
+    want = selective_attention_ref(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=atol, atol=atol)
+
+
+def test_basic_match():
+    rng = np.random.default_rng(0)
+    _check(_mk_case(rng, 64, 256, 4, 32))
+
+
+def test_no_override_pure_reuse():
+    rng = np.random.default_rng(1)
+    _check(_mk_case(rng, 32, 128, 2, 32, no_override=True))
+
+
+def test_all_overridden():
+    rng = np.random.default_rng(2)
+    case = list(_mk_case(rng, 32, 128, 2, 32))
+    case[5] = np.ones((128,), np.float32)  # over_mask
+    _check(tuple(case))
+
+
+def test_all_keys_valid():
+    rng = np.random.default_rng(3)
+    _check(_mk_case(rng, 32, 128, 2, 32, all_valid=True))
+
+
+def test_fully_masked_queries_are_zero():
+    """Queries whose causal window is empty produce exactly 0 (padding)."""
+    rng = np.random.default_rng(4)
+    case = list(_mk_case(rng, 32, 128, 2, 32))
+    qpos = case[6].copy()
+    kpos = case[7].copy()
+    qpos[:] = 0
+    kpos[:] = 1000  # nothing attendable
+    case[6], case[7] = qpos, kpos
+    args = [jnp.asarray(a) for a in case]
+    got = selective_attention(*args)
+    assert float(jnp.max(jnp.abs(got))) == 0.0
+
+
+def test_sink_bias_shifts_attention():
+    """A huge bias on one key makes every query attend (almost) only to it."""
+    rng = np.random.default_rng(5)
+    n, s, h, dh = 32, 128, 2, 32
+    case = list(_mk_case(rng, n, s, h, dh, all_valid=True))
+    case[5] = np.zeros((s,), np.float32)  # no overrides
+    case[6] = np.full((n,), 10_000, np.int32)  # everything attendable
+    case[7] = np.arange(s, dtype=np.int32)
+    bias = np.zeros((s,), np.float32)
+    bias[7] = 60.0
+    case[9] = bias
+    args = [jnp.asarray(a) for a in case]
+    got = np.asarray(selective_attention(*args))
+    want = np.broadcast_to(case[2][7], (n, h, dh))  # v_cache row 7
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_blocks=st.integers(1, 4),
+    s_blocks=st.integers(1, 3),
+    h=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([16, 32, 40]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shape_sweep(n_blocks, s_blocks, h, dh, seed):
+    rng = np.random.default_rng(seed)
+    _check(_mk_case(rng, 32 * n_blocks, 128 * s_blocks, h, dh))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bq=st.sampled_from([8, 16, 32]),
+    bk=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_tile_sweep(bq, bk, seed):
+    rng = np.random.default_rng(seed)
+    _check(_mk_case(rng, 32, 128, 2, 32), bq=bq, bk=bk)
+
+
+def test_rejects_misaligned_buckets():
+    rng = np.random.default_rng(6)
+    case = _mk_case(rng, 48, 128, 2, 32)  # 48 % 32 != 0
+    args = [jnp.asarray(a) for a in case]
+    with pytest.raises(ValueError):
+        selective_attention(*args, bq=32, bk=128)
+
+
+def test_vmem_estimate_within_budget():
+    """The tile schedule chosen for the artifacts fits a 16 MiB VMEM."""
+    assert vmem_bytes(32, 128, 40) < 16 * 1024 * 1024
+    # and stays modest — leaves room for double buffering
+    assert vmem_bytes(32, 128, 40) < 512 * 1024

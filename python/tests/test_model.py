@@ -1,0 +1,308 @@
+"""L2 correctness: model entrypoints, consistency identities, sink bias.
+
+The decisive identities:
+  * prefill_selective(everything selected, empty cache) == prefill_full —
+    MPIC's machinery degenerates exactly to full computation;
+  * chained decode_step == prefill_full over the extended prompt —
+    the linked-cache decode loop is consistent with prefill;
+  * stored image KV (encode_image_kv) equals prefill KV when the image is
+    the prompt prefix at canonical positions — the Static Library holds
+    exactly what a position-0 prefill would produce.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+CFG = M.MODELS["mpic-sim-a"]
+W = M.flatten_weights(CFG, M.init_weights(CFG))
+
+
+def make_prompt(rng, s, n_real, img_spans):
+    """Build a padded prompt with text + image spans; returns dict of arrays."""
+    ids = np.zeros(s, np.int32)
+    ids[:n_real] = rng.integers(10, CFG.vocab, n_real)
+    img_emb = np.zeros((s, CFG.d_model), np.float32)
+    is_img = np.zeros(s, np.float32)
+    kinds = np.zeros(s, int)
+    kinds[:n_real] = 1
+    rel = np.zeros(s, int)
+    for lo, hi in img_spans:
+        is_img[lo:hi] = 1.0
+        img_emb[lo:hi] = rng.normal(size=(hi - lo, CFG.d_model)).astype(np.float32) * 0.1
+        kinds[lo:hi] = 2
+        rel[lo:hi] = np.arange(hi - lo)
+    pos = np.arange(s, dtype=np.int32)
+    pos[n_real:] = 1_000_000
+    valid = np.zeros(s, np.float32)
+    valid[:n_real] = 1.0
+    bias = M.make_sink_bias(CFG, kinds, rel)
+    return dict(
+        ids=ids, img_emb=img_emb, is_img=is_img, pos=pos, valid=valid,
+        bias=bias, last=np.int32(n_real - 1), n_real=n_real,
+    )
+
+
+def run_full(p):
+    return M.prefill_full(
+        CFG, W,
+        jnp.asarray(p["ids"]), jnp.asarray(p["img_emb"]), jnp.asarray(p["is_img"]),
+        jnp.asarray(p["pos"]), jnp.asarray(p["valid"]), jnp.asarray(p["bias"]),
+        p["last"],
+    )
+
+
+class TestSelectiveExactness:
+    def test_all_selected_equals_full(self):
+        rng = np.random.default_rng(10)
+        s, n_real = 128, 100
+        p = make_prompt(rng, s, n_real, [(20, 52)])
+        lg_full, kf, vf = run_full(p)
+
+        sel_slot = np.arange(s, dtype=np.int32)
+        sel_slot[n_real:] = s + 7  # dropped (padding)
+        kc = jnp.zeros((CFG.n_layers, s, CFG.n_heads, CFG.d_head), jnp.float32)
+        lg, ks, vs = M.prefill_selective(
+            CFG, W,
+            jnp.asarray(p["ids"]), jnp.asarray(p["img_emb"]), jnp.asarray(p["is_img"]),
+            jnp.asarray(p["pos"]), jnp.asarray(sel_slot), p["last"],
+            kc, kc, jnp.asarray(p["pos"]), jnp.asarray(p["valid"]), jnp.asarray(p["bias"]),
+        )
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_full), rtol=5e-4, atol=5e-4)
+        np.testing.assert_allclose(
+            np.asarray(ks[:, :n_real]), np.asarray(kf[:, :n_real]), rtol=5e-4, atol=5e-4
+        )
+
+    def test_prefix_suffix_recompute_is_exact(self):
+        """Cache = true-position prefix KV, selection = suffix -> exact.
+
+        This is prefix caching expressed through the selective machinery and
+        is the algebraic reason prefix caching is lossless.
+        """
+        rng = np.random.default_rng(11)
+        s, n_real, split = 128, 96, 40
+        p = make_prompt(rng, s, n_real, [(8, 24)])
+        lg_full, kf, vf = run_full(p)
+
+        # Stored prefix KV at correct positions.
+        kc = np.zeros((CFG.n_layers, s, CFG.n_heads, CFG.d_head), np.float32)
+        vc = np.zeros_like(kc)
+        kc[:, :split] = np.asarray(kf[:, :split])
+        vc[:, :split] = np.asarray(vf[:, :split])
+
+        nsel = s - split  # suffix bucket (keep multiple of 32: 88 -> pad to 96)
+        nsel_b = 96
+        sel_ids = np.zeros(nsel_b, np.int32)
+        sel_emb = np.zeros((nsel_b, CFG.d_model), np.float32)
+        sel_isimg = np.zeros(nsel_b, np.float32)
+        sel_pos = np.full(nsel_b, 0, np.int32)
+        sel_slot = np.full(nsel_b, s + 1, np.int32)
+        real = n_real - split
+        sel_ids[:real] = p["ids"][split:n_real]
+        sel_emb[:real] = p["img_emb"][split:n_real]
+        sel_isimg[:real] = p["is_img"][split:n_real]
+        sel_pos[:real] = p["pos"][split:n_real]
+        sel_slot[:real] = np.arange(split, n_real)
+
+        lg, _, _ = M.prefill_selective(
+            CFG, W,
+            jnp.asarray(sel_ids), jnp.asarray(sel_emb), jnp.asarray(sel_isimg),
+            jnp.asarray(sel_pos), jnp.asarray(sel_slot), np.int32(real - 1),
+            jnp.asarray(kc), jnp.asarray(vc),
+            jnp.asarray(p["pos"]), jnp.asarray(p["valid"]), jnp.asarray(p["bias"]),
+        )
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_full), rtol=5e-4, atol=5e-4)
+
+    def test_stale_position_cache_diverges(self):
+        """Full reuse (stale positions) must NOT match the exact output —
+        this is the accuracy gap the paper's Fig. 3b documents."""
+        rng = np.random.default_rng(12)
+        s, n_real = 128, 100
+        img_lo, img_hi = 20, 52
+        p = make_prompt(rng, s, n_real, [(img_lo, img_hi)])
+        lg_full, _, _ = run_full(p)
+
+        # Image KV computed standalone at canonical positions 0..T-1.
+        patches = rng.normal(size=(CFG.img_tokens, CFG.patch_dim)).astype(np.float32)
+        emb, k_img, v_img = M.encode_image_kv(CFG, W, jnp.asarray(patches))
+        t = img_hi - img_lo
+        kc = np.zeros((CFG.n_layers, s, CFG.n_heads, CFG.d_head), np.float32)
+        vc = np.zeros_like(kc)
+        kc[:, img_lo:img_hi] = np.asarray(k_img[:, :t])
+        vc[:, img_lo:img_hi] = np.asarray(v_img[:, :t])
+        # Prompt uses the *encoder* embeddings for consistency.
+        p["img_emb"][img_lo:img_hi] = np.asarray(emb[:t])
+        lg_exact, _, _ = run_full(p)
+
+        # Full reuse: select only text tokens.
+        text_idx = [i for i in range(n_real) if not (img_lo <= i < img_hi)]
+        nsel_b = 96
+        sel_ids = np.zeros(nsel_b, np.int32)
+        sel_emb = np.zeros((nsel_b, CFG.d_model), np.float32)
+        sel_isimg = np.zeros(nsel_b, np.float32)
+        sel_pos = np.zeros(nsel_b, np.int32)
+        sel_slot = np.full(nsel_b, s + 1, np.int32)
+        for j, i in enumerate(text_idx):
+            sel_ids[j] = p["ids"][i]
+            sel_pos[j] = i
+            sel_slot[j] = i
+        lg_reuse, _, _ = M.prefill_selective(
+            CFG, W,
+            jnp.asarray(sel_ids), jnp.asarray(sel_emb), jnp.asarray(sel_isimg),
+            jnp.asarray(sel_pos), jnp.asarray(sel_slot), np.int32(len(text_idx) - 1),
+            jnp.asarray(kc), jnp.asarray(vc),
+            jnp.asarray(p["pos"]), jnp.asarray(p["valid"]), jnp.asarray(p["bias"]),
+        )
+        diff = float(jnp.max(jnp.abs(lg_reuse - lg_exact)))
+        assert diff > 1e-3, "stale-position reuse should diverge from exact"
+
+
+class TestDecodeConsistency:
+    def test_decode_matches_prefill(self):
+        """prefill(n) then decode(token n) == prefill(n+1) logits."""
+        rng = np.random.default_rng(13)
+        s, n_real = 128, 64
+        p = make_prompt(rng, s, n_real, [(8, 24)])
+        _, kf, vf = run_full(p)
+
+        nxt = np.int32(rng.integers(10, CFG.vocab))
+        # Extended prompt prefill.
+        p2 = {k: (v.copy() if isinstance(v, np.ndarray) else v) for k, v in p.items()}
+        p2["ids"][n_real] = nxt
+        p2["valid"][n_real] = 1.0
+        p2["pos"][n_real] = n_real
+        p2["last"] = np.int32(n_real)
+        lg_want, _, _ = run_full(p2)
+
+        key_pos = p["pos"].copy()
+        key_pos[n_real] = n_real
+        key_valid = p["valid"].copy()
+        key_valid[n_real] = 1.0
+        kinds = np.zeros(s, int)
+        kinds[: n_real + 1] = 1
+        kinds[8:24] = 2
+        rel = np.zeros(s, int)
+        rel[8:24] = np.arange(16)
+        bias = M.make_sink_bias(CFG, kinds, rel)
+
+        lg_got, k2, v2 = M.decode_step(
+            CFG, W, nxt, np.int32(n_real), np.int32(n_real),
+            kf, vf, jnp.asarray(key_pos), jnp.asarray(key_valid), jnp.asarray(bias),
+        )
+        np.testing.assert_allclose(np.asarray(lg_got), np.asarray(lg_want), rtol=5e-4, atol=5e-4)
+
+    def test_decode_patches_cache_row(self):
+        rng = np.random.default_rng(14)
+        s, n_real = 128, 32
+        p = make_prompt(rng, s, n_real, [])
+        _, kf, vf = run_full(p)
+        key_pos = p["pos"].copy(); key_pos[n_real] = n_real
+        key_valid = p["valid"].copy(); key_valid[n_real] = 1.0
+        _, k2, v2 = M.decode_step(
+            CFG, W, np.int32(42), np.int32(n_real), np.int32(n_real),
+            kf, vf, jnp.asarray(key_pos), jnp.asarray(key_valid), jnp.asarray(p["bias"]),
+        )
+        # Untouched rows identical; new row non-zero.
+        np.testing.assert_array_equal(np.asarray(k2[:, :n_real]), np.asarray(kf[:, :n_real]))
+        assert float(jnp.max(jnp.abs(k2[:, n_real]))) > 0
+
+
+class TestEncodeImage:
+    def test_encode_matches_prefix_prefill(self):
+        """Image-as-prefix prefill reproduces the stored KV exactly."""
+        rng = np.random.default_rng(15)
+        patches = rng.normal(size=(CFG.img_tokens, CFG.patch_dim)).astype(np.float32)
+        emb, k_img, v_img = M.encode_image_kv(CFG, W, jnp.asarray(patches))
+
+        s = 128
+        t = CFG.img_tokens
+        ids = np.zeros(s, np.int32)
+        img_emb = np.zeros((s, CFG.d_model), np.float32)
+        img_emb[:t] = np.asarray(emb)
+        is_img = np.zeros(s, np.float32); is_img[:t] = 1.0
+        pos = np.arange(s, dtype=np.int32); pos[t:] = 1_000_000
+        valid = np.zeros(s, np.float32); valid[:t] = 1.0
+        kinds = np.zeros(s, int); kinds[:t] = 2
+        rel = np.zeros(s, int); rel[:t] = np.arange(t)
+        # encode_image_kv builds exactly this bias internally (image kinds
+        # at canonical positions, BOS component included at slot 0).
+        bias = M.make_sink_bias(CFG, kinds, rel)
+
+        _, kf, vf = M.prefill_full(
+            CFG, W, jnp.asarray(ids), jnp.asarray(img_emb), jnp.asarray(is_img),
+            jnp.asarray(pos), jnp.asarray(valid), jnp.asarray(bias), np.int32(t - 1),
+        )
+        np.testing.assert_allclose(
+            np.asarray(kf[:, :t]), np.asarray(k_img), rtol=5e-4, atol=5e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(vf[:, :t]), np.asarray(v_img), rtol=5e-4, atol=5e-4
+        )
+
+    def test_encode_deterministic(self):
+        rng = np.random.default_rng(16)
+        patches = rng.normal(size=(CFG.img_tokens, CFG.patch_dim)).astype(np.float32)
+        a = M.encode_image_kv(CFG, W, jnp.asarray(patches))
+        b = M.encode_image_kv(CFG, W, jnp.asarray(patches))
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestLayer0K:
+    def test_matches_prefill_layer0(self):
+        rng = np.random.default_rng(17)
+        s, n_real = 128, 80
+        p = make_prompt(rng, s, n_real, [(10, 42)])
+        _, kf, _ = run_full(p)
+        k0 = M.layer0_k(
+            CFG, W, jnp.asarray(p["ids"]), jnp.asarray(p["img_emb"]),
+            jnp.asarray(p["is_img"]), jnp.asarray(p["pos"]),
+        )
+        np.testing.assert_allclose(
+            np.asarray(k0[:n_real]), np.asarray(kf[0, :n_real]), rtol=5e-4, atol=5e-4
+        )
+
+    def test_position_sensitivity(self):
+        """The CacheBlend estimator sees real deviation under position shift."""
+        rng = np.random.default_rng(18)
+        s = 128
+        p = make_prompt(rng, s, 80, [(10, 42)])
+        k_a = M.layer0_k(CFG, W, jnp.asarray(p["ids"]), jnp.asarray(p["img_emb"]),
+                         jnp.asarray(p["is_img"]), jnp.asarray(p["pos"]))
+        shifted = p["pos"] + 64
+        k_b = M.layer0_k(CFG, W, jnp.asarray(p["ids"]), jnp.asarray(p["img_emb"]),
+                         jnp.asarray(p["is_img"]), jnp.asarray(shifted))
+        dev = float(jnp.mean(jnp.abs(k_a[:80] - k_b[:80])))
+        assert dev > 1e-2
+
+
+class TestSinkBias:
+    def test_structure(self):
+        kinds = np.array([1, 1, 2, 2, 2, 1, 0])
+        rel = np.array([0, 0, 0, 1, 2, 0, 0])
+        b = M.make_sink_bias(CFG, kinds, rel)
+        assert b[0] == pytest.approx(CFG.bos_bias)
+        assert b[2] == pytest.approx(CFG.sink_sigma)
+        assert b[2] > b[3] > b[4] > 0
+        assert b[5] == 0.0 and b[6] == 0.0
+
+    def test_attention_concentrates_on_image_head(self):
+        """Insight 2 holds by construction: early image tokens dominate the
+        attention mass of the last query (measured, not assumed)."""
+        rng = np.random.default_rng(19)
+        s, n_real = 256, 200
+        p = make_prompt(rng, s, n_real, [(16, 144)])  # 128-token image
+        out = M.prefill_debug(
+            CFG, W, jnp.asarray(p["ids"]), jnp.asarray(p["img_emb"]),
+            jnp.asarray(p["is_img"]), jnp.asarray(p["pos"]), jnp.asarray(p["valid"]),
+            jnp.asarray(p["bias"]), p["last"],
+        )
+        attn_last = np.asarray(out[1])  # [L, H, S]
+        mass = attn_last.mean(axis=(0, 1))
+        img_mass = mass[16:144]
+        first_quarter = img_mass[:32].sum()
+        rest = img_mass[32:].sum()
+        assert first_quarter > rest, "sink calibration should concentrate mass early"

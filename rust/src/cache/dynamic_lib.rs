@@ -1,0 +1,112 @@
+//! Dynamic Library — multimedia references for MRAG (paper Fig. 5).
+//!
+//! "It is relatively dynamic, since the administrator of MPIC can update the
+//! references periodically according to the demand of applications." The
+//! retriever searches it during decode (workflow ④) and the Linker splices
+//! the retrieved KV caches into the prompt.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::anyhow;
+
+use crate::kv::KvStore;
+use crate::mm::ImageId;
+use crate::Result;
+
+/// One administrable reference: an image plus the text it is indexed under.
+#[derive(Debug, Clone)]
+pub struct Reference {
+    pub image: ImageId,
+    pub description: String,
+}
+
+/// The dynamic library: an admin-maintained reference set backed by the
+/// shared tiered store (the KV of each reference is precomputed on refresh).
+pub struct DynamicLibrary {
+    store: Arc<KvStore>,
+    refs: Mutex<Vec<Reference>>,
+    /// Monotone generation counter, bumped on every admin refresh.
+    generation: Mutex<u64>,
+}
+
+impl DynamicLibrary {
+    pub fn new(store: Arc<KvStore>) -> DynamicLibrary {
+        DynamicLibrary { store, refs: Mutex::new(Vec::new()), generation: Mutex::new(0) }
+    }
+
+    pub fn store(&self) -> &Arc<KvStore> {
+        &self.store
+    }
+
+    /// Replace the whole reference set (admin refresh).
+    pub fn refresh(&self, refs: Vec<Reference>) {
+        *self.refs.lock().unwrap() = refs;
+        *self.generation.lock().unwrap() += 1;
+    }
+
+    /// Append one reference.
+    pub fn add(&self, r: Reference) {
+        self.refs.lock().unwrap().push(r);
+        *self.generation.lock().unwrap() += 1;
+    }
+
+    pub fn generation(&self) -> u64 {
+        *self.generation.lock().unwrap()
+    }
+
+    pub fn len(&self) -> usize {
+        self.refs.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn all(&self) -> Vec<Reference> {
+        self.refs.lock().unwrap().clone()
+    }
+
+    pub fn by_image(&self, image: ImageId) -> Result<Reference> {
+        self.refs
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|r| r.image == image)
+            .cloned()
+            .ok_or_else(|| anyhow!("no dynamic reference for {image:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::store::StoreConfig;
+
+    fn dl() -> DynamicLibrary {
+        let dir = std::env::temp_dir().join(format!("mpic-dlib-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store =
+            Arc::new(KvStore::new(StoreConfig { disk_dir: dir, ..Default::default() }).unwrap());
+        DynamicLibrary::new(store)
+    }
+
+    #[test]
+    fn refresh_replaces_and_bumps_generation() {
+        let d = dl();
+        assert_eq!(d.generation(), 0);
+        d.refresh(vec![Reference { image: ImageId(1), description: "hotel lobby".into() }]);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d.generation(), 1);
+        d.refresh(vec![]);
+        assert!(d.is_empty());
+        assert_eq!(d.generation(), 2);
+    }
+
+    #[test]
+    fn lookup_by_image() {
+        let d = dl();
+        d.add(Reference { image: ImageId(9), description: "louvre at night".into() });
+        assert_eq!(d.by_image(ImageId(9)).unwrap().description, "louvre at night");
+        assert!(d.by_image(ImageId(10)).is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! The Static and Dynamic Libraries of paper Fig. 5 (substrate S11).
+
+pub mod dynamic_lib;
+pub mod static_lib;
+
+pub use dynamic_lib::{DynamicLibrary, Reference};
+pub use static_lib::StaticLibrary;

@@ -1,0 +1,162 @@
+//! Static Library — per-user uploaded files and their KV caches.
+//!
+//! "It is relatively static, as it can only be modified by the users. …
+//! Users refer to these files in their queries, and MPIC links the KV cache
+//! of these files for the MLLM to inference." (paper §4.2). Files from
+//! different users are logically separated: a user can only resolve their
+//! own handles.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail};
+
+use crate::kv::{KvKey, KvStore};
+use crate::mm::{ImageId, UserId};
+use crate::Result;
+
+/// Registration record of one uploaded file.
+#[derive(Debug, Clone)]
+pub struct FileMeta {
+    pub image: ImageId,
+    pub handle: String,
+    pub uploaded_at_ms: u64,
+}
+
+/// The library: user → handle → image, backed by the tiered [`KvStore`].
+pub struct StaticLibrary {
+    store: Arc<KvStore>,
+    /// Per-user quota (number of files).
+    quota: usize,
+    files: Mutex<HashMap<UserId, BTreeMap<String, FileMeta>>>,
+}
+
+impl StaticLibrary {
+    pub fn new(store: Arc<KvStore>, quota: usize) -> StaticLibrary {
+        StaticLibrary { store, quota, files: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn store(&self) -> &Arc<KvStore> {
+        &self.store
+    }
+
+    /// Register an uploaded file. The caller (engine upload path) computes
+    /// and `put`s the KV into the store; this records ownership.
+    pub fn register(&self, user: UserId, handle: &str, image: ImageId) -> Result<()> {
+        let mut g = self.files.lock().unwrap();
+        let entry = g.entry(user).or_default();
+        if entry.len() >= self.quota && !entry.contains_key(handle) {
+            bail!("user {user:?} exceeds upload quota of {}", self.quota);
+        }
+        entry.insert(
+            handle.to_string(),
+            FileMeta {
+                image,
+                handle: handle.to_string(),
+                uploaded_at_ms: now_ms(),
+            },
+        );
+        Ok(())
+    }
+
+    /// Resolve a handle *for this user only* (logical separation).
+    pub fn resolve(&self, user: UserId, handle: &str) -> Result<ImageId> {
+        let g = self.files.lock().unwrap();
+        g.get(&user)
+            .and_then(|m| m.get(handle))
+            .map(|f| f.image)
+            .ok_or_else(|| anyhow!("user {user:?} has no file {handle:?}"))
+    }
+
+    /// Does this user own (a registration of) this image?
+    pub fn owns(&self, user: UserId, image: ImageId) -> bool {
+        let g = self.files.lock().unwrap();
+        g.get(&user).map(|m| m.values().any(|f| f.image == image)).unwrap_or(false)
+    }
+
+    /// List a user's files.
+    pub fn list(&self, user: UserId) -> Vec<FileMeta> {
+        let g = self.files.lock().unwrap();
+        g.get(&user).map(|m| m.values().cloned().collect()).unwrap_or_default()
+    }
+
+    /// Delete a file registration and evict its cache entries.
+    pub fn remove(&self, user: UserId, handle: &str, model: &str) -> Result<()> {
+        let mut g = self.files.lock().unwrap();
+        let entry = g.get_mut(&user).ok_or_else(|| anyhow!("unknown user"))?;
+        let meta = entry.remove(handle).ok_or_else(|| anyhow!("unknown handle {handle:?}"))?;
+        drop(g);
+        self.store.evict(&KvKey::new(model, meta.image));
+        Ok(())
+    }
+}
+
+fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::store::StoreConfig;
+
+    fn lib() -> StaticLibrary {
+        let dir = std::env::temp_dir().join(format!("mpic-slib-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(
+            KvStore::new(StoreConfig { disk_dir: dir, ..Default::default() }).unwrap(),
+        );
+        StaticLibrary::new(store, 4)
+    }
+
+    #[test]
+    fn register_resolve() {
+        let l = lib();
+        l.register(UserId(1), "IMAGE#A", ImageId(100)).unwrap();
+        assert_eq!(l.resolve(UserId(1), "IMAGE#A").unwrap(), ImageId(100));
+        assert!(l.owns(UserId(1), ImageId(100)));
+    }
+
+    #[test]
+    fn users_are_isolated() {
+        let l = lib();
+        l.register(UserId(1), "IMAGE#A", ImageId(100)).unwrap();
+        assert!(l.resolve(UserId(2), "IMAGE#A").is_err());
+        assert!(!l.owns(UserId(2), ImageId(100)));
+    }
+
+    #[test]
+    fn quota_enforced() {
+        let l = lib();
+        for i in 0..4 {
+            l.register(UserId(1), &format!("IMAGE#{i}"), ImageId(i)).unwrap();
+        }
+        assert!(l.register(UserId(1), "IMAGE#4", ImageId(4)).is_err());
+        // Re-registering an existing handle is allowed.
+        l.register(UserId(1), "IMAGE#0", ImageId(10)).unwrap();
+        // Other users unaffected.
+        l.register(UserId(2), "IMAGE#A", ImageId(5)).unwrap();
+    }
+
+    #[test]
+    fn remove_unregisters() {
+        let l = lib();
+        l.register(UserId(1), "IMAGE#A", ImageId(100)).unwrap();
+        l.remove(UserId(1), "IMAGE#A", "test-model").unwrap();
+        assert!(l.resolve(UserId(1), "IMAGE#A").is_err());
+        assert!(l.remove(UserId(1), "IMAGE#A", "test-model").is_err());
+    }
+
+    #[test]
+    fn list_returns_metadata() {
+        let l = lib();
+        l.register(UserId(1), "IMAGE#A", ImageId(1)).unwrap();
+        l.register(UserId(1), "IMAGE#B", ImageId(2)).unwrap();
+        let files = l.list(UserId(1));
+        assert_eq!(files.len(), 2);
+        assert!(files.iter().any(|f| f.handle == "IMAGE#A"));
+    }
+}

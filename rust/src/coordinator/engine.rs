@@ -1,0 +1,654 @@
+//! The serving engine: upload path (workflow ①), the four context-caching
+//! inference paths (§6.1), greedy decode, and MRAG augmentation (④).
+//!
+//! All PJRT work stays on the engine's thread (`runtime` is `Rc`-based);
+//! disk loads overlap via the transfer engine's pool. TTFT is measured
+//! wall-clock from request ingestion to first-token logits, with the
+//! fetch / link / execute breakdown recorded per request.
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context};
+
+use super::linker::Linker;
+use super::metrics::Metrics;
+use super::selection::{plan, Policy};
+use crate::cache::{DynamicLibrary, StaticLibrary};
+use crate::kv::store::StoreConfig;
+use crate::kv::{ImageKv, KvKey, KvShape, KvStore, TransferEngine, TransferReport};
+use crate::mm::{synth_patches, ImageId, LinkedLayout, Prompt, Tokenizer, UserId};
+use crate::retriever::Retriever;
+use crate::runtime::{ExecStats, ModelMeta, Runtime, Tensor};
+use crate::util::threadpool::ThreadPool;
+use crate::Result;
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub artifact_dir: PathBuf,
+    pub model: String,
+    pub store: StoreConfig,
+    pub pool_threads: usize,
+    /// Default decode budget.
+    pub max_new_tokens: usize,
+    pub system_prompt: String,
+    /// Require that prompt images are owned by the user or present in the
+    /// dynamic library.
+    pub enforce_ownership: bool,
+    /// Per-user static-library quota (files).
+    pub user_quota: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            artifact_dir: PathBuf::from(crate::DEFAULT_ARTIFACT_DIR),
+            model: "mpic-sim-a".into(),
+            store: StoreConfig::default(),
+            pool_threads: 4,
+            max_new_tokens: 16,
+            system_prompt: "You are a helpful multimodal assistant".into(),
+            enforce_ownership: false,
+            user_quota: 64,
+        }
+    }
+}
+
+/// TTFT breakdown of one request.
+#[derive(Debug, Clone, Default)]
+pub struct TtftBreakdown {
+    /// Transfer-engine wall time (load ∥ compute of image KV).
+    pub fetch_s: f64,
+    /// Linker assembly time (host).
+    pub link_s: f64,
+    /// Sum of artifact execution stats across prefill steps.
+    pub exec: ExecStats,
+    /// Number of engine invocations before the first token (1 for MPIC).
+    pub steps: usize,
+    /// Wall time ingestion → first-token logits.
+    pub total_s: f64,
+}
+
+/// Result of one inference.
+#[derive(Debug, Clone)]
+pub struct InferenceResult {
+    pub policy: String,
+    /// Greedily decoded token ids (length ≤ max_new_tokens).
+    pub tokens: Vec<i32>,
+    /// First-token logits (vocab), for KL-based quality scoring.
+    pub first_logits: Vec<f32>,
+    pub ttft: TtftBreakdown,
+    pub transfer: TransferReport,
+    pub decode_s: f64,
+    pub seq_len: usize,
+    pub n_selected: usize,
+    pub s_bucket: usize,
+}
+
+/// A prefilled sequence being decoded (possibly interleaved with others by
+/// the scheduler's continuous-batching loop).
+pub struct ActiveSeq {
+    pub policy: String,
+    pub prompt_len: usize,
+    pub s_bucket: usize,
+    pub max_new: usize,
+    k_cache: Tensor,
+    v_cache: Tensor,
+    key_pos: Vec<i32>,
+    key_valid: Vec<f32>,
+    sink_bias: Vec<f32>,
+    logits: Vec<f32>,
+    first_logits: Vec<f32>,
+    pub tokens: Vec<i32>,
+    pub ttft: TtftBreakdown,
+    pub transfer: TransferReport,
+    pub n_selected: usize,
+    decode_s: f64,
+}
+
+impl ActiveSeq {
+    /// Total tokens this sequence occupies (for block accounting).
+    pub fn footprint_tokens(&self) -> usize {
+        self.prompt_len + self.max_new
+    }
+
+    pub fn finish(self) -> InferenceResult {
+        InferenceResult {
+            policy: self.policy,
+            tokens: self.tokens,
+            first_logits: self.first_logits,
+            ttft: self.ttft,
+            transfer: self.transfer,
+            decode_s: self.decode_s,
+            seq_len: self.prompt_len,
+            n_selected: self.n_selected,
+            s_bucket: self.s_bucket,
+        }
+    }
+}
+
+/// The engine.
+pub struct Engine {
+    runtime: Runtime,
+    meta: ModelMeta,
+    tokenizer: Tokenizer,
+    store: Arc<KvStore>,
+    pub static_lib: StaticLibrary,
+    pub dynamic_lib: DynamicLibrary,
+    retriever: RefCell<Retriever>,
+    transfer: TransferEngine,
+    pub metrics: Metrics,
+    cfg: EngineConfig,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Result<Engine> {
+        let runtime = Runtime::open(&cfg.artifact_dir)?;
+        let meta = runtime.model_meta(&cfg.model)?.clone();
+        let tokenizer = Tokenizer::new(meta.vocab);
+        let store = Arc::new(KvStore::new(cfg.store.clone())?);
+        let pool = Arc::new(ThreadPool::new(cfg.pool_threads));
+        let static_lib = StaticLibrary::new(Arc::clone(&store), cfg.user_quota);
+        let dynamic_lib = DynamicLibrary::new(Arc::clone(&store));
+        let transfer = TransferEngine::new(pool);
+        Ok(Engine {
+            runtime,
+            meta,
+            tokenizer,
+            store,
+            static_lib,
+            dynamic_lib,
+            retriever: RefCell::new(Retriever::new()),
+            transfer,
+            metrics: Metrics::new(),
+            cfg,
+        })
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    pub fn store(&self) -> &Arc<KvStore> {
+        &self.store
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tokenizer
+    }
+
+    /// Switch the transfer engine between overlapped and serial fetch
+    /// (ablation for Fig. 6).
+    pub fn set_transfer_parallel(&mut self, parallel: bool) {
+        self.transfer.parallel = parallel;
+    }
+
+    // ------------------------------------------------------------------
+    // Upload path (workflow ①)
+    // ------------------------------------------------------------------
+
+    /// Compute an image's KV via the `encode_image_kv` artifact.
+    pub fn encode_image(&self, image: ImageId) -> Result<ImageKv> {
+        let t = self.meta.img_tokens;
+        let patches = synth_patches(image, t, self.meta.patch_dim);
+        let art = Runtime::art_encode_image(&self.meta.name);
+        let (outs, _) = self.runtime.execute(
+            &art,
+            &[Tensor::f32(vec![t, self.meta.patch_dim], patches)],
+        )?;
+        let shape = KvShape {
+            layers: self.meta.n_layers,
+            tokens: t,
+            heads: self.meta.n_heads,
+            d_head: self.meta.d_head,
+            d_model: self.meta.d_model,
+        };
+        let kv = ImageKv {
+            key: KvKey::new(&self.meta.name, image),
+            shape,
+            emb: outs[0].f32_data()?.to_vec(),
+            k: outs[1].f32_data()?.to_vec(),
+            v: outs[2].f32_data()?.to_vec(),
+        };
+        kv.validate()?;
+        Ok(kv)
+    }
+
+    /// Upload: synth pixels → encode → store (device + disk write-through)
+    /// → register in the user's static library.
+    pub fn upload_image(&self, user: UserId, handle: &str) -> Result<ImageId> {
+        let image = ImageId::from_handle(handle);
+        let t0 = Instant::now();
+        let kv = self.encode_image(image).context("upload: encode")?;
+        self.store.put(kv)?;
+        self.static_lib.register(user, handle, image)?;
+        self.metrics.record_upload(t0.elapsed().as_secs_f64());
+        Ok(image)
+    }
+
+    /// Admin path: (re)index a dynamic-library reference with its KV.
+    pub fn add_reference(&self, handle: &str, description: &str) -> Result<ImageId> {
+        let image = ImageId::from_handle(handle);
+        let kv = self.encode_image(image)?;
+        self.store.put(kv)?;
+        self.dynamic_lib.add(crate::cache::Reference {
+            image,
+            description: description.to_string(),
+        });
+        Ok(image)
+    }
+
+    // ------------------------------------------------------------------
+    // MRAG (workflow ④)
+    // ------------------------------------------------------------------
+
+    /// Retrieve the top-k dynamic references for a query and append them to
+    /// the prompt (the decode-time retrieval trigger is emulated by an
+    /// explicit call — see DESIGN.md §2).
+    pub fn mrag_augment(&self, prompt: &Prompt, top_k: usize) -> Result<(Prompt, Vec<ImageId>)> {
+        let mut r = self.retriever.borrow_mut();
+        r.sync(&self.dynamic_lib);
+        if r.is_empty() {
+            bail!("dynamic library is empty");
+        }
+        let query: Vec<String> = prompt
+            .segments
+            .iter()
+            .filter_map(|s| match s {
+                crate::mm::Segment::Text(t) => Some(t.clone()),
+                _ => None,
+            })
+            .collect();
+        let hits = r.search(&query.join(" "), top_k);
+        let mut out = prompt.clone();
+        let mut ids = Vec::new();
+        for (image, _score) in hits {
+            out = out.text("retrieved reference").image(image);
+            ids.push(image);
+        }
+        Ok((out, ids))
+    }
+
+    // ------------------------------------------------------------------
+    // Inference
+    // ------------------------------------------------------------------
+
+    fn check_ownership(&self, prompt: &Prompt) -> Result<()> {
+        if !self.cfg.enforce_ownership {
+            return Ok(());
+        }
+        for image in prompt.images() {
+            let owned = self.static_lib.owns(prompt.user, image);
+            let public = self.dynamic_lib.by_image(image).is_ok();
+            if !owned && !public {
+                bail!("user {:?} does not own image {image:?}", prompt.user);
+            }
+        }
+        Ok(())
+    }
+
+    fn layout(&self, prompt: &Prompt) -> LinkedLayout {
+        LinkedLayout::build(prompt, &self.tokenizer, self.meta.img_tokens, &self.cfg.system_prompt)
+    }
+
+    /// Fetch the KV entries for every image span (order = span order),
+    /// loading hits in parallel with computing misses.
+    fn fetch_entries(
+        &self,
+        layout: &LinkedLayout,
+    ) -> Result<(Vec<ImageKv>, TransferReport)> {
+        let keys: Vec<KvKey> = layout
+            .image_spans
+            .iter()
+            .map(|&(id, _, _)| KvKey::new(&self.meta.name, id))
+            .collect();
+        self.transfer.fetch(&self.store, &keys, |key| self.encode_image(key.image))
+    }
+
+    /// Prefill one request under a context-caching policy, producing an
+    /// [`ActiveSeq`] ready for (interleaved) decoding. TTFT is fully
+    /// accounted by the time this returns.
+    pub fn prefill(&self, prompt: &Prompt, policy: Policy, max_new: usize) -> Result<ActiveSeq> {
+        self.check_ownership(prompt)?;
+        let layout = self.layout(prompt);
+        let len = layout.len();
+        anyhow::ensure!(len >= 2, "prompt too short");
+        let manifest = self.runtime.manifest();
+        // One bucket serves prefill *and* the decode tail.
+        let s_bucket = manifest.seq_bucket_for(len + max_new)?;
+        let linker = Linker::new(&self.meta);
+
+        let t_request = Instant::now();
+        let (entries, transfer) = self.fetch_entries(&layout)?;
+        let entry_refs: Vec<&ImageKv> = entries.iter().collect();
+        let fetch_s = t_request.elapsed().as_secs_f64();
+
+        let mut ttft = TtftBreakdown { fetch_s, ..Default::default() };
+        let (first_logits, k_cache, v_cache, n_selected);
+
+        match policy {
+            Policy::Prefix => {
+                let t_link = Instant::now();
+                let inputs = linker.full_prefill(&layout, &entry_refs, s_bucket)?;
+                ttft.link_s += t_link.elapsed().as_secs_f64();
+                let art = Runtime::art_prefill_full(&self.meta.name, s_bucket);
+                let (outs, es) = self.runtime.execute(&art, &inputs.to_vec())?;
+                ttft.exec.add(&es);
+                ttft.steps = 1;
+                let mut it = outs.into_iter();
+                first_logits = it.next().unwrap().f32_data()?.to_vec();
+                k_cache = it.next().unwrap();
+                v_cache = it.next().unwrap();
+                n_selected = len;
+            }
+
+            Policy::MpicK(_) => {
+                // Single-pass selective attention over the dummy+linked cache.
+                let pl = plan(policy, &layout, &[]);
+                n_selected = pl.selected.len();
+                let (s_sel, n_bucket) = self.selective_bucket(s_bucket, n_selected)?;
+                let t_link = Instant::now();
+                let (k, v) = linker.linked_cache(&layout, &entry_refs, s_sel)?;
+                let si = linker.selective(&layout, &entry_refs, &pl, k, v, s_sel, n_bucket)?;
+                ttft.link_s += t_link.elapsed().as_secs_f64();
+                let art = Runtime::art_prefill_selective(&self.meta.name, s_sel, n_bucket);
+                let (outs, es) = self.runtime.execute(&art, &si.to_vec())?;
+                ttft.exec.add(&es);
+                ttft.steps = 1;
+                let mut it = outs.into_iter();
+                first_logits = it.next().unwrap().f32_data()?.to_vec();
+                k_cache = it.next().unwrap();
+                v_cache = it.next().unwrap();
+            }
+
+            Policy::FullReuse => {
+                // Step A: text-only prefill at linked positions.
+                let (text_kv, mapping, es_a, link_a) = self.text_prefill(&linker, &layout)?;
+                ttft.link_s += link_a;
+                ttft.exec.add(&es_a);
+                // Concatenate: image KV + text KV into the linked cache.
+                let t_link = Instant::now();
+                let (mut k, mut v) = linker.linked_cache(&layout, &entry_refs, s_bucket)?;
+                let (tk, tv, text_bucket) = text_kv;
+                linker.scatter_packed_rows(&mut k, s_bucket, &tk, text_bucket, &mapping)?;
+                linker.scatter_packed_rows(&mut v, s_bucket, &tv, text_bucket, &mapping)?;
+                let slots = super::linker::SlotArrays::build(&layout, &self.meta, s_bucket);
+                ttft.link_s += t_link.elapsed().as_secs_f64();
+
+                // Step B: recompute the final prompt token over the blended
+                // cache to produce the first output token's logits.
+                let last = len - 1;
+                let last_id = match layout.tokens[last] {
+                    crate::mm::TokenKind::Text(id) => id,
+                    crate::mm::TokenKind::Image { .. } => {
+                        bail!("full-reuse requires the prompt to end with text")
+                    }
+                };
+                let kvdims =
+                    vec![self.meta.n_layers, s_bucket, self.meta.n_heads, self.meta.d_head];
+                let (kp, kvld, sb) = slots.tensors();
+                let art = Runtime::art_decode_step(&self.meta.name, s_bucket);
+                let (outs, es_b) = self.runtime.execute(
+                    &art,
+                    &[
+                        Tensor::scalar_i32(last_id),
+                        Tensor::scalar_i32(last as i32),
+                        Tensor::scalar_i32(last as i32),
+                        Tensor::f32(kvdims.clone(), k),
+                        Tensor::f32(kvdims, v),
+                        kp,
+                        kvld,
+                        sb,
+                    ],
+                )?;
+                ttft.exec.add(&es_b);
+                ttft.steps = 2;
+                let mut it = outs.into_iter();
+                first_logits = it.next().unwrap().f32_data()?.to_vec();
+                k_cache = it.next().unwrap();
+                v_cache = it.next().unwrap();
+                n_selected = layout.text_len();
+            }
+
+            Policy::CacheBlend(_) => {
+                // Deviation estimation on the linked layout (layer-0 K).
+                let t_link = Instant::now();
+                let full_inputs = linker.full_prefill(&layout, &entry_refs, s_bucket)?;
+                ttft.link_s += t_link.elapsed().as_secs_f64();
+                let art0 = Runtime::art_layer0_k(&self.meta.name, s_bucket);
+                let (outs0, es0) = self.runtime.execute(&art0, &full_inputs.layer0_vec())?;
+                ttft.exec.add(&es0);
+                let t_dev = Instant::now();
+                let dev = linker.layer0_deviation(
+                    &layout,
+                    &entry_refs,
+                    outs0[0].f32_data()?,
+                    s_bucket,
+                )?;
+                let pl = plan(policy, &layout, &dev);
+                ttft.link_s += t_dev.elapsed().as_secs_f64();
+                n_selected = pl.selected.len() + layout.text_len();
+
+                // Step A: text prefill, exactly like full reuse.
+                let (text_kv, mapping, es_a, link_a) = self.text_prefill(&linker, &layout)?;
+                ttft.link_s += link_a;
+                ttft.exec.add(&es_a);
+
+                // Step B: selective pass over (image ∪ text) cache.
+                let t_link2 = Instant::now();
+                let (mut k, mut v) = linker.linked_cache(&layout, &entry_refs, s_bucket)?;
+                let (tk, tv, text_bucket) = text_kv;
+                linker.scatter_packed_rows(&mut k, s_bucket, &tk, text_bucket, &mapping)?;
+                linker.scatter_packed_rows(&mut v, s_bucket, &tv, text_bucket, &mapping)?;
+                let (_, n_bucket) = self.selective_bucket(s_bucket, pl.selected.len())?;
+                let si = linker.selective(&layout, &entry_refs, &pl, k, v, s_bucket, n_bucket)?;
+                ttft.link_s += t_link2.elapsed().as_secs_f64();
+                let art = Runtime::art_prefill_selective(&self.meta.name, s_bucket, n_bucket);
+                let (outs, es) = self.runtime.execute(&art, &si.to_vec())?;
+                ttft.exec.add(&es);
+                ttft.steps = 3; // estimate + text prefill + blend
+                let mut it = outs.into_iter();
+                first_logits = it.next().unwrap().f32_data()?.to_vec();
+                k_cache = it.next().unwrap();
+                v_cache = it.next().unwrap();
+            }
+        }
+
+        ttft.total_s = t_request.elapsed().as_secs_f64();
+
+        let slots = super::linker::SlotArrays::build(&layout, &self.meta, s_bucket);
+        Ok(ActiveSeq {
+            policy: policy.name(),
+            prompt_len: len,
+            s_bucket,
+            max_new,
+            k_cache,
+            v_cache,
+            key_pos: slots.key_pos,
+            key_valid: slots.key_valid,
+            sink_bias: slots.sink_bias,
+            logits: first_logits.clone(),
+            first_logits,
+            tokens: Vec::with_capacity(max_new),
+            ttft,
+            transfer,
+            n_selected,
+            decode_s: 0.0,
+        })
+    }
+
+    /// Run one request end to end: prefill + greedy decode to the budget.
+    pub fn infer(&self, prompt: &Prompt, policy: Policy, max_new: usize) -> Result<InferenceResult> {
+        let mut seq = self.prefill(prompt, policy, max_new)?;
+        while self.decode_one(&mut seq)? {}
+        let result = seq.finish();
+        self.metrics.record_request(&result);
+        Ok(result)
+    }
+
+    /// One greedy decode step for an active sequence. Returns `false` when
+    /// the sequence has exhausted its budget or bucket.
+    pub fn decode_one(&self, seq: &mut ActiveSeq) -> Result<bool> {
+        if seq.tokens.len() >= seq.max_new {
+            return Ok(false);
+        }
+        let t0 = Instant::now();
+        let next = argmax(&seq.logits);
+        seq.tokens.push(next);
+        let pos = seq.prompt_len + seq.tokens.len() - 1;
+        if pos >= seq.s_bucket || seq.tokens.len() >= seq.max_new {
+            seq.decode_s += t0.elapsed().as_secs_f64();
+            return Ok(false);
+        }
+        seq.key_pos[pos] = pos as i32;
+        seq.key_valid[pos] = 1.0;
+        // Perf iteration 2 (EXPERIMENTS.md §Perf): the rows-only decode
+        // artifact returns just this token's K/V rows; the host patches its
+        // authoritative cache in place, halving the per-step copy volume
+        // versus the full-cache-output variant.
+        let art_decode = Runtime::art_decode_step_rows(&self.meta.name, seq.s_bucket);
+        let tok_t = Tensor::scalar_i32(next);
+        let pos_t = Tensor::scalar_i32(pos as i32);
+        let slot_t = Tensor::scalar_i32(pos as i32);
+        let kp_t = Tensor::i32(vec![seq.s_bucket], seq.key_pos.clone());
+        let kv_t = Tensor::f32(vec![seq.s_bucket], seq.key_valid.clone());
+        let sb_t = Tensor::f32(vec![seq.s_bucket], seq.sink_bias.clone());
+        let args: Vec<&Tensor> = vec![
+            &tok_t, &pos_t, &slot_t, &seq.k_cache, &seq.v_cache, &kp_t, &kv_t, &sb_t,
+        ];
+        let (outs, es) = self.runtime.execute(&art_decode, &args)?;
+        self.metrics.record_decode_step(es.total_s());
+        let mut it = outs.into_iter();
+        seq.logits = it.next().unwrap().f32_data()?.to_vec();
+        let k_row = it.next().unwrap();
+        let v_row = it.next().unwrap();
+        // Patch the new rows into the host caches at `pos`.
+        let (l, h, dh) = (self.meta.n_layers, self.meta.n_heads, self.meta.d_head);
+        let row = h * dh;
+        let s_bucket = seq.s_bucket;
+        for (cache, rows) in [(&mut seq.k_cache, k_row), (&mut seq.v_cache, v_row)] {
+            let data = cache.f32_data_mut()?;
+            let src = rows.f32_data()?;
+            for layer in 0..l {
+                let dst = (layer * s_bucket + pos) * row;
+                data[dst..dst + row].copy_from_slice(&src[layer * row..(layer + 1) * row]);
+            }
+        }
+        seq.decode_s += t0.elapsed().as_secs_f64();
+        Ok(seq.tokens.len() < seq.max_new)
+    }
+
+    /// Step A of the two-step baselines: packed text-only prefill.
+    /// Returns ((k, v, bucket), mapping, exec stats, link seconds).
+    #[allow(clippy::type_complexity)]
+    fn text_prefill(
+        &self,
+        linker: &Linker,
+        layout: &LinkedLayout,
+    ) -> Result<((Vec<f32>, Vec<f32>, usize), Vec<usize>, ExecStats, f64)> {
+        let n_text = layout.text_len();
+        let bucket = self.runtime.manifest().seq_bucket_for(n_text)?;
+        let t_link = Instant::now();
+        let (inputs, mapping) = linker.text_only_prefill(layout, bucket)?;
+        let link_s = t_link.elapsed().as_secs_f64();
+        let art = Runtime::art_prefill_full(&self.meta.name, bucket);
+        let (outs, es) = self.runtime.execute(&art, &inputs.to_vec())?;
+        let mut it = outs.into_iter();
+        let _logits = it.next().unwrap();
+        let k = it.next().unwrap().f32_data()?.to_vec();
+        let v = it.next().unwrap().f32_data()?.to_vec();
+        Ok(((k, v, bucket), mapping, es, link_s))
+    }
+
+    /// Resolve the (S, N) selective bucket: S fixed by the decode tail,
+    /// N = smallest bucket holding `n_sel`.
+    fn selective_bucket(&self, s_bucket: usize, n_sel: usize) -> Result<(usize, usize)> {
+        let manifest = self.runtime.manifest();
+        manifest
+            .selective_buckets
+            .iter()
+            .copied()
+            .filter(|&(s, n)| s == s_bucket && n >= n_sel)
+            .min_by_key(|&(_, n)| n)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no selective bucket (s={s_bucket}, n>={n_sel}); selected too many tokens"
+                )
+            })
+    }
+
+    // ------------------------------------------------------------------
+    // Analysis entrypoints (Figs. 4, 8, 11)
+    // ------------------------------------------------------------------
+
+    /// Full prefill returning the raw K tensor (Fig. 8 K-distance bench).
+    pub fn full_prefill_kv(&self, prompt: &Prompt) -> Result<(LinkedLayout, Tensor, Tensor)> {
+        let layout = self.layout(prompt);
+        let s_bucket = self.runtime.manifest().seq_bucket_for(layout.len())?;
+        let (entries, _) = self.fetch_entries(&layout)?;
+        let entry_refs: Vec<&ImageKv> = entries.iter().collect();
+        let linker = Linker::new(&self.meta);
+        let inputs = linker.full_prefill(&layout, &entry_refs, s_bucket)?;
+        let art = Runtime::art_prefill_full(&self.meta.name, s_bucket);
+        let (outs, _) = self.runtime.execute(&art, &inputs.to_vec())?;
+        let mut it = outs.into_iter();
+        let _logits = it.next().unwrap();
+        Ok((layout, it.next().unwrap(), it.next().unwrap()))
+    }
+
+    /// Debug prefill: per-layer attention row of the last query plus the
+    /// full layer-0 attention matrix (Figs. 4 & 11).
+    pub fn debug_attention(&self, prompt: &Prompt) -> Result<(LinkedLayout, Tensor, Tensor)> {
+        let layout = self.layout(prompt);
+        let s_bucket = self.runtime.manifest().debug_bucket_for(layout.len())?;
+        let (entries, _) = self.fetch_entries(&layout)?;
+        let entry_refs: Vec<&ImageKv> = entries.iter().collect();
+        let linker = Linker::new(&self.meta);
+        let inputs = linker.full_prefill(&layout, &entry_refs, s_bucket)?;
+        let art = Runtime::art_prefill_debug(&self.meta.name, s_bucket);
+        let (outs, _) = self.runtime.execute(&art, &inputs.to_vec())?;
+        let mut it = outs.into_iter();
+        let _logits = it.next().unwrap();
+        Ok((layout, it.next().unwrap(), it.next().unwrap()))
+    }
+
+    /// Fetch an image's stored KV (benches/Fig. 8: compare stored vs fresh).
+    pub fn stored_kv(&self, image: ImageId) -> Option<ImageKv> {
+        self.store.get(&KvKey::new(&self.meta.name, image)).map(|(kv, _)| kv)
+    }
+}
+
+/// Greedy argmax over logits.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.0, 3.0, -1.0, 3.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+}

@@ -1,0 +1,641 @@
+//! The Linker (paper Fig. 5 component 5, Fig. 7 mechanism).
+//!
+//! "Linker links the KV cache of multimodal information to users' queries."
+//! Concretely: given a [`LinkedLayout`], the fetched per-image KV entries
+//! and a [`SelectionPlan`], it assembles the activation tensors of the AOT
+//! artifacts — the linked (position-stale) K/V cache with zero-filled
+//! *dummy* rows for selected tokens, the per-slot position/validity/sink
+//! vectors, and the packed selection arrays.
+//!
+//! This is L3's hot path; the performance pass (EXPERIMENTS.md §Perf)
+//! tracks its assembly time separately from device execution.
+
+use anyhow::{bail, ensure};
+
+use super::selection::SelectionPlan;
+use crate::kv::ImageKv;
+use crate::mm::{LinkedLayout, TokenKind};
+use crate::runtime::{ModelMeta, Tensor};
+use crate::Result;
+
+/// Linked position used for padding slots (matches `python/tests` usage).
+pub const PAD_POS: i32 = 1_000_000;
+
+/// Per-slot metadata shared by every artifact operating on a bucket.
+#[derive(Debug, Clone)]
+pub struct SlotArrays {
+    pub key_pos: Vec<i32>,
+    pub key_valid: Vec<f32>,
+    pub sink_bias: Vec<f32>,
+}
+
+impl SlotArrays {
+    pub fn build(layout: &LinkedLayout, meta: &ModelMeta, bucket: usize) -> SlotArrays {
+        let len = layout.len();
+        let mut key_pos = vec![PAD_POS; bucket];
+        let mut key_valid = vec![0f32; bucket];
+        for (i, kp) in key_pos.iter_mut().enumerate().take(len.min(bucket)) {
+            *kp = i as i32;
+            key_valid[i] = 1.0;
+        }
+        let kinds = layout.kinds(bucket);
+        let rel = layout.img_rel(bucket);
+        let sink_bias = crate::mm::make_sink_bias(meta.sink_params(), &kinds, &rel);
+        SlotArrays { key_pos, key_valid, sink_bias }
+    }
+
+    pub fn tensors(&self) -> (Tensor, Tensor, Tensor) {
+        (
+            Tensor::i32(vec![self.key_pos.len()], self.key_pos.clone()),
+            Tensor::f32(vec![self.key_valid.len()], self.key_valid.clone()),
+            Tensor::f32(vec![self.sink_bias.len()], self.sink_bias.clone()),
+        )
+    }
+}
+
+/// Activation set for `prefill_full` / `prefill_debug` / `layer0_k`.
+#[derive(Debug, Clone)]
+pub struct FullPrefillInputs {
+    pub ids: Tensor,
+    pub img_emb: Tensor,
+    pub is_img: Tensor,
+    pub positions: Tensor,
+    pub valid: Tensor,
+    pub sink_bias: Tensor,
+    pub last_idx: Tensor,
+    pub bucket: usize,
+}
+
+impl FullPrefillInputs {
+    pub fn to_vec(&self) -> Vec<Tensor> {
+        vec![
+            self.ids.clone(),
+            self.img_emb.clone(),
+            self.is_img.clone(),
+            self.positions.clone(),
+            self.valid.clone(),
+            self.sink_bias.clone(),
+            self.last_idx.clone(),
+        ]
+    }
+
+    /// The subset used by `layer0_k` (ids, img_emb, is_img, positions).
+    pub fn layer0_vec(&self) -> Vec<Tensor> {
+        vec![self.ids.clone(), self.img_emb.clone(), self.is_img.clone(), self.positions.clone()]
+    }
+}
+
+/// Activation set for `prefill_selective`.
+#[derive(Debug, Clone)]
+pub struct SelectiveInputs {
+    pub sel_ids: Tensor,
+    pub sel_img_emb: Tensor,
+    pub sel_is_img: Tensor,
+    pub sel_pos: Tensor,
+    pub sel_slot: Tensor,
+    pub last_sel: Tensor,
+    pub k_cache: Tensor,
+    pub v_cache: Tensor,
+    pub key_pos: Tensor,
+    pub key_valid: Tensor,
+    pub sink_bias: Tensor,
+    pub s_bucket: usize,
+    pub n_bucket: usize,
+    /// Number of real (non-padding) selected tokens.
+    pub n_selected: usize,
+}
+
+impl SelectiveInputs {
+    pub fn to_vec(self) -> Vec<Tensor> {
+        vec![
+            self.sel_ids,
+            self.sel_img_emb,
+            self.sel_is_img,
+            self.sel_pos,
+            self.sel_slot,
+            self.last_sel,
+            self.k_cache,
+            self.v_cache,
+            self.key_pos,
+            self.key_valid,
+            self.sink_bias,
+        ]
+    }
+}
+
+/// The linker. Stateless; methods are pure assembly.
+pub struct Linker<'a> {
+    pub meta: &'a ModelMeta,
+}
+
+impl<'a> Linker<'a> {
+    pub fn new(meta: &'a ModelMeta) -> Linker<'a> {
+        Linker { meta }
+    }
+
+    /// Fetch entry lookup: `entries[i]` corresponds to `layout.image_spans[i]`.
+    fn check_entries(&self, layout: &LinkedLayout, entries: &[&ImageKv]) -> Result<()> {
+        ensure!(
+            entries.len() == layout.image_spans.len(),
+            "linker: {} KV entries for {} image spans",
+            entries.len(),
+            layout.image_spans.len()
+        );
+        for (e, &(id, lo, hi)) in entries.iter().zip(&layout.image_spans) {
+            ensure!(e.key.image == id, "linker: entry/span image mismatch");
+            ensure!(
+                e.shape.tokens == hi - lo,
+                "linker: image {:?} has {} stored tokens but span is {}",
+                id,
+                e.shape.tokens,
+                hi - lo
+            );
+            ensure!(e.shape.layers == self.meta.n_layers, "layer count mismatch");
+            ensure!(e.shape.heads == self.meta.n_heads, "head count mismatch");
+            ensure!(e.shape.d_head == self.meta.d_head, "head dim mismatch");
+            ensure!(e.shape.d_model == self.meta.d_model, "model dim mismatch");
+        }
+        Ok(())
+    }
+
+    /// Assemble `prefill_full` inputs (prefix caching, text-only step of the
+    /// two-step algorithms when given a text-only layout, debug analysis).
+    pub fn full_prefill(
+        &self,
+        layout: &LinkedLayout,
+        entries: &[&ImageKv],
+        bucket: usize,
+    ) -> Result<FullPrefillInputs> {
+        self.check_entries(layout, entries)?;
+        let len = layout.len();
+        ensure!(len <= bucket, "layout of {len} tokens exceeds bucket {bucket}");
+        ensure!(len >= 1, "empty layout");
+
+        let d = self.meta.d_model;
+        let mut ids = vec![0i32; bucket];
+        let mut img_emb = vec![0f32; bucket * d];
+        let mut is_img = vec![0f32; bucket];
+        let mut positions = vec![PAD_POS; bucket];
+        let mut valid = vec![0f32; bucket];
+
+        for (i, tok) in layout.tokens.iter().enumerate() {
+            positions[i] = i as i32;
+            valid[i] = 1.0;
+            if let TokenKind::Text(id) = tok {
+                ids[i] = *id;
+            }
+        }
+        for (span_idx, &(_, lo, hi)) in layout.image_spans.iter().enumerate() {
+            let e = entries[span_idx];
+            for (rel, slot) in (lo..hi).enumerate() {
+                is_img[slot] = 1.0;
+                img_emb[slot * d..(slot + 1) * d]
+                    .copy_from_slice(&e.emb[rel * d..(rel + 1) * d]);
+            }
+        }
+
+        let slots = SlotArrays::build(layout, self.meta, bucket);
+        Ok(FullPrefillInputs {
+            ids: Tensor::i32(vec![bucket], ids),
+            img_emb: Tensor::f32(vec![bucket, d], img_emb),
+            is_img: Tensor::f32(vec![bucket], is_img),
+            positions: Tensor::i32(vec![bucket], positions),
+            valid: Tensor::f32(vec![bucket], valid),
+            sink_bias: Tensor::f32(vec![bucket], slots.sink_bias),
+            last_idx: Tensor::scalar_i32(len as i32 - 1),
+            bucket,
+        })
+    }
+
+    /// Build a *text-only* compacted layout for the two-step baselines'
+    /// step A: text tokens keep their **linked** positions but are packed
+    /// into the low slots of a (smaller) bucket.
+    ///
+    /// Returns the `prefill_full` inputs plus the mapping from packed index
+    /// to original linked slot.
+    pub fn text_only_prefill(
+        &self,
+        layout: &LinkedLayout,
+        bucket: usize,
+    ) -> Result<(FullPrefillInputs, Vec<usize>)> {
+        let text_idx = layout.text_indices();
+        let n = text_idx.len();
+        ensure!(n >= 1, "no text tokens");
+        ensure!(n <= bucket, "text of {n} tokens exceeds bucket {bucket}");
+        let d = self.meta.d_model;
+
+        let mut ids = vec![0i32; bucket];
+        let img_emb = vec![0f32; bucket * d];
+        let is_img = vec![0f32; bucket];
+        let mut positions = vec![PAD_POS; bucket];
+        let mut valid = vec![0f32; bucket];
+        let mut kinds = vec![0u8; bucket];
+        for (packed, &slot) in text_idx.iter().enumerate() {
+            if let TokenKind::Text(id) = layout.tokens[slot] {
+                ids[packed] = id;
+            }
+            positions[packed] = slot as i32;
+            valid[packed] = 1.0;
+            kinds[packed] = 1;
+        }
+        let rel = vec![0u32; bucket];
+        let sink_bias = crate::mm::make_sink_bias(self.meta.sink_params(), &kinds, &rel);
+
+        Ok((
+            FullPrefillInputs {
+                ids: Tensor::i32(vec![bucket], ids),
+                img_emb: Tensor::f32(vec![bucket, d], img_emb),
+                is_img: Tensor::f32(vec![bucket], is_img),
+                positions: Tensor::i32(vec![bucket], positions),
+                valid: Tensor::f32(vec![bucket], valid),
+                sink_bias: Tensor::f32(vec![bucket], sink_bias),
+                last_idx: Tensor::scalar_i32(n as i32 - 1),
+                bucket,
+            },
+            text_idx,
+        ))
+    }
+
+    /// Scatter stored image KV entries into a zeroed linked cache
+    /// `[L, S, H, Dh]` (the dummy cache of §5.1: non-image rows stay zero).
+    pub fn linked_cache(
+        &self,
+        layout: &LinkedLayout,
+        entries: &[&ImageKv],
+        bucket: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.check_entries(layout, entries)?;
+        let (l, h, dh) = (self.meta.n_layers, self.meta.n_heads, self.meta.d_head);
+        let row = h * dh;
+        let mut k = vec![0f32; l * bucket * row];
+        let mut v = vec![0f32; l * bucket * row];
+        for (span_idx, &(_, lo, hi)) in layout.image_spans.iter().enumerate() {
+            let e = entries[span_idx];
+            let t = hi - lo;
+            for layer in 0..l {
+                let src_base = layer * t * row;
+                let dst_base = layer * bucket * row + lo * row;
+                k[dst_base..dst_base + t * row]
+                    .copy_from_slice(&e.k[src_base..src_base + t * row]);
+                v[dst_base..dst_base + t * row]
+                    .copy_from_slice(&e.v[src_base..src_base + t * row]);
+            }
+        }
+        Ok((k, v))
+    }
+
+    /// Overwrite rows of a linked cache with freshly computed rows coming
+    /// from a *packed* prefill output (`text_only_prefill` step A):
+    /// `packed_kv` is `[L, S_packed, H, Dh]`, `mapping[packed] = slot`.
+    pub fn scatter_packed_rows(
+        &self,
+        cache: &mut [f32],
+        bucket: usize,
+        packed_kv: &[f32],
+        packed_bucket: usize,
+        mapping: &[usize],
+    ) -> Result<()> {
+        let (l, h, dh) = (self.meta.n_layers, self.meta.n_heads, self.meta.d_head);
+        let row = h * dh;
+        ensure!(cache.len() == l * bucket * row, "cache size mismatch");
+        ensure!(packed_kv.len() == l * packed_bucket * row, "packed size mismatch");
+        for layer in 0..l {
+            for (packed, &slot) in mapping.iter().enumerate() {
+                if slot >= bucket {
+                    bail!("mapping slot {slot} out of bucket {bucket}");
+                }
+                let src = layer * packed_bucket * row + packed * row;
+                let dst = layer * bucket * row + slot * row;
+                cache[dst..dst + row].copy_from_slice(&packed_kv[src..src + row]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Assemble `prefill_selective` inputs for a selection plan.
+    ///
+    /// `k_cache`/`v_cache` are the linked cache (usually from
+    /// [`Linker::linked_cache`], possibly with text rows scattered in for
+    /// the CacheBlend path).
+    #[allow(clippy::too_many_arguments)]
+    pub fn selective(
+        &self,
+        layout: &LinkedLayout,
+        entries: &[&ImageKv],
+        plan: &SelectionPlan,
+        k_cache: Vec<f32>,
+        v_cache: Vec<f32>,
+        s_bucket: usize,
+        n_bucket: usize,
+    ) -> Result<SelectiveInputs> {
+        self.check_entries(layout, entries)?;
+        let n_sel = plan.selected.len();
+        ensure!(n_sel >= 1, "selective pass needs at least one selected token");
+        ensure!(n_sel <= n_bucket, "{n_sel} selected tokens exceed N bucket {n_bucket}");
+        ensure!(layout.len() <= s_bucket, "layout exceeds S bucket");
+        let d = self.meta.d_model;
+        let row = self.meta.n_heads * self.meta.d_head;
+        ensure!(k_cache.len() == self.meta.n_layers * s_bucket * row, "k_cache size");
+        ensure!(v_cache.len() == k_cache.len(), "v_cache size");
+
+        // Span lookup for image-token embeddings.
+        let span_of_slot = |slot: usize| -> Option<(usize, usize)> {
+            layout
+                .image_spans
+                .iter()
+                .enumerate()
+                .find(|(_, &(_, lo, hi))| slot >= lo && slot < hi)
+                .map(|(idx, &(_, lo, _))| (idx, slot - lo))
+        };
+
+        let mut sel_ids = vec![0i32; n_bucket];
+        let mut sel_img_emb = vec![0f32; n_bucket * d];
+        let mut sel_is_img = vec![0f32; n_bucket];
+        // Padding queries sit at position 0 (attend ~nothing) and scatter to
+        // slot S+1, which the jnp `mode="drop"` scatter discards.
+        let mut sel_pos = vec![0i32; n_bucket];
+        let mut sel_slot = vec![s_bucket as i32 + 1; n_bucket];
+
+        let mut last_sel = 0usize;
+        let mut last_pos = -1i64;
+        for (i, &slot) in plan.selected.iter().enumerate() {
+            ensure!(slot < layout.len(), "selected slot {slot} out of range");
+            sel_pos[i] = slot as i32;
+            sel_slot[i] = slot as i32;
+            match layout.tokens[slot] {
+                TokenKind::Text(id) => sel_ids[i] = id,
+                TokenKind::Image { .. } => {
+                    let (span_idx, rel) = span_of_slot(slot)
+                        .ok_or_else(|| anyhow::anyhow!("image token outside any span"))?;
+                    sel_is_img[i] = 1.0;
+                    let e = entries[span_idx];
+                    sel_img_emb[i * d..(i + 1) * d]
+                        .copy_from_slice(&e.emb[rel * d..(rel + 1) * d]);
+                }
+            }
+            if slot as i64 > last_pos {
+                last_pos = slot as i64;
+                last_sel = i;
+            }
+        }
+        ensure!(
+            last_pos == layout.len() as i64 - 1,
+            "the final prompt token must be selected (got last selected pos {last_pos})"
+        );
+
+        let slots = SlotArrays::build(layout, self.meta, s_bucket);
+        Ok(SelectiveInputs {
+            sel_ids: Tensor::i32(vec![n_bucket], sel_ids),
+            sel_img_emb: Tensor::f32(vec![n_bucket, d], sel_img_emb),
+            sel_is_img: Tensor::f32(vec![n_bucket], sel_is_img),
+            sel_pos: Tensor::i32(vec![n_bucket], sel_pos),
+            sel_slot: Tensor::i32(vec![n_bucket], sel_slot),
+            last_sel: Tensor::scalar_i32(last_sel as i32),
+            k_cache: Tensor::f32(
+                vec![self.meta.n_layers, s_bucket, self.meta.n_heads, self.meta.d_head],
+                k_cache,
+            ),
+            v_cache: Tensor::f32(
+                vec![self.meta.n_layers, s_bucket, self.meta.n_heads, self.meta.d_head],
+                v_cache,
+            ),
+            key_pos: Tensor::i32(vec![s_bucket], slots.key_pos),
+            key_valid: Tensor::f32(vec![s_bucket], slots.key_valid),
+            sink_bias: Tensor::f32(vec![s_bucket], slots.sink_bias),
+            s_bucket,
+            n_bucket,
+            n_selected: n_sel,
+        })
+    }
+
+    /// Per-image-token layer-0 K deviation: |stored - recomputed| L1 over
+    /// heads×dims, for CacheBlend's selector. `k0_linked` is the
+    /// `layer0_k` output `[S, H, Dh]` at linked positions.
+    pub fn layer0_deviation(
+        &self,
+        layout: &LinkedLayout,
+        entries: &[&ImageKv],
+        k0_linked: &[f32],
+        bucket: usize,
+    ) -> Result<Vec<f32>> {
+        self.check_entries(layout, entries)?;
+        let row = self.meta.n_heads * self.meta.d_head;
+        ensure!(k0_linked.len() == bucket * row, "k0 size mismatch");
+        let mut dev = vec![0f32; layout.len()];
+        for (span_idx, &(_, lo, hi)) in layout.image_spans.iter().enumerate() {
+            let e = entries[span_idx];
+            // Stored layer-0 K rows: e.k layout [L, T, H, Dh], layer 0 first.
+            for (rel, slot) in (lo..hi).enumerate() {
+                let stored = &e.k[rel * row..(rel + 1) * row];
+                let fresh = &k0_linked[slot * row..(slot + 1) * row];
+                dev[slot] = stored.iter().zip(fresh).map(|(a, b)| (a - b).abs()).sum();
+            }
+        }
+        Ok(dev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::selection::{plan, Policy};
+    use crate::kv::{KvKey, KvShape};
+    use crate::mm::{ImageId, Prompt, Tokenizer, UserId};
+    use crate::runtime::artifacts::{WeightsMeta};
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            name: "test-model".into(),
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 4,
+            d_ff: 16,
+            vocab: 4096,
+            img_tokens: 4,
+            patch_dim: 4,
+            rope_theta: 1e4,
+            sink_sigma: 3.0,
+            sink_tau: 8.0,
+            bos_bias: 2.0,
+            weights: WeightsMeta {
+                file: "none".into(),
+                total_bytes: 0,
+                sha256: String::new(),
+                tensors: vec![],
+            },
+        }
+    }
+
+    fn entry(meta: &ModelMeta, image: u64, marker: f32) -> ImageKv {
+        let shape = KvShape {
+            layers: meta.n_layers,
+            tokens: meta.img_tokens,
+            heads: meta.n_heads,
+            d_head: meta.d_head,
+            d_model: meta.d_model,
+        };
+        ImageKv {
+            key: KvKey::new(&meta.name, ImageId(image)),
+            shape,
+            emb: vec![marker; shape.emb_elems()],
+            k: (0..shape.kv_elems()).map(|i| marker + i as f32 * 1e-3).collect(),
+            v: (0..shape.kv_elems()).map(|i| -marker - i as f32 * 1e-3).collect(),
+        }
+    }
+
+    fn fixture() -> (ModelMeta, LinkedLayout, ImageKv, ImageKv) {
+        let m = meta();
+        let t = Tokenizer::new(4096);
+        let p = Prompt::new(UserId(1))
+            .text("look here")
+            .image(ImageId(1))
+            .text("and")
+            .image(ImageId(2))
+            .text("compare");
+        let l = LinkedLayout::build(&p, &t, m.img_tokens, "sys");
+        let e1 = entry(&m, 1, 1.0);
+        let e2 = entry(&m, 2, 2.0);
+        (m, l, e1, e2)
+    }
+
+    #[test]
+    fn full_prefill_layout() {
+        let (m, l, e1, e2) = fixture();
+        let linker = Linker::new(&m);
+        let inputs = linker.full_prefill(&l, &[&e1, &e2], 32).unwrap();
+        let is_img = inputs.is_img.f32_data().unwrap();
+        let (_, lo1, hi1) = l.image_spans[0];
+        assert!(is_img[lo1..hi1].iter().all(|&x| x == 1.0));
+        assert_eq!(is_img.iter().filter(|&&x| x == 1.0).count(), 8);
+        // Image embeddings marked per entry.
+        let emb = inputs.img_emb.f32_data().unwrap();
+        assert_eq!(emb[lo1 * m.d_model], 1.0);
+        let (_, lo2, _) = l.image_spans[1];
+        assert_eq!(emb[lo2 * m.d_model], 2.0);
+        // Positions: arange then PAD.
+        let pos = inputs.positions.i32_data().unwrap();
+        assert_eq!(pos[0], 0);
+        assert_eq!(pos[l.len() - 1], l.len() as i32 - 1);
+        assert_eq!(pos[l.len()], PAD_POS);
+        assert_eq!(inputs.last_idx.i32_data().unwrap()[0], l.len() as i32 - 1);
+    }
+
+    #[test]
+    fn linked_cache_scatters_rows() {
+        let (m, l, e1, e2) = fixture();
+        let linker = Linker::new(&m);
+        let bucket = 32;
+        let (k, _v) = linker.linked_cache(&l, &[&e1, &e2], bucket).unwrap();
+        let row = m.n_heads * m.d_head;
+        let (_, lo1, _) = l.image_spans[0];
+        // Layer 0, first image, rel 0 == stored k[0..row].
+        let dst = lo1 * row;
+        assert_eq!(&k[dst..dst + row], &e1.k[0..row]);
+        // Layer 1 row of image 2, rel 1.
+        let (_, lo2, _) = l.image_spans[1];
+        let dst = bucket * row + (lo2 + 1) * row; // layer 1 base + slot
+        let src = m.img_tokens * row + row; // layer 1 base + rel 1
+        assert_eq!(&k[dst..dst + row], &e2.k[src..src + row]);
+        // Text slots are dummy zeros.
+        let text_slot = l.text_indices()[0];
+        assert!(k[text_slot * row..(text_slot + 1) * row].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn selective_inputs_pack_selection() {
+        let (m, l, e1, e2) = fixture();
+        let linker = Linker::new(&m);
+        let pl = plan(Policy::MpicK(2), &l, &[]);
+        let (k, v) = linker.linked_cache(&l, &[&e1, &e2], 32).unwrap();
+        let si = linker.selective(&l, &[&e1, &e2], &pl, k, v, 32, 32).unwrap();
+        assert_eq!(si.n_selected, pl.selected.len());
+        let sel_pos = si.sel_pos.i32_data().unwrap();
+        let sel_slot = si.sel_slot.i32_data().unwrap();
+        // Real entries mirror plan.selected; padding points out of range.
+        for (i, &slot) in pl.selected.iter().enumerate() {
+            assert_eq!(sel_pos[i], slot as i32);
+            assert_eq!(sel_slot[i], slot as i32);
+        }
+        for i in pl.selected.len()..32 {
+            assert_eq!(sel_slot[i], 33);
+        }
+        // last_sel points at the highest-position selected token.
+        let last_sel = si.last_sel.i32_data().unwrap()[0] as usize;
+        assert_eq!(sel_pos[last_sel] as usize, l.len() - 1);
+        // Image-head entries carry embeddings.
+        let (_, lo1, _) = l.image_spans[0];
+        let idx = pl.selected.iter().position(|&s| s == lo1).unwrap();
+        assert_eq!(si.sel_is_img.f32_data().unwrap()[idx], 1.0);
+        assert_eq!(si.sel_img_emb.f32_data().unwrap()[idx * m.d_model], 1.0);
+    }
+
+    #[test]
+    fn selective_rejects_unselected_final_token() {
+        let (m, l, e1, e2) = fixture();
+        let linker = Linker::new(&m);
+        let mut pl = plan(Policy::MpicK(2), &l, &[]);
+        pl.selected.retain(|&s| s != l.len() - 1);
+        let (k, v) = linker.linked_cache(&l, &[&e1, &e2], 32).unwrap();
+        assert!(linker.selective(&l, &[&e1, &e2], &pl, k, v, 32, 32).is_err());
+    }
+
+    #[test]
+    fn text_only_prefill_keeps_linked_positions() {
+        let (m, l, _, _) = fixture();
+        let linker = Linker::new(&m);
+        let (inputs, mapping) = linker.text_only_prefill(&l, 16).unwrap();
+        let pos = inputs.positions.i32_data().unwrap();
+        for (packed, &slot) in mapping.iter().enumerate() {
+            assert_eq!(pos[packed], slot as i32);
+        }
+        assert_eq!(mapping.len(), l.text_len());
+        // Valid only for packed entries.
+        let valid = inputs.valid.f32_data().unwrap();
+        assert_eq!(valid.iter().filter(|&&x| x == 1.0).count(), mapping.len());
+    }
+
+    #[test]
+    fn scatter_packed_rows_places_text_kv() {
+        let (m, l, e1, e2) = fixture();
+        let linker = Linker::new(&m);
+        let bucket = 32;
+        let (mut k, _) = linker.linked_cache(&l, &[&e1, &e2], bucket).unwrap();
+        let packed_bucket = 16;
+        let mapping = l.text_indices();
+        let row = m.n_heads * m.d_head;
+        let packed: Vec<f32> = (0..m.n_layers * packed_bucket * row).map(|i| 100.0 + i as f32).collect();
+        linker.scatter_packed_rows(&mut k, bucket, &packed, packed_bucket, &mapping).unwrap();
+        // First text slot row at layer 0 == packed row 0.
+        let slot = mapping[0];
+        assert_eq!(&k[slot * row..slot * row + row], &packed[0..row]);
+        // Image rows untouched.
+        let (_, lo1, _) = l.image_spans[0];
+        assert_eq!(&k[lo1 * row..lo1 * row + row], &e1.k[0..row]);
+    }
+
+    #[test]
+    fn deviation_reflects_difference() {
+        let (m, l, e1, e2) = fixture();
+        let linker = Linker::new(&m);
+        let bucket = 32;
+        let row = m.n_heads * m.d_head;
+        // Fresh K equals stored for image 1, differs for image 2.
+        let mut k0 = vec![0f32; bucket * row];
+        let (_, lo1, hi1) = l.image_spans[0];
+        for (rel, slot) in (lo1..hi1).enumerate() {
+            k0[slot * row..(slot + 1) * row].copy_from_slice(&e1.k[rel * row..(rel + 1) * row]);
+        }
+        let dev = linker.layer0_deviation(&l, &[&e1, &e2], &k0, bucket).unwrap();
+        for slot in lo1..hi1 {
+            assert_eq!(dev[slot], 0.0);
+        }
+        let (_, lo2, hi2) = l.image_spans[1];
+        for slot in lo2..hi2 {
+            assert!(dev[slot] > 0.0);
+        }
+        for &slot in &l.text_indices() {
+            assert_eq!(dev[slot], 0.0);
+        }
+    }
+}

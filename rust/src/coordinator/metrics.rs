@@ -1,0 +1,160 @@
+//! Serving metrics: TTFT / decode-step latency / throughput / cache stats.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Value;
+use crate::util::stats::Samples;
+
+/// Aggregated engine metrics. Interior-mutable so the (single-threaded)
+/// engine and the (multi-threaded) server can both record.
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    started: Instant,
+    ttft: Samples,
+    ttft_fetch: Samples,
+    ttft_link: Samples,
+    ttft_exec: Samples,
+    decode_step: Samples,
+    upload: Samples,
+    requests: u64,
+    tokens_out: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            inner: Mutex::new(Inner {
+                started: Instant::now(),
+                ttft: Samples::new(),
+                ttft_fetch: Samples::new(),
+                ttft_link: Samples::new(),
+                ttft_exec: Samples::new(),
+                decode_step: Samples::new(),
+                upload: Samples::new(),
+                requests: 0,
+                tokens_out: 0,
+            }),
+        }
+    }
+
+    pub fn record_request(&self, r: &super::engine::InferenceResult) {
+        let mut g = self.inner.lock().unwrap();
+        g.ttft.push(r.ttft.total_s);
+        g.ttft_fetch.push(r.ttft.fetch_s);
+        g.ttft_link.push(r.ttft.link_s);
+        g.ttft_exec.push(r.ttft.exec.total_s());
+        g.requests += 1;
+        g.tokens_out += r.tokens.len() as u64;
+    }
+
+    pub fn record_decode_step(&self, secs: f64) {
+        self.inner.lock().unwrap().decode_step.push(secs);
+    }
+
+    pub fn record_upload(&self, secs: f64) {
+        self.inner.lock().unwrap().upload.push(secs);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.inner.lock().unwrap().requests
+    }
+
+    /// Mean TTFT in seconds (NaN if no requests yet).
+    pub fn mean_ttft_s(&self) -> f64 {
+        self.inner.lock().unwrap().ttft.mean()
+    }
+
+    /// Requests per second since engine start.
+    pub fn throughput_rps(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        g.requests as f64 / g.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    /// Decoded tokens per second since engine start.
+    pub fn throughput_tps(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        g.tokens_out as f64 / g.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    /// JSON snapshot for the server's `stats` op and the benches.
+    pub fn snapshot(&self) -> Value {
+        let g = self.inner.lock().unwrap();
+        let s = |x: &Samples| {
+            Value::obj(vec![
+                ("n", Value::num(x.len() as f64)),
+                ("mean", Value::num(if x.is_empty() { 0.0 } else { x.mean() })),
+                ("p50", Value::num(if x.is_empty() { 0.0 } else { x.p50() })),
+                ("p95", Value::num(if x.is_empty() { 0.0 } else { x.p95() })),
+            ])
+        };
+        Value::obj(vec![
+            ("requests", Value::num(g.requests as f64)),
+            ("tokens_out", Value::num(g.tokens_out as f64)),
+            ("ttft_s", s(&g.ttft)),
+            ("ttft_fetch_s", s(&g.ttft_fetch)),
+            ("ttft_link_s", s(&g.ttft_link)),
+            ("ttft_exec_s", s(&g.ttft_exec)),
+            ("decode_step_s", s(&g.decode_step)),
+            ("upload_s", s(&g.upload)),
+        ])
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::InferenceResult;
+    use crate::kv::TransferReport;
+
+    fn fake_result(ttft: f64) -> InferenceResult {
+        InferenceResult {
+            policy: "prefix".into(),
+            tokens: vec![1, 2, 3],
+            first_logits: vec![],
+            ttft: crate::coordinator::engine::TtftBreakdown {
+                total_s: ttft,
+                fetch_s: ttft * 0.1,
+                link_s: ttft * 0.1,
+                ..Default::default()
+            },
+            transfer: TransferReport::default(),
+            decode_s: 0.01,
+            seq_len: 100,
+            n_selected: 50,
+            s_bucket: 128,
+        }
+    }
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_request(&fake_result(0.5));
+        m.record_request(&fake_result(1.5));
+        m.record_decode_step(0.01);
+        assert_eq!(m.requests(), 2);
+        assert!((m.mean_ttft_s() - 1.0).abs() < 1e-9);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("requests").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(snap.get("tokens_out").unwrap().as_f64().unwrap(), 6.0);
+        let ttft = snap.get("ttft_s").unwrap();
+        assert_eq!(ttft.get("n").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn throughput_positive_after_requests() {
+        let m = Metrics::new();
+        m.record_request(&fake_result(0.1));
+        assert!(m.throughput_rps() > 0.0);
+        assert!(m.throughput_tps() > 0.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! The coordinator (substrate S13) — the paper's system contribution.
+//!
+//! * [`selection`] — which tokens each CC algorithm recomputes
+//!   (prefix / full-reuse / CacheBlend-r / MPIC-k, paper §5.2 & §6.1);
+//! * [`linker`] — assembles stored KV caches, the dummy cache and the
+//!   selection metadata into artifact inputs (paper Fig. 7);
+//! * [`engine`] — the inference engine: upload path, the four CC inference
+//!   paths, greedy decode, MRAG augmentation;
+//! * [`scheduler`] — FCFS prefill queue + round-robin decode interleaving
+//!   with paged-KV admission control;
+//! * [`session`] — multi-turn conversation state;
+//! * [`metrics`] — TTFT/TPOT/throughput accounting.
+
+pub mod engine;
+pub mod linker;
+pub mod metrics;
+pub mod scheduler;
+pub mod selection;
+pub mod session;
+
+pub use engine::{Engine, EngineConfig, InferenceResult};
+pub use selection::Policy;

@@ -1,0 +1,242 @@
+//! Selection policies: which tokens are recomputed by each context-caching
+//! algorithm, and whether the algorithm is single- or two-step.
+//!
+//! | algorithm    | recomputed tokens                              | steps |
+//! |--------------|------------------------------------------------|-------|
+//! | prefix       | everything (exact)                             | 1     |
+//! | full reuse   | text only                                      | 2     |
+//! | CacheBlend-r | text + top r% image tokens by KV deviation     | 2     |
+//! | MPIC-k       | text + first k tokens of every image           | **1** |
+
+use crate::mm::LinkedLayout;
+
+/// A context-caching algorithm.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// Prefix caching: recompute the whole prompt (exact baseline).
+    Prefix,
+    /// Full reuse: reuse every image KV verbatim, recompute text only.
+    FullReuse,
+    /// CacheBlend-r: additionally recompute the r% of image tokens with the
+    /// largest layer-0 K deviation (r in percent of image tokens).
+    CacheBlend(f64),
+    /// MPIC-k: recompute the first k tokens of every image (the attention
+    /// sinks — Insights 2 & 3), single-pass selective attention.
+    MpicK(usize),
+}
+
+impl Policy {
+    pub fn name(&self) -> String {
+        match self {
+            Policy::Prefix => "prefix".into(),
+            Policy::FullReuse => "full-reuse".into(),
+            Policy::CacheBlend(r) => format!("cacheblend-{r:.0}"),
+            Policy::MpicK(k) => format!("mpic-{k}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Policy> {
+        if s == "prefix" {
+            return Ok(Policy::Prefix);
+        }
+        if s == "full-reuse" || s == "full_reuse" {
+            return Ok(Policy::FullReuse);
+        }
+        if let Some(r) = s.strip_prefix("cacheblend-") {
+            return Ok(Policy::CacheBlend(r.parse()?));
+        }
+        if let Some(k) = s.strip_prefix("mpic-") {
+            return Ok(Policy::MpicK(k.parse()?));
+        }
+        anyhow::bail!("unknown policy {s:?} (prefix|full-reuse|cacheblend-R|mpic-K)")
+    }
+
+    /// Does this policy run the two-step (text prefill, then blend) path?
+    pub fn two_step(&self) -> bool {
+        matches!(self, Policy::FullReuse | Policy::CacheBlend(_))
+    }
+
+    /// Does this policy need the layer-0 deviation estimate?
+    pub fn needs_deviation(&self) -> bool {
+        matches!(self, Policy::CacheBlend(_))
+    }
+}
+
+/// The resolved plan for one request.
+#[derive(Debug, Clone)]
+pub struct SelectionPlan {
+    pub policy: Policy,
+    /// Sorted indices (linked positions) of tokens the *selective pass*
+    /// recomputes. Empty for `Prefix` (which runs `prefill_full`) and for
+    /// `FullReuse` (whose step 2 is a single decode-style pass).
+    pub selected: Vec<usize>,
+    /// Image-token indices whose stored KV rows are reused verbatim.
+    pub reused: Vec<usize>,
+}
+
+/// Resolve a policy against a concrete layout.
+///
+/// `deviation` is the per-token layer-0 K deviation (only consulted by
+/// CacheBlend; pass `&[]` otherwise). The final prompt token is always
+/// selected — the first output token's logits are read from it.
+pub fn plan(policy: Policy, layout: &LinkedLayout, deviation: &[f32]) -> SelectionPlan {
+    let last = layout.len() - 1;
+    let mut selected: Vec<usize> = match policy {
+        Policy::Prefix => Vec::new(),
+        Policy::FullReuse => Vec::new(),
+        Policy::MpicK(k) => {
+            let mut sel = layout.text_indices();
+            sel.extend(layout.image_head_indices(k));
+            sel
+        }
+        Policy::CacheBlend(r) => {
+            // Step-2 selection: top r% image tokens by deviation (+ last).
+            let img = layout.image_indices();
+            let n_recompute = ((r / 100.0) * img.len() as f64).ceil() as usize;
+            let mut scored: Vec<usize> = img;
+            scored.sort_by(|&a, &b| {
+                let da = deviation.get(a).copied().unwrap_or(0.0);
+                let db = deviation.get(b).copied().unwrap_or(0.0);
+                db.partial_cmp(&da).unwrap().then(a.cmp(&b))
+            });
+            scored.truncate(n_recompute);
+            scored
+        }
+    };
+    if matches!(policy, Policy::MpicK(_) | Policy::CacheBlend(_)) && !selected.contains(&last) {
+        selected.push(last);
+    }
+    selected.sort_unstable();
+    selected.dedup();
+
+    let reused = match policy {
+        Policy::Prefix => Vec::new(),
+        _ => {
+            let sel: std::collections::HashSet<usize> = selected.iter().copied().collect();
+            layout.image_indices().into_iter().filter(|i| !sel.contains(i)).collect()
+        }
+    };
+    SelectionPlan { policy, selected, reused }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mm::{ImageId, Prompt, Tokenizer, UserId};
+
+    fn layout() -> LinkedLayout {
+        let t = Tokenizer::new(4096);
+        let p = Prompt::new(UserId(1))
+            .text("describe the scenes")
+            .image(ImageId(1))
+            .image(ImageId(2))
+            .text("in detail please");
+        LinkedLayout::build(&p, &t, 16, "system prompt here")
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in [Policy::Prefix, Policy::FullReuse, Policy::CacheBlend(15.0), Policy::MpicK(32)] {
+            let parsed = Policy::parse(&p.name()).unwrap();
+            assert_eq!(parsed, p);
+        }
+        assert!(Policy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn mpic_k_selects_text_and_image_heads() {
+        let l = layout();
+        let plan = plan(Policy::MpicK(4), &l, &[]);
+        // Text + 4 per image.
+        assert_eq!(plan.selected.len(), l.text_len() + 8);
+        // Heads of both images are in.
+        for &(_, lo, _) in &l.image_spans {
+            for j in 0..4 {
+                assert!(plan.selected.contains(&(lo + j)));
+            }
+            assert!(!plan.selected.contains(&(lo + 4)));
+        }
+        // Reused = all image tokens not selected.
+        assert_eq!(plan.reused.len(), 32 - 8);
+        // Last token always selected.
+        assert!(plan.selected.contains(&(l.len() - 1)));
+    }
+
+    #[test]
+    fn mpic_k_larger_than_image_is_full_recompute_of_images() {
+        let l = layout();
+        let plan = plan(Policy::MpicK(100), &l, &[]);
+        assert_eq!(plan.selected.len(), l.len());
+        assert!(plan.reused.is_empty());
+    }
+
+    #[test]
+    fn cacheblend_selects_by_deviation() {
+        let l = layout();
+        let mut dev = vec![0.0f32; l.len()];
+        let (_, lo, _) = l.image_spans[0];
+        // Make tokens lo+5 and lo+9 the most deviant.
+        dev[lo + 5] = 10.0;
+        dev[lo + 9] = 8.0;
+        let plan = plan(Policy::CacheBlend(7.0), &l, &dev); // 7% of 32 -> 3 tokens
+        let img_selected: Vec<usize> =
+            plan.selected.iter().copied().filter(|i| *i != l.len() - 1).collect();
+        assert_eq!(img_selected.len(), 3);
+        assert!(img_selected.contains(&(lo + 5)));
+        assert!(img_selected.contains(&(lo + 9)));
+    }
+
+    #[test]
+    fn full_reuse_reuses_every_image_token() {
+        let l = layout();
+        let plan = plan(Policy::FullReuse, &l, &[]);
+        assert!(plan.selected.is_empty());
+        assert_eq!(plan.reused.len(), 32);
+    }
+
+    #[test]
+    fn prefix_recomputes_everything() {
+        let l = layout();
+        let plan = plan(Policy::Prefix, &l, &[]);
+        assert!(plan.selected.is_empty());
+        assert!(plan.reused.is_empty());
+    }
+
+    #[test]
+    fn property_selected_and_reused_partition_images() {
+        crate::util::prop::check(
+            "selection-partition",
+            40,
+            |rng| {
+                let k = rng.below(20) as usize;
+                let n_img = 1 + rng.below(4) as usize;
+                (k, n_img, rng.next_u64())
+            },
+            |&(k, n_img, seed)| {
+                let t = Tokenizer::new(4096);
+                let mut p = Prompt::new(UserId(1)).text("hello world opening");
+                for i in 0..n_img {
+                    p = p.image(ImageId(seed ^ i as u64)).text("and then");
+                }
+                let l = LinkedLayout::build(&p, &t, 16, "sys");
+                let plan = plan(Policy::MpicK(k), &l, &[]);
+                let img: std::collections::HashSet<usize> =
+                    l.image_indices().into_iter().collect();
+                for &i in &plan.reused {
+                    if !img.contains(&i) {
+                        return Err(format!("reused non-image token {i}"));
+                    }
+                    if plan.selected.contains(&i) {
+                        return Err(format!("token {i} both selected and reused"));
+                    }
+                }
+                let covered = plan.reused.len()
+                    + plan.selected.iter().filter(|i| img.contains(i)).count();
+                if covered != img.len() {
+                    return Err("selected+reused do not cover image tokens".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,104 @@
+//! Multi-turn conversation sessions.
+//!
+//! A session accumulates the dialogue so far; each new user turn is linked
+//! as `history ++ new turn`. With MPIC the *images* of earlier turns hit
+//! the static library, so only the (short) new text is recomputed — the
+//! multi-turn benefit the paper's motivating dialogue (Fig. 1) describes.
+
+use std::collections::HashMap;
+
+use crate::mm::{Prompt, Segment, UserId};
+
+/// One user's conversation state.
+#[derive(Debug, Clone, Default)]
+pub struct Session {
+    history: Vec<Segment>,
+    turns: usize,
+}
+
+impl Session {
+    /// Extend the session with a user turn, returning the full prompt to
+    /// link (history + this turn).
+    pub fn user_turn(&mut self, user: UserId, turn: &Prompt) -> Prompt {
+        self.history.extend(turn.segments.iter().cloned());
+        self.turns += 1;
+        Prompt { user, segments: self.history.clone() }
+    }
+
+    /// Record the assistant's reply (token ids rendered as one text span)
+    /// so later turns attend over it.
+    pub fn assistant_reply(&mut self, tokens: &[i32]) {
+        let rendered: Vec<String> = tokens.iter().map(|t| format!("tok{t}")).collect();
+        self.history.push(Segment::Text(rendered.join(" ")));
+    }
+
+    pub fn turns(&self) -> usize {
+        self.turns
+    }
+
+    pub fn history_len(&self) -> usize {
+        self.history.len()
+    }
+}
+
+/// Session registry keyed by user.
+#[derive(Debug, Default)]
+pub struct SessionStore {
+    sessions: HashMap<UserId, Session>,
+}
+
+impl SessionStore {
+    pub fn new() -> SessionStore {
+        SessionStore::default()
+    }
+
+    pub fn session(&mut self, user: UserId) -> &mut Session {
+        self.sessions.entry(user).or_default()
+    }
+
+    pub fn reset(&mut self, user: UserId) {
+        self.sessions.remove(&user);
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mm::ImageId;
+
+    #[test]
+    fn turns_accumulate() {
+        let mut store = SessionStore::new();
+        let user = UserId(7);
+        let t1 = Prompt::new(user).text("look at").image(ImageId(1));
+        let full1 = store.session(user).user_turn(user, &t1);
+        assert_eq!(full1.segments.len(), 2);
+        store.session(user).assistant_reply(&[5, 6]);
+
+        let t2 = Prompt::new(user).text("and now compare with").image(ImageId(2));
+        let full2 = store.session(user).user_turn(user, &t2);
+        // history: turn1 (2) + reply (1) + turn2 (2)
+        assert_eq!(full2.segments.len(), 5);
+        assert_eq!(full2.images(), vec![ImageId(1), ImageId(2)]);
+        assert_eq!(store.session(user).turns(), 2);
+    }
+
+    #[test]
+    fn sessions_are_per_user() {
+        let mut store = SessionStore::new();
+        store.session(UserId(1)).user_turn(UserId(1), &Prompt::new(UserId(1)).text("a"));
+        store.session(UserId(2)).user_turn(UserId(2), &Prompt::new(UserId(2)).text("b"));
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.session(UserId(1)).history_len(), 1);
+        store.reset(UserId(1));
+        assert_eq!(store.session(UserId(1)).history_len(), 0);
+    }
+}

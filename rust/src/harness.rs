@@ -1,0 +1,111 @@
+//! Shared experiment harness used by `benches/` and `examples/`.
+//!
+//! Centralises the boilerplate every figure reproduction needs: engine
+//! construction with a scratch store, upfront image upload (the paper's
+//! workflow ① precomputation), running a policy over a workload, and
+//! scoring against the exact (prefix caching) reference.
+
+use std::sync::Arc;
+
+use crate::coordinator::{Engine, EngineConfig, Policy};
+use crate::kv::store::StoreConfig;
+use crate::mm::Prompt;
+use crate::quality;
+use crate::util::stats::Samples;
+use crate::workload::Conversation;
+use crate::Result;
+
+/// Build an engine on a scratch disk dir for experiment `tag`, with all of
+/// the model's artifacts compiled upfront (serving-style startup) so that
+/// no measured request pays compilation latency.
+pub fn experiment_engine(model: &str, tag: &str) -> Result<Engine> {
+    let dir = std::env::temp_dir().join(format!("mpic-bench-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let engine = Engine::new(EngineConfig {
+        model: model.into(),
+        store: StoreConfig { disk_dir: dir, ..Default::default() },
+        ..Default::default()
+    })?;
+    engine.runtime().warmup_model(model, true)?;
+    Ok(engine)
+}
+
+/// Check that artifacts exist; prints a skip message when not.
+pub fn artifacts_ready() -> bool {
+    let ok = std::path::Path::new(crate::DEFAULT_ARTIFACT_DIR).join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/ not built — run `make artifacts` first");
+    }
+    ok
+}
+
+/// Upload (precompute + store) every image of every conversation —
+/// the paper's evaluation precomputes the relevant KV caches upfront.
+pub fn precompute_images(engine: &Engine, convs: &[Conversation]) -> Result<usize> {
+    let mut n = 0;
+    for c in convs {
+        for img in &c.images {
+            let key = crate::kv::KvKey::new(&engine.meta().name, *img);
+            if !engine.store().contains(&key) {
+                let kv = engine.encode_image(*img)?;
+                engine.store().put(kv)?;
+                n += 1;
+            }
+        }
+    }
+    Ok(n)
+}
+
+/// Measurements of one policy over a set of prompts.
+#[derive(Debug, Default, Clone)]
+pub struct PolicyRun {
+    pub policy: String,
+    pub ttft_s: Samples,
+    pub score: Samples,
+    pub kl: Samples,
+    pub agreement: Samples,
+    pub steps: Samples,
+}
+
+/// Run `policy` over prompts, scoring each result against the provided
+/// exact references (same order). `refs` may be empty to skip scoring.
+pub fn run_policy(
+    engine: &Engine,
+    prompts: &[Prompt],
+    policy: Policy,
+    max_new: usize,
+    refs: &[crate::coordinator::InferenceResult],
+) -> Result<PolicyRun> {
+    let mut out = PolicyRun { policy: policy.name(), ..Default::default() };
+    for (i, p) in prompts.iter().enumerate() {
+        let r = engine.infer(p, policy, max_new)?;
+        out.ttft_s.push(r.ttft.total_s);
+        out.steps.push(r.ttft.steps as f64);
+        if let Some(reference) = refs.get(i) {
+            let s = quality::score(reference, &r);
+            out.score.push(s.score);
+            out.kl.push(s.kl_first);
+            out.agreement.push(s.agreement);
+        }
+    }
+    Ok(out)
+}
+
+/// Run prefix caching to produce the exact references for scoring.
+pub fn exact_references(
+    engine: &Engine,
+    prompts: &[Prompt],
+    max_new: usize,
+) -> Result<(Vec<crate::coordinator::InferenceResult>, Samples)> {
+    let mut refs = Vec::with_capacity(prompts.len());
+    let mut ttft = Samples::new();
+    for p in prompts {
+        let r = engine.infer(p, Policy::Prefix, max_new)?;
+        ttft.push(r.ttft.total_s);
+        refs.push(r);
+    }
+    Ok((refs, ttft))
+}
+
+/// Shared store handle type used by ablations.
+pub type SharedStore = Arc<crate::kv::KvStore>;

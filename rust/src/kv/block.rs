@@ -1,0 +1,278 @@
+//! Paged KV block allocator — the PagedAttention-style accounting the MLLM
+//! inference subsystem uses for admission control (paper §4.2 component 1).
+//!
+//! Tokens are grouped into fixed-size blocks; sequences own block lists;
+//! blocks are reference-counted so shared image KV spans can be mapped into
+//! several sequences without duplication.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail};
+
+use crate::Result;
+
+/// Sequence handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SeqId(pub u64);
+
+/// Block index in the pool.
+pub type BlockId = u32;
+
+/// Fixed-pool, ref-counted block allocator.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    block_tokens: usize,
+    refcnt: Vec<u32>,
+    free: Vec<BlockId>,
+    seqs: HashMap<SeqId, Vec<BlockId>>,
+}
+
+impl BlockAllocator {
+    pub fn new(total_blocks: usize, block_tokens: usize) -> BlockAllocator {
+        assert!(block_tokens > 0 && total_blocks > 0);
+        BlockAllocator {
+            block_tokens,
+            refcnt: vec![0; total_blocks],
+            free: (0..total_blocks as BlockId).rev().collect(),
+            seqs: HashMap::new(),
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.refcnt.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Can a sequence of `tokens` be admitted right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.blocks_for_tokens(tokens) <= self.free.len()
+    }
+
+    /// Allocate blocks for a new sequence.
+    pub fn alloc_seq(&mut self, id: SeqId, tokens: usize) -> Result<&[BlockId]> {
+        if self.seqs.contains_key(&id) {
+            bail!("sequence {id:?} already allocated");
+        }
+        let need = self.blocks_for_tokens(tokens);
+        if need > self.free.len() {
+            bail!("out of KV blocks: need {need}, free {}", self.free.len());
+        }
+        let mut blocks = Vec::with_capacity(need);
+        for _ in 0..need {
+            let b = self.free.pop().unwrap();
+            self.refcnt[b as usize] = 1;
+            blocks.push(b);
+        }
+        self.seqs.insert(id, blocks);
+        Ok(self.seqs.get(&id).unwrap())
+    }
+
+    /// Grow a sequence to hold `tokens` total (decode appends).
+    pub fn extend_seq(&mut self, id: SeqId, tokens: usize) -> Result<()> {
+        let have = self
+            .seqs
+            .get(&id)
+            .ok_or_else(|| anyhow!("unknown sequence {id:?}"))?
+            .len();
+        let need = self.blocks_for_tokens(tokens);
+        if need <= have {
+            return Ok(());
+        }
+        let extra = need - have;
+        if extra > self.free.len() {
+            bail!("out of KV blocks extending {id:?}");
+        }
+        for _ in 0..extra {
+            let b = self.free.pop().unwrap();
+            self.refcnt[b as usize] = 1;
+            self.seqs.get_mut(&id).unwrap().push(b);
+        }
+        Ok(())
+    }
+
+    /// Map an existing block range into another sequence (shared image KV).
+    pub fn share(&mut self, from: SeqId, into: SeqId) -> Result<()> {
+        let blocks = self
+            .seqs
+            .get(&from)
+            .ok_or_else(|| anyhow!("unknown source sequence {from:?}"))?
+            .clone();
+        for &b in &blocks {
+            self.refcnt[b as usize] += 1;
+        }
+        self.seqs.entry(into).or_default().extend(blocks);
+        Ok(())
+    }
+
+    /// Release a sequence; blocks with refcount 0 return to the pool.
+    pub fn free_seq(&mut self, id: SeqId) -> Result<()> {
+        let blocks = self.seqs.remove(&id).ok_or_else(|| anyhow!("unknown sequence {id:?}"))?;
+        for b in blocks {
+            let rc = &mut self.refcnt[b as usize];
+            *rc = rc.checked_sub(1).expect("refcount underflow");
+            if *rc == 0 {
+                self.free.push(b);
+            }
+        }
+        Ok(())
+    }
+
+    /// Fraction of the pool in use.
+    pub fn utilization(&self) -> f64 {
+        1.0 - self.free.len() as f64 / self.refcnt.len() as f64
+    }
+
+    /// Internal consistency check (used by property tests).
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut counted = vec![0u32; self.refcnt.len()];
+        for blocks in self.seqs.values() {
+            for &b in blocks {
+                counted[b as usize] += 1;
+            }
+        }
+        for (i, (&c, &rc)) in counted.iter().zip(&self.refcnt).enumerate() {
+            if c != rc {
+                bail!("block {i}: counted {c} references but refcnt {rc}");
+            }
+        }
+        let free_set: std::collections::HashSet<BlockId> = self.free.iter().copied().collect();
+        if free_set.len() != self.free.len() {
+            bail!("duplicate block in free list");
+        }
+        for &b in &self.free {
+            if self.refcnt[b as usize] != 0 {
+                bail!("free block {b} has refcnt {}", self.refcnt[b as usize]);
+            }
+        }
+        let used = self.refcnt.iter().filter(|&&rc| rc > 0).count();
+        if used + self.free.len() != self.refcnt.len() {
+            bail!("lost blocks: used {used} + free {} != {}", self.free.len(), self.refcnt.len());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = BlockAllocator::new(16, 16);
+        a.alloc_seq(SeqId(1), 100).unwrap(); // 7 blocks
+        assert_eq!(a.free_blocks(), 9);
+        a.free_seq(SeqId(1)).unwrap();
+        assert_eq!(a.free_blocks(), 16);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_control() {
+        let mut a = BlockAllocator::new(4, 16);
+        assert!(a.can_admit(64));
+        assert!(!a.can_admit(65));
+        a.alloc_seq(SeqId(1), 48).unwrap();
+        assert!(a.can_admit(16));
+        assert!(!a.can_admit(17));
+        assert!(a.alloc_seq(SeqId(2), 32).is_err());
+    }
+
+    #[test]
+    fn extend() {
+        let mut a = BlockAllocator::new(8, 16);
+        a.alloc_seq(SeqId(1), 16).unwrap();
+        a.extend_seq(SeqId(1), 17).unwrap();
+        assert_eq!(a.free_blocks(), 6);
+        a.extend_seq(SeqId(1), 20).unwrap(); // still 2 blocks
+        assert_eq!(a.free_blocks(), 6);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharing_refcounts() {
+        let mut a = BlockAllocator::new(8, 16);
+        a.alloc_seq(SeqId(1), 32).unwrap();
+        a.share(SeqId(1), SeqId(2)).unwrap();
+        a.free_seq(SeqId(1)).unwrap();
+        // Blocks still held by seq 2.
+        assert_eq!(a.free_blocks(), 6);
+        a.free_seq(SeqId(2)).unwrap();
+        assert_eq!(a.free_blocks(), 8);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_alloc_rejected() {
+        let mut a = BlockAllocator::new(8, 16);
+        a.alloc_seq(SeqId(1), 16).unwrap();
+        assert!(a.alloc_seq(SeqId(1), 16).is_err());
+    }
+
+    #[test]
+    fn property_random_workload_preserves_invariants() {
+        crate::util::prop::check(
+            "block-allocator-invariants",
+            30,
+            |rng| {
+                // A random op sequence over a small pool.
+                let ops: Vec<(u8, u64, usize)> = (0..40)
+                    .map(|_| (rng.below(4) as u8, rng.below(6), 1 + rng.below(60) as usize))
+                    .collect();
+                ops
+            },
+            |ops| {
+                let mut a = BlockAllocator::new(12, 8);
+                let mut live: Vec<u64> = Vec::new();
+                for &(op, id, tokens) in ops {
+                    match op {
+                        0 => {
+                            if !live.contains(&id) && a.alloc_seq(SeqId(id), tokens).is_ok() {
+                                live.push(id);
+                            }
+                        }
+                        1 => {
+                            if live.contains(&id) {
+                                let _ = a.extend_seq(SeqId(id), tokens);
+                            }
+                        }
+                        2 => {
+                            if let Some(pos) = live.iter().position(|&x| x == id) {
+                                a.free_seq(SeqId(id)).map_err(|e| e.to_string())?;
+                                live.remove(pos);
+                            }
+                        }
+                        _ => {
+                            if live.contains(&id) {
+                                let into = id + 100;
+                                if !live.contains(&into) {
+                                    a.share(SeqId(id), SeqId(into)).map_err(|e| e.to_string())?;
+                                    live.push(into);
+                                }
+                            }
+                        }
+                    }
+                    a.check_invariants().map_err(|e| e.to_string())?;
+                }
+                for id in live {
+                    a.free_seq(SeqId(id)).map_err(|e| e.to_string())?;
+                }
+                a.check_invariants().map_err(|e| e.to_string())?;
+                if a.free_blocks() != a.total_blocks() {
+                    return Err("leaked blocks after freeing everything".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

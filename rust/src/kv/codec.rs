@@ -1,0 +1,192 @@
+//! KV serialization: the on-disk / in-host-tier wire format.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "MPKV" | version u32 | model_len u32 | model bytes | image u64
+//! | layers,tokens,heads,d_head,d_model (u32 x5)
+//! | payload_len u64 | sha256 (32 bytes of the *compressed* payload)
+//! | zstd(payload)
+//! ```
+//! Payload = emb ++ k ++ v as raw f32 LE. Integrity is verified on decode;
+//! a corrupt or truncated entry is reported as an error and treated by the
+//! store as a miss (failure-injection tests cover this).
+
+use anyhow::{anyhow, bail, Context};
+use byteorder::{ByteOrder, LittleEndian, ReadBytesExt, WriteBytesExt};
+use sha2::{Digest, Sha256};
+
+use super::{ImageKv, KvKey, KvShape};
+use crate::mm::ImageId;
+use crate::Result;
+
+const MAGIC: &[u8; 4] = b"MPKV";
+const VERSION: u32 = 1;
+
+/// zstd level: 1 is the latency-friendly setting for the hot path.
+pub const ZSTD_LEVEL: i32 = 1;
+
+/// Serialise an entry to bytes.
+pub fn encode(e: &ImageKv) -> Result<Vec<u8>> {
+    e.validate()?;
+    let n_floats = e.emb.len() + e.k.len() + e.v.len();
+    let mut payload = vec![0u8; n_floats * 4];
+    let (a, rest) = payload.split_at_mut(e.emb.len() * 4);
+    let (b, c) = rest.split_at_mut(e.k.len() * 4);
+    LittleEndian::write_f32_into(&e.emb, a);
+    LittleEndian::write_f32_into(&e.k, b);
+    LittleEndian::write_f32_into(&e.v, c);
+    let compressed = zstd::bulk::compress(&payload, ZSTD_LEVEL).context("zstd compress")?;
+    let digest = Sha256::digest(&compressed);
+
+    let model = e.key.model.as_bytes();
+    let mut out = Vec::with_capacity(compressed.len() + model.len() + 96);
+    out.extend_from_slice(MAGIC);
+    out.write_u32::<LittleEndian>(VERSION)?;
+    out.write_u32::<LittleEndian>(model.len() as u32)?;
+    out.extend_from_slice(model);
+    out.write_u64::<LittleEndian>(e.key.image.0)?;
+    for d in [e.shape.layers, e.shape.tokens, e.shape.heads, e.shape.d_head, e.shape.d_model] {
+        out.write_u32::<LittleEndian>(d as u32)?;
+    }
+    out.write_u64::<LittleEndian>(compressed.len() as u64)?;
+    out.extend_from_slice(&digest);
+    out.extend_from_slice(&compressed);
+    Ok(out)
+}
+
+/// Decode and integrity-check an entry.
+pub fn decode(bytes: &[u8]) -> Result<ImageKv> {
+    let mut r = std::io::Cursor::new(bytes);
+    let mut magic = [0u8; 4];
+    std::io::Read::read_exact(&mut r, &mut magic).context("reading magic")?;
+    if &magic != MAGIC {
+        bail!("bad magic {:?}", magic);
+    }
+    let version = r.read_u32::<LittleEndian>()?;
+    if version != VERSION {
+        bail!("unsupported KV codec version {version}");
+    }
+    let model_len = r.read_u32::<LittleEndian>()? as usize;
+    if model_len > 4096 {
+        bail!("implausible model name length {model_len}");
+    }
+    let mut model = vec![0u8; model_len];
+    std::io::Read::read_exact(&mut r, &mut model)?;
+    let image = r.read_u64::<LittleEndian>()?;
+    let dims: Vec<usize> = (0..5)
+        .map(|_| r.read_u32::<LittleEndian>().map(|d| d as usize))
+        .collect::<std::io::Result<_>>()?;
+    let shape = KvShape {
+        layers: dims[0],
+        tokens: dims[1],
+        heads: dims[2],
+        d_head: dims[3],
+        d_model: dims[4],
+    };
+    let payload_len = r.read_u64::<LittleEndian>()? as usize;
+    let mut digest = [0u8; 32];
+    std::io::Read::read_exact(&mut r, &mut digest)?;
+    let offset = r.position() as usize;
+    let compressed = bytes
+        .get(offset..offset + payload_len)
+        .ok_or_else(|| anyhow!("truncated KV entry"))?;
+    let actual = Sha256::digest(compressed);
+    if actual.as_slice() != digest {
+        bail!("KV entry integrity failure (sha256 mismatch)");
+    }
+    let expect_floats = shape.emb_elems() + 2 * shape.kv_elems();
+    let payload =
+        zstd::bulk::decompress(compressed, expect_floats * 4).context("zstd decompress")?;
+    if payload.len() != expect_floats * 4 {
+        bail!("payload is {} bytes, shape wants {}", payload.len(), expect_floats * 4);
+    }
+
+    let mut emb = vec![0f32; shape.emb_elems()];
+    let mut k = vec![0f32; shape.kv_elems()];
+    let mut v = vec![0f32; shape.kv_elems()];
+    let (a, rest) = payload.split_at(emb.len() * 4);
+    let (b, c) = rest.split_at(k.len() * 4);
+    LittleEndian::read_f32_into(a, &mut emb);
+    LittleEndian::read_f32_into(b, &mut k);
+    LittleEndian::read_f32_into(c, &mut v);
+
+    Ok(ImageKv {
+        key: KvKey { model: String::from_utf8(model)?, image: ImageId(image) },
+        shape,
+        emb,
+        k,
+        v,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::test_entry;
+
+    #[test]
+    fn roundtrip() {
+        let e = test_entry(42, 16);
+        let bytes = encode(&e).unwrap();
+        let back = decode(&bytes).unwrap();
+        assert_eq!(e, back);
+    }
+
+    #[test]
+    fn compresses() {
+        // Zero-heavy payloads compress well; random ones stay ~1:1.
+        let mut e = test_entry(1, 32);
+        e.k.iter_mut().for_each(|x| *x = 0.0);
+        e.v.iter_mut().for_each(|x| *x = 0.0);
+        let bytes = encode(&e).unwrap();
+        assert!(bytes.len() < e.bytes() / 2, "{} vs {}", bytes.len(), e.bytes());
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let e = test_entry(7, 8);
+        let mut bytes = encode(&e).unwrap();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0x5A;
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("integrity"), "{err}");
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let e = test_entry(7, 8);
+        let bytes = encode(&e).unwrap();
+        assert!(decode(&bytes[..bytes.len() - 10]).is_err());
+        assert!(decode(&bytes[..10]).is_err());
+        assert!(decode(b"definitely not a kv entry").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_magic_or_version() {
+        let e = test_entry(7, 8);
+        let mut bytes = encode(&e).unwrap();
+        bytes[0] = b'X';
+        assert!(decode(&bytes).is_err());
+        let mut bytes2 = encode(&e).unwrap();
+        bytes2[4] = 99;
+        assert!(decode(&bytes2).is_err());
+    }
+
+    #[test]
+    fn property_roundtrip_random_entries() {
+        crate::util::prop::check(
+            "kv-codec-roundtrip",
+            25,
+            |rng| test_entry(rng.next_u64(), 1 + rng.below(32) as usize),
+            |e| {
+                let bytes = encode(e).map_err(|x| x.to_string())?;
+                let back = decode(&bytes).map_err(|x| x.to_string())?;
+                if &back == e {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,144 @@
+//! KV-cache subsystem (substrate S10).
+//!
+//! Holds the multimodal KV caches the paper's system revolves around: the
+//! per-image `(embeddings, K, V)` triple produced by `encode_image_kv` at
+//! upload time, stored across a three-tier hierarchy and fetched by the
+//! parallel transfer engine (paper Fig. 6) at inference time.
+//!
+//! Tier semantics on this testbed (CPU PJRT — DESIGN.md §2):
+//! * **device** — uncompressed in-RAM, capacity-limited (models GPU HBM
+//!   residency; zero load cost),
+//! * **host** — zstd-compressed in-RAM (models CPU DRAM staging;
+//!   decompression cost is real),
+//! * **disk** — zstd-compressed files with SHA-256 integrity and TTL
+//!   expiry (models the paper's local/remote disks; I/O cost is real).
+
+pub mod block;
+pub mod codec;
+pub mod store;
+pub mod transfer;
+
+use crate::mm::ImageId;
+
+pub use block::BlockAllocator;
+pub use store::{KvStore, StoreConfig, StoreStats, Tier};
+pub use transfer::{TransferEngine, TransferReport};
+
+/// Shape of one image's KV entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvShape {
+    pub layers: usize,
+    pub tokens: usize,
+    pub heads: usize,
+    pub d_head: usize,
+    pub d_model: usize,
+}
+
+impl KvShape {
+    pub fn kv_elems(&self) -> usize {
+        self.layers * self.tokens * self.heads * self.d_head
+    }
+
+    pub fn emb_elems(&self) -> usize {
+        self.tokens * self.d_model
+    }
+
+    /// Total payload bytes (emb + K + V, f32).
+    pub fn total_bytes(&self) -> usize {
+        4 * (self.emb_elems() + 2 * self.kv_elems())
+    }
+}
+
+/// Cache key: an image's KV is model-specific.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct KvKey {
+    pub model: String,
+    pub image: ImageId,
+}
+
+impl KvKey {
+    pub fn new(model: &str, image: ImageId) -> KvKey {
+        KvKey { model: model.to_string(), image }
+    }
+
+    /// Stable file-name stem for the disk tier.
+    pub fn file_stem(&self) -> String {
+        format!("{}-{:016x}", self.model, self.image.0)
+    }
+}
+
+/// One image's cached state: encoder embeddings plus per-layer K/V at
+/// canonical positions `0..tokens` (exactly what the Static Library stores).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImageKv {
+    pub key: KvKey,
+    pub shape: KvShape,
+    /// `[tokens, d_model]`
+    pub emb: Vec<f32>,
+    /// `[layers, tokens, heads, d_head]`
+    pub k: Vec<f32>,
+    /// `[layers, tokens, heads, d_head]`
+    pub v: Vec<f32>,
+}
+
+impl ImageKv {
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.emb.len() == self.shape.emb_elems(),
+            "emb length {} != shape {:?}",
+            self.emb.len(),
+            self.shape
+        );
+        anyhow::ensure!(self.k.len() == self.shape.kv_elems(), "k length mismatch");
+        anyhow::ensure!(self.v.len() == self.shape.kv_elems(), "v length mismatch");
+        Ok(())
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.shape.total_bytes()
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_entry(image: u64, tokens: usize) -> ImageKv {
+    let shape = KvShape { layers: 2, tokens, heads: 2, d_head: 4, d_model: 8 };
+    let mut rng = crate::util::rng::Rng::new(image);
+    ImageKv {
+        key: KvKey::new("test-model", ImageId(image)),
+        shape,
+        emb: (0..shape.emb_elems()).map(|_| rng.f32()).collect(),
+        k: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
+        v: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_arithmetic() {
+        let s = KvShape { layers: 4, tokens: 64, heads: 8, d_head: 32, d_model: 256 };
+        assert_eq!(s.kv_elems(), 4 * 64 * 8 * 32);
+        assert_eq!(s.emb_elems(), 64 * 256);
+        assert_eq!(s.total_bytes(), 4 * (64 * 256 + 2 * 4 * 64 * 8 * 32));
+    }
+
+    #[test]
+    fn entry_validation() {
+        let e = test_entry(1, 8);
+        e.validate().unwrap();
+        let mut bad = e;
+        bad.k.pop();
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn key_stems_unique() {
+        let a = KvKey::new("m", ImageId(1)).file_stem();
+        let b = KvKey::new("m", ImageId(2)).file_stem();
+        let c = KvKey::new("m2", ImageId(1)).file_stem();
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,484 @@
+//! Tiered KV store: device (uncompressed RAM, capacity-limited) → host
+//! (zstd RAM) → disk (zstd files with TTL). Thread-safe; disk and
+//! decompression work happens outside the metadata lock so transfer-pool
+//! workers genuinely overlap (Fig. 6).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use super::{codec, ImageKv, KvKey};
+use crate::Result;
+
+/// Which tier a lookup hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    Device,
+    Host,
+    Disk,
+}
+
+/// Store configuration.
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// Device-tier capacity in bytes (models GPU HBM left for caching).
+    pub device_capacity: usize,
+    /// Host-tier capacity in bytes (compressed).
+    pub host_capacity: usize,
+    /// Disk directory. Created on demand.
+    pub disk_dir: PathBuf,
+    /// Time-to-live of disk entries (paper workflow ①: caches are deleted
+    /// after expiration).
+    pub ttl: Duration,
+    /// Optional synthetic disk bandwidth (bytes/s) for transfer ablations;
+    /// `None` uses raw I/O speed.
+    pub disk_bandwidth: Option<f64>,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig {
+            device_capacity: 256 << 20,
+            host_capacity: 512 << 20,
+            disk_dir: std::env::temp_dir().join("mpic-kv"),
+            ttl: Duration::from_secs(3600),
+            disk_bandwidth: None,
+        }
+    }
+}
+
+/// Cumulative hit/miss statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StoreStats {
+    pub device_hits: u64,
+    pub host_hits: u64,
+    pub disk_hits: u64,
+    pub misses: u64,
+    pub expirations: u64,
+    pub corruptions: u64,
+    pub device_evictions: u64,
+    pub host_evictions: u64,
+}
+
+struct DeviceEntry {
+    kv: ImageKv,
+    last_used: u64,
+}
+
+struct HostEntry {
+    bytes: Vec<u8>,
+    last_used: u64,
+}
+
+struct DiskEntry {
+    path: PathBuf,
+    written_at: Instant,
+    bytes: usize,
+}
+
+struct Inner {
+    device: HashMap<KvKey, DeviceEntry>,
+    device_bytes: usize,
+    host: HashMap<KvKey, HostEntry>,
+    host_bytes: usize,
+    disk: HashMap<KvKey, DiskEntry>,
+    clock: u64,
+    stats: StoreStats,
+}
+
+/// The tiered store.
+pub struct KvStore {
+    cfg: StoreConfig,
+    inner: Mutex<Inner>,
+}
+
+impl KvStore {
+    pub fn new(cfg: StoreConfig) -> Result<KvStore> {
+        std::fs::create_dir_all(&cfg.disk_dir)
+            .with_context(|| format!("creating {}", cfg.disk_dir.display()))?;
+        Ok(KvStore {
+            cfg,
+            inner: Mutex::new(Inner {
+                device: HashMap::new(),
+                device_bytes: 0,
+                host: HashMap::new(),
+                host_bytes: 0,
+                disk: HashMap::new(),
+                clock: 0,
+                stats: StoreStats::default(),
+            }),
+        })
+    }
+
+    pub fn config(&self) -> &StoreConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Upload-time insertion (workflow ①): resident on device for serving,
+    /// written through to disk for durability/expiry.
+    pub fn put(&self, kv: ImageKv) -> Result<()> {
+        kv.validate()?;
+        let encoded = codec::encode(&kv)?;
+        let path = self.cfg.disk_dir.join(format!("{}.mpkv", kv.key.file_stem()));
+        std::fs::write(&path, &encoded)
+            .with_context(|| format!("writing {}", path.display()))?;
+
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        let key = kv.key.clone();
+        let nbytes = kv.bytes();
+        g.disk.insert(
+            key.clone(),
+            DiskEntry { path, written_at: Instant::now(), bytes: encoded.len() },
+        );
+        if let Some(old) = g.device.insert(key, DeviceEntry { kv, last_used: clock }) {
+            g.device_bytes -= old.kv.bytes();
+        }
+        g.device_bytes += nbytes;
+        self.evict_device_locked(&mut g);
+        Ok(())
+    }
+
+    /// Whether the key exists in any non-expired tier (no promotion).
+    pub fn contains(&self, key: &KvKey) -> bool {
+        let g = self.inner.lock().unwrap();
+        if g.device.contains_key(key) || g.host.contains_key(key) {
+            return true;
+        }
+        match g.disk.get(key) {
+            Some(d) => d.written_at.elapsed() < self.cfg.ttl,
+            None => false,
+        }
+    }
+
+    /// Which tier would serve this key right now (cheap peek for planning).
+    pub fn tier_of(&self, key: &KvKey) -> Option<Tier> {
+        let g = self.inner.lock().unwrap();
+        if g.device.contains_key(key) {
+            Some(Tier::Device)
+        } else if g.host.contains_key(key) {
+            Some(Tier::Host)
+        } else if g.disk.get(key).map(|d| d.written_at.elapsed() < self.cfg.ttl) == Some(true) {
+            Some(Tier::Disk)
+        } else {
+            None
+        }
+    }
+
+    /// Fetch an entry, promoting it to the device tier. Returns the tier it
+    /// was found in, or `None` for a miss (absent, expired or corrupt).
+    pub fn get(&self, key: &KvKey) -> Option<(ImageKv, Tier)> {
+        // Fast path: device hit (clone under lock; entries are ~MBs).
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.clock += 1;
+            let clock = g.clock;
+            if let Some(e) = g.device.get_mut(key) {
+                e.last_used = clock;
+                let kv = e.kv.clone();
+                g.stats.device_hits += 1;
+                return Some((kv, Tier::Device));
+            }
+        }
+
+        // Host tier: take the compressed bytes out, decode outside the lock.
+        let host_bytes = {
+            let mut g = self.inner.lock().unwrap();
+            if let Some(e) = g.host.remove(key) {
+                g.host_bytes -= e.bytes.len();
+                Some(e.bytes)
+            } else {
+                None
+            }
+        };
+        if let Some(bytes) = host_bytes {
+            match codec::decode(&bytes) {
+                Ok(kv) => {
+                    self.promote(kv.clone(), Tier::Host);
+                    return Some((kv, Tier::Host));
+                }
+                Err(e) => {
+                    log::warn!("kv host entry corrupt for {key:?}: {e}");
+                    self.inner.lock().unwrap().stats.corruptions += 1;
+                }
+            }
+        }
+
+        // Disk tier: check expiry, then read + decode outside the lock.
+        let disk_path = {
+            let mut g = self.inner.lock().unwrap();
+            match g.disk.get(key) {
+                None => None,
+                Some(d) if d.written_at.elapsed() >= self.cfg.ttl => {
+                    let d = g.disk.remove(key).unwrap();
+                    let _ = std::fs::remove_file(&d.path);
+                    g.stats.expirations += 1;
+                    None
+                }
+                Some(d) => Some((d.path.clone(), d.bytes)),
+            }
+        };
+        if let Some((path, nbytes)) = disk_path {
+            self.throttle(nbytes);
+            match std::fs::read(&path).map_err(anyhow::Error::from).and_then(|b| codec::decode(&b))
+            {
+                Ok(kv) => {
+                    self.promote(kv.clone(), Tier::Disk);
+                    return Some((kv, Tier::Disk));
+                }
+                Err(e) => {
+                    log::warn!("kv disk entry corrupt for {key:?}: {e}");
+                    let mut g = self.inner.lock().unwrap();
+                    g.disk.remove(key);
+                    g.stats.corruptions += 1;
+                    let _ = std::fs::remove_file(&path);
+                }
+            }
+        }
+
+        self.inner.lock().unwrap().stats.misses += 1;
+        None
+    }
+
+    /// Force-expire an entry everywhere (tests / admin).
+    pub fn evict(&self, key: &KvKey) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(e) = g.device.remove(key) {
+            g.device_bytes -= e.kv.bytes();
+        }
+        if let Some(e) = g.host.remove(key) {
+            g.host_bytes -= e.bytes.len();
+        }
+        if let Some(d) = g.disk.remove(key) {
+            let _ = std::fs::remove_file(&d.path);
+        }
+    }
+
+    /// Bytes resident per tier: (device, host, disk-entries).
+    pub fn residency(&self) -> (usize, usize, usize) {
+        let g = self.inner.lock().unwrap();
+        (g.device_bytes, g.host_bytes, g.disk.len())
+    }
+
+    fn promote(&self, kv: ImageKv, _from: Tier) {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        match _from {
+            Tier::Host => g.stats.host_hits += 1,
+            Tier::Disk => g.stats.disk_hits += 1,
+            Tier::Device => {}
+        }
+        let nbytes = kv.bytes();
+        if let Some(old) = g.device.insert(kv.key.clone(), DeviceEntry { kv, last_used: clock }) {
+            g.device_bytes -= old.kv.bytes();
+        }
+        g.device_bytes += nbytes;
+        self.evict_device_locked(&mut g);
+    }
+
+    /// LRU-evict device entries over capacity, demoting them (compressed)
+    /// into the host tier; host overflows simply drop (disk still has them).
+    fn evict_device_locked(&self, g: &mut Inner) {
+        while g.device_bytes > self.cfg.device_capacity && g.device.len() > 1 {
+            let victim = g
+                .device
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .unwrap();
+            let entry = g.device.remove(&victim).unwrap();
+            g.device_bytes -= entry.kv.bytes();
+            g.stats.device_evictions += 1;
+            if let Ok(bytes) = codec::encode(&entry.kv) {
+                g.host_bytes += bytes.len();
+                g.clock += 1;
+                let clock = g.clock;
+                g.host.insert(victim, HostEntry { bytes, last_used: clock });
+            }
+        }
+        while g.host_bytes > self.cfg.host_capacity && g.host.len() > 1 {
+            let victim = g
+                .host
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .unwrap();
+            let entry = g.host.remove(&victim).unwrap();
+            g.host_bytes -= entry.bytes.len();
+            g.stats.host_evictions += 1;
+        }
+    }
+
+    /// Apply the synthetic disk bandwidth model, if configured.
+    fn throttle(&self, nbytes: usize) {
+        if let Some(bps) = self.cfg.disk_bandwidth {
+            let secs = nbytes as f64 / bps;
+            if secs > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(secs.min(5.0)));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::test_entry;
+
+    fn store(device_cap: usize, ttl_ms: u64) -> KvStore {
+        let dir = std::env::temp_dir().join(format!(
+            "mpic-store-test-{}-{:x}",
+            std::process::id(),
+            crate::util::rng::fnv1a(format!("{device_cap}-{ttl_ms}").as_bytes())
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        KvStore::new(StoreConfig {
+            device_capacity: device_cap,
+            host_capacity: 1 << 30,
+            disk_dir: dir,
+            ttl: Duration::from_millis(ttl_ms),
+            disk_bandwidth: None,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn put_get_device_hit() {
+        let s = store(1 << 30, 60_000);
+        let e = test_entry(1, 8);
+        s.put(e.clone()).unwrap();
+        let (got, tier) = s.get(&e.key).unwrap();
+        assert_eq!(tier, Tier::Device);
+        assert_eq!(got, e);
+        assert_eq!(s.stats().device_hits, 1);
+    }
+
+    #[test]
+    fn eviction_demotes_to_host_then_disk_survives() {
+        let e1 = test_entry(1, 32);
+        let cap = e1.bytes() + e1.bytes() / 2; // fits one entry + slack
+        let s = store(cap, 60_000);
+        s.put(e1.clone()).unwrap();
+        let e2 = test_entry(2, 32);
+        s.put(e2.clone()).unwrap();
+        // e1 should have been demoted out of the device tier.
+        assert_eq!(s.tier_of(&e1.key), Some(Tier::Host));
+        assert_eq!(s.tier_of(&e2.key), Some(Tier::Device));
+        let (got, tier) = s.get(&e1.key).unwrap();
+        assert_eq!(tier, Tier::Host);
+        assert_eq!(got, e1);
+        assert!(s.stats().device_evictions >= 1);
+    }
+
+    #[test]
+    fn disk_fallback_after_full_eviction() {
+        let s = store(1 << 30, 60_000);
+        let e = test_entry(3, 8);
+        s.put(e.clone()).unwrap();
+        // Drop from RAM tiers only.
+        {
+            let mut g = s.inner.lock().unwrap();
+            let entry = g.device.remove(&e.key).unwrap();
+            g.device_bytes -= entry.kv.bytes();
+        }
+        let (got, tier) = s.get(&e.key).unwrap();
+        assert_eq!(tier, Tier::Disk);
+        assert_eq!(got, e);
+        // Promoted back to device.
+        assert_eq!(s.tier_of(&e.key), Some(Tier::Device));
+    }
+
+    #[test]
+    fn ttl_expiry_is_a_miss() {
+        let s = store(1 << 30, 30);
+        let e = test_entry(4, 8);
+        s.put(e.clone()).unwrap();
+        {
+            let mut g = s.inner.lock().unwrap();
+            let entry = g.device.remove(&e.key).unwrap();
+            g.device_bytes -= entry.kv.bytes();
+        }
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(s.get(&e.key).is_none());
+        assert_eq!(s.stats().expirations, 1);
+        assert_eq!(s.stats().misses, 1);
+    }
+
+    #[test]
+    fn corrupt_disk_entry_is_a_miss() {
+        let s = store(1 << 30, 60_000);
+        let e = test_entry(5, 8);
+        s.put(e.clone()).unwrap();
+        let path = {
+            let mut g = s.inner.lock().unwrap();
+            let entry = g.device.remove(&e.key).unwrap();
+            g.device_bytes -= entry.kv.bytes();
+            g.disk.get(&e.key).unwrap().path.clone()
+        };
+        // Flip a payload byte on disk.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xFF;
+        std::fs::write(&path, bytes).unwrap();
+        assert!(s.get(&e.key).is_none());
+        assert_eq!(s.stats().corruptions, 1);
+    }
+
+    #[test]
+    fn concurrent_gets_are_consistent() {
+        let s = std::sync::Arc::new(store(1 << 30, 60_000));
+        for i in 0..8 {
+            s.put(test_entry(i, 8)).unwrap();
+        }
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let s = std::sync::Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..8u64 {
+                    let key = KvKey::new("test-model", crate::mm::ImageId((i + t) % 8));
+                    let (kv, _) = s.get(&key).unwrap();
+                    assert_eq!(kv, test_entry(kv.key.image.0, 8));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn bandwidth_model_slows_disk_reads() {
+        let dir = std::env::temp_dir().join(format!("mpic-bw-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = KvStore::new(StoreConfig {
+            device_capacity: 1 << 30,
+            host_capacity: 1 << 30,
+            disk_dir: dir,
+            ttl: Duration::from_secs(60),
+            disk_bandwidth: Some(1e6), // 1 MB/s
+        })
+        .unwrap();
+        let e = test_entry(6, 32);
+        let nbytes = codec::encode(&e).unwrap().len();
+        s.put(e.clone()).unwrap();
+        {
+            let mut g = s.inner.lock().unwrap();
+            let entry = g.device.remove(&e.key).unwrap();
+            g.device_bytes -= entry.kv.bytes();
+        }
+        let t0 = Instant::now();
+        s.get(&e.key).unwrap();
+        let elapsed = t0.elapsed().as_secs_f64();
+        let expected = nbytes as f64 / 1e6;
+        assert!(elapsed >= expected * 0.8, "elapsed {elapsed} < modelled {expected}");
+    }
+}

@@ -1,0 +1,48 @@
+//! # MPIC — Position-Independent Multimodal Context Caching
+//!
+//! Reproduction of *MPIC: Position-Independent Multimodal Context Caching
+//! System for Efficient MLLM Serving* (Zhao et al., 2025) as a three-layer
+//! Rust + JAX + Pallas system. This crate is **Layer 3**: the serving
+//! coordinator. It loads HLO-text artifacts AOT-compiled by
+//! `python/compile/aot.py` (Layer 2 model, Layer 1 Pallas selective-attention
+//! kernel) and runs them on the PJRT CPU client — Python is never on the
+//! request path.
+//!
+//! Module map (see DESIGN.md §4 for the full system inventory):
+//!
+//! * [`util`] — substrates built in-tree (JSON, RNG, stats, thread pool,
+//!   CLI, logging, bench harness, property-testing helpers).
+//! * [`mm`] — multimodal prompt model: segments, tokenizer, linked layout,
+//!   sink-bias construction (mirrors `python/compile/model.py`).
+//! * [`runtime`] — PJRT runtime: artifact manifest, executable cache,
+//!   resident weight buffers, typed execute paths.
+//! * [`kv`] — KV-cache subsystem: layout, codec, tiered store
+//!   (device/RAM/disk), eviction, paged block accounting, the parallel
+//!   transfer engine of paper Fig. 6.
+//! * [`cache`] — the Static Library (user uploads) and Dynamic Library
+//!   (MRAG references) of paper Fig. 5.
+//! * [`retriever`] — MRAG retriever (embedding index, cosine top-k).
+//! * [`coordinator`] — the paper's contribution: Linker (Fig. 7),
+//!   selection policies (prefix / full-reuse / CacheBlend-r / MPIC-k),
+//!   scheduler, serving engine, sessions, metrics.
+//! * [`quality`] — fidelity scorer (GPT-score substitute, DESIGN.md §2).
+//! * [`workload`] — synthetic MMDU-like / Sparkles-like generators, traces.
+//! * [`server`] — JSON-lines TCP serving front end.
+
+pub mod cache;
+pub mod coordinator;
+pub mod harness;
+pub mod kv;
+pub mod mm;
+pub mod quality;
+pub mod retriever;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Repository-relative default artifact directory.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

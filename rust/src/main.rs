@@ -1,0 +1,156 @@
+//! `mpic` — the MPIC serving CLI (leader entrypoint).
+//!
+//! ```text
+//! mpic serve  [--addr 127.0.0.1:7401] [--model mpic-sim-a] [--artifacts DIR]
+//! mpic run    [--dataset mmdu|sparkles] [--policy mpic-32] [--convs N] [--images-min A --images-max B]
+//! mpic upload --user ID --handle IMAGE#NAME
+//! mpic analyze [--model mpic-sim-a]        # quick Fig.4-style attention report
+//! ```
+
+use anyhow::Context;
+use mpic::coordinator::{Engine, EngineConfig, Policy};
+use mpic::coordinator::scheduler::{Request, Scheduler};
+use mpic::mm::UserId;
+use mpic::util::cli::Args;
+use mpic::util::json::Value;
+use mpic::workload::{generate, Dataset, WorkloadSpec};
+
+fn main() {
+    mpic::util::logging::init();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn engine_from(args: &Args) -> anyhow::Result<Engine> {
+    let cfg = EngineConfig {
+        artifact_dir: args.str_or("artifacts", mpic::DEFAULT_ARTIFACT_DIR).into(),
+        model: args.str_or("model", "mpic-sim-a"),
+        max_new_tokens: args.usize_or("max-new", 16)?,
+        ..Default::default()
+    };
+    Engine::new(cfg).context("starting engine (did you run `make artifacts`?)")
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::parse(&["verbose", "serial-transfer"])?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "serve" => {
+            let engine = engine_from(&args)?;
+            let addr = args.str_or("addr", "127.0.0.1:7401");
+            mpic::server::serve(&engine, &addr, |a| println!("listening on {a}"))?;
+        }
+
+        "upload" => {
+            let engine = engine_from(&args)?;
+            let user = UserId(args.u64_or("user", 1)?);
+            let handle = args.get("handle").context("--handle required")?;
+            let image = engine.upload_image(user, handle)?;
+            println!("uploaded {handle} -> image {:#x}", image.0);
+        }
+
+        "run" => {
+            let engine = engine_from(&args)?;
+            let dataset = match args.str_or("dataset", "mmdu").as_str() {
+                "sparkles" => Dataset::Sparkles,
+                _ => Dataset::Mmdu,
+            };
+            let policy = Policy::parse(&args.str_or("policy", "mpic-32"))?;
+            let spec = WorkloadSpec {
+                dataset,
+                n_conversations: args.usize_or("convs", 8)?,
+                turns_per_conversation: 1,
+                images_min: args.usize_or("images-min", 2)?,
+                images_max: args.usize_or("images-max", 4)?,
+                seed: args.u64_or("seed", 0xDA7A)?,
+            };
+            let convs = generate(&spec);
+            // Upload every conversation's images first (workflow ①).
+            for c in &convs {
+                for (i, img) in c.images.iter().enumerate() {
+                    let handle = format!("IMAGE#U{}N{i}", c.user.0);
+                    engine.static_lib.register(c.user, &handle, *img)?;
+                    let kv = engine.encode_image(*img)?;
+                    engine.store().put(kv)?;
+                }
+            }
+            // Schedule all first turns through the continuous batcher.
+            let mut sched = Scheduler::new(4096, 16);
+            for (i, c) in convs.iter().enumerate() {
+                sched.submit(Request {
+                    id: i as u64,
+                    prompt: c.turns[0].clone(),
+                    policy,
+                    max_new: args.usize_or("max-new", 16)?,
+                });
+            }
+            let completions = sched.run_to_completion(&engine)?;
+            for c in &completions {
+                println!(
+                    "req {:>3}  policy={}  seq_len={:>4}  ttft={:>7.1} ms  decode={:>7.1} ms  tokens={}",
+                    c.id,
+                    c.result.policy,
+                    c.result.seq_len,
+                    c.result.ttft.total_s * 1e3,
+                    c.result.decode_s * 1e3,
+                    c.result.tokens.len()
+                );
+            }
+            println!("{}", engine.metrics.snapshot().encode());
+            println!(
+                "scheduler: admitted={} completed={} mean_occupancy={:.2}",
+                sched.stats.admitted,
+                sched.stats.completed,
+                sched.stats.mean_occupancy()
+            );
+        }
+
+        "analyze" => {
+            let engine = engine_from(&args)?;
+            let user = UserId(1);
+            for h in ["IMAGE#EIFFEL2025", "IMAGE#LOUVRE2025"] {
+                engine.upload_image(user, h)?;
+            }
+            let prompt = mpic::mm::Prompt::parse(
+                user,
+                "My partner and I took these photos IMAGE#EIFFEL2025 IMAGE#LOUVRE2025 \
+                 please describe the landmarks and compare them in detail",
+            );
+            let (layout, attn_last, _l0) = engine.debug_attention(&prompt)?;
+            let data = attn_last.f32_data()?;
+            let meta = engine.meta();
+            let s = data.len() / (meta.n_layers * meta.n_heads);
+            // Head/layer-averaged attention mass per slot kind.
+            let mut img_mass = 0f64;
+            let mut txt_mass = 0f64;
+            let kinds = layout.kinds(s);
+            for l in 0..meta.n_layers {
+                for h in 0..meta.n_heads {
+                    let base = (l * meta.n_heads + h) * s;
+                    for i in 0..s {
+                        match kinds[i] {
+                            2 => img_mass += data[base + i] as f64,
+                            1 => txt_mass += data[base + i] as f64,
+                            _ => {}
+                        }
+                    }
+                }
+            }
+            let total = (meta.n_layers * meta.n_heads) as f64;
+            println!("attention mass of the last query: image={:.3} text={:.3}", img_mass / total, txt_mass / total);
+            println!("(run `cargo bench --bench fig4_attention_cdf` for the full Fig. 4 series)");
+        }
+
+        _ => {
+            println!("usage: mpic <serve|run|upload|analyze> [options]");
+            println!("  serve   --addr HOST:PORT --model NAME --artifacts DIR");
+            println!("  run     --dataset mmdu|sparkles --policy prefix|full-reuse|cacheblend-R|mpic-K --convs N");
+            println!("  upload  --user ID --handle IMAGE#NAME");
+            println!("  analyze --model NAME");
+            let _ = Value::Null; // keep import used in all paths
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Sink-bias construction — the Rust mirror of
+//! `python/compile/model.py::make_sink_bias`.
+//!
+//! The bias is part of the model (every attention path applies it); the
+//! Linker computes it per request from the prompt's segment structure and
+//! ships it as the `sink_bias` activation input. Keeping the two
+//! implementations in lockstep is verified end-to-end by the runtime
+//! integration tests (stored-KV vs prefill equivalence only holds if the
+//! bias agrees).
+
+/// Parameters of the sink calibration (from the model manifest).
+#[derive(Debug, Clone, Copy)]
+pub struct SinkParams {
+    pub sigma: f32,
+    pub tau: f32,
+    pub bos: f32,
+}
+
+/// Build the per-slot bias. `kinds`: 0 pad / 1 text / 2 image;
+/// `img_rel`: intra-image relative position (0 where not an image token).
+pub fn make_sink_bias(p: SinkParams, kinds: &[u8], img_rel: &[u32]) -> Vec<f32> {
+    assert_eq!(kinds.len(), img_rel.len());
+    let mut bias = vec![0.0f32; kinds.len()];
+    for i in 0..kinds.len() {
+        if kinds[i] == 2 {
+            bias[i] = p.sigma * (-(img_rel[i] as f32) / p.tau).exp();
+        }
+    }
+    if !kinds.is_empty() && kinds[0] != 0 {
+        bias[0] += p.bos;
+    }
+    bias
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: SinkParams = SinkParams { sigma: 3.0, tau: 8.0, bos: 2.0 };
+
+    #[test]
+    fn matches_python_reference_values() {
+        // Mirrors python/tests/test_model.py::TestSinkBias::test_structure.
+        let kinds = [1u8, 1, 2, 2, 2, 1, 0];
+        let rel = [0u32, 0, 0, 1, 2, 0, 0];
+        let b = make_sink_bias(P, &kinds, &rel);
+        assert!((b[0] - 2.0).abs() < 1e-6);
+        assert!((b[2] - 3.0).abs() < 1e-6);
+        assert!(b[2] > b[3] && b[3] > b[4] && b[4] > 0.0);
+        assert_eq!(b[5], 0.0);
+        assert_eq!(b[6], 0.0);
+    }
+
+    #[test]
+    fn pad_leading_slot_gets_no_bos() {
+        let b = make_sink_bias(P, &[0, 1], &[0, 0]);
+        assert_eq!(b[0], 0.0);
+    }
+
+    #[test]
+    fn decay_shape() {
+        let kinds = vec![2u8; 64];
+        let rel: Vec<u32> = (0..64).collect();
+        let b = make_sink_bias(P, &kinds, &rel);
+        // Monotone decay after slot 0 (which also has BOS).
+        for i in 2..64 {
+            assert!(b[i] < b[i - 1]);
+        }
+        // Half the mass is gone within ~tau*ln2 tokens.
+        assert!(b[8] < 3.0 * 0.5 + 2.0);
+    }
+}

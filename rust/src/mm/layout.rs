@@ -1,0 +1,200 @@
+//! Linked-sequence layout: token-level view of a multimodal prompt.
+//!
+//! "Linked" is the paper's linker metaphor: each token of the prompt —
+//! text or image — is assigned a *linked position* (its true position in
+//! the final sequence) and a *cache slot* (where its KV row lives in the
+//! bucketed cache tensor). For this layout slots equal positions; the
+//! bucket padding beyond `len()` is the slack the selective artifacts mask
+//! out.
+
+use super::tokenizer::{Tokenizer, BOS};
+use super::{ImageId, Prompt, Segment};
+
+/// What occupies one linked slot.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TokenKind {
+    /// Text token with its vocabulary id.
+    Text(i32),
+    /// The `rel`-th token of image `id`.
+    Image { id: ImageId, rel: u32 },
+}
+
+/// Token-level layout of one prompt.
+#[derive(Debug, Clone)]
+pub struct LinkedLayout {
+    /// Real tokens in linked order; index == linked position == cache slot.
+    pub tokens: Vec<TokenKind>,
+    /// `[lo, hi)` span of every image, in prompt order (repeats allowed).
+    pub image_spans: Vec<(ImageId, usize, usize)>,
+    /// Length of the leading system-prompt span (incl. BOS).
+    pub sys_len: usize,
+}
+
+impl LinkedLayout {
+    /// Lay out `[BOS] system_prompt segments...`.
+    pub fn build(
+        prompt: &Prompt,
+        tokenizer: &Tokenizer,
+        img_tokens: usize,
+        system_prompt: &str,
+    ) -> LinkedLayout {
+        let mut tokens = vec![TokenKind::Text(BOS)];
+        for id in tokenizer.encode(system_prompt) {
+            tokens.push(TokenKind::Text(id));
+        }
+        let sys_len = tokens.len();
+
+        let mut image_spans = Vec::new();
+        for seg in &prompt.segments {
+            match seg {
+                Segment::Text(s) => {
+                    for id in tokenizer.encode(s) {
+                        tokens.push(TokenKind::Text(id));
+                    }
+                }
+                Segment::Image(id) => {
+                    let lo = tokens.len();
+                    for rel in 0..img_tokens {
+                        tokens.push(TokenKind::Image { id: *id, rel: rel as u32 });
+                    }
+                    image_spans.push((*id, lo, tokens.len()));
+                }
+            }
+        }
+        LinkedLayout { tokens, image_spans, sys_len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Kind codes padded to `bucket`: 0 pad, 1 text, 2 image (mirrors
+    /// `model.make_sink_bias`).
+    pub fn kinds(&self, bucket: usize) -> Vec<u8> {
+        let mut out = vec![0u8; bucket];
+        for (i, t) in self.tokens.iter().enumerate().take(bucket) {
+            out[i] = match t {
+                TokenKind::Text(_) => 1,
+                TokenKind::Image { .. } => 2,
+            };
+        }
+        out
+    }
+
+    /// Intra-image relative positions padded to `bucket`.
+    pub fn img_rel(&self, bucket: usize) -> Vec<u32> {
+        let mut out = vec![0u32; bucket];
+        for (i, t) in self.tokens.iter().enumerate().take(bucket) {
+            if let TokenKind::Image { rel, .. } = t {
+                out[i] = *rel;
+            }
+        }
+        out
+    }
+
+    /// Indices of all text tokens (the always-recompute set).
+    pub fn text_indices(&self) -> Vec<usize> {
+        self.tokens
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| matches!(t, TokenKind::Text(_)))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Indices of the first `k` tokens of every image span (MPIC-k).
+    pub fn image_head_indices(&self, k: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        for &(_, lo, hi) in &self.image_spans {
+            out.extend(lo..hi.min(lo + k));
+        }
+        out
+    }
+
+    /// All image-token indices.
+    pub fn image_indices(&self) -> Vec<usize> {
+        self.tokens
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| matches!(t, TokenKind::Image { .. }))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Token count contributed by text (incl. BOS/system prompt).
+    pub fn text_len(&self) -> usize {
+        self.text_indices().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mm::UserId;
+
+    fn layout(prompt: &Prompt) -> LinkedLayout {
+        let t = Tokenizer::new(4096);
+        LinkedLayout::build(prompt, &t, 8, "you are a helpful assistant")
+    }
+
+    #[test]
+    fn layout_structure() {
+        let p = Prompt::new(UserId(1))
+            .text("look at")
+            .image(ImageId(10))
+            .text("and")
+            .image(ImageId(11))
+            .text("compare them");
+        let l = layout(&p);
+        assert_eq!(l.image_spans.len(), 2);
+        assert_eq!(l.sys_len, 6); // BOS + 5 words
+        let (id0, lo0, hi0) = l.image_spans[0];
+        assert_eq!(id0, ImageId(10));
+        assert_eq!(hi0 - lo0, 8);
+        // Text before first image: sys + "look at".
+        assert_eq!(lo0, 6 + 2);
+        assert!(matches!(l.tokens[0], TokenKind::Text(BOS)));
+    }
+
+    #[test]
+    fn kinds_and_rel() {
+        let p = Prompt::new(UserId(1)).text("a").image(ImageId(3));
+        let l = layout(&p);
+        let bucket = 32;
+        let kinds = l.kinds(bucket);
+        let rel = l.img_rel(bucket);
+        let (_, lo, hi) = l.image_spans[0];
+        assert!(kinds[..lo].iter().all(|&k| k == 1));
+        assert!(kinds[lo..hi].iter().all(|&k| k == 2));
+        assert!(kinds[hi..].iter().all(|&k| k == 0));
+        assert_eq!(rel[lo], 0);
+        assert_eq!(rel[hi - 1], 7);
+    }
+
+    #[test]
+    fn selection_helpers() {
+        let p = Prompt::new(UserId(1)).text("x y").image(ImageId(1)).image(ImageId(2)).text("z");
+        let l = layout(&p);
+        let text = l.text_indices();
+        let heads = l.image_head_indices(3);
+        assert_eq!(heads.len(), 6);
+        assert_eq!(l.image_indices().len(), 16);
+        assert_eq!(text.len() + 16, l.len());
+        // Heads are the first 3 of each span.
+        assert_eq!(heads[0], l.image_spans[0].1);
+        assert_eq!(heads[3], l.image_spans[1].1);
+    }
+
+    #[test]
+    fn same_image_twice_gets_two_spans() {
+        let p = Prompt::new(UserId(1)).image(ImageId(7)).text("mid").image(ImageId(7));
+        let l = layout(&p);
+        assert_eq!(l.image_spans.len(), 2);
+        assert_eq!(l.image_spans[0].0, l.image_spans[1].0);
+        assert_ne!(l.image_spans[0].1, l.image_spans[1].1);
+    }
+}

@@ -1,0 +1,144 @@
+//! Multimodal prompt model (substrate S8).
+//!
+//! A prompt is a sequence of [`Segment`]s — text spans and image
+//! references — exactly the interleaved structure of paper Fig. 1. This
+//! module tokenizes text deterministically, lays the prompt out as a
+//! *linked sequence* (every token gets a linked position and a cache slot),
+//! and builds the per-key sink-bias vector (mirroring
+//! `python/compile/model.py::make_sink_bias`).
+
+pub mod bias;
+pub mod layout;
+pub mod tokenizer;
+
+pub use bias::make_sink_bias;
+pub use layout::{LinkedLayout, TokenKind};
+pub use tokenizer::Tokenizer;
+
+/// Stable identifier of an uploaded or retrieved image.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ImageId(pub u64);
+
+impl ImageId {
+    /// Derive an id from a human-readable handle, e.g. `IMAGE#EIFFEL2025`.
+    pub fn from_handle(handle: &str) -> ImageId {
+        ImageId(crate::util::rng::fnv1a(handle.as_bytes()))
+    }
+}
+
+/// Stable identifier of a user (Static Library namespace).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct UserId(pub u64);
+
+/// One piece of an interleaved multimodal prompt.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Segment {
+    Text(String),
+    Image(ImageId),
+}
+
+/// A full multimodal prompt.
+#[derive(Debug, Clone)]
+pub struct Prompt {
+    pub user: UserId,
+    pub segments: Vec<Segment>,
+}
+
+impl Prompt {
+    pub fn new(user: UserId) -> Prompt {
+        Prompt { user, segments: Vec::new() }
+    }
+
+    pub fn text(mut self, s: &str) -> Prompt {
+        self.segments.push(Segment::Text(s.to_string()));
+        self
+    }
+
+    pub fn image(mut self, id: ImageId) -> Prompt {
+        self.segments.push(Segment::Image(id));
+        self
+    }
+
+    pub fn images(&self) -> Vec<ImageId> {
+        self.segments
+            .iter()
+            .filter_map(|s| match s {
+                Segment::Image(id) => Some(*id),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Parse the `IMAGE#HANDLE` convention out of a flat string, mirroring
+    /// the paper's Fig. 1 dialogues: words starting with `IMAGE#` become
+    /// image segments, everything else stays text.
+    pub fn parse(user: UserId, s: &str) -> Prompt {
+        let mut p = Prompt::new(user);
+        let mut text_run: Vec<&str> = Vec::new();
+        for word in s.split_whitespace() {
+            let trimmed = word.trim_matches(|c: char| ",.;:!?".contains(c));
+            if let Some(_handle) = trimmed.strip_prefix("IMAGE#") {
+                if !text_run.is_empty() {
+                    p.segments.push(Segment::Text(text_run.join(" ")));
+                    text_run.clear();
+                }
+                p.segments.push(Segment::Image(ImageId::from_handle(trimmed)));
+            } else {
+                text_run.push(word);
+            }
+        }
+        if !text_run.is_empty() {
+            p.segments.push(Segment::Text(text_run.join(" ")));
+        }
+        p
+    }
+}
+
+/// Synthesise deterministic "pixel" patch features for an image id.
+///
+/// Stands in for real image bytes (DESIGN.md §2): the vision encoder only
+/// needs a deterministic, id-unique input tensor of shape
+/// `[img_tokens, patch_dim]`.
+pub fn synth_patches(id: ImageId, img_tokens: usize, patch_dim: usize) -> Vec<f32> {
+    let mut rng = crate::util::rng::Rng::new(id.0 ^ 0x494D4147); // "IMAG"
+    (0..img_tokens * patch_dim).map(|_| rng.normal() as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_interleaved() {
+        let p = Prompt::parse(
+            UserId(1),
+            "My partner and I took these photos IMAGE#EIFFEL2025 IMAGE#LOUVRE2025 please describe them",
+        );
+        assert_eq!(p.images().len(), 2);
+        assert!(matches!(p.segments[0], Segment::Text(_)));
+        assert!(matches!(p.segments[1], Segment::Image(_)));
+        assert!(matches!(p.segments[3], Segment::Text(_)));
+    }
+
+    #[test]
+    fn parse_strips_punctuation_from_handles() {
+        let p = Prompt::parse(UserId(1), "link IMAGE#A, and IMAGE#B.");
+        assert_eq!(p.images(), vec![ImageId::from_handle("IMAGE#A"), ImageId::from_handle("IMAGE#B")]);
+    }
+
+    #[test]
+    fn image_id_stable() {
+        assert_eq!(ImageId::from_handle("IMAGE#X"), ImageId::from_handle("IMAGE#X"));
+        assert_ne!(ImageId::from_handle("IMAGE#X"), ImageId::from_handle("IMAGE#Y"));
+    }
+
+    #[test]
+    fn synth_patches_deterministic_and_unique() {
+        let a = synth_patches(ImageId(5), 8, 4);
+        let b = synth_patches(ImageId(5), 8, 4);
+        let c = synth_patches(ImageId(6), 8, 4);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 32);
+    }
+}

@@ -1,0 +1,94 @@
+//! Deterministic word-hash tokenizer.
+//!
+//! The reproduction does not need linguistic fidelity — only a stable,
+//! injective-enough mapping from text to ids in `[RESERVED, vocab)` so that
+//! identical text always produces identical token streams (cache keys,
+//! quality scoring) and different text (almost always) differs.
+
+/// Ids 0..RESERVED are reserved: 0 = PAD, 1 = BOS, 2 = EOS, 3..10 spare.
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const RESERVED: i32 = 10;
+
+/// Word-level hash tokenizer over a fixed vocabulary size.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: i32,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: usize) -> Tokenizer {
+        assert!(vocab as i32 > RESERVED + 1, "vocab too small");
+        Tokenizer { vocab: vocab as i32 }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab as usize
+    }
+
+    /// Tokenize one word (case-normalised, punctuation-stripped).
+    pub fn word_id(&self, word: &str) -> i32 {
+        let norm: String = word
+            .chars()
+            .filter(|c| c.is_alphanumeric())
+            .flat_map(|c| c.to_lowercase())
+            .collect();
+        let h = crate::util::rng::fnv1a(norm.as_bytes());
+        RESERVED + (h % (self.vocab - RESERVED) as u64) as i32
+    }
+
+    /// Tokenize a text span to ids (whitespace word split; punctuation
+    /// marks double as their own tokens to lengthen realistic prompts).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::new();
+        for word in text.split_whitespace() {
+            let core: String = word.chars().filter(|c| c.is_alphanumeric()).collect();
+            if !core.is_empty() {
+                out.push(self.word_id(&core));
+            }
+            for c in word.chars().filter(|c| ",.;:!?".contains(*c)) {
+                out.push(self.word_id(&c.to_string()));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_and_case_insensitive() {
+        let t = Tokenizer::new(4096);
+        assert_eq!(t.encode("Hello world"), t.encode("hello  WORLD"));
+    }
+
+    #[test]
+    fn punctuation_tokens() {
+        let t = Tokenizer::new(4096);
+        let with = t.encode("hello, world.");
+        let without = t.encode("hello world");
+        assert_eq!(with.len(), 4);
+        assert_eq!(without.len(), 2);
+    }
+
+    #[test]
+    fn ids_in_range() {
+        let t = Tokenizer::new(4096);
+        for id in t.encode("the quick brown fox jumps over the lazy dog, twice!") {
+            assert!((RESERVED..4096).contains(&id));
+        }
+    }
+
+    #[test]
+    fn different_words_usually_differ() {
+        let t = Tokenizer::new(4096);
+        let ids: std::collections::HashSet<i32> = ["alpha", "beta", "gamma", "delta", "epsilon"]
+            .iter()
+            .map(|w| t.word_id(w))
+            .collect();
+        assert!(ids.len() >= 4);
+    }
+}

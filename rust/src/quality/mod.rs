@@ -1,0 +1,117 @@
+//! Quality scoring (substrate S14): the deterministic GPT-score substitute.
+//!
+//! The paper judges open-ended answers with ChatGPT (Appendix B). Without a
+//! judge model, we measure the *mechanistic cause* of quality degradation —
+//! divergence of the approximate-KV output from the exact (full-recompute)
+//! output — which is monotone in what the judge would punish (DESIGN.md §2):
+//!
+//! `score = 10 · (0.5 · agree@T + 0.5 · exp(−KL₁))`
+//!
+//! * `agree@T` — greedy-token agreement over the first `T` decoded tokens;
+//! * `KL₁` — KL divergence between first-token distributions.
+//!
+//! Prefix caching is exact, so it anchors the scale at 10, as it anchors the
+//! paper's GPT-score comparisons.
+
+use crate::coordinator::engine::InferenceResult;
+
+/// Component-wise quality report.
+#[derive(Debug, Clone, Copy)]
+pub struct Score {
+    /// KL(reference ‖ candidate) of the first-token distribution (nats).
+    pub kl_first: f64,
+    /// Fraction of agreeing greedy tokens (positional, first T).
+    pub agreement: f64,
+    /// Composite 0–10 score.
+    pub score: f64,
+}
+
+/// Numerically stable log-softmax.
+pub fn log_softmax(logits: &[f32]) -> Vec<f64> {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let exps: Vec<f64> = logits.iter().map(|&x| (x as f64 - max).exp()).collect();
+    let sum: f64 = exps.iter().sum();
+    let log_sum = sum.ln();
+    logits.iter().map(|&x| x as f64 - max - log_sum).collect()
+}
+
+/// KL(p ‖ q) from two logit vectors.
+pub fn kl_divergence(p_logits: &[f32], q_logits: &[f32]) -> f64 {
+    assert_eq!(p_logits.len(), q_logits.len());
+    let lp = log_softmax(p_logits);
+    let lq = log_softmax(q_logits);
+    lp.iter().zip(&lq).map(|(&a, &b)| a.exp() * (a - b)).sum::<f64>().max(0.0)
+}
+
+/// Positional greedy-token agreement over the common prefix length.
+pub fn token_agreement(reference: &[i32], candidate: &[i32]) -> f64 {
+    let t = reference.len().min(candidate.len());
+    if t == 0 {
+        return 0.0;
+    }
+    let same = reference[..t].iter().zip(&candidate[..t]).filter(|(a, b)| a == b).count();
+    same as f64 / t as f64
+}
+
+/// Score a candidate inference against the exact reference.
+pub fn score(reference: &InferenceResult, candidate: &InferenceResult) -> Score {
+    let kl = kl_divergence(&reference.first_logits, &candidate.first_logits);
+    let agreement = token_agreement(&reference.tokens, &candidate.tokens);
+    let score = 10.0 * (0.5 * agreement + 0.5 * (-kl).exp());
+    Score { kl_first: kl, agreement, score }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalises() {
+        let ls = log_softmax(&[1.0, 2.0, 3.0]);
+        let sum: f64 = ls.iter().map(|x| x.exp()).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kl_zero_iff_identical() {
+        let a = vec![0.5f32, -1.0, 2.0, 0.0];
+        assert!(kl_divergence(&a, &a) < 1e-12);
+        let b = vec![2.0f32, -1.0, 0.5, 0.0];
+        assert!(kl_divergence(&a, &b) > 0.01);
+    }
+
+    #[test]
+    fn kl_asymmetric_but_positive() {
+        let a = vec![3.0f32, 0.0, 0.0];
+        let b = vec![0.0f32, 3.0, 0.0];
+        assert!(kl_divergence(&a, &b) > 0.0);
+        assert!(kl_divergence(&b, &a) > 0.0);
+    }
+
+    #[test]
+    fn agreement_fractions() {
+        assert_eq!(token_agreement(&[1, 2, 3, 4], &[1, 2, 9, 4]), 0.75);
+        assert_eq!(token_agreement(&[1, 2], &[1, 2, 3]), 1.0);
+        assert_eq!(token_agreement(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn exact_candidate_scores_ten() {
+        use crate::coordinator::engine::{InferenceResult, TtftBreakdown};
+        use crate::kv::TransferReport;
+        let r = InferenceResult {
+            policy: "prefix".into(),
+            tokens: vec![1, 2, 3],
+            first_logits: vec![0.1, 0.9, -0.5],
+            ttft: TtftBreakdown::default(),
+            transfer: TransferReport::default(),
+            decode_s: 0.0,
+            seq_len: 10,
+            n_selected: 10,
+            s_bucket: 128,
+        };
+        let s = score(&r, &r.clone());
+        assert!((s.score - 10.0).abs() < 1e-9);
+        assert_eq!(s.agreement, 1.0);
+    }
+}

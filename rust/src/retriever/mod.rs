@@ -1,0 +1,150 @@
+//! MRAG retriever (substrate S12): bag-of-words embeddings + cosine top-k
+//! over the Dynamic Library — "analogous to the relocation table when
+//! executing a program" (paper §4.2).
+
+use crate::cache::dynamic_lib::{DynamicLibrary, Reference};
+use crate::mm::ImageId;
+use crate::util::rng::{fnv1a, Rng};
+
+/// Embedding dimensionality of the toy retriever.
+pub const EMBED_DIM: usize = 64;
+
+/// Deterministic bag-of-words embedding: each word hashes to a fixed random
+/// unit vector; the text embedding is the L2-normalised sum.
+pub fn embed(text: &str) -> Vec<f32> {
+    let mut acc = vec![0f32; EMBED_DIM];
+    for word in text.split_whitespace() {
+        let norm: String = word
+            .chars()
+            .filter(|c| c.is_alphanumeric())
+            .flat_map(|c| c.to_lowercase())
+            .collect();
+        if norm.is_empty() {
+            continue;
+        }
+        let mut rng = Rng::new(fnv1a(norm.as_bytes()));
+        for slot in acc.iter_mut() {
+            *slot += rng.normal() as f32;
+        }
+    }
+    let norm = acc.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if norm > 0.0 {
+        for x in acc.iter_mut() {
+            *x /= norm;
+        }
+    }
+    acc
+}
+
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// An in-memory vector index over dynamic-library references.
+pub struct Retriever {
+    entries: Vec<(ImageId, String, Vec<f32>)>,
+    generation: u64,
+}
+
+impl Retriever {
+    pub fn new() -> Retriever {
+        Retriever { entries: Vec::new(), generation: 0 }
+    }
+
+    /// (Re)build the index from the dynamic library if it changed.
+    pub fn sync(&mut self, lib: &DynamicLibrary) {
+        if lib.generation() == self.generation && !self.entries.is_empty() {
+            return;
+        }
+        self.entries = lib
+            .all()
+            .into_iter()
+            .map(|Reference { image, description }| {
+                let e = embed(&description);
+                (image, description, e)
+            })
+            .collect();
+        self.generation = lib.generation();
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Top-k most similar references to the query text.
+    pub fn search(&self, query: &str, k: usize) -> Vec<(ImageId, f32)> {
+        let q = embed(query);
+        let mut scored: Vec<(ImageId, f32)> =
+            self.entries.iter().map(|(id, _, e)| (*id, cosine(&q, e))).collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        scored.truncate(k);
+        scored
+    }
+}
+
+impl Default for Retriever {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::store::{KvStore, StoreConfig};
+    use std::sync::Arc;
+
+    #[test]
+    fn embed_is_normalised_and_deterministic() {
+        let a = embed("hotel near the eiffel tower");
+        let b = embed("hotel near the eiffel tower");
+        assert_eq!(a, b);
+        let norm: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn similar_text_scores_higher() {
+        let q = embed("hotels in paris near the eiffel tower");
+        let pos = embed("a hotel close to the eiffel tower in paris");
+        let neg = embed("dirt bike race in the desert canyon");
+        assert!(cosine(&q, &pos) > cosine(&q, &neg));
+    }
+
+    #[test]
+    fn search_returns_best_match() {
+        let dir = std::env::temp_dir().join(format!("mpic-retr-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store =
+            Arc::new(KvStore::new(StoreConfig { disk_dir: dir, ..Default::default() }).unwrap());
+        let lib = DynamicLibrary::new(store);
+        lib.add(Reference { image: ImageId(1), description: "hotel lobby near eiffel tower paris".into() });
+        lib.add(Reference { image: ImageId(2), description: "dirt bike race desert".into() });
+        lib.add(Reference { image: ImageId(3), description: "harbour sunset fishing boats".into() });
+
+        let mut r = Retriever::new();
+        r.sync(&lib);
+        let hits = r.search("recommend hotels near the eiffel tower", 2);
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[0].0, ImageId(1));
+    }
+
+    #[test]
+    fn sync_tracks_generation() {
+        let dir = std::env::temp_dir().join(format!("mpic-retr2-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store =
+            Arc::new(KvStore::new(StoreConfig { disk_dir: dir, ..Default::default() }).unwrap());
+        let lib = DynamicLibrary::new(store);
+        let mut r = Retriever::new();
+        r.sync(&lib);
+        assert!(r.is_empty());
+        lib.add(Reference { image: ImageId(1), description: "x".into() });
+        r.sync(&lib);
+        assert_eq!(r.len(), 1);
+    }
+}

@@ -1,0 +1,295 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime, parsed from `artifacts/manifest.json`.
+
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::util::json::Value;
+use crate::Result;
+
+/// One input or output of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    /// `weight`, `activation` or `output`.
+    pub kind: String,
+}
+
+/// One weight tensor's location inside the `.weights.bin` blob.
+#[derive(Debug, Clone)]
+pub struct WeightTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+/// Weight blob metadata.
+#[derive(Debug, Clone)]
+pub struct WeightsMeta {
+    pub file: String,
+    pub total_bytes: usize,
+    pub sha256: String,
+    pub tensors: Vec<WeightTensor>,
+}
+
+/// Model hyper-parameters (mirror of `model.ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub img_tokens: usize,
+    pub patch_dim: usize,
+    pub rope_theta: f64,
+    pub sink_sigma: f32,
+    pub sink_tau: f32,
+    pub bos_bias: f32,
+    pub weights: WeightsMeta,
+}
+
+impl ModelMeta {
+    pub fn sink_params(&self) -> crate::mm::bias::SinkParams {
+        crate::mm::bias::SinkParams {
+            sigma: self.sink_sigma,
+            tau: self.sink_tau,
+            bos: self.bos_bias,
+        }
+    }
+
+    /// f32 elements of one KV cache tensor `[L, S, H, Dh]` at bucket `s`.
+    pub fn kv_elems(&self, s: usize) -> usize {
+        self.n_layers * s * self.n_heads * self.d_head
+    }
+}
+
+/// One compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub model: String,
+    pub entry: String,
+    /// Sequence bucket (None for bucket-free entrypoints).
+    pub s: Option<usize>,
+    /// Selected-token bucket (selective entrypoint only).
+    pub n: Option<usize>,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub seq_buckets: Vec<usize>,
+    /// (S, N) pairs available for `prefill_selective`.
+    pub selective_buckets: Vec<(usize, usize)>,
+    pub debug_buckets: Vec<usize>,
+    pub models: Vec<ModelMeta>,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Value::parse(&text).context("parsing manifest JSON")?;
+        Manifest::from_json(&v)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Manifest> {
+        let seq_buckets = v
+            .get("seq_buckets")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let selective_buckets = v
+            .get("selective_buckets")?
+            .as_arr()?
+            .iter()
+            .map(|pair| {
+                let p = pair.as_arr()?;
+                Ok((p[0].as_usize()?, p[1].as_usize()?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let debug_buckets = v
+            .get("debug_buckets")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut models = Vec::new();
+        for m in v.get("models")?.as_arr()? {
+            let w = m.get("weights")?;
+            let tensors = w
+                .get("tensors")?
+                .as_arr()?
+                .iter()
+                .map(|t| {
+                    Ok(WeightTensor {
+                        name: t.get("name")?.as_str()?.to_string(),
+                        shape: t
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<Vec<_>>>()?,
+                        offset: t.get("offset")?.as_usize()?,
+                        bytes: t.get("bytes")?.as_usize()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.push(ModelMeta {
+                name: m.get("name")?.as_str()?.to_string(),
+                d_model: m.get("d_model")?.as_usize()?,
+                n_layers: m.get("n_layers")?.as_usize()?,
+                n_heads: m.get("n_heads")?.as_usize()?,
+                d_head: m.get("d_head")?.as_usize()?,
+                d_ff: m.get("d_ff")?.as_usize()?,
+                vocab: m.get("vocab")?.as_usize()?,
+                img_tokens: m.get("img_tokens")?.as_usize()?,
+                patch_dim: m.get("patch_dim")?.as_usize()?,
+                rope_theta: m.get("rope_theta")?.as_f64()?,
+                sink_sigma: m.get("sink_sigma")?.as_f64()? as f32,
+                sink_tau: m.get("sink_tau")?.as_f64()? as f32,
+                bos_bias: m.get("bos_bias")?.as_f64()? as f32,
+                weights: WeightsMeta {
+                    file: w.get("file")?.as_str()?.to_string(),
+                    total_bytes: w.get("total_bytes")?.as_usize()?,
+                    sha256: w.get("sha256")?.as_str()?.to_string(),
+                    tensors,
+                },
+            });
+        }
+
+        let io = |spec: &Value| -> Result<IoSpec> {
+            Ok(IoSpec {
+                name: spec.get("name")?.as_str()?.to_string(),
+                shape: spec
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<Vec<_>>>()?,
+                dtype: spec.get("dtype")?.as_str()?.to_string(),
+                kind: spec.get("kind")?.as_str()?.to_string(),
+            })
+        };
+
+        let mut artifacts = Vec::new();
+        for a in v.get("artifacts")?.as_arr()? {
+            let bucket = a.get("bucket")?;
+            artifacts.push(ArtifactMeta {
+                name: a.get("name")?.as_str()?.to_string(),
+                model: a.get("model")?.as_str()?.to_string(),
+                entry: a.get("entry")?.as_str()?.to_string(),
+                s: bucket.opt("s").map(|x| x.as_usize()).transpose()?,
+                n: bucket.opt("n").map(|x| x.as_usize()).transpose()?,
+                file: a.get("file")?.as_str()?.to_string(),
+                inputs: a.get("inputs")?.as_arr()?.iter().map(io).collect::<Result<Vec<_>>>()?,
+                outputs: a.get("outputs")?.as_arr()?.iter().map(io).collect::<Result<Vec<_>>>()?,
+            });
+        }
+
+        Ok(Manifest { seq_buckets, selective_buckets, debug_buckets, models, artifacts })
+    }
+
+    /// Smallest sequence bucket holding `len` tokens.
+    pub fn seq_bucket_for(&self, len: usize) -> Result<usize> {
+        self.seq_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= len)
+            .ok_or_else(|| anyhow::anyhow!("prompt of {len} tokens exceeds largest bucket"))
+    }
+
+    /// Smallest (S, N) selective bucket with S ≥ `seq_len` and N ≥ `n_sel`.
+    ///
+    /// Cost model: the kernel is O(N·S), so minimise `n * s` then `s`.
+    pub fn selective_bucket_for(&self, seq_len: usize, n_sel: usize) -> Result<(usize, usize)> {
+        self.selective_buckets
+            .iter()
+            .copied()
+            .filter(|&(s, n)| s >= seq_len && n >= n_sel)
+            .min_by_key(|&(s, n)| (n * s, s))
+            .ok_or_else(|| {
+                anyhow::anyhow!("no selective bucket for seq_len={seq_len}, n_sel={n_sel}")
+            })
+    }
+
+    /// Largest debug bucket ≥ len.
+    pub fn debug_bucket_for(&self, len: usize) -> Result<usize> {
+        self.debug_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= len)
+            .ok_or_else(|| anyhow::anyhow!("no debug bucket holds {len} tokens"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest() -> Value {
+        Value::parse(
+            r#"{
+              "format": 1,
+              "seq_buckets": [128, 256, 512],
+              "selective_buckets": [[128, 32], [128, 64], [256, 64], [512, 128]],
+              "debug_buckets": [256],
+              "models": [],
+              "artifacts": []
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::from_json(&tiny_manifest()).unwrap();
+        assert_eq!(m.seq_bucket_for(100).unwrap(), 128);
+        assert_eq!(m.seq_bucket_for(128).unwrap(), 128);
+        assert_eq!(m.seq_bucket_for(129).unwrap(), 256);
+        assert!(m.seq_bucket_for(1000).is_err());
+    }
+
+    #[test]
+    fn selective_bucket_minimises_cost() {
+        let m = Manifest::from_json(&tiny_manifest()).unwrap();
+        assert_eq!(m.selective_bucket_for(100, 30).unwrap(), (128, 32));
+        assert_eq!(m.selective_bucket_for(100, 40).unwrap(), (128, 64));
+        assert_eq!(m.selective_bucket_for(200, 40).unwrap(), (256, 64));
+        assert!(m.selective_bucket_for(600, 32).is_err());
+        assert!(m.selective_bucket_for(100, 512).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let path = std::path::Path::new(crate::DEFAULT_ARTIFACT_DIR).join("manifest.json");
+        if !path.exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&path).unwrap();
+        assert_eq!(m.models.len(), 2);
+        assert!(!m.artifacts.is_empty());
+        for a in &m.artifacts {
+            assert!(a.inputs.iter().any(|i| i.kind == "weight"));
+            assert!(!a.outputs.is_empty());
+        }
+        // Every model advertises the sink calibration the Linker mirrors.
+        for model in &m.models {
+            assert!(model.sink_sigma > 0.0);
+            assert!(model.sink_tau > 0.0);
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! PJRT runtime (substrate S9): loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Threading model: the `xla` crate's handles are `Rc`-based (not `Send`),
+//! mirroring the single-stream reality of one accelerator. All PJRT calls
+//! therefore happen on one *device thread* (the serving engine's thread);
+//! disk I/O and decompression run on the [`crate::util::threadpool`] and
+//! overlap with device compute — exactly the parallel-transfer structure of
+//! paper Fig. 6.
+
+pub mod artifacts;
+pub mod tensor;
+pub mod weights;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context};
+
+pub use artifacts::{ArtifactMeta, IoSpec, Manifest, ModelMeta};
+pub use tensor::{Dtype, Tensor};
+
+use crate::Result;
+
+/// Timing breakdown of one artifact execution (feeds the TTFT accounting).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    /// Host→device staging of activation inputs (seconds).
+    pub upload_s: f64,
+    /// Device execution (seconds).
+    pub execute_s: f64,
+    /// Device→host fetch + tuple decomposition (seconds).
+    pub download_s: f64,
+}
+
+impl ExecStats {
+    pub fn total_s(&self) -> f64 {
+        self.upload_s + self.execute_s + self.download_s
+    }
+
+    pub fn add(&mut self, other: &ExecStats) {
+        self.upload_s += other.upload_s;
+        self.execute_s += other.execute_s;
+        self.download_s += other.download_s;
+    }
+}
+
+struct LoadedModel {
+    /// Weight buffers resident on device, in `weight_spec` order.
+    buffers: Vec<xla::PjRtBuffer>,
+}
+
+/// The runtime: PJRT client + compiled-executable cache + resident weights.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    models: RefCell<HashMap<String, Rc<LoadedModel>>>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        log::info!(
+            "runtime: platform={} artifacts={} models={}",
+            client.platform_name(),
+            manifest.artifacts.len(),
+            manifest.models.len()
+        );
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+            exes: RefCell::new(HashMap::new()),
+            models: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn model_meta(&self, model: &str) -> Result<&ModelMeta> {
+        self.manifest
+            .models
+            .iter()
+            .find(|m| m.name == model)
+            .ok_or_else(|| anyhow!("unknown model {model:?}"))
+    }
+
+    /// Load (or fetch cached) weights for a model as device buffers.
+    fn model(&self, name: &str) -> Result<Rc<LoadedModel>> {
+        if let Some(m) = self.models.borrow().get(name) {
+            return Ok(Rc::clone(m));
+        }
+        let meta = self.model_meta(name)?.clone();
+        let t0 = Instant::now();
+        let tensors = weights::load_weights(&self.dir, &meta)?;
+        let mut buffers = Vec::with_capacity(tensors.len());
+        for t in &tensors {
+            buffers.push(
+                self.client
+                    .buffer_from_host_buffer(t.f32_data()?, t.dims(), None)
+                    .map_err(|e| anyhow!("weight upload: {e:?}"))?,
+            );
+        }
+        log::info!(
+            "runtime: loaded {} weight tensors for {name} in {:.2}s",
+            buffers.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        let lm = Rc::new(LoadedModel { buffers });
+        self.models.borrow_mut().insert(name.to_string(), Rc::clone(&lm));
+        Ok(lm)
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    pub fn executable(&self, artifact: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(artifact) {
+            return Ok(Rc::clone(e));
+        }
+        let meta = self.artifact_meta(artifact)?;
+        let path = self.dir.join(&meta.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {artifact}: {e:?}"))?;
+        log::debug!("runtime: compiled {artifact} in {:.2}s", t0.elapsed().as_secs_f64());
+        let exe = Rc::new(exe);
+        self.exes.borrow_mut().insert(artifact.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    pub fn artifact_meta(&self, artifact: &str) -> Result<&ArtifactMeta> {
+        self.manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == artifact)
+            .ok_or_else(|| anyhow!("unknown artifact {artifact:?}"))
+    }
+
+    /// Pre-compile a set of artifacts (startup warmup).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Compile every artifact of one model (serving-style AOT startup so no
+    /// request pays compilation latency). Debug artifacts are skipped
+    /// unless `include_debug`.
+    pub fn warmup_model(&self, model: &str, include_debug: bool) -> Result<()> {
+        let t0 = Instant::now();
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model && (include_debug || a.entry != "prefill_debug"))
+            .map(|a| a.name.clone())
+            .collect();
+        for n in &names {
+            self.executable(n)?;
+        }
+        log::info!(
+            "runtime: warmed up {} artifacts for {model} in {:.1}s",
+            names.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(())
+    }
+
+    /// Execute an artifact: weights are taken from the resident model
+    /// buffers, `acts` are validated against the manifest and staged.
+    /// Activations may be owned or borrowed (`&[Tensor]` or `&[&Tensor]`).
+    ///
+    /// Returns host output tensors (tuple already decomposed) plus timing.
+    pub fn execute<T: std::borrow::Borrow<Tensor>>(
+        &self,
+        artifact: &str,
+        acts: &[T],
+    ) -> Result<(Vec<Tensor>, ExecStats)> {
+        let meta = self.artifact_meta(artifact)?.clone();
+        let model = self.model(&meta.model)?;
+        let exe = self.executable(artifact)?;
+
+        // Validate activations against the manifest contract.
+        let act_specs: Vec<&IoSpec> =
+            meta.inputs.iter().filter(|i| i.kind == "activation").collect();
+        if act_specs.len() != acts.len() {
+            bail!(
+                "{artifact}: expected {} activations, got {}",
+                act_specs.len(),
+                acts.len()
+            );
+        }
+        for (spec, t) in act_specs.iter().zip(acts.iter().map(|t| t.borrow())) {
+            if spec.shape != t.dims() {
+                bail!(
+                    "{artifact}: activation {:?} shape mismatch: manifest {:?} vs tensor {:?}",
+                    spec.name,
+                    spec.shape,
+                    t.dims()
+                );
+            }
+            if spec.dtype != t.dtype().manifest_name() {
+                bail!(
+                    "{artifact}: activation {:?} dtype mismatch: manifest {} vs tensor {}",
+                    spec.name,
+                    spec.dtype,
+                    t.dtype().manifest_name()
+                );
+            }
+        }
+
+        let mut stats = ExecStats::default();
+
+        // Stage activations (weights are already resident).
+        let t0 = Instant::now();
+        let mut act_buffers = Vec::with_capacity(acts.len());
+        for t in acts {
+            act_buffers.push(t.borrow().to_buffer(&self.client)?);
+        }
+        stats.upload_s = t0.elapsed().as_secs_f64();
+
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(model.buffers.len() + acts.len());
+        args.extend(model.buffers.iter());
+        args.extend(act_buffers.iter());
+
+        let t1 = Instant::now();
+        let outs = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute {artifact}: {e:?}"))?;
+        stats.execute_s = t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        let tuple = outs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("{artifact}: empty execution result"))?;
+        let lit = tuple
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {artifact}: {e:?}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {artifact}: {e:?}"))?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "{artifact}: expected {} outputs, got {}",
+                meta.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut tensors = Vec::with_capacity(parts.len());
+        for (spec, lit) in meta.outputs.iter().zip(parts) {
+            tensors.push(Tensor::from_literal(&lit, spec)?);
+        }
+        stats.download_s = t2.elapsed().as_secs_f64();
+        Ok((tensors, stats))
+    }
+
+    // ---- artifact name helpers (the bucket naming scheme of aot.py) ------
+
+    pub fn art_prefill_full(model: &str, s: usize) -> String {
+        format!("{model}.prefill_full.s{s}")
+    }
+
+    pub fn art_prefill_selective(model: &str, s: usize, n: usize) -> String {
+        format!("{model}.prefill_selective.s{s}.n{n}")
+    }
+
+    pub fn art_decode_step(model: &str, s: usize) -> String {
+        format!("{model}.decode_step.s{s}")
+    }
+
+    pub fn art_decode_step_rows(model: &str, s: usize) -> String {
+        format!("{model}.decode_step_rows.s{s}")
+    }
+
+    pub fn art_layer0_k(model: &str, s: usize) -> String {
+        format!("{model}.layer0_k.s{s}")
+    }
+
+    pub fn art_prefill_debug(model: &str, s: usize) -> String {
+        format!("{model}.prefill_debug.s{s}")
+    }
+
+    pub fn art_encode_image(model: &str) -> String {
+        format!("{model}.encode_image_kv")
+    }
+}

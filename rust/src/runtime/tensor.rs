@@ -1,0 +1,175 @@
+//! Host tensors: the typed boundary between the coordinator and PJRT.
+
+use anyhow::{anyhow, bail};
+
+use crate::runtime::artifacts::IoSpec;
+use crate::Result;
+
+/// Element type (the manifest's `f32` / `i32`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn manifest_name(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I32 => "i32",
+        }
+    }
+
+    pub fn from_manifest(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+}
+
+/// Typed host tensor with shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    dims: Vec<usize>,
+    data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "f32 tensor shape/data mismatch");
+        Tensor { dims, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "i32 tensor shape/data mismatch");
+        Tensor { dims, data: TensorData::I32(data) }
+    }
+
+    pub fn zeros_f32(dims: Vec<usize>) -> Tensor {
+        let n = dims.iter().product();
+        Tensor::f32(dims, vec![0.0; n])
+    }
+
+    /// Scalar (rank-0) tensors.
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::i32(vec![], vec![v])
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            TensorData::F32(_) => Dtype::F32,
+            TensorData::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn f32_data(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn i32_data(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    pub fn f32_data_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    /// Stage onto the device.
+    pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        match &self.data {
+            TensorData::F32(v) => client
+                .buffer_from_host_buffer(v, &self.dims, None)
+                .map_err(|e| anyhow!("upload f32 tensor: {e:?}")),
+            TensorData::I32(v) => client
+                .buffer_from_host_buffer(v, &self.dims, None)
+                .map_err(|e| anyhow!("upload i32 tensor: {e:?}")),
+        }
+    }
+
+    /// Read back from a literal, checking against the manifest output spec.
+    pub fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<Tensor> {
+        let expected: usize = spec.shape.iter().product();
+        if lit.element_count() != expected {
+            bail!(
+                "output {:?}: literal has {} elements, manifest says {:?}",
+                spec.name,
+                lit.element_count(),
+                spec.shape
+            );
+        }
+        let data = match Dtype::from_manifest(&spec.dtype)? {
+            Dtype::F32 => TensorData::F32(
+                lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32 vec: {e:?}"))?,
+            ),
+            Dtype::I32 => TensorData::I32(
+                lit.to_vec::<i32>().map_err(|e| anyhow!("literal to i32 vec: {e:?}"))?,
+            ),
+        };
+        Ok(Tensor { dims: spec.shape.clone(), data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.dims(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert!(t.f32_data().is_ok());
+        assert!(t.i32_data().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn shape_mismatch_panics() {
+        Tensor::f32(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn scalar() {
+        let t = Tensor::scalar_i32(7);
+        assert_eq!(t.dims().len(), 0);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.i32_data().unwrap(), &[7]);
+    }
+
+    #[test]
+    fn dtype_names() {
+        assert_eq!(Dtype::F32.manifest_name(), "f32");
+        assert_eq!(Dtype::from_manifest("i32").unwrap(), Dtype::I32);
+        assert!(Dtype::from_manifest("f64").is_err());
+    }
+}

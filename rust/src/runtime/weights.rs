@@ -1,0 +1,130 @@
+//! Weight blob loading: raw little-endian f32 tensors, integrity-checked
+//! against the manifest's SHA-256 before being staged onto the device.
+
+use std::path::Path;
+
+use anyhow::{bail, Context};
+use sha2::{Digest, Sha256};
+
+use crate::runtime::artifacts::ModelMeta;
+use crate::runtime::tensor::Tensor;
+use crate::Result;
+
+/// Read and verify a model's weight tensors, in manifest order.
+pub fn load_weights(dir: &Path, meta: &ModelMeta) -> Result<Vec<Tensor>> {
+    let path = dir.join(&meta.weights.file);
+    let blob = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+    if blob.len() != meta.weights.total_bytes {
+        bail!(
+            "weight blob {} is {} bytes, manifest says {}",
+            path.display(),
+            blob.len(),
+            meta.weights.total_bytes
+        );
+    }
+    let digest = hex(&Sha256::digest(&blob));
+    if digest != meta.weights.sha256 {
+        bail!(
+            "weight blob {} integrity failure: sha256 {} != manifest {}",
+            path.display(),
+            digest,
+            meta.weights.sha256
+        );
+    }
+
+    let mut out = Vec::with_capacity(meta.weights.tensors.len());
+    for t in &meta.weights.tensors {
+        let end = t.offset + t.bytes;
+        if end > blob.len() {
+            bail!("tensor {} extends past blob end", t.name);
+        }
+        let raw = &blob[t.offset..end];
+        if raw.len() % 4 != 0 {
+            bail!("tensor {} byte count not divisible by 4", t.name);
+        }
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let expected: usize = t.shape.iter().product();
+        if data.len() != expected {
+            bail!(
+                "tensor {}: {} elements but shape {:?} wants {}",
+                t.name,
+                data.len(),
+                t.shape,
+                expected
+            );
+        }
+        out.push(Tensor::f32(t.shape.clone(), data));
+    }
+    Ok(out)
+}
+
+pub fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::{WeightTensor, WeightsMeta};
+
+    fn meta_for(blob: &[u8], file: &str, tensors: Vec<WeightTensor>) -> ModelMeta {
+        ModelMeta {
+            name: "t".into(),
+            d_model: 4,
+            n_layers: 1,
+            n_heads: 1,
+            d_head: 4,
+            d_ff: 4,
+            vocab: 16,
+            img_tokens: 4,
+            patch_dim: 4,
+            rope_theta: 1e4,
+            sink_sigma: 1.0,
+            sink_tau: 1.0,
+            bos_bias: 1.0,
+            weights: WeightsMeta {
+                file: file.into(),
+                total_bytes: blob.len(),
+                sha256: hex(&Sha256::digest(blob)),
+                tensors,
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_corruption_detection() {
+        let dir = std::env::temp_dir().join(format!("mpicw-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let vals: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let blob: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("w.bin"), &blob).unwrap();
+
+        let tensors = vec![
+            WeightTensor { name: "a".into(), shape: vec![2, 2], offset: 0, bytes: 16 },
+            WeightTensor { name: "b".into(), shape: vec![4], offset: 16, bytes: 16 },
+        ];
+        let meta = meta_for(&blob, "w.bin", tensors.clone());
+        let loaded = load_weights(&dir, &meta).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].f32_data().unwrap(), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(loaded[1].f32_data().unwrap(), &[4.0, 5.0, 6.0, 7.0]);
+
+        // Corrupt one byte → integrity failure.
+        let mut bad = blob.clone();
+        bad[3] ^= 0xFF;
+        std::fs::write(dir.join("bad.bin"), &bad).unwrap();
+        let mut meta2 = meta_for(&blob, "bad.bin", tensors);
+        meta2.weights.total_bytes = bad.len();
+        assert!(load_weights(&dir, &meta2).is_err());
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn hex_encoding() {
+        assert_eq!(hex(&[0x00, 0xff, 0x10]), "00ff10");
+    }
+}

@@ -1,0 +1,146 @@
+//! JSON-lines TCP serving front end (substrate S16).
+//!
+//! Wire protocol: one JSON object per line, one reply line per request.
+//!
+//! ```json
+//! {"op":"upload","user":1,"handle":"IMAGE#EIFFEL2025"}
+//! {"op":"infer","user":1,"policy":"mpic-32","text":"Describe IMAGE#EIFFEL2025 please","max_new":16}
+//! {"op":"chat","user":1,"text":"And what about IMAGE#LOUVRE2025?"}
+//! {"op":"reset","user":1}
+//! {"op":"stats"}
+//! {"op":"add_reference","handle":"IMAGE#HOTEL01","description":"hotel near the eiffel tower"}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! `infer` is stateless; `chat` keeps a per-user session (multi-turn
+//! history linked in front of each new turn, so earlier images are reused
+//! position-independently across turns).
+//!
+//! Threading: connection handlers (pool threads) parse lines and forward
+//! them over a channel to the engine loop, which runs on the thread that
+//! owns the PJRT handles; replies travel back on per-request channels.
+
+pub mod protocol;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::coordinator::Engine;
+use crate::util::json::Value;
+use crate::util::threadpool::ThreadPool;
+use crate::Result;
+
+type Job = (Value, Sender<Value>);
+
+/// Serve until an `{"op":"shutdown"}` request arrives.
+///
+/// Binds `addr` (e.g. `127.0.0.1:7401`), returns the bound address through
+/// `on_ready` before blocking in the engine loop.
+pub fn serve(engine: &Engine, addr: &str, on_ready: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    on_ready(local);
+    log::info!("server: listening on {local}");
+
+    let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let pool = ThreadPool::new(8);
+
+    // Acceptor thread: hands each connection to a pool worker.
+    let acceptor = {
+        let shutdown = Arc::clone(&shutdown);
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                match stream {
+                    Ok(s) => {
+                        let tx = tx.clone();
+                        let shutdown = Arc::clone(&shutdown);
+                        pool.submit(move || {
+                            if let Err(e) = handle_conn(s, tx, shutdown) {
+                                log::debug!("server: connection ended: {e}");
+                            }
+                        });
+                    }
+                    Err(e) => log::warn!("server: accept error: {e}"),
+                }
+            }
+        })
+    };
+    drop(tx);
+
+    // Engine loop (this thread owns PJRT); sessions are server state.
+    let mut sessions = crate::coordinator::session::SessionStore::new();
+    while let Ok((req, reply)) = rx.recv() {
+        let resp = protocol::dispatch(engine, &mut sessions, &req);
+        let is_shutdown = matches!(req.opt("op").and_then(|o| o.as_str().ok()), Some("shutdown"));
+        let _ = reply.send(resp);
+        if is_shutdown {
+            shutdown.store(true, Ordering::SeqCst);
+            // Unblock the acceptor with a dummy connection.
+            let _ = TcpStream::connect(local);
+            break;
+        }
+    }
+    let _ = acceptor.join();
+    log::info!("server: shut down");
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<Job>, shutdown: Arc<AtomicBool>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match Value::parse(&line) {
+            Ok(req) => {
+                let (rtx, rrx) = channel();
+                if tx.send((req, rtx)).is_err() {
+                    break; // engine loop gone
+                }
+                rrx.recv().unwrap_or_else(|_| protocol::error("engine unavailable"))
+            }
+            Err(e) => protocol::error(&format!("bad JSON: {e}")),
+        };
+        writer.write_all(resp.encode().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+/// Blocking JSON-lines client (used by examples and tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { writer: stream.try_clone()?, reader: BufReader::new(stream) })
+    }
+
+    pub fn call(&mut self, req: &Value) -> Result<Value> {
+        self.writer.write_all(req.encode().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Value::parse(&line)
+    }
+}

@@ -1,0 +1,139 @@
+//! Server request dispatch: JSON op → engine call → JSON reply.
+
+use crate::coordinator::session::SessionStore;
+use crate::coordinator::{Engine, Policy};
+use crate::mm::{Prompt, UserId};
+use crate::util::json::Value;
+
+pub fn error(msg: &str) -> Value {
+    Value::obj(vec![("ok", Value::Bool(false)), ("error", Value::str(msg))])
+}
+
+fn ok(mut fields: Vec<(&str, Value)>) -> Value {
+    fields.insert(0, ("ok", Value::Bool(true)));
+    Value::obj(fields)
+}
+
+/// Handle one request object. `sessions` holds the server's multi-turn
+/// conversation state (the `chat` / `reset` ops).
+pub fn dispatch(engine: &Engine, sessions: &mut SessionStore, req: &Value) -> Value {
+    match dispatch_inner(engine, sessions, req) {
+        Ok(v) => v,
+        Err(e) => error(&format!("{e:#}")),
+    }
+}
+
+fn dispatch_inner(
+    engine: &Engine,
+    sessions: &mut SessionStore,
+    req: &Value,
+) -> crate::Result<Value> {
+    let op = req.get("op")?.as_str()?;
+    match op {
+        "ping" => Ok(ok(vec![("pong", Value::Bool(true))])),
+
+        "shutdown" => Ok(ok(vec![("bye", Value::Bool(true))])),
+
+        "stats" => Ok(ok(vec![
+            ("metrics", engine.metrics.snapshot()),
+            ("model", Value::str(&engine.meta().name)),
+        ])),
+
+        "upload" => {
+            let user = UserId(req.get("user")?.as_f64()? as u64);
+            let handle = req.get("handle")?.as_str()?;
+            let image = engine.upload_image(user, handle)?;
+            Ok(ok(vec![("image", Value::num(image.0 as f64))]))
+        }
+
+        "add_reference" => {
+            let handle = req.get("handle")?.as_str()?;
+            let desc = req.get("description")?.as_str()?;
+            let image = engine.add_reference(handle, desc)?;
+            Ok(ok(vec![("image", Value::num(image.0 as f64))]))
+        }
+
+        "infer" => {
+            let user = UserId(req.get("user")?.as_f64()? as u64);
+            let text = req.get("text")?.as_str()?;
+            let policy = Policy::parse(req.opt("policy").map(|p| p.as_str()).transpose()?.unwrap_or("mpic-32"))?;
+            let max_new = req
+                .opt("max_new")
+                .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(engine.config().max_new_tokens);
+            let mut prompt = Prompt::parse(user, text);
+            // Resolve handles through the user's static library when they
+            // exist; unknown handles keep their content-derived id.
+            for seg in prompt.segments.iter_mut() {
+                if let crate::mm::Segment::Image(_id) = seg {
+                    // ids are already content-derived from the handle
+                }
+            }
+            let mrag = req.opt("mrag").map(|v| v.as_usize()).transpose()?.unwrap_or(0);
+            if mrag > 0 {
+                let (augmented, _) = engine.mrag_augment(&prompt, mrag)?;
+                prompt = augmented;
+            }
+            let r = engine.infer(&prompt, policy, max_new)?;
+            Ok(ok(vec![
+                ("policy", Value::str(&r.policy)),
+                ("tokens", Value::Arr(r.tokens.iter().map(|&t| Value::num(t as f64)).collect())),
+                ("ttft_s", Value::num(r.ttft.total_s)),
+                ("ttft_fetch_s", Value::num(r.ttft.fetch_s)),
+                ("ttft_link_s", Value::num(r.ttft.link_s)),
+                ("steps", Value::num(r.ttft.steps as f64)),
+                ("seq_len", Value::num(r.seq_len as f64)),
+                ("n_selected", Value::num(r.n_selected as f64)),
+                ("decode_s", Value::num(r.decode_s)),
+            ]))
+        }
+
+        // Multi-turn chat: the session accumulates history; every turn is
+        // linked as history ++ turn so earlier images hit the cache
+        // position-independently.
+        "chat" => {
+            let user = UserId(req.get("user")?.as_f64()? as u64);
+            let text = req.get("text")?.as_str()?;
+            let policy = Policy::parse(
+                req.opt("policy").map(|p| p.as_str()).transpose()?.unwrap_or("mpic-32"),
+            )?;
+            let max_new = req
+                .opt("max_new")
+                .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(engine.config().max_new_tokens);
+            let turn = Prompt::parse(user, text);
+            let full = sessions.session(user).user_turn(user, &turn);
+            let r = engine.infer(&full, policy, max_new)?;
+            sessions.session(user).assistant_reply(&r.tokens);
+            Ok(ok(vec![
+                ("turn", Value::num(sessions.session(user).turns() as f64)),
+                ("tokens", Value::Arr(r.tokens.iter().map(|&t| Value::num(t as f64)).collect())),
+                ("ttft_s", Value::num(r.ttft.total_s)),
+                ("seq_len", Value::num(r.seq_len as f64)),
+                ("device_hits", Value::num(r.transfer.device_hits as f64)),
+            ]))
+        }
+
+        "reset" => {
+            let user = UserId(req.get("user")?.as_f64()? as u64);
+            sessions.reset(user);
+            Ok(ok(vec![("reset", Value::Bool(true))]))
+        }
+
+        other => anyhow::bail!("unknown op {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_shape() {
+        let e = error("boom");
+        assert!(!e.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(e.get("error").unwrap().as_str().unwrap(), "boom");
+    }
+}

@@ -1,0 +1,203 @@
+//! Benchmark harness (substrate S6; no criterion in this environment).
+//!
+//! Every `benches/*.rs` binary (`harness = false`) uses this: warmup +
+//! measured iterations with mean/p50/p95, table rendering that mirrors the
+//! paper's figures as text series, and JSON result emission so
+//! EXPERIMENTS.md numbers are regenerable byte-for-byte.
+
+use std::time::Instant;
+
+use crate::util::json::Value;
+use crate::util::stats::Samples;
+
+/// Time a closure `iters` times after `warmup` unmeasured runs.
+pub fn time_fn<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Samples {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Samples::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    s
+}
+
+/// One row of a result table.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub cells: Vec<(String, Value)>,
+}
+
+impl Row {
+    pub fn new() -> Self {
+        Row { cells: Vec::new() }
+    }
+
+    pub fn push(mut self, key: &str, v: Value) -> Self {
+        self.cells.push((key.to_string(), v));
+        self
+    }
+
+    pub fn num(self, key: &str, v: f64) -> Self {
+        self.push(key, Value::Num(v))
+    }
+
+    pub fn str(self, key: &str, v: &str) -> Self {
+        self.push(key, Value::str(v))
+    }
+}
+
+impl Default for Row {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A named result table; renders as aligned text and as JSON.
+pub struct Table {
+    pub title: String,
+    pub rows: Vec<Row>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Self {
+        Table { title: title.to_string(), rows: Vec::new() }
+    }
+
+    pub fn add(&mut self, row: Row) {
+        self.rows.push(row);
+    }
+
+    /// Render as an aligned text table (the "figure as series" output).
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} ==\n", self.title);
+        if self.rows.is_empty() {
+            out.push_str("(no rows)\n");
+            return out;
+        }
+        let headers: Vec<String> = self.rows[0].cells.iter().map(|(k, _)| k.clone()).collect();
+        let fmt_cell = |v: &Value| match v {
+            Value::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e12 {
+                    format!("{}", *n as i64)
+                } else {
+                    format!("{n:.4}")
+                }
+            }
+            Value::Str(s) => s.clone(),
+            other => other.encode(),
+        };
+        let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+        let mut cells: Vec<Vec<String>> = Vec::new();
+        for row in &self.rows {
+            let mut line = Vec::new();
+            for (i, (_, v)) in row.cells.iter().enumerate() {
+                let s = fmt_cell(v);
+                if i < widths.len() {
+                    widths[i] = widths[i].max(s.len());
+                }
+                line.push(s);
+            }
+            cells.push(line);
+        }
+        let header_line: Vec<String> = headers
+            .iter()
+            .zip(&widths)
+            .map(|(h, w)| format!("{h:>w$}"))
+            .collect();
+        out.push_str(&header_line.join("  "));
+        out.push('\n');
+        for line in cells {
+            let fmt: Vec<String> = line
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect();
+            out.push_str(&fmt.join("  "));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// JSON form: `{"title": ..., "rows": [{...}]}`.
+    pub fn to_json(&self) -> Value {
+        let rows: Vec<Value> = self
+            .rows
+            .iter()
+            .map(|r| Value::Obj(r.cells.iter().map(|(k, v)| (k.clone(), v.clone())).collect()))
+            .collect();
+        Value::obj(vec![("title", Value::str(&self.title)), ("rows", Value::Arr(rows))])
+    }
+}
+
+/// Write a set of tables to `target/bench-results/<name>.json` and print them.
+pub fn emit(name: &str, tables: &[Table]) {
+    for t in tables {
+        println!("{}", t.render());
+    }
+    let dir = std::path::Path::new("target/bench-results");
+    let _ = std::fs::create_dir_all(dir);
+    let v = Value::Arr(tables.iter().map(|t| t.to_json()).collect());
+    let path = dir.join(format!("{name}.json"));
+    if let Err(e) = std::fs::write(&path, v.encode()) {
+        eprintln!("warn: could not write {}: {e}", path.display());
+    } else {
+        println!("[bench] wrote {}", path.display());
+    }
+}
+
+/// ASCII heatmap rendering (Fig. 11). `grid[r][c]` in [0,1].
+pub fn render_heatmap(grid: &[Vec<f32>], row_label: &str, col_label: &str) -> String {
+    const SHADES: &[char] = &[' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let mut out = format!("rows: {row_label}, cols: {col_label}\n");
+    for row in grid {
+        for &v in row {
+            let idx = ((v.clamp(0.0, 1.0)) * (SHADES.len() - 1) as f32).round() as usize;
+            out.push(SHADES[idx]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_counts() {
+        let s = time_fn(2, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.len(), 5);
+        assert!(s.mean() >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo");
+        t.add(Row::new().str("algo", "mpic-32").num("ttft_ms", 12.5));
+        t.add(Row::new().str("algo", "prefix").num("ttft_ms", 120.0));
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("mpic-32"));
+        assert!(s.contains("12.5"));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = Table::new("x");
+        t.add(Row::new().num("a", 1.0));
+        let v = t.to_json();
+        assert_eq!(v.get("title").unwrap().as_str().unwrap(), "x");
+        assert_eq!(v.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn heatmap_shades() {
+        let s = render_heatmap(&[vec![0.0, 1.0]], "r", "c");
+        assert!(s.lines().nth(1).unwrap().contains('@'));
+    }
+}

@@ -1,0 +1,119 @@
+//! Tiny CLI argument parser (substrate S4; no clap in this environment).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed accessors and defaulting. Each binary declares its usage
+//! string by hand (they are short).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list. `flag_names` lists options that
+    /// take no value.
+    pub fn parse_from(tokens: impl IntoIterator<Item = String>, flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{body} expects a value"))?;
+                    out.options.insert(body.to_string(), v);
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process command line (skipping argv[0]).
+    pub fn parse(flag_names: &[&str]) -> Result<Args> {
+        Self::parse_from(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} must be an integer, got {s:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} must be an integer, got {s:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} must be a number, got {s:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse_from(toks("serve --port 9000 --verbose --model=mpic-sim-a extra"), &["verbose"]).unwrap();
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+        assert_eq!(a.get("port"), Some("9000"));
+        assert_eq!(a.get("model"), Some("mpic-sim-a"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse_from(toks("--n 5 --rate 1.5"), &[]).unwrap();
+        assert_eq!(a.usize_or("n", 1).unwrap(), 5);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!((a.f64_or("rate", 0.0).unwrap() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse_from(toks("--port"), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_type_errors() {
+        let a = Args::parse_from(toks("--n five"), &[]).unwrap();
+        assert!(a.usize_or("n", 1).is_err());
+    }
+}

@@ -1,0 +1,71 @@
+//! Stderr logger implementing the `log` facade (substrate S5).
+
+use std::io::Write;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::OnceCell;
+
+struct StderrLogger {
+    start: Instant,
+    level: LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(err, "[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceCell<StderrLogger> = OnceCell::new();
+
+/// Install the logger. Level comes from `MPIC_LOG` (error|warn|info|debug|trace),
+/// defaulting to `info`. Safe to call multiple times.
+pub fn init() {
+    init_with_level(None)
+}
+
+pub fn init_with_level(level: Option<LevelFilter>) {
+    let level = level.unwrap_or_else(|| {
+        match std::env::var("MPIC_LOG").unwrap_or_default().to_lowercase().as_str() {
+            "error" => LevelFilter::Error,
+            "warn" => LevelFilter::Warn,
+            "debug" => LevelFilter::Debug,
+            "trace" => LevelFilter::Trace,
+            "off" => LevelFilter::Off,
+            _ => LevelFilter::Info,
+        }
+    });
+    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now(), level });
+    if log::set_logger(logger).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,15 @@
+//! In-tree substrates (DESIGN.md §4, S1–S7).
+//!
+//! The build environment vendors only the `xla` crate's dependency closure,
+//! so the usual ecosystem crates (serde, tokio, clap, criterion, proptest)
+//! are unavailable; these modules provide the small, tested subset of their
+//! functionality the system needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

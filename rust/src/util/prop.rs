@@ -1,0 +1,105 @@
+//! Property-testing helper (substrate S7; no proptest in this environment).
+//!
+//! Deterministic seeded case generation with a simple halving shrinker: a
+//! failing case is re-run with progressively simpler inputs produced by the
+//! caller's `simplify` hook until it stops failing, and the minimal failing
+//! seed/case is reported in the panic message.
+
+use crate::util::rng::Rng;
+
+/// Run `cases` random property checks. `gen` builds a case from an RNG,
+/// `check` returns `Err(reason)` on violation.
+pub fn check<T: std::fmt::Debug, G, C>(name: &str, cases: usize, mut gen: G, mut check: C)
+where
+    G: FnMut(&mut Rng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    let base = Rng::new(0x4D504943_u64 ^ crate::util::rng::fnv1a(name.as_bytes()));
+    for case_idx in 0..cases {
+        let mut rng = base.fork(case_idx as u64);
+        let input = gen(&mut rng);
+        if let Err(reason) = check(&input) {
+            panic!(
+                "property {name:?} failed on case {case_idx}:\n  reason: {reason}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Run `cases` checks with shrinking: on failure, `simplify` proposes
+/// smaller variants (best-first); the smallest still-failing one is reported.
+pub fn check_shrink<T: Clone + std::fmt::Debug, G, C, S>(
+    name: &str,
+    cases: usize,
+    mut gen: G,
+    mut test: C,
+    mut simplify: S,
+) where
+    G: FnMut(&mut Rng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+    S: FnMut(&T) -> Vec<T>,
+{
+    let base = Rng::new(0x4D504943_u64 ^ crate::util::rng::fnv1a(name.as_bytes()));
+    for case_idx in 0..cases {
+        let mut rng = base.fork(case_idx as u64);
+        let input = gen(&mut rng);
+        if let Err(first_reason) = test(&input) {
+            // Greedy shrink loop, bounded to avoid pathological cycles.
+            let mut best = input.clone();
+            let mut reason = first_reason;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in simplify(&best) {
+                    budget -= 1;
+                    if let Err(r) = test(&cand) {
+                        best = cand;
+                        reason = r;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property {name:?} failed on case {case_idx} (shrunk):\n  reason: {reason}\n  input: {best:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_silent() {
+        check("add-commutes", 50, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn failing_property_panics() {
+        check("always-fails", 5, |r| r.below(10), |_| Err("always-fails".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk")]
+    fn shrinking_reduces_case() {
+        // Fails for any n >= 3; shrinker should walk toward 3.
+        check_shrink(
+            "ge3",
+            1,
+            |r| 50 + r.below(50),
+            |&n| if n >= 3 { Err(format!("n={n} >= 3")) } else { Ok(()) },
+            |&n| if n > 0 { vec![n / 2, n - 1] } else { vec![] },
+        );
+    }
+}

@@ -1,0 +1,211 @@
+//! Fixed-size worker pool (substrate S3; no tokio in this environment).
+//!
+//! Drives the parallel transfer engine (paper Fig. 6: compute and load KV
+//! caches concurrently), the TCP server's connection handlers, and the
+//! workload drivers. Jobs are `FnOnce` closures; `scope`-style joins are
+//! expressed with [`WaitGroup`].
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads consuming a shared queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("mpic-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => {
+                                // Worker survives panicking jobs; the panic
+                                // surfaces at the submitter's join point.
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("workers alive");
+    }
+
+    /// Parallel map: applies `f` to each item, preserving order.
+    ///
+    /// `T` and `R` cross thread boundaries, so they must be `Send`; `f` is
+    /// shared. Blocks until all results are in.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let wg = WaitGroup::new(n);
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            let wg = wg.clone();
+            self.submit(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+                wg.done();
+            });
+        }
+        wg.wait();
+        // Workers may still hold their Arc clones for an instant after
+        // signalling the wait group; take the results under the lock
+        // instead of unwrapping the Arc.
+        let mut guard = results.lock().unwrap();
+        guard
+            .iter_mut()
+            .map(|r| r.take().expect("job panicked before producing a result"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Counting completion latch.
+#[derive(Clone)]
+pub struct WaitGroup {
+    inner: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl WaitGroup {
+    pub fn new(count: usize) -> Self {
+        WaitGroup { inner: Arc::new((Mutex::new(count), Condvar::new())) }
+    }
+
+    pub fn done(&self) {
+        let (lock, cv) = &*self.inner;
+        let mut n = lock.lock().unwrap();
+        *n = n.saturating_sub(1);
+        if *n == 0 {
+            cv.notify_all();
+        }
+    }
+
+    pub fn wait(&self) {
+        let (lock, cv) = &*self.inner;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let wg = WaitGroup::new(100);
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let wg = wg.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                wg.done();
+            });
+        }
+        wg.wait();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.map((0..200).collect::<Vec<i64>>(), |x| x * 2);
+        assert_eq!(out, (0..200).map(|x| x * 2).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<i32> = pool.map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        let pool = ThreadPool::new(1);
+        let wg = WaitGroup::new(1);
+        {
+            let wg = wg.clone();
+            pool.submit(move || {
+                let _guard = DoneOnDrop(wg);
+                // resume_unwind skips the global panic hook so libtest does
+                // not attribute this *intentional* panic to a random test.
+                std::panic::resume_unwind(Box::new("boom"));
+            });
+        }
+        wg.wait();
+        // Pool still functional afterwards.
+        let out = pool.map(vec![1, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+
+        struct DoneOnDrop(WaitGroup);
+        impl Drop for DoneOnDrop {
+            fn drop(&mut self) {
+                self.0.done();
+            }
+        }
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must not hang, must run queued jobs
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}

@@ -1,0 +1,234 @@
+//! Synthetic workload generators (substrate S15; DESIGN.md §2 substitutions
+//! for MMDU and SparklesEval) plus arrival-trace generation.
+//!
+//! Both generators reproduce the *structural* properties the paper's
+//! evaluation depends on: many images per conversation, multi-turn reuse of
+//! the same images, and opening words that differ between requests (which is
+//! what defeats prefix caching). MMDU-like conversations stitch images at
+//! sentence level; Sparkles-like conversations interleave image references
+//! at word level inside a sentence.
+
+pub mod trace;
+
+use crate::mm::{ImageId, Prompt, UserId};
+use crate::util::rng::Rng;
+
+/// Which dataset shape to emulate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataset {
+    /// MMDU-like: sentence-level stitching ("IMG IMG. Describe these ...").
+    Mmdu,
+    /// Sparkles-like: word-level interleaving ("link the X in IMG and ...").
+    Sparkles,
+}
+
+impl Dataset {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::Mmdu => "mmdu-like",
+            Dataset::Sparkles => "sparkles-like",
+        }
+    }
+}
+
+/// Generation parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub dataset: Dataset,
+    pub n_conversations: usize,
+    pub turns_per_conversation: usize,
+    /// Inclusive range of images per conversation.
+    pub images_min: usize,
+    pub images_max: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            dataset: Dataset::Mmdu,
+            n_conversations: 20,
+            turns_per_conversation: 2,
+            images_min: 2,
+            images_max: 5,
+            seed: 0xDA7A,
+        }
+    }
+}
+
+/// A generated multi-turn conversation. Every turn references (a subset of)
+/// the conversation's uploaded images.
+#[derive(Debug, Clone)]
+pub struct Conversation {
+    pub user: UserId,
+    pub images: Vec<ImageId>,
+    pub turns: Vec<Prompt>,
+}
+
+// A compact wordlist; prompts are synthesized but word-frequency realistic
+// enough to exercise the tokenizer and produce distinct opening words.
+const OPENERS: &[&str] = &[
+    "Please describe", "We are planning to visit", "Can you compare", "Tell me about",
+    "I would like to understand", "My partner wonders about", "Could you analyse",
+    "Help me summarise", "What stands out in", "Give me details on",
+];
+const NOUNS: &[&str] = &[
+    "landmark", "painting", "celebration", "dirt bike race", "harbour", "market",
+    "skyline", "garden", "museum hall", "festival crowd", "mountain trail", "beach",
+];
+const VERBS: &[&str] = &[
+    "relate to", "differ from", "resemble", "contrast with", "connect with", "build on",
+];
+const FILLERS: &[&str] = &[
+    "in rich detail", "as thoroughly as possible", "for our travel notes",
+    "with attention to colours", "focusing on the people", "with historical context",
+];
+
+fn sentence(rng: &mut Rng, words: usize) -> String {
+    let mut parts = Vec::new();
+    for _ in 0..words {
+        parts.push(*rng.choose(NOUNS));
+    }
+    parts.join(" ")
+}
+
+/// Generate a deterministic workload.
+pub fn generate(spec: &WorkloadSpec) -> Vec<Conversation> {
+    let root = Rng::new(spec.seed);
+    (0..spec.n_conversations)
+        .map(|c| {
+            let mut rng = root.fork(c as u64);
+            let user = UserId(1000 + c as u64);
+            let n_images = rng.range(spec.images_min as u64, spec.images_max as u64 + 1) as usize;
+            let images: Vec<ImageId> = (0..n_images)
+                .map(|i| ImageId(spec.seed ^ ((c as u64) << 20) ^ i as u64 ^ 0x1111_0000))
+                .collect();
+            let turns = (0..spec.turns_per_conversation)
+                .map(|t| match spec.dataset {
+                    Dataset::Mmdu => mmdu_turn(&mut rng, user, &images, t),
+                    Dataset::Sparkles => sparkles_turn(&mut rng, user, &images, t),
+                })
+                .collect();
+            Conversation { user, images, turns }
+        })
+        .collect()
+}
+
+/// MMDU-like: all (or a prefix of) images stitched together, then a
+/// sentence-level request. The opening words vary per turn — the paper's
+/// "We're planning to ..." example that breaks prefix caching.
+fn mmdu_turn(rng: &mut Rng, user: UserId, images: &[ImageId], turn: usize) -> Prompt {
+    let opener = format!("{} {}", rng.choose(OPENERS), sentence(rng, 2));
+    let mut p = Prompt::new(user).text(&opener);
+    // Later turns may revisit a subset (multi-turn reuse).
+    let take = if turn == 0 { images.len() } else { rng.range(1, images.len() as u64 + 1) as usize };
+    for id in &images[..take] {
+        p = p.image(*id);
+    }
+    let ask = format!(
+        "Can you describe these images {} and how the {} {} the {}?",
+        rng.choose(FILLERS),
+        rng.choose(NOUNS),
+        rng.choose(VERBS),
+        rng.choose(NOUNS),
+    );
+    p.text(&ask)
+}
+
+/// Sparkles-like: image references embedded at word level inside a sentence.
+fn sparkles_turn(rng: &mut Rng, user: UserId, images: &[ImageId], _turn: usize) -> Prompt {
+    let mut p = Prompt::new(user).text(&format!("{} the {} in", rng.choose(OPENERS), rng.choose(NOUNS)));
+    for (i, id) in images.iter().enumerate() {
+        p = p.image(*id);
+        if i + 1 < images.len() {
+            p = p.text(&format!("and the {} in", rng.choose(NOUNS)));
+        }
+    }
+    p.text(&format!("— how do they {} each other {}?", rng.choose(VERBS), rng.choose(FILLERS)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mm::Segment;
+
+    #[test]
+    fn deterministic() {
+        let spec = WorkloadSpec::default();
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.images, y.images);
+            assert_eq!(format!("{:?}", x.turns), format!("{:?}", y.turns));
+        }
+    }
+
+    #[test]
+    fn image_counts_in_range() {
+        let spec = WorkloadSpec { images_min: 3, images_max: 7, n_conversations: 50, ..Default::default() };
+        for c in generate(&spec) {
+            assert!((3..=7).contains(&c.images.len()));
+            assert!(!c.turns.is_empty());
+        }
+    }
+
+    #[test]
+    fn openers_differ_across_conversations() {
+        let spec = WorkloadSpec { n_conversations: 30, ..Default::default() };
+        let convs = generate(&spec);
+        let openings: std::collections::HashSet<String> = convs
+            .iter()
+            .map(|c| match &c.turns[0].segments[0] {
+                Segment::Text(s) => s.clone(),
+                _ => String::new(),
+            })
+            .collect();
+        // Different opening words are the property that defeats prefix caching.
+        assert!(openings.len() > 10, "got {} unique openings", openings.len());
+    }
+
+    #[test]
+    fn mmdu_images_are_stitched_contiguously() {
+        let spec = WorkloadSpec { dataset: Dataset::Mmdu, n_conversations: 5, ..Default::default() };
+        for c in generate(&spec) {
+            let segs = &c.turns[0].segments;
+            // text, then a contiguous run of images, then text.
+            let first_img = segs.iter().position(|s| matches!(s, Segment::Image(_))).unwrap();
+            let last_img = segs.iter().rposition(|s| matches!(s, Segment::Image(_))).unwrap();
+            for s in &segs[first_img..=last_img] {
+                assert!(matches!(s, Segment::Image(_)));
+            }
+        }
+    }
+
+    #[test]
+    fn sparkles_interleaves_at_word_level() {
+        let spec = WorkloadSpec { dataset: Dataset::Sparkles, images_min: 3, images_max: 3, n_conversations: 5, ..Default::default() };
+        for c in generate(&spec) {
+            let segs = &c.turns[0].segments;
+            // Between consecutive images there is a text segment.
+            let img_positions: Vec<usize> = segs
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| matches!(s, Segment::Image(_)))
+                .map(|(i, _)| i)
+                .collect();
+            for w in img_positions.windows(2) {
+                assert!(w[1] - w[0] >= 2, "images must be separated by text");
+            }
+        }
+    }
+
+    #[test]
+    fn turns_reuse_uploaded_images() {
+        let spec = WorkloadSpec { turns_per_conversation: 3, ..Default::default() };
+        for c in generate(&spec) {
+            for t in &c.turns {
+                for img in t.images() {
+                    assert!(c.images.contains(&img));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Request arrival traces: Poisson arrivals over a generated workload, with
+//! record/replay to JSON so serving experiments are exactly repeatable.
+
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+/// One request event in a trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Arrival time offset in milliseconds.
+    pub at_ms: u64,
+    /// Index into the workload's conversation list.
+    pub conversation: usize,
+    /// Which turn of that conversation arrives.
+    pub turn: usize,
+}
+
+/// A full arrival trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Poisson arrivals at `rate_per_s`, visiting every (conversation, turn)
+    /// pair in order of conversation but with exponential inter-arrival gaps.
+    pub fn poisson(n_conversations: usize, turns: usize, rate_per_s: f64, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let mut t_ms = 0.0f64;
+        let mut events = Vec::new();
+        for c in 0..n_conversations {
+            for turn in 0..turns {
+                let gap = -(1.0 - rng.f64()).ln() / rate_per_s; // Exp(rate)
+                t_ms += gap * 1000.0;
+                events.push(TraceEvent { at_ms: t_ms as u64, conversation: c, turn });
+            }
+        }
+        Trace { events }
+    }
+
+    /// Back-to-back arrivals (offline / sequential evaluation mode — the
+    /// paper's §6.2 setting).
+    pub fn sequential(n_conversations: usize, turns: usize) -> Trace {
+        let mut events = Vec::new();
+        for c in 0..n_conversations {
+            for turn in 0..turns {
+                events.push(TraceEvent { at_ms: 0, conversation: c, turn });
+            }
+        }
+        Trace { events }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::Arr(
+            self.events
+                .iter()
+                .map(|e| {
+                    Value::obj(vec![
+                        ("at_ms", Value::num(e.at_ms as f64)),
+                        ("conversation", Value::num(e.conversation as f64)),
+                        ("turn", Value::num(e.turn as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(v: &Value) -> crate::Result<Trace> {
+        let mut events = Vec::new();
+        for e in v.as_arr()? {
+            events.push(TraceEvent {
+                at_ms: e.get("at_ms")?.as_f64()? as u64,
+                conversation: e.get("conversation")?.as_usize()?,
+                turn: e.get("turn")?.as_usize()?,
+            });
+        }
+        Ok(Trace { events })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_monotone_and_deterministic() {
+        let a = Trace::poisson(5, 2, 10.0, 1);
+        let b = Trace::poisson(5, 2, 10.0, 1);
+        assert_eq!(a, b);
+        assert_eq!(a.events.len(), 10);
+        for w in a.events.windows(2) {
+            assert!(w[0].at_ms <= w[1].at_ms);
+        }
+    }
+
+    #[test]
+    fn rate_shapes_gaps() {
+        let fast = Trace::poisson(100, 1, 100.0, 2);
+        let slow = Trace::poisson(100, 1, 1.0, 2);
+        assert!(fast.events.last().unwrap().at_ms < slow.events.last().unwrap().at_ms);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = Trace::poisson(3, 2, 5.0, 3);
+        let v = t.to_json();
+        let back = Trace::from_json(&Value::parse(&v.encode()).unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn sequential_is_all_zero() {
+        let t = Trace::sequential(2, 2);
+        assert!(t.events.iter().all(|e| e.at_ms == 0));
+        assert_eq!(t.events.len(), 4);
+    }
+}

@@ -1,0 +1,226 @@
+//! Cross-module integration tests that do NOT need the PJRT runtime:
+//! workload → layout → selection → linker assembly → (synthetic) KV store
+//! round trips, failure injection, and multi-turn session growth.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mpic::coordinator::linker::{Linker, PAD_POS};
+use mpic::coordinator::selection::{plan, Policy};
+use mpic::kv::store::{KvStore, StoreConfig};
+use mpic::kv::{ImageKv, KvKey, KvShape, TransferEngine};
+use mpic::mm::{ImageId, LinkedLayout, Prompt, Tokenizer, UserId};
+use mpic::runtime::artifacts::{ModelMeta, WeightsMeta};
+use mpic::util::rng::Rng;
+use mpic::util::threadpool::ThreadPool;
+use mpic::workload::{generate, Dataset, WorkloadSpec};
+
+fn meta() -> ModelMeta {
+    ModelMeta {
+        name: "sim".into(),
+        d_model: 16,
+        n_layers: 3,
+        n_heads: 2,
+        d_head: 8,
+        d_ff: 32,
+        vocab: 4096,
+        img_tokens: 8,
+        patch_dim: 8,
+        rope_theta: 1e4,
+        sink_sigma: 3.0,
+        sink_tau: 8.0,
+        bos_bias: 2.0,
+        weights: WeightsMeta {
+            file: String::new(),
+            total_bytes: 0,
+            sha256: String::new(),
+            tensors: vec![],
+        },
+    }
+}
+
+fn synth_entry(meta: &ModelMeta, image: ImageId, seed: u64) -> ImageKv {
+    let shape = KvShape {
+        layers: meta.n_layers,
+        tokens: meta.img_tokens,
+        heads: meta.n_heads,
+        d_head: meta.d_head,
+        d_model: meta.d_model,
+    };
+    let mut rng = Rng::new(seed);
+    ImageKv {
+        key: KvKey::new(&meta.name, image),
+        shape,
+        emb: (0..shape.emb_elems()).map(|_| rng.normal() as f32).collect(),
+        k: (0..shape.kv_elems()).map(|_| rng.normal() as f32).collect(),
+        v: (0..shape.kv_elems()).map(|_| rng.normal() as f32).collect(),
+    }
+}
+
+/// Workload → layout → MPIC plan → linker assembly, for every generated
+/// conversation of both datasets: shapes, masks and padding must be
+/// mutually consistent.
+#[test]
+fn workload_to_linker_pipeline() {
+    let m = meta();
+    let tok = Tokenizer::new(m.vocab);
+    let linker = Linker::new(&m);
+    for dataset in [Dataset::Mmdu, Dataset::Sparkles] {
+        let spec = WorkloadSpec {
+            dataset,
+            n_conversations: 10,
+            turns_per_conversation: 2,
+            images_min: 1,
+            images_max: 4,
+            seed: 7,
+        };
+        for conv in generate(&spec) {
+            for turn in &conv.turns {
+                let layout = LinkedLayout::build(turn, &tok, m.img_tokens, "sys prompt");
+                let entries: Vec<ImageKv> = layout
+                    .image_spans
+                    .iter()
+                    .map(|&(id, _, _)| synth_entry(&m, id, id.0))
+                    .collect();
+                let refs: Vec<&ImageKv> = entries.iter().collect();
+                let bucket = layout.len().next_multiple_of(128);
+                let pl = plan(Policy::MpicK(4), &layout, &[]);
+                let (k, v) = linker.linked_cache(&layout, &refs, bucket).unwrap();
+                let n_bucket = pl.selected.len().next_multiple_of(32);
+                let si = linker.selective(&layout, &refs, &pl, k, v, bucket, n_bucket).unwrap();
+
+                // Invariants.
+                assert_eq!(si.n_selected, pl.selected.len());
+                let sel_pos = si.sel_pos.i32_data().unwrap();
+                let key_valid = si.key_valid.f32_data().unwrap();
+                let key_pos = si.key_pos.i32_data().unwrap();
+                for i in 0..layout.len() {
+                    assert_eq!(key_valid[i], 1.0);
+                    assert_eq!(key_pos[i], i as i32);
+                }
+                for i in layout.len()..bucket {
+                    assert_eq!(key_valid[i], 0.0);
+                    assert_eq!(key_pos[i], PAD_POS);
+                }
+                // Selected positions strictly increasing among real entries.
+                for w in sel_pos[..pl.selected.len()].windows(2) {
+                    assert!(w[0] < w[1]);
+                }
+            }
+        }
+    }
+}
+
+/// Linked-cache contents survive a store round trip through every tier.
+#[test]
+fn store_roundtrip_preserves_linker_output() {
+    let m = meta();
+    let dir = std::env::temp_dir().join(format!("mpic-int-roundtrip-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(
+        KvStore::new(StoreConfig {
+            disk_dir: dir,
+            ttl: Duration::from_secs(60),
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let entry = synth_entry(&m, ImageId(5), 55);
+    store.put(entry.clone()).unwrap();
+    let (got, _) = store.get(&entry.key).unwrap();
+    assert_eq!(got, entry);
+    // Evict then re-put.
+    store.evict(&entry.key);
+    assert!(store.get(&entry.key).is_none());
+    store.put(entry.clone()).unwrap();
+    let (got2, _) = store.get(&entry.key).unwrap();
+    assert_eq!(got2, entry);
+}
+
+/// Failure injection: expired TTL entries are recomputed by the transfer
+/// engine, not served stale.
+#[test]
+fn transfer_recovers_from_expiry() {
+    let m = meta();
+    let dir = std::env::temp_dir().join(format!("mpic-int-ttl-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(
+        KvStore::new(StoreConfig {
+            disk_dir: dir,
+            ttl: Duration::from_millis(1),
+            device_capacity: 1, // nothing stays resident
+            host_capacity: 1,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let pool = Arc::new(ThreadPool::new(2));
+    let engine = TransferEngine::new(pool);
+    let key = KvKey::new(&m.name, ImageId(9));
+    store.put(synth_entry(&m, ImageId(9), 9)).unwrap();
+    // LRU-pressure the entry fully out of both RAM tiers (capacities are
+    // 1 byte; the newest insert always displaces the older ones).
+    store.put(synth_entry(&m, ImageId(10), 10)).unwrap();
+    store.put(synth_entry(&m, ImageId(11), 11)).unwrap();
+    std::thread::sleep(Duration::from_millis(20));
+    let mut recomputed = 0;
+    let (out, _rep) = engine
+        .fetch(&store, std::slice::from_ref(&key), |k| {
+            recomputed += 1;
+            Ok(synth_entry(&m, k.image, k.image.0))
+        })
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    assert!(recomputed >= 1, "expired entry must be recomputed");
+}
+
+/// The two-step scatter path: text rows land exactly where the layout says.
+#[test]
+fn two_step_cache_assembly() {
+    let m = meta();
+    let tok = Tokenizer::new(m.vocab);
+    let p = Prompt::new(UserId(1))
+        .text("alpha beta gamma")
+        .image(ImageId(1))
+        .text("delta epsilon");
+    let layout = LinkedLayout::build(&p, &tok, m.img_tokens, "sys");
+    let entry = synth_entry(&m, ImageId(1), 11);
+    let refs = vec![&entry];
+    let linker = Linker::new(&m);
+    let bucket = 128;
+
+    let (mut k, _v) = linker.linked_cache(&layout, &refs, bucket).unwrap();
+    let (inputs, mapping) = linker.text_only_prefill(&layout, 128).unwrap();
+    // Simulate a packed text-prefill output with recognisable values.
+    let row = m.n_heads * m.d_head;
+    let packed: Vec<f32> = (0..m.n_layers * 128 * row).map(|i| 1000.0 + i as f32).collect();
+    linker.scatter_packed_rows(&mut k, bucket, &packed, 128, &mapping).unwrap();
+
+    for (packed_idx, &slot) in mapping.iter().enumerate() {
+        assert_eq!(k[slot * row], 1000.0 + (packed_idx * row) as f32);
+    }
+    let (_, lo, _) = layout.image_spans[0];
+    assert_eq!(k[lo * row], entry.k[0]);
+    let pos = inputs.positions.i32_data().unwrap();
+    assert_eq!(pos[0], mapping[0] as i32);
+}
+
+/// Multi-turn sessions grow the layout monotonically and reuse image ids.
+#[test]
+fn session_layout_growth() {
+    let m = meta();
+    let tok = Tokenizer::new(m.vocab);
+    let mut store = mpic::coordinator::session::SessionStore::new();
+    let user = UserId(3);
+    let t1 = Prompt::new(user).text("first look at").image(ImageId(1));
+    let full1 = store.session(user).user_turn(user, &t1);
+    let l1 = LinkedLayout::build(&full1, &tok, m.img_tokens, "sys");
+    store.session(user).assistant_reply(&[11, 12, 13]);
+    let t2 = Prompt::new(user).text("now compare with").image(ImageId(2));
+    let full2 = store.session(user).user_turn(user, &t2);
+    let l2 = LinkedLayout::build(&full2, &tok, m.img_tokens, "sys");
+    assert!(l2.len() > l1.len());
+    assert_eq!(l2.image_spans.len(), 2);
+    assert_eq!(l2.image_spans[0].0, ImageId(1));
+    assert_eq!(l2.image_spans[1].0, ImageId(2));
+}

@@ -1,0 +1,259 @@
+//! Property-based tests on coordinator invariants (routing, batching,
+//! selection, linker state) using the in-tree prop harness.
+
+use mpic::coordinator::linker::Linker;
+use mpic::coordinator::selection::{plan, Policy};
+use mpic::kv::{ImageKv, KvKey, KvShape};
+use mpic::mm::{ImageId, LinkedLayout, Prompt, Tokenizer, UserId};
+use mpic::runtime::artifacts::{ModelMeta, WeightsMeta};
+use mpic::util::prop;
+use mpic::util::rng::Rng;
+
+fn meta() -> ModelMeta {
+    ModelMeta {
+        name: "sim".into(),
+        d_model: 8,
+        n_layers: 2,
+        n_heads: 2,
+        d_head: 4,
+        d_ff: 16,
+        vocab: 4096,
+        img_tokens: 8,
+        patch_dim: 8,
+        rope_theta: 1e4,
+        sink_sigma: 3.0,
+        sink_tau: 8.0,
+        bos_bias: 2.0,
+        weights: WeightsMeta {
+            file: String::new(),
+            total_bytes: 0,
+            sha256: String::new(),
+            tensors: vec![],
+        },
+    }
+}
+
+fn random_prompt(rng: &mut Rng) -> Prompt {
+    let mut p = Prompt::new(UserId(1)).text("start of the request words here");
+    let n_seg = 1 + rng.below(5);
+    for i in 0..n_seg {
+        if rng.bool(0.5) {
+            p = p.image(ImageId(100 + i));
+        } else {
+            let words = 1 + rng.below(8);
+            let text: Vec<String> = (0..words).map(|w| format!("w{}", rng.below(50 + w))).collect();
+            p = p.text(&text.join(" "));
+        }
+    }
+    p.text("final question mark")
+}
+
+fn entry_for(meta: &ModelMeta, id: ImageId) -> ImageKv {
+    let shape = KvShape {
+        layers: meta.n_layers,
+        tokens: meta.img_tokens,
+        heads: meta.n_heads,
+        d_head: meta.d_head,
+        d_model: meta.d_model,
+    };
+    let mut rng = Rng::new(id.0);
+    ImageKv {
+        key: KvKey::new(&meta.name, id),
+        shape,
+        emb: (0..shape.emb_elems()).map(|_| rng.f32()).collect(),
+        k: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
+        v: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
+    }
+}
+
+/// MPIC selection is deterministic, sorted, covers text ∪ image-heads, and
+/// always includes the final token.
+#[test]
+fn prop_mpic_selection_invariants() {
+    let m = meta();
+    let tok = Tokenizer::new(m.vocab);
+    prop::check(
+        "mpic-selection-invariants",
+        60,
+        |rng| (random_prompt(rng), rng.below(12) as usize),
+        |(prompt, k)| {
+            let layout = LinkedLayout::build(prompt, &tok, m.img_tokens, "sys");
+            let a = plan(Policy::MpicK(*k), &layout, &[]);
+            let b = plan(Policy::MpicK(*k), &layout, &[]);
+            if a.selected != b.selected {
+                return Err("selection not deterministic".into());
+            }
+            if a.selected.windows(2).any(|w| w[0] >= w[1]) {
+                return Err("selection not strictly sorted".into());
+            }
+            if *a.selected.last().unwrap() != layout.len() - 1 {
+                return Err("final token not selected".into());
+            }
+            for &i in &layout.text_indices() {
+                if !a.selected.contains(&i) {
+                    return Err(format!("text token {i} not selected"));
+                }
+            }
+            // Budget: |selected| <= text + k * n_images (+1 for last token).
+            let bound = layout.text_len() + k * layout.image_spans.len() + 1;
+            if a.selected.len() > bound {
+                return Err(format!("selection {} exceeds bound {bound}", a.selected.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The linked cache contains exactly the stored rows at image slots and
+/// zeros elsewhere, for random prompts.
+#[test]
+fn prop_linked_cache_placement() {
+    let m = meta();
+    let tok = Tokenizer::new(m.vocab);
+    let linker = Linker::new(&m);
+    prop::check(
+        "linked-cache-placement",
+        40,
+        |rng| random_prompt(rng),
+        |prompt| {
+            let layout = LinkedLayout::build(prompt, &tok, m.img_tokens, "sys");
+            let entries: Vec<ImageKv> =
+                layout.image_spans.iter().map(|&(id, _, _)| entry_for(&m, id)).collect();
+            let refs: Vec<&ImageKv> = entries.iter().collect();
+            let bucket = layout.len().next_multiple_of(128);
+            let (k, _) = linker.linked_cache(&layout, &refs, bucket).map_err(|e| e.to_string())?;
+            let row = m.n_heads * m.d_head;
+            let img_slots: std::collections::HashSet<usize> =
+                layout.image_indices().into_iter().collect();
+            for layer in 0..m.n_layers {
+                for slot in 0..bucket {
+                    let base = layer * bucket * row + slot * row;
+                    let nonzero = k[base..base + row].iter().any(|&x| x != 0.0);
+                    if img_slots.contains(&slot) {
+                        if !nonzero {
+                            return Err(format!("image slot {slot} layer {layer} is zero"));
+                        }
+                    } else if nonzero {
+                        return Err(format!("non-image slot {slot} layer {layer} not zero"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// CacheBlend's budget: the number of recomputed image tokens equals
+/// ceil(r% · n_image_tokens), regardless of the deviation values.
+#[test]
+fn prop_cacheblend_budget() {
+    let m = meta();
+    let tok = Tokenizer::new(m.vocab);
+    prop::check(
+        "cacheblend-budget",
+        40,
+        |rng| {
+            let prompt = random_prompt(rng);
+            let r = 1.0 + rng.f64() * 50.0;
+            (prompt, r, rng.next_u64())
+        },
+        |(prompt, r, seed)| {
+            let layout = LinkedLayout::build(prompt, &tok, m.img_tokens, "sys");
+            let mut rng = Rng::new(*seed);
+            let dev: Vec<f32> = (0..layout.len()).map(|_| rng.f32()).collect();
+            let pl = plan(Policy::CacheBlend(*r), &layout, &dev);
+            let n_img = layout.image_indices().len();
+            let expect = ((r / 100.0) * n_img as f64).ceil() as usize;
+            let img_selected =
+                pl.selected.iter().filter(|&&i| i != layout.len() - 1).count();
+            // The last token may or may not be an image token; allow ±1.
+            if img_selected.abs_diff(expect) > 1 {
+                return Err(format!("selected {img_selected} image tokens, expected ~{expect}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Tokenizer × layout: token count is invariant under re-tokenization and
+/// image spans tile exactly.
+#[test]
+fn prop_layout_structure() {
+    let m = meta();
+    let tok = Tokenizer::new(m.vocab);
+    prop::check(
+        "layout-structure",
+        60,
+        |rng| random_prompt(rng),
+        |prompt| {
+            let a = LinkedLayout::build(prompt, &tok, m.img_tokens, "sys");
+            let b = LinkedLayout::build(prompt, &tok, m.img_tokens, "sys");
+            if a.len() != b.len() {
+                return Err("layout not deterministic".into());
+            }
+            let mut covered = vec![false; a.len()];
+            for &(_, lo, hi) in &a.image_spans {
+                if hi - lo != m.img_tokens {
+                    return Err("span length != img_tokens".into());
+                }
+                for slot in lo..hi {
+                    if covered[slot] {
+                        return Err("overlapping image spans".into());
+                    }
+                    covered[slot] = true;
+                }
+            }
+            let text = a.text_indices().len();
+            let img: usize = a.image_spans.len() * m.img_tokens;
+            if text + img != a.len() {
+                return Err("text+image != total".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Quality scorer properties: exactness ⇒ 10; score monotone in agreement.
+#[test]
+fn prop_scorer_monotonicity() {
+    prop::check(
+        "scorer-monotone",
+        50,
+        |rng| {
+            let n = 8;
+            let logits: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect();
+            let tokens: Vec<i32> = (0..n).map(|_| rng.below(100) as i32).collect();
+            let flips = rng.below(n as u64 + 1) as usize;
+            (logits, tokens, flips)
+        },
+        |(logits, tokens, flips)| {
+            use mpic::coordinator::engine::{InferenceResult, TtftBreakdown};
+            use mpic::kv::TransferReport;
+            let mk = |toks: Vec<i32>| InferenceResult {
+                policy: "x".into(),
+                tokens: toks,
+                first_logits: logits.clone(),
+                ttft: TtftBreakdown::default(),
+                transfer: TransferReport::default(),
+                decode_s: 0.0,
+                seq_len: 1,
+                n_selected: 1,
+                s_bucket: 128,
+            };
+            let reference = mk(tokens.clone());
+            let mut worse = tokens.clone();
+            for f in worse.iter_mut().take(*flips) {
+                *f += 1000;
+            }
+            let s_exact = mpic::quality::score(&reference, &mk(tokens.clone()));
+            let s_worse = mpic::quality::score(&reference, &mk(worse));
+            if (s_exact.score - 10.0).abs() > 1e-9 {
+                return Err("exact must score 10".into());
+            }
+            if s_worse.score > s_exact.score + 1e-9 {
+                return Err("more flips must not raise the score".into());
+            }
+            Ok(())
+        },
+    );
+}

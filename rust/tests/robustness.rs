@@ -1,0 +1,217 @@
+//! Robustness & failure-path coverage: configuration errors, capacity
+//! overflows, malformed inputs, and randomized substrate fuzzing.
+
+use mpic::coordinator::{Engine, EngineConfig, Policy};
+use mpic::mm::{ImageId, Prompt, Tokenizer, UserId};
+use mpic::util::json::Value;
+use mpic::util::prop;
+use mpic::util::rng::Rng;
+use mpic::util::stats::{ecdf, Samples};
+
+// ---------------------------------------------------------------------
+// Substrate fuzzing (no PJRT needed)
+// ---------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Value {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Value::Null,
+        1 => Value::Bool(rng.bool(0.5)),
+        2 => Value::Num((rng.next_u64() % 100_000) as f64 / 8.0),
+        3 => {
+            let n = rng.below(12) as usize;
+            let s: String = (0..n)
+                .map(|_| {
+                    let c = rng.below(128) as u8;
+                    if c.is_ascii_graphic() || c == b' ' { c as char } else { 'x' }
+                })
+                .collect();
+            Value::str(s)
+        }
+        4 => Value::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Value::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    prop::check(
+        "json-roundtrip-fuzz",
+        200,
+        |rng| random_json(rng, 3),
+        |v| {
+            let text = v.encode();
+            let back = Value::parse(&text).map_err(|e| format!("parse: {e}"))?;
+            if &back != v {
+                return Err(format!("roundtrip mismatch: {text}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn json_rejects_malformed_inputs() {
+    for bad in [
+        "", "{", "}", "[1,2", "{\"a\":}", "{\"a\" 1}", "tru", "nul", "\"\\q\"",
+        "[1,,2]", "{\"a\":1,}", "--3", "1e", "\u{0}",
+    ] {
+        assert!(Value::parse(bad).is_err(), "should reject {bad:?}");
+    }
+}
+
+#[test]
+fn prop_stats_percentile_bounds() {
+    prop::check(
+        "stats-percentile-bounds",
+        100,
+        |rng| {
+            let n = 1 + rng.below(200) as usize;
+            (0..n).map(|_| rng.normal() * 10.0).collect::<Vec<f64>>()
+        },
+        |xs| {
+            let mut s = Samples::new();
+            for &x in xs {
+                s.push(x);
+            }
+            let (mn, mx) = (s.min(), s.max());
+            for p in [0.0, 25.0, 50.0, 95.0, 100.0] {
+                let v = s.percentile(p);
+                if v < mn - 1e-9 || v > mx + 1e-9 {
+                    return Err(format!("p{p} = {v} outside [{mn}, {mx}]"));
+                }
+            }
+            if s.percentile(25.0) > s.percentile(75.0) {
+                return Err("percentiles not monotone".into());
+            }
+            let cdf = ecdf(xs);
+            if cdf.last().map(|&(_, f)| f) != Some(1.0) {
+                return Err("ecdf must end at 1".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tokenizer_stability() {
+    let tok = Tokenizer::new(4096);
+    prop::check(
+        "tokenizer-stability",
+        100,
+        |rng| {
+            let n = rng.below(20) as usize;
+            (0..n)
+                .map(|_| format!("w{}", rng.below(1000)))
+                .collect::<Vec<String>>()
+                .join(" ")
+        },
+        |text| {
+            let a = tok.encode(text);
+            let b = tok.encode(text);
+            if a != b {
+                return Err("tokenizer not deterministic".into());
+            }
+            for &id in &a {
+                if !(10..4096).contains(&id) {
+                    return Err(format!("id {id} out of range"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Engine error paths (need artifacts)
+// ---------------------------------------------------------------------
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn engine_error_paths() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    }
+
+    // Unknown model name fails fast with a clear message.
+    let err = match Engine::new(EngineConfig {
+        model: "no-such-model".into(),
+        ..Default::default()
+    }) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("unknown model must fail"),
+    };
+    assert!(err.contains("no-such-model"), "{err}");
+
+    // Missing artifact dir fails fast.
+    assert!(Engine::new(EngineConfig {
+        artifact_dir: "/definitely/not/here".into(),
+        ..Default::default()
+    })
+    .is_err());
+
+    let dir = std::env::temp_dir().join(format!("mpic-robust-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let engine = Engine::new(EngineConfig {
+        model: "mpic-sim-a".into(),
+        store: mpic::kv::StoreConfig { disk_dir: dir, ..Default::default() },
+        enforce_ownership: true,
+        user_quota: 2,
+        ..Default::default()
+    })
+    .unwrap();
+
+    // Ownership enforcement: un-owned image is rejected.
+    let foreign = Prompt::new(UserId(1)).text("look at").image(ImageId(999)).text("now");
+    let err = engine.infer(&foreign, Policy::MpicK(8), 2).unwrap_err().to_string();
+    assert!(err.contains("does not own"), "{err}");
+
+    // Quota enforcement.
+    engine.upload_image(UserId(1), "IMAGE#Q1").unwrap();
+    engine.upload_image(UserId(1), "IMAGE#Q2").unwrap();
+    let err = engine.upload_image(UserId(1), "IMAGE#Q3").unwrap_err().to_string();
+    assert!(err.contains("quota"), "{err}");
+
+    // Prompt exceeding the largest bucket is rejected cleanly.
+    let mut huge = Prompt::new(UserId(1)).text("start");
+    for i in 0..40 {
+        // 40 images x 64 tokens > 2048-token bucket
+        let h = format!("IMAGE#H{i}");
+        let _ = engine.static_lib.register(UserId(2), &h, ImageId(5000 + i));
+        huge = huge.image(ImageId(5000 + i));
+    }
+    let mut cfg2 = engine.config().clone();
+    cfg2.enforce_ownership = false;
+    drop(engine);
+    let engine2 = Engine::new(cfg2).unwrap();
+    let err = engine2.infer(&huge, Policy::Prefix, 2).unwrap_err().to_string();
+    assert!(
+        err.contains("bucket") || err.contains("exceeds"),
+        "oversized prompt must fail cleanly: {err}"
+    );
+
+    // Full reuse requires the prompt to end with text.
+    engine2.upload_image(UserId(3), "IMAGE#END").unwrap();
+    let img_end = Prompt::new(UserId(3)).text("describe").image(ImageId::from_handle("IMAGE#END"));
+    let err = engine2.infer(&img_end, Policy::FullReuse, 2).unwrap_err().to_string();
+    assert!(err.contains("end with text"), "{err}");
+
+    // MPIC with an enormous k still works (degenerates to exact).
+    let ok = engine2
+        .infer(
+            &Prompt::new(UserId(3)).text("describe").image(ImageId::from_handle("IMAGE#END")).text("now"),
+            Policy::MpicK(10_000),
+            2,
+        )
+        .unwrap();
+    assert_eq!(ok.tokens.len(), 2);
+
+    println!("OK engine error paths");
+}

@@ -1,0 +1,211 @@
+//! Runtime end-to-end tests: execute the real AOT artifacts through PJRT.
+//!
+//! These are the cross-language correctness checks: the Rust linker +
+//! runtime must reproduce the algebraic identities pytest established for
+//! the JAX model (selective(all)==full, stored image KV == prefix prefill,
+//! stale reuse diverges).
+//!
+//! PJRT handles are thread-bound (`Rc`), so everything runs inside ONE
+//! test function, sequentially. Skips (with a message) when `artifacts/`
+//! has not been built.
+
+use mpic::coordinator::{Engine, EngineConfig, Policy};
+use mpic::kv::KvKey;
+use mpic::mm::{ImageId, Prompt, UserId};
+use mpic::quality;
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn test_engine(model: &str) -> Engine {
+    let dir = std::env::temp_dir().join(format!("mpic-e2e-{}-{model}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = EngineConfig {
+        model: model.into(),
+        store: mpic::kv::StoreConfig { disk_dir: dir, ..Default::default() },
+        max_new_tokens: 8,
+        ..Default::default()
+    };
+    Engine::new(cfg).expect("engine (artifacts built?)")
+}
+
+#[test]
+fn runtime_end_to_end() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let engine = test_engine("mpic-sim-a");
+
+    check_encode_deterministic(&engine);
+    check_upload_and_store(&engine);
+    check_prefix_inference(&engine);
+    check_mpic_full_selection_is_exact(&engine);
+    check_full_reuse_diverges_but_mpic_recovers(&engine);
+    check_two_step_overhead_visible(&engine);
+    check_multi_image_scaling(&engine);
+    check_mrag_path(&engine);
+    check_debug_attention_sinks(&engine);
+}
+
+fn two_image_prompt(user: UserId) -> Prompt {
+    Prompt::new(user)
+        .text("my partner and I took these photos near the river")
+        .image(ImageId::from_handle("IMAGE#EIFFEL2025"))
+        .image(ImageId::from_handle("IMAGE#LOUVRE2025"))
+        .text("please describe the landmarks and compare them in detail for our travel notes")
+}
+
+fn check_encode_deterministic(engine: &Engine) {
+    let a = engine.encode_image(ImageId(77)).unwrap();
+    let b = engine.encode_image(ImageId(77)).unwrap();
+    assert_eq!(a, b, "encode_image_kv must be deterministic");
+    let c = engine.encode_image(ImageId(78)).unwrap();
+    assert_ne!(a.k, c.k, "different images must encode differently");
+    println!("OK encode_deterministic");
+}
+
+fn check_upload_and_store(engine: &Engine) {
+    let user = UserId(1);
+    let img = engine.upload_image(user, "IMAGE#EIFFEL2025").unwrap();
+    engine.upload_image(user, "IMAGE#LOUVRE2025").unwrap();
+    assert!(engine.static_lib.owns(user, img));
+    let key = KvKey::new(&engine.meta().name, img);
+    assert!(engine.store().contains(&key));
+    // Disk write-through happened.
+    let (_, _, disk_entries) = engine.store().residency();
+    assert!(disk_entries >= 2);
+    println!("OK upload_and_store");
+}
+
+fn check_prefix_inference(engine: &Engine) {
+    let r = engine.infer(&two_image_prompt(UserId(1)), Policy::Prefix, 8).unwrap();
+    assert_eq!(r.tokens.len(), 8);
+    assert!(r.first_logits.len() == engine.meta().vocab);
+    assert!(r.first_logits.iter().all(|x| x.is_finite()));
+    assert!(r.ttft.total_s > 0.0);
+    assert_eq!(r.ttft.steps, 1);
+    println!("OK prefix_inference: ttft={:.1}ms", r.ttft.total_s * 1e3);
+}
+
+/// MPIC-k with k >= img_tokens recomputes *every* token → must equal the
+/// exact prefix output up to float tolerance.
+fn check_mpic_full_selection_is_exact(engine: &Engine) {
+    let prompt = two_image_prompt(UserId(1));
+    let reference = engine.infer(&prompt, Policy::Prefix, 8).unwrap();
+    let k_all = engine.meta().img_tokens; // selects all image tokens
+    let candidate = engine.infer(&prompt, Policy::MpicK(k_all), 8).unwrap();
+    let s = quality::score(&reference, &candidate);
+    assert!(
+        s.kl_first < 1e-3,
+        "MPIC with full selection must match exact output, KL={}",
+        s.kl_first
+    );
+    assert_eq!(reference.tokens, candidate.tokens, "greedy tokens must agree");
+    assert!(s.score > 9.9);
+    println!("OK mpic_full_selection_is_exact: KL={:.2e}", s.kl_first);
+}
+
+fn check_full_reuse_diverges_but_mpic_recovers(engine: &Engine) {
+    let prompt = two_image_prompt(UserId(1));
+    let reference = engine.infer(&prompt, Policy::Prefix, 8).unwrap();
+    let full_reuse = engine.infer(&prompt, Policy::FullReuse, 8).unwrap();
+    let mpic32 = engine.infer(&prompt, Policy::MpicK(32), 8).unwrap();
+
+    let s_fr = quality::score(&reference, &full_reuse);
+    let s_mp = quality::score(&reference, &mpic32);
+    assert!(
+        s_fr.kl_first > 1e-4,
+        "full reuse must diverge from the exact output (KL={})",
+        s_fr.kl_first
+    );
+    assert!(
+        s_mp.kl_first < s_fr.kl_first,
+        "MPIC-32 (KL={}) must be closer to exact than full reuse (KL={})",
+        s_mp.kl_first,
+        s_fr.kl_first
+    );
+    println!(
+        "OK divergence ordering: full_reuse KL={:.3e} > mpic-32 KL={:.3e}",
+        s_fr.kl_first, s_mp.kl_first
+    );
+}
+
+/// Step-count honesty: full-reuse = 2 engine calls, MPIC = 1, CacheBlend = 3.
+fn check_two_step_overhead_visible(engine: &Engine) {
+    let prompt = two_image_prompt(UserId(1));
+    let fr = engine.infer(&prompt, Policy::FullReuse, 2).unwrap();
+    let mp = engine.infer(&prompt, Policy::MpicK(32), 2).unwrap();
+    let cb = engine.infer(&prompt, Policy::CacheBlend(15.0), 2).unwrap();
+    assert_eq!(fr.ttft.steps, 2);
+    assert_eq!(mp.ttft.steps, 1);
+    assert_eq!(cb.ttft.steps, 3);
+    println!("OK step counts: full-reuse=2 mpic=1 cacheblend=3");
+}
+
+fn check_multi_image_scaling(engine: &Engine) {
+    // 6 images: selective bucket must still resolve, outputs finite.
+    let user = UserId(2);
+    let mut prompt = Prompt::new(user).text("compare all of these scenes");
+    for i in 0..6 {
+        let handle = format!("IMAGE#SCALE{i}");
+        engine.upload_image(user, &handle).unwrap();
+        prompt = prompt.image(ImageId::from_handle(&handle));
+    }
+    prompt = prompt.text("which is the most interesting and why");
+    let r = engine.infer(&prompt, Policy::MpicK(8), 4).unwrap();
+    assert!(r.seq_len > 6 * engine.meta().img_tokens);
+    assert!(r.first_logits.iter().all(|x| x.is_finite()));
+    println!("OK multi_image_scaling: seq_len={} bucket={}", r.seq_len, r.s_bucket);
+}
+
+fn check_mrag_path(engine: &Engine) {
+    engine.add_reference("IMAGE#HOTEL01", "hotel lobby near the eiffel tower in paris").unwrap();
+    engine.add_reference("IMAGE#HOTEL02", "budget hostel by the louvre museum").unwrap();
+    engine.add_reference("IMAGE#BIKE01", "dirt bike race in the desert").unwrap();
+    let prompt = Prompt::new(UserId(1)).text("recommend hotels near the eiffel tower please");
+    let (augmented, ids) = engine.mrag_augment(&prompt, 2).unwrap();
+    assert_eq!(ids.len(), 2);
+    assert!(ids.contains(&ImageId::from_handle("IMAGE#HOTEL01")));
+    let r = engine.infer(&augmented, Policy::MpicK(16), 4).unwrap();
+    assert!(r.first_logits.iter().all(|x| x.is_finite()));
+    println!("OK mrag_path: retrieved {ids:?}");
+}
+
+/// Insight 2 must hold through the full Rust→PJRT path: early image tokens
+/// receive the bulk of the last query's attention mass.
+fn check_debug_attention_sinks(engine: &Engine) {
+    let (layout, attn_last, attn_l0) =
+        engine.debug_attention(&two_image_prompt(UserId(1))).unwrap();
+    let meta = engine.meta();
+    let data = attn_last.f32_data().unwrap();
+    let s = data.len() / (meta.n_layers * meta.n_heads);
+    let t = meta.img_tokens;
+    let (_, lo, hi) = layout.image_spans[0];
+    let mut head_mass = 0f64;
+    let mut tail_mass = 0f64;
+    for l in 0..meta.n_layers {
+        for h in 0..meta.n_heads {
+            let base = (l * meta.n_heads + h) * s;
+            for i in lo..hi {
+                let m = data[base + i] as f64;
+                if i < lo + t / 4 {
+                    head_mass += m;
+                } else {
+                    tail_mass += m;
+                }
+            }
+        }
+    }
+    assert!(
+        head_mass > tail_mass,
+        "first quarter of image tokens must dominate attention: head={head_mass} tail={tail_mass}"
+    );
+    // The layer-0 full matrix is a proper distribution per (valid) row.
+    let l0 = attn_l0.f32_data().unwrap();
+    let last_row = layout.len() - 1;
+    let row: f32 = l0[last_row * s..(last_row + 1) * s].iter().sum();
+    assert!((row - 1.0).abs() < 1e-3, "attention row sums to {row}");
+    println!("OK debug_attention_sinks: head={head_mass:.3} tail={tail_mass:.3}");
+}

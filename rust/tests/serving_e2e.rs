@@ -1,0 +1,164 @@
+//! Serving end-to-end: scheduler (continuous batching) and the TCP server
+//! over the real engine + artifacts. Skips when artifacts are not built.
+
+use mpic::coordinator::scheduler::{Request, Scheduler};
+use mpic::coordinator::{Engine, EngineConfig, Policy};
+use mpic::util::json::Value;
+use mpic::workload::{generate, Dataset, WorkloadSpec};
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn test_engine(tag: &str) -> Engine {
+    let dir = std::env::temp_dir().join(format!("mpic-serve-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    Engine::new(EngineConfig {
+        model: "mpic-sim-a".into(),
+        store: mpic::kv::StoreConfig { disk_dir: dir, ..Default::default() },
+        max_new_tokens: 4,
+        ..Default::default()
+    })
+    .expect("engine")
+}
+
+#[test]
+fn serving_end_to_end() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    scheduler_continuous_batching();
+    tcp_server_roundtrip();
+}
+
+fn scheduler_continuous_batching() {
+    let engine = test_engine("sched");
+    let spec = WorkloadSpec {
+        dataset: Dataset::Mmdu,
+        n_conversations: 4,
+        turns_per_conversation: 1,
+        images_min: 1,
+        images_max: 2,
+        seed: 99,
+    };
+    let convs = generate(&spec);
+    for c in &convs {
+        for img in &c.images {
+            let kv = engine.encode_image(*img).unwrap();
+            engine.store().put(kv).unwrap();
+        }
+    }
+    let mut sched = Scheduler::new(2048, 16);
+    for (i, c) in convs.iter().enumerate() {
+        sched.submit(Request {
+            id: i as u64,
+            prompt: c.turns[0].clone(),
+            policy: Policy::MpicK(16),
+            max_new: 4,
+        });
+    }
+    let completions = sched.run_to_completion(&engine).unwrap();
+    assert_eq!(completions.len(), 4);
+    assert_eq!(sched.stats.completed, 4);
+    assert_eq!(sched.stats.rejected, 0);
+    // Requests were interleaved: at some point more than one was active.
+    assert!(
+        sched.stats.max_active > 1,
+        "continuous batching should interleave (max_active={})",
+        sched.stats.max_active
+    );
+    // Block pool drained back to empty.
+    assert_eq!(sched.block_utilization(), 0.0);
+    for c in &completions {
+        assert_eq!(c.result.tokens.len(), 4);
+    }
+    println!(
+        "OK scheduler: mean_occupancy={:.2} max_active={}",
+        sched.stats.mean_occupancy(),
+        sched.stats.max_active
+    );
+}
+
+fn tcp_server_roundtrip() {
+    let engine = test_engine("tcp");
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+
+    // Client thread drives the protocol; server runs on this thread
+    // (it owns the PJRT handles).
+    let client = std::thread::spawn(move || {
+        let addr = addr_rx.recv().unwrap();
+        let mut c = mpic::server::Client::connect(addr).unwrap();
+
+        let pong = c.call(&Value::parse(r#"{"op":"ping"}"#).unwrap()).unwrap();
+        assert!(pong.get("ok").unwrap().as_bool().unwrap());
+
+        let up = c
+            .call(&Value::parse(r#"{"op":"upload","user":1,"handle":"IMAGE#TCP1"}"#).unwrap())
+            .unwrap();
+        assert!(up.get("ok").unwrap().as_bool().unwrap(), "{}", up.encode());
+
+        let inf = c
+            .call(
+                &Value::parse(
+                    r#"{"op":"infer","user":1,"policy":"mpic-16","max_new":2,
+                        "text":"Describe IMAGE#TCP1 in detail please"}"#,
+                )
+                .unwrap(),
+            )
+            .unwrap();
+        assert!(inf.get("ok").unwrap().as_bool().unwrap(), "{}", inf.encode());
+        assert_eq!(inf.get("steps").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(inf.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+
+        // Malformed input yields an error object, not a hang.
+        let bad = c.call(&Value::parse(r#"{"op":"nope"}"#).unwrap()).unwrap();
+        assert!(!bad.get("ok").unwrap().as_bool().unwrap());
+
+        // Multi-turn chat keeps session state: turn numbers advance and
+        // the second turn reuses the first turn's image from the cache.
+        let t1 = c
+            .call(
+                &Value::parse(
+                    r#"{"op":"chat","user":9,"policy":"mpic-16","max_new":2,
+                        "text":"Look at IMAGE#TCP1 and describe it"}"#,
+                )
+                .unwrap(),
+            )
+            .unwrap();
+        assert!(t1.get("ok").unwrap().as_bool().unwrap(), "{}", t1.encode());
+        assert_eq!(t1.get("turn").unwrap().as_f64().unwrap(), 1.0);
+        let t2 = c
+            .call(
+                &Value::parse(
+                    r#"{"op":"chat","user":9,"policy":"mpic-16","max_new":2,
+                        "text":"Now summarise what you said about it"}"#,
+                )
+                .unwrap(),
+            )
+            .unwrap();
+        assert_eq!(t2.get("turn").unwrap().as_f64().unwrap(), 2.0);
+        assert!(
+            t2.get("seq_len").unwrap().as_f64().unwrap()
+                > t1.get("seq_len").unwrap().as_f64().unwrap(),
+            "history must grow"
+        );
+        assert!(t2.get("device_hits").unwrap().as_f64().unwrap() >= 1.0);
+        let reset = c.call(&Value::parse(r#"{"op":"reset","user":9}"#).unwrap()).unwrap();
+        assert!(reset.get("ok").unwrap().as_bool().unwrap());
+
+        let stats = c.call(&Value::parse(r#"{"op":"stats"}"#).unwrap()).unwrap();
+        let reqs = stats.get("metrics").unwrap().get("requests").unwrap().as_f64().unwrap();
+        assert!(reqs >= 1.0);
+
+        let bye = c.call(&Value::parse(r#"{"op":"shutdown"}"#).unwrap()).unwrap();
+        assert!(bye.get("ok").unwrap().as_bool().unwrap());
+    });
+
+    mpic::server::serve(&engine, "127.0.0.1:0", |a| {
+        addr_tx.send(a).unwrap();
+    })
+    .unwrap();
+    client.join().unwrap();
+    println!("OK tcp server roundtrip");
+}
