@@ -1,0 +1,83 @@
+//! Tour of the v2 serving API over live TCP: versioned envelopes with
+//! request-id echo, cache-management ops over the Static Library's tiered
+//! residency, session introspection, and streaming decode.
+//!
+//! ```sh
+//! cargo run --release --example v2_api_tour
+//! ```
+
+use mpic::harness;
+use mpic::server::Client;
+use mpic::util::json::Value;
+
+fn req(s: &str) -> Value {
+    Value::parse(s).expect("request literal")
+}
+
+fn main() -> mpic::Result<()> {
+    mpic::util::logging::init();
+    if !harness::artifacts_ready() {
+        return Ok(());
+    }
+    let engine = harness::experiment_engine("mpic-sim-a", "v2-tour")?;
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+
+    // The engine loop owns this thread (PJRT); the tour drives it from a
+    // client thread, exactly like an external caller would.
+    let tour = std::thread::spawn(move || -> mpic::Result<()> {
+        let addr = addr_rx.recv().expect("server address");
+        let mut c = Client::connect(addr)?;
+
+        println!("== upload (v2 envelope, id echo) ==");
+        let up = c.call(&req(
+            r#"{"v":2,"id":"up-1","op":"upload","user":7,"handle":"IMAGE#EIFFEL2025"}"#,
+        ))?;
+        println!("  {}", up.encode());
+
+        println!("== cache.list / cache.stat: tier residency ==");
+        let list = c.call(&req(r#"{"v":2,"id":"ls-1","op":"cache.list"}"#))?;
+        println!("  {}", list.encode());
+        let stat =
+            c.call(&req(r#"{"v":2,"op":"cache.stat","handle":"IMAGE#EIFFEL2025"}"#))?;
+        println!("  {}", stat.encode());
+
+        println!("== cache.pin protects the entry; evict is refused ==");
+        let pin = c.call(&req(r#"{"v":2,"op":"cache.pin","handle":"IMAGE#EIFFEL2025"}"#))?;
+        println!("  {}", pin.encode());
+        let refused =
+            c.call(&req(r#"{"v":2,"op":"cache.evict","handle":"IMAGE#EIFFEL2025"}"#))?;
+        println!("  {} (code={})", refused.encode(), refused.get("code")?.as_str()?);
+
+        println!("== streaming decode: one line per token ==");
+        let fin = c.call_stream(
+            &req(
+                r#"{"v":2,"id":"gen-1","op":"infer","user":7,"policy":"mpic-32","max_new":6,
+                    "stream":true,"text":"Describe IMAGE#EIFFEL2025 in detail please"}"#,
+            ),
+            |chunk| println!("  chunk {}", chunk.encode()),
+        )?;
+        println!("  final {}", fin.encode());
+
+        println!("== sessions: chat then introspect ==");
+        let t1 = c.call(&req(
+            r#"{"v":2,"op":"chat","user":7,"max_new":4,"text":"And what about IMAGE#EIFFEL2025?"}"#,
+        ))?;
+        println!("  turn={}", t1.get("turn")?.as_f64()?);
+        let sessions = c.call(&req(r#"{"v":2,"op":"session.list"}"#))?;
+        println!("  {}", sessions.encode());
+
+        println!("== per-op metrics in stats ==");
+        let stats = c.call(&req(r#"{"v":2,"op":"stats"}"#))?;
+        println!("  ops = {}", stats.get("metrics")?.get("ops")?.encode());
+
+        c.call(&req(r#"{"v":2,"op":"shutdown"}"#))?;
+        Ok(())
+    });
+
+    mpic::server::serve(&engine, "127.0.0.1:0", |a| {
+        addr_tx.send(a).expect("publish address");
+    })?;
+    tour.join().expect("tour thread")?;
+    println!("v2 API tour complete ✓");
+    Ok(())
+}

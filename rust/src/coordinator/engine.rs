@@ -18,7 +18,7 @@ use super::metrics::Metrics;
 use super::selection::{plan, Policy};
 use crate::cache::{DynamicLibrary, StaticLibrary};
 use crate::kv::store::StoreConfig;
-use crate::kv::{ImageKv, KvKey, KvShape, KvStore, TransferEngine, TransferReport};
+use crate::kv::{EntryInfo, ImageKv, KvKey, KvShape, KvStore, TransferEngine, TransferReport};
 use crate::mm::{synth_patches, ImageId, LinkedLayout, Prompt, Tokenizer, UserId};
 use crate::retriever::Retriever;
 use crate::runtime::{ExecStats, ModelMeta, Runtime, Tensor};
@@ -627,6 +627,53 @@ impl Engine {
     pub fn stored_kv(&self, image: ImageId) -> Option<ImageKv> {
         self.store.get(&KvKey::new(&self.meta.name, image)).map(|(kv, _)| kv)
     }
+
+    // ------------------------------------------------------------------
+    // Cache management (the `cache.*` API surface)
+    // ------------------------------------------------------------------
+
+    /// The store key a handle resolves to under this engine's model.
+    /// Handles are content-derived, so resolution needs no registry.
+    pub fn kv_key(&self, handle: &str) -> KvKey {
+        KvKey::new(&self.meta.name, ImageId::from_handle(handle))
+    }
+
+    /// Residency report over every cached image (Static and Dynamic
+    /// Library entries share the tiered store).
+    pub fn cache_entries(&self) -> Vec<EntryInfo> {
+        self.store.entries()
+    }
+
+    /// Residency of one handle's cache entry, or `None` when absent.
+    pub fn cache_stat(&self, handle: &str) -> Option<EntryInfo> {
+        self.store.entry_info(&self.kv_key(handle))
+    }
+
+    /// Pin (or unpin) a handle's entry. Returns `false` when not resident.
+    pub fn cache_pin(&self, handle: &str, pinned: bool) -> bool {
+        self.store.set_pinned(&self.kv_key(handle), pinned)
+    }
+
+    /// Evict a handle's entry from every tier. Pinned entries are refused.
+    pub fn cache_evict(&self, handle: &str) -> EvictOutcome {
+        let key = self.kv_key(handle);
+        if self.store.is_pinned(&key) {
+            return EvictOutcome::Pinned;
+        }
+        if self.store.evict(&key) {
+            EvictOutcome::Evicted
+        } else {
+            EvictOutcome::NotFound
+        }
+    }
+}
+
+/// Outcome of a [`Engine::cache_evict`] request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictOutcome {
+    Evicted,
+    NotFound,
+    Pinned,
 }
 
 /// Greedy argmax over logits.

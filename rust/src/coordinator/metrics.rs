@@ -1,5 +1,7 @@
-//! Serving metrics: TTFT / decode-step latency / throughput / cache stats.
+//! Serving metrics: TTFT / decode-step latency / throughput / cache stats
+//! / per-op request counters and latency accumulators.
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -22,6 +24,9 @@ struct Inner {
     upload: Samples,
     requests: u64,
     tokens_out: u64,
+    /// Per-op wall-time samples, keyed by wire op name (`infer`,
+    /// `cache.list`, …). Sample count doubles as the request counter.
+    ops: BTreeMap<String, Samples>,
 }
 
 impl Metrics {
@@ -37,6 +42,7 @@ impl Metrics {
                 upload: Samples::new(),
                 requests: 0,
                 tokens_out: 0,
+                ops: BTreeMap::new(),
             }),
         }
     }
@@ -57,6 +63,17 @@ impl Metrics {
 
     pub fn record_upload(&self, secs: f64) {
         self.inner.lock().unwrap().upload.push(secs);
+    }
+
+    /// Record one serving-API request of the given op and its wall time.
+    pub fn record_op(&self, op: &str, secs: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.ops.entry(op.to_string()).or_insert_with(Samples::new).push(secs);
+    }
+
+    /// How many requests of this op have been recorded.
+    pub fn op_count(&self, op: &str) -> u64 {
+        self.inner.lock().unwrap().ops.get(op).map(|s| s.len() as u64).unwrap_or(0)
     }
 
     pub fn requests(&self) -> u64 {
@@ -91,6 +108,7 @@ impl Metrics {
                 ("p95", Value::num(if x.is_empty() { 0.0 } else { x.p95() })),
             ])
         };
+        let ops = Value::Obj(g.ops.iter().map(|(k, x)| (k.clone(), s(x))).collect());
         Value::obj(vec![
             ("requests", Value::num(g.requests as f64)),
             ("tokens_out", Value::num(g.tokens_out as f64)),
@@ -100,6 +118,7 @@ impl Metrics {
             ("ttft_exec_s", s(&g.ttft_exec)),
             ("decode_step_s", s(&g.decode_step)),
             ("upload_s", s(&g.upload)),
+            ("ops", ops),
         ])
     }
 }
@@ -148,6 +167,23 @@ mod tests {
         assert_eq!(snap.get("tokens_out").unwrap().as_f64().unwrap(), 6.0);
         let ttft = snap.get("ttft_s").unwrap();
         assert_eq!(ttft.get("n").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn per_op_counters_accumulate_into_snapshot() {
+        let m = Metrics::new();
+        m.record_op("infer", 0.2);
+        m.record_op("infer", 0.4);
+        m.record_op("cache.list", 0.001);
+        assert_eq!(m.op_count("infer"), 2);
+        assert_eq!(m.op_count("cache.list"), 1);
+        assert_eq!(m.op_count("never"), 0);
+        let snap = m.snapshot();
+        let ops = snap.get("ops").unwrap();
+        let infer = ops.get("infer").unwrap();
+        assert_eq!(infer.get("n").unwrap().as_f64().unwrap(), 2.0);
+        assert!((infer.get("mean").unwrap().as_f64().unwrap() - 0.3).abs() < 1e-9);
+        assert!(ops.get("cache.list").is_ok());
     }
 
     #[test]

@@ -18,5 +18,5 @@ pub mod scheduler;
 pub mod selection;
 pub mod session;
 
-pub use engine::{Engine, EngineConfig, InferenceResult};
+pub use engine::{Engine, EngineConfig, EvictOutcome, InferenceResult};
 pub use selection::Policy;

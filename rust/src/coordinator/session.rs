@@ -39,6 +39,12 @@ impl Session {
     pub fn history_len(&self) -> usize {
         self.history.len()
     }
+
+    /// How many image segments the history holds (each one is a
+    /// position-independent cache reuse opportunity on the next turn).
+    pub fn image_count(&self) -> usize {
+        self.history.iter().filter(|s| matches!(s, Segment::Image(_))).count()
+    }
 }
 
 /// Session registry keyed by user.
@@ -54,6 +60,18 @@ impl SessionStore {
 
     pub fn session(&mut self, user: UserId) -> &mut Session {
         self.sessions.entry(user).or_default()
+    }
+
+    /// Read-only lookup (the `session.stat` op): no session is created.
+    pub fn get(&self, user: UserId) -> Option<&Session> {
+        self.sessions.get(&user)
+    }
+
+    /// Users with live sessions, sorted (the `session.list` op).
+    pub fn users(&self) -> Vec<UserId> {
+        let mut users: Vec<UserId> = self.sessions.keys().copied().collect();
+        users.sort();
+        users
     }
 
     pub fn reset(&mut self, user: UserId) {
@@ -89,6 +107,21 @@ mod tests {
         assert_eq!(full2.segments.len(), 5);
         assert_eq!(full2.images(), vec![ImageId(1), ImageId(2)]);
         assert_eq!(store.session(user).turns(), 2);
+    }
+
+    #[test]
+    fn introspection_reports_without_creating() {
+        let mut store = SessionStore::new();
+        let user = UserId(3);
+        let t = Prompt::new(user).text("see").image(ImageId(5)).image(ImageId(6));
+        store.session(user).user_turn(user, &t);
+        assert_eq!(store.users(), vec![user]);
+        let s = store.get(user).unwrap();
+        assert_eq!(s.turns(), 1);
+        assert_eq!(s.image_count(), 2);
+        // get() must not materialise sessions for unknown users.
+        assert!(store.get(UserId(99)).is_none());
+        assert_eq!(store.len(), 1);
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub mod transfer;
 use crate::mm::ImageId;
 
 pub use block::BlockAllocator;
-pub use store::{KvStore, StoreConfig, StoreStats, Tier};
+pub use store::{EntryInfo, KvStore, StoreConfig, StoreStats, Tier};
 pub use transfer::{TransferEngine, TransferReport};
 
 /// Shape of one image's KV entry.

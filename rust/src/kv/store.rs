@@ -3,7 +3,7 @@
 //! decompression work happens outside the metadata lock so transfer-pool
 //! workers genuinely overlap (Fig. 6).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -85,8 +85,36 @@ struct Inner {
     host: HashMap<KvKey, HostEntry>,
     host_bytes: usize,
     disk: HashMap<KvKey, DiskEntry>,
+    /// Keys pinned through the cache-management API: exempt from LRU
+    /// demotion/eviction and from TTL expiry until unpinned.
+    pinned: HashSet<KvKey>,
     clock: u64,
     stats: StoreStats,
+}
+
+/// Residency of one entry, as reported by [`KvStore::entries`] /
+/// [`KvStore::entry_info`] (the `cache.list` / `cache.stat` API surface).
+#[derive(Debug, Clone)]
+pub struct EntryInfo {
+    pub key: KvKey,
+    /// Best (fastest) tier currently holding the entry.
+    pub tier: Tier,
+    /// Resident bytes in that tier (uncompressed on device, compressed
+    /// on host/disk).
+    pub bytes: usize,
+    pub pinned: bool,
+}
+
+impl Inner {
+    /// The single liveness predicate for disk entries: unexpired or
+    /// pinned. Every tier/expiry decision must go through this so
+    /// `contains`/`tier_of`/`get` can never disagree.
+    fn disk_live(&self, key: &KvKey, ttl: Duration) -> bool {
+        match self.disk.get(key) {
+            Some(d) => d.written_at.elapsed() < ttl || self.pinned.contains(key),
+            None => false,
+        }
+    }
 }
 
 /// The tiered store.
@@ -107,6 +135,7 @@ impl KvStore {
                 host: HashMap::new(),
                 host_bytes: 0,
                 disk: HashMap::new(),
+                pinned: HashSet::new(),
                 clock: 0,
                 stats: StoreStats::default(),
             }),
@@ -148,29 +177,105 @@ impl KvStore {
     }
 
     /// Whether the key exists in any non-expired tier (no promotion).
+    /// Pinned entries never count as expired.
     pub fn contains(&self, key: &KvKey) -> bool {
         let g = self.inner.lock().unwrap();
-        if g.device.contains_key(key) || g.host.contains_key(key) {
-            return true;
-        }
-        match g.disk.get(key) {
-            Some(d) => d.written_at.elapsed() < self.cfg.ttl,
-            None => false,
-        }
+        g.device.contains_key(key) || g.host.contains_key(key) || g.disk_live(key, self.cfg.ttl)
     }
 
-    /// Which tier would serve this key right now (cheap peek for planning).
+    /// Which tier would serve this key right now (cheap peek for planning:
+    /// no allocation, map lookups only — this runs per image per request).
     pub fn tier_of(&self, key: &KvKey) -> Option<Tier> {
         let g = self.inner.lock().unwrap();
         if g.device.contains_key(key) {
             Some(Tier::Device)
         } else if g.host.contains_key(key) {
             Some(Tier::Host)
-        } else if g.disk.get(key).map(|d| d.written_at.elapsed() < self.cfg.ttl) == Some(true) {
+        } else if g.disk_live(key, self.cfg.ttl) {
             Some(Tier::Disk)
         } else {
             None
         }
+    }
+
+    /// Residency of one entry across the tiers (best tier wins), or `None`
+    /// when the entry is absent or expired.
+    pub fn entry_info(&self, key: &KvKey) -> Option<EntryInfo> {
+        let g = self.inner.lock().unwrap();
+        let pinned = g.pinned.contains(key);
+        if let Some(e) = g.device.get(key) {
+            return Some(EntryInfo { key: key.clone(), tier: Tier::Device, bytes: e.kv.bytes(), pinned });
+        }
+        if let Some(e) = g.host.get(key) {
+            return Some(EntryInfo { key: key.clone(), tier: Tier::Host, bytes: e.bytes.len(), pinned });
+        }
+        if g.disk_live(key, self.cfg.ttl) {
+            let d = &g.disk[key];
+            return Some(EntryInfo { key: key.clone(), tier: Tier::Disk, bytes: d.bytes, pinned });
+        }
+        None
+    }
+
+    /// Residency report over every live entry, sorted by key (the
+    /// `cache.list` API op). Each key is reported once at its best tier.
+    pub fn entries(&self) -> Vec<EntryInfo> {
+        let g = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        for (k, e) in &g.device {
+            out.push(EntryInfo {
+                key: k.clone(),
+                tier: Tier::Device,
+                bytes: e.kv.bytes(),
+                pinned: g.pinned.contains(k),
+            });
+        }
+        for (k, e) in &g.host {
+            if !g.device.contains_key(k) {
+                out.push(EntryInfo {
+                    key: k.clone(),
+                    tier: Tier::Host,
+                    bytes: e.bytes.len(),
+                    pinned: g.pinned.contains(k),
+                });
+            }
+        }
+        for (k, d) in &g.disk {
+            let live = g.disk_live(k, self.cfg.ttl);
+            if live && !g.device.contains_key(k) && !g.host.contains_key(k) {
+                out.push(EntryInfo {
+                    key: k.clone(),
+                    tier: Tier::Disk,
+                    bytes: d.bytes,
+                    pinned: g.pinned.contains(k),
+                });
+            }
+        }
+        out.sort_by(|a, b| a.key.cmp(&b.key));
+        out
+    }
+
+    /// Pin (or unpin) an entry. Pinned entries are never LRU-demoted off
+    /// the device tier, never dropped from the host tier and never
+    /// TTL-expired. Returns `false` when the key is not resident anywhere.
+    pub fn set_pinned(&self, key: &KvKey, pinned: bool) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let exists = g.device.contains_key(key)
+            || g.host.contains_key(key)
+            || g.disk_live(key, self.cfg.ttl);
+        if !exists {
+            g.pinned.remove(key);
+            return false;
+        }
+        if pinned {
+            g.pinned.insert(key.clone());
+        } else {
+            g.pinned.remove(key);
+        }
+        true
+    }
+
+    pub fn is_pinned(&self, key: &KvKey) -> bool {
+        self.inner.lock().unwrap().pinned.contains(key)
     }
 
     /// Fetch an entry, promoting it to the device tier. Returns the tier it
@@ -212,18 +317,17 @@ impl KvStore {
             }
         }
 
-        // Disk tier: check expiry, then read + decode outside the lock.
+        // Disk tier: check expiry (pinned entries never expire), then read
+        // + decode outside the lock.
         let disk_path = {
             let mut g = self.inner.lock().unwrap();
-            match g.disk.get(key) {
-                None => None,
-                Some(d) if d.written_at.elapsed() >= self.cfg.ttl => {
-                    let d = g.disk.remove(key).unwrap();
-                    let _ = std::fs::remove_file(&d.path);
-                    g.stats.expirations += 1;
-                    None
-                }
-                Some(d) => Some((d.path.clone(), d.bytes)),
+            if g.disk.contains_key(key) && !g.disk_live(key, self.cfg.ttl) {
+                let d = g.disk.remove(key).unwrap();
+                let _ = std::fs::remove_file(&d.path);
+                g.stats.expirations += 1;
+                None
+            } else {
+                g.disk.get(key).map(|d| (d.path.clone(), d.bytes))
             }
         };
         if let Some((path, nbytes)) = disk_path {
@@ -248,18 +352,25 @@ impl KvStore {
         None
     }
 
-    /// Force-expire an entry everywhere (tests / admin).
-    pub fn evict(&self, key: &KvKey) {
+    /// Force-expire an entry everywhere (tests / admin / `cache.evict`).
+    /// Clears any pin flag. Returns whether anything was removed.
+    pub fn evict(&self, key: &KvKey) -> bool {
         let mut g = self.inner.lock().unwrap();
+        let mut removed = false;
         if let Some(e) = g.device.remove(key) {
             g.device_bytes -= e.kv.bytes();
+            removed = true;
         }
         if let Some(e) = g.host.remove(key) {
             g.host_bytes -= e.bytes.len();
+            removed = true;
         }
         if let Some(d) = g.disk.remove(key) {
             let _ = std::fs::remove_file(&d.path);
+            removed = true;
         }
+        g.pinned.remove(key);
+        removed
     }
 
     /// Bytes resident per tier: (device, host, disk-entries).
@@ -287,14 +398,18 @@ impl KvStore {
 
     /// LRU-evict device entries over capacity, demoting them (compressed)
     /// into the host tier; host overflows simply drop (disk still has them).
+    /// Pinned entries are never victims: when only pinned entries remain,
+    /// the tier is allowed to run over capacity.
     fn evict_device_locked(&self, g: &mut Inner) {
         while g.device_bytes > self.cfg.device_capacity && g.device.len() > 1 {
+            let pinned = &g.pinned;
             let victim = g
                 .device
                 .iter()
+                .filter(|(k, _)| !pinned.contains(*k))
                 .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone())
-                .unwrap();
+                .map(|(k, _)| k.clone());
+            let Some(victim) = victim else { break };
             let entry = g.device.remove(&victim).unwrap();
             g.device_bytes -= entry.kv.bytes();
             g.stats.device_evictions += 1;
@@ -306,12 +421,14 @@ impl KvStore {
             }
         }
         while g.host_bytes > self.cfg.host_capacity && g.host.len() > 1 {
+            let pinned = &g.pinned;
             let victim = g
                 .host
                 .iter()
+                .filter(|(k, _)| !pinned.contains(*k))
                 .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone())
-                .unwrap();
+                .map(|(k, _)| k.clone());
+            let Some(victim) = victim else { break };
             let entry = g.host.remove(&victim).unwrap();
             g.host_bytes -= entry.bytes.len();
             g.stats.host_evictions += 1;
@@ -453,6 +570,76 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn entries_report_best_tier_and_pin_flags() {
+        let s = store(1 << 30, 60_000);
+        let e1 = test_entry(10, 8);
+        let e2 = test_entry(11, 8);
+        s.put(e1.clone()).unwrap();
+        s.put(e2.clone()).unwrap();
+        assert!(s.set_pinned(&e1.key, true));
+        assert!(s.is_pinned(&e1.key));
+        let entries = s.entries();
+        assert_eq!(entries.len(), 2);
+        let i1 = entries.iter().find(|e| e.key == e1.key).unwrap();
+        assert_eq!(i1.tier, Tier::Device);
+        assert!(i1.pinned);
+        assert!(i1.bytes > 0);
+        let i2 = entries.iter().find(|e| e.key == e2.key).unwrap();
+        assert!(!i2.pinned);
+        // entry_info agrees with the listing.
+        let info = s.entry_info(&e1.key).unwrap();
+        assert_eq!(info.tier, Tier::Device);
+        assert!(info.pinned);
+        // Unknown keys can't be pinned.
+        assert!(!s.set_pinned(&KvKey::new("test-model", crate::mm::ImageId(999)), true));
+    }
+
+    #[test]
+    fn pinned_entries_survive_device_pressure() {
+        let e1 = test_entry(20, 32);
+        let cap = e1.bytes() + e1.bytes() / 2; // fits one entry + slack
+        let s = store(cap, 60_000);
+        s.put(e1.clone()).unwrap();
+        assert!(s.set_pinned(&e1.key, true));
+        let e2 = test_entry(21, 32);
+        s.put(e2.clone()).unwrap();
+        // Without the pin, e1 (older) would have been demoted; with it, the
+        // LRU must pick e2 or over-run capacity — e1 stays on device.
+        assert_eq!(s.tier_of(&e1.key), Some(Tier::Device));
+    }
+
+    #[test]
+    fn pinned_entries_do_not_ttl_expire() {
+        let s = store(1 << 30, 30);
+        let e = test_entry(22, 8);
+        s.put(e.clone()).unwrap();
+        assert!(s.set_pinned(&e.key, true));
+        {
+            let mut g = s.inner.lock().unwrap();
+            let entry = g.device.remove(&e.key).unwrap();
+            g.device_bytes -= entry.kv.bytes();
+        }
+        std::thread::sleep(Duration::from_millis(60));
+        // Pinned: still served from disk after the TTL.
+        let (got, tier) = s.get(&e.key).unwrap();
+        assert_eq!(tier, Tier::Disk);
+        assert_eq!(got, e);
+        assert_eq!(s.stats().expirations, 0);
+    }
+
+    #[test]
+    fn evict_reports_and_clears_pin() {
+        let s = store(1 << 30, 60_000);
+        let e = test_entry(23, 8);
+        s.put(e.clone()).unwrap();
+        assert!(s.set_pinned(&e.key, true));
+        assert!(s.evict(&e.key));
+        assert!(!s.is_pinned(&e.key));
+        assert!(s.get(&e.key).is_none());
+        assert!(!s.evict(&e.key));
     }
 
     #[test]

@@ -2,10 +2,14 @@
 //!
 //! ```text
 //! mpic serve  [--addr 127.0.0.1:7401] [--model mpic-sim-a] [--artifacts DIR]
+//! mpic call   --json '{"v":2,"op":"stats"}' [--addr 127.0.0.1:7401]
 //! mpic run    [--dataset mmdu|sparkles] [--policy mpic-32] [--convs N] [--images-min A --images-max B]
 //! mpic upload --user ID --handle IMAGE#NAME
 //! mpic analyze [--model mpic-sim-a]        # quick Fig.4-style attention report
 //! ```
+//!
+//! `call` sends one request to a running server and prints every reply
+//! line (streaming chunks included) — a curl for the v2 wire protocol.
 
 use anyhow::Context;
 use mpic::coordinator::{Engine, EngineConfig, Policy};
@@ -41,6 +45,18 @@ fn run() -> anyhow::Result<()> {
             let engine = engine_from(&args)?;
             let addr = args.str_or("addr", "127.0.0.1:7401");
             mpic::server::serve(&engine, &addr, |a| println!("listening on {a}"))?;
+        }
+
+        "call" => {
+            let addr: std::net::SocketAddr = args
+                .str_or("addr", "127.0.0.1:7401")
+                .parse()
+                .context("--addr must be HOST:PORT")?;
+            let json = args.get("json").context("--json required (one request object)")?;
+            let req = Value::parse(json).context("--json must be a JSON object")?;
+            let mut client = mpic::server::Client::connect(addr)?;
+            let last = client.call_stream(&req, |chunk| println!("{}", chunk.encode()))?;
+            println!("{}", last.encode());
         }
 
         "upload" => {
@@ -144,12 +160,12 @@ fn run() -> anyhow::Result<()> {
         }
 
         _ => {
-            println!("usage: mpic <serve|run|upload|analyze> [options]");
+            println!("usage: mpic <serve|call|run|upload|analyze> [options]");
             println!("  serve   --addr HOST:PORT --model NAME --artifacts DIR");
+            println!("  call    --json '{{\"v\":2,\"op\":\"stats\"}}' --addr HOST:PORT");
             println!("  run     --dataset mmdu|sparkles --policy prefix|full-reuse|cacheblend-R|mpic-K --convs N");
             println!("  upload  --user ID --handle IMAGE#NAME");
             println!("  analyze --model NAME");
-            let _ = Value::Null; // keep import used in all paths
         }
     }
     Ok(())

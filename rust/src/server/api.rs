@@ -1,0 +1,853 @@
+//! Typed, versioned serving API (v2).
+//!
+//! This module is the single dispatch surface of the TCP front end: every
+//! wire request — v1 or v2 — is parsed into a typed request struct
+//! ([`FromValue`]), executed against the engine, and serialised back
+//! through a typed response ([`ToValue`]). Errors carry machine-readable
+//! codes ([`ErrorCode`]) instead of bare strings, and client-supplied
+//! request ids are echoed on every reply line (including stream chunks) so
+//! connections can pipeline.
+//!
+//! See the [`crate::server`] module doc for the full wire-level contract
+//! (op table, framing, error codes).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::coordinator::engine::{EvictOutcome, InferenceResult};
+use crate::coordinator::session::SessionStore;
+use crate::coordinator::{Engine, Policy};
+use crate::kv::{EntryInfo, Tier};
+use crate::mm::{ImageId, Prompt, UserId};
+use crate::util::json::Value;
+
+// ----------------------------------------------------------------------
+// Errors
+// ----------------------------------------------------------------------
+
+/// Machine-readable error classes of the v2 protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The request line was not valid JSON.
+    BadJson,
+    /// The `v` field named an unsupported protocol version.
+    BadVersion,
+    /// The `op` field named no known operation.
+    UnknownOp,
+    /// A required field is absent.
+    MissingField,
+    /// A field is present but has the wrong JSON type.
+    BadType,
+    /// A field parsed but its value is out of domain (e.g. unknown policy).
+    BadValue,
+    /// The addressed entry (cache key, session) does not exist.
+    NotFound,
+    /// `cache.evict` refused because the entry is pinned.
+    Pinned,
+    /// The engine failed while executing the request.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadJson => "bad_json",
+            ErrorCode::BadVersion => "bad_version",
+            ErrorCode::UnknownOp => "unknown_op",
+            ErrorCode::MissingField => "missing_field",
+            ErrorCode::BadType => "bad_type",
+            ErrorCode::BadValue => "bad_value",
+            ErrorCode::NotFound => "not_found",
+            ErrorCode::Pinned => "pinned",
+            ErrorCode::Internal => "internal",
+        }
+    }
+}
+
+/// A protocol-level error: a code plus a human-readable message.
+#[derive(Debug)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ApiError {
+        ApiError { code, message: message.into() }
+    }
+}
+
+impl From<anyhow::Error> for ApiError {
+    fn from(e: anyhow::Error) -> ApiError {
+        ApiError::new(ErrorCode::Internal, format!("{e:#}"))
+    }
+}
+
+pub type ApiResult<T> = std::result::Result<T, ApiError>;
+
+// ----------------------------------------------------------------------
+// (De)serialisation traits over the in-tree JSON substrate
+// ----------------------------------------------------------------------
+
+/// Parse a typed request out of a JSON object, with field-precise errors.
+pub trait FromValue: Sized {
+    fn from_value(v: &Value) -> ApiResult<Self>;
+}
+
+/// Serialise a typed response into a JSON object body (the dispatcher adds
+/// the `ok` / `id` envelope fields).
+pub trait ToValue {
+    fn to_value(&self) -> Value;
+}
+
+fn req_field<'a>(v: &'a Value, key: &str) -> ApiResult<&'a Value> {
+    v.opt(key)
+        .ok_or_else(|| ApiError::new(ErrorCode::MissingField, format!("missing field {key:?}")))
+}
+
+fn get_str(v: &Value, key: &str) -> ApiResult<String> {
+    req_field(v, key)?
+        .as_str()
+        .map(|s| s.to_string())
+        .map_err(|e| ApiError::new(ErrorCode::BadType, format!("field {key:?}: {e}")))
+}
+
+fn get_u64(v: &Value, key: &str) -> ApiResult<u64> {
+    req_field(v, key)?
+        .as_u64()
+        .map_err(|e| ApiError::new(ErrorCode::BadType, format!("field {key:?}: {e}")))
+}
+
+fn opt_usize(v: &Value, key: &str) -> ApiResult<Option<usize>> {
+    match v.opt(key) {
+        None => Ok(None),
+        Some(x) => x
+            .as_usize()
+            .map(Some)
+            .map_err(|e| ApiError::new(ErrorCode::BadType, format!("field {key:?}: {e}"))),
+    }
+}
+
+fn opt_str(v: &Value, key: &str) -> ApiResult<Option<String>> {
+    match v.opt(key) {
+        None => Ok(None),
+        Some(x) => x
+            .as_str()
+            .map(|s| Some(s.to_string()))
+            .map_err(|e| ApiError::new(ErrorCode::BadType, format!("field {key:?}: {e}"))),
+    }
+}
+
+fn opt_bool(v: &Value, key: &str, default: bool) -> ApiResult<bool> {
+    match v.opt(key) {
+        None => Ok(default),
+        Some(x) => x
+            .as_bool()
+            .map_err(|e| ApiError::new(ErrorCode::BadType, format!("field {key:?}: {e}"))),
+    }
+}
+
+// ----------------------------------------------------------------------
+// Request envelope
+// ----------------------------------------------------------------------
+
+/// The fields common to every request: protocol version, optional request
+/// id (echoed verbatim on every reply line) and the operation name.
+#[derive(Debug, Clone)]
+pub struct Envelope {
+    pub v: u64,
+    pub id: Option<Value>,
+    pub op: String,
+}
+
+impl FromValue for Envelope {
+    fn from_value(req: &Value) -> ApiResult<Envelope> {
+        let v = match req.opt("v") {
+            None => 1,
+            Some(x) => x
+                .as_u64()
+                .map_err(|e| ApiError::new(ErrorCode::BadType, format!("field \"v\": {e}")))?,
+        };
+        if v != 1 && v != 2 {
+            return Err(ApiError::new(
+                ErrorCode::BadVersion,
+                format!("unsupported protocol version {v} (supported: 1, 2)"),
+            ));
+        }
+        let id = match req.opt("id") {
+            None => None,
+            Some(x) => match x {
+                Value::Str(_) | Value::Num(_) => Some(x.clone()),
+                other => {
+                    return Err(ApiError::new(
+                        ErrorCode::BadType,
+                        format!("field \"id\" must be a string or number, got {}", other.encode()),
+                    ))
+                }
+            },
+        };
+        let op = get_str(req, "op")?;
+        Ok(Envelope { v, id, op })
+    }
+}
+
+// ----------------------------------------------------------------------
+// Typed requests
+// ----------------------------------------------------------------------
+
+/// `upload` — encode an image and register it in the user's static library.
+#[derive(Debug, Clone)]
+pub struct UploadReq {
+    pub user: u64,
+    pub handle: String,
+}
+
+impl FromValue for UploadReq {
+    fn from_value(v: &Value) -> ApiResult<UploadReq> {
+        Ok(UploadReq { user: get_u64(v, "user")?, handle: get_str(v, "handle")? })
+    }
+}
+
+/// `add_reference` — admin path: index a dynamic-library reference.
+#[derive(Debug, Clone)]
+pub struct AddReferenceReq {
+    pub handle: String,
+    pub description: String,
+}
+
+impl FromValue for AddReferenceReq {
+    fn from_value(v: &Value) -> ApiResult<AddReferenceReq> {
+        Ok(AddReferenceReq {
+            handle: get_str(v, "handle")?,
+            description: get_str(v, "description")?,
+        })
+    }
+}
+
+/// `infer` / `chat` — one generation request (stateless or sessionful).
+#[derive(Debug, Clone)]
+pub struct GenerateReq {
+    pub user: u64,
+    pub text: String,
+    pub policy: String,
+    pub max_new: Option<usize>,
+    pub mrag: usize,
+    pub stream: bool,
+}
+
+impl FromValue for GenerateReq {
+    fn from_value(v: &Value) -> ApiResult<GenerateReq> {
+        Ok(GenerateReq {
+            user: get_u64(v, "user")?,
+            text: get_str(v, "text")?,
+            policy: opt_str(v, "policy")?.unwrap_or_else(|| "mpic-32".to_string()),
+            max_new: opt_usize(v, "max_new")?,
+            mrag: opt_usize(v, "mrag")?.unwrap_or(0),
+            stream: opt_bool(v, "stream", false)?,
+        })
+    }
+}
+
+/// `reset` / `session.stat` — ops addressing one user.
+#[derive(Debug, Clone)]
+pub struct UserReq {
+    pub user: u64,
+}
+
+impl FromValue for UserReq {
+    fn from_value(v: &Value) -> ApiResult<UserReq> {
+        Ok(UserReq { user: get_u64(v, "user")? })
+    }
+}
+
+/// `cache.stat` / `cache.evict` — ops addressing one cache entry by its
+/// position-independent handle.
+#[derive(Debug, Clone)]
+pub struct CacheKeyReq {
+    pub handle: String,
+}
+
+impl FromValue for CacheKeyReq {
+    fn from_value(v: &Value) -> ApiResult<CacheKeyReq> {
+        Ok(CacheKeyReq { handle: get_str(v, "handle")? })
+    }
+}
+
+/// `cache.pin` — set or clear an entry's pin flag (`"pinned"` defaults to
+/// `true`, so a bare pin request pins).
+#[derive(Debug, Clone)]
+pub struct CachePinReq {
+    pub handle: String,
+    pub pinned: bool,
+}
+
+impl FromValue for CachePinReq {
+    fn from_value(v: &Value) -> ApiResult<CachePinReq> {
+        Ok(CachePinReq { handle: get_str(v, "handle")?, pinned: opt_bool(v, "pinned", true)? })
+    }
+}
+
+// ----------------------------------------------------------------------
+// Typed responses
+// ----------------------------------------------------------------------
+
+/// Reply body of `upload` / `add_reference`.
+#[derive(Debug, Clone)]
+pub struct ImageResp {
+    pub image: ImageId,
+}
+
+impl ToValue for ImageResp {
+    fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("image", Value::num(self.image.0 as f64)),
+            ("image_hex", Value::str(format!("{:016x}", self.image.0))),
+        ])
+    }
+}
+
+/// Reply body of `infer` / `chat` (and of a stream's final summary line).
+#[derive(Debug, Clone)]
+pub struct InferResp {
+    pub policy: String,
+    pub tokens: Vec<i32>,
+    pub ttft_s: f64,
+    pub ttft_fetch_s: f64,
+    pub ttft_link_s: f64,
+    pub steps: usize,
+    pub seq_len: usize,
+    pub n_selected: usize,
+    pub decode_s: f64,
+    pub device_hits: usize,
+}
+
+impl From<&InferenceResult> for InferResp {
+    fn from(r: &InferenceResult) -> InferResp {
+        InferResp {
+            policy: r.policy.clone(),
+            tokens: r.tokens.clone(),
+            ttft_s: r.ttft.total_s,
+            ttft_fetch_s: r.ttft.fetch_s,
+            ttft_link_s: r.ttft.link_s,
+            steps: r.ttft.steps,
+            seq_len: r.seq_len,
+            n_selected: r.n_selected,
+            decode_s: r.decode_s,
+            device_hits: r.transfer.device_hits,
+        }
+    }
+}
+
+impl ToValue for InferResp {
+    fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("policy", Value::str(&self.policy)),
+            ("tokens", Value::Arr(self.tokens.iter().map(|&t| Value::num(t as f64)).collect())),
+            ("ttft_s", Value::num(self.ttft_s)),
+            ("ttft_fetch_s", Value::num(self.ttft_fetch_s)),
+            ("ttft_link_s", Value::num(self.ttft_link_s)),
+            ("steps", Value::num(self.steps as f64)),
+            ("seq_len", Value::num(self.seq_len as f64)),
+            ("n_selected", Value::num(self.n_selected as f64)),
+            ("decode_s", Value::num(self.decode_s)),
+            ("device_hits", Value::num(self.device_hits as f64)),
+        ])
+    }
+}
+
+/// One entry of a `cache.list` / `cache.stat` reply.
+#[derive(Debug, Clone)]
+pub struct CacheEntryResp {
+    pub model: String,
+    pub image: ImageId,
+    pub tier: Tier,
+    pub bytes: usize,
+    pub pinned: bool,
+}
+
+fn tier_str(t: Tier) -> &'static str {
+    match t {
+        Tier::Device => "device",
+        Tier::Host => "host",
+        Tier::Disk => "disk",
+    }
+}
+
+impl From<EntryInfo> for CacheEntryResp {
+    fn from(e: EntryInfo) -> CacheEntryResp {
+        CacheEntryResp {
+            model: e.key.model,
+            image: e.key.image,
+            tier: e.tier,
+            bytes: e.bytes,
+            pinned: e.pinned,
+        }
+    }
+}
+
+impl ToValue for CacheEntryResp {
+    fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("model", Value::str(&self.model)),
+            ("image", Value::str(format!("{:016x}", self.image.0))),
+            ("tier", Value::str(tier_str(self.tier))),
+            ("bytes", Value::num(self.bytes as f64)),
+            ("pinned", Value::Bool(self.pinned)),
+        ])
+    }
+}
+
+/// One entry of a `session.list` / `session.stat` reply.
+#[derive(Debug, Clone)]
+pub struct SessionResp {
+    pub user: u64,
+    pub turns: usize,
+    pub history_len: usize,
+    pub images: usize,
+}
+
+impl ToValue for SessionResp {
+    fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("user", Value::num(self.user as f64)),
+            ("turns", Value::num(self.turns as f64)),
+            ("history_len", Value::num(self.history_len as f64)),
+            ("images", Value::num(self.images as f64)),
+        ])
+    }
+}
+
+// ----------------------------------------------------------------------
+// Reply envelopes
+// ----------------------------------------------------------------------
+
+fn merge_envelope(body: Value, ok: bool, id: Option<&Value>) -> Value {
+    let mut m = match body {
+        Value::Obj(m) => m,
+        other => {
+            let mut m = BTreeMap::new();
+            m.insert("result".to_string(), other);
+            m
+        }
+    };
+    m.insert("ok".to_string(), Value::Bool(ok));
+    if let Some(id) = id {
+        m.insert("id".to_string(), id.clone());
+    }
+    Value::Obj(m)
+}
+
+/// Build an error reply line: `{"ok":false,"code":...,"error":...,"id":...}`.
+pub fn error_value(id: Option<&Value>, e: &ApiError) -> Value {
+    merge_envelope(
+        Value::obj(vec![
+            ("code", Value::str(e.code.as_str())),
+            ("error", Value::str(&e.message)),
+        ]),
+        false,
+        id,
+    )
+}
+
+/// Error reply for a line that failed to parse as JSON (no envelope known).
+pub fn parse_error(msg: &str) -> Value {
+    error_value(None, &ApiError::new(ErrorCode::BadJson, msg))
+}
+
+/// Error reply for requests the engine loop could not service at all.
+pub fn internal_error(msg: &str) -> Value {
+    error_value(None, &ApiError::new(ErrorCode::Internal, msg))
+}
+
+fn chunk_value(env: &Envelope, seq: usize, token: i32) -> Value {
+    let body = Value::obj(vec![
+        ("stream", Value::Bool(true)),
+        ("seq", Value::num(seq as f64)),
+        ("token", Value::num(token as f64)),
+    ]);
+    merge_envelope(body, true, env.id.as_ref())
+}
+
+// ----------------------------------------------------------------------
+// Dispatch
+// ----------------------------------------------------------------------
+
+/// Handle one request object. Non-streaming ops produce exactly one reply
+/// line (the return value); streaming generations additionally emit one
+/// chunk line per decoded token through `sink` *before* the returned final
+/// summary line. `sessions` holds the server's multi-turn state.
+pub fn dispatch(
+    engine: &Engine,
+    sessions: &mut SessionStore,
+    req: &Value,
+    sink: &mut dyn FnMut(Value),
+) -> Value {
+    let env = match Envelope::from_value(req) {
+        Ok(env) => env,
+        // The id is still echoed when it is well-formed, so pipelined
+        // clients can correlate even envelope-level failures.
+        Err(e) => {
+            let id = req.opt("id").filter(|i| matches!(i, Value::Str(_) | Value::Num(_)));
+            return error_value(id, &e);
+        }
+    };
+    let t0 = Instant::now();
+    let out = dispatch_op(engine, sessions, &env, req, sink);
+    // Unknown ops are bucketed under one key: the metrics table is keyed
+    // by op name, and recording client-supplied garbage verbatim would
+    // let a caller grow it without bound.
+    let op_key = match &out {
+        Err(e) if e.code == ErrorCode::UnknownOp => "unknown",
+        _ => env.op.as_str(),
+    };
+    engine.metrics.record_op(op_key, t0.elapsed().as_secs_f64());
+    match out {
+        Ok(body) => merge_envelope(body, true, env.id.as_ref()),
+        Err(e) => error_value(env.id.as_ref(), &e),
+    }
+}
+
+fn dispatch_op(
+    engine: &Engine,
+    sessions: &mut SessionStore,
+    env: &Envelope,
+    req: &Value,
+    sink: &mut dyn FnMut(Value),
+) -> ApiResult<Value> {
+    match env.op.as_str() {
+        "ping" => Ok(Value::obj(vec![("pong", Value::Bool(true)), ("v", Value::num(env.v as f64))])),
+
+        "shutdown" => Ok(Value::obj(vec![("bye", Value::Bool(true))])),
+
+        "stats" => {
+            let (device_bytes, host_bytes, disk_entries) = engine.store().residency();
+            Ok(Value::obj(vec![
+                ("metrics", engine.metrics.snapshot()),
+                ("model", Value::str(&engine.meta().name)),
+                ("sessions", Value::num(sessions.len() as f64)),
+                (
+                    "store",
+                    Value::obj(vec![
+                        ("device_bytes", Value::num(device_bytes as f64)),
+                        ("host_bytes", Value::num(host_bytes as f64)),
+                        ("disk_entries", Value::num(disk_entries as f64)),
+                    ]),
+                ),
+            ]))
+        }
+
+        "upload" => {
+            let q = UploadReq::from_value(req)?;
+            let image = engine.upload_image(UserId(q.user), &q.handle)?;
+            Ok(ImageResp { image }.to_value())
+        }
+
+        "add_reference" => {
+            let q = AddReferenceReq::from_value(req)?;
+            let image = engine.add_reference(&q.handle, &q.description)?;
+            Ok(ImageResp { image }.to_value())
+        }
+
+        "infer" => {
+            let q = GenerateReq::from_value(req)?;
+            let (policy, max_new) = generation_params(engine, &q)?;
+            let mut prompt = Prompt::parse(UserId(q.user), &q.text);
+            if q.mrag > 0 {
+                prompt = engine.mrag_augment(&prompt, q.mrag)?.0;
+            }
+            let r = run_generate(engine, env, &prompt, policy, max_new, q.stream, sink)?;
+            let mut body = InferResp::from(&r).to_value();
+            if q.stream {
+                body.set("done", Value::Bool(true));
+            }
+            Ok(body)
+        }
+
+        // Multi-turn chat: the session accumulates history; every turn is
+        // linked as history ++ turn so earlier images hit the cache
+        // position-independently.
+        "chat" => {
+            let q = GenerateReq::from_value(req)?;
+            let (policy, max_new) = generation_params(engine, &q)?;
+            let user = UserId(q.user);
+            let turn = Prompt::parse(user, &q.text);
+            let mut full = sessions.session(user).user_turn(user, &turn);
+            if q.mrag > 0 {
+                full = engine.mrag_augment(&full, q.mrag)?.0;
+            }
+            let r = run_generate(engine, env, &full, policy, max_new, q.stream, sink)?;
+            sessions.session(user).assistant_reply(&r.tokens);
+            let mut body = InferResp::from(&r).to_value();
+            body.set("turn", Value::num(sessions.session(user).turns() as f64));
+            if q.stream {
+                body.set("done", Value::Bool(true));
+            }
+            Ok(body)
+        }
+
+        "reset" => {
+            let q = UserReq::from_value(req)?;
+            sessions.reset(UserId(q.user));
+            Ok(Value::obj(vec![("reset", Value::Bool(true))]))
+        }
+
+        "cache.list" => {
+            let entries: Vec<Value> = engine
+                .cache_entries()
+                .into_iter()
+                .map(|e| CacheEntryResp::from(e).to_value())
+                .collect();
+            Ok(Value::obj(vec![
+                ("count", Value::num(entries.len() as f64)),
+                ("entries", Value::Arr(entries)),
+            ]))
+        }
+
+        "cache.stat" => {
+            let q = CacheKeyReq::from_value(req)?;
+            match engine.cache_stat(&q.handle) {
+                Some(e) => {
+                    let mut body = CacheEntryResp::from(e).to_value();
+                    body.set("handle", Value::str(&q.handle));
+                    body.set("resident", Value::Bool(true));
+                    Ok(body)
+                }
+                None => Err(ApiError::new(
+                    ErrorCode::NotFound,
+                    format!("no cache entry for handle {:?}", q.handle),
+                )),
+            }
+        }
+
+        "cache.pin" => {
+            let q = CachePinReq::from_value(req)?;
+            if !engine.cache_pin(&q.handle, q.pinned) {
+                return Err(ApiError::new(
+                    ErrorCode::NotFound,
+                    format!("no cache entry for handle {:?}", q.handle),
+                ));
+            }
+            Ok(Value::obj(vec![
+                ("handle", Value::str(&q.handle)),
+                ("pinned", Value::Bool(q.pinned)),
+            ]))
+        }
+
+        "cache.evict" => {
+            let q = CacheKeyReq::from_value(req)?;
+            match engine.cache_evict(&q.handle) {
+                EvictOutcome::Evicted => Ok(Value::obj(vec![
+                    ("handle", Value::str(&q.handle)),
+                    ("evicted", Value::Bool(true)),
+                ])),
+                EvictOutcome::NotFound => Err(ApiError::new(
+                    ErrorCode::NotFound,
+                    format!("no cache entry for handle {:?}", q.handle),
+                )),
+                EvictOutcome::Pinned => Err(ApiError::new(
+                    ErrorCode::Pinned,
+                    format!("entry {:?} is pinned; unpin before evicting", q.handle),
+                )),
+            }
+        }
+
+        "session.list" => {
+            let mut entries = Vec::new();
+            for user in sessions.users() {
+                if let Some(s) = sessions.get(user) {
+                    entries.push(
+                        SessionResp {
+                            user: user.0,
+                            turns: s.turns(),
+                            history_len: s.history_len(),
+                            images: s.image_count(),
+                        }
+                        .to_value(),
+                    );
+                }
+            }
+            Ok(Value::obj(vec![
+                ("count", Value::num(entries.len() as f64)),
+                ("sessions", Value::Arr(entries)),
+            ]))
+        }
+
+        "session.stat" => {
+            let q = UserReq::from_value(req)?;
+            match sessions.get(UserId(q.user)) {
+                Some(s) => Ok(SessionResp {
+                    user: q.user,
+                    turns: s.turns(),
+                    history_len: s.history_len(),
+                    images: s.image_count(),
+                }
+                .to_value()),
+                None => Err(ApiError::new(
+                    ErrorCode::NotFound,
+                    format!("no session for user {}", q.user),
+                )),
+            }
+        }
+
+        other => Err(ApiError::new(ErrorCode::UnknownOp, format!("unknown op {other:?}"))),
+    }
+}
+
+fn generation_params(engine: &Engine, q: &GenerateReq) -> ApiResult<(Policy, usize)> {
+    let policy = Policy::parse(&q.policy)
+        .map_err(|e| ApiError::new(ErrorCode::BadValue, format!("field \"policy\": {e:#}")))?;
+    Ok((policy, q.max_new.unwrap_or(engine.config().max_new_tokens)))
+}
+
+/// Run one generation. With `stream` set, one chunk line per decoded token
+/// goes through `sink` (driven by the engine's incremental
+/// [`Engine::decode_one`] loop); the caller turns the returned result into
+/// the final summary line.
+fn run_generate(
+    engine: &Engine,
+    env: &Envelope,
+    prompt: &Prompt,
+    policy: Policy,
+    max_new: usize,
+    stream: bool,
+    sink: &mut dyn FnMut(Value),
+) -> ApiResult<InferenceResult> {
+    if !stream {
+        return Ok(engine.infer(prompt, policy, max_new)?);
+    }
+    let mut seq = engine.prefill(prompt, policy, max_new)?;
+    let mut emitted = 0usize;
+    loop {
+        let more = engine.decode_one(&mut seq)?;
+        while emitted < seq.tokens.len() {
+            sink(chunk_value(env, emitted, seq.tokens[emitted]));
+            emitted += 1;
+        }
+        if !more {
+            break;
+        }
+    }
+    let r = seq.finish();
+    engine.metrics.record_request(&r);
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Value {
+        Value::parse(s).unwrap()
+    }
+
+    #[test]
+    fn envelope_defaults_to_v1() {
+        let env = Envelope::from_value(&parse(r#"{"op":"ping"}"#)).unwrap();
+        assert_eq!(env.v, 1);
+        assert!(env.id.is_none());
+        assert_eq!(env.op, "ping");
+    }
+
+    #[test]
+    fn envelope_v2_with_id() {
+        let env = Envelope::from_value(&parse(r#"{"v":2,"id":"req-7","op":"stats"}"#)).unwrap();
+        assert_eq!(env.v, 2);
+        assert_eq!(env.id.unwrap().as_str().unwrap(), "req-7");
+    }
+
+    #[test]
+    fn envelope_rejects_bad_version() {
+        let e = Envelope::from_value(&parse(r#"{"v":3,"op":"ping"}"#)).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadVersion);
+        let e = Envelope::from_value(&parse(r#"{"v":"two","op":"ping"}"#)).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadType);
+    }
+
+    #[test]
+    fn envelope_rejects_structured_id() {
+        let e = Envelope::from_value(&parse(r#"{"id":[1],"op":"ping"}"#)).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadType);
+    }
+
+    #[test]
+    fn missing_op_is_missing_field() {
+        let e = Envelope::from_value(&parse(r#"{"v":2}"#)).unwrap_err();
+        assert_eq!(e.code, ErrorCode::MissingField);
+    }
+
+    #[test]
+    fn upload_req_roundtrip() {
+        let q =
+            UploadReq::from_value(&parse(r#"{"op":"upload","user":4,"handle":"IMAGE#X"}"#)).unwrap();
+        assert_eq!(q.user, 4);
+        assert_eq!(q.handle, "IMAGE#X");
+        let e = UploadReq::from_value(&parse(r#"{"op":"upload","user":4}"#)).unwrap_err();
+        assert_eq!(e.code, ErrorCode::MissingField);
+        let e =
+            UploadReq::from_value(&parse(r#"{"op":"upload","user":"four","handle":"h"}"#)).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadType);
+    }
+
+    #[test]
+    fn generate_req_defaults() {
+        let q = GenerateReq::from_value(&parse(r#"{"op":"infer","user":1,"text":"hi"}"#)).unwrap();
+        assert_eq!(q.policy, "mpic-32");
+        assert_eq!(q.max_new, None);
+        assert_eq!(q.mrag, 0);
+        assert!(!q.stream);
+        let q = GenerateReq::from_value(&parse(
+            r#"{"op":"infer","user":1,"text":"hi","policy":"prefix","max_new":3,"stream":true}"#,
+        ))
+        .unwrap();
+        assert_eq!(q.policy, "prefix");
+        assert_eq!(q.max_new, Some(3));
+        assert!(q.stream);
+    }
+
+    #[test]
+    fn pin_req_defaults_to_pinning() {
+        let q = CachePinReq::from_value(&parse(r#"{"op":"cache.pin","handle":"H"}"#)).unwrap();
+        assert!(q.pinned);
+        let q = CachePinReq::from_value(&parse(r#"{"op":"cache.pin","handle":"H","pinned":false}"#))
+            .unwrap();
+        assert!(!q.pinned);
+    }
+
+    #[test]
+    fn error_value_shape() {
+        let id = Value::str("abc");
+        let v = error_value(Some(&id), &ApiError::new(ErrorCode::UnknownOp, "unknown op \"x\""));
+        assert!(!v.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(v.get("code").unwrap().as_str().unwrap(), "unknown_op");
+        assert_eq!(v.get("id").unwrap().as_str().unwrap(), "abc");
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("unknown op"));
+    }
+
+    #[test]
+    fn merge_envelope_echoes_id_and_ok() {
+        let id = Value::num(9.0);
+        let body = Value::obj(vec![("pong", Value::Bool(true))]);
+        let v = merge_envelope(body, true, Some(&id));
+        assert!(v.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(v.get("id").unwrap().as_f64().unwrap(), 9.0);
+        assert!(v.get("pong").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn chunk_lines_are_marked() {
+        let env = Envelope { v: 2, id: Some(Value::str("s1")), op: "infer".into() };
+        let c = chunk_value(&env, 3, 42);
+        assert!(c.get("ok").unwrap().as_bool().unwrap());
+        assert!(c.get("stream").unwrap().as_bool().unwrap());
+        assert_eq!(c.get("seq").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(c.get("token").unwrap().as_f64().unwrap(), 42.0);
+        assert_eq!(c.get("id").unwrap().as_str().unwrap(), "s1");
+    }
+
+    #[test]
+    fn tier_strings() {
+        assert_eq!(tier_str(Tier::Device), "device");
+        assert_eq!(tier_str(Tier::Host), "host");
+        assert_eq!(tier_str(Tier::Disk), "disk");
+    }
+}

@@ -1,16 +1,68 @@
-//! JSON-lines TCP serving front end (substrate S16).
+//! JSON-lines TCP serving front end (substrate S16) — protocol v2.
 //!
-//! Wire protocol: one JSON object per line, one reply line per request.
+//! Wire format: one JSON object per line. Non-streaming requests get
+//! exactly one reply line; streaming generations get one chunk line per
+//! decoded token followed by a final summary line.
+//!
+//! ## Request envelope
+//!
+//! Every request carries an `"op"` plus optional envelope fields:
+//!
+//! * `"v"` — protocol version, `1` (default, the legacy shapes) or `2`.
+//!   Both versions route through the same typed dispatcher in [`api`];
+//!   v1 request shapes keep working unchanged.
+//! * `"id"` — client-supplied request id (string or number), echoed
+//!   verbatim on **every** reply line so clients can pipeline requests
+//!   and correlate chunks.
+//! * `"stream"` — on `infer`/`chat`: emit per-token chunk lines.
+//!
+//! ## Op table
+//!
+//! | op              | fields                                              | reply body |
+//! |-----------------|-----------------------------------------------------|------------|
+//! | `ping`          | —                                                   | `pong` |
+//! | `stats`         | —                                                   | `metrics` (incl. per-op `ops` table), `model`, `sessions`, `store` |
+//! | `upload`        | `user`, `handle`                                    | `image`, `image_hex` |
+//! | `add_reference` | `handle`, `description`                             | `image`, `image_hex` |
+//! | `infer`         | `user`, `text`, [`policy`, `max_new`, `mrag`, `stream`] | decode result (`tokens`, `ttft_s`, …) |
+//! | `chat`          | like `infer`; keeps per-user session history        | decode result + `turn` |
+//! | `reset`         | `user`                                              | `reset` |
+//! | `cache.list`    | —                                                   | `count`, `entries[]` (`image`, `tier`, `bytes`, `pinned`) |
+//! | `cache.stat`    | `handle`                                            | one entry + `resident` |
+//! | `cache.pin`     | `handle`, [`pinned`=true]                           | `handle`, `pinned` |
+//! | `cache.evict`   | `handle`                                            | `handle`, `evicted` |
+//! | `session.list`  | —                                                   | `count`, `sessions[]` (`user`, `turns`, `history_len`, `images`) |
+//! | `session.stat`  | `user`                                              | one session entry |
+//! | `shutdown`      | —                                                   | `bye` |
+//!
+//! Example exchange (v2, pipelined ids, streaming):
 //!
 //! ```json
-//! {"op":"upload","user":1,"handle":"IMAGE#EIFFEL2025"}
-//! {"op":"infer","user":1,"policy":"mpic-32","text":"Describe IMAGE#EIFFEL2025 please","max_new":16}
-//! {"op":"chat","user":1,"text":"And what about IMAGE#LOUVRE2025?"}
-//! {"op":"reset","user":1}
-//! {"op":"stats"}
-//! {"op":"add_reference","handle":"IMAGE#HOTEL01","description":"hotel near the eiffel tower"}
-//! {"op":"shutdown"}
+//! {"v":2,"id":"a","op":"upload","user":1,"handle":"IMAGE#EIFFEL2025"}
+//! {"v":2,"id":"b","op":"infer","user":1,"text":"Describe IMAGE#EIFFEL2025","max_new":2,"stream":true}
 //! ```
+//!
+//! produces
+//!
+//! ```json
+//! {"id":"a","image":...,"image_hex":"...","ok":true}
+//! {"id":"b","ok":true,"seq":0,"stream":true,"token":17}
+//! {"id":"b","ok":true,"seq":1,"stream":true,"token":4}
+//! {"done":true,"id":"b","ok":true,"policy":"mpic-32","tokens":[17,4], ...}
+//! ```
+//!
+//! ## Errors
+//!
+//! Failures reply `{"ok":false,"code":...,"error":...,"id":...}` with a
+//! machine-readable code: `bad_json`, `bad_version`, `unknown_op`,
+//! `missing_field`, `bad_type`, `bad_value`, `not_found`, `pinned`,
+//! `internal` (see [`api::ErrorCode`]).
+//!
+//! ## Streaming framing
+//!
+//! Chunk lines carry `"stream":true` and are ordered by `"seq"`; the
+//! terminating summary line carries `"done":true` and the same fields as a
+//! non-streaming reply. [`Client::call_stream`] consumes this framing.
 //!
 //! `infer` is stateless; `chat` keeps a per-user session (multi-turn
 //! history linked in front of each new turn, so earlier images are reused
@@ -18,9 +70,10 @@
 //!
 //! Threading: connection handlers (pool threads) parse lines and forward
 //! them over a channel to the engine loop, which runs on the thread that
-//! owns the PJRT handles; replies travel back on per-request channels.
+//! owns the PJRT handles; reply lines (one or many) travel back on
+//! per-request channels that close when the request is fully answered.
 
-pub mod protocol;
+pub mod api;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -76,12 +129,21 @@ pub fn serve(engine: &Engine, addr: &str, on_ready: impl FnOnce(std::net::Socket
     drop(tx);
 
     // Engine loop (this thread owns PJRT); sessions are server state.
+    // Stream chunks go out on the same per-request channel as the final
+    // reply; dropping the sender closes the request.
     let mut sessions = crate::coordinator::session::SessionStore::new();
     while let Ok((req, reply)) = rx.recv() {
-        let resp = protocol::dispatch(engine, &mut sessions, &req);
         let is_shutdown = matches!(req.opt("op").and_then(|o| o.as_str().ok()), Some("shutdown"));
+        let resp = api::dispatch(engine, &mut sessions, &req, &mut |chunk| {
+            let _ = reply.send(chunk);
+        });
+        // Only honour a shutdown whose request was actually accepted — a
+        // rejected envelope (bad version, bad id type) must not kill the
+        // server after replying with an error.
+        let accepted = resp.opt("ok").and_then(|o| o.as_bool().ok()).unwrap_or(false);
         let _ = reply.send(resp);
-        if is_shutdown {
+        drop(reply);
+        if is_shutdown && accepted {
             shutdown.store(true, Ordering::SeqCst);
             // Unblock the acceptor with a dummy connection.
             let _ = TcpStream::connect(local);
@@ -90,6 +152,13 @@ pub fn serve(engine: &Engine, addr: &str, on_ready: impl FnOnce(std::net::Socket
     }
     let _ = acceptor.join();
     log::info!("server: shut down");
+    Ok(())
+}
+
+fn write_line(writer: &mut TcpStream, v: &Value) -> Result<()> {
+    writer.write_all(v.encode().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
     Ok(())
 }
 
@@ -105,24 +174,31 @@ fn handle_conn(stream: TcpStream, tx: Sender<Job>, shutdown: Arc<AtomicBool>) ->
         if line.trim().is_empty() {
             continue;
         }
-        let resp = match Value::parse(&line) {
+        match Value::parse(&line) {
             Ok(req) => {
                 let (rtx, rrx) = channel();
                 if tx.send((req, rtx)).is_err() {
-                    break; // engine loop gone
+                    write_line(&mut writer, &api::internal_error("engine unavailable"))?;
+                    break;
                 }
-                rrx.recv().unwrap_or_else(|_| protocol::error("engine unavailable"))
+                // Forward every reply line (stream chunks + final) until
+                // the engine closes the request's channel.
+                let mut wrote = false;
+                for resp in rrx.iter() {
+                    write_line(&mut writer, &resp)?;
+                    wrote = true;
+                }
+                if !wrote {
+                    write_line(&mut writer, &api::internal_error("engine dropped request"))?;
+                }
             }
-            Err(e) => protocol::error(&format!("bad JSON: {e}")),
-        };
-        writer.write_all(resp.encode().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+            Err(e) => write_line(&mut writer, &api::parse_error(&format!("bad JSON: {e}")))?,
+        }
     }
     Ok(())
 }
 
-/// Blocking JSON-lines client (used by examples and tests).
+/// Blocking JSON-lines client (used by examples, tests and `mpic call`).
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -135,12 +211,43 @@ impl Client {
         Ok(Client { writer: stream.try_clone()?, reader: BufReader::new(stream) })
     }
 
-    pub fn call(&mut self, req: &Value) -> Result<Value> {
+    fn send(&mut self, req: &Value) -> Result<()> {
         self.writer.write_all(req.encode().as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
+        Ok(())
+    }
+
+    fn read_reply(&mut self) -> Result<Value> {
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        Value::parse(&line)
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            anyhow::bail!("connection closed by server");
+        }
+        Value::parse(line.trim_end())
+    }
+
+    /// One-shot request/reply. Do not use for `"stream":true` requests —
+    /// the first chunk line would be returned as the reply; use
+    /// [`Client::call_stream`] instead.
+    pub fn call(&mut self, req: &Value) -> Result<Value> {
+        self.send(req)?;
+        self.read_reply()
+    }
+
+    /// Issue a (streaming or not) request, invoking `on_chunk` for every
+    /// `"stream":true` chunk line and returning the final reply line (the
+    /// `"done":true` summary, a plain reply, or an error object).
+    pub fn call_stream(&mut self, req: &Value, mut on_chunk: impl FnMut(&Value)) -> Result<Value> {
+        self.send(req)?;
+        loop {
+            let v = self.read_reply()?;
+            let is_chunk = v.opt("stream").and_then(|s| s.as_bool().ok()).unwrap_or(false);
+            if is_chunk {
+                on_chunk(&v);
+            } else {
+                return Ok(v);
+            }
+        }
     }
 }

@@ -71,6 +71,14 @@ impl Value {
         Ok(f as usize)
     }
 
+    pub fn as_u64(&self) -> Result<u64> {
+        let f = self.as_f64()?;
+        if f < 0.0 || f.fract() != 0.0 {
+            bail!("expected non-negative integer, got {f}");
+        }
+        Ok(f as u64)
+    }
+
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),
@@ -120,6 +128,13 @@ impl Value {
 
     pub fn arr(items: Vec<Value>) -> Value {
         Value::Arr(items)
+    }
+
+    /// Insert (or replace) a member on an object; no-op on non-objects.
+    pub fn set(&mut self, key: &str, val: Value) {
+        if let Value::Obj(m) = self {
+            m.insert(key.to_string(), val);
+        }
     }
 
     /// Serialise to a compact JSON string.
@@ -404,5 +419,25 @@ mod tests {
         assert!(Value::num(-1.0).as_usize().is_err());
         assert!(Value::num(1.5).as_usize().is_err());
         assert_eq!(Value::num(7.0).as_usize().unwrap(), 7);
+    }
+
+    #[test]
+    fn u64_accessor_guards() {
+        assert!(Value::num(-1.0).as_u64().is_err());
+        assert!(Value::str("x").as_u64().is_err());
+        assert_eq!(Value::num(9.0).as_u64().unwrap(), 9);
+    }
+
+    #[test]
+    fn set_inserts_and_replaces() {
+        let mut v = Value::obj(vec![("a", Value::num(1.0))]);
+        v.set("b", Value::Bool(true));
+        v.set("a", Value::num(2.0));
+        assert_eq!(v.get("a").unwrap().as_f64().unwrap(), 2.0);
+        assert!(v.get("b").unwrap().as_bool().unwrap());
+        // No-op on non-objects.
+        let mut n = Value::num(1.0);
+        n.set("a", Value::Null);
+        assert_eq!(n, Value::num(1.0));
     }
 }
