@@ -10,7 +10,7 @@
 
 use mpic::coordinator::Policy;
 use mpic::harness;
-use mpic::util::bench::{emit, Row, Table};
+use mpic::util::bench::{emit, emit_summary, Row, Table};
 use mpic::util::cli::Args;
 use mpic::workload::{generate, Dataset, WorkloadSpec};
 
@@ -86,6 +86,15 @@ fn main() {
     }
 
     emit("fig9_main_comparison", &tables);
+    emit_summary(
+        "fig9_main_comparison",
+        &[
+            ("mpic32_best_ttft_saving_vs_prefix", headline_saving),
+            ("mpic32_worst_score_loss", headline_loss),
+            ("panels", tables.len() as f64),
+            ("convs_per_panel", convs as f64),
+        ],
+    );
     println!(
         "[headline] MPIC-32 best TTFT saving vs prefix: {:.1}% (paper: 54.1%); worst score loss: {:.1}% (paper: <=13.6%)",
         headline_saving * 100.0,

@@ -14,7 +14,7 @@ use mpic::kv::store::{KvStore, StoreConfig};
 use mpic::kv::{codec, ImageKv, KvKey, KvShape};
 use mpic::mm::{ImageId, LinkedLayout, Prompt, Tokenizer, UserId};
 use mpic::runtime::artifacts::Manifest;
-use mpic::util::bench::{emit, time_fn, Row, Table};
+use mpic::util::bench::{emit, emit_summary, time_fn, Row, Table};
 use mpic::util::rng::Rng;
 use mpic::util::threadpool::ThreadPool;
 
@@ -46,8 +46,10 @@ fn main() {
     let n_bucket = pl.selected.len().next_multiple_of(32);
 
     let mut table = Table::new("perf_micro: coordinator hot paths");
+    let mut summary: Vec<(String, f64)> = Vec::new();
     let mut bench = |name: &str, iters: usize, f: &mut dyn FnMut()| {
         let s = time_fn(3, iters, f);
+        summary.push((format!("{name}_mean_us"), s.mean() * 1e6));
         table.add(
             Row::new()
                 .str("op", name)
@@ -110,6 +112,8 @@ fn main() {
     });
 
     emit("perf_micro", &[table]);
+    let fields: Vec<(&str, f64)> = summary.iter().map(|(k, x)| (k.as_str(), *x)).collect();
+    emit_summary("perf_micro", &fields);
 }
 
 fn synthetic_meta() -> mpic::runtime::artifacts::ModelMeta {

@@ -1,0 +1,250 @@
+//! Serial-loop vs continuous-batching pipeline serving on an MMDU-like
+//! Poisson arrival trace (`workload/trace.rs`): throughput and tail TTFT.
+//!
+//! Both modes run against the real TCP server. The **serial** driver
+//! reproduces the pre-pipeline engine-loop semantics: one connection, one
+//! request at a time, synchronous uploads — the next request is not sent
+//! until the previous one is fully answered, so every arrival behind a
+//! long request head-of-line blocks. The **pipeline** driver opens one
+//! connection per conversation, uploads asynchronously (the store
+//! write-through leaves the engine thread) and streams infers
+//! concurrently, so prefills and decode rounds interleave.
+//!
+//! Reported: ops/s over the makespan, and p50/p99 TTFT measured from each
+//! request's *arrival time* (the paper's response-time framing, §5).
+//!
+//! `cargo bench --bench pipeline_throughput -- --convs 8 --rate 24`
+
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use mpic::harness;
+use mpic::server::{Client, ServeConfig};
+use mpic::util::bench::{emit, emit_summary, Row, Table};
+use mpic::util::cli::Args;
+use mpic::util::json::Value;
+use mpic::util::stats::Samples;
+use mpic::workload::trace::Trace;
+
+#[derive(Clone)]
+struct Conv {
+    user: u64,
+    handles: Vec<String>,
+    text: String,
+    at_ms: u64,
+}
+
+struct Measured {
+    ttft: Samples,
+    resp: Samples,
+    makespan_s: f64,
+    n_ops: usize,
+    n_infers: usize,
+}
+
+fn conversations(n: usize, images_per_conv: usize, trace: &Trace) -> Vec<Conv> {
+    (0..n)
+        .map(|i| {
+            let handles: Vec<String> =
+                (0..images_per_conv).map(|j| format!("IMAGE#THR{i}N{j}")).collect();
+            let refs = handles.join(" ");
+            Conv {
+                user: i as u64 + 1,
+                text: format!("Please compare {refs} and describe the scenes in detail"),
+                handles,
+                at_ms: trace.events[i].at_ms,
+            }
+        })
+        .collect()
+}
+
+fn v(s: &str) -> Value {
+    Value::parse(s).unwrap()
+}
+
+fn upload_req(c: &Conv, handle: &str, asynchronous: bool) -> Value {
+    let a = if asynchronous { r#","async":true"# } else { "" };
+    v(&format!(r#"{{"op":"upload","user":{}{a},"handle":"{handle}"}}"#, c.user))
+}
+
+fn infer_req(c: &Conv, max_new: usize) -> Value {
+    v(&format!(
+        r#"{{"v":2,"op":"infer","user":{},"policy":"mpic-32","max_new":{max_new},"stream":true,"text":"{}"}}"#,
+        c.user, c.text
+    ))
+}
+
+fn sleep_until(t0: Instant, at_ms: u64) {
+    let target = t0 + Duration::from_millis(at_ms);
+    std::thread::sleep(target.saturating_duration_since(Instant::now()));
+}
+
+/// Stream one infer, returning (ttft_from_arrival, resp_from_arrival).
+fn timed_infer(c: &mut Client, req: &Value, arrival: Instant) -> (f64, f64) {
+    let mut first: Option<Instant> = None;
+    let fin = c
+        .call_stream(req, |_| {
+            if first.is_none() {
+                first = Some(Instant::now());
+            }
+        })
+        .expect("infer");
+    assert!(
+        fin.get("ok").unwrap().as_bool().unwrap(),
+        "infer must succeed: {}",
+        fin.encode()
+    );
+    let done = Instant::now();
+    let ttft = first.unwrap_or(done).duration_since(arrival).as_secs_f64();
+    (ttft, done.duration_since(arrival).as_secs_f64())
+}
+
+fn run_mode(pipeline: bool, convs: &[Conv], max_new: usize) -> Measured {
+    let tag = if pipeline { "thr-pipe" } else { "thr-serial" };
+    let engine = harness::experiment_engine("mpic-sim-a", tag).expect("engine");
+    let (addr_tx, addr_rx) = channel();
+    let convs_owned: Vec<Conv> = convs.to_vec();
+
+    let driver = std::thread::spawn(move || -> Measured {
+        let addr = addr_rx.recv().unwrap();
+        let n_ops: usize =
+            convs_owned.iter().map(|c| c.handles.len() + 1).sum();
+        let n_infers = convs_owned.len();
+        let t0 = Instant::now();
+        let mut ttft = Samples::new();
+        let mut resp = Samples::new();
+        let makespan_s;
+
+        if !pipeline {
+            // Serial loop: one connection, strictly one request at a time.
+            let mut c = Client::connect(addr).unwrap();
+            let mut last_done = t0;
+            for conv in &convs_owned {
+                sleep_until(t0, conv.at_ms);
+                let arrival = Instant::now();
+                for h in &conv.handles {
+                    let r = c.call(&upload_req(conv, h, false)).unwrap();
+                    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{}", r.encode());
+                }
+                let (t, r) = timed_infer(&mut c, &infer_req(conv, max_new), arrival);
+                ttft.push(t);
+                resp.push(r);
+                last_done = Instant::now();
+            }
+            makespan_s = last_done.duration_since(t0).as_secs_f64();
+        } else {
+            // Pipeline: one connection per conversation, async uploads,
+            // concurrent streaming infers.
+            let mut workers = Vec::new();
+            for conv in convs_owned.clone() {
+                workers.push(std::thread::spawn(move || -> (f64, f64, Instant) {
+                    sleep_until(t0, conv.at_ms);
+                    let arrival = Instant::now();
+                    let mut c = Client::connect(addr).unwrap();
+                    let mut jobs = Vec::new();
+                    for h in &conv.handles {
+                        let acc = c.call(&upload_req(&conv, h, true)).unwrap();
+                        assert!(acc.get("ok").unwrap().as_bool().unwrap(), "{}", acc.encode());
+                        jobs.push(acc.get("job").unwrap().as_u64().unwrap());
+                    }
+                    // Poll the upload lane so the infer hits the cache.
+                    for jid in jobs {
+                        loop {
+                            let st = c
+                                .call(&v(&format!(r#"{{"op":"upload.stat","job":{jid}}}"#)))
+                                .unwrap();
+                            let state = st.get("state").unwrap().as_str().unwrap().to_string();
+                            assert_ne!(state, "failed", "{}", st.encode());
+                            if state == "done" {
+                                break;
+                            }
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                    }
+                    let (t, r) = timed_infer(&mut c, &infer_req(&conv, max_new), arrival);
+                    (t, r, Instant::now())
+                }));
+            }
+            let mut last_done = t0;
+            for w in workers {
+                let (t, r, done) = w.join().unwrap();
+                ttft.push(t);
+                resp.push(r);
+                last_done = last_done.max(done);
+            }
+            makespan_s = last_done.duration_since(t0).as_secs_f64();
+        }
+
+        let mut shut = Client::connect(addr).unwrap();
+        let bye = shut.call(&v(r#"{"op":"shutdown"}"#)).unwrap();
+        assert!(bye.get("ok").unwrap().as_bool().unwrap());
+        Measured { ttft, resp, makespan_s, n_ops, n_infers }
+    });
+
+    mpic::server::serve_with(&engine, "127.0.0.1:0", ServeConfig::default(), |a| {
+        addr_tx.send(a).unwrap();
+    })
+    .expect("serve");
+    driver.join().unwrap()
+}
+
+fn main() {
+    mpic::util::logging::init();
+    if !harness::artifacts_ready() {
+        return;
+    }
+    let args = Args::parse(&["bench"]).unwrap();
+    let n_convs = args.usize_or("convs", 8).unwrap();
+    let images = args.usize_or("images", 3).unwrap();
+    let rate = args.f64_or("rate", 24.0).unwrap();
+    let max_new = args.usize_or("max-new", 4).unwrap();
+
+    let trace = Trace::poisson(n_convs, 1, rate, 0x7123CE);
+    let convs = conversations(n_convs, images, &trace);
+    println!(
+        "trace: {n_convs} conversations × ({images} uploads + 1 infer), Poisson {rate}/s, \
+         last arrival at {} ms",
+        trace.events.last().unwrap().at_ms
+    );
+
+    let serial = run_mode(false, &convs, max_new);
+    let pipe = run_mode(true, &convs, max_new);
+
+    let mut table = Table::new("pipeline_throughput: serial loop vs continuous-batching pipeline");
+    for (mode, m) in [("serial", &serial), ("pipeline", &pipe)] {
+        table.add(
+            Row::new()
+                .str("mode", mode)
+                .num("ops", m.n_ops as f64)
+                .num("infers", m.n_infers as f64)
+                .num("makespan_s", m.makespan_s)
+                .num("ops_per_s", m.n_ops as f64 / m.makespan_s)
+                .num("ttft_p50_ms", m.ttft.p50() * 1e3)
+                .num("ttft_p99_ms", m.ttft.p99() * 1e3)
+                .num("resp_p99_ms", m.resp.p99() * 1e3),
+        );
+    }
+    emit("pipeline_throughput", &[table]);
+
+    let thr_serial = serial.n_ops as f64 / serial.makespan_s;
+    let thr_pipe = pipe.n_ops as f64 / pipe.makespan_s;
+    let ratio = thr_pipe / thr_serial;
+    println!(
+        "[headline] pipeline vs serial: {ratio:.2}x throughput ({thr_serial:.1} -> {thr_pipe:.1} ops/s), \
+         p99 TTFT {:.1} -> {:.1} ms",
+        serial.ttft.p99() * 1e3,
+        pipe.ttft.p99() * 1e3
+    );
+    emit_summary(
+        "pipeline_throughput",
+        &[
+            ("throughput_ratio", ratio),
+            ("serial_ops_per_s", thr_serial),
+            ("pipeline_ops_per_s", thr_pipe),
+            ("serial_ttft_p99_ms", serial.ttft.p99() * 1e3),
+            ("pipeline_ttft_p99_ms", pipe.ttft.p99() * 1e3),
+            ("serial_resp_p99_ms", serial.resp.p99() * 1e3),
+            ("pipeline_resp_p99_ms", pipe.resp.p99() * 1e3),
+        ],
+    );
+}

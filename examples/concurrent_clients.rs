@@ -1,0 +1,130 @@
+//! The online serving pipeline from a client's point of view: three
+//! concurrent streaming `infer`s interleaving their token chunks, the
+//! async upload lane (`"async":true` + `upload.stat` polling), and
+//! `overloaded` backpressure when the in-flight bound is exceeded.
+//!
+//! ```sh
+//! cargo run --release --example concurrent_clients
+//! ```
+
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Duration;
+
+use mpic::harness;
+use mpic::server::pipeline::PipelineConfig;
+use mpic::server::{Client, ServeConfig};
+use mpic::util::json::Value;
+
+fn req(s: &str) -> Value {
+    Value::parse(s).expect("request literal")
+}
+
+fn main() -> mpic::Result<()> {
+    mpic::util::logging::init();
+    if !harness::artifacts_ready() {
+        return Ok(());
+    }
+    let engine = harness::experiment_engine("mpic-sim-a", "concurrent")?;
+    let (addr_tx, addr_rx) = channel();
+
+    let driver = std::thread::spawn(move || -> mpic::Result<()> {
+        let addr = addr_rx.recv().expect("server address");
+        let mut admin = Client::connect(addr)?;
+
+        println!("== async upload lane: accept now, precompute off the critical path ==");
+        let acc = admin.call(&req(
+            r#"{"v":2,"id":"u1","op":"upload","user":1,"handle":"IMAGE#CITY","async":true}"#,
+        ))?;
+        println!("  accepted: {}", acc.encode());
+        let job = acc.get("job")?.as_u64()?;
+        loop {
+            let st = admin.call(&req(&format!(r#"{{"op":"upload.stat","job":{job}}}"#)))?;
+            let state = st.get("state")?.as_str()?.to_string();
+            println!("  upload.stat -> {state}");
+            if state == "done" || state == "failed" {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        println!("== three concurrent streaming infers: chunks interleave ==");
+        let order: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let barrier = Arc::new(Barrier::new(3));
+        let mut clients = Vec::new();
+        for name in ["A", "B", "C"] {
+            let order = Arc::clone(&order);
+            let barrier = Arc::clone(&barrier);
+            clients.push(std::thread::spawn(move || -> mpic::Result<()> {
+                let mut c = Client::connect(addr)?;
+                barrier.wait();
+                let fin = c.call_stream(
+                    &req(&format!(
+                        r#"{{"v":2,"id":"{name}","op":"infer","user":1,"policy":"mpic-16","max_new":6,"stream":true,"text":"Describe IMAGE#CITY in detail please"}}"#
+                    )),
+                    |chunk| {
+                        let seq = chunk.get("seq").unwrap().as_usize().unwrap();
+                        order.lock().unwrap().push(format!("{name}{seq}"));
+                    },
+                )?;
+                anyhow::ensure!(fin.get("ok")?.as_bool()?, "stream failed");
+                Ok(())
+            }));
+        }
+        for h in clients {
+            h.join().expect("client thread")?;
+        }
+        println!("  chunk arrival order: {}", order.lock().unwrap().join(" "));
+
+        println!("== backpressure: the in-flight bound rejects with `overloaded` ==");
+        // This server runs with queue_bound=3: hold all three slots with
+        // long streams, then watch a fourth request bounce.
+        let hold = Arc::new(Barrier::new(4));
+        let mut streams = Vec::new();
+        for name in ["H1", "H2", "H3"] {
+            let hold = Arc::clone(&hold);
+            streams.push(std::thread::spawn(move || -> mpic::Result<()> {
+                let mut c = Client::connect(addr)?;
+                let mut signalled = false;
+                c.call_stream(
+                    &req(&format!(
+                        r#"{{"id":"{name}","op":"infer","user":1,"policy":"mpic-16","max_new":16,"stream":true,"text":"Describe IMAGE#CITY in detail please"}}"#
+                    )),
+                    |_| {
+                        if !signalled {
+                            hold.wait();
+                            signalled = true;
+                        }
+                    },
+                )?;
+                Ok(())
+            }));
+        }
+        hold.wait(); // all three streams are mid-flight
+        let bounced = admin.call(&req(
+            r#"{"v":2,"id":"x","op":"infer","user":1,"text":"Describe IMAGE#CITY please"}"#,
+        ))?;
+        println!("  fourth request: {}", bounced.encode());
+        for s in streams {
+            s.join().expect("stream thread")?;
+        }
+
+        let stats = admin.call(&req(r#"{"v":2,"op":"stats"}"#))?;
+        println!(
+            "== pipeline health == {}",
+            stats.get("metrics")?.get("pipeline")?.encode()
+        );
+        admin.call(&req(r#"{"op":"shutdown"}"#))?;
+        Ok(())
+    });
+
+    let cfg = ServeConfig {
+        pipeline: PipelineConfig { queue_bound: 3, ..Default::default() },
+        ..Default::default()
+    };
+    mpic::server::serve_with(&engine, "127.0.0.1:0", cfg, |a| {
+        addr_tx.send(a).expect("address channel");
+    })?;
+    driver.join().expect("driver thread")?;
+    Ok(())
+}

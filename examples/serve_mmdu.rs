@@ -76,9 +76,13 @@ fn main() -> mpic::Result<()> {
         let mut score = Samples::new();
         let mut tokens_out = 0usize;
         for c in &completions {
-            ttft.push(c.result.ttft.total_s);
-            tokens_out += c.result.tokens.len();
-            let s = quality::score(&refs[c.id as usize], &c.result);
+            let Ok(r) = &c.outcome else {
+                eprintln!("request {} rejected: {:?}", c.id, c.outcome.as_ref().err());
+                continue;
+            };
+            ttft.push(r.ttft.total_s);
+            tokens_out += r.tokens.len();
+            let s = quality::score(&refs[c.id as usize], r);
             score.push(s.score);
         }
         table.add(

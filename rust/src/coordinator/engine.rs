@@ -140,6 +140,9 @@ pub struct Engine {
     pub dynamic_lib: DynamicLibrary,
     retriever: RefCell<Retriever>,
     transfer: TransferEngine,
+    /// Shared worker pool: drives the transfer engine's load lane and the
+    /// serving pipeline's async upload lane (store write-through).
+    pool: Arc<ThreadPool>,
     pub metrics: Metrics,
     cfg: EngineConfig,
 }
@@ -153,7 +156,7 @@ impl Engine {
         let pool = Arc::new(ThreadPool::new(cfg.pool_threads));
         let static_lib = StaticLibrary::new(Arc::clone(&store), cfg.user_quota);
         let dynamic_lib = DynamicLibrary::new(Arc::clone(&store));
-        let transfer = TransferEngine::new(pool);
+        let transfer = TransferEngine::new(Arc::clone(&pool));
         Ok(Engine {
             runtime,
             meta,
@@ -163,6 +166,7 @@ impl Engine {
             dynamic_lib,
             retriever: RefCell::new(Retriever::new()),
             transfer,
+            pool,
             metrics: Metrics::new(),
             cfg,
         })
@@ -186,6 +190,13 @@ impl Engine {
 
     pub fn tokenizer(&self) -> &Tokenizer {
         &self.tokenizer
+    }
+
+    /// The engine's shared worker pool (transfer loads, async store
+    /// write-through). PJRT execution must stay on the engine's thread;
+    /// only `Send` host-side work belongs here.
+    pub fn pool(&self) -> &Arc<ThreadPool> {
+        &self.pool
     }
 
     /// Switch the transfer engine between overlapped and serial fetch

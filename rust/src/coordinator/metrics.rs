@@ -1,5 +1,7 @@
 //! Serving metrics: TTFT / decode-step latency / throughput / cache stats
-//! / per-op request counters and latency accumulators.
+//! / per-op request counters and latency accumulators / pipeline health
+//! (admission wait, batch occupancy, queue depth, overload rejections,
+//! async upload completions) surfaced under `stats.metrics.pipeline`.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -27,6 +29,18 @@ struct Inner {
     /// Per-op wall-time samples, keyed by wire op name (`infer`,
     /// `cache.list`, …). Sample count doubles as the request counter.
     ops: BTreeMap<String, Samples>,
+    /// Seconds each admitted job spent in the admission queue (channel
+    /// wait between the connection handler and the engine loop).
+    admission_wait: Samples,
+    /// Active sequences per pipeline decode round (batch occupancy).
+    batch_occupancy: Samples,
+    /// In-flight weighted requests sampled once per pipeline round.
+    queue_depth: Samples,
+    /// Requests rejected with `overloaded` (gate bound, deadline, busy
+    /// session). Published by the pipeline from the gate's counter.
+    overload_rejected: u64,
+    /// Async upload-lane jobs that reached a terminal state.
+    async_uploads: u64,
 }
 
 impl Metrics {
@@ -43,6 +57,11 @@ impl Metrics {
                 requests: 0,
                 tokens_out: 0,
                 ops: BTreeMap::new(),
+                admission_wait: Samples::new(),
+                batch_occupancy: Samples::new(),
+                queue_depth: Samples::new(),
+                overload_rejected: 0,
+                async_uploads: 0,
             }),
         }
     }
@@ -69,6 +88,28 @@ impl Metrics {
     pub fn record_op(&self, op: &str, secs: f64) {
         let mut g = self.inner.lock().unwrap();
         g.ops.entry(op.to_string()).or_insert_with(Samples::new).push(secs);
+    }
+
+    /// Record how long a job waited in the admission queue before the
+    /// engine loop picked it up.
+    pub fn record_admission_wait(&self, secs: f64) {
+        self.inner.lock().unwrap().admission_wait.push(secs);
+    }
+
+    /// Record one pipeline round: how many sequences were interleaved and
+    /// how many weighted requests were in flight.
+    pub fn record_pipeline_round(&self, occupancy: usize, queue_depth: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batch_occupancy.push(occupancy as f64);
+        g.queue_depth.push(queue_depth as f64);
+    }
+
+    /// Publish the pipeline's monotonic counters (kept by the gate and the
+    /// upload lane as atomics, copied in by the engine loop).
+    pub fn set_pipeline_counters(&self, overload_rejected: u64, async_uploads: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.overload_rejected = overload_rejected;
+        g.async_uploads = async_uploads;
     }
 
     /// How many requests of this op have been recorded.
@@ -109,6 +150,13 @@ impl Metrics {
             ])
         };
         let ops = Value::Obj(g.ops.iter().map(|(k, x)| (k.clone(), s(x))).collect());
+        let pipeline = Value::obj(vec![
+            ("admission_wait_s", s(&g.admission_wait)),
+            ("batch_occupancy", s(&g.batch_occupancy)),
+            ("queue_depth", s(&g.queue_depth)),
+            ("rejected_overloaded", Value::num(g.overload_rejected as f64)),
+            ("async_uploads", Value::num(g.async_uploads as f64)),
+        ]);
         Value::obj(vec![
             ("requests", Value::num(g.requests as f64)),
             ("tokens_out", Value::num(g.tokens_out as f64)),
@@ -119,6 +167,7 @@ impl Metrics {
             ("decode_step_s", s(&g.decode_step)),
             ("upload_s", s(&g.upload)),
             ("ops", ops),
+            ("pipeline", pipeline),
         ])
     }
 }
@@ -184,6 +233,26 @@ mod tests {
         assert_eq!(infer.get("n").unwrap().as_f64().unwrap(), 2.0);
         assert!((infer.get("mean").unwrap().as_f64().unwrap() - 0.3).abs() < 1e-9);
         assert!(ops.get("cache.list").is_ok());
+    }
+
+    #[test]
+    fn pipeline_health_surfaces_in_snapshot() {
+        let m = Metrics::new();
+        m.record_admission_wait(0.002);
+        m.record_admission_wait(0.004);
+        m.record_pipeline_round(3, 5);
+        m.record_pipeline_round(1, 2);
+        m.set_pipeline_counters(7, 2);
+        let snap = m.snapshot();
+        let p = snap.get("pipeline").unwrap();
+        assert_eq!(p.get("admission_wait_s").unwrap().get("n").unwrap().as_f64().unwrap(), 2.0);
+        assert!(
+            (p.get("batch_occupancy").unwrap().get("mean").unwrap().as_f64().unwrap() - 2.0).abs()
+                < 1e-9
+        );
+        assert_eq!(p.get("queue_depth").unwrap().get("n").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(p.get("rejected_overloaded").unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(p.get("async_uploads").unwrap().as_f64().unwrap(), 2.0);
     }
 
     #[test]

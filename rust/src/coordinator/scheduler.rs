@@ -8,6 +8,15 @@
 //! request's prefill never waits for older requests to *finish*, only for
 //! block capacity — which is the scheduling property continuous batching
 //! exists to provide.
+//!
+//! Online serving (the [`crate::server::pipeline`] loop) drives the
+//! scheduler through [`Scheduler::step_cb`], which reports per-token
+//! decode progress through a callback so streaming responses can fan
+//! chunks out while other requests are still decoding. Every submitted
+//! request is guaranteed a [`Completion`] — requests the scheduler cannot
+//! serve (footprint larger than the whole block pool, prefill or decode
+//! failure) complete with an explicit [`Reject`] instead of being
+//! silently dropped, so callers waiting on a reply never hang.
 
 use std::collections::{HashMap, VecDeque};
 
@@ -15,6 +24,7 @@ use super::engine::{ActiveSeq, Engine, InferenceResult};
 use super::selection::Policy;
 use crate::kv::block::{BlockAllocator, SeqId};
 use crate::mm::Prompt;
+use crate::util::stats::Samples;
 use crate::Result;
 
 /// A queued request.
@@ -26,25 +36,66 @@ pub struct Request {
     pub max_new: usize,
 }
 
-/// Scheduler outcome for one request.
+/// Why a request completed without a result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectCode {
+    /// The request's KV footprint exceeds the entire block pool; it can
+    /// never be admitted.
+    TooLarge,
+    /// The engine failed while prefilling or decoding the request.
+    EngineFailed,
+}
+
+/// An explicit rejection delivered as a completion.
+#[derive(Debug, Clone)]
+pub struct Reject {
+    pub code: RejectCode,
+    pub message: String,
+}
+
+/// Scheduler outcome for one request: a result, or an explicit rejection.
 #[derive(Debug)]
 pub struct Completion {
     pub id: u64,
-    pub result: InferenceResult,
-    /// Scheduling steps this request waited in the queue before admission.
+    pub outcome: std::result::Result<InferenceResult, Reject>,
+    /// Scheduling rounds this request waited in the queue before admission.
     pub queued_steps: usize,
 }
 
+impl Completion {
+    /// The inference result, when the request was actually served.
+    pub fn result(&self) -> Option<&InferenceResult> {
+        self.outcome.as_ref().ok()
+    }
+}
+
+/// Per-step scheduling events, reported through [`Scheduler::step_cb`].
+#[derive(Debug, Clone)]
+pub enum SchedEvent {
+    /// A queued request was admitted (its prefill just completed).
+    Admitted { id: u64, queued_rounds: usize },
+    /// An active sequence decoded one more token.
+    Token { id: u64, index: usize, token: i32 },
+}
+
 /// Scheduler statistics.
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone)]
 pub struct SchedStats {
     pub admitted: u64,
     pub completed: u64,
+    /// Requests rejected because they can never fit the block pool.
     pub rejected: u64,
+    /// Requests that failed in the engine (prefill/decode error).
+    pub failed: u64,
     pub max_active: usize,
     pub decode_rounds: u64,
     /// Sum over decode rounds of the number of active sequences.
     pub occupancy_sum: u64,
+    /// Rounds waited in the queue, one sample per admitted request. Every
+    /// queued request accrues one round per step it stays queued (not just
+    /// when the head blocks), so the percentiles are honest under the
+    /// online pipeline's max-batch cap as well as under capacity waits.
+    pub queue_wait: Samples,
 }
 
 impl SchedStats {
@@ -54,6 +105,24 @@ impl SchedStats {
             0.0
         } else {
             self.occupancy_sum as f64 / self.decode_rounds as f64
+        }
+    }
+
+    /// Median queue wait (rounds) across admitted requests; 0 when none.
+    pub fn queue_wait_p50(&self) -> f64 {
+        if self.queue_wait.is_empty() {
+            0.0
+        } else {
+            self.queue_wait.p50()
+        }
+    }
+
+    /// p99 queue wait (rounds) across admitted requests; 0 when none.
+    pub fn queue_wait_p99(&self) -> f64 {
+        if self.queue_wait.is_empty() {
+            0.0
+        } else {
+            self.queue_wait.p99()
         }
     }
 }
@@ -72,6 +141,8 @@ pub struct Scheduler {
     active: Vec<ActiveEntry>,
     seq_of: HashMap<u64, SeqId>,
     next_sid: u64,
+    /// Maximum concurrently active (decoding) sequences; 0 = unbounded.
+    max_batch: usize,
     pub stats: SchedStats,
 }
 
@@ -84,8 +155,16 @@ impl Scheduler {
             active: Vec::new(),
             seq_of: HashMap::new(),
             next_sid: 1,
+            max_batch: 0,
             stats: SchedStats::default(),
         }
+    }
+
+    /// Cap the number of concurrently decoding sequences (0 = unbounded).
+    /// The online pipeline sets this so one burst cannot monopolise the
+    /// decode round-robin.
+    pub fn set_max_batch(&mut self, max_batch: usize) {
+        self.max_batch = max_batch;
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -104,41 +183,92 @@ impl Scheduler {
         self.blocks.utilization()
     }
 
-    /// Run one scheduling step:
-    /// 1. admit queued prefills FCFS while block capacity allows;
-    /// 2. advance every active sequence by one decode step (round-robin);
-    /// 3. reap completed sequences and free their blocks.
+    /// Run one scheduling step (no event observer). See [`Scheduler::step_cb`].
     pub fn step(&mut self, engine: &Engine) -> Result<Vec<Completion>> {
+        self.step_cb(engine, &mut |_| {})
+    }
+
+    /// Run one scheduling step:
+    /// 1. admit queued prefills FCFS while block capacity (and the
+    ///    max-batch cap) allow — unserviceable or failing requests
+    ///    complete immediately with an explicit [`Reject`];
+    /// 2. advance every active sequence by one decode step (round-robin),
+    ///    reporting each new token through `on_event`;
+    /// 3. reap completed sequences and free their blocks.
+    pub fn step_cb(
+        &mut self,
+        engine: &Engine,
+        on_event: &mut dyn FnMut(SchedEvent),
+    ) -> Result<Vec<Completion>> {
+        let mut completions = Vec::new();
+
         // ---- admission ----------------------------------------------------
         loop {
+            if self.max_batch > 0 && self.active.len() >= self.max_batch {
+                break;
+            }
             let Some((req, _)) = self.queue.front() else { break };
             let footprint = estimate_tokens(engine, req);
             if !self.blocks.can_admit(footprint) {
                 if self.active.is_empty() {
-                    // Larger than the whole pool: reject, or it deadlocks.
-                    let (req, _) = self.queue.pop_front().unwrap();
+                    // Larger than the whole pool: complete with an explicit
+                    // rejection (a silent drop would hang the caller).
+                    let (req, queued_steps) = self.queue.pop_front().unwrap();
+                    let pool = self.blocks.total_blocks() * self.blocks.block_tokens();
                     log::warn!(
-                        "scheduler: rejecting request {} ({footprint} tokens > pool)",
+                        "scheduler: rejecting request {} ({footprint} tokens > pool of {pool})",
                         req.id
                     );
                     self.stats.rejected += 1;
+                    completions.push(Completion {
+                        id: req.id,
+                        outcome: Err(Reject {
+                            code: RejectCode::TooLarge,
+                            message: format!(
+                                "request needs {footprint} KV tokens but the block pool holds only {pool}"
+                            ),
+                        }),
+                        queued_steps,
+                    });
                     continue;
                 }
                 // Wait for capacity (FCFS head-of-line).
-                for (_, waited) in self.queue.iter_mut() {
-                    *waited += 1;
-                }
                 break;
             }
             let (req, queued_steps) = self.queue.pop_front().unwrap();
             let sid = SeqId(self.next_sid);
             self.next_sid += 1;
             self.blocks.alloc_seq(sid, footprint)?;
-            let seq = engine.prefill(&req.prompt, req.policy, req.max_new)?;
+            let seq = match engine.prefill(&req.prompt, req.policy, req.max_new) {
+                Ok(seq) => seq,
+                Err(e) => {
+                    // A failed prefill must neither strand its blocks nor
+                    // hang its caller.
+                    self.blocks.free_seq(sid)?;
+                    self.stats.failed += 1;
+                    completions.push(Completion {
+                        id: req.id,
+                        outcome: Err(Reject {
+                            code: RejectCode::EngineFailed,
+                            message: format!("prefill failed: {e:#}"),
+                        }),
+                        queued_steps,
+                    });
+                    continue;
+                }
+            };
             self.seq_of.insert(req.id, sid);
+            self.stats.queue_wait.push(queued_steps as f64);
+            on_event(SchedEvent::Admitted { id: req.id, queued_rounds: queued_steps });
             self.active.push(ActiveEntry { id: req.id, sid, seq, queued_steps });
             self.stats.admitted += 1;
             self.stats.max_active = self.stats.max_active.max(self.active.len());
+        }
+        // Honest wait accounting: every request still queued after the
+        // admission phase waited one more round, whatever stopped admission
+        // (capacity, max-batch cap, FCFS order).
+        for (_, waited) in self.queue.iter_mut() {
+            *waited += 1;
         }
 
         // ---- one decode round ----------------------------------------------
@@ -149,24 +279,47 @@ impl Scheduler {
         let mut done = Vec::new();
         let mut still = Vec::new();
         for mut entry in self.active.drain(..) {
-            let more = engine.decode_one(&mut entry.seq)?;
-            if more {
-                still.push(entry);
-            } else {
-                done.push(entry);
+            let before = entry.seq.tokens.len();
+            match engine.decode_one(&mut entry.seq) {
+                Ok(more) => {
+                    for i in before..entry.seq.tokens.len() {
+                        on_event(SchedEvent::Token {
+                            id: entry.id,
+                            index: i,
+                            token: entry.seq.tokens[i],
+                        });
+                    }
+                    if more {
+                        still.push(entry);
+                    } else {
+                        done.push(entry);
+                    }
+                }
+                Err(e) => {
+                    self.blocks.free_seq(entry.sid)?;
+                    self.seq_of.remove(&entry.id);
+                    self.stats.failed += 1;
+                    completions.push(Completion {
+                        id: entry.id,
+                        outcome: Err(Reject {
+                            code: RejectCode::EngineFailed,
+                            message: format!("decode failed: {e:#}"),
+                        }),
+                        queued_steps: entry.queued_steps,
+                    });
+                }
             }
         }
         self.active = still;
 
         // ---- reap ----------------------------------------------------------
-        let mut completions = Vec::with_capacity(done.len());
         for entry in done {
             self.blocks.free_seq(entry.sid)?;
             self.seq_of.remove(&entry.id);
             self.stats.completed += 1;
             completions.push(Completion {
                 id: entry.id,
-                result: entry.seq.finish(),
+                outcome: Ok(entry.seq.finish()),
                 queued_steps: entry.queued_steps,
             });
         }
@@ -207,10 +360,75 @@ mod tests {
     }
 
     #[test]
+    fn queue_wait_percentiles_guard_empty() {
+        let mut s = SchedStats::default();
+        assert_eq!(s.queue_wait_p50(), 0.0);
+        assert_eq!(s.queue_wait_p99(), 0.0);
+        for w in [0.0, 1.0, 2.0, 3.0] {
+            s.queue_wait.push(w);
+        }
+        assert!((s.queue_wait_p50() - 1.5).abs() < 1e-12);
+        assert!(s.queue_wait_p99() <= 3.0 && s.queue_wait_p99() >= 2.0);
+    }
+
+    #[test]
     fn scheduler_constructs() {
         let s = Scheduler::new(64, 16);
         assert_eq!(s.pending(), 0);
         assert_eq!(s.active(), 0);
         assert_eq!(s.block_utilization(), 0.0);
+    }
+
+    #[test]
+    fn completion_accessor() {
+        let c = Completion {
+            id: 3,
+            outcome: Err(Reject { code: RejectCode::TooLarge, message: "too big".into() }),
+            queued_steps: 0,
+        };
+        assert!(c.result().is_none());
+        let c = Completion {
+            id: 4,
+            outcome: Err(Reject { code: RejectCode::EngineFailed, message: "boom".into() }),
+            queued_steps: 1,
+        };
+        assert_eq!(c.outcome.unwrap_err().code, RejectCode::EngineFailed);
+    }
+
+    /// Satellite regression: a request whose footprint exceeds the whole
+    /// pool must come back as an explicit error completion (the old code
+    /// only logged and dropped it, hanging any caller waiting on a reply).
+    /// Needs the engine for token estimation, so it gates on artifacts.
+    #[test]
+    fn rejection_is_an_explicit_error_completion() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+        let dir = std::env::temp_dir().join(format!("mpic-sched-rej-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let engine = Engine::new(crate::coordinator::EngineConfig {
+            model: "mpic-sim-a".into(),
+            store: crate::kv::store::StoreConfig { disk_dir: dir, ..Default::default() },
+            ..Default::default()
+        })
+        .expect("engine");
+
+        // Pool of 4 blocks × 16 tokens = 64 tokens; any real prompt plus a
+        // big decode budget cannot fit.
+        let mut sched = Scheduler::new(4, 16);
+        let prompt =
+            crate::mm::Prompt::parse(crate::mm::UserId(1), "please describe the scene in detail");
+        sched.submit(Request { id: 7, prompt, policy: Policy::Prefix, max_new: 4096 });
+
+        let completions = sched.step(&engine).expect("step");
+        assert_eq!(completions.len(), 1, "rejection must surface as a completion");
+        assert_eq!(completions[0].id, 7);
+        let err = completions[0].outcome.as_ref().expect_err("must be an error completion");
+        assert_eq!(err.code, RejectCode::TooLarge);
+        assert!(err.message.contains("KV tokens"), "message explains the footprint: {err:?}");
+        assert_eq!(sched.stats.rejected, 1);
+        assert_eq!(sched.pending(), 0, "rejected request must leave the queue");
+        assert_eq!(sched.active(), 0);
     }
 }

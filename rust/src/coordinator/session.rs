@@ -25,6 +25,25 @@ impl Session {
         Prompt { user, segments: self.history.clone() }
     }
 
+    /// The full prompt a user turn *would* link (history + this turn),
+    /// without mutating the session. The online pipeline uses this so an
+    /// in-flight turn that is later rejected (overload, engine failure)
+    /// leaves the history untouched; the turn is committed atomically with
+    /// the assistant reply via [`Session::commit_turn`] on success.
+    pub fn preview_turn(&self, user: UserId, turn: &Prompt) -> Prompt {
+        let mut segments = self.history.clone();
+        segments.extend(turn.segments.iter().cloned());
+        Prompt { user, segments }
+    }
+
+    /// Commit a completed turn: extend the history with the user turn and
+    /// the assistant's reply, and advance the turn counter.
+    pub fn commit_turn(&mut self, turn: &Prompt, reply_tokens: &[i32]) {
+        self.history.extend(turn.segments.iter().cloned());
+        self.turns += 1;
+        self.assistant_reply(reply_tokens);
+    }
+
     /// Record the assistant's reply (token ids rendered as one text span)
     /// so later turns attend over it.
     pub fn assistant_reply(&mut self, tokens: &[i32]) {
@@ -122,6 +141,30 @@ mod tests {
         // get() must not materialise sessions for unknown users.
         assert!(store.get(UserId(99)).is_none());
         assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn preview_does_not_mutate_commit_does() {
+        let mut store = SessionStore::new();
+        let user = UserId(11);
+        let t1 = Prompt::new(user).text("look at").image(ImageId(1));
+
+        // Preview: full prompt includes the turn, history untouched.
+        let full = store.session(user).preview_turn(user, &t1);
+        assert_eq!(full.segments.len(), 2);
+        assert_eq!(store.session(user).history_len(), 0);
+        assert_eq!(store.session(user).turns(), 0);
+
+        // Commit: history gains turn + reply, counter advances.
+        store.session(user).commit_turn(&t1, &[5, 6]);
+        assert_eq!(store.session(user).turns(), 1);
+        assert_eq!(store.session(user).history_len(), 3); // text + image + reply
+
+        // A second previewed turn sees the committed history.
+        let t2 = Prompt::new(user).text("and compare with").image(ImageId(2));
+        let full2 = store.session(user).preview_turn(user, &t2);
+        assert_eq!(full2.segments.len(), 5);
+        assert_eq!(full2.images(), vec![ImageId(1), ImageId(2)]);
     }
 
     #[test]

@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! mpic serve  [--addr 127.0.0.1:7401] [--model mpic-sim-a] [--artifacts DIR]
+//!             [--queue-bound 64] [--max-batch 8] [--deadline-ms 30000]
+//!             [--conn-threads 8] [--kv-blocks 4096] [--block-tokens 16]
 //! mpic call   --json '{"v":2,"op":"stats"}' [--addr 127.0.0.1:7401]
 //! mpic run    [--dataset mmdu|sparkles] [--policy mpic-32] [--convs N] [--images-min A --images-max B]
 //! mpic upload --user ID --handle IMAGE#NAME
@@ -44,7 +46,20 @@ fn run() -> anyhow::Result<()> {
         "serve" => {
             let engine = engine_from(&args)?;
             let addr = args.str_or("addr", "127.0.0.1:7401");
-            mpic::server::serve(&engine, &addr, |a| println!("listening on {a}"))?;
+            let defaults = mpic::server::pipeline::PipelineConfig::default();
+            let cfg = mpic::server::ServeConfig {
+                pipeline: mpic::server::pipeline::PipelineConfig {
+                    queue_bound: args.usize_or("queue-bound", defaults.queue_bound)?,
+                    max_batch: args.usize_or("max-batch", defaults.max_batch)?,
+                    admission_deadline: std::time::Duration::from_millis(
+                        args.u64_or("deadline-ms", 30_000)?,
+                    ),
+                    total_blocks: args.usize_or("kv-blocks", defaults.total_blocks)?,
+                    block_tokens: args.usize_or("block-tokens", defaults.block_tokens)?,
+                },
+                conn_threads: args.usize_or("conn-threads", 8)?,
+            };
+            mpic::server::serve_with(&engine, &addr, cfg, |a| println!("listening on {a}"))?;
         }
 
         "call" => {
@@ -104,22 +119,28 @@ fn run() -> anyhow::Result<()> {
             }
             let completions = sched.run_to_completion(&engine)?;
             for c in &completions {
-                println!(
-                    "req {:>3}  policy={}  seq_len={:>4}  ttft={:>7.1} ms  decode={:>7.1} ms  tokens={}",
-                    c.id,
-                    c.result.policy,
-                    c.result.seq_len,
-                    c.result.ttft.total_s * 1e3,
-                    c.result.decode_s * 1e3,
-                    c.result.tokens.len()
-                );
+                match &c.outcome {
+                    Ok(r) => println!(
+                        "req {:>3}  policy={}  seq_len={:>4}  ttft={:>7.1} ms  decode={:>7.1} ms  tokens={}",
+                        c.id,
+                        r.policy,
+                        r.seq_len,
+                        r.ttft.total_s * 1e3,
+                        r.decode_s * 1e3,
+                        r.tokens.len()
+                    ),
+                    Err(rej) => println!("req {:>3}  REJECTED ({:?}): {}", c.id, rej.code, rej.message),
+                }
             }
             println!("{}", engine.metrics.snapshot().encode());
             println!(
-                "scheduler: admitted={} completed={} mean_occupancy={:.2}",
+                "scheduler: admitted={} completed={} rejected={} mean_occupancy={:.2} queue_wait_p50={:.1} p99={:.1} rounds",
                 sched.stats.admitted,
                 sched.stats.completed,
-                sched.stats.mean_occupancy()
+                sched.stats.rejected,
+                sched.stats.mean_occupancy(),
+                sched.stats.queue_wait_p50(),
+                sched.stats.queue_wait_p99()
             );
         }
 
@@ -162,6 +183,8 @@ fn run() -> anyhow::Result<()> {
         _ => {
             println!("usage: mpic <serve|call|run|upload|analyze> [options]");
             println!("  serve   --addr HOST:PORT --model NAME --artifacts DIR");
+            println!("          --queue-bound N --max-batch N --deadline-ms MS --conn-threads N");
+            println!("          --kv-blocks N --block-tokens N");
             println!("  call    --json '{{\"v\":2,\"op\":\"stats\"}}' --addr HOST:PORT");
             println!("  run     --dataset mmdu|sparkles --policy prefix|full-reuse|cacheblend-R|mpic-K --convs N");
             println!("  upload  --user ID --handle IMAGE#NAME");

@@ -44,6 +44,10 @@ pub enum ErrorCode {
     NotFound,
     /// `cache.evict` refused because the entry is pinned.
     Pinned,
+    /// Backpressure: the admission queue is full, the request's admission
+    /// deadline expired, or the addressed session already has a turn in
+    /// flight. Retry after backing off.
+    Overloaded,
     /// The engine failed while executing the request.
     Internal,
 }
@@ -59,6 +63,7 @@ impl ErrorCode {
             ErrorCode::BadValue => "bad_value",
             ErrorCode::NotFound => "not_found",
             ErrorCode::Pinned => "pinned",
+            ErrorCode::Overloaded => "overloaded",
             ErrorCode::Internal => "internal",
         }
     }
@@ -459,7 +464,18 @@ pub fn internal_error(msg: &str) -> Value {
     error_value(None, &ApiError::new(ErrorCode::Internal, msg))
 }
 
-fn chunk_value(env: &Envelope, seq: usize, token: i32) -> Value {
+/// Build a success reply line: the body plus the `ok`/`id` envelope.
+pub fn ok_value(id: Option<&Value>, body: Value) -> Value {
+    merge_envelope(body, true, id)
+}
+
+/// Best-effort id extraction for replies to requests whose envelope failed
+/// to parse (pipelined clients can still correlate well-formed ids).
+pub fn best_effort_id(req: &Value) -> Option<&Value> {
+    req.opt("id").filter(|i| matches!(i, Value::Str(_) | Value::Num(_)))
+}
+
+pub(crate) fn chunk_value(env: &Envelope, seq: usize, token: i32) -> Value {
     let body = Value::obj(vec![
         ("stream", Value::Bool(true)),
         ("seq", Value::num(seq as f64)),
@@ -486,10 +502,7 @@ pub fn dispatch(
         Ok(env) => env,
         // The id is still echoed when it is well-formed, so pipelined
         // clients can correlate even envelope-level failures.
-        Err(e) => {
-            let id = req.opt("id").filter(|i| matches!(i, Value::Str(_) | Value::Num(_)));
-            return error_value(id, &e);
-        }
+        Err(e) => return error_value(best_effort_id(req), &e),
     };
     let t0 = Instant::now();
     let out = dispatch_op(engine, sessions, &env, req, sink);
@@ -565,18 +578,20 @@ fn dispatch_op(
 
         // Multi-turn chat: the session accumulates history; every turn is
         // linked as history ++ turn so earlier images hit the cache
-        // position-independently.
+        // position-independently. The turn is previewed for generation and
+        // only committed (with the assistant reply) on success, matching
+        // the pipeline's semantics: a failed turn leaves history untouched.
         "chat" => {
             let q = GenerateReq::from_value(req)?;
             let (policy, max_new) = generation_params(engine, &q)?;
             let user = UserId(q.user);
             let turn = Prompt::parse(user, &q.text);
-            let mut full = sessions.session(user).user_turn(user, &turn);
+            let mut full = sessions.session(user).preview_turn(user, &turn);
             if q.mrag > 0 {
                 full = engine.mrag_augment(&full, q.mrag)?.0;
             }
             let r = run_generate(engine, env, &full, policy, max_new, q.stream, sink)?;
-            sessions.session(user).assistant_reply(&r.tokens);
+            sessions.session(user).commit_turn(&turn, &r.tokens);
             let mut body = InferResp::from(&r).to_value();
             body.set("turn", Value::num(sessions.session(user).turns() as f64));
             if q.stream {
@@ -693,7 +708,7 @@ fn dispatch_op(
     }
 }
 
-fn generation_params(engine: &Engine, q: &GenerateReq) -> ApiResult<(Policy, usize)> {
+pub(crate) fn generation_params(engine: &Engine, q: &GenerateReq) -> ApiResult<(Policy, usize)> {
     let policy = Policy::parse(&q.policy)
         .map_err(|e| ApiError::new(ErrorCode::BadValue, format!("field \"policy\": {e:#}")))?;
     Ok((policy, q.max_new.unwrap_or(engine.config().max_new_tokens)))

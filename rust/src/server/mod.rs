@@ -1,4 +1,5 @@
-//! JSON-lines TCP serving front end (substrate S16) — protocol v2.
+//! JSON-lines TCP serving front end (substrate S16) — protocol v2 over
+//! the online continuous-batching pipeline.
 //!
 //! Wire format: one JSON object per line. Non-streaming requests get
 //! exactly one reply line; streaming generations get one chunk line per
@@ -15,16 +16,21 @@
 //!   verbatim on **every** reply line so clients can pipeline requests
 //!   and correlate chunks.
 //! * `"stream"` — on `infer`/`chat`: emit per-token chunk lines.
+//! * `"async"` — on `upload`/`add_reference`: accept immediately with a
+//!   job id and precompute off the decode critical path (poll
+//!   `upload.stat`).
 //!
 //! ## Op table
 //!
 //! | op              | fields                                              | reply body |
 //! |-----------------|-----------------------------------------------------|------------|
 //! | `ping`          | —                                                   | `pong` |
-//! | `stats`         | —                                                   | `metrics` (incl. per-op `ops` table), `model`, `sessions`, `store` |
-//! | `upload`        | `user`, `handle`                                    | `image`, `image_hex` |
-//! | `add_reference` | `handle`, `description`                             | `image`, `image_hex` |
-//! | `infer`         | `user`, `text`, [`policy`, `max_new`, `mrag`, `stream`] | decode result (`tokens`, `ttft_s`, …) |
+//! | `stats`         | —                                                   | `metrics` (incl. per-op `ops` and `pipeline` health), `model`, `sessions`, `store` |
+//! | `upload`        | `user`, `handle`, [`async`]                         | `image`, `image_hex` — or, async, `accepted`, `job` |
+//! | `add_reference` | `handle`, `description`, [`async`]                  | `image`, `image_hex` — or, async, `accepted`, `job` |
+//! | `upload.stat`   | `job`                                               | job record: `state` (`queued`/`encoding`/`storing`/`done`/`failed`), `image_hex` once encoded |
+//! | `jobs.list`     | —                                                   | `count`, `jobs[]` (async upload-lane job records) |
+//! | `infer`         | `user`, `text`, [`policy`, `max_new`, `mrag`, `stream`] | decode result (`tokens`, `ttft_s`, `queued_rounds`, …) |
 //! | `chat`          | like `infer`; keeps per-user session history        | decode result + `turn` |
 //! | `reset`         | `user`                                              | `reset` |
 //! | `cache.list`    | —                                                   | `count`, `entries[]` (`image`, `tier`, `bytes`, `pinned`) |
@@ -51,34 +57,56 @@
 //! {"done":true,"id":"b","ok":true,"policy":"mpic-32","tokens":[17,4], ...}
 //! ```
 //!
-//! ## Errors
+//! ## Errors and backpressure
 //!
 //! Failures reply `{"ok":false,"code":...,"error":...,"id":...}` with a
 //! machine-readable code: `bad_json`, `bad_version`, `unknown_op`,
 //! `missing_field`, `bad_type`, `bad_value`, `not_found`, `pinned`,
-//! `internal` (see [`api::ErrorCode`]).
+//! `overloaded`, `internal` (see [`api::ErrorCode`]).
+//!
+//! `overloaded` is the backpressure signal: it is returned (instead of
+//! stalling TCP accepts) when the in-flight bound
+//! ([`pipeline::PipelineConfig::queue_bound`]) is reached, when a request
+//! outlived its admission deadline in the queue, or when a `chat` turn
+//! arrives for a session that already has one in flight. Overloaded
+//! requests are safe to retry after backing off. Requests whose KV
+//! footprint can *never* fit the block pool reject with `bad_value`.
 //!
 //! ## Streaming framing
 //!
 //! Chunk lines carry `"stream":true` and are ordered by `"seq"`; the
 //! terminating summary line carries `"done":true` and the same fields as a
 //! non-streaming reply. [`Client::call_stream`] consumes this framing.
+//! Because decode rounds are interleaved by the scheduler, chunks of
+//! concurrent streaming requests are produced (and delivered) interleaved
+//! rather than one request at a time.
 //!
 //! `infer` is stateless; `chat` keeps a per-user session (multi-turn
 //! history linked in front of each new turn, so earlier images are reused
 //! position-independently across turns).
 //!
-//! Threading: connection handlers (pool threads) parse lines and forward
-//! them over a channel to the engine loop, which runs on the thread that
-//! owns the PJRT handles; reply lines (one or many) travel back on
-//! per-request channels that close when the request is fully answered.
+//! ## Threading
+//!
+//! * **Acceptor thread** hands each connection to a worker-pool thread.
+//! * **Connection handlers** (pool threads) parse lines, pass them
+//!   through the bounded admission [`pipeline::Gate`] (weighted requests
+//!   beyond the bound are rejected `overloaded` right here, without
+//!   touching the engine), and forward admitted jobs over a channel.
+//! * **The engine loop** ([`pipeline::Pipeline`]) runs on the thread that
+//!   owns the PJRT handles: it drains the admission queue into the
+//!   continuous-batching [`crate::coordinator::scheduler::Scheduler`],
+//!   advances one upload-lane precompute and one interleaved decode round
+//!   per iteration, and fans chunk/reply lines back on per-request
+//!   channels that close when each request is fully answered.
+//! * **Worker pool** (shared with the transfer engine) carries the async
+//!   upload lane's store write-through, off the decode critical path.
 
 pub mod api;
+pub mod pipeline;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 
 use crate::coordinator::Engine;
@@ -86,37 +114,68 @@ use crate::util::json::Value;
 use crate::util::threadpool::ThreadPool;
 use crate::Result;
 
-type Job = (Value, Sender<Value>);
+use pipeline::{Gate, Job, Pipeline, PipelineConfig};
 
-/// Serve until an `{"op":"shutdown"}` request arrives.
+/// Front-end configuration: the pipeline tunables plus connection-handler
+/// parallelism.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub pipeline: PipelineConfig,
+    /// Connection-handler pool size.
+    pub conn_threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { pipeline: PipelineConfig::default(), conn_threads: 8 }
+    }
+}
+
+/// Serve with default configuration until an accepted `{"op":"shutdown"}`
+/// request arrives.
 ///
 /// Binds `addr` (e.g. `127.0.0.1:7401`), returns the bound address through
-/// `on_ready` before blocking in the engine loop.
+/// `on_ready` before blocking in the pipeline loop.
 pub fn serve(engine: &Engine, addr: &str, on_ready: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+    serve_with(engine, addr, ServeConfig::default(), on_ready)
+}
+
+/// Serve with explicit pipeline configuration (queue bound, max batch,
+/// admission deadline, KV block pool).
+pub fn serve_with(
+    engine: &Engine,
+    addr: &str,
+    cfg: ServeConfig,
+    on_ready: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     on_ready(local);
-    log::info!("server: listening on {local}");
+    log::info!(
+        "server: listening on {local} (queue_bound={}, max_batch={})",
+        cfg.pipeline.queue_bound,
+        cfg.pipeline.max_batch
+    );
 
-    let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
-    let shutdown = Arc::new(AtomicBool::new(false));
-    let pool = ThreadPool::new(8);
+    let (tx, rx) = channel::<Job>();
+    let gate = Arc::new(Gate::new(cfg.pipeline.queue_bound));
+    let pool = ThreadPool::new(cfg.conn_threads.max(1));
 
     // Acceptor thread: hands each connection to a pool worker.
     let acceptor = {
-        let shutdown = Arc::clone(&shutdown);
+        let gate = Arc::clone(&gate);
         let tx = tx.clone();
         std::thread::spawn(move || {
             for stream in listener.incoming() {
-                if shutdown.load(Ordering::SeqCst) {
+                if gate.shutdown_requested() {
                     break;
                 }
                 match stream {
                     Ok(s) => {
                         let tx = tx.clone();
-                        let shutdown = Arc::clone(&shutdown);
+                        let gate = Arc::clone(&gate);
                         pool.submit(move || {
-                            if let Err(e) = handle_conn(s, tx, shutdown) {
+                            if let Err(e) = handle_conn(s, tx, gate) {
                                 log::debug!("server: connection ended: {e}");
                             }
                         });
@@ -128,31 +187,16 @@ pub fn serve(engine: &Engine, addr: &str, on_ready: impl FnOnce(std::net::Socket
     };
     drop(tx);
 
-    // Engine loop (this thread owns PJRT); sessions are server state.
-    // Stream chunks go out on the same per-request channel as the final
-    // reply; dropping the sender closes the request.
-    let mut sessions = crate::coordinator::session::SessionStore::new();
-    while let Ok((req, reply)) = rx.recv() {
-        let is_shutdown = matches!(req.opt("op").and_then(|o| o.as_str().ok()), Some("shutdown"));
-        let resp = api::dispatch(engine, &mut sessions, &req, &mut |chunk| {
-            let _ = reply.send(chunk);
-        });
-        // Only honour a shutdown whose request was actually accepted — a
-        // rejected envelope (bad version, bad id type) must not kill the
-        // server after replying with an error.
-        let accepted = resp.opt("ok").and_then(|o| o.as_bool().ok()).unwrap_or(false);
-        let _ = reply.send(resp);
-        drop(reply);
-        if is_shutdown && accepted {
-            shutdown.store(true, Ordering::SeqCst);
-            // Unblock the acceptor with a dummy connection.
-            let _ = TcpStream::connect(local);
-            break;
-        }
-    }
+    // Engine loop (this thread owns PJRT); sessions, scheduler and the
+    // upload-lane job table are pipeline state.
+    let result = Pipeline::new(engine, cfg.pipeline, Arc::clone(&gate)).run(rx);
+
+    gate.request_shutdown();
+    // Unblock the acceptor with a dummy connection.
+    let _ = TcpStream::connect(local);
     let _ = acceptor.join();
     log::info!("server: shut down");
-    Ok(())
+    result
 }
 
 fn write_line(writer: &mut TcpStream, v: &Value) -> Result<()> {
@@ -162,12 +206,12 @@ fn write_line(writer: &mut TcpStream, v: &Value) -> Result<()> {
     Ok(())
 }
 
-fn handle_conn(stream: TcpStream, tx: Sender<Job>, shutdown: Arc<AtomicBool>) -> Result<()> {
+fn handle_conn(stream: TcpStream, tx: Sender<Job>, gate: Arc<Gate>) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
-        if shutdown.load(Ordering::SeqCst) {
+        if gate.shutdown_requested() {
             break;
         }
         let line = line?;
@@ -177,19 +221,29 @@ fn handle_conn(stream: TcpStream, tx: Sender<Job>, shutdown: Arc<AtomicBool>) ->
         match Value::parse(&line) {
             Ok(req) => {
                 let (rtx, rrx) = channel();
-                if tx.send((req, rtx)).is_err() {
-                    write_line(&mut writer, &api::internal_error("engine unavailable"))?;
-                    break;
-                }
-                // Forward every reply line (stream chunks + final) until
-                // the engine closes the request's channel.
-                let mut wrote = false;
-                for resp in rrx.iter() {
-                    write_line(&mut writer, &resp)?;
-                    wrote = true;
-                }
-                if !wrote {
-                    write_line(&mut writer, &api::internal_error("engine dropped request"))?;
+                match gate.admit(req, rtx) {
+                    Ok(job) => {
+                        let weighted = job.weighted;
+                        if tx.send(job).is_err() {
+                            if weighted {
+                                gate.release();
+                            }
+                            write_line(&mut writer, &api::internal_error("engine unavailable"))?;
+                            break;
+                        }
+                        // Forward every reply line (stream chunks + final)
+                        // until the engine closes the request's channel.
+                        let mut wrote = false;
+                        for resp in rrx.iter() {
+                            write_line(&mut writer, &resp)?;
+                            wrote = true;
+                        }
+                        if !wrote {
+                            write_line(&mut writer, &api::internal_error("engine dropped request"))?;
+                        }
+                    }
+                    // Backpressure: rejected at the gate, engine untouched.
+                    Err(reject_line) => write_line(&mut writer, &reject_line)?,
                 }
             }
             Err(e) => write_line(&mut writer, &api::parse_error(&format!("bad JSON: {e}")))?,

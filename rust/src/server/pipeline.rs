@@ -1,0 +1,856 @@
+//! Online continuous-batching serving pipeline.
+//!
+//! This module is the dispatch loop between the TCP front end and the
+//! [`Scheduler`]: connection handlers submit typed [`Job`]s through the
+//! bounded admission [`Gate`]; the engine thread drains the queue,
+//! interleaves prefills and per-token decode rounds across every active
+//! request, and fans streaming chunk lines out to each request's reply
+//! channel as its tokens are produced. Two concurrent streaming `infer`s
+//! therefore make interleaved progress instead of serialising — the
+//! serving-side half of the paper's concurrency claim (§5).
+//!
+//! ## Lanes
+//!
+//! * **Generation lane** (`infer` / `chat`): parsed on the engine thread,
+//!   submitted to the continuous-batching scheduler. Completions (results
+//!   *and* explicit rejections) are fanned back per request.
+//! * **Upload lane** (`upload` / `add_reference` with `"async":true`):
+//!   accepted immediately with a job id. The PJRT image encode runs on the
+//!   engine thread *between* decode rounds (off the decode critical path);
+//!   the heavy store write-through (codec + tier insertion + disk) runs on
+//!   the engine's shared worker pool — the same load/compute overlap
+//!   pattern as [`crate::kv::TransferEngine`]. Clients poll `upload.stat`
+//!   or `jobs.list`.
+//! * **Control lane** (everything else): dispatched inline between rounds
+//!   through [`api::dispatch`], so `stats`/`cache.*` stay responsive while
+//!   generations are in flight.
+//!
+//! ## Backpressure
+//!
+//! The gate bounds *weighted* work (generations and image precompute,
+//! sync or async): when `queue_bound` requests are in flight, further
+//! weighted requests are rejected at the connection handler with the
+//! `overloaded` error code —
+//! TCP accepts never stall. Jobs that waited in the admission queue longer
+//! than `admission_deadline` are likewise rejected instead of served
+//! stale. Health is surfaced under `stats.metrics.pipeline`.
+
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::api::{
+    self, AddReferenceReq, ApiError, Envelope, ErrorCode, FromValue, GenerateReq, InferResp,
+    ToValue, UploadReq,
+};
+use crate::coordinator::scheduler::{Completion, RejectCode, Request, SchedEvent, Scheduler};
+use crate::coordinator::session::SessionStore;
+use crate::coordinator::Engine;
+use crate::mm::{ImageId, Prompt, UserId};
+use crate::util::json::Value;
+use crate::Result;
+
+/// Tunables of the serving pipeline (see `mpic serve` flags).
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Max weighted requests in flight before `overloaded` rejections
+    /// (0 = unbounded).
+    pub queue_bound: usize,
+    /// Max sequences interleaved per decode round (0 = unbounded).
+    pub max_batch: usize,
+    /// Jobs older than this when the engine loop picks them up are
+    /// rejected with `overloaded` instead of served stale.
+    pub admission_deadline: Duration,
+    /// KV block pool handed to the scheduler: `total_blocks` blocks of
+    /// `block_tokens` tokens bound resident KV across admitted requests.
+    pub total_blocks: usize,
+    pub block_tokens: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            queue_bound: 64,
+            max_batch: 8,
+            admission_deadline: Duration::from_secs(30),
+            total_blocks: 4096,
+            block_tokens: 16,
+        }
+    }
+}
+
+/// Does this request ask for the async precompute lane?
+fn is_async(req: &Value) -> bool {
+    req.opt("async").and_then(|a| a.as_bool().ok()).unwrap_or(false)
+}
+
+/// One wire request travelling from a connection handler to the engine loop.
+pub struct Job {
+    pub req: Value,
+    pub reply: Sender<Value>,
+    pub enqueued: Instant,
+    /// Whether this job occupies an in-flight slot in the gate.
+    pub weighted: bool,
+}
+
+/// The bounded admission gate, shared between connection handlers
+/// (producers) and the engine loop (consumer). Counters only — the mpsc
+/// sender is cloned per connection as before.
+pub struct Gate {
+    shutdown: AtomicBool,
+    inflight: AtomicUsize,
+    overloaded: AtomicU64,
+    queue_bound: usize,
+}
+
+impl Gate {
+    pub fn new(queue_bound: usize) -> Gate {
+        Gate {
+            shutdown: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            overloaded: AtomicU64::new(0),
+            queue_bound,
+        }
+    }
+
+    /// Ops that occupy an in-flight slot: generations and image
+    /// precompute, sync or async. Sync precompute blocks the engine thread
+    /// for a full encode + store write, so it must count against the bound
+    /// like everything else heavyweight; async precompute holds its slot
+    /// until the store write completes on the pool.
+    fn is_weighted(req: &Value) -> bool {
+        matches!(
+            req.opt("op").and_then(|o| o.as_str().ok()).unwrap_or(""),
+            "infer" | "chat" | "upload" | "add_reference"
+        )
+    }
+
+    /// Admit a request, or reject it with an `overloaded` reply line when
+    /// the in-flight bound is reached. Control ops always pass.
+    pub fn admit(&self, req: Value, reply: Sender<Value>) -> std::result::Result<Job, Value> {
+        let weighted = Self::is_weighted(&req);
+        if weighted {
+            let prev = self.inflight.fetch_add(1, Ordering::SeqCst);
+            if self.queue_bound > 0 && prev >= self.queue_bound {
+                self.inflight.fetch_sub(1, Ordering::SeqCst);
+                self.note_overload();
+                return Err(api::error_value(
+                    api::best_effort_id(&req),
+                    &ApiError::new(
+                        ErrorCode::Overloaded,
+                        format!(
+                            "server overloaded: {prev} requests in flight (bound {})",
+                            self.queue_bound
+                        ),
+                    ),
+                ));
+            }
+        }
+        Ok(Job { req, reply, enqueued: Instant::now(), weighted })
+    }
+
+    /// Release one weighted in-flight slot (request reached a terminal
+    /// reply). Called by the engine loop / upload lane, not by handlers.
+    pub fn release(&self) {
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    pub fn note_overload(&self) {
+        self.overloaded.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Weighted requests currently in flight.
+    pub fn depth(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    pub fn overloaded_total(&self) -> u64 {
+        self.overloaded.load(Ordering::SeqCst)
+    }
+
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+// ----------------------------------------------------------------------
+// Async upload lane
+// ----------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum UploadState {
+    Queued,
+    Encoding,
+    Storing,
+    Done,
+    Failed,
+}
+
+impl UploadState {
+    fn as_str(self) -> &'static str {
+        match self {
+            UploadState::Queued => "queued",
+            UploadState::Encoding => "encoding",
+            UploadState::Storing => "storing",
+            UploadState::Done => "done",
+            UploadState::Failed => "failed",
+        }
+    }
+}
+
+struct UploadJob {
+    id: u64,
+    op: &'static str,
+    user: u64,
+    handle: String,
+    description: String,
+    state: UploadState,
+    image: Option<u64>,
+    error: Option<String>,
+}
+
+fn upload_job_value(j: &UploadJob) -> Value {
+    let mut v = Value::obj(vec![
+        ("job", Value::num(j.id as f64)),
+        ("op", Value::str(j.op)),
+        ("handle", Value::str(&j.handle)),
+        ("state", Value::str(j.state.as_str())),
+    ]);
+    if let Some(img) = j.image {
+        v.set("image", Value::num(img as f64));
+        v.set("image_hex", Value::str(format!("{img:016x}")));
+    }
+    if let Some(e) = &j.error {
+        v.set("error", Value::str(e));
+    }
+    v
+}
+
+/// The async precompute lane: a job table (shared with pool threads that
+/// finish the store write) plus the engine-thread encode queue.
+struct UploadLane {
+    jobs: Arc<Mutex<BTreeMap<u64, UploadJob>>>,
+    queue: VecDeque<u64>,
+    /// Jobs that reached a terminal state (done or failed).
+    finished: Arc<AtomicU64>,
+    gate: Arc<Gate>,
+    next_id: u64,
+}
+
+impl UploadLane {
+    fn new(gate: Arc<Gate>) -> UploadLane {
+        UploadLane {
+            jobs: Arc::new(Mutex::new(BTreeMap::new())),
+            queue: VecDeque::new(),
+            finished: Arc::new(AtomicU64::new(0)),
+            gate,
+            next_id: 1,
+        }
+    }
+
+    fn pending(&self) -> bool {
+        !self.queue.is_empty()
+    }
+
+    fn finished_total(&self) -> u64 {
+        self.finished.load(Ordering::SeqCst)
+    }
+
+    fn submit(&mut self, op: &'static str, user: u64, handle: String, description: String) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.jobs.lock().unwrap().insert(
+            id,
+            UploadJob {
+                id,
+                op,
+                user,
+                handle,
+                description,
+                state: UploadState::Queued,
+                image: None,
+                error: None,
+            },
+        );
+        self.queue.push_back(id);
+        id
+    }
+
+    fn job_value(&self, id: u64) -> Option<Value> {
+        self.jobs.lock().unwrap().get(&id).map(upload_job_value)
+    }
+
+    fn list_values(&self) -> Vec<Value> {
+        self.jobs.lock().unwrap().values().map(upload_job_value).collect()
+    }
+
+    fn fail(&self, id: u64, msg: String) {
+        if let Some(j) = self.jobs.lock().unwrap().get_mut(&id) {
+            j.state = UploadState::Failed;
+            j.error = Some(msg);
+        }
+        self.finished.fetch_add(1, Ordering::SeqCst);
+        self.gate.release();
+    }
+
+    /// Advance the lane by one job: encode on the engine thread (PJRT is
+    /// thread-pinned), then hand the store write-through to the pool.
+    fn step(&mut self, engine: &Engine) {
+        let Some(jid) = self.queue.pop_front() else { return };
+        let (op, user, handle, description) = {
+            let mut g = self.jobs.lock().unwrap();
+            let Some(j) = g.get_mut(&jid) else { return };
+            j.state = UploadState::Encoding;
+            (j.op, j.user, j.handle.clone(), j.description.clone())
+        };
+        let image = ImageId::from_handle(&handle);
+        let t0 = Instant::now();
+        let kv = match engine.encode_image(image) {
+            Ok(kv) => kv,
+            Err(e) => return self.fail(jid, format!("encode failed: {e:#}")),
+        };
+        // Registration is cheap and engine-owned; do it before the write so
+        // a handle is resolvable as soon as its KV lands in the store.
+        match op {
+            "upload" => {
+                if let Err(e) = engine.static_lib.register(UserId(user), &handle, image) {
+                    return self.fail(jid, format!("register failed: {e:#}"));
+                }
+            }
+            _ => engine.dynamic_lib.add(crate::cache::Reference { image, description }),
+        }
+        {
+            let mut g = self.jobs.lock().unwrap();
+            if let Some(j) = g.get_mut(&jid) {
+                j.state = UploadState::Storing;
+                j.image = Some(image.0);
+            }
+        }
+        engine.metrics.record_upload(t0.elapsed().as_secs_f64());
+        // The heavy part — codec encode, tier insertion, disk write-through
+        // — runs off the decode critical path on the shared pool.
+        let store = Arc::clone(engine.store());
+        let jobs = Arc::clone(&self.jobs);
+        let finished = Arc::clone(&self.finished);
+        let gate = Arc::clone(&self.gate);
+        engine.pool().submit(move || {
+            let outcome = store.put(kv);
+            {
+                let mut g = jobs.lock().unwrap();
+                if let Some(j) = g.get_mut(&jid) {
+                    match outcome {
+                        Ok(_) => j.state = UploadState::Done,
+                        Err(e) => {
+                            j.state = UploadState::Failed;
+                            j.error = Some(format!("store failed: {e:#}"));
+                        }
+                    }
+                }
+            }
+            finished.fetch_add(1, Ordering::SeqCst);
+            gate.release();
+        });
+    }
+}
+
+// ----------------------------------------------------------------------
+// The pipeline loop
+// ----------------------------------------------------------------------
+
+struct PendingGen {
+    reply: Sender<Value>,
+    env: Envelope,
+    stream: bool,
+    chat: bool,
+    user: u64,
+    /// Chat only: the raw turn to commit into the session on success.
+    turn: Option<Prompt>,
+    submitted: Instant,
+    op: &'static str,
+}
+
+/// The engine-thread dispatch loop. Owns the scheduler, the sessions and
+/// the upload lane; borrows the engine (PJRT stays on this thread).
+pub struct Pipeline<'e> {
+    engine: &'e Engine,
+    cfg: PipelineConfig,
+    gate: Arc<Gate>,
+    sched: Scheduler,
+    sessions: SessionStore,
+    pending: HashMap<u64, PendingGen>,
+    uploads: UploadLane,
+    /// Users with a chat turn in flight (a second concurrent turn for the
+    /// same session is rejected `overloaded` — history must stay ordered).
+    busy_users: HashSet<u64>,
+    next_req: u64,
+    shutdown: bool,
+}
+
+impl<'e> Pipeline<'e> {
+    pub fn new(engine: &'e Engine, cfg: PipelineConfig, gate: Arc<Gate>) -> Pipeline<'e> {
+        let mut sched = Scheduler::new(cfg.total_blocks, cfg.block_tokens);
+        sched.set_max_batch(cfg.max_batch);
+        Pipeline {
+            engine,
+            gate: Arc::clone(&gate),
+            sched,
+            sessions: SessionStore::new(),
+            pending: HashMap::new(),
+            uploads: UploadLane::new(gate),
+            busy_users: HashSet::new(),
+            next_req: 1,
+            shutdown: false,
+            cfg,
+        }
+    }
+
+    /// Run until a shutdown request is accepted or every producer is gone.
+    pub fn run(mut self, rx: Receiver<Job>) -> Result<()> {
+        loop {
+            let idle =
+                self.sched.pending() == 0 && self.sched.active() == 0 && !self.uploads.pending();
+            if idle {
+                // Nothing to advance: block for the next request.
+                match rx.recv() {
+                    Ok(job) => self.ingest(job),
+                    Err(_) => break,
+                }
+            }
+            // Drain whatever else arrived, then advance one round.
+            loop {
+                match rx.try_recv() {
+                    Ok(job) => self.ingest(job),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        self.shutdown = true;
+                        break;
+                    }
+                }
+            }
+            if self.shutdown {
+                break;
+            }
+            self.uploads.step(self.engine);
+            self.round()?;
+            self.publish_counters();
+        }
+        // Shutting down: answer every in-flight generation explicitly
+        // instead of silently dropping its channel.
+        for (_, p) in self.pending.drain() {
+            self.gate.release();
+            let _ = p.reply.send(api::error_value(
+                p.env.id.as_ref(),
+                &ApiError::new(ErrorCode::Internal, "server shutting down"),
+            ));
+        }
+        self.publish_counters();
+        Ok(())
+    }
+
+    /// One scheduler round: admissions, one interleaved decode step per
+    /// active sequence (chunks fan out as tokens land), completions.
+    fn round(&mut self) -> Result<()> {
+        if self.sched.pending() == 0 && self.sched.active() == 0 {
+            return Ok(());
+        }
+        let engine = self.engine;
+        let pending = &self.pending;
+        let completions = self.sched.step_cb(engine, &mut |ev| {
+            if let SchedEvent::Token { id, index, token } = ev {
+                if let Some(p) = pending.get(&id) {
+                    if p.stream {
+                        let _ = p.reply.send(api::chunk_value(&p.env, index, token));
+                    }
+                }
+            }
+        })?;
+        // Occupancy counts sequences that actually decoded this round:
+        // still-active ones plus ok-completions; rejections never decoded.
+        let occupancy =
+            self.sched.active() + completions.iter().filter(|c| c.outcome.is_ok()).count();
+        if occupancy > 0 {
+            engine.metrics.record_pipeline_round(occupancy, self.gate.depth());
+        }
+        for c in completions {
+            self.finish(c);
+        }
+        Ok(())
+    }
+
+    fn publish_counters(&self) {
+        self.engine
+            .metrics
+            .set_pipeline_counters(self.gate.overloaded_total(), self.uploads.finished_total());
+    }
+
+    /// Classify and dispatch one admitted job.
+    fn ingest(&mut self, job: Job) {
+        // Counters first so a `stats` op in this very batch sees them.
+        self.publish_counters();
+        let op = job.req.opt("op").and_then(|o| o.as_str().ok()).unwrap_or("").to_string();
+        if job.weighted {
+            let waited = job.enqueued.elapsed();
+            self.engine.metrics.record_admission_wait(waited.as_secs_f64());
+            if waited > self.cfg.admission_deadline {
+                self.gate.note_overload();
+                self.gate.release();
+                let _ = job.reply.send(api::error_value(
+                    api::best_effort_id(&job.req),
+                    &ApiError::new(
+                        ErrorCode::Overloaded,
+                        format!("admission deadline exceeded after {waited:.1?} in queue"),
+                    ),
+                ));
+                return;
+            }
+        }
+        match op.as_str() {
+            "infer" => self.submit_generate(job, false),
+            "chat" => self.submit_generate(job, true),
+            "upload" | "add_reference" if is_async(&job.req) => self.submit_upload(job),
+            "upload.stat" => self.upload_stat(job),
+            "jobs.list" => self.jobs_list(job),
+            _ => {
+                // Control lane: dispatch inline between rounds. Sync
+                // uploads land here too — weighted, so they hold a slot
+                // for the duration of their inline encode + store write.
+                let weighted = job.weighted;
+                let reply = job.reply;
+                let resp =
+                    api::dispatch(self.engine, &mut self.sessions, &job.req, &mut |chunk| {
+                        let _ = reply.send(chunk);
+                    });
+                // Only honour a shutdown whose request was actually
+                // accepted — a rejected envelope must not kill the server.
+                let accepted =
+                    resp.opt("ok").and_then(|o| o.as_bool().ok()).unwrap_or(false);
+                if weighted {
+                    self.gate.release();
+                }
+                let _ = reply.send(resp);
+                if op == "shutdown" && accepted {
+                    self.shutdown = true;
+                }
+            }
+        }
+    }
+
+    /// Reply with an error to a weighted generation job and free its slot.
+    fn reject_gen(&mut self, reply: &Sender<Value>, id: Option<&Value>, e: &ApiError) {
+        if e.code == ErrorCode::Overloaded {
+            self.gate.note_overload();
+        }
+        self.gate.release();
+        let _ = reply.send(api::error_value(id, e));
+    }
+
+    fn submit_generate(&mut self, job: Job, chat: bool) {
+        let opname: &'static str = if chat { "chat" } else { "infer" };
+        let t0 = Instant::now();
+        let Job { req, reply, .. } = job;
+        let env = match Envelope::from_value(&req) {
+            Ok(env) => env,
+            Err(e) => {
+                let id = api::best_effort_id(&req).cloned();
+                return self.reject_gen(&reply, id.as_ref(), &e);
+            }
+        };
+        let q = match GenerateReq::from_value(&req) {
+            Ok(q) => q,
+            Err(e) => return self.reject_gen(&reply, env.id.as_ref(), &e),
+        };
+        let (policy, max_new) = match api::generation_params(self.engine, &q) {
+            Ok(pm) => pm,
+            Err(e) => return self.reject_gen(&reply, env.id.as_ref(), &e),
+        };
+        let user = UserId(q.user);
+        let mut turn_for_commit = None;
+        let mut prompt = if chat {
+            if !self.busy_users.insert(q.user) {
+                let e = ApiError::new(
+                    ErrorCode::Overloaded,
+                    format!(
+                        "session {} already has a turn in flight; retry after it completes",
+                        q.user
+                    ),
+                );
+                return self.reject_gen(&reply, env.id.as_ref(), &e);
+            }
+            let turn = Prompt::parse(user, &q.text);
+            let full = self.sessions.session(user).preview_turn(user, &turn);
+            turn_for_commit = Some(turn);
+            full
+        } else {
+            Prompt::parse(user, &q.text)
+        };
+        if q.mrag > 0 {
+            match self.engine.mrag_augment(&prompt, q.mrag) {
+                Ok((augmented, _)) => prompt = augmented,
+                Err(e) => {
+                    if chat {
+                        self.busy_users.remove(&q.user);
+                    }
+                    let e = ApiError::new(ErrorCode::Internal, format!("mrag failed: {e:#}"));
+                    return self.reject_gen(&reply, env.id.as_ref(), &e);
+                }
+            }
+        }
+        let id = self.next_req;
+        self.next_req += 1;
+        self.sched.submit(Request { id, prompt, policy, max_new });
+        self.pending.insert(
+            id,
+            PendingGen {
+                reply,
+                env,
+                stream: q.stream,
+                chat,
+                user: q.user,
+                turn: turn_for_commit,
+                submitted: t0,
+                op: opname,
+            },
+        );
+    }
+
+    /// Fan one scheduler completion back to its request.
+    fn finish(&mut self, c: Completion) {
+        let Some(p) = self.pending.remove(&c.id) else { return };
+        if p.chat {
+            self.busy_users.remove(&p.user);
+        }
+        let line = match c.outcome {
+            Ok(result) => {
+                self.engine.metrics.record_request(&result);
+                let mut body = InferResp::from(&result).to_value();
+                if p.chat {
+                    let sess = self.sessions.session(UserId(p.user));
+                    if let Some(turn) = &p.turn {
+                        sess.commit_turn(turn, &result.tokens);
+                    }
+                    body.set("turn", Value::num(sess.turns() as f64));
+                }
+                if p.stream {
+                    body.set("done", Value::Bool(true));
+                }
+                body.set("queued_rounds", Value::num(c.queued_steps as f64));
+                api::ok_value(p.env.id.as_ref(), body)
+            }
+            Err(reject) => {
+                let code = match reject.code {
+                    // Permanently unserviceable (bigger than the pool):
+                    // not retryable, so not `overloaded`.
+                    RejectCode::TooLarge => ErrorCode::BadValue,
+                    RejectCode::EngineFailed => ErrorCode::Internal,
+                };
+                api::error_value(p.env.id.as_ref(), &ApiError::new(code, reject.message))
+            }
+        };
+        self.engine.metrics.record_op(p.op, p.submitted.elapsed().as_secs_f64());
+        // Release before the final line so a client that reacts to the
+        // reply immediately finds its slot already free.
+        self.gate.release();
+        let _ = p.reply.send(line);
+    }
+
+    fn submit_upload(&mut self, job: Job) {
+        let Job { req, reply, enqueued, .. } = job;
+        let env = match Envelope::from_value(&req) {
+            Ok(env) => env,
+            Err(e) => {
+                let id = api::best_effort_id(&req).cloned();
+                return self.reject_gen(&reply, id.as_ref(), &e);
+            }
+        };
+        let opname: &'static str = if env.op == "upload" { "upload" } else { "add_reference" };
+        let (user, handle, description) = if opname == "upload" {
+            match UploadReq::from_value(&req) {
+                Ok(q) => (q.user, q.handle, String::new()),
+                Err(e) => return self.reject_gen(&reply, env.id.as_ref(), &e),
+            }
+        } else {
+            match AddReferenceReq::from_value(&req) {
+                Ok(q) => (0, q.handle, q.description),
+                Err(e) => return self.reject_gen(&reply, env.id.as_ref(), &e),
+            }
+        };
+        let jid = self.uploads.submit(opname, user, handle.clone(), description);
+        self.engine.metrics.record_op(opname, enqueued.elapsed().as_secs_f64());
+        let body = Value::obj(vec![
+            ("accepted", Value::Bool(true)),
+            ("async", Value::Bool(true)),
+            ("job", Value::num(jid as f64)),
+            ("op", Value::str(opname)),
+            ("handle", Value::str(&handle)),
+        ]);
+        let _ = reply.send(api::ok_value(env.id.as_ref(), body));
+    }
+
+    fn upload_stat(&mut self, job: Job) {
+        let Job { req, reply, enqueued, .. } = job;
+        let env = match Envelope::from_value(&req) {
+            Ok(env) => env,
+            Err(e) => {
+                let _ = reply.send(api::error_value(api::best_effort_id(&req), &e));
+                return;
+            }
+        };
+        let jid = match req.opt("job") {
+            None => {
+                let e = ApiError::new(ErrorCode::MissingField, "missing field \"job\"");
+                let _ = reply.send(api::error_value(env.id.as_ref(), &e));
+                return;
+            }
+            Some(x) => match x.as_u64() {
+                Ok(n) => n,
+                Err(e) => {
+                    let e = ApiError::new(ErrorCode::BadType, format!("field \"job\": {e}"));
+                    let _ = reply.send(api::error_value(env.id.as_ref(), &e));
+                    return;
+                }
+            },
+        };
+        let line = match self.uploads.job_value(jid) {
+            Some(body) => api::ok_value(env.id.as_ref(), body),
+            None => api::error_value(
+                env.id.as_ref(),
+                &ApiError::new(ErrorCode::NotFound, format!("no upload job {jid}")),
+            ),
+        };
+        let _ = reply.send(line);
+        self.engine.metrics.record_op("upload.stat", enqueued.elapsed().as_secs_f64());
+    }
+
+    fn jobs_list(&mut self, job: Job) {
+        let Job { req, reply, enqueued, .. } = job;
+        let env = match Envelope::from_value(&req) {
+            Ok(env) => env,
+            Err(e) => {
+                let _ = reply.send(api::error_value(api::best_effort_id(&req), &e));
+                return;
+            }
+        };
+        let jobs = self.uploads.list_values();
+        let body = Value::obj(vec![
+            ("count", Value::num(jobs.len() as f64)),
+            ("jobs", Value::Arr(jobs)),
+        ]);
+        let _ = reply.send(api::ok_value(env.id.as_ref(), body));
+        self.engine.metrics.record_op("jobs.list", enqueued.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn v(s: &str) -> Value {
+        Value::parse(s).unwrap()
+    }
+
+    #[test]
+    fn gate_bounds_weighted_requests() {
+        let gate = Gate::new(1);
+        let (tx, _rx) = channel();
+        let a = gate.admit(v(r#"{"op":"infer","user":1,"text":"x"}"#), tx.clone());
+        assert!(a.is_ok());
+        assert!(a.as_ref().unwrap().weighted);
+        assert_eq!(gate.depth(), 1);
+
+        // Second weighted request: rejected with the overloaded code.
+        let b = gate.admit(v(r#"{"v":2,"id":"r2","op":"chat","user":1,"text":"y"}"#), tx.clone());
+        let line = b.err().expect("must reject");
+        assert!(!line.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(line.get("code").unwrap().as_str().unwrap(), "overloaded");
+        assert_eq!(line.get("id").unwrap().as_str().unwrap(), "r2");
+        assert_eq!(gate.overloaded_total(), 1);
+        assert_eq!(gate.depth(), 1, "rejected request must not hold a slot");
+
+        // Control ops always pass, and don't consume slots.
+        let c = gate.admit(v(r#"{"op":"stats"}"#), tx.clone());
+        assert!(c.is_ok());
+        assert!(!c.unwrap().weighted);
+        assert_eq!(gate.depth(), 1);
+
+        // Releasing the slot lets the next weighted request in.
+        gate.release();
+        assert_eq!(gate.depth(), 0);
+        assert!(gate.admit(v(r#"{"op":"infer","user":1,"text":"z"}"#), tx).is_ok());
+    }
+
+    #[test]
+    fn uploads_are_weighted_sync_and_async() {
+        let gate = Gate::new(4);
+        let (tx, _rx) = channel();
+        // Sync uploads block the engine thread inline, so they count
+        // against the bound exactly like async ones.
+        let sync = gate.admit(v(r#"{"op":"upload","user":1,"handle":"IMAGE#A"}"#), tx.clone());
+        assert!(sync.unwrap().weighted);
+        let asyn =
+            gate.admit(v(r#"{"op":"upload","user":1,"handle":"IMAGE#A","async":true}"#), tx.clone());
+        assert!(asyn.unwrap().weighted);
+        assert_eq!(gate.depth(), 2);
+        // Polling the job table is control-lane work: never bounded.
+        let stat = gate.admit(v(r#"{"op":"upload.stat","job":1}"#), tx);
+        assert!(!stat.unwrap().weighted);
+        assert_eq!(gate.depth(), 2);
+    }
+
+    #[test]
+    fn async_flag_detection() {
+        assert!(is_async(&v(r#"{"op":"upload","async":true}"#)));
+        assert!(!is_async(&v(r#"{"op":"upload","async":false}"#)));
+        assert!(!is_async(&v(r#"{"op":"upload"}"#)));
+    }
+
+    #[test]
+    fn unbounded_gate_never_rejects() {
+        let gate = Gate::new(0);
+        let (tx, _rx) = channel();
+        for i in 0..100 {
+            let req = v(&format!(r#"{{"op":"infer","user":{i},"text":"x"}}"#));
+            assert!(gate.admit(req, tx.clone()).is_ok());
+        }
+        assert_eq!(gate.depth(), 100);
+        assert_eq!(gate.overloaded_total(), 0);
+    }
+
+    #[test]
+    fn upload_job_value_shape() {
+        let j = UploadJob {
+            id: 3,
+            op: "upload",
+            user: 1,
+            handle: "IMAGE#X".into(),
+            description: String::new(),
+            state: UploadState::Storing,
+            image: Some(0xABCD),
+            error: None,
+        };
+        let v = upload_job_value(&j);
+        assert_eq!(v.get("job").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(v.get("state").unwrap().as_str().unwrap(), "storing");
+        assert_eq!(v.get("image_hex").unwrap().as_str().unwrap(), "000000000000abcd");
+        assert!(v.opt("error").is_none());
+    }
+
+    #[test]
+    fn upload_states_render() {
+        for (s, name) in [
+            (UploadState::Queued, "queued"),
+            (UploadState::Encoding, "encoding"),
+            (UploadState::Storing, "storing"),
+            (UploadState::Done, "done"),
+            (UploadState::Failed, "failed"),
+        ] {
+            assert_eq!(s.as_str(), name);
+        }
+    }
+}

@@ -148,6 +148,20 @@ pub fn emit(name: &str, tables: &[Table]) {
     }
 }
 
+/// Write a flat machine-readable summary to `BENCH_<name>.json` in the
+/// current directory. One file per bench, numeric fields only — the
+/// perf-trajectory artifact CI runs can diff across commits (the full
+/// tables stay in `target/bench-results/`).
+pub fn emit_summary(name: &str, fields: &[(&str, f64)]) {
+    let v = Value::obj(fields.iter().map(|&(k, x)| (k, Value::num(x))).collect());
+    let path = format!("BENCH_{name}.json");
+    if let Err(e) = std::fs::write(&path, v.encode()) {
+        eprintln!("warn: could not write {path}: {e}");
+    } else {
+        println!("[bench] wrote {path}");
+    }
+}
+
 /// ASCII heatmap rendering (Fig. 11). `grid[r][c]` in [0,1].
 pub fn render_heatmap(grid: &[Vec<f32>], row_label: &str, col_label: &str) -> String {
     const SHADES: &[char] = &[' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];

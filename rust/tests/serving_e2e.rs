@@ -1,14 +1,19 @@
 //! Serving end-to-end: scheduler (continuous batching) and the TCP server
 //! over the real engine + artifacts. Covers the full v2 dispatch surface:
 //! v1 backward compatibility, v2 envelopes with request-id echo, structured
-//! error codes, cache-management ops and streaming decode.
-//! Skips when artifacts are not built.
+//! error codes, cache-management ops, streaming decode, and the online
+//! pipeline (concurrent interleaved streams, `overloaded` backpressure,
+//! the async upload lane). Skips when artifacts are not built.
 
 use std::io::{BufRead, BufReader, Write};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Duration;
 
 use mpic::coordinator::scheduler::{Request, Scheduler};
 use mpic::coordinator::{Engine, EngineConfig, Policy};
 use mpic::mm::ImageId;
+use mpic::server::pipeline::PipelineConfig;
+use mpic::server::ServeConfig;
 use mpic::util::json::Value;
 use mpic::workload::{generate, Dataset, WorkloadSpec};
 
@@ -56,6 +61,9 @@ fn serving_end_to_end() {
     scheduler_continuous_batching();
     tcp_server_v1_compat();
     tcp_server_v2_surface();
+    pipeline_concurrent_streaming();
+    pipeline_backpressure_overload();
+    pipeline_async_upload_lane();
 }
 
 fn scheduler_continuous_batching() {
@@ -97,8 +105,12 @@ fn scheduler_continuous_batching() {
     // Block pool drained back to empty.
     assert_eq!(sched.block_utilization(), 0.0);
     for c in &completions {
-        assert_eq!(c.result.tokens.len(), 4);
+        let r = c.result().expect("all requests must be served");
+        assert_eq!(r.tokens.len(), 4);
     }
+    // Queue-wait accounting: one sample per admitted request.
+    assert_eq!(sched.stats.queue_wait.len(), 4);
+    assert!(sched.stats.queue_wait_p99() >= sched.stats.queue_wait_p50());
     println!(
         "OK scheduler: mean_occupancy={:.2} max_active={}",
         sched.stats.mean_occupancy(),
@@ -373,4 +385,261 @@ fn tcp_server_v2_surface() {
     .unwrap();
     client.join().unwrap();
     println!("OK tcp server v2 surface");
+}
+
+/// N concurrent clients issue streaming `infer`s: every id must be
+/// answered with a full token stream, and chunks of different requests
+/// must interleave (continuous batching on the wire), not serialise.
+fn pipeline_concurrent_streaming() {
+    const N: usize = 3;
+    const MAX_NEW: usize = 8;
+    let engine = test_engine("pipe");
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+
+    let driver = std::thread::spawn(move || {
+        let addr = addr_rx.recv().unwrap();
+        let mut admin = mpic::server::Client::connect(addr).unwrap();
+        assert_ok(&admin.call(&v(r#"{"op":"upload","user":1,"handle":"IMAGE#PIPE"}"#)).unwrap());
+
+        // Global chunk-arrival timeline: (client, seq) in receive order.
+        let timeline: Arc<Mutex<Vec<(usize, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+        let barrier = Arc::new(Barrier::new(N));
+        let mut clients = Vec::new();
+        for ci in 0..N {
+            let timeline = Arc::clone(&timeline);
+            let barrier = Arc::clone(&barrier);
+            clients.push(std::thread::spawn(move || {
+                let mut c = mpic::server::Client::connect(addr).unwrap();
+                barrier.wait();
+                let req = Value::parse(&format!(
+                    r#"{{"v":2,"id":"c{ci}","op":"infer","user":1,"policy":"mpic-16","max_new":{MAX_NEW},"stream":true,"text":"Describe IMAGE#PIPE in detail please"}}"#
+                ))
+                .unwrap();
+                let fin = c
+                    .call_stream(&req, |chunk| {
+                        let seq = chunk.get("seq").unwrap().as_usize().unwrap();
+                        timeline.lock().unwrap().push((ci, seq));
+                    })
+                    .unwrap();
+                // (b) every id answered, in full.
+                assert_ok(&fin);
+                assert!(fin.get("done").unwrap().as_bool().unwrap());
+                assert_eq!(fin.get("id").unwrap().as_str().unwrap(), format!("c{ci}"));
+                assert_eq!(fin.get("tokens").unwrap().as_arr().unwrap().len(), MAX_NEW);
+                assert!(fin.opt("queued_rounds").is_some());
+            }));
+        }
+        for h in clients {
+            h.join().unwrap();
+        }
+
+        let tl = timeline.lock().unwrap();
+        assert_eq!(tl.len(), N * MAX_NEW, "every chunk of every stream must arrive");
+        // Per-client seqs are ordered.
+        for ci in 0..N {
+            let seqs: Vec<usize> = tl.iter().filter(|(c, _)| *c == ci).map(|&(_, s)| s).collect();
+            assert_eq!(seqs, (0..MAX_NEW).collect::<Vec<_>>(), "client {ci} chunks ordered");
+        }
+        // (a) interleaving: strictly serialised streams would show exactly
+        // N-1 client switches in the timeline; round-robin decode shows
+        // many more. Require at least one mid-stream switch.
+        let switches = tl.windows(2).filter(|w| w[0].0 != w[1].0).count();
+        assert!(
+            switches > N - 1,
+            "streams must interleave, not serialise (switches={switches}, timeline={tl:?})"
+        );
+        drop(tl);
+
+        // Pipeline health surfaced in stats.
+        let stats = admin.call(&v(r#"{"v":2,"op":"stats"}"#)).unwrap();
+        let pipe = stats.get("metrics").unwrap().get("pipeline").unwrap();
+        assert!(
+            pipe.get("batch_occupancy").unwrap().get("mean").unwrap().as_f64().unwrap() > 1.0,
+            "decode rounds must have interleaved >1 sequence: {}",
+            pipe.encode()
+        );
+        assert!(pipe.get("admission_wait_s").unwrap().get("n").unwrap().as_f64().unwrap() >= 3.0);
+
+        assert_ok(&admin.call(&v(r#"{"op":"shutdown"}"#)).unwrap());
+    });
+
+    mpic::server::serve(&engine, "127.0.0.1:0", |a| {
+        addr_tx.send(a).unwrap();
+    })
+    .unwrap();
+    driver.join().unwrap();
+    println!("OK pipeline concurrent streaming");
+}
+
+/// With queue_bound=1, a second generation arriving while one streams must
+/// be rejected `overloaded` (not queued, not hung); once the stream
+/// finishes, a retry succeeds.
+fn pipeline_backpressure_overload() {
+    let engine = test_engine("bp");
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+
+    let driver = std::thread::spawn(move || {
+        let addr = addr_rx.recv().unwrap();
+        let mut admin = mpic::server::Client::connect(addr).unwrap();
+        assert_ok(&admin.call(&v(r#"{"op":"upload","user":1,"handle":"IMAGE#BP"}"#)).unwrap());
+
+        // Client A holds the only in-flight slot with a long stream.
+        let (started_tx, started_rx) = std::sync::mpsc::channel();
+        let a = std::thread::spawn(move || {
+            let mut c = mpic::server::Client::connect(addr).unwrap();
+            let mut signalled = false;
+            let fin = c
+                .call_stream(
+                    &v(
+                        r#"{"v":2,"id":"long","op":"infer","user":1,"policy":"mpic-16","max_new":12,"stream":true,"text":"Describe IMAGE#BP in detail please"}"#,
+                    ),
+                    |_| {
+                        if !signalled {
+                            started_tx.send(()).unwrap();
+                            signalled = true;
+                        }
+                    },
+                )
+                .unwrap();
+            assert_ok(&fin);
+            fin
+        });
+        started_rx.recv().unwrap(); // A is mid-stream: slot occupied.
+
+        // (c) the queue bound is exceeded: reject with `overloaded`.
+        let rejected = admin
+            .call(&v(
+                r#"{"v":2,"id":"r","op":"infer","user":1,"policy":"mpic-16","max_new":2,"text":"Describe IMAGE#BP please"}"#,
+            ))
+            .unwrap();
+        assert_code(&rejected, "overloaded");
+        assert_eq!(rejected.get("id").unwrap().as_str().unwrap(), "r");
+
+        // Control ops stay serviceable while the lane is saturated.
+        assert_ok(&admin.call(&v(r#"{"v":2,"op":"ping"}"#)).unwrap());
+        assert_ok(&admin.call(&v(r#"{"v":2,"op":"cache.list"}"#)).unwrap());
+
+        let fin = a.join().unwrap();
+        assert_eq!(fin.get("tokens").unwrap().as_arr().unwrap().len(), 12);
+
+        // Slot free again: the retry is admitted and served.
+        let ok = admin
+            .call(&v(
+                r#"{"v":2,"op":"infer","user":1,"policy":"mpic-16","max_new":2,"text":"Describe IMAGE#BP please"}"#,
+            ))
+            .unwrap();
+        assert_ok(&ok);
+
+        // The reject is visible in pipeline health.
+        let stats = admin.call(&v(r#"{"v":2,"op":"stats"}"#)).unwrap();
+        let pipe = stats.get("metrics").unwrap().get("pipeline").unwrap();
+        assert!(pipe.get("rejected_overloaded").unwrap().as_f64().unwrap() >= 1.0);
+
+        assert_ok(&admin.call(&v(r#"{"op":"shutdown"}"#)).unwrap());
+    });
+
+    let cfg = ServeConfig {
+        pipeline: PipelineConfig { queue_bound: 1, ..Default::default() },
+        ..Default::default()
+    };
+    mpic::server::serve_with(&engine, "127.0.0.1:0", cfg, |a| {
+        addr_tx.send(a).unwrap();
+    })
+    .unwrap();
+    driver.join().unwrap();
+    println!("OK pipeline backpressure overload");
+}
+
+/// The async upload lane: accept-with-job-id, `upload.stat` polling to
+/// `done`, `jobs.list`, and the uploaded image being usable for inference.
+fn pipeline_async_upload_lane() {
+    let engine = test_engine("upl");
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+
+    let driver = std::thread::spawn(move || {
+        let addr = addr_rx.recv().unwrap();
+        let mut c = mpic::server::Client::connect(addr).unwrap();
+
+        let acc = c
+            .call(&v(r#"{"v":2,"id":"u1","op":"upload","user":1,"handle":"IMAGE#ASY","async":true}"#))
+            .unwrap();
+        assert_ok(&acc);
+        assert!(acc.get("accepted").unwrap().as_bool().unwrap());
+        assert_eq!(acc.get("id").unwrap().as_str().unwrap(), "u1");
+        let jid = acc.get("job").unwrap().as_u64().unwrap();
+
+        // Poll to completion.
+        let hex = format!("{:016x}", ImageId::from_handle("IMAGE#ASY").0);
+        let mut state = String::new();
+        for _ in 0..500 {
+            let st = c
+                .call(&Value::parse(&format!(r#"{{"v":2,"op":"upload.stat","job":{jid}}}"#)).unwrap())
+                .unwrap();
+            assert_ok(&st);
+            state = st.get("state").unwrap().as_str().unwrap().to_string();
+            assert_ne!(state, "failed", "async upload failed: {}", st.encode());
+            if state == "done" {
+                assert_eq!(st.get("image_hex").unwrap().as_str().unwrap(), hex);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(state, "done", "upload job must complete");
+
+        // The KV is resident and the handle registered: infer works.
+        let stat = c.call(&v(r#"{"v":2,"op":"cache.stat","handle":"IMAGE#ASY"}"#)).unwrap();
+        assert_ok(&stat);
+        assert!(stat.get("resident").unwrap().as_bool().unwrap());
+        let inf = c
+            .call(&v(
+                r#"{"v":2,"op":"infer","user":1,"policy":"mpic-16","max_new":2,"text":"Describe IMAGE#ASY please"}"#,
+            ))
+            .unwrap();
+        assert_ok(&inf);
+        assert!(inf.get("device_hits").unwrap().as_f64().unwrap() >= 1.0);
+
+        // add_reference rides the same lane.
+        let acc2 = c
+            .call(&v(
+                r#"{"v":2,"op":"add_reference","handle":"IMAGE#ASYREF","description":"a reference","async":true}"#,
+            ))
+            .unwrap();
+        assert_ok(&acc2);
+
+        // Job table introspection + error paths.
+        let jl = c.call(&v(r#"{"v":2,"op":"jobs.list"}"#)).unwrap();
+        assert_ok(&jl);
+        assert!(jl.get("count").unwrap().as_usize().unwrap() >= 2);
+        assert_code(&c.call(&v(r#"{"v":2,"op":"upload.stat","job":999999}"#)).unwrap(), "not_found");
+        assert_code(&c.call(&v(r#"{"v":2,"op":"upload.stat"}"#)).unwrap(), "missing_field");
+
+        // Async uploads counted in pipeline health.
+        let mut counted = 0.0;
+        for _ in 0..500 {
+            let stats = c.call(&v(r#"{"v":2,"op":"stats"}"#)).unwrap();
+            counted = stats
+                .get("metrics")
+                .unwrap()
+                .get("pipeline")
+                .unwrap()
+                .get("async_uploads")
+                .unwrap()
+                .as_f64()
+                .unwrap();
+            if counted >= 2.0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(counted >= 2.0, "async upload completions must surface in stats ({counted})");
+
+        assert_ok(&c.call(&v(r#"{"op":"shutdown"}"#)).unwrap());
+    });
+
+    mpic::server::serve(&engine, "127.0.0.1:0", |a| {
+        addr_tx.send(a).unwrap();
+    })
+    .unwrap();
+    driver.join().unwrap();
+    println!("OK pipeline async upload lane");
 }
