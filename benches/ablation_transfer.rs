@@ -54,6 +54,7 @@ fn main() {
                     disk_dir: dir,
                     ttl: Duration::from_secs(600),
                     disk_bandwidth: Some(bw_mbps * 1e6),
+                    shards: 1, // byte-exact LRU: keep the ablation single-shard
                 })
                 .unwrap(),
             );

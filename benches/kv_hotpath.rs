@@ -1,0 +1,196 @@
+//! KV storage hot-path bench (perf-trajectory: `BENCH_kv_hotpath.json`).
+//!
+//! Three questions, matching the sharded zero-copy store rework:
+//!
+//! 1. **Device-tier `get` vs entry size** — hits hand out an
+//!    `Arc<ImageKv>` (refcount bump), so latency must stay flat as the
+//!    entry grows; the explicit deep-clone column shows what the old
+//!    copy-out cost and how it scales.
+//! 2. **Concurrent `get` throughput, 1 shard vs N shards** — the same
+//!    workload against a single-shard (global-lock) store and the
+//!    default sharded store, with the shard-lock contention counters.
+//! 3. **Codec throughput, v1 whole-payload vs v2 chunked** — decode of a
+//!    multi-MB entry serially and fanned across a ≥4-thread pool.
+//!
+//! `cargo bench --bench kv_hotpath` — no artifacts needed.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mpic::kv::store::{KvStore, StoreConfig};
+use mpic::kv::{codec, ImageKv, KvKey, KvShape};
+use mpic::mm::ImageId;
+use mpic::util::bench::{emit, emit_summary, time_fn, Row, Table};
+use mpic::util::rng::Rng;
+use mpic::util::threadpool::ThreadPool;
+
+/// ~9 KiB per token with these dims: tokens=64 → ~0.6 MB, 512 → ~4.5 MB.
+fn entry(image: u64, tokens: usize) -> ImageKv {
+    let shape = KvShape { layers: 4, tokens, heads: 8, d_head: 32, d_model: 256 };
+    let mut rng = Rng::new(image ^ 0xC0FFEE);
+    // Half-compressible payload: zeros interleaved with noise, so zstd
+    // does real work on decode instead of degenerating to a memcpy.
+    let gen = |rng: &mut Rng, n: usize| -> Vec<f32> {
+        (0..n).map(|i| if i % 2 == 0 { 0.0 } else { rng.f32() }).collect()
+    };
+    let emb = gen(&mut rng, shape.emb_elems());
+    let k = gen(&mut rng, shape.kv_elems());
+    let v = gen(&mut rng, shape.kv_elems());
+    ImageKv { key: KvKey::new("bench-model", ImageId(image)), shape, emb, k, v }
+}
+
+fn fresh_store(shards: usize, tag: &str) -> Arc<KvStore> {
+    let dir = std::env::temp_dir().join(format!("mpic-kv-hotpath-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    Arc::new(
+        KvStore::new(StoreConfig {
+            device_capacity: 4 << 30,
+            host_capacity: 4 << 30,
+            disk_dir: dir,
+            ttl: Duration::from_secs(600),
+            disk_bandwidth: None,
+            shards,
+        })
+        .unwrap(),
+    )
+}
+
+fn main() {
+    mpic::util::logging::init();
+    let mut summary: Vec<(String, f64)> = Vec::new();
+
+    // ------------------------------------------------------------------
+    // 1. Device-tier get latency vs entry size (Arc bump vs deep clone)
+    // ------------------------------------------------------------------
+    let mut t_get = Table::new("kv_hotpath: device get latency vs entry size");
+    let store = fresh_store(8, "size");
+    let sizes = [(64usize, "small"), (256, "medium"), (512, "large")];
+    let mut arc_us = Vec::new();
+    for (i, &(tokens, label)) in sizes.iter().enumerate() {
+        let e = entry(i as u64, tokens);
+        let mb = e.bytes() as f64 / (1 << 20) as f64;
+        let key = e.key.clone();
+        store.put(e).unwrap();
+        let s_arc = time_fn(10, 200, || {
+            std::hint::black_box(store.get(&key).unwrap());
+        });
+        let s_clone = time_fn(3, 30, || {
+            let (kv, _) = store.get(&key).unwrap();
+            // What the pre-Arc store did on every device hit.
+            std::hint::black_box(ImageKv::clone(&kv));
+        });
+        arc_us.push(s_arc.mean() * 1e6);
+        t_get.add(
+            Row::new()
+                .str("entry", label)
+                .num("mb", mb)
+                .num("get_arc_us", s_arc.mean() * 1e6)
+                .num("get_deep_clone_us", s_clone.mean() * 1e6),
+        );
+        summary.push((format!("get_arc_{label}_us"), s_arc.mean() * 1e6));
+        summary.push((format!("get_clone_{label}_us"), s_clone.mean() * 1e6));
+    }
+    // Flatness metric: large-entry Arc get vs small-entry Arc get. ~1.0
+    // means device hits no longer scale with entry size.
+    let flatness = arc_us[arc_us.len() - 1] / arc_us[0].max(1e-9);
+    summary.push(("get_arc_large_over_small".into(), flatness));
+
+    // ------------------------------------------------------------------
+    // 2. Concurrent gets: single global lock vs sharded
+    // ------------------------------------------------------------------
+    let mut t_conc = Table::new("kv_hotpath: concurrent device gets, 1 shard vs 8");
+    let n_threads = 8usize;
+    let gets_per_thread = 2000usize;
+    let n_keys = 32u64;
+    for (shards, label) in [(1usize, "shards1"), (8, "shards8")] {
+        let s = fresh_store(shards, label);
+        for i in 0..n_keys {
+            s.put(entry(i, 64)).unwrap();
+        }
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for t in 0..n_threads {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..gets_per_thread {
+                    let key =
+                        KvKey::new("bench-model", ImageId((t * 7 + i) as u64 % n_keys));
+                    std::hint::black_box(s.get(&key).unwrap());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let total_ops = (n_threads * gets_per_thread) as f64;
+        let contention = s.stats().lock_contention as f64;
+        t_conc.add(
+            Row::new()
+                .str("config", label)
+                .num("wall_ms", wall * 1e3)
+                .num("gets_per_s", total_ops / wall)
+                .num("lock_contention", contention),
+        );
+        summary.push((format!("concurrent_get_{label}_ms"), wall * 1e3));
+        summary.push((format!("concurrent_get_{label}_ops_per_s"), total_ops / wall));
+        summary.push((format!("lock_contention_{label}"), contention));
+    }
+
+    // ------------------------------------------------------------------
+    // 3. Codec: v1 whole-payload vs v2 chunked (serial + pooled)
+    // ------------------------------------------------------------------
+    let mut t_codec = Table::new("kv_hotpath: codec throughput on a multi-MB entry");
+    let big = entry(1000, 512); // ~4.5 MB payload → ~18 chunks
+    let mb = big.bytes() as f64 / (1 << 20) as f64;
+    let pool = ThreadPool::new(4);
+
+    let v1_bytes = codec::encode_v1(&big).unwrap();
+    let v2_bytes = codec::encode(&big).unwrap();
+    let s_enc_v1 = time_fn(2, 15, || {
+        std::hint::black_box(codec::encode_v1(&big).unwrap());
+    });
+    let s_enc_v2 = time_fn(2, 15, || {
+        std::hint::black_box(codec::encode_with(&big, Some(&pool)).unwrap());
+    });
+    let s_dec_v1 = time_fn(2, 15, || {
+        std::hint::black_box(codec::decode(&v1_bytes).unwrap());
+    });
+    let s_dec_v2_serial = time_fn(2, 15, || {
+        std::hint::black_box(codec::decode_with(&v2_bytes, None).unwrap());
+    });
+    let s_dec_v2_pool = time_fn(2, 15, || {
+        std::hint::black_box(codec::decode_with(&v2_bytes, Some(&pool)).unwrap());
+    });
+    let (_, rep) = codec::decode_with(&v2_bytes, Some(&pool)).unwrap();
+    for (name, s) in [
+        ("encode_v1", &s_enc_v1),
+        ("encode_v2_pool", &s_enc_v2),
+        ("decode_v1", &s_dec_v1),
+        ("decode_v2_serial", &s_dec_v2_serial),
+        ("decode_v2_pool", &s_dec_v2_pool),
+    ] {
+        t_codec.add(
+            Row::new()
+                .str("op", name)
+                .num("entry_mb", mb)
+                .num("mean_ms", s.mean() * 1e3)
+                .num("p95_ms", s.p95() * 1e3)
+                .num("mb_per_s", mb / s.mean().max(1e-12)),
+        );
+        summary.push((format!("{name}_ms"), s.mean() * 1e3));
+    }
+    summary.push(("codec_chunks".into(), rep.chunks as f64));
+    let speedup = s_dec_v1.mean() / s_dec_v2_pool.mean().max(1e-12);
+    summary.push(("decode_pool_speedup_vs_v1".into(), speedup));
+
+    emit("kv_hotpath", &[t_get, t_conc, t_codec]);
+    let fields: Vec<(&str, f64)> = summary.iter().map(|(k, x)| (k.as_str(), *x)).collect();
+    emit_summary("kv_hotpath", &fields);
+
+    println!(
+        "[shape] get_arc must stay flat across sizes (ratio ≈ 1, deep clone grows); \
+         sharded concurrent gets must beat the single lock; \
+         decode_v2_pool must beat decode_v1 on the multi-MB entry"
+    );
+}

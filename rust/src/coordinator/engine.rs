@@ -152,8 +152,13 @@ impl Engine {
         let runtime = Runtime::open(&cfg.artifact_dir)?;
         let meta = runtime.model_meta(&cfg.model)?.clone();
         let tokenizer = Tokenizer::new(meta.vocab);
-        let store = Arc::new(KvStore::new(cfg.store.clone())?);
         let pool = Arc::new(ThreadPool::new(cfg.pool_threads));
+        // The store gets a *dedicated* codec pool: transfer/upload work
+        // runs on `pool`'s workers, and a worker can only fan chunked
+        // codec work out across a *different* pool (blocking on its own
+        // pool could deadlock — see ThreadPool::is_own_worker).
+        let codec_pool = Arc::new(ThreadPool::new(cfg.pool_threads));
+        let store = Arc::new(KvStore::with_pool(cfg.store.clone(), codec_pool)?);
         let static_lib = StaticLibrary::new(Arc::clone(&store), cfg.user_quota);
         let dynamic_lib = DynamicLibrary::new(Arc::clone(&store));
         let transfer = TransferEngine::new(Arc::clone(&pool));
@@ -313,12 +318,27 @@ impl Engine {
         LinkedLayout::build(prompt, &self.tokenizer, self.meta.img_tokens, &self.cfg.system_prompt)
     }
 
+    /// Warm the KV entries of not-yet-admitted requests toward the device
+    /// tier on idle pool workers (the prefetch lane — the serving pipeline
+    /// calls this between decode rounds with the image refs of queued
+    /// requests). Non-blocking; returns the number of jobs dispatched.
+    pub fn prefetch_images(&self, images: &[ImageId]) -> usize {
+        if images.is_empty() {
+            return 0;
+        }
+        let keys: Vec<KvKey> =
+            images.iter().map(|&image| KvKey::new(&self.meta.name, image)).collect();
+        self.transfer.prefetch(&self.store, &keys)
+    }
+
     /// Fetch the KV entries for every image span (order = span order),
-    /// loading hits in parallel with computing misses.
+    /// loading hits in parallel with computing misses. Entries come back
+    /// as `Arc`s straight out of the store — no KV bytes are copied on a
+    /// hit.
     fn fetch_entries(
         &self,
         layout: &LinkedLayout,
-    ) -> Result<(Vec<ImageKv>, TransferReport)> {
+    ) -> Result<(Vec<Arc<ImageKv>>, TransferReport)> {
         let keys: Vec<KvKey> = layout
             .image_spans
             .iter()
@@ -342,7 +362,7 @@ impl Engine {
 
         let t_request = Instant::now();
         let (entries, transfer) = self.fetch_entries(&layout)?;
-        let entry_refs: Vec<&ImageKv> = entries.iter().collect();
+        let entry_refs: Vec<&ImageKv> = entries.iter().map(|e| e.as_ref()).collect();
         let fetch_s = t_request.elapsed().as_secs_f64();
 
         let mut ttft = TtftBreakdown { fetch_s, ..Default::default() };
@@ -608,7 +628,7 @@ impl Engine {
         let layout = self.layout(prompt);
         let s_bucket = self.runtime.manifest().seq_bucket_for(layout.len())?;
         let (entries, _) = self.fetch_entries(&layout)?;
-        let entry_refs: Vec<&ImageKv> = entries.iter().collect();
+        let entry_refs: Vec<&ImageKv> = entries.iter().map(|e| e.as_ref()).collect();
         let linker = Linker::new(&self.meta);
         let inputs = linker.full_prefill(&layout, &entry_refs, s_bucket)?;
         let art = Runtime::art_prefill_full(&self.meta.name, s_bucket);
@@ -624,7 +644,7 @@ impl Engine {
         let layout = self.layout(prompt);
         let s_bucket = self.runtime.manifest().debug_bucket_for(layout.len())?;
         let (entries, _) = self.fetch_entries(&layout)?;
-        let entry_refs: Vec<&ImageKv> = entries.iter().collect();
+        let entry_refs: Vec<&ImageKv> = entries.iter().map(|e| e.as_ref()).collect();
         let linker = Linker::new(&self.meta);
         let inputs = linker.full_prefill(&layout, &entry_refs, s_bucket)?;
         let art = Runtime::art_prefill_debug(&self.meta.name, s_bucket);
@@ -634,8 +654,9 @@ impl Engine {
         Ok((layout, it.next().unwrap(), it.next().unwrap()))
     }
 
-    /// Fetch an image's stored KV (benches/Fig. 8: compare stored vs fresh).
-    pub fn stored_kv(&self, image: ImageId) -> Option<ImageKv> {
+    /// Fetch an image's stored KV (benches/Fig. 8: compare stored vs
+    /// fresh). Shares the store's allocation — a device hit copies nothing.
+    pub fn stored_kv(&self, image: ImageId) -> Option<Arc<ImageKv>> {
         self.store.get(&KvKey::new(&self.meta.name, image)).map(|(kv, _)| kv)
     }
 

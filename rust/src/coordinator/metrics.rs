@@ -1,7 +1,9 @@
 //! Serving metrics: TTFT / decode-step latency / throughput / cache stats
 //! / per-op request counters and latency accumulators / pipeline health
 //! (admission wait, batch occupancy, queue depth, overload rejections,
-//! async upload completions) surfaced under `stats.metrics.pipeline`.
+//! async upload completions) surfaced under `stats.metrics.pipeline`,
+//! plus the KV hot-path counters (shard-lock contention, prefetch
+//! hits/wasted, chunked-codec parallelism) under `stats.metrics.kv`.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -41,6 +43,9 @@ struct Inner {
     overload_rejected: u64,
     /// Async upload-lane jobs that reached a terminal state.
     async_uploads: u64,
+    /// Latest KV-store hot-path counters (shard contention, prefetch
+    /// lane, chunked codec), copied in from `KvStore::stats`.
+    kv: crate::kv::StoreStats,
 }
 
 impl Metrics {
@@ -62,6 +67,7 @@ impl Metrics {
                 queue_depth: Samples::new(),
                 overload_rejected: 0,
                 async_uploads: 0,
+                kv: crate::kv::StoreStats::default(),
             }),
         }
     }
@@ -112,6 +118,13 @@ impl Metrics {
         g.async_uploads = async_uploads;
     }
 
+    /// Publish the KV store's hot-path counters (sharding, prefetch,
+    /// codec). Called by the pipeline each round and by the `stats` op so
+    /// the snapshot is always fresh.
+    pub fn set_kv_counters(&self, kv: &crate::kv::StoreStats) {
+        self.inner.lock().unwrap().kv = *kv;
+    }
+
     /// How many requests of this op have been recorded.
     pub fn op_count(&self, op: &str) -> u64 {
         self.inner.lock().unwrap().ops.get(op).map(|s| s.len() as u64).unwrap_or(0)
@@ -157,6 +170,23 @@ impl Metrics {
             ("rejected_overloaded", Value::num(g.overload_rejected as f64)),
             ("async_uploads", Value::num(g.async_uploads as f64)),
         ]);
+        let n = Value::num;
+        let kv = Value::obj(vec![
+            ("device_hits", n(g.kv.device_hits as f64)),
+            ("host_hits", n(g.kv.host_hits as f64)),
+            ("disk_hits", n(g.kv.disk_hits as f64)),
+            ("misses", n(g.kv.misses as f64)),
+            ("expirations", n(g.kv.expirations as f64)),
+            ("corruptions", n(g.kv.corruptions as f64)),
+            ("device_evictions", n(g.kv.device_evictions as f64)),
+            ("host_evictions", n(g.kv.host_evictions as f64)),
+            ("lock_contention", n(g.kv.lock_contention as f64)),
+            ("prefetch_issued", n(g.kv.prefetch_issued as f64)),
+            ("prefetch_hits", n(g.kv.prefetch_hits as f64)),
+            ("prefetch_wasted", n(g.kv.prefetch_wasted as f64)),
+            ("codec_chunks", n(g.kv.codec_chunks as f64)),
+            ("codec_parallel_ops", n(g.kv.codec_parallel_ops as f64)),
+        ]);
         Value::obj(vec![
             ("requests", Value::num(g.requests as f64)),
             ("tokens_out", Value::num(g.tokens_out as f64)),
@@ -168,6 +198,7 @@ impl Metrics {
             ("upload_s", s(&g.upload)),
             ("ops", ops),
             ("pipeline", pipeline),
+            ("kv", kv),
         ])
     }
 }
@@ -253,6 +284,31 @@ mod tests {
         assert_eq!(p.get("queue_depth").unwrap().get("n").unwrap().as_f64().unwrap(), 2.0);
         assert_eq!(p.get("rejected_overloaded").unwrap().as_f64().unwrap(), 7.0);
         assert_eq!(p.get("async_uploads").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn kv_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        let kv = crate::kv::StoreStats {
+            device_hits: 9,
+            lock_contention: 2,
+            prefetch_issued: 4,
+            prefetch_hits: 3,
+            prefetch_wasted: 1,
+            codec_chunks: 40,
+            codec_parallel_ops: 5,
+            ..Default::default()
+        };
+        m.set_kv_counters(&kv);
+        let snap = m.snapshot();
+        let k = snap.get("kv").unwrap();
+        assert_eq!(k.get("device_hits").unwrap().as_f64().unwrap(), 9.0);
+        assert_eq!(k.get("lock_contention").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(k.get("prefetch_issued").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(k.get("prefetch_hits").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(k.get("prefetch_wasted").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(k.get("codec_chunks").unwrap().as_f64().unwrap(), 40.0);
+        assert_eq!(k.get("codec_parallel_ops").unwrap().as_f64().unwrap(), 5.0);
     }
 
     #[test]

@@ -175,6 +175,23 @@ impl Scheduler {
         self.queue.len()
     }
 
+    /// Image refs of queued-but-not-yet-admitted requests, FCFS order,
+    /// deduped. The serving pipeline feeds these to the prefetch lane
+    /// between decode rounds so that by admission time the transfer
+    /// engine sees device hits.
+    pub fn queued_images(&self) -> Vec<crate::mm::ImageId> {
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for (req, _) in &self.queue {
+            for image in req.prompt.images() {
+                if seen.insert(image) {
+                    out.push(image);
+                }
+            }
+        }
+        out
+    }
+
     pub fn active(&self) -> usize {
         self.active.len()
     }
@@ -377,6 +394,18 @@ mod tests {
         assert_eq!(s.pending(), 0);
         assert_eq!(s.active(), 0);
         assert_eq!(s.block_utilization(), 0.0);
+    }
+
+    #[test]
+    fn queued_images_are_fcfs_and_deduped() {
+        use crate::mm::{ImageId, Prompt, UserId};
+        let mut s = Scheduler::new(64, 16);
+        assert!(s.queued_images().is_empty());
+        let p1 = Prompt::new(UserId(1)).text("a").image(ImageId(7)).image(ImageId(3));
+        let p2 = Prompt::new(UserId(2)).text("b").image(ImageId(3)).image(ImageId(9));
+        s.submit(Request { id: 1, prompt: p1, policy: Policy::Prefix, max_new: 4 });
+        s.submit(Request { id: 2, prompt: p2, policy: Policy::Prefix, max_new: 4 });
+        assert_eq!(s.queued_images(), vec![ImageId(7), ImageId(3), ImageId(9)]);
     }
 
     #[test]

@@ -1,15 +1,38 @@
 //! KV serialization: the on-disk / in-host-tier wire format.
 //!
-//! Layout (little-endian):
+//! ## v2 — chunked container (current writer)
+//!
+//! The payload (`emb ++ k ++ v` as raw f32 LE) is split into fixed-size
+//! chunks of [`CHUNK_SIZE`] bytes; each chunk is independently
+//! zstd-compressed and SHA-256-checksummed, so encode and decode fan the
+//! chunks out across the shared [`ThreadPool`] instead of serialising a
+//! multi-MB (de)compression behind one core:
+//!
 //! ```text
-//! magic "MPKV" | version u32 | model_len u32 | model bytes | image u64
+//! magic "MPKV" | version=2 u32 | model_len u32 | model bytes | image u64
+//! | layers,tokens,heads,d_head,d_model (u32 x5)
+//! | chunk_size u32 | n_chunks u32
+//! | chunk table: n_chunks x (comp_len u32 | sha256 of compressed chunk)
+//! | compressed chunks, concatenated in order
+//! ```
+//!
+//! Integrity is per chunk, but failure is per entry: one corrupt or
+//! truncated chunk fails the whole decode and the store treats the entry
+//! as a miss (failure-injection tests cover this).
+//!
+//! ## v1 — whole-payload container (legacy, still decodes)
+//!
+//! ```text
+//! magic "MPKV" | version=1 u32 | model_len u32 | model bytes | image u64
 //! | layers,tokens,heads,d_head,d_model (u32 x5)
 //! | payload_len u64 | sha256 (32 bytes of the *compressed* payload)
 //! | zstd(payload)
 //! ```
-//! Payload = emb ++ k ++ v as raw f32 LE. Integrity is verified on decode;
-//! a corrupt or truncated entry is reported as an error and treated by the
-//! store as a miss (failure-injection tests cover this).
+//!
+//! Entries written before the v2 cut-over keep decoding forever;
+//! [`encode_v1`] remains as the legacy writer for compatibility tests.
+
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context};
 use byteorder::{ByteOrder, LittleEndian, ReadBytesExt, WriteBytesExt};
@@ -17,17 +40,47 @@ use sha2::{Digest, Sha256};
 
 use super::{ImageKv, KvKey, KvShape};
 use crate::mm::ImageId;
+use crate::util::threadpool::ThreadPool;
 use crate::Result;
 
 const MAGIC: &[u8; 4] = b"MPKV";
-const VERSION: u32 = 1;
+const V1: u32 = 1;
+const V2: u32 = 2;
 
 /// zstd level: 1 is the latency-friendly setting for the hot path.
 pub const ZSTD_LEVEL: i32 = 1;
 
-/// Serialise an entry to bytes.
+/// Raw payload bytes per v2 chunk. 256 KiB keeps per-chunk overhead (36
+/// bytes of table) negligible while giving a multi-MB entry enough chunks
+/// to occupy every pool worker.
+pub const CHUNK_SIZE: usize = 256 << 10;
+
+/// How one (en|de)code ran — fed into the store's codec-parallelism stats.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CodecReport {
+    /// Number of independently processed chunks (1 for v1 entries).
+    pub chunks: usize,
+    /// Whether the chunks actually fanned out across the pool.
+    pub pooled: bool,
+}
+
+/// Number of v2 chunks a payload of `payload_len` raw bytes splits into.
+pub fn chunk_count(payload_len: usize) -> usize {
+    payload_len.div_ceil(CHUNK_SIZE).max(1)
+}
+
+/// Serialise an entry to bytes (v2, serial). See [`encode_with`].
 pub fn encode(e: &ImageKv) -> Result<Vec<u8>> {
-    e.validate()?;
+    encode_with(e, None).map(|(bytes, _)| bytes)
+}
+
+/// Decode and integrity-check an entry (serial). See [`decode_with`].
+pub fn decode(bytes: &[u8]) -> Result<ImageKv> {
+    decode_with(bytes, None).map(|(kv, _)| kv)
+}
+
+/// Flatten an entry's tensors into the raw `emb ++ k ++ v` LE payload.
+fn flatten_payload(e: &ImageKv) -> Vec<u8> {
     let n_floats = e.emb.len() + e.k.len() + e.v.len();
     let mut payload = vec![0u8; n_floats * 4];
     let (a, rest) = payload.split_at_mut(e.emb.len() * 4);
@@ -35,27 +88,97 @@ pub fn encode(e: &ImageKv) -> Result<Vec<u8>> {
     LittleEndian::write_f32_into(&e.emb, a);
     LittleEndian::write_f32_into(&e.k, b);
     LittleEndian::write_f32_into(&e.v, c);
-    let compressed = zstd::bulk::compress(&payload, ZSTD_LEVEL).context("zstd compress")?;
-    let digest = Sha256::digest(&compressed);
+    payload
+}
 
-    let model = e.key.model.as_bytes();
-    let mut out = Vec::with_capacity(compressed.len() + model.len() + 96);
+/// Write the header both container versions share:
+/// magic | version | model | image | shape dims.
+fn write_header(out: &mut Vec<u8>, e: &ImageKv, version: u32) -> Result<()> {
     out.extend_from_slice(MAGIC);
-    out.write_u32::<LittleEndian>(VERSION)?;
+    out.write_u32::<LittleEndian>(version)?;
+    let model = e.key.model.as_bytes();
     out.write_u32::<LittleEndian>(model.len() as u32)?;
     out.extend_from_slice(model);
     out.write_u64::<LittleEndian>(e.key.image.0)?;
     for d in [e.shape.layers, e.shape.tokens, e.shape.heads, e.shape.d_head, e.shape.d_model] {
         out.write_u32::<LittleEndian>(d as u32)?;
     }
-    out.write_u64::<LittleEndian>(compressed.len() as u64)?;
-    out.extend_from_slice(&digest);
-    out.extend_from_slice(&compressed);
-    Ok(out)
+    Ok(())
 }
 
-/// Decode and integrity-check an entry.
-pub fn decode(bytes: &[u8]) -> Result<ImageKv> {
+/// Serialise an entry to the v2 chunked container. With a pool, chunks
+/// compress in parallel; the output is byte-identical either way.
+pub fn encode_with(e: &ImageKv, pool: Option<&ThreadPool>) -> Result<(Vec<u8>, CodecReport)> {
+    e.validate()?;
+    let payload = flatten_payload(e);
+
+    let n_chunks = chunk_count(payload.len());
+    let spans: Vec<(usize, usize)> = (0..n_chunks)
+        .map(|i| {
+            let off = i * CHUNK_SIZE;
+            (off, payload.len().min(off + CHUNK_SIZE) - off)
+        })
+        .collect();
+    let (compressed, pooled) = match usable_pool(pool, n_chunks) {
+        Some(pool) => {
+            let payload = Arc::new(payload);
+            let jobs: Vec<(Arc<Vec<u8>>, usize, usize)> =
+                spans.iter().map(|&(off, len)| (Arc::clone(&payload), off, len)).collect();
+            let out = pool
+                .map(jobs, |(p, off, len)| {
+                    zstd::bulk::compress(&p[off..off + len], ZSTD_LEVEL)
+                        .context("zstd compress chunk")
+                })
+                .into_iter()
+                .collect::<Result<Vec<_>>>()?;
+            (out, true)
+        }
+        None => {
+            let out = spans
+                .iter()
+                .map(|&(off, len)| {
+                    zstd::bulk::compress(&payload[off..off + len], ZSTD_LEVEL)
+                        .context("zstd compress chunk")
+                })
+                .collect::<Result<Vec<_>>>()?;
+            (out, false)
+        }
+    };
+
+    let comp_total: usize = compressed.iter().map(|c| c.len()).sum();
+    let mut out = Vec::with_capacity(comp_total + e.key.model.len() + 48 + 36 * n_chunks);
+    write_header(&mut out, e, V2)?;
+    out.write_u32::<LittleEndian>(CHUNK_SIZE as u32)?;
+    out.write_u32::<LittleEndian>(n_chunks as u32)?;
+    for chunk in &compressed {
+        out.write_u32::<LittleEndian>(chunk.len() as u32)?;
+        out.extend_from_slice(&Sha256::digest(chunk));
+    }
+    for chunk in &compressed {
+        out.extend_from_slice(chunk);
+    }
+    Ok((out, CodecReport { chunks: n_chunks, pooled }))
+}
+
+/// Decode and integrity-check an entry of either container version. With
+/// a pool, v2 chunks verify + decompress in parallel.
+pub fn decode_with(bytes: &[u8], pool: Option<&ThreadPool>) -> Result<(ImageKv, CodecReport)> {
+    decode_dispatch(bytes, None, pool)
+}
+
+/// Decode from an *owned* buffer: the pooled path shares it behind one
+/// `Arc` instead of copying the compressed region. The store's host and
+/// disk tiers both own their bytes, so this is the hot-path entry point.
+pub fn decode_owned(bytes: Vec<u8>, pool: Option<&ThreadPool>) -> Result<(ImageKv, CodecReport)> {
+    let shared = Arc::new(bytes);
+    decode_dispatch(&shared, Some(&shared), pool)
+}
+
+fn decode_dispatch(
+    bytes: &[u8],
+    owned: Option<&Arc<Vec<u8>>>,
+    pool: Option<&ThreadPool>,
+) -> Result<(ImageKv, CodecReport)> {
     let mut r = std::io::Cursor::new(bytes);
     let mut magic = [0u8; 4];
     std::io::Read::read_exact(&mut r, &mut magic).context("reading magic")?;
@@ -63,15 +186,23 @@ pub fn decode(bytes: &[u8]) -> Result<ImageKv> {
         bail!("bad magic {:?}", magic);
     }
     let version = r.read_u32::<LittleEndian>()?;
-    if version != VERSION {
-        bail!("unsupported KV codec version {version}");
+    let (key, shape) = read_header(&mut r)?;
+    match version {
+        V1 => decode_v1_body(bytes, r, key, shape)
+            .map(|kv| (kv, CodecReport { chunks: 1, pooled: false })),
+        V2 => decode_v2_body(bytes, owned, r, key, shape, pool),
+        other => bail!("unsupported KV codec version {other}"),
     }
+}
+
+/// Shared header fields (after magic + version): key + shape.
+fn read_header(r: &mut std::io::Cursor<&[u8]>) -> Result<(KvKey, KvShape)> {
     let model_len = r.read_u32::<LittleEndian>()? as usize;
     if model_len > 4096 {
         bail!("implausible model name length {model_len}");
     }
     let mut model = vec![0u8; model_len];
-    std::io::Read::read_exact(&mut r, &mut model)?;
+    std::io::Read::read_exact(r, &mut model)?;
     let image = r.read_u64::<LittleEndian>()?;
     let dims: Vec<usize> = (0..5)
         .map(|_| r.read_u32::<LittleEndian>().map(|d| d as usize))
@@ -83,6 +214,108 @@ pub fn decode(bytes: &[u8]) -> Result<ImageKv> {
         d_head: dims[3],
         d_model: dims[4],
     };
+    Ok((KvKey { model: String::from_utf8(model)?, image: ImageId(image) }, shape))
+}
+
+fn decode_v2_body(
+    bytes: &[u8],
+    owned: Option<&Arc<Vec<u8>>>,
+    mut r: std::io::Cursor<&[u8]>,
+    key: KvKey,
+    shape: KvShape,
+    pool: Option<&ThreadPool>,
+) -> Result<(ImageKv, CodecReport)> {
+    let chunk_size = r.read_u32::<LittleEndian>()? as usize;
+    let n_chunks = r.read_u32::<LittleEndian>()? as usize;
+    let expect_bytes = (shape.emb_elems() + 2 * shape.kv_elems()) * 4;
+    if chunk_size == 0 || n_chunks == 0 || n_chunks > (1 << 20) {
+        bail!("implausible chunk geometry ({n_chunks} chunks of {chunk_size})");
+    }
+    if n_chunks != expect_bytes.div_ceil(chunk_size).max(1) {
+        bail!("chunk count {n_chunks} disagrees with shape ({expect_bytes} payload bytes)");
+    }
+    let mut table = Vec::with_capacity(n_chunks);
+    for _ in 0..n_chunks {
+        let comp_len = r.read_u32::<LittleEndian>()? as usize;
+        let mut digest = [0u8; 32];
+        std::io::Read::read_exact(&mut r, &mut digest).context("truncated chunk table")?;
+        table.push((comp_len, digest));
+    }
+    let data_off = r.position() as usize;
+    let comp_total: usize = table.iter().map(|(n, _)| n).sum();
+    let comp_region = bytes
+        .get(data_off..data_off + comp_total)
+        .ok_or_else(|| anyhow!("truncated KV entry (chunk data)"))?;
+
+    // Per-chunk spans into the compressed region; each chunk verifies its
+    // checksum and decompresses independently.
+    let mut spans = Vec::with_capacity(n_chunks);
+    let mut off = 0usize;
+    for (i, &(comp_len, _)) in table.iter().enumerate() {
+        let raw_len = if i + 1 == n_chunks { expect_bytes - i * chunk_size } else { chunk_size };
+        spans.push((off, comp_len, raw_len, i));
+        off += comp_len;
+    }
+    let (payload, pooled) = match usable_pool(pool, n_chunks) {
+        Some(pool) => {
+            // The pooled closures need `'static` data. An owned caller
+            // (`decode_owned`) shares its buffer behind the existing Arc
+            // — zero copies; a borrowed caller pays one copy of the
+            // compressed region. The serial path below borrows directly.
+            let table = Arc::new(table);
+            let (region, base): (Arc<Vec<u8>>, usize) = match owned {
+                Some(arc) => (Arc::clone(arc), data_off),
+                None => (Arc::new(comp_region.to_vec()), 0),
+            };
+            type Job = (Arc<Vec<u8>>, Arc<Vec<(usize, [u8; 32])>>, (usize, usize, usize, usize));
+            let jobs: Vec<Job> = spans
+                .iter()
+                .map(|&(off, comp_len, raw_len, i)| {
+                    (Arc::clone(&region), Arc::clone(&table), (base + off, comp_len, raw_len, i))
+                })
+                .collect();
+            let raw_chunks = pool
+                .map(jobs, |(region, table, (off, comp_len, raw_len, i))| {
+                    check_chunk(&region[off..off + comp_len], &table[i].1, raw_len, i)
+                })
+                .into_iter()
+                .collect::<Result<Vec<_>>>()?;
+            let mut payload = Vec::with_capacity(expect_bytes);
+            for chunk in raw_chunks {
+                payload.extend_from_slice(&chunk);
+            }
+            (payload, true)
+        }
+        None => {
+            // Serial: decompress each chunk straight into its slot of one
+            // preallocated buffer — no per-chunk Vecs, no concat pass.
+            let mut payload = vec![0u8; expect_bytes];
+            let mut dec = zstd::bulk::Decompressor::new().context("zstd decompressor")?;
+            for &(off, comp_len, raw_len, i) in &spans {
+                let comp = &comp_region[off..off + comp_len];
+                verify_digest(comp, &table[i].1, i)?;
+                let dst = &mut payload[i * chunk_size..i * chunk_size + raw_len];
+                let n =
+                    dec.decompress_to_buffer(comp, dst).context("zstd decompress chunk")?;
+                if n != raw_len {
+                    bail!("chunk {i} is {n} bytes, expected {raw_len}");
+                }
+            }
+            (payload, false)
+        }
+    };
+    if payload.len() != expect_bytes {
+        bail!("payload is {} bytes, shape wants {expect_bytes}", payload.len());
+    }
+    Ok((assemble(key, shape, &payload), CodecReport { chunks: n_chunks, pooled }))
+}
+
+fn decode_v1_body(
+    bytes: &[u8],
+    mut r: std::io::Cursor<&[u8]>,
+    key: KvKey,
+    shape: KvShape,
+) -> Result<ImageKv> {
     let payload_len = r.read_u64::<LittleEndian>()? as usize;
     let mut digest = [0u8; 32];
     std::io::Read::read_exact(&mut r, &mut digest)?;
@@ -100,7 +333,11 @@ pub fn decode(bytes: &[u8]) -> Result<ImageKv> {
     if payload.len() != expect_floats * 4 {
         bail!("payload is {} bytes, shape wants {}", payload.len(), expect_floats * 4);
     }
+    Ok(assemble(key, shape, &payload))
+}
 
+/// Split a raw payload into the entry's three tensors.
+fn assemble(key: KvKey, shape: KvShape, payload: &[u8]) -> ImageKv {
     let mut emb = vec![0f32; shape.emb_elems()];
     let mut k = vec![0f32; shape.kv_elems()];
     let mut v = vec![0f32; shape.kv_elems()];
@@ -109,14 +346,52 @@ pub fn decode(bytes: &[u8]) -> Result<ImageKv> {
     LittleEndian::read_f32_into(a, &mut emb);
     LittleEndian::read_f32_into(b, &mut k);
     LittleEndian::read_f32_into(c, &mut v);
+    ImageKv { key, shape, emb, k, v }
+}
 
-    Ok(ImageKv {
-        key: KvKey { model: String::from_utf8(model)?, image: ImageId(image) },
-        shape,
-        emb,
-        k,
-        v,
-    })
+/// Whether chunk work should fan out: a pool was supplied, there is more
+/// than one chunk, and the current thread is not one of *that pool's own*
+/// workers — a worker blocking on its own pool's `map` could deadlock
+/// with every worker waiting on jobs queued behind themselves. Blocking
+/// on a different pool (transfer worker → dedicated codec pool) is safe.
+fn usable_pool(pool: Option<&ThreadPool>, n_chunks: usize) -> Option<&ThreadPool> {
+    pool.filter(|p| n_chunks > 1 && !p.is_own_worker())
+}
+
+/// Verify one compressed chunk's SHA-256 against the table digest.
+fn verify_digest(comp: &[u8], digest: &[u8; 32], i: usize) -> Result<()> {
+    if Sha256::digest(comp).as_slice() != digest {
+        bail!("KV entry integrity failure (sha256 mismatch on chunk {i})");
+    }
+    Ok(())
+}
+
+/// Verify one compressed chunk against its table digest and decompress it
+/// into a fresh buffer (the pooled path; workers cannot share one output
+/// buffer without unsafe).
+fn check_chunk(comp: &[u8], digest: &[u8; 32], raw_len: usize, i: usize) -> Result<Vec<u8>> {
+    verify_digest(comp, digest, i)?;
+    let raw = zstd::bulk::decompress(comp, raw_len).context("zstd decompress chunk")?;
+    if raw.len() != raw_len {
+        bail!("chunk {i} is {} bytes, expected {raw_len}", raw.len());
+    }
+    Ok(raw)
+}
+
+/// Legacy v1 writer — kept so compatibility tests can mint v1 entries and
+/// prove the store still serves archives written before the v2 cut-over.
+pub fn encode_v1(e: &ImageKv) -> Result<Vec<u8>> {
+    e.validate()?;
+    let payload = flatten_payload(e);
+    let compressed = zstd::bulk::compress(&payload, ZSTD_LEVEL).context("zstd compress")?;
+    let digest = Sha256::digest(&compressed);
+
+    let mut out = Vec::with_capacity(compressed.len() + e.key.model.len() + 96);
+    write_header(&mut out, e, V1)?;
+    out.write_u64::<LittleEndian>(compressed.len() as u64)?;
+    out.extend_from_slice(&digest);
+    out.extend_from_slice(&compressed);
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -124,12 +399,68 @@ mod tests {
     use super::*;
     use crate::kv::test_entry;
 
+    /// ~160 bytes/token with the test shape; pick token counts that cross
+    /// the chunk boundary for multi-chunk coverage.
+    fn big_entry(image: u64) -> ImageKv {
+        test_entry(image, 1 + CHUNK_SIZE / 160 * 3) // ~3.0 chunks of payload
+    }
+
     #[test]
     fn roundtrip() {
         let e = test_entry(42, 16);
         let bytes = encode(&e).unwrap();
         let back = decode(&bytes).unwrap();
         assert_eq!(e, back);
+    }
+
+    #[test]
+    fn multichunk_roundtrip_serial_and_pooled() {
+        let e = big_entry(8);
+        let (bytes, rep) = encode_with(&e, None).unwrap();
+        assert!(rep.chunks >= 3, "entry should span chunks, got {}", rep.chunks);
+        assert!(!rep.pooled);
+
+        let pool = ThreadPool::new(4);
+        let (pooled_bytes, rep_p) = encode_with(&e, Some(&pool)).unwrap();
+        assert!(rep_p.pooled);
+        assert_eq!(bytes, pooled_bytes, "pooled encode must be byte-identical");
+
+        let (back, drep) = decode_with(&bytes, Some(&pool)).unwrap();
+        assert_eq!(back, e);
+        assert_eq!(drep.chunks, rep.chunks);
+        assert!(drep.pooled);
+        assert_eq!(decode(&bytes).unwrap(), e);
+
+        // The owned (zero-copy) entry point agrees on both paths.
+        let (owned_serial, _) = decode_owned(bytes.clone(), None).unwrap();
+        assert_eq!(owned_serial, e);
+        let (owned_pooled, orep) = decode_owned(bytes.clone(), Some(&pool)).unwrap();
+        assert_eq!(owned_pooled, e);
+        assert!(orep.pooled);
+    }
+
+    #[test]
+    fn chunk_boundary_sizes_roundtrip() {
+        // Payloads landing exactly on / one token past a chunk boundary.
+        for tokens in [CHUNK_SIZE / 160, CHUNK_SIZE / 160 + 1, 1] {
+            let e = test_entry(tokens as u64, tokens.max(1));
+            let bytes = encode(&e).unwrap();
+            assert_eq!(decode(&bytes).unwrap(), e);
+        }
+    }
+
+    #[test]
+    fn v1_entries_still_decode() {
+        let e = big_entry(3);
+        let v1 = encode_v1(&e).unwrap();
+        let (back, rep) = decode_with(&v1, None).unwrap();
+        assert_eq!(back, e);
+        assert_eq!(rep.chunks, 1);
+        // And through the pooled path too.
+        let pool = ThreadPool::new(2);
+        let (back2, rep2) = decode_with(&v1, Some(&pool)).unwrap();
+        assert_eq!(back2, e);
+        assert!(!rep2.pooled, "v1 has a single payload; nothing to fan out");
     }
 
     #[test]
@@ -153,12 +484,30 @@ mod tests {
     }
 
     #[test]
+    fn corrupt_chunk_fails_whole_entry() {
+        let e = big_entry(9);
+        let (mut bytes, rep) = encode_with(&e, None).unwrap();
+        assert!(rep.chunks > 2);
+        // Flip a byte in the middle of the chunk data region: only one
+        // chunk's checksum breaks, but the entry as a whole must fail.
+        let mid = bytes.len() - bytes.len() / 3;
+        bytes[mid] ^= 0xFF;
+        let pool = ThreadPool::new(4);
+        for p in [None, Some(&pool)] {
+            let err = decode_with(&bytes, p).unwrap_err().to_string();
+            assert!(err.contains("integrity"), "{err}");
+        }
+    }
+
+    #[test]
     fn detects_truncation() {
         let e = test_entry(7, 8);
         let bytes = encode(&e).unwrap();
         assert!(decode(&bytes[..bytes.len() - 10]).is_err());
         assert!(decode(&bytes[..10]).is_err());
         assert!(decode(b"definitely not a kv entry").is_err());
+        let big = encode(&big_entry(5)).unwrap();
+        assert!(decode(&big[..big.len() - CHUNK_SIZE / 2]).is_err());
     }
 
     #[test]
@@ -170,6 +519,26 @@ mod tests {
         let mut bytes2 = encode(&e).unwrap();
         bytes2[4] = 99;
         assert!(decode(&bytes2).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_chunk_geometry() {
+        let e = test_entry(7, 8);
+        let mut bytes = encode(&e).unwrap();
+        // n_chunks lives right after the 5 shape dims + chunk_size:
+        // 4 magic + 4 ver + 4 mlen + model + 8 image + 20 dims + 4 csize.
+        let n_off = 4 + 4 + 4 + e.key.model.len() + 8 + 20 + 4;
+        bytes[n_off] = 7;
+        assert!(decode(&bytes).unwrap_err().to_string().contains("chunk count"));
+    }
+
+    #[test]
+    fn chunk_count_math() {
+        assert_eq!(chunk_count(0), 1);
+        assert_eq!(chunk_count(1), 1);
+        assert_eq!(chunk_count(CHUNK_SIZE), 1);
+        assert_eq!(chunk_count(CHUNK_SIZE + 1), 2);
+        assert_eq!(chunk_count(3 * CHUNK_SIZE), 3);
     }
 
     #[test]
@@ -185,6 +554,24 @@ mod tests {
                     Ok(())
                 } else {
                     Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn property_v1_v2_cross_version() {
+        crate::util::prop::check(
+            "kv-codec-v1-compat",
+            10,
+            |rng| test_entry(rng.next_u64(), 1 + rng.below(24) as usize),
+            |e| {
+                let v1 = encode_v1(e).map_err(|x| x.to_string())?;
+                let back = decode(&v1).map_err(|x| x.to_string())?;
+                if &back == e {
+                    Ok(())
+                } else {
+                    Err("v1 roundtrip mismatch".into())
                 }
             },
         );

@@ -5,6 +5,14 @@
 //! upload time, stored across a three-tier hierarchy and fetched by the
 //! parallel transfer engine (paper Fig. 6) at inference time.
 //!
+//! The storage hot path is built for concurrent serving: the store is
+//! sharded by key hash (no global lock), device entries travel as
+//! `Arc<ImageKv>` (a hit is a refcount bump, not a copy), host/disk
+//! bytes use the chunked v2 container so codec work fans out across the
+//! shared pool, and a prefetch lane warms queued requests' entries
+//! toward the device tier between decode rounds. See [`store`],
+//! [`codec`] and [`transfer`] for the details.
+//!
 //! Tier semantics on this testbed (CPU PJRT — DESIGN.md §2):
 //! * **device** — uncompressed in-RAM, capacity-limited (models GPU HBM
 //!   residency; zero load cost),

@@ -6,7 +6,18 @@
 //! device thread — see `runtime`). The two lanes overlap; the report
 //! records both the overlapped wall time and the serial estimate so the
 //! ablation bench can show the win.
+//!
+//! Entries travel as `Arc<ImageKv>` end to end: a device-tier hit is a
+//! refcount bump out of the store, and the same allocation reaches the
+//! linker call sites — the fetch path never deep-copies KV bytes.
+//!
+//! The engine also drives the **prefetch lane**: between decode rounds
+//! the serving pipeline peeks the image refs of queued-but-not-admitted
+//! requests and calls [`TransferEngine::prefetch`], which warms host/disk
+//! entries toward the device tier on idle pool workers so that by
+//! admission time the fetch sees device hits.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -47,15 +58,67 @@ pub struct TransferEngine {
     /// When false, loads and computes run serially (ablation mode — the
     /// "two-step" storage path the paper improves upon).
     pub parallel: bool,
+    /// Prefetch promotions currently running on the pool (bounds the lane
+    /// so warming can never starve demand loads).
+    prefetch_inflight: Arc<AtomicUsize>,
+    /// Prefetch jobs ever dispatched to the pool.
+    prefetch_submitted: AtomicU64,
 }
 
 impl TransferEngine {
     pub fn new(pool: Arc<ThreadPool>) -> TransferEngine {
-        TransferEngine { pool, parallel: true }
+        TransferEngine {
+            pool,
+            parallel: true,
+            prefetch_inflight: Arc::new(AtomicUsize::new(0)),
+            prefetch_submitted: AtomicU64::new(0),
+        }
     }
 
     pub fn serial(pool: Arc<ThreadPool>) -> TransferEngine {
-        TransferEngine { pool, parallel: false }
+        TransferEngine { parallel: false, ..TransferEngine::new(pool) }
+    }
+
+    /// Warm `keys` toward the device tier on idle pool workers without
+    /// blocking the caller. Only host/disk-resident keys spawn work
+    /// (device hits and misses are skipped by a cheap peek), and at most
+    /// one pool's worth of promotions runs at a time so the lane never
+    /// crowds out demand loads. Returns the number of jobs dispatched.
+    pub fn prefetch(&self, store: &Arc<KvStore>, keys: &[KvKey]) -> usize {
+        // Leave at least one worker free for demand loads: a full-width
+        // prefetch sweep would queue multi-MB disk reads ahead of the
+        // fetches it exists to speed up.
+        let cap = self.pool.size().saturating_sub(1).max(1);
+        let mut issued = 0;
+        for key in keys {
+            if self.prefetch_inflight.load(Ordering::Acquire) >= cap {
+                break;
+            }
+            // Peek first: spawning a job per device-resident key would
+            // waste a pool slot on a no-op.
+            match store.tier_of(key) {
+                Some(Tier::Host) | Some(Tier::Disk) => {}
+                _ => continue,
+            }
+            self.prefetch_inflight.fetch_add(1, Ordering::AcqRel);
+            self.prefetch_submitted.fetch_add(1, Ordering::Relaxed);
+            issued += 1;
+            let store = Arc::clone(store);
+            let key = key.clone();
+            let inflight = Arc::clone(&self.prefetch_inflight);
+            self.pool.submit(move || {
+                // The store dedups concurrent prefetches of one key and
+                // keeps the hit/wasted accounting.
+                let _ = store.prefetch(&key);
+                inflight.fetch_sub(1, Ordering::AcqRel);
+            });
+        }
+        issued
+    }
+
+    /// Prefetch jobs dispatched over this engine's lifetime.
+    pub fn prefetch_submitted(&self) -> u64 {
+        self.prefetch_submitted.load(Ordering::Relaxed)
     }
 
     /// Fetch every key, loading hits in parallel with computing misses.
@@ -68,7 +131,7 @@ impl TransferEngine {
         store: &Arc<KvStore>,
         keys: &[KvKey],
         mut compute: F,
-    ) -> Result<(Vec<ImageKv>, TransferReport)>
+    ) -> Result<(Vec<Arc<ImageKv>>, TransferReport)>
     where
         F: FnMut(&KvKey) -> Result<ImageKv>,
     {
@@ -85,26 +148,32 @@ impl TransferEngine {
             }
         }
 
-        let results: Arc<Mutex<Vec<Option<(ImageKv, Tier)>>>> =
+        let results: Arc<Mutex<Vec<Option<(Arc<ImageKv>, Tier)>>>> =
             Arc::new(Mutex::new((0..keys.len()).map(|_| None).collect()));
 
-        // Load lane (pool threads).
+        // Load lane (pool threads). With exactly one hit and nothing to
+        // compute there is no load/compute overlap to win — run the load
+        // on the caller thread instead of paying a pool hop (and, when
+        // store and transfer share one pool, keeping the chunked codec
+        // free to fan out; see ThreadPool::is_own_worker).
+        let inline_loads =
+            !self.parallel || (load_keys.len() == 1 && miss_keys.is_empty());
         let t_load = Instant::now();
         let wg = WaitGroup::new(load_keys.len());
         for (idx, key) in load_keys {
             let store = Arc::clone(store);
             let results = Arc::clone(&results);
             let wg = wg.clone();
-            if self.parallel {
+            if inline_loads {
+                let got = store.get(&key);
+                results.lock().unwrap()[idx] = got;
+                wg.done();
+            } else {
                 self.pool.submit(move || {
                     let got = store.get(&key);
                     results.lock().unwrap()[idx] = got;
                     wg.done();
                 });
-            } else {
-                let got = store.get(&key);
-                results.lock().unwrap()[idx] = got;
-                wg.done();
             }
         }
 
@@ -116,29 +185,28 @@ impl TransferEngine {
 
         // Compute lane (caller thread) — overlaps with the pool loads.
         let t_compute = Instant::now();
-        let mut computed: Vec<(usize, ImageKv)> = Vec::new();
+        let mut computed: Vec<(usize, Arc<ImageKv>)> = Vec::new();
         for (idx, key) in &miss_keys {
             let kv = compute(key)?;
             kv.validate()?;
-            computed.push((*idx, kv));
+            computed.push((*idx, Arc::new(kv)));
         }
         report.compute_s = t_compute.elapsed().as_secs_f64();
 
         wg.wait();
         if self.parallel {
-            report.load_s = t_load.elapsed().as_secs_f64() - report.compute_s.min(0.0);
-            // load lane wall includes overlap; keep raw elapsed
             report.load_s = t_load.elapsed().as_secs_f64();
         }
 
         // Write-through the computed entries (off the critical path of the
-        // response; still counted in wall time here for honesty).
+        // response; still counted in wall time here for honesty). The store
+        // shares the Arc — no KV bytes are copied.
         for (_, kv) in &computed {
-            store.put(kv.clone())?;
+            store.put_arc(Arc::clone(kv))?;
         }
 
         // Assemble in request order.
-        let mut out: Vec<Option<ImageKv>> = (0..keys.len()).map(|_| None).collect();
+        let mut out: Vec<Option<Arc<ImageKv>>> = (0..keys.len()).map(|_| None).collect();
         {
             let mut g = results.lock().unwrap();
             for (i, slot) in g.iter_mut().enumerate() {
@@ -167,7 +235,8 @@ impl TransferEngine {
                     log::debug!("transfer: late miss on {key:?}, recomputing");
                     let kv = compute(key)?;
                     kv.validate()?;
-                    store.put(kv.clone())?;
+                    let kv = Arc::new(kv);
+                    store.put_arc(Arc::clone(&kv))?;
                     report.misses += 1;
                     final_out.push(kv);
                 }
@@ -192,23 +261,31 @@ mod tests {
     use std::time::Duration;
 
     fn setup(bandwidth: Option<f64>) -> (Arc<KvStore>, TransferEngine) {
+        setup_shards(bandwidth, 8)
+    }
+
+    fn setup_shards(bandwidth: Option<f64>, shards: usize) -> (Arc<KvStore>, TransferEngine) {
         let dir = std::env::temp_dir().join(format!(
-            "mpic-transfer-test-{}-{:?}",
+            "mpic-transfer-test-{}-{:?}-{shards}",
             std::process::id(),
             bandwidth.map(|b| b as u64)
         ));
         let _ = std::fs::remove_dir_all(&dir);
+        let pool = Arc::new(ThreadPool::new(4));
         let store = Arc::new(
-            KvStore::new(StoreConfig {
-                device_capacity: 1 << 30,
-                host_capacity: 1 << 30,
-                disk_dir: dir,
-                ttl: Duration::from_secs(60),
-                disk_bandwidth: bandwidth,
-            })
+            KvStore::with_pool(
+                StoreConfig {
+                    device_capacity: 1 << 30,
+                    host_capacity: 1 << 30,
+                    disk_dir: dir,
+                    ttl: Duration::from_secs(60),
+                    disk_bandwidth: bandwidth,
+                    shards,
+                },
+                Arc::clone(&pool),
+            )
             .unwrap(),
         );
-        let pool = Arc::new(ThreadPool::new(4));
         (store, TransferEngine::new(pool))
     }
 
@@ -228,6 +305,20 @@ mod tests {
         for (i, kv) in out.iter().enumerate() {
             assert_eq!(kv.key.image, ImageId(i as u64));
         }
+    }
+
+    #[test]
+    fn device_hits_are_zero_copy_through_fetch() {
+        let (store, eng) = setup(None);
+        let e = test_entry(0, 16);
+        store.put(e.clone()).unwrap();
+        let keys = vec![e.key.clone()];
+        let (out1, _) = eng.fetch(&store, &keys, |_| panic!("hit expected")).unwrap();
+        let (out2, _) = eng.fetch(&store, &keys, |_| panic!("hit expected")).unwrap();
+        assert!(
+            Arc::ptr_eq(&out1[0], &out2[0]),
+            "device-tier fetches must share one allocation"
+        );
     }
 
     #[test]
@@ -262,6 +353,62 @@ mod tests {
         for (i, kv) in out.iter().enumerate() {
             assert_eq!(kv.key.image.0, i as u64);
         }
+    }
+
+    #[test]
+    fn prefetch_warms_lower_tiers_to_device() {
+        // Device-resident keys dispatch nothing (cheap peek).
+        let (store, eng) = setup_shards(None, 4);
+        let keys: Vec<KvKey> = (0..6).map(|i| KvKey::new("test-model", ImageId(i))).collect();
+        for i in 0..6 {
+            store.put(test_entry(i, 8)).unwrap();
+        }
+        assert_eq!(eng.prefetch(&store, &keys), 0);
+        assert_eq!(eng.prefetch_submitted(), 0);
+
+        // A host-tier entry (real device demotion under capacity
+        // pressure) is warmed back to device by the lane.
+        let dir = std::env::temp_dir().join(format!("mpic-prefetch-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let pool = Arc::new(ThreadPool::new(4));
+        let small = test_entry(0, 32);
+        let store3 = Arc::new(
+            KvStore::with_pool(
+                StoreConfig {
+                    device_capacity: small.bytes() + small.bytes() / 2,
+                    host_capacity: 1 << 30,
+                    disk_dir: dir,
+                    ttl: Duration::from_secs(60),
+                    disk_bandwidth: None,
+                    shards: 1,
+                },
+                Arc::clone(&pool),
+            )
+            .unwrap(),
+        );
+        let eng3 = TransferEngine::new(pool);
+        let a = test_entry(0, 32);
+        let b = test_entry(1, 32);
+        store3.put(a.clone()).unwrap();
+        store3.put(b.clone()).unwrap(); // demotes `a` to host
+        assert_eq!(store3.tier_of(&a.key), Some(Tier::Host));
+
+        let issued = eng3.prefetch(&store3, std::slice::from_ref(&a.key));
+        assert_eq!(issued, 1);
+        // Wait for the pool job to finish (bounded spin).
+        for _ in 0..200 {
+            if store3.tier_of(&a.key) == Some(Tier::Device) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(store3.tier_of(&a.key), Some(Tier::Device), "prefetch must promote");
+        assert_eq!(eng3.prefetch_submitted(), 1);
+        // The admitted fetch now sees a device hit and credits the lane.
+        let (_, rep) =
+            eng3.fetch(&store3, std::slice::from_ref(&a.key), |_| panic!("hit")).unwrap();
+        assert_eq!(rep.device_hits, 1);
+        assert_eq!(store3.stats().prefetch_hits, 1);
     }
 
     #[test]

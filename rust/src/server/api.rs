@@ -534,6 +534,9 @@ fn dispatch_op(
 
         "stats" => {
             let (device_bytes, host_bytes, disk_entries) = engine.store().residency();
+            // Refresh the KV hot-path counters so `stats.metrics.kv` is
+            // current even when no pipeline round has published lately.
+            engine.metrics.set_kv_counters(&engine.store().stats());
             Ok(Value::obj(vec![
                 ("metrics", engine.metrics.snapshot()),
                 ("model", Value::str(&engine.meta().name)),
@@ -544,6 +547,7 @@ fn dispatch_op(
                         ("device_bytes", Value::num(device_bytes as f64)),
                         ("host_bytes", Value::num(host_bytes as f64)),
                         ("disk_entries", Value::num(disk_entries as f64)),
+                        ("shards", Value::num(engine.store().shard_count() as f64)),
                     ]),
                 ),
             ]))

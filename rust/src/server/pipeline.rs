@@ -480,6 +480,14 @@ impl<'e> Pipeline<'e> {
         for c in completions {
             self.finish(c);
         }
+        // Prefetch lane: whatever is *still* queued after this round's
+        // admissions waits at least one more round — warm its image KV
+        // from disk/host toward the device tier on idle pool workers so
+        // the transfer engine sees device hits at admission time.
+        let queued = self.sched.queued_images();
+        if !queued.is_empty() {
+            self.engine.prefetch_images(&queued);
+        }
         Ok(())
     }
 
@@ -487,6 +495,7 @@ impl<'e> Pipeline<'e> {
         self.engine
             .metrics
             .set_pipeline_counters(self.gate.overloaded_total(), self.uploads.finished_total());
+        self.engine.metrics.set_kv_counters(&self.engine.store().stats());
     }
 
     /// Classify and dispatch one admitted job.

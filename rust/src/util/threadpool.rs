@@ -6,28 +6,37 @@
 //! expressed with [`WaitGroup`].
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Process-wide pool id source: worker names embed their pool's id so
+/// [`ThreadPool::is_own_worker`] can tell pools apart.
+static NEXT_POOL_ID: AtomicU64 = AtomicU64::new(0);
+
 /// A fixed pool of worker threads consuming a shared queue.
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
+    /// Thread-name prefix shared by exactly this pool's workers.
+    name_prefix: String,
 }
 
 impl ThreadPool {
     pub fn new(n: usize) -> Self {
         assert!(n > 0);
+        let name_prefix =
+            format!("mpic-worker-{}-", NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed));
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let workers = (0..n)
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 thread::Builder::new()
-                    .name(format!("mpic-worker-{i}"))
+                    .name(format!("{name_prefix}{i}"))
                     .spawn(move || loop {
                         let job = { rx.lock().unwrap().recv() };
                         match job {
@@ -42,11 +51,28 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers }
+        ThreadPool { tx: Some(tx), workers, name_prefix }
     }
 
     pub fn size(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Whether the current thread is one of this process's pool workers
+    /// (any pool).
+    pub fn on_worker_thread() -> bool {
+        std::thread::current().name().is_some_and(|n| n.starts_with("mpic-worker-"))
+    }
+
+    /// Whether the current thread is a worker of *this* pool. Code that
+    /// *blocks* on this pool's results (e.g. [`ThreadPool::map`]) must not
+    /// do so from one of its own workers — with every worker blocked, the
+    /// jobs they wait on would sit in the queue forever. Blocking on a
+    /// *different* pool is fine as long as that pool's jobs never block
+    /// back on this one (the chunked KV codec relies on exactly this to
+    /// fan out from transfer-pool workers onto the dedicated codec pool).
+    pub fn is_own_worker(&self) -> bool {
+        std::thread::current().name().is_some_and(|n| n.starts_with(&self.name_prefix))
     }
 
     /// Submit a fire-and-forget job.
@@ -193,6 +219,32 @@ mod tests {
                 self.0.done();
             }
         }
+    }
+
+    #[test]
+    fn worker_thread_detection() {
+        assert!(!ThreadPool::on_worker_thread(), "test thread is not a worker");
+        let pool = ThreadPool::new(2);
+        let on_worker = pool.map(vec![(), ()], |_| ThreadPool::on_worker_thread());
+        assert_eq!(on_worker, vec![true, true]);
+    }
+
+    #[test]
+    fn own_worker_distinguishes_pools() {
+        let a = Arc::new(ThreadPool::new(2));
+        let b = Arc::new(ThreadPool::new(2));
+        assert!(!a.is_own_worker());
+        // From an `a` worker: own pool yes, other pool no — which is what
+        // makes cross-pool blocking (codec fan-out) safe.
+        let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+        let got = a.map(vec![()], move |_| (a2.is_own_worker(), b2.is_own_worker()));
+        assert_eq!(got, vec![(true, false)]);
+        // And an `a` worker can block on `b` without deadlock.
+        let b3 = Arc::clone(&b);
+        let sums = a.map(vec![1i64, 2], move |x| {
+            b3.map(vec![x, x], |y| y * 10).iter().sum::<i64>()
+        });
+        assert_eq!(sums, vec![20, 40]);
     }
 
     #[test]

@@ -128,13 +128,13 @@ fn store_roundtrip_preserves_linker_output() {
     let entry = synth_entry(&m, ImageId(5), 55);
     store.put(entry.clone()).unwrap();
     let (got, _) = store.get(&entry.key).unwrap();
-    assert_eq!(got, entry);
+    assert_eq!(*got, entry);
     // Evict then re-put.
     store.evict(&entry.key);
     assert!(store.get(&entry.key).is_none());
     store.put(entry.clone()).unwrap();
     let (got2, _) = store.get(&entry.key).unwrap();
-    assert_eq!(got2, entry);
+    assert_eq!(*got2, entry);
 }
 
 /// Failure injection: expired TTL entries are recomputed by the transfer
@@ -150,6 +150,7 @@ fn transfer_recovers_from_expiry() {
             ttl: Duration::from_millis(1),
             device_capacity: 1, // nothing stays resident
             host_capacity: 1,
+            shards: 1, // single shard so the LRU pressure below is exact
             ..Default::default()
         })
         .unwrap(),

@@ -371,6 +371,14 @@ fn tcp_server_v2_surface() {
         assert!(ops.get("nope").is_err());
         assert!(ops.get("unknown").unwrap().get("n").unwrap().as_f64().unwrap() >= 2.0);
         assert!(stats.get("store").unwrap().get("device_bytes").unwrap().as_f64().unwrap() > 0.0);
+        assert!(stats.get("store").unwrap().get("shards").unwrap().as_f64().unwrap() >= 1.0);
+        // The KV hot-path counters ride along under metrics.kv; an earlier
+        // upload in this test guarantees codec work was recorded.
+        let kv = stats.get("metrics").unwrap().get("kv").unwrap();
+        assert!(kv.get("codec_chunks").unwrap().as_f64().unwrap() >= 1.0);
+        for field in ["lock_contention", "prefetch_issued", "prefetch_hits", "prefetch_wasted"] {
+            assert!(kv.get(field).unwrap().as_f64().unwrap() >= 0.0, "missing kv.{field}");
+        }
 
         // A rejected shutdown (bad envelope) must not kill the server.
         assert_code(&c.call(&v(r#"{"v":3,"op":"shutdown"}"#)).unwrap(), "bad_version");
