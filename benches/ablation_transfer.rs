@@ -59,11 +59,11 @@ fn main() {
                 .unwrap(),
             );
             let keys: Vec<KvKey> = (0..n_images)
-                .map(|i| KvKey::new(&engine.meta().name, ImageId(0xAB1 + i as u64)))
+                .map(|i| KvKey::image(&engine.meta().name, ImageId(0xAB1 + i as u64)))
                 .collect();
             // Populate the hits (plus LRU filler so nothing stays in RAM).
             for key in keys.iter().skip(n_miss) {
-                let kv = engine.encode_image(key.image).unwrap();
+                let kv = engine.compute_segment_kv(key).unwrap();
                 store.put(kv).unwrap();
             }
             store.put(engine.encode_image(ImageId(0xFFF1)).unwrap()).unwrap();
@@ -76,7 +76,7 @@ fn main() {
             };
             let t0 = std::time::Instant::now();
             let (out, _rep) =
-                transfer.fetch(&store, &keys, |k| engine.encode_image(k.image)).unwrap();
+                transfer.fetch(&store, &keys, |k| engine.compute_segment_kv(k)).unwrap();
             assert_eq!(out.len(), n_images);
             wall[slot] = t0.elapsed().as_secs_f64();
         }

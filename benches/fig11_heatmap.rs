@@ -94,12 +94,14 @@ fn main() {
     );
     println!("{}", render_heatmap(&small, "query token", "key token"));
 
-    for (i, &(id, lo, hi)) in layout.image_spans.iter().enumerate() {
-        println!("image {} ({:#x}): tokens {lo}..{hi}", i + 1, id.0);
+    for (i, span) in layout.reuse_spans.iter().enumerate() {
+        let (lo, hi) = (span.lo, span.hi);
+        println!("image {} ({:#x}): tokens {lo}..{hi}", i + 1, span.seg.raw());
     }
     // Headline: the first column of each image span is brighter than the
     // span's interior (the paper's token-109 / token-1294 observation).
-    for &(_, lo, hi) in &layout.image_spans {
+    for span in &layout.reuse_spans {
+        let (lo, hi) = (span.lo, span.hi);
         let col_mass = |c: usize| -> f32 { (c + 1..len).map(|r| grid[r][c]).sum() };
         let first = col_mass(lo);
         let interior: f32 =

@@ -37,7 +37,7 @@ fn main() {
 
     // Head-averaged per-layer attention of the last query over the *first*
     // image's tokens (the paper's setup: scores of IMAGE#EIFFEL2025).
-    let (_, lo, hi) = layout.image_spans[0];
+    let (lo, hi) = (layout.reuse_spans[0].lo, layout.reuse_spans[0].hi);
     let mut per_layer: Vec<Vec<f64>> = vec![vec![0.0; hi - lo]; meta.n_layers];
     for l in 0..meta.n_layers {
         for h in 0..meta.n_heads {

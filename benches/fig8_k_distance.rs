@@ -52,8 +52,8 @@ fn main() {
 
         let (layout_a, k_a, _) = engine.full_prefill_kv(&prompt_a).unwrap();
         let (layout_b, k_b, _) = engine.full_prefill_kv(&prompt_b).unwrap();
-        let (_, lo_a, _) = layout_a.image_spans[0];
-        let (_, lo_b, _) = layout_b.image_spans[0];
+        let lo_a = layout_a.reuse_spans[0].lo;
+        let lo_b = layout_b.reuse_spans[0].lo;
         let s_a = k_a.dims()[1];
         let s_b = k_b.dims()[1];
         let ka = k_a.f32_data().unwrap();

@@ -3,7 +3,7 @@
 //! Three questions, matching the sharded zero-copy store rework:
 //!
 //! 1. **Device-tier `get` vs entry size** — hits hand out an
-//!    `Arc<ImageKv>` (refcount bump), so latency must stay flat as the
+//!    `Arc<SegmentKv>` (refcount bump), so latency must stay flat as the
 //!    entry grows; the explicit deep-clone column shows what the old
 //!    copy-out cost and how it scales.
 //! 2. **Concurrent `get` throughput, 1 shard vs N shards** — the same
@@ -18,14 +18,14 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use mpic::kv::store::{KvStore, StoreConfig};
-use mpic::kv::{codec, ImageKv, KvKey, KvShape};
+use mpic::kv::{codec, KvKey, KvShape, SegmentKv};
 use mpic::mm::ImageId;
 use mpic::util::bench::{emit, emit_summary, time_fn, Row, Table};
 use mpic::util::rng::Rng;
 use mpic::util::threadpool::ThreadPool;
 
 /// ~9 KiB per token with these dims: tokens=64 → ~0.6 MB, 512 → ~4.5 MB.
-fn entry(image: u64, tokens: usize) -> ImageKv {
+fn entry(image: u64, tokens: usize) -> SegmentKv {
     let shape = KvShape { layers: 4, tokens, heads: 8, d_head: 32, d_model: 256 };
     let mut rng = Rng::new(image ^ 0xC0FFEE);
     // Half-compressible payload: zeros interleaved with noise, so zstd
@@ -36,7 +36,7 @@ fn entry(image: u64, tokens: usize) -> ImageKv {
     let emb = gen(&mut rng, shape.emb_elems());
     let k = gen(&mut rng, shape.kv_elems());
     let v = gen(&mut rng, shape.kv_elems());
-    ImageKv { key: KvKey::new("bench-model", ImageId(image)), shape, emb, k, v }
+    SegmentKv { key: KvKey::image("bench-model", ImageId(image)), shape, emb, k, v }
 }
 
 fn fresh_store(shards: usize, tag: &str) -> Arc<KvStore> {
@@ -77,7 +77,7 @@ fn main() {
         let s_clone = time_fn(3, 30, || {
             let (kv, _) = store.get(&key).unwrap();
             // What the pre-Arc store did on every device hit.
-            std::hint::black_box(ImageKv::clone(&kv));
+            std::hint::black_box(SegmentKv::clone(&kv));
         });
         arc_us.push(s_arc.mean() * 1e6);
         t_get.add(
@@ -114,7 +114,7 @@ fn main() {
             handles.push(std::thread::spawn(move || {
                 for i in 0..gets_per_thread {
                     let key =
-                        KvKey::new("bench-model", ImageId((t * 7 + i) as u64 % n_keys));
+                        KvKey::image("bench-model", ImageId((t * 7 + i) as u64 % n_keys));
                     std::hint::black_box(s.get(&key).unwrap());
                 }
             }));

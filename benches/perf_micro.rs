@@ -11,7 +11,7 @@ use std::time::Duration;
 use mpic::coordinator::linker::Linker;
 use mpic::coordinator::selection::{plan, Policy};
 use mpic::kv::store::{KvStore, StoreConfig};
-use mpic::kv::{codec, ImageKv, KvKey, KvShape};
+use mpic::kv::{codec, KvKey, KvShape, SegmentKv};
 use mpic::mm::{ImageId, LinkedLayout, Prompt, Tokenizer, UserId};
 use mpic::runtime::artifacts::Manifest;
 use mpic::util::bench::{emit, emit_summary, time_fn, Row, Table};
@@ -37,9 +37,12 @@ fn main() {
     }
     prompt = prompt.text("in full detail for the travel report");
     let layout = LinkedLayout::build(&prompt, &tok, meta.img_tokens, "sys prompt");
-    let entries: Vec<ImageKv> =
-        layout.image_spans.iter().map(|&(id, _, _)| synth_entry(&meta, id)).collect();
-    let refs: Vec<&ImageKv> = entries.iter().collect();
+    let entries: Vec<SegmentKv> = layout
+        .reuse_spans
+        .iter()
+        .map(|s| synth_entry(&meta, s.seg.as_image().unwrap()))
+        .collect();
+    let refs: Vec<&SegmentKv> = entries.iter().collect();
     let linker = Linker::new(&meta);
     let bucket = layout.len().next_multiple_of(128).max(512);
     let pl = plan(Policy::MpicK(32), &layout, &[]);
@@ -140,7 +143,7 @@ fn synthetic_meta() -> mpic::runtime::artifacts::ModelMeta {
     }
 }
 
-fn synth_entry(meta: &mpic::runtime::artifacts::ModelMeta, id: ImageId) -> ImageKv {
+fn synth_entry(meta: &mpic::runtime::artifacts::ModelMeta, id: ImageId) -> SegmentKv {
     let shape = KvShape {
         layers: meta.n_layers,
         tokens: meta.img_tokens,
@@ -149,8 +152,8 @@ fn synth_entry(meta: &mpic::runtime::artifacts::ModelMeta, id: ImageId) -> Image
         d_model: meta.d_model,
     };
     let mut rng = Rng::new(id.0);
-    ImageKv {
-        key: KvKey::new(&meta.name, id),
+    SegmentKv {
+        key: KvKey::image(&meta.name, id),
         shape,
         emb: (0..shape.emb_elems()).map(|_| rng.normal() as f32).collect(),
         k: (0..shape.kv_elems()).map(|_| rng.normal() as f32).collect(),

@@ -1,0 +1,114 @@
+//! RAG chunk-reuse bench (perf-trajectory: `BENCH_rag_reuse.json`).
+//!
+//! The workload the segment generalisation exists for: conversations share
+//! document chunks from a common pool but open with different words, so
+//! prefix caching recomputes everything while position-independent segment
+//! caching reuses every chunk (and image) KV verbatim. Compares TTFT of
+//! prefix caching vs full reuse vs MPIC-k on the RAG-like dataset, and
+//! verifies no request recomputes a stored segment.
+//!
+//! `cargo bench --bench rag_reuse -- --convs 6 --max-new 8 --k 32`
+
+use mpic::coordinator::Policy;
+use mpic::harness;
+use mpic::util::bench::{emit, emit_summary, Row, Table};
+use mpic::util::cli::Args;
+use mpic::workload::{generate, rag_chunk_pool, Dataset, WorkloadSpec};
+
+fn main() {
+    mpic::util::logging::init();
+    if !harness::artifacts_ready() {
+        return;
+    }
+    let args = Args::parse(&["bench"]).unwrap();
+    let model = args.str_or("model", "mpic-sim-a");
+    let convs_n = args.usize_or("convs", 6).unwrap();
+    let max_new = args.usize_or("max-new", 8).unwrap();
+    let k = args.usize_or("k", 32).unwrap();
+
+    let engine = harness::experiment_engine(&model, "rag-reuse").unwrap();
+    let spec = WorkloadSpec {
+        dataset: Dataset::Rag,
+        n_conversations: convs_n,
+        turns_per_conversation: 1,
+        images_min: 1,
+        images_max: 1,
+        seed: 0x4A6,
+    };
+    let pool = rag_chunk_pool(&spec);
+    let n_chunks = pool.len();
+    harness::precompute_chunks(&engine, &pool).unwrap();
+    let convs = generate(&spec);
+    let n_images = harness::precompute_images(&engine, &convs).unwrap();
+    let prompts: Vec<_> = convs.iter().map(|c| c.turns[0].clone()).collect();
+    println!(
+        "rag_reuse: {} conversations over {} shared chunks + {} images",
+        prompts.len(),
+        n_chunks,
+        n_images
+    );
+
+    // Reuse proof: every request serves both its spans from the store.
+    let mut store_hits = 0usize;
+    let mut recomputes = 0usize;
+    for p in &prompts {
+        let r = engine.infer(p, Policy::MpicK(k), 2).unwrap();
+        store_hits += r.transfer.device_hits + r.transfer.host_hits + r.transfer.disk_hits;
+        recomputes += r.transfer.misses;
+    }
+    assert_eq!(recomputes, 0, "uploaded segments must never be re-encoded");
+
+    let (refs, prefix_ttft) = harness::exact_references(&engine, &prompts, max_new).unwrap();
+    let fr = harness::run_policy(&engine, &prompts, Policy::FullReuse, max_new, &refs).unwrap();
+    let mp = harness::run_policy(&engine, &prompts, Policy::MpicK(k), max_new, &refs).unwrap();
+
+    let mut table = Table::new(&format!(
+        "RAG reuse: prefix vs full-reuse vs mpic-{k} ({model}, {} convs, shared chunk pool)",
+        prompts.len()
+    ));
+    let saving = |ttft: f64| 100.0 * (1.0 - ttft / prefix_ttft.mean());
+    table.add(
+        Row::new()
+            .str("policy", "prefix")
+            .num("ttft_ms", prefix_ttft.mean() * 1e3)
+            .num("ttft_saving_pct", 0.0)
+            .num("score", 10.0),
+    );
+    table.add(
+        Row::new()
+            .str("policy", "full-reuse")
+            .num("ttft_ms", fr.ttft_s.mean() * 1e3)
+            .num("ttft_saving_pct", saving(fr.ttft_s.mean()))
+            .num("score", fr.score.mean()),
+    );
+    table.add(
+        Row::new()
+            .str("policy", &mp.policy)
+            .num("ttft_ms", mp.ttft_s.mean() * 1e3)
+            .num("ttft_saving_pct", saving(mp.ttft_s.mean()))
+            .num("score", mp.score.mean()),
+    );
+    emit("rag_reuse", &[table]);
+    emit_summary(
+        "rag_reuse",
+        &[
+            ("convs", prompts.len() as f64),
+            ("shared_chunks", n_chunks as f64),
+            ("segment_store_hits", store_hits as f64),
+            ("segment_recomputes", recomputes as f64),
+            ("prefix_ttft_ms", prefix_ttft.mean() * 1e3),
+            ("full_reuse_ttft_ms", fr.ttft_s.mean() * 1e3),
+            ("mpic_ttft_ms", mp.ttft_s.mean() * 1e3),
+            ("mpic_saving_pct", saving(mp.ttft_s.mean())),
+            ("full_reuse_score", fr.score.mean()),
+            ("mpic_score", mp.score.mean()),
+        ],
+    );
+    println!(
+        "[headline] mpic-{k} TTFT {:.1} ms vs prefix {:.1} ms ({:.0}% saving) at score {:.2}/10",
+        mp.ttft_s.mean() * 1e3,
+        prefix_ttft.mean() * 1e3,
+        saving(mp.ttft_s.mean()),
+        mp.score.mean()
+    );
+}

@@ -32,6 +32,14 @@ fn main() -> mpic::Result<()> {
     for (handle, desc) in refs {
         engine.add_reference(handle, desc)?;
     }
+    // Text chunks are retrievable too: their KV is cached once and spliced
+    // position-independently, exactly like image references.
+    engine.add_chunk_reference(
+        "CHUNK#GUIDE01",
+        "The quiet tuileries garden and the nearby royal gardens are best visited \
+         in the early evening when the fountains catch the low light",
+        "guidebook chapter on quiet evening gardens in paris",
+    )?;
     println!("dynamic library: {} references indexed", engine.dynamic_lib.len());
 
     let user = UserId(7);
@@ -44,9 +52,9 @@ fn main() -> mpic::Result<()> {
         let prompt = Prompt::new(user).text(q);
         let (augmented, hits) = engine.mrag_augment(&prompt, 2)?;
         println!("\nquery: {q}");
-        for (i, id) in hits.iter().enumerate() {
-            let r = engine.dynamic_lib.by_image(*id)?;
-            println!("  retrieved {}: {}", i + 1, r.description);
+        for (i, seg) in hits.iter().enumerate() {
+            let r = engine.dynamic_lib.by_segment(*seg)?;
+            println!("  retrieved {} ({}): {}", i + 1, seg.kind_str(), r.description);
         }
         // Retrieved references are cached → MPIC links them with no
         // recompute beyond the text and each reference's head tokens.

@@ -1,0 +1,145 @@
+//! Chunk Library — registry of uploaded text chunks (RAG documents,
+//! shared context blocks) and their canonical token streams.
+//!
+//! The paper motivates position-independent caching for "interleaved text
+//! and images, as well as multimodal retrieval-augmented generation": a
+//! chunk is the text-side analogue of a Static-Library image. Its KV is
+//! computed once at canonical positions `0..n` (engine upload path) and
+//! stored in the shared tiered [`KvStore`]; this registry keeps what the
+//! store does not — the handle, source text and token ids the linker
+//! needs to lay the chunk out and to recompute its head tokens
+//! (MPIC-k) or the whole chunk on a cache miss.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::anyhow;
+
+use crate::kv::KvStore;
+use crate::mm::ChunkId;
+use crate::Result;
+
+/// Registration record of one uploaded chunk.
+#[derive(Debug, Clone)]
+pub struct ChunkMeta {
+    pub id: ChunkId,
+    pub handle: String,
+    pub text: String,
+    /// Canonical token stream (tokenized once at upload; shared so every
+    /// per-request resolution is a refcount bump, not a copy).
+    pub tokens: Arc<Vec<i32>>,
+}
+
+/// The library: chunk id → metadata, backed by the tiered [`KvStore`]
+/// (which holds the actual KV bytes under `KvKey::chunk`).
+pub struct ChunkLibrary {
+    store: Arc<KvStore>,
+    chunks: Mutex<HashMap<ChunkId, ChunkMeta>>,
+}
+
+impl ChunkLibrary {
+    pub fn new(store: Arc<KvStore>) -> ChunkLibrary {
+        ChunkLibrary { store, chunks: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn store(&self) -> &Arc<KvStore> {
+        &self.store
+    }
+
+    /// Register an uploaded chunk. The caller (engine upload path)
+    /// computes and `put`s the KV into the store; this records the token
+    /// stream. Re-registering a handle replaces its record.
+    pub fn register(&self, handle: &str, text: &str, tokens: Vec<i32>) -> ChunkId {
+        let id = ChunkId::from_handle(handle);
+        self.chunks.lock().unwrap().insert(
+            id,
+            ChunkMeta {
+                id,
+                handle: handle.to_string(),
+                text: text.to_string(),
+                tokens: Arc::new(tokens),
+            },
+        );
+        id
+    }
+
+    /// Canonical token stream of a chunk (shared, refcount bump), or an
+    /// error for unknown ids (an unresolved `CHUNK#...` reference to a
+    /// never-uploaded chunk).
+    pub fn tokens(&self, id: ChunkId) -> Result<Arc<Vec<i32>>> {
+        self.chunks
+            .lock()
+            .unwrap()
+            .get(&id)
+            .map(|m| Arc::clone(&m.tokens))
+            .ok_or_else(|| anyhow!("no uploaded chunk for {id:?} (upload_chunk first)"))
+    }
+
+    pub fn get(&self, id: ChunkId) -> Option<ChunkMeta> {
+        self.chunks.lock().unwrap().get(&id).cloned()
+    }
+
+    pub fn contains(&self, id: ChunkId) -> bool {
+        self.chunks.lock().unwrap().contains_key(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.chunks.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All registered chunks, sorted by handle (deterministic listings).
+    pub fn all(&self) -> Vec<ChunkMeta> {
+        let mut out: Vec<ChunkMeta> = self.chunks.lock().unwrap().values().cloned().collect();
+        out.sort_by(|a, b| a.handle.cmp(&b.handle));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::store::StoreConfig;
+
+    fn lib() -> ChunkLibrary {
+        let dir = std::env::temp_dir().join(format!("mpic-clib-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store =
+            Arc::new(KvStore::new(StoreConfig { disk_dir: dir, ..Default::default() }).unwrap());
+        ChunkLibrary::new(store)
+    }
+
+    #[test]
+    fn register_and_resolve_tokens() {
+        let l = lib();
+        let id = l.register("CHUNK#DOC1", "some doc text", vec![11, 12, 13]);
+        assert_eq!(id, ChunkId::from_handle("CHUNK#DOC1"));
+        assert_eq!(*l.tokens(id).unwrap(), vec![11, 12, 13]);
+        assert!(l.contains(id));
+        assert_eq!(l.len(), 1);
+        assert!(l.tokens(ChunkId(999)).is_err());
+    }
+
+    #[test]
+    fn reregistering_replaces() {
+        let l = lib();
+        let id = l.register("CHUNK#DOC1", "v1", vec![1]);
+        l.register("CHUNK#DOC1", "v2", vec![2, 3]);
+        assert_eq!(l.len(), 1);
+        assert_eq!(*l.tokens(id).unwrap(), vec![2, 3]);
+        assert_eq!(l.get(id).unwrap().text, "v2");
+    }
+
+    #[test]
+    fn listing_is_sorted_by_handle() {
+        let l = lib();
+        l.register("CHUNK#B", "b", vec![2]);
+        l.register("CHUNK#A", "a", vec![1]);
+        let all = l.all();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].handle, "CHUNK#A");
+    }
+}

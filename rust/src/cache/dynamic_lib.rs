@@ -3,21 +3,31 @@
 //! "It is relatively dynamic, since the administrator of MPIC can update the
 //! references periodically according to the demand of applications." The
 //! retriever searches it during decode (workflow ④) and the Linker splices
-//! the retrieved KV caches into the prompt.
+//! the retrieved KV caches into the prompt. References may point at image
+//! segments (the original MPIC path) or cached text chunks (MRAG over
+//! documents) — both are position-independent reuse, the same machinery.
 
 use std::sync::{Arc, Mutex};
 
 use anyhow::anyhow;
 
 use crate::kv::KvStore;
-use crate::mm::ImageId;
+use crate::mm::{ImageId, SegmentId};
 use crate::Result;
 
-/// One administrable reference: an image plus the text it is indexed under.
+/// One administrable reference: a reusable segment plus the text it is
+/// indexed under.
 #[derive(Debug, Clone)]
 pub struct Reference {
-    pub image: ImageId,
+    pub seg: SegmentId,
     pub description: String,
+}
+
+impl Reference {
+    /// Convenience constructor for the common image case.
+    pub fn image(image: ImageId, description: impl Into<String>) -> Reference {
+        Reference { seg: SegmentId::Image(image), description: description.into() }
+    }
 }
 
 /// The dynamic library: an admin-maintained reference set backed by the
@@ -66,14 +76,19 @@ impl DynamicLibrary {
         self.refs.lock().unwrap().clone()
     }
 
-    pub fn by_image(&self, image: ImageId) -> Result<Reference> {
+    pub fn by_segment(&self, seg: SegmentId) -> Result<Reference> {
         self.refs
             .lock()
             .unwrap()
             .iter()
-            .find(|r| r.image == image)
+            .find(|r| r.seg == seg)
             .cloned()
-            .ok_or_else(|| anyhow!("no dynamic reference for {image:?}"))
+            .ok_or_else(|| anyhow!("no dynamic reference for {seg:?}"))
+    }
+
+    /// Image-flavoured lookup (ownership checks on image prompts).
+    pub fn by_image(&self, image: ImageId) -> Result<Reference> {
+        self.by_segment(SegmentId::Image(image))
     }
 }
 
@@ -81,6 +96,7 @@ impl DynamicLibrary {
 mod tests {
     use super::*;
     use crate::kv::store::StoreConfig;
+    use crate::mm::ChunkId;
 
     fn dl() -> DynamicLibrary {
         let dir = std::env::temp_dir().join(format!("mpic-dlib-test-{}", std::process::id()));
@@ -94,7 +110,7 @@ mod tests {
     fn refresh_replaces_and_bumps_generation() {
         let d = dl();
         assert_eq!(d.generation(), 0);
-        d.refresh(vec![Reference { image: ImageId(1), description: "hotel lobby".into() }]);
+        d.refresh(vec![Reference::image(ImageId(1), "hotel lobby")]);
         assert_eq!(d.len(), 1);
         assert_eq!(d.generation(), 1);
         d.refresh(vec![]);
@@ -103,10 +119,18 @@ mod tests {
     }
 
     #[test]
-    fn lookup_by_image() {
+    fn lookup_by_segment() {
         let d = dl();
-        d.add(Reference { image: ImageId(9), description: "louvre at night".into() });
+        d.add(Reference::image(ImageId(9), "louvre at night"));
+        d.add(Reference {
+            seg: SegmentId::Chunk(ChunkId(4)),
+            description: "guidebook chapter on the louvre".into(),
+        });
         assert_eq!(d.by_image(ImageId(9)).unwrap().description, "louvre at night");
         assert!(d.by_image(ImageId(10)).is_err());
+        let c = d.by_segment(SegmentId::Chunk(ChunkId(4))).unwrap();
+        assert!(c.description.contains("guidebook"));
+        // An image and a chunk with equal raw ids are distinct references.
+        assert!(d.by_segment(SegmentId::Image(ImageId(4))).is_err());
     }
 }

@@ -1,7 +1,9 @@
-//! The Static and Dynamic Libraries of paper Fig. 5 (substrate S11).
+//! The Static, Dynamic and Chunk Libraries of paper Fig. 5 (substrate S11).
 
+pub mod chunk_lib;
 pub mod dynamic_lib;
 pub mod static_lib;
 
+pub use chunk_lib::{ChunkLibrary, ChunkMeta};
 pub use dynamic_lib::{DynamicLibrary, Reference};
 pub use static_lib::StaticLibrary;

@@ -86,7 +86,9 @@ impl StaticLibrary {
         let entry = g.get_mut(&user).ok_or_else(|| anyhow!("unknown user"))?;
         let meta = entry.remove(handle).ok_or_else(|| anyhow!("unknown handle {handle:?}"))?;
         drop(g);
-        self.store.evict(&KvKey::new(model, meta.image));
+        // Pinned entries survive removal of the registration (admin can
+        // still unpin + evict through the cache API).
+        let _ = self.store.evict(&KvKey::image(model, meta.image));
         Ok(())
     }
 }

@@ -16,14 +16,19 @@ use anyhow::{anyhow, bail, Context};
 use super::linker::Linker;
 use super::metrics::Metrics;
 use super::selection::{plan, Policy};
-use crate::cache::{DynamicLibrary, StaticLibrary};
+use crate::cache::{ChunkLibrary, DynamicLibrary, Reference, StaticLibrary};
 use crate::kv::store::StoreConfig;
-use crate::kv::{EntryInfo, ImageKv, KvKey, KvShape, KvStore, TransferEngine, TransferReport};
-use crate::mm::{synth_patches, ImageId, LinkedLayout, Prompt, Tokenizer, UserId};
+use crate::kv::{EntryInfo, KvKey, KvShape, KvStore, SegmentKv, TransferEngine, TransferReport};
+use crate::mm::{
+    synth_patches, ChunkId, ChunkRef, ImageId, LinkedLayout, Prompt, Segment, SegmentId,
+    Tokenizer, UserId,
+};
 use crate::retriever::Retriever;
 use crate::runtime::{ExecStats, ModelMeta, Runtime, Tensor};
 use crate::util::threadpool::ThreadPool;
 use crate::Result;
+
+pub use crate::kv::EvictOutcome;
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
@@ -138,6 +143,7 @@ pub struct Engine {
     store: Arc<KvStore>,
     pub static_lib: StaticLibrary,
     pub dynamic_lib: DynamicLibrary,
+    pub chunk_lib: ChunkLibrary,
     retriever: RefCell<Retriever>,
     transfer: TransferEngine,
     /// Shared worker pool: drives the transfer engine's load lane and the
@@ -161,6 +167,7 @@ impl Engine {
         let store = Arc::new(KvStore::with_pool(cfg.store.clone(), codec_pool)?);
         let static_lib = StaticLibrary::new(Arc::clone(&store), cfg.user_quota);
         let dynamic_lib = DynamicLibrary::new(Arc::clone(&store));
+        let chunk_lib = ChunkLibrary::new(Arc::clone(&store));
         let transfer = TransferEngine::new(Arc::clone(&pool));
         Ok(Engine {
             runtime,
@@ -169,6 +176,7 @@ impl Engine {
             store,
             static_lib,
             dynamic_lib,
+            chunk_lib,
             retriever: RefCell::new(Retriever::new()),
             transfer,
             pool,
@@ -215,7 +223,7 @@ impl Engine {
     // ------------------------------------------------------------------
 
     /// Compute an image's KV via the `encode_image_kv` artifact.
-    pub fn encode_image(&self, image: ImageId) -> Result<ImageKv> {
+    pub fn encode_image(&self, image: ImageId) -> Result<SegmentKv> {
         let t = self.meta.img_tokens;
         let patches = synth_patches(image, t, self.meta.patch_dim);
         let art = Runtime::art_encode_image(&self.meta.name);
@@ -230,8 +238,8 @@ impl Engine {
             d_head: self.meta.d_head,
             d_model: self.meta.d_model,
         };
-        let kv = ImageKv {
-            key: KvKey::new(&self.meta.name, image),
+        let kv = SegmentKv {
+            key: KvKey::image(&self.meta.name, image),
             shape,
             emb: outs[0].f32_data()?.to_vec(),
             k: outs[1].f32_data()?.to_vec(),
@@ -239,6 +247,75 @@ impl Engine {
         };
         kv.validate()?;
         Ok(kv)
+    }
+
+    /// Compute a text chunk's KV: a canonical text-only `prefill_full` at
+    /// positions `0..n`, exactly like stored image KV (which sits at
+    /// canonical `0..img_tokens`). The rows are position-stale wherever a
+    /// later prompt splices them; MPIC-k's head recompute repairs the
+    /// sink, which is the paper's position-independence recipe applied to
+    /// text.
+    pub fn encode_chunk_kv(&self, chunk: ChunkId, tokens: &[i32]) -> Result<SegmentKv> {
+        let n = tokens.len();
+        anyhow::ensure!(n >= 1, "chunk must tokenize to at least one token");
+        let bucket = self.runtime.manifest().seq_bucket_for(n)?;
+        // A synthetic text-only layout at canonical positions 0..n; the
+        // linker builds the prefill_full activation set from it.
+        let layout = LinkedLayout {
+            tokens: tokens.iter().map(|&t| crate::mm::TokenKind::Text(t)).collect(),
+            reuse_spans: Vec::new(),
+            sys_len: 0,
+        };
+        let linker = Linker::new(&self.meta);
+        let inputs = linker.full_prefill(&layout, &[], bucket)?;
+        let art = Runtime::art_prefill_full(&self.meta.name, bucket);
+        let (outs, _) = self.runtime.execute(&art, &inputs.to_vec())?;
+        let mut it = outs.into_iter();
+        let _logits = it.next().unwrap();
+        let k_full = it.next().unwrap();
+        let v_full = it.next().unwrap();
+        // Extract rows 0..n of every layer from the [L, bucket, H, Dh]
+        // cache outputs into the compact [L, n, H, Dh] entry.
+        let (l, row) = (self.meta.n_layers, self.meta.n_heads * self.meta.d_head);
+        let shape = KvShape {
+            layers: l,
+            tokens: n,
+            heads: self.meta.n_heads,
+            d_head: self.meta.d_head,
+            d_model: self.meta.d_model,
+        };
+        let extract = |full: &Tensor| -> Result<Vec<f32>> {
+            let data = full.f32_data()?;
+            let mut out = vec![0f32; l * n * row];
+            for layer in 0..l {
+                let src = layer * bucket * row;
+                let dst = layer * n * row;
+                out[dst..dst + n * row].copy_from_slice(&data[src..src + n * row]);
+            }
+            Ok(out)
+        };
+        let kv = SegmentKv {
+            key: KvKey::chunk(&self.meta.name, chunk),
+            shape,
+            emb: Vec::new(),
+            k: extract(&k_full)?,
+            v: extract(&v_full)?,
+        };
+        kv.validate()?;
+        Ok(kv)
+    }
+
+    /// Compute a segment's KV from scratch, whichever kind it is (the
+    /// transfer engine's miss lane; chunk misses re-derive tokens from
+    /// the chunk library).
+    pub fn compute_segment_kv(&self, key: &KvKey) -> Result<SegmentKv> {
+        match key.seg {
+            SegmentId::Image(image) => self.encode_image(image),
+            SegmentId::Chunk(chunk) => {
+                let tokens = self.chunk_lib.tokens(chunk)?;
+                self.encode_chunk_kv(chunk, &tokens)
+            }
+        }
     }
 
     /// Upload: synth pixels → encode → store (device + disk write-through)
@@ -253,16 +330,44 @@ impl Engine {
         Ok(image)
     }
 
-    /// Admin path: (re)index a dynamic-library reference with its KV.
+    /// Upload a text chunk (workflow ① for text): tokenize → canonical
+    /// text-only prefill → extract K/V rows → store → register in the
+    /// chunk library so prompts can reference `CHUNK#HANDLE`.
+    pub fn upload_chunk(&self, handle: &str, text: &str) -> Result<ChunkId> {
+        let chunk = ChunkId::from_handle(handle);
+        let tokens = self.tokenizer.encode(text);
+        anyhow::ensure!(!tokens.is_empty(), "chunk {handle:?} has no tokens");
+        let t0 = Instant::now();
+        let kv = self.encode_chunk_kv(chunk, &tokens).context("upload_chunk: prefill")?;
+        self.store.put(kv)?;
+        self.chunk_lib.register(handle, text, tokens);
+        self.metrics.record_upload(t0.elapsed().as_secs_f64());
+        Ok(chunk)
+    }
+
+    /// Admin path: (re)index a dynamic-library image reference with its KV.
     pub fn add_reference(&self, handle: &str, description: &str) -> Result<ImageId> {
         let image = ImageId::from_handle(handle);
         let kv = self.encode_image(image)?;
         self.store.put(kv)?;
-        self.dynamic_lib.add(crate::cache::Reference {
-            image,
+        self.dynamic_lib.add(Reference::image(image, description));
+        Ok(image)
+    }
+
+    /// Admin path: upload a text chunk *and* index it for MRAG retrieval,
+    /// so `mrag_augment` can splice its cached KV instead of raw text.
+    pub fn add_chunk_reference(
+        &self,
+        handle: &str,
+        text: &str,
+        description: &str,
+    ) -> Result<ChunkId> {
+        let chunk = self.upload_chunk(handle, text)?;
+        self.dynamic_lib.add(Reference {
+            seg: SegmentId::Chunk(chunk),
             description: description.to_string(),
         });
-        Ok(image)
+        Ok(chunk)
     }
 
     // ------------------------------------------------------------------
@@ -271,8 +376,10 @@ impl Engine {
 
     /// Retrieve the top-k dynamic references for a query and append them to
     /// the prompt (the decode-time retrieval trigger is emulated by an
-    /// explicit call — see DESIGN.md §2).
-    pub fn mrag_augment(&self, prompt: &Prompt, top_k: usize) -> Result<(Prompt, Vec<ImageId>)> {
+    /// explicit call — see DESIGN.md §2). Image hits splice as image
+    /// segments; chunk hits splice as *cached chunk references* — their
+    /// stored KV is reused instead of re-prefetching raw text.
+    pub fn mrag_augment(&self, prompt: &Prompt, top_k: usize) -> Result<(Prompt, Vec<SegmentId>)> {
         let mut r = self.retriever.borrow_mut();
         r.sync(&self.dynamic_lib);
         if r.is_empty() {
@@ -282,16 +389,23 @@ impl Engine {
             .segments
             .iter()
             .filter_map(|s| match s {
-                crate::mm::Segment::Text(t) => Some(t.clone()),
+                Segment::Text(t) => Some(t.clone()),
                 _ => None,
             })
             .collect();
         let hits = r.search(&query.join(" "), top_k);
         let mut out = prompt.clone();
         let mut ids = Vec::new();
-        for (image, _score) in hits {
-            out = out.text("retrieved reference").image(image);
-            ids.push(image);
+        for (seg, _score) in hits {
+            out = out.text("retrieved reference");
+            out = match seg {
+                SegmentId::Image(image) => out.image(image),
+                SegmentId::Chunk(chunk) => {
+                    let tokens = self.chunk_lib.tokens(chunk)?;
+                    out.chunk(ChunkRef::resolved_shared(chunk, tokens))
+                }
+            };
+            ids.push(seg);
         }
         Ok((out, ids))
     }
@@ -300,6 +414,9 @@ impl Engine {
     // Inference
     // ------------------------------------------------------------------
 
+    /// Ownership gates apply to images (Static-Library files are
+    /// user-private). Chunks are shared context (RAG documents) and are
+    /// always referenceable once uploaded.
     fn check_ownership(&self, prompt: &Prompt) -> Result<()> {
         if !self.cfg.enforce_ownership {
             return Ok(());
@@ -314,37 +431,73 @@ impl Engine {
         Ok(())
     }
 
-    fn layout(&self, prompt: &Prompt) -> LinkedLayout {
-        LinkedLayout::build(prompt, &self.tokenizer, self.meta.img_tokens, &self.cfg.system_prompt)
+    fn has_unresolved_chunks(prompt: &Prompt) -> bool {
+        prompt
+            .segments
+            .iter()
+            .any(|s| matches!(s, Segment::Chunk(c) if !c.is_resolved()))
+    }
+
+    /// Replace unresolved `CHUNK#` references with their canonical token
+    /// streams from the chunk library (shared `Arc`s — no token copies).
+    /// Errors on never-uploaded chunks. Only called when the prompt
+    /// actually holds an unresolved reference.
+    fn resolve_chunks(&self, prompt: &Prompt) -> Result<Prompt> {
+        let mut out = prompt.clone();
+        for seg in out.segments.iter_mut() {
+            if let Segment::Chunk(c) = seg {
+                if !c.is_resolved() {
+                    c.tokens = self.chunk_lib.tokens(c.id)?;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Resolve chunk references and build the linked layout (scheduler
+    /// footprint estimates use this too, so chunk tokens count).
+    /// Chunk-free prompts (the common case) build straight from the
+    /// borrowed prompt — no clone on the hot path.
+    pub fn layout(&self, prompt: &Prompt) -> Result<LinkedLayout> {
+        let build = |p: &Prompt| {
+            LinkedLayout::build(p, &self.tokenizer, self.meta.img_tokens, &self.cfg.system_prompt)
+        };
+        if Self::has_unresolved_chunks(prompt) {
+            Ok(build(&self.resolve_chunks(prompt)?))
+        } else {
+            Ok(build(prompt))
+        }
     }
 
     /// Warm the KV entries of not-yet-admitted requests toward the device
     /// tier on idle pool workers (the prefetch lane — the serving pipeline
-    /// calls this between decode rounds with the image refs of queued
+    /// calls this between decode rounds with the segment refs of queued
     /// requests). Non-blocking; returns the number of jobs dispatched.
-    pub fn prefetch_images(&self, images: &[ImageId]) -> usize {
-        if images.is_empty() {
+    pub fn prefetch_segments(&self, segments: &[SegmentId]) -> usize {
+        if segments.is_empty() {
             return 0;
         }
-        let keys: Vec<KvKey> =
-            images.iter().map(|&image| KvKey::new(&self.meta.name, image)).collect();
+        let keys: Vec<KvKey> = segments
+            .iter()
+            .map(|&seg| KvKey { model: self.meta.name.clone(), seg })
+            .collect();
         self.transfer.prefetch(&self.store, &keys)
     }
 
-    /// Fetch the KV entries for every image span (order = span order),
+    /// Fetch the KV entries for every reuse span (order = span order),
     /// loading hits in parallel with computing misses. Entries come back
     /// as `Arc`s straight out of the store — no KV bytes are copied on a
-    /// hit.
+    /// hit, and duplicate spans share one fetch.
     fn fetch_entries(
         &self,
         layout: &LinkedLayout,
-    ) -> Result<(Vec<Arc<ImageKv>>, TransferReport)> {
+    ) -> Result<(Vec<Arc<SegmentKv>>, TransferReport)> {
         let keys: Vec<KvKey> = layout
-            .image_spans
+            .reuse_spans
             .iter()
-            .map(|&(id, _, _)| KvKey::new(&self.meta.name, id))
+            .map(|span| KvKey { model: self.meta.name.clone(), seg: span.seg })
             .collect();
-        self.transfer.fetch(&self.store, &keys, |key| self.encode_image(key.image))
+        self.transfer.fetch(&self.store, &keys, |key| self.compute_segment_kv(key))
     }
 
     /// Prefill one request under a context-caching policy, producing an
@@ -352,7 +505,7 @@ impl Engine {
     /// accounted by the time this returns.
     pub fn prefill(&self, prompt: &Prompt, policy: Policy, max_new: usize) -> Result<ActiveSeq> {
         self.check_ownership(prompt)?;
-        let layout = self.layout(prompt);
+        let layout = self.layout(prompt)?;
         let len = layout.len();
         anyhow::ensure!(len >= 2, "prompt too short");
         let manifest = self.runtime.manifest();
@@ -362,7 +515,7 @@ impl Engine {
 
         let t_request = Instant::now();
         let (entries, transfer) = self.fetch_entries(&layout)?;
-        let entry_refs: Vec<&ImageKv> = entries.iter().map(|e| e.as_ref()).collect();
+        let entry_refs: Vec<&SegmentKv> = entries.iter().map(|e| e.as_ref()).collect();
         let fetch_s = t_request.elapsed().as_secs_f64();
 
         let mut ttft = TtftBreakdown { fetch_s, ..Default::default() };
@@ -422,6 +575,7 @@ impl Engine {
                 let last = len - 1;
                 let last_id = match layout.tokens[last] {
                     crate::mm::TokenKind::Text(id) => id,
+                    crate::mm::TokenKind::Chunk { tok, .. } => tok,
                     crate::mm::TokenKind::Image { .. } => {
                         bail!("full-reuse requires the prompt to end with text")
                     }
@@ -625,10 +779,10 @@ impl Engine {
 
     /// Full prefill returning the raw K tensor (Fig. 8 K-distance bench).
     pub fn full_prefill_kv(&self, prompt: &Prompt) -> Result<(LinkedLayout, Tensor, Tensor)> {
-        let layout = self.layout(prompt);
+        let layout = self.layout(prompt)?;
         let s_bucket = self.runtime.manifest().seq_bucket_for(layout.len())?;
         let (entries, _) = self.fetch_entries(&layout)?;
-        let entry_refs: Vec<&ImageKv> = entries.iter().map(|e| e.as_ref()).collect();
+        let entry_refs: Vec<&SegmentKv> = entries.iter().map(|e| e.as_ref()).collect();
         let linker = Linker::new(&self.meta);
         let inputs = linker.full_prefill(&layout, &entry_refs, s_bucket)?;
         let art = Runtime::art_prefill_full(&self.meta.name, s_bucket);
@@ -641,10 +795,10 @@ impl Engine {
     /// Debug prefill: per-layer attention row of the last query plus the
     /// full layer-0 attention matrix (Figs. 4 & 11).
     pub fn debug_attention(&self, prompt: &Prompt) -> Result<(LinkedLayout, Tensor, Tensor)> {
-        let layout = self.layout(prompt);
+        let layout = self.layout(prompt)?;
         let s_bucket = self.runtime.manifest().debug_bucket_for(layout.len())?;
         let (entries, _) = self.fetch_entries(&layout)?;
-        let entry_refs: Vec<&ImageKv> = entries.iter().map(|e| e.as_ref()).collect();
+        let entry_refs: Vec<&SegmentKv> = entries.iter().map(|e| e.as_ref()).collect();
         let linker = Linker::new(&self.meta);
         let inputs = linker.full_prefill(&layout, &entry_refs, s_bucket)?;
         let art = Runtime::art_prefill_debug(&self.meta.name, s_bucket);
@@ -656,8 +810,13 @@ impl Engine {
 
     /// Fetch an image's stored KV (benches/Fig. 8: compare stored vs
     /// fresh). Shares the store's allocation — a device hit copies nothing.
-    pub fn stored_kv(&self, image: ImageId) -> Option<Arc<ImageKv>> {
-        self.store.get(&KvKey::new(&self.meta.name, image)).map(|(kv, _)| kv)
+    pub fn stored_kv(&self, image: ImageId) -> Option<Arc<SegmentKv>> {
+        self.store.get(&KvKey::image(&self.meta.name, image)).map(|(kv, _)| kv)
+    }
+
+    /// Fetch a chunk's stored KV (benches: compare stored vs fresh).
+    pub fn stored_chunk_kv(&self, chunk: ChunkId) -> Option<Arc<SegmentKv>> {
+        self.store.get(&KvKey::chunk(&self.meta.name, chunk)).map(|(kv, _)| kv)
     }
 
     // ------------------------------------------------------------------
@@ -665,13 +824,18 @@ impl Engine {
     // ------------------------------------------------------------------
 
     /// The store key a handle resolves to under this engine's model.
-    /// Handles are content-derived, so resolution needs no registry.
+    /// Handles are content-derived, so resolution needs no registry:
+    /// `CHUNK#...` handles address chunk entries, everything else images.
     pub fn kv_key(&self, handle: &str) -> KvKey {
-        KvKey::new(&self.meta.name, ImageId::from_handle(handle))
+        if handle.starts_with("CHUNK#") {
+            KvKey::chunk(&self.meta.name, ChunkId::from_handle(handle))
+        } else {
+            KvKey::image(&self.meta.name, ImageId::from_handle(handle))
+        }
     }
 
-    /// Residency report over every cached image (Static and Dynamic
-    /// Library entries share the tiered store).
+    /// Residency report over every cached segment (Static, Dynamic and
+    /// Chunk Library entries share the tiered store).
     pub fn cache_entries(&self) -> Vec<EntryInfo> {
         self.store.entries()
     }
@@ -686,26 +850,12 @@ impl Engine {
         self.store.set_pinned(&self.kv_key(handle), pinned)
     }
 
-    /// Evict a handle's entry from every tier. Pinned entries are refused.
+    /// Evict a handle's entry from every tier. Pinned entries are refused
+    /// — atomically, inside the store's shard lock (see
+    /// [`KvStore::evict`]), so a concurrent `cache.pin` can never lose.
     pub fn cache_evict(&self, handle: &str) -> EvictOutcome {
-        let key = self.kv_key(handle);
-        if self.store.is_pinned(&key) {
-            return EvictOutcome::Pinned;
-        }
-        if self.store.evict(&key) {
-            EvictOutcome::Evicted
-        } else {
-            EvictOutcome::NotFound
-        }
+        self.store.evict(&self.kv_key(handle))
     }
-}
-
-/// Outcome of a [`Engine::cache_evict`] request.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum EvictOutcome {
-    Evicted,
-    NotFound,
-    Pinned,
 }
 
 /// Greedy argmax over logits.

@@ -1,11 +1,12 @@
 //! The Linker (paper Fig. 5 component 5, Fig. 7 mechanism).
 //!
 //! "Linker links the KV cache of multimodal information to users' queries."
-//! Concretely: given a [`LinkedLayout`], the fetched per-image KV entries
-//! and a [`SelectionPlan`], it assembles the activation tensors of the AOT
-//! artifacts — the linked (position-stale) K/V cache with zero-filled
-//! *dummy* rows for selected tokens, the per-slot position/validity/sink
-//! vectors, and the packed selection arrays.
+//! Concretely: given a [`LinkedLayout`], the fetched per-segment KV entries
+//! (images *and* cached text chunks) and a [`SelectionPlan`], it assembles
+//! the activation tensors of the AOT artifacts — the linked
+//! (position-stale) K/V cache with zero-filled *dummy* rows for selected
+//! tokens, the per-slot position/validity/sink vectors, and the packed
+//! selection arrays.
 //!
 //! This is L3's hot path; the performance pass (EXPERIMENTS.md §Perf)
 //! tracks its assembly time separately from device execution.
@@ -13,8 +14,8 @@
 use anyhow::{bail, ensure};
 
 use super::selection::SelectionPlan;
-use crate::kv::ImageKv;
-use crate::mm::{LinkedLayout, TokenKind};
+use crate::kv::SegmentKv;
+use crate::mm::{LinkedLayout, SegmentId, TokenKind};
 use crate::runtime::{ModelMeta, Tensor};
 use crate::Result;
 
@@ -133,37 +134,48 @@ impl<'a> Linker<'a> {
         Linker { meta }
     }
 
-    /// Fetch entry lookup: `entries[i]` corresponds to `layout.image_spans[i]`.
-    fn check_entries(&self, layout: &LinkedLayout, entries: &[&ImageKv]) -> Result<()> {
+    /// Fetch entry lookup: `entries[i]` corresponds to
+    /// `layout.reuse_spans[i]`. Duplicate spans may share one `Arc`d
+    /// entry; only identity and shape are checked here.
+    fn check_entries(&self, layout: &LinkedLayout, entries: &[&SegmentKv]) -> Result<()> {
         ensure!(
-            entries.len() == layout.image_spans.len(),
-            "linker: {} KV entries for {} image spans",
+            entries.len() == layout.reuse_spans.len(),
+            "linker: {} KV entries for {} reuse spans",
             entries.len(),
-            layout.image_spans.len()
+            layout.reuse_spans.len()
         );
-        for (e, &(id, lo, hi)) in entries.iter().zip(&layout.image_spans) {
-            ensure!(e.key.image == id, "linker: entry/span image mismatch");
+        for (e, span) in entries.iter().zip(&layout.reuse_spans) {
+            ensure!(e.key.seg == span.seg, "linker: entry/span segment mismatch");
             ensure!(
-                e.shape.tokens == hi - lo,
-                "linker: image {:?} has {} stored tokens but span is {}",
-                id,
+                e.shape.tokens == span.len(),
+                "linker: segment {:?} has {} stored tokens but span is {}",
+                span.seg,
                 e.shape.tokens,
-                hi - lo
+                span.len()
             );
             ensure!(e.shape.layers == self.meta.n_layers, "layer count mismatch");
             ensure!(e.shape.heads == self.meta.n_heads, "head count mismatch");
             ensure!(e.shape.d_head == self.meta.d_head, "head dim mismatch");
-            ensure!(e.shape.d_model == self.meta.d_model, "model dim mismatch");
+            if matches!(span.seg, SegmentId::Image(_)) {
+                // Only image entries carry embeddings the linker reads.
+                ensure!(e.shape.d_model == self.meta.d_model, "model dim mismatch");
+                ensure!(
+                    e.emb.len() == e.shape.emb_elems(),
+                    "image entry without embeddings"
+                );
+            }
         }
         Ok(())
     }
 
     /// Assemble `prefill_full` inputs (prefix caching, text-only step of the
     /// two-step algorithms when given a text-only layout, debug analysis).
+    /// Chunk tokens enter as ordinary text tokens (their vocab ids are in
+    /// the layout) — prefix caching recomputes them exactly.
     pub fn full_prefill(
         &self,
         layout: &LinkedLayout,
-        entries: &[&ImageKv],
+        entries: &[&SegmentKv],
         bucket: usize,
     ) -> Result<FullPrefillInputs> {
         self.check_entries(layout, entries)?;
@@ -181,13 +193,18 @@ impl<'a> Linker<'a> {
         for (i, tok) in layout.tokens.iter().enumerate() {
             positions[i] = i as i32;
             valid[i] = 1.0;
-            if let TokenKind::Text(id) = tok {
-                ids[i] = *id;
+            match tok {
+                TokenKind::Text(id) => ids[i] = *id,
+                TokenKind::Chunk { tok, .. } => ids[i] = *tok,
+                TokenKind::Image { .. } => {}
             }
         }
-        for (span_idx, &(_, lo, hi)) in layout.image_spans.iter().enumerate() {
+        for (span_idx, span) in layout.reuse_spans.iter().enumerate() {
+            if !matches!(span.seg, SegmentId::Image(_)) {
+                continue;
+            }
             let e = entries[span_idx];
-            for (rel, slot) in (lo..hi).enumerate() {
+            for (rel, slot) in (span.lo..span.hi).enumerate() {
                 is_img[slot] = 1.0;
                 img_emb[slot * d..(slot + 1) * d]
                     .copy_from_slice(&e.emb[rel * d..(rel + 1) * d]);
@@ -208,8 +225,9 @@ impl<'a> Linker<'a> {
     }
 
     /// Build a *text-only* compacted layout for the two-step baselines'
-    /// step A: text tokens keep their **linked** positions but are packed
-    /// into the low slots of a (smaller) bucket.
+    /// step A: free-text tokens keep their **linked** positions but are
+    /// packed into the low slots of a (smaller) bucket. Chunk tokens are
+    /// NOT included — their KV is reused, not recomputed.
     ///
     /// Returns the `prefill_full` inputs plus the mapping from packed index
     /// to original linked slot.
@@ -256,12 +274,14 @@ impl<'a> Linker<'a> {
         ))
     }
 
-    /// Scatter stored image KV entries into a zeroed linked cache
-    /// `[L, S, H, Dh]` (the dummy cache of §5.1: non-image rows stay zero).
+    /// Scatter stored segment KV entries into a zeroed linked cache
+    /// `[L, S, H, Dh]` (the dummy cache of §5.1: free-text rows stay zero).
+    /// Image and chunk rows are spliced identically — both were computed
+    /// at canonical positions `0..n` and are position-stale here.
     pub fn linked_cache(
         &self,
         layout: &LinkedLayout,
-        entries: &[&ImageKv],
+        entries: &[&SegmentKv],
         bucket: usize,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         self.check_entries(layout, entries)?;
@@ -269,12 +289,12 @@ impl<'a> Linker<'a> {
         let row = h * dh;
         let mut k = vec![0f32; l * bucket * row];
         let mut v = vec![0f32; l * bucket * row];
-        for (span_idx, &(_, lo, hi)) in layout.image_spans.iter().enumerate() {
+        for (span_idx, span) in layout.reuse_spans.iter().enumerate() {
             let e = entries[span_idx];
-            let t = hi - lo;
+            let t = span.len();
             for layer in 0..l {
                 let src_base = layer * t * row;
-                let dst_base = layer * bucket * row + lo * row;
+                let dst_base = layer * bucket * row + span.lo * row;
                 k[dst_base..dst_base + t * row]
                     .copy_from_slice(&e.k[src_base..src_base + t * row]);
                 v[dst_base..dst_base + t * row]
@@ -316,12 +336,14 @@ impl<'a> Linker<'a> {
     ///
     /// `k_cache`/`v_cache` are the linked cache (usually from
     /// [`Linker::linked_cache`], possibly with text rows scattered in for
-    /// the CacheBlend path).
+    /// the CacheBlend path). Selected image tokens need their encoder
+    /// embedding (from the entry); selected chunk tokens re-enter by
+    /// vocab id, like text.
     #[allow(clippy::too_many_arguments)]
     pub fn selective(
         &self,
         layout: &LinkedLayout,
-        entries: &[&ImageKv],
+        entries: &[&SegmentKv],
         plan: &SelectionPlan,
         k_cache: Vec<f32>,
         v_cache: Vec<f32>,
@@ -341,11 +363,11 @@ impl<'a> Linker<'a> {
         // Span lookup for image-token embeddings.
         let span_of_slot = |slot: usize| -> Option<(usize, usize)> {
             layout
-                .image_spans
+                .reuse_spans
                 .iter()
                 .enumerate()
-                .find(|(_, &(_, lo, hi))| slot >= lo && slot < hi)
-                .map(|(idx, &(_, lo, _))| (idx, slot - lo))
+                .find(|(_, span)| slot >= span.lo && slot < span.hi)
+                .map(|(idx, span)| (idx, slot - span.lo))
         };
 
         let mut sel_ids = vec![0i32; n_bucket];
@@ -364,6 +386,7 @@ impl<'a> Linker<'a> {
             sel_slot[i] = slot as i32;
             match layout.tokens[slot] {
                 TokenKind::Text(id) => sel_ids[i] = id,
+                TokenKind::Chunk { tok, .. } => sel_ids[i] = tok,
                 TokenKind::Image { .. } => {
                     let (span_idx, rel) = span_of_slot(slot)
                         .ok_or_else(|| anyhow::anyhow!("image token outside any span"))?;
@@ -408,13 +431,15 @@ impl<'a> Linker<'a> {
         })
     }
 
-    /// Per-image-token layer-0 K deviation: |stored - recomputed| L1 over
+    /// Per-reused-token layer-0 K deviation: |stored - recomputed| L1 over
     /// heads×dims, for CacheBlend's selector. `k0_linked` is the
-    /// `layer0_k` output `[S, H, Dh]` at linked positions.
+    /// `layer0_k` output `[S, H, Dh]` at linked positions. Image and
+    /// chunk spans both contribute (their stored rows are equally
+    /// position-stale).
     pub fn layer0_deviation(
         &self,
         layout: &LinkedLayout,
-        entries: &[&ImageKv],
+        entries: &[&SegmentKv],
         k0_linked: &[f32],
         bucket: usize,
     ) -> Result<Vec<f32>> {
@@ -422,10 +447,10 @@ impl<'a> Linker<'a> {
         let row = self.meta.n_heads * self.meta.d_head;
         ensure!(k0_linked.len() == bucket * row, "k0 size mismatch");
         let mut dev = vec![0f32; layout.len()];
-        for (span_idx, &(_, lo, hi)) in layout.image_spans.iter().enumerate() {
+        for (span_idx, span) in layout.reuse_spans.iter().enumerate() {
             let e = entries[span_idx];
             // Stored layer-0 K rows: e.k layout [L, T, H, Dh], layer 0 first.
-            for (rel, slot) in (lo..hi).enumerate() {
+            for (rel, slot) in (span.lo..span.hi).enumerate() {
                 let stored = &e.k[rel * row..(rel + 1) * row];
                 let fresh = &k0_linked[slot * row..(slot + 1) * row];
                 dev[slot] = stored.iter().zip(fresh).map(|(a, b)| (a - b).abs()).sum();
@@ -440,8 +465,8 @@ mod tests {
     use super::*;
     use crate::coordinator::selection::{plan, Policy};
     use crate::kv::{KvKey, KvShape};
-    use crate::mm::{ImageId, Prompt, Tokenizer, UserId};
-    use crate::runtime::artifacts::{WeightsMeta};
+    use crate::mm::{ChunkId, ChunkRef, ImageId, Prompt, Tokenizer, UserId};
+    use crate::runtime::artifacts::WeightsMeta;
 
     fn meta() -> ModelMeta {
         ModelMeta {
@@ -467,7 +492,7 @@ mod tests {
         }
     }
 
-    fn entry(meta: &ModelMeta, image: u64, marker: f32) -> ImageKv {
+    fn entry(meta: &ModelMeta, image: u64, marker: f32) -> SegmentKv {
         let shape = KvShape {
             layers: meta.n_layers,
             tokens: meta.img_tokens,
@@ -475,8 +500,8 @@ mod tests {
             d_head: meta.d_head,
             d_model: meta.d_model,
         };
-        ImageKv {
-            key: KvKey::new(&meta.name, ImageId(image)),
+        SegmentKv {
+            key: KvKey::image(&meta.name, ImageId(image)),
             shape,
             emb: vec![marker; shape.emb_elems()],
             k: (0..shape.kv_elems()).map(|i| marker + i as f32 * 1e-3).collect(),
@@ -484,7 +509,24 @@ mod tests {
         }
     }
 
-    fn fixture() -> (ModelMeta, LinkedLayout, ImageKv, ImageKv) {
+    fn chunk_entry(meta: &ModelMeta, chunk: u64, tokens: usize, marker: f32) -> SegmentKv {
+        let shape = KvShape {
+            layers: meta.n_layers,
+            tokens,
+            heads: meta.n_heads,
+            d_head: meta.d_head,
+            d_model: meta.d_model,
+        };
+        SegmentKv {
+            key: KvKey::chunk(&meta.name, ChunkId(chunk)),
+            shape,
+            emb: Vec::new(),
+            k: (0..shape.kv_elems()).map(|i| marker + i as f32 * 1e-3).collect(),
+            v: (0..shape.kv_elems()).map(|i| -marker - i as f32 * 1e-3).collect(),
+        }
+    }
+
+    fn fixture() -> (ModelMeta, LinkedLayout, SegmentKv, SegmentKv) {
         let m = meta();
         let t = Tokenizer::new(4096);
         let p = Prompt::new(UserId(1))
@@ -499,20 +541,36 @@ mod tests {
         (m, l, e1, e2)
     }
 
+    /// Fixture with a chunk span between text and an image span.
+    fn chunk_fixture() -> (ModelMeta, LinkedLayout, SegmentKv, SegmentKv, Vec<i32>) {
+        let m = meta();
+        let t = Tokenizer::new(4096);
+        let doc_tokens = t.encode("harbour festival report with five words more");
+        let p = Prompt::new(UserId(1))
+            .text("context")
+            .chunk(ChunkRef::resolved(ChunkId(7), doc_tokens.clone()))
+            .image(ImageId(1))
+            .text("question");
+        let l = LinkedLayout::build(&p, &t, m.img_tokens, "sys");
+        let ce = chunk_entry(&m, 7, doc_tokens.len(), 5.0);
+        let ie = entry(&m, 1, 1.0);
+        (m, l, ce, ie, doc_tokens)
+    }
+
     #[test]
     fn full_prefill_layout() {
         let (m, l, e1, e2) = fixture();
         let linker = Linker::new(&m);
         let inputs = linker.full_prefill(&l, &[&e1, &e2], 32).unwrap();
         let is_img = inputs.is_img.f32_data().unwrap();
-        let (_, lo1, hi1) = l.image_spans[0];
-        assert!(is_img[lo1..hi1].iter().all(|&x| x == 1.0));
+        let span1 = l.reuse_spans[0];
+        assert!(is_img[span1.lo..span1.hi].iter().all(|&x| x == 1.0));
         assert_eq!(is_img.iter().filter(|&&x| x == 1.0).count(), 8);
         // Image embeddings marked per entry.
         let emb = inputs.img_emb.f32_data().unwrap();
-        assert_eq!(emb[lo1 * m.d_model], 1.0);
-        let (_, lo2, _) = l.image_spans[1];
-        assert_eq!(emb[lo2 * m.d_model], 2.0);
+        assert_eq!(emb[span1.lo * m.d_model], 1.0);
+        let span2 = l.reuse_spans[1];
+        assert_eq!(emb[span2.lo * m.d_model], 2.0);
         // Positions: arange then PAD.
         let pos = inputs.positions.i32_data().unwrap();
         assert_eq!(pos[0], 0);
@@ -522,24 +580,60 @@ mod tests {
     }
 
     #[test]
+    fn full_prefill_feeds_chunk_tokens_as_ids() {
+        let (m, l, ce, ie, doc_tokens) = chunk_fixture();
+        let linker = Linker::new(&m);
+        let inputs = linker.full_prefill(&l, &[&ce, &ie], 64).unwrap();
+        let ids = inputs.ids.i32_data().unwrap();
+        let is_img = inputs.is_img.f32_data().unwrap();
+        let chunk_span = l.reuse_spans[0];
+        for (rel, slot) in (chunk_span.lo..chunk_span.hi).enumerate() {
+            assert_eq!(ids[slot], doc_tokens[rel], "chunk slot {slot} must carry its vocab id");
+            assert_eq!(is_img[slot], 0.0, "chunk tokens are not image tokens");
+        }
+        // The image span still contributes embeddings.
+        let img_span = l.reuse_spans[1];
+        assert!(is_img[img_span.lo..img_span.hi].iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
     fn linked_cache_scatters_rows() {
         let (m, l, e1, e2) = fixture();
         let linker = Linker::new(&m);
         let bucket = 32;
         let (k, _v) = linker.linked_cache(&l, &[&e1, &e2], bucket).unwrap();
         let row = m.n_heads * m.d_head;
-        let (_, lo1, _) = l.image_spans[0];
+        let span1 = l.reuse_spans[0];
         // Layer 0, first image, rel 0 == stored k[0..row].
-        let dst = lo1 * row;
+        let dst = span1.lo * row;
         assert_eq!(&k[dst..dst + row], &e1.k[0..row]);
         // Layer 1 row of image 2, rel 1.
-        let (_, lo2, _) = l.image_spans[1];
-        let dst = bucket * row + (lo2 + 1) * row; // layer 1 base + slot
+        let span2 = l.reuse_spans[1];
+        let dst = bucket * row + (span2.lo + 1) * row; // layer 1 base + slot
         let src = m.img_tokens * row + row; // layer 1 base + rel 1
         assert_eq!(&k[dst..dst + row], &e2.k[src..src + row]);
         // Text slots are dummy zeros.
         let text_slot = l.text_indices()[0];
         assert!(k[text_slot * row..(text_slot + 1) * row].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn linked_cache_scatters_chunk_rows_too() {
+        let (m, l, ce, ie, doc_tokens) = chunk_fixture();
+        let linker = Linker::new(&m);
+        let bucket = 64;
+        let (k, v) = linker.linked_cache(&l, &[&ce, &ie], bucket).unwrap();
+        let row = m.n_heads * m.d_head;
+        let chunk_span = l.reuse_spans[0];
+        let t = doc_tokens.len();
+        // Layer 0 rel 0 and layer 1 rel t-1 of the chunk both land.
+        assert_eq!(&k[chunk_span.lo * row..chunk_span.lo * row + row], &ce.k[0..row]);
+        let dst = bucket * row + (chunk_span.hi - 1) * row;
+        let src = t * row + (t - 1) * row;
+        assert_eq!(&v[dst..dst + row], &ce.v[src..src + row]);
+        // Image rows land after the chunk.
+        let img_span = l.reuse_spans[1];
+        assert_eq!(&k[img_span.lo * row..img_span.lo * row + row], &ie.k[0..row]);
     }
 
     #[test]
@@ -564,10 +658,33 @@ mod tests {
         let last_sel = si.last_sel.i32_data().unwrap()[0] as usize;
         assert_eq!(sel_pos[last_sel] as usize, l.len() - 1);
         // Image-head entries carry embeddings.
-        let (_, lo1, _) = l.image_spans[0];
-        let idx = pl.selected.iter().position(|&s| s == lo1).unwrap();
+        let span1 = l.reuse_spans[0];
+        let idx = pl.selected.iter().position(|&s| s == span1.lo).unwrap();
         assert_eq!(si.sel_is_img.f32_data().unwrap()[idx], 1.0);
         assert_eq!(si.sel_img_emb.f32_data().unwrap()[idx * m.d_model], 1.0);
+    }
+
+    #[test]
+    fn selective_feeds_chunk_heads_by_vocab_id() {
+        let (m, l, ce, ie, doc_tokens) = chunk_fixture();
+        let linker = Linker::new(&m);
+        let k_head = 2;
+        let pl = plan(Policy::MpicK(k_head), &l, &[]);
+        let (k, v) = linker.linked_cache(&l, &[&ce, &ie], 64).unwrap();
+        let si = linker.selective(&l, &[&ce, &ie], &pl, k, v, 64, 64).unwrap();
+        let sel_ids = si.sel_ids.i32_data().unwrap();
+        let sel_is_img = si.sel_is_img.f32_data().unwrap();
+        let chunk_span = l.reuse_spans[0];
+        for j in 0..k_head {
+            let slot = chunk_span.lo + j;
+            let i = pl.selected.iter().position(|&s| s == slot).unwrap();
+            assert_eq!(sel_ids[i], doc_tokens[j], "chunk head re-enters by vocab id");
+            assert_eq!(sel_is_img[i], 0.0);
+        }
+        // Image heads still flagged as image with embeddings.
+        let img_span = l.reuse_spans[1];
+        let i = pl.selected.iter().position(|&s| s == img_span.lo).unwrap();
+        assert_eq!(sel_is_img[i], 1.0);
     }
 
     #[test]
@@ -596,6 +713,19 @@ mod tests {
     }
 
     #[test]
+    fn text_only_prefill_excludes_chunk_tokens() {
+        let (m, l, _, _, _) = chunk_fixture();
+        let linker = Linker::new(&m);
+        let (_, mapping) = linker.text_only_prefill(&l, 32).unwrap();
+        let chunk_span = l.reuse_spans[0];
+        assert!(
+            mapping.iter().all(|&s| s < chunk_span.lo || s >= chunk_span.hi),
+            "chunk slots must not be recomputed by the text step"
+        );
+        assert_eq!(mapping.len(), l.text_len());
+    }
+
+    #[test]
     fn scatter_packed_rows_places_text_kv() {
         let (m, l, e1, e2) = fixture();
         let linker = Linker::new(&m);
@@ -604,14 +734,15 @@ mod tests {
         let packed_bucket = 16;
         let mapping = l.text_indices();
         let row = m.n_heads * m.d_head;
-        let packed: Vec<f32> = (0..m.n_layers * packed_bucket * row).map(|i| 100.0 + i as f32).collect();
+        let packed: Vec<f32> =
+            (0..m.n_layers * packed_bucket * row).map(|i| 100.0 + i as f32).collect();
         linker.scatter_packed_rows(&mut k, bucket, &packed, packed_bucket, &mapping).unwrap();
         // First text slot row at layer 0 == packed row 0.
         let slot = mapping[0];
         assert_eq!(&k[slot * row..slot * row + row], &packed[0..row]);
         // Image rows untouched.
-        let (_, lo1, _) = l.image_spans[0];
-        assert_eq!(&k[lo1 * row..lo1 * row + row], &e1.k[0..row]);
+        let span1 = l.reuse_spans[0];
+        assert_eq!(&k[span1.lo * row..span1.lo * row + row], &e1.k[0..row]);
     }
 
     #[test]
@@ -622,20 +753,31 @@ mod tests {
         let row = m.n_heads * m.d_head;
         // Fresh K equals stored for image 1, differs for image 2.
         let mut k0 = vec![0f32; bucket * row];
-        let (_, lo1, hi1) = l.image_spans[0];
-        for (rel, slot) in (lo1..hi1).enumerate() {
+        let span1 = l.reuse_spans[0];
+        for (rel, slot) in (span1.lo..span1.hi).enumerate() {
             k0[slot * row..(slot + 1) * row].copy_from_slice(&e1.k[rel * row..(rel + 1) * row]);
         }
         let dev = linker.layer0_deviation(&l, &[&e1, &e2], &k0, bucket).unwrap();
-        for slot in lo1..hi1 {
+        for slot in span1.lo..span1.hi {
             assert_eq!(dev[slot], 0.0);
         }
-        let (_, lo2, hi2) = l.image_spans[1];
-        for slot in lo2..hi2 {
+        let span2 = l.reuse_spans[1];
+        for slot in span2.lo..span2.hi {
             assert!(dev[slot] > 0.0);
         }
         for &slot in &l.text_indices() {
             assert_eq!(dev[slot], 0.0);
         }
+    }
+
+    #[test]
+    fn entry_span_mismatch_is_rejected() {
+        let (m, l, ce, ie, _) = chunk_fixture();
+        let linker = Linker::new(&m);
+        // Swapped order: entry kinds no longer match span kinds.
+        assert!(linker.linked_cache(&l, &[&ie, &ce], 64).is_err());
+        // Wrong token count for the chunk span.
+        let bad = chunk_entry(&m, 7, 2, 5.0);
+        assert!(linker.linked_cache(&l, &[&bad, &ie], 64).is_err());
     }
 }

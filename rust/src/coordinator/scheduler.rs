@@ -175,17 +175,17 @@ impl Scheduler {
         self.queue.len()
     }
 
-    /// Image refs of queued-but-not-yet-admitted requests, FCFS order,
-    /// deduped. The serving pipeline feeds these to the prefetch lane
-    /// between decode rounds so that by admission time the transfer
-    /// engine sees device hits.
-    pub fn queued_images(&self) -> Vec<crate::mm::ImageId> {
+    /// Reusable-segment refs (images and chunks) of queued-but-not-yet-
+    /// admitted requests, FCFS order, deduped. The serving pipeline feeds
+    /// these to the prefetch lane between decode rounds so that by
+    /// admission time the transfer engine sees device hits.
+    pub fn queued_segments(&self) -> Vec<crate::mm::SegmentId> {
         let mut seen = std::collections::HashSet::new();
         let mut out = Vec::new();
         for (req, _) in &self.queue {
-            for image in req.prompt.images() {
-                if seen.insert(image) {
-                    out.push(image);
+            for seg in req.prompt.segment_ids() {
+                if seen.insert(seg) {
+                    out.push(seg);
                 }
             }
         }
@@ -356,13 +356,21 @@ impl Scheduler {
 }
 
 fn estimate_tokens(engine: &Engine, req: &Request) -> usize {
-    let layout = crate::mm::LinkedLayout::build(
-        &req.prompt,
-        engine.tokenizer(),
-        engine.meta().img_tokens,
-        &engine.config().system_prompt,
-    );
-    layout.len() + req.max_new
+    match engine.layout(&req.prompt) {
+        Ok(layout) => layout.len() + req.max_new,
+        // Unknown chunk references fail later in prefill with a precise
+        // error; meanwhile estimate from the unresolved prompt (chunk
+        // refs contribute zero tokens).
+        Err(_) => {
+            let layout = crate::mm::LinkedLayout::build(
+                &req.prompt,
+                engine.tokenizer(),
+                engine.meta().img_tokens,
+                &engine.config().system_prompt,
+            );
+            layout.len() + req.max_new
+        }
+    }
 }
 
 #[cfg(test)]
@@ -397,15 +405,27 @@ mod tests {
     }
 
     #[test]
-    fn queued_images_are_fcfs_and_deduped() {
-        use crate::mm::{ImageId, Prompt, UserId};
+    fn queued_segments_are_fcfs_and_deduped() {
+        use crate::mm::{ChunkId, ChunkRef, ImageId, Prompt, SegmentId, UserId};
         let mut s = Scheduler::new(64, 16);
-        assert!(s.queued_images().is_empty());
+        assert!(s.queued_segments().is_empty());
         let p1 = Prompt::new(UserId(1)).text("a").image(ImageId(7)).image(ImageId(3));
-        let p2 = Prompt::new(UserId(2)).text("b").image(ImageId(3)).image(ImageId(9));
+        let p2 = Prompt::new(UserId(2))
+            .text("b")
+            .image(ImageId(3))
+            .chunk(ChunkRef::unresolved(ChunkId(5)))
+            .image(ImageId(9));
         s.submit(Request { id: 1, prompt: p1, policy: Policy::Prefix, max_new: 4 });
         s.submit(Request { id: 2, prompt: p2, policy: Policy::Prefix, max_new: 4 });
-        assert_eq!(s.queued_images(), vec![ImageId(7), ImageId(3), ImageId(9)]);
+        assert_eq!(
+            s.queued_segments(),
+            vec![
+                SegmentId::Image(ImageId(7)),
+                SegmentId::Image(ImageId(3)),
+                SegmentId::Chunk(ChunkId(5)),
+                SegmentId::Image(ImageId(9)),
+            ]
+        );
     }
 
     #[test]

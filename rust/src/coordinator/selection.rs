@@ -1,12 +1,15 @@
 //! Selection policies: which tokens are recomputed by each context-caching
 //! algorithm, and whether the algorithm is single- or two-step.
 //!
-//! | algorithm    | recomputed tokens                              | steps |
-//! |--------------|------------------------------------------------|-------|
-//! | prefix       | everything (exact)                             | 1     |
-//! | full reuse   | text only                                      | 2     |
-//! | CacheBlend-r | text + top r% image tokens by KV deviation     | 2     |
-//! | MPIC-k       | text + first k tokens of every image           | **1** |
+//! Policies operate on *reusable spans* — image segments and cached text
+//! chunks alike (the paper's position-independent generalisation):
+//!
+//! | algorithm    | recomputed tokens                                | steps |
+//! |--------------|--------------------------------------------------|-------|
+//! | prefix       | everything (exact)                               | 1     |
+//! | full reuse   | free text only                                   | 2     |
+//! | CacheBlend-r | text + top r% reused tokens by KV deviation      | 2     |
+//! | MPIC-k       | text + first k tokens of every reusable span     | **1** |
 
 use crate::mm::LinkedLayout;
 
@@ -15,13 +18,13 @@ use crate::mm::LinkedLayout;
 pub enum Policy {
     /// Prefix caching: recompute the whole prompt (exact baseline).
     Prefix,
-    /// Full reuse: reuse every image KV verbatim, recompute text only.
+    /// Full reuse: reuse every segment KV verbatim, recompute text only.
     FullReuse,
-    /// CacheBlend-r: additionally recompute the r% of image tokens with the
-    /// largest layer-0 K deviation (r in percent of image tokens).
+    /// CacheBlend-r: additionally recompute the r% of reused tokens with
+    /// the largest layer-0 K deviation (r in percent of reused tokens).
     CacheBlend(f64),
-    /// MPIC-k: recompute the first k tokens of every image (the attention
-    /// sinks — Insights 2 & 3), single-pass selective attention.
+    /// MPIC-k: recompute the first k tokens of every reusable span (the
+    /// attention sinks — Insights 2 & 3), single-pass selective attention.
     MpicK(usize),
 }
 
@@ -30,7 +33,10 @@ impl Policy {
         match self {
             Policy::Prefix => "prefix".into(),
             Policy::FullReuse => "full-reuse".into(),
-            Policy::CacheBlend(r) => format!("cacheblend-{r:.0}"),
+            // `{r}` (not `{r:.0}`) so fractional ratios survive the
+            // name → parse round trip: CacheBlend(7.5) must not silently
+            // become CacheBlend(8.0).
+            Policy::CacheBlend(r) => format!("cacheblend-{r}"),
             Policy::MpicK(k) => format!("mpic-{k}"),
         }
     }
@@ -70,7 +76,8 @@ pub struct SelectionPlan {
     /// recomputes. Empty for `Prefix` (which runs `prefill_full`) and for
     /// `FullReuse` (whose step 2 is a single decode-style pass).
     pub selected: Vec<usize>,
-    /// Image-token indices whose stored KV rows are reused verbatim.
+    /// Reused-token indices whose stored KV rows are spliced verbatim
+    /// (image and chunk tokens not selected for recompute).
     pub reused: Vec<usize>,
 }
 
@@ -86,18 +93,22 @@ pub fn plan(policy: Policy, layout: &LinkedLayout, deviation: &[f32]) -> Selecti
         Policy::FullReuse => Vec::new(),
         Policy::MpicK(k) => {
             let mut sel = layout.text_indices();
-            sel.extend(layout.image_head_indices(k));
+            sel.extend(layout.reuse_head_indices(k));
             sel
         }
         Policy::CacheBlend(r) => {
-            // Step-2 selection: top r% image tokens by deviation (+ last).
-            let img = layout.image_indices();
-            let n_recompute = ((r / 100.0) * img.len() as f64).ceil() as usize;
-            let mut scored: Vec<usize> = img;
+            // Step-2 selection: top r% reused tokens by deviation (+ last).
+            let reuse = layout.reuse_indices();
+            let n_recompute = ((r / 100.0) * reuse.len() as f64).ceil() as usize;
+            let mut scored: Vec<usize> = reuse;
+            // Total ordering (satellite fix): a NaN deviation — e.g. from
+            // a degenerate layer-0 estimate — must not panic the sort.
+            // total_cmp sorts NaNs above every finite value, so they rank
+            // as "most deviant" and get recomputed, the safe direction.
             scored.sort_by(|&a, &b| {
                 let da = deviation.get(a).copied().unwrap_or(0.0);
                 let db = deviation.get(b).copied().unwrap_or(0.0);
-                db.partial_cmp(&da).unwrap().then(a.cmp(&b))
+                db.total_cmp(&da).then(a.cmp(&b))
             });
             scored.truncate(n_recompute);
             scored
@@ -113,7 +124,7 @@ pub fn plan(policy: Policy, layout: &LinkedLayout, deviation: &[f32]) -> Selecti
         Policy::Prefix => Vec::new(),
         _ => {
             let sel: std::collections::HashSet<usize> = selected.iter().copied().collect();
-            layout.image_indices().into_iter().filter(|i| !sel.contains(i)).collect()
+            layout.reuse_indices().into_iter().filter(|i| !sel.contains(i)).collect()
         }
     };
     SelectionPlan { policy, selected, reused }
@@ -122,7 +133,7 @@ pub fn plan(policy: Policy, layout: &LinkedLayout, deviation: &[f32]) -> Selecti
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mm::{ImageId, Prompt, Tokenizer, UserId};
+    use crate::mm::{ChunkId, ChunkRef, ImageId, Prompt, Tokenizer, UserId};
 
     fn layout() -> LinkedLayout {
         let t = Tokenizer::new(4096);
@@ -131,6 +142,18 @@ mod tests {
             .image(ImageId(1))
             .image(ImageId(2))
             .text("in detail please");
+        LinkedLayout::build(&p, &t, 16, "system prompt here")
+    }
+
+    /// A layout mixing an image span with a cached-chunk span.
+    fn mixed_layout() -> LinkedLayout {
+        let t = Tokenizer::new(4096);
+        let doc = t.encode("the shared festival report describes the harbour celebrations at length");
+        let p = Prompt::new(UserId(1))
+            .text("given")
+            .chunk(ChunkRef::resolved(ChunkId(9), doc))
+            .image(ImageId(1))
+            .text("answer the question");
         LinkedLayout::build(&p, &t, 16, "system prompt here")
     }
 
@@ -143,23 +166,59 @@ mod tests {
         assert!(Policy::parse("bogus").is_err());
     }
 
+    /// Satellite regression: fractional CacheBlend ratios must survive the
+    /// round trip. `{r:.0}` used to turn 7.5 into "cacheblend-8".
     #[test]
-    fn mpic_k_selects_text_and_image_heads() {
+    fn cacheblend_fractional_ratio_roundtrips() {
+        for r in [7.5, 0.25, 12.125, 15.0] {
+            let p = Policy::CacheBlend(r);
+            let parsed = Policy::parse(&p.name()).unwrap();
+            assert_eq!(parsed, p, "name {:?} must parse back exactly", p.name());
+        }
+        assert_eq!(Policy::CacheBlend(7.5).name(), "cacheblend-7.5");
+        assert_eq!(Policy::CacheBlend(15.0).name(), "cacheblend-15");
+    }
+
+    #[test]
+    fn mpic_k_selects_text_and_span_heads() {
         let l = layout();
         let plan = plan(Policy::MpicK(4), &l, &[]);
         // Text + 4 per image.
         assert_eq!(plan.selected.len(), l.text_len() + 8);
         // Heads of both images are in.
-        for &(_, lo, _) in &l.image_spans {
+        for span in &l.reuse_spans {
             for j in 0..4 {
-                assert!(plan.selected.contains(&(lo + j)));
+                assert!(plan.selected.contains(&(span.lo + j)));
             }
-            assert!(!plan.selected.contains(&(lo + 4)));
+            assert!(!plan.selected.contains(&(span.lo + 4)));
         }
         // Reused = all image tokens not selected.
         assert_eq!(plan.reused.len(), 32 - 8);
         // Last token always selected.
         assert!(plan.selected.contains(&(l.len() - 1)));
+    }
+
+    #[test]
+    fn mpic_k_treats_chunks_like_images() {
+        let l = mixed_layout();
+        let chunk_span = l.reuse_spans[0];
+        let img_span = l.reuse_spans[1];
+        assert!(chunk_span.seg.as_chunk().is_some());
+        let k = 3;
+        let pl = plan(Policy::MpicK(k), &l, &[]);
+        // First k tokens of BOTH spans selected, the rest reused.
+        for span in [chunk_span, img_span] {
+            for j in 0..k {
+                assert!(pl.selected.contains(&(span.lo + j)), "head {j} of span missing");
+            }
+            for j in k..span.len() {
+                assert!(pl.reused.contains(&(span.lo + j)), "tail {j} must be reused");
+            }
+        }
+        // The prompt ends with text, so the always-selected last token is
+        // already in the text set: no extra slot.
+        assert_eq!(pl.selected.len(), l.text_len() + 2 * k);
+        assert_eq!(pl.reused.len(), chunk_span.len() + img_span.len() - 2 * k);
     }
 
     #[test]
@@ -174,7 +233,7 @@ mod tests {
     fn cacheblend_selects_by_deviation() {
         let l = layout();
         let mut dev = vec![0.0f32; l.len()];
-        let (_, lo, _) = l.image_spans[0];
+        let lo = l.reuse_spans[0].lo;
         // Make tokens lo+5 and lo+9 the most deviant.
         dev[lo + 5] = 10.0;
         dev[lo + 9] = 8.0;
@@ -186,12 +245,44 @@ mod tests {
         assert!(img_selected.contains(&(lo + 9)));
     }
 
+    /// Satellite regression: a NaN deviation must not panic the sort, and
+    /// ranks as most-deviant (recomputed) under the total order.
     #[test]
-    fn full_reuse_reuses_every_image_token() {
+    fn cacheblend_survives_nan_deviation() {
+        let l = layout();
+        let mut dev = vec![0.0f32; l.len()];
+        let lo = l.reuse_spans[0].lo;
+        dev[lo + 2] = f32::NAN;
+        dev[lo + 7] = 5.0;
+        let plan = plan(Policy::CacheBlend(7.0), &l, &dev); // 3 tokens
+        let img_selected: Vec<usize> =
+            plan.selected.iter().copied().filter(|i| *i != l.len() - 1).collect();
+        assert_eq!(img_selected.len(), 3);
+        assert!(img_selected.contains(&(lo + 2)), "NaN must rank as most deviant");
+        assert!(img_selected.contains(&(lo + 7)));
+        // All-NaN deviations: still no panic, still the exact budget.
+        let all_nan = vec![f32::NAN; l.len()];
+        let pl2 = plan2(&l, &all_nan);
+        assert_eq!(
+            pl2.selected.iter().filter(|&&i| i != l.len() - 1).count(),
+            3
+        );
+    }
+
+    fn plan2(l: &LinkedLayout, dev: &[f32]) -> SelectionPlan {
+        plan(Policy::CacheBlend(7.0), l, dev)
+    }
+
+    #[test]
+    fn full_reuse_reuses_every_segment_token() {
         let l = layout();
         let plan = plan(Policy::FullReuse, &l, &[]);
         assert!(plan.selected.is_empty());
         assert_eq!(plan.reused.len(), 32);
+        // Chunk tokens are reused verbatim too.
+        let m = mixed_layout();
+        let pl = super::plan(Policy::FullReuse, &m, &[]);
+        assert_eq!(pl.reused.len(), m.reuse_indices().len());
     }
 
     #[test]
@@ -203,37 +294,46 @@ mod tests {
     }
 
     #[test]
-    fn property_selected_and_reused_partition_images() {
+    fn property_selected_and_reused_partition_segments() {
         crate::util::prop::check(
             "selection-partition",
             40,
             |rng| {
                 let k = rng.below(20) as usize;
-                let n_img = 1 + rng.below(4) as usize;
-                (k, n_img, rng.next_u64())
+                let n_seg = 1 + rng.below(4) as usize;
+                (k, n_seg, rng.next_u64())
             },
-            |&(k, n_img, seed)| {
+            |&(k, n_seg, seed)| {
                 let t = Tokenizer::new(4096);
                 let mut p = Prompt::new(UserId(1)).text("hello world opening");
-                for i in 0..n_img {
-                    p = p.image(ImageId(seed ^ i as u64)).text("and then");
+                for i in 0..n_seg {
+                    // Alternate image and chunk segments so the partition
+                    // invariant covers both reusable kinds.
+                    if i % 2 == 0 {
+                        p = p.image(ImageId(seed ^ i as u64)).text("and then");
+                    } else {
+                        let doc = t.encode("some shared reference words here");
+                        p = p
+                            .chunk(ChunkRef::resolved(ChunkId(seed ^ i as u64), doc))
+                            .text("and then");
+                    }
                 }
                 let l = LinkedLayout::build(&p, &t, 16, "sys");
                 let plan = plan(Policy::MpicK(k), &l, &[]);
-                let img: std::collections::HashSet<usize> =
-                    l.image_indices().into_iter().collect();
+                let reuse: std::collections::HashSet<usize> =
+                    l.reuse_indices().into_iter().collect();
                 for &i in &plan.reused {
-                    if !img.contains(&i) {
-                        return Err(format!("reused non-image token {i}"));
+                    if !reuse.contains(&i) {
+                        return Err(format!("reused non-segment token {i}"));
                     }
                     if plan.selected.contains(&i) {
                         return Err(format!("token {i} both selected and reused"));
                     }
                 }
                 let covered = plan.reused.len()
-                    + plan.selected.iter().filter(|i| img.contains(i)).count();
-                if covered != img.len() {
-                    return Err("selected+reused do not cover image tokens".into());
+                    + plan.selected.iter().filter(|i| reuse.contains(i)).count();
+                if covered != reuse.len() {
+                    return Err("selected+reused do not cover segment tokens".into());
                 }
                 Ok(())
             },

@@ -45,12 +45,32 @@ pub fn precompute_images(engine: &Engine, convs: &[Conversation]) -> Result<usiz
     let mut n = 0;
     for c in convs {
         for img in &c.images {
-            let key = crate::kv::KvKey::new(&engine.meta().name, *img);
+            let key = crate::kv::KvKey::image(&engine.meta().name, *img);
             if !engine.store().contains(&key) {
                 let kv = engine.encode_image(*img)?;
                 engine.store().put(kv)?;
                 n += 1;
             }
+        }
+    }
+    Ok(n)
+}
+
+/// Upload (tokenize + canonical prefill + store) every document of a RAG
+/// workload's shared chunk pool, registering each in the engine's chunk
+/// library so generated `CHUNK#...` references resolve. Documents whose
+/// KV is already stored (the disk tier persists across runs) skip the
+/// prefill and only (re)register their token stream; returns the number
+/// actually encoded, mirroring [`precompute_images`].
+pub fn precompute_chunks(engine: &Engine, pool: &[(String, String)]) -> Result<usize> {
+    let mut n = 0;
+    for (handle, text) in pool {
+        if engine.store().contains(&engine.kv_key(handle)) {
+            let tokens = engine.tokenizer().encode(text);
+            engine.chunk_lib.register(handle, text, tokens);
+        } else {
+            engine.upload_chunk(handle, text)?;
+            n += 1;
         }
     }
     Ok(n)

@@ -1,16 +1,17 @@
 //! KV serialization: the on-disk / in-host-tier wire format.
 //!
-//! ## v2 — chunked container (current writer)
+//! ## v3 — chunked segment container (current writer)
 //!
-//! The payload (`emb ++ k ++ v` as raw f32 LE) is split into fixed-size
-//! chunks of [`CHUNK_SIZE`] bytes; each chunk is independently
-//! zstd-compressed and SHA-256-checksummed, so encode and decode fan the
-//! chunks out across the shared [`ThreadPool`] instead of serialising a
-//! multi-MB (de)compression behind one core:
+//! The payload (`emb ++ k ++ v` as raw f32 LE; `emb` is empty for chunk
+//! segments) is split into fixed-size chunks of [`CHUNK_SIZE`] bytes; each
+//! chunk is independently zstd-compressed and SHA-256-checksummed, so
+//! encode and decode fan the chunks out across the shared [`ThreadPool`]
+//! instead of serialising a multi-MB (de)compression behind one core:
 //!
 //! ```text
-//! magic "MPKV" | version=2 u32 | model_len u32 | model bytes | image u64
-//! | layers,tokens,heads,d_head,d_model (u32 x5)
+//! magic "MPKV" | version=3 u32 | model_len u32 | model bytes
+//! | seg_kind u8 ('i' image / 'c' chunk) | seg_id u64
+//! | layers,tokens,heads,d_head,d_model (u32 x5) | has_emb u8
 //! | chunk_size u32 | n_chunks u32
 //! | chunk table: n_chunks x (comp_len u32 | sha256 of compressed chunk)
 //! | compressed chunks, concatenated in order
@@ -19,6 +20,11 @@
 //! Integrity is per chunk, but failure is per entry: one corrupt or
 //! truncated chunk fails the whole decode and the store treats the entry
 //! as a miss (failure-injection tests cover this).
+//!
+//! ## v2 — chunked image container (legacy, still decodes)
+//!
+//! Same chunked body, but the header carries a bare `image u64` (all v2
+//! entries are image segments with embeddings).
 //!
 //! ## v1 — whole-payload container (legacy, still decodes)
 //!
@@ -29,7 +35,7 @@
 //! | zstd(payload)
 //! ```
 //!
-//! Entries written before the v2 cut-over keep decoding forever;
+//! Entries written before the cut-overs keep decoding forever;
 //! [`encode_v1`] remains as the legacy writer for compatibility tests.
 
 use std::sync::Arc;
@@ -38,19 +44,20 @@ use anyhow::{anyhow, bail, Context};
 use byteorder::{ByteOrder, LittleEndian, ReadBytesExt, WriteBytesExt};
 use sha2::{Digest, Sha256};
 
-use super::{ImageKv, KvKey, KvShape};
-use crate::mm::ImageId;
+use super::{KvKey, KvShape, SegmentKv};
+use crate::mm::{ChunkId, ImageId, SegmentId};
 use crate::util::threadpool::ThreadPool;
 use crate::Result;
 
 const MAGIC: &[u8; 4] = b"MPKV";
 const V1: u32 = 1;
 const V2: u32 = 2;
+const V3: u32 = 3;
 
 /// zstd level: 1 is the latency-friendly setting for the hot path.
 pub const ZSTD_LEVEL: i32 = 1;
 
-/// Raw payload bytes per v2 chunk. 256 KiB keeps per-chunk overhead (36
+/// Raw payload bytes per chunk. 256 KiB keeps per-chunk overhead (36
 /// bytes of table) negligible while giving a multi-MB entry enough chunks
 /// to occupy every pool worker.
 pub const CHUNK_SIZE: usize = 256 << 10;
@@ -64,23 +71,30 @@ pub struct CodecReport {
     pub pooled: bool,
 }
 
-/// Number of v2 chunks a payload of `payload_len` raw bytes splits into.
+/// Number of chunks a payload of `payload_len` raw bytes splits into.
 pub fn chunk_count(payload_len: usize) -> usize {
     payload_len.div_ceil(CHUNK_SIZE).max(1)
 }
 
-/// Serialise an entry to bytes (v2, serial). See [`encode_with`].
-pub fn encode(e: &ImageKv) -> Result<Vec<u8>> {
+/// Raw payload bytes of an entry with the given shape: emb (when present)
+/// plus K and V, f32.
+fn payload_bytes(shape: &KvShape, has_emb: bool) -> usize {
+    let emb = if has_emb { shape.emb_elems() } else { 0 };
+    (emb + 2 * shape.kv_elems()) * 4
+}
+
+/// Serialise an entry to bytes (v3, serial). See [`encode_with`].
+pub fn encode(e: &SegmentKv) -> Result<Vec<u8>> {
     encode_with(e, None).map(|(bytes, _)| bytes)
 }
 
 /// Decode and integrity-check an entry (serial). See [`decode_with`].
-pub fn decode(bytes: &[u8]) -> Result<ImageKv> {
+pub fn decode(bytes: &[u8]) -> Result<SegmentKv> {
     decode_with(bytes, None).map(|(kv, _)| kv)
 }
 
 /// Flatten an entry's tensors into the raw `emb ++ k ++ v` LE payload.
-fn flatten_payload(e: &ImageKv) -> Vec<u8> {
+fn flatten_payload(e: &SegmentKv) -> Vec<u8> {
     let n_floats = e.emb.len() + e.k.len() + e.v.len();
     let mut payload = vec![0u8; n_floats * 4];
     let (a, rest) = payload.split_at_mut(e.emb.len() * 4);
@@ -91,24 +105,26 @@ fn flatten_payload(e: &ImageKv) -> Vec<u8> {
     payload
 }
 
-/// Write the header both container versions share:
-/// magic | version | model | image | shape dims.
-fn write_header(out: &mut Vec<u8>, e: &ImageKv, version: u32) -> Result<()> {
+/// Write the shared header prefix: magic | version | model.
+fn write_prefix(out: &mut Vec<u8>, e: &SegmentKv, version: u32) -> Result<()> {
     out.extend_from_slice(MAGIC);
     out.write_u32::<LittleEndian>(version)?;
     let model = e.key.model.as_bytes();
     out.write_u32::<LittleEndian>(model.len() as u32)?;
     out.extend_from_slice(model);
-    out.write_u64::<LittleEndian>(e.key.image.0)?;
-    for d in [e.shape.layers, e.shape.tokens, e.shape.heads, e.shape.d_head, e.shape.d_model] {
+    Ok(())
+}
+
+fn write_dims(out: &mut Vec<u8>, shape: &KvShape) -> Result<()> {
+    for d in [shape.layers, shape.tokens, shape.heads, shape.d_head, shape.d_model] {
         out.write_u32::<LittleEndian>(d as u32)?;
     }
     Ok(())
 }
 
-/// Serialise an entry to the v2 chunked container. With a pool, chunks
+/// Serialise an entry to the v3 chunked container. With a pool, chunks
 /// compress in parallel; the output is byte-identical either way.
-pub fn encode_with(e: &ImageKv, pool: Option<&ThreadPool>) -> Result<(Vec<u8>, CodecReport)> {
+pub fn encode_with(e: &SegmentKv, pool: Option<&ThreadPool>) -> Result<(Vec<u8>, CodecReport)> {
     e.validate()?;
     let payload = flatten_payload(e);
 
@@ -146,8 +162,12 @@ pub fn encode_with(e: &ImageKv, pool: Option<&ThreadPool>) -> Result<(Vec<u8>, C
     };
 
     let comp_total: usize = compressed.iter().map(|c| c.len()).sum();
-    let mut out = Vec::with_capacity(comp_total + e.key.model.len() + 48 + 36 * n_chunks);
-    write_header(&mut out, e, V2)?;
+    let mut out = Vec::with_capacity(comp_total + e.key.model.len() + 56 + 36 * n_chunks);
+    write_prefix(&mut out, e, V3)?;
+    out.push(e.key.seg.kind_tag());
+    out.write_u64::<LittleEndian>(e.key.seg.raw())?;
+    write_dims(&mut out, &e.shape)?;
+    out.push(u8::from(!e.emb.is_empty()));
     out.write_u32::<LittleEndian>(CHUNK_SIZE as u32)?;
     out.write_u32::<LittleEndian>(n_chunks as u32)?;
     for chunk in &compressed {
@@ -160,16 +180,16 @@ pub fn encode_with(e: &ImageKv, pool: Option<&ThreadPool>) -> Result<(Vec<u8>, C
     Ok((out, CodecReport { chunks: n_chunks, pooled }))
 }
 
-/// Decode and integrity-check an entry of either container version. With
-/// a pool, v2 chunks verify + decompress in parallel.
-pub fn decode_with(bytes: &[u8], pool: Option<&ThreadPool>) -> Result<(ImageKv, CodecReport)> {
+/// Decode and integrity-check an entry of any container version. With
+/// a pool, chunked payloads verify + decompress in parallel.
+pub fn decode_with(bytes: &[u8], pool: Option<&ThreadPool>) -> Result<(SegmentKv, CodecReport)> {
     decode_dispatch(bytes, None, pool)
 }
 
 /// Decode from an *owned* buffer: the pooled path shares it behind one
 /// `Arc` instead of copying the compressed region. The store's host and
 /// disk tiers both own their bytes, so this is the hot-path entry point.
-pub fn decode_owned(bytes: Vec<u8>, pool: Option<&ThreadPool>) -> Result<(ImageKv, CodecReport)> {
+pub fn decode_owned(bytes: Vec<u8>, pool: Option<&ThreadPool>) -> Result<(SegmentKv, CodecReport)> {
     let shared = Arc::new(bytes);
     decode_dispatch(&shared, Some(&shared), pool)
 }
@@ -178,7 +198,7 @@ fn decode_dispatch(
     bytes: &[u8],
     owned: Option<&Arc<Vec<u8>>>,
     pool: Option<&ThreadPool>,
-) -> Result<(ImageKv, CodecReport)> {
+) -> Result<(SegmentKv, CodecReport)> {
     let mut r = std::io::Cursor::new(bytes);
     let mut magic = [0u8; 4];
     std::io::Read::read_exact(&mut r, &mut magic).context("reading magic")?;
@@ -186,48 +206,80 @@ fn decode_dispatch(
         bail!("bad magic {:?}", magic);
     }
     let version = r.read_u32::<LittleEndian>()?;
-    let (key, shape) = read_header(&mut r)?;
+    let model = read_model(&mut r)?;
     match version {
-        V1 => decode_v1_body(bytes, r, key, shape)
-            .map(|kv| (kv, CodecReport { chunks: 1, pooled: false })),
-        V2 => decode_v2_body(bytes, owned, r, key, shape, pool),
+        V1 => {
+            let (key, shape) = read_legacy_image_header(&mut r, model)?;
+            decode_v1_body(bytes, r, key, shape)
+                .map(|kv| (kv, CodecReport { chunks: 1, pooled: false }))
+        }
+        V2 => {
+            let (key, shape) = read_legacy_image_header(&mut r, model)?;
+            decode_chunked_body(bytes, owned, r, key, shape, true, pool)
+        }
+        V3 => {
+            let kind = r.read_u8()?;
+            let raw = r.read_u64::<LittleEndian>()?;
+            let seg = match kind {
+                b'i' => SegmentId::Image(ImageId(raw)),
+                b'c' => SegmentId::Chunk(ChunkId(raw)),
+                other => bail!("unknown segment kind tag {other:#x}"),
+            };
+            let shape = read_dims(&mut r)?;
+            let has_emb = r.read_u8()? != 0;
+            let key = KvKey { model, seg };
+            decode_chunked_body(bytes, owned, r, key, shape, has_emb, pool)
+        }
         other => bail!("unsupported KV codec version {other}"),
     }
 }
 
-/// Shared header fields (after magic + version): key + shape.
-fn read_header(r: &mut std::io::Cursor<&[u8]>) -> Result<(KvKey, KvShape)> {
+fn read_model(r: &mut std::io::Cursor<&[u8]>) -> Result<String> {
     let model_len = r.read_u32::<LittleEndian>()? as usize;
     if model_len > 4096 {
         bail!("implausible model name length {model_len}");
     }
     let mut model = vec![0u8; model_len];
     std::io::Read::read_exact(r, &mut model)?;
-    let image = r.read_u64::<LittleEndian>()?;
+    Ok(String::from_utf8(model)?)
+}
+
+fn read_dims(r: &mut std::io::Cursor<&[u8]>) -> Result<KvShape> {
     let dims: Vec<usize> = (0..5)
         .map(|_| r.read_u32::<LittleEndian>().map(|d| d as usize))
         .collect::<std::io::Result<_>>()?;
-    let shape = KvShape {
+    Ok(KvShape {
         layers: dims[0],
         tokens: dims[1],
         heads: dims[2],
         d_head: dims[3],
         d_model: dims[4],
-    };
-    Ok((KvKey { model: String::from_utf8(model)?, image: ImageId(image) }, shape))
+    })
 }
 
-fn decode_v2_body(
+/// v1/v2 header tail (after magic + version + model): image id + dims.
+fn read_legacy_image_header(
+    r: &mut std::io::Cursor<&[u8]>,
+    model: String,
+) -> Result<(KvKey, KvShape)> {
+    let image = r.read_u64::<LittleEndian>()?;
+    let shape = read_dims(r)?;
+    Ok((KvKey { model, seg: SegmentId::Image(ImageId(image)) }, shape))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn decode_chunked_body(
     bytes: &[u8],
     owned: Option<&Arc<Vec<u8>>>,
     mut r: std::io::Cursor<&[u8]>,
     key: KvKey,
     shape: KvShape,
+    has_emb: bool,
     pool: Option<&ThreadPool>,
-) -> Result<(ImageKv, CodecReport)> {
+) -> Result<(SegmentKv, CodecReport)> {
     let chunk_size = r.read_u32::<LittleEndian>()? as usize;
     let n_chunks = r.read_u32::<LittleEndian>()? as usize;
-    let expect_bytes = (shape.emb_elems() + 2 * shape.kv_elems()) * 4;
+    let expect_bytes = payload_bytes(&shape, has_emb);
     if chunk_size == 0 || n_chunks == 0 || n_chunks > (1 << 20) {
         bail!("implausible chunk geometry ({n_chunks} chunks of {chunk_size})");
     }
@@ -307,7 +359,7 @@ fn decode_v2_body(
     if payload.len() != expect_bytes {
         bail!("payload is {} bytes, shape wants {expect_bytes}", payload.len());
     }
-    Ok((assemble(key, shape, &payload), CodecReport { chunks: n_chunks, pooled }))
+    Ok((assemble(key, shape, has_emb, &payload), CodecReport { chunks: n_chunks, pooled }))
 }
 
 fn decode_v1_body(
@@ -315,7 +367,7 @@ fn decode_v1_body(
     mut r: std::io::Cursor<&[u8]>,
     key: KvKey,
     shape: KvShape,
-) -> Result<ImageKv> {
+) -> Result<SegmentKv> {
     let payload_len = r.read_u64::<LittleEndian>()? as usize;
     let mut digest = [0u8; 32];
     std::io::Read::read_exact(&mut r, &mut digest)?;
@@ -327,18 +379,17 @@ fn decode_v1_body(
     if actual.as_slice() != digest {
         bail!("KV entry integrity failure (sha256 mismatch)");
     }
-    let expect_floats = shape.emb_elems() + 2 * shape.kv_elems();
-    let payload =
-        zstd::bulk::decompress(compressed, expect_floats * 4).context("zstd decompress")?;
-    if payload.len() != expect_floats * 4 {
-        bail!("payload is {} bytes, shape wants {}", payload.len(), expect_floats * 4);
+    let expect = payload_bytes(&shape, true);
+    let payload = zstd::bulk::decompress(compressed, expect).context("zstd decompress")?;
+    if payload.len() != expect {
+        bail!("payload is {} bytes, shape wants {}", payload.len(), expect);
     }
-    Ok(assemble(key, shape, &payload))
+    Ok(assemble(key, shape, true, &payload))
 }
 
-/// Split a raw payload into the entry's three tensors.
-fn assemble(key: KvKey, shape: KvShape, payload: &[u8]) -> ImageKv {
-    let mut emb = vec![0f32; shape.emb_elems()];
+/// Split a raw payload into the entry's tensors.
+fn assemble(key: KvKey, shape: KvShape, has_emb: bool, payload: &[u8]) -> SegmentKv {
+    let mut emb = vec![0f32; if has_emb { shape.emb_elems() } else { 0 }];
     let mut k = vec![0f32; shape.kv_elems()];
     let mut v = vec![0f32; shape.kv_elems()];
     let (a, rest) = payload.split_at(emb.len() * 4);
@@ -346,7 +397,7 @@ fn assemble(key: KvKey, shape: KvShape, payload: &[u8]) -> ImageKv {
     LittleEndian::read_f32_into(a, &mut emb);
     LittleEndian::read_f32_into(b, &mut k);
     LittleEndian::read_f32_into(c, &mut v);
-    ImageKv { key, shape, emb, k, v }
+    SegmentKv { key, shape, emb, k, v }
 }
 
 /// Whether chunk work should fan out: a pool was supplied, there is more
@@ -379,15 +430,22 @@ fn check_chunk(comp: &[u8], digest: &[u8; 32], raw_len: usize, i: usize) -> Resu
 }
 
 /// Legacy v1 writer — kept so compatibility tests can mint v1 entries and
-/// prove the store still serves archives written before the v2 cut-over.
-pub fn encode_v1(e: &ImageKv) -> Result<Vec<u8>> {
+/// prove the store still serves archives written before the chunked
+/// cut-overs. v1 only ever held image segments.
+pub fn encode_v1(e: &SegmentKv) -> Result<Vec<u8>> {
     e.validate()?;
+    anyhow::ensure!(
+        matches!(e.key.seg, SegmentId::Image(_)),
+        "v1 container only holds image segments"
+    );
     let payload = flatten_payload(e);
     let compressed = zstd::bulk::compress(&payload, ZSTD_LEVEL).context("zstd compress")?;
     let digest = Sha256::digest(&compressed);
 
     let mut out = Vec::with_capacity(compressed.len() + e.key.model.len() + 96);
-    write_header(&mut out, e, V1)?;
+    write_prefix(&mut out, e, V1)?;
+    out.write_u64::<LittleEndian>(e.key.seg.raw())?;
+    write_dims(&mut out, &e.shape)?;
     out.write_u64::<LittleEndian>(compressed.len() as u64)?;
     out.extend_from_slice(&digest);
     out.extend_from_slice(&compressed);
@@ -397,11 +455,11 @@ pub fn encode_v1(e: &ImageKv) -> Result<Vec<u8>> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kv::test_entry;
+    use crate::kv::{test_chunk_entry, test_entry};
 
     /// ~160 bytes/token with the test shape; pick token counts that cross
     /// the chunk boundary for multi-chunk coverage.
-    fn big_entry(image: u64) -> ImageKv {
+    fn big_entry(image: u64) -> SegmentKv {
         test_entry(image, 1 + CHUNK_SIZE / 160 * 3) // ~3.0 chunks of payload
     }
 
@@ -411,6 +469,33 @@ mod tests {
         let bytes = encode(&e).unwrap();
         let back = decode(&bytes).unwrap();
         assert_eq!(e, back);
+    }
+
+    #[test]
+    fn chunk_segment_roundtrip() {
+        let e = test_chunk_entry(42, 16);
+        let bytes = encode(&e).unwrap();
+        let back = decode(&bytes).unwrap();
+        assert_eq!(e, back);
+        assert!(back.emb.is_empty());
+        assert_eq!(back.key, e.key);
+        // A multi-chunk chunk-segment payload round-trips pooled too.
+        let big = test_chunk_entry(7, 1 + CHUNK_SIZE / 96 * 2);
+        let pool = ThreadPool::new(4);
+        let (bytes, rep) = encode_with(&big, Some(&pool)).unwrap();
+        assert!(rep.chunks >= 2);
+        let (back, _) = decode_with(&bytes, Some(&pool)).unwrap();
+        assert_eq!(back, big);
+    }
+
+    #[test]
+    fn image_and_chunk_with_same_raw_id_stay_distinct() {
+        let img = test_entry(9, 8);
+        let chk = test_chunk_entry(9, 8);
+        let bi = encode(&img).unwrap();
+        let bc = encode(&chk).unwrap();
+        assert_eq!(decode(&bi).unwrap().key.seg.kind_tag(), b'i');
+        assert_eq!(decode(&bc).unwrap().key.seg.kind_tag(), b'c');
     }
 
     #[test]
@@ -461,6 +546,8 @@ mod tests {
         let (back2, rep2) = decode_with(&v1, Some(&pool)).unwrap();
         assert_eq!(back2, e);
         assert!(!rep2.pooled, "v1 has a single payload; nothing to fan out");
+        // v1 never held chunk segments.
+        assert!(encode_v1(&test_chunk_entry(3, 8)).is_err());
     }
 
     #[test]
@@ -511,7 +598,7 @@ mod tests {
     }
 
     #[test]
-    fn rejects_wrong_magic_or_version() {
+    fn rejects_wrong_magic_or_version_or_kind() {
         let e = test_entry(7, 8);
         let mut bytes = encode(&e).unwrap();
         bytes[0] = b'X';
@@ -519,15 +606,21 @@ mod tests {
         let mut bytes2 = encode(&e).unwrap();
         bytes2[4] = 99;
         assert!(decode(&bytes2).is_err());
+        // v3 kind byte sits right after the model string.
+        let mut bytes3 = encode(&e).unwrap();
+        let kind_off = 4 + 4 + 4 + e.key.model.len();
+        assert_eq!(bytes3[kind_off], b'i');
+        bytes3[kind_off] = b'z';
+        assert!(decode(&bytes3).unwrap_err().to_string().contains("kind"));
     }
 
     #[test]
     fn rejects_inconsistent_chunk_geometry() {
         let e = test_entry(7, 8);
         let mut bytes = encode(&e).unwrap();
-        // n_chunks lives right after the 5 shape dims + chunk_size:
-        // 4 magic + 4 ver + 4 mlen + model + 8 image + 20 dims + 4 csize.
-        let n_off = 4 + 4 + 4 + e.key.model.len() + 8 + 20 + 4;
+        // n_chunks lives after: 4 magic + 4 ver + 4 mlen + model + 1 kind
+        // + 8 id + 20 dims + 1 has_emb + 4 chunk_size.
+        let n_off = 4 + 4 + 4 + e.key.model.len() + 1 + 8 + 20 + 1 + 4;
         bytes[n_off] = 7;
         assert!(decode(&bytes).unwrap_err().to_string().contains("chunk count"));
     }
@@ -546,7 +639,14 @@ mod tests {
         crate::util::prop::check(
             "kv-codec-roundtrip",
             25,
-            |rng| test_entry(rng.next_u64(), 1 + rng.below(32) as usize),
+            |rng| {
+                let tokens = 1 + rng.below(32) as usize;
+                if rng.bool(0.5) {
+                    test_entry(rng.next_u64(), tokens)
+                } else {
+                    test_chunk_entry(rng.next_u64(), tokens)
+                }
+            },
             |e| {
                 let bytes = encode(e).map_err(|x| x.to_string())?;
                 let back = decode(&bytes).map_err(|x| x.to_string())?;

@@ -1,14 +1,25 @@
 //! KV-cache subsystem (substrate S10).
 //!
-//! Holds the multimodal KV caches the paper's system revolves around: the
-//! per-image `(embeddings, K, V)` triple produced by `encode_image_kv` at
-//! upload time, stored across a three-tier hierarchy and fetched by the
-//! parallel transfer engine (paper Fig. 6) at inference time.
+//! Holds the **position-independent segment KV caches** the paper's system
+//! revolves around. A [`SegmentKv`] is the cached state of one reusable
+//! segment, keyed by [`KvKey`] (model × [`SegmentId`]):
+//!
+//! * **image segments** — the `(embeddings, K, V)` triple produced by the
+//!   `encode_image_kv` artifact at upload time (the original MPIC path);
+//! * **chunk segments** — the K/V rows of a *text chunk* (RAG document,
+//!   shared context block), computed once by a canonical text-only
+//!   `prefill_full` at positions `0..n` and stored without embeddings
+//!   (token ids regenerate them on recompute).
+//!
+//! Both kinds flow through the same tiered store, chunked codec and
+//! parallel transfer engine (paper Fig. 6); the linker splices either at
+//! arbitrary linked positions, and MPIC-k recomputes the first `k` tokens
+//! of every reusable span to repair the attention sink.
 //!
 //! The storage hot path is built for concurrent serving: the store is
 //! sharded by key hash (no global lock), device entries travel as
-//! `Arc<ImageKv>` (a hit is a refcount bump, not a copy), host/disk
-//! bytes use the chunked v2 container so codec work fans out across the
+//! `Arc<SegmentKv>` (a hit is a refcount bump, not a copy), host/disk
+//! bytes use the chunked v3 container so codec work fans out across the
 //! shared pool, and a prefetch lane warms queued requests' entries
 //! toward the device tier between decode rounds. See [`store`],
 //! [`codec`] and [`transfer`] for the details.
@@ -26,13 +37,13 @@ pub mod codec;
 pub mod store;
 pub mod transfer;
 
-use crate::mm::ImageId;
+use crate::mm::{ChunkId, ImageId, SegmentId};
 
 pub use block::BlockAllocator;
-pub use store::{EntryInfo, KvStore, StoreConfig, StoreStats, Tier};
+pub use store::{EntryInfo, EvictOutcome, KvStore, StoreConfig, StoreStats, Tier};
 pub use transfer::{TransferEngine, TransferReport};
 
-/// Shape of one image's KV entry.
+/// Shape of one segment's KV entry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct KvShape {
     pub layers: usize,
@@ -51,37 +62,46 @@ impl KvShape {
         self.tokens * self.d_model
     }
 
-    /// Total payload bytes (emb + K + V, f32).
+    /// Payload bytes of an image entry (emb + K + V, f32).
     pub fn total_bytes(&self) -> usize {
         4 * (self.emb_elems() + 2 * self.kv_elems())
     }
 }
 
-/// Cache key: an image's KV is model-specific.
+/// Cache key: a segment's KV is model-specific.
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct KvKey {
     pub model: String,
-    pub image: ImageId,
+    pub seg: SegmentId,
 }
 
 impl KvKey {
-    pub fn new(model: &str, image: ImageId) -> KvKey {
-        KvKey { model: model.to_string(), image }
+    /// Key of an image segment's KV.
+    pub fn image(model: &str, image: ImageId) -> KvKey {
+        KvKey { model: model.to_string(), seg: SegmentId::Image(image) }
     }
 
-    /// Stable file-name stem for the disk tier.
+    /// Key of a cached text chunk's KV.
+    pub fn chunk(model: &str, chunk: ChunkId) -> KvKey {
+        KvKey { model: model.to_string(), seg: SegmentId::Chunk(chunk) }
+    }
+
+    /// Stable file-name stem for the disk tier (kind-tagged so an image
+    /// and a chunk with equal raw ids never collide).
     pub fn file_stem(&self) -> String {
-        format!("{}-{:016x}", self.model, self.image.0)
+        format!("{}-{}{:016x}", self.model, self.seg.kind_tag() as char, self.seg.raw())
     }
 }
 
-/// One image's cached state: encoder embeddings plus per-layer K/V at
-/// canonical positions `0..tokens` (exactly what the Static Library stores).
+/// One segment's cached state: per-layer K/V at canonical positions
+/// `0..tokens`, plus — for image segments — the encoder embeddings the
+/// selective pass needs when it recomputes image tokens. Chunk entries
+/// store no embeddings (`emb` empty): their token ids live in the layout.
 #[derive(Debug, Clone, PartialEq)]
-pub struct ImageKv {
+pub struct SegmentKv {
     pub key: KvKey,
     pub shape: KvShape,
-    /// `[tokens, d_model]`
+    /// `[tokens, d_model]` for image entries; empty for chunk entries.
     pub emb: Vec<f32>,
     /// `[layers, tokens, heads, d_head]`
     pub k: Vec<f32>,
@@ -89,32 +109,53 @@ pub struct ImageKv {
     pub v: Vec<f32>,
 }
 
-impl ImageKv {
+impl SegmentKv {
     pub fn validate(&self) -> crate::Result<()> {
-        anyhow::ensure!(
-            self.emb.len() == self.shape.emb_elems(),
-            "emb length {} != shape {:?}",
-            self.emb.len(),
-            self.shape
-        );
+        match self.key.seg {
+            SegmentId::Image(_) => anyhow::ensure!(
+                self.emb.len() == self.shape.emb_elems(),
+                "image emb length {} != shape {:?}",
+                self.emb.len(),
+                self.shape
+            ),
+            SegmentId::Chunk(_) => anyhow::ensure!(
+                self.emb.is_empty(),
+                "chunk entries carry no embeddings (got {})",
+                self.emb.len()
+            ),
+        }
         anyhow::ensure!(self.k.len() == self.shape.kv_elems(), "k length mismatch");
         anyhow::ensure!(self.v.len() == self.shape.kv_elems(), "v length mismatch");
         Ok(())
     }
 
+    /// Resident payload bytes (actual vector lengths, f32).
     pub fn bytes(&self) -> usize {
-        self.shape.total_bytes()
+        4 * (self.emb.len() + self.k.len() + self.v.len())
     }
 }
 
 #[cfg(test)]
-pub(crate) fn test_entry(image: u64, tokens: usize) -> ImageKv {
+pub(crate) fn test_entry(image: u64, tokens: usize) -> SegmentKv {
     let shape = KvShape { layers: 2, tokens, heads: 2, d_head: 4, d_model: 8 };
     let mut rng = crate::util::rng::Rng::new(image);
-    ImageKv {
-        key: KvKey::new("test-model", ImageId(image)),
+    SegmentKv {
+        key: KvKey::image("test-model", ImageId(image)),
         shape,
         emb: (0..shape.emb_elems()).map(|_| rng.f32()).collect(),
+        k: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
+        v: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_chunk_entry(chunk: u64, tokens: usize) -> SegmentKv {
+    let shape = KvShape { layers: 2, tokens, heads: 2, d_head: 4, d_model: 8 };
+    let mut rng = crate::util::rng::Rng::new(chunk ^ 0xC0DE);
+    SegmentKv {
+        key: KvKey::chunk("test-model", ChunkId(chunk)),
+        shape,
+        emb: Vec::new(),
         k: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
         v: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
     }
@@ -142,11 +183,28 @@ mod tests {
     }
 
     #[test]
+    fn chunk_entry_validation() {
+        let e = test_chunk_entry(1, 8);
+        e.validate().unwrap();
+        assert_eq!(e.bytes(), 4 * 2 * e.shape.kv_elems());
+        // Chunk entries must not carry embeddings...
+        let mut bad = e.clone();
+        bad.emb = vec![0.0; bad.shape.emb_elems()];
+        assert!(bad.validate().is_err());
+        // ...and image entries must.
+        let mut img = test_entry(1, 8);
+        img.emb.clear();
+        assert!(img.validate().is_err());
+    }
+
+    #[test]
     fn key_stems_unique() {
-        let a = KvKey::new("m", ImageId(1)).file_stem();
-        let b = KvKey::new("m", ImageId(2)).file_stem();
-        let c = KvKey::new("m2", ImageId(1)).file_stem();
+        let a = KvKey::image("m", ImageId(1)).file_stem();
+        let b = KvKey::image("m", ImageId(2)).file_stem();
+        let c = KvKey::image("m2", ImageId(1)).file_stem();
+        let d = KvKey::chunk("m", ChunkId(1)).file_stem();
         assert_ne!(a, b);
         assert_ne!(a, c);
+        assert_ne!(a, d, "image/chunk with equal raw ids must not collide");
     }
 }

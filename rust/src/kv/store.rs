@@ -9,10 +9,10 @@
 //!   behind one global mutex. Cross-shard stats aggregate on demand;
 //!   shard-lock contention is counted in [`StoreStats::lock_contention`].
 //! * **Zero-copy device tier** — device entries are held as
-//!   `Arc<ImageKv>`; a device hit is a refcount bump, not a multi-MB
+//!   `Arc<SegmentKv>`; a device hit is a refcount bump, not a multi-MB
 //!   memcpy, and the same `Arc` flows through the transfer engine into
 //!   the linker call sites.
-//! * **Chunked codec** — host/disk bytes use the v2 chunked container
+//! * **Chunked codec** — host/disk bytes use the chunked v3 container
 //!   ([`codec`]), so encode/decode of multi-MB entries fans out across
 //!   the [`ThreadPool`] handed to [`KvStore::with_pool`]. The engine
 //!   hands the store a *dedicated* codec pool so transfer-pool workers
@@ -35,7 +35,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Context};
 
-use super::{codec, ImageKv, KvKey};
+use super::{codec, KvKey, SegmentKv};
 use crate::util::threadpool::ThreadPool;
 use crate::Result;
 
@@ -45,6 +45,20 @@ pub enum Tier {
     Device,
     Host,
     Disk,
+}
+
+/// Outcome of a [`KvStore::evict`] request. The pinned check runs under
+/// the shard lock, so a concurrent `set_pinned` can never interleave
+/// between "observe unpinned" and "remove" (the TOCTOU the old
+/// engine-level check allowed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictOutcome {
+    /// The entry existed (in some tier) and was removed everywhere.
+    Evicted,
+    /// Nothing to remove: the key is resident in no tier.
+    NotFound,
+    /// The entry is pinned; nothing was removed. Unpin first.
+    Pinned,
 }
 
 /// Store configuration.
@@ -139,7 +153,7 @@ impl StoreStats {
 }
 
 struct DeviceEntry {
-    kv: Arc<ImageKv>,
+    kv: Arc<SegmentKv>,
     last_used: u64,
 }
 
@@ -302,11 +316,13 @@ impl KvStore {
         self.shards.len()
     }
 
-    /// FNV-1a over model bytes folded with the image id: cheap (no
-    /// allocation — this runs per image per request) and well spread.
+    /// FNV-1a over model bytes folded with the segment kind + raw id:
+    /// cheap (no allocation — this runs per segment per request) and well
+    /// spread.
     fn shard_index(&self, key: &KvKey) -> usize {
         let mut h = crate::util::rng::fnv1a(key.model.as_bytes());
-        for b in key.image.0.to_le_bytes() {
+        h = (h ^ key.seg.kind_tag() as u64).wrapping_mul(0x100_0000_01b3);
+        for b in key.seg.raw().to_le_bytes() {
             h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
         }
         (h % self.shards.len() as u64) as usize
@@ -334,13 +350,13 @@ impl KvStore {
     /// written through to disk for durability/expiry. Any stale host-tier
     /// copy of the key is dropped — after a later device eviction it must
     /// be *this* upload's bytes that get demoted, never an older version.
-    pub fn put(&self, kv: ImageKv) -> Result<()> {
+    pub fn put(&self, kv: SegmentKv) -> Result<()> {
         self.put_arc(Arc::new(kv))
     }
 
     /// Zero-copy variant of [`KvStore::put`] for callers that keep using
     /// the entry (the transfer engine's write-through of computed misses).
-    pub fn put_arc(&self, kv: Arc<ImageKv>) -> Result<()> {
+    pub fn put_arc(&self, kv: Arc<SegmentKv>) -> Result<()> {
         kv.validate()?;
         let (encoded, rep) = codec::encode_with(&kv, self.codec_pool())?;
         let path = self.cfg.disk_dir.join(format!("{}.mpkv", kv.key.file_stem()));
@@ -490,7 +506,7 @@ impl KvStore {
     /// cache, so latency no longer scales with entry size. Returns the
     /// tier it was found in, or `None` for a miss (absent, expired or
     /// corrupt).
-    pub fn get(&self, key: &KvKey) -> Option<(Arc<ImageKv>, Tier)> {
+    pub fn get(&self, key: &KvKey) -> Option<(Arc<SegmentKv>, Tier)> {
         self.lookup(key, false)
     }
 
@@ -523,7 +539,7 @@ impl KvStore {
     /// a hit counter, `misses`, or `corruptions` — never two of
     /// {hit, miss, corruption} for the same call (expiry additionally
     /// counts `expirations` on its way to the miss).
-    fn lookup(&self, key: &KvKey, for_prefetch: bool) -> Option<(Arc<ImageKv>, Tier)> {
+    fn lookup(&self, key: &KvKey, for_prefetch: bool) -> Option<(Arc<SegmentKv>, Tier)> {
         let shard = self.shard(key);
         // Everything decoded below left the lock at/after this instant; a
         // re-upload landing later must win over our (older) promotion.
@@ -618,10 +634,16 @@ impl KvStore {
         None
     }
 
-    /// Force-expire an entry everywhere (tests / admin / `cache.evict`).
-    /// Clears any pin flag. Returns whether anything was removed.
-    pub fn evict(&self, key: &KvKey) -> bool {
+    /// Expire an entry everywhere (tests / admin / `cache.evict`). The
+    /// pinned check happens under the same shard lock as the removal, so
+    /// a `cache.pin` racing this call either lands first (evict refuses)
+    /// or lands after the entry is gone (pin reports not-resident) — a
+    /// pinned entry can never be evicted.
+    pub fn evict(&self, key: &KvKey) -> EvictOutcome {
         let mut g = self.shard(key).lock();
+        if g.pinned.contains(key) {
+            return EvictOutcome::Pinned;
+        }
         let mut removed = false;
         if let Some(e) = g.device.remove(key) {
             g.device_bytes -= e.kv.bytes();
@@ -637,8 +659,11 @@ impl KvStore {
             let _ = std::fs::remove_file(&d.path);
             removed = true;
         }
-        g.pinned.remove(key);
-        removed
+        if removed {
+            EvictOutcome::Evicted
+        } else {
+            EvictOutcome::NotFound
+        }
     }
 
     /// Bytes resident per tier, summed over shards:
@@ -699,7 +724,7 @@ impl KvStore {
     fn promote(
         &self,
         shard: &Shard,
-        kv: Arc<ImageKv>,
+        kv: Arc<SegmentKv>,
         from: Tier,
         for_prefetch: bool,
         rep: codec::CodecReport,
@@ -826,7 +851,7 @@ impl KvStore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kv::test_entry;
+    use crate::kv::{test_chunk_entry, test_entry};
 
     fn store_cfg(device_cap: usize, ttl_ms: u64, shards: usize, tag: &str) -> KvStore {
         let dir = std::env::temp_dir().join(format!(
@@ -1035,9 +1060,9 @@ mod tests {
             let s = std::sync::Arc::clone(&s);
             handles.push(std::thread::spawn(move || {
                 for i in 0..8u64 {
-                    let key = KvKey::new("test-model", crate::mm::ImageId((i + t) % 8));
+                    let key = KvKey::image("test-model", crate::mm::ImageId((i + t) % 8));
                     let (kv, _) = s.get(&key).unwrap();
-                    assert_eq!(*kv, test_entry(kv.key.image.0, 8));
+                    assert_eq!(*kv, test_entry(kv.key.seg.raw(), 8));
                 }
             }));
         }
@@ -1060,7 +1085,7 @@ mod tests {
         let ops: Vec<u64> = (0..400).collect();
         let s2 = std::sync::Arc::clone(&s);
         pool.map(ops, move |i| {
-            let key = KvKey::new("test-model", crate::mm::ImageId(i % n_keys));
+            let key = KvKey::image("test-model", crate::mm::ImageId(i % n_keys));
             match i % 7 {
                 0 => {
                     s2.put(test_entry(i % n_keys, 8 + (i as usize % 9))).unwrap();
@@ -1105,12 +1130,12 @@ mod tests {
         let s = store(1 << 30, 60_000);
         let mut used = std::collections::HashSet::new();
         for i in 0..64 {
-            used.insert(s.shard_index(&KvKey::new("test-model", crate::mm::ImageId(i))));
+            used.insert(s.shard_index(&KvKey::image("test-model", crate::mm::ImageId(i))));
         }
         assert!(used.len() >= 3, "64 keys should land on ≥3 of 4 shards, got {used:?}");
         // Also across models, not only images.
-        let a = KvKey::new("model-a", crate::mm::ImageId(1));
-        let b = KvKey::new("model-b", crate::mm::ImageId(1));
+        let a = KvKey::image("model-a", crate::mm::ImageId(1));
+        let b = KvKey::image("model-b", crate::mm::ImageId(1));
         assert!(s.shard_index(&a) < s.shard_count());
         assert!(s.shard_index(&b) < s.shard_count());
     }
@@ -1143,7 +1168,7 @@ mod tests {
         // Warm again, then evict before use: that's wasted work.
         s.drop_device_for_test(&e.key);
         assert!(s.prefetch(&e.key));
-        assert!(s.evict(&e.key));
+        assert_eq!(s.evict(&e.key), EvictOutcome::Evicted);
         let st = s.stats();
         assert_eq!(st.prefetch_wasted, 1);
         // Absent key: nothing to warm.
@@ -1188,7 +1213,7 @@ mod tests {
         assert_eq!(info.tier, Tier::Device);
         assert!(info.pinned);
         // Unknown keys can't be pinned.
-        assert!(!s.set_pinned(&KvKey::new("test-model", crate::mm::ImageId(999)), true));
+        assert!(!s.set_pinned(&KvKey::image("test-model", crate::mm::ImageId(999)), true));
     }
 
     #[test]
@@ -1220,16 +1245,78 @@ mod tests {
         assert_eq!(s.stats().expirations, 0);
     }
 
+    /// Satellite regression: the pinned check lives inside `evict` under
+    /// the shard lock. A pinned entry is refused (and stays fully
+    /// resident); after unpinning, the same call removes it everywhere.
+    /// Before the fix the check-then-evict lived in the engine, so a
+    /// concurrent `cache.pin` between the two could evict a pinned entry.
     #[test]
-    fn evict_reports_and_clears_pin() {
+    fn evict_refuses_pinned_under_the_shard_lock() {
         let s = store(1 << 30, 60_000);
         let e = test_entry(23, 8);
         s.put(e.clone()).unwrap();
         assert!(s.set_pinned(&e.key, true));
-        assert!(s.evict(&e.key));
-        assert!(!s.is_pinned(&e.key));
+        assert_eq!(s.evict(&e.key), EvictOutcome::Pinned);
+        assert!(s.is_pinned(&e.key), "refused evict must not clear the pin");
+        assert!(s.get(&e.key).is_some(), "pinned entry must stay resident");
+        assert!(s.set_pinned(&e.key, false));
+        assert_eq!(s.evict(&e.key), EvictOutcome::Evicted);
         assert!(s.get(&e.key).is_none());
-        assert!(!s.evict(&e.key));
+        assert_eq!(s.evict(&e.key), EvictOutcome::NotFound);
+    }
+
+    /// Concurrent pin/evict hammering: an entry observed as pinned must
+    /// never be missing. Each round pins, races an evict against the pin
+    /// flag, then inspects.
+    #[test]
+    fn evict_and_pin_race_never_loses_pinned_entries() {
+        let s = std::sync::Arc::new(store(1 << 30, 60_000));
+        let e = test_entry(31, 8);
+        s.put(e.clone()).unwrap();
+        let key = e.key.clone();
+        let s2 = std::sync::Arc::clone(&s);
+        let k2 = key.clone();
+        let evictor = std::thread::spawn(move || {
+            for _ in 0..200 {
+                let _ = s2.evict(&k2);
+            }
+        });
+        for i in 0..200 {
+            s.set_pinned(&key, true);
+            // While the flag is set, the entry must be resident (a
+            // successful pin implies residency, and evict refuses pinned).
+            if s.is_pinned(&key) {
+                assert!(s.get(&key).is_some(), "pinned entry vanished (round {i})");
+            }
+            s.set_pinned(&key, false);
+            if s.get(&key).is_none() {
+                s.put(test_entry(31, 8)).unwrap();
+            }
+        }
+        evictor.join().unwrap();
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn chunk_entries_roundtrip_all_tiers() {
+        let s = store(1 << 30, 60_000);
+        let e = test_chunk_entry(40, 12);
+        s.put(e.clone()).unwrap();
+        let (got, tier) = s.get(&e.key).unwrap();
+        assert_eq!(tier, Tier::Device);
+        assert_eq!(*got, e);
+        // Image entry with the same raw id is a distinct key.
+        let img = test_entry(40, 12);
+        s.put(img.clone()).unwrap();
+        assert_eq!(*s.get(&e.key).unwrap().0, e);
+        assert_eq!(*s.get(&img.key).unwrap().0, img);
+        // Disk round trip (chunk container has no embeddings).
+        s.drop_device_for_test(&e.key);
+        let (got2, tier2) = s.get(&e.key).unwrap();
+        assert_eq!(tier2, Tier::Disk);
+        assert_eq!(*got2, e);
+        assert!(got2.emb.is_empty());
+        s.check_invariants().unwrap();
     }
 
     #[test]

@@ -1,22 +1,28 @@
 //! Parallel KV transfer engine — paper Fig. 6.
 //!
-//! When a query references `n` images, the KV caches of hits are *loaded*
-//! (host/disk tiers, pool threads) while the caches of misses (expired /
-//! never uploaded) are *computed* (PJRT, which must stay on the caller's
-//! device thread — see `runtime`). The two lanes overlap; the report
-//! records both the overlapped wall time and the serial estimate so the
-//! ablation bench can show the win.
+//! When a query references `n` reusable segments (images, cached text
+//! chunks), the KV caches of hits are *loaded* (host/disk tiers, pool
+//! threads) while the caches of misses (expired / never uploaded) are
+//! *computed* (PJRT, which must stay on the caller's device thread — see
+//! `runtime`). The two lanes overlap; the report records both the
+//! overlapped wall time and the serial estimate so the ablation bench can
+//! show the win.
 //!
-//! Entries travel as `Arc<ImageKv>` end to end: a device-tier hit is a
+//! Entries travel as `Arc<SegmentKv>` end to end: a device-tier hit is a
 //! refcount bump out of the store, and the same allocation reaches the
-//! linker call sites — the fetch path never deep-copies KV bytes.
+//! linker call sites — the fetch path never deep-copies KV bytes. A
+//! prompt referencing the same segment twice fetches it **once**: keys
+//! are deduplicated and the shared `Arc` fans back out to every span, so
+//! a miss is computed exactly once (no duplicate PJRT encodes, no racing
+//! write-throughs).
 //!
 //! The engine also drives the **prefetch lane**: between decode rounds
-//! the serving pipeline peeks the image refs of queued-but-not-admitted
+//! the serving pipeline peeks the segment refs of queued-but-not-admitted
 //! requests and calls [`TransferEngine::prefetch`], which warms host/disk
 //! entries toward the device tier on idle pool workers so that by
 //! admission time the fetch sees device hits.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -24,14 +30,18 @@ use std::time::Instant;
 use anyhow::anyhow;
 
 use super::store::{KvStore, Tier};
-use super::{ImageKv, KvKey};
+use super::{KvKey, SegmentKv};
 use crate::util::threadpool::{ThreadPool, WaitGroup};
 use crate::Result;
 
-/// Outcome + timing of one fetch batch.
+/// Outcome + timing of one fetch batch. Hit/miss counters are per
+/// *unique* key; `n_segments` counts the spans requested.
 #[derive(Debug, Clone, Default)]
 pub struct TransferReport {
-    pub n_images: usize,
+    /// Segment references requested (spans, duplicates included).
+    pub n_segments: usize,
+    /// Unique keys actually fetched.
+    pub n_unique: usize,
     pub device_hits: usize,
     pub host_hits: usize,
     pub disk_hits: usize,
@@ -123,20 +133,53 @@ impl TransferEngine {
 
     /// Fetch every key, loading hits in parallel with computing misses.
     ///
-    /// `compute` is invoked on the caller thread for each missing key (PJRT
-    /// handles are not `Send`); computed entries are written through to the
-    /// store so subsequent requests hit.
+    /// `compute` is invoked on the caller thread for each missing *unique*
+    /// key (PJRT handles are not `Send`); computed entries are written
+    /// through to the store so subsequent requests hit. The returned
+    /// vector is index-aligned with `keys`; duplicate keys share one
+    /// `Arc`.
     pub fn fetch<F>(
         &self,
         store: &Arc<KvStore>,
         keys: &[KvKey],
-        mut compute: F,
-    ) -> Result<(Vec<Arc<ImageKv>>, TransferReport)>
+        compute: F,
+    ) -> Result<(Vec<Arc<SegmentKv>>, TransferReport)>
     where
-        F: FnMut(&KvKey) -> Result<ImageKv>,
+        F: FnMut(&KvKey) -> Result<SegmentKv>,
+    {
+        // Satellite fix: dedup before planning. Without this, a prompt
+        // referencing one image twice would encode the miss twice and
+        // race two write-throughs of the same key.
+        let mut unique: Vec<KvKey> = Vec::new();
+        let mut slot_of: HashMap<KvKey, usize> = HashMap::new();
+        let mut fanout: Vec<usize> = Vec::with_capacity(keys.len());
+        for key in keys {
+            let slot = *slot_of.entry(key.clone()).or_insert_with(|| {
+                unique.push(key.clone());
+                unique.len() - 1
+            });
+            fanout.push(slot);
+        }
+
+        let (fetched, mut report) = self.fetch_unique(store, &unique, compute)?;
+        report.n_segments = keys.len();
+        report.n_unique = unique.len();
+        let out = fanout.iter().map(|&slot| Arc::clone(&fetched[slot])).collect();
+        Ok((out, report))
+    }
+
+    /// The overlapped load ∥ compute core, over already-deduplicated keys.
+    fn fetch_unique<F>(
+        &self,
+        store: &Arc<KvStore>,
+        keys: &[KvKey],
+        mut compute: F,
+    ) -> Result<(Vec<Arc<SegmentKv>>, TransferReport)>
+    where
+        F: FnMut(&KvKey) -> Result<SegmentKv>,
     {
         let t_all = Instant::now();
-        let mut report = TransferReport { n_images: keys.len(), ..Default::default() };
+        let mut report = TransferReport::default();
 
         // Plan: peek tiers without promoting.
         let mut load_keys: Vec<(usize, KvKey)> = Vec::new();
@@ -148,7 +191,7 @@ impl TransferEngine {
             }
         }
 
-        let results: Arc<Mutex<Vec<Option<(Arc<ImageKv>, Tier)>>>> =
+        let results: Arc<Mutex<Vec<Option<(Arc<SegmentKv>, Tier)>>>> =
             Arc::new(Mutex::new((0..keys.len()).map(|_| None).collect()));
 
         // Load lane (pool threads). With exactly one hit and nothing to
@@ -185,7 +228,7 @@ impl TransferEngine {
 
         // Compute lane (caller thread) — overlaps with the pool loads.
         let t_compute = Instant::now();
-        let mut computed: Vec<(usize, Arc<ImageKv>)> = Vec::new();
+        let mut computed: Vec<(usize, Arc<SegmentKv>)> = Vec::new();
         for (idx, key) in &miss_keys {
             let kv = compute(key)?;
             kv.validate()?;
@@ -206,7 +249,7 @@ impl TransferEngine {
         }
 
         // Assemble in request order.
-        let mut out: Vec<Option<Arc<ImageKv>>> = (0..keys.len()).map(|_| None).collect();
+        let mut out: Vec<Option<Arc<SegmentKv>>> = (0..keys.len()).map(|_| None).collect();
         {
             let mut g = results.lock().unwrap();
             for (i, slot) in g.iter_mut().enumerate() {
@@ -292,7 +335,7 @@ mod tests {
     #[test]
     fn all_hits() {
         let (store, eng) = setup(None);
-        let keys: Vec<KvKey> = (0..4).map(|i| KvKey::new("test-model", ImageId(i))).collect();
+        let keys: Vec<KvKey> = (0..4).map(|i| KvKey::image("test-model", ImageId(i))).collect();
         for i in 0..4 {
             store.put(test_entry(i, 8)).unwrap();
         }
@@ -302,8 +345,10 @@ mod tests {
         assert_eq!(out.len(), 4);
         assert_eq!(rep.device_hits, 4);
         assert_eq!(rep.misses, 0);
+        assert_eq!(rep.n_segments, 4);
+        assert_eq!(rep.n_unique, 4);
         for (i, kv) in out.iter().enumerate() {
-            assert_eq!(kv.key.image, ImageId(i as u64));
+            assert_eq!(kv.key.seg.raw(), i as u64);
         }
     }
 
@@ -321,16 +366,44 @@ mod tests {
         );
     }
 
+    /// Satellite regression: a request naming the same segment twice must
+    /// compute/load it once and fan the shared Arc out to both spans.
+    #[test]
+    fn duplicate_keys_fetch_once_and_share_the_arc() {
+        let (store, eng) = setup(None);
+        let key = KvKey::image("test-model", ImageId(3));
+        let keys = vec![key.clone(), key.clone(), key.clone()];
+        // Miss path: exactly one compute despite three references.
+        let mut computes = 0;
+        let (out, rep) = eng
+            .fetch(&store, &keys, |k| {
+                computes += 1;
+                Ok(test_entry(k.seg.raw(), 8))
+            })
+            .unwrap();
+        assert_eq!(computes, 1, "duplicate miss must be encoded exactly once");
+        assert_eq!(out.len(), 3);
+        assert!(Arc::ptr_eq(&out[0], &out[1]) && Arc::ptr_eq(&out[1], &out[2]));
+        assert_eq!(rep.misses, 1);
+        assert_eq!(rep.n_segments, 3);
+        assert_eq!(rep.n_unique, 1);
+        // Hit path: one device hit, not three.
+        let (out2, rep2) = eng.fetch(&store, &keys, |_| panic!("hit expected")).unwrap();
+        assert_eq!(rep2.device_hits, 1);
+        assert_eq!(rep2.misses, 0);
+        assert!(Arc::ptr_eq(&out2[0], &out2[2]));
+    }
+
     #[test]
     fn misses_computed_and_written_through() {
         let (store, eng) = setup(None);
-        let keys: Vec<KvKey> = (0..3).map(|i| KvKey::new("test-model", ImageId(i))).collect();
+        let keys: Vec<KvKey> = (0..3).map(|i| KvKey::image("test-model", ImageId(i))).collect();
         store.put(test_entry(1, 8)).unwrap();
         let mut computed = Vec::new();
         let (out, rep) = eng
             .fetch(&store, &keys, |k| {
-                computed.push(k.image.0);
-                Ok(test_entry(k.image.0, 8))
+                computed.push(k.seg.raw());
+                Ok(test_entry(k.seg.raw(), 8))
             })
             .unwrap();
         assert_eq!(out.len(), 3);
@@ -345,13 +418,15 @@ mod tests {
     #[test]
     fn order_preserved_with_mixed_hits() {
         let (store, eng) = setup(None);
-        let keys: Vec<KvKey> = (0..6).map(|i| KvKey::new("test-model", ImageId(i))).collect();
+        let keys: Vec<KvKey> = (0..6).map(|i| KvKey::image("test-model", ImageId(i))).collect();
         for i in [0u64, 2, 4] {
             store.put(test_entry(i, 8)).unwrap();
         }
-        let (out, _) = eng.fetch(&store, &keys, |k| Ok(test_entry(k.image.0, 8))).unwrap();
+        let (out, _) = eng
+            .fetch(&store, &keys, |k| Ok(test_entry(k.seg.raw(), 8)))
+            .unwrap();
         for (i, kv) in out.iter().enumerate() {
-            assert_eq!(kv.key.image.0, i as u64);
+            assert_eq!(kv.key.seg.raw(), i as u64);
         }
     }
 
@@ -359,7 +434,7 @@ mod tests {
     fn prefetch_warms_lower_tiers_to_device() {
         // Device-resident keys dispatch nothing (cheap peek).
         let (store, eng) = setup_shards(None, 4);
-        let keys: Vec<KvKey> = (0..6).map(|i| KvKey::new("test-model", ImageId(i))).collect();
+        let keys: Vec<KvKey> = (0..6).map(|i| KvKey::image("test-model", ImageId(i))).collect();
         for i in 0..6 {
             store.put(test_entry(i, 8)).unwrap();
         }
@@ -417,13 +492,14 @@ mod tests {
         // should take ~max(load, compute), the serial one ~sum.
         let (store, eng) = setup(Some(2e6)); // ~2 MB/s => entry of ~5KB ≈ ms; use many
         let n_hit = 4u64;
-        let keys: Vec<KvKey> = (0..n_hit + 1).map(|i| KvKey::new("test-model", ImageId(i))).collect();
+        let keys: Vec<KvKey> =
+            (0..n_hit + 1).map(|i| KvKey::image("test-model", ImageId(i))).collect();
         for i in 0..n_hit {
             store.put(test_entry(i, 256)).unwrap(); // bigger entries
         }
         // Push hits out of RAM tiers so loads go to (throttled) disk.
         for i in 0..n_hit {
-            let key = KvKey::new("test-model", ImageId(i));
+            let key = KvKey::image("test-model", ImageId(i));
             store.evict(&key);
         }
         // Re-write to disk only: easiest is put + manual demote via evict of
@@ -439,7 +515,7 @@ mod tests {
         let (_, rep_par) = eng
             .fetch(&store, &keys, |k| {
                 std::thread::sleep(compute_cost);
-                Ok(test_entry(k.image.0, 256))
+                Ok(test_entry(k.seg.raw(), 256))
             })
             .unwrap();
         assert_eq!(rep_par.misses, 1);

@@ -5,8 +5,9 @@
 //!             [--queue-bound 64] [--max-batch 8] [--deadline-ms 30000]
 //!             [--conn-threads 8] [--kv-blocks 4096] [--block-tokens 16]
 //! mpic call   --json '{"v":2,"op":"stats"}' [--addr 127.0.0.1:7401]
-//! mpic run    [--dataset mmdu|sparkles] [--policy mpic-32] [--convs N] [--images-min A --images-max B]
+//! mpic run    [--dataset mmdu|sparkles|rag] [--policy mpic-32] [--convs N] [--images-min A --images-max B]
 //! mpic upload --user ID --handle IMAGE#NAME
+//! mpic upload-chunk --handle CHUNK#NAME --text 'document text'
 //! mpic analyze [--model mpic-sim-a]        # quick Fig.4-style attention report
 //! ```
 //!
@@ -82,10 +83,19 @@ fn run() -> anyhow::Result<()> {
             println!("uploaded {handle} -> image {:#x}", image.0);
         }
 
+        "upload-chunk" => {
+            let engine = engine_from(&args)?;
+            let handle = args.get("handle").context("--handle required (CHUNK#NAME)")?;
+            let text = args.get("text").context("--text required")?;
+            let chunk = engine.upload_chunk(handle, text)?;
+            println!("uploaded {handle} -> chunk {:#x} (reference it as {handle} in prompts)", chunk.0);
+        }
+
         "run" => {
             let engine = engine_from(&args)?;
             let dataset = match args.str_or("dataset", "mmdu").as_str() {
                 "sparkles" => Dataset::Sparkles,
+                "rag" => Dataset::Rag,
                 _ => Dataset::Mmdu,
             };
             let policy = Policy::parse(&args.str_or("policy", "mpic-32"))?;
@@ -98,7 +108,11 @@ fn run() -> anyhow::Result<()> {
                 seed: args.u64_or("seed", 0xDA7A)?,
             };
             let convs = generate(&spec);
-            // Upload every conversation's images first (workflow ①).
+            // Upload every conversation's images and every shared RAG
+            // chunk first (workflow ①).
+            for (handle, text) in mpic::workload::rag_chunk_pool(&spec) {
+                engine.upload_chunk(&handle, &text)?;
+            }
             for c in &convs {
                 for (i, img) in c.images.iter().enumerate() {
                     let handle = format!("IMAGE#U{}N{i}", c.user.0);
@@ -181,14 +195,15 @@ fn run() -> anyhow::Result<()> {
         }
 
         _ => {
-            println!("usage: mpic <serve|call|run|upload|analyze> [options]");
-            println!("  serve   --addr HOST:PORT --model NAME --artifacts DIR");
-            println!("          --queue-bound N --max-batch N --deadline-ms MS --conn-threads N");
-            println!("          --kv-blocks N --block-tokens N");
-            println!("  call    --json '{{\"v\":2,\"op\":\"stats\"}}' --addr HOST:PORT");
-            println!("  run     --dataset mmdu|sparkles --policy prefix|full-reuse|cacheblend-R|mpic-K --convs N");
-            println!("  upload  --user ID --handle IMAGE#NAME");
-            println!("  analyze --model NAME");
+            println!("usage: mpic <serve|call|run|upload|upload-chunk|analyze> [options]");
+            println!("  serve        --addr HOST:PORT --model NAME --artifacts DIR");
+            println!("               --queue-bound N --max-batch N --deadline-ms MS --conn-threads N");
+            println!("               --kv-blocks N --block-tokens N");
+            println!("  call         --json '{{\"v\":2,\"op\":\"stats\"}}' --addr HOST:PORT");
+            println!("  run          --dataset mmdu|sparkles|rag --policy prefix|full-reuse|cacheblend-R|mpic-K --convs N");
+            println!("  upload       --user ID --handle IMAGE#NAME");
+            println!("  upload-chunk --handle CHUNK#NAME --text 'document text'");
+            println!("  analyze      --model NAME");
         }
     }
     Ok(())

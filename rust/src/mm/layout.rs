@@ -1,22 +1,48 @@
 //! Linked-sequence layout: token-level view of a multimodal prompt.
 //!
 //! "Linked" is the paper's linker metaphor: each token of the prompt —
-//! text or image — is assigned a *linked position* (its true position in
-//! the final sequence) and a *cache slot* (where its KV row lives in the
-//! bucketed cache tensor). For this layout slots equal positions; the
-//! bucket padding beyond `len()` is the slack the selective artifacts mask
-//! out.
+//! text, image or cached chunk — is assigned a *linked position* (its true
+//! position in the final sequence) and a *cache slot* (where its KV row
+//! lives in the bucketed cache tensor). For this layout slots equal
+//! positions; the bucket padding beyond `len()` is the slack the selective
+//! artifacts mask out.
+//!
+//! Reusable segments (images *and* chunks) are recorded as
+//! [`ReuseSpan`]s: the `[lo, hi)` slot ranges whose KV rows can be spliced
+//! from the store instead of recomputed.
 
 use super::tokenizer::{Tokenizer, BOS};
-use super::{ImageId, Prompt, Segment};
+use super::{ChunkId, ImageId, Prompt, Segment, SegmentId};
 
 /// What occupies one linked slot.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum TokenKind {
-    /// Text token with its vocabulary id.
+    /// Free text token with its vocabulary id (always recomputed).
     Text(i32),
     /// The `rel`-th token of image `id`.
     Image { id: ImageId, rel: u32 },
+    /// The `rel`-th token of cached chunk `id`, with its vocabulary id
+    /// (needed when a selection policy recomputes it).
+    Chunk { id: ChunkId, rel: u32, tok: i32 },
+}
+
+/// `[lo, hi)` slot range of one reusable segment, in prompt order
+/// (repeats allowed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReuseSpan {
+    pub seg: SegmentId,
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl ReuseSpan {
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hi == self.lo
+    }
 }
 
 /// Token-level layout of one prompt.
@@ -24,14 +50,16 @@ pub enum TokenKind {
 pub struct LinkedLayout {
     /// Real tokens in linked order; index == linked position == cache slot.
     pub tokens: Vec<TokenKind>,
-    /// `[lo, hi)` span of every image, in prompt order (repeats allowed).
-    pub image_spans: Vec<(ImageId, usize, usize)>,
+    /// Reusable-segment spans (images and chunks), in prompt order.
+    pub reuse_spans: Vec<ReuseSpan>,
     /// Length of the leading system-prompt span (incl. BOS).
     pub sys_len: usize,
 }
 
 impl LinkedLayout {
-    /// Lay out `[BOS] system_prompt segments...`.
+    /// Lay out `[BOS] system_prompt segments...`. Chunk segments must be
+    /// *resolved* (carry their canonical tokens) — the engine resolves
+    /// handles against its chunk registry before building the layout.
     pub fn build(
         prompt: &Prompt,
         tokenizer: &Tokenizer,
@@ -44,7 +72,7 @@ impl LinkedLayout {
         }
         let sys_len = tokens.len();
 
-        let mut image_spans = Vec::new();
+        let mut reuse_spans = Vec::new();
         for seg in &prompt.segments {
             match seg {
                 Segment::Text(s) => {
@@ -57,11 +85,26 @@ impl LinkedLayout {
                     for rel in 0..img_tokens {
                         tokens.push(TokenKind::Image { id: *id, rel: rel as u32 });
                     }
-                    image_spans.push((*id, lo, tokens.len()));
+                    reuse_spans.push(ReuseSpan {
+                        seg: SegmentId::Image(*id),
+                        lo,
+                        hi: tokens.len(),
+                    });
+                }
+                Segment::Chunk(c) => {
+                    let lo = tokens.len();
+                    for (rel, tok) in c.tokens.iter().enumerate() {
+                        tokens.push(TokenKind::Chunk { id: c.id, rel: rel as u32, tok: *tok });
+                    }
+                    reuse_spans.push(ReuseSpan {
+                        seg: SegmentId::Chunk(c.id),
+                        lo,
+                        hi: tokens.len(),
+                    });
                 }
             }
         }
-        LinkedLayout { tokens, image_spans, sys_len }
+        LinkedLayout { tokens, reuse_spans, sys_len }
     }
 
     pub fn len(&self) -> usize {
@@ -73,12 +116,13 @@ impl LinkedLayout {
     }
 
     /// Kind codes padded to `bucket`: 0 pad, 1 text, 2 image (mirrors
-    /// `model.make_sink_bias`).
+    /// `model.make_sink_bias`). Chunk tokens are text content, so they
+    /// take the text code — exactly what their canonical prefill saw.
     pub fn kinds(&self, bucket: usize) -> Vec<u8> {
         let mut out = vec![0u8; bucket];
         for (i, t) in self.tokens.iter().enumerate().take(bucket) {
             out[i] = match t {
-                TokenKind::Text(_) => 1,
+                TokenKind::Text(_) | TokenKind::Chunk { .. } => 1,
                 TokenKind::Image { .. } => 2,
             };
         }
@@ -96,7 +140,8 @@ impl LinkedLayout {
         out
     }
 
-    /// Indices of all text tokens (the always-recompute set).
+    /// Indices of all free-text tokens (the always-recompute set). Chunk
+    /// tokens are *not* free text: their KV is reusable.
     pub fn text_indices(&self) -> Vec<usize> {
         self.tokens
             .iter()
@@ -106,26 +151,27 @@ impl LinkedLayout {
             .collect()
     }
 
-    /// Indices of the first `k` tokens of every image span (MPIC-k).
-    pub fn image_head_indices(&self, k: usize) -> Vec<usize> {
+    /// Indices of the first `k` tokens of every reuse span (MPIC-k: the
+    /// attention-sink heads of images *and* chunks are recomputed).
+    pub fn reuse_head_indices(&self, k: usize) -> Vec<usize> {
         let mut out = Vec::new();
-        for &(_, lo, hi) in &self.image_spans {
-            out.extend(lo..hi.min(lo + k));
+        for span in &self.reuse_spans {
+            out.extend(span.lo..span.hi.min(span.lo + k));
         }
         out
     }
 
-    /// All image-token indices.
-    pub fn image_indices(&self) -> Vec<usize> {
+    /// All reusable-segment token indices (image and chunk tokens).
+    pub fn reuse_indices(&self) -> Vec<usize> {
         self.tokens
             .iter()
             .enumerate()
-            .filter(|(_, t)| matches!(t, TokenKind::Image { .. }))
+            .filter(|(_, t)| !matches!(t, TokenKind::Text(_)))
             .map(|(i, _)| i)
             .collect()
     }
 
-    /// Token count contributed by text (incl. BOS/system prompt).
+    /// Token count contributed by free text (incl. BOS/system prompt).
     pub fn text_len(&self) -> usize {
         self.text_indices().len()
     }
@@ -134,7 +180,7 @@ impl LinkedLayout {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mm::UserId;
+    use crate::mm::{ChunkRef, UserId};
 
     fn layout(prompt: &Prompt) -> LinkedLayout {
         let t = Tokenizer::new(4096);
@@ -150,13 +196,13 @@ mod tests {
             .image(ImageId(11))
             .text("compare them");
         let l = layout(&p);
-        assert_eq!(l.image_spans.len(), 2);
+        assert_eq!(l.reuse_spans.len(), 2);
         assert_eq!(l.sys_len, 6); // BOS + 5 words
-        let (id0, lo0, hi0) = l.image_spans[0];
-        assert_eq!(id0, ImageId(10));
-        assert_eq!(hi0 - lo0, 8);
+        let span0 = l.reuse_spans[0];
+        assert_eq!(span0.seg, SegmentId::Image(ImageId(10)));
+        assert_eq!(span0.len(), 8);
         // Text before first image: sys + "look at".
-        assert_eq!(lo0, 6 + 2);
+        assert_eq!(span0.lo, 6 + 2);
         assert!(matches!(l.tokens[0], TokenKind::Text(BOS)));
     }
 
@@ -167,12 +213,12 @@ mod tests {
         let bucket = 32;
         let kinds = l.kinds(bucket);
         let rel = l.img_rel(bucket);
-        let (_, lo, hi) = l.image_spans[0];
-        assert!(kinds[..lo].iter().all(|&k| k == 1));
-        assert!(kinds[lo..hi].iter().all(|&k| k == 2));
-        assert!(kinds[hi..].iter().all(|&k| k == 0));
-        assert_eq!(rel[lo], 0);
-        assert_eq!(rel[hi - 1], 7);
+        let span = l.reuse_spans[0];
+        assert!(kinds[..span.lo].iter().all(|&k| k == 1));
+        assert!(kinds[span.lo..span.hi].iter().all(|&k| k == 2));
+        assert!(kinds[span.hi..].iter().all(|&k| k == 0));
+        assert_eq!(rel[span.lo], 0);
+        assert_eq!(rel[span.hi - 1], 7);
     }
 
     #[test]
@@ -180,21 +226,60 @@ mod tests {
         let p = Prompt::new(UserId(1)).text("x y").image(ImageId(1)).image(ImageId(2)).text("z");
         let l = layout(&p);
         let text = l.text_indices();
-        let heads = l.image_head_indices(3);
+        let heads = l.reuse_head_indices(3);
         assert_eq!(heads.len(), 6);
-        assert_eq!(l.image_indices().len(), 16);
+        assert_eq!(l.reuse_indices().len(), 16);
         assert_eq!(text.len() + 16, l.len());
         // Heads are the first 3 of each span.
-        assert_eq!(heads[0], l.image_spans[0].1);
-        assert_eq!(heads[3], l.image_spans[1].1);
+        assert_eq!(heads[0], l.reuse_spans[0].lo);
+        assert_eq!(heads[3], l.reuse_spans[1].lo);
     }
 
     #[test]
     fn same_image_twice_gets_two_spans() {
         let p = Prompt::new(UserId(1)).image(ImageId(7)).text("mid").image(ImageId(7));
         let l = layout(&p);
-        assert_eq!(l.image_spans.len(), 2);
-        assert_eq!(l.image_spans[0].0, l.image_spans[1].0);
-        assert_ne!(l.image_spans[0].1, l.image_spans[1].1);
+        assert_eq!(l.reuse_spans.len(), 2);
+        assert_eq!(l.reuse_spans[0].seg, l.reuse_spans[1].seg);
+        assert_ne!(l.reuse_spans[0].lo, l.reuse_spans[1].lo);
+    }
+
+    #[test]
+    fn chunk_segments_get_reuse_spans_with_token_ids() {
+        let t = Tokenizer::new(4096);
+        let toks = t.encode("shared reference document about the harbour festival");
+        let n = toks.len();
+        let p = Prompt::new(UserId(1))
+            .text("using")
+            .chunk(ChunkRef::resolved(ChunkId(5), toks.clone()))
+            .text("answer this")
+            .image(ImageId(9));
+        let l = layout(&p);
+        assert_eq!(l.reuse_spans.len(), 2);
+        let chunk_span = l.reuse_spans[0];
+        assert_eq!(chunk_span.seg, SegmentId::Chunk(ChunkId(5)));
+        assert_eq!(chunk_span.len(), n);
+        // Chunk tokens carry their canonical vocab ids and relative
+        // positions, and count as kind=1 (text) for the sink bias.
+        for (rel, slot) in (chunk_span.lo..chunk_span.hi).enumerate() {
+            match l.tokens[slot] {
+                TokenKind::Chunk { id, rel: r, tok } => {
+                    assert_eq!(id, ChunkId(5));
+                    assert_eq!(r as usize, rel);
+                    assert_eq!(tok, toks[rel]);
+                }
+                other => panic!("slot {slot} is {other:?}, expected chunk token"),
+            }
+        }
+        let kinds = l.kinds(l.len());
+        assert!(kinds[chunk_span.lo..chunk_span.hi].iter().all(|&k| k == 1));
+        // Chunk tokens are reusable, not free text.
+        assert!(l.text_indices().iter().all(|&i| i < chunk_span.lo || i >= chunk_span.hi));
+        assert_eq!(l.reuse_indices().len(), n + 8);
+        // MPIC-k heads cover the chunk head too.
+        let heads = l.reuse_head_indices(2);
+        assert!(heads.contains(&chunk_span.lo));
+        assert!(heads.contains(&(chunk_span.lo + 1)));
+        assert_eq!(heads.len(), 4);
     }
 }

@@ -1,18 +1,23 @@
 //! Multimodal prompt model (substrate S8).
 //!
-//! A prompt is a sequence of [`Segment`]s — text spans and image
-//! references — exactly the interleaved structure of paper Fig. 1. This
-//! module tokenizes text deterministically, lays the prompt out as a
-//! *linked sequence* (every token gets a linked position and a cache slot),
-//! and builds the per-key sink-bias vector (mirroring
+//! A prompt is a sequence of [`Segment`]s — text spans, image references
+//! and *cached text chunks* (RAG documents, repeated boilerplate) — the
+//! interleaved structure of paper Fig. 1 extended to the MRAG workloads of
+//! §4.2. This module tokenizes text deterministically, lays the prompt out
+//! as a *linked sequence* (every token gets a linked position and a cache
+//! slot), and builds the per-key sink-bias vector (mirroring
 //! `python/compile/model.py::make_sink_bias`).
+//!
+//! Images and chunks are both **position-independent reusable segments**
+//! ([`SegmentId`]): their KV is computed once at canonical positions
+//! `0..n` and spliced at whatever linked positions a prompt places them.
 
 pub mod bias;
 pub mod layout;
 pub mod tokenizer;
 
 pub use bias::make_sink_bias;
-pub use layout::{LinkedLayout, TokenKind};
+pub use layout::{LinkedLayout, ReuseSpan, TokenKind};
 pub use tokenizer::Tokenizer;
 
 /// Stable identifier of an uploaded or retrieved image.
@@ -26,15 +31,110 @@ impl ImageId {
     }
 }
 
+/// Stable identifier of an uploaded text chunk (a RAG document, a shared
+/// context block). Content-addressed from its handle, like [`ImageId`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ChunkId(pub u64);
+
+impl ChunkId {
+    /// Derive an id from a human-readable handle, e.g. `CHUNK#DOC1`.
+    pub fn from_handle(handle: &str) -> ChunkId {
+        ChunkId(crate::util::rng::fnv1a(handle.as_bytes()))
+    }
+}
+
+/// A position-independent reusable segment: the unit the KV cache stores,
+/// fetches and splices. Image KV comes from the vision encoder; chunk KV
+/// comes from a canonical text-only prefill at positions `0..n`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SegmentId {
+    Image(ImageId),
+    Chunk(ChunkId),
+}
+
+impl SegmentId {
+    /// The raw 64-bit identity (unique only within a kind).
+    pub fn raw(&self) -> u64 {
+        match self {
+            SegmentId::Image(id) => id.0,
+            SegmentId::Chunk(id) => id.0,
+        }
+    }
+
+    /// One-byte kind discriminant (stable across the codec/store).
+    pub fn kind_tag(&self) -> u8 {
+        match self {
+            SegmentId::Image(_) => b'i',
+            SegmentId::Chunk(_) => b'c',
+        }
+    }
+
+    pub fn kind_str(&self) -> &'static str {
+        match self {
+            SegmentId::Image(_) => "image",
+            SegmentId::Chunk(_) => "chunk",
+        }
+    }
+
+    pub fn as_image(&self) -> Option<ImageId> {
+        match self {
+            SegmentId::Image(id) => Some(*id),
+            SegmentId::Chunk(_) => None,
+        }
+    }
+
+    pub fn as_chunk(&self) -> Option<ChunkId> {
+        match self {
+            SegmentId::Chunk(id) => Some(*id),
+            SegmentId::Image(_) => None,
+        }
+    }
+}
+
 /// Stable identifier of a user (Static Library namespace).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct UserId(pub u64);
+
+/// A reference to a cached text chunk inside a prompt.
+///
+/// `tokens` is the chunk's canonical token stream, shared behind an `Arc`
+/// so resolving/cloning a reference on the serving hot path is a refcount
+/// bump, not an O(tokens) copy. References built from handles (e.g. by
+/// [`Prompt::parse`]) start *unresolved* (empty tokens); the engine
+/// resolves them against its chunk registry before layout, so the linked
+/// layout always sees the canonical token count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkRef {
+    pub id: ChunkId,
+    pub tokens: std::sync::Arc<Vec<i32>>,
+}
+
+impl ChunkRef {
+    pub fn unresolved(id: ChunkId) -> ChunkRef {
+        ChunkRef { id, tokens: std::sync::Arc::new(Vec::new()) }
+    }
+
+    pub fn resolved(id: ChunkId, tokens: Vec<i32>) -> ChunkRef {
+        ChunkRef { id, tokens: std::sync::Arc::new(tokens) }
+    }
+
+    /// Resolve from an already-shared stream (the chunk registry's copy).
+    pub fn resolved_shared(id: ChunkId, tokens: std::sync::Arc<Vec<i32>>) -> ChunkRef {
+        ChunkRef { id, tokens }
+    }
+
+    pub fn is_resolved(&self) -> bool {
+        !self.tokens.is_empty()
+    }
+}
 
 /// One piece of an interleaved multimodal prompt.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Segment {
     Text(String),
     Image(ImageId),
+    /// A cached text chunk, reused position-independently like an image.
+    Chunk(ChunkRef),
 }
 
 /// A full multimodal prompt.
@@ -59,6 +159,11 @@ impl Prompt {
         self
     }
 
+    pub fn chunk(mut self, c: ChunkRef) -> Prompt {
+        self.segments.push(Segment::Chunk(c));
+        self
+    }
+
     pub fn images(&self) -> Vec<ImageId> {
         self.segments
             .iter()
@@ -69,20 +174,50 @@ impl Prompt {
             .collect()
     }
 
-    /// Parse the `IMAGE#HANDLE` convention out of a flat string, mirroring
-    /// the paper's Fig. 1 dialogues: words starting with `IMAGE#` become
-    /// image segments, everything else stays text.
+    pub fn chunk_ids(&self) -> Vec<ChunkId> {
+        self.segments
+            .iter()
+            .filter_map(|s| match s {
+                Segment::Chunk(c) => Some(c.id),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Every reusable-segment reference, in prompt order (repeats kept).
+    pub fn segment_ids(&self) -> Vec<SegmentId> {
+        self.segments
+            .iter()
+            .filter_map(|s| match s {
+                Segment::Image(id) => Some(SegmentId::Image(*id)),
+                Segment::Chunk(c) => Some(SegmentId::Chunk(c.id)),
+                Segment::Text(_) => None,
+            })
+            .collect()
+    }
+
+    /// Parse the `IMAGE#HANDLE` / `CHUNK#HANDLE` conventions out of a flat
+    /// string, mirroring the paper's Fig. 1 dialogues: words starting with
+    /// `IMAGE#` become image segments, words starting with `CHUNK#` become
+    /// (unresolved) cached-chunk references, everything else stays text.
     pub fn parse(user: UserId, s: &str) -> Prompt {
         let mut p = Prompt::new(user);
         let mut text_run: Vec<&str> = Vec::new();
         for word in s.split_whitespace() {
             let trimmed = word.trim_matches(|c: char| ",.;:!?".contains(c));
-            if let Some(_handle) = trimmed.strip_prefix("IMAGE#") {
+            let is_image = trimmed.starts_with("IMAGE#");
+            let is_chunk = trimmed.starts_with("CHUNK#");
+            if is_image || is_chunk {
                 if !text_run.is_empty() {
                     p.segments.push(Segment::Text(text_run.join(" ")));
                     text_run.clear();
                 }
-                p.segments.push(Segment::Image(ImageId::from_handle(trimmed)));
+                if is_image {
+                    p.segments.push(Segment::Image(ImageId::from_handle(trimmed)));
+                } else {
+                    p.segments
+                        .push(Segment::Chunk(ChunkRef::unresolved(ChunkId::from_handle(trimmed))));
+                }
             } else {
                 text_run.push(word);
             }
@@ -127,9 +262,47 @@ mod tests {
     }
 
     #[test]
+    fn parse_chunk_references() {
+        let p = Prompt::parse(UserId(1), "given CHUNK#DOC1 and IMAGE#A, answer using CHUNK#DOC2.");
+        assert_eq!(
+            p.chunk_ids(),
+            vec![ChunkId::from_handle("CHUNK#DOC1"), ChunkId::from_handle("CHUNK#DOC2")]
+        );
+        assert_eq!(p.images(), vec![ImageId::from_handle("IMAGE#A")]);
+        assert_eq!(
+            p.segment_ids(),
+            vec![
+                SegmentId::Chunk(ChunkId::from_handle("CHUNK#DOC1")),
+                SegmentId::Image(ImageId::from_handle("IMAGE#A")),
+                SegmentId::Chunk(ChunkId::from_handle("CHUNK#DOC2")),
+            ]
+        );
+        // Parsed chunk references are unresolved until the engine fills in
+        // the canonical token stream.
+        for s in &p.segments {
+            if let Segment::Chunk(c) = s {
+                assert!(!c.is_resolved());
+            }
+        }
+    }
+
+    #[test]
     fn image_id_stable() {
         assert_eq!(ImageId::from_handle("IMAGE#X"), ImageId::from_handle("IMAGE#X"));
         assert_ne!(ImageId::from_handle("IMAGE#X"), ImageId::from_handle("IMAGE#Y"));
+    }
+
+    #[test]
+    fn segment_id_accessors() {
+        let img = SegmentId::Image(ImageId(7));
+        let chk = SegmentId::Chunk(ChunkId(7));
+        assert_ne!(img, chk);
+        assert_eq!(img.raw(), chk.raw());
+        assert_ne!(img.kind_tag(), chk.kind_tag());
+        assert_eq!(img.as_image(), Some(ImageId(7)));
+        assert_eq!(img.as_chunk(), None);
+        assert_eq!(chk.as_chunk(), Some(ChunkId(7)));
+        assert_eq!(chk.kind_str(), "chunk");
     }
 
     #[test]

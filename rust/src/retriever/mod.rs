@@ -1,9 +1,11 @@
 //! MRAG retriever (substrate S12): bag-of-words embeddings + cosine top-k
 //! over the Dynamic Library — "analogous to the relocation table when
-//! executing a program" (paper §4.2).
+//! executing a program" (paper §4.2). Hits are [`SegmentId`]s: image
+//! references or cached text chunks, both spliced by the linker as
+//! position-independent KV.
 
 use crate::cache::dynamic_lib::{DynamicLibrary, Reference};
-use crate::mm::ImageId;
+use crate::mm::SegmentId;
 use crate::util::rng::{fnv1a, Rng};
 
 /// Embedding dimensionality of the toy retriever.
@@ -42,7 +44,7 @@ pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
 
 /// An in-memory vector index over dynamic-library references.
 pub struct Retriever {
-    entries: Vec<(ImageId, String, Vec<f32>)>,
+    entries: Vec<(SegmentId, String, Vec<f32>)>,
     generation: u64,
 }
 
@@ -59,12 +61,18 @@ impl Retriever {
         self.entries = lib
             .all()
             .into_iter()
-            .map(|Reference { image, description }| {
+            .map(|Reference { seg, description }| {
                 let e = embed(&description);
-                (image, description, e)
+                (seg, description, e)
             })
             .collect();
         self.generation = lib.generation();
+    }
+
+    /// Index one entry directly (custom indexes, tests). Entries added
+    /// this way are replaced by the next [`Retriever::sync`].
+    pub fn insert(&mut self, seg: SegmentId, description: &str, embedding: Vec<f32>) {
+        self.entries.push((seg, description.to_string(), embedding));
     }
 
     pub fn len(&self) -> usize {
@@ -75,12 +83,23 @@ impl Retriever {
         self.entries.is_empty()
     }
 
-    /// Top-k most similar references to the query text.
-    pub fn search(&self, query: &str, k: usize) -> Vec<(ImageId, f32)> {
+    /// Top-k most similar references to the query text. Total ordering
+    /// (satellite fix): a NaN score — e.g. a hand-inserted embedding with
+    /// NaN components — must not panic the sort; NaN scores rank *below*
+    /// every finite score under the descending total order here, so
+    /// poisoned entries never displace real hits.
+    pub fn search(&self, query: &str, k: usize) -> Vec<(SegmentId, f32)> {
         let q = embed(query);
-        let mut scored: Vec<(ImageId, f32)> =
+        let mut scored: Vec<(SegmentId, f32)> =
             self.entries.iter().map(|(id, _, e)| (*id, cosine(&q, e))).collect();
-        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        // Descending by score with NaN pinned to the end: total_cmp alone
+        // would rank a positive NaN above +inf (i.e. first).
+        scored.sort_by(|a, b| match (a.1.is_nan(), b.1.is_nan()) {
+            (true, true) => std::cmp::Ordering::Equal,
+            (true, false) => std::cmp::Ordering::Greater,
+            (false, true) => std::cmp::Ordering::Less,
+            (false, false) => b.1.total_cmp(&a.1),
+        });
         scored.truncate(k);
         scored
     }
@@ -96,6 +115,7 @@ impl Default for Retriever {
 mod tests {
     use super::*;
     use crate::kv::store::{KvStore, StoreConfig};
+    use crate::mm::{ChunkId, ImageId};
     use std::sync::Arc;
 
     #[test]
@@ -122,15 +142,51 @@ mod tests {
         let store =
             Arc::new(KvStore::new(StoreConfig { disk_dir: dir, ..Default::default() }).unwrap());
         let lib = DynamicLibrary::new(store);
-        lib.add(Reference { image: ImageId(1), description: "hotel lobby near eiffel tower paris".into() });
-        lib.add(Reference { image: ImageId(2), description: "dirt bike race desert".into() });
-        lib.add(Reference { image: ImageId(3), description: "harbour sunset fishing boats".into() });
+        lib.add(Reference::image(ImageId(1), "hotel lobby near eiffel tower paris"));
+        lib.add(Reference::image(ImageId(2), "dirt bike race desert"));
+        lib.add(Reference::image(ImageId(3), "harbour sunset fishing boats"));
 
         let mut r = Retriever::new();
         r.sync(&lib);
         let hits = r.search("recommend hotels near the eiffel tower", 2);
         assert_eq!(hits.len(), 2);
-        assert_eq!(hits[0].0, ImageId(1));
+        assert_eq!(hits[0].0, SegmentId::Image(ImageId(1)));
+    }
+
+    #[test]
+    fn search_ranks_chunk_references_too() {
+        let dir = std::env::temp_dir().join(format!("mpic-retr3-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store =
+            Arc::new(KvStore::new(StoreConfig { disk_dir: dir, ..Default::default() }).unwrap());
+        let lib = DynamicLibrary::new(store);
+        lib.add(Reference {
+            seg: SegmentId::Chunk(ChunkId(1)),
+            description: "guidebook chapter about hotels near the eiffel tower".into(),
+        });
+        lib.add(Reference::image(ImageId(2), "dirt bike race desert"));
+        let mut r = Retriever::new();
+        r.sync(&lib);
+        let hits = r.search("hotels near the eiffel tower", 1);
+        assert_eq!(hits[0].0, SegmentId::Chunk(ChunkId(1)));
+    }
+
+    /// Satellite regression: NaN scores must neither panic the sort nor
+    /// outrank real results.
+    #[test]
+    fn search_survives_nan_scores() {
+        let mut r = Retriever::new();
+        r.insert(SegmentId::Image(ImageId(1)), "poisoned", vec![f32::NAN; EMBED_DIM]);
+        r.insert(SegmentId::Image(ImageId(2)), "eiffel tower hotel", embed("eiffel tower hotel"));
+        r.insert(SegmentId::Image(ImageId(3)), "harbour boats", embed("harbour boats"));
+        let hits = r.search("eiffel tower hotel", 3);
+        assert_eq!(hits.len(), 3);
+        assert_eq!(hits[0].0, SegmentId::Image(ImageId(2)), "NaN must not outrank real hits");
+        assert!(hits[2].1.is_nan(), "NaN entry sinks to the bottom");
+        // All-NaN index: still no panic.
+        let mut r2 = Retriever::new();
+        r2.insert(SegmentId::Image(ImageId(9)), "x", vec![f32::NAN; EMBED_DIM]);
+        assert_eq!(r2.search("anything", 1).len(), 1);
     }
 
     #[test]
@@ -143,7 +199,7 @@ mod tests {
         let mut r = Retriever::new();
         r.sync(&lib);
         assert!(r.is_empty());
-        lib.add(Reference { image: ImageId(1), description: "x".into() });
+        lib.add(Reference::image(ImageId(1), "x"));
         r.sync(&lib);
         assert_eq!(r.len(), 1);
     }

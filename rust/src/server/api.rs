@@ -18,7 +18,7 @@ use crate::coordinator::engine::{EvictOutcome, InferenceResult};
 use crate::coordinator::session::SessionStore;
 use crate::coordinator::{Engine, Policy};
 use crate::kv::{EntryInfo, Tier};
-use crate::mm::{ImageId, Prompt, UserId};
+use crate::mm::{ChunkId, ImageId, Prompt, SegmentId, UserId};
 use crate::util::json::Value;
 
 // ----------------------------------------------------------------------
@@ -229,6 +229,33 @@ impl FromValue for AddReferenceReq {
     }
 }
 
+/// `chunk.upload` — upload a text chunk: tokenize, prefill at canonical
+/// positions, store the K/V rows. With `description`, the chunk is also
+/// indexed in the dynamic library for MRAG retrieval.
+#[derive(Debug, Clone)]
+pub struct ChunkUploadReq {
+    pub handle: String,
+    pub text: String,
+    pub description: Option<String>,
+}
+
+impl FromValue for ChunkUploadReq {
+    fn from_value(v: &Value) -> ApiResult<ChunkUploadReq> {
+        let handle = get_str(v, "handle")?;
+        if !handle.starts_with("CHUNK#") {
+            return Err(ApiError::new(
+                ErrorCode::BadValue,
+                format!("chunk handle must start with CHUNK# (got {handle:?})"),
+            ));
+        }
+        Ok(ChunkUploadReq {
+            handle,
+            text: get_str(v, "text")?,
+            description: opt_str(v, "description")?,
+        })
+    }
+}
+
 /// `infer` / `chat` — one generation request (stateless or sessionful).
 #[derive(Debug, Clone)]
 pub struct GenerateReq {
@@ -311,6 +338,26 @@ impl ToValue for ImageResp {
     }
 }
 
+/// Reply body of `chunk.upload`.
+#[derive(Debug, Clone)]
+pub struct ChunkResp {
+    pub chunk: ChunkId,
+    pub tokens: usize,
+    pub indexed: bool,
+}
+
+impl ToValue for ChunkResp {
+    fn to_value(&self) -> Value {
+        // Hex only: chunk ids are full-range 64-bit hashes, so a JSON f64
+        // number would silently round away the low bits past 2^53.
+        Value::obj(vec![
+            ("chunk_hex", Value::str(format!("{:016x}", self.chunk.0))),
+            ("tokens", Value::num(self.tokens as f64)),
+            ("indexed", Value::Bool(self.indexed)),
+        ])
+    }
+}
+
 /// Reply body of `infer` / `chat` (and of a stream's final summary line).
 #[derive(Debug, Clone)]
 pub struct InferResp {
@@ -364,7 +411,7 @@ impl ToValue for InferResp {
 #[derive(Debug, Clone)]
 pub struct CacheEntryResp {
     pub model: String,
-    pub image: ImageId,
+    pub seg: SegmentId,
     pub tier: Tier,
     pub bytes: usize,
     pub pinned: bool,
@@ -382,7 +429,7 @@ impl From<EntryInfo> for CacheEntryResp {
     fn from(e: EntryInfo) -> CacheEntryResp {
         CacheEntryResp {
             model: e.key.model,
-            image: e.key.image,
+            seg: e.key.seg,
             tier: e.tier,
             bytes: e.bytes,
             pinned: e.pinned,
@@ -392,13 +439,19 @@ impl From<EntryInfo> for CacheEntryResp {
 
 impl ToValue for CacheEntryResp {
     fn to_value(&self) -> Value {
-        Value::obj(vec![
+        let mut v = Value::obj(vec![
             ("model", Value::str(&self.model)),
-            ("image", Value::str(format!("{:016x}", self.image.0))),
+            ("kind", Value::str(self.seg.kind_str())),
+            ("segment", Value::str(format!("{:016x}", self.seg.raw()))),
             ("tier", Value::str(tier_str(self.tier))),
             ("bytes", Value::num(self.bytes as f64)),
             ("pinned", Value::Bool(self.pinned)),
-        ])
+        ]);
+        // v1 compat: image entries keep their historical "image" field.
+        if let SegmentId::Image(img) = self.seg {
+            v.set("image", Value::str(format!("{:016x}", img.0)));
+        }
+        v
     }
 }
 
@@ -563,6 +616,23 @@ fn dispatch_op(
             let q = AddReferenceReq::from_value(req)?;
             let image = engine.add_reference(&q.handle, &q.description)?;
             Ok(ImageResp { image }.to_value())
+        }
+
+        // Upload a cached text chunk (position-independent text segment).
+        // Prompts reference it as `CHUNK#HANDLE` inside `infer`/`chat`
+        // text; with "description" it is also MRAG-retrievable.
+        "chunk.upload" => {
+            let q = ChunkUploadReq::from_value(req)?;
+            let chunk = match &q.description {
+                Some(desc) => engine.add_chunk_reference(&q.handle, &q.text, desc)?,
+                None => engine.upload_chunk(&q.handle, &q.text)?,
+            };
+            let tokens = engine
+                .chunk_lib
+                .get(chunk)
+                .map(|m| m.tokens.len())
+                .unwrap_or(0);
+            Ok(ChunkResp { chunk, tokens, indexed: q.description.is_some() }.to_value())
         }
 
         "infer" => {
@@ -821,6 +891,56 @@ mod tests {
         assert_eq!(q.policy, "prefix");
         assert_eq!(q.max_new, Some(3));
         assert!(q.stream);
+    }
+
+    #[test]
+    fn chunk_upload_req_validates_handle() {
+        let q = ChunkUploadReq::from_value(&parse(
+            r#"{"op":"chunk.upload","handle":"CHUNK#DOC1","text":"the shared doc"}"#,
+        ))
+        .unwrap();
+        assert_eq!(q.handle, "CHUNK#DOC1");
+        assert_eq!(q.text, "the shared doc");
+        assert!(q.description.is_none());
+        let q = ChunkUploadReq::from_value(&parse(
+            r#"{"op":"chunk.upload","handle":"CHUNK#D","text":"t","description":"festival doc"}"#,
+        ))
+        .unwrap();
+        assert_eq!(q.description.as_deref(), Some("festival doc"));
+        let e = ChunkUploadReq::from_value(&parse(
+            r#"{"op":"chunk.upload","handle":"IMAGE#X","text":"t"}"#,
+        ))
+        .unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadValue);
+        let e = ChunkUploadReq::from_value(&parse(r#"{"op":"chunk.upload","handle":"CHUNK#X"}"#))
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::MissingField);
+    }
+
+    #[test]
+    fn cache_entry_resp_reports_segment_kind() {
+        use crate::kv::KvKey;
+        let img = CacheEntryResp {
+            model: "m".into(),
+            seg: SegmentId::Image(ImageId(0xAB)),
+            tier: Tier::Device,
+            bytes: 10,
+            pinned: false,
+        };
+        let v = img.to_value();
+        assert_eq!(v.get("kind").unwrap().as_str().unwrap(), "image");
+        assert!(v.get("image").is_ok(), "image entries keep the v1 field");
+        let chk = CacheEntryResp::from(EntryInfo {
+            key: KvKey::chunk("m", ChunkId(0xCD)),
+            tier: Tier::Disk,
+            bytes: 5,
+            pinned: true,
+        });
+        let v = chk.to_value();
+        assert_eq!(v.get("kind").unwrap().as_str().unwrap(), "chunk");
+        assert_eq!(v.get("segment").unwrap().as_str().unwrap(), format!("{:016x}", 0xCD));
+        assert!(v.opt("image").is_none(), "chunk entries carry no image field");
+        assert!(v.get("pinned").unwrap().as_bool().unwrap());
     }
 
     #[test]

@@ -28,12 +28,13 @@
 //! | `stats`         | —                                                   | `metrics` (incl. per-op `ops` and `pipeline` health), `model`, `sessions`, `store` |
 //! | `upload`        | `user`, `handle`, [`async`]                         | `image`, `image_hex` — or, async, `accepted`, `job` |
 //! | `add_reference` | `handle`, `description`, [`async`]                  | `image`, `image_hex` — or, async, `accepted`, `job` |
+//! | `chunk.upload`  | `handle` (`CHUNK#...`), `text`, [`description`]     | `chunk_hex`, `tokens`, `indexed` — uploads a cached text chunk; with `description` it is MRAG-retrievable. Prompts reference it as `CHUNK#HANDLE` |
 //! | `upload.stat`   | `job`                                               | job record: `state` (`queued`/`encoding`/`storing`/`done`/`failed`), `image_hex` once encoded |
 //! | `jobs.list`     | —                                                   | `count`, `jobs[]` (async upload-lane job records) |
 //! | `infer`         | `user`, `text`, [`policy`, `max_new`, `mrag`, `stream`] | decode result (`tokens`, `ttft_s`, `queued_rounds`, …) |
 //! | `chat`          | like `infer`; keeps per-user session history        | decode result + `turn` |
 //! | `reset`         | `user`                                              | `reset` |
-//! | `cache.list`    | —                                                   | `count`, `entries[]` (`image`, `tier`, `bytes`, `pinned`) |
+//! | `cache.list`    | —                                                   | `count`, `entries[]` (`kind`, `segment`, `tier`, `bytes`, `pinned`; image entries also carry `image`) |
 //! | `cache.stat`    | `handle`                                            | one entry + `resident` |
 //! | `cache.pin`     | `handle`, [`pinned`=true]                           | `handle`, `pinned` |
 //! | `cache.evict`   | `handle`                                            | `handle`, `evicted` |

@@ -123,7 +123,7 @@ impl Gate {
     fn is_weighted(req: &Value) -> bool {
         matches!(
             req.opt("op").and_then(|o| o.as_str().ok()).unwrap_or(""),
-            "infer" | "chat" | "upload" | "add_reference"
+            "infer" | "chat" | "upload" | "add_reference" | "chunk.upload"
         )
     }
 
@@ -323,7 +323,7 @@ impl UploadLane {
                     return self.fail(jid, format!("register failed: {e:#}"));
                 }
             }
-            _ => engine.dynamic_lib.add(crate::cache::Reference { image, description }),
+            _ => engine.dynamic_lib.add(crate::cache::Reference::image(image, description)),
         }
         {
             let mut g = self.jobs.lock().unwrap();
@@ -481,12 +481,13 @@ impl<'e> Pipeline<'e> {
             self.finish(c);
         }
         // Prefetch lane: whatever is *still* queued after this round's
-        // admissions waits at least one more round — warm its image KV
-        // from disk/host toward the device tier on idle pool workers so
-        // the transfer engine sees device hits at admission time.
-        let queued = self.sched.queued_images();
+        // admissions waits at least one more round — warm its segment KV
+        // (images and chunks) from disk/host toward the device tier on
+        // idle pool workers so the transfer engine sees device hits at
+        // admission time.
+        let queued = self.sched.queued_segments();
         if !queued.is_empty() {
-            self.engine.prefetch_images(&queued);
+            self.engine.prefetch_segments(&queued);
         }
         Ok(())
     }

@@ -1,16 +1,20 @@
 //! Synthetic workload generators (substrate S15; DESIGN.md §2 substitutions
-//! for MMDU and SparklesEval) plus arrival-trace generation.
+//! for MMDU and SparklesEval, plus an MRAG-like document workload) and
+//! arrival-trace generation.
 //!
-//! Both generators reproduce the *structural* properties the paper's
+//! The generators reproduce the *structural* properties the paper's
 //! evaluation depends on: many images per conversation, multi-turn reuse of
 //! the same images, and opening words that differ between requests (which is
 //! what defeats prefix caching). MMDU-like conversations stitch images at
 //! sentence level; Sparkles-like conversations interleave image references
-//! at word level inside a sentence.
+//! at word level inside a sentence; RAG-like conversations share a pool of
+//! *document chunks* across conversations — the same chunk appears behind
+//! different openers in different conversations, so position-independent
+//! chunk caching (not prefix caching) is what makes them cheap.
 
 pub mod trace;
 
-use crate::mm::{ImageId, Prompt, UserId};
+use crate::mm::{ChunkId, ChunkRef, ImageId, Prompt, UserId};
 use crate::util::rng::Rng;
 
 /// Which dataset shape to emulate.
@@ -20,6 +24,9 @@ pub enum Dataset {
     Mmdu,
     /// Sparkles-like: word-level interleaving ("link the X in IMG and ...").
     Sparkles,
+    /// RAG-like: shared document chunks (from [`rag_chunk_pool`]) spliced
+    /// behind per-conversation openers, optionally with images.
+    Rag,
 }
 
 impl Dataset {
@@ -27,6 +34,7 @@ impl Dataset {
         match self {
             Dataset::Mmdu => "mmdu-like",
             Dataset::Sparkles => "sparkles-like",
+            Dataset::Rag => "rag-like",
         }
     }
 }
@@ -37,7 +45,8 @@ pub struct WorkloadSpec {
     pub dataset: Dataset,
     pub n_conversations: usize,
     pub turns_per_conversation: usize,
-    /// Inclusive range of images per conversation.
+    /// Inclusive range of images per conversation. `images_min: 0` is
+    /// valid (text/chunk-only conversations).
     pub images_min: usize,
     pub images_max: usize,
     pub seed: u64,
@@ -57,11 +66,14 @@ impl Default for WorkloadSpec {
 }
 
 /// A generated multi-turn conversation. Every turn references (a subset of)
-/// the conversation's uploaded images.
+/// the conversation's uploaded images and, for RAG workloads, chunk
+/// handles from the shared pool.
 #[derive(Debug, Clone)]
 pub struct Conversation {
     pub user: UserId,
     pub images: Vec<ImageId>,
+    /// Shared-pool chunk handles this conversation references (RAG).
+    pub chunks: Vec<String>,
     pub turns: Vec<Prompt>,
 }
 
@@ -92,24 +104,81 @@ fn sentence(rng: &mut Rng, words: usize) -> String {
     parts.join(" ")
 }
 
+/// Number of images for one conversation, guarded against degenerate
+/// bounds: `images_min == images_max` (incl. both zero) is exact, and an
+/// inverted range clamps to the min instead of feeding `rng.range` an
+/// empty interval.
+fn images_for_conversation(rng: &mut Rng, spec: &WorkloadSpec) -> usize {
+    if spec.images_max <= spec.images_min {
+        return spec.images_min;
+    }
+    rng.range(spec.images_min as u64, spec.images_max as u64 + 1) as usize
+}
+
+/// Deterministic shared chunk pool for a RAG workload: `(handle, text)`
+/// documents conversations sample from. Empty for the other datasets.
+/// Upload these (e.g. [`crate::harness::precompute_chunks`]) before
+/// running the generated prompts.
+pub fn rag_chunk_pool(spec: &WorkloadSpec) -> Vec<(String, String)> {
+    if spec.dataset != Dataset::Rag {
+        return Vec::new();
+    }
+    let n_docs = (spec.n_conversations / 2).clamp(2, 8);
+    let mut rng = Rng::new(spec.seed ^ 0xD0C5);
+    (0..n_docs)
+        .map(|i| {
+            let handle = format!("CHUNK#RAGDOC{i}");
+            let text = format!(
+                "Reference document {i} about the {}: the {} and the {} {} the {} {} while the {} stays nearby. {}",
+                rng.choose(NOUNS),
+                rng.choose(NOUNS),
+                rng.choose(NOUNS),
+                rng.choose(VERBS),
+                rng.choose(NOUNS),
+                rng.choose(FILLERS),
+                rng.choose(NOUNS),
+                sentence(&mut rng, 6),
+            );
+            (handle, text)
+        })
+        .collect()
+}
+
 /// Generate a deterministic workload.
 pub fn generate(spec: &WorkloadSpec) -> Vec<Conversation> {
     let root = Rng::new(spec.seed);
+    let pool = rag_chunk_pool(spec);
     (0..spec.n_conversations)
         .map(|c| {
             let mut rng = root.fork(c as u64);
             let user = UserId(1000 + c as u64);
-            let n_images = rng.range(spec.images_min as u64, spec.images_max as u64 + 1) as usize;
+            let n_images = images_for_conversation(&mut rng, spec);
             let images: Vec<ImageId> = (0..n_images)
                 .map(|i| ImageId(spec.seed ^ ((c as u64) << 20) ^ i as u64 ^ 0x1111_0000))
                 .collect();
+            // RAG conversations pick 1-3 docs from the shared pool; the
+            // sharing across conversations is the reuse the cache exploits.
+            let chunks: Vec<String> = if pool.is_empty() {
+                Vec::new()
+            } else {
+                let n = 1 + rng.below(3.min(pool.len() as u64)) as usize;
+                let mut picked = Vec::new();
+                while picked.len() < n {
+                    let (h, _) = &pool[rng.below(pool.len() as u64) as usize];
+                    if !picked.contains(h) {
+                        picked.push(h.clone());
+                    }
+                }
+                picked
+            };
             let turns = (0..spec.turns_per_conversation)
                 .map(|t| match spec.dataset {
                     Dataset::Mmdu => mmdu_turn(&mut rng, user, &images, t),
                     Dataset::Sparkles => sparkles_turn(&mut rng, user, &images, t),
+                    Dataset::Rag => rag_turn(&mut rng, user, &images, &chunks),
                 })
                 .collect();
-            Conversation { user, images, turns }
+            Conversation { user, images, chunks, turns }
         })
         .collect()
 }
@@ -120,8 +189,16 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<Conversation> {
 fn mmdu_turn(rng: &mut Rng, user: UserId, images: &[ImageId], turn: usize) -> Prompt {
     let opener = format!("{} {}", rng.choose(OPENERS), sentence(rng, 2));
     let mut p = Prompt::new(user).text(&opener);
-    // Later turns may revisit a subset (multi-turn reuse).
-    let take = if turn == 0 { images.len() } else { rng.range(1, images.len() as u64 + 1) as usize };
+    // Later turns may revisit a subset (multi-turn reuse). Guarded for
+    // zero-image conversations: `rng.range(1, 1)` on an empty interval
+    // used to be the failure mode here.
+    let take = if images.is_empty() {
+        0
+    } else if turn == 0 {
+        images.len()
+    } else {
+        rng.range(1, images.len() as u64 + 1) as usize
+    };
     for id in &images[..take] {
         p = p.image(*id);
     }
@@ -147,6 +224,32 @@ fn sparkles_turn(rng: &mut Rng, user: UserId, images: &[ImageId], _turn: usize) 
     p.text(&format!("— how do they {} each other {}?", rng.choose(VERBS), rng.choose(FILLERS)))
 }
 
+/// RAG-like: a fresh opener, then the conversation's shared document
+/// chunks (unresolved references — the engine resolves them against its
+/// chunk library), optionally an image, then the question. Different
+/// conversations share chunks but never openers, so the reusable spans sit
+/// at different linked positions every time.
+fn rag_turn(rng: &mut Rng, user: UserId, images: &[ImageId], chunks: &[String]) -> Prompt {
+    let opener = format!("{} {}", rng.choose(OPENERS), sentence(rng, 2));
+    let mut p = Prompt::new(user).text(&opener);
+    for (i, handle) in chunks.iter().enumerate() {
+        p = p.chunk(ChunkRef::unresolved(ChunkId::from_handle(handle)));
+        if i + 1 < chunks.len() {
+            p = p.text("and the related document");
+        }
+    }
+    if let Some(img) = images.first() {
+        p = p.text("together with this photo").image(*img);
+    }
+    p.text(&format!(
+        "— based on these sources, how does the {} {} the {} {}?",
+        rng.choose(NOUNS),
+        rng.choose(VERBS),
+        rng.choose(NOUNS),
+        rng.choose(FILLERS),
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,13 +257,16 @@ mod tests {
 
     #[test]
     fn deterministic() {
-        let spec = WorkloadSpec::default();
-        let a = generate(&spec);
-        let b = generate(&spec);
-        assert_eq!(a.len(), b.len());
-        for (x, y) in a.iter().zip(&b) {
-            assert_eq!(x.images, y.images);
-            assert_eq!(format!("{:?}", x.turns), format!("{:?}", y.turns));
+        for dataset in [Dataset::Mmdu, Dataset::Sparkles, Dataset::Rag] {
+            let spec = WorkloadSpec { dataset, ..Default::default() };
+            let a = generate(&spec);
+            let b = generate(&spec);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.images, y.images);
+                assert_eq!(x.chunks, y.chunks);
+                assert_eq!(format!("{:?}", x.turns), format!("{:?}", y.turns));
+            }
         }
     }
 
@@ -171,6 +277,79 @@ mod tests {
             assert!((3..=7).contains(&c.images.len()));
             assert!(!c.turns.is_empty());
         }
+    }
+
+    /// Satellite regression: zero-image conversations used to hit
+    /// `rng.range(1, images.len()+1)` with an empty interval on later
+    /// MMDU turns.
+    #[test]
+    fn zero_image_conversations_generate_cleanly() {
+        for dataset in [Dataset::Mmdu, Dataset::Sparkles, Dataset::Rag] {
+            let spec = WorkloadSpec {
+                dataset,
+                images_min: 0,
+                images_max: 0,
+                n_conversations: 8,
+                turns_per_conversation: 3,
+                ..Default::default()
+            };
+            for c in generate(&spec) {
+                assert!(c.images.is_empty());
+                for t in &c.turns {
+                    assert!(t.images().is_empty());
+                    // Turns still carry text to generate from.
+                    assert!(t.segments.iter().any(|s| matches!(s, Segment::Text(_))));
+                }
+            }
+        }
+    }
+
+    /// Property: generated image counts always honour the spec bounds,
+    /// including min == max, zero minima and inverted ranges (clamped).
+    #[test]
+    fn property_workload_spec_bounds() {
+        crate::util::prop::check(
+            "workload-spec-bounds",
+            40,
+            |rng| {
+                let min = rng.below(5) as usize;
+                let max = rng.below(7) as usize; // may be < min: clamps
+                let dataset = match rng.below(3) {
+                    0 => Dataset::Mmdu,
+                    1 => Dataset::Sparkles,
+                    _ => Dataset::Rag,
+                };
+                (min, max, dataset, rng.next_u64())
+            },
+            |&(min, max, dataset, seed)| {
+                let spec = WorkloadSpec {
+                    dataset,
+                    n_conversations: 6,
+                    turns_per_conversation: 2,
+                    images_min: min,
+                    images_max: max,
+                    seed,
+                };
+                for c in generate(&spec) {
+                    let n = c.images.len();
+                    let hi = max.max(min);
+                    if n < min.min(hi) || n > hi {
+                        return Err(format!("count {n} outside [{min}, {max}]"));
+                    }
+                    if max < min && n != min {
+                        return Err(format!("inverted range must clamp to min, got {n}"));
+                    }
+                    for t in &c.turns {
+                        for img in t.images() {
+                            if !c.images.contains(&img) {
+                                return Err("turn references unknown image".into());
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]
@@ -230,5 +409,58 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The RAG shape the cache exploits: conversations share pool chunks
+    /// (cross-conversation reuse) behind differing openers, and every
+    /// referenced chunk resolves to the pool.
+    #[test]
+    fn rag_chunks_are_shared_across_conversations() {
+        let spec = WorkloadSpec {
+            dataset: Dataset::Rag,
+            n_conversations: 16,
+            turns_per_conversation: 1,
+            images_min: 0,
+            images_max: 1,
+            ..Default::default()
+        };
+        let pool = rag_chunk_pool(&spec);
+        assert!(!pool.is_empty());
+        let convs = generate(&spec);
+        let pool_handles: std::collections::HashSet<&str> =
+            pool.iter().map(|(h, _)| h.as_str()).collect();
+        let pool_ids: std::collections::HashSet<ChunkId> =
+            pool.iter().map(|(h, _)| ChunkId::from_handle(h)).collect();
+        let mut uses: std::collections::HashMap<&str, usize> = Default::default();
+        for c in &convs {
+            assert!(!c.chunks.is_empty(), "every RAG conversation references a chunk");
+            for h in &c.chunks {
+                assert!(pool_handles.contains(h.as_str()), "chunk {h} not in pool");
+                *uses.entry(h.as_str()).or_default() += 1;
+            }
+            // The prompts carry matching unresolved chunk references.
+            for t in &c.turns {
+                let ids = t.chunk_ids();
+                assert_eq!(ids.len(), c.chunks.len());
+                for id in ids {
+                    assert!(pool_ids.contains(&id));
+                }
+            }
+        }
+        assert!(
+            uses.values().any(|&n| n >= 2),
+            "some chunk must be shared by at least two conversations: {uses:?}"
+        );
+        // Openers still differ (prefix caching stays defeated).
+        let openings: std::collections::HashSet<String> = convs
+            .iter()
+            .map(|c| match &c.turns[0].segments[0] {
+                Segment::Text(s) => s.clone(),
+                _ => String::new(),
+            })
+            .collect();
+        assert!(openings.len() > 4, "got {} unique openings", openings.len());
+        // Non-RAG specs have an empty pool.
+        assert!(rag_chunk_pool(&WorkloadSpec::default()).is_empty());
     }
 }

@@ -8,12 +8,14 @@ use std::time::Duration;
 use mpic::coordinator::linker::{Linker, PAD_POS};
 use mpic::coordinator::selection::{plan, Policy};
 use mpic::kv::store::{KvStore, StoreConfig};
-use mpic::kv::{ImageKv, KvKey, KvShape, TransferEngine};
-use mpic::mm::{ImageId, LinkedLayout, Prompt, Tokenizer, UserId};
+use mpic::kv::{KvKey, KvShape, SegmentKv, TransferEngine};
+use mpic::mm::{
+    ChunkId, ChunkRef, ImageId, LinkedLayout, Prompt, Segment, SegmentId, Tokenizer, UserId,
+};
 use mpic::runtime::artifacts::{ModelMeta, WeightsMeta};
 use mpic::util::rng::Rng;
 use mpic::util::threadpool::ThreadPool;
-use mpic::workload::{generate, Dataset, WorkloadSpec};
+use mpic::workload::{generate, rag_chunk_pool, Dataset, WorkloadSpec};
 
 fn meta() -> ModelMeta {
     ModelMeta {
@@ -39,7 +41,7 @@ fn meta() -> ModelMeta {
     }
 }
 
-fn synth_entry(meta: &ModelMeta, image: ImageId, seed: u64) -> ImageKv {
+fn synth_entry(meta: &ModelMeta, image: ImageId, seed: u64) -> SegmentKv {
     let shape = KvShape {
         layers: meta.n_layers,
         tokens: meta.img_tokens,
@@ -48,8 +50,8 @@ fn synth_entry(meta: &ModelMeta, image: ImageId, seed: u64) -> ImageKv {
         d_model: meta.d_model,
     };
     let mut rng = Rng::new(seed);
-    ImageKv {
-        key: KvKey::new(&meta.name, image),
+    SegmentKv {
+        key: KvKey::image(&meta.name, image),
         shape,
         emb: (0..shape.emb_elems()).map(|_| rng.normal() as f32).collect(),
         k: (0..shape.kv_elems()).map(|_| rng.normal() as f32).collect(),
@@ -57,15 +59,60 @@ fn synth_entry(meta: &ModelMeta, image: ImageId, seed: u64) -> ImageKv {
     }
 }
 
+fn synth_chunk_entry(meta: &ModelMeta, chunk: ChunkId, tokens: usize, seed: u64) -> SegmentKv {
+    let shape = KvShape {
+        layers: meta.n_layers,
+        tokens,
+        heads: meta.n_heads,
+        d_head: meta.d_head,
+        d_model: meta.d_model,
+    };
+    let mut rng = Rng::new(seed);
+    SegmentKv {
+        key: KvKey::chunk(&meta.name, chunk),
+        shape,
+        emb: Vec::new(),
+        k: (0..shape.kv_elems()).map(|_| rng.normal() as f32).collect(),
+        v: (0..shape.kv_elems()).map(|_| rng.normal() as f32).collect(),
+    }
+}
+
+/// Entry for any span kind (images get embeddings, chunks don't).
+fn entry_for_span(meta: &ModelMeta, span: &mpic::mm::ReuseSpan) -> SegmentKv {
+    match span.seg {
+        SegmentId::Image(id) => synth_entry(meta, id, id.0),
+        SegmentId::Chunk(id) => synth_chunk_entry(meta, id, span.len(), id.0),
+    }
+}
+
+/// Engine-less chunk resolution for generated RAG prompts: substitute the
+/// canonical token streams from the pool.
+fn resolve_prompt(prompt: &Prompt, tok: &Tokenizer, pool: &[(String, String)]) -> Prompt {
+    let mut out = prompt.clone();
+    for seg in out.segments.iter_mut() {
+        if let Segment::Chunk(c) = seg {
+            if !c.is_resolved() {
+                let (_, text) = pool
+                    .iter()
+                    .find(|(h, _)| ChunkId::from_handle(h) == c.id)
+                    .expect("generated chunk ref must come from the pool");
+                c.tokens = Arc::new(tok.encode(text));
+            }
+        }
+    }
+    out
+}
+
 /// Workload → layout → MPIC plan → linker assembly, for every generated
-/// conversation of both datasets: shapes, masks and padding must be
+/// conversation of all three datasets (RAG included — chunk spans flow
+/// through the same plan/link path): shapes, masks and padding must be
 /// mutually consistent.
 #[test]
 fn workload_to_linker_pipeline() {
     let m = meta();
     let tok = Tokenizer::new(m.vocab);
     let linker = Linker::new(&m);
-    for dataset in [Dataset::Mmdu, Dataset::Sparkles] {
+    for dataset in [Dataset::Mmdu, Dataset::Sparkles, Dataset::Rag] {
         let spec = WorkloadSpec {
             dataset,
             n_conversations: 10,
@@ -74,15 +121,14 @@ fn workload_to_linker_pipeline() {
             images_max: 4,
             seed: 7,
         };
+        let pool = rag_chunk_pool(&spec);
         for conv in generate(&spec) {
             for turn in &conv.turns {
-                let layout = LinkedLayout::build(turn, &tok, m.img_tokens, "sys prompt");
-                let entries: Vec<ImageKv> = layout
-                    .image_spans
-                    .iter()
-                    .map(|&(id, _, _)| synth_entry(&m, id, id.0))
-                    .collect();
-                let refs: Vec<&ImageKv> = entries.iter().collect();
+                let turn = resolve_prompt(turn, &tok, &pool);
+                let layout = LinkedLayout::build(&turn, &tok, m.img_tokens, "sys prompt");
+                let entries: Vec<SegmentKv> =
+                    layout.reuse_spans.iter().map(|s| entry_for_span(&m, s)).collect();
+                let refs: Vec<&SegmentKv> = entries.iter().collect();
                 let bucket = layout.len().next_multiple_of(128);
                 let pl = plan(Policy::MpicK(4), &layout, &[]);
                 let (k, v) = linker.linked_cache(&layout, &refs, bucket).unwrap();
@@ -108,6 +154,60 @@ fn workload_to_linker_pipeline() {
                 }
             }
         }
+    }
+}
+
+/// RAG reuse shape end to end (engine-less): two conversations sharing a
+/// chunk produce layouts that place the same chunk at *different* linked
+/// positions, and one synthetic store entry serves both via the transfer
+/// engine with no recompute.
+#[test]
+fn shared_chunk_links_at_different_positions() {
+    let m = meta();
+    let tok = Tokenizer::new(m.vocab);
+    let doc = "shared festival report describing the harbour celebrations in detail";
+    let toks = tok.encode(doc);
+    let chunk = ChunkId::from_handle("CHUNK#SHARED");
+    let p1 = Prompt::new(UserId(1))
+        .text("short opener")
+        .chunk(ChunkRef::resolved(chunk, toks.clone()))
+        .text("question one please");
+    let p2 = Prompt::new(UserId(2))
+        .text("a much longer and completely different opening sentence here")
+        .chunk(ChunkRef::resolved(chunk, toks.clone()))
+        .text("question two");
+    let l1 = LinkedLayout::build(&p1, &tok, m.img_tokens, "sys");
+    let l2 = LinkedLayout::build(&p2, &tok, m.img_tokens, "sys");
+    let s1 = l1.reuse_spans[0];
+    let s2 = l2.reuse_spans[0];
+    assert_eq!(s1.seg, s2.seg);
+    assert_ne!(s1.lo, s2.lo, "different openers must shift the span");
+    assert_eq!(s1.len(), s2.len());
+
+    // One stored entry serves both layouts through the transfer engine.
+    let dir = std::env::temp_dir().join(format!("mpic-int-chunkshare-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(
+        KvStore::new(StoreConfig { disk_dir: dir, ..Default::default() }).unwrap(),
+    );
+    let entry = synth_chunk_entry(&m, chunk, toks.len(), 99);
+    store.put(entry.clone()).unwrap();
+    let pool = Arc::new(ThreadPool::new(2));
+    let eng = TransferEngine::new(pool);
+    let linker = Linker::new(&m);
+    for l in [&l1, &l2] {
+        let keys: Vec<KvKey> =
+            l.reuse_spans.iter().map(|s| KvKey { model: m.name.clone(), seg: s.seg }).collect();
+        let (got, rep) = eng
+            .fetch(&store, &keys, |_| panic!("must be a store hit"))
+            .unwrap();
+        assert_eq!(rep.misses, 0);
+        let refs: Vec<&SegmentKv> = got.iter().map(|e| e.as_ref()).collect();
+        // The same rows land at the layout's own span positions.
+        let (k, _) = linker.linked_cache(l, &refs, l.len().next_multiple_of(128)).unwrap();
+        let row = m.n_heads * m.d_head;
+        let lo = l.reuse_spans[0].lo;
+        assert_eq!(&k[lo * row..lo * row + row], &entry.k[0..row]);
     }
 }
 
@@ -157,7 +257,7 @@ fn transfer_recovers_from_expiry() {
     );
     let pool = Arc::new(ThreadPool::new(2));
     let engine = TransferEngine::new(pool);
-    let key = KvKey::new(&m.name, ImageId(9));
+    let key = KvKey::image(&m.name, ImageId(9));
     store.put(synth_entry(&m, ImageId(9), 9)).unwrap();
     // LRU-pressure the entry fully out of both RAM tiers (capacities are
     // 1 byte; the newest insert always displaces the older ones).
@@ -168,7 +268,8 @@ fn transfer_recovers_from_expiry() {
     let (out, _rep) = engine
         .fetch(&store, std::slice::from_ref(&key), |k| {
             recomputed += 1;
-            Ok(synth_entry(&m, k.image, k.image.0))
+            let img = k.seg.as_image().unwrap();
+            Ok(synth_entry(&m, img, img.0))
         })
         .unwrap();
     assert_eq!(out.len(), 1);
@@ -200,7 +301,7 @@ fn two_step_cache_assembly() {
     for (packed_idx, &slot) in mapping.iter().enumerate() {
         assert_eq!(k[slot * row], 1000.0 + (packed_idx * row) as f32);
     }
-    let (_, lo, _) = layout.image_spans[0];
+    let lo = layout.reuse_spans[0].lo;
     assert_eq!(k[lo * row], entry.k[0]);
     let pos = inputs.positions.i32_data().unwrap();
     assert_eq!(pos[0], mapping[0] as i32);
@@ -221,7 +322,7 @@ fn session_layout_growth() {
     let full2 = store.session(user).user_turn(user, &t2);
     let l2 = LinkedLayout::build(&full2, &tok, m.img_tokens, "sys");
     assert!(l2.len() > l1.len());
-    assert_eq!(l2.image_spans.len(), 2);
-    assert_eq!(l2.image_spans[0].0, ImageId(1));
-    assert_eq!(l2.image_spans[1].0, ImageId(2));
+    assert_eq!(l2.reuse_spans.len(), 2);
+    assert_eq!(l2.reuse_spans[0].seg, SegmentId::Image(ImageId(1)));
+    assert_eq!(l2.reuse_spans[1].seg, SegmentId::Image(ImageId(2)));
 }

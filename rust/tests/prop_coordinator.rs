@@ -3,8 +3,10 @@
 
 use mpic::coordinator::linker::Linker;
 use mpic::coordinator::selection::{plan, Policy};
-use mpic::kv::{ImageKv, KvKey, KvShape};
-use mpic::mm::{ImageId, LinkedLayout, Prompt, Tokenizer, UserId};
+use mpic::kv::{KvKey, KvShape, SegmentKv};
+use mpic::mm::{
+    ChunkId, ChunkRef, ImageId, LinkedLayout, Prompt, ReuseSpan, SegmentId, Tokenizer, UserId,
+};
 use mpic::runtime::artifacts::{ModelMeta, WeightsMeta};
 use mpic::util::prop;
 use mpic::util::rng::Rng;
@@ -33,40 +35,55 @@ fn meta() -> ModelMeta {
     }
 }
 
-fn random_prompt(rng: &mut Rng) -> Prompt {
+/// Random prompt mixing text, image and (resolved) chunk segments.
+fn random_prompt(rng: &mut Rng, tok: &Tokenizer) -> Prompt {
     let mut p = Prompt::new(UserId(1)).text("start of the request words here");
     let n_seg = 1 + rng.below(5);
     for i in 0..n_seg {
-        if rng.bool(0.5) {
-            p = p.image(ImageId(100 + i));
-        } else {
-            let words = 1 + rng.below(8);
-            let text: Vec<String> = (0..words).map(|w| format!("w{}", rng.below(50 + w))).collect();
-            p = p.text(&text.join(" "));
+        match rng.below(3) {
+            0 => p = p.image(ImageId(100 + i)),
+            1 => {
+                let words = 1 + rng.below(8);
+                let text: Vec<String> =
+                    (0..words).map(|w| format!("doc{}", rng.below(50 + w))).collect();
+                let tokens = tok.encode(&text.join(" "));
+                p = p.chunk(ChunkRef::resolved(ChunkId(200 + i), tokens));
+            }
+            _ => {
+                let words = 1 + rng.below(8);
+                let text: Vec<String> =
+                    (0..words).map(|w| format!("w{}", rng.below(50 + w))).collect();
+                p = p.text(&text.join(" "));
+            }
         }
     }
     p.text("final question mark")
 }
 
-fn entry_for(meta: &ModelMeta, id: ImageId) -> ImageKv {
+fn entry_for(meta: &ModelMeta, span: &ReuseSpan) -> SegmentKv {
     let shape = KvShape {
         layers: meta.n_layers,
-        tokens: meta.img_tokens,
+        tokens: span.len(),
         heads: meta.n_heads,
         d_head: meta.d_head,
         d_model: meta.d_model,
     };
-    let mut rng = Rng::new(id.0);
-    ImageKv {
-        key: KvKey::new(&meta.name, id),
+    let mut rng = Rng::new(span.seg.raw());
+    let emb = match span.seg {
+        SegmentId::Image(_) => (0..shape.emb_elems()).map(|_| rng.f32()).collect(),
+        SegmentId::Chunk(_) => Vec::new(),
+    };
+    let key = KvKey { model: meta.name.clone(), seg: span.seg };
+    SegmentKv {
+        key,
         shape,
-        emb: (0..shape.emb_elems()).map(|_| rng.f32()).collect(),
+        emb,
         k: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
         v: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
     }
 }
 
-/// MPIC selection is deterministic, sorted, covers text ∪ image-heads, and
+/// MPIC selection is deterministic, sorted, covers text ∪ span-heads, and
 /// always includes the final token.
 #[test]
 fn prop_mpic_selection_invariants() {
@@ -75,7 +92,7 @@ fn prop_mpic_selection_invariants() {
     prop::check(
         "mpic-selection-invariants",
         60,
-        |rng| (random_prompt(rng), rng.below(12) as usize),
+        |rng| (random_prompt(rng, &Tokenizer::new(4096)), rng.below(12) as usize),
         |(prompt, k)| {
             let layout = LinkedLayout::build(prompt, &tok, m.img_tokens, "sys");
             let a = plan(Policy::MpicK(*k), &layout, &[]);
@@ -94,8 +111,8 @@ fn prop_mpic_selection_invariants() {
                     return Err(format!("text token {i} not selected"));
                 }
             }
-            // Budget: |selected| <= text + k * n_images (+1 for last token).
-            let bound = layout.text_len() + k * layout.image_spans.len() + 1;
+            // Budget: |selected| <= text + k * n_spans (+1 for last token).
+            let bound = layout.text_len() + k * layout.reuse_spans.len() + 1;
             if a.selected.len() > bound {
                 return Err(format!("selection {} exceeds bound {bound}", a.selected.len()));
             }
@@ -104,8 +121,8 @@ fn prop_mpic_selection_invariants() {
     );
 }
 
-/// The linked cache contains exactly the stored rows at image slots and
-/// zeros elsewhere, for random prompts.
+/// The linked cache contains exactly the stored rows at reuse slots and
+/// zeros elsewhere, for random prompts (image and chunk spans).
 #[test]
 fn prop_linked_cache_placement() {
     let m = meta();
@@ -114,27 +131,27 @@ fn prop_linked_cache_placement() {
     prop::check(
         "linked-cache-placement",
         40,
-        |rng| random_prompt(rng),
+        |rng| random_prompt(rng, &Tokenizer::new(4096)),
         |prompt| {
             let layout = LinkedLayout::build(prompt, &tok, m.img_tokens, "sys");
-            let entries: Vec<ImageKv> =
-                layout.image_spans.iter().map(|&(id, _, _)| entry_for(&m, id)).collect();
-            let refs: Vec<&ImageKv> = entries.iter().collect();
+            let entries: Vec<SegmentKv> =
+                layout.reuse_spans.iter().map(|s| entry_for(&m, s)).collect();
+            let refs: Vec<&SegmentKv> = entries.iter().collect();
             let bucket = layout.len().next_multiple_of(128);
             let (k, _) = linker.linked_cache(&layout, &refs, bucket).map_err(|e| e.to_string())?;
             let row = m.n_heads * m.d_head;
-            let img_slots: std::collections::HashSet<usize> =
-                layout.image_indices().into_iter().collect();
+            let reuse_slots: std::collections::HashSet<usize> =
+                layout.reuse_indices().into_iter().collect();
             for layer in 0..m.n_layers {
                 for slot in 0..bucket {
                     let base = layer * bucket * row + slot * row;
                     let nonzero = k[base..base + row].iter().any(|&x| x != 0.0);
-                    if img_slots.contains(&slot) {
+                    if reuse_slots.contains(&slot) {
                         if !nonzero {
-                            return Err(format!("image slot {slot} layer {layer} is zero"));
+                            return Err(format!("reuse slot {slot} layer {layer} is zero"));
                         }
                     } else if nonzero {
-                        return Err(format!("non-image slot {slot} layer {layer} not zero"));
+                        return Err(format!("non-reuse slot {slot} layer {layer} not zero"));
                     }
                 }
             }
@@ -143,8 +160,8 @@ fn prop_linked_cache_placement() {
     );
 }
 
-/// CacheBlend's budget: the number of recomputed image tokens equals
-/// ceil(r% · n_image_tokens), regardless of the deviation values.
+/// CacheBlend's budget: the number of recomputed reused tokens equals
+/// ceil(r% · n_reuse_tokens), regardless of the deviation values.
 #[test]
 fn prop_cacheblend_budget() {
     let m = meta();
@@ -153,22 +170,25 @@ fn prop_cacheblend_budget() {
         "cacheblend-budget",
         40,
         |rng| {
-            let prompt = random_prompt(rng);
+            let prompt = random_prompt(rng, &Tokenizer::new(4096));
             let r = 1.0 + rng.f64() * 50.0;
             (prompt, r, rng.next_u64())
         },
         |(prompt, r, seed)| {
             let layout = LinkedLayout::build(prompt, &tok, m.img_tokens, "sys");
+            if layout.reuse_indices().is_empty() {
+                return Ok(()); // nothing to blend
+            }
             let mut rng = Rng::new(*seed);
             let dev: Vec<f32> = (0..layout.len()).map(|_| rng.f32()).collect();
             let pl = plan(Policy::CacheBlend(*r), &layout, &dev);
-            let n_img = layout.image_indices().len();
-            let expect = ((r / 100.0) * n_img as f64).ceil() as usize;
-            let img_selected =
+            let n_reuse = layout.reuse_indices().len();
+            let expect = ((r / 100.0) * n_reuse as f64).ceil() as usize;
+            let reuse_selected =
                 pl.selected.iter().filter(|&&i| i != layout.len() - 1).count();
-            // The last token may or may not be an image token; allow ±1.
-            if img_selected.abs_diff(expect) > 1 {
-                return Err(format!("selected {img_selected} image tokens, expected ~{expect}"));
+            // The last token may or may not be a reused token; allow ±1.
+            if reuse_selected.abs_diff(expect) > 1 {
+                return Err(format!("selected {reuse_selected} reused tokens, expected ~{expect}"));
             }
             Ok(())
         },
@@ -176,7 +196,7 @@ fn prop_cacheblend_budget() {
 }
 
 /// Tokenizer × layout: token count is invariant under re-tokenization and
-/// image spans tile exactly.
+/// reuse spans tile exactly.
 #[test]
 fn prop_layout_structure() {
     let m = meta();
@@ -184,7 +204,7 @@ fn prop_layout_structure() {
     prop::check(
         "layout-structure",
         60,
-        |rng| random_prompt(rng),
+        |rng| random_prompt(rng, &Tokenizer::new(4096)),
         |prompt| {
             let a = LinkedLayout::build(prompt, &tok, m.img_tokens, "sys");
             let b = LinkedLayout::build(prompt, &tok, m.img_tokens, "sys");
@@ -192,21 +212,24 @@ fn prop_layout_structure() {
                 return Err("layout not deterministic".into());
             }
             let mut covered = vec![false; a.len()];
-            for &(_, lo, hi) in &a.image_spans {
-                if hi - lo != m.img_tokens {
-                    return Err("span length != img_tokens".into());
+            for span in &a.reuse_spans {
+                if matches!(span.seg, SegmentId::Image(_)) && span.len() != m.img_tokens {
+                    return Err("image span length != img_tokens".into());
                 }
-                for slot in lo..hi {
+                for slot in span.lo..span.hi {
                     if covered[slot] {
-                        return Err("overlapping image spans".into());
+                        return Err("overlapping reuse spans".into());
                     }
                     covered[slot] = true;
                 }
             }
             let text = a.text_indices().len();
-            let img: usize = a.image_spans.len() * m.img_tokens;
-            if text + img != a.len() {
-                return Err("text+image != total".into());
+            let reused: usize = a.reuse_spans.iter().map(|s| s.len()).sum();
+            if text + reused != a.len() {
+                return Err("text+reuse != total".into());
+            }
+            if reused != a.reuse_indices().len() {
+                return Err("span lengths disagree with reuse_indices".into());
             }
             Ok(())
         },

@@ -11,7 +11,7 @@
 
 use mpic::coordinator::{Engine, EngineConfig, Policy};
 use mpic::kv::KvKey;
-use mpic::mm::{ImageId, Prompt, UserId};
+use mpic::mm::{ChunkId, ImageId, Prompt, SegmentId, UserId};
 use mpic::quality;
 
 fn artifacts_ready() -> bool {
@@ -46,6 +46,8 @@ fn runtime_end_to_end() {
     check_two_step_overhead_visible(&engine);
     check_multi_image_scaling(&engine);
     check_mrag_path(&engine);
+    check_chunk_segment_caching(&engine);
+    check_mrag_chunk_splicing(&engine);
     check_debug_attention_sinks(&engine);
 }
 
@@ -71,7 +73,7 @@ fn check_upload_and_store(engine: &Engine) {
     let img = engine.upload_image(user, "IMAGE#EIFFEL2025").unwrap();
     engine.upload_image(user, "IMAGE#LOUVRE2025").unwrap();
     assert!(engine.static_lib.owns(user, img));
-    let key = KvKey::new(&engine.meta().name, img);
+    let key = KvKey::image(&engine.meta().name, img);
     assert!(engine.store().contains(&key));
     // Disk write-through happened.
     let (_, _, disk_entries) = engine.store().residency();
@@ -167,10 +169,99 @@ fn check_mrag_path(engine: &Engine) {
     let prompt = Prompt::new(UserId(1)).text("recommend hotels near the eiffel tower please");
     let (augmented, ids) = engine.mrag_augment(&prompt, 2).unwrap();
     assert_eq!(ids.len(), 2);
-    assert!(ids.contains(&ImageId::from_handle("IMAGE#HOTEL01")));
+    assert!(ids.contains(&SegmentId::Image(ImageId::from_handle("IMAGE#HOTEL01"))));
     let r = engine.infer(&augmented, Policy::MpicK(16), 4).unwrap();
     assert!(r.first_logits.iter().all(|x| x.is_finite()));
     println!("OK mrag_path: retrieved {ids:?}");
+}
+
+/// The acceptance e2e for position-independent segment caching: two
+/// requests with *different opening text* but the same cached chunk +
+/// image must both serve from the store (no re-encode of either segment),
+/// and mpic-k must recompute exactly the first k tokens of each reusable
+/// span.
+fn check_chunk_segment_caching(engine: &Engine) {
+    let user = UserId(5);
+    let doc = "The harbour festival report describes boats, stalls and the evening \
+               fireworks across three separate quays in considerable detail";
+    let chunk = engine.upload_chunk("CHUNK#FESTIVAL", doc).unwrap();
+    engine.upload_image(user, "IMAGE#QUAY01").unwrap();
+    assert!(engine.stored_chunk_kv(chunk).is_some(), "chunk KV must be stored");
+
+    let prompts = [
+        Prompt::parse(user, "Summarise briefly: CHUNK#FESTIVAL and the photo IMAGE#QUAY01 please"),
+        Prompt::parse(
+            user,
+            "We are planning a very different visit next year — given CHUNK#FESTIVAL \
+             and IMAGE#QUAY01 what changed",
+        ),
+    ];
+    let k = 8usize;
+    let t = engine.meta().img_tokens;
+    for (i, p) in prompts.iter().enumerate() {
+        let layout = engine.layout(p).unwrap();
+        assert_eq!(layout.reuse_spans.len(), 2);
+        let chunk_len = layout
+            .reuse_spans
+            .iter()
+            .find(|s| s.seg == SegmentId::Chunk(chunk))
+            .unwrap()
+            .len();
+        let r = engine.infer(p, Policy::MpicK(k), 4).unwrap();
+        // No re-encode of either segment: both were uploaded upfront.
+        assert_eq!(r.transfer.misses, 0, "request {i} must not recompute any segment");
+        assert_eq!(r.transfer.device_hits + r.transfer.host_hits + r.transfer.disk_hits, 2);
+        // MPIC-k recomputes exactly text + the first k tokens of EVERY
+        // reusable span (chunk included), nothing more.
+        let expect = layout.text_len() + k.min(chunk_len) + k.min(t);
+        assert_eq!(
+            r.n_selected, expect,
+            "request {i}: selected {} tokens, expected text {} + chunk head {} + image head {}",
+            r.n_selected,
+            layout.text_len(),
+            k.min(chunk_len),
+            k.min(t)
+        );
+        assert!(r.first_logits.iter().all(|x| x.is_finite()));
+    }
+    // The two prompts place the shared spans at different linked
+    // positions — the reuse was position-independent.
+    let l0 = engine.layout(&prompts[0]).unwrap();
+    let l1 = engine.layout(&prompts[1]).unwrap();
+    assert_ne!(l0.reuse_spans[0].lo, l1.reuse_spans[0].lo);
+
+    // Exactness: with k covering every span token, MPIC equals prefix.
+    let reference = engine.infer(&prompts[0], Policy::Prefix, 4).unwrap();
+    let l0_max_span = l0.reuse_spans.iter().map(|s| s.len()).max().unwrap();
+    let full = engine.infer(&prompts[0], Policy::MpicK(l0_max_span), 4).unwrap();
+    let s = quality::score(&reference, &full);
+    assert!(s.kl_first < 1e-3, "full selection over chunks must be exact, KL={}", s.kl_first);
+    // Full reuse also runs over chunk spans (two-step path).
+    let fr = engine.infer(&prompts[0], Policy::FullReuse, 4).unwrap();
+    assert_eq!(fr.ttft.steps, 2);
+    println!("OK chunk_segment_caching: chunk span reused at shifted positions, exact at full k");
+}
+
+/// MRAG over chunk references: retrieval splices the cached chunk KV
+/// (not raw text) into the prompt.
+fn check_mrag_chunk_splicing(engine: &Engine) {
+    engine
+        .add_chunk_reference(
+            "CHUNK#GUIDE",
+            "A guidebook chapter recommending quiet riverside walks near the old harbour",
+            "guidebook chapter about riverside walks near the harbour",
+        )
+        .unwrap();
+    let prompt = Prompt::new(UserId(1)).text("suggest riverside walks near the harbour");
+    let (augmented, ids) = engine.mrag_augment(&prompt, 1).unwrap();
+    let chunk = ChunkId::from_handle("CHUNK#GUIDE");
+    assert_eq!(ids, vec![SegmentId::Chunk(chunk)]);
+    let layout = engine.layout(&augmented).unwrap();
+    assert!(layout.reuse_spans.iter().any(|s| s.seg == SegmentId::Chunk(chunk)));
+    let r = engine.infer(&augmented, Policy::MpicK(8), 4).unwrap();
+    assert_eq!(r.transfer.misses, 0, "retrieved chunk must hit the store");
+    assert!(r.first_logits.iter().all(|x| x.is_finite()));
+    println!("OK mrag_chunk_splicing: cached chunk spliced via retrieval");
 }
 
 /// Insight 2 must hold through the full Rust→PJRT path: early image tokens
@@ -182,7 +273,7 @@ fn check_debug_attention_sinks(engine: &Engine) {
     let data = attn_last.f32_data().unwrap();
     let s = data.len() / (meta.n_layers * meta.n_heads);
     let t = meta.img_tokens;
-    let (_, lo, hi) = layout.image_spans[0];
+    let (lo, hi) = (layout.reuse_spans[0].lo, layout.reuse_spans[0].hi);
     let mut head_mass = 0f64;
     let mut tail_mass = 0f64;
     for l in 0..meta.n_layers {

@@ -61,6 +61,7 @@ fn serving_end_to_end() {
     scheduler_continuous_batching();
     tcp_server_v1_compat();
     tcp_server_v2_surface();
+    tcp_server_chunk_flow();
     pipeline_concurrent_streaming();
     pipeline_backpressure_overload();
     pipeline_async_upload_lane();
@@ -393,6 +394,95 @@ fn tcp_server_v2_surface() {
     .unwrap();
     client.join().unwrap();
     println!("OK tcp server v2 surface");
+}
+
+/// The chunk flow over the wire: `chunk.upload`, `CHUNK#` references in
+/// `infer` text, cache management on the chunk entry, and the unknown-
+/// chunk error path.
+fn tcp_server_chunk_flow() {
+    let engine = test_engine("tcpchunk");
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+
+    let client = std::thread::spawn(move || {
+        let addr = addr_rx.recv().unwrap();
+        let mut c = mpic::server::Client::connect(addr).unwrap();
+
+        // Upload a chunk (plain) and one that is also MRAG-indexed.
+        let up = c
+            .call(&v(
+                r#"{"v":2,"id":"c1","op":"chunk.upload","handle":"CHUNK#TCPDOC",
+                    "text":"the shared harbour festival report with boats and stalls"}"#,
+            ))
+            .unwrap();
+        assert_ok(&up);
+        assert!(up.get("tokens").unwrap().as_usize().unwrap() >= 5);
+        assert!(!up.get("indexed").unwrap().as_bool().unwrap());
+        let indexed = c
+            .call(&v(
+                r#"{"v":2,"op":"chunk.upload","handle":"CHUNK#TCPDOC2",
+                    "text":"a guidebook chapter on riverside walks",
+                    "description":"riverside walks guidebook"}"#,
+            ))
+            .unwrap();
+        assert_ok(&indexed);
+        assert!(indexed.get("indexed").unwrap().as_bool().unwrap());
+
+        // Bad handles are rejected with bad_value.
+        assert_code(
+            &c.call(&v(r#"{"v":2,"op":"chunk.upload","handle":"IMAGE#X","text":"t"}"#)).unwrap(),
+            "bad_value",
+        );
+
+        // Two infers with different openers, same chunk: both must be
+        // served with zero misses (device_hits >= 1 ⇒ the chunk KV came
+        // from the store, never re-prefilled).
+        for (id, text) in [
+            ("i1", "Summarise briefly: CHUNK#TCPDOC please"),
+            ("i2", "A totally different opener — what does CHUNK#TCPDOC say"),
+        ] {
+            let inf = c
+                .call(&v(&format!(
+                    r#"{{"v":2,"id":"{id}","op":"infer","user":1,"policy":"mpic-8",
+                        "max_new":2,"text":"{text}"}}"#
+                )))
+                .unwrap();
+            assert_ok(&inf);
+            assert!(inf.get("device_hits").unwrap().as_f64().unwrap() >= 1.0);
+        }
+
+        // The chunk entry is manageable through the cache API and reports
+        // its kind.
+        let stat = c.call(&v(r#"{"v":2,"op":"cache.stat","handle":"CHUNK#TCPDOC"}"#)).unwrap();
+        assert_ok(&stat);
+        assert_eq!(stat.get("kind").unwrap().as_str().unwrap(), "chunk");
+        assert!(stat.get("resident").unwrap().as_bool().unwrap());
+        assert_ok(&c.call(&v(r#"{"v":2,"op":"cache.pin","handle":"CHUNK#TCPDOC"}"#)).unwrap());
+        assert_code(
+            &c.call(&v(r#"{"v":2,"op":"cache.evict","handle":"CHUNK#TCPDOC"}"#)).unwrap(),
+            "pinned",
+        );
+        assert_ok(
+            &c.call(&v(r#"{"v":2,"op":"cache.pin","handle":"CHUNK#TCPDOC","pinned":false}"#))
+                .unwrap(),
+        );
+
+        // Referencing a never-uploaded chunk is a clean error, not a hang.
+        let missing = c
+            .call(&v(
+                r#"{"v":2,"op":"infer","user":1,"max_new":2,"text":"explain CHUNK#NOSUCH now"}"#,
+            ))
+            .unwrap();
+        assert!(!missing.get("ok").unwrap().as_bool().unwrap());
+
+        assert_ok(&c.call(&v(r#"{"v":2,"op":"shutdown"}"#)).unwrap());
+    });
+
+    mpic::server::serve(&engine, "127.0.0.1:0", |a| {
+        addr_tx.send(a).unwrap();
+    })
+    .unwrap();
+    client.join().unwrap();
+    println!("OK tcp server chunk flow");
 }
 
 /// N concurrent clients issue streaming `infer`s: every id must be
