@@ -19,7 +19,7 @@ use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
 use mpic::harness;
-use mpic::server::{Client, ServeConfig};
+use mpic::server::{InferOutcome, InferParams, MpicClient, ServeConfig};
 use mpic::util::bench::{emit, emit_summary, Row, Table};
 use mpic::util::cli::Args;
 use mpic::util::json::Value;
@@ -62,16 +62,12 @@ fn v(s: &str) -> Value {
     Value::parse(s).unwrap()
 }
 
-fn upload_req(c: &Conv, handle: &str, asynchronous: bool) -> Value {
-    let a = if asynchronous { r#","async":true"# } else { "" };
-    v(&format!(r#"{{"op":"upload","user":{}{a},"handle":"{handle}"}}"#, c.user))
+fn async_upload_req(c: &Conv, handle: &str) -> Value {
+    v(&format!(r#"{{"op":"upload","user":{},"async":true,"handle":"{handle}"}}"#, c.user))
 }
 
-fn infer_req(c: &Conv, max_new: usize) -> Value {
-    v(&format!(
-        r#"{{"v":2,"op":"infer","user":{},"policy":"mpic-32","max_new":{max_new},"stream":true,"text":"{}"}}"#,
-        c.user, c.text
-    ))
+fn infer_params(c: &Conv, max_new: usize) -> InferParams {
+    InferParams::new(c.user, &c.text).policy("mpic-32").max_new(max_new)
 }
 
 fn sleep_until(t0: Instant, at_ms: u64) {
@@ -79,21 +75,20 @@ fn sleep_until(t0: Instant, at_ms: u64) {
     std::thread::sleep(target.saturating_duration_since(Instant::now()));
 }
 
-/// Stream one infer, returning (ttft_from_arrival, resp_from_arrival).
-fn timed_infer(c: &mut Client, req: &Value, arrival: Instant) -> (f64, f64) {
+/// Stream one infer through the typed SDK, returning
+/// (ttft_from_arrival, resp_from_arrival).
+fn timed_infer(c: &mut MpicClient, p: &InferParams, arrival: Instant) -> (f64, f64) {
     let mut first: Option<Instant> = None;
-    let fin = c
-        .call_stream(req, |_| {
-            if first.is_none() {
-                first = Some(Instant::now());
-            }
-        })
-        .expect("infer");
-    assert!(
-        fin.get("ok").unwrap().as_bool().unwrap(),
-        "infer must succeed: {}",
-        fin.encode()
-    );
+    let mut h = c.infer_stream(p).expect("infer stream");
+    while h.recv_chunk().expect("stream chunk").is_some() {
+        if first.is_none() {
+            first = Some(Instant::now());
+        }
+    }
+    match h.join().expect("stream join") {
+        InferOutcome::Completed(_) => {}
+        InferOutcome::Cancelled { message } => panic!("infer cancelled: {message}"),
+    }
     let done = Instant::now();
     let ttft = first.unwrap_or(done).duration_since(arrival).as_secs_f64();
     (ttft, done.duration_since(arrival).as_secs_f64())
@@ -117,16 +112,15 @@ fn run_mode(pipeline: bool, convs: &[Conv], max_new: usize) -> Measured {
 
         if !pipeline {
             // Serial loop: one connection, strictly one request at a time.
-            let mut c = Client::connect(addr).unwrap();
+            let mut c = MpicClient::connect(addr).unwrap();
             let mut last_done = t0;
             for conv in &convs_owned {
                 sleep_until(t0, conv.at_ms);
                 let arrival = Instant::now();
                 for h in &conv.handles {
-                    let r = c.call(&upload_req(conv, h, false)).unwrap();
-                    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{}", r.encode());
+                    c.upload(conv.user, h).expect("sync upload");
                 }
-                let (t, r) = timed_infer(&mut c, &infer_req(conv, max_new), arrival);
+                let (t, r) = timed_infer(&mut c, &infer_params(conv, max_new), arrival);
                 ttft.push(t);
                 resp.push(r);
                 last_done = Instant::now();
@@ -140,19 +134,20 @@ fn run_mode(pipeline: bool, convs: &[Conv], max_new: usize) -> Measured {
                 workers.push(std::thread::spawn(move || -> (f64, f64, Instant) {
                     sleep_until(t0, conv.at_ms);
                     let arrival = Instant::now();
-                    let mut c = Client::connect(addr).unwrap();
+                    let mut c = MpicClient::connect(addr).unwrap();
                     let mut jobs = Vec::new();
                     for h in &conv.handles {
-                        let acc = c.call(&upload_req(&conv, h, true)).unwrap();
+                        // The async lane is a raw-envelope feature; the
+                        // typed client's escape hatch carries it.
+                        let acc = c.call_raw(&async_upload_req(&conv, h), |_| {}).unwrap();
                         assert!(acc.get("ok").unwrap().as_bool().unwrap(), "{}", acc.encode());
                         jobs.push(acc.get("job").unwrap().as_u64().unwrap());
                     }
                     // Poll the upload lane so the infer hits the cache.
                     for jid in jobs {
                         loop {
-                            let st = c
-                                .call(&v(&format!(r#"{{"op":"upload.stat","job":{jid}}}"#)))
-                                .unwrap();
+                            let stat_req = v(&format!(r#"{{"op":"upload.stat","job":{jid}}}"#));
+                            let st = c.call_raw(&stat_req, |_| {}).unwrap();
                             let state = st.get("state").unwrap().as_str().unwrap().to_string();
                             assert_ne!(state, "failed", "{}", st.encode());
                             if state == "done" {
@@ -161,7 +156,7 @@ fn run_mode(pipeline: bool, convs: &[Conv], max_new: usize) -> Measured {
                             std::thread::sleep(Duration::from_millis(2));
                         }
                     }
-                    let (t, r) = timed_infer(&mut c, &infer_req(&conv, max_new), arrival);
+                    let (t, r) = timed_infer(&mut c, &infer_params(&conv, max_new), arrival);
                     (t, r, Instant::now())
                 }));
             }
@@ -175,9 +170,8 @@ fn run_mode(pipeline: bool, convs: &[Conv], max_new: usize) -> Measured {
             makespan_s = last_done.duration_since(t0).as_secs_f64();
         }
 
-        let mut shut = Client::connect(addr).unwrap();
-        let bye = shut.call(&v(r#"{"op":"shutdown"}"#)).unwrap();
-        assert!(bye.get("ok").unwrap().as_bool().unwrap());
+        let mut shut = MpicClient::connect(addr).unwrap();
+        shut.shutdown().expect("shutdown");
         Measured { ttft, resp, makespan_s, n_ops, n_infers }
     });
 

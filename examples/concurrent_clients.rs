@@ -1,7 +1,8 @@
-//! The online serving pipeline from a client's point of view: three
-//! concurrent streaming `infer`s interleaving their token chunks, the
-//! async upload lane (`"async":true` + `upload.stat` polling), and
-//! `overloaded` backpressure when the in-flight bound is exceeded.
+//! The online serving pipeline from a client's point of view, driven
+//! through the typed [`MpicClient`] SDK: three concurrent streaming
+//! `infer`s interleaving their token chunks, the async upload lane
+//! (`"async":true` + `upload.stat` polling, via the raw escape hatch),
+//! and `overloaded` backpressure surfacing as a typed [`WireError`].
 //!
 //! ```sh
 //! cargo run --release --example concurrent_clients
@@ -12,8 +13,10 @@ use std::sync::{Arc, Barrier, Mutex};
 use std::time::Duration;
 
 use mpic::harness;
+use mpic::server::api::ErrorCode;
+use mpic::server::client::WireError;
 use mpic::server::pipeline::PipelineConfig;
-use mpic::server::{Client, ServeConfig};
+use mpic::server::{InferParams, MpicClient, ServeConfig};
 use mpic::util::json::Value;
 
 fn req(s: &str) -> Value {
@@ -30,16 +33,20 @@ fn main() -> mpic::Result<()> {
 
     let driver = std::thread::spawn(move || -> mpic::Result<()> {
         let addr = addr_rx.recv().expect("server address");
-        let mut admin = Client::connect(addr)?;
+        let mut admin = MpicClient::connect(addr)?;
 
         println!("== async upload lane: accept now, precompute off the critical path ==");
-        let acc = admin.call(&req(
-            r#"{"v":2,"id":"u1","op":"upload","user":1,"handle":"IMAGE#CITY","async":true}"#,
-        ))?;
+        // The async lane is a raw-envelope feature; the typed client's
+        // escape hatch carries it without giving up id verification.
+        let acc = admin.call_raw(
+            &req(r#"{"v":3,"id":"u1","op":"upload","user":1,"handle":"IMAGE#CITY","async":true}"#),
+            |_| {},
+        )?;
         println!("  accepted: {}", acc.encode());
         let job = acc.get("job")?.as_u64()?;
         loop {
-            let st = admin.call(&req(&format!(r#"{{"op":"upload.stat","job":{job}}}"#)))?;
+            let stat_req = req(&format!(r#"{{"op":"upload.stat","job":{job}}}"#));
+            let st = admin.call_raw(&stat_req, |_| {})?;
             let state = st.get("state")?.as_str()?.to_string();
             println!("  upload.stat -> {state}");
             if state == "done" || state == "failed" {
@@ -56,18 +63,17 @@ fn main() -> mpic::Result<()> {
             let order = Arc::clone(&order);
             let barrier = Arc::clone(&barrier);
             clients.push(std::thread::spawn(move || -> mpic::Result<()> {
-                let mut c = Client::connect(addr)?;
+                let mut c = MpicClient::connect(addr)?;
                 barrier.wait();
-                let fin = c.call_stream(
-                    &req(&format!(
-                        r#"{{"v":2,"id":"{name}","op":"infer","user":1,"policy":"mpic-16","max_new":6,"stream":true,"text":"Describe IMAGE#CITY in detail please"}}"#
-                    )),
-                    |chunk| {
-                        let seq = chunk.get("seq").unwrap().as_usize().unwrap();
-                        order.lock().unwrap().push(format!("{name}{seq}"));
-                    },
+                let mut h = c.infer_stream(
+                    &InferParams::new(1, "Describe IMAGE#CITY in detail please")
+                        .policy("mpic-16")
+                        .max_new(6),
                 )?;
-                anyhow::ensure!(fin.get("ok")?.as_bool()?, "stream failed");
+                while let Some(chunk) = h.recv_chunk()? {
+                    order.lock().unwrap().push(format!("{name}{}", chunk.seq));
+                }
+                h.join()?;
                 Ok(())
             }));
         }
@@ -81,40 +87,43 @@ fn main() -> mpic::Result<()> {
         // long streams, then watch a fourth request bounce.
         let hold = Arc::new(Barrier::new(4));
         let mut streams = Vec::new();
-        for name in ["H1", "H2", "H3"] {
+        for _ in 0..3 {
             let hold = Arc::clone(&hold);
             streams.push(std::thread::spawn(move || -> mpic::Result<()> {
-                let mut c = Client::connect(addr)?;
-                let mut signalled = false;
-                c.call_stream(
-                    &req(&format!(
-                        r#"{{"id":"{name}","op":"infer","user":1,"policy":"mpic-16","max_new":16,"stream":true,"text":"Describe IMAGE#CITY in detail please"}}"#
-                    )),
-                    |_| {
-                        if !signalled {
-                            hold.wait();
-                            signalled = true;
-                        }
-                    },
+                let mut c = MpicClient::connect(addr)?;
+                let mut h = c.infer_stream(
+                    &InferParams::new(1, "Describe IMAGE#CITY in detail please")
+                        .policy("mpic-16")
+                        .max_new(16),
                 )?;
+                let mut signalled = false;
+                while let Some(_chunk) = h.recv_chunk()? {
+                    if !signalled {
+                        hold.wait();
+                        signalled = true;
+                    }
+                }
+                h.join()?;
                 Ok(())
             }));
         }
         hold.wait(); // all three streams are mid-flight
-        let bounced = admin.call(&req(
-            r#"{"v":2,"id":"x","op":"infer","user":1,"text":"Describe IMAGE#CITY please"}"#,
-        ))?;
-        println!("  fourth request: {}", bounced.encode());
+        match admin.infer(&InferParams::new(1, "Describe IMAGE#CITY please")) {
+            Err(e) => match e.downcast_ref::<WireError>() {
+                Some(w) if w.code == ErrorCode::Overloaded => {
+                    println!("  fourth request bounced: {w}")
+                }
+                _ => return Err(e),
+            },
+            Ok(_) => println!("  fourth request served (streams finished first)"),
+        }
         for s in streams {
             s.join().expect("stream thread")?;
         }
 
-        let stats = admin.call(&req(r#"{"v":2,"op":"stats"}"#))?;
-        println!(
-            "== pipeline health == {}",
-            stats.get("metrics")?.get("pipeline")?.encode()
-        );
-        admin.call(&req(r#"{"op":"shutdown"}"#))?;
+        let stats = admin.stats()?;
+        println!("== pipeline health == {}", stats.get("metrics")?.get("pipeline")?.encode());
+        admin.shutdown()?;
         Ok(())
     });
 

@@ -34,7 +34,7 @@ fn main() -> mpic::Result<()> {
         "My partner and I took these photos IMAGE#EIFFEL2025 IMAGE#LOUVRE2025 \
          during our trip. Please describe the landmarks and their history.",
     );
-    let full1 = sessions.session(user).user_turn(user, &turn1);
+    let full1 = sessions.session(&Default::default(), user).user_turn(user, &turn1);
     let exact1 = engine.infer(&full1, Policy::Prefix, 12)?;
     let mpic1 = engine.infer(&full1, Policy::MpicK(32), 12)?;
     println!("round 1 (interleaved text+images, {} tokens):", mpic1.seq_len);
@@ -44,11 +44,11 @@ fn main() -> mpic::Result<()> {
         mpic1.ttft.total_s * 1e3,
         mpic1.seq_len - mpic1.n_selected,
     );
-    sessions.session(user).assistant_reply(&mpic1.tokens);
+    sessions.session(&Default::default(), user).assistant_reply(&mpic1.tokens);
 
     // ---- round 2: retrieval ---------------------------------------------
     let turn2 = Prompt::parse(user, "We plan to visit both. Can you recommend hotels nearby?");
-    let full2 = sessions.session(user).user_turn(user, &turn2);
+    let full2 = sessions.session(&Default::default(), user).user_turn(user, &turn2);
     let (augmented, hits) = engine.mrag_augment(&full2, 2)?;
     println!("\nround 2 (MRAG): retrieved {} references", hits.len());
     let exact2 = engine.infer(&augmented, Policy::Prefix, 12)?;

@@ -48,9 +48,9 @@ fn main() -> mpic::Result<()> {
     for c in &cs {
         let mut sessions = SessionStore::new();
         for turn in &c.turns {
-            let full = sessions.session(c.user).user_turn(c.user, turn);
+            let full = sessions.session(&Default::default(), c.user).user_turn(c.user, turn);
             prompts.push(full);
-            sessions.session(c.user).assistant_reply(&[1, 2, 3]);
+            sessions.session(&Default::default(), c.user).assistant_reply(&[1, 2, 3]);
         }
     }
     println!("serving {} requests ({} convs × {} turns)", prompts.len(), convs, turns);

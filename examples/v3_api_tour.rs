@@ -1,0 +1,109 @@
+//! Tour of the v3 cache-plane API over live TCP, driven entirely through
+//! the typed [`MpicClient`] SDK: tenant namespaces, the lease lifecycle
+//! (grant → renew → release, with expiry), streaming decode through an
+//! [`InferHandle`], and in-flight cancellation.
+//!
+//! ```sh
+//! cargo run --release --example v3_api_tour
+//! ```
+
+use std::time::Duration;
+
+use mpic::harness;
+use mpic::server::{InferOutcome, InferParams, MpicClient};
+
+fn main() -> mpic::Result<()> {
+    mpic::util::logging::init();
+    if !harness::artifacts_ready() {
+        return Ok(());
+    }
+    let engine = harness::experiment_engine("mpic-sim-a", "v3-tour")?;
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+
+    // The engine loop owns this thread (PJRT); the tour drives it from a
+    // client thread, exactly like an external caller would.
+    let tour = std::thread::spawn(move || -> mpic::Result<()> {
+        let addr = addr_rx.recv().expect("server address");
+
+        println!("== two tenants upload the same handle ==");
+        let mut alice = MpicClient::connect(addr)?.with_namespace("tenant-alice")?;
+        let mut bob = MpicClient::connect(addr)?.with_namespace("tenant-bob")?;
+        let a_hex = alice.upload(7, "IMAGE#LOGO")?;
+        let b_hex = bob.upload(7, "IMAGE#LOGO")?;
+        println!("  alice's IMAGE#LOGO -> {a_hex}\n  bob's   IMAGE#LOGO -> {b_hex}");
+        println!("  (same content hash, distinct cache entries — see cache.list below)");
+        for (name, c) in [("alice", &mut alice), ("bob", &mut bob)] {
+            let entries = c.cache_list()?;
+            let plural = if entries.len() == 1 { "y" } else { "ies" };
+            println!("  {name} sees {} entr{plural}", entries.len());
+        }
+
+        println!("== lease lifecycle: grant, refuse evict, renew, release ==");
+        let lease = alice.lease("IMAGE#LOGO", Some(60_000))?;
+        println!("  leased for 60s: lease id {}", lease.id);
+        match alice.cache_evict("IMAGE#LOGO") {
+            Err(e) => println!("  evict while leased: {e:#}"),
+            Ok(()) => println!("  BUG: evict succeeded on a leased entry"),
+        }
+        let lease = alice.lease_renew(&lease, Some(120_000))?;
+        println!("  renewed to 120s");
+        alice.lease_release(&lease)?;
+        println!("  released; evict now succeeds: {:?}", alice.cache_evict("IMAGE#LOGO"));
+
+        println!("== streaming decode + mid-flight cancellation ==");
+        bob.upload(7, "IMAGE#SKYLINE")?;
+        let mut handle = bob.infer_stream(
+            &InferParams::new(7, "Describe IMAGE#SKYLINE in detail please")
+                .policy("mpic-16")
+                .max_new(24),
+        )?;
+        let mut seen = 0usize;
+        while let Some(chunk) = handle.recv_chunk()? {
+            seen += 1;
+            if chunk.seq == 2 {
+                println!("  3 tokens in — cancelling");
+                handle.cancel()?;
+            }
+        }
+        match handle.join()? {
+            InferOutcome::Cancelled { message } => {
+                println!("  stream cancelled after {seen} chunks: {message}")
+            }
+            InferOutcome::Completed(r) => {
+                let n = r.tokens.len();
+                println!("  stream finished with {n} tokens (cancel raced completion)")
+            }
+        }
+
+        println!("== the slot freed by the cancel serves the next request ==");
+        let r = bob.infer(
+            &InferParams::new(7, "Briefly describe IMAGE#SKYLINE").policy("mpic-16").max_new(2),
+        )?;
+        let (n, ttft_ms) = (r.tokens.len(), r.ttft_s * 1e3);
+        println!("  {n} tokens, ttft {ttft_ms:.1} ms, device hits {}", r.device_hits);
+
+        println!("== pipeline health (cancelled counter, lease stats) ==");
+        let stats = bob.stats()?;
+        let pipe = stats.get("metrics")?.get("pipeline")?;
+        let kv = stats.get("metrics")?.get("kv")?;
+        println!(
+            "  cancelled={} leases_acquired={} leases_released={}",
+            pipe.get("cancelled")?.as_f64()?,
+            kv.get("leases_acquired")?.as_f64()?,
+            kv.get("leases_released")?.as_f64()?,
+        );
+
+        // Give the engine loop a breath so the cancelled slot is reaped,
+        // then stop the server.
+        std::thread::sleep(Duration::from_millis(50));
+        bob.shutdown()?;
+        Ok(())
+    });
+
+    mpic::server::serve(&engine, "127.0.0.1:0", |a| {
+        addr_tx.send(a).expect("publish address");
+    })?;
+    tour.join().expect("tour thread")?;
+    println!("v3 API tour complete ✓");
+    Ok(())
+}

@@ -13,16 +13,21 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use anyhow::anyhow;
+use anyhow::{anyhow, bail};
 
 use crate::kv::KvStore;
-use crate::mm::ChunkId;
+use crate::mm::{ChunkId, Namespace};
 use crate::Result;
+
+/// Default per-namespace chunk quota (see [`ChunkLibrary::with_quota`]).
+pub const DEFAULT_CHUNK_QUOTA: usize = 1024;
 
 /// Registration record of one uploaded chunk.
 #[derive(Debug, Clone)]
 pub struct ChunkMeta {
     pub id: ChunkId,
+    /// Tenant namespace the chunk was uploaded under.
+    pub ns: Namespace,
     pub handle: String,
     pub text: String,
     /// Canonical token stream (tokenized once at upload; shared so every
@@ -30,57 +35,123 @@ pub struct ChunkMeta {
     pub tokens: Arc<Vec<i32>>,
 }
 
-/// The library: chunk id → metadata, backed by the tiered [`KvStore`]
-/// (which holds the actual KV bytes under `KvKey::chunk`).
+/// The library: (namespace, chunk id) → metadata, backed by the tiered
+/// [`KvStore`] (which holds the actual KV bytes under `KvKey::chunk`).
+/// Two tenants' `CHUNK#DOC` are independent records with independent
+/// token streams.
 pub struct ChunkLibrary {
     store: Arc<KvStore>,
-    chunks: Mutex<HashMap<ChunkId, ChunkMeta>>,
+    /// Per-namespace registration cap: chunk records hold the source text
+    /// and token stream forever, so like the Static Library's per-user
+    /// file quota, registration must have a rejection path before it
+    /// becomes an unbounded memory/disk sink.
+    quota: usize,
+    chunks: Mutex<HashMap<(Namespace, ChunkId), ChunkMeta>>,
 }
 
 impl ChunkLibrary {
     pub fn new(store: Arc<KvStore>) -> ChunkLibrary {
-        ChunkLibrary { store, chunks: Mutex::new(HashMap::new()) }
+        Self::with_quota(store, DEFAULT_CHUNK_QUOTA)
+    }
+
+    /// A library with an explicit per-namespace chunk quota.
+    pub fn with_quota(store: Arc<KvStore>, quota: usize) -> ChunkLibrary {
+        ChunkLibrary { store, quota, chunks: Mutex::new(HashMap::new()) }
     }
 
     pub fn store(&self) -> &Arc<KvStore> {
         &self.store
     }
 
-    /// Register an uploaded chunk. The caller (engine upload path)
-    /// computes and `put`s the KV into the store; this records the token
-    /// stream. Re-registering a handle replaces its record.
-    pub fn register(&self, handle: &str, text: &str, tokens: Vec<i32>) -> ChunkId {
+    /// Register an uploaded chunk in the default namespace (the pre-v3
+    /// surface; see [`ChunkLibrary::register_in`]).
+    pub fn register(&self, handle: &str, text: &str, tokens: Vec<i32>) -> Result<ChunkId> {
+        self.register_in(&Namespace::default(), handle, text, tokens)
+    }
+
+    /// Would registering `id` in `ns` fit the namespace's quota right
+    /// now? The engine calls this *before* paying for a chunk's prefill
+    /// so over-quota uploads are rejected cheaply; [`register_in`]
+    /// re-checks authoritatively under the lock.
+    ///
+    /// [`register_in`]: ChunkLibrary::register_in
+    pub fn ensure_capacity(&self, ns: &Namespace, id: ChunkId) -> Result<()> {
+        let g = self.chunks.lock().unwrap();
+        if !g.contains_key(&(ns.clone(), id))
+            && g.keys().filter(|(n, _)| n == ns).count() >= self.quota
+        {
+            bail!("namespace {ns} exceeds chunk quota of {}", self.quota);
+        }
+        Ok(())
+    }
+
+    /// Register an uploaded chunk under a tenant namespace. The caller
+    /// (engine upload path) computes and `put`s the KV into the store
+    /// *first* — registration is the final, atomic step, so a failed
+    /// upload never leaves a token stream paired with stale stored KV.
+    /// Re-registering a handle in the same namespace replaces its record;
+    /// registering a *new* handle past the namespace's quota is refused.
+    pub fn register_in(
+        &self,
+        ns: &Namespace,
+        handle: &str,
+        text: &str,
+        tokens: Vec<i32>,
+    ) -> Result<ChunkId> {
         let id = ChunkId::from_handle(handle);
-        self.chunks.lock().unwrap().insert(
-            id,
+        let mut g = self.chunks.lock().unwrap();
+        if !g.contains_key(&(ns.clone(), id)) {
+            let in_ns = g.keys().filter(|(n, _)| n == ns).count();
+            if in_ns >= self.quota {
+                bail!("namespace {ns} exceeds chunk quota of {}", self.quota);
+            }
+        }
+        g.insert(
+            (ns.clone(), id),
             ChunkMeta {
                 id,
+                ns: ns.clone(),
                 handle: handle.to_string(),
                 text: text.to_string(),
                 tokens: Arc::new(tokens),
             },
         );
-        id
+        Ok(id)
+    }
+
+    /// Canonical token stream of a default-namespace chunk.
+    pub fn tokens(&self, id: ChunkId) -> Result<Arc<Vec<i32>>> {
+        self.tokens_in(&Namespace::default(), id)
     }
 
     /// Canonical token stream of a chunk (shared, refcount bump), or an
-    /// error for unknown ids (an unresolved `CHUNK#...` reference to a
-    /// never-uploaded chunk).
-    pub fn tokens(&self, id: ChunkId) -> Result<Arc<Vec<i32>>> {
+    /// error for ids unknown *in this namespace* (an unresolved
+    /// `CHUNK#...` reference to a chunk this tenant never uploaded).
+    pub fn tokens_in(&self, ns: &Namespace, id: ChunkId) -> Result<Arc<Vec<i32>>> {
         self.chunks
             .lock()
             .unwrap()
-            .get(&id)
+            .get(&(ns.clone(), id))
             .map(|m| Arc::clone(&m.tokens))
-            .ok_or_else(|| anyhow!("no uploaded chunk for {id:?} (upload_chunk first)"))
+            .ok_or_else(|| {
+                anyhow!("no uploaded chunk for {id:?} in namespace {ns} (upload_chunk first)")
+            })
     }
 
     pub fn get(&self, id: ChunkId) -> Option<ChunkMeta> {
-        self.chunks.lock().unwrap().get(&id).cloned()
+        self.get_in(&Namespace::default(), id)
+    }
+
+    pub fn get_in(&self, ns: &Namespace, id: ChunkId) -> Option<ChunkMeta> {
+        self.chunks.lock().unwrap().get(&(ns.clone(), id)).cloned()
     }
 
     pub fn contains(&self, id: ChunkId) -> bool {
-        self.chunks.lock().unwrap().contains_key(&id)
+        self.contains_in(&Namespace::default(), id)
+    }
+
+    pub fn contains_in(&self, ns: &Namespace, id: ChunkId) -> bool {
+        self.chunks.lock().unwrap().contains_key(&(ns.clone(), id))
     }
 
     pub fn len(&self) -> usize {
@@ -91,10 +162,11 @@ impl ChunkLibrary {
         self.len() == 0
     }
 
-    /// All registered chunks, sorted by handle (deterministic listings).
+    /// All registered chunks across namespaces, sorted by (namespace,
+    /// handle) for deterministic listings.
     pub fn all(&self) -> Vec<ChunkMeta> {
         let mut out: Vec<ChunkMeta> = self.chunks.lock().unwrap().values().cloned().collect();
-        out.sort_by(|a, b| a.handle.cmp(&b.handle));
+        out.sort_by(|a, b| (&a.ns, &a.handle).cmp(&(&b.ns, &b.handle)));
         out
     }
 }
@@ -115,7 +187,7 @@ mod tests {
     #[test]
     fn register_and_resolve_tokens() {
         let l = lib();
-        let id = l.register("CHUNK#DOC1", "some doc text", vec![11, 12, 13]);
+        let id = l.register("CHUNK#DOC1", "some doc text", vec![11, 12, 13]).unwrap();
         assert_eq!(id, ChunkId::from_handle("CHUNK#DOC1"));
         assert_eq!(*l.tokens(id).unwrap(), vec![11, 12, 13]);
         assert!(l.contains(id));
@@ -126,8 +198,8 @@ mod tests {
     #[test]
     fn reregistering_replaces() {
         let l = lib();
-        let id = l.register("CHUNK#DOC1", "v1", vec![1]);
-        l.register("CHUNK#DOC1", "v2", vec![2, 3]);
+        let id = l.register("CHUNK#DOC1", "v1", vec![1]).unwrap();
+        l.register("CHUNK#DOC1", "v2", vec![2, 3]).unwrap();
         assert_eq!(l.len(), 1);
         assert_eq!(*l.tokens(id).unwrap(), vec![2, 3]);
         assert_eq!(l.get(id).unwrap().text, "v2");
@@ -136,10 +208,46 @@ mod tests {
     #[test]
     fn listing_is_sorted_by_handle() {
         let l = lib();
-        l.register("CHUNK#B", "b", vec![2]);
-        l.register("CHUNK#A", "a", vec![1]);
+        l.register("CHUNK#B", "b", vec![2]).unwrap();
+        l.register("CHUNK#A", "a", vec![1]).unwrap();
         let all = l.all();
         assert_eq!(all.len(), 2);
         assert_eq!(all[0].handle, "CHUNK#A");
+    }
+
+    #[test]
+    fn quota_bounds_registrations_per_namespace() {
+        let dir = std::env::temp_dir().join(format!("mpic-clibq-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store =
+            Arc::new(KvStore::new(StoreConfig { disk_dir: dir, ..Default::default() }).unwrap());
+        let l = ChunkLibrary::with_quota(store, 2);
+        let ns = Namespace::new("tenant-a").unwrap();
+        l.register_in(&ns, "CHUNK#1", "one", vec![1]).unwrap();
+        l.register_in(&ns, "CHUNK#2", "two", vec![2]).unwrap();
+        let err = l.register_in(&ns, "CHUNK#3", "three", vec![3]).unwrap_err().to_string();
+        assert!(err.contains("quota"), "{err}");
+        // Re-registering an existing handle is allowed at the cap...
+        l.register_in(&ns, "CHUNK#1", "one v2", vec![9]).unwrap();
+        // ...and other namespaces have their own budget.
+        l.register("CHUNK#3", "default-ns three", vec![3]).unwrap();
+        assert_eq!(l.len(), 3);
+    }
+
+    #[test]
+    fn namespaces_isolate_same_handle() {
+        let l = lib();
+        let (a, b) = (Namespace::new("tenant-a").unwrap(), Namespace::new("tenant-b").unwrap());
+        let id_a = l.register_in(&a, "CHUNK#DOC", "tenant a's doc", vec![1, 2]).unwrap();
+        let id_b = l.register_in(&b, "CHUNK#DOC", "tenant b's doc", vec![3]).unwrap();
+        assert_eq!(id_a, id_b, "handle-derived ids agree; the namespace disambiguates");
+        assert_eq!(*l.tokens_in(&a, id_a).unwrap(), vec![1, 2]);
+        assert_eq!(*l.tokens_in(&b, id_b).unwrap(), vec![3]);
+        // Neither tenant's upload leaks into the default namespace.
+        assert!(l.tokens(id_a).is_err());
+        assert!(!l.contains(id_a));
+        assert!(l.contains_in(&a, id_a));
+        assert_eq!(l.len(), 2);
+        assert_eq!(l.get_in(&b, id_b).unwrap().text, "tenant b's doc");
     }
 }

@@ -12,21 +12,34 @@ use std::sync::{Arc, Mutex};
 use anyhow::anyhow;
 
 use crate::kv::KvStore;
-use crate::mm::{ImageId, SegmentId};
+use crate::mm::{ImageId, Namespace, SegmentId};
 use crate::Result;
 
 /// One administrable reference: a reusable segment plus the text it is
-/// indexed under.
+/// indexed under, scoped to the tenant namespace it serves.
 #[derive(Debug, Clone)]
 pub struct Reference {
     pub seg: SegmentId,
+    /// Tenant the reference belongs to; MRAG retrieval only surfaces a
+    /// tenant's own references (default = the pre-v3 global set).
+    pub ns: Namespace,
     pub description: String,
 }
 
 impl Reference {
-    /// Convenience constructor for the common image case.
+    /// Convenience constructor for the common image case (default ns).
     pub fn image(image: ImageId, description: impl Into<String>) -> Reference {
-        Reference { seg: SegmentId::Image(image), description: description.into() }
+        Reference {
+            seg: SegmentId::Image(image),
+            ns: Namespace::default(),
+            description: description.into(),
+        }
+    }
+
+    /// Scope the reference to a tenant namespace.
+    pub fn in_ns(mut self, ns: &Namespace) -> Reference {
+        self.ns = ns.clone();
+        self
     }
 }
 
@@ -77,18 +90,26 @@ impl DynamicLibrary {
     }
 
     pub fn by_segment(&self, seg: SegmentId) -> Result<Reference> {
+        self.by_segment_in(&Namespace::default(), seg)
+    }
+
+    pub fn by_segment_in(&self, ns: &Namespace, seg: SegmentId) -> Result<Reference> {
         self.refs
             .lock()
             .unwrap()
             .iter()
-            .find(|r| r.seg == seg)
+            .find(|r| r.seg == seg && r.ns == *ns)
             .cloned()
-            .ok_or_else(|| anyhow!("no dynamic reference for {seg:?}"))
+            .ok_or_else(|| anyhow!("no dynamic reference for {seg:?} in namespace {ns}"))
     }
 
     /// Image-flavoured lookup (ownership checks on image prompts).
     pub fn by_image(&self, image: ImageId) -> Result<Reference> {
         self.by_segment(SegmentId::Image(image))
+    }
+
+    pub fn by_image_in(&self, ns: &Namespace, image: ImageId) -> Result<Reference> {
+        self.by_segment_in(ns, SegmentId::Image(image))
     }
 }
 
@@ -124,6 +145,7 @@ mod tests {
         d.add(Reference::image(ImageId(9), "louvre at night"));
         d.add(Reference {
             seg: SegmentId::Chunk(ChunkId(4)),
+            ns: Namespace::default(),
             description: "guidebook chapter on the louvre".into(),
         });
         assert_eq!(d.by_image(ImageId(9)).unwrap().description, "louvre at night");
@@ -132,5 +154,16 @@ mod tests {
         assert!(c.description.contains("guidebook"));
         // An image and a chunk with equal raw ids are distinct references.
         assert!(d.by_segment(SegmentId::Image(ImageId(4))).is_err());
+    }
+
+    #[test]
+    fn references_are_namespace_scoped() {
+        let d = dl();
+        let ns = Namespace::new("tenant-a").unwrap();
+        d.add(Reference::image(ImageId(5), "shared logo").in_ns(&ns));
+        assert!(d.by_image(ImageId(5)).is_err(), "default ns must not see tenant refs");
+        let r = d.by_image_in(&ns, ImageId(5)).unwrap();
+        assert_eq!(r.ns, ns);
+        assert!(d.by_image_in(&Namespace::new("tenant-b").unwrap(), ImageId(5)).is_err());
     }
 }

@@ -12,7 +12,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, bail};
 
 use crate::kv::{KvKey, KvStore};
-use crate::mm::{ImageId, UserId};
+use crate::mm::{ImageId, Namespace, UserId};
 use crate::Result;
 
 /// Registration record of one uploaded file.
@@ -23,12 +23,14 @@ pub struct FileMeta {
     pub uploaded_at_ms: u64,
 }
 
-/// The library: user → handle → image, backed by the tiered [`KvStore`].
+/// The library: (namespace, user) → handle → image, backed by the tiered
+/// [`KvStore`]. User ids are tenant-local: `user 1` in two namespaces are
+/// two quota buckets with disjoint files.
 pub struct StaticLibrary {
     store: Arc<KvStore>,
     /// Per-user quota (number of files).
     quota: usize,
-    files: Mutex<HashMap<UserId, BTreeMap<String, FileMeta>>>,
+    files: Mutex<HashMap<(Namespace, UserId), BTreeMap<String, FileMeta>>>,
 }
 
 impl StaticLibrary {
@@ -40,11 +42,22 @@ impl StaticLibrary {
         &self.store
     }
 
+    /// Register an uploaded file in the default namespace.
+    pub fn register(&self, user: UserId, handle: &str, image: ImageId) -> Result<()> {
+        self.register_in(&Namespace::default(), user, handle, image)
+    }
+
     /// Register an uploaded file. The caller (engine upload path) computes
     /// and `put`s the KV into the store; this records ownership.
-    pub fn register(&self, user: UserId, handle: &str, image: ImageId) -> Result<()> {
+    pub fn register_in(
+        &self,
+        ns: &Namespace,
+        user: UserId,
+        handle: &str,
+        image: ImageId,
+    ) -> Result<()> {
         let mut g = self.files.lock().unwrap();
-        let entry = g.entry(user).or_default();
+        let entry = g.entry((ns.clone(), user)).or_default();
         if entry.len() >= self.quota && !entry.contains_key(handle) {
             bail!("user {user:?} exceeds upload quota of {}", self.quota);
         }
@@ -61,34 +74,57 @@ impl StaticLibrary {
 
     /// Resolve a handle *for this user only* (logical separation).
     pub fn resolve(&self, user: UserId, handle: &str) -> Result<ImageId> {
+        self.resolve_in(&Namespace::default(), user, handle)
+    }
+
+    pub fn resolve_in(&self, ns: &Namespace, user: UserId, handle: &str) -> Result<ImageId> {
         let g = self.files.lock().unwrap();
-        g.get(&user)
+        g.get(&(ns.clone(), user))
             .and_then(|m| m.get(handle))
             .map(|f| f.image)
-            .ok_or_else(|| anyhow!("user {user:?} has no file {handle:?}"))
+            .ok_or_else(|| anyhow!("user {user:?} has no file {handle:?} in namespace {ns}"))
     }
 
     /// Does this user own (a registration of) this image?
     pub fn owns(&self, user: UserId, image: ImageId) -> bool {
+        self.owns_in(&Namespace::default(), user, image)
+    }
+
+    pub fn owns_in(&self, ns: &Namespace, user: UserId, image: ImageId) -> bool {
         let g = self.files.lock().unwrap();
-        g.get(&user).map(|m| m.values().any(|f| f.image == image)).unwrap_or(false)
+        g.get(&(ns.clone(), user)).map(|m| m.values().any(|f| f.image == image)).unwrap_or(false)
     }
 
     /// List a user's files.
     pub fn list(&self, user: UserId) -> Vec<FileMeta> {
+        self.list_in(&Namespace::default(), user)
+    }
+
+    pub fn list_in(&self, ns: &Namespace, user: UserId) -> Vec<FileMeta> {
         let g = self.files.lock().unwrap();
-        g.get(&user).map(|m| m.values().cloned().collect()).unwrap_or_default()
+        g.get(&(ns.clone(), user)).map(|m| m.values().cloned().collect()).unwrap_or_default()
     }
 
     /// Delete a file registration and evict its cache entries.
     pub fn remove(&self, user: UserId, handle: &str, model: &str) -> Result<()> {
+        self.remove_in(&Namespace::default(), user, handle, model)
+    }
+
+    pub fn remove_in(
+        &self,
+        ns: &Namespace,
+        user: UserId,
+        handle: &str,
+        model: &str,
+    ) -> Result<()> {
         let mut g = self.files.lock().unwrap();
-        let entry = g.get_mut(&user).ok_or_else(|| anyhow!("unknown user"))?;
+        let entry =
+            g.get_mut(&(ns.clone(), user)).ok_or_else(|| anyhow!("unknown user"))?;
         let meta = entry.remove(handle).ok_or_else(|| anyhow!("unknown handle {handle:?}"))?;
         drop(g);
-        // Pinned entries survive removal of the registration (admin can
-        // still unpin + evict through the cache API).
-        let _ = self.store.evict(&KvKey::image(model, meta.image));
+        // Leased entries survive removal of the registration (admin can
+        // still release + evict through the cache API).
+        let _ = self.store.evict(&KvKey::image(model, meta.image).in_ns(ns));
         Ok(())
     }
 }
@@ -150,6 +186,26 @@ mod tests {
         l.remove(UserId(1), "IMAGE#A", "test-model").unwrap();
         assert!(l.resolve(UserId(1), "IMAGE#A").is_err());
         assert!(l.remove(UserId(1), "IMAGE#A", "test-model").is_err());
+    }
+
+    #[test]
+    fn namespaces_isolate_users_and_quotas() {
+        let l = lib();
+        let (a, b) = (Namespace::new("tenant-a").unwrap(), Namespace::new("tenant-b").unwrap());
+        // Fill tenant A's user-1 quota...
+        for i in 0..4 {
+            l.register_in(&a, UserId(1), &format!("IMAGE#{i}"), ImageId(i)).unwrap();
+        }
+        assert!(l.register_in(&a, UserId(1), "IMAGE#4", ImageId(4)).is_err());
+        // ...tenant B's user 1 is a separate bucket with a fresh quota.
+        l.register_in(&b, UserId(1), "IMAGE#0", ImageId(100)).unwrap();
+        assert_eq!(l.resolve_in(&b, UserId(1), "IMAGE#0").unwrap(), ImageId(100));
+        assert_eq!(l.resolve_in(&a, UserId(1), "IMAGE#0").unwrap(), ImageId(0));
+        // Ownership and listings stay tenant-local.
+        assert!(l.owns_in(&a, UserId(1), ImageId(0)));
+        assert!(!l.owns_in(&b, UserId(1), ImageId(0)));
+        assert!(l.resolve(UserId(1), "IMAGE#0").is_err(), "default ns sees neither tenant");
+        assert_eq!(l.list_in(&b, UserId(1)).len(), 1);
     }
 
     #[test]

@@ -20,8 +20,8 @@ use crate::cache::{ChunkLibrary, DynamicLibrary, Reference, StaticLibrary};
 use crate::kv::store::StoreConfig;
 use crate::kv::{EntryInfo, KvKey, KvShape, KvStore, SegmentKv, TransferEngine, TransferReport};
 use crate::mm::{
-    synth_patches, ChunkId, ChunkRef, ImageId, LinkedLayout, Prompt, Segment, SegmentId,
-    Tokenizer, UserId,
+    synth_patches, ChunkId, ChunkRef, ImageId, LinkedLayout, Namespace, Prompt, Segment,
+    SegmentId, Tokenizer, UserId,
 };
 use crate::retriever::Retriever;
 use crate::runtime::{ExecStats, ModelMeta, Runtime, Tensor};
@@ -45,6 +45,8 @@ pub struct EngineConfig {
     pub enforce_ownership: bool,
     /// Per-user static-library quota (files).
     pub user_quota: usize,
+    /// Per-namespace chunk-library quota (registered chunks).
+    pub chunk_quota: usize,
 }
 
 impl Default for EngineConfig {
@@ -58,6 +60,7 @@ impl Default for EngineConfig {
             system_prompt: "You are a helpful multimodal assistant".into(),
             enforce_ownership: false,
             user_quota: 64,
+            chunk_quota: crate::cache::chunk_lib::DEFAULT_CHUNK_QUOTA,
         }
     }
 }
@@ -167,7 +170,7 @@ impl Engine {
         let store = Arc::new(KvStore::with_pool(cfg.store.clone(), codec_pool)?);
         let static_lib = StaticLibrary::new(Arc::clone(&store), cfg.user_quota);
         let dynamic_lib = DynamicLibrary::new(Arc::clone(&store));
-        let chunk_lib = ChunkLibrary::new(Arc::clone(&store));
+        let chunk_lib = ChunkLibrary::with_quota(Arc::clone(&store), cfg.chunk_quota);
         let transfer = TransferEngine::new(Arc::clone(&pool));
         Ok(Engine {
             runtime,
@@ -222,8 +225,16 @@ impl Engine {
     // Upload path (workflow ①)
     // ------------------------------------------------------------------
 
-    /// Compute an image's KV via the `encode_image_kv` artifact.
+    /// Compute an image's KV via the `encode_image_kv` artifact (default
+    /// namespace).
     pub fn encode_image(&self, image: ImageId) -> Result<SegmentKv> {
+        self.encode_image_in(&Namespace::default(), image)
+    }
+
+    /// Compute an image's KV, keyed under a tenant namespace. The pixels
+    /// (and therefore the K/V values) are namespace-independent; only the
+    /// cache key differs, which is what keeps tenants' entries apart.
+    pub fn encode_image_in(&self, ns: &Namespace, image: ImageId) -> Result<SegmentKv> {
         let t = self.meta.img_tokens;
         let patches = synth_patches(image, t, self.meta.patch_dim);
         let art = Runtime::art_encode_image(&self.meta.name);
@@ -239,7 +250,7 @@ impl Engine {
             d_model: self.meta.d_model,
         };
         let kv = SegmentKv {
-            key: KvKey::image(&self.meta.name, image),
+            key: KvKey::image(&self.meta.name, image).in_ns(ns),
             shape,
             emb: outs[0].f32_data()?.to_vec(),
             k: outs[1].f32_data()?.to_vec(),
@@ -256,6 +267,16 @@ impl Engine {
     /// sink, which is the paper's position-independence recipe applied to
     /// text.
     pub fn encode_chunk_kv(&self, chunk: ChunkId, tokens: &[i32]) -> Result<SegmentKv> {
+        self.encode_chunk_kv_in(&Namespace::default(), chunk, tokens)
+    }
+
+    /// Namespaced variant of [`Engine::encode_chunk_kv`].
+    pub fn encode_chunk_kv_in(
+        &self,
+        ns: &Namespace,
+        chunk: ChunkId,
+        tokens: &[i32],
+    ) -> Result<SegmentKv> {
         let n = tokens.len();
         anyhow::ensure!(n >= 1, "chunk must tokenize to at least one token");
         let bucket = self.runtime.manifest().seq_bucket_for(n)?;
@@ -295,7 +316,7 @@ impl Engine {
             Ok(out)
         };
         let kv = SegmentKv {
-            key: KvKey::chunk(&self.meta.name, chunk),
+            key: KvKey::chunk(&self.meta.name, chunk).in_ns(ns),
             shape,
             emb: Vec::new(),
             k: extract(&k_full)?,
@@ -307,25 +328,31 @@ impl Engine {
 
     /// Compute a segment's KV from scratch, whichever kind it is (the
     /// transfer engine's miss lane; chunk misses re-derive tokens from
-    /// the chunk library).
+    /// the chunk library, scoped to the key's namespace).
     pub fn compute_segment_kv(&self, key: &KvKey) -> Result<SegmentKv> {
         match key.seg {
-            SegmentId::Image(image) => self.encode_image(image),
+            SegmentId::Image(image) => self.encode_image_in(&key.ns, image),
             SegmentId::Chunk(chunk) => {
-                let tokens = self.chunk_lib.tokens(chunk)?;
-                self.encode_chunk_kv(chunk, &tokens)
+                let tokens = self.chunk_lib.tokens_in(&key.ns, chunk)?;
+                self.encode_chunk_kv_in(&key.ns, chunk, &tokens)
             }
         }
     }
 
     /// Upload: synth pixels → encode → store (device + disk write-through)
-    /// → register in the user's static library.
+    /// → register in the user's static library (default namespace).
     pub fn upload_image(&self, user: UserId, handle: &str) -> Result<ImageId> {
+        self.upload_image_in(&Namespace::default(), user, handle)
+    }
+
+    /// Namespaced upload: the KV entry and the registration both live
+    /// under the tenant's namespace.
+    pub fn upload_image_in(&self, ns: &Namespace, user: UserId, handle: &str) -> Result<ImageId> {
         let image = ImageId::from_handle(handle);
         let t0 = Instant::now();
-        let kv = self.encode_image(image).context("upload: encode")?;
+        let kv = self.encode_image_in(ns, image).context("upload: encode")?;
         self.store.put(kv)?;
-        self.static_lib.register(user, handle, image)?;
+        self.static_lib.register_in(ns, user, handle, image)?;
         self.metrics.record_upload(t0.elapsed().as_secs_f64());
         Ok(image)
     }
@@ -334,23 +361,43 @@ impl Engine {
     /// text-only prefill → extract K/V rows → store → register in the
     /// chunk library so prompts can reference `CHUNK#HANDLE`.
     pub fn upload_chunk(&self, handle: &str, text: &str) -> Result<ChunkId> {
+        self.upload_chunk_in(&Namespace::default(), handle, text)
+    }
+
+    /// Namespaced variant of [`Engine::upload_chunk`].
+    pub fn upload_chunk_in(&self, ns: &Namespace, handle: &str, text: &str) -> Result<ChunkId> {
         let chunk = ChunkId::from_handle(handle);
         let tokens = self.tokenizer.encode(text);
         anyhow::ensure!(!tokens.is_empty(), "chunk {handle:?} has no tokens");
         let t0 = Instant::now();
-        let kv = self.encode_chunk_kv(chunk, &tokens).context("upload_chunk: prefill")?;
+        // Quota-check before the expensive prefill (cheap rejection), but
+        // register only *after* the KV landed in the store: a failed
+        // re-upload must not leave fresh tokens paired with stale stored
+        // KV, which would poison every later request using the chunk.
+        self.chunk_lib.ensure_capacity(ns, chunk)?;
+        let kv = self.encode_chunk_kv_in(ns, chunk, &tokens).context("upload_chunk: prefill")?;
         self.store.put(kv)?;
-        self.chunk_lib.register(handle, text, tokens);
+        self.chunk_lib.register_in(ns, handle, text, tokens)?;
         self.metrics.record_upload(t0.elapsed().as_secs_f64());
         Ok(chunk)
     }
 
     /// Admin path: (re)index a dynamic-library image reference with its KV.
     pub fn add_reference(&self, handle: &str, description: &str) -> Result<ImageId> {
+        self.add_reference_in(&Namespace::default(), handle, description)
+    }
+
+    /// Namespaced variant of [`Engine::add_reference`].
+    pub fn add_reference_in(
+        &self,
+        ns: &Namespace,
+        handle: &str,
+        description: &str,
+    ) -> Result<ImageId> {
         let image = ImageId::from_handle(handle);
-        let kv = self.encode_image(image)?;
+        let kv = self.encode_image_in(ns, image)?;
         self.store.put(kv)?;
-        self.dynamic_lib.add(Reference::image(image, description));
+        self.dynamic_lib.add(Reference::image(image, description).in_ns(ns));
         Ok(image)
     }
 
@@ -362,9 +409,21 @@ impl Engine {
         text: &str,
         description: &str,
     ) -> Result<ChunkId> {
-        let chunk = self.upload_chunk(handle, text)?;
+        self.add_chunk_reference_in(&Namespace::default(), handle, text, description)
+    }
+
+    /// Namespaced variant of [`Engine::add_chunk_reference`].
+    pub fn add_chunk_reference_in(
+        &self,
+        ns: &Namespace,
+        handle: &str,
+        text: &str,
+        description: &str,
+    ) -> Result<ChunkId> {
+        let chunk = self.upload_chunk_in(ns, handle, text)?;
         self.dynamic_lib.add(Reference {
             seg: SegmentId::Chunk(chunk),
+            ns: ns.clone(),
             description: description.to_string(),
         });
         Ok(chunk)
@@ -376,9 +435,11 @@ impl Engine {
 
     /// Retrieve the top-k dynamic references for a query and append them to
     /// the prompt (the decode-time retrieval trigger is emulated by an
-    /// explicit call — see DESIGN.md §2). Image hits splice as image
-    /// segments; chunk hits splice as *cached chunk references* — their
-    /// stored KV is reused instead of re-prefetching raw text.
+    /// explicit call — see DESIGN.md §2). Retrieval is scoped to the
+    /// prompt's namespace: a tenant only ever splices its own references.
+    /// Image hits splice as image segments; chunk hits splice as *cached
+    /// chunk references* — their stored KV is reused instead of
+    /// re-prefetching raw text.
     pub fn mrag_augment(&self, prompt: &Prompt, top_k: usize) -> Result<(Prompt, Vec<SegmentId>)> {
         let mut r = self.retriever.borrow_mut();
         r.sync(&self.dynamic_lib);
@@ -393,7 +454,7 @@ impl Engine {
                 _ => None,
             })
             .collect();
-        let hits = r.search(&query.join(" "), top_k);
+        let hits = r.search_in(&prompt.ns, &query.join(" "), top_k);
         let mut out = prompt.clone();
         let mut ids = Vec::new();
         for (seg, _score) in hits {
@@ -401,7 +462,7 @@ impl Engine {
             out = match seg {
                 SegmentId::Image(image) => out.image(image),
                 SegmentId::Chunk(chunk) => {
-                    let tokens = self.chunk_lib.tokens(chunk)?;
+                    let tokens = self.chunk_lib.tokens_in(&prompt.ns, chunk)?;
                     out.chunk(ChunkRef::resolved_shared(chunk, tokens))
                 }
             };
@@ -422,8 +483,8 @@ impl Engine {
             return Ok(());
         }
         for image in prompt.images() {
-            let owned = self.static_lib.owns(prompt.user, image);
-            let public = self.dynamic_lib.by_image(image).is_ok();
+            let owned = self.static_lib.owns_in(&prompt.ns, prompt.user, image);
+            let public = self.dynamic_lib.by_image_in(&prompt.ns, image).is_ok();
             if !owned && !public {
                 bail!("user {:?} does not own image {image:?}", prompt.user);
             }
@@ -439,15 +500,16 @@ impl Engine {
     }
 
     /// Replace unresolved `CHUNK#` references with their canonical token
-    /// streams from the chunk library (shared `Arc`s — no token copies).
-    /// Errors on never-uploaded chunks. Only called when the prompt
-    /// actually holds an unresolved reference.
+    /// streams from the chunk library (shared `Arc`s — no token copies),
+    /// resolving against the prompt's namespace. Errors on chunks this
+    /// tenant never uploaded. Only called when the prompt actually holds
+    /// an unresolved reference.
     fn resolve_chunks(&self, prompt: &Prompt) -> Result<Prompt> {
         let mut out = prompt.clone();
         for seg in out.segments.iter_mut() {
             if let Segment::Chunk(c) = seg {
                 if !c.is_resolved() {
-                    c.tokens = self.chunk_lib.tokens(c.id)?;
+                    c.tokens = self.chunk_lib.tokens_in(&prompt.ns, c.id)?;
                 }
             }
         }
@@ -473,13 +535,13 @@ impl Engine {
     /// tier on idle pool workers (the prefetch lane — the serving pipeline
     /// calls this between decode rounds with the segment refs of queued
     /// requests). Non-blocking; returns the number of jobs dispatched.
-    pub fn prefetch_segments(&self, segments: &[SegmentId]) -> usize {
+    pub fn prefetch_segments(&self, segments: &[(Namespace, SegmentId)]) -> usize {
         if segments.is_empty() {
             return 0;
         }
         let keys: Vec<KvKey> = segments
             .iter()
-            .map(|&seg| KvKey { model: self.meta.name.clone(), seg })
+            .map(|(ns, seg)| KvKey::segment(&self.meta.name, ns, *seg))
             .collect();
         self.transfer.prefetch(&self.store, &keys)
     }
@@ -491,11 +553,12 @@ impl Engine {
     fn fetch_entries(
         &self,
         layout: &LinkedLayout,
+        ns: &Namespace,
     ) -> Result<(Vec<Arc<SegmentKv>>, TransferReport)> {
         let keys: Vec<KvKey> = layout
             .reuse_spans
             .iter()
-            .map(|span| KvKey { model: self.meta.name.clone(), seg: span.seg })
+            .map(|span| KvKey::segment(&self.meta.name, ns, span.seg))
             .collect();
         self.transfer.fetch(&self.store, &keys, |key| self.compute_segment_kv(key))
     }
@@ -514,7 +577,7 @@ impl Engine {
         let linker = Linker::new(&self.meta);
 
         let t_request = Instant::now();
-        let (entries, transfer) = self.fetch_entries(&layout)?;
+        let (entries, transfer) = self.fetch_entries(&layout, &prompt.ns)?;
         let entry_refs: Vec<&SegmentKv> = entries.iter().map(|e| e.as_ref()).collect();
         let fetch_s = t_request.elapsed().as_secs_f64();
 
@@ -781,7 +844,7 @@ impl Engine {
     pub fn full_prefill_kv(&self, prompt: &Prompt) -> Result<(LinkedLayout, Tensor, Tensor)> {
         let layout = self.layout(prompt)?;
         let s_bucket = self.runtime.manifest().seq_bucket_for(layout.len())?;
-        let (entries, _) = self.fetch_entries(&layout)?;
+        let (entries, _) = self.fetch_entries(&layout, &prompt.ns)?;
         let entry_refs: Vec<&SegmentKv> = entries.iter().map(|e| e.as_ref()).collect();
         let linker = Linker::new(&self.meta);
         let inputs = linker.full_prefill(&layout, &entry_refs, s_bucket)?;
@@ -797,7 +860,7 @@ impl Engine {
     pub fn debug_attention(&self, prompt: &Prompt) -> Result<(LinkedLayout, Tensor, Tensor)> {
         let layout = self.layout(prompt)?;
         let s_bucket = self.runtime.manifest().debug_bucket_for(layout.len())?;
-        let (entries, _) = self.fetch_entries(&layout)?;
+        let (entries, _) = self.fetch_entries(&layout, &prompt.ns)?;
         let entry_refs: Vec<&SegmentKv> = entries.iter().map(|e| e.as_ref()).collect();
         let linker = Linker::new(&self.meta);
         let inputs = linker.full_prefill(&layout, &entry_refs, s_bucket)?;
@@ -823,38 +886,79 @@ impl Engine {
     // Cache management (the `cache.*` API surface)
     // ------------------------------------------------------------------
 
-    /// The store key a handle resolves to under this engine's model.
-    /// Handles are content-derived, so resolution needs no registry:
-    /// `CHUNK#...` handles address chunk entries, everything else images.
-    pub fn kv_key(&self, handle: &str) -> KvKey {
+    /// The store key a handle resolves to under this engine's model and
+    /// the caller's namespace. Handles are content-derived, so resolution
+    /// needs no registry: `CHUNK#...` handles address chunk entries,
+    /// everything else images.
+    pub fn kv_key(&self, ns: &Namespace, handle: &str) -> KvKey {
         if handle.starts_with("CHUNK#") {
-            KvKey::chunk(&self.meta.name, ChunkId::from_handle(handle))
+            KvKey::chunk(&self.meta.name, ChunkId::from_handle(handle)).in_ns(ns)
         } else {
-            KvKey::image(&self.meta.name, ImageId::from_handle(handle))
+            KvKey::image(&self.meta.name, ImageId::from_handle(handle)).in_ns(ns)
         }
     }
 
-    /// Residency report over every cached segment (Static, Dynamic and
-    /// Chunk Library entries share the tiered store).
-    pub fn cache_entries(&self) -> Vec<EntryInfo> {
-        self.store.entries()
+    /// Residency report over one namespace's cached segments (Static,
+    /// Dynamic and Chunk Library entries share the tiered store). The
+    /// `cache.list` op scopes to the caller's tenant; the default
+    /// namespace sees exactly the pre-v3 (un-namespaced) entries.
+    pub fn cache_entries(&self, ns: &Namespace) -> Vec<EntryInfo> {
+        self.store.entries().into_iter().filter(|e| e.key.ns == *ns).collect()
     }
 
     /// Residency of one handle's cache entry, or `None` when absent.
-    pub fn cache_stat(&self, handle: &str) -> Option<EntryInfo> {
-        self.store.entry_info(&self.kv_key(handle))
+    pub fn cache_stat(&self, ns: &Namespace, handle: &str) -> Option<EntryInfo> {
+        self.store.entry_info(&self.kv_key(ns, handle))
     }
 
-    /// Pin (or unpin) a handle's entry. Returns `false` when not resident.
-    pub fn cache_pin(&self, handle: &str, pinned: bool) -> bool {
-        self.store.set_pinned(&self.kv_key(handle), pinned)
+    /// Pin (or unpin) a handle's entry — the v2 compat surface (an
+    /// infinite lease under the hood). Returns `false` when not resident.
+    pub fn cache_pin(&self, ns: &Namespace, handle: &str, pinned: bool) -> bool {
+        self.store.set_pinned(&self.kv_key(ns, handle), pinned)
     }
 
-    /// Evict a handle's entry from every tier. Pinned entries are refused
+    /// Grant a bounded-lifetime lease on a handle's entry (`cache.lease`).
+    /// `ttl: None` = infinite. `None` result = not resident.
+    pub fn cache_lease(
+        &self,
+        ns: &Namespace,
+        handle: &str,
+        ttl: Option<std::time::Duration>,
+    ) -> Option<crate::kv::LeaseInfo> {
+        self.store.lease(&self.kv_key(ns, handle), ttl)
+    }
+
+    /// Renew a lease by id (`cache.lease_renew`). The lease must belong
+    /// to the caller's namespace: lease ids are sequential (guessable),
+    /// so without this check one tenant could shorten another tenant's
+    /// lease to nothing. Safe against TOCTOU — lease ids are never
+    /// reused, so the id→key mapping cannot change between check and act.
+    pub fn cache_lease_renew(
+        &self,
+        ns: &Namespace,
+        id: u64,
+        ttl: Option<std::time::Duration>,
+    ) -> Option<crate::kv::LeaseInfo> {
+        match self.store.lease_key(id) {
+            Some(key) if key.ns == *ns => self.store.lease_renew(id, ttl),
+            _ => None,
+        }
+    }
+
+    /// Release a lease by id (`cache.lease_release`), namespace-checked
+    /// like [`Engine::cache_lease_renew`].
+    pub fn cache_lease_release(&self, ns: &Namespace, id: u64) -> bool {
+        match self.store.lease_key(id) {
+            Some(key) if key.ns == *ns => self.store.lease_release(id),
+            _ => false,
+        }
+    }
+
+    /// Evict a handle's entry from every tier. Leased entries are refused
     /// — atomically, inside the store's shard lock (see
-    /// [`KvStore::evict`]), so a concurrent `cache.pin` can never lose.
-    pub fn cache_evict(&self, handle: &str) -> EvictOutcome {
-        self.store.evict(&self.kv_key(handle))
+    /// [`KvStore::evict`]), so a concurrent `cache.lease` can never lose.
+    pub fn cache_evict(&self, ns: &Namespace, handle: &str) -> EvictOutcome {
+        self.store.evict(&self.kv_key(ns, handle))
     }
 }
 

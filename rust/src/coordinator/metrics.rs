@@ -43,6 +43,8 @@ struct Inner {
     overload_rejected: u64,
     /// Async upload-lane jobs that reached a terminal state.
     async_uploads: u64,
+    /// Generations aborted through `infer.cancel`.
+    cancelled: u64,
     /// Latest KV-store hot-path counters (shard contention, prefetch
     /// lane, chunked codec), copied in from `KvStore::stats`.
     kv: crate::kv::StoreStats,
@@ -67,6 +69,7 @@ impl Metrics {
                 queue_depth: Samples::new(),
                 overload_rejected: 0,
                 async_uploads: 0,
+                cancelled: 0,
                 kv: crate::kv::StoreStats::default(),
             }),
         }
@@ -110,12 +113,14 @@ impl Metrics {
         g.queue_depth.push(queue_depth as f64);
     }
 
-    /// Publish the pipeline's monotonic counters (kept by the gate and the
-    /// upload lane as atomics, copied in by the engine loop).
-    pub fn set_pipeline_counters(&self, overload_rejected: u64, async_uploads: u64) {
+    /// Publish the pipeline's monotonic counters (kept by the gate, the
+    /// upload lane and the cancellation path, copied in by the engine
+    /// loop).
+    pub fn set_pipeline_counters(&self, overload_rejected: u64, async_uploads: u64, cancelled: u64) {
         let mut g = self.inner.lock().unwrap();
         g.overload_rejected = overload_rejected;
         g.async_uploads = async_uploads;
+        g.cancelled = cancelled;
     }
 
     /// Publish the KV store's hot-path counters (sharding, prefetch,
@@ -169,6 +174,7 @@ impl Metrics {
             ("queue_depth", s(&g.queue_depth)),
             ("rejected_overloaded", Value::num(g.overload_rejected as f64)),
             ("async_uploads", Value::num(g.async_uploads as f64)),
+            ("cancelled", Value::num(g.cancelled as f64)),
         ]);
         let n = Value::num;
         let kv = Value::obj(vec![
@@ -186,6 +192,9 @@ impl Metrics {
             ("prefetch_wasted", n(g.kv.prefetch_wasted as f64)),
             ("codec_chunks", n(g.kv.codec_chunks as f64)),
             ("codec_parallel_ops", n(g.kv.codec_parallel_ops as f64)),
+            ("leases_acquired", n(g.kv.leases_acquired as f64)),
+            ("leases_released", n(g.kv.leases_released as f64)),
+            ("lease_expirations", n(g.kv.lease_expirations as f64)),
         ]);
         Value::obj(vec![
             ("requests", Value::num(g.requests as f64)),
@@ -273,7 +282,7 @@ mod tests {
         m.record_admission_wait(0.004);
         m.record_pipeline_round(3, 5);
         m.record_pipeline_round(1, 2);
-        m.set_pipeline_counters(7, 2);
+        m.set_pipeline_counters(7, 2, 1);
         let snap = m.snapshot();
         let p = snap.get("pipeline").unwrap();
         assert_eq!(p.get("admission_wait_s").unwrap().get("n").unwrap().as_f64().unwrap(), 2.0);
@@ -284,6 +293,7 @@ mod tests {
         assert_eq!(p.get("queue_depth").unwrap().get("n").unwrap().as_f64().unwrap(), 2.0);
         assert_eq!(p.get("rejected_overloaded").unwrap().as_f64().unwrap(), 7.0);
         assert_eq!(p.get("async_uploads").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(p.get("cancelled").unwrap().as_f64().unwrap(), 1.0);
     }
 
     #[test]

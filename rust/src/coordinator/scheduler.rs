@@ -44,6 +44,9 @@ pub enum RejectCode {
     TooLarge,
     /// The engine failed while prefilling or decoding the request.
     EngineFailed,
+    /// The request was aborted mid-flight by [`Scheduler::abort`]
+    /// (`infer.cancel` on the wire).
+    Cancelled,
 }
 
 /// An explicit rejection delivered as a completion.
@@ -87,6 +90,8 @@ pub struct SchedStats {
     pub rejected: u64,
     /// Requests that failed in the engine (prefill/decode error).
     pub failed: u64,
+    /// Requests aborted mid-flight through [`Scheduler::abort`].
+    pub cancelled: u64,
     pub max_active: usize,
     pub decode_rounds: u64,
     /// Sum over decode rounds of the number of active sequences.
@@ -175,21 +180,64 @@ impl Scheduler {
         self.queue.len()
     }
 
-    /// Reusable-segment refs (images and chunks) of queued-but-not-yet-
-    /// admitted requests, FCFS order, deduped. The serving pipeline feeds
-    /// these to the prefetch lane between decode rounds so that by
-    /// admission time the transfer engine sees device hits.
-    pub fn queued_segments(&self) -> Vec<crate::mm::SegmentId> {
+    /// Namespaced reusable-segment refs (images and chunks) of queued-but-
+    /// not-yet-admitted requests, FCFS order, deduped. The serving
+    /// pipeline feeds these to the prefetch lane between decode rounds so
+    /// that by admission time the transfer engine sees device hits.
+    pub fn queued_segments(&self) -> Vec<(crate::mm::Namespace, crate::mm::SegmentId)> {
+        // Dedup on borrowed namespaces: this runs between every decode
+        // round, so clone the String only for segments actually emitted.
         let mut seen = std::collections::HashSet::new();
         let mut out = Vec::new();
         for (req, _) in &self.queue {
             for seg in req.prompt.segment_ids() {
-                if seen.insert(seg) {
-                    out.push(seg);
+                if seen.insert((&req.prompt.ns, seg)) {
+                    out.push((req.prompt.ns.clone(), seg));
                 }
             }
         }
         out
+    }
+
+    /// Abort one request mid-flight (`infer.cancel`). A queued request is
+    /// removed before admission; an active one stops decoding immediately
+    /// (its blocks free this instant, so the batch slot is reusable on the
+    /// very next round). Either way the caller gets the request's terminal
+    /// [`Completion`] with [`RejectCode::Cancelled`] — or `None` when the
+    /// id is unknown or already completed.
+    pub fn abort(&mut self, id: u64) -> Option<Completion> {
+        if let Some(pos) = self.queue.iter().position(|(req, _)| req.id == id) {
+            let (req, queued_steps) = self.queue.remove(pos).expect("position just found");
+            self.stats.cancelled += 1;
+            return Some(Completion {
+                id: req.id,
+                outcome: Err(Reject {
+                    code: RejectCode::Cancelled,
+                    message: "cancelled while queued".into(),
+                }),
+                queued_steps,
+            });
+        }
+        if let Some(pos) = self.active.iter().position(|e| e.id == id) {
+            let entry = self.active.swap_remove(pos);
+            // An abort must not strand blocks; a corrupted allocator is a
+            // scheduler-stopping bug, so surface it loudly.
+            self.blocks.free_seq(entry.sid).expect("freeing an active sequence's blocks");
+            self.seq_of.remove(&entry.id);
+            self.stats.cancelled += 1;
+            return Some(Completion {
+                id: entry.id,
+                outcome: Err(Reject {
+                    code: RejectCode::Cancelled,
+                    message: format!(
+                        "cancelled mid-decode after {} tokens",
+                        entry.seq.tokens.len()
+                    ),
+                }),
+                queued_steps: entry.queued_steps,
+            });
+        }
+        None
     }
 
     pub fn active(&self) -> usize {
@@ -406,26 +454,50 @@ mod tests {
 
     #[test]
     fn queued_segments_are_fcfs_and_deduped() {
-        use crate::mm::{ChunkId, ChunkRef, ImageId, Prompt, SegmentId, UserId};
+        use crate::mm::{ChunkId, ChunkRef, ImageId, Namespace, Prompt, SegmentId, UserId};
         let mut s = Scheduler::new(64, 16);
         assert!(s.queued_segments().is_empty());
+        let ns = Namespace::new("tenant-a").unwrap();
         let p1 = Prompt::new(UserId(1)).text("a").image(ImageId(7)).image(ImageId(3));
         let p2 = Prompt::new(UserId(2))
             .text("b")
             .image(ImageId(3))
             .chunk(ChunkRef::unresolved(ChunkId(5)))
             .image(ImageId(9));
+        // Same image id as p1/p2, but namespaced: a distinct prefetch key.
+        let p3 = Prompt::new(UserId(3)).text("c").image(ImageId(3)).in_ns(&ns);
         s.submit(Request { id: 1, prompt: p1, policy: Policy::Prefix, max_new: 4 });
         s.submit(Request { id: 2, prompt: p2, policy: Policy::Prefix, max_new: 4 });
+        s.submit(Request { id: 3, prompt: p3, policy: Policy::Prefix, max_new: 4 });
+        let root = Namespace::default;
         assert_eq!(
             s.queued_segments(),
             vec![
-                SegmentId::Image(ImageId(7)),
-                SegmentId::Image(ImageId(3)),
-                SegmentId::Chunk(ChunkId(5)),
-                SegmentId::Image(ImageId(9)),
+                (root(), SegmentId::Image(ImageId(7))),
+                (root(), SegmentId::Image(ImageId(3))),
+                (root(), SegmentId::Chunk(ChunkId(5))),
+                (root(), SegmentId::Image(ImageId(9))),
+                (ns, SegmentId::Image(ImageId(3))),
             ]
         );
+    }
+
+    /// Cancellation: queued requests leave the queue with an explicit
+    /// `cancelled` completion; unknown ids are a no-op.
+    #[test]
+    fn abort_removes_queued_request_with_cancelled_completion() {
+        use crate::mm::{ImageId, Prompt, UserId};
+        let mut s = Scheduler::new(64, 16);
+        let prompt = Prompt::new(UserId(1)).text("look at").image(ImageId(4));
+        s.submit(Request { id: 11, prompt: prompt.clone(), policy: Policy::Prefix, max_new: 4 });
+        s.submit(Request { id: 12, prompt, policy: Policy::Prefix, max_new: 4 });
+        assert!(s.abort(999).is_none(), "unknown id is a no-op");
+        let c = s.abort(11).expect("queued request must abort");
+        assert_eq!(c.id, 11);
+        assert_eq!(c.outcome.unwrap_err().code, RejectCode::Cancelled);
+        assert_eq!(s.pending(), 1, "only the victim leaves the queue");
+        assert_eq!(s.stats.cancelled, 1);
+        assert!(s.abort(11).is_none(), "double cancel is a no-op");
     }
 
     #[test]

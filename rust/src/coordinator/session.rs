@@ -7,7 +7,7 @@
 
 use std::collections::HashMap;
 
-use crate::mm::{Prompt, Segment, UserId};
+use crate::mm::{Namespace, Prompt, Segment, UserId};
 
 /// One user's conversation state.
 #[derive(Debug, Clone, Default)]
@@ -18,11 +18,12 @@ pub struct Session {
 
 impl Session {
     /// Extend the session with a user turn, returning the full prompt to
-    /// link (history + this turn).
+    /// link (history + this turn). The turn's namespace carries over so
+    /// the linked prompt resolves against the caller's tenant.
     pub fn user_turn(&mut self, user: UserId, turn: &Prompt) -> Prompt {
         self.history.extend(turn.segments.iter().cloned());
         self.turns += 1;
-        Prompt { user, segments: self.history.clone() }
+        Prompt { user, ns: turn.ns.clone(), segments: self.history.clone() }
     }
 
     /// The full prompt a user turn *would* link (history + this turn),
@@ -33,7 +34,7 @@ impl Session {
     pub fn preview_turn(&self, user: UserId, turn: &Prompt) -> Prompt {
         let mut segments = self.history.clone();
         segments.extend(turn.segments.iter().cloned());
-        Prompt { user, segments }
+        Prompt { user, ns: turn.ns.clone(), segments }
     }
 
     /// Commit a completed turn: extend the history with the user turn and
@@ -66,10 +67,11 @@ impl Session {
     }
 }
 
-/// Session registry keyed by user.
+/// Session registry keyed by (namespace, user): two tenants' user 1 are
+/// distinct conversations with no shared history.
 #[derive(Debug, Default)]
 pub struct SessionStore {
-    sessions: HashMap<UserId, Session>,
+    sessions: HashMap<(Namespace, UserId), Session>,
 }
 
 impl SessionStore {
@@ -77,24 +79,26 @@ impl SessionStore {
         SessionStore::default()
     }
 
-    pub fn session(&mut self, user: UserId) -> &mut Session {
-        self.sessions.entry(user).or_default()
+    pub fn session(&mut self, ns: &Namespace, user: UserId) -> &mut Session {
+        self.sessions.entry((ns.clone(), user)).or_default()
     }
 
     /// Read-only lookup (the `session.stat` op): no session is created.
-    pub fn get(&self, user: UserId) -> Option<&Session> {
-        self.sessions.get(&user)
+    pub fn get(&self, ns: &Namespace, user: UserId) -> Option<&Session> {
+        self.sessions.get(&(ns.clone(), user))
     }
 
-    /// Users with live sessions, sorted (the `session.list` op).
-    pub fn users(&self) -> Vec<UserId> {
-        let mut users: Vec<UserId> = self.sessions.keys().copied().collect();
+    /// Sessions live in this namespace, sorted by user (`session.list`
+    /// scopes to the caller's tenant).
+    pub fn users(&self, ns: &Namespace) -> Vec<UserId> {
+        let mut users: Vec<UserId> =
+            self.sessions.keys().filter(|(n, _)| n == ns).map(|&(_, u)| u).collect();
         users.sort();
         users
     }
 
-    pub fn reset(&mut self, user: UserId) {
-        self.sessions.remove(&user);
+    pub fn reset(&mut self, ns: &Namespace, user: UserId) {
+        self.sessions.remove(&(ns.clone(), user));
     }
 
     pub fn len(&self) -> usize {
@@ -111,21 +115,25 @@ mod tests {
     use super::*;
     use crate::mm::ImageId;
 
+    fn root() -> Namespace {
+        Namespace::default()
+    }
+
     #[test]
     fn turns_accumulate() {
         let mut store = SessionStore::new();
         let user = UserId(7);
         let t1 = Prompt::new(user).text("look at").image(ImageId(1));
-        let full1 = store.session(user).user_turn(user, &t1);
+        let full1 = store.session(&root(), user).user_turn(user, &t1);
         assert_eq!(full1.segments.len(), 2);
-        store.session(user).assistant_reply(&[5, 6]);
+        store.session(&root(), user).assistant_reply(&[5, 6]);
 
         let t2 = Prompt::new(user).text("and now compare with").image(ImageId(2));
-        let full2 = store.session(user).user_turn(user, &t2);
+        let full2 = store.session(&root(), user).user_turn(user, &t2);
         // history: turn1 (2) + reply (1) + turn2 (2)
         assert_eq!(full2.segments.len(), 5);
         assert_eq!(full2.images(), vec![ImageId(1), ImageId(2)]);
-        assert_eq!(store.session(user).turns(), 2);
+        assert_eq!(store.session(&root(), user).turns(), 2);
     }
 
     #[test]
@@ -133,13 +141,13 @@ mod tests {
         let mut store = SessionStore::new();
         let user = UserId(3);
         let t = Prompt::new(user).text("see").image(ImageId(5)).image(ImageId(6));
-        store.session(user).user_turn(user, &t);
-        assert_eq!(store.users(), vec![user]);
-        let s = store.get(user).unwrap();
+        store.session(&root(), user).user_turn(user, &t);
+        assert_eq!(store.users(&root()), vec![user]);
+        let s = store.get(&root(), user).unwrap();
         assert_eq!(s.turns(), 1);
         assert_eq!(s.image_count(), 2);
         // get() must not materialise sessions for unknown users.
-        assert!(store.get(UserId(99)).is_none());
+        assert!(store.get(&root(), UserId(99)).is_none());
         assert_eq!(store.len(), 1);
     }
 
@@ -150,19 +158,19 @@ mod tests {
         let t1 = Prompt::new(user).text("look at").image(ImageId(1));
 
         // Preview: full prompt includes the turn, history untouched.
-        let full = store.session(user).preview_turn(user, &t1);
+        let full = store.session(&root(), user).preview_turn(user, &t1);
         assert_eq!(full.segments.len(), 2);
-        assert_eq!(store.session(user).history_len(), 0);
-        assert_eq!(store.session(user).turns(), 0);
+        assert_eq!(store.session(&root(), user).history_len(), 0);
+        assert_eq!(store.session(&root(), user).turns(), 0);
 
         // Commit: history gains turn + reply, counter advances.
-        store.session(user).commit_turn(&t1, &[5, 6]);
-        assert_eq!(store.session(user).turns(), 1);
-        assert_eq!(store.session(user).history_len(), 3); // text + image + reply
+        store.session(&root(), user).commit_turn(&t1, &[5, 6]);
+        assert_eq!(store.session(&root(), user).turns(), 1);
+        assert_eq!(store.session(&root(), user).history_len(), 3); // text + image + reply
 
         // A second previewed turn sees the committed history.
         let t2 = Prompt::new(user).text("and compare with").image(ImageId(2));
-        let full2 = store.session(user).preview_turn(user, &t2);
+        let full2 = store.session(&root(), user).preview_turn(user, &t2);
         assert_eq!(full2.segments.len(), 5);
         assert_eq!(full2.images(), vec![ImageId(1), ImageId(2)]);
     }
@@ -170,11 +178,32 @@ mod tests {
     #[test]
     fn sessions_are_per_user() {
         let mut store = SessionStore::new();
-        store.session(UserId(1)).user_turn(UserId(1), &Prompt::new(UserId(1)).text("a"));
-        store.session(UserId(2)).user_turn(UserId(2), &Prompt::new(UserId(2)).text("b"));
+        store.session(&root(), UserId(1)).user_turn(UserId(1), &Prompt::new(UserId(1)).text("a"));
+        store.session(&root(), UserId(2)).user_turn(UserId(2), &Prompt::new(UserId(2)).text("b"));
         assert_eq!(store.len(), 2);
-        assert_eq!(store.session(UserId(1)).history_len(), 1);
-        store.reset(UserId(1));
-        assert_eq!(store.session(UserId(1)).history_len(), 0);
+        assert_eq!(store.session(&root(), UserId(1)).history_len(), 1);
+        store.reset(&root(), UserId(1));
+        assert_eq!(store.session(&root(), UserId(1)).history_len(), 0);
+    }
+
+    #[test]
+    fn sessions_are_per_namespace() {
+        let mut store = SessionStore::new();
+        let (a, b) = (Namespace::new("tenant-a").unwrap(), Namespace::new("tenant-b").unwrap());
+        let user = UserId(1);
+        let turn_a = Prompt::new(user).text("hello from a").in_ns(&a);
+        store.session(&a, user).commit_turn(&turn_a, &[1]);
+        // Same user id under another tenant: a fresh conversation.
+        assert_eq!(store.session(&b, user).turns(), 0);
+        assert_eq!(store.session(&a, user).turns(), 1);
+        assert_eq!(store.users(&a), vec![user]);
+        assert_eq!(store.users(&root()), Vec::<UserId>::new());
+        // Previewed prompts inherit the turn's namespace.
+        let full = store.session(&a, user).preview_turn(user, &turn_a);
+        assert_eq!(full.ns, a);
+        // Reset only touches the addressed tenant.
+        store.reset(&a, user);
+        assert!(store.get(&a, user).is_none());
+        assert!(store.get(&b, user).is_some());
     }
 }

@@ -65,9 +65,9 @@ pub fn precompute_images(engine: &Engine, convs: &[Conversation]) -> Result<usiz
 pub fn precompute_chunks(engine: &Engine, pool: &[(String, String)]) -> Result<usize> {
     let mut n = 0;
     for (handle, text) in pool {
-        if engine.store().contains(&engine.kv_key(handle)) {
+        if engine.store().contains(&engine.kv_key(&Default::default(), handle)) {
             let tokens = engine.tokenizer().encode(text);
-            engine.chunk_lib.register(handle, text, tokens);
+            engine.chunk_lib.register(handle, text, tokens)?;
         } else {
             engine.upload_chunk(handle, text)?;
             n += 1;

@@ -1,6 +1,6 @@
 //! KV serialization: the on-disk / in-host-tier wire format.
 //!
-//! ## v3 — chunked segment container (current writer)
+//! ## v4 — namespaced chunked segment container (current writer)
 //!
 //! The payload (`emb ++ k ++ v` as raw f32 LE; `emb` is empty for chunk
 //! segments) is split into fixed-size chunks of [`CHUNK_SIZE`] bytes; each
@@ -9,7 +9,8 @@
 //! instead of serialising a multi-MB (de)compression behind one core:
 //!
 //! ```text
-//! magic "MPKV" | version=3 u32 | model_len u32 | model bytes
+//! magic "MPKV" | version=4 u32 | model_len u32 | model bytes
+//! | ns_len u32 | ns bytes (empty for the default namespace)
 //! | seg_kind u8 ('i' image / 'c' chunk) | seg_id u64
 //! | layers,tokens,heads,d_head,d_model (u32 x5) | has_emb u8
 //! | chunk_size u32 | n_chunks u32
@@ -20,6 +21,11 @@
 //! Integrity is per chunk, but failure is per entry: one corrupt or
 //! truncated chunk fails the whole decode and the store treats the entry
 //! as a miss (failure-injection tests cover this).
+//!
+//! ## v3 — chunked segment container (legacy, still decodes)
+//!
+//! Same as v4 without the `ns` field (all v3 entries decode into the
+//! default namespace).
 //!
 //! ## v2 — chunked image container (legacy, still decodes)
 //!
@@ -45,7 +51,7 @@ use byteorder::{ByteOrder, LittleEndian, ReadBytesExt, WriteBytesExt};
 use sha2::{Digest, Sha256};
 
 use super::{KvKey, KvShape, SegmentKv};
-use crate::mm::{ChunkId, ImageId, SegmentId};
+use crate::mm::{ChunkId, ImageId, Namespace, SegmentId};
 use crate::util::threadpool::ThreadPool;
 use crate::Result;
 
@@ -53,6 +59,7 @@ const MAGIC: &[u8; 4] = b"MPKV";
 const V1: u32 = 1;
 const V2: u32 = 2;
 const V3: u32 = 3;
+const V4: u32 = 4;
 
 /// zstd level: 1 is the latency-friendly setting for the hot path.
 pub const ZSTD_LEVEL: i32 = 1;
@@ -83,7 +90,7 @@ fn payload_bytes(shape: &KvShape, has_emb: bool) -> usize {
     (emb + 2 * shape.kv_elems()) * 4
 }
 
-/// Serialise an entry to bytes (v3, serial). See [`encode_with`].
+/// Serialise an entry to bytes (v4, serial). See [`encode_with`].
 pub fn encode(e: &SegmentKv) -> Result<Vec<u8>> {
     encode_with(e, None).map(|(bytes, _)| bytes)
 }
@@ -122,7 +129,7 @@ fn write_dims(out: &mut Vec<u8>, shape: &KvShape) -> Result<()> {
     Ok(())
 }
 
-/// Serialise an entry to the v3 chunked container. With a pool, chunks
+/// Serialise an entry to the v4 chunked container. With a pool, chunks
 /// compress in parallel; the output is byte-identical either way.
 pub fn encode_with(e: &SegmentKv, pool: Option<&ThreadPool>) -> Result<(Vec<u8>, CodecReport)> {
     e.validate()?;
@@ -162,8 +169,13 @@ pub fn encode_with(e: &SegmentKv, pool: Option<&ThreadPool>) -> Result<(Vec<u8>,
     };
 
     let comp_total: usize = compressed.iter().map(|c| c.len()).sum();
-    let mut out = Vec::with_capacity(comp_total + e.key.model.len() + 56 + 36 * n_chunks);
-    write_prefix(&mut out, e, V3)?;
+    let mut out = Vec::with_capacity(
+        comp_total + e.key.model.len() + e.key.ns.as_str().len() + 60 + 36 * n_chunks,
+    );
+    write_prefix(&mut out, e, V4)?;
+    let ns = e.key.ns.as_str().as_bytes();
+    out.write_u32::<LittleEndian>(ns.len() as u32)?;
+    out.extend_from_slice(ns);
     out.push(e.key.seg.kind_tag());
     out.write_u64::<LittleEndian>(e.key.seg.raw())?;
     write_dims(&mut out, &e.shape)?;
@@ -218,30 +230,50 @@ fn decode_dispatch(
             decode_chunked_body(bytes, owned, r, key, shape, true, pool)
         }
         V3 => {
-            let kind = r.read_u8()?;
-            let raw = r.read_u64::<LittleEndian>()?;
-            let seg = match kind {
-                b'i' => SegmentId::Image(ImageId(raw)),
-                b'c' => SegmentId::Chunk(ChunkId(raw)),
-                other => bail!("unknown segment kind tag {other:#x}"),
-            };
-            let shape = read_dims(&mut r)?;
-            let has_emb = r.read_u8()? != 0;
-            let key = KvKey { model, seg };
+            let (seg, shape, has_emb) = read_segment_header(&mut r)?;
+            let key = KvKey { model, ns: Namespace::default(), seg };
+            decode_chunked_body(bytes, owned, r, key, shape, has_emb, pool)
+        }
+        V4 => {
+            let ns_str = read_lp_string(&mut r, "namespace")?;
+            let ns =
+                if ns_str.is_empty() { Namespace::default() } else { Namespace::new(&ns_str)? };
+            let (seg, shape, has_emb) = read_segment_header(&mut r)?;
+            let key = KvKey { model, ns, seg };
             decode_chunked_body(bytes, owned, r, key, shape, has_emb, pool)
         }
         other => bail!("unsupported KV codec version {other}"),
     }
 }
 
+/// v3/v4 header tail after model (and, for v4, namespace): segment kind +
+/// id, dims, has_emb flag.
+fn read_segment_header(r: &mut std::io::Cursor<&[u8]>) -> Result<(SegmentId, KvShape, bool)> {
+    let kind = r.read_u8()?;
+    let raw = r.read_u64::<LittleEndian>()?;
+    let seg = match kind {
+        b'i' => SegmentId::Image(ImageId(raw)),
+        b'c' => SegmentId::Chunk(ChunkId(raw)),
+        other => bail!("unknown segment kind tag {other:#x}"),
+    };
+    let shape = read_dims(r)?;
+    let has_emb = r.read_u8()? != 0;
+    Ok((seg, shape, has_emb))
+}
+
 fn read_model(r: &mut std::io::Cursor<&[u8]>) -> Result<String> {
-    let model_len = r.read_u32::<LittleEndian>()? as usize;
-    if model_len > 4096 {
-        bail!("implausible model name length {model_len}");
+    read_lp_string(r, "model name")
+}
+
+/// Read one length-prefixed UTF-8 string (u32 LE length + bytes).
+fn read_lp_string(r: &mut std::io::Cursor<&[u8]>, what: &str) -> Result<String> {
+    let len = r.read_u32::<LittleEndian>()? as usize;
+    if len > 4096 {
+        bail!("implausible {what} length {len}");
     }
-    let mut model = vec![0u8; model_len];
-    std::io::Read::read_exact(r, &mut model)?;
-    Ok(String::from_utf8(model)?)
+    let mut buf = vec![0u8; len];
+    std::io::Read::read_exact(r, &mut buf)?;
+    Ok(String::from_utf8(buf)?)
 }
 
 fn read_dims(r: &mut std::io::Cursor<&[u8]>) -> Result<KvShape> {
@@ -264,7 +296,7 @@ fn read_legacy_image_header(
 ) -> Result<(KvKey, KvShape)> {
     let image = r.read_u64::<LittleEndian>()?;
     let shape = read_dims(r)?;
-    Ok((KvKey { model, seg: SegmentId::Image(ImageId(image)) }, shape))
+    Ok((KvKey { model, ns: Namespace::default(), seg: SegmentId::Image(ImageId(image)) }, shape))
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -606,9 +638,9 @@ mod tests {
         let mut bytes2 = encode(&e).unwrap();
         bytes2[4] = 99;
         assert!(decode(&bytes2).is_err());
-        // v3 kind byte sits right after the model string.
+        // v4 kind byte sits right after the model + (empty) ns strings.
         let mut bytes3 = encode(&e).unwrap();
-        let kind_off = 4 + 4 + 4 + e.key.model.len();
+        let kind_off = 4 + 4 + 4 + e.key.model.len() + 4;
         assert_eq!(bytes3[kind_off], b'i');
         bytes3[kind_off] = b'z';
         assert!(decode(&bytes3).unwrap_err().to_string().contains("kind"));
@@ -618,11 +650,29 @@ mod tests {
     fn rejects_inconsistent_chunk_geometry() {
         let e = test_entry(7, 8);
         let mut bytes = encode(&e).unwrap();
-        // n_chunks lives after: 4 magic + 4 ver + 4 mlen + model + 1 kind
-        // + 8 id + 20 dims + 1 has_emb + 4 chunk_size.
-        let n_off = 4 + 4 + 4 + e.key.model.len() + 1 + 8 + 20 + 1 + 4;
+        // n_chunks lives after: 4 magic + 4 ver + 4 mlen + model + 4 nslen
+        // + ns(empty) + 1 kind + 8 id + 20 dims + 1 has_emb + 4 chunk_size.
+        let n_off = 4 + 4 + 4 + e.key.model.len() + 4 + 1 + 8 + 20 + 1 + 4;
         bytes[n_off] = 7;
         assert!(decode(&bytes).unwrap_err().to_string().contains("chunk count"));
+    }
+
+    #[test]
+    fn namespaced_keys_roundtrip() {
+        let ns = Namespace::new("tenant-a").unwrap();
+        let mut e = test_entry(21, 8);
+        e.key = e.key.in_ns(&ns);
+        let bytes = encode(&e).unwrap();
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back, e);
+        assert_eq!(back.key.ns, ns);
+        // Default-namespace entries keep an empty ns field.
+        let plain = test_entry(21, 8);
+        assert!(decode(&encode(&plain).unwrap()).unwrap().key.ns.is_default());
+        // Chunk segments carry the namespace too.
+        let mut c = test_chunk_entry(21, 8);
+        c.key = c.key.in_ns(&ns);
+        assert_eq!(decode(&encode(&c).unwrap()).unwrap(), c);
     }
 
     #[test]

@@ -19,7 +19,7 @@
 //! The storage hot path is built for concurrent serving: the store is
 //! sharded by key hash (no global lock), device entries travel as
 //! `Arc<SegmentKv>` (a hit is a refcount bump, not a copy), host/disk
-//! bytes use the chunked v3 container so codec work fans out across the
+//! bytes use the chunked v4 container so codec work fans out across the
 //! shared pool, and a prefetch lane warms queued requests' entries
 //! toward the device tier between decode rounds. See [`store`],
 //! [`codec`] and [`transfer`] for the details.
@@ -37,10 +37,12 @@ pub mod codec;
 pub mod store;
 pub mod transfer;
 
-use crate::mm::{ChunkId, ImageId, SegmentId};
+use crate::mm::{ChunkId, ImageId, Namespace, SegmentId};
 
 pub use block::BlockAllocator;
-pub use store::{EntryInfo, EvictOutcome, KvStore, StoreConfig, StoreStats, Tier};
+pub use store::{
+    EntryInfo, EvictOutcome, KvStore, LeaseInfo, StoreConfig, StoreStats, SweepReport, Tier,
+};
 pub use transfer::{TransferEngine, TransferReport};
 
 /// Shape of one segment's KV entry.
@@ -68,28 +70,53 @@ impl KvShape {
     }
 }
 
-/// Cache key: a segment's KV is model-specific.
+/// Cache key: a segment's KV is model-specific and tenant-scoped — the
+/// same `IMAGE#LOGO` uploaded by two namespaces is two distinct entries.
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct KvKey {
     pub model: String,
+    /// Tenant namespace (default = the pre-v3 global namespace).
+    pub ns: Namespace,
     pub seg: SegmentId,
 }
 
 impl KvKey {
-    /// Key of an image segment's KV.
+    /// Key of an image segment's KV in the default namespace.
     pub fn image(model: &str, image: ImageId) -> KvKey {
-        KvKey { model: model.to_string(), seg: SegmentId::Image(image) }
+        KvKey { model: model.to_string(), ns: Namespace::default(), seg: SegmentId::Image(image) }
     }
 
-    /// Key of a cached text chunk's KV.
+    /// Key of a cached text chunk's KV in the default namespace.
     pub fn chunk(model: &str, chunk: ChunkId) -> KvKey {
-        KvKey { model: model.to_string(), seg: SegmentId::Chunk(chunk) }
+        KvKey { model: model.to_string(), ns: Namespace::default(), seg: SegmentId::Chunk(chunk) }
+    }
+
+    /// Key of any segment's KV in an explicit namespace.
+    pub fn segment(model: &str, ns: &Namespace, seg: SegmentId) -> KvKey {
+        KvKey { model: model.to_string(), ns: ns.clone(), seg }
+    }
+
+    /// Scope a key to a tenant namespace.
+    pub fn in_ns(mut self, ns: &Namespace) -> KvKey {
+        self.ns = ns.clone();
+        self
     }
 
     /// Stable file-name stem for the disk tier (kind-tagged so an image
-    /// and a chunk with equal raw ids never collide).
+    /// and a chunk with equal raw ids never collide; namespaced keys get
+    /// an `+ns` infix — the namespace charset is filename-safe).
     pub fn file_stem(&self) -> String {
-        format!("{}-{}{:016x}", self.model, self.seg.kind_tag() as char, self.seg.raw())
+        if self.ns.is_default() {
+            format!("{}-{}{:016x}", self.model, self.seg.kind_tag() as char, self.seg.raw())
+        } else {
+            format!(
+                "{}+{}-{}{:016x}",
+                self.model,
+                self.ns.as_str(),
+                self.seg.kind_tag() as char,
+                self.seg.raw()
+            )
+        }
     }
 }
 
@@ -206,5 +233,22 @@ mod tests {
         assert_ne!(a, b);
         assert_ne!(a, c);
         assert_ne!(a, d, "image/chunk with equal raw ids must not collide");
+    }
+
+    #[test]
+    fn namespaced_keys_are_distinct() {
+        let ns = Namespace::new("tenant-a").unwrap();
+        let base = KvKey::image("m", ImageId(1));
+        let scoped = KvKey::image("m", ImageId(1)).in_ns(&ns);
+        assert_ne!(base, scoped, "same handle, different tenants, different keys");
+        assert_ne!(base.file_stem(), scoped.file_stem());
+        assert_eq!(
+            scoped,
+            KvKey::segment("m", &ns, SegmentId::Image(ImageId(1))),
+            "constructor equivalence"
+        );
+        let other = KvKey::image("m", ImageId(1)).in_ns(&Namespace::new("tenant-b").unwrap());
+        assert_ne!(scoped, other);
+        assert_ne!(scoped.file_stem(), other.file_stem());
     }
 }

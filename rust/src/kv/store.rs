@@ -12,13 +12,22 @@
 //!   `Arc<SegmentKv>`; a device hit is a refcount bump, not a multi-MB
 //!   memcpy, and the same `Arc` flows through the transfer engine into
 //!   the linker call sites.
-//! * **Chunked codec** — host/disk bytes use the chunked v3 container
+//! * **Chunked codec** — host/disk bytes use the chunked v4 container
 //!   ([`codec`]), so encode/decode of multi-MB entries fans out across
 //!   the [`ThreadPool`] handed to [`KvStore::with_pool`]. The engine
 //!   hands the store a *dedicated* codec pool so transfer-pool workers
 //!   can fan decodes out too; with a shared pool, codec calls arriving
 //!   on that pool's own workers detect it and stay serial (v1 entries
 //!   still decode; corrupt chunks surface as whole-entry misses).
+//! * **Leases** — the v3 cache-plane's bounded-lifetime pins. Each shard
+//!   keeps a lease table; an entry with at least one **live** lease is
+//!   exempt from LRU demotion, host drops and TTL expiry, exactly like
+//!   the old boolean pin — but a lease carries an optional TTL, so a
+//!   crashed client's protection ages out instead of exempting the entry
+//!   forever. The v2 `cache.pin` op maps to one *infinite* lease per key
+//!   ([`KvStore::set_pinned`]), preserving its semantics byte for byte.
+//!   Expired leases are dropped lazily whenever protection is consulted
+//!   and eagerly by [`KvStore::sweep`].
 //! * **Prefetch marks** — [`KvStore::prefetch`] warms host/disk entries
 //!   toward device between decode rounds; later device hits on warmed
 //!   keys count as `prefetch_hits`, evictions before use as
@@ -47,17 +56,18 @@ pub enum Tier {
     Disk,
 }
 
-/// Outcome of a [`KvStore::evict`] request. The pinned check runs under
-/// the shard lock, so a concurrent `set_pinned` can never interleave
-/// between "observe unpinned" and "remove" (the TOCTOU the old
-/// engine-level check allowed).
+/// Outcome of a [`KvStore::evict`] request. The protection check runs
+/// under the shard lock, so a concurrent `lease`/`set_pinned` can never
+/// interleave between "observe unprotected" and "remove" (the TOCTOU the
+/// old engine-level check allowed).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EvictOutcome {
     /// The entry existed (in some tier) and was removed everywhere.
     Evicted,
     /// Nothing to remove: the key is resident in no tier.
     NotFound,
-    /// The entry is pinned; nothing was removed. Unpin first.
+    /// The entry holds at least one live lease (a v2 pin is an infinite
+    /// lease); nothing was removed. Release/expire the leases first.
     Pinned,
 }
 
@@ -124,6 +134,12 @@ pub struct StoreStats {
     pub codec_chunks: u64,
     /// Codec ops whose chunks actually fanned out across the pool.
     pub codec_parallel_ops: u64,
+    /// Leases granted (`cache.lease` and v2-pin compat leases).
+    pub leases_acquired: u64,
+    /// Leases explicitly released before expiry.
+    pub leases_released: u64,
+    /// Leases that aged out (TTL lapsed; dropped lazily or by sweep).
+    pub lease_expirations: u64,
 }
 
 impl StoreStats {
@@ -142,6 +158,9 @@ impl StoreStats {
         self.prefetch_wasted += o.prefetch_wasted;
         self.codec_chunks += o.codec_chunks;
         self.codec_parallel_ops += o.codec_parallel_ops;
+        self.leases_acquired += o.leases_acquired;
+        self.leases_released += o.leases_released;
+        self.lease_expirations += o.lease_expirations;
     }
 
     fn record_codec(&mut self, rep: codec::CodecReport) {
@@ -150,6 +169,47 @@ impl StoreStats {
             self.codec_parallel_ops += 1;
         }
     }
+}
+
+/// One granted lease on one entry.
+#[derive(Debug, Clone, Copy)]
+struct LeaseRec {
+    id: u64,
+    /// `None` = infinite (the v2-pin compat lease).
+    expires_at: Option<Instant>,
+}
+
+/// What [`KvStore::lease`] / [`KvStore::lease_renew`] hand back.
+#[derive(Debug, Clone)]
+pub struct LeaseInfo {
+    pub id: u64,
+    pub key: KvKey,
+    /// Time to expiry at grant/renewal, `None` for infinite leases.
+    pub ttl: Option<Duration>,
+}
+
+/// What one [`KvStore::sweep`] pass reclaimed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SweepReport {
+    /// Lease records whose TTL had lapsed.
+    pub expired_leases: u64,
+    /// Disk-tier entries past their TTL, removed without being touched.
+    pub expired_entries: u64,
+}
+
+/// Does `key` hold at least one live (unexpired) lease? Free function so
+/// eviction scans can call it while iterating another field of the shard.
+fn leases_live(leases: &HashMap<KvKey, Vec<LeaseRec>>, key: &KvKey, now: Instant) -> bool {
+    leases
+        .get(key)
+        .is_some_and(|recs| recs.iter().any(|r| r.expires_at.is_none_or(|t| t > now)))
+}
+
+fn live_lease_count(leases: &HashMap<KvKey, Vec<LeaseRec>>, key: &KvKey, now: Instant) -> usize {
+    leases
+        .get(key)
+        .map(|recs| recs.iter().filter(|r| r.expires_at.is_none_or(|t| t > now)).count())
+        .unwrap_or(0)
 }
 
 struct DeviceEntry {
@@ -175,9 +235,13 @@ struct ShardInner {
     host: HashMap<KvKey, HostEntry>,
     host_bytes: usize,
     disk: HashMap<KvKey, DiskEntry>,
-    /// Keys pinned through the cache-management API: exempt from LRU
-    /// demotion/eviction and from TTL expiry until unpinned.
-    pinned: HashSet<KvKey>,
+    /// Per-key lease records (the v3 cache-plane). A key with at least
+    /// one live lease is exempt from LRU demotion, host drops and TTL
+    /// expiry; expired records are pruned lazily and by sweeps.
+    leases: HashMap<KvKey, Vec<LeaseRec>>,
+    /// The v2 `cache.pin` compat lease per key (an infinite lease), so
+    /// unpinning can release exactly the lease pinning created.
+    pin_lease: HashMap<KvKey, u64>,
     /// Device-resident keys promoted by the prefetch lane and not yet
     /// served to a request (drives prefetch_hits / prefetch_wasted).
     prefetched: HashSet<KvKey>,
@@ -202,7 +266,8 @@ impl Shard {
                 host: HashMap::new(),
                 host_bytes: 0,
                 disk: HashMap::new(),
-                pinned: HashSet::new(),
+                leases: HashMap::new(),
+                pin_lease: HashMap::new(),
                 prefetched: HashSet::new(),
                 prefetch_inflight: HashSet::new(),
                 clock: 0,
@@ -246,18 +311,51 @@ pub struct EntryInfo {
     /// Resident bytes in that tier (uncompressed on device, compressed
     /// on host/disk).
     pub bytes: usize,
+    /// Whether the entry is protected (holds ≥1 live lease).
     pub pinned: bool,
+    /// Number of live leases on the entry.
+    pub leases: usize,
 }
 
 impl ShardInner {
+    /// Does this key hold at least one live lease right now?
+    fn protected(&self, key: &KvKey) -> bool {
+        leases_live(&self.leases, key, Instant::now())
+    }
+
     /// The single liveness predicate for disk entries: unexpired or
-    /// pinned. Every tier/expiry decision must go through this so
+    /// leased. Every tier/expiry decision must go through this so
     /// `contains`/`tier_of`/`get` can never disagree.
     fn disk_live(&self, key: &KvKey, ttl: Duration) -> bool {
         match self.disk.get(key) {
-            Some(d) => d.written_at.elapsed() < ttl || self.pinned.contains(key),
+            Some(d) => d.written_at.elapsed() < ttl || self.protected(key),
             None => false,
         }
+    }
+
+    /// Is the key resident in any live tier?
+    fn resident(&self, key: &KvKey, ttl: Duration) -> bool {
+        self.device.contains_key(key) || self.host.contains_key(key) || self.disk_live(key, ttl)
+    }
+
+    /// Drop one lease record by id. Returns whether it was found (live or
+    /// expired); prunes the per-key vec when it empties.
+    fn drop_lease(&mut self, key: &KvKey, id: u64) -> bool {
+        let (found, now_empty) = match self.leases.get_mut(key) {
+            Some(recs) => {
+                let before = recs.len();
+                recs.retain(|r| r.id != id);
+                (recs.len() < before, recs.is_empty())
+            }
+            None => (false, false),
+        };
+        if now_empty {
+            self.leases.remove(key);
+        }
+        if self.pin_lease.get(key) == Some(&id) {
+            self.pin_lease.remove(key);
+        }
+        found
     }
 
     /// Remove a key's host copy, keeping byte accounting straight.
@@ -279,6 +377,12 @@ pub struct KvStore {
     pool: Option<Arc<ThreadPool>>,
     /// Distinguishes concurrent same-key temp files on the disk tier.
     tmp_counter: AtomicU64,
+    /// Lease-id allocator (store-global so ids are unique across shards).
+    next_lease: AtomicU64,
+    /// Lease id → key directory, so `lease_renew`/`lease_release` can
+    /// find the owning shard from a bare id. Never locked while a shard
+    /// lock is held (deadlock hygiene).
+    lease_dir: Mutex<HashMap<u64, KvKey>>,
 }
 
 impl KvStore {
@@ -305,6 +409,8 @@ impl KvStore {
             cfg,
             pool,
             tmp_counter: AtomicU64::new(0),
+            next_lease: AtomicU64::new(1),
+            lease_dir: Mutex::new(HashMap::new()),
         })
     }
 
@@ -421,18 +527,25 @@ impl KvStore {
     /// when the entry is absent or expired.
     pub fn entry_info(&self, key: &KvKey) -> Option<EntryInfo> {
         let g = self.shard(key).lock();
-        let pinned = g.pinned.contains(key);
+        let leases = live_lease_count(&g.leases, key, Instant::now());
+        let pinned = leases > 0;
         if let Some(e) = g.device.get(key) {
             let bytes = e.kv.bytes();
-            return Some(EntryInfo { key: key.clone(), tier: Tier::Device, bytes, pinned });
+            return Some(EntryInfo { key: key.clone(), tier: Tier::Device, bytes, pinned, leases });
         }
         if let Some(e) = g.host.get(key) {
             let bytes = e.bytes.len();
-            return Some(EntryInfo { key: key.clone(), tier: Tier::Host, bytes, pinned });
+            return Some(EntryInfo { key: key.clone(), tier: Tier::Host, bytes, pinned, leases });
         }
         if g.disk_live(key, self.cfg.ttl) {
             let d = &g.disk[key];
-            return Some(EntryInfo { key: key.clone(), tier: Tier::Disk, bytes: d.bytes, pinned });
+            return Some(EntryInfo {
+                key: key.clone(),
+                tier: Tier::Disk,
+                bytes: d.bytes,
+                pinned,
+                leases,
+            });
         }
         None
     }
@@ -441,35 +554,25 @@ impl KvStore {
     /// `cache.list` API op). Each key is reported once at its best tier.
     pub fn entries(&self) -> Vec<EntryInfo> {
         let mut out = Vec::new();
+        let now = Instant::now();
         for shard in &self.shards {
             let g = shard.lock_uncounted();
+            let info = |k: &KvKey, tier: Tier, bytes: usize| {
+                let leases = live_lease_count(&g.leases, k, now);
+                EntryInfo { key: k.clone(), tier, bytes, pinned: leases > 0, leases }
+            };
             for (k, e) in &g.device {
-                out.push(EntryInfo {
-                    key: k.clone(),
-                    tier: Tier::Device,
-                    bytes: e.kv.bytes(),
-                    pinned: g.pinned.contains(k),
-                });
+                out.push(info(k, Tier::Device, e.kv.bytes()));
             }
             for (k, e) in &g.host {
                 if !g.device.contains_key(k) {
-                    out.push(EntryInfo {
-                        key: k.clone(),
-                        tier: Tier::Host,
-                        bytes: e.bytes.len(),
-                        pinned: g.pinned.contains(k),
-                    });
+                    out.push(info(k, Tier::Host, e.bytes.len()));
                 }
             }
             for (k, d) in &g.disk {
                 let live = g.disk_live(k, self.cfg.ttl);
                 if live && !g.device.contains_key(k) && !g.host.contains_key(k) {
-                    out.push(EntryInfo {
-                        key: k.clone(),
-                        tier: Tier::Disk,
-                        bytes: d.bytes,
-                        pinned: g.pinned.contains(k),
-                    });
+                    out.push(info(k, Tier::Disk, d.bytes));
                 }
             }
         }
@@ -477,28 +580,206 @@ impl KvStore {
         out
     }
 
-    /// Pin (or unpin) an entry. Pinned entries are never LRU-demoted off
-    /// the device tier, never dropped from the host tier and never
-    /// TTL-expired. Returns `false` when the key is not resident anywhere.
-    pub fn set_pinned(&self, key: &KvKey, pinned: bool) -> bool {
-        let mut g = self.shard(key).lock();
-        let exists = g.device.contains_key(key)
-            || g.host.contains_key(key)
-            || g.disk_live(key, self.cfg.ttl);
-        if !exists {
-            g.pinned.remove(key);
-            return false;
+    /// Grant a lease on a resident entry. While at least one live lease
+    /// exists the entry is never LRU-demoted off the device tier, never
+    /// dropped from the host tier and never TTL-expired. `ttl: None`
+    /// grants an infinite lease (the v2-pin compat path). Returns `None`
+    /// when the key is not resident anywhere.
+    pub fn lease(&self, key: &KvKey, ttl: Option<Duration>) -> Option<LeaseInfo> {
+        let id = self.next_lease.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut g = self.shard(key).lock();
+            if !g.resident(key, self.cfg.ttl) {
+                return None;
+            }
+            let expires_at = ttl.map(|t| Instant::now() + t);
+            g.leases.entry(key.clone()).or_default().push(LeaseRec { id, expires_at });
+            g.stats.leases_acquired += 1;
         }
-        if pinned {
-            g.pinned.insert(key.clone());
-        } else {
-            g.pinned.remove(key);
-        }
-        true
+        self.lease_dir.lock().unwrap().insert(id, key.clone());
+        Some(LeaseInfo { id, key: key.clone(), ttl })
     }
 
+    /// Extend (or shrink) a live lease's TTL from now. `ttl: None` makes
+    /// the lease infinite. Returns `None` for unknown, released or
+    /// already-expired leases (an expired lease cannot be revived — take
+    /// a new one).
+    pub fn lease_renew(&self, id: u64, ttl: Option<Duration>) -> Option<LeaseInfo> {
+        let key = self.lease_dir.lock().unwrap().get(&id).cloned()?;
+        let renewed = {
+            let mut g = self.shard(&key).lock();
+            let now = Instant::now();
+            // 0 = renewed, 1 = lapsed (prune below), 2 = gone.
+            let state = match g
+                .leases
+                .get_mut(&key)
+                .and_then(|recs| recs.iter_mut().find(|r| r.id == id))
+            {
+                Some(rec) if rec.expires_at.is_none_or(|t| t > now) => {
+                    rec.expires_at = ttl.map(|t| now + t);
+                    0u8
+                }
+                Some(_) => 1,
+                None => 2,
+            };
+            if state == 1 {
+                // Lapsed but not yet pruned: prune it now.
+                g.drop_lease(&key, id);
+                g.stats.lease_expirations += 1;
+            }
+            state == 0
+        };
+        if renewed {
+            Some(LeaseInfo { id, key, ttl })
+        } else {
+            self.lease_dir.lock().unwrap().remove(&id);
+            None
+        }
+    }
+
+    /// Release a lease before it expires. Returns `false` for unknown or
+    /// already-expired-and-pruned leases. Releasing the last live lease
+    /// makes the entry an ordinary LRU/TTL citizen again.
+    pub fn lease_release(&self, id: u64) -> bool {
+        let Some(key) = self.lease_dir.lock().unwrap().remove(&id) else {
+            return false;
+        };
+        let mut g = self.shard(&key).lock();
+        let found = g.drop_lease(&key, id);
+        if found {
+            g.stats.leases_released += 1;
+        }
+        found
+    }
+
+    /// Live leases currently held on a key.
+    pub fn lease_count(&self, key: &KvKey) -> usize {
+        let g = self.shard(key).lock();
+        live_lease_count(&g.leases, key, Instant::now())
+    }
+
+    /// The key a lease id was granted on, or `None` for unknown/reclaimed
+    /// ids. Lease ids are never reused (monotonic allocator), so the
+    /// id→key mapping is immutable once granted — callers can check
+    /// ownership (e.g. the tenant namespace) without a TOCTOU window.
+    pub fn lease_key(&self, id: u64) -> Option<KvKey> {
+        self.lease_dir.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Drop expired lease records and reap TTL-expired, unleased,
+    /// disk-only entries — without touching (or promoting) anything. The
+    /// serving pipeline calls this between decode rounds so residency
+    /// reports (`cache.list`, `stats.metrics.kv`) stop counting
+    /// long-dead entries that nobody happens to look up.
+    pub fn sweep(&self) -> SweepReport {
+        let mut rep = SweepReport::default();
+        let now = Instant::now();
+        let mut dead_ids: Vec<u64> = Vec::new();
+        for shard in &self.shards {
+            let mut g = shard.lock_uncounted();
+            let inner = &mut *g;
+            // Expired lease records age out of the tables.
+            let mut expired_here = 0u64;
+            for recs in inner.leases.values_mut() {
+                recs.retain(|r| {
+                    let live = r.expires_at.is_none_or(|t| t > now);
+                    if !live {
+                        dead_ids.push(r.id);
+                        expired_here += 1;
+                    }
+                    live
+                });
+            }
+            inner.leases.retain(|_, recs| !recs.is_empty());
+            inner.stats.lease_expirations += expired_here;
+            rep.expired_leases += expired_here;
+            // TTL-expired disk-only entries are reclaimed eagerly. Keys
+            // still resident in device/host keep their disk copy (it is
+            // refreshed on the next demotion cycle anyway).
+            let dead_disk: Vec<KvKey> = inner
+                .disk
+                .iter()
+                .filter(|(k, d)| {
+                    d.written_at.elapsed() >= self.cfg.ttl
+                        && !inner.device.contains_key(*k)
+                        && !inner.host.contains_key(*k)
+                        && !leases_live(&inner.leases, k, now)
+                })
+                .map(|(k, _)| k.clone())
+                .collect();
+            for k in dead_disk {
+                if let Some(d) = inner.disk.remove(&k) {
+                    let _ = std::fs::remove_file(&d.path);
+                    inner.stats.expirations += 1;
+                    rep.expired_entries += 1;
+                }
+            }
+        }
+        if !dead_ids.is_empty() {
+            let mut dir = self.lease_dir.lock().unwrap();
+            for id in dead_ids {
+                dir.remove(&id);
+            }
+        }
+        rep
+    }
+
+    /// Pin (or unpin) an entry — the v2 compat surface, mapped onto an
+    /// infinite lease per key (idempotent: pinning twice holds one
+    /// lease). Returns `false` when the key is not resident anywhere.
+    pub fn set_pinned(&self, key: &KvKey, pinned: bool) -> bool {
+        if pinned {
+            {
+                let g = self.shard(key).lock();
+                if !g.resident(key, self.cfg.ttl) {
+                    return false;
+                }
+                if g.pin_lease.contains_key(key) {
+                    return true;
+                }
+            }
+            // Grant outside the shard lock (lease() re-takes it; the pin
+            // map is re-checked under the lock to stay idempotent).
+            match self.lease(key, None) {
+                Some(info) => {
+                    let race_lost = {
+                        let mut g = self.shard(key).lock();
+                        if g.pin_lease.contains_key(key) {
+                            // Lost a pin race: keep the first pin lease.
+                            g.drop_lease(key, info.id);
+                            true
+                        } else {
+                            g.pin_lease.insert(key.clone(), info.id);
+                            false
+                        }
+                    };
+                    if race_lost {
+                        self.lease_dir.lock().unwrap().remove(&info.id);
+                    }
+                    true
+                }
+                None => false,
+            }
+        } else {
+            // Residency is answered *while the pin still protects the
+            // entry*: unpinning a disk-only entry whose TTL lapsed under
+            // the pin must report true (the unpin happened) even though
+            // the entry becomes reclaimable the moment protection drops.
+            let (exists, pin_id) = {
+                let g = self.shard(key).lock();
+                (g.resident(key, self.cfg.ttl), g.pin_lease.get(key).copied())
+            };
+            if let Some(id) = pin_id {
+                self.lease_release(id);
+            }
+            exists
+        }
+    }
+
+    /// Whether the entry is protected (holds ≥1 live lease; the v2 pin
+    /// flag reads as this).
     pub fn is_pinned(&self, key: &KvKey) -> bool {
-        self.shard(key).lock().pinned.contains(key)
+        self.shard(key).lock().protected(key)
     }
 
     /// Fetch an entry, promoting it to the device tier. A device hit is an
@@ -586,7 +867,7 @@ impl KvStore {
             }
         }
 
-        // Disk tier: check expiry (pinned entries never expire), then read
+        // Disk tier: check expiry (leased entries never expire), then read
         // + decode outside the lock.
         let disk_path = {
             let mut g = shard.lock();
@@ -635,13 +916,15 @@ impl KvStore {
     }
 
     /// Expire an entry everywhere (tests / admin / `cache.evict`). The
-    /// pinned check happens under the same shard lock as the removal, so
-    /// a `cache.pin` racing this call either lands first (evict refuses)
-    /// or lands after the entry is gone (pin reports not-resident) — a
-    /// pinned entry can never be evicted.
+    /// lease check happens under the same shard lock as the removal, so
+    /// a `cache.lease`/`cache.pin` racing this call either lands first
+    /// (evict refuses) or lands after the entry is gone (the lease grant
+    /// reports not-resident) — a leased entry can never be evicted. An
+    /// entry whose every lease has lapsed is evictable immediately, even
+    /// before a sweep prunes the stale records.
     pub fn evict(&self, key: &KvKey) -> EvictOutcome {
         let mut g = self.shard(key).lock();
-        if g.pinned.contains(key) {
+        if g.protected(key) {
             return EvictOutcome::Pinned;
         }
         let mut removed = false;
@@ -700,7 +983,14 @@ impl KvStore {
             for k in &g.prefetched {
                 ensure!(g.device.contains_key(k), "shard {i}: prefetch mark for non-device {k:?}");
             }
-            for k in g.device.keys().chain(g.host.keys()).chain(g.disk.keys()) {
+            for (k, id) in &g.pin_lease {
+                ensure!(
+                    g.leases.get(k).is_some_and(|recs| recs.iter().any(|r| r.id == *id)),
+                    "shard {i}: pin lease {id} for {k:?} missing from the lease table"
+                );
+            }
+            let lease_keys = g.leases.keys();
+            for k in g.device.keys().chain(g.host.keys()).chain(g.disk.keys()).chain(lease_keys) {
                 ensure!(
                     self.shard_index(k) == i,
                     "key {k:?} filed under shard {i}, hashes to {}",
@@ -763,15 +1053,18 @@ impl KvStore {
 
     /// LRU-evict device entries over the shard's capacity slice, demoting
     /// them (compressed) into the host tier; host overflows simply drop
-    /// (disk still has them). Pinned entries are never victims: when only
-    /// pinned entries remain, the tier is allowed to run over capacity.
+    /// (disk still has them). Leased entries are never victims — but a
+    /// lease whose TTL has lapsed no longer protects, so abandoned leases
+    /// age out of the way instead of exempting entries forever. When only
+    /// leased entries remain, the tier is allowed to run over capacity.
     fn evict_locked(&self, g: &mut ShardInner) {
+        let now = Instant::now();
         while g.device_bytes > self.device_cap_per_shard && g.device.len() > 1 {
-            let pinned = &g.pinned;
+            let leases = &g.leases;
             let victim = g
                 .device
                 .iter()
-                .filter(|(k, _)| !pinned.contains(*k))
+                .filter(|(k, _)| !leases_live(leases, k, now))
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(k, _)| k.clone());
             let Some(victim) = victim else { break };
@@ -792,11 +1085,11 @@ impl KvStore {
             }
         }
         while g.host_bytes > self.host_cap_per_shard && g.host.len() > 1 {
-            let pinned = &g.pinned;
+            let leases = &g.leases;
             let victim = g
                 .host
                 .iter()
-                .filter(|(k, _)| !pinned.contains(*k))
+                .filter(|(k, _)| !leases_live(leases, k, now))
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(k, _)| k.clone());
             let Some(victim) = victim else { break };
@@ -1294,6 +1587,142 @@ mod tests {
             }
         }
         evictor.join().unwrap();
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lease_lifecycle_grant_renew_release() {
+        let s = store_cfg(1 << 30, 60_000, 4, "lease-life");
+        let e = test_entry(100, 8);
+        s.put(e.clone()).unwrap();
+        // Absent keys cannot be leased.
+        assert!(s.lease(&test_entry(101, 8).key, None).is_none());
+        let lease = s.lease(&e.key, Some(Duration::from_millis(40))).expect("resident");
+        assert_eq!(lease.key, e.key);
+        assert_eq!(s.lease_count(&e.key), 1);
+        assert!(s.is_pinned(&e.key), "a live lease reads as pinned");
+        assert_eq!(s.evict(&e.key), EvictOutcome::Pinned);
+        // Renewal extends the TTL from now: long after the original 40ms
+        // the entry is still protected.
+        assert!(s.lease_renew(lease.id, Some(Duration::from_secs(30))).is_some());
+        std::thread::sleep(Duration::from_millis(90));
+        assert_eq!(s.evict(&e.key), EvictOutcome::Pinned);
+        // Release frees it; double release reports false.
+        assert!(s.lease_release(lease.id));
+        assert!(!s.lease_release(lease.id));
+        assert_eq!(s.lease_count(&e.key), 0);
+        assert_eq!(s.evict(&e.key), EvictOutcome::Evicted);
+        let st = s.stats();
+        assert_eq!(st.leases_acquired, 1);
+        assert_eq!(st.leases_released, 1);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn expired_lease_makes_entry_evictable() {
+        let s = store_cfg(1 << 30, 60_000, 4, "lease-exp");
+        let e = test_entry(110, 8);
+        s.put(e.clone()).unwrap();
+        let lease = s.lease(&e.key, Some(Duration::from_millis(30))).unwrap();
+        assert_eq!(s.evict(&e.key), EvictOutcome::Pinned);
+        std::thread::sleep(Duration::from_millis(80));
+        // Lapsed: no sweep ran, but protection is gone (lazy expiry)...
+        assert!(!s.is_pinned(&e.key));
+        assert_eq!(s.evict(&e.key), EvictOutcome::Evicted);
+        // ...and an expired lease cannot be revived.
+        assert!(s.lease_renew(lease.id, Some(Duration::from_secs(5))).is_none());
+        assert!(s.stats().lease_expirations >= 1);
+        s.check_invariants().unwrap();
+    }
+
+    /// The acceptance-criteria core: a leased entry survives LRU pressure
+    /// until its TTL lapses, then becomes an ordinary eviction victim.
+    #[test]
+    fn leased_entry_survives_lru_pressure_until_ttl_lapses() {
+        let e1 = test_entry(120, 32);
+        let cap = e1.bytes() + e1.bytes() / 2; // one entry + slack
+        let s = store_cfg(cap, 60_000, 1, "lease-lru");
+        s.put(e1.clone()).unwrap();
+        let _lease = s.lease(&e1.key, Some(Duration::from_millis(120))).unwrap();
+        // Pressure: a newer entry overflows the device slice. The LRU
+        // would pick e1 (older); the lease forces it to spare e1.
+        s.put(test_entry(121, 32)).unwrap();
+        assert_eq!(s.tier_of(&e1.key), Some(Tier::Device), "leased entry must survive pressure");
+        std::thread::sleep(Duration::from_millis(200));
+        // TTL lapsed: the next pressure wave demotes e1 normally.
+        s.put(test_entry(122, 32)).unwrap();
+        assert_ne!(
+            s.tier_of(&e1.key),
+            Some(Tier::Device),
+            "expired lease must stop protecting the entry"
+        );
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pin_is_an_infinite_lease_and_idempotent() {
+        let s = store_cfg(1 << 30, 60_000, 4, "pin-compat");
+        let e = test_entry(130, 8);
+        s.put(e.clone()).unwrap();
+        assert!(s.set_pinned(&e.key, true));
+        assert!(s.set_pinned(&e.key, true), "re-pinning is idempotent");
+        assert_eq!(s.lease_count(&e.key), 1, "one compat lease, not two");
+        let info = s.entry_info(&e.key).unwrap();
+        assert!(info.pinned);
+        assert_eq!(info.leases, 1);
+        // Pins never expire on their own.
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(s.is_pinned(&e.key));
+        assert!(s.set_pinned(&e.key, false));
+        assert_eq!(s.lease_count(&e.key), 0);
+        assert_eq!(s.evict(&e.key), EvictOutcome::Evicted);
+        s.check_invariants().unwrap();
+    }
+
+    /// v2 compat regression: unpinning an entry whose only liveness was
+    /// the pin (disk TTL lapsed underneath it) must still report success
+    /// — residency is answered while the pin protects the entry.
+    #[test]
+    fn unpin_after_ttl_lapse_reports_success() {
+        let s = store_cfg(1 << 30, 30, 4, "unpin-ttl");
+        let e = test_entry(150, 8);
+        s.put(e.clone()).unwrap();
+        assert!(s.set_pinned(&e.key, true));
+        s.drop_device_for_test(&e.key);
+        std::thread::sleep(Duration::from_millis(80));
+        assert_eq!(s.tier_of(&e.key), Some(Tier::Disk), "pin keeps the lapsed entry alive");
+        assert!(s.set_pinned(&e.key, false), "unpin of a pin-kept entry must report success");
+        // Protection gone: the lapsed entry is reclaimable immediately.
+        assert!(s.get(&e.key).is_none());
+        s.check_invariants().unwrap();
+    }
+
+    /// Satellite: expired disk entries leave `residency`/`cache.list`
+    /// through the sweep hook, without anything touching them.
+    #[test]
+    fn sweep_reaps_expired_disk_entries_and_leases() {
+        let s = store_cfg(1 << 30, 40, 4, "sweep");
+        let e = test_entry(140, 8);
+        s.put(e.clone()).unwrap();
+        s.drop_device_for_test(&e.key);
+        // A second, leased entry whose lease will lapse.
+        let e2 = test_entry(141, 8);
+        s.put(e2.clone()).unwrap();
+        let lease = s.lease(&e2.key, Some(Duration::from_millis(30))).unwrap();
+        assert_eq!(s.residency().2, 2, "both disk entries resident before expiry");
+        std::thread::sleep(Duration::from_millis(100));
+        let rep = s.sweep();
+        assert_eq!(rep.expired_entries, 1, "the disk-only expired entry is reaped: {rep:?}");
+        assert!(rep.expired_leases >= 1, "the lapsed lease record is pruned: {rep:?}");
+        assert_eq!(s.residency().2, 1, "e2 keeps its disk copy (device-resident)");
+        assert!(s.entries().iter().all(|i| i.key != e.key), "reaped entry must not list");
+        assert_eq!(s.lease_count(&e2.key), 0);
+        // The reap counted as an expiration, not a miss/corruption.
+        let st = s.stats();
+        assert!(st.expirations >= 1);
+        assert_eq!(st.misses, 0);
+        // The lease directory forgot the dead id: renewing fails cleanly.
+        assert!(s.lease_renew(lease.id, None).is_none());
         s.check_invariants().unwrap();
     }
 

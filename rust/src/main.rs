@@ -4,20 +4,27 @@
 //! mpic serve  [--addr 127.0.0.1:7401] [--model mpic-sim-a] [--artifacts DIR]
 //!             [--queue-bound 64] [--max-batch 8] [--deadline-ms 30000]
 //!             [--conn-threads 8] [--kv-blocks 4096] [--block-tokens 16]
-//! mpic call   --json '{"v":2,"op":"stats"}' [--addr 127.0.0.1:7401]
+//! mpic call   --json '{"v":3,"op":"stats"}' [--addr 127.0.0.1:7401]
+//! mpic lease         --handle IMAGE#NAME [--ttl-ms N] [--ns TENANT] [--addr ...]
+//! mpic lease-renew   --lease ID [--ttl-ms N] [--ns TENANT] [--addr ...]
+//! mpic lease-release --lease ID [--ns TENANT] [--addr ...]
+//! mpic cancel        --target REQUEST_ID [--ns TENANT] [--addr ...]
 //! mpic run    [--dataset mmdu|sparkles|rag] [--policy mpic-32] [--convs N] [--images-min A --images-max B]
-//! mpic upload --user ID --handle IMAGE#NAME
-//! mpic upload-chunk --handle CHUNK#NAME --text 'document text'
+//! mpic upload --user ID --handle IMAGE#NAME [--ns TENANT]
+//! mpic upload-chunk --handle CHUNK#NAME --text 'document text' [--ns TENANT]
 //! mpic analyze [--model mpic-sim-a]        # quick Fig.4-style attention report
 //! ```
 //!
-//! `call` sends one request to a running server and prints every reply
-//! line (streaming chunks included) — a curl for the v2 wire protocol.
+//! `call` sends one raw request to a running server and prints every
+//! reply line (streaming chunks included) — a curl for the v3 wire
+//! protocol. The lease/cancel subcommands talk to a running server
+//! through the typed [`mpic::server::MpicClient`] SDK.
 
 use anyhow::Context;
 use mpic::coordinator::{Engine, EngineConfig, Policy};
 use mpic::coordinator::scheduler::{Request, Scheduler};
-use mpic::mm::UserId;
+use mpic::mm::{Namespace, UserId};
+use mpic::server::MpicClient;
 use mpic::util::cli::Args;
 use mpic::util::json::Value;
 use mpic::workload::{generate, Dataset, WorkloadSpec};
@@ -27,6 +34,25 @@ fn main() {
     if let Err(e) = run() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
+    }
+}
+
+/// The caller's tenant namespace (`--ns`), default when absent.
+fn parse_ns(args: &Args) -> anyhow::Result<Namespace> {
+    match args.get("ns") {
+        Some(ns) => Namespace::new(ns),
+        None => Ok(Namespace::default()),
+    }
+}
+
+/// Typed v3 client against `--addr`, scoped to `--ns` when given.
+fn typed_client(args: &Args) -> anyhow::Result<MpicClient> {
+    let addr: std::net::SocketAddr =
+        args.str_or("addr", "127.0.0.1:7401").parse().context("--addr must be HOST:PORT")?;
+    let client = MpicClient::connect(addr)?;
+    match args.get("ns") {
+        Some(ns) => client.with_namespace(ns),
+        None => Ok(client),
     }
 }
 
@@ -64,30 +90,80 @@ fn run() -> anyhow::Result<()> {
         }
 
         "call" => {
-            let addr: std::net::SocketAddr = args
-                .str_or("addr", "127.0.0.1:7401")
-                .parse()
-                .context("--addr must be HOST:PORT")?;
             let json = args.get("json").context("--json required (one request object)")?;
             let req = Value::parse(json).context("--json must be a JSON object")?;
-            let mut client = mpic::server::Client::connect(addr)?;
-            let last = client.call_stream(&req, |chunk| println!("{}", chunk.encode()))?;
+            let mut client = typed_client(&args)?;
+            let last = client.call_raw(&req, |chunk| println!("{}", chunk.encode()))?;
             println!("{}", last.encode());
+        }
+
+        "lease" => {
+            let handle = args.get("handle").context("--handle required")?;
+            let ttl_ms = args.get("ttl-ms").map(|s| s.parse::<u64>()).transpose()
+                .context("--ttl-ms must be a number (omit for an infinite lease)")?;
+            let mut client = typed_client(&args)?;
+            let lease = client.lease(handle, ttl_ms)?;
+            match lease.ttl_ms {
+                Some(ms) => println!("lease {} on {handle} for {ms} ms", lease.id),
+                None => println!("lease {} on {handle} (infinite)", lease.id),
+            }
+        }
+
+        "lease-renew" => {
+            let id = args.u64_or("lease", 0)?;
+            anyhow::ensure!(id != 0, "--lease ID required");
+            let ttl_ms = args.get("ttl-ms").map(|s| s.parse::<u64>()).transpose()?;
+            let mut client = typed_client(&args)?;
+            let lease = mpic::server::Lease { id, handle: String::new(), ttl_ms: None };
+            let renewed = client.lease_renew(&lease, ttl_ms)?;
+            println!("lease {} renewed ({:?} ms)", renewed.id, renewed.ttl_ms);
+        }
+
+        "lease-release" => {
+            let id = args.u64_or("lease", 0)?;
+            anyhow::ensure!(id != 0, "--lease ID required");
+            let mut client = typed_client(&args)?;
+            let lease = mpic::server::Lease { id, handle: String::new(), ttl_ms: None };
+            client.lease_release(&lease)?;
+            println!("lease {id} released");
+        }
+
+        "cancel" => {
+            let target = args.get("target").context("--target REQUEST_ID required")?;
+            let mut client = typed_client(&args)?;
+            // Request ids are strings *or* numbers on the wire and the
+            // victim lookup compares by exact JSON value, so a numeric
+            // --target must be retried as a number when the string form
+            // matches nothing.
+            let result = match client.cancel(&Value::str(target)) {
+                Err(e)
+                    if e.downcast_ref::<mpic::server::client::WireError>()
+                        .is_some_and(|w| w.code == mpic::server::api::ErrorCode::NotFound)
+                        && target.parse::<f64>().is_ok() =>
+                {
+                    client.cancel(&Value::num(target.parse::<f64>().unwrap()))
+                }
+                other => other,
+            };
+            result?;
+            println!("request {target:?} cancelled");
         }
 
         "upload" => {
             let engine = engine_from(&args)?;
             let user = UserId(args.u64_or("user", 1)?);
             let handle = args.get("handle").context("--handle required")?;
-            let image = engine.upload_image(user, handle)?;
-            println!("uploaded {handle} -> image {:#x}", image.0);
+            let ns = parse_ns(&args)?;
+            let image = engine.upload_image_in(&ns, user, handle)?;
+            println!("uploaded {handle} -> image {:#x} (ns {ns})", image.0);
         }
 
         "upload-chunk" => {
             let engine = engine_from(&args)?;
             let handle = args.get("handle").context("--handle required (CHUNK#NAME)")?;
             let text = args.get("text").context("--text required")?;
-            let chunk = engine.upload_chunk(handle, text)?;
+            let ns = parse_ns(&args)?;
+            let chunk = engine.upload_chunk_in(&ns, handle, text)?;
             println!("uploaded {handle} -> chunk {:#x} (reference it as {handle} in prompts)", chunk.0);
         }
 
@@ -195,15 +271,19 @@ fn run() -> anyhow::Result<()> {
         }
 
         _ => {
-            println!("usage: mpic <serve|call|run|upload|upload-chunk|analyze> [options]");
-            println!("  serve        --addr HOST:PORT --model NAME --artifacts DIR");
-            println!("               --queue-bound N --max-batch N --deadline-ms MS --conn-threads N");
-            println!("               --kv-blocks N --block-tokens N");
-            println!("  call         --json '{{\"v\":2,\"op\":\"stats\"}}' --addr HOST:PORT");
-            println!("  run          --dataset mmdu|sparkles|rag --policy prefix|full-reuse|cacheblend-R|mpic-K --convs N");
-            println!("  upload       --user ID --handle IMAGE#NAME");
-            println!("  upload-chunk --handle CHUNK#NAME --text 'document text'");
-            println!("  analyze      --model NAME");
+            println!("usage: mpic <serve|call|lease|lease-renew|lease-release|cancel|run|upload|upload-chunk|analyze> [options]");
+            println!("  serve         --addr HOST:PORT --model NAME --artifacts DIR");
+            println!("                --queue-bound N --max-batch N --deadline-ms MS --conn-threads N");
+            println!("                --kv-blocks N --block-tokens N");
+            println!("  call          --json '{{\"v\":3,\"op\":\"stats\"}}' --addr HOST:PORT");
+            println!("  lease         --handle IMAGE#NAME [--ttl-ms N] [--ns TENANT] --addr HOST:PORT");
+            println!("  lease-renew   --lease ID [--ttl-ms N] [--ns TENANT] --addr HOST:PORT");
+            println!("  lease-release --lease ID [--ns TENANT] --addr HOST:PORT");
+            println!("  cancel        --target REQUEST_ID [--ns TENANT] --addr HOST:PORT");
+            println!("  run           --dataset mmdu|sparkles|rag --policy prefix|full-reuse|cacheblend-R|mpic-K --convs N");
+            println!("  upload        --user ID --handle IMAGE#NAME [--ns TENANT]");
+            println!("  upload-chunk  --handle CHUNK#NAME --text 'document text' [--ns TENANT]");
+            println!("  analyze       --model NAME");
         }
     }
     Ok(())

@@ -20,6 +20,56 @@ pub use bias::make_sink_bias;
 pub use layout::{LinkedLayout, ReuseSpan, TokenKind};
 pub use tokenizer::Tokenizer;
 
+/// A tenant namespace (the v3 `"ns"` envelope field).
+///
+/// Every cache key, registry record and session is scoped by a namespace,
+/// so two tenants uploading `IMAGE#LOGO` get distinct entries and
+/// `cache.list` only shows the caller's own state. The **default**
+/// namespace (empty string) is the pre-v3 world: requests that carry no
+/// `"ns"` field see exactly the behaviour the v1/v2 protocol had.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct Namespace(String);
+
+impl Namespace {
+    /// Parse and validate a namespace name: 1–64 chars of `[A-Za-z0-9._-]`
+    /// (the charset keeps disk-tier file stems and wire fields safe).
+    pub fn new(s: &str) -> crate::Result<Namespace> {
+        anyhow::ensure!(
+            !s.is_empty() && s.len() <= 64,
+            "namespace must be 1..=64 characters (got {})",
+            s.len()
+        );
+        anyhow::ensure!(
+            s.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-')),
+            "namespace {s:?} may only contain [A-Za-z0-9._-]"
+        );
+        Ok(Namespace(s.to_string()))
+    }
+
+    /// The default (pre-v3) namespace.
+    pub fn root() -> Namespace {
+        Namespace::default()
+    }
+
+    pub fn is_default(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl std::fmt::Display for Namespace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.0.is_empty() {
+            f.write_str("(default)")
+        } else {
+            f.write_str(&self.0)
+        }
+    }
+}
+
 /// Stable identifier of an uploaded or retrieved image.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ImageId(pub u64);
@@ -141,12 +191,22 @@ pub enum Segment {
 #[derive(Debug, Clone)]
 pub struct Prompt {
     pub user: UserId,
+    /// Tenant namespace the request runs in: scopes every cache key,
+    /// registry lookup and session this prompt touches. Defaults to the
+    /// root namespace (pre-v3 behaviour).
+    pub ns: Namespace,
     pub segments: Vec<Segment>,
 }
 
 impl Prompt {
     pub fn new(user: UserId) -> Prompt {
-        Prompt { user, segments: Vec::new() }
+        Prompt { user, ns: Namespace::default(), segments: Vec::new() }
+    }
+
+    /// Scope the prompt to a tenant namespace.
+    pub fn in_ns(mut self, ns: &Namespace) -> Prompt {
+        self.ns = ns.clone();
+        self
     }
 
     pub fn text(mut self, s: &str) -> Prompt {
@@ -284,6 +344,25 @@ mod tests {
                 assert!(!c.is_resolved());
             }
         }
+    }
+
+    #[test]
+    fn namespace_validation_and_defaults() {
+        let ns = Namespace::new("tenant-a").unwrap();
+        assert_eq!(ns.as_str(), "tenant-a");
+        assert!(!ns.is_default());
+        assert!(Namespace::default().is_default());
+        assert!(Namespace::new("").is_err());
+        assert!(Namespace::new("has space").is_err());
+        assert!(Namespace::new("sl/ash").is_err());
+        assert!(Namespace::new(&"x".repeat(65)).is_err());
+        assert!(Namespace::new(&"x".repeat(64)).is_ok());
+        // Prompts default to the root namespace and can be scoped.
+        let p = Prompt::parse(UserId(1), "hi IMAGE#A");
+        assert!(p.ns.is_default());
+        let p = p.in_ns(&ns);
+        assert_eq!(p.ns, ns);
+        assert_eq!(p.images().len(), 1, "scoping must preserve segments");
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! position-independent KV.
 
 use crate::cache::dynamic_lib::{DynamicLibrary, Reference};
-use crate::mm::SegmentId;
+use crate::mm::{Namespace, SegmentId};
 use crate::util::rng::{fnv1a, Rng};
 
 /// Embedding dimensionality of the toy retriever.
@@ -42,9 +42,10 @@ pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
-/// An in-memory vector index over dynamic-library references.
+/// An in-memory vector index over dynamic-library references. Entries
+/// carry their tenant namespace; searches only surface the caller's own.
 pub struct Retriever {
-    entries: Vec<(SegmentId, String, Vec<f32>)>,
+    entries: Vec<(Namespace, SegmentId, String, Vec<f32>)>,
     generation: u64,
 }
 
@@ -61,18 +62,19 @@ impl Retriever {
         self.entries = lib
             .all()
             .into_iter()
-            .map(|Reference { seg, description }| {
+            .map(|Reference { seg, ns, description }| {
                 let e = embed(&description);
-                (seg, description, e)
+                (ns, seg, description, e)
             })
             .collect();
         self.generation = lib.generation();
     }
 
-    /// Index one entry directly (custom indexes, tests). Entries added
-    /// this way are replaced by the next [`Retriever::sync`].
+    /// Index one default-namespace entry directly (custom indexes,
+    /// tests). Entries added this way are replaced by the next
+    /// [`Retriever::sync`].
     pub fn insert(&mut self, seg: SegmentId, description: &str, embedding: Vec<f32>) {
-        self.entries.push((seg, description.to_string(), embedding));
+        self.entries.push((Namespace::default(), seg, description.to_string(), embedding));
     }
 
     pub fn len(&self) -> usize {
@@ -83,15 +85,24 @@ impl Retriever {
         self.entries.is_empty()
     }
 
-    /// Top-k most similar references to the query text. Total ordering
-    /// (satellite fix): a NaN score — e.g. a hand-inserted embedding with
-    /// NaN components — must not panic the sort; NaN scores rank *below*
-    /// every finite score under the descending total order here, so
-    /// poisoned entries never displace real hits.
+    /// Top-k most similar default-namespace references.
     pub fn search(&self, query: &str, k: usize) -> Vec<(SegmentId, f32)> {
+        self.search_in(&Namespace::default(), query, k)
+    }
+
+    /// Top-k most similar references *within one tenant's namespace*.
+    /// Total ordering (satellite fix): a NaN score — e.g. a hand-inserted
+    /// embedding with NaN components — must not panic the sort; NaN
+    /// scores rank *below* every finite score under the descending total
+    /// order here, so poisoned entries never displace real hits.
+    pub fn search_in(&self, ns: &Namespace, query: &str, k: usize) -> Vec<(SegmentId, f32)> {
         let q = embed(query);
-        let mut scored: Vec<(SegmentId, f32)> =
-            self.entries.iter().map(|(id, _, e)| (*id, cosine(&q, e))).collect();
+        let mut scored: Vec<(SegmentId, f32)> = self
+            .entries
+            .iter()
+            .filter(|(n, _, _, _)| n == ns)
+            .map(|(_, id, _, e)| (*id, cosine(&q, e)))
+            .collect();
         // Descending by score with NaN pinned to the end: total_cmp alone
         // would rank a positive NaN above +inf (i.e. first).
         scored.sort_by(|a, b| match (a.1.is_nan(), b.1.is_nan()) {
@@ -162,6 +173,7 @@ mod tests {
         let lib = DynamicLibrary::new(store);
         lib.add(Reference {
             seg: SegmentId::Chunk(ChunkId(1)),
+            ns: Namespace::default(),
             description: "guidebook chapter about hotels near the eiffel tower".into(),
         });
         lib.add(Reference::image(ImageId(2), "dirt bike race desert"));
@@ -169,6 +181,27 @@ mod tests {
         r.sync(&lib);
         let hits = r.search("hotels near the eiffel tower", 1);
         assert_eq!(hits[0].0, SegmentId::Chunk(ChunkId(1)));
+    }
+
+    #[test]
+    fn search_scopes_to_the_namespace() {
+        let dir = std::env::temp_dir().join(format!("mpic-retr4-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store =
+            Arc::new(KvStore::new(StoreConfig { disk_dir: dir, ..Default::default() }).unwrap());
+        let lib = DynamicLibrary::new(store);
+        let ns = Namespace::new("tenant-a").unwrap();
+        lib.add(Reference::image(ImageId(1), "eiffel tower hotel brochure").in_ns(&ns));
+        lib.add(Reference::image(ImageId(2), "eiffel tower hotel brochure"));
+        let mut r = Retriever::new();
+        r.sync(&lib);
+        // Identical descriptions; only the caller's tenant's entry hits.
+        let hits = r.search_in(&ns, "eiffel tower hotel", 5);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].0, SegmentId::Image(ImageId(1)));
+        let default_hits = r.search("eiffel tower hotel", 5);
+        assert_eq!(default_hits.len(), 1);
+        assert_eq!(default_hits[0].0, SegmentId::Image(ImageId(2)));
     }
 
     /// Satellite regression: NaN scores must neither panic the sort nor

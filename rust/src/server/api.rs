@@ -1,24 +1,31 @@
-//! Typed, versioned serving API (v2).
+//! Typed, versioned serving API (v3).
 //!
 //! This module is the single dispatch surface of the TCP front end: every
-//! wire request — v1 or v2 — is parsed into a typed request struct
+//! wire request — v1, v2 or v3 — is parsed into a typed request struct
 //! ([`FromValue`]), executed against the engine, and serialised back
 //! through a typed response ([`ToValue`]). Errors carry machine-readable
 //! codes ([`ErrorCode`]) instead of bare strings, and client-supplied
 //! request ids are echoed on every reply line (including stream chunks) so
 //! connections can pipeline.
 //!
+//! v3 adds the cache-plane lifecycle: tenant namespaces (the optional
+//! `"ns"` envelope field threads a [`Namespace`] through every op),
+//! bounded-lifetime **leases** (`cache.lease` / `cache.lease_renew` /
+//! `cache.lease_release`, with v2 `cache.pin` mapping to an infinite
+//! lease), and in-flight cancellation (`infer.cancel`, handled by the
+//! serving pipeline which owns the scheduler).
+//!
 //! See the [`crate::server`] module doc for the full wire-level contract
 //! (op table, framing, error codes).
 
 use std::collections::BTreeMap;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::engine::{EvictOutcome, InferenceResult};
 use crate::coordinator::session::SessionStore;
 use crate::coordinator::{Engine, Policy};
 use crate::kv::{EntryInfo, Tier};
-use crate::mm::{ChunkId, ImageId, Prompt, SegmentId, UserId};
+use crate::mm::{ChunkId, ImageId, Namespace, Prompt, SegmentId, UserId};
 use crate::util::json::Value;
 
 // ----------------------------------------------------------------------
@@ -48,6 +55,9 @@ pub enum ErrorCode {
     /// deadline expired, or the addressed session already has a turn in
     /// flight. Retry after backing off.
     Overloaded,
+    /// The request was cancelled mid-flight (`infer.cancel`) — the
+    /// victim's terminal reply line.
+    Cancelled,
     /// The engine failed while executing the request.
     Internal,
 }
@@ -64,7 +74,26 @@ impl ErrorCode {
             ErrorCode::NotFound => "not_found",
             ErrorCode::Pinned => "pinned",
             ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Cancelled => "cancelled",
             ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Parse a wire code back into the enum (the typed client's reply
+    /// decoding). Unknown strings map to `Internal`.
+    pub fn parse(s: &str) -> ErrorCode {
+        match s {
+            "bad_json" => ErrorCode::BadJson,
+            "bad_version" => ErrorCode::BadVersion,
+            "unknown_op" => ErrorCode::UnknownOp,
+            "missing_field" => ErrorCode::MissingField,
+            "bad_type" => ErrorCode::BadType,
+            "bad_value" => ErrorCode::BadValue,
+            "not_found" => ErrorCode::NotFound,
+            "pinned" => ErrorCode::Pinned,
+            "overloaded" => ErrorCode::Overloaded,
+            "cancelled" => ErrorCode::Cancelled,
+            _ => ErrorCode::Internal,
         }
     }
 }
@@ -123,6 +152,16 @@ fn get_u64(v: &Value, key: &str) -> ApiResult<u64> {
         .map_err(|e| ApiError::new(ErrorCode::BadType, format!("field {key:?}: {e}")))
 }
 
+fn opt_u64(v: &Value, key: &str) -> ApiResult<Option<u64>> {
+    match v.opt(key) {
+        None => Ok(None),
+        Some(x) => x
+            .as_u64()
+            .map(Some)
+            .map_err(|e| ApiError::new(ErrorCode::BadType, format!("field {key:?}: {e}"))),
+    }
+}
+
 fn opt_usize(v: &Value, key: &str) -> ApiResult<Option<usize>> {
     match v.opt(key) {
         None => Ok(None),
@@ -157,11 +196,13 @@ fn opt_bool(v: &Value, key: &str, default: bool) -> ApiResult<bool> {
 // ----------------------------------------------------------------------
 
 /// The fields common to every request: protocol version, optional request
-/// id (echoed verbatim on every reply line) and the operation name.
+/// id (echoed verbatim on every reply line), the caller's tenant
+/// namespace (v3; defaults to the root namespace) and the operation name.
 #[derive(Debug, Clone)]
 pub struct Envelope {
     pub v: u64,
     pub id: Option<Value>,
+    pub ns: Namespace,
     pub op: String,
 }
 
@@ -173,10 +214,10 @@ impl FromValue for Envelope {
                 .as_u64()
                 .map_err(|e| ApiError::new(ErrorCode::BadType, format!("field \"v\": {e}")))?,
         };
-        if v != 1 && v != 2 {
+        if !(1..=3).contains(&v) {
             return Err(ApiError::new(
                 ErrorCode::BadVersion,
-                format!("unsupported protocol version {v} (supported: 1, 2)"),
+                format!("unsupported protocol version {v} (supported: 1, 2, 3)"),
             ));
         }
         let id = match req.opt("id") {
@@ -191,8 +232,14 @@ impl FromValue for Envelope {
                 }
             },
         };
+        let ns = match opt_str(req, "ns")? {
+            None => Namespace::default(),
+            Some(s) if s.is_empty() => Namespace::default(),
+            Some(s) => Namespace::new(&s)
+                .map_err(|e| ApiError::new(ErrorCode::BadValue, format!("field \"ns\": {e:#}")))?,
+        };
         let op = get_str(req, "op")?;
-        Ok(Envelope { v, id, op })
+        Ok(Envelope { v, id, ns, op })
     }
 }
 
@@ -319,6 +366,55 @@ impl FromValue for CachePinReq {
     }
 }
 
+/// `cache.lease` — take a bounded-lifetime lease on an entry. Omitting
+/// `ttl_ms` grants an infinite lease (equivalent to a v2 pin, but with an
+/// id that can be released).
+#[derive(Debug, Clone)]
+pub struct CacheLeaseReq {
+    pub handle: String,
+    pub ttl_ms: Option<u64>,
+}
+
+impl FromValue for CacheLeaseReq {
+    fn from_value(v: &Value) -> ApiResult<CacheLeaseReq> {
+        Ok(CacheLeaseReq { handle: get_str(v, "handle")?, ttl_ms: opt_u64(v, "ttl_ms")? })
+    }
+}
+
+/// `cache.lease_renew` / `cache.lease_release` — ops addressing a lease
+/// by id (`ttl_ms` only meaningful on renew).
+#[derive(Debug, Clone)]
+pub struct LeaseIdReq {
+    pub lease: u64,
+    pub ttl_ms: Option<u64>,
+}
+
+impl FromValue for LeaseIdReq {
+    fn from_value(v: &Value) -> ApiResult<LeaseIdReq> {
+        Ok(LeaseIdReq { lease: get_u64(v, "lease")?, ttl_ms: opt_u64(v, "ttl_ms")? })
+    }
+}
+
+/// `infer.cancel` — abort an in-flight generation. `target` is the
+/// client-supplied `"id"` of the victim request (string or number).
+#[derive(Debug, Clone)]
+pub struct CancelReq {
+    pub target: Value,
+}
+
+impl FromValue for CancelReq {
+    fn from_value(v: &Value) -> ApiResult<CancelReq> {
+        match v.opt("target") {
+            Some(t @ (Value::Str(_) | Value::Num(_))) => Ok(CancelReq { target: t.clone() }),
+            Some(other) => Err(ApiError::new(
+                ErrorCode::BadType,
+                format!("field \"target\" must be a string or number, got {}", other.encode()),
+            )),
+            None => Err(ApiError::new(ErrorCode::MissingField, "missing field \"target\"")),
+        }
+    }
+}
+
 // ----------------------------------------------------------------------
 // Typed responses
 // ----------------------------------------------------------------------
@@ -411,10 +507,12 @@ impl ToValue for InferResp {
 #[derive(Debug, Clone)]
 pub struct CacheEntryResp {
     pub model: String,
+    pub ns: Namespace,
     pub seg: SegmentId,
     pub tier: Tier,
     pub bytes: usize,
     pub pinned: bool,
+    pub leases: usize,
 }
 
 fn tier_str(t: Tier) -> &'static str {
@@ -429,10 +527,12 @@ impl From<EntryInfo> for CacheEntryResp {
     fn from(e: EntryInfo) -> CacheEntryResp {
         CacheEntryResp {
             model: e.key.model,
+            ns: e.key.ns,
             seg: e.key.seg,
             tier: e.tier,
             bytes: e.bytes,
             pinned: e.pinned,
+            leases: e.leases,
         }
     }
 }
@@ -446,10 +546,40 @@ impl ToValue for CacheEntryResp {
             ("tier", Value::str(tier_str(self.tier))),
             ("bytes", Value::num(self.bytes as f64)),
             ("pinned", Value::Bool(self.pinned)),
+            ("leases", Value::num(self.leases as f64)),
         ]);
+        // Namespaced entries name their tenant; default-ns entries stay
+        // byte-compatible with the v2 shape.
+        if !self.ns.is_default() {
+            v.set("ns", Value::str(self.ns.as_str()));
+        }
         // v1 compat: image entries keep their historical "image" field.
         if let SegmentId::Image(img) = self.seg {
             v.set("image", Value::str(format!("{:016x}", img.0)));
+        }
+        v
+    }
+}
+
+/// Reply body of `cache.lease` / `cache.lease_renew`.
+#[derive(Debug, Clone)]
+pub struct LeaseResp {
+    pub lease: u64,
+    pub handle: Option<String>,
+    pub ttl_ms: Option<u64>,
+}
+
+impl ToValue for LeaseResp {
+    fn to_value(&self) -> Value {
+        let mut v = Value::obj(vec![
+            ("lease", Value::num(self.lease as f64)),
+            ("infinite", Value::Bool(self.ttl_ms.is_none())),
+        ]);
+        if let Some(h) = &self.handle {
+            v.set("handle", Value::str(h));
+        }
+        if let Some(ms) = self.ttl_ms {
+            v.set("ttl_ms", Value::num(ms as f64));
         }
         v
     }
@@ -459,6 +589,7 @@ impl ToValue for CacheEntryResp {
 #[derive(Debug, Clone)]
 pub struct SessionResp {
     pub user: u64,
+    pub ns: Namespace,
     pub turns: usize,
     pub history_len: usize,
     pub images: usize,
@@ -466,12 +597,16 @@ pub struct SessionResp {
 
 impl ToValue for SessionResp {
     fn to_value(&self) -> Value {
-        Value::obj(vec![
+        let mut v = Value::obj(vec![
             ("user", Value::num(self.user as f64)),
             ("turns", Value::num(self.turns as f64)),
             ("history_len", Value::num(self.history_len as f64)),
             ("images", Value::num(self.images as f64)),
-        ])
+        ]);
+        if !self.ns.is_default() {
+            v.set("ns", Value::str(self.ns.as_str()));
+        }
+        v
     }
 }
 
@@ -608,13 +743,13 @@ fn dispatch_op(
 
         "upload" => {
             let q = UploadReq::from_value(req)?;
-            let image = engine.upload_image(UserId(q.user), &q.handle)?;
+            let image = engine.upload_image_in(&env.ns, UserId(q.user), &q.handle)?;
             Ok(ImageResp { image }.to_value())
         }
 
         "add_reference" => {
             let q = AddReferenceReq::from_value(req)?;
-            let image = engine.add_reference(&q.handle, &q.description)?;
+            let image = engine.add_reference_in(&env.ns, &q.handle, &q.description)?;
             Ok(ImageResp { image }.to_value())
         }
 
@@ -624,12 +759,12 @@ fn dispatch_op(
         "chunk.upload" => {
             let q = ChunkUploadReq::from_value(req)?;
             let chunk = match &q.description {
-                Some(desc) => engine.add_chunk_reference(&q.handle, &q.text, desc)?,
-                None => engine.upload_chunk(&q.handle, &q.text)?,
+                Some(desc) => engine.add_chunk_reference_in(&env.ns, &q.handle, &q.text, desc)?,
+                None => engine.upload_chunk_in(&env.ns, &q.handle, &q.text)?,
             };
             let tokens = engine
                 .chunk_lib
-                .get(chunk)
+                .get_in(&env.ns, chunk)
                 .map(|m| m.tokens.len())
                 .unwrap_or(0);
             Ok(ChunkResp { chunk, tokens, indexed: q.description.is_some() }.to_value())
@@ -638,7 +773,7 @@ fn dispatch_op(
         "infer" => {
             let q = GenerateReq::from_value(req)?;
             let (policy, max_new) = generation_params(engine, &q)?;
-            let mut prompt = Prompt::parse(UserId(q.user), &q.text);
+            let mut prompt = Prompt::parse(UserId(q.user), &q.text).in_ns(&env.ns);
             if q.mrag > 0 {
                 prompt = engine.mrag_augment(&prompt, q.mrag)?.0;
             }
@@ -650,6 +785,18 @@ fn dispatch_op(
             Ok(body)
         }
 
+        // Cancellation needs the scheduler, which the serving pipeline
+        // owns — it intercepts `infer.cancel` before this dispatcher. A
+        // request landing here (inline dispatch, or a target that is not
+        // in flight on the pipeline) addresses nothing cancellable.
+        "infer.cancel" => {
+            let q = CancelReq::from_value(req)?;
+            Err(ApiError::new(
+                ErrorCode::NotFound,
+                format!("no in-flight request with id {}", q.target.encode()),
+            ))
+        }
+
         // Multi-turn chat: the session accumulates history; every turn is
         // linked as history ++ turn so earlier images hit the cache
         // position-independently. The turn is previewed for generation and
@@ -659,15 +806,15 @@ fn dispatch_op(
             let q = GenerateReq::from_value(req)?;
             let (policy, max_new) = generation_params(engine, &q)?;
             let user = UserId(q.user);
-            let turn = Prompt::parse(user, &q.text);
-            let mut full = sessions.session(user).preview_turn(user, &turn);
+            let turn = Prompt::parse(user, &q.text).in_ns(&env.ns);
+            let mut full = sessions.session(&env.ns, user).preview_turn(user, &turn);
             if q.mrag > 0 {
                 full = engine.mrag_augment(&full, q.mrag)?.0;
             }
             let r = run_generate(engine, env, &full, policy, max_new, q.stream, sink)?;
-            sessions.session(user).commit_turn(&turn, &r.tokens);
+            sessions.session(&env.ns, user).commit_turn(&turn, &r.tokens);
             let mut body = InferResp::from(&r).to_value();
-            body.set("turn", Value::num(sessions.session(user).turns() as f64));
+            body.set("turn", Value::num(sessions.session(&env.ns, user).turns() as f64));
             if q.stream {
                 body.set("done", Value::Bool(true));
             }
@@ -676,13 +823,15 @@ fn dispatch_op(
 
         "reset" => {
             let q = UserReq::from_value(req)?;
-            sessions.reset(UserId(q.user));
+            sessions.reset(&env.ns, UserId(q.user));
             Ok(Value::obj(vec![("reset", Value::Bool(true))]))
         }
 
+        // Scoped to the caller's namespace: tenants only see their own
+        // entries (the default namespace sees the pre-v3 global set).
         "cache.list" => {
             let entries: Vec<Value> = engine
-                .cache_entries()
+                .cache_entries(&env.ns)
                 .into_iter()
                 .map(|e| CacheEntryResp::from(e).to_value())
                 .collect();
@@ -694,7 +843,7 @@ fn dispatch_op(
 
         "cache.stat" => {
             let q = CacheKeyReq::from_value(req)?;
-            match engine.cache_stat(&q.handle) {
+            match engine.cache_stat(&env.ns, &q.handle) {
                 Some(e) => {
                     let mut body = CacheEntryResp::from(e).to_value();
                     body.set("handle", Value::str(&q.handle));
@@ -710,7 +859,7 @@ fn dispatch_op(
 
         "cache.pin" => {
             let q = CachePinReq::from_value(req)?;
-            if !engine.cache_pin(&q.handle, q.pinned) {
+            if !engine.cache_pin(&env.ns, &q.handle, q.pinned) {
                 return Err(ApiError::new(
                     ErrorCode::NotFound,
                     format!("no cache entry for handle {:?}", q.handle),
@@ -722,9 +871,65 @@ fn dispatch_op(
             ]))
         }
 
+        // Lease lifecycle: grant with a TTL (or infinite), renew from
+        // now, release early. Abandoned leases age out via the store's
+        // expiry sweeps instead of protecting their entry forever.
+        "cache.lease" => {
+            let q = CacheLeaseReq::from_value(req)?;
+            let ttl = q.ttl_ms.map(Duration::from_millis);
+            match engine.cache_lease(&env.ns, &q.handle, ttl) {
+                Some(info) => {
+                    let mut body = LeaseResp {
+                        lease: info.id,
+                        handle: Some(q.handle.clone()),
+                        ttl_ms: q.ttl_ms,
+                    }
+                    .to_value();
+                    body.set("leased", Value::Bool(true));
+                    Ok(body)
+                }
+                None => Err(ApiError::new(
+                    ErrorCode::NotFound,
+                    format!("no cache entry for handle {:?}", q.handle),
+                )),
+            }
+        }
+
+        "cache.lease_renew" => {
+            let q = LeaseIdReq::from_value(req)?;
+            let ttl = q.ttl_ms.map(Duration::from_millis);
+            match engine.cache_lease_renew(&env.ns, q.lease, ttl) {
+                Some(info) => {
+                    let mut body =
+                        LeaseResp { lease: info.id, handle: None, ttl_ms: q.ttl_ms }.to_value();
+                    body.set("renewed", Value::Bool(true));
+                    Ok(body)
+                }
+                None => Err(ApiError::new(
+                    ErrorCode::NotFound,
+                    format!("no live lease {} (expired or released?)", q.lease),
+                )),
+            }
+        }
+
+        "cache.lease_release" => {
+            let q = LeaseIdReq::from_value(req)?;
+            if engine.cache_lease_release(&env.ns, q.lease) {
+                Ok(Value::obj(vec![
+                    ("lease", Value::num(q.lease as f64)),
+                    ("released", Value::Bool(true)),
+                ]))
+            } else {
+                Err(ApiError::new(
+                    ErrorCode::NotFound,
+                    format!("no live lease {} (expired or released?)", q.lease),
+                ))
+            }
+        }
+
         "cache.evict" => {
             let q = CacheKeyReq::from_value(req)?;
-            match engine.cache_evict(&q.handle) {
+            match engine.cache_evict(&env.ns, &q.handle) {
                 EvictOutcome::Evicted => Ok(Value::obj(vec![
                     ("handle", Value::str(&q.handle)),
                     ("evicted", Value::Bool(true)),
@@ -735,18 +940,19 @@ fn dispatch_op(
                 )),
                 EvictOutcome::Pinned => Err(ApiError::new(
                     ErrorCode::Pinned,
-                    format!("entry {:?} is pinned; unpin before evicting", q.handle),
+                    format!("entry {:?} is leased; release the leases before evicting", q.handle),
                 )),
             }
         }
 
         "session.list" => {
             let mut entries = Vec::new();
-            for user in sessions.users() {
-                if let Some(s) = sessions.get(user) {
+            for user in sessions.users(&env.ns) {
+                if let Some(s) = sessions.get(&env.ns, user) {
                     entries.push(
                         SessionResp {
                             user: user.0,
+                            ns: env.ns.clone(),
                             turns: s.turns(),
                             history_len: s.history_len(),
                             images: s.image_count(),
@@ -763,9 +969,10 @@ fn dispatch_op(
 
         "session.stat" => {
             let q = UserReq::from_value(req)?;
-            match sessions.get(UserId(q.user)) {
+            match sessions.get(&env.ns, UserId(q.user)) {
                 Some(s) => Ok(SessionResp {
                     user: q.user,
+                    ns: env.ns.clone(),
                     turns: s.turns(),
                     history_len: s.history_len(),
                     images: s.image_count(),
@@ -846,10 +1053,75 @@ mod tests {
 
     #[test]
     fn envelope_rejects_bad_version() {
-        let e = Envelope::from_value(&parse(r#"{"v":3,"op":"ping"}"#)).unwrap_err();
+        let e = Envelope::from_value(&parse(r#"{"v":9,"op":"ping"}"#)).unwrap_err();
         assert_eq!(e.code, ErrorCode::BadVersion);
         let e = Envelope::from_value(&parse(r#"{"v":"two","op":"ping"}"#)).unwrap_err();
         assert_eq!(e.code, ErrorCode::BadType);
+        // v3 is the current protocol.
+        let env = Envelope::from_value(&parse(r#"{"v":3,"op":"ping"}"#)).unwrap();
+        assert_eq!(env.v, 3);
+    }
+
+    #[test]
+    fn envelope_parses_namespace() {
+        let env = Envelope::from_value(&parse(r#"{"v":3,"op":"ping"}"#)).unwrap();
+        assert!(env.ns.is_default());
+        let env =
+            Envelope::from_value(&parse(r#"{"v":3,"ns":"tenant-a","op":"ping"}"#)).unwrap();
+        assert_eq!(env.ns.as_str(), "tenant-a");
+        // Empty string = default; bad charset = bad_value; bad type = bad_type.
+        let env = Envelope::from_value(&parse(r#"{"v":3,"ns":"","op":"ping"}"#)).unwrap();
+        assert!(env.ns.is_default());
+        let e = Envelope::from_value(&parse(r#"{"v":3,"ns":"has space","op":"ping"}"#))
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadValue);
+        let e = Envelope::from_value(&parse(r#"{"v":3,"ns":7,"op":"ping"}"#)).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadType);
+    }
+
+    #[test]
+    fn lease_requests_parse() {
+        let q = CacheLeaseReq::from_value(&parse(
+            r#"{"op":"cache.lease","handle":"IMAGE#A","ttl_ms":5000}"#,
+        ))
+        .unwrap();
+        assert_eq!(q.handle, "IMAGE#A");
+        assert_eq!(q.ttl_ms, Some(5000));
+        let q = CacheLeaseReq::from_value(&parse(r#"{"op":"cache.lease","handle":"IMAGE#A"}"#))
+            .unwrap();
+        assert_eq!(q.ttl_ms, None, "omitted ttl_ms = infinite lease");
+        let e = CacheLeaseReq::from_value(&parse(r#"{"op":"cache.lease"}"#)).unwrap_err();
+        assert_eq!(e.code, ErrorCode::MissingField);
+        let q = LeaseIdReq::from_value(&parse(r#"{"op":"cache.lease_renew","lease":7,"ttl_ms":1}"#))
+            .unwrap();
+        assert_eq!(q.lease, 7);
+        let e = LeaseIdReq::from_value(&parse(r#"{"op":"cache.lease_release"}"#)).unwrap_err();
+        assert_eq!(e.code, ErrorCode::MissingField);
+    }
+
+    #[test]
+    fn cancel_request_parses() {
+        let q = CancelReq::from_value(&parse(r#"{"op":"infer.cancel","target":"gen-1"}"#)).unwrap();
+        assert_eq!(q.target.as_str().unwrap(), "gen-1");
+        let q = CancelReq::from_value(&parse(r#"{"op":"infer.cancel","target":12}"#)).unwrap();
+        assert_eq!(q.target.as_u64().unwrap(), 12);
+        let e = CancelReq::from_value(&parse(r#"{"op":"infer.cancel"}"#)).unwrap_err();
+        assert_eq!(e.code, ErrorCode::MissingField);
+        let e = CancelReq::from_value(&parse(r#"{"op":"infer.cancel","target":[1]}"#)).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadType);
+    }
+
+    #[test]
+    fn lease_resp_shape() {
+        let v =
+            LeaseResp { lease: 9, handle: Some("IMAGE#A".into()), ttl_ms: Some(100) }.to_value();
+        assert_eq!(v.get("lease").unwrap().as_u64().unwrap(), 9);
+        assert_eq!(v.get("ttl_ms").unwrap().as_u64().unwrap(), 100);
+        assert!(!v.get("infinite").unwrap().as_bool().unwrap());
+        let v = LeaseResp { lease: 10, handle: None, ttl_ms: None }.to_value();
+        assert!(v.get("infinite").unwrap().as_bool().unwrap());
+        assert!(v.opt("ttl_ms").is_none());
+        assert!(v.opt("handle").is_none());
     }
 
     #[test]
@@ -922,25 +1194,32 @@ mod tests {
         use crate::kv::KvKey;
         let img = CacheEntryResp {
             model: "m".into(),
+            ns: Namespace::default(),
             seg: SegmentId::Image(ImageId(0xAB)),
             tier: Tier::Device,
             bytes: 10,
             pinned: false,
+            leases: 0,
         };
         let v = img.to_value();
         assert_eq!(v.get("kind").unwrap().as_str().unwrap(), "image");
         assert!(v.get("image").is_ok(), "image entries keep the v1 field");
+        assert!(v.opt("ns").is_none(), "default-ns entries keep the v2 shape");
+        assert_eq!(v.get("leases").unwrap().as_u64().unwrap(), 0);
         let chk = CacheEntryResp::from(EntryInfo {
-            key: KvKey::chunk("m", ChunkId(0xCD)),
+            key: KvKey::chunk("m", ChunkId(0xCD)).in_ns(&Namespace::new("tenant-a").unwrap()),
             tier: Tier::Disk,
             bytes: 5,
             pinned: true,
+            leases: 2,
         });
         let v = chk.to_value();
         assert_eq!(v.get("kind").unwrap().as_str().unwrap(), "chunk");
         assert_eq!(v.get("segment").unwrap().as_str().unwrap(), format!("{:016x}", 0xCD));
         assert!(v.opt("image").is_none(), "chunk entries carry no image field");
         assert!(v.get("pinned").unwrap().as_bool().unwrap());
+        assert_eq!(v.get("ns").unwrap().as_str().unwrap(), "tenant-a");
+        assert_eq!(v.get("leases").unwrap().as_u64().unwrap(), 2);
     }
 
     #[test]
@@ -974,7 +1253,12 @@ mod tests {
 
     #[test]
     fn chunk_lines_are_marked() {
-        let env = Envelope { v: 2, id: Some(Value::str("s1")), op: "infer".into() };
+        let env = Envelope {
+            v: 2,
+            id: Some(Value::str("s1")),
+            ns: Namespace::default(),
+            op: "infer".into(),
+        };
         let c = chunk_value(&env, 3, 42);
         assert!(c.get("ok").unwrap().as_bool().unwrap());
         assert!(c.get("stream").unwrap().as_bool().unwrap());

@@ -1,0 +1,625 @@
+//! Typed client SDK for the v3 wire protocol.
+//!
+//! [`MpicClient`] wraps the raw JSON-lines [`Client`](super::Client) with
+//! typed request/response structs built on the same [`FromValue`] /
+//! [`ToValue`] machinery the server dispatches with — examples, benches
+//! and the `mpic` CLI talk to the server through this surface instead of
+//! hand-assembling `Value` objects.
+//!
+//! Every request is sent as a v3 envelope with a generated `"id"` (so the
+//! raw client's reply-id verification is always active) and, when the
+//! client is scoped with [`MpicClient::with_namespace`], the tenant's
+//! `"ns"` field.
+//!
+//! Streaming generations return an [`InferHandle`]:
+//!
+//! ```ignore
+//! let mut h = client.infer_stream(&InferParams::new(1, "Describe IMAGE#X"))?;
+//! while let Some(chunk) = h.recv_chunk()? {
+//!     println!("token {}", chunk.token);
+//!     if chunk.seq == 0 {
+//!         h.cancel()?; // aborts mid-decode over a control connection
+//!     }
+//! }
+//! match h.join()? {
+//!     InferOutcome::Completed(r) => println!("{} tokens", r.tokens.len()),
+//!     InferOutcome::Cancelled { .. } => println!("cancelled"),
+//! }
+//! ```
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::api::{ApiError, ErrorCode, FromValue, ToValue};
+use super::Client;
+use crate::mm::Namespace;
+use crate::util::json::Value;
+use crate::Result;
+
+/// Process-global request-id counter. `infer.cancel` resolves its victim
+/// by (namespace, client id), so ids must be unique across every client
+/// in the process — a per-connection counter would let two clients'
+/// "sdk-3" collide and make cancellation ambiguous.
+static SDK_REQ_COUNTER: AtomicU64 = AtomicU64::new(1);
+
+/// A typed protocol-level failure: the machine-readable code plus the
+/// server's message. Recoverable codes (`overloaded`, `not_found`, …) can
+/// be matched by downcasting the `anyhow` error to this type.
+#[derive(Debug)]
+pub struct WireError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.message)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+fn wire_err(reply: &Value) -> anyhow::Error {
+    let code = reply.opt("code").and_then(|c| c.as_str().ok()).unwrap_or("internal");
+    let message = reply
+        .opt("error")
+        .and_then(|e| e.as_str().ok())
+        .unwrap_or("unknown server error")
+        .to_string();
+    anyhow::Error::new(WireError { code: ErrorCode::parse(code), message })
+}
+
+/// Parse a typed response out of a reply line, mapping field errors into
+/// ordinary `anyhow` errors.
+fn parse_reply<T: FromValue>(v: &Value) -> Result<T> {
+    T::from_value(v).map_err(|e: ApiError| {
+        anyhow::anyhow!("malformed server reply ({}): {}", e.code.as_str(), e.message)
+    })
+}
+
+// ----------------------------------------------------------------------
+// Typed requests / responses
+// ----------------------------------------------------------------------
+
+/// Parameters of one `infer` / `chat` generation.
+#[derive(Debug, Clone)]
+pub struct InferParams {
+    pub user: u64,
+    pub text: String,
+    pub policy: Option<String>,
+    pub max_new: Option<usize>,
+    pub mrag: usize,
+}
+
+impl InferParams {
+    pub fn new(user: u64, text: impl Into<String>) -> InferParams {
+        InferParams { user, text: text.into(), policy: None, max_new: None, mrag: 0 }
+    }
+
+    pub fn policy(mut self, policy: impl Into<String>) -> InferParams {
+        self.policy = Some(policy.into());
+        self
+    }
+
+    pub fn max_new(mut self, n: usize) -> InferParams {
+        self.max_new = Some(n);
+        self
+    }
+
+    pub fn mrag(mut self, top_k: usize) -> InferParams {
+        self.mrag = top_k;
+        self
+    }
+}
+
+impl ToValue for InferParams {
+    fn to_value(&self) -> Value {
+        let mut v = Value::obj(vec![
+            ("user", Value::num(self.user as f64)),
+            ("text", Value::str(&self.text)),
+        ]);
+        if let Some(p) = &self.policy {
+            v.set("policy", Value::str(p));
+        }
+        if let Some(n) = self.max_new {
+            v.set("max_new", Value::num(n as f64));
+        }
+        if self.mrag > 0 {
+            v.set("mrag", Value::num(self.mrag as f64));
+        }
+        v
+    }
+}
+
+/// Result of one completed generation.
+#[derive(Debug, Clone)]
+pub struct InferResult {
+    pub policy: String,
+    pub tokens: Vec<i32>,
+    pub ttft_s: f64,
+    pub decode_s: f64,
+    pub seq_len: usize,
+    pub device_hits: u64,
+    /// `chat` only: the session's turn counter after this turn.
+    pub turn: Option<u64>,
+    /// Online pipeline only: rounds the request waited before admission.
+    pub queued_rounds: Option<u64>,
+}
+
+impl FromValue for InferResult {
+    fn from_value(v: &Value) -> super::api::ApiResult<InferResult> {
+        let field = |k: &str| {
+            v.get(k).and_then(|x| x.as_f64()).map_err(|e| {
+                ApiError::new(ErrorCode::Internal, format!("reply field {k:?}: {e}"))
+            })
+        };
+        let tokens = v
+            .get("tokens")
+            .and_then(|t| t.as_arr().map(|a| a.to_vec()))
+            .map_err(|e| ApiError::new(ErrorCode::Internal, format!("reply field \"tokens\": {e}")))?
+            .iter()
+            .map(|t| t.as_f64().map(|f| f as i32))
+            .collect::<std::result::Result<Vec<i32>, _>>()
+            .map_err(|e| ApiError::new(ErrorCode::Internal, format!("token: {e}")))?;
+        Ok(InferResult {
+            policy: v
+                .opt("policy")
+                .and_then(|p| p.as_str().ok())
+                .unwrap_or_default()
+                .to_string(),
+            tokens,
+            ttft_s: field("ttft_s")?,
+            decode_s: field("decode_s")?,
+            seq_len: field("seq_len")? as usize,
+            device_hits: field("device_hits")? as u64,
+            turn: v.opt("turn").and_then(|t| t.as_u64().ok()),
+            queued_rounds: v.opt("queued_rounds").and_then(|q| q.as_u64().ok()),
+        })
+    }
+}
+
+/// One `cache.list` / `cache.stat` entry as seen by the client.
+#[derive(Debug, Clone)]
+pub struct CacheEntry {
+    pub kind: String,
+    pub segment_hex: String,
+    pub tier: String,
+    pub bytes: usize,
+    pub pinned: bool,
+    pub leases: usize,
+    /// Tenant namespace; `None` for default-namespace entries.
+    pub ns: Option<String>,
+    /// Image entries keep the historical hex id field.
+    pub image_hex: Option<String>,
+}
+
+impl FromValue for CacheEntry {
+    fn from_value(v: &Value) -> super::api::ApiResult<CacheEntry> {
+        let s = |k: &str| {
+            v.get(k).and_then(|x| x.as_str().map(str::to_string)).map_err(|e| {
+                ApiError::new(ErrorCode::Internal, format!("reply field {k:?}: {e}"))
+            })
+        };
+        Ok(CacheEntry {
+            kind: s("kind")?,
+            segment_hex: s("segment")?,
+            tier: s("tier")?,
+            bytes: v
+                .get("bytes")
+                .and_then(|b| b.as_usize())
+                .map_err(|e| ApiError::new(ErrorCode::Internal, format!("bytes: {e}")))?,
+            pinned: v
+                .get("pinned")
+                .and_then(|p| p.as_bool())
+                .map_err(|e| ApiError::new(ErrorCode::Internal, format!("pinned: {e}")))?,
+            leases: v.opt("leases").and_then(|l| l.as_usize().ok()).unwrap_or(0),
+            ns: v.opt("ns").and_then(|n| n.as_str().ok()).map(str::to_string),
+            image_hex: v.opt("image").and_then(|i| i.as_str().ok()).map(str::to_string),
+        })
+    }
+}
+
+/// A granted cache lease (the client-side handle for renew/release).
+#[derive(Debug, Clone)]
+pub struct Lease {
+    pub id: u64,
+    pub handle: String,
+    /// `None` = infinite lease (v2-pin equivalent).
+    pub ttl_ms: Option<u64>,
+}
+
+/// One streamed token.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamChunk {
+    pub seq: usize,
+    pub token: i32,
+}
+
+/// Terminal state of a streaming generation.
+#[derive(Debug)]
+pub enum InferOutcome {
+    Completed(InferResult),
+    /// The stream was aborted by `infer.cancel`.
+    Cancelled { message: String },
+}
+
+// ----------------------------------------------------------------------
+// The client
+// ----------------------------------------------------------------------
+
+/// Typed, namespace-aware v3 client.
+pub struct MpicClient {
+    raw: Client,
+    addr: SocketAddr,
+    ns: Option<Namespace>,
+}
+
+impl MpicClient {
+    pub fn connect(addr: SocketAddr) -> Result<MpicClient> {
+        Ok(MpicClient { raw: Client::connect(addr)?, addr, ns: None })
+    }
+
+    /// Scope every subsequent request to a tenant namespace.
+    pub fn with_namespace(mut self, ns: &str) -> Result<MpicClient> {
+        self.ns = Some(Namespace::new(ns)?);
+        Ok(self)
+    }
+
+    pub fn namespace(&self) -> Option<&str> {
+        self.ns.as_ref().map(|n| n.as_str())
+    }
+
+    /// Build a v3 envelope with a fresh request id (+ the tenant ns).
+    /// Ids are unique across all clients in this process (pid + global
+    /// counter), so an `infer.cancel` can never hit the wrong victim.
+    fn envelope(&mut self, op: &str) -> Value {
+        let seq = SDK_REQ_COUNTER.fetch_add(1, Ordering::Relaxed);
+        let mut v = Value::obj(vec![
+            ("v", Value::num(3.0)),
+            ("id", Value::str(format!("sdk-{}-{seq}", std::process::id()))),
+            ("op", Value::str(op)),
+        ]);
+        if let Some(ns) = &self.ns {
+            v.set("ns", Value::str(ns.as_str()));
+        }
+        v
+    }
+
+    /// Send one typed request and return its (ok) reply body, mapping
+    /// error lines into [`WireError`]s.
+    fn call(&mut self, req: Value) -> Result<Value> {
+        let reply = self.raw.call(&req)?;
+        if reply.opt("ok").and_then(|o| o.as_bool().ok()).unwrap_or(false) {
+            Ok(reply)
+        } else {
+            Err(wire_err(&reply))
+        }
+    }
+
+    /// Escape hatch: send a raw request object through the typed client's
+    /// connection (the `mpic call` CLI). Streaming chunks go to `on_chunk`.
+    pub fn call_raw(&mut self, req: &Value, on_chunk: impl FnMut(&Value)) -> Result<Value> {
+        self.raw.call_stream(req, on_chunk)
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        let req = self.envelope("ping");
+        self.call(req).map(|_| ())
+    }
+
+    /// The server's `stats` snapshot (kept as a raw object: it is a
+    /// diagnostics surface, not a stable schema).
+    pub fn stats(&mut self) -> Result<Value> {
+        let req = self.envelope("stats");
+        self.call(req)
+    }
+
+    /// Upload an image handle into the caller's static library; returns
+    /// the entry's hex id.
+    pub fn upload(&mut self, user: u64, handle: &str) -> Result<String> {
+        let mut req = self.envelope("upload");
+        req.set("user", Value::num(user as f64));
+        req.set("handle", Value::str(handle));
+        let reply = self.call(req)?;
+        Ok(reply.get("image_hex")?.as_str()?.to_string())
+    }
+
+    /// Admin path: index an image reference for MRAG retrieval.
+    pub fn add_reference(&mut self, handle: &str, description: &str) -> Result<String> {
+        let mut req = self.envelope("add_reference");
+        req.set("handle", Value::str(handle));
+        req.set("description", Value::str(description));
+        let reply = self.call(req)?;
+        Ok(reply.get("image_hex")?.as_str()?.to_string())
+    }
+
+    /// Upload a cached text chunk; with a description it becomes
+    /// MRAG-retrievable. Returns (chunk hex id, token count).
+    pub fn chunk_upload(
+        &mut self,
+        handle: &str,
+        text: &str,
+        description: Option<&str>,
+    ) -> Result<(String, usize)> {
+        let mut req = self.envelope("chunk.upload");
+        req.set("handle", Value::str(handle));
+        req.set("text", Value::str(text));
+        if let Some(d) = description {
+            req.set("description", Value::str(d));
+        }
+        let reply = self.call(req)?;
+        Ok((reply.get("chunk_hex")?.as_str()?.to_string(), reply.get("tokens")?.as_usize()?))
+    }
+
+    /// One blocking (non-streaming) generation.
+    pub fn infer(&mut self, p: &InferParams) -> Result<InferResult> {
+        let req = self.generation_request("infer", p, false);
+        let reply = self.call(req)?;
+        parse_reply(&reply)
+    }
+
+    /// One blocking chat turn (sessionful; `turn` set in the result).
+    pub fn chat(&mut self, p: &InferParams) -> Result<InferResult> {
+        let req = self.generation_request("chat", p, false);
+        let reply = self.call(req)?;
+        parse_reply(&reply)
+    }
+
+    /// Start a streaming generation; drive it through the returned
+    /// [`InferHandle`].
+    pub fn infer_stream(&mut self, p: &InferParams) -> Result<InferHandle<'_>> {
+        let req = self.generation_request("infer", p, true);
+        let id = req.get("id")?.clone();
+        self.raw.send(&req)?;
+        Ok(InferHandle { client: self, id, done: None })
+    }
+
+    /// Streaming chat turn.
+    pub fn chat_stream(&mut self, p: &InferParams) -> Result<InferHandle<'_>> {
+        let req = self.generation_request("chat", p, true);
+        let id = req.get("id")?.clone();
+        self.raw.send(&req)?;
+        Ok(InferHandle { client: self, id, done: None })
+    }
+
+    fn generation_request(&mut self, op: &str, p: &InferParams, stream: bool) -> Value {
+        let mut req = self.envelope(op);
+        if let Value::Obj(body) = p.to_value() {
+            for (k, v) in body {
+                req.set(&k, v);
+            }
+        }
+        if stream {
+            req.set("stream", Value::Bool(true));
+        }
+        req
+    }
+
+    /// Abort an in-flight generation by its request id. `Ok(())` means
+    /// the victim was cancelled; unknown/finished ids surface as a
+    /// `not_found` [`WireError`].
+    pub fn cancel(&mut self, target: &Value) -> Result<()> {
+        let mut req = self.envelope("infer.cancel");
+        req.set("target", target.clone());
+        self.call(req).map(|_| ())
+    }
+
+    pub fn reset(&mut self, user: u64) -> Result<()> {
+        let mut req = self.envelope("reset");
+        req.set("user", Value::num(user as f64));
+        self.call(req).map(|_| ())
+    }
+
+    /// List the caller's namespace's cache entries.
+    pub fn cache_list(&mut self) -> Result<Vec<CacheEntry>> {
+        let req = self.envelope("cache.list");
+        let reply = self.call(req)?;
+        reply.get("entries")?.as_arr()?.iter().map(parse_reply::<CacheEntry>).collect()
+    }
+
+    /// Residency of one handle, or a `not_found` [`WireError`].
+    pub fn cache_stat(&mut self, handle: &str) -> Result<CacheEntry> {
+        let mut req = self.envelope("cache.stat");
+        req.set("handle", Value::str(handle));
+        let reply = self.call(req)?;
+        parse_reply(&reply)
+    }
+
+    /// v2 compat pin (an infinite lease under the hood).
+    pub fn cache_pin(&mut self, handle: &str, pinned: bool) -> Result<()> {
+        let mut req = self.envelope("cache.pin");
+        req.set("handle", Value::str(handle));
+        req.set("pinned", Value::Bool(pinned));
+        self.call(req).map(|_| ())
+    }
+
+    pub fn cache_evict(&mut self, handle: &str) -> Result<()> {
+        let mut req = self.envelope("cache.evict");
+        req.set("handle", Value::str(handle));
+        self.call(req).map(|_| ())
+    }
+
+    /// Take a bounded-lifetime lease on an entry. `ttl_ms: None` grants
+    /// an infinite lease.
+    pub fn lease(&mut self, handle: &str, ttl_ms: Option<u64>) -> Result<Lease> {
+        let mut req = self.envelope("cache.lease");
+        req.set("handle", Value::str(handle));
+        if let Some(ms) = ttl_ms {
+            req.set("ttl_ms", Value::num(ms as f64));
+        }
+        let reply = self.call(req)?;
+        Ok(Lease { id: reply.get("lease")?.as_u64()?, handle: handle.to_string(), ttl_ms })
+    }
+
+    /// Extend a lease's TTL from now (`None` makes it infinite).
+    pub fn lease_renew(&mut self, lease: &Lease, ttl_ms: Option<u64>) -> Result<Lease> {
+        let mut req = self.envelope("cache.lease_renew");
+        req.set("lease", Value::num(lease.id as f64));
+        if let Some(ms) = ttl_ms {
+            req.set("ttl_ms", Value::num(ms as f64));
+        }
+        self.call(req)?;
+        Ok(Lease { id: lease.id, handle: lease.handle.clone(), ttl_ms })
+    }
+
+    /// Release a lease before expiry.
+    pub fn lease_release(&mut self, lease: &Lease) -> Result<()> {
+        let mut req = self.envelope("cache.lease_release");
+        req.set("lease", Value::num(lease.id as f64));
+        self.call(req).map(|_| ())
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        let req = self.envelope("shutdown");
+        self.call(req).map(|_| ())
+    }
+}
+
+// ----------------------------------------------------------------------
+// Streaming handle
+// ----------------------------------------------------------------------
+
+/// A live streaming generation: pull chunks, cancel mid-stream, join for
+/// the terminal outcome.
+pub struct InferHandle<'c> {
+    client: &'c mut MpicClient,
+    id: Value,
+    done: Option<Value>,
+}
+
+impl InferHandle<'_> {
+    /// The request id identifying this generation (the `infer.cancel`
+    /// target).
+    pub fn id(&self) -> &Value {
+        &self.id
+    }
+
+    /// Block for the next streamed token. `Ok(None)` means the stream
+    /// reached its terminal line — call [`InferHandle::join`] for the
+    /// outcome.
+    pub fn recv_chunk(&mut self) -> Result<Option<StreamChunk>> {
+        if self.done.is_some() {
+            return Ok(None);
+        }
+        let v = self.client.raw.recv()?;
+        anyhow::ensure!(
+            v.opt("id") == Some(&self.id),
+            "stream line for id {:?} arrived on a connection streaming {:?}",
+            v.opt("id").map(|i| i.encode()),
+            self.id.encode()
+        );
+        let is_chunk = v.opt("stream").and_then(|s| s.as_bool().ok()).unwrap_or(false);
+        if is_chunk {
+            Ok(Some(StreamChunk {
+                seq: v.get("seq")?.as_usize()?,
+                token: v.get("token")?.as_f64()? as i32,
+            }))
+        } else {
+            self.done = Some(v);
+            Ok(None)
+        }
+    }
+
+    /// Abort this generation mid-stream. The cancel travels over a fresh
+    /// control connection (this connection is busy carrying the stream);
+    /// the stream then terminates with a `cancelled` line, surfaced by
+    /// [`InferHandle::join`] as [`InferOutcome::Cancelled`].
+    pub fn cancel(&mut self) -> Result<()> {
+        let mut ctl = MpicClient::connect(self.client.addr)?;
+        ctl.ns = self.client.ns.clone();
+        ctl.cancel(&self.id)
+    }
+
+    /// Drain any remaining chunks and return the terminal outcome.
+    pub fn join(mut self) -> Result<InferOutcome> {
+        while self.recv_chunk()?.is_some() {}
+        let fin = self.done.take().expect("recv_chunk(None) implies a terminal line");
+        let ok = fin.opt("ok").and_then(|o| o.as_bool().ok()).unwrap_or(false);
+        if ok {
+            return Ok(InferOutcome::Completed(parse_reply(&fin)?));
+        }
+        let code = fin.opt("code").and_then(|c| c.as_str().ok()).unwrap_or("internal");
+        if ErrorCode::parse(code) == ErrorCode::Cancelled {
+            let message = fin
+                .opt("error")
+                .and_then(|e| e.as_str().ok())
+                .unwrap_or("cancelled")
+                .to_string();
+            return Ok(InferOutcome::Cancelled { message });
+        }
+        Err(wire_err(&fin))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_params_serialise_sparsely() {
+        let v = InferParams::new(7, "hello").to_value();
+        assert_eq!(v.get("user").unwrap().as_u64().unwrap(), 7);
+        assert_eq!(v.get("text").unwrap().as_str().unwrap(), "hello");
+        assert!(v.opt("policy").is_none());
+        assert!(v.opt("max_new").is_none());
+        assert!(v.opt("mrag").is_none());
+        let v = InferParams::new(7, "hello").policy("mpic-16").max_new(4).mrag(2).to_value();
+        assert_eq!(v.get("policy").unwrap().as_str().unwrap(), "mpic-16");
+        assert_eq!(v.get("max_new").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(v.get("mrag").unwrap().as_u64().unwrap(), 2);
+    }
+
+    #[test]
+    fn infer_result_parses_reply_shape() {
+        let v = Value::parse(
+            r#"{"ok":true,"policy":"mpic-16","tokens":[3,9],"ttft_s":0.5,"decode_s":0.1,
+                "seq_len":40,"n_selected":12,"device_hits":2,"turn":3,"queued_rounds":1,
+                "ttft_fetch_s":0.0,"ttft_link_s":0.0,"steps":1}"#,
+        )
+        .unwrap();
+        let r = InferResult::from_value(&v).unwrap();
+        assert_eq!(r.tokens, vec![3, 9]);
+        assert_eq!(r.policy, "mpic-16");
+        assert_eq!(r.seq_len, 40);
+        assert_eq!(r.device_hits, 2);
+        assert_eq!(r.turn, Some(3));
+        assert_eq!(r.queued_rounds, Some(1));
+        // Missing tokens field is a parse error, not a panic.
+        let bad = Value::parse(r#"{"ok":true}"#).unwrap();
+        assert!(InferResult::from_value(&bad).is_err());
+    }
+
+    #[test]
+    fn cache_entry_parses_both_shapes() {
+        let img = Value::parse(
+            r#"{"kind":"image","segment":"00ab","tier":"device","bytes":10,
+                "pinned":true,"leases":1,"image":"00ab"}"#,
+        )
+        .unwrap();
+        let e = CacheEntry::from_value(&img).unwrap();
+        assert_eq!(e.kind, "image");
+        assert!(e.pinned);
+        assert_eq!(e.leases, 1);
+        assert_eq!(e.image_hex.as_deref(), Some("00ab"));
+        assert!(e.ns.is_none());
+        let chk = Value::parse(
+            r#"{"kind":"chunk","segment":"00cd","tier":"disk","bytes":5,
+                "pinned":false,"ns":"tenant-a"}"#,
+        )
+        .unwrap();
+        let e = CacheEntry::from_value(&chk).unwrap();
+        assert_eq!(e.ns.as_deref(), Some("tenant-a"));
+        assert_eq!(e.leases, 0, "missing leases field defaults to 0");
+        assert!(e.image_hex.is_none());
+    }
+
+    #[test]
+    fn wire_error_carries_the_code() {
+        let reply = Value::parse(r#"{"ok":false,"code":"overloaded","error":"busy"}"#).unwrap();
+        let err = wire_err(&reply);
+        let w = err.downcast_ref::<WireError>().expect("downcast");
+        assert_eq!(w.code, ErrorCode::Overloaded);
+        assert_eq!(w.message, "busy");
+        assert!(err.to_string().contains("overloaded"));
+    }
+}

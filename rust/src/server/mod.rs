@@ -1,4 +1,4 @@
-//! JSON-lines TCP serving front end (substrate S16) — protocol v2 over
+//! JSON-lines TCP serving front end (substrate S16) — protocol v3 over
 //! the online continuous-batching pipeline.
 //!
 //! Wire format: one JSON object per line. Non-streaming requests get
@@ -9,12 +9,19 @@
 //!
 //! Every request carries an `"op"` plus optional envelope fields:
 //!
-//! * `"v"` — protocol version, `1` (default, the legacy shapes) or `2`.
-//!   Both versions route through the same typed dispatcher in [`api`];
-//!   v1 request shapes keep working unchanged.
+//! * `"v"` — protocol version: `1` (default, the legacy shapes), `2`, or
+//!   `3` (the cache-plane protocol: leases, namespaces, cancellation).
+//!   All versions route through the same typed dispatcher in [`api`];
+//!   v1/v2 request shapes keep working unchanged.
 //! * `"id"` — client-supplied request id (string or number), echoed
 //!   verbatim on **every** reply line so clients can pipeline requests
-//!   and correlate chunks.
+//!   and correlate chunks. Also how `infer.cancel` names its victim.
+//! * `"ns"` — tenant namespace (`[A-Za-z0-9._-]{1,64}`). Scopes every
+//!   cache key, registry record and session the request touches: two
+//!   namespaces uploading `IMAGE#LOGO` get distinct entries, `cache.list`
+//!   only shows the caller's own, and sessions never cross tenants.
+//!   Omitted = the default namespace, which sees exactly the pre-v3
+//!   state.
 //! * `"stream"` — on `infer`/`chat`: emit per-token chunk lines.
 //! * `"async"` — on `upload`/`add_reference`: accept immediately with a
 //!   job id and precompute off the decode critical path (poll
@@ -22,31 +29,35 @@
 //!
 //! ## Op table
 //!
-//! | op              | fields                                              | reply body |
-//! |-----------------|-----------------------------------------------------|------------|
-//! | `ping`          | —                                                   | `pong` |
-//! | `stats`         | —                                                   | `metrics` (incl. per-op `ops` and `pipeline` health), `model`, `sessions`, `store` |
-//! | `upload`        | `user`, `handle`, [`async`]                         | `image`, `image_hex` — or, async, `accepted`, `job` |
-//! | `add_reference` | `handle`, `description`, [`async`]                  | `image`, `image_hex` — or, async, `accepted`, `job` |
-//! | `chunk.upload`  | `handle` (`CHUNK#...`), `text`, [`description`]     | `chunk_hex`, `tokens`, `indexed` — uploads a cached text chunk; with `description` it is MRAG-retrievable. Prompts reference it as `CHUNK#HANDLE` |
-//! | `upload.stat`   | `job`                                               | job record: `state` (`queued`/`encoding`/`storing`/`done`/`failed`), `image_hex` once encoded |
-//! | `jobs.list`     | —                                                   | `count`, `jobs[]` (async upload-lane job records) |
-//! | `infer`         | `user`, `text`, [`policy`, `max_new`, `mrag`, `stream`] | decode result (`tokens`, `ttft_s`, `queued_rounds`, …) |
-//! | `chat`          | like `infer`; keeps per-user session history        | decode result + `turn` |
-//! | `reset`         | `user`                                              | `reset` |
-//! | `cache.list`    | —                                                   | `count`, `entries[]` (`kind`, `segment`, `tier`, `bytes`, `pinned`; image entries also carry `image`) |
-//! | `cache.stat`    | `handle`                                            | one entry + `resident` |
-//! | `cache.pin`     | `handle`, [`pinned`=true]                           | `handle`, `pinned` |
-//! | `cache.evict`   | `handle`                                            | `handle`, `evicted` |
-//! | `session.list`  | —                                                   | `count`, `sessions[]` (`user`, `turns`, `history_len`, `images`) |
-//! | `session.stat`  | `user`                                              | one session entry |
-//! | `shutdown`      | —                                                   | `bye` |
+//! | op                    | fields                                              | reply body |
+//! |-----------------------|-----------------------------------------------------|------------|
+//! | `ping`                | —                                                   | `pong` |
+//! | `stats`               | —                                                   | `metrics` (incl. per-op `ops`, `pipeline` health with `cancelled`, `kv` with lease counters), `model`, `sessions`, `store` |
+//! | `upload`              | `user`, `handle`, [`async`]                         | `image`, `image_hex` — or, async, `accepted`, `job` |
+//! | `add_reference`       | `handle`, `description`, [`async`]                  | `image`, `image_hex` — or, async, `accepted`, `job` |
+//! | `chunk.upload`        | `handle` (`CHUNK#...`), `text`, [`description`]     | `chunk_hex`, `tokens`, `indexed` — uploads a cached text chunk; with `description` it is MRAG-retrievable. Prompts reference it as `CHUNK#HANDLE` |
+//! | `upload.stat`         | `job`                                               | job record: `state` (`queued`/`encoding`/`storing`/`done`/`failed`), `image_hex` once encoded — only the submitting namespace's jobs resolve |
+//! | `jobs.list`           | —                                                   | `count`, `jobs[]` (async upload-lane job records) — scoped to the caller's namespace |
+//! | `infer`               | `user`, `text`, [`policy`, `max_new`, `mrag`, `stream`] | decode result (`tokens`, `ttft_s`, `queued_rounds`, …) |
+//! | `infer.cancel`        | `target` (the victim's `"id"`)                      | `cancelled`, `target` — aborts the caller's namespace's in-flight generation; the victim's stream ends with a terminal `code:"cancelled"` line and its batch slot frees before the next decode round |
+//! | `chat`                | like `infer`; keeps per-(ns, user) session history  | decode result + `turn` |
+//! | `reset`               | `user`                                              | `reset` |
+//! | `cache.list`          | —                                                   | `count`, `entries[]` (`kind`, `segment`, `tier`, `bytes`, `pinned`, `leases`; namespaced entries carry `ns`, image entries `image`) — scoped to the caller's namespace |
+//! | `cache.stat`          | `handle`                                            | one entry + `resident` |
+//! | `cache.lease`         | `handle`, [`ttl_ms`]                                | `lease` (id), `leased`, `infinite`/`ttl_ms` — the entry survives LRU pressure and TTL expiry while the lease lives; omit `ttl_ms` for an infinite lease |
+//! | `cache.lease_renew`   | `lease`, [`ttl_ms`]                                 | `lease`, `renewed` — extends the TTL from *now*; expired leases cannot be revived (`not_found`). Namespace-checked: only the granting tenant's leases resolve |
+//! | `cache.lease_release` | `lease`                                             | `lease`, `released` — namespace-checked like renew |
+//! | `cache.pin`           | `handle`, [`pinned`=true]                           | `handle`, `pinned` — v2 compat: maps to one *infinite* lease per key (unpin releases it) |
+//! | `cache.evict`         | `handle`                                            | `handle`, `evicted` — refused with `code:"pinned"` while any live lease exists |
+//! | `session.list`        | —                                                   | `count`, `sessions[]` (`user`, `turns`, `history_len`, `images`; + `ns` when namespaced) — scoped to the caller's namespace |
+//! | `session.stat`        | `user`                                              | one session entry |
+//! | `shutdown`            | —                                                   | `bye` |
 //!
-//! Example exchange (v2, pipelined ids, streaming):
+//! Example exchange (v3, pipelined ids, streaming):
 //!
 //! ```json
-//! {"v":2,"id":"a","op":"upload","user":1,"handle":"IMAGE#EIFFEL2025"}
-//! {"v":2,"id":"b","op":"infer","user":1,"text":"Describe IMAGE#EIFFEL2025","max_new":2,"stream":true}
+//! {"v":3,"id":"a","ns":"acme","op":"upload","user":1,"handle":"IMAGE#EIFFEL2025"}
+//! {"v":3,"id":"b","ns":"acme","op":"infer","user":1,"text":"Describe IMAGE#EIFFEL2025","max_new":2,"stream":true}
 //! ```
 //!
 //! produces
@@ -58,12 +69,60 @@
 //! {"done":true,"id":"b","ok":true,"policy":"mpic-32","tokens":[17,4], ...}
 //! ```
 //!
+//! ## The lease lifecycle, worked
+//!
+//! Leases are the v3 replacement for boolean pins: a client that crashes
+//! (or forgets) stops renewing, its leases lapse, and the protected
+//! entries become ordinary LRU/TTL citizens again — no leaked device-tier
+//! capacity. A typical exchange, with a client that renews once and then
+//! disappears:
+//!
+//! ```json
+//! {"v":3,"id":"l1","op":"cache.lease","handle":"IMAGE#EIFFEL2025","ttl_ms":30000}
+//! {"id":"l1","lease":7,"leased":true,"infinite":false,"ttl_ms":30000,"handle":"IMAGE#EIFFEL2025","ok":true}
+//!
+//! {"v":3,"id":"e1","op":"cache.evict","handle":"IMAGE#EIFFEL2025"}
+//! {"id":"e1","ok":false,"code":"pinned","error":"entry \"IMAGE#EIFFEL2025\" is leased; release the leases before evicting"}
+//!
+//! {"v":3,"id":"l2","op":"cache.lease_renew","lease":7,"ttl_ms":30000}
+//! {"id":"l2","lease":7,"renewed":true,"infinite":false,"ttl_ms":30000,"ok":true}
+//! ```
+//!
+//! …30 s pass with no renewal (the client crashed). The store's expiry
+//! sweep (driven between decode rounds) drops the lapsed lease; the entry
+//! is evictable again and a late renewal attempt reports the truth:
+//!
+//! ```json
+//! {"v":3,"id":"l3","op":"cache.lease_renew","lease":7,"ttl_ms":30000}
+//! {"id":"l3","ok":false,"code":"not_found","error":"no live lease 7 (expired or released?)"}
+//!
+//! {"v":3,"id":"e2","op":"cache.evict","handle":"IMAGE#EIFFEL2025"}
+//! {"id":"e2","handle":"IMAGE#EIFFEL2025","evicted":true,"ok":true}
+//! ```
+//!
+//! ## Cancellation
+//!
+//! `infer.cancel` addresses the victim by the `"id"` it supplied on its
+//! own `infer`/`chat`, scoped to the caller's namespace. Queued victims
+//! leave the queue; actively decoding victims stop before the next
+//! decode round and free their KV blocks and batch slot immediately. The
+//! victim's connection receives a terminal
+//! `{"ok":false,"code":"cancelled",...}` line in place of the `done`
+//! summary; a cancelled `chat` turn is **not** committed to the session
+//! (the preview/commit split), so history never holds half-turns. Since
+//! a connection streams its replies serially, send the cancel on a
+//! *second* connection ([`client::InferHandle::cancel`] does). Ids are
+//! client-supplied, so keep them unique among your in-flight requests:
+//! when several generations in one namespace share the target id, the
+//! cancel is rejected `bad_value` (ambiguous) rather than aborting an
+//! arbitrary one — the typed SDK generates process-unique ids.
+//!
 //! ## Errors and backpressure
 //!
 //! Failures reply `{"ok":false,"code":...,"error":...,"id":...}` with a
 //! machine-readable code: `bad_json`, `bad_version`, `unknown_op`,
 //! `missing_field`, `bad_type`, `bad_value`, `not_found`, `pinned`,
-//! `overloaded`, `internal` (see [`api::ErrorCode`]).
+//! `overloaded`, `cancelled`, `internal` (see [`api::ErrorCode`]).
 //!
 //! `overloaded` is the backpressure signal: it is returned (instead of
 //! stalling TCP accepts) when the in-flight bound
@@ -77,14 +136,17 @@
 //!
 //! Chunk lines carry `"stream":true` and are ordered by `"seq"`; the
 //! terminating summary line carries `"done":true` and the same fields as a
-//! non-streaming reply. [`Client::call_stream`] consumes this framing.
-//! Because decode rounds are interleaved by the scheduler, chunks of
-//! concurrent streaming requests are produced (and delivered) interleaved
-//! rather than one request at a time.
+//! non-streaming reply (or a `code:"cancelled"` error line for aborted
+//! streams). [`Client::call_stream`] consumes this framing; the typed
+//! [`client::MpicClient::infer_stream`] wraps it in an
+//! [`client::InferHandle`] with `recv_chunk`/`cancel`/`join`. Because
+//! decode rounds are interleaved by the scheduler, chunks of concurrent
+//! streaming requests are produced (and delivered) interleaved rather
+//! than one request at a time.
 //!
-//! `infer` is stateless; `chat` keeps a per-user session (multi-turn
-//! history linked in front of each new turn, so earlier images are reused
-//! position-independently across turns).
+//! `infer` is stateless; `chat` keeps a per-(namespace, user) session
+//! (multi-turn history linked in front of each new turn, so earlier
+//! images are reused position-independently across turns).
 //!
 //! ## Threading
 //!
@@ -103,7 +165,10 @@
 //!   upload lane's store write-through, off the decode critical path.
 
 pub mod api;
+pub mod client;
 pub mod pipeline;
+
+pub use client::{CacheEntry, InferHandle, InferOutcome, InferParams, Lease, MpicClient};
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -253,7 +318,8 @@ fn handle_conn(stream: TcpStream, tx: Sender<Job>, gate: Arc<Gate>) -> Result<()
     Ok(())
 }
 
-/// Blocking JSON-lines client (used by examples, tests and `mpic call`).
+/// Blocking JSON-lines client (the raw layer under [`client::MpicClient`];
+/// used directly by tests and `mpic call`).
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -266,14 +332,18 @@ impl Client {
         Ok(Client { writer: stream.try_clone()?, reader: BufReader::new(stream) })
     }
 
-    fn send(&mut self, req: &Value) -> Result<()> {
+    /// Write one request line without waiting for its reply (pipelining).
+    /// Pair with [`Client::recv`]; [`Client::call`] checks that replies
+    /// actually correlate by id.
+    pub fn send(&mut self, req: &Value) -> Result<()> {
         self.writer.write_all(req.encode().as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
         Ok(())
     }
 
-    fn read_reply(&mut self) -> Result<Value> {
+    /// Read the next reply line, whatever request it answers.
+    pub fn recv(&mut self) -> Result<Value> {
         let mut line = String::new();
         let n = self.reader.read_line(&mut line)?;
         if n == 0 {
@@ -282,21 +352,46 @@ impl Client {
         Value::parse(line.trim_end())
     }
 
+    /// Satellite fix: a reply (or stream chunk) must echo the request's
+    /// id. Trusting raw reply *order* silently pairs the wrong reply with
+    /// a request once lines are pipelined — error instead of mispairing.
+    fn check_id(req: &Value, reply: &Value) -> Result<()> {
+        if let Some(want) = api::best_effort_id(req) {
+            if let Some(got) = reply.opt("id") {
+                if got != want {
+                    anyhow::bail!(
+                        "reply id {} does not match request id {} — out-of-order reply \
+                         (pipelined request answered first?)",
+                        got.encode(),
+                        want.encode()
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// One-shot request/reply. Do not use for `"stream":true` requests —
     /// the first chunk line would be returned as the reply; use
-    /// [`Client::call_stream`] instead.
+    /// [`Client::call_stream`] instead. When the request carries an
+    /// `"id"`, the reply's echoed id is verified (mismatch = error, not a
+    /// silently mispaired reply).
     pub fn call(&mut self, req: &Value) -> Result<Value> {
         self.send(req)?;
-        self.read_reply()
+        let reply = self.recv()?;
+        Self::check_id(req, &reply)?;
+        Ok(reply)
     }
 
     /// Issue a (streaming or not) request, invoking `on_chunk` for every
     /// `"stream":true` chunk line and returning the final reply line (the
-    /// `"done":true` summary, a plain reply, or an error object).
+    /// `"done":true` summary, a plain reply, or an error object). Every
+    /// line's echoed id is verified against the request's.
     pub fn call_stream(&mut self, req: &Value, mut on_chunk: impl FnMut(&Value)) -> Result<Value> {
         self.send(req)?;
         loop {
-            let v = self.read_reply()?;
+            let v = self.recv()?;
+            Self::check_id(req, &v)?;
             let is_chunk = v.opt("stream").and_then(|s| s.as_bool().ok()).unwrap_or(false);
             if is_chunk {
                 on_chunk(&v);

@@ -37,20 +37,25 @@
 
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::api::{
-    self, AddReferenceReq, ApiError, Envelope, ErrorCode, FromValue, GenerateReq, InferResp,
-    ToValue, UploadReq,
+    self, AddReferenceReq, ApiError, CancelReq, Envelope, ErrorCode, FromValue, GenerateReq,
+    InferResp, ToValue, UploadReq,
 };
 use crate::coordinator::scheduler::{Completion, RejectCode, Request, SchedEvent, Scheduler};
 use crate::coordinator::session::SessionStore;
 use crate::coordinator::Engine;
-use crate::mm::{ImageId, Prompt, UserId};
+use crate::mm::{ImageId, Namespace, Prompt, UserId};
 use crate::util::json::Value;
 use crate::Result;
+
+/// How often the between-rounds tick asks the store to sweep expired
+/// leases and TTL-dead disk entries (satellite: residency reports must
+/// not keep counting entries nobody touches).
+const SWEEP_INTERVAL: Duration = Duration::from_millis(250);
 
 /// Tunables of the serving pipeline (see `mpic serve` flags).
 #[derive(Debug, Clone)]
@@ -207,6 +212,7 @@ impl UploadState {
 struct UploadJob {
     id: u64,
     op: &'static str,
+    ns: Namespace,
     user: u64,
     handle: String,
     description: String,
@@ -262,7 +268,14 @@ impl UploadLane {
         self.finished.load(Ordering::SeqCst)
     }
 
-    fn submit(&mut self, op: &'static str, user: u64, handle: String, description: String) -> u64 {
+    fn submit(
+        &mut self,
+        op: &'static str,
+        ns: Namespace,
+        user: u64,
+        handle: String,
+        description: String,
+    ) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
         self.jobs.lock().unwrap().insert(
@@ -270,6 +283,7 @@ impl UploadLane {
             UploadJob {
                 id,
                 op,
+                ns,
                 user,
                 handle,
                 description,
@@ -282,12 +296,16 @@ impl UploadLane {
         id
     }
 
-    fn job_value(&self, id: u64) -> Option<Value> {
-        self.jobs.lock().unwrap().get(&id).map(upload_job_value)
+    /// One job's record, visible only to the tenant that submitted it
+    /// (job ids are sequential and guessable; without the namespace check
+    /// any caller could watch another tenant's handles go by).
+    fn job_value(&self, id: u64, ns: &Namespace) -> Option<Value> {
+        self.jobs.lock().unwrap().get(&id).filter(|j| j.ns == *ns).map(upload_job_value)
     }
 
-    fn list_values(&self) -> Vec<Value> {
-        self.jobs.lock().unwrap().values().map(upload_job_value).collect()
+    /// The caller's namespace's job records.
+    fn list_values(&self, ns: &Namespace) -> Vec<Value> {
+        self.jobs.lock().unwrap().values().filter(|j| j.ns == *ns).map(upload_job_value).collect()
     }
 
     fn fail(&self, id: u64, msg: String) {
@@ -303,15 +321,15 @@ impl UploadLane {
     /// thread-pinned), then hand the store write-through to the pool.
     fn step(&mut self, engine: &Engine) {
         let Some(jid) = self.queue.pop_front() else { return };
-        let (op, user, handle, description) = {
+        let (op, ns, user, handle, description) = {
             let mut g = self.jobs.lock().unwrap();
             let Some(j) = g.get_mut(&jid) else { return };
             j.state = UploadState::Encoding;
-            (j.op, j.user, j.handle.clone(), j.description.clone())
+            (j.op, j.ns.clone(), j.user, j.handle.clone(), j.description.clone())
         };
         let image = ImageId::from_handle(&handle);
         let t0 = Instant::now();
-        let kv = match engine.encode_image(image) {
+        let kv = match engine.encode_image_in(&ns, image) {
             Ok(kv) => kv,
             Err(e) => return self.fail(jid, format!("encode failed: {e:#}")),
         };
@@ -319,11 +337,13 @@ impl UploadLane {
         // a handle is resolvable as soon as its KV lands in the store.
         match op {
             "upload" => {
-                if let Err(e) = engine.static_lib.register(UserId(user), &handle, image) {
+                if let Err(e) = engine.static_lib.register_in(&ns, UserId(user), &handle, image) {
                     return self.fail(jid, format!("register failed: {e:#}"));
                 }
             }
-            _ => engine.dynamic_lib.add(crate::cache::Reference::image(image, description)),
+            _ => engine
+                .dynamic_lib
+                .add(crate::cache::Reference::image(image, description).in_ns(&ns)),
         }
         {
             let mut g = self.jobs.lock().unwrap();
@@ -385,10 +405,14 @@ pub struct Pipeline<'e> {
     sessions: SessionStore,
     pending: HashMap<u64, PendingGen>,
     uploads: UploadLane,
-    /// Users with a chat turn in flight (a second concurrent turn for the
-    /// same session is rejected `overloaded` — history must stay ordered).
-    busy_users: HashSet<u64>,
+    /// (namespace, user) pairs with a chat turn in flight (a second
+    /// concurrent turn for the same session is rejected `overloaded` —
+    /// history must stay ordered). Tenants never block each other.
+    busy_users: HashSet<(Namespace, u64)>,
     next_req: u64,
+    /// Requests aborted through `infer.cancel` (pipeline health counter).
+    cancelled: u64,
+    last_sweep: Instant,
     shutdown: bool,
 }
 
@@ -405,6 +429,8 @@ impl<'e> Pipeline<'e> {
             uploads: UploadLane::new(gate),
             busy_users: HashSet::new(),
             next_req: 1,
+            cancelled: 0,
+            last_sweep: Instant::now(),
             shutdown: false,
             cfg,
         }
@@ -416,10 +442,15 @@ impl<'e> Pipeline<'e> {
             let idle =
                 self.sched.pending() == 0 && self.sched.active() == 0 && !self.uploads.pending();
             if idle {
-                // Nothing to advance: block for the next request.
-                match rx.recv() {
+                // Nothing to advance: wait for the next request, waking
+                // on the sweep interval so expired leases and TTL-dead
+                // disk entries are reclaimed even on an idle server (and
+                // are already gone when the next `stats`/`cache.list`
+                // arrives, instead of being reported one last time).
+                match rx.recv_timeout(SWEEP_INTERVAL) {
                     Ok(job) => self.ingest(job),
-                    Err(_) => break,
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
                 }
             }
             // Drain whatever else arrived, then advance one round.
@@ -438,6 +469,13 @@ impl<'e> Pipeline<'e> {
             }
             self.uploads.step(self.engine);
             self.round()?;
+            // Between-rounds housekeeping tick: expired leases and TTL-dead
+            // disk entries leave the residency reports without waiting for
+            // someone to touch them (throttled — a sweep walks every shard).
+            if self.last_sweep.elapsed() >= SWEEP_INTERVAL {
+                self.engine.store().sweep();
+                self.last_sweep = Instant::now();
+            }
             self.publish_counters();
         }
         // Shutting down: answer every in-flight generation explicitly
@@ -493,9 +531,11 @@ impl<'e> Pipeline<'e> {
     }
 
     fn publish_counters(&self) {
-        self.engine
-            .metrics
-            .set_pipeline_counters(self.gate.overloaded_total(), self.uploads.finished_total());
+        self.engine.metrics.set_pipeline_counters(
+            self.gate.overloaded_total(),
+            self.uploads.finished_total(),
+            self.cancelled,
+        );
         self.engine.metrics.set_kv_counters(&self.engine.store().stats());
     }
 
@@ -523,6 +563,7 @@ impl<'e> Pipeline<'e> {
         match op.as_str() {
             "infer" => self.submit_generate(job, false),
             "chat" => self.submit_generate(job, true),
+            "infer.cancel" => self.cancel_infer(job),
             "upload" | "add_reference" if is_async(&job.req) => self.submit_upload(job),
             "upload.stat" => self.upload_stat(job),
             "jobs.list" => self.jobs_list(job),
@@ -582,7 +623,7 @@ impl<'e> Pipeline<'e> {
         let user = UserId(q.user);
         let mut turn_for_commit = None;
         let mut prompt = if chat {
-            if !self.busy_users.insert(q.user) {
+            if !self.busy_users.insert((env.ns.clone(), q.user)) {
                 let e = ApiError::new(
                     ErrorCode::Overloaded,
                     format!(
@@ -592,19 +633,19 @@ impl<'e> Pipeline<'e> {
                 );
                 return self.reject_gen(&reply, env.id.as_ref(), &e);
             }
-            let turn = Prompt::parse(user, &q.text);
-            let full = self.sessions.session(user).preview_turn(user, &turn);
+            let turn = Prompt::parse(user, &q.text).in_ns(&env.ns);
+            let full = self.sessions.session(&env.ns, user).preview_turn(user, &turn);
             turn_for_commit = Some(turn);
             full
         } else {
-            Prompt::parse(user, &q.text)
+            Prompt::parse(user, &q.text).in_ns(&env.ns)
         };
         if q.mrag > 0 {
             match self.engine.mrag_augment(&prompt, q.mrag) {
                 Ok((augmented, _)) => prompt = augmented,
                 Err(e) => {
                     if chat {
-                        self.busy_users.remove(&q.user);
+                        self.busy_users.remove(&(env.ns.clone(), q.user));
                     }
                     let e = ApiError::new(ErrorCode::Internal, format!("mrag failed: {e:#}"));
                     return self.reject_gen(&reply, env.id.as_ref(), &e);
@@ -633,14 +674,14 @@ impl<'e> Pipeline<'e> {
     fn finish(&mut self, c: Completion) {
         let Some(p) = self.pending.remove(&c.id) else { return };
         if p.chat {
-            self.busy_users.remove(&p.user);
+            self.busy_users.remove(&(p.env.ns.clone(), p.user));
         }
         let line = match c.outcome {
             Ok(result) => {
                 self.engine.metrics.record_request(&result);
                 let mut body = InferResp::from(&result).to_value();
                 if p.chat {
-                    let sess = self.sessions.session(UserId(p.user));
+                    let sess = self.sessions.session(&p.env.ns, UserId(p.user));
                     if let Some(turn) = &p.turn {
                         sess.commit_turn(turn, &result.tokens);
                     }
@@ -658,6 +699,10 @@ impl<'e> Pipeline<'e> {
                     // not retryable, so not `overloaded`.
                     RejectCode::TooLarge => ErrorCode::BadValue,
                     RejectCode::EngineFailed => ErrorCode::Internal,
+                    // The victim's terminal line. A cancelled chat turn
+                    // was never committed (preview/commit split), so the
+                    // session history stays untouched.
+                    RejectCode::Cancelled => ErrorCode::Cancelled,
                 };
                 api::error_value(p.env.id.as_ref(), &ApiError::new(code, reject.message))
             }
@@ -667,6 +712,81 @@ impl<'e> Pipeline<'e> {
         // reply immediately finds its slot already free.
         self.gate.release();
         let _ = p.reply.send(line);
+    }
+
+    /// `infer.cancel`: abort the in-flight generation whose client id
+    /// matches `target` — queued victims leave the queue, active victims
+    /// stop decoding and free their batch slot before the next round. The
+    /// victim's connection gets a terminal `cancelled` line; the canceller
+    /// gets an ack (or `not_found` for unknown / already-finished ids).
+    /// Control-lane: never holds a weighted slot.
+    fn cancel_infer(&mut self, job: Job) {
+        let Job { req, reply, enqueued, .. } = job;
+        let env = match Envelope::from_value(&req) {
+            Ok(env) => env,
+            Err(e) => {
+                let _ = reply.send(api::error_value(api::best_effort_id(&req), &e));
+                return;
+            }
+        };
+        let q = match CancelReq::from_value(&req) {
+            Ok(q) => q,
+            Err(e) => {
+                let _ = reply.send(api::error_value(env.id.as_ref(), &e));
+                return;
+            }
+        };
+        // The victim is identified by its client-supplied envelope id,
+        // scoped to the caller's namespace — one tenant cannot cancel
+        // another tenant's requests. Client ids are not server-assigned,
+        // so two connections *can* have the same id in flight; cancelling
+        // an arbitrary one of them would abort a stranger's request —
+        // reject the ambiguity loudly instead.
+        let matches: Vec<u64> = self
+            .pending
+            .iter()
+            .filter(|(_, p)| p.env.ns == env.ns && p.env.id.as_ref() == Some(&q.target))
+            .map(|(&rid, _)| rid)
+            .collect();
+        if matches.len() > 1 {
+            let e = ApiError::new(
+                ErrorCode::BadValue,
+                format!(
+                    "{} in-flight requests share id {} — cancellation would be ambiguous; \
+                     use unique request ids",
+                    matches.len(),
+                    q.target.encode()
+                ),
+            );
+            let _ = reply.send(api::error_value(env.id.as_ref(), &e));
+            self.engine.metrics.record_op("infer.cancel", enqueued.elapsed().as_secs_f64());
+            return;
+        }
+        let victim = matches.first().copied();
+        let line = match victim.and_then(|rid| self.sched.abort(rid).map(|c| (rid, c))) {
+            Some((_rid, completion)) => {
+                self.cancelled += 1;
+                // finish() releases the victim's gate slot and sends its
+                // terminal "cancelled" line.
+                self.finish(completion);
+                api::ok_value(
+                    env.id.as_ref(),
+                    Value::obj(vec![
+                        ("cancelled", Value::Bool(true)),
+                        ("target", q.target.clone()),
+                    ]),
+                )
+            }
+            None => api::error_value(
+                env.id.as_ref(),
+                &ApiError::new(
+                    ErrorCode::NotFound,
+                    format!("no in-flight request with id {}", q.target.encode()),
+                ),
+            ),
+        };
+        let _ = reply.send(line);
+        self.engine.metrics.record_op("infer.cancel", enqueued.elapsed().as_secs_f64());
     }
 
     fn submit_upload(&mut self, job: Job) {
@@ -690,7 +810,8 @@ impl<'e> Pipeline<'e> {
                 Err(e) => return self.reject_gen(&reply, env.id.as_ref(), &e),
             }
         };
-        let jid = self.uploads.submit(opname, user, handle.clone(), description);
+        let jid =
+            self.uploads.submit(opname, env.ns.clone(), user, handle.clone(), description);
         self.engine.metrics.record_op(opname, enqueued.elapsed().as_secs_f64());
         let body = Value::obj(vec![
             ("accepted", Value::Bool(true)),
@@ -726,7 +847,7 @@ impl<'e> Pipeline<'e> {
                 }
             },
         };
-        let line = match self.uploads.job_value(jid) {
+        let line = match self.uploads.job_value(jid, &env.ns) {
             Some(body) => api::ok_value(env.id.as_ref(), body),
             None => api::error_value(
                 env.id.as_ref(),
@@ -746,7 +867,7 @@ impl<'e> Pipeline<'e> {
                 return;
             }
         };
-        let jobs = self.uploads.list_values();
+        let jobs = self.uploads.list_values(&env.ns);
         let body = Value::obj(vec![
             ("count", Value::num(jobs.len() as f64)),
             ("jobs", Value::Arr(jobs)),
@@ -837,6 +958,7 @@ mod tests {
         let j = UploadJob {
             id: 3,
             op: "upload",
+            ns: Namespace::default(),
             user: 1,
             handle: "IMAGE#X".into(),
             description: String::new(),

@@ -197,7 +197,10 @@ fn shared_chunk_links_at_different_positions() {
     let linker = Linker::new(&m);
     for l in [&l1, &l2] {
         let keys: Vec<KvKey> =
-            l.reuse_spans.iter().map(|s| KvKey { model: m.name.clone(), seg: s.seg }).collect();
+            l.reuse_spans
+                .iter()
+                .map(|s| KvKey { model: m.name.clone(), ns: Default::default(), seg: s.seg })
+                .collect();
         let (got, rep) = eng
             .fetch(&store, &keys, |_| panic!("must be a store hit"))
             .unwrap();
@@ -315,11 +318,11 @@ fn session_layout_growth() {
     let mut store = mpic::coordinator::session::SessionStore::new();
     let user = UserId(3);
     let t1 = Prompt::new(user).text("first look at").image(ImageId(1));
-    let full1 = store.session(user).user_turn(user, &t1);
+    let full1 = store.session(&Default::default(), user).user_turn(user, &t1);
     let l1 = LinkedLayout::build(&full1, &tok, m.img_tokens, "sys");
-    store.session(user).assistant_reply(&[11, 12, 13]);
+    store.session(&Default::default(), user).assistant_reply(&[11, 12, 13]);
     let t2 = Prompt::new(user).text("now compare with").image(ImageId(2));
-    let full2 = store.session(user).user_turn(user, &t2);
+    let full2 = store.session(&Default::default(), user).user_turn(user, &t2);
     let l2 = LinkedLayout::build(&full2, &tok, m.img_tokens, "sys");
     assert!(l2.len() > l1.len());
     assert_eq!(l2.reuse_spans.len(), 2);

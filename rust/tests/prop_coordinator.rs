@@ -73,7 +73,7 @@ fn entry_for(meta: &ModelMeta, span: &ReuseSpan) -> SegmentKv {
         SegmentId::Image(_) => (0..shape.emb_elems()).map(|_| rng.f32()).collect(),
         SegmentId::Chunk(_) => Vec::new(),
     };
-    let key = KvKey { model: meta.name.clone(), seg: span.seg };
+    let key = KvKey { model: meta.name.clone(), ns: Default::default(), seg: span.seg };
     SegmentKv {
         key,
         shape,

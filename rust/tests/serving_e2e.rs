@@ -12,8 +12,10 @@ use std::time::Duration;
 use mpic::coordinator::scheduler::{Request, Scheduler};
 use mpic::coordinator::{Engine, EngineConfig, Policy};
 use mpic::mm::ImageId;
+use mpic::server::api::ErrorCode;
+use mpic::server::client::WireError;
 use mpic::server::pipeline::PipelineConfig;
-use mpic::server::ServeConfig;
+use mpic::server::{InferOutcome, InferParams, MpicClient, ServeConfig};
 use mpic::util::json::Value;
 use mpic::workload::{generate, Dataset, WorkloadSpec};
 
@@ -62,9 +64,13 @@ fn serving_end_to_end() {
     tcp_server_v1_compat();
     tcp_server_v2_surface();
     tcp_server_chunk_flow();
+    tcp_server_v3_lease_lifecycle();
+    tcp_server_namespace_isolation();
     pipeline_concurrent_streaming();
     pipeline_backpressure_overload();
     pipeline_async_upload_lane();
+    pipeline_cancellation();
+    client_errors_on_mispaired_replies();
 }
 
 fn scheduler_continuous_batching() {
@@ -227,7 +233,9 @@ fn tcp_server_v2_surface() {
             &c.call(&v(r#"{"v":2,"op":"upload","user":"one","handle":"h"}"#)).unwrap(),
             "bad_type",
         );
-        assert_code(&c.call(&v(r#"{"v":3,"op":"ping"}"#)).unwrap(), "bad_version");
+        assert_code(&c.call(&v(r#"{"v":9,"op":"ping"}"#)).unwrap(), "bad_version");
+        // v3 is the current protocol version.
+        assert_ok(&c.call(&v(r#"{"v":3,"op":"ping"}"#)).unwrap());
         assert_code(
             &c.call(&v(r#"{"v":2,"op":"infer","user":1,"text":"hi there friend","policy":"bogus"}"#))
                 .unwrap(),
@@ -382,7 +390,7 @@ fn tcp_server_v2_surface() {
         }
 
         // A rejected shutdown (bad envelope) must not kill the server.
-        assert_code(&c.call(&v(r#"{"v":3,"op":"shutdown"}"#)).unwrap(), "bad_version");
+        assert_code(&c.call(&v(r#"{"v":9,"op":"shutdown"}"#)).unwrap(), "bad_version");
         assert_ok(&c.call(&v(r#"{"v":2,"op":"ping"}"#)).unwrap());
 
         assert_ok(&c.call(&v(r#"{"v":2,"id":"bye","op":"shutdown"}"#)).unwrap());
@@ -740,4 +748,304 @@ fn pipeline_async_upload_lane() {
     .unwrap();
     driver.join().unwrap();
     println!("OK pipeline async upload lane");
+}
+
+/// Expect a typed-client error carrying the given wire code.
+fn assert_wire_code(r: mpic::Result<impl std::fmt::Debug>, code: ErrorCode) {
+    match r {
+        Ok(v) => panic!("expected {code:?} error, got success: {v:?}"),
+        Err(e) => match e.downcast_ref::<WireError>() {
+            Some(w) => assert_eq!(w.code, code, "wrong wire code: {w}"),
+            None => panic!("expected a WireError, got: {e:#}"),
+        },
+    }
+}
+
+/// The v3 lease lifecycle over live TCP through the typed client: a
+/// leased entry refuses eviction, renewal extends past the original TTL,
+/// release (and expiry) make it evictable, an expired lease cannot be
+/// revived, and the v2 pin path still behaves as before.
+fn tcp_server_v3_lease_lifecycle() {
+    let engine = test_engine("lease");
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+
+    let client = std::thread::spawn(move || {
+        let addr = addr_rx.recv().unwrap();
+        let mut c = MpicClient::connect(addr).unwrap();
+        c.upload(1, "IMAGE#LEASE").unwrap();
+
+        // Grant → introspect → evict refused.
+        let lease = c.lease("IMAGE#LEASE", Some(250)).unwrap();
+        let stat = c.cache_stat("IMAGE#LEASE").unwrap();
+        assert!(stat.pinned, "a live lease reads as pinned");
+        assert_eq!(stat.leases, 1);
+        assert_wire_code(c.cache_evict("IMAGE#LEASE"), ErrorCode::Pinned);
+
+        // Renew well past the original 250ms: protection must hold.
+        let lease = c.lease_renew(&lease, Some(30_000)).unwrap();
+        std::thread::sleep(Duration::from_millis(400));
+        assert_wire_code(c.cache_evict("IMAGE#LEASE"), ErrorCode::Pinned);
+
+        // Release → ordinary citizen again.
+        c.lease_release(&lease).unwrap();
+        assert_wire_code(c.lease_release(&lease), ErrorCode::NotFound);
+        c.cache_evict("IMAGE#LEASE").unwrap();
+
+        // Expiry: a short lease lapses on its own; the entry becomes
+        // evictable and the lease cannot be revived.
+        c.upload(1, "IMAGE#LEASE").unwrap();
+        let short = c.lease("IMAGE#LEASE", Some(80)).unwrap();
+        assert_wire_code(c.cache_evict("IMAGE#LEASE"), ErrorCode::Pinned);
+        std::thread::sleep(Duration::from_millis(200));
+        assert_wire_code(c.lease_renew(&short, Some(30_000)), ErrorCode::NotFound);
+        c.cache_evict("IMAGE#LEASE").unwrap();
+
+        // Leasing something that is not resident is not_found.
+        assert_wire_code(c.lease("IMAGE#NEVER", None), ErrorCode::NotFound);
+
+        // v2 pin compat rides the same machinery: pin = one infinite
+        // lease, visible in the lease count, released by unpin.
+        c.upload(1, "IMAGE#LEASE").unwrap();
+        c.cache_pin("IMAGE#LEASE", true).unwrap();
+        c.cache_pin("IMAGE#LEASE", true).unwrap(); // idempotent
+        let stat = c.cache_stat("IMAGE#LEASE").unwrap();
+        assert!(stat.pinned);
+        assert_eq!(stat.leases, 1, "double pin holds one compat lease");
+        assert_wire_code(c.cache_evict("IMAGE#LEASE"), ErrorCode::Pinned);
+        c.cache_pin("IMAGE#LEASE", false).unwrap();
+        c.cache_evict("IMAGE#LEASE").unwrap();
+
+        // Lease traffic surfaces in the kv metrics.
+        let stats = c.stats().unwrap();
+        let kv = stats.get("metrics").unwrap().get("kv").unwrap();
+        assert!(kv.get("leases_acquired").unwrap().as_f64().unwrap() >= 3.0);
+        assert!(kv.get("leases_released").unwrap().as_f64().unwrap() >= 2.0);
+
+        c.shutdown().unwrap();
+    });
+
+    mpic::server::serve(&engine, "127.0.0.1:0", |a| {
+        addr_tx.send(a).unwrap();
+    })
+    .unwrap();
+    client.join().unwrap();
+    println!("OK tcp server v3 lease lifecycle");
+}
+
+/// Two tenants upload the same handles: distinct cache entries, scoped
+/// listings, no cross-tenant resolution — and the default namespace sees
+/// none of it.
+fn tcp_server_namespace_isolation() {
+    let engine = test_engine("ns");
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+
+    let client = std::thread::spawn(move || {
+        let addr = addr_rx.recv().unwrap();
+        let mut a = MpicClient::connect(addr).unwrap().with_namespace("tenant-a").unwrap();
+        let mut b = MpicClient::connect(addr).unwrap().with_namespace("tenant-b").unwrap();
+        let mut root = MpicClient::connect(addr).unwrap();
+
+        // Same handles, different tenants (and different chunk contents).
+        a.upload(1, "IMAGE#LOGO").unwrap();
+        b.upload(1, "IMAGE#LOGO").unwrap();
+        let (_, a_tokens) = a
+            .chunk_upload("CHUNK#SHARED", "tenant a's private report about the harbour", None)
+            .unwrap();
+        let b_text = "tenant b's much longer confidential document about \
+                      the riverside warehouses and their inventory";
+        let (_, b_tokens) = b.chunk_upload("CHUNK#SHARED", b_text, None).unwrap();
+        assert!(b_tokens > a_tokens, "each tenant's CHUNK#SHARED holds its own text");
+
+        // Listings are tenant-scoped; the root namespace sees nothing.
+        for (name, c) in [("tenant-a", &mut a), ("tenant-b", &mut b)] {
+            let entries = c.cache_list().unwrap();
+            assert_eq!(entries.len(), 2, "{name} sees exactly its own entries");
+            for e in &entries {
+                assert_eq!(e.ns.as_deref(), Some(name), "entry ns must match the caller");
+            }
+        }
+        assert!(root.cache_list().unwrap().is_empty(), "default ns must see no tenant entries");
+        assert_wire_code(root.cache_stat("IMAGE#LOGO"), ErrorCode::NotFound);
+
+        // Both tenants' inferences hit their own cached segments.
+        for c in [&mut a, &mut b] {
+            let r = c
+                .infer(
+                    &InferParams::new(1, "Summarise CHUNK#SHARED next to IMAGE#LOGO please")
+                        .policy("mpic-8")
+                        .max_new(2),
+                )
+                .unwrap();
+            assert_eq!(r.tokens.len(), 2);
+            assert!(r.device_hits >= 1, "tenant segments must come from the cache");
+        }
+
+        // Leases are tenant-owned: B cannot release or renew (i.e.
+        // un-protect) A's lease even though ids are guessable.
+        let a_lease = a.lease("IMAGE#LOGO", Some(60_000)).unwrap();
+        let stolen = mpic::server::Lease { id: a_lease.id, handle: String::new(), ttl_ms: None };
+        assert_wire_code(b.lease_release(&stolen), ErrorCode::NotFound);
+        assert_wire_code(b.lease_renew(&stolen, Some(1)), ErrorCode::NotFound);
+        assert_eq!(a.cache_stat("IMAGE#LOGO").unwrap().leases, 1, "A's lease must survive");
+        a.lease_release(&a_lease).unwrap();
+
+        // A handle only tenant A uploaded does not resolve for tenant B.
+        a.chunk_upload("CHUNK#ONLYA", "a secret addendum", None).unwrap();
+        assert_wire_code(b.cache_stat("CHUNK#ONLYA"), ErrorCode::NotFound);
+        let missing =
+            b.infer(&InferParams::new(1, "explain CHUNK#ONLYA now").policy("mpic-8").max_new(2));
+        assert!(missing.is_err(), "cross-tenant chunk reference must fail");
+
+        // The store really holds one entry per (tenant, handle): 2 images
+        // + 2 shared chunks + 1 addendum = 5 disk entries.
+        let stats = root.stats().unwrap();
+        let disk = stats.get("store").unwrap().get("disk_entries").unwrap().as_f64().unwrap();
+        assert!(disk >= 5.0, "expected >=5 namespaced entries, got {disk}");
+
+        // Sessions are per-tenant too: same user id, independent turns.
+        a.chat(&InferParams::new(9, "Look at IMAGE#LOGO").policy("mpic-8").max_new(2)).unwrap();
+        let sa = a.call_raw(&v(r#"{"v":3,"ns":"tenant-a","op":"session.stat","user":9}"#), |_| {})
+            .unwrap();
+        assert_ok(&sa);
+        assert_eq!(sa.get("turns").unwrap().as_f64().unwrap(), 1.0);
+        let sb = b.call_raw(&v(r#"{"v":3,"ns":"tenant-b","op":"session.stat","user":9}"#), |_| {})
+            .unwrap();
+        assert_code(&sb, "not_found");
+
+        root.shutdown().unwrap();
+    });
+
+    mpic::server::serve(&engine, "127.0.0.1:0", |a| {
+        addr_tx.send(a).unwrap();
+    })
+    .unwrap();
+    client.join().unwrap();
+    println!("OK tcp server namespace isolation");
+}
+
+/// Satellite e2e: cancel a streaming chat mid-flight. The victim gets a
+/// terminal `cancelled` line, its batch slot frees (queue_bound=1: the
+/// next request admits immediately), no session turn is committed, and
+/// the pipeline counts the cancellation.
+fn pipeline_cancellation() {
+    let engine = test_engine("cxl");
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+
+    let driver = std::thread::spawn(move || {
+        let addr = addr_rx.recv().unwrap();
+        let mut admin = MpicClient::connect(addr).unwrap();
+        admin.upload(1, "IMAGE#CXL").unwrap();
+
+        // A long streaming chat holds the only in-flight slot.
+        let mut victim = MpicClient::connect(addr).unwrap();
+        let mut handle = victim
+            .chat_stream(
+                &InferParams::new(5, "Describe IMAGE#CXL in detail please")
+                    .policy("mpic-16")
+                    .max_new(40),
+            )
+            .unwrap();
+        let first = handle.recv_chunk().unwrap().expect("first chunk before cancel");
+        assert_eq!(first.seq, 0);
+
+        // Cancel from a second connection (the stream occupies this one).
+        handle.cancel().unwrap();
+
+        // The stream must end with a terminal cancelled line.
+        let outcome = handle.join().unwrap();
+        match outcome {
+            InferOutcome::Cancelled { message } => {
+                assert!(message.contains("cancelled"), "victim message: {message}")
+            }
+            InferOutcome::Completed(r) => {
+                panic!("stream must not complete ({} tokens)", r.tokens.len())
+            }
+        }
+
+        // The batch slot freed: with queue_bound=1 a new generation
+        // admits and completes immediately.
+        let r = admin
+            .infer(&InferParams::new(1, "Describe IMAGE#CXL please").policy("mpic-16").max_new(2))
+            .unwrap();
+        assert_eq!(r.tokens.len(), 2, "slot must be reusable after the cancel");
+
+        // No half-committed session state: the previewed turn was never
+        // committed, so user 5's session (created by the preview path)
+        // holds zero turns and zero history.
+        let ss = admin.call_raw(&v(r#"{"v":3,"op":"session.stat","user":5}"#), |_| {}).unwrap();
+        if ss.get("ok").unwrap().as_bool().unwrap() {
+            assert_eq!(ss.get("turns").unwrap().as_f64().unwrap(), 0.0, "{}", ss.encode());
+            assert_eq!(ss.get("history_len").unwrap().as_f64().unwrap(), 0.0);
+        } // (not_found is equally fine: no session state leaked)
+
+        // A second turn for the same user is admittable (busy flag
+        // cleared by the cancel).
+        let t = victim
+            .chat(&InferParams::new(5, "Look at IMAGE#CXL").policy("mpic-16").max_new(2))
+            .unwrap();
+        assert_eq!(t.turn, Some(1), "first committed turn after the cancelled one");
+
+        // Cancelling an unknown id is a clean not_found; the counter
+        // reflects exactly the one real cancellation.
+        assert_wire_code(admin.cancel(&Value::str("no-such-id")), ErrorCode::NotFound);
+        let stats = admin.stats().unwrap();
+        let pipe = stats.get("metrics").unwrap().get("pipeline").unwrap();
+        assert_eq!(pipe.get("cancelled").unwrap().as_f64().unwrap(), 1.0, "{}", pipe.encode());
+
+        admin.shutdown().unwrap();
+    });
+
+    let cfg = ServeConfig {
+        pipeline: PipelineConfig { queue_bound: 1, ..Default::default() },
+        ..Default::default()
+    };
+    mpic::server::serve_with(&engine, "127.0.0.1:0", cfg, |a| {
+        addr_tx.send(a).unwrap();
+    })
+    .unwrap();
+    driver.join().unwrap();
+    println!("OK pipeline cancellation");
+}
+
+/// Satellite regression: with two calls pipelined on one connection, a
+/// `call` that would read the *other* request's reply must error on the
+/// id mismatch instead of silently pairing the wrong reply.
+fn client_errors_on_mispaired_replies() {
+    let engine = test_engine("pair");
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+
+    let client = std::thread::spawn(move || {
+        let addr = addr_rx.recv().unwrap();
+
+        // Well-behaved pipelining: send two, receive two, ids correlate.
+        let mut c = mpic::server::Client::connect(addr).unwrap();
+        c.send(&v(r#"{"v":3,"id":"first","op":"ping"}"#)).unwrap();
+        c.send(&v(r#"{"v":3,"id":"second","op":"ping"}"#)).unwrap();
+        let r1 = c.recv().unwrap();
+        let r2 = c.recv().unwrap();
+        assert_eq!(r1.get("id").unwrap().as_str().unwrap(), "first");
+        assert_eq!(r2.get("id").unwrap().as_str().unwrap(), "second");
+
+        // The regression: a pipelined request's reply is still in flight
+        // when `call` issues a new id — the old client would hand the
+        // stale reply to the new call. Now it errors loudly.
+        c.send(&v(r#"{"v":3,"id":"stale","op":"ping"}"#)).unwrap();
+        let err = c.call(&v(r#"{"v":3,"id":"fresh","op":"ping"}"#)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("stale") && msg.contains("fresh"),
+            "mismatch error must name both ids: {msg}"
+        );
+
+        // A clean connection still works for shutdown.
+        let mut c2 = mpic::server::Client::connect(addr).unwrap();
+        assert_ok(&c2.call(&v(r#"{"v":3,"id":"bye","op":"shutdown"}"#)).unwrap());
+    });
+
+    mpic::server::serve(&engine, "127.0.0.1:0", |a| {
+        addr_tx.send(a).unwrap();
+    })
+    .unwrap();
+    client.join().unwrap();
+    println!("OK client mispaired-reply detection");
 }

@@ -1,0 +1,155 @@
+//! Protocol-conformance check: replay golden v1/v2/v3 request/reply line
+//! fixtures from `rust/tests/data/` against a live server, so future API
+//! changes that break old envelopes fail loudly instead of silently
+//! shifting the wire contract.
+//!
+//! Fixture format: one JSON object per line,
+//!
+//! ```json
+//! {"send": {...request...},
+//!  "expect": {"field": exact-value, ...},          // subset match
+//!  "expect_present": ["field", ...],               // must exist, any value
+//!  "capture": {"name": "reply_field"}}             // remember for later lines
+//! ```
+//!
+//! Later `send` objects may reference captured values as the string
+//! `"${name}"` — how the v3 fixtures thread a dynamically granted lease
+//! id through renew/release lines. Each fixture file replays on a fresh
+//! connection against a fresh engine, strictly in order.
+
+use std::collections::HashMap;
+
+use mpic::coordinator::{Engine, EngineConfig};
+use mpic::server::Client;
+use mpic::util::json::Value;
+
+fn artifacts_ready() -> bool {
+    let ready = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ready && std::env::var("MPIC_REQUIRE_ARTIFACTS").map_or(false, |v| !v.is_empty()) {
+        panic!("MPIC_REQUIRE_ARTIFACTS is set but artifacts/manifest.json is missing");
+    }
+    ready
+}
+
+fn test_engine(tag: &str) -> Engine {
+    let dir = std::env::temp_dir().join(format!("mpic-golden-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    Engine::new(EngineConfig {
+        model: "mpic-sim-a".into(),
+        store: mpic::kv::StoreConfig { disk_dir: dir, ..Default::default() },
+        max_new_tokens: 4,
+        ..Default::default()
+    })
+    .expect("engine")
+}
+
+/// Substitute `"${name}"` strings with captured reply values.
+fn substitute(v: &Value, captured: &HashMap<String, Value>) -> Value {
+    match v {
+        Value::Str(s) if s.starts_with("${") && s.ends_with('}') => {
+            let name = &s[2..s.len() - 1];
+            captured
+                .get(name)
+                .unwrap_or_else(|| panic!("fixture references uncaptured value {name:?}"))
+                .clone()
+        }
+        Value::Obj(m) => {
+            Value::Obj(m.iter().map(|(k, x)| (k.clone(), substitute(x, captured))).collect())
+        }
+        Value::Arr(a) => Value::Arr(a.iter().map(|x| substitute(x, captured)).collect()),
+        other => other.clone(),
+    }
+}
+
+/// Replay one fixture file on a fresh connection; panic with the line
+/// number and full reply on any divergence from the golden expectations.
+fn replay(file: &str, addr: std::net::SocketAddr) {
+    let path = std::path::Path::new("rust/tests/data").join(file);
+    let content = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("golden fixture {} unreadable: {e}", path.display()));
+    let mut c = Client::connect(addr).expect("connect");
+    let mut captured: HashMap<String, Value> = HashMap::new();
+
+    for (lineno, line) in content.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let ctx = format!("{file}:{}", lineno + 1);
+        let fixture = Value::parse(line).unwrap_or_else(|e| panic!("{ctx}: bad fixture: {e}"));
+        let send_raw = fixture.get("send").unwrap_or_else(|_| panic!("{ctx}: no send"));
+        let send = substitute(send_raw, &captured);
+        c.send(&send).unwrap_or_else(|e| panic!("{ctx}: send failed: {e}"));
+        let reply = c.recv().unwrap_or_else(|e| panic!("{ctx}: no reply: {e}"));
+
+        if let Some(Value::Obj(expect)) = fixture.opt("expect") {
+            for (k, want) in expect {
+                let got = reply.opt(k).unwrap_or_else(|| {
+                    panic!("{ctx}: reply missing field {k:?}: {}", reply.encode())
+                });
+                assert_eq!(
+                    got,
+                    want,
+                    "{ctx}: field {k:?} diverged from golden (got {}, want {}): {}",
+                    got.encode(),
+                    want.encode(),
+                    reply.encode()
+                );
+            }
+        }
+        if let Some(Value::Arr(present)) = fixture.opt("expect_present") {
+            for k in present {
+                let k = k.as_str().unwrap_or_else(|e| panic!("{ctx}: bad expect_present: {e}"));
+                assert!(
+                    reply.opt(k).is_some(),
+                    "{ctx}: reply missing expected field {k:?}: {}",
+                    reply.encode()
+                );
+            }
+        }
+        if let Some(Value::Obj(caps)) = fixture.opt("capture") {
+            for (name, field) in caps {
+                let field = field.as_str().unwrap_or_else(|e| panic!("{ctx}: bad capture: {e}"));
+                let val = reply.opt(field).unwrap_or_else(|| {
+                    panic!("{ctx}: capture field {field:?} absent: {}", reply.encode())
+                });
+                captured.insert(name.clone(), val.clone());
+            }
+        }
+    }
+}
+
+#[test]
+fn wire_protocol_conformance() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    // The fixtures must exist even when the engine is unavailable — a
+    // deleted fixture set would make this check silently vacuous.
+    for file in ["wire_v1.jsonl", "wire_v2.jsonl", "wire_v3.jsonl"] {
+        assert!(
+            std::path::Path::new("rust/tests/data").join(file).exists(),
+            "golden fixture {file} is missing"
+        );
+    }
+
+    let engine = test_engine("wire");
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let driver = std::thread::spawn(move || {
+        let addr = addr_rx.recv().unwrap();
+        for file in ["wire_v1.jsonl", "wire_v2.jsonl", "wire_v3.jsonl"] {
+            replay(file, addr);
+            println!("OK golden {file}");
+        }
+        let mut c = Client::connect(addr).unwrap();
+        let bye = c.call(&Value::parse(r#"{"op":"shutdown"}"#).unwrap()).unwrap();
+        assert!(bye.get("ok").unwrap().as_bool().unwrap());
+    });
+
+    mpic::server::serve(&engine, "127.0.0.1:0", |a| {
+        addr_tx.send(a).unwrap();
+    })
+    .unwrap();
+    driver.join().unwrap();
+}
