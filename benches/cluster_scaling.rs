@@ -1,0 +1,319 @@
+//! Cluster scaling: aggregate serving throughput at 1/2/4 workers behind
+//! the cache-aware router, plus an affinity-vs-round-robin control arm.
+//!
+//! Every worker is a full engine + TCP server with a deliberately small
+//! device/host tier and a synthetic disk-bandwidth model (the same
+//! `StoreConfig::disk_bandwidth` knob the transfer ablations use), so a
+//! prefill pays a realistic storage-load cost. Workers peer with each
+//! other over the `kv.probe`/`kv.pull` lane, and the router places
+//! uploads on their consistent-hash owner. A Poisson burst of
+//! generations then references a shared pool of segments:
+//!
+//! * **scaling** — the storage loads of different workers overlap in
+//!   wall time, so 4 workers drain the same burst faster than 1;
+//! * **affinity vs rr** — affinity routing sends a generation to the
+//!   worker that owns its reuse spans (local tier hits); round-robin
+//!   scatters them, paying peer pulls / recomputes and a lower local
+//!   hit rate for the identical trace.
+//!
+//! `cargo bench --bench cluster_scaling -- --infers 24 --rate 120`
+
+use std::net::{SocketAddr, TcpListener};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use mpic::cluster::{serve_router, PeerConfig, PeerTransport, RouteMode, RouterConfig};
+use mpic::coordinator::{Engine, EngineConfig};
+use mpic::harness;
+use mpic::server::{serve_with, Client, ServeConfig};
+use mpic::util::bench::{emit, emit_summary, Row, Table};
+use mpic::util::cli::Args;
+use mpic::util::json::Value;
+use mpic::workload::trace::Trace;
+
+fn v(s: &str) -> Value {
+    Value::parse(s).unwrap()
+}
+
+fn assert_ok(resp: &Value) {
+    assert!(resp.get("ok").unwrap().as_bool().unwrap(), "expected ok: {}", resp.encode());
+}
+
+fn sleep_until(t0: Instant, at_ms: u64) {
+    let target = t0 + Duration::from_millis(at_ms);
+    std::thread::sleep(target.saturating_duration_since(Instant::now()));
+}
+
+/// One generation event of the trace.
+#[derive(Clone)]
+struct Event {
+    user: u64,
+    text: String,
+    at_ms: u64,
+}
+
+fn events(n: usize, pool: &[String], trace: &Trace) -> Vec<Event> {
+    (0..n)
+        .map(|i| {
+            let a = &pool[i % pool.len()];
+            let b = &pool[(i + 1) % pool.len()];
+            Event {
+                user: (i % 4) as u64 + 1,
+                text: format!("compare {a} with {b} and describe both"),
+                at_ms: trace.events[i].at_ms,
+            }
+        })
+        .collect()
+}
+
+/// Reserve `n` distinct free loopback ports by binding and dropping
+/// ephemeral listeners. The workers re-bind them moments later; a full
+/// peer mesh needs every address known before the first worker starts.
+fn reserve_addrs(n: usize) -> Vec<SocketAddr> {
+    let listeners: Vec<TcpListener> =
+        (0..n).map(|_| TcpListener::bind("127.0.0.1:0").expect("reserve port")).collect();
+    listeners.iter().map(|l| l.local_addr().unwrap()).collect()
+}
+
+fn spawn_worker(
+    idx: usize,
+    addr: SocketAddr,
+    peers: Vec<SocketAddr>,
+    disk_bandwidth: f64,
+    ready: std::sync::mpsc::Sender<()>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let dir = std::env::temp_dir()
+            .join(format!("mpic-cluster-bench-w{idx}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut engine = Engine::new(EngineConfig {
+            model: "mpic-sim-a".into(),
+            store: mpic::kv::StoreConfig {
+                disk_dir: dir,
+                // Tiny upper tiers + throttled disk: prefill pays a
+                // storage load, which is the cost that scales out.
+                device_capacity: 1 << 16,
+                host_capacity: 1 << 16,
+                shards: 1,
+                disk_bandwidth: Some(disk_bandwidth),
+                ..Default::default()
+            },
+            max_new_tokens: 8,
+            ..Default::default()
+        })
+        .expect("engine");
+        if !peers.is_empty() {
+            let counters = Arc::clone(engine.metrics.cluster());
+            engine.set_transport(Arc::new(PeerTransport::new(
+                peers,
+                PeerConfig::default(),
+                counters,
+            )));
+        }
+        let cfg = ServeConfig { conn_threads: 64, ..Default::default() };
+        serve_with(&engine, &addr.to_string(), cfg, |_| {
+            ready.send(()).unwrap();
+        })
+        .expect("worker serve");
+    })
+}
+
+#[derive(Default)]
+struct ClusterTally {
+    hits: f64,
+    misses: f64,
+    peer_pulls: f64,
+    recomputes: f64,
+    routed_affinity_hits: f64,
+}
+
+impl ClusterTally {
+    fn hit_rate(&self) -> f64 {
+        self.hits / (self.hits + self.misses).max(1.0)
+    }
+}
+
+struct Outcome {
+    makespan_s: f64,
+    infers_per_s: f64,
+    tally: ClusterTally,
+}
+
+fn num(stats: &Value, section: &str, field: &str) -> f64 {
+    stats.get("metrics").unwrap().get(section).unwrap().get(field).unwrap().as_f64().unwrap()
+}
+
+/// Stand up `n_workers` + router, upload the pool through the router,
+/// replay the generation burst, then read every worker's counters.
+fn run_cluster(
+    n_workers: usize,
+    mode: RouteMode,
+    pool: &[String],
+    evs: &[Event],
+    disk_bandwidth: f64,
+) -> Outcome {
+    let addrs = reserve_addrs(n_workers);
+    let (ready_tx, ready_rx) = channel();
+    let workers: Vec<JoinHandle<()>> = (0..n_workers)
+        .map(|i| {
+            let peers: Vec<SocketAddr> =
+                addrs.iter().enumerate().filter(|(j, _)| *j != i).map(|(_, a)| *a).collect();
+            spawn_worker(i, addrs[i], peers, disk_bandwidth, ready_tx.clone())
+        })
+        .collect();
+    drop(ready_tx);
+    for _ in 0..n_workers {
+        ready_rx.recv().expect("worker ready");
+    }
+
+    let mut rcfg = RouterConfig::new(addrs.clone());
+    rcfg.mode = mode;
+    let (addr_tx, addr_rx) = channel();
+    let router_join = std::thread::spawn(move || {
+        serve_router(rcfg, "127.0.0.1:0", |a| addr_tx.send(a).unwrap()).expect("router serve");
+    });
+    let router = addr_rx.recv().unwrap();
+
+    // Setup (untimed): place the shared pool on its ring owners.
+    let mut setup = Client::connect(router).unwrap();
+    for (i, h) in pool.iter().enumerate() {
+        let up = setup
+            .call(&v(&format!(r#"{{"v":3,"id":"up{i}","op":"upload","user":9,"handle":"{h}"}}"#)))
+            .unwrap();
+        assert_ok(&up);
+    }
+
+    // Timed burst: one client thread per generation, Poisson arrivals.
+    let t0 = Instant::now();
+    let drivers: Vec<JoinHandle<Instant>> = evs
+        .iter()
+        .cloned()
+        .enumerate()
+        .map(|(i, ev)| {
+            std::thread::spawn(move || {
+                sleep_until(t0, ev.at_ms);
+                let mut c = Client::connect(router).unwrap();
+                let req = v(&format!(
+                    r#"{{"v":3,"id":"g{i}","op":"infer","user":{},"text":"{}","max_new":4}}"#,
+                    ev.user, ev.text
+                ));
+                let resp = c.call(&req).unwrap();
+                assert_ok(&resp);
+                Instant::now()
+            })
+        })
+        .collect();
+    let mut last_done = t0;
+    for d in drivers {
+        last_done = last_done.max(d.join().unwrap());
+    }
+    let makespan_s = last_done.duration_since(t0).as_secs_f64();
+
+    // Aggregate counters straight off each worker.
+    let mut tally = ClusterTally::default();
+    for a in &addrs {
+        let mut c = Client::connect(*a).unwrap();
+        let s = c.call(&v(r#"{"v":3,"id":"st","op":"stats"}"#)).unwrap();
+        tally.hits +=
+            num(&s, "kv", "device_hits") + num(&s, "kv", "host_hits") + num(&s, "kv", "disk_hits");
+        tally.misses += num(&s, "kv", "misses");
+        tally.peer_pulls += num(&s, "cluster", "peer_pulls");
+        tally.recomputes += num(&s, "cluster", "recomputes");
+        tally.routed_affinity_hits += num(&s, "cluster", "routed_affinity_hits");
+    }
+
+    // Teardown: router first (stops its pollers), then the workers.
+    let bye = setup.call(&v(r#"{"v":3,"id":"bye","op":"shutdown"}"#)).unwrap();
+    assert_ok(&bye);
+    router_join.join().unwrap();
+    for (a, w) in addrs.iter().zip(workers) {
+        let mut c = Client::connect(*a).unwrap();
+        let bye = c.call(&v(r#"{"v":3,"id":"bye","op":"shutdown"}"#)).unwrap();
+        assert_ok(&bye);
+        w.join().unwrap();
+    }
+
+    Outcome { makespan_s, infers_per_s: evs.len() as f64 / makespan_s.max(1e-9), tally }
+}
+
+fn main() {
+    mpic::util::logging::init();
+    if !harness::artifacts_ready() {
+        return;
+    }
+    let args = Args::parse(&["bench"]).unwrap();
+    let n_infers = args.usize_or("infers", 24).unwrap();
+    let pool_size = args.usize_or("pool", 6).unwrap();
+    let rate = args.f64_or("rate", 120.0).unwrap();
+    let disk_mbps = args.f64_or("disk-mbps", 24.0).unwrap();
+    let disk_bandwidth = disk_mbps * 1e6;
+
+    let pool: Vec<String> = (0..pool_size).map(|i| format!("IMAGE#CLPOOL{i}")).collect();
+    let trace = Trace::poisson(n_infers, 1, rate, 0x5CA1E);
+    let evs = events(n_infers, &pool, &trace);
+    println!(
+        "trace: {n_infers} generations over a {pool_size}-segment pool, Poisson {rate}/s \
+         (last arrival {} ms), disk model {disk_mbps} MB/s",
+        trace.events[n_infers - 1].at_ms
+    );
+
+    let mut table = Table::new("cluster_scaling: workers × route mode on one Poisson burst");
+    let mut run = |workers: usize, mode: RouteMode| -> Outcome {
+        let out = run_cluster(workers, mode, &pool, &evs, disk_bandwidth);
+        let mode_s = if mode == RouteMode::Affinity { "affinity" } else { "rr" };
+        println!(
+            "  {workers}w/{mode_s}: {:.2}s makespan, {:.1} gen/s, hit rate {:.2}, \
+             {} peer pulls, {} recomputes",
+            out.makespan_s,
+            out.infers_per_s,
+            out.tally.hit_rate(),
+            out.tally.peer_pulls,
+            out.tally.recomputes
+        );
+        table.add(
+            Row::new()
+                .num("workers", workers as f64)
+                .str("mode", mode_s)
+                .num("makespan_s", out.makespan_s)
+                .num("gen_per_s", out.infers_per_s)
+                .num("hit_rate", out.tally.hit_rate())
+                .num("peer_pulls", out.tally.peer_pulls)
+                .num("recomputes", out.tally.recomputes)
+                .num("routed_affinity_hits", out.tally.routed_affinity_hits),
+        );
+        out
+    };
+
+    let w1 = run(1, RouteMode::Affinity);
+    let w2 = run(2, RouteMode::Affinity);
+    let w4 = run(4, RouteMode::Affinity);
+    let rr4 = run(4, RouteMode::RoundRobin);
+    emit("cluster_scaling", &[table]);
+
+    let scaling = w4.infers_per_s / w1.infers_per_s.max(1e-9);
+    println!(
+        "[headline] 4 workers vs 1: {scaling:.2}x aggregate throughput \
+         ({:.1} -> {:.1} gen/s); affinity hit rate {:.2} vs round-robin {:.2}",
+        w1.infers_per_s,
+        w4.infers_per_s,
+        w4.tally.hit_rate(),
+        rr4.tally.hit_rate()
+    );
+    emit_summary(
+        "cluster_scaling",
+        &[
+            ("ops_per_s_1w", w1.infers_per_s),
+            ("ops_per_s_2w", w2.infers_per_s),
+            ("ops_per_s_4w", w4.infers_per_s),
+            ("scaling_4w_over_1w", scaling),
+            ("hit_rate_affinity", w4.tally.hit_rate()),
+            ("hit_rate_rr", rr4.tally.hit_rate()),
+            ("peer_pulls_affinity", w4.tally.peer_pulls),
+            ("peer_pulls_rr", rr4.tally.peer_pulls),
+            ("recomputes_affinity", w4.tally.recomputes),
+            ("recomputes_rr", rr4.tally.recomputes),
+        ],
+    );
+}

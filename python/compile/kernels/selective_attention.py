@@ -106,10 +106,13 @@ def _kernel(
     def tile_step(t, carry):
         m_prev, l_prev, acc_prev = carry
         off = t * bk
-        kc = pl.load(kc_ref, (0, pl.dslice(off, bk), slice(None)))  # [BK,Dh]
-        vc = pl.load(vc_ref, (0, pl.dslice(off, bk), slice(None)))
-        ko = pl.load(ko_ref, (0, pl.dslice(off, bk), slice(None)))
-        vo = pl.load(vo_ref, (0, pl.dslice(off, bk), slice(None)))
+        # The head axis is a singleton slice rather than a bare int index:
+        # pl.load on some jax releases rejects python-int indices.
+        head = pl.dslice(0, 1)
+        kc = pl.load(kc_ref, (head, pl.dslice(off, bk), slice(None)))[0]  # [BK,Dh]
+        vc = pl.load(vc_ref, (head, pl.dslice(off, bk), slice(None)))[0]
+        ko = pl.load(ko_ref, (head, pl.dslice(off, bk), slice(None)))[0]
+        vo = pl.load(vo_ref, (head, pl.dslice(off, bk), slice(None)))[0]
         om = pl.load(om_ref, (pl.dslice(off, bk),))  # [BK]
         kpos = pl.load(kpos_ref, (pl.dslice(off, bk),))
         kval = pl.load(kval_ref, (pl.dslice(off, bk),))

@@ -1,0 +1,251 @@
+//! Cluster serving: cache-aware routing + peer-to-peer KV transfer.
+//!
+//! The store shards across locks (PR 3) and tenants (PR 5) *inside* one
+//! process; this module scales out. Position-independent KV makes a
+//! segment's cache location-portable by construction (EPIC,
+//! arXiv:2410.15332): any worker can splice a pulled segment into any
+//! prompt, so workers share their caches instead of recomputing them.
+//!
+//! ## Topology
+//!
+//! ```text
+//!                        ┌──────────────┐
+//!        clients ──────▶ │  mpic router │  consistent-hash (ns, SegmentId)
+//!                        │  (stateless) │  + reuse-span affinity scoring
+//!                        └──────┬───────┘
+//!              ┌────────────────┼────────────────┐
+//!              ▼                ▼                ▼
+//!        ┌───────────┐    ┌───────────┐    ┌───────────┐
+//!        │ worker A  │    │ worker B  │    │ worker C  │   mpic serve
+//!        │ engine +  │◀──▶│ engine +  │◀──▶│ engine +  │   --peers ...
+//!        │ KvStore   │    │ KvStore   │    │ KvStore   │
+//!        └───────────┘    └───────────┘    └───────────┘
+//!              ▲   kv.probe / kv.pull (peer KV lane)  ▲
+//!              └──────────────────────────────────────┘
+//! ```
+//!
+//! Three coordinated pieces:
+//!
+//! * **[`crate::kv::Transport`]** — the transfer engine's remote-tier
+//!   seam. [`crate::kv::LocalTransport`] keeps today's in-process path;
+//!   [`PeerTransport`] (here) speaks the v4 codec container over TCP.
+//!   The container already *is* the wire format: a peer pull is
+//!   read-from-disk → base64 frame → send, no re-encode on either side.
+//! * **Peer KV lane** — internal wire ops `kv.probe {keys}` → residency
+//!   bitmap and `kv.pull {key}` → framed container bytes, served by every
+//!   worker's control lane. A local miss consults configured peers before
+//!   paying the `compute_segment_kv` recompute, with per-peer connect
+//!   timeouts, one retry with backoff, and a negative-probe cache so a
+//!   flapping peer cannot stall prefill.
+//! * **[`router`]** — the `mpic router` front end. Uploads land on the
+//!   ring owner of their `(ns, SegmentId)`; generations go to the worker
+//!   owning the most of the request's reuse spans (tie-break: live batch
+//!   occupancy from a cheap `stats` poll); reply lines proxy verbatim and
+//!   a dead worker re-routes to the next candidate.
+
+pub mod router;
+pub mod transport;
+
+pub use router::{serve_router, RouteMode, RouterConfig};
+pub use transport::{PeerConfig, PeerTransport};
+
+use crate::mm::{Namespace, SegmentId};
+use crate::util::rng::fnv1a;
+
+/// Virtual nodes per worker: enough that a 1/2/4-worker ring spreads keys
+/// within a few percent of even, cheap enough to rebuild per process.
+const VNODES: usize = 64;
+
+/// Consistent-hash ring over `(ns, SegmentId)`. Uploads routed through
+/// the ring land deterministically, so a later generation referencing the
+/// same segment scores an affinity hit on the same worker — and when the
+/// worker set changes, only the keys owned by the touched arcs move
+/// (standard consistent-hashing locality).
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// Sorted (point, worker) pairs.
+    points: Vec<(u64, usize)>,
+    n_workers: usize,
+}
+
+impl HashRing {
+    pub fn new(n_workers: usize) -> HashRing {
+        assert!(n_workers > 0, "ring needs at least one worker");
+        let mut points = Vec::with_capacity(n_workers * VNODES);
+        for w in 0..n_workers {
+            for r in 0..VNODES {
+                points.push((fnv1a(format!("worker-{w}/vnode-{r}").as_bytes()), w));
+            }
+        }
+        points.sort_unstable();
+        points.dedup_by_key(|(p, _)| *p);
+        HashRing { points, n_workers }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// The ring point of one segment key (ns ⊕ kind ⊕ raw id, the same
+    /// FNV-1a folding idiom as `KvStore::shard_index`).
+    fn key_point(ns: &Namespace, seg: SegmentId) -> u64 {
+        let mut h = fnv1a(ns.as_str().as_bytes());
+        h = (h ^ seg.kind_tag() as u64).wrapping_mul(0x100_0000_01b3);
+        for b in seg.raw().to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    }
+
+    /// Which worker owns `(ns, seg)`: the first vnode clockwise from the
+    /// key's point.
+    pub fn owner(&self, ns: &Namespace, seg: SegmentId) -> usize {
+        let h = Self::key_point(ns, seg);
+        let i = match self.points.binary_search_by(|(p, _)| p.cmp(&h)) {
+            Ok(i) => i,
+            Err(i) if i == self.points.len() => 0, // wrap past the top
+            Err(i) => i,
+        };
+        self.points[i].1
+    }
+}
+
+/// Score each worker by how many of the request's reuse spans it owns,
+/// given one residency bitmap per worker (`bitmaps[w][i]` ⇔ worker `w`
+/// could serve span `i`). Pure function — the router's probe results and
+/// the unit tests' synthetic maps feed the same code.
+pub fn affinity_scores(n_spans: usize, bitmaps: &[Vec<bool>]) -> Vec<usize> {
+    bitmaps
+        .iter()
+        .map(|bm| bm.iter().take(n_spans).filter(|&&b| b).count())
+        .collect()
+}
+
+/// Pick the worker with the best span affinity; ties fall back to the
+/// least-loaded worker (live batch occupancy from the `stats` poll), and
+/// remaining ties to the lowest index (determinism).
+pub fn choose_worker(scores: &[usize], occupancy: &[f64]) -> usize {
+    assert!(!scores.is_empty());
+    let mut best = 0usize;
+    for w in 1..scores.len() {
+        let load = |i: usize| occupancy.get(i).copied().unwrap_or(0.0);
+        if scores[w] > scores[best] || (scores[w] == scores[best] && load(w) < load(best)) {
+            best = w;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mm::ImageId;
+    use std::collections::HashMap;
+
+    fn ns(s: &str) -> Namespace {
+        if s.is_empty() {
+            Namespace::default()
+        } else {
+            Namespace::new(s).unwrap()
+        }
+    }
+
+    #[test]
+    fn ring_is_deterministic_and_spreads_keys() {
+        let ring = HashRing::new(4);
+        let ring2 = HashRing::new(4);
+        let mut counts: HashMap<usize, usize> = HashMap::new();
+        for i in 0..4000u64 {
+            let seg = SegmentId::Image(ImageId(i));
+            let w = ring.owner(&ns("tenant"), seg);
+            assert_eq!(w, ring2.owner(&ns("tenant"), seg), "owner must be deterministic");
+            *counts.entry(w).or_default() += 1;
+        }
+        assert_eq!(counts.len(), 4, "all workers should own keys: {counts:?}");
+        for (&w, &c) in &counts {
+            assert!((500..=1800).contains(&c), "worker {w} owns {c} of 4000 — too skewed");
+        }
+    }
+
+    #[test]
+    fn ring_namespaces_and_kinds_hash_apart() {
+        let ring = HashRing::new(8);
+        let mut differs = 0;
+        for i in 0..64u64 {
+            let img = SegmentId::Image(ImageId(i));
+            let chk = SegmentId::Chunk(crate::mm::ChunkId(i));
+            if ring.owner(&ns("a"), img) != ring.owner(&ns("b"), img) {
+                differs += 1;
+            }
+            if ring.owner(&ns("a"), img) != ring.owner(&ns("a"), chk) {
+                differs += 1;
+            }
+        }
+        assert!(differs > 32, "ns/kind must perturb placement (differs={differs})");
+    }
+
+    #[test]
+    fn ring_growth_moves_only_a_fraction_of_keys() {
+        // The consistent-hashing property: going 4 → 5 workers remaps
+        // roughly 1/5 of the keys, not all of them.
+        let before = HashRing::new(4);
+        let after = HashRing::new(5);
+        let n = 4000u64;
+        let moved = (0..n)
+            .filter(|&i| {
+                let seg = SegmentId::Image(ImageId(i));
+                before.owner(&ns("t"), seg) != after.owner(&ns("t"), seg)
+            })
+            .count();
+        assert!(
+            moved < (n as usize) / 2,
+            "adding one worker moved {moved}/{n} keys — not consistent hashing"
+        );
+        assert!(moved > 0, "a bigger ring must claim some keys");
+    }
+
+    // ------------------------------------------------------------------
+    // Satellite: affinity scoring against synthetic residency maps.
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn affinity_picks_worker_owning_most_spans() {
+        // Worker 1 owns 3 of the 4 reuse spans, worker 0 owns 1, worker 2
+        // none. Occupancy would prefer worker 2 — affinity must win.
+        let bitmaps = vec![
+            vec![true, false, false, false],
+            vec![true, true, true, false],
+            vec![false, false, false, false],
+        ];
+        let scores = affinity_scores(4, &bitmaps);
+        assert_eq!(scores, vec![1, 3, 0]);
+        assert_eq!(choose_worker(&scores, &[0.0, 9.0, 0.0]), 1);
+    }
+
+    #[test]
+    fn affinity_tie_falls_back_to_least_loaded() {
+        // Workers 0 and 2 both own 2 spans; worker 2 is idle, worker 0 is
+        // deep in a batch — the tie-break must pick 2.
+        let bitmaps = vec![
+            vec![true, true, false],
+            vec![false, false, true],
+            vec![true, false, true],
+        ];
+        let scores = affinity_scores(3, &bitmaps);
+        assert_eq!(scores, vec![2, 1, 2]);
+        assert_eq!(choose_worker(&scores, &[7.0, 1.0, 2.0]), 2);
+        // Full tie (no spans anywhere): least-loaded wins outright.
+        let cold = affinity_scores(3, &[vec![false; 3], vec![false; 3], vec![false; 3]]);
+        assert_eq!(choose_worker(&cold, &[3.0, 0.5, 2.0]), 1);
+        // Everything equal: lowest index, deterministically.
+        assert_eq!(choose_worker(&[0, 0, 0], &[1.0, 1.0, 1.0]), 0);
+    }
+
+    #[test]
+    fn affinity_scores_ignore_bits_past_the_span_count() {
+        // A worker reporting a longer bitmap than the request has spans
+        // (stale probe reply) must not score phantom spans.
+        let bitmaps = vec![vec![true, true, true, true], vec![true, true, false, false]];
+        assert_eq!(affinity_scores(2, &bitmaps), vec![2, 2]);
+    }
+}

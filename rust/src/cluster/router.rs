@@ -1,0 +1,580 @@
+//! The `mpic router` front end: a stateless cache-aware proxy in front of
+//! N workers (see the topology diagram in [`crate::cluster`]).
+//!
+//! Placement policy, per request:
+//!
+//! * **uploads** (`upload`, `add_reference`, `chunk.upload`) go to the
+//!   consistent-hash owner of their `(ns, SegmentId)` — deterministic, so
+//!   later generations referencing the segment find it where the ring
+//!   says it is;
+//! * **generations** (`infer`, `chat`) with reuse spans are scored by
+//!   residency: each worker answers one `kv.probe` over the prompt's
+//!   spans, [`super::affinity_scores`] counts what each owns, and ties
+//!   break toward the lowest live occupancy (`stats.metrics.pipeline.
+//!   inflight_now`, polled in the background). The winner's request is
+//!   stamped `"routed":"affinity"` so the worker's
+//!   `cluster.routed_affinity_hits` counter records the placement;
+//! * **everything else** (and all traffic in `RouteMode::RoundRobin`)
+//!   rotates round-robin.
+//!
+//! Reply lines are proxied verbatim — stream chunks included — and a
+//! worker that cannot be reached re-routes the request to the next
+//! candidate instead of failing the client.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::mm::{ChunkId, ImageId, Namespace, Prompt, SegmentId, UserId};
+use crate::server::{Client, PeerUnreachable};
+use crate::util::json::Value;
+use crate::Result;
+
+use super::{affinity_scores, choose_worker, HashRing};
+
+/// How generations are placed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteMode {
+    /// Reuse-span residency scoring with occupancy tie-breaks.
+    Affinity,
+    /// Ignore residency; rotate. The bench's control arm.
+    RoundRobin,
+}
+
+impl RouteMode {
+    pub fn parse(s: &str) -> Result<RouteMode> {
+        match s {
+            "affinity" => Ok(RouteMode::Affinity),
+            "rr" | "round-robin" => Ok(RouteMode::RoundRobin),
+            other => anyhow::bail!("unknown route mode {other:?} (want affinity|rr)"),
+        }
+    }
+}
+
+/// Router tunables.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Worker serving addresses, in ring order.
+    pub workers: Vec<SocketAddr>,
+    pub mode: RouteMode,
+    /// Deadline on probe connects/reads (generation forwards stream
+    /// without a read deadline).
+    pub probe_timeout: Duration,
+    /// Occupancy poll period.
+    pub stats_interval: Duration,
+}
+
+impl RouterConfig {
+    pub fn new(workers: Vec<SocketAddr>) -> RouterConfig {
+        RouterConfig {
+            workers,
+            mode: RouteMode::Affinity,
+            probe_timeout: Duration::from_millis(300),
+            stats_interval: Duration::from_millis(500),
+        }
+    }
+}
+
+struct Shared {
+    cfg: RouterConfig,
+    ring: HashRing,
+    rr: AtomicUsize,
+    /// Live `inflight_now` per worker, refreshed by the poller thread.
+    occupancy: Mutex<Vec<f64>>,
+    shutdown: AtomicBool,
+}
+
+/// Run the router until an accepted `{"op":"shutdown"}`. Binds `addr`,
+/// reports the bound address through `on_ready`, then blocks accepting.
+pub fn serve_router(
+    cfg: RouterConfig,
+    addr: &str,
+    on_ready: impl FnOnce(SocketAddr),
+) -> Result<()> {
+    anyhow::ensure!(!cfg.workers.is_empty(), "router needs at least one worker");
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    on_ready(local);
+    log::info!(
+        "router: listening on {local}, {} workers, mode {:?}",
+        cfg.workers.len(),
+        cfg.mode
+    );
+
+    let shared = Arc::new(Shared {
+        ring: HashRing::new(cfg.workers.len()),
+        rr: AtomicUsize::new(0),
+        occupancy: Mutex::new(vec![0.0; cfg.workers.len()]),
+        shutdown: AtomicBool::new(false),
+        cfg,
+    });
+
+    // Occupancy poller: one cheap `stats` per worker per interval.
+    let poller = {
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || poll_occupancy(&shared))
+    };
+
+    let mut handlers = Vec::new();
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream {
+            Ok(s) => {
+                let shared = Arc::clone(&shared);
+                handlers.push(std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(s, &shared, local) {
+                        log::debug!("router: connection ended: {e}");
+                    }
+                }));
+            }
+            Err(e) => log::warn!("router: accept error: {e}"),
+        }
+    }
+    shared.shutdown.store(true, Ordering::SeqCst);
+    for h in handlers {
+        let _ = h.join();
+    }
+    let _ = poller.join();
+    log::info!("router: shut down");
+    Ok(())
+}
+
+fn poll_occupancy(shared: &Shared) {
+    // Sleep in small slices so shutdown is honoured promptly.
+    let slice = Duration::from_millis(50);
+    loop {
+        let mut waited = Duration::ZERO;
+        while waited < shared.cfg.stats_interval {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            std::thread::sleep(slice);
+            waited += slice;
+        }
+        for (w, &addr) in shared.cfg.workers.iter().enumerate() {
+            let inflight = worker_inflight(addr, shared.cfg.probe_timeout).unwrap_or(0.0);
+            shared.occupancy.lock().unwrap()[w] = inflight;
+        }
+    }
+}
+
+fn worker_inflight(addr: SocketAddr, timeout: Duration) -> Result<f64> {
+    let mut c = Client::connect_timeout(addr, timeout)?;
+    let resp = c.call(&Value::obj(vec![("op", Value::str("stats")), ("id", Value::str("occ"))]))?;
+    resp.get("metrics")?.get("pipeline")?.get("inflight_now")?.as_f64()
+}
+
+fn write_line(writer: &mut TcpStream, v: &Value) -> Result<()> {
+    writer.write_all(v.encode().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    Ok(())
+}
+
+fn error_line(id: Option<&Value>, msg: &str) -> Value {
+    let mut v = Value::obj(vec![
+        ("ok", Value::Bool(false)),
+        ("code", Value::str("internal")),
+        ("error", Value::str(msg)),
+    ]);
+    if let Some(id) = id {
+        v.set("id", id.clone());
+    }
+    v
+}
+
+fn handle_conn(stream: TcpStream, shared: &Shared, local: SocketAddr) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    // Per-connection upstream cache: one Client per worker, recreated on
+    // failure. Requests on one downstream connection stay serial, so the
+    // cached upstreams never interleave replies.
+    let mut upstreams: HashMap<usize, Client> = HashMap::new();
+    for line in reader.lines() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match Value::parse(&line) {
+            Ok(v) => v,
+            Err(e) => {
+                write_line(&mut writer, &error_line(None, &format!("bad JSON: {e}")))?;
+                continue;
+            }
+        };
+        let id = req.opt("id").cloned();
+        let op = req.opt("op").and_then(|o| o.as_str().ok()).unwrap_or("").to_string();
+        if op == "shutdown" {
+            // Shut the *router* down; workers have their own lifecycles.
+            let mut bye = Value::obj(vec![("ok", Value::Bool(true)), ("bye", Value::Bool(true))]);
+            if let Some(id) = &id {
+                bye.set("id", id.clone());
+            }
+            write_line(&mut writer, &bye)?;
+            shared.shutdown.store(true, Ordering::SeqCst);
+            let _ = TcpStream::connect(local); // unblock the acceptor
+            break;
+        }
+        let (candidates, req) = route(shared, &op, req, &mut upstreams);
+        let mut answered = false;
+        let mut wrote = false;
+        for w in candidates {
+            match forward(shared, w, &mut upstreams, &req, &mut writer, &mut wrote) {
+                Ok(()) => {
+                    answered = true;
+                    break;
+                }
+                Err(e) => {
+                    // The worker is unreachable: drop its cached client
+                    // and re-route to the next candidate — but only if no
+                    // reply line reached the client yet (re-sending after
+                    // a partial stream would duplicate output).
+                    log::debug!("router: worker {w} failed, re-routing: {e}");
+                    upstreams.remove(&w);
+                    if wrote {
+                        break;
+                    }
+                }
+            }
+        }
+        if !answered {
+            write_line(&mut writer, &error_line(id.as_ref(), "no reachable worker"))?;
+        }
+    }
+    Ok(())
+}
+
+/// Decide the candidate order for one request (preferred first) and stamp
+/// affinity-placed generations.
+fn route(
+    shared: &Shared,
+    op: &str,
+    mut req: Value,
+    upstreams: &mut HashMap<usize, Client>,
+) -> (Vec<usize>, Value) {
+    let n = shared.cfg.workers.len();
+    let rr_from = |start: usize| (0..n).map(|i| (start + i) % n).collect::<Vec<_>>();
+    let ns = req
+        .opt("ns")
+        .and_then(|s| s.as_str().ok())
+        .and_then(|s| Namespace::new(s).ok())
+        .unwrap_or_default();
+    if shared.cfg.mode == RouteMode::Affinity {
+        // Uploads: the ring owner, deterministically.
+        let seg = match op {
+            "upload" | "add_reference" => req
+                .opt("handle")
+                .and_then(|h| h.as_str().ok())
+                .map(|h| SegmentId::Image(ImageId::from_handle(h))),
+            "chunk.upload" => req
+                .opt("handle")
+                .and_then(|h| h.as_str().ok())
+                .map(|h| SegmentId::Chunk(ChunkId::from_handle(h))),
+            _ => None,
+        };
+        if let Some(seg) = seg {
+            return (rr_from(shared.ring.owner(&ns, seg)), req);
+        }
+        // Generations: probe residency of the prompt's reuse spans.
+        if op == "infer" || op == "chat" {
+            let spans = req
+                .opt("text")
+                .and_then(|t| t.as_str().ok())
+                .map(|t| Prompt::parse(UserId(0), t).segment_ids())
+                .unwrap_or_default();
+            if !spans.is_empty() {
+                let bitmaps = probe_workers(shared, &ns, &spans, upstreams);
+                let scores = affinity_scores(spans.len(), &bitmaps);
+                let occupancy = shared.occupancy.lock().unwrap().clone();
+                let winner = choose_worker(&scores, &occupancy);
+                if scores[winner] > 0 {
+                    req.set("routed", Value::str("affinity"));
+                }
+                // Failover order: by descending score, winner first.
+                let mut order = rr_from(winner);
+                order.sort_by_key(|&w| (w != winner, std::cmp::Reverse(scores[w])));
+                return (order, req);
+            }
+        }
+    }
+    (rr_from(shared.rr.fetch_add(1, Ordering::Relaxed) % n), req)
+}
+
+/// One `kv.probe` per worker over the request's spans. A worker that
+/// cannot be probed scores an all-false bitmap (it can still serve the
+/// request as a failover candidate).
+fn probe_workers(
+    shared: &Shared,
+    ns: &Namespace,
+    spans: &[SegmentId],
+    upstreams: &mut HashMap<usize, Client>,
+) -> Vec<Vec<bool>> {
+    let keys = Value::arr(
+        spans
+            .iter()
+            .map(|&seg| {
+                let kind = match seg {
+                    SegmentId::Image(_) => "image",
+                    SegmentId::Chunk(_) => "chunk",
+                };
+                let mut k = Value::obj(vec![
+                    ("kind", Value::str(kind)),
+                    ("segment", Value::str(format!("{:016x}", seg.raw()))),
+                ]);
+                if !ns.is_default() {
+                    k.set("ns", Value::str(ns.as_str()));
+                }
+                k
+            })
+            .collect(),
+    );
+    let req = Value::obj(vec![
+        ("v", Value::num(3.0)),
+        ("op", Value::str("kv.probe")),
+        ("id", Value::str("route")),
+        ("keys", keys),
+    ]);
+    (0..shared.cfg.workers.len())
+        .map(|w| match probe_one(shared, w, &req, upstreams) {
+            Ok(bm) => bm,
+            Err(e) => {
+                log::debug!("router: probe of worker {w} failed: {e}");
+                upstreams.remove(&w);
+                vec![false; spans.len()]
+            }
+        })
+        .collect()
+}
+
+/// One probe round-trip against one worker, under the probe deadline.
+fn probe_one(
+    shared: &Shared,
+    w: usize,
+    req: &Value,
+    upstreams: &mut HashMap<usize, Client>,
+) -> Result<Vec<bool>> {
+    let c = upstream(shared, w, upstreams)?;
+    c.set_read_deadline(Some(shared.cfg.probe_timeout))?;
+    let resp = c.call(req);
+    c.set_read_deadline(None)?;
+    let resp = resp?;
+    anyhow::ensure!(resp.get("ok")?.as_bool()?, "probe rejected");
+    Ok(resp.get("bitmap")?.as_arr()?.iter().map(|b| b.as_bool().unwrap_or(false)).collect())
+}
+
+/// The cached upstream client for worker `w`, connecting if needed.
+fn upstream<'a>(
+    shared: &Shared,
+    w: usize,
+    upstreams: &'a mut HashMap<usize, Client>,
+) -> Result<&'a mut Client> {
+    match upstreams.entry(w) {
+        std::collections::hash_map::Entry::Occupied(e) => Ok(e.into_mut()),
+        std::collections::hash_map::Entry::Vacant(e) => {
+            let mut c = Client::connect_timeout(shared.cfg.workers[w], shared.cfg.probe_timeout)?;
+            // Forwarded generations stream with unbounded decode gaps.
+            c.set_read_deadline(None)?;
+            Ok(e.insert(c))
+        }
+    }
+}
+
+/// Forward one request to worker `w` and proxy every reply line verbatim
+/// until the terminal (non-chunk) line.
+fn forward(
+    shared: &Shared,
+    w: usize,
+    upstreams: &mut HashMap<usize, Client>,
+    req: &Value,
+    writer: &mut TcpStream,
+    wrote: &mut bool,
+) -> Result<()> {
+    let c = upstream(shared, w, upstreams)?;
+    c.send(req)?;
+    loop {
+        let line = c.recv().map_err(|e| {
+            if e.downcast_ref::<PeerUnreachable>().is_some() {
+                e
+            } else {
+                e.context(format!("worker {w} reply stream"))
+            }
+        })?;
+        write_line(writer, &line)?;
+        *wrote = true;
+        let is_chunk = line.opt("stream").and_then(|s| s.as_bool().ok()).unwrap_or(false);
+        if !is_chunk {
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A scripted worker: answers `kv.probe` with a fixed bitmap and every
+    /// other op with `{ok, id, worker: idx}` (+ an optional leading chunk
+    /// line), so tests can see *which* worker served and that chunk lines
+    /// proxy through.
+    fn fake_worker(idx: usize, resident: Vec<bool>, chunk_first: bool) -> SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { break };
+                let resident = resident.clone();
+                std::thread::spawn(move || {
+                    let mut w = stream.try_clone().unwrap();
+                    let r = BufReader::new(stream);
+                    for line in r.lines() {
+                        let Ok(line) = line else { break };
+                        let req = Value::parse(&line).unwrap();
+                        let id = req.opt("id").cloned().unwrap_or(Value::Null);
+                        let op = req.opt("op").and_then(|o| o.as_str().ok()).unwrap_or("");
+                        let mut out = String::new();
+                        if op == "kv.probe" {
+                            let n = req.get("keys").unwrap().as_arr().unwrap().len();
+                            let bits: Vec<Value> = (0..n)
+                                .map(|i| Value::Bool(resident.get(i).copied().unwrap_or(false)))
+                                .collect();
+                            let resp = Value::obj(vec![
+                                ("ok", Value::Bool(true)),
+                                ("id", id),
+                                ("bitmap", Value::arr(bits)),
+                            ]);
+                            out.push_str(&resp.encode());
+                            out.push('\n');
+                        } else {
+                            if chunk_first && op == "infer" {
+                                let chunk = Value::obj(vec![
+                                    ("ok", Value::Bool(true)),
+                                    ("id", id.clone()),
+                                    ("stream", Value::Bool(true)),
+                                    ("seq", Value::num(0.0)),
+                                ]);
+                                out.push_str(&chunk.encode());
+                                out.push('\n');
+                            }
+                            let mut resp = Value::obj(vec![
+                                ("ok", Value::Bool(true)),
+                                ("id", id),
+                                ("worker", Value::num(idx as f64)),
+                            ]);
+                            if let Some(routed) = req.opt("routed") {
+                                resp.set("routed_seen", routed.clone());
+                            }
+                            out.push_str(&resp.encode());
+                            out.push('\n');
+                        }
+                        if w.write_all(out.as_bytes()).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        addr
+    }
+
+    fn start_router(cfg: RouterConfig) -> SocketAddr {
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            serve_router(cfg, "127.0.0.1:0", |a| tx.send(a).unwrap()).unwrap();
+        });
+        rx.recv().unwrap()
+    }
+
+    fn fast_cfg(workers: Vec<SocketAddr>) -> RouterConfig {
+        RouterConfig {
+            workers,
+            mode: RouteMode::Affinity,
+            probe_timeout: Duration::from_millis(300),
+            stats_interval: Duration::from_millis(60_000), // poller idle in tests
+        }
+    }
+
+    #[test]
+    fn generation_routes_to_span_owner_and_is_stamped() {
+        // Worker 1 owns the span; the reply must come from worker 1 and
+        // the forwarded request must carry the affinity stamp.
+        let w0 = fake_worker(0, vec![false], false);
+        let w1 = fake_worker(1, vec![true], true);
+        let router = start_router(fast_cfg(vec![w0, w1]));
+        let mut c = Client::connect(router).unwrap();
+        let req = Value::parse(
+            r#"{"v":3,"id":"g","op":"infer","user":1,"text":"describe IMAGE#A","stream":true}"#,
+        )
+        .unwrap();
+        let mut chunks = 0;
+        let done = c.call_stream(&req, |_| chunks += 1).unwrap();
+        assert_eq!(done.get("worker").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(done.get("routed_seen").unwrap().as_str().unwrap(), "affinity");
+        assert_eq!(chunks, 1, "chunk lines must proxy through verbatim");
+        // A spanless op round-robins and is never stamped.
+        let stats = c
+            .call(&Value::parse(r#"{"op":"infer","id":"s","user":1,"text":"hello"}"#).unwrap())
+            .unwrap();
+        assert!(stats.opt("routed_seen").is_none());
+        let _ = c.call(&Value::parse(r#"{"op":"shutdown","id":"x"}"#).unwrap());
+    }
+
+    #[test]
+    fn uploads_land_on_the_ring_owner_deterministically() {
+        let w0 = fake_worker(0, vec![], false);
+        let w1 = fake_worker(1, vec![], false);
+        let router = start_router(fast_cfg(vec![w0, w1]));
+        let ring = HashRing::new(2);
+        let mut c = Client::connect(router).unwrap();
+        for handle in ["IMAGE#A", "IMAGE#B", "IMAGE#C", "IMAGE#D"] {
+            let seg = SegmentId::Image(ImageId::from_handle(handle));
+            let want = ring.owner(&Namespace::default(), seg);
+            let req = Value::obj(vec![
+                ("op", Value::str("upload")),
+                ("id", Value::str(handle)),
+                ("user", Value::num(1.0)),
+                ("handle", Value::str(handle)),
+            ]);
+            let resp = c.call(&req).unwrap();
+            assert_eq!(
+                resp.get("worker").unwrap().as_f64().unwrap(),
+                want as f64,
+                "upload {handle} must land on its ring owner"
+            );
+        }
+        let _ = c.call(&Value::parse(r#"{"op":"shutdown","id":"x"}"#).unwrap());
+    }
+
+    #[test]
+    fn dead_worker_re_routes_to_next_candidate() {
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let live = fake_worker(1, vec![false], false);
+        // Round-robin mode so every request starts from the rr cursor —
+        // some of them will prefer the dead worker first.
+        let mut cfg = fast_cfg(vec![dead, live]);
+        cfg.mode = RouteMode::RoundRobin;
+        let router = start_router(cfg);
+        let mut c = Client::connect(router).unwrap();
+        for i in 0..4 {
+            let req = Value::obj(vec![
+                ("op", Value::str("ping")),
+                ("id", Value::str(format!("p{i}"))),
+            ]);
+            let resp = c.call(&req).unwrap();
+            assert!(resp.get("ok").unwrap().as_bool().unwrap(), "re-route must succeed: {resp:?}");
+            assert_eq!(resp.get("worker").unwrap().as_f64().unwrap(), 1.0);
+        }
+        let _ = c.call(&Value::parse(r#"{"op":"shutdown","id":"x"}"#).unwrap());
+    }
+}

@@ -1,0 +1,450 @@
+//! `PeerTransport` — the remote tier behind [`crate::kv::Transport`].
+//!
+//! Speaks the worker wire protocol's peer KV lane: `kv.probe` for a
+//! residency bitmap, `kv.pull` for the base64-framed v4 container. The
+//! container bytes cross the wire exactly as they sit on the serving
+//! worker's disk — framing is the only transformation, there is no
+//! decode/re-encode cycle on the sender.
+//!
+//! Failure posture (a flapping peer must cost latency once, never stall
+//! prefill):
+//!
+//! * every connect and read carries [`PeerConfig::timeout`];
+//! * one retry with backoff per pull, then the peer is marked dead for
+//!   [`PeerConfig::dead_ttl`];
+//! * negative probes are cached for [`PeerConfig::negative_ttl`], so a
+//!   repeated miss does not re-probe every request.
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context};
+
+use crate::coordinator::metrics::ClusterCounters;
+use crate::kv::{KvKey, Transport};
+use crate::mm::{ChunkId, ImageId, Namespace, SegmentId};
+use crate::server::Client;
+use crate::util::json::Value;
+use crate::Result;
+
+/// Tunables for the peer lane.
+#[derive(Debug, Clone)]
+pub struct PeerConfig {
+    /// Connect + read deadline per peer call.
+    pub timeout: Duration,
+    /// Backoff before the single pull retry.
+    pub retry_backoff: Duration,
+    /// How long a negative probe (peer does not have the key) is trusted.
+    pub negative_ttl: Duration,
+    /// How long a peer that failed twice is skipped entirely.
+    pub dead_ttl: Duration,
+}
+
+impl Default for PeerConfig {
+    fn default() -> Self {
+        PeerConfig {
+            timeout: Duration::from_millis(500),
+            retry_backoff: Duration::from_millis(100),
+            negative_ttl: Duration::from_secs(2),
+            dead_ttl: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Serialise one key for the `kv.probe`/`kv.pull` wire: kind + zero-padded
+/// hex id + (non-default) namespace. The model travels once per request.
+pub fn key_to_wire(key: &KvKey) -> Value {
+    let kind = match key.seg {
+        SegmentId::Image(_) => "image",
+        SegmentId::Chunk(_) => "chunk",
+    };
+    let mut v = Value::obj(vec![
+        ("kind", Value::str(kind)),
+        ("segment", Value::str(format!("{:016x}", key.seg.raw()))),
+    ]);
+    if !key.ns.is_default() {
+        v.set("ns", Value::str(key.ns.as_str()));
+    }
+    v
+}
+
+/// Parse one wire key back into a [`KvKey`] under the given model (the
+/// serving side of [`key_to_wire`]).
+pub fn wire_to_key(model: &str, v: &Value) -> Result<KvKey> {
+    let kind = v.get("kind")?.as_str()?.to_string();
+    let raw = u64::from_str_radix(v.get("segment")?.as_str()?, 16)
+        .context("bad segment hex in wire key")?;
+    let seg = match kind.as_str() {
+        "image" => SegmentId::Image(ImageId(raw)),
+        "chunk" => SegmentId::Chunk(ChunkId(raw)),
+        other => return Err(anyhow!("unknown segment kind {other:?}")),
+    };
+    let ns = match v.opt("ns").and_then(|n| n.as_str().ok()) {
+        Some(s) if !s.is_empty() => Namespace::new(s)?,
+        _ => Namespace::default(),
+    };
+    Ok(KvKey::segment(model, &ns, seg))
+}
+
+/// The peer-to-peer KV transport: a list of worker addresses tried in
+/// key-rotated order, with timeouts, retry, and probe caching.
+pub struct PeerTransport {
+    peers: Vec<SocketAddr>,
+    cfg: PeerConfig,
+    counters: Arc<ClusterCounters>,
+    /// `(peer, key) → trusted-until` for probes that came back negative.
+    negative: Mutex<HashMap<(SocketAddr, KvKey), Instant>>,
+    /// `peer → skip-until` for peers that failed connect/call twice.
+    dead_until: Mutex<HashMap<SocketAddr, Instant>>,
+}
+
+impl PeerTransport {
+    pub fn new(
+        peers: Vec<SocketAddr>,
+        cfg: PeerConfig,
+        counters: Arc<ClusterCounters>,
+    ) -> PeerTransport {
+        PeerTransport {
+            peers,
+            cfg,
+            counters,
+            negative: Mutex::new(HashMap::new()),
+            dead_until: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn peers(&self) -> &[SocketAddr] {
+        &self.peers
+    }
+
+    fn peer_dead(&self, peer: SocketAddr) -> bool {
+        let now = Instant::now();
+        let mut g = self.dead_until.lock().unwrap();
+        match g.get(&peer) {
+            Some(&until) if until > now => true,
+            Some(_) => {
+                g.remove(&peer);
+                false
+            }
+            None => false,
+        }
+    }
+
+    fn mark_dead(&self, peer: SocketAddr) {
+        self.counters.peer_timeouts.fetch_add(1, Ordering::Relaxed);
+        self.dead_until.lock().unwrap().insert(peer, Instant::now() + self.cfg.dead_ttl);
+    }
+
+    fn negative_cached(&self, peer: SocketAddr, key: &KvKey) -> bool {
+        let now = Instant::now();
+        let mut g = self.negative.lock().unwrap();
+        match g.get(&(peer, key.clone())) {
+            Some(&until) if until > now => true,
+            Some(_) => {
+                g.remove(&(peer, key.clone()));
+                false
+            }
+            None => false,
+        }
+    }
+
+    fn cache_negative(&self, peer: SocketAddr, key: &KvKey) {
+        let mut g = self.negative.lock().unwrap();
+        // Bound the cache: prune lapsed entries once it grows.
+        if g.len() > 4096 {
+            let now = Instant::now();
+            g.retain(|_, &mut until| until > now);
+        }
+        g.insert((peer, key.clone()), Instant::now() + self.cfg.negative_ttl);
+    }
+
+    /// One `kv.probe` round-trip against one peer.
+    fn probe_peer(&self, peer: SocketAddr, keys: &[KvKey]) -> Result<Vec<bool>> {
+        let mut c = Client::connect_timeout(peer, self.cfg.timeout)?;
+        self.counters.peer_probes.fetch_add(1, Ordering::Relaxed);
+        let req = Value::obj(vec![
+            ("v", Value::num(3.0)),
+            ("op", Value::str("kv.probe")),
+            ("id", Value::str(format!("probe-{}", std::process::id()))),
+            ("model", Value::str(keys[0].model.as_str())),
+            ("keys", Value::arr(keys.iter().map(key_to_wire).collect())),
+        ]);
+        let resp = c.call(&req)?;
+        if !resp.get("ok")?.as_bool()? {
+            return Err(anyhow!("kv.probe rejected: {}", resp.encode()));
+        }
+        let bitmap = resp
+            .get("bitmap")?
+            .as_arr()?
+            .iter()
+            .map(|b| b.as_bool().unwrap_or(false))
+            .collect::<Vec<_>>();
+        if bitmap.len() != keys.len() {
+            return Err(anyhow!("kv.probe bitmap has {} of {} bits", bitmap.len(), keys.len()));
+        }
+        Ok(bitmap)
+    }
+
+    /// One `kv.pull` round-trip (no retry here; `pull` owns the retry).
+    fn pull_peer(&self, peer: SocketAddr, key: &KvKey) -> Result<Option<Vec<u8>>> {
+        let mut c = Client::connect_timeout(peer, self.cfg.timeout)?;
+        let mut req = Value::obj(vec![
+            ("v", Value::num(3.0)),
+            ("op", Value::str("kv.pull")),
+            ("id", Value::str(format!("pull-{}", std::process::id()))),
+            ("model", Value::str(key.model.as_str())),
+        ]);
+        // Flatten the key fields into the envelope (single-key op).
+        if let (Value::Obj(req_m), Value::Obj(key_m)) = (&mut req, key_to_wire(key)) {
+            req_m.extend(key_m);
+        }
+        let resp = c.call(&req)?;
+        if !resp.get("ok")?.as_bool()? {
+            let code = resp.opt("code").and_then(|c| c.as_str().ok()).unwrap_or("");
+            if code == "not_found" {
+                return Ok(None);
+            }
+            return Err(anyhow!("kv.pull rejected: {}", resp.encode()));
+        }
+        let frame = resp.get("frame")?.as_str()?;
+        let bytes = crate::kv::codec::unframe(frame)?;
+        self.counters.peer_pulls.fetch_add(1, Ordering::Relaxed);
+        self.counters.peer_pull_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        Ok(Some(bytes))
+    }
+
+    /// Rotate the peer order by key so different keys spread their first
+    /// choice across the cluster instead of hammering peer 0.
+    fn peer_order(&self, key: &KvKey) -> impl Iterator<Item = SocketAddr> + '_ {
+        let n = self.peers.len();
+        let start = if n == 0 {
+            0
+        } else {
+            (crate::util::rng::fnv1a(&key.seg.raw().to_le_bytes()) % n as u64) as usize
+        };
+        (0..n).map(move |i| self.peers[(start + i) % n])
+    }
+}
+
+impl Transport for PeerTransport {
+    fn probe(&self, keys: &[KvKey]) -> Vec<bool> {
+        let mut out = vec![false; keys.len()];
+        if keys.is_empty() {
+            return out;
+        }
+        for &peer in &self.peers {
+            if self.peer_dead(peer) {
+                continue;
+            }
+            match self.probe_peer(peer, keys) {
+                Ok(bitmap) => {
+                    for (slot, bit) in out.iter_mut().zip(&bitmap) {
+                        *slot |= bit;
+                    }
+                }
+                Err(e) => {
+                    log::debug!("cluster: probe of {peer} failed: {e}");
+                    self.mark_dead(peer);
+                }
+            }
+        }
+        out
+    }
+
+    fn pull(&self, key: &KvKey) -> Result<Option<Vec<u8>>> {
+        for peer in self.peer_order(key) {
+            if self.peer_dead(peer) || self.negative_cached(peer, key) {
+                continue;
+            }
+            // Probe first: a pull moves megabytes, a probe moves a line.
+            match self.probe_peer(peer, std::slice::from_ref(key)) {
+                Ok(bitmap) if !bitmap[0] => {
+                    self.cache_negative(peer, key);
+                    continue;
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    log::debug!("cluster: probe of {peer} failed: {e}");
+                    self.mark_dead(peer);
+                    continue;
+                }
+            }
+            // Pull, with one retry after backoff (the peer just answered
+            // the probe, so a transient hiccup is worth one more try).
+            for attempt in 0..2 {
+                match self.pull_peer(peer, key) {
+                    Ok(got) => return Ok(got),
+                    Err(e) if attempt == 0 => {
+                        log::debug!("cluster: pull from {peer} failed (will retry): {e}");
+                        std::thread::sleep(self.cfg.retry_backoff);
+                    }
+                    Err(e) => {
+                        log::debug!("cluster: pull from {peer} failed twice: {e}");
+                        self.mark_dead(peer);
+                    }
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    fn name(&self) -> &'static str {
+        "peer"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::test_entry;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpListener;
+
+    fn counters() -> Arc<ClusterCounters> {
+        Arc::new(ClusterCounters::default())
+    }
+
+    fn fast_cfg() -> PeerConfig {
+        PeerConfig {
+            timeout: Duration::from_millis(200),
+            retry_backoff: Duration::from_millis(10),
+            negative_ttl: Duration::from_millis(500),
+            dead_ttl: Duration::from_millis(500),
+        }
+    }
+
+    #[test]
+    fn wire_key_roundtrip() {
+        let ns = Namespace::new("tenant-a").unwrap();
+        for key in [
+            KvKey::image("m", ImageId(7)),
+            KvKey::chunk("m", ChunkId(u64::MAX)),
+            KvKey::segment("m", &ns, SegmentId::Image(ImageId(0))),
+        ] {
+            let back = wire_to_key("m", &key_to_wire(&key)).unwrap();
+            assert_eq!(back, key);
+        }
+        assert!(wire_to_key("m", &Value::obj(vec![("kind", Value::str("blob"))])).is_err());
+    }
+
+    /// A scripted single-threaded fake worker: answers `kv.probe` with the
+    /// given bitmap and `kv.pull` with the given frame, over the real
+    /// JSON-lines protocol. No engine, no artifacts.
+    fn fake_worker(resident: bool, container: Option<Vec<u8>>) -> SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { break };
+                let mut writer = stream.try_clone().unwrap();
+                let reader = BufReader::new(stream);
+                for line in reader.lines() {
+                    let Ok(line) = line else { break };
+                    let req = Value::parse(&line).unwrap();
+                    let op = req.get("op").unwrap().as_str().unwrap().to_string();
+                    let id = req.get("id").unwrap().clone();
+                    let resp = match op.as_str() {
+                        "kv.probe" => {
+                            let n = req.get("keys").unwrap().as_arr().unwrap().len();
+                            Value::obj(vec![
+                                ("ok", Value::Bool(true)),
+                                ("id", id),
+                                ("bitmap", Value::arr(vec![Value::Bool(resident); n])),
+                            ])
+                        }
+                        "kv.pull" => match &container {
+                            Some(bytes) => Value::obj(vec![
+                                ("ok", Value::Bool(true)),
+                                ("id", id),
+                                ("frame", Value::str(crate::kv::codec::frame(bytes))),
+                                ("bytes", Value::num(bytes.len() as f64)),
+                            ]),
+                            None => Value::obj(vec![
+                                ("ok", Value::Bool(false)),
+                                ("id", id),
+                                ("code", Value::str("not_found")),
+                                ("error", Value::str("no such entry")),
+                            ]),
+                        },
+                        _ => Value::obj(vec![("ok", Value::Bool(false)), ("id", id)]),
+                    };
+                    writer.write_all(resp.encode().as_bytes()).unwrap();
+                    writer.write_all(b"\n").unwrap();
+                }
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn pulls_container_from_resident_peer() {
+        let e = test_entry(11, 8);
+        let container = crate::kv::codec::encode(&e).unwrap();
+        let addr = fake_worker(true, Some(container.clone()));
+        let ctr = counters();
+        let t = PeerTransport::new(vec![addr], fast_cfg(), Arc::clone(&ctr));
+        let got = t.pull(&e.key).unwrap().expect("peer had the container");
+        assert_eq!(got, container);
+        assert_eq!(ctr.peer_pulls.load(Ordering::Relaxed), 1);
+        assert_eq!(ctr.peer_pull_bytes.load(Ordering::Relaxed), container.len() as u64);
+        assert!(ctr.peer_probes.load(Ordering::Relaxed) >= 1);
+        assert_eq!(ctr.peer_timeouts.load(Ordering::Relaxed), 0);
+        assert_eq!(t.probe(std::slice::from_ref(&e.key)), vec![true]);
+    }
+
+    #[test]
+    fn negative_probe_is_cached() {
+        let addr = fake_worker(false, None);
+        let ctr = counters();
+        let t = PeerTransport::new(vec![addr], fast_cfg(), Arc::clone(&ctr));
+        let key = KvKey::image("m", ImageId(1));
+        assert!(t.pull(&key).unwrap().is_none());
+        let probes_after_first = ctr.peer_probes.load(Ordering::Relaxed);
+        assert_eq!(probes_after_first, 1);
+        // Within the negative TTL the peer is not contacted again.
+        assert!(t.pull(&key).unwrap().is_none());
+        assert_eq!(ctr.peer_probes.load(Ordering::Relaxed), probes_after_first);
+        // A different key probes fresh.
+        assert!(t.pull(&KvKey::image("m", ImageId(2))).unwrap().is_none());
+        assert_eq!(ctr.peer_probes.load(Ordering::Relaxed), probes_after_first + 1);
+    }
+
+    #[test]
+    fn dead_peer_times_out_once_then_skips() {
+        // A bound-but-dead port: the first pull pays the deadline and
+        // marks the peer dead; the second returns immediately.
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let ctr = counters();
+        let t = PeerTransport::new(vec![dead], fast_cfg(), Arc::clone(&ctr));
+        let key = KvKey::image("m", ImageId(9));
+        assert!(t.pull(&key).unwrap().is_none());
+        assert_eq!(ctr.peer_timeouts.load(Ordering::Relaxed), 1);
+        let t0 = Instant::now();
+        assert!(t.pull(&key).unwrap().is_none());
+        assert!(
+            t0.elapsed() < Duration::from_millis(100),
+            "dead peer must be skipped, not re-dialled"
+        );
+        assert_eq!(ctr.peer_timeouts.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn live_peer_beats_dead_peer() {
+        let e = test_entry(21, 8);
+        let container = crate::kv::codec::encode(&e).unwrap();
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let live = fake_worker(true, Some(container.clone()));
+        let ctr = counters();
+        let t = PeerTransport::new(vec![dead, live], fast_cfg(), ctr);
+        assert_eq!(t.pull(&e.key).unwrap(), Some(container));
+    }
+}

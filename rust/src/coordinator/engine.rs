@@ -221,6 +221,14 @@ impl Engine {
         self.transfer.parallel = parallel;
     }
 
+    /// Install the remote tier behind local misses (cluster serving:
+    /// `mpic serve --peers` installs a [`crate::cluster::PeerTransport`]
+    /// here). The engine stays cluster-agnostic — it only sees the
+    /// [`crate::kv::Transport`] trait.
+    pub fn set_transport(&mut self, transport: std::sync::Arc<dyn crate::kv::Transport>) {
+        self.transfer.set_transport(transport);
+    }
+
     // ------------------------------------------------------------------
     // Upload path (workflow ①)
     // ------------------------------------------------------------------

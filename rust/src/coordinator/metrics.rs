@@ -6,16 +6,42 @@
 //! hits/wasted, chunked-codec parallelism) under `stats.metrics.kv`.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::util::json::Value;
 use crate::util::stats::Samples;
 
+/// Cluster-lane counters, surfaced under `stats.metrics.cluster`.
+///
+/// Atomics shared by `Arc` rather than folded into the metrics mutex: the
+/// peer transport increments them from the prefill path and from its
+/// probe/pull retry loops, where a lock shared with the snapshot path
+/// would be a contention point.
+#[derive(Default)]
+pub struct ClusterCounters {
+    /// `kv.probe` round-trips issued to peers.
+    pub peer_probes: AtomicU64,
+    /// Containers successfully pulled from a peer (local miss, no
+    /// recompute).
+    pub peer_pulls: AtomicU64,
+    /// Total framed container bytes received over `kv.pull`.
+    pub peer_pull_bytes: AtomicU64,
+    /// Peer connects/calls that timed out or failed (after retry).
+    pub peer_timeouts: AtomicU64,
+    /// Requests the router forwarded here because this worker owned the
+    /// most reuse spans (stamped `"routed":"affinity"` on the envelope).
+    pub routed_affinity_hits: AtomicU64,
+}
+
 /// Aggregated engine metrics. Interior-mutable so the (single-threaded)
 /// engine and the (multi-threaded) server can both record.
 pub struct Metrics {
     inner: Mutex<Inner>,
+    /// Shared with the installed `PeerTransport` (if any) and the serving
+    /// pipeline's routed-request accounting.
+    cluster: Arc<ClusterCounters>,
 }
 
 struct Inner {
@@ -45,9 +71,17 @@ struct Inner {
     async_uploads: u64,
     /// Generations aborted through `infer.cancel`.
     cancelled: u64,
+    /// Weighted requests in flight *right now* (live gate depth). Unlike
+    /// `queue_depth` (a per-round sample series) this is a gauge the
+    /// cluster router polls cheaply for occupancy tie-breaking.
+    inflight_now: u64,
     /// Latest KV-store hot-path counters (shard contention, prefetch
     /// lane, chunked codec), copied in from `KvStore::stats`.
     kv: crate::kv::StoreStats,
+    /// Unique keys the transfer engine had to *recompute* (cluster-wide
+    /// misses). Peer-served misses do not count — this is the number the
+    /// cluster e2e proof asserts stays at zero.
+    recomputes: u64,
 }
 
 impl Metrics {
@@ -70,9 +104,18 @@ impl Metrics {
                 overload_rejected: 0,
                 async_uploads: 0,
                 cancelled: 0,
+                inflight_now: 0,
                 kv: crate::kv::StoreStats::default(),
+                recomputes: 0,
             }),
+            cluster: Arc::new(ClusterCounters::default()),
         }
+    }
+
+    /// The cluster-lane counters, for sharing with a `PeerTransport` and
+    /// the serving pipeline.
+    pub fn cluster(&self) -> &Arc<ClusterCounters> {
+        &self.cluster
     }
 
     pub fn record_request(&self, r: &super::engine::InferenceResult) {
@@ -83,6 +126,7 @@ impl Metrics {
         g.ttft_exec.push(r.ttft.exec.total_s());
         g.requests += 1;
         g.tokens_out += r.tokens.len() as u64;
+        g.recomputes += r.transfer.misses as u64;
     }
 
     pub fn record_decode_step(&self, secs: f64) {
@@ -116,11 +160,18 @@ impl Metrics {
     /// Publish the pipeline's monotonic counters (kept by the gate, the
     /// upload lane and the cancellation path, copied in by the engine
     /// loop).
-    pub fn set_pipeline_counters(&self, overload_rejected: u64, async_uploads: u64, cancelled: u64) {
+    pub fn set_pipeline_counters(
+        &self,
+        overload_rejected: u64,
+        async_uploads: u64,
+        cancelled: u64,
+        inflight_now: u64,
+    ) {
         let mut g = self.inner.lock().unwrap();
         g.overload_rejected = overload_rejected;
         g.async_uploads = async_uploads;
         g.cancelled = cancelled;
+        g.inflight_now = inflight_now;
     }
 
     /// Publish the KV store's hot-path counters (sharding, prefetch,
@@ -175,6 +226,7 @@ impl Metrics {
             ("rejected_overloaded", Value::num(g.overload_rejected as f64)),
             ("async_uploads", Value::num(g.async_uploads as f64)),
             ("cancelled", Value::num(g.cancelled as f64)),
+            ("inflight_now", Value::num(g.inflight_now as f64)),
         ]);
         let n = Value::num;
         let kv = Value::obj(vec![
@@ -196,6 +248,16 @@ impl Metrics {
             ("leases_released", n(g.kv.leases_released as f64)),
             ("lease_expirations", n(g.kv.lease_expirations as f64)),
         ]);
+        let c = &self.cluster;
+        let a = |x: &AtomicU64| Value::num(x.load(Ordering::Relaxed) as f64);
+        let cluster = Value::obj(vec![
+            ("peer_probes", a(&c.peer_probes)),
+            ("peer_pulls", a(&c.peer_pulls)),
+            ("peer_pull_bytes", a(&c.peer_pull_bytes)),
+            ("peer_timeouts", a(&c.peer_timeouts)),
+            ("routed_affinity_hits", a(&c.routed_affinity_hits)),
+            ("recomputes", n(g.recomputes as f64)),
+        ]);
         Value::obj(vec![
             ("requests", Value::num(g.requests as f64)),
             ("tokens_out", Value::num(g.tokens_out as f64)),
@@ -208,6 +270,7 @@ impl Metrics {
             ("ops", ops),
             ("pipeline", pipeline),
             ("kv", kv),
+            ("cluster", cluster),
         ])
     }
 }
@@ -282,7 +345,7 @@ mod tests {
         m.record_admission_wait(0.004);
         m.record_pipeline_round(3, 5);
         m.record_pipeline_round(1, 2);
-        m.set_pipeline_counters(7, 2, 1);
+        m.set_pipeline_counters(7, 2, 1, 4);
         let snap = m.snapshot();
         let p = snap.get("pipeline").unwrap();
         assert_eq!(p.get("admission_wait_s").unwrap().get("n").unwrap().as_f64().unwrap(), 2.0);
@@ -294,6 +357,7 @@ mod tests {
         assert_eq!(p.get("rejected_overloaded").unwrap().as_f64().unwrap(), 7.0);
         assert_eq!(p.get("async_uploads").unwrap().as_f64().unwrap(), 2.0);
         assert_eq!(p.get("cancelled").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(p.get("inflight_now").unwrap().as_f64().unwrap(), 4.0);
     }
 
     #[test]
@@ -319,6 +383,27 @@ mod tests {
         assert_eq!(k.get("prefetch_wasted").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(k.get("codec_chunks").unwrap().as_f64().unwrap(), 40.0);
         assert_eq!(k.get("codec_parallel_ops").unwrap().as_f64().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn cluster_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.cluster().peer_probes.fetch_add(3, Ordering::Relaxed);
+        m.cluster().peer_pulls.fetch_add(2, Ordering::Relaxed);
+        m.cluster().peer_pull_bytes.fetch_add(4096, Ordering::Relaxed);
+        m.cluster().peer_timeouts.fetch_add(1, Ordering::Relaxed);
+        m.cluster().routed_affinity_hits.fetch_add(5, Ordering::Relaxed);
+        let mut r = fake_result(0.2);
+        r.transfer.misses = 2;
+        m.record_request(&r);
+        let snap = m.snapshot();
+        let c = snap.get("cluster").unwrap();
+        assert_eq!(c.get("peer_probes").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(c.get("peer_pulls").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(c.get("peer_pull_bytes").unwrap().as_f64().unwrap(), 4096.0);
+        assert_eq!(c.get("peer_timeouts").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(c.get("routed_affinity_hits").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(c.get("recomputes").unwrap().as_f64().unwrap(), 2.0);
     }
 
     #[test]

@@ -83,11 +83,35 @@ pub fn chunk_count(payload_len: usize) -> usize {
     payload_len.div_ceil(CHUNK_SIZE).max(1)
 }
 
+/// Largest payload any container header may claim. Real entries are a few
+/// MB; the cap exists so a forged header cannot size a huge allocation.
+const MAX_PAYLOAD: usize = 1 << 31;
+
 /// Raw payload bytes of an entry with the given shape: emb (when present)
-/// plus K and V, f32.
-fn payload_bytes(shape: &KvShape, has_emb: bool) -> usize {
-    let emb = if has_emb { shape.emb_elems() } else { 0 };
-    (emb + 2 * shape.kv_elems()) * 4
+/// plus K and V, f32. Checked arithmetic throughout: the dims arrive as
+/// u32s off disk or the peer wire, so a forged or corrupted header must
+/// fail cleanly here instead of overflowing the multiply (a debug-build
+/// panic) or driving an absurd allocation downstream.
+fn payload_bytes(shape: &KvShape, has_emb: bool) -> Result<usize> {
+    let kv = shape
+        .layers
+        .checked_mul(shape.tokens)
+        .and_then(|n| n.checked_mul(shape.heads))
+        .and_then(|n| n.checked_mul(shape.d_head));
+    let emb = if has_emb { shape.tokens.checked_mul(shape.d_model) } else { Some(0) };
+    let total = match (kv, emb) {
+        (Some(kv), Some(emb)) => {
+            kv.checked_mul(2).and_then(|n| n.checked_add(emb)).and_then(|n| n.checked_mul(4))
+        }
+        _ => None,
+    };
+    match total {
+        Some(n) if n <= MAX_PAYLOAD => Ok(n),
+        _ => bail!(
+            "implausible KV shape [{} {} {} {} {}] (payload overflows or exceeds {MAX_PAYLOAD} bytes)",
+            shape.layers, shape.tokens, shape.heads, shape.d_head, shape.d_model
+        ),
+    }
 }
 
 /// Serialise an entry to bytes (v4, serial). See [`encode_with`].
@@ -311,7 +335,7 @@ fn decode_chunked_body(
 ) -> Result<(SegmentKv, CodecReport)> {
     let chunk_size = r.read_u32::<LittleEndian>()? as usize;
     let n_chunks = r.read_u32::<LittleEndian>()? as usize;
-    let expect_bytes = payload_bytes(&shape, has_emb);
+    let expect_bytes = payload_bytes(&shape, has_emb)?;
     if chunk_size == 0 || n_chunks == 0 || n_chunks > (1 << 20) {
         bail!("implausible chunk geometry ({n_chunks} chunks of {chunk_size})");
     }
@@ -404,14 +428,15 @@ fn decode_v1_body(
     let mut digest = [0u8; 32];
     std::io::Read::read_exact(&mut r, &mut digest)?;
     let offset = r.position() as usize;
-    let compressed = bytes
-        .get(offset..offset + payload_len)
-        .ok_or_else(|| anyhow!("truncated KV entry"))?;
+    let end = offset
+        .checked_add(payload_len)
+        .ok_or_else(|| anyhow!("implausible v1 payload length {payload_len}"))?;
+    let compressed = bytes.get(offset..end).ok_or_else(|| anyhow!("truncated KV entry"))?;
     let actual = Sha256::digest(compressed);
     if actual.as_slice() != digest {
         bail!("KV entry integrity failure (sha256 mismatch)");
     }
-    let expect = payload_bytes(&shape, true);
+    let expect = payload_bytes(&shape, true)?;
     let payload = zstd::bulk::decompress(compressed, expect).context("zstd decompress")?;
     if payload.len() != expect {
         bail!("payload is {} bytes, shape wants {}", payload.len(), expect);
@@ -459,6 +484,66 @@ fn check_chunk(comp: &[u8], digest: &[u8; 32], raw_len: usize, i: usize) -> Resu
         bail!("chunk {i} is {} bytes, expected {raw_len}", raw.len());
     }
     Ok(raw)
+}
+
+// ---------------------------------------------------------------------
+// Wire framing for the cluster peer lane
+// ---------------------------------------------------------------------
+//
+// `kv.pull` replies travel inside the JSON-lines wire protocol, so the
+// encoded container is framed as base64 text rather than raw bytes. The
+// container itself is NOT re-encoded: frame/unframe wrap the exact v4
+// bytes that sit on the serving worker's disk (hand-rolled — no base64
+// crate in this environment).
+
+const B64_ALPHABET: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Frame container bytes for a JSON reply line (standard base64 with
+/// padding).
+pub fn frame(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len().div_ceil(3) * 4);
+    for chunk in bytes.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = ((b[0] as u32) << 16) | ((b[1] as u32) << 8) | b[2] as u32;
+        for (i, shift) in [18u32, 12, 6, 0].iter().enumerate() {
+            if i <= chunk.len() {
+                out.push(B64_ALPHABET[((n >> shift) & 63) as usize] as char);
+            } else {
+                out.push('=');
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`frame`]. Rejects non-alphabet bytes and impossible
+/// lengths with a clean error (frames arrive off the network).
+pub fn unframe(s: &str) -> Result<Vec<u8>> {
+    let data: Vec<u8> = s.bytes().filter(|&b| b != b'=').collect();
+    if data.len() % 4 == 1 {
+        bail!("invalid base64 frame length {}", s.len());
+    }
+    let mut out = Vec::with_capacity(data.len() * 3 / 4 + 3);
+    let mut acc: u32 = 0;
+    let mut nbits = 0u32;
+    for &c in &data {
+        let v = match c {
+            b'A'..=b'Z' => c - b'A',
+            b'a'..=b'z' => c - b'a' + 26,
+            b'0'..=b'9' => c - b'0' + 52,
+            b'+' => 62,
+            b'/' => 63,
+            other => bail!("invalid base64 byte {other:#04x} in KV frame"),
+        };
+        acc = (acc << 6) | v as u32;
+        nbits += 6;
+        if nbits >= 8 {
+            nbits -= 8;
+            out.push((acc >> nbits) as u8);
+        }
+    }
+    Ok(out)
 }
 
 /// Legacy v1 writer — kept so compatibility tests can mint v1 entries and
@@ -705,6 +790,90 @@ mod tests {
                 } else {
                     Err("roundtrip mismatch".into())
                 }
+            },
+        );
+    }
+
+    #[test]
+    fn frame_roundtrip_edges() {
+        for bytes in [&b""[..], b"a", b"ab", b"abc", b"abcd", &[0u8, 255, 1, 254, 128]] {
+            let f = frame(bytes);
+            assert_eq!(unframe(&f).unwrap(), bytes, "frame {f:?}");
+        }
+        assert!(unframe("not base64!!").is_err());
+        assert!(unframe("A").is_err());
+    }
+
+    #[test]
+    fn property_frame_roundtrip() {
+        crate::util::prop::check(
+            "kv-codec-frame-roundtrip",
+            50,
+            |rng| (0..rng.below(200)).map(|_| rng.below(256) as u8).collect::<Vec<u8>>(),
+            |bytes| {
+                let back = unframe(&frame(bytes)).map_err(|x| x.to_string())?;
+                if &back == bytes {
+                    Ok(())
+                } else {
+                    Err("frame roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn rejects_forged_overflow_dims() {
+        // A header whose dims multiply past usize must fail cleanly, not
+        // panic: dims sit after magic+ver+mlen+model+nslen+ns+kind+id.
+        let e = test_entry(7, 8);
+        let mut bytes = encode(&e).unwrap();
+        let dims_off = 4 + 4 + 4 + e.key.model.len() + 4 + 1 + 8;
+        for b in &mut bytes[dims_off..dims_off + 20] {
+            *b = 0xFF;
+        }
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("implausible KV shape"), "{err}");
+    }
+
+    /// Satellite: containers now arrive off the network, so *every*
+    /// prefix of a valid container must decode to a clean whole-entry
+    /// error — never a panic or an over-read — and random single-byte
+    /// mutations must either error or produce a validate()-clean entry
+    /// (a mutation can land in zstd padding and decode identically).
+    #[test]
+    fn property_truncation_and_mutation_never_panic() {
+        crate::util::prop::check(
+            "kv-codec-hostile-buffers",
+            40,
+            |rng| {
+                let tokens = 1 + rng.below(24) as usize;
+                let e = if rng.bool(0.5) {
+                    test_entry(rng.next_u64(), tokens)
+                } else {
+                    test_chunk_entry(rng.next_u64(), tokens)
+                };
+                let container = match rng.below(3) {
+                    0 if matches!(e.key.seg, SegmentId::Image(_)) => encode_v1(&e).unwrap(),
+                    _ => encode(&e).unwrap(),
+                };
+                let cut = rng.below(container.len() as u64) as usize;
+                let flip_at = rng.below(container.len() as u64) as usize;
+                let flip_bits = 1 + rng.below(255) as u8;
+                (container, cut, flip_at, flip_bits)
+            },
+            |(container, cut, flip_at, flip_bits)| {
+                // Strict prefix: must be a clean Err.
+                if decode(&container[..*cut]).is_ok() {
+                    return Err(format!("prefix of {} bytes decoded", cut));
+                }
+                // Mutation: Err is expected; an accidental Ok must still
+                // be internally consistent (shape/lengths agree).
+                let mut mutated = container.clone();
+                mutated[*flip_at] ^= flip_bits;
+                if let Ok(back) = decode(&mutated) {
+                    back.validate().map_err(|e| format!("mutated decode invalid: {e}"))?;
+                }
+                Ok(())
             },
         );
     }

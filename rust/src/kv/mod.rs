@@ -43,7 +43,7 @@ pub use block::BlockAllocator;
 pub use store::{
     EntryInfo, EvictOutcome, KvStore, LeaseInfo, StoreConfig, StoreStats, SweepReport, Tier,
 };
-pub use transfer::{TransferEngine, TransferReport};
+pub use transfer::{LocalTransport, TransferEngine, TransferReport, Transport};
 
 /// Shape of one segment's KV entry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -501,6 +501,92 @@ impl KvStore {
         Ok(())
     }
 
+    /// The encoded v4 container for a live key, non-destructively — the
+    /// serving side of the cluster `kv.pull` lane. `put`/`put_arc` write
+    /// every entry through to disk, so a live key's container normally
+    /// already exists as bytes: host tier clones them, disk tier reads the
+    /// file (throttled like any disk load). The container is the wire
+    /// format — no re-encode happens on this path. A device-resident key
+    /// whose disk copy has aged out is re-encoded as a last resort.
+    pub fn container_bytes(&self, key: &KvKey) -> Option<Vec<u8>> {
+        let shard = self.shard(key);
+        let (disk_path, disk_bytes, device_kv) = {
+            let g = shard.lock();
+            if let Some(e) = g.host.get(key) {
+                return Some(e.bytes.clone());
+            }
+            if g.disk_live(key, self.cfg.ttl) {
+                let d = &g.disk[key];
+                (Some(d.path.clone()), d.bytes, None)
+            } else {
+                (None, 0, g.device.get(key).map(|e| Arc::clone(&e.kv)))
+            }
+        };
+        if let Some(path) = disk_path {
+            self.throttle(disk_bytes);
+            match std::fs::read(&path) {
+                Ok(bytes) => return Some(bytes),
+                Err(e) => {
+                    log::warn!("kv container read failed for {key:?}: {e}");
+                    return None;
+                }
+            }
+        }
+        let kv = device_kv?;
+        codec::encode_with(&kv, self.codec_pool()).ok().map(|(bytes, _)| bytes)
+    }
+
+    /// Admit a container pulled from a peer (the receiving side of
+    /// `kv.pull`). The bytes are decoded once — which verifies every
+    /// chunk digest and that the container really is `expected` — then
+    /// written to disk **as received** (tmp+rename, like `put_arc`) and
+    /// made device-resident. No re-encode: the peer's bytes are the
+    /// canonical container, end to end.
+    pub fn admit_container(&self, expected: &KvKey, bytes: Vec<u8>) -> Result<Arc<SegmentKv>> {
+        let (kv, rep) = codec::decode_with(&bytes, self.codec_pool())?;
+        anyhow::ensure!(
+            &kv.key == expected,
+            "peer container holds {:?}, expected {:?}",
+            kv.key,
+            expected
+        );
+        kv.validate()?;
+        let kv = Arc::new(kv);
+
+        let path = self.cfg.disk_dir.join(format!("{}.mpkv", kv.key.file_stem()));
+        let tmp = self.cfg.disk_dir.join(format!(
+            "{}.mpkv.tmp-{}",
+            kv.key.file_stem(),
+            self.tmp_counter.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+
+        let shard = self.shard(&kv.key);
+        let mut g = shard.lock();
+        g.stats.record_codec(rep);
+        g.clock += 1;
+        let clock = g.clock;
+        let key = kv.key.clone();
+        let nbytes = kv.bytes();
+        g.disk.insert(
+            key.clone(),
+            DiskEntry { path, written_at: Instant::now(), bytes: bytes.len() },
+        );
+        // Like a re-upload: any stale host copy must not outlive this admit.
+        g.drop_host(&key);
+        g.prefetched.remove(&key);
+        if let Some(old) =
+            g.device.insert(key, DeviceEntry { kv: Arc::clone(&kv), last_used: clock })
+        {
+            g.device_bytes -= old.kv.bytes();
+        }
+        g.device_bytes += nbytes;
+        self.evict_locked(&mut g);
+        Ok(kv)
+    }
+
     /// Whether the key exists in any non-expired tier (no promotion).
     /// Pinned entries never count as expired.
     pub fn contains(&self, key: &KvKey) -> bool {

@@ -34,6 +34,45 @@ use super::{KvKey, SegmentKv};
 use crate::util::threadpool::{ThreadPool, WaitGroup};
 use crate::Result;
 
+/// Where a store tier's bytes come from when the local tiers miss. The
+/// local fetch path stays byte-for-byte unchanged behind
+/// [`LocalTransport`]; a cluster deployment installs a `PeerTransport`
+/// (see `crate::cluster`) that speaks the v4 codec container over TCP —
+/// the container already *is* the wire format, so a peer pull is
+/// read-from-disk → frame → send, with no re-encode on either side.
+pub trait Transport: Send + Sync {
+    /// Residency bitmap: `out[i]` is true when some remote tier could
+    /// serve `keys[i]` right now. Best effort — a stale `true` costs one
+    /// failed pull, a stale `false` costs one recompute.
+    fn probe(&self, keys: &[KvKey]) -> Vec<bool>;
+
+    /// Pull one key's encoded container bytes. `Ok(None)` means no remote
+    /// tier has it (fall through to compute); `Err` means the transport
+    /// itself failed (also falls through, after logging).
+    fn pull(&self, key: &KvKey) -> Result<Option<Vec<u8>>>;
+
+    /// Short name for logs and stats.
+    fn name(&self) -> &'static str;
+}
+
+/// The in-process default: no remote tiers, every miss goes straight to
+/// compute — today's single-worker fetch path, unchanged.
+pub struct LocalTransport;
+
+impl Transport for LocalTransport {
+    fn probe(&self, keys: &[KvKey]) -> Vec<bool> {
+        vec![false; keys.len()]
+    }
+
+    fn pull(&self, _key: &KvKey) -> Result<Option<Vec<u8>>> {
+        Ok(None)
+    }
+
+    fn name(&self) -> &'static str {
+        "local"
+    }
+}
+
 /// Outcome + timing of one fetch batch. Hit/miss counters are per
 /// *unique* key; `n_segments` counts the spans requested.
 #[derive(Debug, Clone, Default)]
@@ -45,6 +84,10 @@ pub struct TransferReport {
     pub device_hits: usize,
     pub host_hits: usize,
     pub disk_hits: usize,
+    /// Local misses served by a peer's cache over the transport (no
+    /// recompute happened for these).
+    pub peer_hits: usize,
+    /// Local misses that fell through to `compute` (the recompute count).
     pub misses: usize,
     /// Wall time of the load lane (pool-parallel).
     pub load_s: f64,
@@ -68,6 +111,8 @@ pub struct TransferEngine {
     /// When false, loads and computes run serially (ablation mode — the
     /// "two-step" storage path the paper improves upon).
     pub parallel: bool,
+    /// Remote source for local misses ([`LocalTransport`] by default).
+    transport: Arc<dyn Transport>,
     /// Prefetch promotions currently running on the pool (bounds the lane
     /// so warming can never starve demand loads).
     prefetch_inflight: Arc<AtomicUsize>,
@@ -80,6 +125,7 @@ impl TransferEngine {
         TransferEngine {
             pool,
             parallel: true,
+            transport: Arc::new(LocalTransport),
             prefetch_inflight: Arc::new(AtomicUsize::new(0)),
             prefetch_submitted: AtomicU64::new(0),
         }
@@ -87,6 +133,36 @@ impl TransferEngine {
 
     pub fn serial(pool: Arc<ThreadPool>) -> TransferEngine {
         TransferEngine { parallel: false, ..TransferEngine::new(pool) }
+    }
+
+    /// Install a remote tier (setup-time, like `parallel`): local misses
+    /// consult it before falling back to recompute.
+    pub fn set_transport(&mut self, transport: Arc<dyn Transport>) {
+        self.transport = transport;
+    }
+
+    /// Try the transport for one locally-missing key. Any failure —
+    /// remote miss, transport error, or a container that does not decode
+    /// to the requested key — degrades to `None` (the caller recomputes);
+    /// a flapping peer can cost latency, never correctness.
+    fn pull_remote(&self, store: &Arc<KvStore>, key: &KvKey) -> Option<Arc<SegmentKv>> {
+        match self.transport.pull(key) {
+            Ok(Some(bytes)) => match store.admit_container(key, bytes) {
+                Ok(kv) => {
+                    log::debug!("transfer: {} served {key:?}", self.transport.name());
+                    Some(kv)
+                }
+                Err(e) => {
+                    log::warn!("transfer: peer container for {key:?} rejected: {e}");
+                    None
+                }
+            },
+            Ok(None) => None,
+            Err(e) => {
+                log::debug!("transfer: {} pull failed for {key:?}: {e}", self.transport.name());
+                None
+            }
+        }
     }
 
     /// Warm `keys` toward the device tier on idle pool workers without
@@ -227,9 +303,17 @@ impl TransferEngine {
         }
 
         // Compute lane (caller thread) — overlaps with the pool loads.
+        // Each local miss first consults the transport's remote tier
+        // (already admitted into the store on success — no write-through
+        // needed); only true cluster-wide misses pay the PJRT recompute.
         let t_compute = Instant::now();
         let mut computed: Vec<(usize, Arc<SegmentKv>)> = Vec::new();
+        let mut pulled: Vec<(usize, Arc<SegmentKv>)> = Vec::new();
         for (idx, key) in &miss_keys {
+            if let Some(kv) = self.pull_remote(store, key) {
+                pulled.push((*idx, kv));
+                continue;
+            }
             let kv = compute(key)?;
             kv.validate()?;
             computed.push((*idx, Arc::new(kv)));
@@ -267,14 +351,24 @@ impl TransferEngine {
             report.misses += 1;
             out[idx] = Some(kv);
         }
+        for (idx, kv) in pulled {
+            report.peer_hits += 1;
+            out[idx] = Some(kv);
+        }
 
-        // A "hit" that expired between planning and loading is recomputed.
+        // A "hit" that expired between planning and loading is recomputed
+        // (after one last chance on the transport).
         let mut final_out = Vec::with_capacity(keys.len());
         for (i, slot) in out.into_iter().enumerate() {
             match slot {
                 Some(kv) => final_out.push(kv),
                 None => {
                     let key = &keys[i];
+                    if let Some(kv) = self.pull_remote(store, key) {
+                        report.peer_hits += 1;
+                        final_out.push(kv);
+                        continue;
+                    }
                     log::debug!("transfer: late miss on {key:?}, recomputing");
                     let kv = compute(key)?;
                     kv.validate()?;
@@ -484,6 +578,78 @@ mod tests {
             eng3.fetch(&store3, std::slice::from_ref(&a.key), |_| panic!("hit")).unwrap();
         assert_eq!(rep.device_hits, 1);
         assert_eq!(store3.stats().prefetch_hits, 1);
+    }
+
+    /// A transport serving containers out of a HashMap — the peer lane
+    /// without sockets.
+    struct MapTransport {
+        containers: HashMap<KvKey, Vec<u8>>,
+        pulls: AtomicUsize,
+    }
+
+    impl Transport for MapTransport {
+        fn probe(&self, keys: &[KvKey]) -> Vec<bool> {
+            keys.iter().map(|k| self.containers.contains_key(k)).collect()
+        }
+        fn pull(&self, key: &KvKey) -> Result<Option<Vec<u8>>> {
+            self.pulls.fetch_add(1, Ordering::Relaxed);
+            Ok(self.containers.get(key).cloned())
+        }
+        fn name(&self) -> &'static str {
+            "map"
+        }
+    }
+
+    #[test]
+    fn misses_pull_from_transport_before_recompute() {
+        let (store, mut eng) = setup(None);
+        let remote = test_entry(77, 8);
+        let bytes = crate::kv::codec::encode(&remote).unwrap();
+        let mut containers = HashMap::new();
+        containers.insert(remote.key.clone(), bytes);
+        let transport = Arc::new(MapTransport { containers, pulls: AtomicUsize::new(0) });
+        eng.set_transport(Arc::clone(&transport) as Arc<dyn Transport>);
+
+        let keys = vec![remote.key.clone()];
+        let (out, rep) =
+            eng.fetch(&store, &keys, |_| panic!("peer must serve, not recompute")).unwrap();
+        assert_eq!(rep.peer_hits, 1);
+        assert_eq!(rep.misses, 0);
+        assert_eq!(*out[0], remote);
+        assert_eq!(transport.pulls.load(Ordering::Relaxed), 1);
+
+        // The pulled container was admitted locally: the next fetch is a
+        // device hit with no further pulls.
+        let (_, rep2) = eng.fetch(&store, &keys, |_| panic!("hit expected")).unwrap();
+        assert_eq!(rep2.device_hits, 1);
+        assert_eq!(rep2.peer_hits, 0);
+        assert_eq!(transport.pulls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn mismatched_peer_container_falls_back_to_compute() {
+        let (store, mut eng) = setup(None);
+        let wanted = KvKey::image("test-model", ImageId(1));
+        // The "peer" serves a container for a *different* segment under
+        // the wanted key — it must be rejected, not admitted.
+        let other = test_entry(2, 8);
+        let mut containers = HashMap::new();
+        containers.insert(wanted.clone(), crate::kv::codec::encode(&other).unwrap());
+        eng.set_transport(Arc::new(MapTransport { containers, pulls: AtomicUsize::new(0) }));
+
+        let mut computes = 0;
+        let (out, rep) = eng
+            .fetch(&store, std::slice::from_ref(&wanted), |k| {
+                computes += 1;
+                Ok(test_entry(k.seg.raw(), 8))
+            })
+            .unwrap();
+        assert_eq!(computes, 1, "bad container must fall back to compute");
+        assert_eq!(rep.peer_hits, 0);
+        assert_eq!(rep.misses, 1);
+        assert_eq!(out[0].key, wanted);
+        assert!(store.contains(&wanted));
+        assert!(!store.contains(&other.key), "mismatched key must not pollute the store");
     }
 
     #[test]

@@ -28,8 +28,11 @@
 //! * [`quality`] — fidelity scorer (GPT-score substitute, DESIGN.md §2).
 //! * [`workload`] — synthetic MMDU-like / Sparkles-like generators, traces.
 //! * [`server`] — JSON-lines TCP serving front end.
+//! * [`cluster`] — scale-out serving: cache-aware router, consistent-hash
+//!   placement, peer-to-peer KV container transfer (`kv.probe`/`kv.pull`).
 
 pub mod cache;
+pub mod cluster;
 pub mod coordinator;
 pub mod harness;
 pub mod kv;

@@ -4,6 +4,9 @@
 //! mpic serve  [--addr 127.0.0.1:7401] [--model mpic-sim-a] [--artifacts DIR]
 //!             [--queue-bound 64] [--max-batch 8] [--deadline-ms 30000]
 //!             [--conn-threads 8] [--kv-blocks 4096] [--block-tokens 16]
+//!             [--peers HOST:PORT,...] [--peer-timeout-ms 500]
+//! mpic router --workers HOST:PORT,HOST:PORT,... [--listen 127.0.0.1:7400]
+//!             [--mode affinity|rr] [--probe-timeout-ms 300] [--stats-interval-ms 500]
 //! mpic call   --json '{"v":3,"op":"stats"}' [--addr 127.0.0.1:7401]
 //! mpic lease         --handle IMAGE#NAME [--ttl-ms N] [--ns TENANT] [--addr ...]
 //! mpic lease-renew   --lease ID [--ttl-ms N] [--ns TENANT] [--addr ...]
@@ -35,6 +38,14 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// Parse a comma-separated `HOST:PORT,...` list (the CLI collapses
+/// repeated flags, so lists travel as one value).
+fn parse_addr_list(s: &str) -> anyhow::Result<Vec<std::net::SocketAddr>> {
+    s.split(',')
+        .map(|a| a.trim().parse().with_context(|| format!("bad address {a:?}")))
+        .collect()
 }
 
 /// The caller's tenant namespace (`--ns`), default when absent.
@@ -71,8 +82,22 @@ fn run() -> anyhow::Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "serve" => {
-            let engine = engine_from(&args)?;
+            let mut engine = engine_from(&args)?;
             let addr = args.str_or("addr", "127.0.0.1:7401");
+            // Cluster mode: a local KV miss consults these peers (over the
+            // kv.probe/kv.pull lane) before recomputing.
+            if let Some(peers) = args.get("peers") {
+                let peers = parse_addr_list(peers).context("--peers must be HOST:PORT,...")?;
+                let peer_cfg = mpic::cluster::PeerConfig {
+                    timeout: std::time::Duration::from_millis(args.u64_or("peer-timeout-ms", 500)?),
+                    ..Default::default()
+                };
+                let counters = std::sync::Arc::clone(engine.metrics.cluster());
+                println!("peer KV lane: {} peers", peers.len());
+                engine.set_transport(std::sync::Arc::new(mpic::cluster::PeerTransport::new(
+                    peers, peer_cfg, counters,
+                )));
+            }
             let defaults = mpic::server::pipeline::PipelineConfig::default();
             let cfg = mpic::server::ServeConfig {
                 pipeline: mpic::server::pipeline::PipelineConfig {
@@ -87,6 +112,20 @@ fn run() -> anyhow::Result<()> {
                 conn_threads: args.usize_or("conn-threads", 8)?,
             };
             mpic::server::serve_with(&engine, &addr, cfg, |a| println!("listening on {a}"))?;
+        }
+
+        "router" => {
+            let workers = parse_addr_list(
+                args.get("workers").context("--workers HOST:PORT,HOST:PORT,... required")?,
+            )?;
+            let mut cfg = mpic::cluster::RouterConfig::new(workers);
+            cfg.mode = mpic::cluster::RouteMode::parse(&args.str_or("mode", "affinity"))?;
+            cfg.probe_timeout =
+                std::time::Duration::from_millis(args.u64_or("probe-timeout-ms", 300)?);
+            cfg.stats_interval =
+                std::time::Duration::from_millis(args.u64_or("stats-interval-ms", 500)?);
+            let listen = args.str_or("listen", "127.0.0.1:7400");
+            mpic::cluster::serve_router(cfg, &listen, |a| println!("router listening on {a}"))?;
         }
 
         "call" => {
@@ -271,10 +310,13 @@ fn run() -> anyhow::Result<()> {
         }
 
         _ => {
-            println!("usage: mpic <serve|call|lease|lease-renew|lease-release|cancel|run|upload|upload-chunk|analyze> [options]");
+            println!("usage: mpic <serve|router|call|lease|lease-renew|lease-release|cancel|run|upload|upload-chunk|analyze> [options]");
             println!("  serve         --addr HOST:PORT --model NAME --artifacts DIR");
             println!("                --queue-bound N --max-batch N --deadline-ms MS --conn-threads N");
             println!("                --kv-blocks N --block-tokens N");
+            println!("                [--peers HOST:PORT,... --peer-timeout-ms MS]   (peer KV lane)");
+            println!("  router        --workers HOST:PORT,HOST:PORT,... [--listen HOST:PORT]");
+            println!("                [--mode affinity|rr --probe-timeout-ms MS --stats-interval-ms MS]");
             println!("  call          --json '{{\"v\":3,\"op\":\"stats\"}}' --addr HOST:PORT");
             println!("  lease         --handle IMAGE#NAME [--ttl-ms N] [--ns TENANT] --addr HOST:PORT");
             println!("  lease-renew   --lease ID [--ttl-ms N] [--ns TENANT] --addr HOST:PORT");

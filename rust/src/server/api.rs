@@ -708,6 +708,20 @@ pub fn dispatch(
     }
 }
 
+/// The model a peer KV request addresses: its explicit `"model"` field,
+/// or this worker's own model when omitted (a router-originated probe
+/// does not know worker model names).
+fn peer_model(engine: &Engine, req: &Value) -> ApiResult<String> {
+    match req.opt("model").map(|m| m.as_str()) {
+        None => Ok(engine.meta().name.clone()),
+        Some(Ok(m)) if m == engine.meta().name => Ok(m.to_string()),
+        Some(Ok(m)) => {
+            Err(ApiError::new(ErrorCode::NotFound, format!("model {m:?} is not served here")))
+        }
+        Some(Err(e)) => Err(ApiError::new(ErrorCode::BadType, format!("{e:#}"))),
+    }
+}
+
 fn dispatch_op(
     engine: &Engine,
     sessions: &mut SessionStore,
@@ -739,6 +753,50 @@ fn dispatch_op(
                     ]),
                 ),
             ]))
+        }
+
+        // ----------------------------------------------------------
+        // Peer KV lane (cluster-internal): worker-to-worker residency
+        // probe + container pull. Keys carry their own namespace, so the
+        // envelope ns is irrelevant here; the pulled container is the v4
+        // disk bytes, framed — never decoded/re-encoded on this side.
+        // ----------------------------------------------------------
+        "kv.probe" => {
+            let model = peer_model(engine, req)?;
+            let keys = req
+                .get("keys")
+                .map_err(|_| ApiError::new(ErrorCode::MissingField, "kv.probe needs \"keys\""))?
+                .as_arr()
+                .map_err(|e| ApiError::new(ErrorCode::BadType, format!("{e:#}")))?;
+            let mut bitmap = Vec::with_capacity(keys.len());
+            let mut resident = 0usize;
+            for k in keys {
+                let key = crate::cluster::transport::wire_to_key(&model, k)
+                    .map_err(|e| ApiError::new(ErrorCode::BadValue, format!("{e:#}")))?;
+                let hit = engine.store().contains(&key);
+                resident += hit as usize;
+                bitmap.push(Value::Bool(hit));
+            }
+            Ok(Value::obj(vec![
+                ("bitmap", Value::arr(bitmap)),
+                ("resident", Value::num(resident as f64)),
+            ]))
+        }
+
+        "kv.pull" => {
+            let model = peer_model(engine, req)?;
+            let key = crate::cluster::transport::wire_to_key(&model, req)
+                .map_err(|e| ApiError::new(ErrorCode::BadValue, format!("{e:#}")))?;
+            match engine.store().container_bytes(&key) {
+                Some(bytes) => Ok(Value::obj(vec![
+                    ("bytes", Value::num(bytes.len() as f64)),
+                    ("frame", Value::str(crate::kv::codec::frame(&bytes))),
+                ])),
+                None => Err(ApiError::new(
+                    ErrorCode::NotFound,
+                    format!("no cached container for {}", key.file_stem()),
+                )),
+            }
         }
 
         "upload" => {

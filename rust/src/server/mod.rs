@@ -51,6 +51,8 @@
 //! | `cache.evict`         | `handle`                                            | `handle`, `evicted` — refused with `code:"pinned"` while any live lease exists |
 //! | `session.list`        | —                                                   | `count`, `sessions[]` (`user`, `turns`, `history_len`, `images`; + `ns` when namespaced) — scoped to the caller's namespace |
 //! | `session.stat`        | `user`                                              | one session entry |
+//! | `kv.probe`            | `keys[]` (`{kind, segment, [ns]}`), [`model`]       | `bitmap[]`, `resident` — residency of each key in this worker's store, any tier. Peer KV lane (see [`crate::cluster`] for the topology); the router's affinity scoring and `PeerTransport` both speak it |
+//! | `kv.pull`             | `kind`, `segment` (hex), [`ns`, `model`]            | `frame` (base64 v4 codec container), `bytes` — the entry's encoded container verbatim from the local tiers, no re-encode; a peer admits it with `admit_container`. `not_found` when not resident |
 //! | `shutdown`            | —                                                   | `bye` |
 //!
 //! Example exchange (v3, pipelined ids, streaming):
@@ -318,18 +320,73 @@ fn handle_conn(stream: TcpStream, tx: Sender<Job>, gate: Arc<Gate>) -> Result<()
     Ok(())
 }
 
+/// Typed error for a peer or worker that cannot be reached within its
+/// deadline — connect refused/timed out, or a read deadline expired.
+///
+/// Satellite fix: connection setup and reads used to block forever, so a
+/// dead peer hung the caller's dispatch loop. Callers (the peer
+/// transport, the router's re-route path) downcast to this to distinguish
+/// "that worker is dead, move on" from protocol errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PeerUnreachable {
+    pub addr: std::net::SocketAddr,
+    /// What was being waited on: `"connect"` or `"read"`.
+    pub during: &'static str,
+}
+
+impl std::fmt::Display for PeerUnreachable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "peer {} unreachable ({} timed out)", self.addr, self.during)
+    }
+}
+
+impl std::error::Error for PeerUnreachable {}
+
 /// Blocking JSON-lines client (the raw layer under [`client::MpicClient`];
 /// used directly by tests and `mpic call`).
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    addr: std::net::SocketAddr,
 }
 
 impl Client {
+    /// Connect without deadlines (interactive callers: `mpic call`, the
+    /// test suite against an in-process server). Prefer
+    /// [`Client::connect_timeout`] anywhere a dead endpoint must not hang
+    /// the caller.
     pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
-        Ok(Client { writer: stream.try_clone()?, reader: BufReader::new(stream) })
+        Ok(Client { writer: stream.try_clone()?, reader: BufReader::new(stream), addr })
+    }
+
+    /// Connect with an explicit deadline on both the TCP connect and every
+    /// subsequent read. A dead or never-answering endpoint surfaces as a
+    /// typed [`PeerUnreachable`] instead of blocking forever.
+    pub fn connect_timeout(
+        addr: std::net::SocketAddr,
+        timeout: std::time::Duration,
+    ) -> Result<Client> {
+        let stream = TcpStream::connect_timeout(&addr, timeout).map_err(|e| {
+            anyhow::Error::new(PeerUnreachable { addr, during: "connect" }).context(e)
+        })?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(timeout))?;
+        Ok(Client { writer: stream.try_clone()?, reader: BufReader::new(stream), addr })
+    }
+
+    /// Change the read deadline on an existing connection. The router
+    /// probes workers under a short deadline but must stream a forwarded
+    /// generation without one (decode gaps are unbounded).
+    pub fn set_read_deadline(&mut self, timeout: Option<std::time::Duration>) -> Result<()> {
+        self.writer.set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// The address this client is connected to.
+    pub fn peer_addr(&self) -> std::net::SocketAddr {
+        self.addr
     }
 
     /// Write one request line without waiting for its reply (pipelining).
@@ -342,10 +399,19 @@ impl Client {
         Ok(())
     }
 
-    /// Read the next reply line, whatever request it answers.
+    /// Read the next reply line, whatever request it answers. With a
+    /// read deadline configured ([`Client::connect_timeout`]), a server
+    /// that never answers yields a typed [`PeerUnreachable`] when the
+    /// deadline lapses.
     pub fn recv(&mut self) -> Result<Value> {
         let mut line = String::new();
-        let n = self.reader.read_line(&mut line)?;
+        let n = self.reader.read_line(&mut line).map_err(|e| {
+            if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) {
+                anyhow::Error::new(PeerUnreachable { addr: self.addr, during: "read" })
+            } else {
+                anyhow::Error::new(e)
+            }
+        })?;
         if n == 0 {
             anyhow::bail!("connection closed by server");
         }
@@ -399,5 +465,49 @@ impl Client {
                 return Ok(v);
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    /// Satellite: a worker that never answers must surface as a typed
+    /// [`PeerUnreachable`] within the deadline, not hang the dispatch
+    /// loop. The listener below is bound but never accepts — the TCP
+    /// handshake may still complete out of the kernel backlog, in which
+    /// case it is the *read* deadline that has to fire.
+    #[test]
+    fn client_times_out_against_never_accepting_listener() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let timeout = Duration::from_millis(200);
+        let t0 = Instant::now();
+        match Client::connect_timeout(addr, timeout) {
+            Ok(mut c) => {
+                let err = c.call(&Value::parse(r#"{"op":"ping","id":"t"}"#).unwrap()).unwrap_err();
+                let peer = err.downcast_ref::<PeerUnreachable>();
+                assert!(peer.is_some(), "want PeerUnreachable, got: {err:#}");
+                assert_eq!(peer.unwrap().during, "read");
+                assert_eq!(peer.unwrap().addr, addr);
+            }
+            Err(err) => {
+                assert!(err.downcast_ref::<PeerUnreachable>().is_some(), "{err:#}");
+            }
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "deadline must bound the wait");
+    }
+
+    /// A closed port errors fast and typed (connect refused → the same
+    /// `PeerUnreachable` the re-route path keys on).
+    #[test]
+    fn client_connect_timeout_errors_on_dead_port() {
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        }; // listener dropped: the port is dead
+        let err = Client::connect_timeout(addr, Duration::from_millis(200)).unwrap_err();
+        assert!(err.downcast_ref::<PeerUnreachable>().is_some(), "{err:#}");
     }
 }

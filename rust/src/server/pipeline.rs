@@ -535,6 +535,7 @@ impl<'e> Pipeline<'e> {
             self.gate.overloaded_total(),
             self.uploads.finished_total(),
             self.cancelled,
+            self.gate.depth() as u64,
         );
         self.engine.metrics.set_kv_counters(&self.engine.store().stats());
     }
@@ -544,6 +545,16 @@ impl<'e> Pipeline<'e> {
         // Counters first so a `stats` op in this very batch sees them.
         self.publish_counters();
         let op = job.req.opt("op").and_then(|o| o.as_str().ok()).unwrap_or("").to_string();
+        // Cluster accounting: the router stamps requests it placed by
+        // reuse-span affinity, so the worker can report how often routing
+        // actually landed work on cached spans.
+        if job.req.opt("routed").and_then(|r| r.as_str().ok()) == Some("affinity") {
+            self.engine
+                .metrics
+                .cluster()
+                .routed_affinity_hits
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
         if job.weighted {
             let waited = job.enqueued.elapsed();
             self.engine.metrics.record_admission_wait(waited.as_secs_f64());
