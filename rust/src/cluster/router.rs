@@ -20,8 +20,16 @@
 //! Reply lines are proxied verbatim — stream chunks included — and a
 //! worker that cannot be reached re-routes the request to the next
 //! candidate instead of failing the client.
+//!
+//! Observability: generations forwarded without a client-supplied
+//! `"trace"` envelope field get a fresh id minted here, so every routed
+//! request is traceable end-to-end (the worker echoes the id on its final
+//! reply and `debug.trace get` addresses the recorded spans). The router
+//! also answers `stats.cluster` — per-worker `stats.metrics` snapshots
+//! plus a cross-worker aggregate — and, with a `metrics_addr`, serves that
+//! aggregate as Prometheus text exposition over HTTP.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -31,6 +39,7 @@ use std::time::Duration;
 use crate::mm::{ChunkId, ImageId, Namespace, Prompt, SegmentId, UserId};
 use crate::server::{Client, PeerUnreachable};
 use crate::util::json::Value;
+use crate::util::trace::TraceId;
 use crate::Result;
 
 use super::{affinity_scores, choose_worker, HashRing};
@@ -65,6 +74,10 @@ pub struct RouterConfig {
     pub probe_timeout: Duration,
     /// Occupancy poll period.
     pub stats_interval: Duration,
+    /// `HOST:PORT` for a cluster-level Prometheus scrape endpoint. Each
+    /// scrape pulls a fresh `stats` snapshot from every worker and renders
+    /// the aggregate; `None` disables the endpoint.
+    pub metrics_addr: Option<String>,
 }
 
 impl RouterConfig {
@@ -74,6 +87,7 @@ impl RouterConfig {
             mode: RouteMode::Affinity,
             probe_timeout: Duration::from_millis(300),
             stats_interval: Duration::from_millis(500),
+            metrics_addr: None,
         }
     }
 }
@@ -118,6 +132,26 @@ pub fn serve_router(
         std::thread::spawn(move || poll_occupancy(&shared))
     };
 
+    // Cluster-level Prometheus endpoint: the same HTTP loop the workers
+    // use, rendering the cross-worker aggregate instead of one snapshot.
+    let metrics_stop = Arc::new(AtomicBool::new(false));
+    let mut metrics_thread = None;
+    if let Some(maddr) = shared.cfg.metrics_addr.clone() {
+        let sh = Arc::clone(&shared);
+        let (bound, handle) =
+            crate::server::serve_metrics_http(&maddr, Arc::clone(&metrics_stop), move || {
+                let snaps: Vec<Value> = sh
+                    .cfg
+                    .workers
+                    .iter()
+                    .filter_map(|&w| worker_snapshot(w, sh.cfg.probe_timeout).ok())
+                    .collect();
+                crate::coordinator::metrics::prometheus_from_snapshot(&aggregate_snapshots(&snaps))
+            })?;
+        log::info!("router: metrics endpoint listening on {bound}");
+        metrics_thread = Some(handle);
+    }
+
     let mut handlers = Vec::new();
     for stream in listener.incoming() {
         if shared.shutdown.load(Ordering::SeqCst) {
@@ -140,6 +174,10 @@ pub fn serve_router(
         let _ = h.join();
     }
     let _ = poller.join();
+    metrics_stop.store(true, Ordering::SeqCst);
+    if let Some(h) = metrics_thread {
+        let _ = h.join();
+    }
     log::info!("router: shut down");
     Ok(())
 }
@@ -167,6 +205,113 @@ fn worker_inflight(addr: SocketAddr, timeout: Duration) -> Result<f64> {
     let mut c = Client::connect_timeout(addr, timeout)?;
     let resp = c.call(&Value::obj(vec![("op", Value::str("stats")), ("id", Value::str("occ"))]))?;
     resp.get("metrics")?.get("pipeline")?.get("inflight_now")?.as_f64()
+}
+
+/// One worker's full `stats.metrics` snapshot, under the probe deadline.
+fn worker_snapshot(addr: SocketAddr, timeout: Duration) -> Result<Value> {
+    let mut c = Client::connect_timeout(addr, timeout)?;
+    let resp = c.call(&Value::obj(vec![("op", Value::str("stats")), ("id", Value::str("agg"))]))?;
+    Ok(resp.get("metrics")?.clone())
+}
+
+/// The `stats.cluster` reply body: per-worker snapshots (with per-worker
+/// reachability) plus the cross-worker aggregate the router's own metrics
+/// endpoint also serves.
+fn cluster_stats(shared: &Shared) -> Value {
+    let mut workers = Vec::new();
+    let mut snaps = Vec::new();
+    for &addr in &shared.cfg.workers {
+        let mut w = Value::obj(vec![("addr", Value::str(addr.to_string()))]);
+        match worker_snapshot(addr, shared.cfg.probe_timeout) {
+            Ok(snap) => {
+                w.set("ok", Value::Bool(true));
+                w.set("metrics", snap.clone());
+                snaps.push(snap);
+            }
+            Err(e) => {
+                w.set("ok", Value::Bool(false));
+                w.set("error", Value::str(format!("{e:#}")));
+            }
+        }
+        workers.push(w);
+    }
+    Value::obj(vec![
+        ("workers", Value::arr(workers)),
+        ("metrics", aggregate_snapshots(&snaps)),
+    ])
+}
+
+/// Sum worker snapshots into one cluster-level `stats.metrics` tree.
+///
+/// Counters and rates add across workers; `uptime_s` takes the oldest
+/// worker; the fixed-bucket histogram families merge bucket-wise (every
+/// worker uses identical bounds). Per-op latency summaries are omitted —
+/// quantiles do not compose across hosts — which the Prometheus renderer
+/// tolerates by skipping absent fields.
+fn aggregate_snapshots(snaps: &[Value]) -> Value {
+    let sum_key =
+        |key: &str| -> f64 { snaps.iter().filter_map(|s| s.opt(key)?.as_f64().ok()).sum() };
+    let mut out = Value::obj(vec![("workers", Value::num(snaps.len() as f64))]);
+    for key in
+        ["requests", "tokens_out", "throughput_rps", "throughput_tps", "window_rps", "window_tps"]
+    {
+        out.set(key, Value::num(sum_key(key)));
+    }
+    let uptime =
+        snaps.iter().filter_map(|s| s.opt("uptime_s")?.as_f64().ok()).fold(0.0, f64::max);
+    out.set("uptime_s", Value::num(uptime));
+    // Flat subtrees: every numeric leaf sums across workers (non-numeric
+    // members — the pipeline's summary blocks — are dropped).
+    for key in ["kv", "cluster", "pipeline"] {
+        let mut acc: BTreeMap<String, f64> = BTreeMap::new();
+        for s in snaps {
+            let Some(obj) = s.opt(key).and_then(|v| v.as_obj().ok()) else { continue };
+            for (k, v) in obj {
+                if let Ok(x) = v.as_f64() {
+                    *acc.entry(k.clone()).or_insert(0.0) += x;
+                }
+            }
+        }
+        if !acc.is_empty() {
+            out.set(key, Value::Obj(acc.into_iter().map(|(k, v)| (k, Value::num(v))).collect()));
+        }
+    }
+    // Histogram families: element-wise bucket sums, summed sum/count.
+    let mut hists: BTreeMap<String, (Value, Vec<f64>, f64, f64)> = BTreeMap::new();
+    for s in snaps {
+        let Some(obj) = s.opt("histograms").and_then(|v| v.as_obj().ok()) else { continue };
+        for (name, h) in obj {
+            let Some(counts) = h.opt("counts").and_then(|v| v.as_arr().ok()) else { continue };
+            let le = h.opt("le").cloned().unwrap_or(Value::Arr(Vec::new()));
+            let sum = h.opt("sum").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+            let count = h.opt("count").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+            let e = hists.entry(name.clone()).or_insert_with(|| (le, vec![0.0; counts.len()], 0.0, 0.0));
+            if e.1.len() < counts.len() {
+                e.1.resize(counts.len(), 0.0);
+            }
+            for (i, c) in counts.iter().enumerate() {
+                e.1[i] += c.as_f64().unwrap_or(0.0);
+            }
+            e.2 += sum;
+            e.3 += count;
+        }
+    }
+    if !hists.is_empty() {
+        let merged = hists
+            .into_iter()
+            .map(|(name, (le, counts, sum, count))| {
+                let h = Value::obj(vec![
+                    ("le", le),
+                    ("counts", Value::arr(counts.into_iter().map(Value::num).collect())),
+                    ("sum", Value::num(sum)),
+                    ("count", Value::num(count)),
+                ]);
+                (name, h)
+            })
+            .collect();
+        out.set("histograms", Value::Obj(merged));
+    }
+    out
 }
 
 fn write_line(writer: &mut TcpStream, v: &Value) -> Result<()> {
@@ -204,7 +349,7 @@ fn handle_conn(stream: TcpStream, shared: &Shared, local: SocketAddr) -> Result<
         if line.trim().is_empty() {
             continue;
         }
-        let req = match Value::parse(&line) {
+        let mut req = match Value::parse(&line) {
             Ok(v) => v,
             Err(e) => {
                 write_line(&mut writer, &error_line(None, &format!("bad JSON: {e}")))?;
@@ -213,6 +358,21 @@ fn handle_conn(stream: TcpStream, shared: &Shared, local: SocketAddr) -> Result<
         };
         let id = req.opt("id").cloned();
         let op = req.opt("op").and_then(|o| o.as_str().ok()).unwrap_or("").to_string();
+        // Generations forwarded without a client trace id get one minted
+        // here, so the worker-side spans of a routed request are always
+        // addressable from the `trace` echoed on the final reply.
+        if (op == "infer" || op == "chat") && req.opt("trace").is_none() {
+            req.set("trace", Value::str(TraceId::fresh().hex()));
+        }
+        if op == "stats.cluster" {
+            let mut resp = cluster_stats(shared);
+            resp.set("ok", Value::Bool(true));
+            if let Some(id) = &id {
+                resp.set("id", id.clone());
+            }
+            write_line(&mut writer, &resp)?;
+            continue;
+        }
         if op == "shutdown" {
             // Shut the *router* down; workers have their own lifecycles.
             let mut bye = Value::obj(vec![("ok", Value::Bool(true)), ("bye", Value::Bool(true))]);
@@ -472,6 +632,9 @@ mod tests {
                             if let Some(routed) = req.opt("routed") {
                                 resp.set("routed_seen", routed.clone());
                             }
+                            if let Some(t) = req.opt("trace") {
+                                resp.set("trace_seen", t.clone());
+                            }
                             out.push_str(&resp.encode());
                             out.push('\n');
                         }
@@ -499,6 +662,7 @@ mod tests {
             mode: RouteMode::Affinity,
             probe_timeout: Duration::from_millis(300),
             stats_interval: Duration::from_millis(60_000), // poller idle in tests
+            metrics_addr: None,
         }
     }
 
@@ -551,6 +715,92 @@ mod tests {
             );
         }
         let _ = c.call(&Value::parse(r#"{"op":"shutdown","id":"x"}"#).unwrap());
+    }
+
+    #[test]
+    fn generations_get_a_trace_id_minted_if_absent() {
+        let w0 = fake_worker(0, vec![false], false);
+        let router = start_router(fast_cfg(vec![w0]));
+        let mut c = Client::connect(router).unwrap();
+        let resp = c
+            .call(&Value::parse(r#"{"op":"infer","id":"t","user":1,"text":"hello"}"#).unwrap())
+            .unwrap();
+        let minted = resp.get("trace_seen").unwrap().as_str().unwrap().to_string();
+        assert!(
+            minted.len() == 16 && minted.chars().all(|ch| ch.is_ascii_hexdigit()),
+            "minted trace must be 16 hex digits: {minted}"
+        );
+        // A client-supplied id forwards untouched; non-generations are
+        // never stamped.
+        let resp = c
+            .call(
+                &Value::parse(
+                    r#"{"op":"infer","id":"t2","user":1,"text":"hello","trace":"00000000deadbeef"}"#,
+                )
+                .unwrap(),
+            )
+            .unwrap();
+        assert_eq!(resp.get("trace_seen").unwrap().as_str().unwrap(), "00000000deadbeef");
+        let resp = c.call(&Value::parse(r#"{"op":"ping","id":"p"}"#).unwrap()).unwrap();
+        assert!(resp.opt("trace_seen").is_none());
+        let _ = c.call(&Value::parse(r#"{"op":"shutdown","id":"x"}"#).unwrap());
+    }
+
+    #[test]
+    fn stats_cluster_surfaces_per_worker_reachability() {
+        let w0 = fake_worker(0, vec![], false);
+        let router = start_router(fast_cfg(vec![w0]));
+        let mut c = Client::connect(router).unwrap();
+        let resp = c.call(&Value::parse(r#"{"op":"stats.cluster","id":"sc"}"#).unwrap()).unwrap();
+        assert!(resp.get("ok").unwrap().as_bool().unwrap());
+        let workers = resp.get("workers").unwrap().as_arr().unwrap();
+        assert_eq!(workers.len(), 1);
+        assert!(workers[0].get("addr").is_ok());
+        // The scripted worker's `stats` reply carries no metrics tree, so
+        // it reports as unreadable instead of poisoning the aggregate.
+        assert!(!workers[0].get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(resp.get("metrics").unwrap().get("workers").unwrap().as_f64().unwrap(), 0.0);
+        let _ = c.call(&Value::parse(r#"{"op":"shutdown","id":"x"}"#).unwrap());
+    }
+
+    #[test]
+    fn aggregate_sums_counters_and_merges_histograms() {
+        let snap = |reqs: f64, bucket0: f64| {
+            Value::obj(vec![
+                ("requests", Value::num(reqs)),
+                ("tokens_out", Value::num(reqs * 3.0)),
+                ("uptime_s", Value::num(reqs)),
+                ("kv", Value::obj(vec![("device_hits", Value::num(reqs))])),
+                (
+                    "histograms",
+                    Value::obj(vec![(
+                        "ttft_s",
+                        Value::obj(vec![
+                            ("le", Value::arr(vec![Value::num(0.001), Value::num(0.01)])),
+                            ("counts", Value::arr(vec![Value::num(bucket0), Value::num(1.0)])),
+                            ("sum", Value::num(0.5)),
+                            ("count", Value::num(bucket0 + 1.0)),
+                        ]),
+                    )]),
+                ),
+            ])
+        };
+        let agg = aggregate_snapshots(&[snap(2.0, 1.0), snap(5.0, 3.0)]);
+        assert_eq!(agg.get("workers").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(agg.get("requests").unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(agg.get("tokens_out").unwrap().as_f64().unwrap(), 21.0);
+        assert_eq!(agg.get("uptime_s").unwrap().as_f64().unwrap(), 5.0, "uptime is max, not sum");
+        assert_eq!(agg.get("kv").unwrap().get("device_hits").unwrap().as_f64().unwrap(), 7.0);
+        let h = agg.get("histograms").unwrap().get("ttft_s").unwrap();
+        let counts = h.get("counts").unwrap().as_arr().unwrap();
+        assert_eq!(counts[0].as_f64().unwrap(), 4.0);
+        assert_eq!(counts[1].as_f64().unwrap(), 2.0);
+        assert_eq!(h.get("count").unwrap().as_f64().unwrap(), 6.0);
+        // The aggregate renders through the same exposition path a worker
+        // snapshot does.
+        let text = crate::coordinator::metrics::prometheus_from_snapshot(&agg);
+        assert!(text.contains("mpic_requests_total 7\n"), "{text}");
+        assert!(text.contains("mpic_ttft_seconds_bucket{le=\"+Inf\"} 6\n"), "{text}");
     }
 
     #[test]

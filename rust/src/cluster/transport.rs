@@ -28,6 +28,7 @@ use crate::kv::{KvKey, Transport};
 use crate::mm::{ChunkId, ImageId, Namespace, SegmentId};
 use crate::server::Client;
 use crate::util::json::Value;
+use crate::util::trace;
 use crate::Result;
 
 /// Tunables for the peer lane.
@@ -163,16 +164,30 @@ impl PeerTransport {
 
     /// One `kv.probe` round-trip against one peer.
     fn probe_peer(&self, peer: SocketAddr, keys: &[KvKey]) -> Result<Vec<bool>> {
+        let t0 = Instant::now();
         let mut c = Client::connect_timeout(peer, self.cfg.timeout)?;
         self.counters.peer_probes.fetch_add(1, Ordering::Relaxed);
-        let req = Value::obj(vec![
+        let mut req = Value::obj(vec![
             ("v", Value::num(3.0)),
             ("op", Value::str("kv.probe")),
             ("id", Value::str(format!("probe-{}", std::process::id()))),
             ("model", Value::str(keys[0].model.as_str())),
             ("keys", Value::arr(keys.iter().map(key_to_wire).collect())),
         ]);
+        // Propagate the caller's trace id across the wire so the serving
+        // peer's flight recorder can attribute the work.
+        if let Some(t) = trace::current() {
+            req.set("trace", Value::str(t.hex()));
+        }
         let resp = c.call(&req)?;
+        trace::record(
+            "peer_probe",
+            t0,
+            &[
+                ("peer", Value::str(peer.to_string())),
+                ("keys", Value::num(keys.len() as f64)),
+            ],
+        );
         if !resp.get("ok")?.as_bool()? {
             return Err(anyhow!("kv.probe rejected: {}", resp.encode()));
         }
@@ -190,6 +205,7 @@ impl PeerTransport {
 
     /// One `kv.pull` round-trip (no retry here; `pull` owns the retry).
     fn pull_peer(&self, peer: SocketAddr, key: &KvKey) -> Result<Option<Vec<u8>>> {
+        let t0 = Instant::now();
         let mut c = Client::connect_timeout(peer, self.cfg.timeout)?;
         let mut req = Value::obj(vec![
             ("v", Value::num(3.0)),
@@ -197,6 +213,9 @@ impl PeerTransport {
             ("id", Value::str(format!("pull-{}", std::process::id()))),
             ("model", Value::str(key.model.as_str())),
         ]);
+        if let Some(t) = trace::current() {
+            req.set("trace", Value::str(t.hex()));
+        }
         // Flatten the key fields into the envelope (single-key op).
         if let (Value::Obj(req_m), Value::Obj(key_m)) = (&mut req, key_to_wire(key)) {
             req_m.extend(key_m);
@@ -213,6 +232,14 @@ impl PeerTransport {
         let bytes = crate::kv::codec::unframe(frame)?;
         self.counters.peer_pulls.fetch_add(1, Ordering::Relaxed);
         self.counters.peer_pull_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        trace::record(
+            "peer_pull",
+            t0,
+            &[
+                ("peer", Value::str(peer.to_string())),
+                ("bytes", Value::num(bytes.len() as f64)),
+            ],
+        );
         Ok(Some(bytes))
     }
 

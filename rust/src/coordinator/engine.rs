@@ -25,7 +25,9 @@ use crate::mm::{
 };
 use crate::retriever::Retriever;
 use crate::runtime::{ExecStats, ModelMeta, Runtime, Tensor};
+use crate::util::json::Value;
 use crate::util::threadpool::ThreadPool;
+use crate::util::trace;
 use crate::Result;
 
 pub use crate::kv::EvictOutcome;
@@ -152,7 +154,11 @@ pub struct Engine {
     /// Shared worker pool: drives the transfer engine's load lane and the
     /// serving pipeline's async upload lane (store write-through).
     pool: Arc<ThreadPool>,
-    pub metrics: Metrics,
+    /// `Arc` so the `--metrics-addr` scrape thread can snapshot without
+    /// borrowing the (`!Sync`) engine.
+    pub metrics: Arc<Metrics>,
+    /// Request-trace span sink + flight recorder (`debug.trace`).
+    tracer: Arc<trace::Recorder>,
     cfg: EngineConfig,
 }
 
@@ -183,9 +189,16 @@ impl Engine {
             retriever: RefCell::new(Retriever::new()),
             transfer,
             pool,
-            metrics: Metrics::new(),
+            metrics: Arc::new(Metrics::new()),
+            tracer: Arc::new(trace::Recorder::default()),
             cfg,
         })
+    }
+
+    /// The engine's trace recorder: span sink, flight-recorder ring and
+    /// slow-request log (`debug.trace`, `mpic trace`, `--slow-ms`).
+    pub fn tracer(&self) -> &Arc<trace::Recorder> {
+        &self.tracer
     }
 
     pub fn meta(&self) -> &ModelMeta {
@@ -588,6 +601,18 @@ impl Engine {
         let (entries, transfer) = self.fetch_entries(&layout, &prompt.ns)?;
         let entry_refs: Vec<&SegmentKv> = entries.iter().map(|e| e.as_ref()).collect();
         let fetch_s = t_request.elapsed().as_secs_f64();
+        trace::record(
+            "fetch",
+            t_request,
+            &[
+                ("segments", Value::num(transfer.n_segments as f64)),
+                ("device_hits", Value::num(transfer.device_hits as f64)),
+                ("host_hits", Value::num(transfer.host_hits as f64)),
+                ("disk_hits", Value::num(transfer.disk_hits as f64)),
+                ("peer_hits", Value::num(transfer.peer_hits as f64)),
+                ("misses", Value::num(transfer.misses as f64)),
+            ],
+        );
 
         let mut ttft = TtftBreakdown { fetch_s, ..Default::default() };
         let (first_logits, k_cache, v_cache, n_selected);
@@ -597,8 +622,11 @@ impl Engine {
                 let t_link = Instant::now();
                 let inputs = linker.full_prefill(&layout, &entry_refs, s_bucket)?;
                 ttft.link_s += t_link.elapsed().as_secs_f64();
+                trace::record("link", t_link, &[]);
                 let art = Runtime::art_prefill_full(&self.meta.name, s_bucket);
+                let t_exec = Instant::now();
                 let (outs, es) = self.runtime.execute(&art, &inputs.to_vec())?;
+                trace::record("prefill", t_exec, &[("policy", Value::str(policy.name()))]);
                 ttft.exec.add(&es);
                 ttft.steps = 1;
                 let mut it = outs.into_iter();
@@ -617,8 +645,18 @@ impl Engine {
                 let (k, v) = linker.linked_cache(&layout, &entry_refs, s_sel)?;
                 let si = linker.selective(&layout, &entry_refs, &pl, k, v, s_sel, n_bucket)?;
                 ttft.link_s += t_link.elapsed().as_secs_f64();
+                trace::record("link", t_link, &[]);
                 let art = Runtime::art_prefill_selective(&self.meta.name, s_sel, n_bucket);
+                let t_exec = Instant::now();
                 let (outs, es) = self.runtime.execute(&art, &si.to_vec())?;
+                trace::record(
+                    "prefill",
+                    t_exec,
+                    &[
+                        ("policy", Value::str(policy.name())),
+                        ("n_selected", Value::num(n_selected as f64)),
+                    ],
+                );
                 ttft.exec.add(&es);
                 ttft.steps = 1;
                 let mut it = outs.into_iter();
@@ -640,6 +678,7 @@ impl Engine {
                 linker.scatter_packed_rows(&mut v, s_bucket, &tv, text_bucket, &mapping)?;
                 let slots = super::linker::SlotArrays::build(&layout, &self.meta, s_bucket);
                 ttft.link_s += t_link.elapsed().as_secs_f64();
+                trace::record("link", t_link, &[]);
 
                 // Step B: recompute the final prompt token over the blended
                 // cache to produce the first output token's logits.
@@ -655,6 +694,7 @@ impl Engine {
                     vec![self.meta.n_layers, s_bucket, self.meta.n_heads, self.meta.d_head];
                 let (kp, kvld, sb) = slots.tensors();
                 let art = Runtime::art_decode_step(&self.meta.name, s_bucket);
+                let t_exec = Instant::now();
                 let (outs, es_b) = self.runtime.execute(
                     &art,
                     &[
@@ -668,6 +708,7 @@ impl Engine {
                         sb,
                     ],
                 )?;
+                trace::record("prefill", t_exec, &[("policy", Value::str(policy.name()))]);
                 ttft.exec.add(&es_b);
                 ttft.steps = 2;
                 let mut it = outs.into_iter();
@@ -710,8 +751,18 @@ impl Engine {
                 let (_, n_bucket) = self.selective_bucket(s_bucket, pl.selected.len())?;
                 let si = linker.selective(&layout, &entry_refs, &pl, k, v, s_bucket, n_bucket)?;
                 ttft.link_s += t_link2.elapsed().as_secs_f64();
+                trace::record("link", t_link2, &[]);
                 let art = Runtime::art_prefill_selective(&self.meta.name, s_bucket, n_bucket);
+                let t_exec = Instant::now();
                 let (outs, es) = self.runtime.execute(&art, &si.to_vec())?;
+                trace::record(
+                    "prefill",
+                    t_exec,
+                    &[
+                        ("policy", Value::str(policy.name())),
+                        ("n_selected", Value::num(n_selected as f64)),
+                    ],
+                );
                 ttft.exec.add(&es);
                 ttft.steps = 3; // estimate + text prefill + blend
                 let mut it = outs.into_iter();
@@ -765,6 +816,7 @@ impl Engine {
         let pos = seq.prompt_len + seq.tokens.len() - 1;
         if pos >= seq.s_bucket || seq.tokens.len() >= seq.max_new {
             seq.decode_s += t0.elapsed().as_secs_f64();
+            trace::record("decode", t0, &[("pos", Value::num(pos as f64))]);
             return Ok(false);
         }
         seq.key_pos[pos] = pos as i32;
@@ -802,6 +854,7 @@ impl Engine {
             }
         }
         seq.decode_s += t0.elapsed().as_secs_f64();
+        trace::record("decode", t0, &[("pos", Value::num(pos as f64))]);
         Ok(seq.tokens.len() < seq.max_new)
     }
 

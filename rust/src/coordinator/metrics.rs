@@ -4,6 +4,14 @@
 //! async upload completions) surfaced under `stats.metrics.pipeline`,
 //! plus the KV hot-path counters (shard-lock contention, prefetch
 //! hits/wasted, chunked-codec parallelism) under `stats.metrics.kv`.
+//!
+//! All latency series are fixed log-bucketed [`Histogram`]s and the
+//! per-round gauges are capped [`Reservoir`]s, so a week-long server holds
+//! constant memory and the snapshot path never sorts an unbounded vector
+//! under the mutex. The full tree — including raw histogram buckets under
+//! `stats.metrics.histograms` — renders to Prometheus text exposition via
+//! [`prometheus_from_snapshot`], which the `--metrics-addr` HTTP endpoint
+//! serves on workers and (aggregated across workers) on the router.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -11,7 +19,13 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::util::json::Value;
-use crate::util::stats::Samples;
+use crate::util::stats::{Histogram, Reservoir};
+
+/// Retained sample cap for the per-round gauge series (occupancy, depth).
+const RESERVOIR_CAP: usize = 256;
+
+/// Sliding-window width for the "current load" throughput rates.
+const WINDOW_SECS: u64 = 60;
 
 /// Cluster-lane counters, surfaced under `stats.metrics.cluster`.
 ///
@@ -35,8 +49,47 @@ pub struct ClusterCounters {
     pub routed_affinity_hits: AtomicU64,
 }
 
+/// Per-second ring over the last [`WINDOW_SECS`]: each slot remembers which
+/// second it belongs to, so stale slots fall out of the sum without a sweep.
+#[derive(Clone, Copy)]
+struct WindowRing {
+    /// `(second_since_start, requests, tokens)` per slot.
+    slots: [(u64, u64, u64); WINDOW_SECS as usize],
+}
+
+impl WindowRing {
+    fn new() -> Self {
+        WindowRing { slots: [(u64::MAX, 0, 0); WINDOW_SECS as usize] }
+    }
+
+    fn record(&mut self, sec: u64, tokens: u64) {
+        let slot = &mut self.slots[(sec % WINDOW_SECS) as usize];
+        if slot.0 != sec {
+            *slot = (sec, 0, 0);
+        }
+        slot.1 += 1;
+        slot.2 += tokens;
+    }
+
+    /// `(window_rps, window_tps)` over the last window. The denominator is
+    /// the uptime clamped to `[1, WINDOW_SECS]` so a server that just
+    /// booted doesn't report an absurd extrapolated rate.
+    fn rates(&self, now_sec: u64, uptime_s: f64) -> (f64, f64) {
+        let (mut reqs, mut toks) = (0u64, 0u64);
+        for &(sec, r, t) in &self.slots {
+            if sec != u64::MAX && now_sec.saturating_sub(sec) < WINDOW_SECS {
+                reqs += r;
+                toks += t;
+            }
+        }
+        let denom = uptime_s.min(WINDOW_SECS as f64).max(1.0);
+        (reqs as f64 / denom, toks as f64 / denom)
+    }
+}
+
 /// Aggregated engine metrics. Interior-mutable so the (single-threaded)
-/// engine and the (multi-threaded) server can both record.
+/// engine and the (multi-threaded) server — including the `--metrics-addr`
+/// scrape thread — can all record and read through a shared reference.
 pub struct Metrics {
     inner: Mutex<Inner>,
     /// Shared with the installed `PeerTransport` (if any) and the serving
@@ -46,24 +99,27 @@ pub struct Metrics {
 
 struct Inner {
     started: Instant,
-    ttft: Samples,
-    ttft_fetch: Samples,
-    ttft_link: Samples,
-    ttft_exec: Samples,
-    decode_step: Samples,
-    upload: Samples,
+    ttft: Histogram,
+    ttft_fetch: Histogram,
+    ttft_link: Histogram,
+    ttft_exec: Histogram,
+    decode_step: Histogram,
+    upload: Histogram,
     requests: u64,
     tokens_out: u64,
-    /// Per-op wall-time samples, keyed by wire op name (`infer`,
-    /// `cache.list`, …). Sample count doubles as the request counter.
-    ops: BTreeMap<String, Samples>,
+    /// Per-second request/token counts over the last minute, for the
+    /// sliding-window throughput the lifetime averages can't provide.
+    window: WindowRing,
+    /// Per-op wall-time histograms, keyed by wire op name (`infer`,
+    /// `cache.list`, …). Histogram count doubles as the request counter.
+    ops: BTreeMap<String, Histogram>,
     /// Seconds each admitted job spent in the admission queue (channel
     /// wait between the connection handler and the engine loop).
-    admission_wait: Samples,
+    admission_wait: Histogram,
     /// Active sequences per pipeline decode round (batch occupancy).
-    batch_occupancy: Samples,
+    batch_occupancy: Reservoir,
     /// In-flight weighted requests sampled once per pipeline round.
-    queue_depth: Samples,
+    queue_depth: Reservoir,
     /// Requests rejected with `overloaded` (gate bound, deadline, busy
     /// session). Published by the pipeline from the gate's counter.
     overload_rejected: u64,
@@ -89,18 +145,19 @@ impl Metrics {
         Metrics {
             inner: Mutex::new(Inner {
                 started: Instant::now(),
-                ttft: Samples::new(),
-                ttft_fetch: Samples::new(),
-                ttft_link: Samples::new(),
-                ttft_exec: Samples::new(),
-                decode_step: Samples::new(),
-                upload: Samples::new(),
+                ttft: Histogram::new(),
+                ttft_fetch: Histogram::new(),
+                ttft_link: Histogram::new(),
+                ttft_exec: Histogram::new(),
+                decode_step: Histogram::new(),
+                upload: Histogram::new(),
                 requests: 0,
                 tokens_out: 0,
+                window: WindowRing::new(),
                 ops: BTreeMap::new(),
-                admission_wait: Samples::new(),
-                batch_occupancy: Samples::new(),
-                queue_depth: Samples::new(),
+                admission_wait: Histogram::new(),
+                batch_occupancy: Reservoir::new(RESERVOIR_CAP),
+                queue_depth: Reservoir::new(RESERVOIR_CAP),
                 overload_rejected: 0,
                 async_uploads: 0,
                 cancelled: 0,
@@ -120,33 +177,36 @@ impl Metrics {
 
     pub fn record_request(&self, r: &super::engine::InferenceResult) {
         let mut g = self.inner.lock().unwrap();
-        g.ttft.push(r.ttft.total_s);
-        g.ttft_fetch.push(r.ttft.fetch_s);
-        g.ttft_link.push(r.ttft.link_s);
-        g.ttft_exec.push(r.ttft.exec.total_s());
+        g.ttft.observe(r.ttft.total_s);
+        g.ttft_fetch.observe(r.ttft.fetch_s);
+        g.ttft_link.observe(r.ttft.link_s);
+        g.ttft_exec.observe(r.ttft.exec.total_s());
         g.requests += 1;
         g.tokens_out += r.tokens.len() as u64;
         g.recomputes += r.transfer.misses as u64;
+        let sec = g.started.elapsed().as_secs();
+        let n_tokens = r.tokens.len() as u64;
+        g.window.record(sec, n_tokens);
     }
 
     pub fn record_decode_step(&self, secs: f64) {
-        self.inner.lock().unwrap().decode_step.push(secs);
+        self.inner.lock().unwrap().decode_step.observe(secs);
     }
 
     pub fn record_upload(&self, secs: f64) {
-        self.inner.lock().unwrap().upload.push(secs);
+        self.inner.lock().unwrap().upload.observe(secs);
     }
 
     /// Record one serving-API request of the given op and its wall time.
     pub fn record_op(&self, op: &str, secs: f64) {
         let mut g = self.inner.lock().unwrap();
-        g.ops.entry(op.to_string()).or_insert_with(Samples::new).push(secs);
+        g.ops.entry(op.to_string()).or_default().observe(secs);
     }
 
     /// Record how long a job waited in the admission queue before the
     /// engine loop picked it up.
     pub fn record_admission_wait(&self, secs: f64) {
-        self.inner.lock().unwrap().admission_wait.push(secs);
+        self.inner.lock().unwrap().admission_wait.observe(secs);
     }
 
     /// Record one pipeline round: how many sequences were interleaved and
@@ -183,11 +243,16 @@ impl Metrics {
 
     /// How many requests of this op have been recorded.
     pub fn op_count(&self, op: &str) -> u64 {
-        self.inner.lock().unwrap().ops.get(op).map(|s| s.len() as u64).unwrap_or(0)
+        self.inner.lock().unwrap().ops.get(op).map(|s| s.count()).unwrap_or(0)
     }
 
     pub fn requests(&self) -> u64 {
         self.inner.lock().unwrap().requests
+    }
+
+    /// Seconds since this engine's metrics started.
+    pub fn uptime_s(&self) -> f64 {
+        self.inner.lock().unwrap().started.elapsed().as_secs_f64()
     }
 
     /// Mean TTFT in seconds (NaN if no requests yet).
@@ -195,34 +260,58 @@ impl Metrics {
         self.inner.lock().unwrap().ttft.mean()
     }
 
-    /// Requests per second since engine start.
+    /// Requests per second since engine start (lifetime average).
     pub fn throughput_rps(&self) -> f64 {
         let g = self.inner.lock().unwrap();
         g.requests as f64 / g.started.elapsed().as_secs_f64().max(1e-9)
     }
 
-    /// Decoded tokens per second since engine start.
+    /// Decoded tokens per second since engine start (lifetime average).
     pub fn throughput_tps(&self) -> f64 {
         let g = self.inner.lock().unwrap();
         g.tokens_out as f64 / g.started.elapsed().as_secs_f64().max(1e-9)
     }
 
+    /// `(rps, tps)` over the last 60 seconds — current load, not history
+    /// since boot.
+    pub fn window_rates(&self) -> (f64, f64) {
+        let g = self.inner.lock().unwrap();
+        let uptime = g.started.elapsed().as_secs_f64();
+        g.window.rates(g.started.elapsed().as_secs(), uptime)
+    }
+
     /// JSON snapshot for the server's `stats` op and the benches.
     pub fn snapshot(&self) -> Value {
         let g = self.inner.lock().unwrap();
-        let s = |x: &Samples| {
+        let z = |x: f64| Value::num(if x.is_finite() { x } else { 0.0 });
+        let s = |x: &Histogram| {
+            Value::obj(vec![
+                ("n", Value::num(x.count() as f64)),
+                ("mean", z(x.mean())),
+                ("p50", z(x.p50())),
+                ("p95", z(x.p95())),
+                ("p99", z(x.p99())),
+                ("min", z(x.min())),
+                ("max", z(x.max())),
+                ("sum", z(x.sum())),
+            ])
+        };
+        let sr = |x: &Reservoir| {
             Value::obj(vec![
                 ("n", Value::num(x.len() as f64)),
-                ("mean", Value::num(if x.is_empty() { 0.0 } else { x.mean() })),
-                ("p50", Value::num(if x.is_empty() { 0.0 } else { x.p50() })),
-                ("p95", Value::num(if x.is_empty() { 0.0 } else { x.p95() })),
+                ("mean", z(x.mean())),
+                ("p50", z(x.p50())),
+                ("p95", z(x.p95())),
+                ("p99", z(x.p99())),
+                ("min", z(x.min())),
+                ("max", z(x.max())),
             ])
         };
         let ops = Value::Obj(g.ops.iter().map(|(k, x)| (k.clone(), s(x))).collect());
         let pipeline = Value::obj(vec![
             ("admission_wait_s", s(&g.admission_wait)),
-            ("batch_occupancy", s(&g.batch_occupancy)),
-            ("queue_depth", s(&g.queue_depth)),
+            ("batch_occupancy", sr(&g.batch_occupancy)),
+            ("queue_depth", sr(&g.queue_depth)),
             ("rejected_overloaded", Value::num(g.overload_rejected as f64)),
             ("async_uploads", Value::num(g.async_uploads as f64)),
             ("cancelled", Value::num(g.cancelled as f64)),
@@ -258,9 +347,36 @@ impl Metrics {
             ("routed_affinity_hits", a(&c.routed_affinity_hits)),
             ("recomputes", n(g.recomputes as f64)),
         ]);
+        let hist = |h: &Histogram| {
+            Value::obj(vec![
+                ("le", Value::arr(Histogram::bounds().map(Value::num).collect())),
+                (
+                    "counts",
+                    Value::arr(h.bucket_counts().iter().map(|&c| Value::num(c as f64)).collect()),
+                ),
+                ("sum", z(h.sum())),
+                ("count", Value::num(h.count() as f64)),
+            ])
+        };
+        let histograms = Value::obj(vec![
+            ("ttft_s", hist(&g.ttft)),
+            ("ttft_fetch_s", hist(&g.ttft_fetch)),
+            ("ttft_link_s", hist(&g.ttft_link)),
+            ("ttft_exec_s", hist(&g.ttft_exec)),
+            ("decode_step_s", hist(&g.decode_step)),
+            ("upload_s", hist(&g.upload)),
+            ("admission_wait_s", hist(&g.admission_wait)),
+        ]);
+        let uptime = g.started.elapsed().as_secs_f64();
+        let (win_rps, win_tps) = g.window.rates(g.started.elapsed().as_secs(), uptime);
         Value::obj(vec![
             ("requests", Value::num(g.requests as f64)),
             ("tokens_out", Value::num(g.tokens_out as f64)),
+            ("uptime_s", Value::num(uptime)),
+            ("throughput_rps", Value::num(g.requests as f64 / uptime.max(1e-9))),
+            ("throughput_tps", Value::num(g.tokens_out as f64 / uptime.max(1e-9))),
+            ("window_rps", Value::num(win_rps)),
+            ("window_tps", Value::num(win_tps)),
             ("ttft_s", s(&g.ttft)),
             ("ttft_fetch_s", s(&g.ttft_fetch)),
             ("ttft_link_s", s(&g.ttft_link)),
@@ -271,6 +387,7 @@ impl Metrics {
             ("pipeline", pipeline),
             ("kv", kv),
             ("cluster", cluster),
+            ("histograms", histograms),
         ])
     }
 }
@@ -279,6 +396,155 @@ impl Default for Metrics {
     fn default() -> Self {
         Self::new()
     }
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------------
+
+/// Escape a label value per the exposition format: backslash, double quote
+/// and newline.
+pub fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(ch),
+        }
+    }
+    out
+}
+
+/// Coerce an arbitrary key into a legal metric-name fragment.
+fn sanitize_name(s: &str) -> String {
+    s.chars().map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' }).collect()
+}
+
+fn fmt_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// Render a `stats.metrics` snapshot tree (one worker's, or the router's
+/// cross-worker aggregate) as Prometheus text exposition. Fields absent
+/// from the snapshot are skipped, so the same renderer serves both the
+/// full worker tree and the leaner aggregated tree.
+pub fn prometheus_from_snapshot(snap: &Value) -> String {
+    fn metric(out: &mut String, typ: &str, name: &str, v: f64) {
+        out.push_str(&format!("# TYPE {name} {typ}\n{name} {}\n", fmt_num(v)));
+    }
+    let mut out = String::new();
+    for (key, name) in [
+        ("requests", "mpic_requests_total"),
+        ("tokens_out", "mpic_tokens_out_total"),
+    ] {
+        if let Some(v) = snap.opt(key).and_then(|v| v.as_f64().ok()) {
+            metric(&mut out, "counter", name, v);
+        }
+    }
+    for (key, name) in [
+        ("uptime_s", "mpic_uptime_seconds"),
+        ("throughput_rps", "mpic_throughput_rps"),
+        ("throughput_tps", "mpic_throughput_tps"),
+        ("window_rps", "mpic_window_rps"),
+        ("window_tps", "mpic_window_tps"),
+    ] {
+        if let Some(v) = snap.opt(key).and_then(|v| v.as_f64().ok()) {
+            metric(&mut out, "gauge", name, v);
+        }
+    }
+
+    // Flat counter sub-trees: every numeric leaf becomes one counter.
+    for (key, prefix) in [("kv", "mpic_kv_"), ("cluster", "mpic_cluster_")] {
+        if let Some(obj) = snap.opt(key).and_then(|v| v.as_obj().ok()) {
+            for (k, v) in obj {
+                if let Ok(x) = v.as_f64() {
+                    metric(&mut out, "counter", &format!("{prefix}{}_total", sanitize_name(k)), x);
+                }
+            }
+        }
+    }
+    if let Some(p) = snap.opt("pipeline") {
+        for (key, name) in [
+            ("rejected_overloaded", "mpic_pipeline_rejected_overloaded_total"),
+            ("async_uploads", "mpic_pipeline_async_uploads_total"),
+            ("cancelled", "mpic_pipeline_cancelled_total"),
+        ] {
+            if let Some(v) = p.opt(key).and_then(|v| v.as_f64().ok()) {
+                metric(&mut out, "counter", name, v);
+            }
+        }
+        if let Some(v) = p.opt("inflight_now").and_then(|v| v.as_f64().ok()) {
+            metric(&mut out, "gauge", "mpic_pipeline_inflight", v);
+        }
+    }
+
+    // Histogram families: cumulative buckets in `le` order, then +Inf,
+    // _sum and _count, per the exposition format.
+    if let Some(hists) = snap.opt("histograms").and_then(|v| v.as_obj().ok()) {
+        for (key, h) in hists {
+            let (Some(le), Some(counts)) = (
+                h.opt("le").and_then(|v| v.as_arr().ok()),
+                h.opt("counts").and_then(|v| v.as_arr().ok()),
+            ) else {
+                continue;
+            };
+            let base = key.strip_suffix("_s").unwrap_or(key);
+            let name = format!("mpic_{}_seconds", sanitize_name(base));
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0.0;
+            for (bound, c) in le.iter().zip(counts.iter()) {
+                cum += c.as_f64().unwrap_or(0.0);
+                out.push_str(&format!(
+                    "{name}_bucket{{le=\"{}\"}} {}\n",
+                    fmt_num(bound.as_f64().unwrap_or(0.0)),
+                    fmt_num(cum)
+                ));
+            }
+            // Remaining counts (the overflow bucket) land in +Inf.
+            for c in counts.iter().skip(le.len()) {
+                cum += c.as_f64().unwrap_or(0.0);
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", fmt_num(cum)));
+            let sum = h.opt("sum").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+            let count = h.opt("count").and_then(|v| v.as_f64().ok()).unwrap_or(cum);
+            out.push_str(&format!("{name}_sum {}\n", fmt_num(sum)));
+            out.push_str(&format!("{name}_count {}\n", fmt_num(count)));
+        }
+    }
+
+    // Per-op latency summaries (quantile labels, no buckets: the op
+    // cardinality times the bucket count isn't worth the exposition size).
+    if let Some(ops) = snap.opt("ops").and_then(|v| v.as_obj().ok()) {
+        if !ops.is_empty() {
+            out.push_str("# TYPE mpic_op_seconds summary\n");
+            for (op, s) in ops {
+                let esc = escape_label(op);
+                for (q, key) in [("0.5", "p50"), ("0.95", "p95"), ("0.99", "p99")] {
+                    if let Some(v) = s.opt(key).and_then(|v| v.as_f64().ok()) {
+                        out.push_str(&format!(
+                            "mpic_op_seconds{{op=\"{esc}\",quantile=\"{q}\"}} {}\n",
+                            fmt_num(v)
+                        ));
+                    }
+                }
+                let n = s.opt("n").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+                let sum = s
+                    .opt("sum")
+                    .and_then(|v| v.as_f64().ok())
+                    .or_else(|| s.opt("mean").and_then(|v| v.as_f64().ok()).map(|m| m * n))
+                    .unwrap_or(0.0);
+                out.push_str(&format!("mpic_op_seconds_sum{{op=\"{esc}\"}} {}\n", fmt_num(sum)));
+                out.push_str(&format!("mpic_op_seconds_count{{op=\"{esc}\"}} {}\n", fmt_num(n)));
+            }
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -319,6 +585,82 @@ mod tests {
         assert_eq!(snap.get("tokens_out").unwrap().as_f64().unwrap(), 6.0);
         let ttft = snap.get("ttft_s").unwrap();
         assert_eq!(ttft.get("n").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    /// Satellite: every summary block surfaces p99/min/max, and the
+    /// snapshot carries uptime plus both lifetime and windowed rates.
+    #[test]
+    fn snapshot_has_p99_min_max_uptime_and_window_rates() {
+        let m = Metrics::new();
+        m.record_request(&fake_result(0.5));
+        m.record_request(&fake_result(1.5));
+        let snap = m.snapshot();
+        let ttft = snap.get("ttft_s").unwrap();
+        for key in ["p99", "min", "max", "sum"] {
+            assert!(ttft.get(key).is_ok(), "summary block missing {key}");
+        }
+        assert_eq!(ttft.get("min").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(ttft.get("max").unwrap().as_f64().unwrap(), 1.5);
+        assert!(snap.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+        // Both requests landed within the last 60s. The exact rate depends
+        // on wall time elapsed since `new()` (denominator is clamped to
+        // [1, 60] seconds), so assert the range, not the instant value.
+        let wrps = snap.get("window_rps").unwrap().as_f64().unwrap();
+        let wtps = snap.get("window_tps").unwrap().as_f64().unwrap();
+        assert!(wrps > 0.0 && wrps <= 2.0, "window_rps out of range: {wrps}");
+        assert!(wtps > 0.0 && wtps <= 6.0, "window_tps out of range: {wtps}");
+        assert!(snap.get("throughput_rps").unwrap().as_f64().unwrap() > 0.0);
+        let (rps, tps) = m.window_rates();
+        assert!(rps > 0.0 && rps <= 2.0 && tps > 0.0 && tps <= 6.0);
+    }
+
+    #[test]
+    fn window_ring_drops_stale_slots() {
+        let mut w = WindowRing::new();
+        w.record(0, 10);
+        w.record(1, 10);
+        assert_eq!(w.rates(1, 0.5), (2.0, 20.0), "uptime < 1s clamps the denominator to 1");
+        // 90 seconds later both slots are stale.
+        assert_eq!(w.rates(90, 90.0), (0.0, 0.0));
+        // Second 61 reuses slot 1 (61 % 60): the stale entry is replaced,
+        // not accumulated, and slot 0 is now out of range.
+        w.record(61, 5);
+        let (rps, tps) = w.rates(61, 61.0);
+        assert!((rps - (1.0 / 60.0)).abs() < 1e-12, "only the fresh slot counts: {rps}");
+        assert!((tps - (5.0 / 60.0)).abs() < 1e-12, "stale slots dropped: {tps}");
+    }
+
+    /// Acceptance: 1M samples through the metrics path holds allocation
+    /// constant (fixed histogram buckets + capped reservoir) while
+    /// percentiles stay within log2-bucket tolerance.
+    #[test]
+    fn metrics_memory_is_bounded_under_a_million_samples() {
+        let m = Metrics::new();
+        for i in 0..1_000_000u64 {
+            // Decode steps spread over (0, 0.02] seconds.
+            m.record_decode_step(((i % 1000) + 1) as f64 * 2e-5);
+            if i % 100 == 0 {
+                m.record_pipeline_round((i % 8) as usize, (i % 16) as usize);
+            }
+        }
+        let g = m.inner.lock().unwrap();
+        let n_buckets = Histogram::new().bucket_counts().len();
+        assert_eq!(g.decode_step.bucket_counts().len(), n_buckets, "histogram never grows");
+        assert!(g.batch_occupancy.sample_len() <= RESERVOIR_CAP, "reservoir is capped");
+        assert_eq!(g.decode_step.count(), 1_000_000);
+        drop(g);
+        let snap = m.snapshot();
+        let d = snap.get("decode_step_s").unwrap();
+        assert_eq!(d.get("n").unwrap().as_f64().unwrap(), 1_000_000.0);
+        for (key, truth) in [("p50", 0.01), ("p95", 0.019), ("p99", 0.0198)] {
+            let est = d.get(key).unwrap().as_f64().unwrap();
+            assert!(
+                est >= truth / 2.0 && est <= truth * 2.0,
+                "{key} estimate {est} outside bucket tolerance of {truth}"
+            );
+        }
+        assert_eq!(d.get("min").unwrap().as_f64().unwrap(), 2e-5);
+        assert_eq!(d.get("max").unwrap().as_f64().unwrap(), 0.02);
     }
 
     #[test]
@@ -412,5 +754,57 @@ mod tests {
         m.record_request(&fake_result(0.1));
         assert!(m.throughput_rps() > 0.0);
         assert!(m.throughput_tps() > 0.0);
+        assert!(m.uptime_s() >= 0.0);
+    }
+
+    #[test]
+    fn exposition_escaping() {
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\\b"), "a\\\\b");
+        assert_eq!(escape_label("say \"hi\""), "say \\\"hi\\\"");
+        assert_eq!(escape_label("two\nlines"), "two\\nlines");
+        assert_eq!(sanitize_name("cache.list"), "cache_list");
+        let m = Metrics::new();
+        m.record_op("weird\"op\\name", 0.1);
+        let text = prometheus_from_snapshot(&m.snapshot());
+        assert!(
+            text.contains("mpic_op_seconds_count{op=\"weird\\\"op\\\\name\"} 1"),
+            "label must be escaped: {text}"
+        );
+        assert!(!text.contains("weird\"op"), "raw quote must not survive");
+    }
+
+    /// The rendered exposition is well formed: every non-comment line is
+    /// `name{labels} value`, no duplicate series, cumulative buckets are
+    /// monotone and end with +Inf == count.
+    #[test]
+    fn exposition_is_well_formed() {
+        let m = Metrics::new();
+        m.record_request(&fake_result(0.5));
+        m.record_op("infer", 0.5);
+        m.record_op("stats", 0.001);
+        m.set_pipeline_counters(1, 2, 3, 4);
+        let text = prometheus_from_snapshot(&m.snapshot());
+        let mut seen = std::collections::HashSet::new();
+        let mut ttft_buckets = 0;
+        for line in text.lines() {
+            if line.starts_with('#') {
+                assert!(line.starts_with("# TYPE "), "only TYPE comments: {line}");
+                continue;
+            }
+            let (series, value) = line.rsplit_once(' ').expect("name value split");
+            assert!(!series.is_empty() && value.parse::<f64>().is_ok(), "bad line: {line}");
+            assert!(seen.insert(series.to_string()), "duplicate series: {series}");
+            if series.starts_with("mpic_ttft_seconds_bucket") {
+                ttft_buckets += 1;
+            }
+        }
+        assert!(ttft_buckets > 10, "ttft histogram buckets present: {ttft_buckets}");
+        assert!(text.contains("mpic_requests_total 1\n"));
+        assert!(text.contains("mpic_kv_device_hits_total"));
+        assert!(text.contains("mpic_cluster_peer_pulls_total"));
+        assert!(text.contains("mpic_ttft_seconds_count 1\n"));
+        // Cumulative: the +Inf bucket equals the count.
+        assert!(text.contains("mpic_ttft_seconds_bucket{le=\"+Inf\"} 1\n"));
     }
 }

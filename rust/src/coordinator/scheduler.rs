@@ -25,6 +25,7 @@ use super::selection::Policy;
 use crate::kv::block::{BlockAllocator, SeqId};
 use crate::mm::Prompt;
 use crate::util::stats::Samples;
+use crate::util::trace::{self, TraceId};
 use crate::Result;
 
 /// A queued request.
@@ -34,6 +35,10 @@ pub struct Request {
     pub prompt: Prompt,
     pub policy: Policy,
     pub max_new: usize,
+    /// Request trace id, when the caller is recording spans for this
+    /// request ([`crate::util::trace`]). `None` (offline paths, benches)
+    /// keeps engine instrumentation a no-op.
+    pub trace: Option<TraceId>,
 }
 
 /// Why a request completed without a result.
@@ -137,6 +142,7 @@ struct ActiveEntry {
     sid: SeqId,
     seq: ActiveSeq,
     queued_steps: usize,
+    trace: Option<TraceId>,
 }
 
 /// The scheduler. Owns the block allocator; borrows the engine per call.
@@ -304,6 +310,9 @@ impl Scheduler {
             let sid = SeqId(self.next_sid);
             self.next_sid += 1;
             self.blocks.alloc_seq(sid, footprint)?;
+            // Traced requests record engine-side spans (fetch/link/prefill)
+            // into the engine's flight recorder for the duration of the call.
+            let _scope = req.trace.map(|t| trace::Scope::enter(t, engine.tracer()));
             let seq = match engine.prefill(&req.prompt, req.policy, req.max_new) {
                 Ok(seq) => seq,
                 Err(e) => {
@@ -325,7 +334,7 @@ impl Scheduler {
             self.seq_of.insert(req.id, sid);
             self.stats.queue_wait.push(queued_steps as f64);
             on_event(SchedEvent::Admitted { id: req.id, queued_rounds: queued_steps });
-            self.active.push(ActiveEntry { id: req.id, sid, seq, queued_steps });
+            self.active.push(ActiveEntry { id: req.id, sid, seq, queued_steps, trace: req.trace });
             self.stats.admitted += 1;
             self.stats.max_active = self.stats.max_active.max(self.active.len());
         }
@@ -345,7 +354,10 @@ impl Scheduler {
         let mut still = Vec::new();
         for mut entry in self.active.drain(..) {
             let before = entry.seq.tokens.len();
-            match engine.decode_one(&mut entry.seq) {
+            let scope = entry.trace.map(|t| trace::Scope::enter(t, engine.tracer()));
+            let stepped = engine.decode_one(&mut entry.seq);
+            drop(scope);
+            match stepped {
                 Ok(more) => {
                     for i in before..entry.seq.tokens.len() {
                         on_event(SchedEvent::Token {
@@ -466,9 +478,9 @@ mod tests {
             .image(ImageId(9));
         // Same image id as p1/p2, but namespaced: a distinct prefetch key.
         let p3 = Prompt::new(UserId(3)).text("c").image(ImageId(3)).in_ns(&ns);
-        s.submit(Request { id: 1, prompt: p1, policy: Policy::Prefix, max_new: 4 });
-        s.submit(Request { id: 2, prompt: p2, policy: Policy::Prefix, max_new: 4 });
-        s.submit(Request { id: 3, prompt: p3, policy: Policy::Prefix, max_new: 4 });
+        s.submit(Request { id: 1, prompt: p1, policy: Policy::Prefix, max_new: 4, trace: None });
+        s.submit(Request { id: 2, prompt: p2, policy: Policy::Prefix, max_new: 4, trace: None });
+        s.submit(Request { id: 3, prompt: p3, policy: Policy::Prefix, max_new: 4, trace: None });
         let root = Namespace::default;
         assert_eq!(
             s.queued_segments(),
@@ -489,8 +501,8 @@ mod tests {
         use crate::mm::{ImageId, Prompt, UserId};
         let mut s = Scheduler::new(64, 16);
         let prompt = Prompt::new(UserId(1)).text("look at").image(ImageId(4));
-        s.submit(Request { id: 11, prompt: prompt.clone(), policy: Policy::Prefix, max_new: 4 });
-        s.submit(Request { id: 12, prompt, policy: Policy::Prefix, max_new: 4 });
+        s.submit(Request { id: 11, prompt: prompt.clone(), policy: Policy::Prefix, max_new: 4, trace: None });
+        s.submit(Request { id: 12, prompt, policy: Policy::Prefix, max_new: 4, trace: None });
         assert!(s.abort(999).is_none(), "unknown id is a no-op");
         let c = s.abort(11).expect("queued request must abort");
         assert_eq!(c.id, 11);
@@ -540,7 +552,7 @@ mod tests {
         let mut sched = Scheduler::new(4, 16);
         let prompt =
             crate::mm::Prompt::parse(crate::mm::UserId(1), "please describe the scene in detail");
-        sched.submit(Request { id: 7, prompt, policy: Policy::Prefix, max_new: 4096 });
+        sched.submit(Request { id: 7, prompt, policy: Policy::Prefix, max_new: 4096, trace: None });
 
         let completions = sched.step(&engine).expect("step");
         assert_eq!(completions.len(), 1, "rejection must surface as a completion");

@@ -5,9 +5,12 @@
 //!             [--queue-bound 64] [--max-batch 8] [--deadline-ms 30000]
 //!             [--conn-threads 8] [--kv-blocks 4096] [--block-tokens 16]
 //!             [--peers HOST:PORT,...] [--peer-timeout-ms 500]
+//!             [--metrics-addr HOST:PORT] [--slow-ms MS]
 //! mpic router --workers HOST:PORT,HOST:PORT,... [--listen 127.0.0.1:7400]
 //!             [--mode affinity|rr] [--probe-timeout-ms 300] [--stats-interval-ms 500]
+//!             [--metrics-addr HOST:PORT]
 //! mpic call   --json '{"v":3,"op":"stats"}' [--addr 127.0.0.1:7401]
+//! mpic trace  [--id TRACE_HEX] [--addr 127.0.0.1:7401]
 //! mpic lease         --handle IMAGE#NAME [--ttl-ms N] [--ns TENANT] [--addr ...]
 //! mpic lease-renew   --lease ID [--ttl-ms N] [--ns TENANT] [--addr ...]
 //! mpic lease-release --lease ID [--ns TENANT] [--addr ...]
@@ -110,6 +113,12 @@ fn run() -> anyhow::Result<()> {
                     block_tokens: args.usize_or("block-tokens", defaults.block_tokens)?,
                 },
                 conn_threads: args.usize_or("conn-threads", 8)?,
+                metrics_addr: args.get("metrics-addr").map(|s| s.to_string()),
+                slow_ms: args
+                    .get("slow-ms")
+                    .map(|s| s.parse::<u64>())
+                    .transpose()
+                    .context("--slow-ms must be milliseconds")?,
             };
             mpic::server::serve_with(&engine, &addr, cfg, |a| println!("listening on {a}"))?;
         }
@@ -124,6 +133,7 @@ fn run() -> anyhow::Result<()> {
                 std::time::Duration::from_millis(args.u64_or("probe-timeout-ms", 300)?);
             cfg.stats_interval =
                 std::time::Duration::from_millis(args.u64_or("stats-interval-ms", 500)?);
+            cfg.metrics_addr = args.get("metrics-addr").map(|s| s.to_string());
             let listen = args.str_or("listen", "127.0.0.1:7400");
             mpic::cluster::serve_router(cfg, &listen, |a| println!("router listening on {a}"))?;
         }
@@ -134,6 +144,67 @@ fn run() -> anyhow::Result<()> {
             let mut client = typed_client(&args)?;
             let last = client.call_raw(&req, |chunk| println!("{}", chunk.encode()))?;
             println!("{}", last.encode());
+        }
+
+        "trace" => {
+            // Flight-recorder client: `mpic trace` lists the worker's last
+            // completed traces; `mpic trace --id HEX` prints one trace's
+            // spans with offsets relative to the request start.
+            let mut client = typed_client(&args)?;
+            match args.get("id") {
+                Some(hex) => {
+                    let req = Value::obj(vec![
+                        ("v", Value::num(3.0)),
+                        ("op", Value::str("debug.trace")),
+                        ("id", Value::str("trace")),
+                        ("action", Value::str("get")),
+                        ("trace", Value::str(hex)),
+                    ]);
+                    let resp = client.call_raw(&req, |_| {})?;
+                    println!("trace {hex}  op={}  total={} us",
+                        resp.opt("op").and_then(|v| v.as_str().ok()).unwrap_or("?"),
+                        resp.opt("total_us").and_then(|v| v.as_f64().ok()).unwrap_or(0.0));
+                    if let Some(spans) = resp.opt("spans").and_then(|s| s.as_arr().ok()) {
+                        for s in spans {
+                            let name = s.opt("name").and_then(|v| v.as_str().ok()).unwrap_or("?");
+                            let start = s.opt("start_us").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+                            let dur = s.opt("dur_us").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+                            print!("  {start:>10.0} us  +{dur:<10.0}  {name}");
+                            // Attributes sit flat on the span object.
+                            if let Ok(obj) = s.as_obj() {
+                                for (k, v) in obj {
+                                    if !matches!(k.as_str(), "name" | "start_us" | "dur_us") {
+                                        print!("  {k}={}", v.encode());
+                                    }
+                                }
+                            }
+                            println!();
+                        }
+                    }
+                }
+                None => {
+                    let req = Value::obj(vec![
+                        ("v", Value::num(3.0)),
+                        ("op", Value::str("debug.trace")),
+                        ("id", Value::str("trace")),
+                        ("action", Value::str("list")),
+                    ]);
+                    let resp = client.call_raw(&req, |_| {})?;
+                    let empty = Vec::new();
+                    let traces =
+                        resp.opt("traces").and_then(|t| t.as_arr().ok()).unwrap_or(&empty);
+                    println!("{} recorded traces (newest first):", traces.len());
+                    for t in traces {
+                        println!(
+                            "  {}  op={:<12}  total={:>10.0} us  spans={}",
+                            t.opt("trace").and_then(|v| v.as_str().ok()).unwrap_or("?"),
+                            t.opt("op").and_then(|v| v.as_str().ok()).unwrap_or("?"),
+                            t.opt("total_us").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
+                            t.opt("spans").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
+                        );
+                    }
+                }
+            }
         }
 
         "lease" => {
@@ -244,6 +315,7 @@ fn run() -> anyhow::Result<()> {
                     prompt: c.turns[0].clone(),
                     policy,
                     max_new: args.usize_or("max-new", 16)?,
+                    trace: None,
                 });
             }
             let completions = sched.run_to_completion(&engine)?;
@@ -310,14 +382,18 @@ fn run() -> anyhow::Result<()> {
         }
 
         _ => {
-            println!("usage: mpic <serve|router|call|lease|lease-renew|lease-release|cancel|run|upload|upload-chunk|analyze> [options]");
+            println!("usage: mpic <serve|router|call|trace|lease|lease-renew|lease-release|cancel|run|upload|upload-chunk|analyze> [options]");
             println!("  serve         --addr HOST:PORT --model NAME --artifacts DIR");
             println!("                --queue-bound N --max-batch N --deadline-ms MS --conn-threads N");
             println!("                --kv-blocks N --block-tokens N");
             println!("                [--peers HOST:PORT,... --peer-timeout-ms MS]   (peer KV lane)");
+            println!("                [--metrics-addr HOST:PORT]  (Prometheus scrape endpoint)");
+            println!("                [--slow-ms MS]              (slow-request log threshold)");
             println!("  router        --workers HOST:PORT,HOST:PORT,... [--listen HOST:PORT]");
             println!("                [--mode affinity|rr --probe-timeout-ms MS --stats-interval-ms MS]");
+            println!("                [--metrics-addr HOST:PORT]  (aggregated cluster endpoint)");
             println!("  call          --json '{{\"v\":3,\"op\":\"stats\"}}' --addr HOST:PORT");
+            println!("  trace         [--id TRACE_HEX] --addr HOST:PORT   (flight recorder)");
             println!("  lease         --handle IMAGE#NAME [--ttl-ms N] [--ns TENANT] --addr HOST:PORT");
             println!("  lease-renew   --lease ID [--ttl-ms N] [--ns TENANT] --addr HOST:PORT");
             println!("  lease-release --lease ID [--ns TENANT] --addr HOST:PORT");

@@ -27,6 +27,7 @@ use crate::coordinator::{Engine, Policy};
 use crate::kv::{EntryInfo, Tier};
 use crate::mm::{ChunkId, ImageId, Namespace, Prompt, SegmentId, UserId};
 use crate::util::json::Value;
+use crate::util::trace::TraceId;
 
 // ----------------------------------------------------------------------
 // Errors
@@ -197,13 +198,16 @@ fn opt_bool(v: &Value, key: &str, default: bool) -> ApiResult<bool> {
 
 /// The fields common to every request: protocol version, optional request
 /// id (echoed verbatim on every reply line), the caller's tenant
-/// namespace (v3; defaults to the root namespace) and the operation name.
+/// namespace (v3; defaults to the root namespace), the operation name and
+/// an optional distributed-trace id (`"trace"`, 16 hex digits) linking
+/// spans recorded on this hop to the originating request's trace.
 #[derive(Debug, Clone)]
 pub struct Envelope {
     pub v: u64,
     pub id: Option<Value>,
     pub ns: Namespace,
     pub op: String,
+    pub trace: Option<TraceId>,
 }
 
 impl FromValue for Envelope {
@@ -239,7 +243,16 @@ impl FromValue for Envelope {
                 .map_err(|e| ApiError::new(ErrorCode::BadValue, format!("field \"ns\": {e:#}")))?,
         };
         let op = get_str(req, "op")?;
-        Ok(Envelope { v, id, ns, op })
+        let trace = match opt_str(req, "trace")? {
+            None => None,
+            Some(s) => Some(TraceId::parse(&s).ok_or_else(|| {
+                ApiError::new(
+                    ErrorCode::BadValue,
+                    format!("field \"trace\" must be 1-16 hex digits, got {s:?}"),
+                )
+            })?),
+        };
+        Ok(Envelope { v, id, ns, op, trace })
     }
 }
 
@@ -702,6 +715,16 @@ pub fn dispatch(
         _ => env.op.as_str(),
     };
     engine.metrics.record_op(op_key, t0.elapsed().as_secs_f64());
+    // A traced request from another hop (router, or a peer's kv.pull):
+    // file this hop's leg into the local flight recorder under the same
+    // trace id, so every hop of a cluster trace is inspectable in place.
+    // `debug.trace` is exempt — its "trace" field *addresses* a recorded
+    // trace, and filing the lookup itself would shadow the real one.
+    if let Some(t) = env.trace {
+        if env.op != "debug.trace" {
+            engine.tracer().record_oneshot(t, &env.op, t0, Instant::now(), &[]);
+        }
+    }
     match out {
         Ok(body) => merge_envelope(body, true, env.id.as_ref()),
         Err(e) => error_value(env.id.as_ref(), &e),
@@ -795,6 +818,54 @@ fn dispatch_op(
                 None => Err(ApiError::new(
                     ErrorCode::NotFound,
                     format!("no cached container for {}", key.file_stem()),
+                )),
+            }
+        }
+
+        // ----------------------------------------------------------
+        // Flight recorder: list recent completed traces, or fetch one
+        // trace (spans + attrs) by its 16-hex-digit id.
+        // ----------------------------------------------------------
+        "debug.trace" => {
+            let action = opt_str(req, "action")?.unwrap_or_else(|| "list".to_string());
+            match action.as_str() {
+                "list" => {
+                    let traces: Vec<Value> = engine
+                        .tracer()
+                        .recent()
+                        .into_iter()
+                        .map(|s| {
+                            Value::obj(vec![
+                                ("trace", Value::str(s.id.hex())),
+                                ("op", Value::str(s.op)),
+                                ("total_us", Value::num(s.total_us as f64)),
+                                ("spans", Value::num(s.n_spans as f64)),
+                            ])
+                        })
+                        .collect();
+                    Ok(Value::obj(vec![
+                        ("count", Value::num(traces.len() as f64)),
+                        ("traces", Value::Arr(traces)),
+                    ]))
+                }
+                "get" => {
+                    let id = env.trace.ok_or_else(|| {
+                        ApiError::new(
+                            ErrorCode::MissingField,
+                            "debug.trace get needs a \"trace\" id",
+                        )
+                    })?;
+                    match engine.tracer().get(id) {
+                        Some(t) => Ok(t),
+                        None => Err(ApiError::new(
+                            ErrorCode::NotFound,
+                            format!("no recorded trace {id} (evicted or never seen here)"),
+                        )),
+                    }
+                }
+                other => Err(ApiError::new(
+                    ErrorCode::BadValue,
+                    format!("debug.trace action must be \"list\" or \"get\", got {other:?}"),
                 )),
             }
         }
@@ -1110,6 +1181,19 @@ mod tests {
     }
 
     #[test]
+    fn envelope_parses_trace_id() {
+        let env =
+            Envelope::from_value(&parse(r#"{"v":3,"op":"ping","trace":"00ab34cd56ef7890"}"#))
+                .unwrap();
+        assert_eq!(env.trace.unwrap().hex(), "00ab34cd56ef7890");
+        let env = Envelope::from_value(&parse(r#"{"v":3,"op":"ping"}"#)).unwrap();
+        assert!(env.trace.is_none());
+        let e = Envelope::from_value(&parse(r#"{"v":3,"op":"ping","trace":"not-hex"}"#))
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadValue);
+    }
+
+    #[test]
     fn envelope_rejects_bad_version() {
         let e = Envelope::from_value(&parse(r#"{"v":9,"op":"ping"}"#)).unwrap_err();
         assert_eq!(e.code, ErrorCode::BadVersion);
@@ -1316,6 +1400,7 @@ mod tests {
             id: Some(Value::str("s1")),
             ns: Namespace::default(),
             op: "infer".into(),
+            trace: None,
         };
         let c = chunk_value(&env, 3, 42);
         assert!(c.get("ok").unwrap().as_bool().unwrap());

@@ -26,6 +26,12 @@
 //! * `"async"` — on `upload`/`add_reference`: accept immediately with a
 //!   job id and precompute off the decode critical path (poll
 //!   `upload.stat`).
+//! * `"trace"` — distributed-trace id (1–16 hex digits, see
+//!   [`crate::util::trace`]). Generations without one get a fresh id;
+//!   either way the final reply line echoes `"trace"` and the request's
+//!   spans land in the worker's flight recorder (`debug.trace`). The
+//!   router and the peer KV lane propagate the field across hops, so one
+//!   id follows a request router → worker → peer.
 //!
 //! ## Op table
 //!
@@ -53,6 +59,8 @@
 //! | `session.stat`        | `user`                                              | one session entry |
 //! | `kv.probe`            | `keys[]` (`{kind, segment, [ns]}`), [`model`]       | `bitmap[]`, `resident` — residency of each key in this worker's store, any tier. Peer KV lane (see [`crate::cluster`] for the topology); the router's affinity scoring and `PeerTransport` both speak it |
 //! | `kv.pull`             | `kind`, `segment` (hex), [`ns`, `model`]            | `frame` (base64 v4 codec container), `bytes` — the entry's encoded container verbatim from the local tiers, no re-encode; a peer admits it with `admit_container`. `not_found` when not resident |
+//! | `debug.trace`         | [`action`=`"list"`], `trace` (hex, for `get`)       | flight recorder: `list` → `count`, `traces[]` (id, op, total_us, span count, newest first); `action:"get"` + `trace` → one trace with its full span tree (`spans[]` with `name`, `start_us`, `dur_us`, attrs). `not_found` once evicted from the ring |
+//! | `stats.cluster`       | —                                                   | **router only**: per-worker `stats` snapshots (`workers[]`) plus an aggregated `metrics` tree (counters summed, histograms merged). Workers answer `unknown_op` |
 //! | `shutdown`            | —                                                   | `bye` |
 //!
 //! Example exchange (v3, pipelined ids, streaming):
@@ -172,8 +180,9 @@ pub mod pipeline;
 
 pub use client::{CacheEntry, InferHandle, InferOutcome, InferParams, Lease, MpicClient};
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 
@@ -191,11 +200,22 @@ pub struct ServeConfig {
     pub pipeline: PipelineConfig,
     /// Connection-handler pool size.
     pub conn_threads: usize,
+    /// Bind a Prometheus text-exposition scrape endpoint here
+    /// (`--metrics-addr HOST:PORT`); `None` = no endpoint.
+    pub metrics_addr: Option<String>,
+    /// Requests slower than this log a `warn` line with their span
+    /// breakdown (`--slow-ms`); `None` = slow-logging off.
+    pub slow_ms: Option<u64>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { pipeline: PipelineConfig::default(), conn_threads: 8 }
+        ServeConfig {
+            pipeline: PipelineConfig::default(),
+            conn_threads: 8,
+            metrics_addr: None,
+            slow_ms: None,
+        }
     }
 }
 
@@ -224,6 +244,23 @@ pub fn serve_with(
         cfg.pipeline.queue_bound,
         cfg.pipeline.max_batch
     );
+
+    // Observability: slow-request logging threshold + Prometheus scrape
+    // endpoint (its thread holds only `Arc<Metrics>` — the engine itself
+    // never leaves this thread).
+    engine
+        .tracer()
+        .set_slow_threshold(cfg.slow_ms.map(std::time::Duration::from_millis));
+    let metrics_stop = Arc::new(AtomicBool::new(false));
+    let mut metrics_thread = None;
+    if let Some(maddr) = &cfg.metrics_addr {
+        let m = Arc::clone(&engine.metrics);
+        let (bound, handle) = serve_metrics_http(maddr, Arc::clone(&metrics_stop), move || {
+            crate::coordinator::metrics::prometheus_from_snapshot(&m.snapshot())
+        })?;
+        log::info!("server: metrics endpoint listening on {bound}");
+        metrics_thread = Some(handle);
+    }
 
     let (tx, rx) = channel::<Job>();
     let gate = Arc::new(Gate::new(cfg.pipeline.queue_bound));
@@ -263,8 +300,56 @@ pub fn serve_with(
     // Unblock the acceptor with a dummy connection.
     let _ = TcpStream::connect(local);
     let _ = acceptor.join();
+    metrics_stop.store(true, Ordering::SeqCst);
+    if let Some(h) = metrics_thread {
+        let _ = h.join();
+    }
     log::info!("server: shut down");
     result
+}
+
+/// Minimal single-purpose HTTP endpoint for Prometheus scrapes: binds
+/// `addr`, answers **every** request (the path is not inspected — the
+/// endpoint serves nothing else) with `render()`'s text exposition, and
+/// exits when `stop` flips. Hand-rolled because the build vendors no HTTP
+/// crate; scrapers only need status line + `Content-Type` + body.
+pub(crate) fn serve_metrics_http(
+    addr: &str,
+    stop: Arc<AtomicBool>,
+    render: impl Fn() -> String + Send + 'static,
+) -> Result<(std::net::SocketAddr, std::thread::JoinHandle<()>)> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    let local = listener.local_addr()?;
+    let handle = std::thread::spawn(move || {
+        let poll = std::time::Duration::from_millis(50);
+        while !stop.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((mut s, _)) => {
+                    // Drain the request head best-effort; a scraper that
+                    // sends nothing still gets the exposition.
+                    s.set_read_timeout(Some(std::time::Duration::from_millis(500))).ok();
+                    let mut buf = [0u8; 1024];
+                    let _ = s.read(&mut buf);
+                    let body = render();
+                    let head = format!(
+                        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+                        body.len()
+                    );
+                    let _ = s.write_all(head.as_bytes());
+                    let _ = s.write_all(body.as_bytes());
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(poll);
+                }
+                Err(e) => {
+                    log::debug!("metrics endpoint: accept error: {e}");
+                    std::thread::sleep(poll);
+                }
+            }
+        }
+    });
+    Ok((local, handle))
 }
 
 fn write_line(writer: &mut TcpStream, v: &Value) -> Result<()> {

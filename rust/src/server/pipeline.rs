@@ -50,6 +50,7 @@ use crate::coordinator::session::SessionStore;
 use crate::coordinator::Engine;
 use crate::mm::{ImageId, Namespace, Prompt, UserId};
 use crate::util::json::Value;
+use crate::util::trace::TraceId;
 use crate::Result;
 
 /// How often the between-rounds tick asks the store to sweep expired
@@ -393,6 +394,10 @@ struct PendingGen {
     turn: Option<Prompt>,
     submitted: Instant,
     op: &'static str,
+    /// The request's trace in the engine's flight recorder (client- or
+    /// router-supplied via the `"trace"` envelope field, else freshly
+    /// minted here). Echoed on the final reply line.
+    trace: TraceId,
 }
 
 /// The engine-thread dispatch loop. Owns the scheduler, the sessions and
@@ -482,6 +487,7 @@ impl<'e> Pipeline<'e> {
         // instead of silently dropping its channel.
         for (_, p) in self.pending.drain() {
             self.gate.release();
+            self.engine.tracer().finish(p.trace);
             let _ = p.reply.send(api::error_value(
                 p.env.id.as_ref(),
                 &ApiError::new(ErrorCode::Internal, "server shutting down"),
@@ -503,7 +509,15 @@ impl<'e> Pipeline<'e> {
             if let SchedEvent::Token { id, index, token } = ev {
                 if let Some(p) = pending.get(&id) {
                     if p.stream {
+                        let t0 = Instant::now();
                         let _ = p.reply.send(api::chunk_value(&p.env, index, token));
+                        engine.tracer().record(
+                            p.trace,
+                            "stream_write",
+                            t0,
+                            Instant::now(),
+                            &[("seq", Value::num(index as f64))],
+                        );
                     }
                 }
             }
@@ -615,7 +629,7 @@ impl<'e> Pipeline<'e> {
     fn submit_generate(&mut self, job: Job, chat: bool) {
         let opname: &'static str = if chat { "chat" } else { "infer" };
         let t0 = Instant::now();
-        let Job { req, reply, .. } = job;
+        let Job { req, reply, enqueued, .. } = job;
         let env = match Envelope::from_value(&req) {
             Ok(env) => env,
             Err(e) => {
@@ -665,7 +679,16 @@ impl<'e> Pipeline<'e> {
         }
         let id = self.next_req;
         self.next_req += 1;
-        self.sched.submit(Request { id, prompt, policy, max_new });
+        // Open the trace only after every rejection path is behind us (an
+        // abandoned begin would sit in the recorder's active table
+        // forever). Anchoring at `enqueued` puts the admission-wait span
+        // at offset 0; it ends now — the moment the engine loop picked
+        // the job up — matching `metrics.admission_wait_s`.
+        let trace = env.trace.unwrap_or_else(TraceId::fresh);
+        let rec = self.engine.tracer();
+        rec.begin_at(trace, opname, enqueued);
+        rec.record(trace, "admission", enqueued, Instant::now(), &[]);
+        self.sched.submit(Request { id, prompt, policy, max_new, trace: Some(trace) });
         self.pending.insert(
             id,
             PendingGen {
@@ -677,6 +700,7 @@ impl<'e> Pipeline<'e> {
                 turn: turn_for_commit,
                 submitted: t0,
                 op: opname,
+                trace,
             },
         );
     }
@@ -687,7 +711,7 @@ impl<'e> Pipeline<'e> {
         if p.chat {
             self.busy_users.remove(&(p.env.ns.clone(), p.user));
         }
-        let line = match c.outcome {
+        let mut line = match c.outcome {
             Ok(result) => {
                 self.engine.metrics.record_request(&result);
                 let mut body = InferResp::from(&result).to_value();
@@ -719,6 +743,10 @@ impl<'e> Pipeline<'e> {
             }
         };
         self.engine.metrics.record_op(p.op, p.submitted.elapsed().as_secs_f64());
+        // Close the trace (fires the slow-request log past `--slow-ms`)
+        // and echo its id so the caller can fetch spans via `debug.trace`.
+        self.engine.tracer().finish(p.trace);
+        line.set("trace", Value::str(p.trace.hex()));
         // Release before the final line so a client that reacts to the
         // reply immediately finds its slot already free.
         self.gate.release();

@@ -13,3 +13,4 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;
+pub mod trace;

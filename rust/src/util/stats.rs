@@ -82,6 +82,278 @@ impl Samples {
     }
 }
 
+/// Fixed log-bucketed histogram: constant memory however many values are
+/// observed, O(buckets) percentile queries, and cumulative bucket counts in
+/// the shape Prometheus histogram exposition wants.
+///
+/// Buckets are powers of two from `2^MIN_EXP` to `2^MAX_EXP` (≈1 µs to ≈256 s
+/// for latencies in seconds) plus an overflow bucket, so a quantile estimate
+/// is exact to within one bucket (a factor of 2). Exact `sum`, `count`, `min`
+/// and `max` are tracked on the side; `mean()` is therefore exact.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+const MIN_EXP: i32 = -20;
+const MAX_EXP: i32 = 8;
+const N_BOUNDS: usize = (MAX_EXP - MIN_EXP + 1) as usize;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            // One count per finite upper bound, plus the +Inf overflow.
+            counts: vec![0; N_BOUNDS + 1],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Finite bucket upper bounds (`le` labels, excluding `+Inf`).
+    pub fn bounds() -> impl Iterator<Item = f64> {
+        (MIN_EXP..=MAX_EXP).map(|e| (e as f64).exp2())
+    }
+
+    fn bucket_of(x: f64) -> usize {
+        // Index of the first bound with x <= bound; NaN and negatives fall
+        // into the first bucket rather than poisoning the structure.
+        if !(x > 0.0) {
+            return 0;
+        }
+        let e = x.log2().ceil() as i64;
+        (e.clamp(MIN_EXP as i64, MAX_EXP as i64 + 1) - MIN_EXP as i64) as usize
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        if x.is_nan() {
+            return;
+        }
+        self.counts[Self::bucket_of(x)] += 1;
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Per-bucket (non-cumulative) counts, one per finite bound plus the
+    /// overflow bucket last.
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Quantile estimate, `p` in `[0, 100]`: linear interpolation inside the
+    /// bucket containing the target rank, clamped to the observed min/max.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = (p / 100.0).clamp(0.0, 1.0) * self.count as f64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if (seen + c) as f64 >= rank {
+                let lower = if i == 0 { 0.0 } else { ((MIN_EXP + i as i32 - 1) as f64).exp2() };
+                let upper = if i < N_BOUNDS {
+                    ((MIN_EXP + i as i32) as f64).exp2()
+                } else {
+                    self.max
+                };
+                let frac = ((rank - seen as f64) / c as f64).clamp(0.0, 1.0);
+                let est = lower + (upper - lower) * frac;
+                return est.clamp(self.min, self.max);
+            }
+            seen += c;
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Fold another histogram into this one (cluster-level aggregation).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Bounded uniform sample: Vitter's Algorithm R over a deterministic
+/// SplitMix64 stream. Exact mean/min/max on the side; percentile queries
+/// sort at most `cap` values, so a week of pushes costs constant memory.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    cap: usize,
+    xs: Vec<f64>,
+    seen: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    rng: crate::util::rng::Rng,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Reservoir {
+            cap,
+            xs: Vec::new(),
+            seen: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            rng: crate::util::rng::Rng::new(0x6d70_6963), // "mpic"
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x.is_nan() {
+            return;
+        }
+        self.seen += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if self.xs.len() < self.cap {
+            self.xs.push(x);
+        } else {
+            let j = self.rng.below(self.seen) as usize;
+            if j < self.cap {
+                self.xs[j] = x;
+            }
+        }
+    }
+
+    /// Total values pushed (not the retained sample size).
+    pub fn len(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seen == 0
+    }
+
+    pub fn sample_len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.seen == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.seen as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.seen == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.seen == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Percentile over the retained sample (exact while `seen <= cap`).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0).clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+        let (lo, hi) = (rank.floor() as usize, rank.ceil() as usize);
+        if lo == hi {
+            sorted[lo]
+        } else {
+            let frac = rank - lo as f64;
+            sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+        }
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
 /// Empirical CDF over a sample set: returns `(x, F(x))` pairs at each sample.
 pub fn ecdf(xs: &[f64]) -> Vec<(f64, f64)> {
     let mut sorted: Vec<f64> = xs.to_vec();
@@ -127,6 +399,88 @@ mod tests {
         let s = Samples::new();
         assert!(s.mean().is_nan());
         assert!(s.p50().is_nan());
+    }
+
+    /// Bucket boundaries are `le` (inclusive-upper): a value exactly on a
+    /// power of two lands in that bound's bucket, a hair above spills into
+    /// the next, and out-of-range values land in the first / overflow
+    /// buckets instead of being dropped.
+    #[test]
+    fn histogram_bucket_boundaries() {
+        let bounds: Vec<f64> = Histogram::bounds().collect();
+        assert_eq!(bounds.len(), N_BOUNDS);
+        assert_eq!(bounds[0], (MIN_EXP as f64).exp2());
+        assert_eq!(*bounds.last().unwrap(), (MAX_EXP as f64).exp2());
+
+        let mut h = Histogram::new();
+        h.observe(1.0); // == 2^0, inclusive upper bound
+        let idx_one = (0 - MIN_EXP) as usize;
+        assert_eq!(h.bucket_counts()[idx_one], 1);
+        h.observe(1.0000001); // just above 2^0 → next bucket
+        assert_eq!(h.bucket_counts()[idx_one + 1], 1);
+        h.observe(0.0); // non-positive → first bucket
+        h.observe(-3.0);
+        assert_eq!(h.bucket_counts()[0], 2);
+        h.observe(1e12); // beyond the last bound → overflow bucket
+        assert_eq!(h.bucket_counts()[N_BOUNDS], 1);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.max(), 1e12);
+        assert_eq!(h.min(), -3.0);
+    }
+
+    /// Quantiles come back within one log2 bucket of the true value, and
+    /// memory stays constant however many values are observed.
+    #[test]
+    fn histogram_quantiles_within_bucket_tolerance() {
+        let mut h = Histogram::new();
+        let n_buckets = h.bucket_counts().len();
+        for i in 0..100_000u64 {
+            // Uniform latencies in (0, 0.1] seconds.
+            h.observe((i + 1) as f64 * 1e-6);
+        }
+        assert_eq!(h.bucket_counts().len(), n_buckets, "no allocation growth");
+        assert!((h.mean() - 0.05).abs() < 1e-3, "mean is exact: {}", h.mean());
+        for (p, truth) in [(50.0, 0.05), (95.0, 0.095), (99.0, 0.099)] {
+            let est = h.percentile(p);
+            assert!(
+                est >= truth / 2.0 && est <= truth * 2.0,
+                "p{p} estimate {est} not within a bucket of {truth}"
+            );
+        }
+        assert_eq!(h.percentile(100.0), h.max());
+        assert!(Histogram::new().p50().is_nan());
+    }
+
+    #[test]
+    fn histogram_merge_sums_counts() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.observe(0.001);
+        b.observe(0.001);
+        b.observe(4.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!((a.sum() - 4.002).abs() < 1e-12);
+        assert_eq!(a.max(), 4.0);
+        let idx = Histogram::bucket_of(0.001);
+        assert_eq!(a.bucket_counts()[idx], 2);
+    }
+
+    #[test]
+    fn reservoir_caps_memory_keeps_exact_aggregates() {
+        let mut r = Reservoir::new(64);
+        for i in 0..10_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.sample_len(), 64, "retained sample is capped");
+        assert_eq!(r.len(), 10_000);
+        assert!((r.mean() - 4999.5).abs() < 1e-9, "mean is exact");
+        assert_eq!(r.min(), 0.0);
+        assert_eq!(r.max(), 9999.0);
+        // The uniform sample keeps the median in the right neighbourhood.
+        let p50 = r.p50();
+        assert!((1000.0..9000.0).contains(&p50), "p50={p50}");
+        assert!(Reservoir::new(4).p50().is_nan());
     }
 
     #[test]

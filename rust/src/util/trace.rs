@@ -1,0 +1,517 @@
+//! Request-scoped tracing and the flight recorder (substrate S8).
+//!
+//! MPIC's value claim is latency *decomposition* — fetch vs. link vs.
+//! compute, local tier vs. peer pull — so every request carries a
+//! [`TraceId`] and records named [`Span`]s as it moves through admission,
+//! KV fetch, peer probe/pull, linking, selective-recompute prefill, decode
+//! rounds and stream writes. The id travels on the wire (optional `"trace"`
+//! envelope field), so a router-forwarded request and the peer `kv.pull`s
+//! it triggers share one trace across the cluster.
+//!
+//! Three pieces, no external deps (matching the hand-rolled
+//! [`crate::util::json`] style):
+//!
+//! - **[`Recorder`]** — per-process (one per [`crate::coordinator::Engine`])
+//!   span sink. Active traces accumulate spans; finished traces move into a
+//!   bounded ring buffer (the *flight recorder*) holding the last N for
+//!   post-hoc inspection through the `debug.trace` wire op / `mpic trace`
+//!   CLI. Any finished trace slower than the configured threshold
+//!   (`--slow-ms`) is also emitted through the `log` facade at `warn`, so
+//!   `MPIC_LOG=warn` surfaces slow requests with their span breakdown.
+//! - **Thread-local scope** — [`Scope::enter`] pins a `(TraceId, Recorder)`
+//!   pair to the current thread so deep layers (the transfer engine, a
+//!   cluster [`crate::kv::Transport`]) can attribute spans to the request
+//!   being served without threading a context argument through every
+//!   signature. The engine thread serves one prefill/decode call at a time,
+//!   which is exactly the granularity the scope guards.
+//! - **[`Span`]** — name + `[start_us, start_us+dur_us]` offsets from the
+//!   trace start, plus free-form attributes (`tier`, `bytes`, `peer`, ...).
+//!   Spans render sorted by start offset, so a healthy trace reads
+//!   monotonically: admission → fetch → peer pull → prefill → decode.
+//!
+//! Memory is bounded everywhere: the ring keeps `keep` traces, each trace
+//! caps spans at [`MAX_SPANS`] (excess spans are counted, not stored).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Value;
+
+/// Maximum spans retained per trace; later spans are counted as dropped.
+pub const MAX_SPANS: usize = 512;
+
+/// Default flight-recorder depth (completed traces retained).
+pub const DEFAULT_KEEP: usize = 128;
+
+/// A cluster-unique request trace id (rendered as 16 lowercase hex digits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TraceId(pub u64);
+
+impl TraceId {
+    /// Generate a fresh id: process id, wall clock and a process-local
+    /// counter hashed together — unique across the workers of a cluster
+    /// without coordination.
+    pub fn fresh() -> TraceId {
+        static COUNTER: AtomicU64 = AtomicU64::new(1);
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let mut bytes = [0u8; 24];
+        bytes[..8].copy_from_slice(&nanos.to_le_bytes());
+        bytes[8..16].copy_from_slice(&(std::process::id() as u64).to_le_bytes());
+        bytes[16..].copy_from_slice(&COUNTER.fetch_add(1, Ordering::Relaxed).to_le_bytes());
+        let h = crate::util::rng::fnv1a(&bytes);
+        TraceId(if h == 0 { 1 } else { h })
+    }
+
+    /// Parse the 16-hex-digit wire form.
+    pub fn parse(s: &str) -> Option<TraceId> {
+        if s.is_empty() || s.len() > 16 {
+            return None;
+        }
+        u64::from_str_radix(s, 16).ok().filter(|&v| v != 0).map(TraceId)
+    }
+
+    /// Wire form: 16 lowercase hex digits.
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+impl std::fmt::Display for TraceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+/// One timed, named interval inside a trace. Offsets are microseconds from
+/// the trace start, so spans from different machines' clocks never mix.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub name: String,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub attrs: Vec<(String, Value)>,
+}
+
+impl Span {
+    fn to_value(&self) -> Value {
+        let mut v = Value::obj(vec![
+            ("name", Value::str(&self.name)),
+            ("start_us", Value::num(self.start_us as f64)),
+            ("dur_us", Value::num(self.dur_us as f64)),
+        ]);
+        for (k, attr) in &self.attrs {
+            v.set(k, attr.clone());
+        }
+        v
+    }
+}
+
+#[derive(Debug)]
+struct Trace {
+    id: TraceId,
+    op: String,
+    started: Instant,
+    spans: Vec<Span>,
+    dropped_spans: u64,
+    /// Set when the trace moves into the ring.
+    total_us: Option<u64>,
+}
+
+impl Trace {
+    fn to_value(&self) -> Value {
+        let mut spans = self.spans.clone();
+        spans.sort_by_key(|s| (s.start_us, s.start_us + s.dur_us));
+        let mut v = Value::obj(vec![
+            ("trace", Value::str(self.id.hex())),
+            ("op", Value::str(&self.op)),
+            ("done", Value::Bool(self.total_us.is_some())),
+            (
+                "total_us",
+                Value::num(self.total_us.unwrap_or_else(|| {
+                    spans.last().map(|s| s.start_us + s.dur_us).unwrap_or(0)
+                }) as f64),
+            ),
+            ("spans", Value::arr(spans.iter().map(Span::to_value).collect())),
+        ]);
+        if self.dropped_spans > 0 {
+            v.set("dropped_spans", Value::num(self.dropped_spans as f64));
+        }
+        v
+    }
+}
+
+/// One row of [`Recorder::recent`].
+#[derive(Debug, Clone)]
+pub struct TraceSummary {
+    pub id: TraceId,
+    pub op: String,
+    pub total_us: u64,
+    pub n_spans: usize,
+}
+
+struct Inner {
+    active: HashMap<u64, Trace>,
+    /// Flight-recorder ring: completed traces, oldest first.
+    done: VecDeque<Trace>,
+    keep: usize,
+    slow: Option<Duration>,
+}
+
+/// Span sink + flight recorder. One per engine; shared by reference with
+/// the serving pipeline, the scheduler, and (through the thread-local
+/// [`Scope`]) the transfer/transport layers.
+pub struct Recorder {
+    inner: Mutex<Inner>,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Recorder::new(DEFAULT_KEEP)
+    }
+}
+
+impl Recorder {
+    /// `keep`: flight-recorder depth (completed traces retained).
+    pub fn new(keep: usize) -> Recorder {
+        Recorder {
+            inner: Mutex::new(Inner {
+                active: HashMap::new(),
+                done: VecDeque::new(),
+                keep: keep.max(1),
+                slow: None,
+            }),
+        }
+    }
+
+    /// Traces finishing slower than this are logged at `warn` with their
+    /// span breakdown (`--slow-ms`); `None` disables the slow log.
+    pub fn set_slow_threshold(&self, d: Option<Duration>) {
+        self.inner.lock().unwrap().slow = d;
+    }
+
+    pub fn slow_threshold(&self) -> Option<Duration> {
+        self.inner.lock().unwrap().slow
+    }
+
+    /// Open a trace. `start` anchors span offsets (pass the enqueue time so
+    /// the admission-wait span starts at offset 0). Re-opening an already
+    /// active id is a no-op, so a retried begin cannot clobber spans.
+    pub fn begin_at(&self, id: TraceId, op: &str, start: Instant) {
+        let mut g = self.inner.lock().unwrap();
+        g.active.entry(id.0).or_insert_with(|| Trace {
+            id,
+            op: op.to_string(),
+            started: start,
+            spans: Vec::new(),
+            dropped_spans: 0,
+            total_us: None,
+        });
+    }
+
+    /// Append one span to an active trace; silently ignored when the id is
+    /// not active (tracing must never fail a request).
+    pub fn record(
+        &self,
+        id: TraceId,
+        name: &str,
+        start: Instant,
+        end: Instant,
+        attrs: &[(&str, Value)],
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        let Some(t) = g.active.get_mut(&id.0) else { return };
+        if t.spans.len() >= MAX_SPANS {
+            t.dropped_spans += 1;
+            return;
+        }
+        let start_us = start.saturating_duration_since(t.started).as_micros() as u64;
+        let dur_us = end.saturating_duration_since(start).as_micros() as u64;
+        t.spans.push(Span {
+            name: name.to_string(),
+            start_us,
+            dur_us,
+            attrs: attrs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+        });
+    }
+
+    /// Record a span on a trace this process never opened (e.g. a worker
+    /// serving a peer's `kv.pull`): appends when the trace is active,
+    /// otherwise files a single-span completed trace straight into the ring
+    /// so remote legs of a cluster trace are inspectable on every hop.
+    pub fn record_oneshot(
+        &self,
+        id: TraceId,
+        op: &str,
+        start: Instant,
+        end: Instant,
+        attrs: &[(&str, Value)],
+    ) {
+        {
+            let g = self.inner.lock().unwrap();
+            if g.active.contains_key(&id.0) {
+                drop(g);
+                self.record(id, op, start, end, attrs);
+                return;
+            }
+        }
+        self.begin_at(id, op, start);
+        self.record(id, op, start, end, attrs);
+        self.finish(id);
+    }
+
+    /// Close a trace: move it into the flight-recorder ring (evicting the
+    /// oldest entry past `keep`) and fire the slow-request log when it beat
+    /// the threshold. Returns `(total_seconds, was_slow)`, or `None` when
+    /// the id was not active.
+    pub fn finish(&self, id: TraceId) -> Option<(f64, bool)> {
+        let mut g = self.inner.lock().unwrap();
+        let mut t = g.active.remove(&id.0)?;
+        let total = t.started.elapsed();
+        t.total_us = Some(total.as_micros() as u64);
+        let slow = g.slow.is_some_and(|thresh| total >= thresh);
+        if slow {
+            let mut parts: Vec<String> = t
+                .spans
+                .iter()
+                .take(16)
+                .map(|s| format!("{}:{:.1}ms", s.name, s.dur_us as f64 / 1e3))
+                .collect();
+            if t.spans.len() > 16 {
+                parts.push(format!("(+{} spans)", t.spans.len() - 16));
+            }
+            log::warn!(
+                target: "mpic::trace",
+                "slow request trace={} op={} total={:.3}s spans=[{}]",
+                t.id,
+                t.op,
+                total.as_secs_f64(),
+                parts.join(" ")
+            );
+        }
+        while g.done.len() >= g.keep {
+            g.done.pop_front();
+        }
+        g.done.push_back(t);
+        Some((total.as_secs_f64(), slow))
+    }
+
+    /// Completed traces, newest first.
+    pub fn recent(&self) -> Vec<TraceSummary> {
+        let g = self.inner.lock().unwrap();
+        g.done
+            .iter()
+            .rev()
+            .map(|t| TraceSummary {
+                id: t.id,
+                op: t.op.clone(),
+                total_us: t.total_us.unwrap_or(0),
+                n_spans: t.spans.len(),
+            })
+            .collect()
+    }
+
+    /// One trace as structured JSON (completed traces first, then active
+    /// ones, which render with `"done": false`).
+    pub fn get(&self, id: TraceId) -> Option<Value> {
+        let g = self.inner.lock().unwrap();
+        g.done
+            .iter()
+            .rev()
+            .find(|t| t.id == id)
+            .or_else(|| g.active.get(&id.0))
+            .map(Trace::to_value)
+    }
+}
+
+thread_local! {
+    static CURRENT: std::cell::RefCell<Vec<(TraceId, Arc<Recorder>)>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// RAII guard pinning a trace to the current thread; see [`Scope::enter`].
+pub struct Scope {
+    _private: (),
+}
+
+impl Scope {
+    /// Make `id` the current trace on this thread until the guard drops.
+    /// Scopes nest (the previous trace is restored on drop).
+    pub fn enter(id: TraceId, recorder: &Arc<Recorder>) -> Scope {
+        CURRENT.with(|c| c.borrow_mut().push((id, Arc::clone(recorder))));
+        Scope { _private: () }
+    }
+}
+
+impl Drop for Scope {
+    fn drop(&mut self) {
+        CURRENT.with(|c| {
+            c.borrow_mut().pop();
+        });
+    }
+}
+
+/// The trace pinned to this thread, if any.
+pub fn current() -> Option<TraceId> {
+    CURRENT.with(|c| c.borrow().last().map(|(id, _)| *id))
+}
+
+/// Record a span `[start, now]` against the thread's current trace; no-op
+/// when no trace is in scope (offline paths trace nothing, cost one TLS
+/// read).
+pub fn record(name: &str, start: Instant, attrs: &[(&str, Value)]) {
+    CURRENT.with(|c| {
+        if let Some((id, rec)) = c.borrow().last() {
+            rec.record(*id, name, start, Instant::now(), attrs);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_id_roundtrip() {
+        let id = TraceId::fresh();
+        assert_ne!(id.0, 0);
+        assert_eq!(TraceId::parse(&id.hex()), Some(id));
+        assert_eq!(id.hex().len(), 16);
+        assert_eq!(TraceId::parse("0"), None, "zero is reserved");
+        assert_eq!(TraceId::parse(""), None);
+        assert_eq!(TraceId::parse("zz"), None);
+        assert_eq!(TraceId::parse("00000000000000000a"), None, "too long");
+        assert_ne!(TraceId::fresh(), TraceId::fresh());
+    }
+
+    /// The flight recorder is a ring: oldest completed traces evict first,
+    /// and `recent` lists newest-first.
+    #[test]
+    fn ring_buffer_eviction_order() {
+        let rec = Recorder::new(2);
+        let ids: Vec<TraceId> = (1..=3).map(TraceId).collect();
+        for (i, id) in ids.iter().enumerate() {
+            let t0 = Instant::now();
+            rec.begin_at(*id, &format!("op{i}"), t0);
+            rec.record(*id, "work", t0, Instant::now(), &[]);
+            assert!(rec.finish(*id).is_some());
+        }
+        let recent = rec.recent();
+        assert_eq!(recent.len(), 2, "ring holds only the last `keep` traces");
+        assert_eq!(recent[0].id, ids[2], "newest first");
+        assert_eq!(recent[1].id, ids[1]);
+        assert!(rec.get(ids[0]).is_none(), "evicted trace is gone");
+        assert!(rec.get(ids[1]).is_some());
+        assert!(rec.finish(ids[0]).is_none(), "finish of unknown id is a no-op");
+    }
+
+    #[test]
+    fn spans_render_sorted_with_attrs() {
+        let rec = Recorder::new(4);
+        let id = TraceId(7);
+        let t0 = Instant::now();
+        rec.begin_at(id, "infer", t0);
+        let mid = t0 + Duration::from_millis(5);
+        let late = t0 + Duration::from_millis(9);
+        // Record out of order; rendering must sort by start offset.
+        rec.record(id, "decode", late, late + Duration::from_millis(1), &[]);
+        rec.record(id, "fetch", mid, late, &[("bytes", Value::num(42.0))]);
+        rec.finish(id);
+        let v = rec.get(id).unwrap();
+        assert_eq!(v.get("op").unwrap().as_str().unwrap(), "infer");
+        assert!(v.get("done").unwrap().as_bool().unwrap());
+        let spans = v.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].get("name").unwrap().as_str().unwrap(), "fetch");
+        assert_eq!(spans[0].get("bytes").unwrap().as_u64().unwrap(), 42);
+        assert_eq!(spans[1].get("name").unwrap().as_str().unwrap(), "decode");
+        assert!(
+            spans[0].get("start_us").unwrap().as_u64().unwrap()
+                <= spans[1].get("start_us").unwrap().as_u64().unwrap()
+        );
+    }
+
+    #[test]
+    fn span_cap_counts_drops() {
+        let rec = Recorder::new(2);
+        let id = TraceId(9);
+        let t0 = Instant::now();
+        rec.begin_at(id, "infer", t0);
+        for _ in 0..(MAX_SPANS + 3) {
+            rec.record(id, "s", t0, Instant::now(), &[]);
+        }
+        rec.finish(id);
+        let v = rec.get(id).unwrap();
+        assert_eq!(v.get("spans").unwrap().as_arr().unwrap().len(), MAX_SPANS);
+        assert_eq!(v.get("dropped_spans").unwrap().as_u64().unwrap(), 3);
+    }
+
+    #[test]
+    fn slow_threshold_marks_finish() {
+        let rec = Recorder::new(2);
+        let id = TraceId(11);
+        rec.begin_at(id, "infer", Instant::now());
+        rec.set_slow_threshold(Some(Duration::from_secs(3600)));
+        let (_, slow) = rec.finish(id).unwrap();
+        assert!(!slow, "an hour threshold cannot trip instantly");
+        let id2 = TraceId(12);
+        rec.begin_at(id2, "infer", Instant::now());
+        rec.set_slow_threshold(Some(Duration::ZERO));
+        let (total, slow) = rec.finish(id2).unwrap();
+        assert!(slow, "zero threshold flags everything");
+        assert!(total >= 0.0);
+    }
+
+    #[test]
+    fn oneshot_files_completed_trace() {
+        let rec = Arc::new(Recorder::new(4));
+        let id = TraceId(21);
+        let t0 = Instant::now();
+        rec.record_oneshot(id, "kv.pull", t0, t0 + Duration::from_millis(2), &[]);
+        let v = rec.get(id).unwrap();
+        assert!(v.get("done").unwrap().as_bool().unwrap());
+        assert_eq!(v.get("spans").unwrap().as_arr().unwrap().len(), 1);
+
+        // When the trace is active locally, oneshot appends instead.
+        let id2 = TraceId(22);
+        rec.begin_at(id2, "infer", t0);
+        rec.record_oneshot(id2, "kv.pull", t0, t0 + Duration::from_millis(1), &[]);
+        assert_eq!(rec.recent().len(), 1, "active trace did not finish");
+        rec.finish(id2);
+        let v = rec.get(id2).unwrap();
+        assert_eq!(v.get("spans").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn thread_local_scope_nests_and_clears() {
+        let rec = Arc::new(Recorder::new(4));
+        assert_eq!(current(), None);
+        let id = TraceId(31);
+        rec.begin_at(id, "infer", Instant::now());
+        {
+            let _g = Scope::enter(id, &rec);
+            assert_eq!(current(), Some(id));
+            {
+                let inner = TraceId(32);
+                rec.begin_at(inner, "nested", Instant::now());
+                let _g2 = Scope::enter(inner, &rec);
+                assert_eq!(current(), Some(inner));
+                super::record("inner-span", Instant::now(), &[]);
+                rec.finish(inner);
+            }
+            assert_eq!(current(), Some(id), "outer scope restored");
+            super::record("outer-span", Instant::now(), &[]);
+        }
+        assert_eq!(current(), None);
+        super::record("dropped", Instant::now(), &[]); // no scope: must not panic
+        rec.finish(id);
+        let spans = rec.get(id).unwrap();
+        let spans = spans.get("spans").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].get("name").unwrap().as_str().unwrap(), "outer-span");
+    }
+}

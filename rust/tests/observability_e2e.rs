@@ -1,0 +1,336 @@
+//! Observability end-to-end: one trace id following a request across the
+//! cluster, the flight recorder answering for it, and the Prometheus
+//! endpoints rendering well-formed exposition on both worker and router.
+//!
+//! * A generation submitted through `mpic router` without a trace id gets
+//!   one minted at the router, serves on a worker that peer-pulls its KV
+//!   from another worker, and the final reply echoes the id. `debug.trace
+//!   get` on the serving worker then returns ONE trace whose spans cover
+//!   admission → fetch → peer_pull → prefill → decode, ordered by start
+//!   offset, with the peer_pull span carrying the pulled byte count.
+//! * Scraping `--metrics-addr` on the worker and on the router yields
+//!   parseable exposition: TYPE-only comments, no duplicate series, the
+//!   `mpic_ttft_seconds` bucket family present with +Inf == count.
+//! * The slow-request log fires through the `log` facade when a finished
+//!   trace exceeds the threshold (recorder-level, no artifacts needed).
+//!
+//! The cluster test skips when artifacts are not built (same contract as
+//! `serving_e2e` / `cluster_e2e`).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use mpic::cluster::{serve_router, PeerConfig, PeerTransport, RouterConfig};
+use mpic::coordinator::{Engine, EngineConfig};
+use mpic::server::{serve_with, Client, ServeConfig};
+use mpic::util::json::Value;
+use mpic::util::trace::{Recorder, TraceId};
+
+fn artifacts_ready() -> bool {
+    let ready = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ready && std::env::var("MPIC_REQUIRE_ARTIFACTS").map_or(false, |v| !v.is_empty()) {
+        panic!("MPIC_REQUIRE_ARTIFACTS is set but artifacts/manifest.json is missing");
+    }
+    ready
+}
+
+fn v(s: &str) -> Value {
+    Value::parse(s).unwrap()
+}
+
+fn assert_ok(resp: &Value) {
+    assert!(resp.get("ok").unwrap().as_bool().unwrap(), "expected ok: {}", resp.encode());
+}
+
+/// A free `127.0.0.1` address for a metrics endpoint: bind :0, note the
+/// port, release it. The tiny reuse race is acceptable in tests.
+fn free_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let a = l.local_addr().unwrap();
+    drop(l);
+    a.to_string()
+}
+
+/// Spawn one worker (engine + PJRT stay on the serving thread, as in
+/// `cluster_e2e`), with an optional Prometheus endpoint.
+fn spawn_worker(
+    tag: &'static str,
+    peers: Vec<SocketAddr>,
+    metrics_addr: Option<String>,
+) -> (SocketAddr, JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let dir = std::env::temp_dir().join(format!("mpic-obs-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut engine = Engine::new(EngineConfig {
+            model: "mpic-sim-a".into(),
+            store: mpic::kv::StoreConfig { disk_dir: dir, ..Default::default() },
+            max_new_tokens: 4,
+            ..Default::default()
+        })
+        .expect("engine");
+        if !peers.is_empty() {
+            let counters = Arc::clone(engine.metrics.cluster());
+            engine.set_transport(Arc::new(PeerTransport::new(
+                peers,
+                PeerConfig::default(),
+                counters,
+            )));
+        }
+        let cfg = ServeConfig { metrics_addr, ..Default::default() };
+        serve_with(&engine, "127.0.0.1:0", cfg, |a| {
+            tx.send(a).unwrap();
+        })
+        .expect("serve");
+    });
+    (rx.recv().unwrap(), handle)
+}
+
+fn shutdown_worker(addr: SocketAddr, handle: JoinHandle<()>) {
+    let mut c = Client::connect(addr).unwrap();
+    let resp = c.call(&v(r#"{"v":3,"id":"bye","op":"shutdown"}"#)).unwrap();
+    assert_ok(&resp);
+    handle.join().unwrap();
+}
+
+/// One raw HTTP GET against a metrics endpoint, with a brief retry while
+/// the endpoint thread binds. Returns the exposition body.
+fn scrape(addr: &str) -> String {
+    let mut last = None;
+    for _ in 0..50 {
+        match TcpStream::connect(addr) {
+            Ok(mut s) => {
+                s.write_all(b"GET /metrics HTTP/1.1\r\nHost: mpic\r\nConnection: close\r\n\r\n")
+                    .unwrap();
+                let mut buf = String::new();
+                s.read_to_string(&mut buf).unwrap();
+                let (head, body) = buf.split_once("\r\n\r\n").expect("http head/body split");
+                assert!(head.starts_with("HTTP/1.1 200 OK"), "bad status: {head}");
+                assert!(head.contains("text/plain; version=0.0.4"), "bad content type: {head}");
+                return body.to_string();
+            }
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+    panic!("metrics endpoint {addr} never came up: {last:?}");
+}
+
+/// Lint one exposition body: only TYPE comments, every sample line parses
+/// as `series value`, and no series repeats.
+fn lint_exposition(text: &str) {
+    let mut seen = std::collections::HashSet::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('#') {
+            assert!(line.starts_with("# TYPE "), "only TYPE comments allowed: {line:?}");
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line {line:?}"));
+        assert!(!series.is_empty(), "empty series: {line:?}");
+        assert!(value.parse::<f64>().is_ok(), "unparseable value: {line:?}");
+        assert!(seen.insert(series.to_string()), "duplicate series: {series}");
+    }
+}
+
+/// The value of one exact series (name + label set) in an exposition body.
+fn series_value(text: &str, series: &str) -> Option<f64> {
+    text.lines().find_map(|l| {
+        let (s, val) = l.rsplit_once(' ')?;
+        if s == series {
+            val.parse().ok()
+        } else {
+            None
+        }
+    })
+}
+
+#[test]
+fn one_trace_id_across_router_worker_and_peer_pull() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+
+    // Worker A owns the upload; worker B peers with A and is the only
+    // worker behind the router, so the routed generation must serve on B
+    // and pull its KV from A.
+    let (a_addr, a_join) = spawn_worker("a", vec![], None);
+    let b_maddr = free_addr();
+    let (b_addr, b_join) = spawn_worker("b", vec![a_addr], Some(b_maddr.clone()));
+
+    let mut ca = Client::connect(a_addr).unwrap();
+    let up = ca
+        .call(&v(r#"{"v":3,"id":"u1","op":"upload","user":1,"handle":"IMAGE#obs-e2e"}"#))
+        .unwrap();
+    assert_ok(&up);
+
+    let (rtx, rrx) = mpsc::channel();
+    let r_maddr = free_addr();
+    let mut router_cfg = RouterConfig::new(vec![b_addr]);
+    router_cfg.metrics_addr = Some(r_maddr.clone());
+    let router_join = std::thread::spawn(move || {
+        serve_router(router_cfg, "127.0.0.1:0", |a| rtx.send(a).unwrap()).unwrap();
+    });
+    let router_addr = rrx.recv().unwrap();
+    let mut cr = Client::connect(router_addr).unwrap();
+
+    // ------------------------------------------------------------------
+    // The traced request: no client trace id, so the router mints one.
+    // ------------------------------------------------------------------
+    let gen = cr
+        .call(&v(
+            r#"{"v":3,"id":"g1","op":"infer","user":1,"text":"describe IMAGE#obs-e2e briefly","max_new":4}"#,
+        ))
+        .unwrap();
+    assert_ok(&gen);
+    let trace = gen.get("trace").unwrap().as_str().unwrap().to_string();
+    assert!(
+        trace.len() == 16 && trace.chars().all(|c| c.is_ascii_hexdigit()),
+        "final reply must echo the minted trace id: {}",
+        gen.encode()
+    );
+
+    // ------------------------------------------------------------------
+    // Flight recorder on the serving worker: one trace, every stage.
+    // ------------------------------------------------------------------
+    let mut cb = Client::connect(b_addr).unwrap();
+    let dt = cb
+        .call(&v(&format!(
+            r#"{{"v":3,"id":"dt","op":"debug.trace","action":"get","trace":"{trace}"}}"#
+        )))
+        .unwrap();
+    assert_ok(&dt);
+    assert!(dt.get("done").unwrap().as_bool().unwrap(), "trace must be completed: {}", dt.encode());
+    assert_eq!(dt.get("op").unwrap().as_str().unwrap(), "infer");
+    let spans = dt.get("spans").unwrap().as_arr().unwrap();
+    let names: Vec<&str> =
+        spans.iter().map(|s| s.get("name").unwrap().as_str().unwrap()).collect();
+    for need in ["admission", "fetch", "peer_pull", "prefill", "decode"] {
+        assert!(names.contains(&need), "span {need:?} missing from trace: {names:?}");
+    }
+    let starts: Vec<u64> =
+        spans.iter().map(|s| s.get("start_us").unwrap().as_u64().unwrap()).collect();
+    assert!(
+        starts.windows(2).all(|w| w[0] <= w[1]),
+        "spans must be ordered by start offset: {starts:?}"
+    );
+    let pull = spans
+        .iter()
+        .find(|s| s.get("name").unwrap().as_str().unwrap() == "peer_pull")
+        .unwrap();
+    assert!(
+        pull.get("bytes").unwrap().as_f64().unwrap() > 0.0,
+        "peer_pull span must carry the pulled byte count: {}",
+        pull.encode()
+    );
+
+    // The recorder's ring lists it too.
+    let list = cb.call(&v(r#"{"v":3,"id":"dl","op":"debug.trace"}"#)).unwrap();
+    assert_ok(&list);
+    assert!(list.get("count").unwrap().as_f64().unwrap() >= 1.0);
+    let listed = list
+        .get("traces")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .any(|t| t.get("trace").unwrap().as_str().unwrap() == trace);
+    assert!(listed, "completed trace must appear in the list: {}", list.encode());
+
+    // ------------------------------------------------------------------
+    // stats.cluster through the router: per-worker snapshots + aggregate.
+    // ------------------------------------------------------------------
+    let sc = cr.call(&v(r#"{"v":3,"id":"sc","op":"stats.cluster"}"#)).unwrap();
+    assert_ok(&sc);
+    let workers = sc.get("workers").unwrap().as_arr().unwrap();
+    assert_eq!(workers.len(), 1);
+    assert!(workers[0].get("ok").unwrap().as_bool().unwrap(), "{}", sc.encode());
+    let agg = sc.get("metrics").unwrap();
+    assert!(agg.get("requests").unwrap().as_f64().unwrap() >= 1.0);
+    let ttft = agg.get("histograms").unwrap().get("ttft_s").unwrap();
+    assert!(ttft.get("count").unwrap().as_f64().unwrap() >= 1.0, "{}", sc.encode());
+
+    // ------------------------------------------------------------------
+    // Prometheus endpoints: worker and router both serve clean exposition.
+    // ------------------------------------------------------------------
+    for (who, maddr) in [("worker", &b_maddr), ("router", &r_maddr)] {
+        let body = scrape(maddr);
+        lint_exposition(&body);
+        for family in ["mpic_requests_total", "mpic_uptime_seconds", "mpic_ttft_seconds_count"] {
+            assert!(body.contains(family), "{who} exposition missing {family}:\n{body}");
+        }
+        let inf = series_value(&body, "mpic_ttft_seconds_bucket{le=\"+Inf\"}")
+            .unwrap_or_else(|| panic!("{who} has no +Inf ttft bucket:\n{body}"));
+        let count = series_value(&body, "mpic_ttft_seconds_count").unwrap();
+        assert_eq!(inf, count, "{who}: +Inf bucket must equal the count");
+        assert!(count >= 1.0, "{who}: the traced request must be in the histogram");
+    }
+
+    // ------------------------------------------------------------------
+    // Teardown.
+    // ------------------------------------------------------------------
+    let bye = cr.call(&v(r#"{"v":3,"id":"rbye","op":"shutdown"}"#)).unwrap();
+    assert_ok(&bye);
+    router_join.join().unwrap();
+    drop(ca);
+    drop(cb);
+    shutdown_worker(a_addr, a_join);
+    shutdown_worker(b_addr, b_join);
+}
+
+// ---------------------------------------------------------------------------
+// Slow-request log (no artifacts needed: recorder-level)
+// ---------------------------------------------------------------------------
+
+static CAPTURED: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+struct CaptureLogger;
+
+impl log::Log for CaptureLogger {
+    fn enabled(&self, _: &log::Metadata) -> bool {
+        true
+    }
+    fn log(&self, record: &log::Record) {
+        if record.target() == "mpic::trace" {
+            CAPTURED.lock().unwrap().push(record.args().to_string());
+        }
+    }
+    fn flush(&self) {}
+}
+
+static LOGGER: CaptureLogger = CaptureLogger;
+
+#[test]
+fn slow_request_log_fires_over_threshold() {
+    // This test binary installs its own logger (one global per process;
+    // this file's other test never logs through it before assertions).
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(log::LevelFilter::Warn);
+
+    let rec = Recorder::new(8);
+    rec.set_slow_threshold(Some(Duration::ZERO));
+    let id = TraceId(0xfeed);
+    let t0 = Instant::now();
+    rec.begin_at(id, "infer", t0);
+    rec.record(id, "prefill", t0, Instant::now(), &[]);
+    let (total_s, slow) = rec.finish(id).expect("active trace finishes");
+    assert!(slow, "zero threshold marks every request slow");
+    assert!(total_s >= 0.0);
+
+    let lines = CAPTURED.lock().unwrap();
+    let hit = lines.iter().find(|l| l.contains(&id.hex())).unwrap_or_else(|| {
+        panic!("slow-request warning must fire through the log facade: {lines:?}")
+    });
+    assert!(hit.contains("slow request"), "{hit}");
+    assert!(hit.contains("op=infer"), "{hit}");
+    assert!(hit.contains("prefill"), "slow log lists span names: {hit}");
+}

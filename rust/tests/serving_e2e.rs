@@ -97,6 +97,7 @@ fn scheduler_continuous_batching() {
             prompt: c.turns[0].clone(),
             policy: Policy::MpicK(16),
             max_new: 4,
+            trace: None,
         });
     }
     let completions = sched.run_to_completion(&engine).unwrap();
