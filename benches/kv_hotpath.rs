@@ -11,6 +11,12 @@
 //!    default sharded store, with the shard-lock contention counters.
 //! 3. **Codec throughput, v1 whole-payload vs v2 chunked** — decode of a
 //!    multi-MB entry serially and fanned across a ≥4-thread pool.
+//! 4. **Streamed fetch TTFT vs segment size** — whole-entry `fetch`
+//!    (prefill waits for every byte) against `fetch_streamed` (layer
+//!    groups splice into prefill as they inflate), with time-to-first-
+//!    group and the load/compute overlap efficiency from the transfer
+//!    report. `stream_overlap_efficiency` must come out > 0 — that is
+//!    the paper's pipelining claim in one number.
 //!
 //! `cargo bench --bench kv_hotpath` — no artifacts needed.
 
@@ -18,7 +24,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use mpic::kv::store::{KvStore, StoreConfig};
-use mpic::kv::{codec, KvKey, KvShape, SegmentKv};
+use mpic::kv::{codec, KvKey, KvShape, SegmentKv, TransferEngine};
 use mpic::mm::ImageId;
 use mpic::util::bench::{emit, emit_summary, time_fn, Row, Table};
 use mpic::util::rng::Rng;
@@ -37,6 +43,32 @@ fn entry(image: u64, tokens: usize) -> SegmentKv {
     let k = gen(&mut rng, shape.kv_elems());
     let v = gen(&mut rng, shape.kv_elems());
     SegmentKv { key: KvKey::image("bench-model", ImageId(image)), shape, emb, k, v }
+}
+
+/// Like [`entry`] but 8 layers deep → 4 layer groups at `GROUP_LAYERS=2`,
+/// so the streamed arm has real group granularity to pipeline.
+fn deep_entry(image: u64, tokens: usize) -> SegmentKv {
+    let shape = KvShape { layers: 8, tokens, heads: 8, d_head: 32, d_model: 256 };
+    let mut rng = Rng::new(image ^ 0xC0FFEE);
+    let gen = |rng: &mut Rng, n: usize| -> Vec<f32> {
+        (0..n).map(|i| if i % 2 == 0 { 0.0 } else { rng.f32() }).collect()
+    };
+    let emb = gen(&mut rng, shape.emb_elems());
+    let k = gen(&mut rng, shape.kv_elems());
+    let v = gen(&mut rng, shape.kv_elems());
+    SegmentKv { key: KvKey::image("bench-model", ImageId(image)), shape, emb, k, v }
+}
+
+/// Stand-in for per-layer prefill compute: touches every K value so the
+/// consumer lane costs time proportional to the spliced payload.
+fn fake_prefill(k: &[f32]) -> f32 {
+    let mut acc = 0f32;
+    for _ in 0..2 {
+        for v in k {
+            acc += *v * 1.0001;
+        }
+    }
+    acc
 }
 
 fn fresh_store(shards: usize, tag: &str) -> Arc<KvStore> {
@@ -184,13 +216,105 @@ fn main() {
     let speedup = s_dec_v1.mean() / s_dec_v2_pool.mean().max(1e-12);
     summary.push(("decode_pool_speedup_vs_v1".into(), speedup));
 
-    emit("kv_hotpath", &[t_get, t_conc, t_codec]);
+    // ------------------------------------------------------------------
+    // 4. Streamed fetch: TTFT vs segment size (whole-entry vs streamed)
+    // ------------------------------------------------------------------
+    let mut t_stream = Table::new("kv_hotpath: streamed fetch TTFT vs segment size");
+    let tpool = Arc::new(ThreadPool::new(4));
+    let eng = TransferEngine::new(Arc::clone(&tpool));
+    let n_entries = 4u64;
+    // Disk-only residency: shards=1 with byte-sized caps means every put
+    // evicts its predecessor from device and a trailing dummy evicts the
+    // last measured key, so fetches hit the write-through disk copies.
+    let disk_store = |tag: &str| {
+        let dir = std::env::temp_dir()
+            .join(format!("mpic-kv-hotpath-stream-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        Arc::new(
+            KvStore::new(StoreConfig {
+                device_capacity: 1,
+                host_capacity: 1,
+                disk_dir: dir,
+                ttl: Duration::from_secs(600),
+                disk_bandwidth: None,
+                shards: 1,
+            })
+            .unwrap(),
+        )
+    };
+    let mut best_eff = 0.0f64;
+    let mut sink = 0f32;
+    for &(tokens, label) in &[(128usize, "small"), (256, "medium"), (512, "large")] {
+        let shape = KvShape { layers: 8, tokens, heads: 8, d_head: 32, d_model: 256 };
+        let mb = shape.total_bytes() as f64 / (1 << 20) as f64;
+        let keys: Vec<KvKey> =
+            (0..n_entries).map(|i| KvKey::image("bench-model", ImageId(5000 + i))).collect();
+        let fill = |s: &Arc<KvStore>| {
+            for i in 0..n_entries {
+                s.put(deep_entry(5000 + i, tokens)).unwrap();
+            }
+            s.put(entry(9999, 16)).unwrap(); // dummy: evicts the last measured key
+        };
+
+        // Whole-entry fetch: prefill can only start once every entry is in.
+        let s_whole = disk_store(&format!("whole-{label}"));
+        fill(&s_whole);
+        let t0 = Instant::now();
+        let (out, rep_whole) =
+            eng.fetch(&s_whole, &keys, |_| unreachable!("all keys disk-resident")).unwrap();
+        let whole_load = t0.elapsed().as_secs_f64();
+        for e in &out {
+            sink += fake_prefill(&e.k);
+        }
+        let whole_wall = t0.elapsed().as_secs_f64();
+
+        // Streamed fetch: layer groups splice into prefill as they inflate.
+        let s_stream = disk_store(&format!("stream-{label}"));
+        fill(&s_stream);
+        let t1 = Instant::now();
+        let mut stream = eng.fetch_streamed(&s_stream, &keys);
+        let mut first_group = 0f64;
+        while let Some(ev) = stream.next_group() {
+            if first_group == 0.0 {
+                first_group = t1.elapsed().as_secs_f64();
+            }
+            sink += fake_prefill(&ev.group.k);
+        }
+        let (_, rep_stream) =
+            stream.finish(|_| unreachable!("all keys disk-resident")).unwrap();
+        let stream_wall = t1.elapsed().as_secs_f64();
+
+        let eff = rep_stream.overlap_efficiency();
+        best_eff = best_eff.max(eff);
+        t_stream.add(
+            Row::new()
+                .str("segment", label)
+                .num("mb", mb)
+                .num("disk_hits", (rep_whole.disk_hits + rep_stream.disk_hits) as f64 / 2.0)
+                .num("whole_load_ms", whole_load * 1e3)
+                .num("whole_wall_ms", whole_wall * 1e3)
+                .num("stream_first_group_ms", first_group * 1e3)
+                .num("stream_wall_ms", stream_wall * 1e3)
+                .num("stall_ms", rep_stream.stall_us as f64 / 1e3)
+                .num("overlap_ms", rep_stream.overlap_us as f64 / 1e3)
+                .num("overlap_efficiency", eff),
+        );
+        summary.push((format!("whole_wall_{label}_ms"), whole_wall * 1e3));
+        summary.push((format!("stream_wall_{label}_ms"), stream_wall * 1e3));
+        summary.push((format!("stream_first_group_{label}_ms"), first_group * 1e3));
+        summary.push((format!("stream_overlap_eff_{label}"), eff));
+    }
+    std::hint::black_box(sink);
+    summary.push(("stream_overlap_efficiency".into(), best_eff));
+
+    emit("kv_hotpath", &[t_get, t_conc, t_codec, t_stream]);
     let fields: Vec<(&str, f64)> = summary.iter().map(|(k, x)| (k.as_str(), *x)).collect();
     emit_summary("kv_hotpath", &fields);
 
     println!(
         "[shape] get_arc must stay flat across sizes (ratio ≈ 1, deep clone grows); \
          sharded concurrent gets must beat the single lock; \
-         decode_v2_pool must beat decode_v1 on the multi-MB entry"
+         decode_v2_pool must beat decode_v1 on the multi-MB entry; \
+         stream_first_group must beat whole_load and overlap_efficiency must be > 0"
     );
 }

@@ -1,10 +1,14 @@
 //! `PeerTransport` — the remote tier behind [`crate::kv::Transport`].
 //!
 //! Speaks the worker wire protocol's peer KV lane: `kv.probe` for a
-//! residency bitmap, `kv.pull` for the base64-framed v4 container. The
+//! residency bitmap, `kv.pull` for the base64-framed container. The
 //! container bytes cross the wire exactly as they sit on the serving
 //! worker's disk — framing is the only transformation, there is no
-//! decode/re-encode cycle on the sender.
+//! decode/re-encode cycle on the sender. A pull may carry an optional
+//! `groups` field: the peer then serves only the self-contained prefix
+//! of the v5 container covering the first `groups` layer groups, which
+//! the streamed fetch path splices into prefill while the full pull is
+//! still in flight.
 //!
 //! Failure posture (a flapping peer must cost latency once, never stall
 //! prefill):
@@ -203,8 +207,15 @@ impl PeerTransport {
         Ok(bitmap)
     }
 
-    /// One `kv.pull` round-trip (no retry here; `pull` owns the retry).
-    fn pull_peer(&self, peer: SocketAddr, key: &KvKey) -> Result<Option<Vec<u8>>> {
+    /// One `kv.pull` round-trip (no retry here; `pull_impl` owns the
+    /// retry). `groups = Some(g)` asks the peer for only the first `g`
+    /// layer groups of the container.
+    fn pull_peer(
+        &self,
+        peer: SocketAddr,
+        key: &KvKey,
+        groups: Option<usize>,
+    ) -> Result<Option<Vec<u8>>> {
         let t0 = Instant::now();
         let mut c = Client::connect_timeout(peer, self.cfg.timeout)?;
         let mut req = Value::obj(vec![
@@ -213,6 +224,9 @@ impl PeerTransport {
             ("id", Value::str(format!("pull-{}", std::process::id()))),
             ("model", Value::str(key.model.as_str())),
         ]);
+        if let Some(g) = groups {
+            req.set("groups", Value::num(g as f64));
+        }
         if let Some(t) = trace::current() {
             req.set("trace", Value::str(t.hex()));
         }
@@ -238,9 +252,49 @@ impl PeerTransport {
             &[
                 ("peer", Value::str(peer.to_string())),
                 ("bytes", Value::num(bytes.len() as f64)),
+                ("groups", Value::num(groups.map(|g| g as f64).unwrap_or(-1.0))),
             ],
         );
         Ok(Some(bytes))
+    }
+
+    /// Shared body of [`Transport::pull`] / [`Transport::pull_range`]:
+    /// probe-gated pull with one retry, walking peers in key-rotated order.
+    fn pull_impl(&self, key: &KvKey, groups: Option<usize>) -> Result<Option<Vec<u8>>> {
+        for peer in self.peer_order(key) {
+            if self.peer_dead(peer) || self.negative_cached(peer, key) {
+                continue;
+            }
+            // Probe first: a pull moves megabytes, a probe moves a line.
+            match self.probe_peer(peer, std::slice::from_ref(key)) {
+                Ok(bitmap) if !bitmap[0] => {
+                    self.cache_negative(peer, key);
+                    continue;
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    log::debug!("cluster: probe of {peer} failed: {e}");
+                    self.mark_dead(peer);
+                    continue;
+                }
+            }
+            // Pull, with one retry after backoff (the peer just answered
+            // the probe, so a transient hiccup is worth one more try).
+            for attempt in 0..2 {
+                match self.pull_peer(peer, key, groups) {
+                    Ok(got) => return Ok(got),
+                    Err(e) if attempt == 0 => {
+                        log::debug!("cluster: pull from {peer} failed (will retry): {e}");
+                        std::thread::sleep(self.cfg.retry_backoff);
+                    }
+                    Err(e) => {
+                        log::debug!("cluster: pull from {peer} failed twice: {e}");
+                        self.mark_dead(peer);
+                    }
+                }
+            }
+        }
+        Ok(None)
     }
 
     /// Rotate the peer order by key so different keys spread their first
@@ -282,40 +336,11 @@ impl Transport for PeerTransport {
     }
 
     fn pull(&self, key: &KvKey) -> Result<Option<Vec<u8>>> {
-        for peer in self.peer_order(key) {
-            if self.peer_dead(peer) || self.negative_cached(peer, key) {
-                continue;
-            }
-            // Probe first: a pull moves megabytes, a probe moves a line.
-            match self.probe_peer(peer, std::slice::from_ref(key)) {
-                Ok(bitmap) if !bitmap[0] => {
-                    self.cache_negative(peer, key);
-                    continue;
-                }
-                Ok(_) => {}
-                Err(e) => {
-                    log::debug!("cluster: probe of {peer} failed: {e}");
-                    self.mark_dead(peer);
-                    continue;
-                }
-            }
-            // Pull, with one retry after backoff (the peer just answered
-            // the probe, so a transient hiccup is worth one more try).
-            for attempt in 0..2 {
-                match self.pull_peer(peer, key) {
-                    Ok(got) => return Ok(got),
-                    Err(e) if attempt == 0 => {
-                        log::debug!("cluster: pull from {peer} failed (will retry): {e}");
-                        std::thread::sleep(self.cfg.retry_backoff);
-                    }
-                    Err(e) => {
-                        log::debug!("cluster: pull from {peer} failed twice: {e}");
-                        self.mark_dead(peer);
-                    }
-                }
-            }
-        }
-        Ok(None)
+        self.pull_impl(key, None)
+    }
+
+    fn pull_range(&self, key: &KvKey, groups: Option<usize>) -> Result<Option<Vec<u8>>> {
+        self.pull_impl(key, groups)
     }
 
     fn name(&self) -> &'static str {
@@ -383,12 +408,29 @@ mod tests {
                             ])
                         }
                         "kv.pull" => match &container {
-                            Some(bytes) => Value::obj(vec![
-                                ("ok", Value::Bool(true)),
-                                ("id", id),
-                                ("frame", Value::str(crate::kv::codec::frame(bytes))),
-                                ("bytes", Value::num(bytes.len() as f64)),
-                            ]),
+                            Some(bytes) => {
+                                // Honour a `groups` range the way a real
+                                // worker does: serve the self-contained v5
+                                // prefix covering the first `g` groups.
+                                let mut served = bytes.clone();
+                                let mut n_groups = 0usize;
+                                if let Ok(info) = crate::kv::codec::parse_container(bytes) {
+                                    n_groups = info.n_groups();
+                                    if let Some(g) =
+                                        req.opt("groups").and_then(|v| v.as_f64().ok())
+                                    {
+                                        let g = (g as usize).clamp(1, n_groups.max(1));
+                                        served.truncate(info.prefix_len(g));
+                                    }
+                                }
+                                Value::obj(vec![
+                                    ("ok", Value::Bool(true)),
+                                    ("id", id),
+                                    ("frame", Value::str(crate::kv::codec::frame(&served))),
+                                    ("bytes", Value::num(served.len() as f64)),
+                                    ("n_groups", Value::num(n_groups as f64)),
+                                ])
+                            }
                             None => Value::obj(vec![
                                 ("ok", Value::Bool(false)),
                                 ("id", id),
@@ -420,6 +462,34 @@ mod tests {
         assert!(ctr.peer_probes.load(Ordering::Relaxed) >= 1);
         assert_eq!(ctr.peer_timeouts.load(Ordering::Relaxed), 0);
         assert_eq!(t.probe(std::slice::from_ref(&e.key)), vec![true]);
+    }
+
+    #[test]
+    fn pull_range_serves_group_prefix() {
+        use crate::kv::{KvShape, SegmentKv};
+        let shape = KvShape { layers: 6, tokens: 8, heads: 2, d_head: 4, d_model: 8 };
+        let mut rng = crate::util::rng::Rng::new(0x77);
+        let e = SegmentKv {
+            key: KvKey::image("m", ImageId(77)),
+            shape,
+            emb: (0..shape.emb_elems()).map(|_| rng.f32()).collect(),
+            k: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
+            v: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
+        };
+        let container = crate::kv::codec::encode(&e).unwrap();
+        let info = crate::kv::codec::parse_container(&container).unwrap();
+        assert!(info.n_groups() >= 3, "test needs a multi-group container");
+        let addr = fake_worker(true, Some(container.clone()));
+        let t = PeerTransport::new(vec![addr], fast_cfg(), counters());
+        // A ranged pull returns exactly the self-contained one-group prefix...
+        let prefix = t.pull_range(&e.key, Some(1)).unwrap().expect("peer had the container");
+        assert_eq!(prefix, container[..info.prefix_len(1)].to_vec());
+        let pinfo = crate::kv::codec::parse_container(&prefix).unwrap();
+        assert_eq!(pinfo.groups_available(prefix.len()), 1);
+        crate::kv::codec::decode_group(&pinfo, &prefix, 0).expect("prefix group decodes");
+        // ...while an unbounded ranged pull and a plain pull return everything.
+        assert_eq!(t.pull_range(&e.key, None).unwrap(), Some(container.clone()));
+        assert_eq!(t.pull(&e.key).unwrap(), Some(container));
     }
 
     #[test]

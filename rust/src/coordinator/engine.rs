@@ -49,6 +49,14 @@ pub struct EngineConfig {
     pub user_quota: usize,
     /// Per-namespace chunk-library quota (registered chunks).
     pub chunk_quota: usize,
+    /// Consume MPIC-k fetches as a layer-group stream: groups splice
+    /// into the linked cache while deeper groups still inflate off disk
+    /// or the wire. `false` falls back to whole-entry fetch.
+    pub streamed_fetch: bool,
+    /// Leading layer groups the prefetch lane warms for queued
+    /// requests' segments (partial-entry prefetch); `0` warms whole
+    /// entries to the device tier like before.
+    pub prefetch_groups: usize,
 }
 
 impl Default for EngineConfig {
@@ -63,6 +71,8 @@ impl Default for EngineConfig {
             enforce_ownership: false,
             user_quota: 64,
             chunk_quota: crate::cache::chunk_lib::DEFAULT_CHUNK_QUOTA,
+            streamed_fetch: true,
+            prefetch_groups: 1,
         }
     }
 }
@@ -564,7 +574,14 @@ impl Engine {
             .iter()
             .map(|(ns, seg)| KvKey::segment(&self.meta.name, ns, *seg))
             .collect();
-        self.transfer.prefetch(&self.store, &keys)
+        if self.cfg.prefetch_groups > 0 {
+            // Partial-entry prefetch: only the shallow layer groups a
+            // streamed fetch consumes first — a fraction of the warm
+            // bandwidth per queued request.
+            self.transfer.prefetch_partial(&self.store, &keys, self.cfg.prefetch_groups)
+        } else {
+            self.transfer.prefetch(&self.store, &keys)
+        }
     }
 
     /// Fetch the KV entries for every reuse span (order = span order),
@@ -584,6 +601,73 @@ impl Engine {
         self.transfer.fetch(&self.store, &keys, |key| self.compute_segment_kv(key))
     }
 
+    /// Streamed MPIC-k fetch: build the linked dummy cache by splicing
+    /// layer groups into it as the transfer lane inflates them, so the
+    /// scatter (and whatever else the caller does between groups) runs
+    /// while deeper groups are still on disk or on the wire. Returns the
+    /// fetched entries (span order), the assembled `k`/`v` caches, the
+    /// transfer report (with `stall_us`/`overlap_us`) and the seconds
+    /// spent scattering — link work that overlapped the load.
+    #[allow(clippy::type_complexity)]
+    fn fetch_streamed_linked(
+        &self,
+        layout: &LinkedLayout,
+        ns: &Namespace,
+        linker: &Linker,
+        bucket: usize,
+    ) -> Result<(Vec<Arc<SegmentKv>>, Vec<f32>, Vec<f32>, TransferReport, f64)> {
+        let keys: Vec<KvKey> = layout
+            .reuse_spans
+            .iter()
+            .map(|span| KvKey::segment(&self.meta.name, ns, span.seg))
+            .collect();
+        let mut stream = self.transfer.fetch_streamed(&self.store, &keys);
+        let (mut k, mut v) = linker.empty_linked_cache(bucket);
+        let slots = stream.slots().to_vec();
+        let mut scatter_s = 0.0;
+        // Deepest layer already spliced per span; groups arrive
+        // shallow-first per slot, so this is a contiguous frontier.
+        let mut layers_done = vec![0usize; layout.reuse_spans.len()];
+        while let Some(ev) = stream.next_group() {
+            let t0 = Instant::now();
+            for (i, span) in layout.reuse_spans.iter().enumerate() {
+                if slots[i] != ev.slot {
+                    continue;
+                }
+                linker.scatter_group(
+                    &mut k,
+                    &mut v,
+                    bucket,
+                    span,
+                    &ev.group.k,
+                    &ev.group.v,
+                    ev.group.layer_lo,
+                    ev.group.layer_hi,
+                )?;
+                layers_done[i] = layers_done[i].max(ev.group.layer_hi);
+            }
+            scatter_s += t0.elapsed().as_secs_f64();
+        }
+        let (entries, report) = stream.finish(|key| self.compute_segment_kv(key))?;
+        // A fully streamed span's entry was assembled from the very
+        // groups spliced above — nothing left to do. Anything else
+        // (device fast-path hit, peer-served full container, corrupt
+        // tail, recompute) splices the *whole* entry: a partially
+        // streamed prefix may predate the entry `finish` returned, so
+        // mixing the two generations layer-wise would corrupt the cache.
+        let t0 = Instant::now();
+        let l = self.meta.n_layers;
+        for (i, span) in layout.reuse_spans.iter().enumerate() {
+            if layers_done[i] >= l {
+                continue;
+            }
+            let e = &entries[i];
+            linker.scatter_group(&mut k, &mut v, bucket, span, &e.k, &e.v, 0, l)?;
+        }
+        scatter_s += t0.elapsed().as_secs_f64();
+        Ok((entries, k, v, report, scatter_s))
+    }
+
     /// Prefill one request under a context-caching policy, producing an
     /// [`ActiveSeq`] ready for (interleaved) decoding. TTFT is fully
     /// accounted by the time this returns.
@@ -598,23 +682,21 @@ impl Engine {
         let linker = Linker::new(&self.meta);
 
         let t_request = Instant::now();
-        let (entries, transfer) = self.fetch_entries(&layout, &prompt.ns)?;
+        // MPIC-k consumes the fetch as a layer-group *stream* inside its
+        // arm below (groups splice into the linked cache while deeper
+        // groups still inflate); the other policies fetch whole entries
+        // up front.
+        let streamed = self.cfg.streamed_fetch && matches!(policy, Policy::MpicK(_));
+        let (entries, mut transfer) = if streamed {
+            (Vec::new(), TransferReport::default())
+        } else {
+            let (entries, transfer) = self.fetch_entries(&layout, &prompt.ns)?;
+            record_fetch_span(t_request, &transfer);
+            (entries, transfer)
+        };
         let entry_refs: Vec<&SegmentKv> = entries.iter().map(|e| e.as_ref()).collect();
-        let fetch_s = t_request.elapsed().as_secs_f64();
-        trace::record(
-            "fetch",
-            t_request,
-            &[
-                ("segments", Value::num(transfer.n_segments as f64)),
-                ("device_hits", Value::num(transfer.device_hits as f64)),
-                ("host_hits", Value::num(transfer.host_hits as f64)),
-                ("disk_hits", Value::num(transfer.disk_hits as f64)),
-                ("peer_hits", Value::num(transfer.peer_hits as f64)),
-                ("misses", Value::num(transfer.misses as f64)),
-            ],
-        );
-
-        let mut ttft = TtftBreakdown { fetch_s, ..Default::default() };
+        let mut ttft =
+            TtftBreakdown { fetch_s: t_request.elapsed().as_secs_f64(), ..Default::default() };
         let (first_logits, k_cache, v_cache, n_selected);
 
         match policy {
@@ -641,9 +723,28 @@ impl Engine {
                 let pl = plan(policy, &layout, &[]);
                 n_selected = pl.selected.len();
                 let (s_sel, n_bucket) = self.selective_bucket(s_bucket, n_selected)?;
+                let (sentries, k, v) = if streamed {
+                    // Layer groups splice into the linked cache as codec
+                    // workers inflate them: the scatter work is the
+                    // compute the loader hides (`overlap_us`), so
+                    // `fetch_s` and `link_s` overlap on the wall clock
+                    // instead of adding up.
+                    let (sentries, k, v, rep, scatter_s) =
+                        self.fetch_streamed_linked(&layout, &prompt.ns, &linker, s_sel)?;
+                    record_fetch_span(t_request, &rep);
+                    ttft.fetch_s = rep.wall_s;
+                    ttft.link_s += scatter_s;
+                    transfer = rep;
+                    (sentries, k, v)
+                } else {
+                    let t_link = Instant::now();
+                    let (k, v) = linker.linked_cache(&layout, &entry_refs, s_sel)?;
+                    ttft.link_s += t_link.elapsed().as_secs_f64();
+                    (entries.clone(), k, v)
+                };
+                let srefs: Vec<&SegmentKv> = sentries.iter().map(|e| e.as_ref()).collect();
                 let t_link = Instant::now();
-                let (k, v) = linker.linked_cache(&layout, &entry_refs, s_sel)?;
-                let si = linker.selective(&layout, &entry_refs, &pl, k, v, s_sel, n_bucket)?;
+                let si = linker.selective(&layout, &srefs, &pl, k, v, s_sel, n_bucket)?;
                 ttft.link_s += t_link.elapsed().as_secs_f64();
                 trace::record("link", t_link, &[]);
                 let art = Runtime::art_prefill_selective(&self.meta.name, s_sel, n_bucket);
@@ -1021,6 +1122,26 @@ impl Engine {
     pub fn cache_evict(&self, ns: &Namespace, handle: &str) -> EvictOutcome {
         self.store.evict(&self.kv_key(ns, handle))
     }
+}
+
+/// Record the per-request `fetch` span (child `fetch.group` spans are
+/// recorded by the transfer workers themselves). `stall_us`/`overlap_us`
+/// are 0 for whole-entry fetches.
+fn record_fetch_span(t0: Instant, rep: &TransferReport) {
+    trace::record(
+        "fetch",
+        t0,
+        &[
+            ("segments", Value::num(rep.n_segments as f64)),
+            ("device_hits", Value::num(rep.device_hits as f64)),
+            ("host_hits", Value::num(rep.host_hits as f64)),
+            ("disk_hits", Value::num(rep.disk_hits as f64)),
+            ("peer_hits", Value::num(rep.peer_hits as f64)),
+            ("misses", Value::num(rep.misses as f64)),
+            ("stall_us", Value::num(rep.stall_us as f64)),
+            ("overlap_us", Value::num(rep.overlap_us as f64)),
+        ],
+    );
 }
 
 /// Greedy argmax over logits.

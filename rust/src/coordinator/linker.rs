@@ -304,6 +304,56 @@ impl<'a> Linker<'a> {
         Ok((k, v))
     }
 
+    /// A zeroed linked cache pair `[L, S, H, Dh]` for incremental
+    /// assembly via [`Linker::scatter_group`] (the streamed-fetch path;
+    /// [`Linker::linked_cache`] is the one-shot equivalent).
+    pub fn empty_linked_cache(&self, bucket: usize) -> (Vec<f32>, Vec<f32>) {
+        let n = self.meta.n_layers * bucket * self.meta.n_heads * self.meta.d_head;
+        (vec![0f32; n], vec![0f32; n])
+    }
+
+    /// Scatter one span's K/V rows for the layer range `[layer_lo,
+    /// layer_hi)` into a linked cache. `group_k`/`group_v` are
+    /// layer-major `[(layer_hi − layer_lo), T, H, Dh]` — exactly a
+    /// `codec::GroupPayload`'s `k`/`v`, or a slice of a whole entry's
+    /// vectors. Layers outside the range are untouched, so a streamed
+    /// fetch can splice groups as they inflate while deeper groups are
+    /// still loading.
+    #[allow(clippy::too_many_arguments)]
+    pub fn scatter_group(
+        &self,
+        k_cache: &mut [f32],
+        v_cache: &mut [f32],
+        bucket: usize,
+        span: &crate::mm::ReuseSpan,
+        group_k: &[f32],
+        group_v: &[f32],
+        layer_lo: usize,
+        layer_hi: usize,
+    ) -> Result<()> {
+        let (l, h, dh) = (self.meta.n_layers, self.meta.n_heads, self.meta.d_head);
+        let row = h * dh;
+        let t = span.len();
+        ensure!(
+            layer_lo < layer_hi && layer_hi <= l,
+            "layer range [{layer_lo}, {layer_hi}) out of 0..{l}"
+        );
+        ensure!(span.hi <= bucket, "span {}..{} exceeds bucket {bucket}", span.lo, span.hi);
+        ensure!(k_cache.len() == l * bucket * row, "k_cache size mismatch");
+        ensure!(v_cache.len() == l * bucket * row, "v_cache size mismatch");
+        let want = (layer_hi - layer_lo) * t * row;
+        ensure!(group_k.len() == want && group_v.len() == want, "group payload size mismatch");
+        for layer in layer_lo..layer_hi {
+            let src_base = (layer - layer_lo) * t * row;
+            let dst_base = layer * bucket * row + span.lo * row;
+            k_cache[dst_base..dst_base + t * row]
+                .copy_from_slice(&group_k[src_base..src_base + t * row]);
+            v_cache[dst_base..dst_base + t * row]
+                .copy_from_slice(&group_v[src_base..src_base + t * row]);
+        }
+        Ok(())
+    }
+
     /// Overwrite rows of a linked cache with freshly computed rows coming
     /// from a *packed* prefill output (`text_only_prefill` step A):
     /// `packed_kv` is `[L, S_packed, H, Dh]`, `mapping[packed] = slot`.
@@ -615,6 +665,46 @@ mod tests {
         // Text slots are dummy zeros.
         let text_slot = l.text_indices()[0];
         assert!(k[text_slot * row..(text_slot + 1) * row].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn scatter_group_layerwise_matches_one_shot_linked_cache() {
+        let (m, l, e1, e2) = fixture();
+        let linker = Linker::new(&m);
+        let bucket = 32;
+        let (k_ref, v_ref) = linker.linked_cache(&l, &[&e1, &e2], bucket).unwrap();
+
+        // Rebuild the same cache one layer at a time per span, the way a
+        // streamed fetch splices groups as they inflate.
+        let (mut k, mut v) = linker.empty_linked_cache(bucket);
+        let row = m.n_heads * m.d_head;
+        for (span, e) in l.reuse_spans.iter().zip([&e1, &e2]) {
+            let t = span.len();
+            for layer in 0..m.n_layers {
+                let lo = layer * t * row;
+                let hi = (layer + 1) * t * row;
+                linker
+                    .scatter_group(
+                        &mut k,
+                        &mut v,
+                        bucket,
+                        span,
+                        &e.k[lo..hi],
+                        &e.v[lo..hi],
+                        layer,
+                        layer + 1,
+                    )
+                    .unwrap();
+            }
+        }
+        assert_eq!(k, k_ref);
+        assert_eq!(v, v_ref);
+
+        // Bad payload length is rejected.
+        let span = &l.reuse_spans[0];
+        assert!(linker
+            .scatter_group(&mut k, &mut v, bucket, span, &[0.0], &[0.0], 0, 1)
+            .is_err());
     }
 
     #[test]

@@ -331,6 +331,9 @@ impl Metrics {
             ("prefetch_issued", n(g.kv.prefetch_issued as f64)),
             ("prefetch_hits", n(g.kv.prefetch_hits as f64)),
             ("prefetch_wasted", n(g.kv.prefetch_wasted as f64)),
+            ("prefetch_partial_issued", n(g.kv.prefetch_partial_issued as f64)),
+            ("prefetch_partial_groups", n(g.kv.prefetch_partial_groups as f64)),
+            ("prefetch_partial_hits", n(g.kv.prefetch_partial_hits as f64)),
             ("codec_chunks", n(g.kv.codec_chunks as f64)),
             ("codec_parallel_ops", n(g.kv.codec_parallel_ops as f64)),
             ("leases_acquired", n(g.kv.leases_acquired as f64)),
@@ -711,6 +714,9 @@ mod tests {
             prefetch_issued: 4,
             prefetch_hits: 3,
             prefetch_wasted: 1,
+            prefetch_partial_issued: 6,
+            prefetch_partial_groups: 12,
+            prefetch_partial_hits: 5,
             codec_chunks: 40,
             codec_parallel_ops: 5,
             ..Default::default()
@@ -723,6 +729,9 @@ mod tests {
         assert_eq!(k.get("prefetch_issued").unwrap().as_f64().unwrap(), 4.0);
         assert_eq!(k.get("prefetch_hits").unwrap().as_f64().unwrap(), 3.0);
         assert_eq!(k.get("prefetch_wasted").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(k.get("prefetch_partial_issued").unwrap().as_f64().unwrap(), 6.0);
+        assert_eq!(k.get("prefetch_partial_groups").unwrap().as_f64().unwrap(), 12.0);
+        assert_eq!(k.get("prefetch_partial_hits").unwrap().as_f64().unwrap(), 5.0);
         assert_eq!(k.get("codec_chunks").unwrap().as_f64().unwrap(), 40.0);
         assert_eq!(k.get("codec_parallel_ops").unwrap().as_f64().unwrap(), 5.0);
     }

@@ -1,26 +1,45 @@
 //! KV serialization: the on-disk / in-host-tier wire format.
 //!
-//! ## v4 — namespaced chunked segment container (current writer)
+//! ## v5 — layer-group streaming container (current writer)
 //!
-//! The payload (`emb ++ k ++ v` as raw f32 LE; `emb` is empty for chunk
-//! segments) is split into fixed-size chunks of [`CHUNK_SIZE`] bytes; each
-//! chunk is independently zstd-compressed and SHA-256-checksummed, so
-//! encode and decode fan the chunks out across the shared [`ThreadPool`]
-//! instead of serialising a multi-MB (de)compression behind one core:
+//! The payload is partitioned by **layer group** so a reader can decode
+//! group `g` without touching groups `g+1..` — the unit of the streaming
+//! fetch path (prefill starts consuming shallow layers while deeper ones
+//! are still inflating off disk or arriving from a peer). K and V are
+//! layer-major, so each group's rows are contiguous slices; group 0 also
+//! carries the embeddings (the MPIC-k recompute head needs them first):
 //!
 //! ```text
-//! magic "MPKV" | version=4 u32 | model_len u32 | model bytes
+//! magic "MPKV" | version=5 u32 | model_len u32 | model bytes
 //! | ns_len u32 | ns bytes (empty for the default namespace)
 //! | seg_kind u8 ('i' image / 'c' chunk) | seg_id u64
 //! | layers,tokens,heads,d_head,d_model (u32 x5) | has_emb u8
-//! | chunk_size u32 | n_chunks u32
+//! | layers_per_group u32 | n_groups u32
+//! | chunk_size u32 | n_chunks u32 (total)
+//! | per-group chunk counts: n_groups x u32
 //! | chunk table: n_chunks x (comp_len u32 | sha256 of compressed chunk)
-//! | compressed chunks, concatenated in order
+//! | compressed chunks, concatenated (group 0's chunks first)
 //! ```
 //!
-//! Integrity is per chunk, but failure is per entry: one corrupt or
-//! truncated chunk fails the whole decode and the store treats the entry
-//! as a miss (failure-injection tests cover this).
+//! Group `g`'s subpayload is `emb-if-g0 ++ k[layers g] ++ v[layers g]`
+//! (raw f32 LE), chunked into [`CHUNK_SIZE`] pieces that never cross a
+//! group boundary; each chunk is independently zstd-compressed and
+//! SHA-256-checksummed. [`parse_container`] maps any container version to
+//! its group partition, [`decode_group`] inflates a single group, and a
+//! container *prefix* covering groups `0..m` (see
+//! [`ContainerInfo::prefix_len`]) is self-contained — the wire layer
+//! serves prefixes for `kv.pull` group-range requests.
+//!
+//! Integrity is per chunk; whole-entry decode fails if any chunk is
+//! corrupt, while the streaming path keeps groups decoded *before* the
+//! corrupt one (the entry still counts as a whole-entry miss).
+//!
+//! ## v4 — namespaced chunked segment container (legacy, still decodes)
+//!
+//! Same layout without the group fields: the payload is `emb ++ k ++ v`
+//! in one partition, which v5 readers treat as a single group spanning
+//! every layer. [`encode_v4`] remains as the legacy writer for
+//! compatibility tests.
 //!
 //! ## v3 — chunked segment container (legacy, still decodes)
 //!
@@ -60,6 +79,16 @@ const V1: u32 = 1;
 const V2: u32 = 2;
 const V3: u32 = 3;
 const V4: u32 = 4;
+const V5: u32 = 5;
+
+/// Default layers per group for the v5 writer. Header-declared, so any
+/// value decodes; 2 keeps the 4–6 layer sim models at 2–3 groups so the
+/// streaming fetch path has real decode/compute overlap to exploit.
+pub const GROUP_LAYERS: usize = 2;
+
+/// Hard cap on groups per container: the store tracks partial residency
+/// in a u64 bitmap, and the writer widens groups to stay under it.
+pub const MAX_GROUPS: usize = 64;
 
 /// zstd level: 1 is the latency-friendly setting for the hot path.
 pub const ZSTD_LEVEL: i32 = 1;
@@ -114,7 +143,28 @@ fn payload_bytes(shape: &KvShape, has_emb: bool) -> Result<usize> {
     }
 }
 
-/// Serialise an entry to bytes (v4, serial). See [`encode_with`].
+/// Raw subpayload bytes of one layer group: emb (group 0 of emb-bearing
+/// entries only) plus the group's K and V rows, f32. Checked like
+/// [`payload_bytes`] — the group map is rebuilt from header dims on
+/// decode, so forged values must fail cleanly.
+fn group_payload_bytes(shape: &KvShape, with_emb: bool, l0: usize, l1: usize) -> Result<usize> {
+    let kv = shape
+        .tokens
+        .checked_mul(shape.heads)
+        .and_then(|n| n.checked_mul(shape.d_head))
+        .and_then(|n| n.checked_mul(l1 - l0))
+        .and_then(|n| n.checked_mul(2));
+    let emb = if with_emb { shape.tokens.checked_mul(shape.d_model) } else { Some(0) };
+    match (kv, emb) {
+        (Some(kv), Some(emb)) => match kv.checked_add(emb).and_then(|n| n.checked_mul(4)) {
+            Some(n) if n <= MAX_PAYLOAD => Ok(n),
+            _ => bail!("implausible KV shape (group {l0}..{l1} payload overflows)"),
+        },
+        _ => bail!("implausible KV shape (group {l0}..{l1} payload overflows)"),
+    }
+}
+
+/// Serialise an entry to bytes (v5, serial). See [`encode_with`].
 pub fn encode(e: &SegmentKv) -> Result<Vec<u8>> {
     encode_with(e, None).map(|(bytes, _)| bytes)
 }
@@ -153,9 +203,128 @@ fn write_dims(out: &mut Vec<u8>, shape: &KvShape) -> Result<()> {
     Ok(())
 }
 
-/// Serialise an entry to the v4 chunked container. With a pool, chunks
-/// compress in parallel; the output is byte-identical either way.
+/// Serialise an entry to the v5 layer-group container with the default
+/// [`GROUP_LAYERS`] grouping. With a pool, chunks compress in parallel;
+/// the output is byte-identical either way.
 pub fn encode_with(e: &SegmentKv, pool: Option<&ThreadPool>) -> Result<(Vec<u8>, CodecReport)> {
+    encode_grouped(e, GROUP_LAYERS, pool)
+}
+
+/// Serialise an entry to a v5 container with an explicit layers-per-group
+/// (clamped to keep the group count within [`MAX_GROUPS`]).
+pub fn encode_grouped(
+    e: &SegmentKv,
+    layers_per_group: usize,
+    pool: Option<&ThreadPool>,
+) -> Result<(Vec<u8>, CodecReport)> {
+    e.validate()?;
+    let layers = e.shape.layers.max(1);
+    let lpg = layers_per_group.max(1).max(layers.div_ceil(MAX_GROUPS));
+    let n_groups = layers.div_ceil(lpg);
+    let (payload, bounds) = flatten_grouped(e, lpg, n_groups);
+
+    // Chunk each group independently: chunk boundaries never cross a
+    // group, so a group's chunk run decodes without its neighbours.
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    let mut group_chunks: Vec<usize> = Vec::with_capacity(n_groups);
+    for &(goff, glen) in &bounds {
+        let n = glen.div_ceil(CHUNK_SIZE).max(1);
+        group_chunks.push(n);
+        for j in 0..n {
+            let lo = (j * CHUNK_SIZE).min(glen);
+            let hi = ((j + 1) * CHUNK_SIZE).min(glen);
+            spans.push((goff + lo, hi - lo));
+        }
+    }
+    let n_chunks = spans.len();
+    let (compressed, pooled) = match usable_pool(pool, n_chunks) {
+        Some(pool) => {
+            let payload = Arc::new(payload);
+            let jobs: Vec<(Arc<Vec<u8>>, usize, usize)> =
+                spans.iter().map(|&(off, len)| (Arc::clone(&payload), off, len)).collect();
+            let out = pool
+                .map(jobs, |(p, off, len)| {
+                    zstd::bulk::compress(&p[off..off + len], ZSTD_LEVEL)
+                        .context("zstd compress chunk")
+                })
+                .into_iter()
+                .collect::<Result<Vec<_>>>()?;
+            (out, true)
+        }
+        None => {
+            let out = spans
+                .iter()
+                .map(|&(off, len)| {
+                    zstd::bulk::compress(&payload[off..off + len], ZSTD_LEVEL)
+                        .context("zstd compress chunk")
+                })
+                .collect::<Result<Vec<_>>>()?;
+            (out, false)
+        }
+    };
+
+    let comp_total: usize = compressed.iter().map(|c| c.len()).sum();
+    let mut out = Vec::with_capacity(
+        comp_total + e.key.model.len() + e.key.ns.as_str().len() + 72 + 36 * n_chunks,
+    );
+    write_prefix(&mut out, e, V5)?;
+    let ns = e.key.ns.as_str().as_bytes();
+    out.write_u32::<LittleEndian>(ns.len() as u32)?;
+    out.extend_from_slice(ns);
+    out.push(e.key.seg.kind_tag());
+    out.write_u64::<LittleEndian>(e.key.seg.raw())?;
+    write_dims(&mut out, &e.shape)?;
+    out.push(u8::from(!e.emb.is_empty()));
+    out.write_u32::<LittleEndian>(lpg as u32)?;
+    out.write_u32::<LittleEndian>(n_groups as u32)?;
+    out.write_u32::<LittleEndian>(CHUNK_SIZE as u32)?;
+    out.write_u32::<LittleEndian>(n_chunks as u32)?;
+    for n in &group_chunks {
+        out.write_u32::<LittleEndian>(*n as u32)?;
+    }
+    for chunk in &compressed {
+        out.write_u32::<LittleEndian>(chunk.len() as u32)?;
+        out.extend_from_slice(&Sha256::digest(chunk));
+    }
+    for chunk in &compressed {
+        out.extend_from_slice(chunk);
+    }
+    Ok((out, CodecReport { chunks: n_chunks, pooled }))
+}
+
+/// Flatten an entry into the group-ordered v5 payload; returns the
+/// payload plus each group's `(offset, len)` within it. K and V are
+/// layer-major, so a group's rows are contiguous slices of each tensor.
+fn flatten_grouped(e: &SegmentKv, lpg: usize, n_groups: usize) -> (Vec<u8>, Vec<(usize, usize)>) {
+    let s = &e.shape;
+    let lt = s.tokens * s.heads * s.d_head;
+    let total = 4 * (e.emb.len() + e.k.len() + e.v.len());
+    let mut payload = vec![0u8; total];
+    let mut bounds = Vec::with_capacity(n_groups);
+    let mut off = 0usize;
+    for g in 0..n_groups {
+        let start = off;
+        let l0 = (g * lpg).min(s.layers);
+        let l1 = ((g + 1) * lpg).min(s.layers);
+        if g == 0 && !e.emb.is_empty() {
+            let n = e.emb.len() * 4;
+            LittleEndian::write_f32_into(&e.emb, &mut payload[off..off + n]);
+            off += n;
+        }
+        for t in [&e.k, &e.v] {
+            let n = (l1 - l0) * lt * 4;
+            LittleEndian::write_f32_into(&t[l0 * lt..l1 * lt], &mut payload[off..off + n]);
+            off += n;
+        }
+        bounds.push((start, off - start));
+    }
+    debug_assert_eq!(off, total);
+    (payload, bounds)
+}
+
+/// Legacy v4 writer (single-partition chunked container) — kept so
+/// compatibility tests can mint pre-v5 containers.
+pub fn encode_v4(e: &SegmentKv, pool: Option<&ThreadPool>) -> Result<(Vec<u8>, CodecReport)> {
     e.validate()?;
     let payload = flatten_payload(e);
 
@@ -235,6 +404,96 @@ fn decode_dispatch(
     owned: Option<&Arc<Vec<u8>>>,
     pool: Option<&ThreadPool>,
 ) -> Result<(SegmentKv, CodecReport)> {
+    let info = parse_container(bytes)?;
+    let payload = decode_all_groups(bytes, owned, &info, pool)?;
+    let report = CodecReport { chunks: info.table.len(), pooled: payload.1 };
+    Ok((assemble_grouped(&info, &payload.0), report))
+}
+
+/// One layer group's extent within a container: which layers and chunks
+/// it covers, and where its compressed/raw bytes sit.
+#[derive(Debug, Clone, Copy)]
+struct GroupExtent {
+    layer_lo: usize,
+    layer_hi: usize,
+    chunk_lo: usize,
+    chunk_hi: usize,
+    /// Absolute container offset of the group's first compressed byte.
+    comp_off: usize,
+    comp_len: usize,
+    /// Offset/length within the group-ordered raw payload.
+    raw_off: usize,
+    raw_len: usize,
+}
+
+/// Parsed container header of any version: key, shape, and the layer
+/// group partition map. v1–v4 containers parse as a single group spanning
+/// every layer, so group-wise readers handle legacy archives unchanged.
+#[derive(Debug, Clone)]
+pub struct ContainerInfo {
+    pub version: u32,
+    pub key: KvKey,
+    pub shape: KvShape,
+    pub has_emb: bool,
+    pub layers_per_group: usize,
+    chunk_size: usize,
+    groups: Vec<GroupExtent>,
+    table: Vec<(usize, [u8; 32])>,
+    data_off: usize,
+}
+
+impl ContainerInfo {
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Layer range `[lo, hi)` covered by group `g`.
+    pub fn group_layers(&self, g: usize) -> (usize, usize) {
+        (self.groups[g].layer_lo, self.groups[g].layer_hi)
+    }
+
+    /// Raw (decoded) bytes of group `g`'s subpayload.
+    pub fn group_raw_len(&self, g: usize) -> usize {
+        self.groups[g].raw_len
+    }
+
+    /// Compressed bytes of group `g`'s chunk run.
+    pub fn group_comp_len(&self, g: usize) -> usize {
+        self.groups[g].comp_len
+    }
+
+    /// Number of chunks carrying group `g`'s subpayload.
+    pub fn group_chunks(&self, g: usize) -> usize {
+        self.groups[g].chunk_hi - self.groups[g].chunk_lo
+    }
+
+    /// Container bytes needed to decode groups `0..upto`: the header plus
+    /// the first `upto` groups' chunk runs. A slice of this length is a
+    /// self-contained prefix (the header carries the full chunk table).
+    pub fn prefix_len(&self, upto: usize) -> usize {
+        let upto = upto.min(self.groups.len());
+        if upto == 0 {
+            self.data_off
+        } else {
+            let g = &self.groups[upto - 1];
+            g.comp_off + g.comp_len
+        }
+    }
+
+    /// Total container length implied by the header.
+    pub fn total_len(&self) -> usize {
+        self.prefix_len(self.groups.len())
+    }
+
+    /// How many whole groups a (possibly prefix) buffer of `len` bytes
+    /// can decode.
+    pub fn groups_available(&self, len: usize) -> usize {
+        self.groups.iter().take_while(|g| g.comp_off + g.comp_len <= len).count()
+    }
+}
+
+/// Parse any container version's header into its group partition map.
+pub fn parse_container(bytes: &[u8]) -> Result<ContainerInfo> {
     let mut r = std::io::Cursor::new(bytes);
     let mut magic = [0u8; 4];
     std::io::Read::read_exact(&mut r, &mut magic).context("reading magic")?;
@@ -246,17 +505,45 @@ fn decode_dispatch(
     match version {
         V1 => {
             let (key, shape) = read_legacy_image_header(&mut r, model)?;
-            decode_v1_body(bytes, r, key, shape)
-                .map(|kv| (kv, CodecReport { chunks: 1, pooled: false }))
+            let payload_len = r.read_u64::<LittleEndian>()? as usize;
+            if payload_len > MAX_PAYLOAD {
+                bail!("implausible v1 payload length {payload_len}");
+            }
+            let mut digest = [0u8; 32];
+            std::io::Read::read_exact(&mut r, &mut digest).context("truncated v1 header")?;
+            let data_off = r.position() as usize;
+            let expect = payload_bytes(&shape, true)?;
+            // v1's whole zstd payload behaves exactly like one chunk with
+            // a one-entry table, so the generic group machinery serves it.
+            Ok(ContainerInfo {
+                version,
+                key,
+                shape,
+                has_emb: true,
+                layers_per_group: shape.layers.max(1),
+                chunk_size: expect.max(1),
+                groups: vec![GroupExtent {
+                    layer_lo: 0,
+                    layer_hi: shape.layers,
+                    chunk_lo: 0,
+                    chunk_hi: 1,
+                    comp_off: data_off,
+                    comp_len: payload_len,
+                    raw_off: 0,
+                    raw_len: expect,
+                }],
+                table: vec![(payload_len, digest)],
+                data_off,
+            })
         }
         V2 => {
             let (key, shape) = read_legacy_image_header(&mut r, model)?;
-            decode_chunked_body(bytes, owned, r, key, shape, true, pool)
+            single_group_info(r, version, key, shape, true)
         }
         V3 => {
             let (seg, shape, has_emb) = read_segment_header(&mut r)?;
             let key = KvKey { model, ns: Namespace::default(), seg };
-            decode_chunked_body(bytes, owned, r, key, shape, has_emb, pool)
+            single_group_info(r, version, key, shape, has_emb)
         }
         V4 => {
             let ns_str = read_lp_string(&mut r, "namespace")?;
@@ -264,10 +551,318 @@ fn decode_dispatch(
                 if ns_str.is_empty() { Namespace::default() } else { Namespace::new(&ns_str)? };
             let (seg, shape, has_emb) = read_segment_header(&mut r)?;
             let key = KvKey { model, ns, seg };
-            decode_chunked_body(bytes, owned, r, key, shape, has_emb, pool)
+            single_group_info(r, version, key, shape, has_emb)
+        }
+        V5 => {
+            let ns_str = read_lp_string(&mut r, "namespace")?;
+            let ns =
+                if ns_str.is_empty() { Namespace::default() } else { Namespace::new(&ns_str)? };
+            let (seg, shape, has_emb) = read_segment_header(&mut r)?;
+            let key = KvKey { model, ns, seg };
+            let lpg = r.read_u32::<LittleEndian>()? as usize;
+            let n_groups = r.read_u32::<LittleEndian>()? as usize;
+            let chunk_size = r.read_u32::<LittleEndian>()? as usize;
+            let n_chunks = r.read_u32::<LittleEndian>()? as usize;
+            let expect = payload_bytes(&shape, has_emb)?;
+            if lpg == 0 || n_groups == 0 || n_groups > MAX_GROUPS {
+                bail!("implausible group geometry ({n_groups} groups of {lpg} layers)");
+            }
+            if n_groups != shape.layers.max(1).div_ceil(lpg) {
+                bail!(
+                    "group count {n_groups} disagrees with {} layers at {lpg}/group",
+                    shape.layers
+                );
+            }
+            if chunk_size == 0 || n_chunks == 0 || n_chunks > (1 << 20) {
+                bail!("implausible chunk geometry ({n_chunks} chunks of {chunk_size})");
+            }
+            let mut counts = Vec::with_capacity(n_groups);
+            for _ in 0..n_groups {
+                counts.push(r.read_u32::<LittleEndian>()? as usize);
+            }
+            // Rebuild each group's extent from the shape and verify the
+            // header's per-group chunk counts against it.
+            let mut groups = Vec::with_capacity(n_groups);
+            let (mut chunk_lo, mut raw_off) = (0usize, 0usize);
+            for (g, &count) in counts.iter().enumerate() {
+                let l0 = (g * lpg).min(shape.layers);
+                let l1 = ((g + 1) * lpg).min(shape.layers);
+                let glen = group_payload_bytes(&shape, has_emb && g == 0, l0, l1)?;
+                let expect_chunks = glen.div_ceil(chunk_size).max(1);
+                if count != expect_chunks {
+                    bail!(
+                        "chunk count {count} for group {g} disagrees with shape \
+                         ({glen} group bytes)"
+                    );
+                }
+                groups.push(GroupExtent {
+                    layer_lo: l0,
+                    layer_hi: l1,
+                    chunk_lo,
+                    chunk_hi: chunk_lo + count,
+                    comp_off: 0,
+                    comp_len: 0,
+                    raw_off,
+                    raw_len: glen,
+                });
+                chunk_lo += count;
+                raw_off += glen;
+            }
+            if chunk_lo != n_chunks {
+                bail!("chunk count {n_chunks} disagrees with per-group totals ({chunk_lo})");
+            }
+            if raw_off != expect {
+                bail!("group payload bytes {raw_off} disagree with shape ({expect})");
+            }
+            let table = read_table(&mut r, n_chunks)?;
+            let data_off = r.position() as usize;
+            let mut off = data_off;
+            for ge in &mut groups {
+                ge.comp_off = off;
+                ge.comp_len = table[ge.chunk_lo..ge.chunk_hi].iter().map(|(n, _)| n).sum();
+                off += ge.comp_len;
+            }
+            Ok(ContainerInfo {
+                version,
+                key,
+                shape,
+                has_emb,
+                layers_per_group: lpg,
+                chunk_size,
+                groups,
+                table,
+                data_off,
+            })
         }
         other => bail!("unsupported KV codec version {other}"),
     }
+}
+
+/// v2–v4: the whole payload is one partition — a single group spanning
+/// every layer, so group-wise readers fall back transparently.
+fn single_group_info(
+    mut r: std::io::Cursor<&[u8]>,
+    version: u32,
+    key: KvKey,
+    shape: KvShape,
+    has_emb: bool,
+) -> Result<ContainerInfo> {
+    let chunk_size = r.read_u32::<LittleEndian>()? as usize;
+    let n_chunks = r.read_u32::<LittleEndian>()? as usize;
+    let expect = payload_bytes(&shape, has_emb)?;
+    if chunk_size == 0 || n_chunks == 0 || n_chunks > (1 << 20) {
+        bail!("implausible chunk geometry ({n_chunks} chunks of {chunk_size})");
+    }
+    if n_chunks != expect.div_ceil(chunk_size).max(1) {
+        bail!("chunk count {n_chunks} disagrees with shape ({expect} payload bytes)");
+    }
+    let table = read_table(&mut r, n_chunks)?;
+    let data_off = r.position() as usize;
+    let comp_len: usize = table.iter().map(|(n, _)| n).sum();
+    Ok(ContainerInfo {
+        version,
+        key,
+        shape,
+        has_emb,
+        layers_per_group: shape.layers.max(1),
+        chunk_size,
+        groups: vec![GroupExtent {
+            layer_lo: 0,
+            layer_hi: shape.layers,
+            chunk_lo: 0,
+            chunk_hi: n_chunks,
+            comp_off: data_off,
+            comp_len,
+            raw_off: 0,
+            raw_len: expect,
+        }],
+        table,
+        data_off,
+    })
+}
+
+fn read_table(r: &mut std::io::Cursor<&[u8]>, n: usize) -> Result<Vec<(usize, [u8; 32])>> {
+    let mut table = Vec::with_capacity(n);
+    for _ in 0..n {
+        let comp_len = r.read_u32::<LittleEndian>()? as usize;
+        let mut digest = [0u8; 32];
+        std::io::Read::read_exact(r, &mut digest).context("truncated chunk table")?;
+        table.push((comp_len, digest));
+    }
+    Ok(table)
+}
+
+/// Per-chunk decode coordinates within one group.
+#[derive(Debug, Clone, Copy)]
+struct ChunkSpan {
+    /// Absolute container offset of the compressed chunk.
+    comp_off: usize,
+    comp_len: usize,
+    /// Offset within the whole group-ordered raw payload.
+    raw_off: usize,
+    raw_len: usize,
+    idx: usize,
+}
+
+fn group_spans(info: &ContainerInfo, g: usize) -> Vec<ChunkSpan> {
+    let ge = &info.groups[g];
+    let mut spans = Vec::with_capacity(ge.chunk_hi - ge.chunk_lo);
+    let mut comp_off = ge.comp_off;
+    for (j, idx) in (ge.chunk_lo..ge.chunk_hi).enumerate() {
+        let comp_len = info.table[idx].0;
+        let lo = (j * info.chunk_size).min(ge.raw_len);
+        let hi = ((j + 1) * info.chunk_size).min(ge.raw_len);
+        spans.push(ChunkSpan {
+            comp_off,
+            comp_len,
+            raw_off: ge.raw_off + lo,
+            raw_len: hi - lo,
+            idx,
+        });
+        comp_off += comp_len;
+    }
+    spans
+}
+
+/// Decode every group's chunks into the group-ordered raw payload.
+fn decode_all_groups(
+    bytes: &[u8],
+    owned: Option<&Arc<Vec<u8>>>,
+    info: &ContainerInfo,
+    pool: Option<&ThreadPool>,
+) -> Result<(Vec<u8>, bool)> {
+    let end = info.total_len();
+    if bytes.len() < end {
+        bail!("truncated KV entry (chunk data)");
+    }
+    let expect: usize = info.groups.iter().map(|g| g.raw_len).sum();
+    let spans: Vec<ChunkSpan> = (0..info.groups.len()).flat_map(|g| group_spans(info, g)).collect();
+    match usable_pool(pool, spans.len()) {
+        Some(pool) => {
+            // The pooled closures need `'static` data. An owned caller
+            // (`decode_owned`) shares its buffer behind the existing Arc
+            // — zero copies; a borrowed caller pays one copy of the
+            // compressed region. The serial path below borrows directly.
+            let (region, base): (Arc<Vec<u8>>, usize) = match owned {
+                Some(arc) => (Arc::clone(arc), 0),
+                None => (Arc::new(bytes[info.data_off..end].to_vec()), info.data_off),
+            };
+            type Job = (Arc<Vec<u8>>, usize, usize, usize, [u8; 32], usize);
+            let jobs: Vec<Job> = spans
+                .iter()
+                .map(|s| {
+                    (Arc::clone(&region), s.comp_off - base, s.comp_len, s.raw_len,
+                     info.table[s.idx].1, s.idx)
+                })
+                .collect();
+            let raw_chunks = pool
+                .map(jobs, |(region, off, comp_len, raw_len, digest, i)| {
+                    check_chunk(&region[off..off + comp_len], &digest, raw_len, i)
+                })
+                .into_iter()
+                .collect::<Result<Vec<_>>>()?;
+            // Spans are in ascending raw order, so concatenation lands
+            // every chunk at its raw offset.
+            let mut payload = Vec::with_capacity(expect);
+            for chunk in raw_chunks {
+                payload.extend_from_slice(&chunk);
+            }
+            if payload.len() != expect {
+                bail!("payload is {} bytes, shape wants {expect}", payload.len());
+            }
+            Ok((payload, true))
+        }
+        None => {
+            // Serial: decompress each chunk straight into its slot of one
+            // preallocated buffer — no per-chunk Vecs, no concat pass.
+            let mut payload = vec![0u8; expect];
+            let mut dec = zstd::bulk::Decompressor::new().context("zstd decompressor")?;
+            for s in &spans {
+                let comp = &bytes[s.comp_off..s.comp_off + s.comp_len];
+                verify_digest(comp, &info.table[s.idx].1, s.idx)?;
+                let dst = &mut payload[s.raw_off..s.raw_off + s.raw_len];
+                let n = dec.decompress_to_buffer(comp, dst).context("zstd decompress chunk")?;
+                if n != s.raw_len {
+                    bail!("chunk {} is {n} bytes, expected {}", s.idx, s.raw_len);
+                }
+            }
+            Ok((payload, false))
+        }
+    }
+}
+
+/// One decoded layer group: the unit the streaming fetch path yields.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupPayload {
+    pub index: usize,
+    pub layer_lo: usize,
+    pub layer_hi: usize,
+    /// `[tokens, d_model]`; empty unless group 0 of an emb-bearing entry.
+    pub emb: Vec<f32>,
+    /// `[layer_hi - layer_lo, tokens, heads, d_head]`
+    pub k: Vec<f32>,
+    /// `[layer_hi - layer_lo, tokens, heads, d_head]`
+    pub v: Vec<f32>,
+}
+
+/// Decode and integrity-check a single layer group. Only group `g`'s
+/// chunks are touched, so a container prefix covering groups `0..=g`
+/// (or a corrupt later group) decodes `g` fine.
+pub fn decode_group(info: &ContainerInfo, bytes: &[u8], g: usize) -> Result<GroupPayload> {
+    let ge = *info
+        .groups
+        .get(g)
+        .ok_or_else(|| anyhow!("group {g} out of range ({} groups)", info.groups.len()))?;
+    if bytes.len() < ge.comp_off + ge.comp_len {
+        bail!("truncated KV entry (group {g} chunk data)");
+    }
+    let mut payload = vec![0u8; ge.raw_len];
+    let mut dec = zstd::bulk::Decompressor::new().context("zstd decompressor")?;
+    for s in &group_spans(info, g) {
+        let comp = &bytes[s.comp_off..s.comp_off + s.comp_len];
+        verify_digest(comp, &info.table[s.idx].1, s.idx)?;
+        let off = s.raw_off - ge.raw_off;
+        let dst = &mut payload[off..off + s.raw_len];
+        let n = dec.decompress_to_buffer(comp, dst).context("zstd decompress chunk")?;
+        if n != s.raw_len {
+            bail!("chunk {} is {n} bytes, expected {}", s.idx, s.raw_len);
+        }
+    }
+    let s = &info.shape;
+    let lt = s.tokens * s.heads * s.d_head;
+    let emb_n = if g == 0 && info.has_emb { s.emb_elems() } else { 0 };
+    let n = (ge.layer_hi - ge.layer_lo) * lt;
+    let mut emb = vec![0f32; emb_n];
+    let mut k = vec![0f32; n];
+    let mut v = vec![0f32; n];
+    let (a, rest) = payload.split_at(emb_n * 4);
+    let (b, c) = rest.split_at(n * 4);
+    LittleEndian::read_f32_into(a, &mut emb);
+    LittleEndian::read_f32_into(b, &mut k);
+    LittleEndian::read_f32_into(c, &mut v);
+    Ok(GroupPayload { index: g, layer_lo: ge.layer_lo, layer_hi: ge.layer_hi, emb, k, v })
+}
+
+/// Rebuild the entry from the group-ordered raw payload.
+fn assemble_grouped(info: &ContainerInfo, payload: &[u8]) -> SegmentKv {
+    let s = info.shape;
+    let lt = s.tokens * s.heads * s.d_head;
+    let mut emb = vec![0f32; if info.has_emb { s.emb_elems() } else { 0 }];
+    let mut k = vec![0f32; s.kv_elems()];
+    let mut v = vec![0f32; s.kv_elems()];
+    for (g, ge) in info.groups.iter().enumerate() {
+        let mut off = ge.raw_off;
+        if g == 0 && info.has_emb {
+            LittleEndian::read_f32_into(&payload[off..off + emb.len() * 4], &mut emb);
+            off += emb.len() * 4;
+        }
+        let n = (ge.layer_hi - ge.layer_lo) * lt;
+        let (klo, khi) = (ge.layer_lo * lt, ge.layer_hi * lt);
+        LittleEndian::read_f32_into(&payload[off..off + n * 4], &mut k[klo..khi]);
+        off += n * 4;
+        LittleEndian::read_f32_into(&payload[off..off + n * 4], &mut v[klo..khi]);
+    }
+    SegmentKv { key: info.key.clone(), shape: s, emb, k, v }
 }
 
 /// v3/v4 header tail after model (and, for v4, namespace): segment kind +
@@ -321,140 +916,6 @@ fn read_legacy_image_header(
     let image = r.read_u64::<LittleEndian>()?;
     let shape = read_dims(r)?;
     Ok((KvKey { model, ns: Namespace::default(), seg: SegmentId::Image(ImageId(image)) }, shape))
-}
-
-#[allow(clippy::too_many_arguments)]
-fn decode_chunked_body(
-    bytes: &[u8],
-    owned: Option<&Arc<Vec<u8>>>,
-    mut r: std::io::Cursor<&[u8]>,
-    key: KvKey,
-    shape: KvShape,
-    has_emb: bool,
-    pool: Option<&ThreadPool>,
-) -> Result<(SegmentKv, CodecReport)> {
-    let chunk_size = r.read_u32::<LittleEndian>()? as usize;
-    let n_chunks = r.read_u32::<LittleEndian>()? as usize;
-    let expect_bytes = payload_bytes(&shape, has_emb)?;
-    if chunk_size == 0 || n_chunks == 0 || n_chunks > (1 << 20) {
-        bail!("implausible chunk geometry ({n_chunks} chunks of {chunk_size})");
-    }
-    if n_chunks != expect_bytes.div_ceil(chunk_size).max(1) {
-        bail!("chunk count {n_chunks} disagrees with shape ({expect_bytes} payload bytes)");
-    }
-    let mut table = Vec::with_capacity(n_chunks);
-    for _ in 0..n_chunks {
-        let comp_len = r.read_u32::<LittleEndian>()? as usize;
-        let mut digest = [0u8; 32];
-        std::io::Read::read_exact(&mut r, &mut digest).context("truncated chunk table")?;
-        table.push((comp_len, digest));
-    }
-    let data_off = r.position() as usize;
-    let comp_total: usize = table.iter().map(|(n, _)| n).sum();
-    let comp_region = bytes
-        .get(data_off..data_off + comp_total)
-        .ok_or_else(|| anyhow!("truncated KV entry (chunk data)"))?;
-
-    // Per-chunk spans into the compressed region; each chunk verifies its
-    // checksum and decompresses independently.
-    let mut spans = Vec::with_capacity(n_chunks);
-    let mut off = 0usize;
-    for (i, &(comp_len, _)) in table.iter().enumerate() {
-        let raw_len = if i + 1 == n_chunks { expect_bytes - i * chunk_size } else { chunk_size };
-        spans.push((off, comp_len, raw_len, i));
-        off += comp_len;
-    }
-    let (payload, pooled) = match usable_pool(pool, n_chunks) {
-        Some(pool) => {
-            // The pooled closures need `'static` data. An owned caller
-            // (`decode_owned`) shares its buffer behind the existing Arc
-            // — zero copies; a borrowed caller pays one copy of the
-            // compressed region. The serial path below borrows directly.
-            let table = Arc::new(table);
-            let (region, base): (Arc<Vec<u8>>, usize) = match owned {
-                Some(arc) => (Arc::clone(arc), data_off),
-                None => (Arc::new(comp_region.to_vec()), 0),
-            };
-            type Job = (Arc<Vec<u8>>, Arc<Vec<(usize, [u8; 32])>>, (usize, usize, usize, usize));
-            let jobs: Vec<Job> = spans
-                .iter()
-                .map(|&(off, comp_len, raw_len, i)| {
-                    (Arc::clone(&region), Arc::clone(&table), (base + off, comp_len, raw_len, i))
-                })
-                .collect();
-            let raw_chunks = pool
-                .map(jobs, |(region, table, (off, comp_len, raw_len, i))| {
-                    check_chunk(&region[off..off + comp_len], &table[i].1, raw_len, i)
-                })
-                .into_iter()
-                .collect::<Result<Vec<_>>>()?;
-            let mut payload = Vec::with_capacity(expect_bytes);
-            for chunk in raw_chunks {
-                payload.extend_from_slice(&chunk);
-            }
-            (payload, true)
-        }
-        None => {
-            // Serial: decompress each chunk straight into its slot of one
-            // preallocated buffer — no per-chunk Vecs, no concat pass.
-            let mut payload = vec![0u8; expect_bytes];
-            let mut dec = zstd::bulk::Decompressor::new().context("zstd decompressor")?;
-            for &(off, comp_len, raw_len, i) in &spans {
-                let comp = &comp_region[off..off + comp_len];
-                verify_digest(comp, &table[i].1, i)?;
-                let dst = &mut payload[i * chunk_size..i * chunk_size + raw_len];
-                let n =
-                    dec.decompress_to_buffer(comp, dst).context("zstd decompress chunk")?;
-                if n != raw_len {
-                    bail!("chunk {i} is {n} bytes, expected {raw_len}");
-                }
-            }
-            (payload, false)
-        }
-    };
-    if payload.len() != expect_bytes {
-        bail!("payload is {} bytes, shape wants {expect_bytes}", payload.len());
-    }
-    Ok((assemble(key, shape, has_emb, &payload), CodecReport { chunks: n_chunks, pooled }))
-}
-
-fn decode_v1_body(
-    bytes: &[u8],
-    mut r: std::io::Cursor<&[u8]>,
-    key: KvKey,
-    shape: KvShape,
-) -> Result<SegmentKv> {
-    let payload_len = r.read_u64::<LittleEndian>()? as usize;
-    let mut digest = [0u8; 32];
-    std::io::Read::read_exact(&mut r, &mut digest)?;
-    let offset = r.position() as usize;
-    let end = offset
-        .checked_add(payload_len)
-        .ok_or_else(|| anyhow!("implausible v1 payload length {payload_len}"))?;
-    let compressed = bytes.get(offset..end).ok_or_else(|| anyhow!("truncated KV entry"))?;
-    let actual = Sha256::digest(compressed);
-    if actual.as_slice() != digest {
-        bail!("KV entry integrity failure (sha256 mismatch)");
-    }
-    let expect = payload_bytes(&shape, true)?;
-    let payload = zstd::bulk::decompress(compressed, expect).context("zstd decompress")?;
-    if payload.len() != expect {
-        bail!("payload is {} bytes, shape wants {}", payload.len(), expect);
-    }
-    Ok(assemble(key, shape, true, &payload))
-}
-
-/// Split a raw payload into the entry's tensors.
-fn assemble(key: KvKey, shape: KvShape, has_emb: bool, payload: &[u8]) -> SegmentKv {
-    let mut emb = vec![0f32; if has_emb { shape.emb_elems() } else { 0 }];
-    let mut k = vec![0f32; shape.kv_elems()];
-    let mut v = vec![0f32; shape.kv_elems()];
-    let (a, rest) = payload.split_at(emb.len() * 4);
-    let (b, c) = rest.split_at(k.len() * 4);
-    LittleEndian::read_f32_into(a, &mut emb);
-    LittleEndian::read_f32_into(b, &mut k);
-    LittleEndian::read_f32_into(c, &mut v);
-    SegmentKv { key, shape, emb, k, v }
 }
 
 /// Whether chunk work should fan out: a pool was supplied, there is more
@@ -736,8 +1197,9 @@ mod tests {
         let e = test_entry(7, 8);
         let mut bytes = encode(&e).unwrap();
         // n_chunks lives after: 4 magic + 4 ver + 4 mlen + model + 4 nslen
-        // + ns(empty) + 1 kind + 8 id + 20 dims + 1 has_emb + 4 chunk_size.
-        let n_off = 4 + 4 + 4 + e.key.model.len() + 4 + 1 + 8 + 20 + 1 + 4;
+        // + ns(empty) + 1 kind + 8 id + 20 dims + 1 has_emb + 4 lpg
+        // + 4 n_groups + 4 chunk_size.
+        let n_off = 4 + 4 + 4 + e.key.model.len() + 4 + 1 + 8 + 20 + 1 + 4 + 4 + 4;
         bytes[n_off] = 7;
         assert!(decode(&bytes).unwrap_err().to_string().contains("chunk count"));
     }
@@ -892,6 +1354,197 @@ mod tests {
                 } else {
                     Err("v1 roundtrip mismatch".into())
                 }
+            },
+        );
+    }
+
+    /// Entry with an arbitrary layer count (the shared `test_entry` is
+    /// pinned at 2 layers = one default group).
+    fn deep_entry(image: u64, layers: usize, tokens: usize) -> SegmentKv {
+        let shape = KvShape { layers, tokens, heads: 2, d_head: 4, d_model: 8 };
+        let mut rng = crate::util::rng::Rng::new(image ^ 0xDEEF);
+        SegmentKv {
+            key: KvKey::image("test-model", ImageId(image)),
+            shape,
+            emb: (0..shape.emb_elems()).map(|_| rng.f32()).collect(),
+            k: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
+            v: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
+        }
+    }
+
+    fn deep_chunk_entry(chunk: u64, layers: usize, tokens: usize) -> SegmentKv {
+        let shape = KvShape { layers, tokens, heads: 2, d_head: 4, d_model: 8 };
+        let mut rng = crate::util::rng::Rng::new(chunk ^ 0xFEED);
+        SegmentKv {
+            key: KvKey::chunk("test-model", ChunkId(chunk)),
+            shape,
+            emb: Vec::new(),
+            k: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
+            v: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
+        }
+    }
+
+    /// Scatter decoded groups back into full tensors and compare with the
+    /// whole-entry decode.
+    fn assert_groupwise_matches(e: &SegmentKv, bytes: &[u8]) {
+        let info = parse_container(bytes).unwrap();
+        let whole = decode(bytes).unwrap();
+        assert_eq!(&whole, e);
+        let lt = e.shape.tokens * e.shape.heads * e.shape.d_head;
+        let mut emb = Vec::new();
+        let mut k = vec![0f32; e.shape.kv_elems()];
+        let mut v = vec![0f32; e.shape.kv_elems()];
+        for g in 0..info.n_groups() {
+            let gp = decode_group(&info, bytes, g).unwrap();
+            assert_eq!((gp.layer_lo, gp.layer_hi), info.group_layers(g));
+            if g == 0 {
+                emb = gp.emb.clone();
+            } else {
+                assert!(gp.emb.is_empty(), "only group 0 carries embeddings");
+            }
+            k[gp.layer_lo * lt..gp.layer_hi * lt].copy_from_slice(&gp.k);
+            v[gp.layer_lo * lt..gp.layer_hi * lt].copy_from_slice(&gp.v);
+        }
+        assert_eq!(emb, whole.emb);
+        assert_eq!(k, whole.k);
+        assert_eq!(v, whole.v);
+    }
+
+    #[test]
+    fn v5_groups_decode_independently_and_match_whole() {
+        // 6 layers at the default 2-layer grouping → 3 groups; tokens
+        // sized so each group spans multiple chunks.
+        let e = deep_entry(11, 6, CHUNK_SIZE / 64);
+        let (bytes, rep) = encode_with(&e, None).unwrap();
+        let info = parse_container(&bytes).unwrap();
+        assert_eq!(info.version, 5);
+        assert_eq!(info.n_groups(), 3);
+        assert_eq!(info.layers_per_group, GROUP_LAYERS);
+        assert_eq!(info.total_len(), bytes.len());
+        assert!(rep.chunks >= 6, "groups should each span chunks, got {}", rep.chunks);
+        assert_groupwise_matches(&e, &bytes);
+        // Pooled and serial whole-entry decode agree on the v5 layout.
+        let pool = ThreadPool::new(4);
+        let (pooled, prep) = decode_with(&bytes, Some(&pool)).unwrap();
+        assert_eq!(pooled, e);
+        assert!(prep.pooled);
+    }
+
+    #[test]
+    fn container_prefix_decodes_leading_groups() {
+        let e = deep_entry(12, 6, 512);
+        let bytes = encode(&e).unwrap();
+        let info = parse_container(&bytes).unwrap();
+        assert_eq!(info.n_groups(), 3);
+        for m in 0..=3usize {
+            let p = info.prefix_len(m);
+            assert!(p <= bytes.len());
+            assert_eq!(info.groups_available(p), m);
+            let prefix = &bytes[..p];
+            // The header (and full chunk table) sits inside every prefix,
+            // so a prefix is self-describing.
+            let pi = parse_container(prefix).unwrap();
+            for g in 0..3 {
+                let r = decode_group(&pi, prefix, g);
+                if g < m {
+                    assert_eq!(r.unwrap(), decode_group(&info, &bytes, g).unwrap());
+                } else {
+                    assert!(r.is_err(), "group {g} must not decode from a {m}-group prefix");
+                }
+            }
+            if m < 3 {
+                assert!(decode(prefix).is_err(), "{m}-group prefix must fail whole decode");
+            }
+        }
+        assert_eq!(info.prefix_len(99), bytes.len(), "prefix_len clamps to total");
+    }
+
+    #[test]
+    fn corrupt_chunk_in_group_fails_that_group_and_whole() {
+        let e = deep_entry(13, 6, 512);
+        let (mut bytes, _) = encode_with(&e, None).unwrap();
+        let info = parse_container(&bytes).unwrap();
+        // Flip a byte inside group 1's compressed run: group 0 still
+        // decodes (the streaming path keeps it), the whole entry fails.
+        let off = info.prefix_len(1) + info.group_comp_len(1) / 2;
+        bytes[off] ^= 0xFF;
+        assert!(decode(&bytes).unwrap_err().to_string().contains("integrity"));
+        assert!(decode_group(&info, &bytes, 0).is_ok());
+        assert!(decode_group(&info, &bytes, 1).unwrap_err().to_string().contains("integrity"));
+        assert!(decode_group(&info, &bytes, 2).is_ok(), "chunks are group-independent");
+    }
+
+    #[test]
+    fn legacy_versions_parse_as_single_group() {
+        let e = big_entry(21);
+        let v1 = encode_v1(&e).unwrap();
+        let v4 = encode_v4(&e, None).unwrap().0;
+        for bytes in [v1, v4] {
+            let info = parse_container(&bytes).unwrap();
+            assert_eq!(info.n_groups(), 1, "v{} must fall back to one group", info.version);
+            assert_eq!(info.group_layers(0), (0, e.shape.layers));
+            let whole = decode(&bytes).unwrap();
+            assert_eq!(whole, e);
+            let gp = decode_group(&info, &bytes, 0).unwrap();
+            assert_eq!(gp.emb, whole.emb);
+            assert_eq!(gp.k, whole.k);
+            assert_eq!(gp.v, whole.v);
+        }
+    }
+
+    #[test]
+    fn grouped_encode_clamps_layers_per_group() {
+        let e = deep_entry(14, 6, 8);
+        let (bytes, _) = encode_grouped(&e, 1, None).unwrap();
+        assert_eq!(parse_container(&bytes).unwrap().n_groups(), 6);
+        let (b2, _) = encode_grouped(&e, 99, None).unwrap();
+        assert_eq!(parse_container(&b2).unwrap().n_groups(), 1);
+        let (b3, _) = encode_grouped(&e, 0, None).unwrap();
+        assert_eq!(parse_container(&b3).unwrap().n_groups(), 6, "lpg 0 clamps to 1");
+    }
+
+    #[test]
+    fn property_v5_group_decode_matches_whole() {
+        crate::util::prop::check(
+            "kv-codec-v5-groupwise",
+            20,
+            |rng| {
+                let layers = 1 + rng.below(8) as usize;
+                let tokens = 1 + rng.below(48) as usize;
+                let lpg = 1 + rng.below(4) as usize;
+                let e = if rng.bool(0.5) {
+                    deep_entry(rng.next_u64(), layers, tokens)
+                } else {
+                    deep_chunk_entry(rng.next_u64(), layers, tokens)
+                };
+                (e, lpg)
+            },
+            |(e, lpg)| {
+                let (bytes, _) = encode_grouped(e, *lpg, None).map_err(|x| x.to_string())?;
+                let info = parse_container(&bytes).map_err(|x| x.to_string())?;
+                if info.n_groups() != e.shape.layers.div_ceil(*lpg) {
+                    return Err(format!("unexpected group count {}", info.n_groups()));
+                }
+                let whole = decode(&bytes).map_err(|x| x.to_string())?;
+                if &whole != e {
+                    return Err("whole-entry roundtrip mismatch".into());
+                }
+                let lt = e.shape.tokens * e.shape.heads * e.shape.d_head;
+                let mut emb = Vec::new();
+                let mut k = vec![0f32; e.shape.kv_elems()];
+                let mut v = vec![0f32; e.shape.kv_elems()];
+                for g in 0..info.n_groups() {
+                    let gp = decode_group(&info, &bytes, g).map_err(|x| x.to_string())?;
+                    if g == 0 {
+                        emb = gp.emb.clone();
+                    }
+                    k[gp.layer_lo * lt..gp.layer_hi * lt].copy_from_slice(&gp.k);
+                    v[gp.layer_lo * lt..gp.layer_hi * lt].copy_from_slice(&gp.v);
+                }
+                if emb != whole.emb || k != whole.k || v != whole.v {
+                    return Err("group-wise decode disagrees with whole decode".into());
+                }
+                Ok(())
             },
         );
     }

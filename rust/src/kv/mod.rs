@@ -19,10 +19,14 @@
 //! The storage hot path is built for concurrent serving: the store is
 //! sharded by key hash (no global lock), device entries travel as
 //! `Arc<SegmentKv>` (a hit is a refcount bump, not a copy), host/disk
-//! bytes use the chunked v4 container so codec work fans out across the
-//! shared pool, and a prefetch lane warms queued requests' entries
-//! toward the device tier between decode rounds. See [`store`],
-//! [`codec`] and [`transfer`] for the details.
+//! bytes use the layer-grouped chunked v5 container so codec work fans
+//! out across the shared pool and readers can decode one layer group at
+//! a time, a streamed fetch path yields groups to the prefill loop as
+//! they inflate (overlapping load with compute, the paper's central
+//! pipelining claim), and a prefetch lane warms queued requests'
+//! entries — whole or only their shallow groups — toward the device
+//! tier between decode rounds. See [`store`], [`codec`] and
+//! [`transfer`] for the details.
 //!
 //! Tier semantics on this testbed (CPU PJRT — DESIGN.md §2):
 //! * **device** — uncompressed in-RAM, capacity-limited (models GPU HBM
@@ -41,9 +45,12 @@ use crate::mm::{ChunkId, ImageId, Namespace, SegmentId};
 
 pub use block::BlockAllocator;
 pub use store::{
-    EntryInfo, EvictOutcome, KvStore, LeaseInfo, StoreConfig, StoreStats, SweepReport, Tier,
+    ContainerSlice, EntryInfo, EvictOutcome, GroupAdmit, KvStore, LeaseInfo, StoreConfig,
+    StoreStats, StreamedGroup, SweepReport, Tier,
 };
-pub use transfer::{LocalTransport, TransferEngine, TransferReport, Transport};
+pub use transfer::{
+    FetchStream, LocalTransport, StreamEvent, TransferEngine, TransferReport, Transport,
+};
 
 /// Shape of one segment's KV entry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -12,13 +12,27 @@
 //!   `Arc<SegmentKv>`; a device hit is a refcount bump, not a multi-MB
 //!   memcpy, and the same `Arc` flows through the transfer engine into
 //!   the linker call sites.
-//! * **Chunked codec** — host/disk bytes use the chunked v4 container
-//!   ([`codec`]), so encode/decode of multi-MB entries fans out across
-//!   the [`ThreadPool`] handed to [`KvStore::with_pool`]. The engine
-//!   hands the store a *dedicated* codec pool so transfer-pool workers
-//!   can fan decodes out too; with a shared pool, codec calls arriving
-//!   on that pool's own workers detect it and stay serial (v1 entries
-//!   still decode; corrupt chunks surface as whole-entry misses).
+//! * **Chunked codec** — host/disk bytes use the layer-grouped v5
+//!   container ([`codec`]), so encode/decode of multi-MB entries fans
+//!   out across the [`ThreadPool`] handed to [`KvStore::with_pool`].
+//!   The engine hands the store a *dedicated* codec pool so
+//!   transfer-pool workers can fan decodes out too; with a shared pool,
+//!   codec calls arriving on that pool's own workers detect it and stay
+//!   serial (v1 entries still decode; corrupt chunks surface as
+//!   whole-entry misses).
+//! * **Partial residency** — the v5 container's layer groups decode
+//!   independently, so an entry can be *partially* device-resident
+//!   while the rest is still inflating (or arriving from a peer).
+//!   Partials live in a per-shard side map: [`KvStore::put_groups`]
+//!   admits one group at a time (promoting to a full device entry when
+//!   the last group lands), [`KvStore::get_groups`] /
+//!   [`KvStore::group_residency`] read them back, and
+//!   [`KvStore::get_streamed`] drives a host/disk read group-by-group,
+//!   handing each group to a sink the moment it is verified. Partial
+//!   bytes count against the device budget and are the first eviction
+//!   victims (the compressed source tier still has the data); partials
+//!   are invisible to `get`/`contains`/`tier_of` — a partially resident
+//!   entry is still a whole-entry miss for correctness.
 //! * **Leases** — the v3 cache-plane's bounded-lifetime pins. Each shard
 //!   keeps a lease table; an entry with at least one **live** lease is
 //!   exempt from LRU demotion, host drops and TTL expiry, exactly like
@@ -44,7 +58,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Context};
 
-use super::{codec, KvKey, SegmentKv};
+use super::{codec, KvKey, KvShape, SegmentKv};
 use crate::util::threadpool::ThreadPool;
 use crate::Result;
 
@@ -130,6 +144,13 @@ pub struct StoreStats {
     pub prefetch_hits: u64,
     /// Prefetched entries evicted or removed before any request used them.
     pub prefetch_wasted: u64,
+    /// Partial-entry prefetches started (leading layer groups only).
+    pub prefetch_partial_issued: u64,
+    /// Layer groups admitted to the partial device tier by prefetches.
+    pub prefetch_partial_groups: u64,
+    /// Layer groups a streamed read served straight from a
+    /// prefetch-warmed partial (decode skipped).
+    pub prefetch_partial_hits: u64,
     /// Total v2 chunks processed by store-side codec work.
     pub codec_chunks: u64,
     /// Codec ops whose chunks actually fanned out across the pool.
@@ -156,6 +177,9 @@ impl StoreStats {
         self.prefetch_issued += o.prefetch_issued;
         self.prefetch_hits += o.prefetch_hits;
         self.prefetch_wasted += o.prefetch_wasted;
+        self.prefetch_partial_issued += o.prefetch_partial_issued;
+        self.prefetch_partial_groups += o.prefetch_partial_groups;
+        self.prefetch_partial_hits += o.prefetch_partial_hits;
         self.codec_chunks += o.codec_chunks;
         self.codec_parallel_ops += o.codec_parallel_ops;
         self.leases_acquired += o.leases_acquired;
@@ -228,10 +252,65 @@ struct DiskEntry {
     bytes: usize,
 }
 
+/// An entry assembling group-by-group toward device residency
+/// (streaming admission, partial prefetch). Groups are held as shared
+/// decoded payloads so `get_groups` hands out refcount bumps, not
+/// copies; when every slot fills the partial is assembled into a full
+/// [`SegmentKv`] and moves to the device map.
+struct PartialEntry {
+    groups: Vec<Option<Arc<codec::GroupPayload>>>,
+    shape: KvShape,
+    has_emb: bool,
+    layers_per_group: usize,
+    /// Decoded bytes held by the resident groups (counted in
+    /// `device_bytes`).
+    bytes: usize,
+    last_used: u64,
+    /// Every resident group came from the partial-prefetch lane (drives
+    /// `prefetch_partial_hits` when a streamed read consumes them).
+    from_prefetch: bool,
+}
+
+impl PartialEntry {
+    fn mask(&self) -> u64 {
+        self.groups
+            .iter()
+            .enumerate()
+            .fold(0u64, |m, (i, s)| if s.is_some() { m | (1 << i) } else { m })
+    }
+
+    fn complete(&self) -> bool {
+        self.groups.iter().all(|s| s.is_some())
+    }
+
+    /// Concatenate the groups (all resident) into a full entry. Group
+    /// payloads are layer-contiguous slices of the layer-major k/v
+    /// tensors, in index order, so assembly is pure concatenation.
+    fn assemble(&self, key: &KvKey) -> SegmentKv {
+        let mut emb = Vec::new();
+        let n = self.shape.kv_elems();
+        let mut k = Vec::with_capacity(n);
+        let mut v = Vec::with_capacity(n);
+        for slot in &self.groups {
+            let g = slot.as_ref().expect("assemble requires a complete partial");
+            if g.index == 0 {
+                emb = g.emb.clone();
+            }
+            k.extend_from_slice(&g.k);
+            v.extend_from_slice(&g.v);
+        }
+        SegmentKv { key: key.clone(), shape: self.shape, emb, k, v }
+    }
+}
+
 /// One shard's metadata; every field is guarded by the shard's own lock.
 struct ShardInner {
     device: HashMap<KvKey, DeviceEntry>,
     device_bytes: usize,
+    /// Entries assembling group-by-group toward device residency.
+    /// Their bytes count in `device_bytes`; they are invisible to the
+    /// whole-entry surface and evicted before full entries.
+    partial: HashMap<KvKey, PartialEntry>,
     host: HashMap<KvKey, HostEntry>,
     host_bytes: usize,
     disk: HashMap<KvKey, DiskEntry>,
@@ -263,6 +342,7 @@ impl Shard {
             inner: Mutex::new(ShardInner {
                 device: HashMap::new(),
                 device_bytes: 0,
+                partial: HashMap::new(),
                 host: HashMap::new(),
                 host_bytes: 0,
                 disk: HashMap::new(),
@@ -317,6 +397,127 @@ pub struct EntryInfo {
     pub leases: usize,
 }
 
+/// A container — or a self-contained group prefix of one — served to a
+/// peer by [`KvStore::container_prefix`].
+#[derive(Debug, Clone)]
+pub struct ContainerSlice {
+    pub bytes: Vec<u8>,
+    /// Leading layer groups the slice carries.
+    pub groups: usize,
+    /// Total groups in the full container (0 when the bytes did not
+    /// parse and were served whole as a best effort).
+    pub n_groups: usize,
+}
+
+/// One layer group as it becomes available to a [`KvStore::get_streamed`]
+/// sink.
+#[derive(Debug, Clone)]
+pub struct StreamedGroup {
+    pub group: Arc<codec::GroupPayload>,
+    /// Total groups in the entry (the sink sees exactly this many).
+    pub n_groups: usize,
+    /// Raw (decoded) bytes of this group's subpayload.
+    pub bytes: usize,
+    /// Microseconds spent inflating + verifying the group; 0 when it
+    /// was already resident (a partial-prefetch payoff).
+    pub decode_us: u64,
+    /// Where the group came from (`Device` = already-resident partial).
+    pub source: Tier,
+}
+
+/// Outcome of [`KvStore::admit_container_groups`]: what a peer-pulled
+/// byte slice carried and what it completed.
+#[derive(Debug, Clone)]
+pub struct GroupAdmit {
+    /// Groups the bytes carried and decoded into the partial tier
+    /// (empty for a full container, which goes through the
+    /// whole-entry admit lane instead).
+    pub groups: Vec<Arc<codec::GroupPayload>>,
+    /// Total groups in the entry's container.
+    pub n_groups: usize,
+    /// The assembled entry when the admission completed it.
+    pub entry: Option<Arc<SegmentKv>>,
+}
+
+/// Decode-progress state for one streamed read: which groups are in
+/// hand, which were already pushed to the sink, and the container
+/// geometry they belong to. Survives a host→disk fallback so groups
+/// verified from a corrupt-later host copy are not decoded twice.
+struct StreamCursor {
+    slots: Vec<Option<Arc<codec::GroupPayload>>>,
+    geom: Option<(KvShape, bool, usize)>,
+    emitted: u64,
+    /// Groups served from the partial tier without a decode.
+    resident_served: u64,
+    chunks: usize,
+}
+
+impl StreamCursor {
+    /// Seed from an in-flight partial assembly (its groups skip their
+    /// decode). Returns the cursor and the partial's prefetch flag.
+    fn new(partial: Option<PartialEntry>) -> (StreamCursor, bool) {
+        let (slots, geom, fp) = match partial {
+            Some(p) => {
+                (p.groups, Some((p.shape, p.has_emb, p.layers_per_group)), p.from_prefetch)
+            }
+            None => (Vec::new(), None, false),
+        };
+        (StreamCursor { slots, geom, emitted: 0, resident_served: 0, chunks: 0 }, fp)
+    }
+
+    /// Walk the container's groups in index order: emit resident ones
+    /// (once) with `decode_us == 0`, decode + verify + emit the rest.
+    /// On error, everything verified so far stays in `slots`.
+    fn feed(
+        &mut self,
+        key: &KvKey,
+        bytes: &[u8],
+        sink: &mut dyn FnMut(StreamedGroup),
+        source: Tier,
+    ) -> Result<()> {
+        let info = codec::parse_container(bytes)?;
+        ensure!(&info.key == key, "container holds {:?}, expected {key:?}", info.key);
+        let geom = (info.shape, info.has_emb, info.layers_per_group);
+        if self.geom != Some(geom) || self.slots.len() != info.n_groups() {
+            // A stale partial from different geometry: start clean.
+            self.slots = vec![None; info.n_groups()];
+            self.emitted = 0;
+            self.resident_served = 0;
+            self.geom = Some(geom);
+        }
+        let n = info.n_groups();
+        for gi in 0..n {
+            if let Some(p) = &self.slots[gi] {
+                if self.emitted & (1u64 << gi) == 0 {
+                    sink(StreamedGroup {
+                        group: Arc::clone(p),
+                        n_groups: n,
+                        bytes: info.group_raw_len(gi),
+                        decode_us: 0,
+                        source: Tier::Device,
+                    });
+                    self.emitted |= 1u64 << gi;
+                    self.resident_served += 1;
+                }
+                continue;
+            }
+            let t0 = Instant::now();
+            let payload = Arc::new(codec::decode_group(&info, bytes, gi)?);
+            self.chunks += info.group_chunks(gi);
+            sink(StreamedGroup {
+                group: Arc::clone(&payload),
+                n_groups: n,
+                bytes: info.group_raw_len(gi),
+                decode_us: t0.elapsed().as_micros() as u64,
+                source,
+            });
+            self.emitted |= 1u64 << gi;
+            self.slots[gi] = Some(payload);
+        }
+        Ok(())
+    }
+}
+
 impl ShardInner {
     /// Does this key hold at least one live lease right now?
     fn protected(&self, key: &KvKey) -> bool {
@@ -363,6 +564,15 @@ impl ShardInner {
         let e = self.host.remove(key)?;
         self.host_bytes -= e.bytes.len();
         Some(e.bytes)
+    }
+
+    /// Remove a key's partial assembly, keeping byte accounting
+    /// straight. A full-entry insert for the key supersedes whatever
+    /// was mid-assembly.
+    fn drop_partial(&mut self, key: &KvKey) -> Option<PartialEntry> {
+        let p = self.partial.remove(key)?;
+        self.device_bytes -= p.bytes;
+        Some(p)
     }
 }
 
@@ -489,8 +699,10 @@ impl KvStore {
             key.clone(),
             DiskEntry { path, written_at: Instant::now(), bytes: encoded.len() },
         );
-        // Satellite fix: a re-upload invalidates any host-tier copy.
+        // Satellite fix: a re-upload invalidates any host-tier copy —
+        // and any in-flight partial assembly of the old bytes.
         g.drop_host(&key);
+        g.drop_partial(&key);
         // A fresh upload is not a prefetch artifact.
         g.prefetched.remove(&key);
         if let Some(old) = g.device.insert(key, DeviceEntry { kv, last_used: clock }) {
@@ -501,7 +713,7 @@ impl KvStore {
         Ok(())
     }
 
-    /// The encoded v4 container for a live key, non-destructively — the
+    /// The encoded container for a live key, non-destructively — the
     /// serving side of the cluster `kv.pull` lane. `put`/`put_arc` write
     /// every entry through to disk, so a live key's container normally
     /// already exists as bytes: host tier clones them, disk tier reads the
@@ -509,23 +721,32 @@ impl KvStore {
     /// format — no re-encode happens on this path. A device-resident key
     /// whose disk copy has aged out is re-encoded as a last resort.
     pub fn container_bytes(&self, key: &KvKey) -> Option<Vec<u8>> {
+        self.container_prefix(key, None).map(|s| s.bytes)
+    }
+
+    /// Like [`KvStore::container_bytes`], but `groups: Some(m)` serves
+    /// only the container's self-contained m-group prefix (header +
+    /// full chunk table + the leading groups' chunk runs) — the serving
+    /// side of a `kv.pull` carrying a `groups` field. The synthetic
+    /// `disk_bandwidth` throttle applies to the bytes actually served,
+    /// not the whole container (satellite fix: a peer asking for a
+    /// small prefix used to pay the full-container transfer delay).
+    pub fn container_prefix(&self, key: &KvKey, groups: Option<usize>) -> Option<ContainerSlice> {
         let shard = self.shard(key);
-        let (disk_path, disk_bytes, device_kv) = {
+        let (disk_path, device_kv) = {
             let g = shard.lock();
             if let Some(e) = g.host.get(key) {
-                return Some(e.bytes.clone());
+                return Some(self.slice_container(e.bytes.clone(), groups, false));
             }
             if g.disk_live(key, self.cfg.ttl) {
-                let d = &g.disk[key];
-                (Some(d.path.clone()), d.bytes, None)
+                (Some(g.disk[key].path.clone()), None)
             } else {
-                (None, 0, g.device.get(key).map(|e| Arc::clone(&e.kv)))
+                (None, g.device.get(key).map(|e| Arc::clone(&e.kv)))
             }
         };
         if let Some(path) = disk_path {
-            self.throttle(disk_bytes);
             match std::fs::read(&path) {
-                Ok(bytes) => return Some(bytes),
+                Ok(bytes) => return Some(self.slice_container(bytes, groups, true)),
                 Err(e) => {
                     log::warn!("kv container read failed for {key:?}: {e}");
                     return None;
@@ -533,7 +754,39 @@ impl KvStore {
             }
         }
         let kv = device_kv?;
-        codec::encode_with(&kv, self.codec_pool()).ok().map(|(bytes, _)| bytes)
+        let bytes = codec::encode_with(&kv, self.codec_pool()).ok().map(|(b, _)| b)?;
+        Some(self.slice_container(bytes, groups, false))
+    }
+
+    /// Truncate a container to the requested group prefix; the
+    /// bandwidth model charges the bytes actually served when the
+    /// source was disk (host clones and last-resort re-encodes are
+    /// RAM-side and stay unthrottled, as before).
+    fn slice_container(
+        &self,
+        mut bytes: Vec<u8>,
+        groups: Option<usize>,
+        from_disk: bool,
+    ) -> ContainerSlice {
+        let (served, total) = match codec::parse_container(&bytes) {
+            Ok(info) => {
+                let total = info.n_groups();
+                match groups {
+                    Some(m) if m < total => {
+                        bytes.truncate(info.prefix_len(m));
+                        (m, total)
+                    }
+                    _ => (total, total),
+                }
+            }
+            // Unparseable bytes are served whole as a best effort: the
+            // peer's decode fails loudly and falls back to recompute.
+            Err(_) => (0, 0),
+        };
+        if from_disk {
+            self.throttle(bytes.len());
+        }
+        ContainerSlice { bytes, groups: served, n_groups: total }
     }
 
     /// Admit a container pulled from a peer (the receiving side of
@@ -576,6 +829,7 @@ impl KvStore {
         );
         // Like a re-upload: any stale host copy must not outlive this admit.
         g.drop_host(&key);
+        g.drop_partial(&key);
         g.prefetched.remove(&key);
         if let Some(old) =
             g.device.insert(key, DeviceEntry { kv: Arc::clone(&kv), last_used: clock })
@@ -585,6 +839,459 @@ impl KvStore {
         g.device_bytes += nbytes;
         self.evict_locked(&mut g);
         Ok(kv)
+    }
+
+    /// Admit a container — or a self-contained group prefix of one —
+    /// pulled from a peer. Full containers delegate to
+    /// [`KvStore::admit_container`] (disk write-through + device
+    /// residency); a prefix decodes each carried group into the partial
+    /// device tier instead, so shallow layers are servable while the
+    /// rest of the entry is still in flight.
+    pub fn admit_container_groups(
+        &self,
+        expected: &KvKey,
+        bytes: Vec<u8>,
+    ) -> Result<GroupAdmit> {
+        let info = codec::parse_container(&bytes)?;
+        ensure!(
+            &info.key == expected,
+            "peer container holds {:?}, expected {:?}",
+            info.key,
+            expected
+        );
+        let n_groups = info.n_groups();
+        let avail = info.groups_available(bytes.len());
+        if avail >= n_groups {
+            let kv = self.admit_container(expected, bytes)?;
+            return Ok(GroupAdmit { groups: Vec::new(), n_groups, entry: Some(kv) });
+        }
+        let mut done = None;
+        let mut groups = Vec::with_capacity(avail);
+        for gi in 0..avail {
+            let payload = Arc::new(codec::decode_group(&info, &bytes, gi)?);
+            groups.push(Arc::clone(&payload));
+            done = self.put_group_arc(
+                expected,
+                info.shape,
+                info.has_emb,
+                info.layers_per_group,
+                payload,
+                false,
+            )?;
+        }
+        Ok(GroupAdmit { groups, n_groups, entry: done })
+    }
+
+    /// Admit one decoded layer group toward device residency (the
+    /// streaming half of the v5 codec: peer prefixes, partial
+    /// prefetch). Groups may land in any order; when the last slot
+    /// fills, the partial is assembled into a full entry, promoted into
+    /// the device map and returned — from then on a `get` is an
+    /// ordinary device hit. A key already fully device-resident
+    /// ignores the group (`Ok(None)`).
+    pub fn put_groups(
+        &self,
+        key: &KvKey,
+        shape: KvShape,
+        has_emb: bool,
+        layers_per_group: usize,
+        group: codec::GroupPayload,
+    ) -> Result<Option<Arc<SegmentKv>>> {
+        self.put_group_arc(key, shape, has_emb, layers_per_group, Arc::new(group), false)
+    }
+
+    fn put_group_arc(
+        &self,
+        key: &KvKey,
+        shape: KvShape,
+        has_emb: bool,
+        layers_per_group: usize,
+        group: Arc<codec::GroupPayload>,
+        from_prefetch: bool,
+    ) -> Result<Option<Arc<SegmentKv>>> {
+        let lpg = layers_per_group.max(1);
+        let n_groups = shape.layers.max(1).div_ceil(lpg);
+        ensure!(n_groups <= codec::MAX_GROUPS, "implausible group count {n_groups} for {key:?}");
+        ensure!(
+            group.index < n_groups,
+            "group {} out of range (entry has {n_groups})",
+            group.index
+        );
+        // Validate the payload against the declared geometry before it
+        // can poison an assembly.
+        let l0 = group.index * lpg;
+        let l1 = shape.layers.min(l0 + lpg);
+        ensure!(
+            (group.layer_lo, group.layer_hi) == (l0, l1),
+            "group {} spans layers {}..{}, geometry says {l0}..{l1}",
+            group.index,
+            group.layer_lo,
+            group.layer_hi
+        );
+        let lt = shape.tokens * shape.heads * shape.d_head;
+        ensure!(
+            group.k.len() == (l1 - l0) * lt && group.v.len() == group.k.len(),
+            "group {} k/v length mismatch",
+            group.index
+        );
+        let emb_expect = if group.index == 0 && has_emb { shape.emb_elems() } else { 0 };
+        ensure!(
+            group.emb.len() == emb_expect,
+            "group {} emb length {} != {emb_expect}",
+            group.index,
+            group.emb.len()
+        );
+
+        let gbytes = 4 * (group.emb.len() + group.k.len() + group.v.len());
+        let shard = self.shard(key);
+        let mut g = shard.lock();
+        g.clock += 1;
+        let clock = g.clock;
+        if g.device.contains_key(key) {
+            return Ok(None);
+        }
+        let (added, complete) = {
+            let p = g.partial.entry(key.clone()).or_insert_with(|| PartialEntry {
+                groups: vec![None; n_groups],
+                shape,
+                has_emb,
+                layers_per_group: lpg,
+                bytes: 0,
+                last_used: clock,
+                from_prefetch,
+            });
+            ensure!(
+                p.groups.len() == n_groups && p.layers_per_group == lpg && p.shape == shape,
+                "group geometry changed mid-assembly for {key:?}"
+            );
+            p.last_used = clock;
+            p.from_prefetch &= from_prefetch;
+            let added = if p.groups[group.index].is_none() {
+                p.groups[group.index] = Some(group);
+                p.bytes += gbytes;
+                true
+            } else {
+                false
+            };
+            (added, p.complete())
+        };
+        if added {
+            g.device_bytes += gbytes;
+        }
+        if complete {
+            let p = g.drop_partial(key).expect("complete partial present");
+            let kv = Arc::new(p.assemble(key));
+            let nbytes = kv.bytes();
+            if let Some(old) =
+                g.device.insert(key.clone(), DeviceEntry { kv: Arc::clone(&kv), last_used: clock })
+            {
+                g.device_bytes -= old.kv.bytes();
+            }
+            g.device_bytes += nbytes;
+            if p.from_prefetch {
+                g.prefetched.insert(key.clone());
+            }
+            self.evict_locked(&mut g);
+            return Ok(Some(kv));
+        }
+        self.evict_locked(&mut g);
+        Ok(None)
+    }
+
+    /// Clone out groups `lo..hi` of a partially resident entry
+    /// (refcount bumps, not copies). `None` unless *every* requested
+    /// group is resident in the partial map — fully resident entries
+    /// are served whole by [`KvStore::get`].
+    pub fn get_groups(
+        &self,
+        key: &KvKey,
+        lo: usize,
+        hi: usize,
+    ) -> Option<Vec<Arc<codec::GroupPayload>>> {
+        let mut g = self.shard(key).lock();
+        g.clock += 1;
+        let clock = g.clock;
+        let p = g.partial.get_mut(key)?;
+        if lo >= hi || hi > p.groups.len() {
+            return None;
+        }
+        p.last_used = clock;
+        p.groups[lo..hi].iter().cloned().collect()
+    }
+
+    /// (resident-group bitmap, total groups) of an in-flight partial
+    /// assembly; `None` when nothing is assembling for the key. Fully
+    /// resident entries report through `tier_of`/`get` instead.
+    pub fn group_residency(&self, key: &KvKey) -> Option<(u64, usize)> {
+        let g = self.shard(key).lock();
+        g.partial.get(key).map(|p| (p.mask(), p.groups.len()))
+    }
+
+    /// Warm only the first `k` layer groups of a host/disk entry into
+    /// the partial device tier (the partial-entry prefetch lane: the
+    /// MPIC-k recompute head needs shallow layers first, so warming
+    /// groups `0..k` buys most of the TTFT win at a fraction of the
+    /// bytes). Unlike a full [`KvStore::prefetch`], the compressed
+    /// source copy stays where it is — the deep groups still need it.
+    /// Returns the number of groups newly admitted.
+    pub fn prefetch_groups(&self, key: &KvKey, k: usize) -> usize {
+        if k == 0 {
+            return 0;
+        }
+        let shard = self.shard(key);
+        let host_bytes = {
+            let mut g = shard.lock();
+            if g.device.contains_key(key) || g.prefetch_inflight.contains(key) {
+                return 0;
+            }
+            if let Some(p) = g.partial.get(key) {
+                if (0..k.min(p.groups.len())).all(|i| p.groups[i].is_some()) {
+                    return 0;
+                }
+            }
+            let bytes = g.host.get(key).map(|e| e.bytes.clone());
+            if bytes.is_none() && !g.disk_live(key, self.cfg.ttl) {
+                return 0;
+            }
+            g.prefetch_inflight.insert(key.clone());
+            g.stats.prefetch_partial_issued += 1;
+            bytes
+        };
+        let admitted = self.prefetch_groups_inner(key, k, host_bytes);
+        let mut g = shard.lock();
+        g.prefetch_inflight.remove(key);
+        g.stats.prefetch_partial_groups += admitted as u64;
+        admitted
+    }
+
+    fn prefetch_groups_inner(&self, key: &KvKey, k: usize, host_bytes: Option<Vec<u8>>) -> usize {
+        let bytes = match host_bytes {
+            Some(b) => b,
+            None => {
+                // Disk source: the whole file is read (the container is
+                // one file), but only the leading groups get decoded.
+                let (path, nbytes) = {
+                    let g = self.shard(key).lock();
+                    match g.disk.get(key) {
+                        Some(d) => (d.path.clone(), d.bytes),
+                        None => return 0,
+                    }
+                };
+                self.throttle(nbytes);
+                match std::fs::read(&path) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        log::warn!("kv partial prefetch read failed for {key:?}: {e}");
+                        return 0;
+                    }
+                }
+            }
+        };
+        let info = match codec::parse_container(&bytes) {
+            Ok(i) if &i.key == key => i,
+            Ok(_) | Err(_) => {
+                log::warn!("kv partial prefetch found an unusable container for {key:?}");
+                self.shard(key).lock().stats.corruptions += 1;
+                return 0;
+            }
+        };
+        let mut admitted = 0usize;
+        for gi in 0..k.min(info.n_groups()) {
+            // Skip groups another lane already admitted.
+            if self
+                .shard(key)
+                .lock()
+                .partial
+                .get(key)
+                .is_some_and(|p| p.groups.get(gi).is_some_and(|s| s.is_some()))
+            {
+                continue;
+            }
+            let payload = match codec::decode_group(&info, &bytes, gi) {
+                Ok(p) => p,
+                Err(e) => {
+                    log::warn!("kv partial prefetch decode failed for {key:?} group {gi}: {e}");
+                    self.shard(key).lock().stats.corruptions += 1;
+                    break;
+                }
+            };
+            let put = self.put_group_arc(
+                key,
+                info.shape,
+                info.has_emb,
+                info.layers_per_group,
+                Arc::new(payload),
+                true,
+            );
+            match put {
+                Ok(_) => admitted += 1,
+                Err(e) => {
+                    log::warn!("kv partial prefetch admit failed for {key:?} group {gi}: {e}");
+                    break;
+                }
+            }
+        }
+        admitted
+    }
+
+    /// Fetch an entry like [`KvStore::get`], but hand each layer group
+    /// to `sink` the moment it is decoded and digest-verified — the
+    /// loader half of streamed fetch. Groups already resident in the
+    /// partial tier (e.g. warmed by [`KvStore::prefetch_groups`]) are
+    /// served with `decode_us == 0`; the remainder decode in index
+    /// order from the host or disk container, shallow layers first.
+    /// Device hits return immediately *without* sink calls — the caller
+    /// already has the whole entry, streaming would only add copies.
+    ///
+    /// On a corrupt chunk in group g, the verified groups `0..g` are
+    /// stashed in the partial tier (residency reflects exactly what
+    /// survived) but the call reports a whole-entry miss — partial
+    /// data never silently serves a full request.
+    pub fn get_streamed(
+        &self,
+        key: &KvKey,
+        sink: &mut dyn FnMut(StreamedGroup),
+    ) -> Option<(Arc<SegmentKv>, Tier)> {
+        let shard = self.shard(key);
+        let started = Instant::now();
+        let (host_bytes, partial) = {
+            let mut g = shard.lock();
+            g.clock += 1;
+            let clock = g.clock;
+            if let Some(e) = g.device.get_mut(key) {
+                e.last_used = clock;
+                let kv = Arc::clone(&e.kv);
+                g.stats.device_hits += 1;
+                if g.prefetched.remove(key) {
+                    g.stats.prefetch_hits += 1;
+                }
+                return Some((kv, Tier::Device));
+            }
+            let partial = g.drop_partial(key);
+            (g.drop_host(key), partial)
+        };
+        let (mut cur, from_prefetch) = StreamCursor::new(partial);
+        let mut corrupted = false;
+
+        if let Some(bytes) = host_bytes {
+            match cur.feed(key, &bytes, sink, Tier::Host) {
+                Ok(()) => {
+                    return self.finish_streamed(shard, key, cur, from_prefetch, Tier::Host, started)
+                }
+                Err(e) => {
+                    log::warn!("kv host entry corrupt for {key:?}: {e}");
+                    shard.lock().stats.corruptions += 1;
+                    corrupted = true;
+                }
+            }
+        }
+
+        let disk_path = {
+            let mut g = shard.lock();
+            if g.disk.contains_key(key) && !g.disk_live(key, self.cfg.ttl) {
+                let d = g.disk.remove(key).unwrap();
+                let _ = std::fs::remove_file(&d.path);
+                g.stats.expirations += 1;
+                None
+            } else {
+                g.disk.get(key).map(|d| (d.path.clone(), d.bytes))
+            }
+        };
+        if let Some((path, nbytes)) = disk_path {
+            self.throttle(nbytes);
+            let fed = std::fs::read(&path)
+                .map_err(anyhow::Error::from)
+                .and_then(|b| cur.feed(key, &b, sink, Tier::Disk));
+            match fed {
+                Ok(()) => {
+                    return self.finish_streamed(shard, key, cur, from_prefetch, Tier::Disk, started)
+                }
+                Err(e) => {
+                    log::warn!("kv disk entry corrupt for {key:?}: {e}");
+                    let mut g = shard.lock();
+                    let superseded = !g.disk.get(key).is_some_and(|d| d.written_at < started);
+                    if !superseded {
+                        g.disk.remove(key);
+                        let _ = std::fs::remove_file(&path);
+                    }
+                    g.stats.corruptions += 1;
+                    corrupted = true;
+                }
+            }
+        }
+
+        // Miss. Stash whatever groups survived back as partial
+        // residency — exactly what was verified is what stays resident.
+        self.stash_cursor(shard, key, cur, from_prefetch);
+        if !corrupted {
+            shard.lock().stats.misses += 1;
+        }
+        None
+    }
+
+    /// All groups in hand: assemble, credit prefetch-warmed groups that
+    /// skipped their decode, then promote with the same superseded
+    /// check as a whole-entry lookup (which also counts the tier hit).
+    fn finish_streamed(
+        &self,
+        shard: &Shard,
+        key: &KvKey,
+        cur: StreamCursor,
+        from_prefetch: bool,
+        from: Tier,
+        started: Instant,
+    ) -> Option<(Arc<SegmentKv>, Tier)> {
+        let (shape, has_emb, lpg) = cur.geom?;
+        if from_prefetch && cur.resident_served > 0 {
+            shard.lock().stats.prefetch_partial_hits += cur.resident_served;
+        }
+        let p = PartialEntry {
+            groups: cur.slots,
+            shape,
+            has_emb,
+            layers_per_group: lpg,
+            bytes: 0,
+            last_used: 0,
+            from_prefetch: false,
+        };
+        let kv = Arc::new(p.assemble(key));
+        let rep = codec::CodecReport { chunks: cur.chunks, pooled: false };
+        self.promote(shard, Arc::clone(&kv), from, false, rep, started);
+        Some((kv, from))
+    }
+
+    /// Put a failed stream's surviving groups back as partial residency.
+    fn stash_cursor(&self, shard: &Shard, key: &KvKey, cur: StreamCursor, from_prefetch: bool) {
+        let Some((shape, has_emb, lpg)) = cur.geom else { return };
+        let kept: usize = cur
+            .slots
+            .iter()
+            .flatten()
+            .map(|p| 4 * (p.emb.len() + p.k.len() + p.v.len()))
+            .sum();
+        if kept == 0 {
+            return;
+        }
+        let mut g = shard.lock();
+        if g.device.contains_key(key) || g.partial.contains_key(key) {
+            return; // repopulated concurrently; keep the newer state
+        }
+        g.clock += 1;
+        let clock = g.clock;
+        g.partial.insert(
+            key.clone(),
+            PartialEntry {
+                groups: cur.slots,
+                shape,
+                has_emb,
+                layers_per_group: lpg,
+                bytes: kept,
+                last_used: clock,
+                from_prefetch,
+            },
+        );
+        g.device_bytes += kept;
+        self.evict_locked(&mut g);
     }
 
     /// Whether the key exists in any non-expired tier (no promotion).
@@ -1021,6 +1728,9 @@ impl KvStore {
             }
             removed = true;
         }
+        if g.drop_partial(key).is_some() {
+            removed = true;
+        }
         if g.drop_host(key).is_some() {
             removed = true;
         }
@@ -1054,12 +1764,26 @@ impl KvStore {
     pub fn check_invariants(&self) -> Result<()> {
         for (i, shard) in self.shards.iter().enumerate() {
             let g = shard.lock_uncounted();
-            let device: usize = g.device.values().map(|e| e.kv.bytes()).sum();
+            let device: usize = g.device.values().map(|e| e.kv.bytes()).sum::<usize>()
+                + g.partial.values().map(|p| p.bytes).sum::<usize>();
             ensure!(
                 device == g.device_bytes,
-                "shard {i}: device_bytes {} != recomputed {device}",
+                "shard {i}: device_bytes {} != recomputed {device} (incl. partials)",
                 g.device_bytes
             );
+            for (k, p) in &g.partial {
+                let held: usize = p
+                    .groups
+                    .iter()
+                    .flatten()
+                    .map(|gp| 4 * (gp.emb.len() + gp.k.len() + gp.v.len()))
+                    .sum();
+                ensure!(
+                    held == p.bytes,
+                    "shard {i}: partial bytes {} != recomputed {held} for {k:?}",
+                    p.bytes
+                );
+            }
             let host: usize = g.host.values().map(|e| e.bytes.len()).sum();
             ensure!(
                 host == g.host_bytes,
@@ -1075,7 +1799,7 @@ impl KvStore {
                     "shard {i}: pin lease {id} for {k:?} missing from the lease table"
                 );
             }
-            let lease_keys = g.leases.keys();
+            let lease_keys = g.leases.keys().chain(g.partial.keys());
             for k in g.device.keys().chain(g.host.keys()).chain(g.disk.keys()).chain(lease_keys) {
                 ensure!(
                     self.shard_index(k) == i,
@@ -1123,6 +1847,8 @@ impl KvStore {
         }
         let nbytes = kv.bytes();
         let key = kv.key.clone();
+        // The full entry supersedes any in-flight partial assembly.
+        g.drop_partial(&key);
         if let Some(old) = g.device.insert(key.clone(), DeviceEntry { kv, last_used: clock }) {
             g.device_bytes -= old.kv.bytes();
         }
@@ -1145,6 +1871,18 @@ impl KvStore {
     /// leased entries remain, the tier is allowed to run over capacity.
     fn evict_locked(&self, g: &mut ShardInner) {
         let now = Instant::now();
+        // Partial assemblies go first: the compressed source tier still
+        // holds their data, so dropping them loses nothing but warmth.
+        while g.device_bytes > self.device_cap_per_shard && !g.partial.is_empty() {
+            let victim = g.partial.iter().min_by_key(|(_, p)| p.last_used).map(|(k, _)| k.clone());
+            let Some(victim) = victim else { break };
+            let p = g.partial.remove(&victim).unwrap();
+            g.device_bytes -= p.bytes;
+            g.stats.device_evictions += 1;
+            if p.from_prefetch {
+                g.stats.prefetch_wasted += 1;
+            }
+        }
         while g.device_bytes > self.device_cap_per_shard && g.device.len() > 1 {
             let leases = &g.leases;
             let victim = g
@@ -1198,7 +1936,7 @@ impl KvStore {
     /// Test-only: drop a key's device copy (keeping host/disk) so lower
     /// tiers can be exercised directly.
     #[cfg(test)]
-    fn drop_device_for_test(&self, key: &KvKey) {
+    pub(crate) fn drop_device_for_test(&self, key: &KvKey) {
         let mut g = self.shard(key).lock();
         if let Some(e) = g.device.remove(key) {
             g.device_bytes -= e.kv.bytes();
@@ -1465,7 +2203,7 @@ mod tests {
         let s2 = std::sync::Arc::clone(&s);
         pool.map(ops, move |i| {
             let key = KvKey::image("test-model", crate::mm::ImageId(i % n_keys));
-            match i % 7 {
+            match i % 9 {
                 0 => {
                     s2.put(test_entry(i % n_keys, 8 + (i as usize % 9))).unwrap();
                 }
@@ -1481,6 +2219,13 @@ mod tests {
                 4 => {
                     let _ = s2.tier_of(&key);
                     let _ = s2.entry_info(&key);
+                }
+                5 => {
+                    s2.prefetch_groups(&key, 1);
+                    let _ = s2.group_residency(&key);
+                }
+                6 => {
+                    let _ = s2.get_streamed(&key, &mut |_| {});
                 }
                 _ => {
                     let _ = s2.get(&key);
@@ -1885,5 +2630,221 @@ mod tests {
         assert_eq!(tier, Tier::Disk);
         assert_eq!(*got, big);
         assert!(s.stats().codec_parallel_ops >= 2);
+    }
+
+    /// An image entry deep enough to span several layer groups under the
+    /// default `GROUP_LAYERS` (test_entry's 2 layers collapse to one).
+    fn deep_entry(image: u64, layers: usize, tokens: usize) -> SegmentKv {
+        let shape = KvShape { layers, tokens, heads: 2, d_head: 4, d_model: 8 };
+        let mut rng = crate::util::rng::Rng::new(image ^ 0xDEE9);
+        SegmentKv {
+            key: KvKey::image("test-model", crate::mm::ImageId(image)),
+            shape,
+            emb: (0..shape.emb_elems()).map(|_| rng.f32()).collect(),
+            k: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
+            v: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
+        }
+    }
+
+    #[test]
+    fn streamed_get_yields_groups_in_order_and_promotes() {
+        let s = store(1 << 30, 60_000);
+        let e = deep_entry(200, 4, 16); // 2 groups at GROUP_LAYERS=2
+        s.put(e.clone()).unwrap();
+        s.drop_device_for_test(&e.key);
+        let mut seen: Vec<(usize, usize, Tier)> = Vec::new();
+        let got = s.get_streamed(&e.key, &mut |g: StreamedGroup| {
+            seen.push((g.group.index, g.n_groups, g.source));
+            assert!(g.bytes > 0);
+        });
+        let (kv, tier) = got.expect("streamed read must serve the entry");
+        assert_eq!(tier, Tier::Disk);
+        assert_eq!(*kv, e);
+        assert_eq!(
+            seen.iter().map(|(i, _, _)| *i).collect::<Vec<_>>(),
+            vec![0, 1],
+            "groups must stream shallow-first"
+        );
+        assert!(seen.iter().all(|(_, n, src)| *n == 2 && *src == Tier::Disk));
+        // Fully assembled: the next get is a plain device hit and no
+        // partial lingers.
+        assert_eq!(s.get(&e.key).unwrap().1, Tier::Device);
+        assert!(s.group_residency(&e.key).is_none());
+        assert_eq!(s.stats().disk_hits, 1);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn put_groups_assembles_out_of_order_to_device() {
+        let s = store(1 << 30, 60_000);
+        let e = deep_entry(201, 4, 8);
+        let (bytes, _) = codec::encode_grouped(&e, 1, None).unwrap(); // 4 groups
+        let info = codec::parse_container(&bytes).unwrap();
+        assert_eq!(info.n_groups(), 4);
+        // Feed groups in reverse: residency fills from the deep end.
+        let mut assembled = None;
+        for gi in (0..4).rev() {
+            let payload = codec::decode_group(&info, &bytes, gi).unwrap();
+            assembled = s
+                .put_groups(&e.key, info.shape, info.has_emb, info.layers_per_group, payload)
+                .unwrap();
+            if gi > 0 {
+                assert!(assembled.is_none());
+                let (mask, n) = s.group_residency(&e.key).unwrap();
+                assert_eq!(n, 4);
+                assert_eq!(mask & (1 << gi), 1 << gi);
+                // Partial residency is not whole-entry residency.
+                assert_eq!(s.tier_of(&e.key), None);
+                assert!(!s.contains(&e.key));
+            }
+        }
+        let kv = assembled.expect("last group must complete the entry");
+        assert_eq!(*kv, e);
+        assert_eq!(s.tier_of(&e.key), Some(Tier::Device));
+        assert_eq!(*s.get(&e.key).unwrap().0, e);
+        assert!(s.group_residency(&e.key).is_none());
+        // get_groups on the now-complete entry reports nothing partial.
+        assert!(s.get_groups(&e.key, 0, 1).is_none());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefetch_groups_warms_partial_and_streamed_read_credits_it() {
+        let s = store(1 << 30, 60_000);
+        let e = deep_entry(202, 6, 16); // 3 groups
+        s.put(e.clone()).unwrap();
+        s.drop_device_for_test(&e.key);
+        assert_eq!(s.prefetch_groups(&e.key, 1), 1);
+        let (mask, n) = s.group_residency(&e.key).unwrap();
+        assert_eq!((mask, n), (0b1, 3));
+        let groups = s.get_groups(&e.key, 0, 1).expect("group 0 resident");
+        assert_eq!(groups[0].index, 0);
+        assert!(s.get_groups(&e.key, 0, 2).is_none(), "group 1 not resident yet");
+        let st = s.stats();
+        assert_eq!(st.prefetch_partial_issued, 1);
+        assert_eq!(st.prefetch_partial_groups, 1);
+        // Re-warming the same prefix is a cheap no-op.
+        assert_eq!(s.prefetch_groups(&e.key, 1), 0);
+        assert_eq!(s.stats().prefetch_partial_issued, 1);
+        // A streamed read serves group 0 from the partial (no decode)
+        // and only inflates the rest.
+        let mut sources = Vec::new();
+        let (kv, _) = s
+            .get_streamed(&e.key, &mut |g: StreamedGroup| {
+                sources.push((g.group.index, g.source, g.decode_us))
+            })
+            .expect("streamed read serves");
+        assert_eq!(*kv, e);
+        assert_eq!(sources.len(), 3);
+        assert_eq!(sources[0].0, 0);
+        assert_eq!(sources[0].1, Tier::Device, "warmed group served without decode");
+        assert_eq!(sources[0].2, 0);
+        assert!(sources[1..].iter().all(|(_, src, _)| *src == Tier::Disk));
+        assert_eq!(s.stats().prefetch_partial_hits, 1);
+        s.check_invariants().unwrap();
+    }
+
+    /// Satellite: a corrupt chunk in group g leaves groups `0..g`
+    /// partially resident but the entry itself is a whole-entry miss.
+    #[test]
+    fn corrupt_group_keeps_shallow_residency_but_entry_misses() {
+        let s = store(1 << 30, 60_000);
+        let e = deep_entry(203, 6, 16); // 3 groups
+        s.put(e.clone()).unwrap();
+        s.drop_device_for_test(&e.key);
+        let path = s.disk_path_for_test(&e.key).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let info = codec::parse_container(&bytes).unwrap();
+        assert_eq!(info.n_groups(), 3);
+        // Flip a byte inside group 1's chunk run: groups 0 stays good,
+        // 1 fails integrity, 2 is never reached by the stream.
+        let off = info.prefix_len(1) + info.group_comp_len(1) / 2;
+        bytes[off] ^= 0xFF;
+        std::fs::write(&path, bytes).unwrap();
+
+        let mut seen = Vec::new();
+        let got = s.get_streamed(&e.key, &mut |g: StreamedGroup| seen.push(g.group.index));
+        assert!(got.is_none(), "corrupt deep group must fail the whole entry");
+        assert_eq!(seen, vec![0], "only the verified shallow group streams");
+        let (mask, n) = s.group_residency(&e.key).unwrap();
+        assert_eq!((mask, n), (0b1, 3), "verified prefix stays partially resident");
+        let st = s.stats();
+        assert_eq!(st.corruptions, 1);
+        assert_eq!(st.misses, 0, "corruption must not also count as a miss");
+        // Whole-entry surface still reports a miss (partials invisible).
+        assert!(s.get(&e.key).is_none());
+        s.check_invariants().unwrap();
+    }
+
+    /// Satellite fix: serving a group prefix only pays the bandwidth
+    /// model for the bytes actually served, not the whole container.
+    #[test]
+    fn container_prefix_throttles_served_bytes_only() {
+        let dir = std::env::temp_dir().join(format!("mpic-prefix-bw-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = KvStore::new(StoreConfig {
+            device_capacity: 1 << 30,
+            host_capacity: 1 << 30,
+            disk_dir: dir,
+            ttl: Duration::from_secs(60),
+            disk_bandwidth: Some(4e6), // 4 MB/s
+            shards: 1,
+        })
+        .unwrap();
+        let e = deep_entry(204, 6, 2048); // ~800 KiB of rng floats, 3 groups
+        s.put(e.clone()).unwrap();
+
+        let t0 = Instant::now();
+        let full = s.container_prefix(&e.key, None).unwrap();
+        let t_full = t0.elapsed();
+        assert_eq!(full.groups, 3);
+        assert_eq!(full.n_groups, 3);
+
+        let t0 = Instant::now();
+        let prefix = s.container_prefix(&e.key, Some(1)).unwrap();
+        let t_prefix = t0.elapsed();
+        assert_eq!(prefix.groups, 1);
+        assert_eq!(prefix.n_groups, 3);
+        assert!(prefix.bytes.len() < full.bytes.len() / 2);
+
+        // The prefix is self-contained: it parses and decodes group 0.
+        let info = codec::parse_container(&prefix.bytes).unwrap();
+        assert_eq!(info.groups_available(prefix.bytes.len()), 1);
+        codec::decode_group(&info, &prefix.bytes, 0).unwrap();
+
+        assert!(
+            t_prefix.as_secs_f64() < t_full.as_secs_f64() * 0.7,
+            "prefix serve must throttle proportionally: prefix {t_prefix:?} vs full {t_full:?}"
+        );
+    }
+
+    #[test]
+    fn admit_container_groups_prefix_then_full() {
+        let s = store(1 << 30, 60_000);
+        let src = store_cfg(1 << 30, 60_000, 1, "admit-groups-src");
+        let e = deep_entry(205, 6, 16); // 3 groups
+        src.put(e.clone()).unwrap();
+
+        // Prefix admit: partial residency, no whole-entry residency.
+        let prefix = src.container_prefix(&e.key, Some(2)).unwrap();
+        let adm = s.admit_container_groups(&e.key, prefix.bytes).unwrap();
+        assert_eq!(adm.groups.len(), 2);
+        assert_eq!(adm.n_groups, 3);
+        assert_eq!(adm.groups[0].index, 0);
+        assert_eq!(adm.groups[1].index, 1);
+        assert!(adm.entry.is_none());
+        assert_eq!(s.group_residency(&e.key).unwrap(), (0b11, 3));
+        assert!(!s.contains(&e.key));
+
+        // Full admit completes via the whole-container lane.
+        let full = src.container_prefix(&e.key, None).unwrap();
+        let adm = s.admit_container_groups(&e.key, full.bytes).unwrap();
+        assert!(adm.groups.is_empty());
+        assert_eq!(adm.n_groups, 3);
+        let kv = adm.entry.expect("full container completes the entry");
+        assert_eq!(*kv, e);
+        assert_eq!(s.tier_of(&e.key), Some(Tier::Device));
+        assert!(s.group_residency(&e.key).is_none());
+        s.check_invariants().unwrap();
     }
 }

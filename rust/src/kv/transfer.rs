@@ -22,16 +22,19 @@
 //! entries toward the device tier on idle pool workers so that by
 //! admission time the fetch sees device hits.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::anyhow;
 
-use super::store::{KvStore, Tier};
+use super::codec;
+use super::store::{KvStore, StreamedGroup, Tier};
 use super::{KvKey, SegmentKv};
+use crate::util::json::Value;
 use crate::util::threadpool::{ThreadPool, WaitGroup};
+use crate::util::trace;
 use crate::Result;
 
 /// Where a store tier's bytes come from when the local tiers miss. The
@@ -50,6 +53,17 @@ pub trait Transport: Send + Sync {
     /// tier has it (fall through to compute); `Err` means the transport
     /// itself failed (also falls through, after logging).
     fn pull(&self, key: &KvKey) -> Result<Option<Vec<u8>>>;
+
+    /// Pull a self-contained prefix of the container covering the first
+    /// `groups` layer groups (a v5 layout property; see `kv::codec`), or
+    /// the whole container when `groups` is `None`. The default ignores
+    /// the range and serves everything — correct for any transport,
+    /// since [`KvStore::admit_container_groups`] treats a full container
+    /// as "all groups present".
+    fn pull_range(&self, key: &KvKey, groups: Option<usize>) -> Result<Option<Vec<u8>>> {
+        let _ = groups;
+        self.pull(key)
+    }
 
     /// Short name for logs and stats.
     fn name(&self) -> &'static str;
@@ -97,11 +111,32 @@ pub struct TransferReport {
     pub wall_s: f64,
     /// What a serial (load-then-compute) implementation would have cost.
     pub serial_s: f64,
+    /// Microseconds the streamed consumer spent blocked on the loader
+    /// (time in [`FetchStream::next_group`] with no group ready). A
+    /// whole-entry [`TransferEngine::fetch`] reports 0 — there, the
+    /// whole load lane is one stall hidden inside `load_s`.
+    pub stall_us: u64,
+    /// Microseconds of loader wall time the streamed consumer spent
+    /// doing useful work (scatter, recompute-head steps) instead of
+    /// waiting: `load_s − stall_us`, floored at 0.
+    pub overlap_us: u64,
 }
 
 impl TransferReport {
     pub fn overlap_saving_s(&self) -> f64 {
         (self.serial_s - self.wall_s).max(0.0)
+    }
+
+    /// Fraction of loader wall time the streamed consumer did *not*
+    /// spend blocked: `overlap_us / (overlap_us + stall_us)`. 0.0 for a
+    /// whole-entry fetch (nothing is consumable until the load ends),
+    /// approaching 1.0 when decode is fully hidden behind compute.
+    pub fn overlap_efficiency(&self) -> f64 {
+        let total = self.overlap_us + self.stall_us;
+        if total == 0 {
+            return 0.0;
+        }
+        self.overlap_us as f64 / total as f64
     }
 }
 
@@ -113,6 +148,10 @@ pub struct TransferEngine {
     pub parallel: bool,
     /// Remote source for local misses ([`LocalTransport`] by default).
     transport: Arc<dyn Transport>,
+    /// Leading layer groups requested in the fast first-phase peer pull
+    /// of a streamed fetch (0 disables the prefix phase; the prefix
+    /// bytes travel twice, so keep this small).
+    pub stream_prefix_groups: usize,
     /// Prefetch promotions currently running on the pool (bounds the lane
     /// so warming can never starve demand loads).
     prefetch_inflight: Arc<AtomicUsize>,
@@ -126,6 +165,7 @@ impl TransferEngine {
             pool,
             parallel: true,
             transport: Arc::new(LocalTransport),
+            stream_prefix_groups: 1,
             prefetch_inflight: Arc::new(AtomicUsize::new(0)),
             prefetch_submitted: AtomicU64::new(0),
         }
@@ -196,6 +236,47 @@ impl TransferEngine {
                 // The store dedups concurrent prefetches of one key and
                 // keeps the hit/wasted accounting.
                 let _ = store.prefetch(&key);
+                inflight.fetch_sub(1, Ordering::AcqRel);
+            });
+        }
+        issued
+    }
+
+    /// Like [`TransferEngine::prefetch`], but warm only the first
+    /// `groups` layer groups of each key into the partial device tier
+    /// (see `KvStore::prefetch_groups`) — a queued request's shallow
+    /// layers are what a streamed fetch consumes first, at a fraction
+    /// of the whole-entry warm bandwidth. `groups == 0` falls back to
+    /// whole-entry prefetch. Returns the number of jobs dispatched.
+    pub fn prefetch_partial(
+        &self,
+        store: &Arc<KvStore>,
+        keys: &[KvKey],
+        groups: usize,
+    ) -> usize {
+        if groups == 0 {
+            return self.prefetch(store, keys);
+        }
+        let cap = self.pool.size().saturating_sub(1).max(1);
+        let mut issued = 0;
+        for key in keys {
+            if self.prefetch_inflight.load(Ordering::Acquire) >= cap {
+                break;
+            }
+            match store.tier_of(key) {
+                Some(Tier::Host) | Some(Tier::Disk) => {}
+                _ => continue,
+            }
+            self.prefetch_inflight.fetch_add(1, Ordering::AcqRel);
+            self.prefetch_submitted.fetch_add(1, Ordering::Relaxed);
+            issued += 1;
+            let store = Arc::clone(store);
+            let key = key.clone();
+            let inflight = Arc::clone(&self.prefetch_inflight);
+            self.pool.submit(move || {
+                // The store dedups concurrent group prefetches of one
+                // key and keeps the partial-prefetch accounting.
+                let _ = store.prefetch_groups(&key, groups);
                 inflight.fetch_sub(1, Ordering::AcqRel);
             });
         }
@@ -386,6 +467,348 @@ impl TransferEngine {
             return Err(anyhow!("transfer returned {} of {} entries", final_out.len(), keys.len()));
         }
         Ok((final_out, report))
+    }
+
+    /// Begin a **streamed** fetch: every unique key starts loading on
+    /// the pool immediately, and the returned handle yields layer
+    /// groups in order as workers inflate them — shallow layers reach
+    /// the caller (the linker, the MPIC-k recompute head) while deep
+    /// groups are still on disk or on the wire. Local misses try the
+    /// transport on the worker too, prefix-first via
+    /// [`Transport::pull_range`] so a peer's shallow groups flow
+    /// exactly like a local disk read; anything no tier could serve is
+    /// recomputed by the closure passed to [`FetchStream::finish`].
+    ///
+    /// Unlike [`TransferEngine::fetch`], recomputes do not overlap the
+    /// load lane (the caller thread is busy consuming groups), so this
+    /// path wins when hits dominate — the regime the prefetch lane
+    /// works to make common.
+    pub fn fetch_streamed(&self, store: &Arc<KvStore>, keys: &[KvKey]) -> FetchStream {
+        // Same dedup as fetch(): duplicates share one slot and one load.
+        let mut unique: Vec<KvKey> = Vec::new();
+        let mut slot_of: HashMap<KvKey, usize> = HashMap::new();
+        let mut fanout: Vec<usize> = Vec::with_capacity(keys.len());
+        for key in keys {
+            let slot = *slot_of.entry(key.clone()).or_insert_with(|| {
+                unique.push(key.clone());
+                unique.len() - 1
+            });
+            fanout.push(slot);
+        }
+
+        let shared = Arc::new(StreamShared {
+            state: Mutex::new(StreamState {
+                events: VecDeque::new(),
+                loaded: (0..unique.len()).map(|_| None).collect(),
+                pending: unique.len(),
+                load_finished: None,
+            }),
+            cv: Condvar::new(),
+        });
+        let t_start = Instant::now();
+        let inline = !self.parallel;
+        // Hand the request trace across the pool boundary so workers can
+        // record per-group child spans on it.
+        let scope = trace::current_scope();
+        for (slot, key) in unique.iter().enumerate() {
+            if inline {
+                stream_one(
+                    store,
+                    &self.transport,
+                    key,
+                    slot,
+                    self.stream_prefix_groups,
+                    &shared,
+                    &scope,
+                );
+            } else {
+                let store = Arc::clone(store);
+                let key = key.clone();
+                let shared = Arc::clone(&shared);
+                let transport = Arc::clone(&self.transport);
+                let prefix = self.stream_prefix_groups;
+                let scope = scope.clone();
+                self.pool.submit(move || {
+                    stream_one(&store, &transport, &key, slot, prefix, &shared, &scope)
+                });
+            }
+        }
+        FetchStream {
+            shared,
+            keys: unique,
+            fanout,
+            store: Arc::clone(store),
+            t_start,
+            stall_us: 0,
+            n_segments: keys.len(),
+            inline,
+        }
+    }
+}
+
+/// One layer group arriving from a [`FetchStream`]'s load lane.
+#[derive(Clone)]
+pub struct StreamEvent {
+    /// Slot into [`FetchStream::keys`] (the deduplicated key list).
+    pub slot: usize,
+    /// The decoded group; its layer range is `group.layer_lo..layer_hi`.
+    pub group: Arc<codec::GroupPayload>,
+    /// Raw (decoded) bytes of the group's subpayload.
+    pub bytes: usize,
+    /// Microseconds spent inflating + verifying the group (0 when it was
+    /// already resident or arrived pre-decoded from a peer admit).
+    pub decode_us: u64,
+    /// `"device" | "host" | "disk" | "peer"`.
+    pub source: &'static str,
+}
+
+/// Where a streamed slot's whole entry finally came from.
+#[derive(Clone, Copy)]
+enum LoadSource {
+    Device,
+    Host,
+    Disk,
+    Peer,
+}
+
+impl LoadSource {
+    fn from_tier(t: Tier) -> LoadSource {
+        match t {
+            Tier::Device => LoadSource::Device,
+            Tier::Host => LoadSource::Host,
+            Tier::Disk => LoadSource::Disk,
+        }
+    }
+}
+
+fn tier_name(t: Tier) -> &'static str {
+    match t {
+        Tier::Device => "device",
+        Tier::Host => "host",
+        Tier::Disk => "disk",
+    }
+}
+
+struct StreamState {
+    events: VecDeque<StreamEvent>,
+    /// Slot-aligned whole-entry outcomes, filled as workers retire.
+    loaded: Vec<Option<(Arc<SegmentKv>, LoadSource)>>,
+    /// Load-lane workers still running.
+    pending: usize,
+    /// When the last worker retired (the load lane's wall endpoint).
+    load_finished: Option<Instant>,
+}
+
+struct StreamShared {
+    state: Mutex<StreamState>,
+    cv: Condvar,
+}
+
+/// One key's streamed load lane: local tiers group by group, then the
+/// transport (prefix first, then the whole container). Runs on a pool
+/// worker; all progress is published through `shared`.
+fn stream_one(
+    store: &Arc<KvStore>,
+    transport: &Arc<dyn Transport>,
+    key: &KvKey,
+    slot: usize,
+    prefix: usize,
+    shared: &StreamShared,
+    scope: &Option<(trace::TraceId, Arc<trace::Recorder>)>,
+) {
+    let emit = |group: Arc<codec::GroupPayload>,
+                bytes: usize,
+                decode_us: u64,
+                source: &'static str| {
+        if let Some((id, rec)) = scope {
+            let end = Instant::now();
+            let start = end - Duration::from_micros(decode_us);
+            rec.record(
+                *id,
+                "fetch.group",
+                start,
+                end,
+                &[
+                    ("group", Value::num(group.index as f64)),
+                    ("layer_lo", Value::num(group.layer_lo as f64)),
+                    ("bytes", Value::num(bytes as f64)),
+                    ("decode_us", Value::num(decode_us as f64)),
+                    ("source", Value::str(source)),
+                ],
+            );
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.events.push_back(StreamEvent { slot, group, bytes, decode_us, source });
+        shared.cv.notify_all();
+    };
+
+    // Local tiers first: device is a whole-entry fast path (no events),
+    // host/disk inflate group by group through the sink.
+    let mut loaded = store
+        .get_streamed(key, &mut |g: StreamedGroup| {
+            let src = tier_name(g.source);
+            emit(g.group, g.bytes, g.decode_us, src);
+        })
+        .map(|(kv, tier)| (kv, LoadSource::from_tier(tier)));
+
+    // Local miss → peer lane. The small prefix pull lets shallow groups
+    // flow while the full container is still in flight; its bytes travel
+    // twice (bounded by `stream_prefix_groups`), a price worth paying
+    // when the wire is the bottleneck. A transport that ignores ranges
+    // serves the whole container on the first pull and the second phase
+    // is skipped.
+    if loaded.is_none() && prefix > 0 {
+        match transport.pull_range(key, Some(prefix)) {
+            Ok(Some(bytes)) => match store.admit_container_groups(key, bytes) {
+                Ok(adm) => {
+                    for p in adm.groups {
+                        let nbytes = 4 * (p.emb.len() + p.k.len() + p.v.len());
+                        emit(p, nbytes, 0, "peer");
+                    }
+                    loaded = adm.entry.map(|kv| (kv, LoadSource::Peer));
+                }
+                Err(e) => log::warn!("transfer: peer prefix for {key:?} rejected: {e}"),
+            },
+            Ok(None) => {}
+            Err(e) => {
+                log::debug!("transfer: {} prefix pull failed for {key:?}: {e}", transport.name())
+            }
+        }
+    }
+    if loaded.is_none() {
+        match transport.pull_range(key, None) {
+            Ok(Some(bytes)) => match store.admit_container(key, bytes) {
+                Ok(kv) => {
+                    log::debug!("transfer: {} served {key:?}", transport.name());
+                    loaded = Some((kv, LoadSource::Peer));
+                }
+                Err(e) => log::warn!("transfer: peer container for {key:?} rejected: {e}"),
+            },
+            Ok(None) => {}
+            Err(e) => log::debug!("transfer: {} pull failed for {key:?}: {e}", transport.name()),
+        }
+    }
+
+    let mut st = shared.state.lock().unwrap();
+    st.loaded[slot] = loaded;
+    st.pending -= 1;
+    if st.pending == 0 {
+        st.load_finished = Some(Instant::now());
+    }
+    shared.cv.notify_all();
+}
+
+/// Handle to an in-flight streamed fetch; see
+/// [`TransferEngine::fetch_streamed`]. Consume layer groups with
+/// [`FetchStream::next_group`] (scattering each as it lands), then call
+/// [`FetchStream::finish`] exactly once to recompute what no tier could
+/// serve and collect the entries + report.
+pub struct FetchStream {
+    shared: Arc<StreamShared>,
+    keys: Vec<KvKey>,
+    fanout: Vec<usize>,
+    store: Arc<KvStore>,
+    t_start: Instant,
+    stall_us: u64,
+    n_segments: usize,
+    inline: bool,
+}
+
+impl FetchStream {
+    /// The deduplicated keys; [`StreamEvent::slot`] indexes this.
+    pub fn keys(&self) -> &[KvKey] {
+        &self.keys
+    }
+
+    /// Original-order → slot mapping (duplicate keys share a slot).
+    pub fn slots(&self) -> &[usize] {
+        &self.fanout
+    }
+
+    /// Block for the next layer group; `None` once every load-lane
+    /// worker has retired and the queue is drained. Time spent blocked
+    /// in here accumulates as the request's `stall_us` — the loader
+    /// time the consumer could not hide behind useful work.
+    pub fn next_group(&mut self) -> Option<StreamEvent> {
+        let t0 = Instant::now();
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(ev) = st.events.pop_front() {
+                self.stall_us += t0.elapsed().as_micros() as u64;
+                return Some(ev);
+            }
+            if st.pending == 0 {
+                self.stall_us += t0.elapsed().as_micros() as u64;
+                return None;
+            }
+            st = self.shared.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Retire the stream: drain any unconsumed groups, recompute
+    /// whatever no tier or peer could serve (`compute` runs on the
+    /// caller thread — PJRT handles are not `Send`) and write those
+    /// entries through. Returns entries index-aligned with the original
+    /// `keys` passed to `fetch_streamed`; duplicates share one `Arc`.
+    pub fn finish<F>(mut self, mut compute: F) -> Result<(Vec<Arc<SegmentKv>>, TransferReport)>
+    where
+        F: FnMut(&KvKey) -> Result<SegmentKv>,
+    {
+        while self.next_group().is_some() {}
+
+        let (loaded, load_finished) = {
+            let mut st = self.shared.state.lock().unwrap();
+            (std::mem::take(&mut st.loaded), st.load_finished)
+        };
+        let mut report = TransferReport {
+            n_segments: self.n_segments,
+            n_unique: self.keys.len(),
+            stall_us: self.stall_us,
+            ..TransferReport::default()
+        };
+        report.load_s = load_finished
+            .unwrap_or_else(Instant::now)
+            .duration_since(self.t_start)
+            .as_secs_f64();
+
+        let t_compute = Instant::now();
+        let mut slots: Vec<Arc<SegmentKv>> = Vec::with_capacity(self.keys.len());
+        for (slot, entry) in loaded.into_iter().enumerate() {
+            match entry {
+                Some((kv, src)) => {
+                    match src {
+                        LoadSource::Device => report.device_hits += 1,
+                        LoadSource::Host => report.host_hits += 1,
+                        LoadSource::Disk => report.disk_hits += 1,
+                        LoadSource::Peer => report.peer_hits += 1,
+                    }
+                    slots.push(kv);
+                }
+                None => {
+                    let key = &self.keys[slot];
+                    log::debug!("transfer: streamed miss on {key:?}, recomputing");
+                    let kv = compute(key)?;
+                    kv.validate()?;
+                    let kv = Arc::new(kv);
+                    self.store.put_arc(Arc::clone(&kv))?;
+                    report.misses += 1;
+                    slots.push(kv);
+                }
+            }
+        }
+        report.compute_s = t_compute.elapsed().as_secs_f64();
+        // Overlap: the share of loader wall time the consumer was NOT
+        // blocked in next_group. An inline (serial-ablation) stream
+        // loads everything before the consumer ever runs, so nothing
+        // overlapped.
+        if !self.inline {
+            report.overlap_us =
+                ((report.load_s * 1e6) as u64).saturating_sub(self.stall_us);
+        }
+        report.wall_s = self.t_start.elapsed().as_secs_f64();
+        report.serial_s = report.load_s + report.compute_s;
+        let out = self.fanout.iter().map(|&s| Arc::clone(&slots[s])).collect();
+        Ok((out, report))
     }
 }
 
@@ -686,5 +1109,170 @@ mod tests {
             .unwrap();
         assert_eq!(rep_par.misses, 1);
         assert!(rep_par.wall_s <= rep_par.serial_s + 0.01);
+    }
+
+    /// A multi-group entry (6 layers → 3 groups at the default
+    /// GROUP_LAYERS = 2) for the streaming tests.
+    fn deep(image: u64, layers: usize, tokens: usize) -> SegmentKv {
+        let shape = crate::kv::KvShape { layers, tokens, heads: 2, d_head: 4, d_model: 8 };
+        let mut rng = crate::util::rng::Rng::new(image ^ 0x5EED);
+        SegmentKv {
+            key: KvKey::image("test-model", ImageId(image)),
+            shape,
+            emb: (0..shape.emb_elems()).map(|_| rng.f32()).collect(),
+            k: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
+            v: (0..shape.kv_elems()).map(|_| rng.f32()).collect(),
+        }
+    }
+
+    #[test]
+    fn streamed_fetch_yields_groups_in_order_then_whole_entries() {
+        let (store, eng) = setup_shards(None, 2);
+        let a = deep(40, 6, 16);
+        let b = deep(41, 6, 16);
+        for e in [&a, &b] {
+            store.put(e.clone()).unwrap();
+            store.drop_device_for_test(&e.key);
+        }
+        // Duplicate reference: a appears twice, loads once.
+        let keys = vec![a.key.clone(), b.key.clone(), a.key.clone()];
+        let mut stream = eng.fetch_streamed(&store, &keys);
+        assert_eq!(stream.keys().len(), 2);
+        assert_eq!(stream.slots(), &[0, 1, 0]);
+
+        let mut seen: Vec<Vec<usize>> = vec![Vec::new(), Vec::new()];
+        while let Some(ev) = stream.next_group() {
+            assert_eq!(ev.source, "disk");
+            assert!(ev.bytes > 0);
+            seen[ev.slot].push(ev.group.index);
+        }
+        assert_eq!(seen[0], vec![0, 1, 2], "groups must stream shallow-first");
+        assert_eq!(seen[1], vec![0, 1, 2]);
+
+        let (out, rep) =
+            stream.finish(|_| panic!("disk hits must not recompute")).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(*out[0], a);
+        assert_eq!(*out[1], b);
+        assert!(Arc::ptr_eq(&out[0], &out[2]), "duplicate slots share one Arc");
+        assert_eq!(rep.disk_hits, 2);
+        assert_eq!(rep.misses, 0);
+        assert_eq!(rep.n_segments, 3);
+        assert_eq!(rep.n_unique, 2);
+        assert!(rep.stall_us + rep.overlap_us > 0, "loader wall must be accounted");
+        assert!((0.0..=1.0).contains(&rep.overlap_efficiency()));
+
+        // Fully promoted: a second streamed fetch is a device fast path
+        // with no group events at all.
+        let mut stream2 = eng.fetch_streamed(&store, &keys);
+        assert!(stream2.next_group().is_none());
+        let (_, rep2) = stream2.finish(|_| panic!("device hit expected")).unwrap();
+        assert_eq!(rep2.device_hits, 2);
+    }
+
+    #[test]
+    fn streamed_fetch_recomputes_misses_in_finish() {
+        let (store, eng) = setup_shards(None, 16);
+        let hit = deep(50, 6, 16);
+        store.put(hit.clone()).unwrap();
+        store.drop_device_for_test(&hit.key);
+        let miss = KvKey::image("test-model", ImageId(51));
+
+        let mut stream = eng.fetch_streamed(&store, &[hit.key.clone(), miss.clone()]);
+        let mut groups = 0;
+        while stream.next_group().is_some() {
+            groups += 1;
+        }
+        assert_eq!(groups, 3, "only the disk hit streams groups");
+        let mut computes = 0;
+        let (out, rep) = stream
+            .finish(|k| {
+                computes += 1;
+                assert_eq!(*k, miss);
+                Ok(deep(51, 6, 16))
+            })
+            .unwrap();
+        assert_eq!(computes, 1);
+        assert_eq!(rep.disk_hits, 1);
+        assert_eq!(rep.misses, 1);
+        assert_eq!(*out[0], hit);
+        assert_eq!(out[1].key, miss);
+        assert!(store.contains(&miss), "recompute must write through");
+    }
+
+    #[test]
+    fn streamed_fetch_serial_mode_loads_inline_without_overlap() {
+        let (store, mut eng) = setup_shards(None, 5);
+        eng.parallel = false;
+        let e = deep(60, 4, 16); // 2 groups
+        store.put(e.clone()).unwrap();
+        store.drop_device_for_test(&e.key);
+
+        let mut stream = eng.fetch_streamed(&store, std::slice::from_ref(&e.key));
+        // Serial ablation: every group was loaded before the handle was
+        // returned, so the consumer never blocks and nothing overlaps.
+        let mut idx = Vec::new();
+        while let Some(ev) = stream.next_group() {
+            idx.push(ev.group.index);
+        }
+        assert_eq!(idx, vec![0, 1]);
+        let (out, rep) = stream.finish(|_| panic!("hit expected")).unwrap();
+        assert_eq!(*out[0], e);
+        assert_eq!(rep.disk_hits, 1);
+        assert_eq!(rep.overlap_us, 0, "inline streams report no overlap");
+    }
+
+    /// A range-aware transport backed by another store: serves
+    /// self-contained group prefixes like a cluster peer would.
+    struct RangeTransport {
+        src: Arc<KvStore>,
+        pulls: Mutex<Vec<Option<usize>>>,
+    }
+
+    impl Transport for RangeTransport {
+        fn probe(&self, keys: &[KvKey]) -> Vec<bool> {
+            keys.iter().map(|k| self.src.contains(k)).collect()
+        }
+        fn pull(&self, key: &KvKey) -> Result<Option<Vec<u8>>> {
+            self.pull_range(key, None)
+        }
+        fn pull_range(&self, key: &KvKey, groups: Option<usize>) -> Result<Option<Vec<u8>>> {
+            self.pulls.lock().unwrap().push(groups);
+            Ok(self.src.container_prefix(key, groups).map(|s| s.bytes))
+        }
+        fn name(&self) -> &'static str {
+            "range"
+        }
+    }
+
+    #[test]
+    fn streamed_fetch_pulls_peer_prefix_then_full_container() {
+        let (store, mut eng) = setup_shards(None, 6);
+        let (src, _) = setup_shards(None, 7);
+        let e = deep(70, 6, 16); // 3 groups
+        src.put(e.clone()).unwrap();
+        let transport = Arc::new(RangeTransport { src, pulls: Mutex::new(Vec::new()) });
+        eng.set_transport(Arc::clone(&transport) as Arc<dyn Transport>);
+        assert_eq!(eng.stream_prefix_groups, 1);
+
+        let mut stream = eng.fetch_streamed(&store, std::slice::from_ref(&e.key));
+        let mut peer_groups = Vec::new();
+        while let Some(ev) = stream.next_group() {
+            assert_eq!(ev.source, "peer");
+            peer_groups.push(ev.group.index);
+        }
+        assert_eq!(peer_groups, vec![0], "the prefix phase admits group 0 early");
+        let (out, rep) = stream.finish(|_| panic!("peer must serve")).unwrap();
+        assert_eq!(*out[0], e);
+        assert_eq!(rep.peer_hits, 1);
+        assert_eq!(rep.misses, 0);
+        assert_eq!(
+            *transport.pulls.lock().unwrap(),
+            vec![Some(1), None],
+            "prefix pull first, then the whole container"
+        );
+        // The full admit replaced the partial residency.
+        assert_eq!(store.tier_of(&e.key), Some(Tier::Device));
+        assert!(store.group_residency(&e.key).is_none());
     }
 }

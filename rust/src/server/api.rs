@@ -810,10 +810,31 @@ fn dispatch_op(
             let model = peer_model(engine, req)?;
             let key = crate::cluster::transport::wire_to_key(&model, req)
                 .map_err(|e| ApiError::new(ErrorCode::BadValue, format!("{e:#}")))?;
-            match engine.store().container_bytes(&key) {
-                Some(bytes) => Ok(Value::obj(vec![
-                    ("bytes", Value::num(bytes.len() as f64)),
-                    ("frame", Value::str(crate::kv::codec::frame(&bytes))),
+            // Optional `groups` caps the reply to the self-contained v5
+            // prefix covering the first `groups` layer groups, so a
+            // streaming puller can splice shallow layers into prefill
+            // while the rest of the container is still in flight.
+            let groups = match req.opt("groups") {
+                Some(v) => {
+                    let g = v.as_f64().map_err(|e| {
+                        ApiError::new(ErrorCode::BadValue, format!("bad groups field: {e:#}"))
+                    })?;
+                    if g < 1.0 {
+                        return Err(ApiError::new(
+                            ErrorCode::BadValue,
+                            "groups must be a positive count".to_string(),
+                        ));
+                    }
+                    Some(g as usize)
+                }
+                None => None,
+            };
+            match engine.store().container_prefix(&key, groups) {
+                Some(slice) => Ok(Value::obj(vec![
+                    ("bytes", Value::num(slice.bytes.len() as f64)),
+                    ("frame", Value::str(crate::kv::codec::frame(&slice.bytes))),
+                    ("groups", Value::num(slice.groups as f64)),
+                    ("n_groups", Value::num(slice.n_groups as f64)),
                 ])),
                 None => Err(ApiError::new(
                     ErrorCode::NotFound,

@@ -58,7 +58,7 @@
 //! | `session.list`        | —                                                   | `count`, `sessions[]` (`user`, `turns`, `history_len`, `images`; + `ns` when namespaced) — scoped to the caller's namespace |
 //! | `session.stat`        | `user`                                              | one session entry |
 //! | `kv.probe`            | `keys[]` (`{kind, segment, [ns]}`), [`model`]       | `bitmap[]`, `resident` — residency of each key in this worker's store, any tier. Peer KV lane (see [`crate::cluster`] for the topology); the router's affinity scoring and `PeerTransport` both speak it |
-//! | `kv.pull`             | `kind`, `segment` (hex), [`ns`, `model`]            | `frame` (base64 v4 codec container), `bytes` — the entry's encoded container verbatim from the local tiers, no re-encode; a peer admits it with `admit_container`. `not_found` when not resident |
+//! | `kv.pull`             | `kind`, `segment` (hex), [`ns`, `model`, `groups`]  | `frame` (base64 codec container), `bytes`, `groups`, `n_groups` — the entry's encoded container verbatim from the local tiers, no re-encode; a peer admits it with `admit_container`. Optional `groups` ≥ 1 caps the reply to the self-contained v5 prefix covering the first `groups` layer groups (streamed-fetch shallow-layer pull; admitted with `admit_container_groups`). `not_found` when not resident |
 //! | `debug.trace`         | [`action`=`"list"`], `trace` (hex, for `get`)       | flight recorder: `list` → `count`, `traces[]` (id, op, total_us, span count, newest first); `action:"get"` + `trace` → one trace with its full span tree (`spans[]` with `name`, `start_us`, `dur_us`, attrs). `not_found` once evicted from the ring |
 //! | `stats.cluster`       | —                                                   | **router only**: per-worker `stats` snapshots (`workers[]`) plus an aggregated `metrics` tree (counters summed, histograms merged). Workers answer `unknown_op` |
 //! | `shutdown`            | —                                                   | `bye` |

@@ -360,6 +360,14 @@ pub fn current() -> Option<TraceId> {
     CURRENT.with(|c| c.borrow().last().map(|(id, _)| *id))
 }
 
+/// The trace pinned to this thread together with its recorder, if any.
+/// Lets a caller hand the scope across a thread boundary (e.g. codec-pool
+/// workers recording per-layer-group spans on the request's trace) where
+/// the thread-local itself does not travel.
+pub fn current_scope() -> Option<(TraceId, Arc<Recorder>)> {
+    CURRENT.with(|c| c.borrow().last().map(|(id, rec)| (*id, Arc::clone(rec))))
+}
+
 /// Record a span `[start, now]` against the thread's current trace; no-op
 /// when no trace is in scope (offline paths trace nothing, cost one TLS
 /// read).

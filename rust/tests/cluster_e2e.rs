@@ -7,6 +7,9 @@
 //!   (`stats.metrics.cluster.peer_pulls` ≥ 1, `recomputes` stays 0);
 //! * position independence makes the pulled cache byte-equivalent —
 //!   both workers decode the same tokens for the same prompt;
+//! * a `kv.pull` carrying a `groups` range returns the self-contained
+//!   shallow prefix of the container (the streamed fetch's fast first
+//!   phase) — parseable, decodable, exactly the advertised length;
 //! * uploads routed through `mpic router` land on the consistent-hash
 //!   ring owner, and a generation referencing that segment is routed
 //!   back to it (`routed_affinity_hits` ≥ 1 on the owner).
@@ -171,6 +174,30 @@ fn cluster_end_to_end() {
         "the peer hit must have pre-empted the recompute: {}",
         b_stats.encode()
     );
+
+    // ------------------------------------------------------------------
+    // Group-range pull on the live wire: ask A for only the first layer
+    // group of the uploaded segment's container (the streamed fetch's
+    // fast first phase). The reply must be the self-contained prefix —
+    // parseable, with exactly the advertised groups decodable.
+    // ------------------------------------------------------------------
+    let seg_hex = format!("{:016x}", ImageId::from_handle(&handle).0);
+    let pull = ca
+        .call(&v(&format!(
+            r#"{{"v":3,"id":"p1","op":"kv.pull","model":"mpic-sim-a","kind":"image","segment":"{seg_hex}","groups":1}}"#
+        )))
+        .unwrap();
+    assert_ok(&pull);
+    let bytes =
+        mpic::kv::codec::unframe(pull.get("frame").unwrap().as_str().unwrap()).unwrap();
+    let info = mpic::kv::codec::parse_container(&bytes).unwrap();
+    let served = pull.get("groups").unwrap().as_f64().unwrap() as usize;
+    let n_groups = pull.get("n_groups").unwrap().as_f64().unwrap() as usize;
+    assert_eq!(served, 1, "groups:1 must cap the reply to one group: {}", pull.encode());
+    assert_eq!(n_groups, info.n_groups());
+    assert_eq!(bytes.len(), info.prefix_len(served), "reply must be the exact prefix");
+    assert_eq!(info.groups_available(bytes.len()), served);
+    mpic::kv::codec::decode_group(&info, &bytes, 0).expect("prefix group must decode");
 
     // ------------------------------------------------------------------
     // Router: ring placement for uploads, affinity routing for
