@@ -1,0 +1,538 @@
+//! `mpic-lint` — repo-local invariant checker. Dependency-free: a
+//! token-level scan of `rust/src` (comments and string/char literals
+//! blanked out, byte offsets preserved), run from the repository root:
+//!
+//! ```text
+//! cargo run --bin mpic-lint
+//! ```
+//!
+//! Checks, each reported as `file:line: message` with a non-zero exit:
+//!
+//! 1. **Ranked locks only** — no raw `std::sync` `Mutex`/`RwLock`/
+//!    `Condvar` outside `util/sync.rs` (and outside `#[cfg(test)]`
+//!    regions); everything else must go through the ordered wrappers.
+//! 2. **Panic ratchet** — `.unwrap()` / `.expect(` / `panic!` in
+//!    `server/`, `cluster/`, `kv/` (outside `#[cfg(test)]`) are capped
+//!    per file by `rust/lint/ratchet.txt`. The count may only decrease:
+//!    going above the baseline is an error; dropping below prints a
+//!    reminder to tighten the ratchet. `--write-ratchet` reseeds the
+//!    file from the current counts.
+//! 3. **Op coverage** — every op string dispatched in `server/api.rs`
+//!    must appear backticked in `README.md` and as a quoted string
+//!    somewhere under `rust/tests/` (a golden wire fixture or an e2e
+//!    test).
+//! 4. **Metrics coverage** — every `StoreStats` and `ClusterCounters`
+//!    field must appear as a quoted key in `coordinator/metrics.rs`,
+//!    so a counter that is bumped is also exported in the snapshot
+//!    tree.
+
+use std::path::{Path, PathBuf};
+
+fn main() {
+    match run() {
+        Ok(errors) if errors.is_empty() => println!("mpic-lint: ok"),
+        Ok(errors) => {
+            for e in &errors {
+                eprintln!("{e}");
+            }
+            eprintln!("mpic-lint: {} error(s)", errors.len());
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("mpic-lint: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn run() -> Result<Vec<String>, String> {
+    if !Path::new("rust/src").is_dir() {
+        return Err("run from the repository root (rust/src not found)".into());
+    }
+    let mut files = Vec::new();
+    walk(Path::new("rust/src"), &mut files, true)?;
+    files.sort();
+
+    let mut errors = Vec::new();
+    let mut sources = Vec::new();
+    for path in &files {
+        let raw = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let stripped = strip(&raw);
+        let tests = test_regions(&stripped);
+        sources.push(Source { path: path.clone(), raw, stripped, tests });
+    }
+
+    check_raw_locks(&sources, &mut errors);
+    check_ratchet(&sources, &mut errors)?;
+    check_ops(&sources, &mut errors)?;
+    check_metrics(&sources, &mut errors);
+    Ok(errors)
+}
+
+struct Source {
+    path: PathBuf,
+    raw: Vec<u8>,
+    /// Same length as `raw`: comment and literal bytes blanked to
+    /// spaces (newlines kept), so offsets and line numbers line up.
+    stripped: Vec<u8>,
+    /// Byte ranges covered by `#[cfg(test)]` items.
+    tests: Vec<(usize, usize)>,
+}
+
+impl Source {
+    fn in_tests(&self, off: usize) -> bool {
+        self.tests.iter().any(|&(a, b)| a <= off && off < b)
+    }
+
+    fn line(&self, off: usize) -> usize {
+        1 + self.raw[..off].iter().filter(|&&b| b == b'\n').count()
+    }
+
+    fn slash_path(&self) -> String {
+        self.path.to_string_lossy().replace('\\', "/")
+    }
+
+    fn is(&self, suffix: &str) -> bool {
+        self.slash_path().ends_with(suffix)
+    }
+
+    fn under(&self, prefix: &str) -> bool {
+        self.slash_path().starts_with(prefix)
+    }
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>, rs_only: bool) -> Result<(), String> {
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("{}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, out, rs_only)?;
+        } else if !rs_only || path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Blank comments and string/char literals to spaces (newlines kept) so
+/// later scans see code tokens only, at unchanged byte offsets.
+fn strip(src: &[u8]) -> Vec<u8> {
+    let mut out = src.to_vec();
+    let n = src.len();
+    let mut i = 0;
+    while i < n {
+        let c = src[i];
+        if c == b'/' && i + 1 < n && src[i + 1] == b'/' {
+            let end = memfind(src, i, b"\n").unwrap_or(n);
+            blank(&mut out, i, end);
+            i = end;
+        } else if c == b'/' && i + 1 < n && src[i + 1] == b'*' {
+            let mut depth = 1;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if src[j] == b'/' && j + 1 < n && src[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if src[j] == b'*' && j + 1 < n && src[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if let Some(len) = raw_string_len(src, i) {
+            blank(&mut out, i, i + len);
+            i += len;
+        } else if c == b'"' {
+            let mut j = i + 1;
+            while j < n {
+                if src[j] == b'\\' {
+                    j += 2;
+                } else if src[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'\'' {
+            if i + 1 < n && src[i + 1] == b'\\' {
+                // Escaped char literal: blank through the closing quote.
+                let mut j = i + 2;
+                while j < n && src[j] != b'\'' {
+                    j += 1;
+                }
+                let end = (j + 1).min(n);
+                blank(&mut out, i, end);
+                i = end;
+            } else if i + 2 < n && src[i + 2] == b'\'' && src[i + 1] != b'\'' {
+                blank(&mut out, i, i + 3);
+                i += 3;
+            } else {
+                i += 1; // lifetime
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn blank(out: &mut [u8], a: usize, b: usize) {
+    let end = b.min(out.len());
+    for slot in &mut out[a..end] {
+        if *slot != b'\n' {
+            *slot = b' ';
+        }
+    }
+}
+
+/// Length of a raw (byte) string literal starting at `i`, if one does.
+fn raw_string_len(src: &[u8], i: usize) -> Option<usize> {
+    let n = src.len();
+    if i > 0 && is_ident(src[i - 1]) {
+        return None;
+    }
+    let mut j = i;
+    if src[j] == b'b' {
+        j += 1;
+    }
+    if j >= n || src[j] != b'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while j < n && src[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || src[j] != b'"' {
+        return None; // an `r#ident` raw identifier, or a bare `r`
+    }
+    j += 1;
+    let mut closer = vec![b'#'; hashes];
+    closer.insert(0, b'"');
+    let end = memfind(src, j, &closer).unwrap_or(n);
+    Some((end + closer.len()).min(n) - i)
+}
+
+fn memfind(hay: &[u8], from: usize, needle: &[u8]) -> Option<usize> {
+    if from >= hay.len() {
+        return None;
+    }
+    hay[from..].windows(needle.len()).position(|w| w == needle).map(|p| p + from)
+}
+
+/// Byte ranges of `#[cfg(test)]` items: from the attribute to the end
+/// of the brace block that follows it.
+fn test_regions(stripped: &[u8]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(at) = memfind(stripped, from, b"#[cfg(test)]") {
+        let Some(open) = memfind(stripped, at, b"{") else {
+            break;
+        };
+        let mut depth = 0usize;
+        let mut j = open;
+        while j < stripped.len() {
+            match stripped[j] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let end = (j + 1).min(stripped.len());
+        out.push((at, end));
+        from = end.max(at + 1);
+    }
+    out
+}
+
+/// Check 1: raw lock types outside `util/sync.rs`.
+fn check_raw_locks(sources: &[Source], errors: &mut Vec<String>) {
+    for src in sources {
+        if src.is("util/sync.rs") {
+            continue;
+        }
+        for name in ["Mutex", "RwLock", "Condvar"] {
+            let needle = name.as_bytes();
+            let mut from = 0;
+            while let Some(at) = memfind(&src.stripped, from, needle) {
+                from = at + 1;
+                if at > 0 && is_ident(src.stripped[at - 1]) {
+                    continue; // OrderedMutex, OrderedRwLock, ...
+                }
+                if src.in_tests(at) {
+                    continue;
+                }
+                errors.push(format!(
+                    "{}:{}: raw std::sync {name} — use crate::util::sync::Ordered{name} \
+                     (the ranked-lock layer is the only place poison policy lives)",
+                    src.path.display(),
+                    src.line(at),
+                ));
+            }
+        }
+    }
+}
+
+/// Check 2: unwrap/expect/panic! ratchet over server/, cluster/, kv/.
+fn check_ratchet(sources: &[Source], errors: &mut Vec<String>) -> Result<(), String> {
+    const RATCHET: &str = "rust/lint/ratchet.txt";
+    let write_mode = std::env::args().any(|a| a == "--write-ratchet");
+    let baseline_txt = match std::fs::read_to_string(RATCHET) {
+        Ok(txt) => txt,
+        Err(_) if write_mode => String::new(),
+        Err(e) => return Err(format!("{RATCHET}: {e} (seed it with --write-ratchet)")),
+    };
+    let mut baseline = std::collections::BTreeMap::new();
+    for line in baseline_txt.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(count), Some(path)) = (it.next(), it.next()) else {
+            return Err(format!("{RATCHET}: bad line {line:?}"));
+        };
+        let count: usize = count.parse().map_err(|_| format!("{RATCHET}: bad count {line:?}"))?;
+        baseline.insert(path.to_string(), count);
+    }
+
+    let mut fresh = String::new();
+    for src in sources {
+        let in_scope = src.under("rust/src/server/")
+            || src.under("rust/src/cluster/")
+            || src.under("rust/src/kv/");
+        if !in_scope {
+            continue;
+        }
+        let count = count_panics(src);
+        let path = src.slash_path();
+        if count > 0 {
+            fresh.push_str(&format!("{count} {path}\n"));
+        }
+        if write_mode {
+            continue;
+        }
+        let allowed = baseline.get(path.as_str()).copied().unwrap_or(0);
+        if count > allowed {
+            errors.push(format!(
+                "{path}: {count} unwrap/expect/panic! sites outside tests (ratchet allows \
+                 {allowed}) — return an error instead, or consciously raise {RATCHET}",
+            ));
+        } else if count < allowed {
+            println!("mpic-lint: note: {path} is down to {count} sites; tighten {RATCHET}");
+        }
+    }
+    if write_mode {
+        std::fs::write(RATCHET, &fresh).map_err(|e| format!("{RATCHET}: {e}"))?;
+        println!("mpic-lint: wrote {RATCHET}");
+    }
+    Ok(())
+}
+
+fn count_panics(src: &Source) -> usize {
+    let patterns: [(&[u8], bool); 3] =
+        [(b".unwrap", true), (b".expect", true), (b"panic!", false)];
+    let mut count = 0;
+    for (needle, require_call) in patterns {
+        let mut from = 0;
+        while let Some(at) = memfind(&src.stripped, from, needle) {
+            from = at + 1;
+            let end = at + needle.len();
+            if require_call && src.stripped.get(end) != Some(&b'(') {
+                continue; // unwrap_or_else, expect_err, ...
+            }
+            if at > 0 && is_ident(src.stripped[at - 1]) {
+                continue;
+            }
+            if src.in_tests(at) {
+                continue;
+            }
+            count += 1;
+        }
+    }
+    count
+}
+
+/// Check 3: dispatched ops are documented and exercised.
+fn check_ops(sources: &[Source], errors: &mut Vec<String>) -> Result<(), String> {
+    let api = sources.iter().find(|s| s.is("server/api.rs"));
+    let api = api.ok_or("rust/src/server/api.rs not found")?;
+    let ops = dispatch_ops(api)?;
+    if ops.len() < 10 {
+        return Err(format!("only {} ops parsed from server/api.rs dispatch", ops.len()));
+    }
+    let readme = std::fs::read_to_string("README.md").map_err(|e| format!("README.md: {e}"))?;
+    let mut test_files = Vec::new();
+    walk(Path::new("rust/tests"), &mut test_files, false)?;
+    let mut tests_blob = String::new();
+    for f in &test_files {
+        let bytes = std::fs::read(f).map_err(|e| format!("{}: {e}", f.display()))?;
+        tests_blob.push_str(&String::from_utf8_lossy(&bytes));
+    }
+    for (op, off) in ops {
+        if !readme.contains(&format!("`{op}`")) {
+            errors.push(format!(
+                "{}:{}: op \"{op}\" is dispatched but missing from the README op table",
+                api.path.display(),
+                api.line(off),
+            ));
+        }
+        if !tests_blob.contains(&format!("\"{op}\"")) {
+            errors.push(format!(
+                "{}:{}: op \"{op}\" has no golden fixture or e2e test under rust/tests/",
+                api.path.display(),
+                api.line(off),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The op strings of `match env.op.as_str()` arms in api.rs, with the
+/// byte offset of each for diagnostics.
+fn dispatch_ops(api: &Source) -> Result<Vec<(String, usize)>, String> {
+    let at = memfind(&api.stripped, 0, b"match env.op.as_str()")
+        .ok_or("server/api.rs: no `match env.op.as_str()` dispatch found")?;
+    let open = memfind(&api.stripped, at, b"{").ok_or("server/api.rs: dispatch has no body")?;
+    let mut depth = 0usize;
+    let mut end = open;
+    while end < api.stripped.len() {
+        match api.stripped[end] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        end += 1;
+    }
+    // Scan the RAW bytes of the arm region for `"op" =>` / `"op" |`
+    // patterns (the stripped copy has the literals blanked). Only
+    // depth-1 literals count: nested matches (e.g. a sub-action match
+    // inside one arm's body) dispatch on other strings, not ops.
+    let mut ops = Vec::new();
+    let mut brace = 0i32;
+    let mut i = open;
+    while i < end {
+        match api.stripped[i] {
+            b'{' => brace += 1,
+            b'}' => brace -= 1,
+            _ => {}
+        }
+        if api.raw[i] != b'"' || brace != 1 {
+            i += 1;
+            continue;
+        }
+        let start = i + 1;
+        let mut j = start;
+        while j < end && api.raw[j] != b'"' {
+            if api.raw[j] == b'\\' {
+                j += 1;
+            }
+            j += 1;
+        }
+        let lit = &api.raw[start..j.min(end)];
+        let mut k = j + 1;
+        while k < end && (api.raw[k] == b' ' || api.raw[k] == b'\n') {
+            k += 1;
+        }
+        let is_arm = api.raw.get(k) == Some(&b'|')
+            || (api.raw.get(k) == Some(&b'=') && api.raw.get(k + 1) == Some(&b'>'));
+        let well_formed = !lit.is_empty()
+            && lit.iter().all(|&b| b.is_ascii_lowercase() || b == b'.' || b == b'_');
+        if is_arm && well_formed {
+            ops.push((String::from_utf8_lossy(lit).into_owned(), i));
+        }
+        i = j + 1;
+    }
+    Ok(ops)
+}
+
+/// Check 4: every stats/counter field is exported by the snapshot.
+fn check_metrics(sources: &[Source], errors: &mut Vec<String>) {
+    let Some(metrics) = sources.iter().find(|s| s.is("coordinator/metrics.rs")) else {
+        errors.push("rust/src/coordinator/metrics.rs not found".into());
+        return;
+    };
+    let metrics_raw = String::from_utf8_lossy(&metrics.raw).into_owned();
+    let checks = [("kv/store.rs", "StoreStats"), ("coordinator/metrics.rs", "ClusterCounters")];
+    for (file, strct) in checks {
+        let Some(src) = sources.iter().find(|s| s.is(file)) else {
+            errors.push(format!("rust/src/{file} not found"));
+            continue;
+        };
+        for (field, off) in struct_fields(src, strct) {
+            if !metrics_raw.contains(&format!("\"{field}\"")) {
+                errors.push(format!(
+                    "{}:{}: {strct}.{field} is counted but never exported in the metrics \
+                     snapshot (coordinator/metrics.rs)",
+                    src.path.display(),
+                    src.line(off),
+                ));
+            }
+        }
+    }
+}
+
+/// Public field names of `pub struct <name> { ... }` in a source file.
+fn struct_fields(src: &Source, name: &str) -> Vec<(String, usize)> {
+    let needle = format!("pub struct {name} {{");
+    let Some(at) = memfind(&src.stripped, 0, needle.as_bytes()) else {
+        return Vec::new();
+    };
+    let open = at + needle.len() - 1;
+    let mut depth = 0usize;
+    let mut end = open;
+    while end < src.stripped.len() {
+        match src.stripped[end] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        end += 1;
+    }
+    let mut out = Vec::new();
+    let mut i = open;
+    while let Some(p) = memfind(&src.stripped, i, b"pub ") {
+        if p >= end {
+            break;
+        }
+        let mut j = p + 4;
+        let start = j;
+        while j < end && is_ident(src.stripped[j]) {
+            j += 1;
+        }
+        if src.stripped.get(j) == Some(&b':') && j > start {
+            let field = String::from_utf8_lossy(&src.stripped[start..j]).into_owned();
+            out.push((field, p));
+        }
+        i = p + 4;
+    }
+    out
+}

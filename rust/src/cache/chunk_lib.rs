@@ -11,12 +11,13 @@
 //! (MPIC-k) or the whole chunk on a cache miss.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail};
 
 use crate::kv::KvStore;
 use crate::mm::{ChunkId, Namespace};
+use crate::util::sync::{LockRank, OrderedMutex};
 use crate::Result;
 
 /// Default per-namespace chunk quota (see [`ChunkLibrary::with_quota`]).
@@ -46,7 +47,7 @@ pub struct ChunkLibrary {
     /// file quota, registration must have a rejection path before it
     /// becomes an unbounded memory/disk sink.
     quota: usize,
-    chunks: Mutex<HashMap<(Namespace, ChunkId), ChunkMeta>>,
+    chunks: OrderedMutex<HashMap<(Namespace, ChunkId), ChunkMeta>>,
 }
 
 impl ChunkLibrary {
@@ -56,7 +57,8 @@ impl ChunkLibrary {
 
     /// A library with an explicit per-namespace chunk quota.
     pub fn with_quota(store: Arc<KvStore>, quota: usize) -> ChunkLibrary {
-        ChunkLibrary { store, quota, chunks: Mutex::new(HashMap::new()) }
+        let chunks = OrderedMutex::new(LockRank::Scheduler, HashMap::new());
+        ChunkLibrary { store, quota, chunks }
     }
 
     pub fn store(&self) -> &Arc<KvStore> {
@@ -76,7 +78,7 @@ impl ChunkLibrary {
     ///
     /// [`register_in`]: ChunkLibrary::register_in
     pub fn ensure_capacity(&self, ns: &Namespace, id: ChunkId) -> Result<()> {
-        let g = self.chunks.lock().unwrap();
+        let g = self.chunks.lock();
         if !g.contains_key(&(ns.clone(), id))
             && g.keys().filter(|(n, _)| n == ns).count() >= self.quota
         {
@@ -99,7 +101,7 @@ impl ChunkLibrary {
         tokens: Vec<i32>,
     ) -> Result<ChunkId> {
         let id = ChunkId::from_handle(handle);
-        let mut g = self.chunks.lock().unwrap();
+        let mut g = self.chunks.lock();
         if !g.contains_key(&(ns.clone(), id)) {
             let in_ns = g.keys().filter(|(n, _)| n == ns).count();
             if in_ns >= self.quota {
@@ -130,7 +132,6 @@ impl ChunkLibrary {
     pub fn tokens_in(&self, ns: &Namespace, id: ChunkId) -> Result<Arc<Vec<i32>>> {
         self.chunks
             .lock()
-            .unwrap()
             .get(&(ns.clone(), id))
             .map(|m| Arc::clone(&m.tokens))
             .ok_or_else(|| {
@@ -143,7 +144,7 @@ impl ChunkLibrary {
     }
 
     pub fn get_in(&self, ns: &Namespace, id: ChunkId) -> Option<ChunkMeta> {
-        self.chunks.lock().unwrap().get(&(ns.clone(), id)).cloned()
+        self.chunks.lock().get(&(ns.clone(), id)).cloned()
     }
 
     pub fn contains(&self, id: ChunkId) -> bool {
@@ -151,11 +152,11 @@ impl ChunkLibrary {
     }
 
     pub fn contains_in(&self, ns: &Namespace, id: ChunkId) -> bool {
-        self.chunks.lock().unwrap().contains_key(&(ns.clone(), id))
+        self.chunks.lock().contains_key(&(ns.clone(), id))
     }
 
     pub fn len(&self) -> usize {
-        self.chunks.lock().unwrap().len()
+        self.chunks.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -165,7 +166,7 @@ impl ChunkLibrary {
     /// All registered chunks across namespaces, sorted by (namespace,
     /// handle) for deterministic listings.
     pub fn all(&self) -> Vec<ChunkMeta> {
-        let mut out: Vec<ChunkMeta> = self.chunks.lock().unwrap().values().cloned().collect();
+        let mut out: Vec<ChunkMeta> = self.chunks.lock().values().cloned().collect();
         out.sort_by(|a, b| (&a.ns, &a.handle).cmp(&(&b.ns, &b.handle)));
         out
     }

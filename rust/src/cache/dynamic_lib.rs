@@ -7,12 +7,13 @@
 //! segments (the original MPIC path) or cached text chunks (MRAG over
 //! documents) — both are position-independent reuse, the same machinery.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::anyhow;
 
 use crate::kv::KvStore;
 use crate::mm::{ImageId, Namespace, SegmentId};
+use crate::util::sync::{LockRank, OrderedMutex};
 use crate::Result;
 
 /// One administrable reference: a reusable segment plus the text it is
@@ -47,14 +48,18 @@ impl Reference {
 /// shared tiered store (the KV of each reference is precomputed on refresh).
 pub struct DynamicLibrary {
     store: Arc<KvStore>,
-    refs: Mutex<Vec<Reference>>,
+    refs: OrderedMutex<Vec<Reference>>,
     /// Monotone generation counter, bumped on every admin refresh.
-    generation: Mutex<u64>,
+    generation: OrderedMutex<u64>,
 }
 
 impl DynamicLibrary {
     pub fn new(store: Arc<KvStore>) -> DynamicLibrary {
-        DynamicLibrary { store, refs: Mutex::new(Vec::new()), generation: Mutex::new(0) }
+        DynamicLibrary {
+            store,
+            refs: OrderedMutex::with_index(LockRank::Scheduler, 2, Vec::new()),
+            generation: OrderedMutex::with_index(LockRank::Scheduler, 3, 0),
+        }
     }
 
     pub fn store(&self) -> &Arc<KvStore> {
@@ -63,22 +68,22 @@ impl DynamicLibrary {
 
     /// Replace the whole reference set (admin refresh).
     pub fn refresh(&self, refs: Vec<Reference>) {
-        *self.refs.lock().unwrap() = refs;
-        *self.generation.lock().unwrap() += 1;
+        *self.refs.lock() = refs;
+        *self.generation.lock() += 1;
     }
 
     /// Append one reference.
     pub fn add(&self, r: Reference) {
-        self.refs.lock().unwrap().push(r);
-        *self.generation.lock().unwrap() += 1;
+        self.refs.lock().push(r);
+        *self.generation.lock() += 1;
     }
 
     pub fn generation(&self) -> u64 {
-        *self.generation.lock().unwrap()
+        *self.generation.lock()
     }
 
     pub fn len(&self) -> usize {
-        self.refs.lock().unwrap().len()
+        self.refs.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -86,7 +91,7 @@ impl DynamicLibrary {
     }
 
     pub fn all(&self) -> Vec<Reference> {
-        self.refs.lock().unwrap().clone()
+        self.refs.lock().clone()
     }
 
     pub fn by_segment(&self, seg: SegmentId) -> Result<Reference> {

@@ -7,12 +7,13 @@
 //! own handles.
 
 use std::collections::{BTreeMap, HashMap};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail};
 
 use crate::kv::{KvKey, KvStore};
 use crate::mm::{ImageId, Namespace, UserId};
+use crate::util::sync::{LockRank, OrderedMutex};
 use crate::Result;
 
 /// Registration record of one uploaded file.
@@ -30,12 +31,13 @@ pub struct StaticLibrary {
     store: Arc<KvStore>,
     /// Per-user quota (number of files).
     quota: usize,
-    files: Mutex<HashMap<(Namespace, UserId), BTreeMap<String, FileMeta>>>,
+    files: OrderedMutex<HashMap<(Namespace, UserId), BTreeMap<String, FileMeta>>>,
 }
 
 impl StaticLibrary {
     pub fn new(store: Arc<KvStore>, quota: usize) -> StaticLibrary {
-        StaticLibrary { store, quota, files: Mutex::new(HashMap::new()) }
+        let files = OrderedMutex::with_index(LockRank::Scheduler, 1, HashMap::new());
+        StaticLibrary { store, quota, files }
     }
 
     pub fn store(&self) -> &Arc<KvStore> {
@@ -56,7 +58,7 @@ impl StaticLibrary {
         handle: &str,
         image: ImageId,
     ) -> Result<()> {
-        let mut g = self.files.lock().unwrap();
+        let mut g = self.files.lock();
         let entry = g.entry((ns.clone(), user)).or_default();
         if entry.len() >= self.quota && !entry.contains_key(handle) {
             bail!("user {user:?} exceeds upload quota of {}", self.quota);
@@ -78,7 +80,7 @@ impl StaticLibrary {
     }
 
     pub fn resolve_in(&self, ns: &Namespace, user: UserId, handle: &str) -> Result<ImageId> {
-        let g = self.files.lock().unwrap();
+        let g = self.files.lock();
         g.get(&(ns.clone(), user))
             .and_then(|m| m.get(handle))
             .map(|f| f.image)
@@ -91,7 +93,7 @@ impl StaticLibrary {
     }
 
     pub fn owns_in(&self, ns: &Namespace, user: UserId, image: ImageId) -> bool {
-        let g = self.files.lock().unwrap();
+        let g = self.files.lock();
         g.get(&(ns.clone(), user)).map(|m| m.values().any(|f| f.image == image)).unwrap_or(false)
     }
 
@@ -101,7 +103,7 @@ impl StaticLibrary {
     }
 
     pub fn list_in(&self, ns: &Namespace, user: UserId) -> Vec<FileMeta> {
-        let g = self.files.lock().unwrap();
+        let g = self.files.lock();
         g.get(&(ns.clone(), user)).map(|m| m.values().cloned().collect()).unwrap_or_default()
     }
 
@@ -117,7 +119,7 @@ impl StaticLibrary {
         handle: &str,
         model: &str,
     ) -> Result<()> {
-        let mut g = self.files.lock().unwrap();
+        let mut g = self.files.lock();
         let entry =
             g.get_mut(&(ns.clone(), user)).ok_or_else(|| anyhow!("unknown user"))?;
         let meta = entry.remove(handle).ok_or_else(|| anyhow!("unknown handle {handle:?}"))?;

@@ -33,12 +33,13 @@ use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::mm::{ChunkId, ImageId, Namespace, Prompt, SegmentId, UserId};
 use crate::server::{Client, PeerUnreachable};
 use crate::util::json::Value;
+use crate::util::sync::{LockRank, OrderedMutex};
 use crate::util::trace::TraceId;
 use crate::Result;
 
@@ -97,7 +98,7 @@ struct Shared {
     ring: HashRing,
     rr: AtomicUsize,
     /// Live `inflight_now` per worker, refreshed by the poller thread.
-    occupancy: Mutex<Vec<f64>>,
+    occupancy: OrderedMutex<Vec<f64>>,
     shutdown: AtomicBool,
 }
 
@@ -121,7 +122,7 @@ pub fn serve_router(
     let shared = Arc::new(Shared {
         ring: HashRing::new(cfg.workers.len()),
         rr: AtomicUsize::new(0),
-        occupancy: Mutex::new(vec![0.0; cfg.workers.len()]),
+        occupancy: OrderedMutex::new(LockRank::Router, vec![0.0; cfg.workers.len()]),
         shutdown: AtomicBool::new(false),
         cfg,
     });
@@ -196,7 +197,7 @@ fn poll_occupancy(shared: &Shared) {
         }
         for (w, &addr) in shared.cfg.workers.iter().enumerate() {
             let inflight = worker_inflight(addr, shared.cfg.probe_timeout).unwrap_or(0.0);
-            shared.occupancy.lock().unwrap()[w] = inflight;
+            shared.occupancy.lock()[w] = inflight;
         }
     }
 }
@@ -454,7 +455,7 @@ fn route(
             if !spans.is_empty() {
                 let bitmaps = probe_workers(shared, &ns, &spans, upstreams);
                 let scores = affinity_scores(spans.len(), &bitmaps);
-                let occupancy = shared.occupancy.lock().unwrap().clone();
+                let occupancy = shared.occupancy.lock().clone();
                 let winner = choose_worker(&scores, &occupancy);
                 if scores[winner] > 0 {
                     req.set("routed", Value::str("affinity"));

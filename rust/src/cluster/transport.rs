@@ -22,7 +22,7 @@
 use std::collections::HashMap;
 use std::net::SocketAddr;
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context};
@@ -32,6 +32,7 @@ use crate::kv::{KvKey, Transport};
 use crate::mm::{ChunkId, ImageId, Namespace, SegmentId};
 use crate::server::Client;
 use crate::util::json::Value;
+use crate::util::sync::{LockRank, OrderedMutex};
 use crate::util::trace;
 use crate::Result;
 
@@ -94,6 +95,80 @@ pub fn wire_to_key(model: &str, v: &Value) -> Result<KvKey> {
     Ok(KvKey::segment(model, &ns, seg))
 }
 
+/// One peer round-trip failure, typed so callers can tell a peer that
+/// is *down* from one that answered protocol garbage: an unreachable
+/// peer is worth retrying after its cooldown, a malformed reply fails
+/// identically every time and is never worth an immediate retry.
+#[derive(Debug)]
+pub enum PeerError {
+    /// Connect or read failed/timed out — the peer may be down.
+    Unreachable { peer: SocketAddr, source: anyhow::Error },
+    /// The peer answered, but the reply violated the protocol (missing
+    /// or ill-typed field, short bitmap, bad frame, rejection).
+    Decode { peer: SocketAddr, what: &'static str, source: anyhow::Error },
+}
+
+impl std::fmt::Display for PeerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PeerError::Unreachable { peer, source } => {
+                write!(f, "peer {peer} unreachable: {source}")
+            }
+            PeerError::Decode { peer, what, source } => {
+                write!(f, "peer {peer} sent an undecodable {what}: {source}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PeerError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PeerError::Unreachable { source, .. } | PeerError::Decode { source, .. } => {
+                Some(&**source)
+            }
+        }
+    }
+}
+
+type PeerResult<T> = std::result::Result<T, PeerError>;
+
+/// Strict decode of a `kv.probe` reply. The old parser defaulted
+/// non-bool bitmap bits to `false`, which silently turned a malformed
+/// peer into permanent misses; now any ill-typed field is a
+/// [`PeerError::Decode`].
+fn decode_probe_reply(peer: SocketAddr, resp: &Value, n: usize) -> PeerResult<Vec<bool>> {
+    let decode = |source: anyhow::Error| PeerError::Decode { peer, what: "kv.probe reply", source };
+    if !resp.get("ok").and_then(|v| v.as_bool()).map_err(&decode)? {
+        return Err(decode(anyhow!("rejected: {}", resp.encode())));
+    }
+    let arr = resp.get("bitmap").and_then(|v| v.as_arr()).map_err(&decode)?;
+    let mut bitmap = Vec::with_capacity(arr.len());
+    for b in arr {
+        bitmap.push(b.as_bool().map_err(&decode)?);
+    }
+    if bitmap.len() != n {
+        return Err(decode(anyhow!("bitmap has {} of {n} bits", bitmap.len())));
+    }
+    Ok(bitmap)
+}
+
+/// Strict decode of a `kv.pull` reply: a well-formed `not_found` miss
+/// is `Ok(None)`; every other rejection or ill-typed field is a
+/// [`PeerError::Decode`].
+fn decode_pull_reply(peer: SocketAddr, resp: &Value) -> PeerResult<Option<Vec<u8>>> {
+    let decode = |source: anyhow::Error| PeerError::Decode { peer, what: "kv.pull reply", source };
+    if !resp.get("ok").and_then(|v| v.as_bool()).map_err(&decode)? {
+        match resp.opt("code").map(|c| c.as_str()) {
+            Some(Ok("not_found")) => return Ok(None),
+            _ => return Err(decode(anyhow!("rejected: {}", resp.encode()))),
+        }
+    }
+    let frame = resp.get("frame").and_then(|v| v.as_str()).map_err(&decode)?;
+    let bytes = crate::kv::codec::unframe(frame).map_err(&decode)?;
+    Ok(Some(bytes))
+}
+
 /// The peer-to-peer KV transport: a list of worker addresses tried in
 /// key-rotated order, with timeouts, retry, and probe caching.
 pub struct PeerTransport {
@@ -101,9 +176,11 @@ pub struct PeerTransport {
     cfg: PeerConfig,
     counters: Arc<ClusterCounters>,
     /// `(peer, key) → trusted-until` for probes that came back negative.
-    negative: Mutex<HashMap<(SocketAddr, KvKey), Instant>>,
-    /// `peer → skip-until` for peers that failed connect/call twice.
-    dead_until: Mutex<HashMap<SocketAddr, Instant>>,
+    /// Ranked `Transfer#2`; never held together with `dead_until`.
+    negative: OrderedMutex<HashMap<(SocketAddr, KvKey), Instant>>,
+    /// `peer → skip-until` for peers that failed connect/call twice
+    /// (`Transfer#3`).
+    dead_until: OrderedMutex<HashMap<SocketAddr, Instant>>,
 }
 
 impl PeerTransport {
@@ -116,8 +193,8 @@ impl PeerTransport {
             peers,
             cfg,
             counters,
-            negative: Mutex::new(HashMap::new()),
-            dead_until: Mutex::new(HashMap::new()),
+            negative: OrderedMutex::with_index(LockRank::Transfer, 2, HashMap::new()),
+            dead_until: OrderedMutex::with_index(LockRank::Transfer, 3, HashMap::new()),
         }
     }
 
@@ -127,7 +204,7 @@ impl PeerTransport {
 
     fn peer_dead(&self, peer: SocketAddr) -> bool {
         let now = Instant::now();
-        let mut g = self.dead_until.lock().unwrap();
+        let mut g = self.dead_until.lock();
         match g.get(&peer) {
             Some(&until) if until > now => true,
             Some(_) => {
@@ -140,12 +217,12 @@ impl PeerTransport {
 
     fn mark_dead(&self, peer: SocketAddr) {
         self.counters.peer_timeouts.fetch_add(1, Ordering::Relaxed);
-        self.dead_until.lock().unwrap().insert(peer, Instant::now() + self.cfg.dead_ttl);
+        self.dead_until.lock().insert(peer, Instant::now() + self.cfg.dead_ttl);
     }
 
     fn negative_cached(&self, peer: SocketAddr, key: &KvKey) -> bool {
         let now = Instant::now();
-        let mut g = self.negative.lock().unwrap();
+        let mut g = self.negative.lock();
         match g.get(&(peer, key.clone())) {
             Some(&until) if until > now => true,
             Some(_) => {
@@ -157,7 +234,7 @@ impl PeerTransport {
     }
 
     fn cache_negative(&self, peer: SocketAddr, key: &KvKey) {
-        let mut g = self.negative.lock().unwrap();
+        let mut g = self.negative.lock();
         // Bound the cache: prune lapsed entries once it grows.
         if g.len() > 4096 {
             let now = Instant::now();
@@ -167,9 +244,10 @@ impl PeerTransport {
     }
 
     /// One `kv.probe` round-trip against one peer.
-    fn probe_peer(&self, peer: SocketAddr, keys: &[KvKey]) -> Result<Vec<bool>> {
+    fn probe_peer(&self, peer: SocketAddr, keys: &[KvKey]) -> PeerResult<Vec<bool>> {
         let t0 = Instant::now();
-        let mut c = Client::connect_timeout(peer, self.cfg.timeout)?;
+        let unreachable = |source: anyhow::Error| PeerError::Unreachable { peer, source };
+        let mut c = Client::connect_timeout(peer, self.cfg.timeout).map_err(&unreachable)?;
         self.counters.peer_probes.fetch_add(1, Ordering::Relaxed);
         let mut req = Value::obj(vec![
             ("v", Value::num(3.0)),
@@ -183,7 +261,7 @@ impl PeerTransport {
         if let Some(t) = trace::current() {
             req.set("trace", Value::str(t.hex()));
         }
-        let resp = c.call(&req)?;
+        let resp = c.call(&req).map_err(&unreachable)?;
         trace::record(
             "peer_probe",
             t0,
@@ -192,19 +270,7 @@ impl PeerTransport {
                 ("keys", Value::num(keys.len() as f64)),
             ],
         );
-        if !resp.get("ok")?.as_bool()? {
-            return Err(anyhow!("kv.probe rejected: {}", resp.encode()));
-        }
-        let bitmap = resp
-            .get("bitmap")?
-            .as_arr()?
-            .iter()
-            .map(|b| b.as_bool().unwrap_or(false))
-            .collect::<Vec<_>>();
-        if bitmap.len() != keys.len() {
-            return Err(anyhow!("kv.probe bitmap has {} of {} bits", bitmap.len(), keys.len()));
-        }
-        Ok(bitmap)
+        decode_probe_reply(peer, &resp, keys.len())
     }
 
     /// One `kv.pull` round-trip (no retry here; `pull_impl` owns the
@@ -215,9 +281,10 @@ impl PeerTransport {
         peer: SocketAddr,
         key: &KvKey,
         groups: Option<usize>,
-    ) -> Result<Option<Vec<u8>>> {
+    ) -> PeerResult<Option<Vec<u8>>> {
         let t0 = Instant::now();
-        let mut c = Client::connect_timeout(peer, self.cfg.timeout)?;
+        let unreachable = |source: anyhow::Error| PeerError::Unreachable { peer, source };
+        let mut c = Client::connect_timeout(peer, self.cfg.timeout).map_err(&unreachable)?;
         let mut req = Value::obj(vec![
             ("v", Value::num(3.0)),
             ("op", Value::str("kv.pull")),
@@ -234,16 +301,10 @@ impl PeerTransport {
         if let (Value::Obj(req_m), Value::Obj(key_m)) = (&mut req, key_to_wire(key)) {
             req_m.extend(key_m);
         }
-        let resp = c.call(&req)?;
-        if !resp.get("ok")?.as_bool()? {
-            let code = resp.opt("code").and_then(|c| c.as_str().ok()).unwrap_or("");
-            if code == "not_found" {
-                return Ok(None);
-            }
-            return Err(anyhow!("kv.pull rejected: {}", resp.encode()));
-        }
-        let frame = resp.get("frame")?.as_str()?;
-        let bytes = crate::kv::codec::unframe(frame)?;
+        let resp = c.call(&req).map_err(&unreachable)?;
+        let Some(bytes) = decode_pull_reply(peer, &resp)? else {
+            return Ok(None);
+        };
         self.counters.peer_pulls.fetch_add(1, Ordering::Relaxed);
         self.counters.peer_pull_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
         trace::record(
@@ -280,9 +341,16 @@ impl PeerTransport {
             }
             // Pull, with one retry after backoff (the peer just answered
             // the probe, so a transient hiccup is worth one more try).
+            // A malformed reply fails the same way every time, so it
+            // skips the retry and cools the peer down immediately.
             for attempt in 0..2 {
                 match self.pull_peer(peer, key, groups) {
                     Ok(got) => return Ok(got),
+                    Err(e @ PeerError::Decode { .. }) => {
+                        log::warn!("cluster: {e}");
+                        self.mark_dead(peer);
+                        break;
+                    }
                     Err(e) if attempt == 0 => {
                         log::debug!("cluster: pull from {peer} failed (will retry): {e}");
                         std::thread::sleep(self.cfg.retry_backoff);

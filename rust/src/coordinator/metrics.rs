@@ -15,11 +15,12 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::util::json::Value;
 use crate::util::stats::{Histogram, Reservoir};
+use crate::util::sync::{LockRank, OrderedMutex};
 
 /// Retained sample cap for the per-round gauge series (occupancy, depth).
 const RESERVOIR_CAP: usize = 256;
@@ -91,7 +92,7 @@ impl WindowRing {
 /// engine and the (multi-threaded) server — including the `--metrics-addr`
 /// scrape thread — can all record and read through a shared reference.
 pub struct Metrics {
-    inner: Mutex<Inner>,
+    inner: OrderedMutex<Inner>,
     /// Shared with the installed `PeerTransport` (if any) and the serving
     /// pipeline's routed-request accounting.
     cluster: Arc<ClusterCounters>,
@@ -143,7 +144,7 @@ struct Inner {
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics {
-            inner: Mutex::new(Inner {
+            inner: OrderedMutex::new(LockRank::Metrics, Inner {
                 started: Instant::now(),
                 ttft: Histogram::new(),
                 ttft_fetch: Histogram::new(),
@@ -176,7 +177,7 @@ impl Metrics {
     }
 
     pub fn record_request(&self, r: &super::engine::InferenceResult) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         g.ttft.observe(r.ttft.total_s);
         g.ttft_fetch.observe(r.ttft.fetch_s);
         g.ttft_link.observe(r.ttft.link_s);
@@ -190,29 +191,29 @@ impl Metrics {
     }
 
     pub fn record_decode_step(&self, secs: f64) {
-        self.inner.lock().unwrap().decode_step.observe(secs);
+        self.inner.lock().decode_step.observe(secs);
     }
 
     pub fn record_upload(&self, secs: f64) {
-        self.inner.lock().unwrap().upload.observe(secs);
+        self.inner.lock().upload.observe(secs);
     }
 
     /// Record one serving-API request of the given op and its wall time.
     pub fn record_op(&self, op: &str, secs: f64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         g.ops.entry(op.to_string()).or_default().observe(secs);
     }
 
     /// Record how long a job waited in the admission queue before the
     /// engine loop picked it up.
     pub fn record_admission_wait(&self, secs: f64) {
-        self.inner.lock().unwrap().admission_wait.observe(secs);
+        self.inner.lock().admission_wait.observe(secs);
     }
 
     /// Record one pipeline round: how many sequences were interleaved and
     /// how many weighted requests were in flight.
     pub fn record_pipeline_round(&self, occupancy: usize, queue_depth: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         g.batch_occupancy.push(occupancy as f64);
         g.queue_depth.push(queue_depth as f64);
     }
@@ -227,7 +228,7 @@ impl Metrics {
         cancelled: u64,
         inflight_now: u64,
     ) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         g.overload_rejected = overload_rejected;
         g.async_uploads = async_uploads;
         g.cancelled = cancelled;
@@ -238,51 +239,51 @@ impl Metrics {
     /// codec). Called by the pipeline each round and by the `stats` op so
     /// the snapshot is always fresh.
     pub fn set_kv_counters(&self, kv: &crate::kv::StoreStats) {
-        self.inner.lock().unwrap().kv = *kv;
+        self.inner.lock().kv = *kv;
     }
 
     /// How many requests of this op have been recorded.
     pub fn op_count(&self, op: &str) -> u64 {
-        self.inner.lock().unwrap().ops.get(op).map(|s| s.count()).unwrap_or(0)
+        self.inner.lock().ops.get(op).map(|s| s.count()).unwrap_or(0)
     }
 
     pub fn requests(&self) -> u64 {
-        self.inner.lock().unwrap().requests
+        self.inner.lock().requests
     }
 
     /// Seconds since this engine's metrics started.
     pub fn uptime_s(&self) -> f64 {
-        self.inner.lock().unwrap().started.elapsed().as_secs_f64()
+        self.inner.lock().started.elapsed().as_secs_f64()
     }
 
     /// Mean TTFT in seconds (NaN if no requests yet).
     pub fn mean_ttft_s(&self) -> f64 {
-        self.inner.lock().unwrap().ttft.mean()
+        self.inner.lock().ttft.mean()
     }
 
     /// Requests per second since engine start (lifetime average).
     pub fn throughput_rps(&self) -> f64 {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock();
         g.requests as f64 / g.started.elapsed().as_secs_f64().max(1e-9)
     }
 
     /// Decoded tokens per second since engine start (lifetime average).
     pub fn throughput_tps(&self) -> f64 {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock();
         g.tokens_out as f64 / g.started.elapsed().as_secs_f64().max(1e-9)
     }
 
     /// `(rps, tps)` over the last 60 seconds — current load, not history
     /// since boot.
     pub fn window_rates(&self) -> (f64, f64) {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock();
         let uptime = g.started.elapsed().as_secs_f64();
         g.window.rates(g.started.elapsed().as_secs(), uptime)
     }
 
     /// JSON snapshot for the server's `stats` op and the benches.
     pub fn snapshot(&self) -> Value {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock();
         let z = |x: f64| Value::num(if x.is_finite() { x } else { 0.0 });
         let s = |x: &Histogram| {
             Value::obj(vec![
@@ -646,7 +647,7 @@ mod tests {
                 m.record_pipeline_round((i % 8) as usize, (i % 16) as usize);
             }
         }
-        let g = m.inner.lock().unwrap();
+        let g = m.inner.lock();
         let n_buckets = Histogram::new().bucket_counts().len();
         assert_eq!(g.decode_step.bucket_counts().len(), n_buckets, "histogram never grows");
         assert!(g.batch_occupancy.sample_len() <= RESERVOIR_CAP, "reservoir is capped");

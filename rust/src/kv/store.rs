@@ -53,12 +53,13 @@
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Context};
 
 use super::{codec, KvKey, KvShape, SegmentKv};
+use crate::util::sync::{LockRank, OrderedMutex, OrderedMutexGuard, PoisonedLock};
 use crate::util::threadpool::ThreadPool;
 use crate::Result;
 
@@ -331,44 +332,63 @@ struct ShardInner {
 }
 
 struct Shard {
-    inner: Mutex<ShardInner>,
+    /// Ranked at `StoreShard#<shard index>`, so multi-shard sweeps must
+    /// visit shards in ascending index order.
+    inner: OrderedMutex<ShardInner>,
     /// Lock acquisitions that had to wait (try_lock failed).
     contention: AtomicU64,
 }
 
 impl Shard {
-    fn new() -> Shard {
+    fn new(index: u32) -> Shard {
+        let inner = ShardInner {
+            device: HashMap::new(),
+            device_bytes: 0,
+            partial: HashMap::new(),
+            host: HashMap::new(),
+            host_bytes: 0,
+            disk: HashMap::new(),
+            leases: HashMap::new(),
+            pin_lease: HashMap::new(),
+            prefetched: HashSet::new(),
+            prefetch_inflight: HashSet::new(),
+            clock: 0,
+            stats: StoreStats::default(),
+        };
         Shard {
-            inner: Mutex::new(ShardInner {
-                device: HashMap::new(),
-                device_bytes: 0,
-                partial: HashMap::new(),
-                host: HashMap::new(),
-                host_bytes: 0,
-                disk: HashMap::new(),
-                leases: HashMap::new(),
-                pin_lease: HashMap::new(),
-                prefetched: HashSet::new(),
-                prefetch_inflight: HashSet::new(),
-                clock: 0,
-                stats: StoreStats::default(),
-            }),
+            inner: OrderedMutex::with_index(LockRank::StoreShard, index, inner),
             contention: AtomicU64::new(0),
         }
     }
 
     /// Lock the shard, counting contention when the lock was held. Used
     /// by the request-path operations the sharding exists to speed up.
-    fn lock(&self) -> MutexGuard<'_, ShardInner> {
+    /// A panic under a shard guard (poison) must not wedge the store:
+    /// the maps stay structurally valid, so read/serve paths recover and
+    /// keep going; durable mutation paths use [`Shard::lock_checked`].
+    #[track_caller]
+    fn lock(&self) -> OrderedMutexGuard<'_, ShardInner> {
         match self.inner.try_lock() {
-            Ok(g) => g,
-            Err(std::sync::TryLockError::WouldBlock) => {
+            Some(g) => g,
+            None => {
                 self.contention.fetch_add(1, Ordering::Relaxed);
-                // A panic under a shard guard (poison) must not wedge the
-                // store: the maps stay structurally valid, so keep serving.
-                self.inner.lock().unwrap_or_else(|p| p.into_inner())
+                self.inner.lock()
             }
-            Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+        }
+    }
+
+    /// Like [`Shard::lock`], but surfaces poison as a typed error
+    /// instead of recovering — the policy for `Result` mutation paths
+    /// (`put_arc`, container admits) where acting on possibly mid-update
+    /// state could persist a torn entry.
+    #[track_caller]
+    fn lock_checked(&self) -> std::result::Result<OrderedMutexGuard<'_, ShardInner>, PoisonedLock> {
+        match self.inner.try_lock_checked() {
+            Some(r) => r,
+            None => {
+                self.contention.fetch_add(1, Ordering::Relaxed);
+                self.inner.lock_checked()
+            }
         }
     }
 
@@ -376,8 +396,9 @@ impl Shard {
     /// (`stats`, `entries`, `residency`, invariant audits) that sweep all
     /// shards; counting those would bias the metric with monitoring
     /// frequency instead of workload.
-    fn lock_uncounted(&self) -> MutexGuard<'_, ShardInner> {
-        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    #[track_caller]
+    fn lock_uncounted(&self) -> OrderedMutexGuard<'_, ShardInner> {
+        self.inner.lock()
     }
 }
 
@@ -590,9 +611,10 @@ pub struct KvStore {
     /// Lease-id allocator (store-global so ids are unique across shards).
     next_lease: AtomicU64,
     /// Lease id → key directory, so `lease_renew`/`lease_release` can
-    /// find the owning shard from a bare id. Never locked while a shard
-    /// lock is held (deadlock hygiene).
-    lease_dir: Mutex<HashMap<u64, KvKey>>,
+    /// find the owning shard from a bare id. Ranked *after* the shards
+    /// (`LeaseDir > StoreShard`), though today no path holds both at
+    /// once — every caller drops its shard guard first.
+    lease_dir: OrderedMutex<HashMap<u64, KvKey>>,
 }
 
 impl KvStore {
@@ -611,7 +633,7 @@ impl KvStore {
         ensure!(cfg.shards > 0, "store needs at least one shard");
         std::fs::create_dir_all(&cfg.disk_dir)
             .with_context(|| format!("creating {}", cfg.disk_dir.display()))?;
-        let shards: Vec<Shard> = (0..cfg.shards).map(|_| Shard::new()).collect();
+        let shards: Vec<Shard> = (0..cfg.shards).map(|i| Shard::new(i as u32)).collect();
         Ok(KvStore {
             device_cap_per_shard: cfg.device_capacity / cfg.shards,
             host_cap_per_shard: cfg.host_capacity / cfg.shards,
@@ -620,7 +642,7 @@ impl KvStore {
             pool,
             tmp_counter: AtomicU64::new(0),
             next_lease: AtomicU64::new(1),
-            lease_dir: Mutex::new(HashMap::new()),
+            lease_dir: OrderedMutex::new(LockRank::LeaseDir, HashMap::new()),
         })
     }
 
@@ -689,7 +711,7 @@ impl KvStore {
             .with_context(|| format!("renaming into {}", path.display()))?;
 
         let shard = self.shard(&kv.key);
-        let mut g = shard.lock();
+        let mut g = shard.lock_checked()?;
         g.stats.record_codec(rep);
         g.clock += 1;
         let clock = g.clock;
@@ -817,7 +839,7 @@ impl KvStore {
             .with_context(|| format!("renaming into {}", path.display()))?;
 
         let shard = self.shard(&kv.key);
-        let mut g = shard.lock();
+        let mut g = shard.lock_checked()?;
         g.stats.record_codec(rep);
         g.clock += 1;
         let clock = g.clock;
@@ -944,7 +966,7 @@ impl KvStore {
 
         let gbytes = 4 * (group.emb.len() + group.k.len() + group.v.len());
         let shard = self.shard(key);
-        let mut g = shard.lock();
+        let mut g = shard.lock_checked()?;
         g.clock += 1;
         let clock = g.clock;
         if g.device.contains_key(key) {
@@ -1389,7 +1411,7 @@ impl KvStore {
             g.leases.entry(key.clone()).or_default().push(LeaseRec { id, expires_at });
             g.stats.leases_acquired += 1;
         }
-        self.lease_dir.lock().unwrap().insert(id, key.clone());
+        self.lease_dir.lock().insert(id, key.clone());
         Some(LeaseInfo { id, key: key.clone(), ttl })
     }
 
@@ -1398,7 +1420,7 @@ impl KvStore {
     /// already-expired leases (an expired lease cannot be revived — take
     /// a new one).
     pub fn lease_renew(&self, id: u64, ttl: Option<Duration>) -> Option<LeaseInfo> {
-        let key = self.lease_dir.lock().unwrap().get(&id).cloned()?;
+        let key = self.lease_dir.lock().get(&id).cloned()?;
         let renewed = {
             let mut g = self.shard(&key).lock();
             let now = Instant::now();
@@ -1425,7 +1447,7 @@ impl KvStore {
         if renewed {
             Some(LeaseInfo { id, key, ttl })
         } else {
-            self.lease_dir.lock().unwrap().remove(&id);
+            self.lease_dir.lock().remove(&id);
             None
         }
     }
@@ -1434,7 +1456,7 @@ impl KvStore {
     /// already-expired-and-pruned leases. Releasing the last live lease
     /// makes the entry an ordinary LRU/TTL citizen again.
     pub fn lease_release(&self, id: u64) -> bool {
-        let Some(key) = self.lease_dir.lock().unwrap().remove(&id) else {
+        let Some(key) = self.lease_dir.lock().remove(&id) else {
             return false;
         };
         let mut g = self.shard(&key).lock();
@@ -1456,7 +1478,7 @@ impl KvStore {
     /// id→key mapping is immutable once granted — callers can check
     /// ownership (e.g. the tenant namespace) without a TOCTOU window.
     pub fn lease_key(&self, id: u64) -> Option<KvKey> {
-        self.lease_dir.lock().unwrap().get(&id).cloned()
+        self.lease_dir.lock().get(&id).cloned()
     }
 
     /// Drop expired lease records and reap TTL-expired, unleased,
@@ -1509,7 +1531,7 @@ impl KvStore {
             }
         }
         if !dead_ids.is_empty() {
-            let mut dir = self.lease_dir.lock().unwrap();
+            let mut dir = self.lease_dir.lock();
             for id in dead_ids {
                 dir.remove(&id);
             }
@@ -1547,7 +1569,7 @@ impl KvStore {
                         }
                     };
                     if race_lost {
-                        self.lease_dir.lock().unwrap().remove(&info.id);
+                        self.lease_dir.lock().remove(&info.id);
                     }
                     true
                 }

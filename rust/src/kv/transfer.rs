@@ -24,7 +24,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::anyhow;
@@ -33,6 +33,7 @@ use super::codec;
 use super::store::{KvStore, StreamedGroup, Tier};
 use super::{KvKey, SegmentKv};
 use crate::util::json::Value;
+use crate::util::sync::{LockRank, OrderedCondvar, OrderedMutex};
 use crate::util::threadpool::{ThreadPool, WaitGroup};
 use crate::util::trace;
 use crate::Result;
@@ -348,8 +349,9 @@ impl TransferEngine {
             }
         }
 
-        let results: Arc<Mutex<Vec<Option<(Arc<SegmentKv>, Tier)>>>> =
-            Arc::new(Mutex::new((0..keys.len()).map(|_| None).collect()));
+        let results: Arc<OrderedMutex<Vec<Option<(Arc<SegmentKv>, Tier)>>>> = Arc::new(
+            OrderedMutex::new(LockRank::Transfer, (0..keys.len()).map(|_| None).collect()),
+        );
 
         // Load lane (pool threads). With exactly one hit and nothing to
         // compute there is no load/compute overlap to win — run the load
@@ -366,12 +368,12 @@ impl TransferEngine {
             let wg = wg.clone();
             if inline_loads {
                 let got = store.get(&key);
-                results.lock().unwrap()[idx] = got;
+                results.lock()[idx] = got;
                 wg.done();
             } else {
                 self.pool.submit(move || {
                     let got = store.get(&key);
-                    results.lock().unwrap()[idx] = got;
+                    results.lock()[idx] = got;
                     wg.done();
                 });
             }
@@ -416,7 +418,7 @@ impl TransferEngine {
         // Assemble in request order.
         let mut out: Vec<Option<Arc<SegmentKv>>> = (0..keys.len()).map(|_| None).collect();
         {
-            let mut g = results.lock().unwrap();
+            let mut g = results.lock();
             for (i, slot) in g.iter_mut().enumerate() {
                 if let Some((kv, tier)) = slot.take() {
                     match tier {
@@ -497,13 +499,17 @@ impl TransferEngine {
         }
 
         let shared = Arc::new(StreamShared {
-            state: Mutex::new(StreamState {
-                events: VecDeque::new(),
-                loaded: (0..unique.len()).map(|_| None).collect(),
-                pending: unique.len(),
-                load_finished: None,
-            }),
-            cv: Condvar::new(),
+            state: OrderedMutex::with_index(
+                LockRank::Transfer,
+                1,
+                StreamState {
+                    events: VecDeque::new(),
+                    loaded: (0..unique.len()).map(|_| None).collect(),
+                    pending: unique.len(),
+                    load_finished: None,
+                },
+            ),
+            cv: OrderedCondvar::new(),
         });
         let t_start = Instant::now();
         let inline = !self.parallel;
@@ -600,8 +606,11 @@ struct StreamState {
 }
 
 struct StreamShared {
-    state: Mutex<StreamState>,
-    cv: Condvar,
+    /// `Transfer#1` — held only for queue/slot bookkeeping; never while
+    /// a store shard (`StoreShard > Transfer`) guard is live, which is
+    /// why workers admit into the store *before* publishing events.
+    state: OrderedMutex<StreamState>,
+    cv: OrderedCondvar,
 }
 
 /// One key's streamed load lane: local tiers group by group, then the
@@ -637,7 +646,7 @@ fn stream_one(
                 ],
             );
         }
-        let mut st = shared.state.lock().unwrap();
+        let mut st = shared.state.lock();
         st.events.push_back(StreamEvent { slot, group, bytes, decode_us, source });
         shared.cv.notify_all();
     };
@@ -689,7 +698,7 @@ fn stream_one(
         }
     }
 
-    let mut st = shared.state.lock().unwrap();
+    let mut st = shared.state.lock();
     st.loaded[slot] = loaded;
     st.pending -= 1;
     if st.pending == 0 {
@@ -731,7 +740,7 @@ impl FetchStream {
     /// time the consumer could not hide behind useful work.
     pub fn next_group(&mut self) -> Option<StreamEvent> {
         let t0 = Instant::now();
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.state.lock();
         loop {
             if let Some(ev) = st.events.pop_front() {
                 self.stall_us += t0.elapsed().as_micros() as u64;
@@ -741,7 +750,7 @@ impl FetchStream {
                 self.stall_us += t0.elapsed().as_micros() as u64;
                 return None;
             }
-            st = self.shared.cv.wait(st).unwrap();
+            st = self.shared.cv.wait(st);
         }
     }
 
@@ -757,7 +766,7 @@ impl FetchStream {
         while self.next_group().is_some() {}
 
         let (loaded, load_finished) = {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.state.lock();
             (std::mem::take(&mut st.loaded), st.load_finished)
         };
         let mut report = TransferReport {
@@ -818,6 +827,7 @@ mod tests {
     use crate::kv::store::StoreConfig;
     use crate::kv::test_entry;
     use crate::mm::ImageId;
+    use std::sync::Mutex;
     use std::time::Duration;
 
     fn setup(bandwidth: Option<f64>) -> (Arc<KvStore>, TransferEngine) {

@@ -38,7 +38,7 @@
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::api::{
@@ -50,6 +50,7 @@ use crate::coordinator::session::SessionStore;
 use crate::coordinator::Engine;
 use crate::mm::{ImageId, Namespace, Prompt, UserId};
 use crate::util::json::Value;
+use crate::util::sync::{LockRank, OrderedMutex};
 use crate::util::trace::TraceId;
 use crate::Result;
 
@@ -242,7 +243,7 @@ fn upload_job_value(j: &UploadJob) -> Value {
 /// The async precompute lane: a job table (shared with pool threads that
 /// finish the store write) plus the engine-thread encode queue.
 struct UploadLane {
-    jobs: Arc<Mutex<BTreeMap<u64, UploadJob>>>,
+    jobs: Arc<OrderedMutex<BTreeMap<u64, UploadJob>>>,
     queue: VecDeque<u64>,
     /// Jobs that reached a terminal state (done or failed).
     finished: Arc<AtomicU64>,
@@ -253,7 +254,7 @@ struct UploadLane {
 impl UploadLane {
     fn new(gate: Arc<Gate>) -> UploadLane {
         UploadLane {
-            jobs: Arc::new(Mutex::new(BTreeMap::new())),
+            jobs: Arc::new(OrderedMutex::new(LockRank::Pipeline, BTreeMap::new())),
             queue: VecDeque::new(),
             finished: Arc::new(AtomicU64::new(0)),
             gate,
@@ -279,7 +280,7 @@ impl UploadLane {
     ) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.jobs.lock().unwrap().insert(
+        self.jobs.lock().insert(
             id,
             UploadJob {
                 id,
@@ -301,16 +302,16 @@ impl UploadLane {
     /// (job ids are sequential and guessable; without the namespace check
     /// any caller could watch another tenant's handles go by).
     fn job_value(&self, id: u64, ns: &Namespace) -> Option<Value> {
-        self.jobs.lock().unwrap().get(&id).filter(|j| j.ns == *ns).map(upload_job_value)
+        self.jobs.lock().get(&id).filter(|j| j.ns == *ns).map(upload_job_value)
     }
 
     /// The caller's namespace's job records.
     fn list_values(&self, ns: &Namespace) -> Vec<Value> {
-        self.jobs.lock().unwrap().values().filter(|j| j.ns == *ns).map(upload_job_value).collect()
+        self.jobs.lock().values().filter(|j| j.ns == *ns).map(upload_job_value).collect()
     }
 
     fn fail(&self, id: u64, msg: String) {
-        if let Some(j) = self.jobs.lock().unwrap().get_mut(&id) {
+        if let Some(j) = self.jobs.lock().get_mut(&id) {
             j.state = UploadState::Failed;
             j.error = Some(msg);
         }
@@ -323,7 +324,7 @@ impl UploadLane {
     fn step(&mut self, engine: &Engine) {
         let Some(jid) = self.queue.pop_front() else { return };
         let (op, ns, user, handle, description) = {
-            let mut g = self.jobs.lock().unwrap();
+            let mut g = self.jobs.lock();
             let Some(j) = g.get_mut(&jid) else { return };
             j.state = UploadState::Encoding;
             (j.op, j.ns.clone(), j.user, j.handle.clone(), j.description.clone())
@@ -347,7 +348,7 @@ impl UploadLane {
                 .add(crate::cache::Reference::image(image, description).in_ns(&ns)),
         }
         {
-            let mut g = self.jobs.lock().unwrap();
+            let mut g = self.jobs.lock();
             if let Some(j) = g.get_mut(&jid) {
                 j.state = UploadState::Storing;
                 j.image = Some(image.0);
@@ -363,7 +364,7 @@ impl UploadLane {
         engine.pool().submit(move || {
             let outcome = store.put(kv);
             {
-                let mut g = jobs.lock().unwrap();
+                let mut g = jobs.lock();
                 if let Some(j) = g.get_mut(&jid) {
                     match outcome {
                         Ok(_) => j.state = UploadState::Done,

@@ -12,5 +12,6 @@ pub mod logging;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod threadpool;
 pub mod trace;

@@ -1,0 +1,822 @@
+//! Ranked locks: deadlock prevention by construction, with a single
+//! centralized poison policy.
+//!
+//! # The global lock order (source of truth)
+//!
+//! Every lock in the serving system carries a static [`LockRank`]. A
+//! thread may only acquire a lock whose `(rank, index)` is **strictly
+//! greater** than every lock it already holds:
+//!
+//! ```text
+//! Router < Pipeline < Scheduler < Transfer < StoreShard < LeaseDir
+//!        < Pool < Metrics < Trace
+//! ```
+//!
+//! Same-rank acquisitions must follow ascending *index* order (store
+//! shards by shard index, transport caches `negative(0) < dead_until(1)`,
+//! and so on). Concretely, the ranked locks in the tree today:
+//!
+//! | rank       | index | lock                                            |
+//! |------------|-------|-------------------------------------------------|
+//! | `Router`   | 0     | `cluster::router` worker-occupancy vector       |
+//! | `Pipeline` | 0     | `server::pipeline` upload-job table             |
+//! | `Scheduler`| 0     | `cache::chunk_lib` chunk registry               |
+//! | `Scheduler`| 1     | `cache::static_lib` per-user file registry      |
+//! | `Scheduler`| 2     | `cache::dynamic_lib` reference list             |
+//! | `Scheduler`| 3     | `cache::dynamic_lib` generation counter         |
+//! | `Transfer` | 0     | `kv::transfer` fetch result slots               |
+//! | `Transfer` | 1     | `kv::transfer` stream state (`FetchStream`)     |
+//! | `Transfer` | 2     | `cluster::transport` negative-probe cache       |
+//! | `Transfer` | 3     | `cluster::transport` dead-peer cooldown map     |
+//! | `StoreShard`| i    | `kv::store` shard *i* (ascending by shard index)|
+//! | `LeaseDir` | 0     | `kv::store` lease-id directory                  |
+//! | `Pool`     | 0     | `util::threadpool` job receiver                 |
+//! | `Pool`     | 1     | `util::threadpool` `map()` result slots         |
+//! | `Pool`     | 2     | `util::threadpool` `WaitGroup` counter          |
+//! | `Metrics`  | 0     | `coordinator::metrics` inner aggregates         |
+//! | `Trace`    | 0     | `util::trace` flight-recorder ring              |
+//!
+//! Debug builds keep a thread-local stack of held ranks and panic with
+//! **both** acquisition sites on any out-of-order acquire; release
+//! builds compile the checks away entirely — [`OrderedMutex::lock`] is
+//! a plain `std::sync::Mutex::lock` with poison recovery.
+//!
+//! # Poison policy
+//!
+//! All poison handling lives here, nowhere else:
+//!
+//! * [`OrderedMutex::lock`] — **recover and log**: a poisoned lock is
+//!   taken over (`into_inner` semantics) and a `warn` names the lock.
+//!   This is the policy for metrics, tracing, routing and other
+//!   advisory state, where losing a panicking writer's partial update
+//!   is strictly better than cascading the panic into every reader.
+//! * [`OrderedMutex::lock_checked`] — **propagate typed errors**: a
+//!   poisoned lock surfaces as [`PoisonedLock`], a `std::error::Error`
+//!   the store/transfer `Result` paths can bubble to their callers.
+//!
+//! # Race shaking
+//!
+//! With `MPIC_SYNC_YIELD_SEED` set (or [`set_yield_seed`] called), every
+//! debug-build acquisition may insert `thread::yield_now()` calls driven
+//! by a seeded per-thread RNG. This widens interleaving windows so the
+//! concurrency stress tests explore schedules a quiet machine would
+//! never produce, deterministically per seed.
+
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+#[cfg(debug_assertions)]
+use std::cell::RefCell;
+#[cfg(debug_assertions)]
+use std::panic::Location;
+
+// ---------------------------------------------------------------------------
+// Ranks
+// ---------------------------------------------------------------------------
+
+/// The global acquisition order. See the module doc — that table is the
+/// source of truth; add new ranks only by extending it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum LockRank {
+    Router = 0,
+    Pipeline = 1,
+    Scheduler = 2,
+    Transfer = 3,
+    StoreShard = 4,
+    LeaseDir = 5,
+    Pool = 6,
+    Metrics = 7,
+    Trace = 8,
+}
+
+impl LockRank {
+    pub fn name(self) -> &'static str {
+        match self {
+            LockRank::Router => "Router",
+            LockRank::Pipeline => "Pipeline",
+            LockRank::Scheduler => "Scheduler",
+            LockRank::Transfer => "Transfer",
+            LockRank::StoreShard => "StoreShard",
+            LockRank::LeaseDir => "LeaseDir",
+            LockRank::Pool => "Pool",
+            LockRank::Metrics => "Metrics",
+            LockRank::Trace => "Trace",
+        }
+    }
+}
+
+/// Typed poison error for the `lock_checked` policy: the thread that
+/// held this lock panicked, so its protected state may be mid-update.
+#[derive(Debug, Clone, Copy)]
+pub struct PoisonedLock {
+    pub rank: LockRank,
+    pub index: u32,
+}
+
+impl std::fmt::Display for PoisonedLock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (rank, index) = (self.rank.name(), self.index);
+        write!(f, "lock {rank}#{index} is poisoned (a holder panicked mid-update)")
+    }
+}
+
+impl std::error::Error for PoisonedLock {}
+
+// ---------------------------------------------------------------------------
+// Debug-build rank checking
+// ---------------------------------------------------------------------------
+
+#[cfg(debug_assertions)]
+#[derive(Clone, Copy)]
+struct Held {
+    rank: u8,
+    index: u32,
+    site: &'static Location<'static>,
+}
+
+#[cfg(debug_assertions)]
+thread_local! {
+    /// Locks this thread currently holds, in acquisition order. The
+    /// ordering invariant makes this sorted by `(rank, index)`, so the
+    /// last element is always the maximum held.
+    static HELD: RefCell<Vec<Held>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Check `(rank, index)` against the held stack and push it. Panics with
+/// both acquisition sites on an out-of-order acquire.
+#[cfg(debug_assertions)]
+fn push_held(rank: LockRank, index: u32, site: &'static Location<'static>) {
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if let Some(top) = held.last() {
+            if (rank as u8, index) <= (top.rank, top.index) {
+                // Release the borrow before panicking: the panic may be
+                // caught (tests) and the thread must stay usable.
+                let prev = *top;
+                drop(held);
+                panic!(
+                    "lock-rank violation: acquiring {}#{} at {} while holding {}#{} acquired at {} \
+                     (global order: Router < Pipeline < Scheduler < Transfer < StoreShard < \
+                     LeaseDir < Pool < Metrics < Trace; same rank must ascend by index)",
+                    rank.name(),
+                    index,
+                    site,
+                    rank_name(prev.rank),
+                    prev.index,
+                    prev.site,
+                );
+            }
+        }
+        held.push(Held { rank: rank as u8, index, site });
+    });
+}
+
+#[cfg(debug_assertions)]
+fn rank_name(r: u8) -> &'static str {
+    match r {
+        0 => "Router",
+        1 => "Pipeline",
+        2 => "Scheduler",
+        3 => "Transfer",
+        4 => "StoreShard",
+        5 => "LeaseDir",
+        6 => "Pool",
+        7 => "Metrics",
+        _ => "Trace",
+    }
+}
+
+/// Pop one held entry. Releases are not necessarily LIFO (a caller may
+/// drop an earlier guard while keeping a later one), so remove by
+/// identity, searching from the end.
+#[cfg(debug_assertions)]
+fn pop_held(rank: LockRank, index: u32) {
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if let Some(pos) = held.iter().rposition(|x| x.rank == rank as u8 && x.index == index) {
+            held.remove(pos);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Yield injection (debug builds only)
+// ---------------------------------------------------------------------------
+
+#[cfg(debug_assertions)]
+mod shake {
+    use std::cell::Cell;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// `u64::MAX` = uninitialised (read env on first use); `u64::MAX - 1`
+    /// = explicitly disabled; anything else = the active seed.
+    const UNSET: u64 = u64::MAX;
+    const OFF: u64 = u64::MAX - 1;
+    static SEED: AtomicU64 = AtomicU64::new(UNSET);
+    static THREAD_SALT: AtomicU64 = AtomicU64::new(0x9E37_79B9_7F4A_7C15);
+
+    fn global_seed() -> u64 {
+        let s = SEED.load(Ordering::Relaxed);
+        if s != UNSET {
+            return s;
+        }
+        let from_env = std::env::var("MPIC_SYNC_YIELD_SEED")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .map(|v| if v >= OFF { OFF - 1 } else { v })
+            .unwrap_or(OFF);
+        // First writer wins; racing initialisers agree on the env value.
+        let _ = SEED.compare_exchange(UNSET, from_env, Ordering::Relaxed, Ordering::Relaxed);
+        SEED.load(Ordering::Relaxed)
+    }
+
+    /// Programmatic override of `MPIC_SYNC_YIELD_SEED` — tests share one
+    /// process, so env latching alone can't turn the mode on per-test.
+    pub fn set_yield_seed(seed: Option<u64>) {
+        let v = seed.map(|v| if v >= OFF { OFF - 1 } else { v }).unwrap_or(OFF);
+        SEED.store(v, Ordering::Relaxed);
+    }
+
+    thread_local! {
+        static RNG: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Maybe `yield_now()` before an acquisition: ~1 in 4 acquires yield
+    /// once, ~1 in 16 yield twice. Deterministic per (seed, thread spawn
+    /// order, acquisition sequence).
+    pub fn maybe_yield() {
+        let seed = global_seed();
+        if seed == OFF {
+            return;
+        }
+        RNG.with(|r| {
+            let mut x = r.get();
+            if x == 0 {
+                // Derive a per-thread stream from the global seed and a
+                // process-wide spawn counter (no wall clock: schedules
+                // must replay from the seed alone).
+                let salt = THREAD_SALT.fetch_add(0x2545_F491_4F6C_DD1D, Ordering::Relaxed);
+                x = (seed ^ salt) | 1;
+            }
+            // xorshift64*
+            x ^= x >> 12;
+            x ^= x << 25;
+            x ^= x >> 27;
+            r.set(x);
+            let draw = x.wrapping_mul(0x2545_F491_4F6C_DD1D) >> 60;
+            if draw < 4 {
+                std::thread::yield_now();
+                if draw == 0 {
+                    std::thread::yield_now();
+                }
+            }
+        });
+    }
+}
+
+/// Enable (`Some(seed)`) or disable (`None`) randomized yields on lock
+/// acquisition in debug builds. No-op in release builds.
+#[cfg(debug_assertions)]
+pub fn set_yield_seed(seed: Option<u64>) {
+    shake::set_yield_seed(seed);
+}
+
+/// Release builds: yield injection compiles away.
+#[cfg(not(debug_assertions))]
+pub fn set_yield_seed(_seed: Option<u64>) {}
+
+#[cfg(debug_assertions)]
+#[inline]
+fn on_acquire(rank: LockRank, index: u32, site: &'static Location<'static>) {
+    shake::maybe_yield();
+    push_held(rank, index, site);
+}
+
+// ---------------------------------------------------------------------------
+// OrderedMutex
+// ---------------------------------------------------------------------------
+
+/// A `std::sync::Mutex` carrying a static `(rank, index)` position in the
+/// global lock order. See the module doc for the order and the poison
+/// policy. Zero overhead over `std::sync::Mutex` in release builds.
+pub struct OrderedMutex<T: ?Sized> {
+    rank: LockRank,
+    index: u32,
+    inner: Mutex<T>,
+}
+
+impl<T> OrderedMutex<T> {
+    /// A ranked mutex at index 0 of its rank.
+    pub const fn new(rank: LockRank, value: T) -> OrderedMutex<T> {
+        OrderedMutex { rank, index: 0, inner: Mutex::new(value) }
+    }
+
+    /// A ranked mutex at an explicit same-rank index (store shards use
+    /// their shard index; sibling locks in one module count up from 0).
+    pub const fn with_index(rank: LockRank, index: u32, value: T) -> OrderedMutex<T> {
+        OrderedMutex { rank, index, inner: Mutex::new(value) }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+impl<T: ?Sized> OrderedMutex<T> {
+    /// Acquire, recovering from poison (recover-and-log policy). Panics
+    /// in debug builds on a lock-order violation.
+    #[track_caller]
+    pub fn lock(&self) -> OrderedMutexGuard<'_, T> {
+        #[cfg(debug_assertions)]
+        on_acquire(self.rank, self.index, Location::caller());
+        let guard = self.inner.lock().unwrap_or_else(|p| {
+            log::warn!(
+                "recovering poisoned lock {}#{} (a holder panicked; state may be mid-update)",
+                self.rank.name(),
+                self.index
+            );
+            p.into_inner()
+        });
+        OrderedMutexGuard { lock: self, guard: Some(guard) }
+    }
+
+    /// Acquire, surfacing poison as a typed error (propagate policy for
+    /// the store/transfer `Result` paths).
+    #[track_caller]
+    pub fn lock_checked(&self) -> Result<OrderedMutexGuard<'_, T>, PoisonedLock> {
+        #[cfg(debug_assertions)]
+        on_acquire(self.rank, self.index, Location::caller());
+        match self.inner.lock() {
+            Ok(guard) => Ok(OrderedMutexGuard { lock: self, guard: Some(guard) }),
+            Err(_) => {
+                #[cfg(debug_assertions)]
+                pop_held(self.rank, self.index);
+                Err(PoisonedLock { rank: self.rank, index: self.index })
+            }
+        }
+    }
+
+    /// Non-blocking acquire; `None` when the lock is currently held
+    /// elsewhere. Poison recovers (an uncontended poisoned lock is still
+    /// an acquisition). Rank-checked like `lock` — a try-acquire that
+    /// would deadlock under contention is still an ordering bug.
+    #[track_caller]
+    pub fn try_lock(&self) -> Option<OrderedMutexGuard<'_, T>> {
+        #[cfg(debug_assertions)]
+        on_acquire(self.rank, self.index, Location::caller());
+        match self.inner.try_lock() {
+            Ok(guard) => Some(OrderedMutexGuard { lock: self, guard: Some(guard) }),
+            Err(std::sync::TryLockError::Poisoned(p)) => {
+                log::warn!(
+                    "recovering poisoned lock {}#{} (a holder panicked; state may be mid-update)",
+                    self.rank.name(),
+                    self.index
+                );
+                Some(OrderedMutexGuard { lock: self, guard: Some(p.into_inner()) })
+            }
+            Err(std::sync::TryLockError::WouldBlock) => {
+                #[cfg(debug_assertions)]
+                pop_held(self.rank, self.index);
+                None
+            }
+        }
+    }
+
+    /// Non-blocking acquire with the propagate-poison policy: `None`
+    /// when held elsewhere, `Some(Err)` when poisoned.
+    #[track_caller]
+    pub fn try_lock_checked(&self) -> Option<Result<OrderedMutexGuard<'_, T>, PoisonedLock>> {
+        #[cfg(debug_assertions)]
+        on_acquire(self.rank, self.index, Location::caller());
+        match self.inner.try_lock() {
+            Ok(guard) => Some(Ok(OrderedMutexGuard { lock: self, guard: Some(guard) })),
+            Err(std::sync::TryLockError::Poisoned(_)) => {
+                #[cfg(debug_assertions)]
+                pop_held(self.rank, self.index);
+                Some(Err(PoisonedLock { rank: self.rank, index: self.index }))
+            }
+            Err(std::sync::TryLockError::WouldBlock) => {
+                #[cfg(debug_assertions)]
+                pop_held(self.rank, self.index);
+                None
+            }
+        }
+    }
+}
+
+impl<T: ?Sized + std::fmt::Debug> std::fmt::Debug for OrderedMutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OrderedMutex")
+            .field("rank", &self.rank.name())
+            .field("index", &self.index)
+            .field("inner", &self.inner)
+            .finish()
+    }
+}
+
+/// Guard for [`OrderedMutex`]; pops the thread-local held stack on drop
+/// in debug builds.
+pub struct OrderedMutexGuard<'a, T: ?Sized> {
+    lock: &'a OrderedMutex<T>,
+    /// `Some` except transiently inside a condvar wait.
+    guard: Option<MutexGuard<'a, T>>,
+}
+
+impl<T: ?Sized> std::ops::Deref for OrderedMutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.guard.as_ref().expect("guard present outside condvar wait")
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for OrderedMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.guard.as_mut().expect("guard present outside condvar wait")
+    }
+}
+
+impl<T: ?Sized> Drop for OrderedMutexGuard<'_, T> {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        pop_held(self.lock.rank, self.lock.index);
+        #[cfg(not(debug_assertions))]
+        let _ = &self.lock;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// OrderedCondvar
+// ---------------------------------------------------------------------------
+
+/// A condvar usable with [`OrderedMutexGuard`]. While a thread waits,
+/// the lock is released by the OS but the held-stack entry is retained —
+/// the thread is blocked, so it cannot acquire anything else, and on
+/// wakeup it holds the lock again with the same ordering position.
+pub struct OrderedCondvar {
+    cv: Condvar,
+}
+
+impl Default for OrderedCondvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl OrderedCondvar {
+    pub const fn new() -> OrderedCondvar {
+        OrderedCondvar { cv: Condvar::new() }
+    }
+
+    pub fn wait<'a, T: ?Sized>(
+        &self,
+        mut guard: OrderedMutexGuard<'a, T>,
+    ) -> OrderedMutexGuard<'a, T> {
+        let lock = guard.lock;
+        let inner = guard.guard.take().expect("wait on a live guard");
+        let inner = self.cv.wait(inner).unwrap_or_else(|p| {
+            log::warn!(
+                "recovering poisoned lock {}#{} on condvar wakeup",
+                lock.rank.name(),
+                lock.index
+            );
+            p.into_inner()
+        });
+        guard.guard = Some(inner);
+        guard
+    }
+
+    pub fn wait_timeout<'a, T: ?Sized>(
+        &self,
+        mut guard: OrderedMutexGuard<'a, T>,
+        dur: std::time::Duration,
+    ) -> (OrderedMutexGuard<'a, T>, bool) {
+        let lock = guard.lock;
+        let inner = guard.guard.take().expect("wait on a live guard");
+        let (inner, timeout) = match self.cv.wait_timeout(inner, dur) {
+            Ok((g, t)) => (g, t.timed_out()),
+            Err(p) => {
+                log::warn!(
+                    "recovering poisoned lock {}#{} on condvar wakeup",
+                    lock.rank.name(),
+                    lock.index
+                );
+                let (g, t) = p.into_inner();
+                (g, t.timed_out())
+            }
+        };
+        guard.guard = Some(inner);
+        (guard, timeout)
+    }
+
+    pub fn notify_one(&self) {
+        self.cv.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// OrderedRwLock
+// ---------------------------------------------------------------------------
+
+/// A `std::sync::RwLock` in the same global order. Both read and write
+/// acquisitions are rank-checked (a reader blocking behind a writer
+/// deadlocks exactly like a mutex would).
+pub struct OrderedRwLock<T: ?Sized> {
+    rank: LockRank,
+    index: u32,
+    inner: RwLock<T>,
+}
+
+impl<T> OrderedRwLock<T> {
+    pub const fn new(rank: LockRank, value: T) -> OrderedRwLock<T> {
+        OrderedRwLock { rank, index: 0, inner: RwLock::new(value) }
+    }
+
+    pub const fn with_index(rank: LockRank, index: u32, value: T) -> OrderedRwLock<T> {
+        OrderedRwLock { rank, index, inner: RwLock::new(value) }
+    }
+}
+
+impl<T: ?Sized> OrderedRwLock<T> {
+    #[track_caller]
+    pub fn read(&self) -> OrderedReadGuard<'_, T> {
+        #[cfg(debug_assertions)]
+        on_acquire(self.rank, self.index, Location::caller());
+        let guard = self.inner.read().unwrap_or_else(|p| {
+            log::warn!("recovering poisoned rwlock {}#{}", self.rank.name(), self.index);
+            p.into_inner()
+        });
+        OrderedReadGuard { lock: self, guard }
+    }
+
+    #[track_caller]
+    pub fn write(&self) -> OrderedWriteGuard<'_, T> {
+        #[cfg(debug_assertions)]
+        on_acquire(self.rank, self.index, Location::caller());
+        let guard = self.inner.write().unwrap_or_else(|p| {
+            log::warn!("recovering poisoned rwlock {}#{}", self.rank.name(), self.index);
+            p.into_inner()
+        });
+        OrderedWriteGuard { lock: self, guard }
+    }
+}
+
+pub struct OrderedReadGuard<'a, T: ?Sized> {
+    lock: &'a OrderedRwLock<T>,
+    guard: RwLockReadGuard<'a, T>,
+}
+
+impl<T: ?Sized> std::ops::Deref for OrderedReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T: ?Sized> Drop for OrderedReadGuard<'_, T> {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        pop_held(self.lock.rank, self.lock.index);
+        #[cfg(not(debug_assertions))]
+        let _ = &self.lock;
+    }
+}
+
+pub struct OrderedWriteGuard<'a, T: ?Sized> {
+    lock: &'a OrderedRwLock<T>,
+    guard: RwLockWriteGuard<'a, T>,
+}
+
+impl<T: ?Sized> std::ops::Deref for OrderedWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for OrderedWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+impl<T: ?Sized> Drop for OrderedWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        pop_held(self.lock.rank, self.lock.index);
+        #[cfg(not(debug_assertions))]
+        let _ = &self.lock;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn ascending_acquisition_is_legal() {
+        let a = OrderedMutex::new(LockRank::Router, 1u32);
+        let b = OrderedMutex::new(LockRank::Metrics, 2u32);
+        let ga = a.lock();
+        let gb = b.lock();
+        assert_eq!(*ga + *gb, 3);
+    }
+
+    #[test]
+    fn same_rank_ascending_index_is_legal() {
+        let s0 = OrderedMutex::with_index(LockRank::StoreShard, 0, ());
+        let s3 = OrderedMutex::with_index(LockRank::StoreShard, 3, ());
+        let _g0 = s0.lock();
+        let _g3 = s3.lock();
+    }
+
+    #[test]
+    fn non_lifo_release_keeps_the_stack_consistent() {
+        let a = OrderedMutex::new(LockRank::Pipeline, ());
+        let b = OrderedMutex::new(LockRank::Pool, ());
+        let c = OrderedMutex::new(LockRank::Trace, ());
+        let ga = a.lock();
+        let gb = b.lock();
+        drop(ga); // release the *earlier* lock first
+        let _gc = c.lock(); // still legal: max held is Pool
+        drop(gb);
+        // And Pipeline is re-acquirable now that Pool/Trace context is
+        // irrelevant to it being the new max.
+        drop(_gc);
+        let _ga2 = a.lock();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn out_of_order_acquire_panics_with_both_sites() {
+        let err = std::thread::spawn(|| {
+            let hi = OrderedMutex::new(LockRank::Metrics, ());
+            let lo = OrderedMutex::new(LockRank::StoreShard, ());
+            let _g = hi.lock();
+            let _g2 = lo.lock(); // violation: StoreShard after Metrics
+        })
+        .join()
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().expect("panic payload");
+        assert!(msg.contains("lock-rank violation"), "got: {msg}");
+        assert!(msg.contains("StoreShard#0"), "names the acquiring lock: {msg}");
+        assert!(msg.contains("Metrics#0"), "names the held lock: {msg}");
+        // Both acquisition sites are file:line in this file.
+        assert_eq!(msg.matches("sync.rs").count(), 2, "both sites cited: {msg}");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn same_rank_descending_index_panics() {
+        let err = std::thread::spawn(|| {
+            let s1 = OrderedMutex::with_index(LockRank::StoreShard, 1, ());
+            let s0 = OrderedMutex::with_index(LockRank::StoreShard, 0, ());
+            let _g1 = s1.lock();
+            let _g0 = s0.lock();
+        })
+        .join()
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().expect("panic payload");
+        assert!(msg.contains("lock-rank violation"), "got: {msg}");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn violation_panic_leaves_the_thread_usable() {
+        // A caught rank panic must not wedge the held stack: the lock we
+        // failed to acquire was never pushed, and the one we held drops.
+        let hi = OrderedMutex::new(LockRank::Trace, ());
+        let lo = OrderedMutex::new(LockRank::Router, ());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = hi.lock();
+            let _g2 = lo.lock();
+        }));
+        assert!(r.is_err());
+        // Fresh ascending acquisitions still work on this thread.
+        let _a = lo.lock();
+        let _b = hi.lock();
+    }
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(OrderedMutex::new(LockRank::Metrics, 7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison the lock");
+        })
+        .join();
+        // Recover-and-log policy: the value is still reachable.
+        assert_eq!(*m.lock(), 7);
+    }
+
+    #[test]
+    fn lock_checked_propagates_poison_as_typed_error() {
+        let m = Arc::new(OrderedMutex::with_index(LockRank::StoreShard, 2, 0u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison the lock");
+        })
+        .join();
+        let err = m.lock_checked().expect_err("poison must surface");
+        assert_eq!(err.rank, LockRank::StoreShard);
+        assert_eq!(err.index, 2);
+        let msg = format!("{err}");
+        assert!(msg.contains("StoreShard#2"), "typed error names the lock: {msg}");
+        // An anyhow context chain accepts it (the store's error idiom).
+        let any: anyhow::Error = err.into();
+        assert!(format!("{any:#}").contains("poisoned"));
+    }
+
+    #[test]
+    fn try_lock_contended_returns_none_and_pops_stack() {
+        let m = Arc::new(OrderedMutex::new(LockRank::StoreShard, ()));
+        let g = m.lock();
+        let m2 = Arc::clone(&m);
+        std::thread::spawn(move || {
+            assert!(m2.try_lock().is_none());
+            // The failed try above must not leave a phantom held entry:
+            // acquiring a *lower* rank now must still be legal.
+            let lo = OrderedMutex::new(LockRank::Router, ());
+            let _g = lo.lock();
+        })
+        .join()
+        .unwrap();
+        drop(g);
+        assert!(m.try_lock().is_some());
+    }
+
+    #[test]
+    fn condvar_roundtrip_preserves_ordering_state() {
+        let m = Arc::new(OrderedMutex::new(LockRank::Pool, false));
+        let cv = Arc::new(OrderedCondvar::new());
+        let (m2, cv2) = (Arc::clone(&m), Arc::clone(&cv));
+        let t = std::thread::spawn(move || {
+            let mut g = m2.lock();
+            while !*g {
+                g = cv2.wait(g);
+            }
+            // Post-wait the guard still participates in ordering: a
+            // higher-rank acquire is legal.
+            let hi = OrderedMutex::new(LockRank::Trace, ());
+            let _g2 = hi.lock();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        *m.lock() = true;
+        cv.notify_all();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn condvar_wait_timeout_reports_timeout() {
+        let m = OrderedMutex::new(LockRank::Pool, ());
+        let cv = OrderedCondvar::new();
+        let g = m.lock();
+        let (_g, timed_out) = cv.wait_timeout(g, std::time::Duration::from_millis(5));
+        assert!(timed_out);
+    }
+
+    #[test]
+    fn rwlock_read_write_roundtrip() {
+        let l = OrderedRwLock::new(LockRank::Scheduler, 1u32);
+        {
+            let mut w = l.write();
+            *w += 1;
+        }
+        assert_eq!(*l.read(), 2);
+        // Ascending into a mutex while holding a read guard is legal.
+        let m = OrderedMutex::new(LockRank::Trace, ());
+        let _r = l.read();
+        let _g = m.lock();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn yield_injection_is_harmless_and_deterministic_per_seed() {
+        set_yield_seed(Some(42));
+        let m = Arc::new(OrderedMutex::new(LockRank::StoreShard, 0u64));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = Arc::clone(&m);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..500 {
+                    *m.lock() += 1;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        set_yield_seed(None);
+        assert_eq!(*m.lock(), 2000);
+    }
+}

@@ -8,8 +8,10 @@
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread;
+
+use crate::util::sync::{LockRank, OrderedCondvar, OrderedMutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -31,14 +33,14 @@ impl ThreadPool {
         let name_prefix =
             format!("mpic-worker-{}-", NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed));
         let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let rx = Arc::new(OrderedMutex::new(LockRank::Pool, rx));
         let workers = (0..n)
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 thread::Builder::new()
                     .name(format!("{name_prefix}{i}"))
                     .spawn(move || loop {
-                        let job = { rx.lock().unwrap().recv() };
+                        let job = { rx.lock().recv() };
                         match job {
                             Ok(job) => {
                                 // Worker survives panicking jobs; the panic
@@ -96,8 +98,8 @@ impl ThreadPool {
     {
         let n = items.len();
         let f = Arc::new(f);
-        let results: Arc<Mutex<Vec<Option<R>>>> =
-            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let results: Arc<OrderedMutex<Vec<Option<R>>>> =
+            Arc::new(OrderedMutex::with_index(LockRank::Pool, 1, (0..n).map(|_| None).collect()));
         let wg = WaitGroup::new(n);
         for (i, item) in items.into_iter().enumerate() {
             let f = Arc::clone(&f);
@@ -105,7 +107,7 @@ impl ThreadPool {
             let wg = wg.clone();
             self.submit(move || {
                 let r = f(item);
-                results.lock().unwrap()[i] = Some(r);
+                results.lock()[i] = Some(r);
                 wg.done();
             });
         }
@@ -113,7 +115,7 @@ impl ThreadPool {
         // Workers may still hold their Arc clones for an instant after
         // signalling the wait group; take the results under the lock
         // instead of unwrapping the Arc.
-        let mut guard = results.lock().unwrap();
+        let mut guard = results.lock();
         guard
             .iter_mut()
             .map(|r| r.take().expect("job panicked before producing a result"))
@@ -133,17 +135,22 @@ impl Drop for ThreadPool {
 /// Counting completion latch.
 #[derive(Clone)]
 pub struct WaitGroup {
-    inner: Arc<(Mutex<usize>, Condvar)>,
+    inner: Arc<(OrderedMutex<usize>, OrderedCondvar)>,
 }
 
 impl WaitGroup {
     pub fn new(count: usize) -> Self {
-        WaitGroup { inner: Arc::new((Mutex::new(count), Condvar::new())) }
+        WaitGroup {
+            inner: Arc::new((
+                OrderedMutex::with_index(LockRank::Pool, 2, count),
+                OrderedCondvar::new(),
+            )),
+        }
     }
 
     pub fn done(&self) {
         let (lock, cv) = &*self.inner;
-        let mut n = lock.lock().unwrap();
+        let mut n = lock.lock();
         *n = n.saturating_sub(1);
         if *n == 0 {
             cv.notify_all();
@@ -152,9 +159,9 @@ impl WaitGroup {
 
     pub fn wait(&self) {
         let (lock, cv) = &*self.inner;
-        let mut n = lock.lock().unwrap();
+        let mut n = lock.lock();
         while *n > 0 {
-            n = cv.wait(n).unwrap();
+            n = cv.wait(n);
         }
     }
 }

@@ -34,7 +34,9 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+use crate::util::sync::{LockRank, OrderedMutex};
 use std::time::{Duration, Instant};
 
 use crate::util::json::Value;
@@ -166,7 +168,7 @@ struct Inner {
 /// the serving pipeline, the scheduler, and (through the thread-local
 /// [`Scope`]) the transfer/transport layers.
 pub struct Recorder {
-    inner: Mutex<Inner>,
+    inner: OrderedMutex<Inner>,
 }
 
 impl Default for Recorder {
@@ -179,7 +181,7 @@ impl Recorder {
     /// `keep`: flight-recorder depth (completed traces retained).
     pub fn new(keep: usize) -> Recorder {
         Recorder {
-            inner: Mutex::new(Inner {
+            inner: OrderedMutex::new(LockRank::Trace, Inner {
                 active: HashMap::new(),
                 done: VecDeque::new(),
                 keep: keep.max(1),
@@ -191,18 +193,18 @@ impl Recorder {
     /// Traces finishing slower than this are logged at `warn` with their
     /// span breakdown (`--slow-ms`); `None` disables the slow log.
     pub fn set_slow_threshold(&self, d: Option<Duration>) {
-        self.inner.lock().unwrap().slow = d;
+        self.inner.lock().slow = d;
     }
 
     pub fn slow_threshold(&self) -> Option<Duration> {
-        self.inner.lock().unwrap().slow
+        self.inner.lock().slow
     }
 
     /// Open a trace. `start` anchors span offsets (pass the enqueue time so
     /// the admission-wait span starts at offset 0). Re-opening an already
     /// active id is a no-op, so a retried begin cannot clobber spans.
     pub fn begin_at(&self, id: TraceId, op: &str, start: Instant) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         g.active.entry(id.0).or_insert_with(|| Trace {
             id,
             op: op.to_string(),
@@ -223,7 +225,7 @@ impl Recorder {
         end: Instant,
         attrs: &[(&str, Value)],
     ) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         let Some(t) = g.active.get_mut(&id.0) else { return };
         if t.spans.len() >= MAX_SPANS {
             t.dropped_spans += 1;
@@ -252,7 +254,7 @@ impl Recorder {
         attrs: &[(&str, Value)],
     ) {
         {
-            let g = self.inner.lock().unwrap();
+            let g = self.inner.lock();
             if g.active.contains_key(&id.0) {
                 drop(g);
                 self.record(id, op, start, end, attrs);
@@ -269,7 +271,7 @@ impl Recorder {
     /// the threshold. Returns `(total_seconds, was_slow)`, or `None` when
     /// the id was not active.
     pub fn finish(&self, id: TraceId) -> Option<(f64, bool)> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         let mut t = g.active.remove(&id.0)?;
         let total = t.started.elapsed();
         t.total_us = Some(total.as_micros() as u64);
@@ -302,7 +304,7 @@ impl Recorder {
 
     /// Completed traces, newest first.
     pub fn recent(&self) -> Vec<TraceSummary> {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock();
         g.done
             .iter()
             .rev()
@@ -318,7 +320,7 @@ impl Recorder {
     /// One trace as structured JSON (completed traces first, then active
     /// ones, which render with `"done": false`).
     pub fn get(&self, id: TraceId) -> Option<Value> {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock();
         g.done
             .iter()
             .rev()

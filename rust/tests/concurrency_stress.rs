@@ -1,0 +1,240 @@
+//! Deterministic concurrency stress over the ranked-lock layer.
+//!
+//! Every test turns on the debug-build yield injection of
+//! `mpic::util::sync` (the in-process equivalent of
+//! `MPIC_SYNC_YIELD_SEED`), so each lock acquisition consults a seeded
+//! per-thread RNG and occasionally yields — perturbing interleavings
+//! into the schedules that historically broke: lease/sweep vs
+//! admit/evict across store shards, streamed group scatter racing
+//! admits, and dead-peer transport bookkeeping racing metrics
+//! snapshots. Debug builds also run the lock-rank checker on every
+//! acquisition, so an ordering violation reached by these schedules
+//! panics with both acquisition sites instead of deadlocking in the
+//! field. The schedule family is a pure function of the seeds set
+//! below (plus thread spawn order), so failures replay.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use mpic::cluster::{PeerConfig, PeerTransport};
+use mpic::coordinator::metrics::Metrics;
+use mpic::kv::store::{KvStore, StoreConfig};
+use mpic::kv::{KvKey, KvShape, SegmentKv, TransferEngine, Transport};
+use mpic::mm::ImageId;
+use mpic::util::rng::Rng;
+use mpic::util::sync::set_yield_seed;
+use mpic::util::threadpool::ThreadPool;
+
+const SHAPE: KvShape = KvShape { layers: 2, tokens: 4, heads: 2, d_head: 4, d_model: 8 };
+
+fn entry(model: &str, image: u64, seed: u64) -> SegmentKv {
+    let mut rng = Rng::new(seed);
+    SegmentKv {
+        key: KvKey::image(model, ImageId(image)),
+        shape: SHAPE,
+        emb: (0..SHAPE.emb_elems()).map(|_| rng.normal() as f32).collect(),
+        k: (0..SHAPE.kv_elems()).map(|_| rng.normal() as f32).collect(),
+        v: (0..SHAPE.kv_elems()).map(|_| rng.normal() as f32).collect(),
+    }
+}
+
+fn stress_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("mpic-stress-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The encoded container of every entry, grabbed up front so admitter
+/// threads replay peer-style admits without touching the disk tier.
+fn containers(store: &KvStore, entries: &[SegmentKv]) -> Vec<(KvKey, Vec<u8>)> {
+    entries
+        .iter()
+        .map(|e| (e.key.clone(), store.container_bytes(&e.key).expect("put is write-through")))
+        .collect()
+}
+
+/// Satellite: the lease-sweep path (`LeaseDir` rank) interleaved with
+/// shard-side admits, evictions and re-puts on every shard at once.
+/// Leases expire mid-test (2ms TTL against a 200ms entry TTL), so the
+/// sweeper exercises both lease reaping and disk reaping while the
+/// other threads churn residency.
+#[test]
+fn store_survives_lease_sweep_admit_evict_races() {
+    set_yield_seed(Some(0xC0FF_EE00));
+    let store = KvStore::new(StoreConfig {
+        disk_dir: stress_dir("races"),
+        ttl: Duration::from_millis(200),
+        shards: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    let entries: Vec<SegmentKv> = (0..24).map(|i| entry("stress-races", i, 1000 + i)).collect();
+    for e in &entries {
+        store.put(e.clone()).unwrap();
+    }
+    let containers = containers(&store, &entries);
+    let n = entries.len();
+
+    std::thread::scope(|s| {
+        for t in 0..2 {
+            let store = &store;
+            let entries = &entries;
+            s.spawn(move || {
+                for i in 0..150 {
+                    let key = &entries[(t * 7 + i) % n].key;
+                    if let Some(lease) = store.lease(key, Some(Duration::from_millis(2))) {
+                        if i % 3 == 0 {
+                            store.lease_release(lease.id);
+                        }
+                    }
+                }
+            });
+        }
+        let store_ref = &store;
+        s.spawn(move || {
+            for _ in 0..120 {
+                store_ref.sweep();
+            }
+        });
+        for t in 0..2 {
+            let store = &store;
+            let containers = &containers;
+            s.spawn(move || {
+                for i in 0..100 {
+                    let (key, bytes) = &containers[(t * 11 + i) % n];
+                    store.admit_container_groups(key, bytes.clone()).unwrap();
+                }
+            });
+        }
+        for t in 0..2 {
+            let store = &store;
+            let entries = &entries;
+            s.spawn(move || {
+                for i in 0..120 {
+                    let e = &entries[(t * 5 + i) % n];
+                    store.evict(&e.key);
+                    if i % 4 == 0 {
+                        store.put(e.clone()).unwrap();
+                    }
+                }
+            });
+        }
+    });
+
+    store.sweep();
+    store.check_invariants().unwrap();
+}
+
+/// Satellite regression: streamed fetch (`Transfer#1` queue + scatter
+/// workers admitting into `StoreShard`) racing an admit/evict churn on
+/// the same keys. The tiny RAM capacities force the disk path, so the
+/// stream workers really do admit into shards while the consumer holds
+/// the stream-state lock between groups. Every round must still
+/// assemble all entries (misses fall back to compute) and leave the
+/// store consistent.
+#[test]
+fn streamed_scatter_races_with_admit_and_evict() {
+    set_yield_seed(Some(0xBEEF_BEEF));
+    let store = Arc::new(
+        KvStore::new(StoreConfig {
+            device_capacity: 1,
+            host_capacity: 1,
+            disk_dir: stress_dir("stream"),
+            ttl: Duration::from_secs(60),
+            shards: 4,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let entries: Vec<SegmentKv> = (0..8).map(|i| entry("stress-stream", i, 2000 + i)).collect();
+    for e in &entries {
+        store.put(e.clone()).unwrap();
+    }
+    let keys: Vec<KvKey> = entries.iter().map(|e| e.key.clone()).collect();
+    let containers = containers(&store, &entries);
+    let by_key: HashMap<KvKey, SegmentKv> =
+        entries.iter().map(|e| (e.key.clone(), e.clone())).collect();
+    let eng = TransferEngine::new(Arc::new(ThreadPool::new(3)));
+
+    std::thread::scope(|s| {
+        let store_ref = &store;
+        let containers_ref = &containers;
+        s.spawn(move || {
+            for i in 0..120 {
+                let (key, bytes) = &containers_ref[i % containers_ref.len()];
+                store_ref.evict(key);
+                store_ref.admit_container_groups(key, bytes.clone()).unwrap();
+            }
+        });
+        for t in 0..2 {
+            let store = &store;
+            let eng = &eng;
+            let keys = &keys;
+            let by_key = &by_key;
+            s.spawn(move || {
+                for round in 0..4 {
+                    let mut stream = eng.fetch_streamed(store, keys);
+                    let mut events = 0usize;
+                    while let Some(ev) = stream.next_group() {
+                        assert!(ev.slot < keys.len(), "slot out of range: {}", ev.slot);
+                        events += 1;
+                    }
+                    let (got, _report) = stream.finish(|k| Ok(by_key[k].clone())).unwrap();
+                    assert_eq!(
+                        got.len(),
+                        keys.len(),
+                        "thread {t} round {round} ({events} stream events)"
+                    );
+                    for (key, e) in keys.iter().zip(&got) {
+                        assert_eq!(&e.key, key);
+                    }
+                }
+            });
+        }
+    });
+
+    store.check_invariants().unwrap();
+}
+
+/// Satellite regression: the transport's dead-peer and negative-probe
+/// bookkeeping (`Transfer#2`/`#3`) hammered against metrics snapshots
+/// (`Metrics` rank, the highest-but-one), sharing one `ClusterCounters`
+/// the way a worker engine wires them. The peer address is a freshly
+/// released port, so every call fails fast and drives the mark-dead /
+/// retry / revive paths.
+#[test]
+fn dead_peer_bookkeeping_races_with_metrics_snapshots() {
+    set_yield_seed(Some(0xD00D_F00D));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let dead_addr = listener.local_addr().unwrap();
+    drop(listener);
+
+    let metrics = Metrics::new();
+    let transport =
+        PeerTransport::new(vec![dead_addr], PeerConfig::default(), Arc::clone(metrics.cluster()));
+
+    std::thread::scope(|s| {
+        for t in 0..3 {
+            let transport = &transport;
+            s.spawn(move || {
+                for i in 0..30 {
+                    let key = KvKey::image("stress-net", ImageId((t * 100 + i) as u64));
+                    let _ = transport.probe(std::slice::from_ref(&key));
+                    let _ = transport.pull(&key);
+                }
+            });
+        }
+        for _ in 0..2 {
+            let metrics = &metrics;
+            s.spawn(move || {
+                for _ in 0..60 {
+                    let _ = metrics.snapshot();
+                }
+            });
+        }
+    });
+
+    let snap = metrics.snapshot();
+    assert!(!snap.encode().is_empty());
+}
