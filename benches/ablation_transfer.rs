@@ -55,6 +55,7 @@ fn main() {
                     ttl: Duration::from_secs(600),
                     disk_bandwidth: Some(bw_mbps * 1e6),
                     shards: 1, // byte-exact LRU: keep the ablation single-shard
+                    ..Default::default()
                 })
                 .unwrap(),
             );

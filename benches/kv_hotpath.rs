@@ -17,6 +17,12 @@
 //!    group and the load/compute overlap efficiency from the transfer
 //!    report. `stream_overlap_efficiency` must come out > 0 — that is
 //!    the paper's pipelining claim in one number.
+//! 5. **Compressed host tier across quant levels** — the same entry set
+//!    against a fixed host budget with `host_quant` at none/int8/int4:
+//!    container bytes per entry, how many entries the budget holds (hit
+//!    rate vs capacity), the host-get promotion cost (TTFT proxy, decode
+//!    + dequant), and the measured round-trip deviation. One row per
+//!    level makes the capacity/quality/latency trade explicit.
 //!
 //! `cargo bench --bench kv_hotpath` — no artifacts needed.
 
@@ -24,7 +30,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use mpic::kv::store::{KvStore, StoreConfig};
-use mpic::kv::{codec, KvKey, KvShape, SegmentKv, TransferEngine};
+use mpic::kv::{codec, KvKey, KvShape, QuantLevel, SegmentKv, Tier, TransferEngine};
 use mpic::mm::ImageId;
 use mpic::util::bench::{emit, emit_summary, time_fn, Row, Table};
 use mpic::util::rng::Rng;
@@ -71,6 +77,11 @@ fn fake_prefill(k: &[f32]) -> f32 {
     acc
 }
 
+/// Quality probe for the compressed-tier arm: mean |a−b| per element.
+fn mean_abs_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).sum::<f64>() / a.len().max(1) as f64
+}
+
 fn fresh_store(shards: usize, tag: &str) -> Arc<KvStore> {
     let dir = std::env::temp_dir().join(format!("mpic-kv-hotpath-{}-{tag}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
@@ -82,6 +93,7 @@ fn fresh_store(shards: usize, tag: &str) -> Arc<KvStore> {
             ttl: Duration::from_secs(600),
             disk_bandwidth: None,
             shards,
+            ..Default::default()
         })
         .unwrap(),
     )
@@ -238,6 +250,7 @@ fn main() {
                 ttl: Duration::from_secs(600),
                 disk_bandwidth: None,
                 shards: 1,
+                ..Default::default()
             })
             .unwrap(),
         )
@@ -307,7 +320,84 @@ fn main() {
     std::hint::black_box(sink);
     summary.push(("stream_overlap_efficiency".into(), best_eff));
 
-    emit("kv_hotpath", &[t_get, t_conc, t_codec, t_stream]);
+    // ------------------------------------------------------------------
+    // 5. Compressed host tier: capacity, promotion cost, deviation
+    // ------------------------------------------------------------------
+    let mut t_quant = Table::new("kv_hotpath: compressed host tier across quant levels");
+    let n_quant = 24u64;
+    let q_originals: Vec<SegmentKv> = (0..n_quant).map(|i| entry(7000 + i, 128)).collect();
+    let (base_container, _) =
+        codec::encode_quant(&q_originals[0], QuantLevel::None, None).unwrap();
+    // A budget that holds ~6 full-precision containers: the quantized
+    // arms show how much further the same bytes stretch.
+    let host_budget = base_container.len() * 6;
+    let mut hit_rates = Vec::new();
+    for (level, label) in
+        [(QuantLevel::None, "none"), (QuantLevel::Int8, "int8"), (QuantLevel::Int4, "int4")]
+    {
+        let dir = std::env::temp_dir()
+            .join(format!("mpic-kv-hotpath-quant-{}-{label}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(
+            KvStore::new(StoreConfig {
+                device_capacity: 1,
+                host_capacity: host_budget,
+                disk_dir: dir,
+                ttl: Duration::from_secs(600),
+                disk_bandwidth: None,
+                shards: 1,
+                host_quant: level,
+                disk_quant: level,
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        for e in &q_originals {
+            store.put(e.clone()).unwrap();
+        }
+        let per_entry = codec::encode_quant(&q_originals[0], level, None).unwrap().0.len();
+        // Side-effect-free residency census: how many entries the fixed
+        // budget holds at this level (the capacity half of the trade).
+        let host_keys: Vec<KvKey> = q_originals
+            .iter()
+            .filter(|e| store.entry_info(&e.key).is_some_and(|i| i.tier == Tier::Host))
+            .map(|e| e.key.clone())
+            .collect();
+        let hit_rate = host_keys.len() as f64 / n_quant as f64;
+        hit_rates.push(hit_rate);
+        // Promotion cost (TTFT proxy): decode + dequant of one host entry.
+        let probe = host_keys.last().cloned().expect("budget must hold >=1 entry");
+        let s_get = time_fn(3, 50, || {
+            std::hint::black_box(store.get(&probe).unwrap());
+        });
+        // Quality: mean abs deviation of the round-tripped K rows.
+        let mut dev = 0f64;
+        for e in &q_originals {
+            if let Some((kv, _)) = store.get(&e.key) {
+                dev += mean_abs_diff(&kv.k, &e.k);
+            }
+        }
+        dev /= n_quant as f64;
+        t_quant.add(
+            Row::new()
+                .str("quant", label)
+                .num("bytes_per_entry", per_entry as f64)
+                .num("host_entries", host_keys.len() as f64)
+                .num("hit_rate_at_budget", hit_rate)
+                .num("get_host_ms", s_get.mean() * 1e3)
+                .num("mean_abs_deviation", dev),
+        );
+        summary.push((format!("bytes_per_entry_{label}"), per_entry as f64));
+        summary.push((format!("host_hit_rate_{label}"), hit_rate));
+        summary.push((format!("get_host_{label}_ms"), s_get.mean() * 1e3));
+        summary.push((format!("deviation_{label}"), dev));
+    }
+    // The capacity win in one number: host hit rate at the same byte
+    // budget, int8 relative to full precision (>1 ⇒ compression held
+    // more entries hot).
+    summary.push(("hit_rate_vs_capacity".into(), hit_rates[1] / hit_rates[0].max(1e-9)));
+
+    emit("kv_hotpath", &[t_get, t_conc, t_codec, t_stream, t_quant]);
     let fields: Vec<(&str, f64)> = summary.iter().map(|(k, x)| (k.as_str(), *x)).collect();
     emit_summary("kv_hotpath", &fields);
 
@@ -315,6 +405,8 @@ fn main() {
         "[shape] get_arc must stay flat across sizes (ratio ≈ 1, deep clone grows); \
          sharded concurrent gets must beat the single lock; \
          decode_v2_pool must beat decode_v1 on the multi-MB entry; \
-         stream_first_group must beat whole_load and overlap_efficiency must be > 0"
+         stream_first_group must beat whole_load and overlap_efficiency must be > 0; \
+         bytes_per_entry must shrink none→int8→int4 while hit_rate_at_budget grows \
+         and mean_abs_deviation stays bounded"
     );
 }

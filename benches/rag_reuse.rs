@@ -7,10 +7,16 @@
 //! prefix caching vs full reuse vs MPIC-k on the RAG-like dataset, and
 //! verifies no request recomputes a stored segment.
 //!
+//! A compressed-tier arm repeats the MPIC-k run against a store with
+//! int8 host/disk floors and a device tier too small to hold the
+//! segment set: reuse must stay total (zero recomputes) and the score
+//! shows what the quantized containers cost in answer quality.
+//!
 //! `cargo bench --bench rag_reuse -- --convs 6 --max-new 8 --k 32`
 
-use mpic::coordinator::Policy;
+use mpic::coordinator::{Engine, EngineConfig, Policy};
 use mpic::harness;
+use mpic::kv::{QuantLevel, StoreConfig};
 use mpic::util::bench::{emit, emit_summary, Row, Table};
 use mpic::util::cli::Args;
 use mpic::workload::{generate, rag_chunk_pool, Dataset, WorkloadSpec};
@@ -62,6 +68,38 @@ fn main() {
     let fr = harness::run_policy(&engine, &prompts, Policy::FullReuse, max_new, &refs).unwrap();
     let mp = harness::run_policy(&engine, &prompts, Policy::MpicK(k), max_new, &refs).unwrap();
 
+    // Compressed-tier arm: int8 floors + a device tier too small for the
+    // segment set, so reuse is served from quantized containers.
+    let qengine = {
+        let dir =
+            std::env::temp_dir().join(format!("mpic-bench-rag-reuse-q8-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let e = Engine::new(EngineConfig {
+            model: model.clone(),
+            store: StoreConfig {
+                disk_dir: dir,
+                device_capacity: 1 << 20,
+                host_quant: QuantLevel::Int8,
+                disk_quant: QuantLevel::Int8,
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        e.runtime().warmup_model(&model, true).unwrap();
+        e
+    };
+    harness::precompute_chunks(&qengine, &pool).unwrap();
+    harness::precompute_images(&qengine, &convs).unwrap();
+    let mut q_recomputes = 0usize;
+    for p in &prompts {
+        let r = qengine.infer(p, Policy::MpicK(k), 2).unwrap();
+        q_recomputes += r.transfer.misses;
+    }
+    assert_eq!(q_recomputes, 0, "quantized containers must still serve every reuse");
+    let q8 = harness::run_policy(&qengine, &prompts, Policy::MpicK(k), max_new, &refs).unwrap();
+    let q_stats = qengine.store().stats();
+
     let mut table = Table::new(&format!(
         "RAG reuse: prefix vs full-reuse vs mpic-{k} ({model}, {} convs, shared chunk pool)",
         prompts.len()
@@ -88,6 +126,13 @@ fn main() {
             .num("ttft_saving_pct", saving(mp.ttft_s.mean()))
             .num("score", mp.score.mean()),
     );
+    table.add(
+        Row::new()
+            .str("policy", &format!("{}+int8", q8.policy))
+            .num("ttft_ms", q8.ttft_s.mean() * 1e3)
+            .num("ttft_saving_pct", saving(q8.ttft_s.mean()))
+            .num("score", q8.score.mean()),
+    );
     emit("rag_reuse", &[table]);
     emit_summary(
         "rag_reuse",
@@ -102,6 +147,12 @@ fn main() {
             ("mpic_saving_pct", saving(mp.ttft_s.mean())),
             ("full_reuse_score", fr.score.mean()),
             ("mpic_score", mp.score.mean()),
+            ("mpic_int8_ttft_ms", q8.ttft_s.mean() * 1e3),
+            ("mpic_int8_saving_pct", saving(q8.ttft_s.mean())),
+            ("mpic_int8_score", q8.score.mean()),
+            ("mpic_int8_recomputes", q_recomputes as f64),
+            ("kv_bytes_host_int8", q_stats.bytes_host as f64),
+            ("kv_quant_entries_int8", q_stats.quant_entries_int8 as f64),
         ],
     );
     println!(

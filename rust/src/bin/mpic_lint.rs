@@ -493,6 +493,27 @@ fn check_metrics(sources: &[Source], errors: &mut Vec<String>) {
             }
         }
     }
+    // The compressed-tier counters are a public metrics contract (the
+    // perf-trajectory CI job and dashboards key on these names), so they
+    // are required literally — renaming the StoreStats field would
+    // satisfy the reflection pass above but still break consumers.
+    const COMPRESSION_KEYS: [&str; 7] = [
+        "dequant_us",
+        "bytes_device",
+        "bytes_host",
+        "bytes_disk",
+        "quant_entries_int8",
+        "quant_entries_int4",
+        "merged_entries",
+    ];
+    for key in COMPRESSION_KEYS {
+        if !metrics_raw.contains(&format!("\"{key}\"")) {
+            errors.push(format!(
+                "rust/src/coordinator/metrics.rs: compression counter \"{key}\" missing \
+                 from the metrics snapshot (the compressed-tier metrics contract)",
+            ));
+        }
+    }
 }
 
 /// Public field names of `pub struct <name> { ... }` in a source file.

@@ -18,7 +18,9 @@ use super::metrics::Metrics;
 use super::selection::{plan, Policy};
 use crate::cache::{ChunkLibrary, DynamicLibrary, Reference, StaticLibrary};
 use crate::kv::store::StoreConfig;
-use crate::kv::{EntryInfo, KvKey, KvShape, KvStore, SegmentKv, TransferEngine, TransferReport};
+use crate::kv::{
+    EntryInfo, KvKey, KvShape, KvStore, QuantLevel, SegmentKv, TransferEngine, TransferReport,
+};
 use crate::mm::{
     synth_patches, ChunkId, ChunkRef, ImageId, LinkedLayout, Namespace, Prompt, Segment,
     SegmentId, Tokenizer, UserId,
@@ -57,6 +59,11 @@ pub struct EngineConfig {
     /// requests' segments (partial-entry prefetch); `0` warms whole
     /// entries to the device tier like before.
     pub prefetch_groups: usize,
+    /// Quality budget for compressed tiers: the store's deviation gate
+    /// steps quant levels down until the measured layer-0 round-trip
+    /// deviation fits this bound. Folded into
+    /// `store.max_quant_deviation` at construction (tighter wins).
+    pub max_quant_deviation: f32,
 }
 
 impl Default for EngineConfig {
@@ -73,6 +80,7 @@ impl Default for EngineConfig {
             chunk_quota: crate::cache::chunk_lib::DEFAULT_CHUNK_QUOTA,
             streamed_fetch: true,
             prefetch_groups: 1,
+            max_quant_deviation: f32::INFINITY,
         }
     }
 }
@@ -183,7 +191,10 @@ impl Engine {
         // codec work out across a *different* pool (blocking on its own
         // pool could deadlock — see ThreadPool::is_own_worker).
         let codec_pool = Arc::new(ThreadPool::new(cfg.pool_threads));
-        let store = Arc::new(KvStore::with_pool(cfg.store.clone(), codec_pool)?);
+        let mut store_cfg = cfg.store.clone();
+        store_cfg.max_quant_deviation =
+            store_cfg.max_quant_deviation.min(cfg.max_quant_deviation);
+        let store = Arc::new(KvStore::with_pool(store_cfg, codec_pool)?);
         let static_lib = StaticLibrary::new(Arc::clone(&store), cfg.user_quota);
         let dynamic_lib = DynamicLibrary::new(Arc::clone(&store));
         let chunk_lib = ChunkLibrary::with_quota(Arc::clone(&store), cfg.chunk_quota);
@@ -1114,6 +1125,19 @@ impl Engine {
             Some(key) if key.ns == *ns => self.store.lease_release(id),
             _ => false,
         }
+    }
+
+    /// A tenant's quant ceiling (the `cache.quant` read path).
+    pub fn cache_quant(&self, ns: &Namespace) -> QuantLevel {
+        self.store.ns_quant(ns)
+    }
+
+    /// Set a tenant's quant ceiling (`cache.quant`): the coarsest level
+    /// demotion/write-through requantization may use for this
+    /// namespace's entries. `QuantLevel::None` opts the tenant out of
+    /// lossy tiers entirely; per-tier floors are capped by it.
+    pub fn set_cache_quant(&self, ns: &Namespace, ceiling: QuantLevel) {
+        self.store.set_ns_quant(ns, ceiling);
     }
 
     /// Evict a handle's entry from every tier. Leased entries are refused

@@ -340,6 +340,13 @@ impl Metrics {
             ("leases_acquired", n(g.kv.leases_acquired as f64)),
             ("leases_released", n(g.kv.leases_released as f64)),
             ("lease_expirations", n(g.kv.lease_expirations as f64)),
+            ("dequant_us", n(g.kv.dequant_us as f64)),
+            ("bytes_device", n(g.kv.bytes_device as f64)),
+            ("bytes_host", n(g.kv.bytes_host as f64)),
+            ("bytes_disk", n(g.kv.bytes_disk as f64)),
+            ("quant_entries_int8", n(g.kv.quant_entries_int8 as f64)),
+            ("quant_entries_int4", n(g.kv.quant_entries_int4 as f64)),
+            ("merged_entries", n(g.kv.merged_entries as f64)),
         ]);
         let c = &self.cluster;
         let a = |x: &AtomicU64| Value::num(x.load(Ordering::Relaxed) as f64);
@@ -720,6 +727,13 @@ mod tests {
             prefetch_partial_hits: 5,
             codec_chunks: 40,
             codec_parallel_ops: 5,
+            dequant_us: 1234,
+            bytes_device: 4096,
+            bytes_host: 2048,
+            bytes_disk: 1024,
+            quant_entries_int8: 3,
+            quant_entries_int4: 2,
+            merged_entries: 1,
             ..Default::default()
         };
         m.set_kv_counters(&kv);
@@ -735,6 +749,13 @@ mod tests {
         assert_eq!(k.get("prefetch_partial_hits").unwrap().as_f64().unwrap(), 5.0);
         assert_eq!(k.get("codec_chunks").unwrap().as_f64().unwrap(), 40.0);
         assert_eq!(k.get("codec_parallel_ops").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(k.get("dequant_us").unwrap().as_f64().unwrap(), 1234.0);
+        assert_eq!(k.get("bytes_device").unwrap().as_f64().unwrap(), 4096.0);
+        assert_eq!(k.get("bytes_host").unwrap().as_f64().unwrap(), 2048.0);
+        assert_eq!(k.get("bytes_disk").unwrap().as_f64().unwrap(), 1024.0);
+        assert_eq!(k.get("quant_entries_int8").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(k.get("quant_entries_int4").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(k.get("merged_entries").unwrap().as_f64().unwrap(), 1.0);
     }
 
     #[test]

@@ -1,6 +1,25 @@
 //! KV serialization: the on-disk / in-host-tier wire format.
 //!
-//! ## v5 — layer-group streaming container (current writer)
+//! ## v6 — quantized layer-group container (compressed tiers)
+//!
+//! Identical to v5 except the header carries one quant-level byte per
+//! group (see [`QuantLevel`]) right after the per-group chunk counts:
+//!
+//! ```text
+//! ... v5 header through per-group chunk counts ...
+//! | per-group quant levels: n_groups x u8 (0 none / 1 int8 / 2 int4)
+//! | chunk table | compressed chunks
+//! ```
+//!
+//! A quantized group's subpayload is the per-row encoding from
+//! [`crate::kv::compress`] (4-byte f32 LE row scale + packed int rows)
+//! instead of raw f32s — so host/disk tiers, `container_prefix`, peer
+//! `kv.pull` and `admit_container` all move the *compressed* bytes end
+//! to end, and dequantization happens exactly once, on device
+//! promotion. [`encode_quant`] writes v6; `QuantLevel::None` keeps
+//! emitting v5 so the default path stays byte-identical.
+//!
+//! ## v5 — layer-group streaming container (full-precision writer)
 //!
 //! The payload is partitioned by **layer group** so a reader can decode
 //! group `g` without touching groups `g+1..` — the unit of the streaming
@@ -69,6 +88,7 @@ use anyhow::{anyhow, bail, Context};
 use byteorder::{ByteOrder, LittleEndian, ReadBytesExt, WriteBytesExt};
 use sha2::{Digest, Sha256};
 
+use super::compress::{self, QuantLevel};
 use super::{KvKey, KvShape, SegmentKv};
 use crate::mm::{ChunkId, ImageId, Namespace, SegmentId};
 use crate::util::threadpool::ThreadPool;
@@ -80,6 +100,7 @@ const V2: u32 = 2;
 const V3: u32 = 3;
 const V4: u32 = 4;
 const V5: u32 = 5;
+const V6: u32 = 6;
 
 /// Default layers per group for the v5 writer. Header-declared, so any
 /// value decodes; 2 keeps the 4–6 layer sim models at 2–3 groups so the
@@ -105,6 +126,9 @@ pub struct CodecReport {
     pub chunks: usize,
     /// Whether the chunks actually fanned out across the pool.
     pub pooled: bool,
+    /// Time spent dequantizing compressed (v6) sections, µs; 0 for
+    /// full-precision containers.
+    pub dequant_us: u64,
 }
 
 /// Number of chunks a payload of `payload_len` raw bytes splits into.
@@ -157,6 +181,52 @@ fn group_payload_bytes(shape: &KvShape, with_emb: bool, l0: usize, l1: usize) ->
     let emb = if with_emb { shape.tokens.checked_mul(shape.d_model) } else { Some(0) };
     match (kv, emb) {
         (Some(kv), Some(emb)) => match kv.checked_add(emb).and_then(|n| n.checked_mul(4)) {
+            Some(n) if n <= MAX_PAYLOAD => Ok(n),
+            _ => bail!("implausible KV shape (group {l0}..{l1} payload overflows)"),
+        },
+        _ => bail!("implausible KV shape (group {l0}..{l1} payload overflows)"),
+    }
+}
+
+/// Encoded bytes of one section (`n` f32 elements as rows of `row`) at a
+/// quant level, with the same checked-arithmetic posture: header dims are
+/// attacker-controlled, so overflow is a clean error.
+fn quant_section_bytes(n: Option<usize>, row: usize, quant: QuantLevel) -> Option<usize> {
+    let n = n?;
+    if n == 0 {
+        return Some(0);
+    }
+    if row == 0 || n % row != 0 {
+        return None;
+    }
+    (n / row).checked_mul(quant.row_bytes(row))
+}
+
+/// Encoded subpayload bytes of one layer group at a quant level — the v6
+/// analogue of [`group_payload_bytes`] (and identical to it for
+/// [`QuantLevel::None`]).
+fn group_payload_bytes_q(
+    shape: &KvShape,
+    with_emb: bool,
+    l0: usize,
+    l1: usize,
+    quant: QuantLevel,
+) -> Result<usize> {
+    if quant == QuantLevel::None {
+        return group_payload_bytes(shape, with_emb, l0, l1);
+    }
+    let row = shape.heads.checked_mul(shape.d_head);
+    let kv_elems = row
+        .and_then(|r| r.checked_mul(shape.tokens))
+        .and_then(|n| n.checked_mul(l1 - l0));
+    let kv = match row {
+        Some(r) => quant_section_bytes(kv_elems, r, quant).and_then(|b| b.checked_mul(2)),
+        None => None,
+    };
+    let emb_elems = if with_emb { shape.tokens.checked_mul(shape.d_model) } else { Some(0) };
+    let emb = quant_section_bytes(emb_elems, shape.d_model, quant);
+    match (kv, emb) {
+        (Some(kv), Some(emb)) => match kv.checked_add(emb) {
             Some(n) if n <= MAX_PAYLOAD => Ok(n),
             _ => bail!("implausible KV shape (group {l0}..{l1} payload overflows)"),
         },
@@ -289,7 +359,7 @@ pub fn encode_grouped(
     for chunk in &compressed {
         out.extend_from_slice(chunk);
     }
-    Ok((out, CodecReport { chunks: n_chunks, pooled }))
+    Ok((out, CodecReport { chunks: n_chunks, pooled, dequant_us: 0 }))
 }
 
 /// Flatten an entry into the group-ordered v5 payload; returns the
@@ -319,6 +389,135 @@ fn flatten_grouped(e: &SegmentKv, lpg: usize, n_groups: usize) -> (Vec<u8>, Vec<
         bounds.push((start, off - start));
     }
     debug_assert_eq!(off, total);
+    (payload, bounds)
+}
+
+/// Serialise an entry to a v6 quantized container at the default
+/// [`GROUP_LAYERS`] grouping. `QuantLevel::None` falls through to the v5
+/// writer, so the full-precision path stays byte-identical with pre-v6
+/// archives and peers.
+pub fn encode_quant(
+    e: &SegmentKv,
+    quant: QuantLevel,
+    pool: Option<&ThreadPool>,
+) -> Result<(Vec<u8>, CodecReport)> {
+    encode_grouped_quant(e, GROUP_LAYERS, quant, pool)
+}
+
+/// Serialise an entry to a v6 container with explicit layers-per-group
+/// and quant level (uniform across groups; the format itself is
+/// per-group).
+pub fn encode_grouped_quant(
+    e: &SegmentKv,
+    layers_per_group: usize,
+    quant: QuantLevel,
+    pool: Option<&ThreadPool>,
+) -> Result<(Vec<u8>, CodecReport)> {
+    if quant == QuantLevel::None {
+        return encode_grouped(e, layers_per_group, pool);
+    }
+    e.validate()?;
+    let layers = e.shape.layers.max(1);
+    let lpg = layers_per_group.max(1).max(layers.div_ceil(MAX_GROUPS));
+    let n_groups = layers.div_ceil(lpg);
+    let (payload, bounds) = flatten_grouped_quant(e, lpg, n_groups, quant);
+
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    let mut group_chunks: Vec<usize> = Vec::with_capacity(n_groups);
+    for &(goff, glen) in &bounds {
+        let n = glen.div_ceil(CHUNK_SIZE).max(1);
+        group_chunks.push(n);
+        for j in 0..n {
+            let lo = (j * CHUNK_SIZE).min(glen);
+            let hi = ((j + 1) * CHUNK_SIZE).min(glen);
+            spans.push((goff + lo, hi - lo));
+        }
+    }
+    let n_chunks = spans.len();
+    let (compressed, pooled) = match usable_pool(pool, n_chunks) {
+        Some(pool) => {
+            let payload = Arc::new(payload);
+            let jobs: Vec<(Arc<Vec<u8>>, usize, usize)> =
+                spans.iter().map(|&(off, len)| (Arc::clone(&payload), off, len)).collect();
+            let out = pool
+                .map(jobs, |(p, off, len)| {
+                    zstd::bulk::compress(&p[off..off + len], ZSTD_LEVEL)
+                        .context("zstd compress chunk")
+                })
+                .into_iter()
+                .collect::<Result<Vec<_>>>()?;
+            (out, true)
+        }
+        None => {
+            let out = spans
+                .iter()
+                .map(|&(off, len)| {
+                    zstd::bulk::compress(&payload[off..off + len], ZSTD_LEVEL)
+                        .context("zstd compress chunk")
+                })
+                .collect::<Result<Vec<_>>>()?;
+            (out, false)
+        }
+    };
+
+    let comp_total: usize = compressed.iter().map(|c| c.len()).sum();
+    let mut out = Vec::with_capacity(
+        comp_total + e.key.model.len() + e.key.ns.as_str().len() + 72 + n_groups + 36 * n_chunks,
+    );
+    write_prefix(&mut out, e, V6)?;
+    let ns = e.key.ns.as_str().as_bytes();
+    out.write_u32::<LittleEndian>(ns.len() as u32)?;
+    out.extend_from_slice(ns);
+    out.push(e.key.seg.kind_tag());
+    out.write_u64::<LittleEndian>(e.key.seg.raw())?;
+    write_dims(&mut out, &e.shape)?;
+    out.push(u8::from(!e.emb.is_empty()));
+    out.write_u32::<LittleEndian>(lpg as u32)?;
+    out.write_u32::<LittleEndian>(n_groups as u32)?;
+    out.write_u32::<LittleEndian>(CHUNK_SIZE as u32)?;
+    out.write_u32::<LittleEndian>(n_chunks as u32)?;
+    for n in &group_chunks {
+        out.write_u32::<LittleEndian>(*n as u32)?;
+    }
+    for _ in 0..n_groups {
+        out.push(quant.code());
+    }
+    for chunk in &compressed {
+        out.write_u32::<LittleEndian>(chunk.len() as u32)?;
+        out.extend_from_slice(&Sha256::digest(chunk));
+    }
+    for chunk in &compressed {
+        out.extend_from_slice(chunk);
+    }
+    Ok((out, CodecReport { chunks: n_chunks, pooled, dequant_us: 0 }))
+}
+
+/// Flatten an entry into the group-ordered v6 payload with each section
+/// (emb / K / V) per-row quantized; returns the payload plus each
+/// group's `(offset, len)` within it.
+fn flatten_grouped_quant(
+    e: &SegmentKv,
+    lpg: usize,
+    n_groups: usize,
+    quant: QuantLevel,
+) -> (Vec<u8>, Vec<(usize, usize)>) {
+    let s = &e.shape;
+    let row = s.heads * s.d_head;
+    let lt = s.tokens * row;
+    let mut payload = Vec::new();
+    let mut bounds = Vec::with_capacity(n_groups);
+    for g in 0..n_groups {
+        let start = payload.len();
+        let l0 = (g * lpg).min(s.layers);
+        let l1 = ((g + 1) * lpg).min(s.layers);
+        if g == 0 && !e.emb.is_empty() {
+            compress::quantize_into(&e.emb, s.d_model, quant, &mut payload);
+        }
+        for t in [&e.k, &e.v] {
+            compress::quantize_into(&t[l0 * lt..l1 * lt], row, quant, &mut payload);
+        }
+        bounds.push((start, payload.len() - start));
+    }
     (payload, bounds)
 }
 
@@ -382,7 +581,7 @@ pub fn encode_v4(e: &SegmentKv, pool: Option<&ThreadPool>) -> Result<(Vec<u8>, C
     for chunk in &compressed {
         out.extend_from_slice(chunk);
     }
-    Ok((out, CodecReport { chunks: n_chunks, pooled }))
+    Ok((out, CodecReport { chunks: n_chunks, pooled, dequant_us: 0 }))
 }
 
 /// Decode and integrity-check an entry of any container version. With
@@ -406,8 +605,12 @@ fn decode_dispatch(
 ) -> Result<(SegmentKv, CodecReport)> {
     let info = parse_container(bytes)?;
     let payload = decode_all_groups(bytes, owned, &info, pool)?;
-    let report = CodecReport { chunks: info.table.len(), pooled: payload.1 };
-    Ok((assemble_grouped(&info, &payload.0), report))
+    let quantized = info.groups.iter().any(|g| g.quant != QuantLevel::None);
+    let t0 = std::time::Instant::now();
+    let kv = assemble_grouped(&info, &payload.0)?;
+    let dequant_us = if quantized { t0.elapsed().as_micros() as u64 } else { 0 };
+    let report = CodecReport { chunks: info.table.len(), pooled: payload.1, dequant_us };
+    Ok((kv, report))
 }
 
 /// One layer group's extent within a container: which layers and chunks
@@ -424,6 +627,8 @@ struct GroupExtent {
     /// Offset/length within the group-ordered raw payload.
     raw_off: usize,
     raw_len: usize,
+    /// Quant level of the group's subpayload (`None` for v1–v5).
+    quant: QuantLevel,
 }
 
 /// Parsed container header of any version: key, shape, and the layer
@@ -465,6 +670,17 @@ impl ContainerInfo {
     /// Number of chunks carrying group `g`'s subpayload.
     pub fn group_chunks(&self, g: usize) -> usize {
         self.groups[g].chunk_hi - self.groups[g].chunk_lo
+    }
+
+    /// Quantization level of group `g`'s subpayload (`None` for v1–v5).
+    pub fn group_quant(&self, g: usize) -> QuantLevel {
+        self.groups[g].quant
+    }
+
+    /// Coarsest quant level across groups — the container's effective
+    /// compression level for residency accounting.
+    pub fn max_quant(&self) -> QuantLevel {
+        self.groups.iter().map(|g| g.quant).max().unwrap_or(QuantLevel::None)
     }
 
     /// Container bytes needed to decode groups `0..upto`: the header plus
@@ -531,6 +747,7 @@ pub fn parse_container(bytes: &[u8]) -> Result<ContainerInfo> {
                     comp_len: payload_len,
                     raw_off: 0,
                     raw_len: expect,
+                    quant: QuantLevel::None,
                 }],
                 table: vec![(payload_len, digest)],
                 data_off,
@@ -553,7 +770,7 @@ pub fn parse_container(bytes: &[u8]) -> Result<ContainerInfo> {
             let key = KvKey { model, ns, seg };
             single_group_info(r, version, key, shape, has_emb)
         }
-        V5 => {
+        V5 | V6 => {
             let ns_str = read_lp_string(&mut r, "namespace")?;
             let ns =
                 if ns_str.is_empty() { Namespace::default() } else { Namespace::new(&ns_str)? };
@@ -580,14 +797,27 @@ pub fn parse_container(bytes: &[u8]) -> Result<ContainerInfo> {
             for _ in 0..n_groups {
                 counts.push(r.read_u32::<LittleEndian>()? as usize);
             }
-            // Rebuild each group's extent from the shape and verify the
-            // header's per-group chunk counts against it.
+            // v6 carries one quant-level byte per group after the counts;
+            // v5 groups are all full precision.
+            let quants = if version == V6 {
+                let mut q = Vec::with_capacity(n_groups);
+                for _ in 0..n_groups {
+                    q.push(QuantLevel::from_code(r.read_u8()?)?);
+                }
+                q
+            } else {
+                vec![QuantLevel::None; n_groups]
+            };
+            // Rebuild each group's extent from the shape (and quant
+            // level) and verify the header's per-group chunk counts
+            // against it.
             let mut groups = Vec::with_capacity(n_groups);
             let (mut chunk_lo, mut raw_off) = (0usize, 0usize);
             for (g, &count) in counts.iter().enumerate() {
                 let l0 = (g * lpg).min(shape.layers);
                 let l1 = ((g + 1) * lpg).min(shape.layers);
-                let glen = group_payload_bytes(&shape, has_emb && g == 0, l0, l1)?;
+                let glen =
+                    group_payload_bytes_q(&shape, has_emb && g == 0, l0, l1, quants[g])?;
                 let expect_chunks = glen.div_ceil(chunk_size).max(1);
                 if count != expect_chunks {
                     bail!(
@@ -604,6 +834,7 @@ pub fn parse_container(bytes: &[u8]) -> Result<ContainerInfo> {
                     comp_len: 0,
                     raw_off,
                     raw_len: glen,
+                    quant: quants[g],
                 });
                 chunk_lo += count;
                 raw_off += glen;
@@ -611,7 +842,7 @@ pub fn parse_container(bytes: &[u8]) -> Result<ContainerInfo> {
             if chunk_lo != n_chunks {
                 bail!("chunk count {n_chunks} disagrees with per-group totals ({chunk_lo})");
             }
-            if raw_off != expect {
+            if version == V5 && raw_off != expect {
                 bail!("group payload bytes {raw_off} disagree with shape ({expect})");
             }
             let table = read_table(&mut r, n_chunks)?;
@@ -675,6 +906,7 @@ fn single_group_info(
             comp_len,
             raw_off: 0,
             raw_len: expect,
+            quant: QuantLevel::None,
         }],
         table,
         data_off,
@@ -829,40 +1061,61 @@ pub fn decode_group(info: &ContainerInfo, bytes: &[u8], g: usize) -> Result<Grou
         }
     }
     let s = &info.shape;
-    let lt = s.tokens * s.heads * s.d_head;
+    let row = s.heads * s.d_head;
+    let lt = s.tokens * row;
     let emb_n = if g == 0 && info.has_emb { s.emb_elems() } else { 0 };
     let n = (ge.layer_hi - ge.layer_lo) * lt;
-    let mut emb = vec![0f32; emb_n];
-    let mut k = vec![0f32; n];
-    let mut v = vec![0f32; n];
-    let (a, rest) = payload.split_at(emb_n * 4);
-    let (b, c) = rest.split_at(n * 4);
-    LittleEndian::read_f32_into(a, &mut emb);
-    LittleEndian::read_f32_into(b, &mut k);
-    LittleEndian::read_f32_into(c, &mut v);
+    let q = ge.quant;
+    let eb = q.section_bytes(emb_n, s.d_model.max(1));
+    let kb = q.section_bytes(n, row.max(1));
+    if payload.len() != eb + 2 * kb {
+        bail!("group {g} payload is {} bytes, expected {}", payload.len(), eb + 2 * kb);
+    }
+    let emb = compress::dequantize(&payload[..eb], emb_n, s.d_model.max(1), q)?;
+    let k = compress::dequantize(&payload[eb..eb + kb], n, row.max(1), q)?;
+    let v = compress::dequantize(&payload[eb + kb..], n, row.max(1), q)?;
     Ok(GroupPayload { index: g, layer_lo: ge.layer_lo, layer_hi: ge.layer_hi, emb, k, v })
 }
 
-/// Rebuild the entry from the group-ordered raw payload.
-fn assemble_grouped(info: &ContainerInfo, payload: &[u8]) -> SegmentKv {
+/// Rebuild the entry from the group-ordered (possibly quantized) raw
+/// payload. Full-precision groups copy straight into the tensors;
+/// quantized groups dequantize per section.
+fn assemble_grouped(info: &ContainerInfo, payload: &[u8]) -> Result<SegmentKv> {
     let s = info.shape;
-    let lt = s.tokens * s.heads * s.d_head;
+    let row = s.heads * s.d_head;
+    let lt = s.tokens * row;
     let mut emb = vec![0f32; if info.has_emb { s.emb_elems() } else { 0 }];
     let mut k = vec![0f32; s.kv_elems()];
     let mut v = vec![0f32; s.kv_elems()];
     for (g, ge) in info.groups.iter().enumerate() {
+        let q = ge.quant;
         let mut off = ge.raw_off;
         if g == 0 && info.has_emb {
-            LittleEndian::read_f32_into(&payload[off..off + emb.len() * 4], &mut emb);
-            off += emb.len() * 4;
+            let eb = q.section_bytes(emb.len(), s.d_model.max(1));
+            if q == QuantLevel::None {
+                LittleEndian::read_f32_into(&payload[off..off + eb], &mut emb);
+            } else {
+                let t = compress::dequantize(&payload[off..off + eb], emb.len(), s.d_model, q)?;
+                emb.copy_from_slice(&t);
+            }
+            off += eb;
         }
         let n = (ge.layer_hi - ge.layer_lo) * lt;
         let (klo, khi) = (ge.layer_lo * lt, ge.layer_hi * lt);
-        LittleEndian::read_f32_into(&payload[off..off + n * 4], &mut k[klo..khi]);
-        off += n * 4;
-        LittleEndian::read_f32_into(&payload[off..off + n * 4], &mut v[klo..khi]);
+        let kb = q.section_bytes(n, row.max(1));
+        if q == QuantLevel::None {
+            LittleEndian::read_f32_into(&payload[off..off + kb], &mut k[klo..khi]);
+            off += kb;
+            LittleEndian::read_f32_into(&payload[off..off + kb], &mut v[klo..khi]);
+        } else {
+            let tk = compress::dequantize(&payload[off..off + kb], n, row.max(1), q)?;
+            k[klo..khi].copy_from_slice(&tk);
+            off += kb;
+            let tv = compress::dequantize(&payload[off..off + kb], n, row.max(1), q)?;
+            v[klo..khi].copy_from_slice(&tv);
+        }
     }
-    SegmentKv { key: info.key.clone(), shape: s, emb, k, v }
+    Ok(SegmentKv { key: info.key.clone(), shape: s, emb, k, v })
 }
 
 /// v3/v4 header tail after model (and, for v4, namespace): segment kind +
@@ -1543,6 +1796,149 @@ mod tests {
                 }
                 if emb != whole.emb || k != whole.k || v != whole.v {
                     return Err("group-wise decode disagrees with whole decode".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() <= tol, "{x} vs {y} (tol {tol})");
+        }
+    }
+
+    #[test]
+    fn v6_quant_roundtrip_within_tolerance() {
+        // Test values are uniform in [0, 1), so per-row scales bound the
+        // absolute error at ~scale/2.
+        for (level, tol) in [(QuantLevel::Int8, 0.01f32), (QuantLevel::Int4, 0.08f32)] {
+            for e in [deep_entry(31, 6, 64), deep_chunk_entry(31, 6, 64)] {
+                let (bytes, _) = encode_quant(&e, level, None).unwrap();
+                let info = parse_container(&bytes).unwrap();
+                assert_eq!(info.version, 6);
+                assert_eq!(info.n_groups(), 3);
+                assert_eq!(info.max_quant(), level);
+                for g in 0..info.n_groups() {
+                    assert_eq!(info.group_quant(g), level);
+                }
+                assert_eq!(info.total_len(), bytes.len());
+                let (back, _) = decode_with(&bytes, None).unwrap();
+                assert_eq!(back.key, e.key);
+                assert_eq!(back.shape, e.shape);
+                assert_close(&back.emb, &e.emb, tol);
+                assert_close(&back.k, &e.k, tol);
+                assert_close(&back.v, &e.v, tol);
+                // Group-wise decode agrees exactly with the whole decode
+                // (same quantized bytes, same dequantization).
+                let lt = e.shape.tokens * e.shape.heads * e.shape.d_head;
+                for g in 0..info.n_groups() {
+                    let gp = decode_group(&info, &bytes, g).unwrap();
+                    if g == 0 {
+                        assert_eq!(gp.emb, back.emb);
+                    }
+                    assert_eq!(gp.k, back.k[gp.layer_lo * lt..gp.layer_hi * lt]);
+                    assert_eq!(gp.v, back.v[gp.layer_lo * lt..gp.layer_hi * lt]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn v6_none_falls_back_to_v5_writer() {
+        let e = deep_entry(32, 6, 32);
+        let (via_quant, _) = encode_quant(&e, QuantLevel::None, None).unwrap();
+        let (via_plain, _) = encode_with(&e, None).unwrap();
+        assert_eq!(via_quant, via_plain, "None level must stay byte-identical v5");
+        assert_eq!(parse_container(&via_quant).unwrap().version, 5);
+    }
+
+    #[test]
+    fn v6_containers_are_smaller() {
+        // Random f32 payloads barely zstd-compress, so int8 containers
+        // land near 1/4 the size and int4 near 1/8.
+        let e = deep_entry(33, 6, 512);
+        let full = encode(&e).unwrap().len();
+        let q8 = encode_quant(&e, QuantLevel::Int8, None).unwrap().0.len();
+        let q4 = encode_quant(&e, QuantLevel::Int4, None).unwrap().0.len();
+        assert!(q8 * 2 < full, "int8 {q8} vs full {full}");
+        assert!(q4 < q8, "int4 {q4} vs int8 {q8}");
+    }
+
+    #[test]
+    fn v6_prefix_decodes_leading_groups() {
+        let e = deep_entry(34, 6, 256);
+        let (bytes, _) = encode_quant(&e, QuantLevel::Int8, None).unwrap();
+        let info = parse_container(&bytes).unwrap();
+        assert_eq!(info.n_groups(), 3);
+        for m in 0..=3usize {
+            let p = info.prefix_len(m);
+            let prefix = &bytes[..p];
+            let pi = parse_container(prefix).unwrap();
+            assert_eq!(pi.groups_available(p), m);
+            for g in 0..3 {
+                let r = decode_group(&pi, prefix, g);
+                if g < m {
+                    assert_eq!(r.unwrap(), decode_group(&info, &bytes, g).unwrap());
+                } else {
+                    assert!(r.is_err(), "group {g} must not decode from a {m}-group prefix");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn v6_rejects_bad_quant_code_and_corruption() {
+        let e = test_entry(35, 8);
+        let (mut bytes, _) = encode_quant(&e, QuantLevel::Int8, None).unwrap();
+        // The (single) group quant byte sits right after the per-group
+        // chunk counts: magic+ver+mlen + model + nslen + kind + id + dims
+        // + has_emb + lpg + n_groups + chunk_size + n_chunks + counts.
+        let q_off = 4 + 4 + 4 + e.key.model.len() + 4 + 1 + 8 + 20 + 1 + 4 + 4 + 4 + 4 + 4;
+        assert_eq!(bytes[q_off], QuantLevel::Int8.code());
+        bytes[q_off] = 9;
+        assert!(decode(&bytes).unwrap_err().to_string().contains("quant"));
+        // Downgrading the level changes the expected section sizes, so
+        // the chunk-count validation must reject it.
+        bytes[q_off] = QuantLevel::None.code();
+        assert!(decode(&bytes).is_err());
+        // Payload corruption still trips the per-chunk integrity check.
+        bytes[q_off] = QuantLevel::Int8.code();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0x5A;
+        assert!(decode(&bytes).unwrap_err().to_string().contains("integrity"));
+    }
+
+    #[test]
+    fn property_v6_hostile_buffers_never_panic() {
+        crate::util::prop::check(
+            "kv-codec-v6-hostile-buffers",
+            30,
+            |rng| {
+                let tokens = 1 + rng.below(24) as usize;
+                let layers = 1 + rng.below(6) as usize;
+                let e = if rng.bool(0.5) {
+                    deep_entry(rng.next_u64(), layers, tokens)
+                } else {
+                    deep_chunk_entry(rng.next_u64(), layers, tokens)
+                };
+                let level =
+                    if rng.bool(0.5) { QuantLevel::Int8 } else { QuantLevel::Int4 };
+                let container = encode_quant(&e, level, None).unwrap().0;
+                let cut = rng.below(container.len() as u64) as usize;
+                let flip_at = rng.below(container.len() as u64) as usize;
+                let flip_bits = 1 + rng.below(255) as u8;
+                (container, cut, flip_at, flip_bits)
+            },
+            |(container, cut, flip_at, flip_bits)| {
+                if decode(&container[..*cut]).is_ok() {
+                    return Err(format!("prefix of {cut} bytes decoded"));
+                }
+                let mut mutated = container.clone();
+                mutated[*flip_at] ^= flip_bits;
+                if let Ok(back) = decode(&mutated) {
+                    back.validate().map_err(|e| format!("mutated decode invalid: {e}"))?;
                 }
                 Ok(())
             },

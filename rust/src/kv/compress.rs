@@ -1,0 +1,363 @@
+//! Per-row symmetric KV quantization — the compressed-tier subsystem.
+//!
+//! LOOK-M (arXiv:2406.18139) shows multimodal KV rows tolerate aggressive
+//! compression with negligible quality loss, so the lower store tiers
+//! (host RAM, disk) can hold rows at reduced precision and dequantize
+//! only on device promotion. Each row is stored as a 4-byte little-endian
+//! f32 scale followed by the quantized row: one signed byte per element
+//! for [`QuantLevel::Int8`], or two signed nibbles per byte (low nibble
+//! first) for [`QuantLevel::Int4`]. `QuantLevel::None` is the identity —
+//! plain little-endian f32 rows, byte-compatible with the v5 container
+//! payload.
+//!
+//! Rows here are attention rows: `heads * d_head` wide for K/V tensors,
+//! `d_model` wide for the embedding section. Per-row scales keep the
+//! worst-case relative error bounded per row rather than per tensor,
+//! which is what lets the store requantize on demotion without a
+//! calibration pass.
+
+use anyhow::{bail, ensure};
+
+use crate::Result;
+
+/// Quantization level of a KV payload section. Ordered by coarseness:
+/// `None < Int8 < Int4` (later = smaller, lossier).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum QuantLevel {
+    /// Full-precision f32 rows (4 bytes / element).
+    #[default]
+    None,
+    /// Per-row symmetric int8 (1 byte / element + 4-byte row scale).
+    Int8,
+    /// Per-row symmetric 4-bit, two elements packed per byte.
+    Int4,
+}
+
+impl QuantLevel {
+    /// Wire code carried in the v6 container's per-group table.
+    pub fn code(self) -> u8 {
+        match self {
+            QuantLevel::None => 0,
+            QuantLevel::Int8 => 1,
+            QuantLevel::Int4 => 2,
+        }
+    }
+
+    /// Inverse of [`QuantLevel::code`]; rejects unknown codes so a
+    /// corrupt container fails cleanly at parse time.
+    pub fn from_code(code: u8) -> Result<QuantLevel> {
+        Ok(match code {
+            0 => QuantLevel::None,
+            1 => QuantLevel::Int8,
+            2 => QuantLevel::Int4,
+            other => bail!("unknown quant-level code {other}"),
+        })
+    }
+
+    /// Parse a CLI / wire spelling (`none` | `int8` | `int4`).
+    pub fn parse(s: &str) -> Result<QuantLevel> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "none" | "f32" | "fp32" => QuantLevel::None,
+            "int8" | "i8" => QuantLevel::Int8,
+            "int4" | "i4" => QuantLevel::Int4,
+            other => bail!("unknown quant level {other:?} (expected none|int8|int4)"),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            QuantLevel::None => "none",
+            QuantLevel::Int8 => "int8",
+            QuantLevel::Int4 => "int4",
+        }
+    }
+
+    /// The finer (less lossy) of two levels — how a per-tenant ceiling
+    /// caps a tier floor.
+    pub fn finer(self, other: QuantLevel) -> QuantLevel {
+        self.min(other)
+    }
+
+    /// One step less aggressive (`Int4 → Int8 → None → None`), the
+    /// fallback ladder when a level fails the deviation gate.
+    pub fn step_down(self) -> QuantLevel {
+        match self {
+            QuantLevel::Int4 => QuantLevel::Int8,
+            _ => QuantLevel::None,
+        }
+    }
+
+    /// Encoded bytes for one row of `row` elements.
+    pub fn row_bytes(self, row: usize) -> usize {
+        match self {
+            QuantLevel::None => row * 4,
+            QuantLevel::Int8 => 4 + row,
+            QuantLevel::Int4 => 4 + row.div_ceil(2),
+        }
+    }
+
+    /// Encoded bytes for `n` elements laid out as rows of `row` elements.
+    /// `n` must be a whole number of rows.
+    pub fn section_bytes(self, n: usize, row: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        debug_assert!(row > 0 && n % row == 0, "section {n} not a multiple of row {row}");
+        (n / row) * self.row_bytes(row)
+    }
+}
+
+/// Quantize `data` (a whole number of `row`-element rows) at `level`,
+/// appending the encoded bytes to `out`.
+pub fn quantize_into(data: &[f32], row: usize, level: QuantLevel, out: &mut Vec<u8>) {
+    if data.is_empty() {
+        return;
+    }
+    assert!(row > 0 && data.len() % row == 0, "data not a multiple of row width");
+    match level {
+        QuantLevel::None => {
+            out.reserve(data.len() * 4);
+            for &x in data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        QuantLevel::Int8 => {
+            for r in data.chunks_exact(row) {
+                let scale = row_scale(r, 127.0);
+                out.extend_from_slice(&scale.to_le_bytes());
+                let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+                for &x in r {
+                    out.push((x * inv).round().clamp(-127.0, 127.0) as i8 as u8);
+                }
+            }
+        }
+        QuantLevel::Int4 => {
+            for r in data.chunks_exact(row) {
+                let scale = row_scale(r, 7.0);
+                out.extend_from_slice(&scale.to_le_bytes());
+                let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+                let mut it = r.iter();
+                while let Some(&a) = it.next() {
+                    let qa = (a * inv).round().clamp(-7.0, 7.0) as i8;
+                    let qb = match it.next() {
+                        Some(&b) => (b * inv).round().clamp(-7.0, 7.0) as i8,
+                        None => 0,
+                    };
+                    out.push(((qa as u8) & 0x0f) | ((qb as u8) << 4));
+                }
+            }
+        }
+    }
+}
+
+/// Quantize `data` at `level`, returning the encoded bytes.
+pub fn quantize(data: &[f32], row: usize, level: QuantLevel) -> Vec<u8> {
+    let mut out = Vec::with_capacity(level.section_bytes(data.len(), row.max(1)));
+    quantize_into(data, row, level, &mut out);
+    out
+}
+
+/// Decode `bytes` produced by [`quantize`] back to `n` f32 elements laid
+/// out as rows of `row` elements, appending to `out`. Validates section
+/// length so truncated or forged payloads fail instead of panicking.
+pub fn dequantize_into(
+    bytes: &[u8],
+    n: usize,
+    row: usize,
+    level: QuantLevel,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    if n == 0 {
+        ensure!(bytes.is_empty(), "expected empty section, got {} bytes", bytes.len());
+        return Ok(());
+    }
+    ensure!(row > 0 && n % row == 0, "section {n} not a multiple of row width {row}");
+    let want = level.section_bytes(n, row);
+    ensure!(
+        bytes.len() == want,
+        "quantized section length mismatch: got {}, want {want}",
+        bytes.len()
+    );
+    out.reserve(n);
+    match level {
+        QuantLevel::None => {
+            for c in bytes.chunks_exact(4) {
+                out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+        }
+        QuantLevel::Int8 => {
+            for r in bytes.chunks_exact(4 + row) {
+                let scale = f32::from_le_bytes([r[0], r[1], r[2], r[3]]);
+                for &b in &r[4..] {
+                    out.push((b as i8) as f32 * scale);
+                }
+            }
+        }
+        QuantLevel::Int4 => {
+            let packed = row.div_ceil(2);
+            for r in bytes.chunks_exact(4 + packed) {
+                let scale = f32::from_le_bytes([r[0], r[1], r[2], r[3]]);
+                let mut emitted = 0usize;
+                for &b in &r[4..] {
+                    out.push(unpack_nibble(b & 0x0f) as f32 * scale);
+                    emitted += 1;
+                    if emitted < row {
+                        out.push(unpack_nibble(b >> 4) as f32 * scale);
+                        emitted += 1;
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Decode a quantized section to a fresh vector.
+pub fn dequantize(bytes: &[u8], n: usize, row: usize, level: QuantLevel) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(n);
+    dequantize_into(bytes, n, row, level, &mut out)?;
+    Ok(out)
+}
+
+/// Mean absolute round-trip error of quantizing `data` at `level` —
+/// the artifact-free deviation proxy the store's demotion gate compares
+/// against `max_quant_deviation` (the engine's `layer0_deviation` path
+/// measures the same quantity through the model's layer-0 K projection
+/// when artifacts are available).
+pub fn roundtrip_deviation(data: &[f32], row: usize, level: QuantLevel) -> f32 {
+    if data.is_empty() || level == QuantLevel::None || row == 0 || data.len() % row != 0 {
+        return 0.0;
+    }
+    let qmax = match level {
+        QuantLevel::Int8 => 127.0f32,
+        QuantLevel::Int4 => 7.0,
+        QuantLevel::None => return 0.0,
+    };
+    // Mirrors quantize/dequantize exactly, without materialising the
+    // encoded bytes: q = round(x/scale) clamped to ±qmax (NaN casts to
+    // 0, like the `as i8` conversion in the encoder).
+    let mut sum = 0f64;
+    for r in data.chunks_exact(row) {
+        let scale = row_scale(r, qmax);
+        let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+        for &x in r {
+            let q = (x * inv).round().clamp(-qmax, qmax);
+            let back = if q.is_finite() { q * scale } else { 0.0 };
+            let err = (x - back).abs();
+            sum += if err.is_finite() { err as f64 } else { f32::MAX as f64 };
+        }
+    }
+    (sum / data.len() as f64) as f32
+}
+
+fn row_scale(row: &[f32], qmax: f32) -> f32 {
+    let max_abs = row.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    if max_abs.is_finite() && max_abs > 0.0 {
+        max_abs / qmax
+    } else {
+        0.0
+    }
+}
+
+fn unpack_nibble(n: u8) -> i8 {
+    // Sign-extend the low 4 bits (two's complement nibble).
+    ((n << 4) as i8) >> 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * 0.37).sin() * 2.5).collect()
+    }
+
+    #[test]
+    fn none_is_identity_bytes() {
+        let data = ramp(16);
+        let bytes = quantize(&data, 4, QuantLevel::None);
+        assert_eq!(bytes.len(), 64);
+        let back = dequantize(&bytes, 16, 4, QuantLevel::None).unwrap();
+        assert_eq!(data, back);
+    }
+
+    #[test]
+    fn int8_roundtrip_bounded_error() {
+        let data = ramp(64);
+        let bytes = quantize(&data, 8, QuantLevel::Int8);
+        assert_eq!(bytes.len(), QuantLevel::Int8.section_bytes(64, 8));
+        let back = dequantize(&bytes, 64, 8, QuantLevel::Int8).unwrap();
+        for (a, b) in data.iter().zip(&back) {
+            // Error ≤ half a quantization step of the row scale.
+            assert!((a - b).abs() <= 2.5 / 127.0 * 0.51 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn int4_roundtrip_bounded_error_odd_row() {
+        let data = ramp(35); // 5 rows of width 7 (odd → padded nibble)
+        let bytes = quantize(&data, 7, QuantLevel::Int4);
+        assert_eq!(bytes.len(), QuantLevel::Int4.section_bytes(35, 7));
+        let back = dequantize(&bytes, 35, 7, QuantLevel::Int4).unwrap();
+        for (a, b) in data.iter().zip(&back) {
+            assert!((a - b).abs() <= 2.5 / 7.0 * 0.51 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_and_constant_rows() {
+        let data = vec![0.0f32; 8];
+        for level in [QuantLevel::Int8, QuantLevel::Int4] {
+            let bytes = quantize(&data, 4, level);
+            let back = dequantize(&bytes, 8, 4, level).unwrap();
+            assert_eq!(back, data);
+        }
+        let data = vec![3.5f32; 6];
+        let bytes = quantize(&data, 3, QuantLevel::Int8);
+        let back = dequantize(&bytes, 6, 3, QuantLevel::Int8).unwrap();
+        for b in back {
+            assert!((b - 3.5).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn nonfinite_rows_collapse_to_zero_scale() {
+        let data = vec![f32::NAN, f32::INFINITY, 1.0, -1.0];
+        let bytes = quantize(&data, 4, QuantLevel::Int8);
+        let back = dequantize(&bytes, 4, 4, QuantLevel::Int8).unwrap();
+        assert!(back.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn dequantize_rejects_bad_lengths() {
+        let data = ramp(8);
+        let mut bytes = quantize(&data, 4, QuantLevel::Int8);
+        bytes.pop();
+        assert!(dequantize(&bytes, 8, 4, QuantLevel::Int8).is_err());
+        assert!(dequantize(&[], 8, 4, QuantLevel::Int8).is_err());
+        assert!(dequantize(&[1, 2, 3], 0, 4, QuantLevel::Int8).is_err());
+    }
+
+    #[test]
+    fn codes_roundtrip_and_parse() {
+        for level in [QuantLevel::None, QuantLevel::Int8, QuantLevel::Int4] {
+            assert_eq!(QuantLevel::from_code(level.code()).unwrap(), level);
+            assert_eq!(QuantLevel::parse(level.as_str()).unwrap(), level);
+        }
+        assert!(QuantLevel::from_code(9).is_err());
+        assert!(QuantLevel::parse("int2").is_err());
+        assert_eq!(QuantLevel::Int4.step_down(), QuantLevel::Int8);
+        assert_eq!(QuantLevel::Int8.step_down(), QuantLevel::None);
+        assert_eq!(QuantLevel::Int4.finer(QuantLevel::Int8), QuantLevel::Int8);
+        assert_eq!(QuantLevel::None.finer(QuantLevel::Int4), QuantLevel::None);
+    }
+
+    #[test]
+    fn deviation_orders_by_coarseness() {
+        let data = ramp(256);
+        let d8 = roundtrip_deviation(&data, 8, QuantLevel::Int8);
+        let d4 = roundtrip_deviation(&data, 8, QuantLevel::Int4);
+        assert_eq!(roundtrip_deviation(&data, 8, QuantLevel::None), 0.0);
+        assert!(d8 > 0.0 && d4 > d8, "d8={d8} d4={d4}");
+    }
+}

@@ -38,12 +38,14 @@
 
 pub mod block;
 pub mod codec;
+pub mod compress;
 pub mod store;
 pub mod transfer;
 
 use crate::mm::{ChunkId, ImageId, Namespace, SegmentId};
 
 pub use block::BlockAllocator;
+pub use compress::QuantLevel;
 pub use store::{
     ContainerSlice, EntryInfo, EvictOutcome, GroupAdmit, KvStore, LeaseInfo, StoreConfig,
     StoreStats, StreamedGroup, SweepReport, Tier,

@@ -58,7 +58,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Context};
 
+use super::compress::{self, QuantLevel};
 use super::{codec, KvKey, KvShape, SegmentKv};
+use crate::mm::{Namespace, SegmentId};
 use crate::util::sync::{LockRank, OrderedMutex, OrderedMutexGuard, PoisonedLock};
 use crate::util::threadpool::ThreadPool;
 use crate::Result;
@@ -110,6 +112,21 @@ pub struct StoreConfig {
     /// Number of independent key-hash shards. 1 restores the single-lock
     /// behaviour (useful for capacity-exact tests and ablations).
     pub shards: usize,
+    /// Quantization floor for host-tier demotions (compressed tiers,
+    /// LOOK-M): entries requantize to this level when device pressure
+    /// demotes them, subject to the per-namespace ceiling
+    /// ([`KvStore::set_ns_quant`]) and the deviation gate.
+    pub host_quant: QuantLevel,
+    /// Quantization floor for the disk write-through on `put`.
+    pub disk_quant: QuantLevel,
+    /// Deviation gate: a (re)quantization whose layer-0 round-trip
+    /// deviation exceeds this steps down (`Int4 → Int8 → None`) until
+    /// it fits. Infinite = no gate.
+    pub max_quant_deviation: f32,
+    /// LOOK-M device-pressure valve: mean-merge adjacent KV rows of
+    /// image entries (text rows exempt) instead of evicting whole
+    /// entries, reclaiming roughly half of each victim.
+    pub merge_valve: bool,
 }
 
 impl Default for StoreConfig {
@@ -121,6 +138,10 @@ impl Default for StoreConfig {
             ttl: Duration::from_secs(3600),
             disk_bandwidth: None,
             shards: 8,
+            host_quant: QuantLevel::None,
+            disk_quant: QuantLevel::None,
+            max_quant_deviation: f32::INFINITY,
+            merge_valve: false,
         }
     }
 }
@@ -162,9 +183,28 @@ pub struct StoreStats {
     pub leases_released: u64,
     /// Leases that aged out (TTL lapsed; dropped lazily or by sweep).
     pub lease_expirations: u64,
+    /// Microseconds spent dequantizing compressed (v6) container
+    /// sections on device promotion.
+    pub dequant_us: u64,
+    /// Resident bytes per tier — gauges recomputed from the live maps
+    /// by [`KvStore::stats`] (uncompressed on device, compressed on
+    /// host/disk).
+    pub bytes_device: u64,
+    pub bytes_host: u64,
+    pub bytes_disk: u64,
+    /// Host/disk entries currently held at each quantized level
+    /// (gauges, like the byte counts).
+    pub quant_entries_int8: u64,
+    pub quant_entries_int4: u64,
+    /// Device entries currently compacted by the LOOK-M merge valve
+    /// (gauge).
+    pub merged_entries: u64,
 }
 
 impl StoreStats {
+    /// Fold another shard's *counters* in. The gauge fields
+    /// (`bytes_*`, `quant_entries_*`, `merged_entries`) are recomputed
+    /// from the live maps by [`KvStore::stats`], not accumulated.
     fn accumulate(&mut self, o: &StoreStats) {
         self.device_hits += o.device_hits;
         self.host_hits += o.host_hits;
@@ -186,6 +226,7 @@ impl StoreStats {
         self.leases_acquired += o.leases_acquired;
         self.leases_released += o.leases_released;
         self.lease_expirations += o.lease_expirations;
+        self.dequant_us += o.dequant_us;
     }
 
     fn record_codec(&mut self, rep: codec::CodecReport) {
@@ -193,6 +234,7 @@ impl StoreStats {
         if rep.pooled {
             self.codec_parallel_ops += 1;
         }
+        self.dequant_us += rep.dequant_us;
     }
 }
 
@@ -220,6 +262,10 @@ pub struct SweepReport {
     pub expired_leases: u64,
     /// Disk-tier entries past their TTL, removed without being touched.
     pub expired_entries: u64,
+    /// Partial assemblies whose compressed source tier is gone — they
+    /// can never complete, so their device bytes are reclaimed in the
+    /// same pass that reaped the source.
+    pub orphaned_partials: u64,
 }
 
 /// Does `key` hold at least one live (unexpired) lease? Free function so
@@ -240,17 +286,144 @@ fn live_lease_count(leases: &HashMap<KvKey, Vec<LeaseRec>>, key: &KvKey, now: In
 struct DeviceEntry {
     kv: Arc<SegmentKv>,
     last_used: u64,
+    /// Set when the merge valve compacted this entry: `kv` then holds
+    /// the merged (shorter) K/V rows and expands on access.
+    merged: Option<MergedMeta>,
+}
+
+impl DeviceEntry {
+    fn full(kv: Arc<SegmentKv>, last_used: u64) -> DeviceEntry {
+        DeviceEntry { kv, last_used, merged: None }
+    }
+
+    /// The full-shape entry: a refcount bump for ordinary entries, an
+    /// expansion copy for merge-valve victims.
+    fn serve(&self) -> Arc<SegmentKv> {
+        match &self.merged {
+            None => Arc::clone(&self.kv),
+            Some(m) => Arc::new(expand_merged(&self.kv, m)),
+        }
+    }
+}
+
+/// Merge-valve bookkeeping (LOOK-M, arXiv:2406.18139): the entry's K/V
+/// rows beyond the first `sink` tokens were pairwise mean-merged, so
+/// each layer holds `rows` compact rows instead of `shape.tokens`.
+/// Embeddings and the declared shape stay intact; expansion maps token
+/// `t` to compact row `t` (t < sink) or `sink + (t - sink) / 2`.
+struct MergedMeta {
+    sink: usize,
+    rows: usize,
+}
+
+/// Attention-sink prefix the merge valve always preserves at full
+/// fidelity (MPIC-k repairs the sink by recompute, but the first rows
+/// carry disproportionate attention mass — LOOK-M keeps them exact).
+const MERGE_SINK_TOKENS: usize = 4;
+
+/// Compact an image entry's K/V rows by pairwise mean-merging the tail
+/// (tokens ≥ `sink`). Returns the compact entry — same key, shape and
+/// embeddings, shorter `k`/`v` — or `None` when there is nothing to
+/// merge. Callers exempt text (chunk) entries per LOOK-M's
+/// text-prioritized policy.
+fn merge_rows(kv: &SegmentKv, sink: usize) -> Option<(SegmentKv, MergedMeta)> {
+    let s = kv.shape;
+    let tokens = s.tokens;
+    if tokens <= sink + 1 {
+        return None;
+    }
+    let row = s.heads * s.d_head;
+    if row == 0 || kv.k.len() != s.kv_elems() || kv.v.len() != kv.k.len() {
+        return None;
+    }
+    let rows = sink + (tokens - sink).div_ceil(2);
+    let pack = |src: &[f32]| -> Vec<f32> {
+        let mut out = Vec::with_capacity(s.layers * rows * row);
+        for l in 0..s.layers {
+            let base = l * tokens * row;
+            out.extend_from_slice(&src[base..base + sink * row]);
+            let mut t = sink;
+            while t < tokens {
+                if t + 1 < tokens {
+                    let a = &src[base + t * row..base + (t + 1) * row];
+                    let b = &src[base + (t + 1) * row..base + (t + 2) * row];
+                    out.extend(a.iter().zip(b).map(|(x, y)| 0.5 * (x + y)));
+                } else {
+                    out.extend_from_slice(&src[base + t * row..base + (t + 1) * row]);
+                }
+                t += 2;
+            }
+        }
+        out
+    };
+    let compact = SegmentKv {
+        key: kv.key.clone(),
+        shape: s,
+        emb: kv.emb.clone(),
+        k: pack(&kv.k),
+        v: pack(&kv.v),
+    };
+    Some((compact, MergedMeta { sink, rows }))
+}
+
+/// Expand a merge-valve entry back to its declared shape by duplicating
+/// each merged row into both of its token slots.
+fn expand_merged(kv: &SegmentKv, m: &MergedMeta) -> SegmentKv {
+    let s = kv.shape;
+    let row = s.heads * s.d_head;
+    let unpack = |src: &[f32]| -> Vec<f32> {
+        let mut out = Vec::with_capacity(s.kv_elems());
+        for l in 0..s.layers {
+            let base = l * m.rows * row;
+            for t in 0..s.tokens {
+                let r = if t < m.sink { t } else { m.sink + (t - m.sink) / 2 };
+                out.extend_from_slice(&src[base + r * row..base + (r + 1) * row]);
+            }
+        }
+        out
+    };
+    SegmentKv {
+        key: kv.key.clone(),
+        shape: s,
+        emb: kv.emb.clone(),
+        k: unpack(&kv.k),
+        v: unpack(&kv.v),
+    }
+}
+
+/// Walk the quant step-down ladder until the layer-0 round-trip
+/// deviation fits `max_dev` — the store-side deviation gate. Returns
+/// the settled level and its measured deviation (0.0 at `None`).
+fn gate_quant(kv: &SegmentKv, mut level: QuantLevel, max_dev: f32) -> (QuantLevel, f32) {
+    let row = (kv.shape.heads * kv.shape.d_head).max(1);
+    let l0 = (kv.shape.tokens * row).min(kv.k.len());
+    while level != QuantLevel::None {
+        let dev = compress::roundtrip_deviation(&kv.k[..l0], row, level);
+        if dev <= max_dev {
+            return (level, dev);
+        }
+        level = level.step_down();
+    }
+    (QuantLevel::None, 0.0)
 }
 
 struct HostEntry {
     bytes: Vec<u8>,
     last_used: u64,
+    /// Quant level the demotion settled on, and its measured layer-0
+    /// round-trip deviation.
+    quant: QuantLevel,
+    deviation: f32,
 }
 
 struct DiskEntry {
     path: PathBuf,
     written_at: Instant,
     bytes: usize,
+    /// Quant level of the on-disk container (0-deviation for peer
+    /// admits, whose loss was already paid on the serving node).
+    quant: QuantLevel,
+    deviation: f32,
 }
 
 /// An entry assembling group-by-group toward device residency
@@ -327,6 +500,11 @@ struct ShardInner {
     prefetched: HashSet<KvKey>,
     /// Keys with a prefetch promotion currently running (dedup guard).
     prefetch_inflight: HashSet<KvKey>,
+    /// Per-tenant quant ceiling (the coarsest level the tenant allows;
+    /// unlisted tenants are unrestricted). Replicated into every shard
+    /// by [`KvStore::set_ns_quant`] so demotion paths read it under the
+    /// shard lock they already hold.
+    ns_quant: HashMap<Namespace, QuantLevel>,
     clock: u64,
     stats: StoreStats,
 }
@@ -352,6 +530,7 @@ impl Shard {
             pin_lease: HashMap::new(),
             prefetched: HashSet::new(),
             prefetch_inflight: HashSet::new(),
+            ns_quant: HashMap::new(),
             clock: 0,
             stats: StoreStats::default(),
         };
@@ -407,7 +586,8 @@ impl Shard {
 #[derive(Debug, Clone)]
 pub struct EntryInfo {
     pub key: KvKey,
-    /// Best (fastest) tier currently holding the entry.
+    /// Best (fastest) tier currently holding the entry. An in-flight
+    /// partial assembly reports as `Device` (its bytes live there).
     pub tier: Tier,
     /// Resident bytes in that tier (uncompressed on device, compressed
     /// on host/disk).
@@ -416,6 +596,16 @@ pub struct EntryInfo {
     pub pinned: bool,
     /// Number of live leases on the entry.
     pub leases: usize,
+    /// Quant level of the resident bytes (`None` on device).
+    pub quant: QuantLevel,
+    /// Layer-0 round-trip deviation measured when the bytes were
+    /// (re)quantized; 0.0 for full precision or untracked peer admits.
+    pub deviation: f32,
+    /// Device entry compacted by the LOOK-M merge valve.
+    pub merged: bool,
+    /// In-flight partial assembly: (resident groups, total groups).
+    /// Rendered as `partial:{groups}/{n_groups}` by `cache.list`.
+    pub partial: Option<(usize, usize)>,
 }
 
 /// A container — or a self-contained group prefix of one — served to a
@@ -543,6 +733,12 @@ impl ShardInner {
     /// Does this key hold at least one live lease right now?
     fn protected(&self, key: &KvKey) -> bool {
         leases_live(&self.leases, key, Instant::now())
+    }
+
+    /// The tenant's quant ceiling — coarsest level its entries may be
+    /// stored at. Unlisted tenants are unrestricted.
+    fn quant_ceiling(&self, ns: &Namespace) -> QuantLevel {
+        self.ns_quant.get(ns).copied().unwrap_or(QuantLevel::Int4)
     }
 
     /// The single liveness predicate for disk entries: unexpired or
@@ -674,14 +870,46 @@ impl KvStore {
         self.pool.as_deref()
     }
 
-    /// Aggregate statistics across every shard.
+    /// Aggregate statistics across every shard. Counter fields
+    /// accumulate the per-shard tallies; the byte/quant/merge gauges
+    /// are recomputed from the live maps on every call.
     pub fn stats(&self) -> StoreStats {
         let mut out = StoreStats::default();
         for shard in &self.shards {
-            out.accumulate(&shard.lock_uncounted().stats);
+            let g = shard.lock_uncounted();
+            out.accumulate(&g.stats);
             out.lock_contention += shard.contention.load(Ordering::Relaxed);
+            out.bytes_device += g.device_bytes as u64;
+            out.bytes_host += g.host_bytes as u64;
+            out.bytes_disk += g.disk.values().map(|d| d.bytes as u64).sum::<u64>();
+            let levels = g.host.values().map(|e| e.quant).chain(g.disk.values().map(|d| d.quant));
+            for q in levels {
+                match q {
+                    QuantLevel::Int8 => out.quant_entries_int8 += 1,
+                    QuantLevel::Int4 => out.quant_entries_int4 += 1,
+                    QuantLevel::None => {}
+                }
+            }
+            out.merged_entries += g.device.values().filter(|e| e.merged.is_some()).count() as u64;
         }
         out
+    }
+
+    /// Set a tenant's quant ceiling — the coarsest level its entries
+    /// may be stored at, capping the per-tier floors (the `cache.quant`
+    /// op). `QuantLevel::None` opts the tenant out of compression
+    /// entirely; `QuantLevel::Int4` (the default) is unrestricted. The
+    /// ceiling is replicated into every shard, visited one at a time in
+    /// ascending rank order.
+    pub fn set_ns_quant(&self, ns: &Namespace, ceiling: QuantLevel) {
+        for shard in &self.shards {
+            shard.lock_uncounted().ns_quant.insert(ns.clone(), ceiling);
+        }
+    }
+
+    /// A tenant's current quant ceiling.
+    pub fn ns_quant(&self, ns: &Namespace) -> QuantLevel {
+        self.shards[0].lock_uncounted().quant_ceiling(ns)
     }
 
     /// Upload-time insertion (workflow ①): resident on device for serving,
@@ -696,7 +924,13 @@ impl KvStore {
     /// the entry (the transfer engine's write-through of computed misses).
     pub fn put_arc(&self, kv: Arc<SegmentKv>) -> Result<()> {
         kv.validate()?;
-        let (encoded, rep) = codec::encode_with(&kv, self.codec_pool())?;
+        // The disk write-through encodes at the disk floor (capped by
+        // the tenant ceiling, stepped down by the deviation gate); the
+        // device tier keeps the full-precision entry.
+        let ceiling = self.shard(&kv.key).lock().quant_ceiling(&kv.key.ns);
+        let (level, deviation) =
+            gate_quant(&kv, self.cfg.disk_quant.finer(ceiling), self.cfg.max_quant_deviation);
+        let (encoded, rep) = codec::encode_quant(&kv, level, self.codec_pool())?;
         let path = self.cfg.disk_dir.join(format!("{}.mpkv", kv.key.file_stem()));
         // Write-then-rename: a get reading the previous version of this
         // key's file mid-put must see whole bytes, old or new — never a
@@ -719,7 +953,13 @@ impl KvStore {
         let nbytes = kv.bytes();
         g.disk.insert(
             key.clone(),
-            DiskEntry { path, written_at: Instant::now(), bytes: encoded.len() },
+            DiskEntry {
+                path,
+                written_at: Instant::now(),
+                bytes: encoded.len(),
+                quant: level,
+                deviation,
+            },
         );
         // Satellite fix: a re-upload invalidates any host-tier copy —
         // and any in-flight partial assembly of the old bytes.
@@ -727,7 +967,7 @@ impl KvStore {
         g.drop_partial(&key);
         // A fresh upload is not a prefetch artifact.
         g.prefetched.remove(&key);
-        if let Some(old) = g.device.insert(key, DeviceEntry { kv, last_used: clock }) {
+        if let Some(old) = g.device.insert(key, DeviceEntry::full(kv, clock)) {
             g.device_bytes -= old.kv.bytes();
         }
         g.device_bytes += nbytes;
@@ -763,7 +1003,9 @@ impl KvStore {
             if g.disk_live(key, self.cfg.ttl) {
                 (Some(g.disk[key].path.clone()), None)
             } else {
-                (None, g.device.get(key).map(|e| Arc::clone(&e.kv)))
+                // Merge-valve entries re-expand before the last-resort
+                // re-encode (the peer expects full-shape rows).
+                (None, g.device.get(key).map(|e| e.serve()))
             }
         };
         if let Some(path) = disk_path {
@@ -818,6 +1060,9 @@ impl KvStore {
     /// made device-resident. No re-encode: the peer's bytes are the
     /// canonical container, end to end.
     pub fn admit_container(&self, expected: &KvKey, bytes: Vec<u8>) -> Result<Arc<SegmentKv>> {
+        // Residency accounting records the container's compression
+        // level; its quantization loss was paid on the serving node.
+        let quant = codec::parse_container(&bytes).map(|i| i.max_quant()).unwrap_or_default();
         let (kv, rep) = codec::decode_with(&bytes, self.codec_pool())?;
         anyhow::ensure!(
             &kv.key == expected,
@@ -847,15 +1092,19 @@ impl KvStore {
         let nbytes = kv.bytes();
         g.disk.insert(
             key.clone(),
-            DiskEntry { path, written_at: Instant::now(), bytes: bytes.len() },
+            DiskEntry {
+                path,
+                written_at: Instant::now(),
+                bytes: bytes.len(),
+                quant,
+                deviation: 0.0,
+            },
         );
         // Like a re-upload: any stale host copy must not outlive this admit.
         g.drop_host(&key);
         g.drop_partial(&key);
         g.prefetched.remove(&key);
-        if let Some(old) =
-            g.device.insert(key, DeviceEntry { kv: Arc::clone(&kv), last_used: clock })
-        {
+        if let Some(old) = g.device.insert(key, DeviceEntry::full(Arc::clone(&kv), clock)) {
             g.device_bytes -= old.kv.bytes();
         }
         g.device_bytes += nbytes;
@@ -1005,7 +1254,7 @@ impl KvStore {
             let kv = Arc::new(p.assemble(key));
             let nbytes = kv.bytes();
             if let Some(old) =
-                g.device.insert(key.clone(), DeviceEntry { kv: Arc::clone(&kv), last_used: clock })
+                g.device.insert(key.clone(), DeviceEntry::full(Arc::clone(&kv), clock))
             {
                 g.device_bytes -= old.kv.bytes();
             }
@@ -1182,7 +1431,7 @@ impl KvStore {
             let clock = g.clock;
             if let Some(e) = g.device.get_mut(key) {
                 e.last_used = clock;
-                let kv = Arc::clone(&e.kv);
+                let kv = e.serve();
                 g.stats.device_hits += 1;
                 if g.prefetched.remove(key) {
                     g.stats.prefetch_hits += 1;
@@ -1277,7 +1526,7 @@ impl KvStore {
             from_prefetch: false,
         };
         let kv = Arc::new(p.assemble(key));
-        let rep = codec::CodecReport { chunks: cur.chunks, pooled: false };
+        let rep = codec::CodecReport { chunks: cur.chunks, pooled: false, dequant_us: 0 };
         self.promote(shard, Arc::clone(&kv), from, false, rep, started);
         Some((kv, from))
     }
@@ -1344,22 +1593,46 @@ impl KvStore {
         let g = self.shard(key).lock();
         let leases = live_lease_count(&g.leases, key, Instant::now());
         let pinned = leases > 0;
+        let base = |tier: Tier, bytes: usize| EntryInfo {
+            key: key.clone(),
+            tier,
+            bytes,
+            pinned,
+            leases,
+            quant: QuantLevel::None,
+            deviation: 0.0,
+            merged: false,
+            partial: None,
+        };
         if let Some(e) = g.device.get(key) {
-            let bytes = e.kv.bytes();
-            return Some(EntryInfo { key: key.clone(), tier: Tier::Device, bytes, pinned, leases });
+            return Some(EntryInfo {
+                merged: e.merged.is_some(),
+                ..base(Tier::Device, e.kv.bytes())
+            });
+        }
+        // Satellite fix: an in-flight partial assembly is residency —
+        // its decoded bytes sit in the device budget. Report it ahead
+        // of the compressed source tiers (most device-ward state wins).
+        if let Some(p) = g.partial.get(key) {
+            let resident = p.groups.iter().flatten().count();
+            return Some(EntryInfo {
+                partial: Some((resident, p.groups.len())),
+                ..base(Tier::Device, p.bytes)
+            });
         }
         if let Some(e) = g.host.get(key) {
-            let bytes = e.bytes.len();
-            return Some(EntryInfo { key: key.clone(), tier: Tier::Host, bytes, pinned, leases });
+            return Some(EntryInfo {
+                quant: e.quant,
+                deviation: e.deviation,
+                ..base(Tier::Host, e.bytes.len())
+            });
         }
         if g.disk_live(key, self.cfg.ttl) {
             let d = &g.disk[key];
             return Some(EntryInfo {
-                key: key.clone(),
-                tier: Tier::Disk,
-                bytes: d.bytes,
-                pinned,
-                leases,
+                quant: d.quant,
+                deviation: d.deviation,
+                ..base(Tier::Disk, d.bytes)
             });
         }
         None
@@ -1374,20 +1647,55 @@ impl KvStore {
             let g = shard.lock_uncounted();
             let info = |k: &KvKey, tier: Tier, bytes: usize| {
                 let leases = live_lease_count(&g.leases, k, now);
-                EntryInfo { key: k.clone(), tier, bytes, pinned: leases > 0, leases }
+                EntryInfo {
+                    key: k.clone(),
+                    tier,
+                    bytes,
+                    pinned: leases > 0,
+                    leases,
+                    quant: QuantLevel::None,
+                    deviation: 0.0,
+                    merged: false,
+                    partial: None,
+                }
             };
             for (k, e) in &g.device {
-                out.push(info(k, Tier::Device, e.kv.bytes()));
+                out.push(EntryInfo {
+                    merged: e.merged.is_some(),
+                    ..info(k, Tier::Device, e.kv.bytes())
+                });
+            }
+            // Satellite fix: partial assemblies are device-resident
+            // bytes — list them (`partial:{groups}/{n_groups}`) so the
+            // residency report sums to `device_bytes`.
+            for (k, p) in &g.partial {
+                let resident = p.groups.iter().flatten().count();
+                out.push(EntryInfo {
+                    partial: Some((resident, p.groups.len())),
+                    ..info(k, Tier::Device, p.bytes)
+                });
             }
             for (k, e) in &g.host {
-                if !g.device.contains_key(k) {
-                    out.push(info(k, Tier::Host, e.bytes.len()));
+                if !g.device.contains_key(k) && !g.partial.contains_key(k) {
+                    out.push(EntryInfo {
+                        quant: e.quant,
+                        deviation: e.deviation,
+                        ..info(k, Tier::Host, e.bytes.len())
+                    });
                 }
             }
             for (k, d) in &g.disk {
                 let live = g.disk_live(k, self.cfg.ttl);
-                if live && !g.device.contains_key(k) && !g.host.contains_key(k) {
-                    out.push(info(k, Tier::Disk, d.bytes));
+                if live
+                    && !g.device.contains_key(k)
+                    && !g.partial.contains_key(k)
+                    && !g.host.contains_key(k)
+                {
+                    out.push(EntryInfo {
+                        quant: d.quant,
+                        deviation: d.deviation,
+                        ..info(k, Tier::Disk, d.bytes)
+                    });
                 }
             }
         }
@@ -1529,6 +1837,26 @@ impl KvStore {
                     rep.expired_entries += 1;
                 }
             }
+            // Satellite fix: a partial assembly whose compressed source
+            // is gone (no host copy, no live disk copy — including one
+            // reaped just above — and no lease) can never complete: the
+            // streamed reader has nothing left to decode the missing
+            // groups from. Reclaim its device bytes in the same pass.
+            let dead_partials: Vec<KvKey> = inner
+                .partial
+                .keys()
+                .filter(|k| {
+                    !inner.host.contains_key(*k)
+                        && !inner.disk_live(k, self.cfg.ttl)
+                        && !leases_live(&inner.leases, k, now)
+                })
+                .cloned()
+                .collect();
+            for k in dead_partials {
+                if inner.drop_partial(&k).is_some() {
+                    rep.orphaned_partials += 1;
+                }
+            }
         }
         if !dead_ids.is_empty() {
             let mut dir = self.lease_dir.lock();
@@ -1651,7 +1979,7 @@ impl KvStore {
             let clock = g.clock;
             if let Some(e) = g.device.get_mut(key) {
                 e.last_used = clock;
-                let kv = Arc::clone(&e.kv);
+                let kv = e.serve();
                 if !for_prefetch {
                     g.stats.device_hits += 1;
                     if g.prefetched.remove(key) {
@@ -1871,7 +2199,7 @@ impl KvStore {
         let key = kv.key.clone();
         // The full entry supersedes any in-flight partial assembly.
         g.drop_partial(&key);
-        if let Some(old) = g.device.insert(key.clone(), DeviceEntry { kv, last_used: clock }) {
+        if let Some(old) = g.device.insert(key.clone(), DeviceEntry::full(kv, clock)) {
             g.device_bytes -= old.kv.bytes();
         }
         g.device_bytes += nbytes;
@@ -1914,20 +2242,53 @@ impl KvStore {
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(k, _)| k.clone());
             let Some(victim) = victim else { break };
+            // LOOK-M pressure valve: before dropping the LRU image entry
+            // from the device tier, try halving it in place — mean-merge
+            // adjacent tail KV rows, keeping the attention-sink rows
+            // exact. Text (chunk) entries are exempt: LOOK-M's finding is
+            // that *multimodal* rows tolerate merging, text rows do not.
+            // Already-merged entries fall through to normal demotion.
+            if self.cfg.merge_valve && matches!(victim.seg, SegmentId::Image(_)) {
+                let compacted =
+                    g.device.get(&victim).filter(|e| e.merged.is_none()).and_then(|e| {
+                        merge_rows(&e.kv, MERGE_SINK_TOKENS)
+                            .map(|(c, m)| (c, m, e.kv.bytes(), e.last_used))
+                    });
+                if let Some((compact, meta, old, last_used)) = compacted {
+                    let new = compact.bytes();
+                    g.device.insert(
+                        victim,
+                        DeviceEntry { kv: Arc::new(compact), last_used, merged: Some(meta) },
+                    );
+                    g.device_bytes -= old - new;
+                    continue;
+                }
+            }
+            // Read the tenant ceiling before `victim` moves into the map.
+            let floor = self.cfg.host_quant.finer(g.quant_ceiling(&victim.ns));
             let entry = g.device.remove(&victim).unwrap();
             g.device_bytes -= entry.kv.bytes();
             g.stats.device_evictions += 1;
             if g.prefetched.remove(&victim) {
                 g.stats.prefetch_wasted += 1;
             }
+            // A merged victim is re-expanded before demotion: the host
+            // container must hold the full token range so a later promote
+            // serves the entry's declared shape.
+            let demote_kv = match &entry.merged {
+                None => Arc::clone(&entry.kv),
+                Some(m) => Arc::new(expand_merged(&entry.kv, m)),
+            };
+            let (level, deviation) =
+                gate_quant(&demote_kv, floor, self.cfg.max_quant_deviation);
             // Demotion stays serial: it runs under the shard lock and off
             // the request path, where codec fan-out would buy nothing.
-            if let Ok((bytes, rep)) = codec::encode_with(&entry.kv, None) {
+            if let Ok((bytes, rep)) = codec::encode_quant(&demote_kv, level, None) {
                 g.stats.record_codec(rep);
                 g.host_bytes += bytes.len();
                 g.clock += 1;
                 let clock = g.clock;
-                g.host.insert(victim, HostEntry { bytes, last_used: clock });
+                g.host.insert(victim, HostEntry { bytes, last_used: clock, quant: level, deviation });
             }
         }
         while g.host_bytes > self.host_cap_per_shard && g.host.len() > 1 {
@@ -2006,6 +2367,7 @@ mod tests {
             ttl: Duration::from_millis(ttl_ms),
             disk_bandwidth: None,
             shards,
+            ..Default::default()
         })
         .unwrap()
     }
@@ -2612,6 +2974,7 @@ mod tests {
             ttl: Duration::from_secs(60),
             disk_bandwidth: Some(1e6), // 1 MB/s
             shards: 4,
+            ..Default::default()
         })
         .unwrap();
         let e = test_entry(6, 32);
@@ -2811,6 +3174,7 @@ mod tests {
             ttl: Duration::from_secs(60),
             disk_bandwidth: Some(4e6), // 4 MB/s
             shards: 1,
+            ..Default::default()
         })
         .unwrap();
         let e = deep_entry(204, 6, 2048); // ~800 KiB of rng floats, 3 groups
@@ -2868,5 +3232,295 @@ mod tests {
         assert_eq!(s.tier_of(&e.key), Some(Tier::Device));
         assert!(s.group_residency(&e.key).is_none());
         s.check_invariants().unwrap();
+    }
+
+    // ---- compressed tiers (quant floors, merge valve, partial fixes) ----
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    /// Single-shard store with explicit quant policy, tiny device tier
+    /// disabled (huge cap) unless the test overrides via `device_cap`.
+    fn quant_store(
+        tag: &str,
+        device_cap: usize,
+        host_quant: QuantLevel,
+        disk_quant: QuantLevel,
+        max_dev: f32,
+    ) -> KvStore {
+        let dir = std::env::temp_dir().join(format!("mpic-quant-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        KvStore::new(StoreConfig {
+            device_capacity: device_cap,
+            host_capacity: 1 << 30,
+            disk_dir: dir,
+            ttl: Duration::from_secs(60),
+            disk_bandwidth: None,
+            shards: 1,
+            host_quant,
+            disk_quant,
+            max_quant_deviation: max_dev,
+            merge_valve: false,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn int8_host_floor_fits_1_8x_more_entries() {
+        // The e2e capacity criterion: size the host tier for ~N
+        // full-precision entries, then measure how many int8 demotions
+        // fit in the same budget.
+        let base = codec::encode(&test_entry(400, 32)).unwrap().len();
+        let q8 = codec::encode_quant(&test_entry(400, 32), QuantLevel::Int8, None).unwrap().0;
+        assert!(q8.len() * 5 < base * 3, "int8 container must be well under 0.6x: {q8_len}/{base}", q8_len = q8.len());
+        let run = |host_quant: QuantLevel, tag: &str| -> usize {
+            let dir =
+                std::env::temp_dir().join(format!("mpic-cap18-{tag}-{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&dir);
+            let s = KvStore::new(StoreConfig {
+                device_capacity: 1,
+                host_capacity: 6 * base,
+                disk_dir: dir,
+                ttl: Duration::from_secs(60),
+                disk_bandwidth: None,
+                shards: 1,
+                host_quant,
+                ..Default::default()
+            })
+            .unwrap();
+            for i in 0..24u64 {
+                s.put(test_entry(400 + i, 32)).unwrap();
+            }
+            s.entries().iter().filter(|e| e.tier == Tier::Host).count()
+        };
+        let none = run(QuantLevel::None, "none");
+        let int8 = run(QuantLevel::Int8, "int8");
+        assert!(none >= 1);
+        assert!(
+            int8 as f64 >= none as f64 * 1.8,
+            "int8 floor must fit >= 1.8x the full-precision host population: {none} -> {int8}"
+        );
+    }
+
+    #[test]
+    fn demoted_then_promoted_none_is_identical() {
+        let e1 = test_entry(410, 32);
+        let s = quant_store("id-none", e1.bytes() + 1, QuantLevel::None, QuantLevel::None, f32::INFINITY);
+        s.put(e1.clone()).unwrap();
+        s.put(test_entry(411, 32)).unwrap(); // evicts e1 to host
+        let info = s.entry_info(&e1.key).unwrap();
+        assert_eq!((info.tier, info.quant, info.deviation), (Tier::Host, QuantLevel::None, 0.0));
+        let (got, tier) = s.get(&e1.key).unwrap();
+        assert_eq!(tier, Tier::Host);
+        assert_eq!(*got, e1, "QuantLevel::None round-trips bit-exact");
+    }
+
+    #[test]
+    fn demoted_then_promoted_int8_bounded_deviation() {
+        let e1 = test_entry(412, 32);
+        let s = quant_store("i8", e1.bytes() + 1, QuantLevel::Int8, QuantLevel::None, 0.01);
+        s.put(e1.clone()).unwrap();
+        s.put(test_entry(413, 32)).unwrap();
+        let info = s.entry_info(&e1.key).unwrap();
+        assert_eq!((info.tier, info.quant), (Tier::Host, QuantLevel::Int8));
+        assert!(info.deviation > 0.0 && info.deviation <= 0.01, "recorded dev: {}", info.deviation);
+        let (got, tier) = s.get(&e1.key).unwrap();
+        assert_eq!(tier, Tier::Host);
+        assert_eq!(got.shape, e1.shape);
+        // Per-element error is bounded by half an int8 step (scale <= 1/127 on [0,1) rows).
+        assert!(max_abs_diff(&got.emb, &e1.emb) <= 0.006);
+        assert!(max_abs_diff(&got.k, &e1.k) <= 0.006);
+        assert!(max_abs_diff(&got.v, &e1.v) <= 0.006);
+    }
+
+    #[test]
+    fn deviation_gate_steps_int4_down_to_int8() {
+        // Int4 on uniform [0,1) rows deviates ~0.036 — over a 0.003
+        // budget the gate must settle on int8 (~0.002) instead.
+        let e1 = test_entry(414, 32);
+        let s = quant_store("i4-step", e1.bytes() + 1, QuantLevel::Int4, QuantLevel::None, 0.003);
+        s.put(e1.clone()).unwrap();
+        s.put(test_entry(415, 32)).unwrap();
+        let info = s.entry_info(&e1.key).unwrap();
+        assert_eq!((info.tier, info.quant), (Tier::Host, QuantLevel::Int8));
+        assert!(info.deviation <= 0.003, "gate must respect the budget: {}", info.deviation);
+    }
+
+    #[test]
+    fn int4_floor_within_budget_round_trips_coarsely() {
+        let e1 = test_entry(416, 32);
+        let s = quant_store("i4", e1.bytes() + 1, QuantLevel::Int4, QuantLevel::None, 0.05);
+        s.put(e1.clone()).unwrap();
+        s.put(test_entry(417, 32)).unwrap();
+        let info = s.entry_info(&e1.key).unwrap();
+        assert_eq!(info.quant, QuantLevel::Int4);
+        let (got, _) = s.get(&e1.key).unwrap();
+        // Half an int4 step (scale <= 1/7) plus float fuzz.
+        assert!(max_abs_diff(&got.k, &e1.k) <= 0.08);
+        assert!(max_abs_diff(&got.v, &e1.v) <= 0.08);
+    }
+
+    #[test]
+    fn disk_floor_writes_quantized_container() {
+        let s = quant_store("disk8", 1 << 30, QuantLevel::None, QuantLevel::Int8, f32::INFINITY);
+        let e = test_entry(420, 32);
+        s.put(e.clone()).unwrap();
+        // Host tier is empty, so the container comes off the disk file:
+        // it must be a v6 int8 container end to end.
+        let slice = s.container_prefix(&e.key, None).unwrap();
+        assert_eq!(codec::parse_container(&slice.bytes).unwrap().max_quant(), QuantLevel::Int8);
+        s.drop_device_for_test(&e.key);
+        let info = s.entry_info(&e.key).unwrap();
+        assert_eq!((info.tier, info.quant), (Tier::Disk, QuantLevel::Int8));
+        let (got, tier) = s.get(&e.key).unwrap();
+        assert_eq!(tier, Tier::Disk);
+        assert_eq!(got.shape, e.shape);
+        assert!(max_abs_diff(&got.k, &e.k) <= 0.006);
+    }
+
+    #[test]
+    fn ns_quant_ceiling_opts_out_of_compression() {
+        let s = quant_store("ns-opt", 6000, QuantLevel::Int4, QuantLevel::Int4, f32::INFINITY);
+        s.set_ns_quant(&Namespace::default(), QuantLevel::None);
+        assert_eq!(s.ns_quant(&Namespace::default()), QuantLevel::None);
+        let e1 = test_entry(430, 32);
+        s.put(e1.clone()).unwrap();
+        s.put(test_entry(431, 32)).unwrap(); // evicts e1, but the tenant opted out
+        let info = s.entry_info(&e1.key).unwrap();
+        assert_eq!((info.tier, info.quant), (Tier::Host, QuantLevel::None));
+        let (got, tier) = s.get(&e1.key).unwrap();
+        assert_eq!(tier, Tier::Host);
+        assert_eq!(*got, e1, "opted-out tenants round-trip bit-exact");
+    }
+
+    #[test]
+    fn merge_valve_compacts_image_entries_under_pressure() {
+        let e1 = test_entry(440, 32);
+        let dir = std::env::temp_dir().join(format!("mpic-merge-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = KvStore::new(StoreConfig {
+            // Fits one full entry plus one merged (~65%) entry, not two full.
+            device_capacity: e1.bytes() * 7 / 4,
+            host_capacity: 1 << 30,
+            disk_dir: dir,
+            ttl: Duration::from_secs(60),
+            disk_bandwidth: None,
+            shards: 1,
+            merge_valve: true,
+            ..Default::default()
+        })
+        .unwrap();
+        s.put(e1.clone()).unwrap();
+        let e2 = test_entry(441, 32);
+        s.put(e2.clone()).unwrap();
+        let info = s.entry_info(&e1.key).unwrap();
+        assert!(info.merged, "pressure valve must merge, not evict: {info:?}");
+        assert_eq!(info.tier, Tier::Device);
+        assert_eq!(s.tier_of(&e2.key), Some(Tier::Device));
+        assert_eq!(s.stats().merged_entries, 1);
+        // Serving a merged entry re-expands it to the declared shape.
+        let (got, tier) = s.get(&e1.key).unwrap();
+        assert_eq!(tier, Tier::Device);
+        assert_eq!(got.shape, e1.shape);
+        assert_eq!(got.k.len(), e1.k.len());
+        assert_eq!(got.emb, e1.emb, "embeddings are never merged");
+        let row = e1.shape.heads * e1.shape.d_head;
+        for l in 0..e1.shape.layers {
+            let base = l * e1.shape.tokens * row;
+            // Attention-sink rows stay bit-exact...
+            assert_eq!(
+                got.k[base..base + MERGE_SINK_TOKENS * row],
+                e1.k[base..base + MERGE_SINK_TOKENS * row]
+            );
+            // ...and a merged pair serves the pair mean in both slots.
+            for j in 0..row {
+                let a = base + MERGE_SINK_TOKENS * row + j;
+                let b = a + row;
+                let want = 0.5 * (e1.k[a] + e1.k[b]);
+                assert!((got.k[a] - want).abs() < 1e-6);
+                assert!((got.k[b] - want).abs() < 1e-6);
+            }
+        }
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn merge_valve_exempts_text_chunks() {
+        let c1 = test_chunk_entry(450, 32);
+        let dir = std::env::temp_dir().join(format!("mpic-merge-chunk-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = KvStore::new(StoreConfig {
+            device_capacity: c1.bytes() * 7 / 4,
+            host_capacity: 1 << 30,
+            disk_dir: dir,
+            ttl: Duration::from_secs(60),
+            disk_bandwidth: None,
+            shards: 1,
+            merge_valve: true,
+            ..Default::default()
+        })
+        .unwrap();
+        s.put(c1.clone()).unwrap();
+        s.put(test_chunk_entry(451, 32)).unwrap();
+        assert_eq!(s.stats().merged_entries, 0, "text rows are merge-exempt (LOOK-M)");
+        let info = s.entry_info(&c1.key).unwrap();
+        assert_eq!((info.tier, info.merged), (Tier::Host, false));
+        let (got, _) = s.get(&c1.key).unwrap();
+        assert_eq!(*got, c1);
+    }
+
+    #[test]
+    fn partial_assemblies_visible_in_listing_and_stats() {
+        let s = store(1 << 30, 60_000);
+        let e = deep_entry(460, 6, 16); // 3 groups
+        s.put(e.clone()).unwrap();
+        s.drop_device_for_test(&e.key);
+        assert_eq!(s.prefetch_groups(&e.key, 1), 1);
+        let listed = s.entries();
+        assert_eq!(listed.iter().filter(|l| l.key == e.key).count(), 1, "one row per key");
+        let row = listed.iter().find(|l| l.key == e.key).unwrap();
+        assert_eq!(row.partial, Some((1, 3)), "partial residency must be listed: {row:?}");
+        assert_eq!(row.tier, Tier::Device);
+        assert!(row.bytes > 0, "partial bytes must be counted");
+        let info = s.entry_info(&e.key).unwrap();
+        assert_eq!(info.partial, Some((1, 3)));
+        assert_eq!(info.bytes, row.bytes);
+        assert!(s.stats().bytes_device >= row.bytes as u64);
+    }
+
+    #[test]
+    fn sweep_reaps_orphaned_partial_groups() {
+        let s = store_cfg(1 << 30, 60, 1, "sweep-partial");
+        let e = deep_entry(470, 6, 16);
+        s.put(e.clone()).unwrap();
+        s.drop_device_for_test(&e.key);
+        assert_eq!(s.prefetch_groups(&e.key, 1), 1);
+        assert!(s.residency().0 > 0);
+        std::thread::sleep(Duration::from_millis(120));
+        let rep = s.sweep();
+        assert!(rep.expired_entries >= 1, "disk copy expires: {rep:?}");
+        assert_eq!(rep.orphaned_partials, 1, "orphaned partial must be reclaimed: {rep:?}");
+        assert_eq!(s.residency().0, 0, "partial device bytes reclaimed");
+        assert!(s.group_residency(&e.key).is_none());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn v6_container_peer_admit_roundtrip() {
+        let src = quant_store("v6-src", 1 << 30, QuantLevel::None, QuantLevel::Int8, f32::INFINITY);
+        let e = test_entry(480, 32);
+        src.put(e.clone()).unwrap();
+        let slice = src.container_prefix(&e.key, None).unwrap();
+        assert_eq!(codec::parse_container(&slice.bytes).unwrap().max_quant(), QuantLevel::Int8);
+
+        let dst = store_cfg(1 << 30, 60_000, 4, "v6-dst");
+        let got = dst.admit_container(&e.key, slice.bytes).unwrap();
+        assert_eq!(got.shape, e.shape);
+        assert!(max_abs_diff(&got.k, &e.k) <= 0.006);
+        assert!(max_abs_diff(&got.v, &e.v) <= 0.006);
+        assert_eq!(dst.tier_of(&e.key), Some(Tier::Device));
+        let st = dst.stats();
+        assert!(st.quant_entries_int8 >= 1, "admitted container keeps its quant level: {st:?}");
     }
 }

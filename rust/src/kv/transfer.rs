@@ -851,6 +851,7 @@ mod tests {
                     ttl: Duration::from_secs(60),
                     disk_bandwidth: bandwidth,
                     shards,
+                    ..Default::default()
                 },
                 Arc::clone(&pool),
             )
@@ -983,6 +984,7 @@ mod tests {
                     ttl: Duration::from_secs(60),
                     disk_bandwidth: None,
                     shards: 1,
+                    ..Default::default()
                 },
                 Arc::clone(&pool),
             )

@@ -6,6 +6,8 @@
 //!             [--conn-threads 8] [--kv-blocks 4096] [--block-tokens 16]
 //!             [--peers HOST:PORT,...] [--peer-timeout-ms 500]
 //!             [--metrics-addr HOST:PORT] [--slow-ms MS]
+//!             [--host-quant none|int8|int4] [--disk-quant none|int8|int4]
+//!             [--max-quant-dev 0.01]
 //! mpic router --workers HOST:PORT,HOST:PORT,... [--listen 127.0.0.1:7400]
 //!             [--mode affinity|rr] [--probe-timeout-ms 300] [--stats-interval-ms 500]
 //!             [--metrics-addr HOST:PORT]
@@ -70,11 +72,36 @@ fn typed_client(args: &Args) -> anyhow::Result<MpicClient> {
     }
 }
 
+/// A `--host-quant`/`--disk-quant` value: `none` (full precision),
+/// `int8`, or `int4`.
+fn parse_quant(args: &Args, flag: &str) -> anyhow::Result<Option<mpic::kv::QuantLevel>> {
+    args.get(flag)
+        .map(|s| mpic::kv::QuantLevel::parse(s))
+        .transpose()
+        .with_context(|| format!("--{flag} must be none|int8|int4"))
+}
+
 fn engine_from(args: &Args) -> anyhow::Result<Engine> {
+    // Compressed-tier floors: entries demoted to host/disk are quantized
+    // at least this coarsely (subject to the deviation gate below).
+    let mut store = mpic::kv::StoreConfig::default();
+    if let Some(q) = parse_quant(args, "host-quant")? {
+        store.host_quant = q;
+    }
+    if let Some(q) = parse_quant(args, "disk-quant")? {
+        store.disk_quant = q;
+    }
     let cfg = EngineConfig {
         artifact_dir: args.str_or("artifacts", mpic::DEFAULT_ARTIFACT_DIR).into(),
         model: args.str_or("model", "mpic-sim-a"),
         max_new_tokens: args.usize_or("max-new", 16)?,
+        store,
+        max_quant_deviation: args
+            .get("max-quant-dev")
+            .map(|s| s.parse::<f32>())
+            .transpose()
+            .context("--max-quant-dev must be a mean-abs-deviation bound, e.g. 0.01")?
+            .unwrap_or(f32::INFINITY),
         ..Default::default()
     };
     Engine::new(cfg).context("starting engine (did you run `make artifacts`?)")
@@ -389,6 +416,8 @@ fn run() -> anyhow::Result<()> {
             println!("                [--peers HOST:PORT,... --peer-timeout-ms MS]   (peer KV lane)");
             println!("                [--metrics-addr HOST:PORT]  (Prometheus scrape endpoint)");
             println!("                [--slow-ms MS]              (slow-request log threshold)");
+            println!("                [--host-quant none|int8|int4 --disk-quant none|int8|int4]");
+            println!("                [--max-quant-dev BOUND]     (compressed-tier quality gate)");
             println!("  router        --workers HOST:PORT,HOST:PORT,... [--listen HOST:PORT]");
             println!("                [--mode affinity|rr --probe-timeout-ms MS --stats-interval-ms MS]");
             println!("                [--metrics-addr HOST:PORT]  (aggregated cluster endpoint)");

@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::engine::{EvictOutcome, InferenceResult};
 use crate::coordinator::session::SessionStore;
 use crate::coordinator::{Engine, Policy};
-use crate::kv::{EntryInfo, Tier};
+use crate::kv::{EntryInfo, QuantLevel, Tier};
 use crate::mm::{ChunkId, ImageId, Namespace, Prompt, SegmentId, UserId};
 use crate::util::json::Value;
 use crate::util::trace::TraceId;
@@ -379,6 +379,28 @@ impl FromValue for CachePinReq {
     }
 }
 
+/// `cache.quant` — read or set the caller namespace's quant ceiling:
+/// the coarsest compression level demotion-time requantization may use
+/// for the tenant's entries. Omitting `"level"` reads without changing;
+/// `"level":"none"` opts the tenant out of lossy tiers.
+#[derive(Debug, Clone)]
+pub struct CacheQuantReq {
+    pub level: Option<QuantLevel>,
+}
+
+impl FromValue for CacheQuantReq {
+    fn from_value(v: &Value) -> ApiResult<CacheQuantReq> {
+        let level = match opt_str(v, "level")? {
+            None => None,
+            Some(s) => Some(
+                QuantLevel::parse(&s)
+                    .map_err(|e| ApiError::new(ErrorCode::BadValue, format!("{e:#}")))?,
+            ),
+        };
+        Ok(CacheQuantReq { level })
+    }
+}
+
 /// `cache.lease` — take a bounded-lifetime lease on an entry. Omitting
 /// `ttl_ms` grants an infinite lease (equivalent to a v2 pin, but with an
 /// id that can be released).
@@ -526,6 +548,14 @@ pub struct CacheEntryResp {
     pub bytes: usize,
     pub pinned: bool,
     pub leases: usize,
+    /// Quant level of the resident bytes (`None` on device).
+    pub quant: QuantLevel,
+    /// Layer-0 round-trip deviation recorded at (re)quantization.
+    pub deviation: f32,
+    /// Device entry compacted by the LOOK-M merge valve.
+    pub merged: bool,
+    /// In-flight partial assembly: (resident groups, total groups).
+    pub partial: Option<(usize, usize)>,
 }
 
 fn tier_str(t: Tier) -> &'static str {
@@ -546,21 +576,41 @@ impl From<EntryInfo> for CacheEntryResp {
             bytes: e.bytes,
             pinned: e.pinned,
             leases: e.leases,
+            quant: e.quant,
+            deviation: e.deviation,
+            merged: e.merged,
+            partial: e.partial,
         }
     }
 }
 
 impl ToValue for CacheEntryResp {
     fn to_value(&self) -> Value {
+        // Satellite fix: an in-flight partial assembly used to render as
+        // a bare "device" entry (or not at all) — it now names its group
+        // residency so `cache.list`/`cache.stat` reflect reality.
+        let tier = match self.partial {
+            Some((groups, n_groups)) => format!("partial:{groups}/{n_groups}"),
+            None => tier_str(self.tier).to_string(),
+        };
         let mut v = Value::obj(vec![
             ("model", Value::str(&self.model)),
             ("kind", Value::str(self.seg.kind_str())),
             ("segment", Value::str(format!("{:016x}", self.seg.raw()))),
-            ("tier", Value::str(tier_str(self.tier))),
+            ("tier", Value::str(tier)),
             ("bytes", Value::num(self.bytes as f64)),
             ("pinned", Value::Bool(self.pinned)),
             ("leases", Value::num(self.leases as f64)),
         ]);
+        // Compressed/merged residency is opt-in detail: full-precision
+        // whole entries keep the exact pre-v6 reply shape.
+        if self.quant != QuantLevel::None {
+            v.set("quant", Value::str(self.quant.as_str()));
+            v.set("deviation", Value::num(self.deviation as f64));
+        }
+        if self.merged {
+            v.set("merged", Value::Bool(true));
+        }
         // Namespaced entries name their tenant; default-ns entries stay
         // byte-compatible with the v2 shape.
         if !self.ns.is_default() {
@@ -1007,6 +1057,20 @@ fn dispatch_op(
             }
         }
 
+        // Per-tenant compression policy: read (no "level") or set the
+        // namespace's quant ceiling. Replies always carry the ceiling
+        // now in force, so a bare read and a set share one shape.
+        "cache.quant" => {
+            let q = CacheQuantReq::from_value(req)?;
+            if let Some(level) = q.level {
+                engine.set_cache_quant(&env.ns, level);
+            }
+            Ok(Value::obj(vec![(
+                "level",
+                Value::str(engine.cache_quant(&env.ns).as_str()),
+            )]))
+        }
+
         "cache.pin" => {
             let q = CachePinReq::from_value(req)?;
             if !engine.cache_pin(&env.ns, &q.handle, q.pinned) {
@@ -1363,11 +1427,17 @@ mod tests {
             bytes: 10,
             pinned: false,
             leases: 0,
+            quant: QuantLevel::None,
+            deviation: 0.0,
+            merged: false,
+            partial: None,
         };
         let v = img.to_value();
         assert_eq!(v.get("kind").unwrap().as_str().unwrap(), "image");
         assert!(v.get("image").is_ok(), "image entries keep the v1 field");
         assert!(v.opt("ns").is_none(), "default-ns entries keep the v2 shape");
+        assert!(v.opt("quant").is_none(), "full-precision entries keep the pre-v6 shape");
+        assert!(v.opt("merged").is_none());
         assert_eq!(v.get("leases").unwrap().as_u64().unwrap(), 0);
         let chk = CacheEntryResp::from(EntryInfo {
             key: KvKey::chunk("m", ChunkId(0xCD)).in_ns(&Namespace::new("tenant-a").unwrap()),
@@ -1375,6 +1445,10 @@ mod tests {
             bytes: 5,
             pinned: true,
             leases: 2,
+            quant: QuantLevel::Int8,
+            deviation: 0.002,
+            merged: false,
+            partial: None,
         });
         let v = chk.to_value();
         assert_eq!(v.get("kind").unwrap().as_str().unwrap(), "chunk");
@@ -1383,6 +1457,52 @@ mod tests {
         assert!(v.get("pinned").unwrap().as_bool().unwrap());
         assert_eq!(v.get("ns").unwrap().as_str().unwrap(), "tenant-a");
         assert_eq!(v.get("leases").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(v.get("quant").unwrap().as_str().unwrap(), "int8");
+        assert!(v.get("deviation").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn cache_entry_resp_renders_partial_and_merged_residency() {
+        use crate::kv::KvKey;
+        let part = CacheEntryResp::from(EntryInfo {
+            key: KvKey::image("m", ImageId(1)),
+            tier: Tier::Device,
+            bytes: 64,
+            pinned: false,
+            leases: 0,
+            quant: QuantLevel::None,
+            deviation: 0.0,
+            merged: false,
+            partial: Some((2, 3)),
+        });
+        let v = part.to_value();
+        assert_eq!(v.get("tier").unwrap().as_str().unwrap(), "partial:2/3");
+        let merged = CacheEntryResp::from(EntryInfo {
+            key: KvKey::image("m", ImageId(2)),
+            tier: Tier::Device,
+            bytes: 64,
+            pinned: false,
+            leases: 0,
+            quant: QuantLevel::None,
+            deviation: 0.0,
+            merged: true,
+            partial: None,
+        });
+        let v = merged.to_value();
+        assert_eq!(v.get("tier").unwrap().as_str().unwrap(), "device");
+        assert!(v.get("merged").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn cache_quant_requests_parse() {
+        let q = CacheQuantReq::from_value(&parse(r#"{"op":"cache.quant"}"#)).unwrap();
+        assert!(q.level.is_none(), "bare request reads without changing");
+        let q = CacheQuantReq::from_value(&parse(r#"{"op":"cache.quant","level":"int8"}"#))
+            .unwrap();
+        assert_eq!(q.level, Some(QuantLevel::Int8));
+        let e = CacheQuantReq::from_value(&parse(r#"{"op":"cache.quant","level":"int3"}"#))
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadValue);
     }
 
     #[test]

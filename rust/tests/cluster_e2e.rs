@@ -12,7 +12,10 @@
 //!   phase) — parseable, decodable, exactly the advertised length;
 //! * uploads routed through `mpic router` land on the consistent-hash
 //!   ring owner, and a generation referencing that segment is routed
-//!   back to it (`routed_affinity_hits` ≥ 1 on the owner).
+//!   back to it (`routed_affinity_hits` ≥ 1 on the owner);
+//! * with int8 tier floors on the owner, the container a peer pulls is
+//!   the *quantized* v6 format end-to-end, and the pull still pre-empts
+//!   the recompute entirely (`recomputes` stays 0).
 //!
 //! Skips when artifacts are not built (same contract as `serving_e2e`).
 
@@ -23,6 +26,7 @@ use std::thread::JoinHandle;
 
 use mpic::cluster::{serve_router, HashRing, PeerConfig, PeerTransport, RouterConfig};
 use mpic::coordinator::{Engine, EngineConfig};
+use mpic::kv::QuantLevel;
 use mpic::mm::{ImageId, Namespace, SegmentId};
 use mpic::server::{serve_with, Client, ServeConfig};
 use mpic::util::json::Value;
@@ -50,15 +54,25 @@ fn assert_code(resp: &Value, code: &str) {
 
 /// Spawn one worker on its own thread (the engine and PJRT stay on the
 /// serving thread, as in `serving_e2e`). `peers` installs a
-/// [`PeerTransport`] so this worker's local misses consult them.
-fn spawn_worker(tag: &'static str, peers: Vec<SocketAddr>) -> (SocketAddr, JoinHandle<()>) {
+/// [`PeerTransport`] so this worker's local misses consult them;
+/// `quant` sets both compressed-tier floors (host and disk).
+fn spawn_worker(
+    tag: &'static str,
+    peers: Vec<SocketAddr>,
+    quant: QuantLevel,
+) -> (SocketAddr, JoinHandle<()>) {
     let (tx, rx) = mpsc::channel();
     let handle = std::thread::spawn(move || {
         let dir = std::env::temp_dir().join(format!("mpic-cluster-{tag}-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         let mut engine = Engine::new(EngineConfig {
             model: "mpic-sim-a".into(),
-            store: mpic::kv::StoreConfig { disk_dir: dir, ..Default::default() },
+            store: mpic::kv::StoreConfig {
+                disk_dir: dir,
+                host_quant: quant,
+                disk_quant: quant,
+                ..Default::default()
+            },
             max_new_tokens: 4,
             ..Default::default()
         })
@@ -116,10 +130,16 @@ fn cluster_end_to_end() {
         eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
         return;
     }
+    routed_cluster();
+    quantized_peer_lane();
+}
 
+/// The full-precision cluster path: peer pull, group-range prefix pull,
+/// router placement and affinity routing.
+fn routed_cluster() {
     // Worker A is standalone; worker B peers with A.
-    let (a_addr, a_join) = spawn_worker("a", vec![]);
-    let (b_addr, b_join) = spawn_worker("b", vec![a_addr]);
+    let (a_addr, a_join) = spawn_worker("a", vec![], QuantLevel::None);
+    let (b_addr, b_join) = spawn_worker("b", vec![a_addr], QuantLevel::None);
     let ring = HashRing::new(2);
 
     // ------------------------------------------------------------------
@@ -265,4 +285,63 @@ fn cluster_end_to_end() {
     drop(cb);
     shutdown_worker(a_addr, a_join);
     shutdown_worker(b_addr, b_join);
+    println!("OK routed cluster");
+}
+
+/// Compressed tiers on the live wire: worker A's host/disk floors are
+/// int8, so the container it serves peers is the quantized v6 format —
+/// pulled, admitted and dequantized on B with zero recomputes.
+fn quantized_peer_lane() {
+    let (a_addr, a_join) = spawn_worker("qa", vec![], QuantLevel::Int8);
+    let (b_addr, b_join) = spawn_worker("qb", vec![a_addr], QuantLevel::None);
+    let handle = "IMAGE#cluster-e2e-quant";
+    let mut ca = Client::connect(a_addr).unwrap();
+    let mut cb = Client::connect(b_addr).unwrap();
+
+    let up = ca
+        .call(&v(&format!(r#"{{"v":3,"id":"qu","op":"upload","user":1,"handle":"{handle}"}}"#)))
+        .unwrap();
+    assert_ok(&up);
+
+    // What A serves the peer lane really is a v6 quantized container:
+    // pull it directly and sniff the header.
+    let seg_hex = format!("{:016x}", ImageId::from_handle(handle).0);
+    let pull = ca
+        .call(&v(&format!(
+            r#"{{"v":3,"id":"qp","op":"kv.pull","model":"mpic-sim-a","kind":"image","segment":"{seg_hex}"}}"#
+        )))
+        .unwrap();
+    assert_ok(&pull);
+    let bytes = mpic::kv::codec::unframe(pull.get("frame").unwrap().as_str().unwrap()).unwrap();
+    let info = mpic::kv::codec::parse_container(&bytes).unwrap();
+    assert_eq!(info.version, 6, "int8 tier floors must produce v6 containers");
+    assert_eq!(info.max_quant(), QuantLevel::Int8, "container must carry the int8 level");
+
+    // Infer on B: the quantized container must serve the whole reuse
+    // span — pulled from A, never recomputed.
+    let gen = cb
+        .call(&v(&format!(
+            r#"{{"v":3,"id":"qi","op":"infer","user":1,"text":"describe {handle} briefly","max_new":4}}"#
+        )))
+        .unwrap();
+    assert_ok(&gen);
+    let b_stats = cb.call(&v(r#"{"v":3,"id":"qs","op":"stats"}"#)).unwrap();
+    assert_ok(&b_stats);
+    assert!(
+        cluster_counter(&b_stats, "peer_pulls") >= 1.0,
+        "B must have pulled the quantized container from A: {}",
+        b_stats.encode()
+    );
+    assert_eq!(
+        cluster_counter(&b_stats, "recomputes"),
+        0.0,
+        "the quantized peer hit must still pre-empt the recompute: {}",
+        b_stats.encode()
+    );
+
+    drop(ca);
+    drop(cb);
+    shutdown_worker(a_addr, a_join);
+    shutdown_worker(b_addr, b_join);
+    println!("OK quantized peer lane");
 }

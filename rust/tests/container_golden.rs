@@ -1,0 +1,255 @@
+//! Container-format conformance: decode the checked-in golden v1…v6
+//! codec containers byte-for-byte, so a version-sniffing or layout
+//! change that would strand old host/disk/peer containers fails loudly
+//! here instead of silently invalidating every persisted cache.
+//!
+//! The fixtures in `rust/tests/data/container_v*.bin` are FROZEN — they
+//! were produced once by `gen_containers.py` (stdlib-only, hand-built
+//! raw-block zstd frames, see that file for provenance) and must never
+//! be regenerated; only new versions may be added. The tensor patterns
+//! below mirror the generator exactly: full-precision values are
+//! multiples of 0.25 (exact in f32), and the v6 quantized rows each
+//! peak at the quantizer's qmax so the row scale is exactly 1.0 and the
+//! integer-valued floats survive the int8/int4 round trip bit-exactly.
+
+use mpic::kv::codec;
+use mpic::kv::{KvKey, KvShape, QuantLevel};
+use mpic::mm::{ChunkId, ImageId, Namespace, SegmentId};
+
+const MODEL: &str = "mpic-sim-a";
+/// tokens * heads * d_head: floats per layer in each of K and V.
+const PER_LAYER: usize = 8;
+/// heads * d_head: the quantizer's K/V row width.
+const ROW: usize = 4;
+
+fn shape() -> KvShape {
+    KvShape { layers: 4, tokens: 2, heads: 2, d_head: 2, d_model: 4 }
+}
+
+// --- full-precision tensors (v1..v5): multiples of 0.25, exact in f32 ---
+
+fn emb_fp() -> Vec<f32> {
+    (0..8).map(|i| (i % 13) as f32 * 0.5 - 3.0).collect()
+}
+
+fn k_fp() -> Vec<f32> {
+    (0..32).map(|i| ((i * 3) % 17) as f32 * 0.25 - 2.0).collect()
+}
+
+fn v_fp() -> Vec<f32> {
+    (0..32).map(|i| ((i * 7) % 19) as f32 * 0.25 - 2.25).collect()
+}
+
+// --- quant-exact tensors (v6): every row peaks at qmax, scale = 1.0 ---
+
+fn q8(r: usize, j: usize) -> f32 {
+    let peak = if r % 2 == 0 { 127.0 } else { -127.0 };
+    if j == 0 {
+        peak
+    } else {
+        ((r * 31 + j * 7) % 200) as f32 - 100.0
+    }
+}
+
+fn q4(r: usize, j: usize) -> f32 {
+    let peak = if r % 2 == 0 { 7.0 } else { -7.0 };
+    if j == 0 {
+        peak
+    } else {
+        ((r * 5 + j * 3) % 15) as f32 - 7.0
+    }
+}
+
+fn emb_q() -> Vec<f32> {
+    (0..8).map(|i| q8(i / ROW, i % ROW)).collect()
+}
+
+/// K/V rows of layers 0..2 (rows 0..4, the int8 group) follow the q8
+/// pattern; layers 2..4 (rows 4..8, the int4 group) follow q4.
+const Q_SPLIT: usize = 2 * PER_LAYER / ROW;
+
+fn k_q() -> Vec<f32> {
+    (0..32)
+        .map(|i| {
+            let (r, j) = (i / ROW, i % ROW);
+            if r < Q_SPLIT {
+                q8(r, j)
+            } else {
+                q4(r, j)
+            }
+        })
+        .collect()
+}
+
+fn v_q() -> Vec<f32> {
+    (0..32)
+        .map(|i| {
+            let (r, j) = (i / ROW, i % ROW);
+            if r < Q_SPLIT {
+                q8(r + 3, j)
+            } else {
+                q4(r + 3, j)
+            }
+        })
+        .collect()
+}
+
+fn load(file: &str) -> Vec<u8> {
+    let path = std::path::Path::new("rust/tests/data").join(file);
+    std::fs::read(&path)
+        .unwrap_or_else(|e| panic!("golden container {} unreadable: {e}", path.display()))
+}
+
+struct Golden {
+    file: &'static str,
+    version: u32,
+    key: KvKey,
+    has_emb: bool,
+    n_groups: usize,
+    max_quant: QuantLevel,
+    emb: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+fn goldens() -> Vec<Golden> {
+    let gold_ns = Namespace::new("tenant-gold").unwrap();
+    vec![
+        Golden {
+            file: "container_v1.bin",
+            version: 1,
+            key: KvKey::image(MODEL, ImageId(0x5101)),
+            has_emb: true,
+            n_groups: 1,
+            max_quant: QuantLevel::None,
+            emb: emb_fp(),
+            k: k_fp(),
+            v: v_fp(),
+        },
+        Golden {
+            file: "container_v2.bin",
+            version: 2,
+            key: KvKey::image(MODEL, ImageId(0x5102)),
+            has_emb: true,
+            n_groups: 1,
+            max_quant: QuantLevel::None,
+            emb: emb_fp(),
+            k: k_fp(),
+            v: v_fp(),
+        },
+        Golden {
+            file: "container_v3.bin",
+            version: 3,
+            key: KvKey::chunk(MODEL, ChunkId(0x5103)),
+            has_emb: false,
+            n_groups: 1,
+            max_quant: QuantLevel::None,
+            emb: vec![],
+            k: k_fp(),
+            v: v_fp(),
+        },
+        Golden {
+            file: "container_v4.bin",
+            version: 4,
+            key: KvKey::segment(MODEL, &gold_ns, SegmentId::Image(ImageId(0x5104))),
+            has_emb: true,
+            n_groups: 1,
+            max_quant: QuantLevel::None,
+            emb: emb_fp(),
+            k: k_fp(),
+            v: v_fp(),
+        },
+        Golden {
+            file: "container_v5.bin",
+            version: 5,
+            key: KvKey::image(MODEL, ImageId(0x5105)),
+            has_emb: true,
+            n_groups: 2,
+            max_quant: QuantLevel::None,
+            emb: emb_fp(),
+            k: k_fp(),
+            v: v_fp(),
+        },
+        Golden {
+            file: "container_v6.bin",
+            version: 6,
+            key: KvKey::segment(MODEL, &gold_ns, SegmentId::Image(ImageId(0x5106))),
+            has_emb: true,
+            n_groups: 2,
+            max_quant: QuantLevel::Int4,
+            emb: emb_q(),
+            k: k_q(),
+            v: v_q(),
+        },
+    ]
+}
+
+/// Every historical container version parses to the right header and
+/// decodes to the exact tensors it was written from.
+#[test]
+fn golden_containers_decode() {
+    for g in goldens() {
+        let bytes = load(g.file);
+        let info = codec::parse_container(&bytes)
+            .unwrap_or_else(|e| panic!("{}: parse_container failed: {e:#}", g.file));
+        assert_eq!(info.version, g.version, "{}: version", g.file);
+        assert_eq!(info.key, g.key, "{}: key", g.file);
+        assert_eq!(info.shape, shape(), "{}: shape", g.file);
+        assert_eq!(info.has_emb, g.has_emb, "{}: has_emb", g.file);
+        assert_eq!(info.n_groups(), g.n_groups, "{}: group count", g.file);
+        assert_eq!(info.max_quant(), g.max_quant, "{}: max quant", g.file);
+
+        let e = codec::decode(&bytes)
+            .unwrap_or_else(|e| panic!("{}: decode failed: {e:#}", g.file));
+        e.validate().unwrap_or_else(|e| panic!("{}: invalid entry: {e:#}", g.file));
+        assert_eq!(e.key, g.key, "{}: decoded key", g.file);
+        assert_eq!(e.shape, shape(), "{}: decoded shape", g.file);
+        assert_eq!(e.emb, g.emb, "{}: emb payload", g.file);
+        assert_eq!(e.k, g.k, "{}: k payload", g.file);
+        assert_eq!(e.v, g.v, "{}: v payload", g.file);
+        println!("OK golden {}", g.file);
+    }
+}
+
+/// The v6 fixture's group partition: per-group quant levels survive the
+/// header round trip, a single group decodes in isolation, and a
+/// container *prefix* covering only group 0 stays self-contained — the
+/// exact slice `kv.pull` serves for group-range requests.
+#[test]
+fn golden_v6_groups_and_prefix() {
+    let bytes = load("container_v6.bin");
+    let info = codec::parse_container(&bytes).expect("parse v6");
+    assert_eq!(info.group_quant(0), QuantLevel::Int8);
+    assert_eq!(info.group_quant(1), QuantLevel::Int4);
+    assert_eq!(info.group_layers(0), (0, 2));
+    assert_eq!(info.group_layers(1), (2, 4));
+
+    let g1 = codec::decode_group(&info, &bytes, 1).expect("decode group 1");
+    assert!(g1.emb.is_empty(), "only group 0 carries embeddings");
+    assert_eq!(g1.k, k_q()[2 * PER_LAYER..], "group 1 k rows");
+    assert_eq!(g1.v, v_q()[2 * PER_LAYER..], "group 1 v rows");
+
+    let prefix = &bytes[..info.prefix_len(1)];
+    assert!(prefix.len() < bytes.len(), "prefix must drop group 1's chunks");
+    let g0 = codec::decode_group(&info, prefix, 0).expect("decode group 0 from prefix");
+    assert_eq!(g0.emb, emb_q(), "group 0 emb from prefix");
+    assert_eq!(g0.k, k_q()[..2 * PER_LAYER], "group 0 k rows from prefix");
+    assert_eq!(g0.v, v_q()[..2 * PER_LAYER], "group 0 v rows from prefix");
+    assert!(
+        codec::decode_group(&info, prefix, 1).is_err(),
+        "group 1 must not decode from a group-0 prefix"
+    );
+    println!("OK golden v6 groups + prefix");
+}
+
+/// Chunk integrity is part of the frozen contract: a flipped payload
+/// byte must fail the SHA-256 check, not decode to corrupt tensors.
+#[test]
+fn golden_corruption_detected() {
+    for file in ["container_v1.bin", "container_v2.bin", "container_v6.bin"] {
+        let mut bytes = load(file);
+        *bytes.last_mut().unwrap() ^= 0xff;
+        assert!(codec::decode(&bytes).is_err(), "{file}: corrupted tail must not decode");
+    }
+    println!("OK golden corruption detection");
+}

@@ -1,0 +1,230 @@
+#!/usr/bin/env python3
+"""Generator for the golden container fixtures (container_v1.bin ... v6).
+
+The fixtures are FROZEN: once checked in they must never be regenerated,
+only new versions may be added -- rust/tests/container_golden.rs decodes
+them byte-for-byte to prove the codec still reads every historical
+container format. This script exists for provenance: it documents exactly
+how the bytes were produced, using only the stdlib (the container's zstd
+chunks are hand-built raw-block frames, so no zstd bindings are needed
+and the compressed bytes are reproducible forever).
+
+Tensor patterns mirror rust/tests/container_golden.rs exactly. The v6
+fixture's rows each peak at the quantizer's qmax (127 for int8, 7 for
+int4) so the row scale is exactly 1.0 and integer-valued floats survive
+the quantize/dequantize round trip bit-exactly.
+"""
+
+import hashlib
+import os
+import struct
+
+MODEL = "mpic-sim-a"
+LAYERS, TOKENS, HEADS, D_HEAD, D_MODEL = 4, 2, 2, 2, 4
+ROW = HEADS * D_HEAD  # 4: the quantizer's K/V row width
+PER_LAYER = TOKENS * HEADS * D_HEAD  # 8 floats per layer per tensor
+KV_ELEMS = LAYERS * PER_LAYER  # 32
+EMB_ELEMS = TOKENS * D_MODEL  # 8
+
+
+def le32(x):
+    return struct.pack("<I", x)
+
+
+def le64(x):
+    return struct.pack("<Q", x)
+
+
+def lestr(s):
+    b = s.encode()
+    return le32(len(b)) + b
+
+
+def f32le(vals):
+    return b"".join(struct.pack("<f", v) for v in vals)
+
+
+def sha(b):
+    return hashlib.sha256(b).digest()
+
+
+def zstd_raw(data):
+    """A standard zstd frame holding `data` as one raw (stored) block.
+
+    magic | FHD=0x00 (no content size, no checksum, no dict)
+    | window descriptor 0x00 (1 KiB window; raw blocks never back-ref)
+    | 3-byte LE block header (size<<3 | type=0raw<<1 | last=1) | data
+    """
+    assert 0 < len(data) < 1024
+    hdr = (len(data) << 3) | 1
+    return b"\x28\xb5\x2f\xfd\x00\x00" + struct.pack("<I", hdr)[:3] + data
+
+
+def dims():
+    return b"".join(le32(d) for d in (LAYERS, TOKENS, HEADS, D_HEAD, D_MODEL))
+
+
+def chunk_body(payload, chunk_size):
+    """chunk_size u32 | n_chunks u32 | table | compressed chunks."""
+    chunks = [payload[i : i + chunk_size] for i in range(0, len(payload), chunk_size)]
+    comps = [zstd_raw(c) for c in chunks]
+    table = b"".join(le32(len(c)) + sha(c) for c in comps)
+    return le32(chunk_size) + le32(len(chunks)) + table + b"".join(comps), comps
+
+
+# --- full-precision tensors (v1..v5): multiples of 0.25, exact in f32 ---
+
+EMB_FP = [(i % 13) * 0.5 - 3.0 for i in range(EMB_ELEMS)]
+K_FP = [((i * 3) % 17) * 0.25 - 2.0 for i in range(KV_ELEMS)]
+V_FP = [((i * 7) % 19) * 0.25 - 2.25 for i in range(KV_ELEMS)]
+
+
+# --- quant-exact tensors (v6): every row peaks at qmax, so scale = 1.0 ---
+
+
+def q8(r, j):
+    if j == 0:
+        return 127.0 if r % 2 == 0 else -127.0
+    return float((r * 31 + j * 7) % 200 - 100)
+
+
+def q4(r, j):
+    if j == 0:
+        return 7.0 if r % 2 == 0 else -7.0
+    return float((r * 5 + j * 3) % 15 - 7)
+
+
+# K/V rows of layers 0..2 (rows 0..4, the int8 group) use the q8
+# pattern; layers 2..4 (rows 4..8, the int4 group) use q4.
+Q_SPLIT = 2 * PER_LAYER // ROW  # 4
+EMB_Q = [q8(i // ROW, i % ROW) for i in range(EMB_ELEMS)]
+K_Q = [
+    q8(i // ROW, i % ROW) if i // ROW < Q_SPLIT else q4(i // ROW, i % ROW)
+    for i in range(KV_ELEMS)
+]
+V_Q = [
+    q8(i // ROW + 3, i % ROW) if i // ROW < Q_SPLIT else q4(i // ROW + 3, i % ROW)
+    for i in range(KV_ELEMS)
+]
+
+
+def quant_section(vals, row, qmax):
+    """Per-row scale (f32 LE) + int8 bytes / packed int4 nibbles.
+
+    Asserts each row's max-abs equals qmax so scale is exactly 1.0 and
+    codes equal the (integer-valued) inputs.
+    """
+    out = b""
+    for r0 in range(0, len(vals), row):
+        r = vals[r0 : r0 + row]
+        assert max(abs(v) for v in r) == qmax, (r0, r)
+        assert all(v == int(v) and abs(v) <= qmax for v in r), (r0, r)
+        out += struct.pack("<f", 1.0)
+        codes = [int(v) for v in r]
+        if qmax == 127.0:
+            out += bytes(c & 0xFF for c in codes)
+        else:
+            packed = []
+            for i in range(0, len(codes), 2):
+                qa = codes[i] & 0x0F
+                qb = (codes[i + 1] & 0x0F) if i + 1 < len(codes) else 0
+                packed.append(qa | (qb << 4))
+            out += bytes(packed)
+    return out
+
+
+def prefix(version):
+    return b"MPKV" + le32(version) + lestr(MODEL)
+
+
+def build_v1():
+    payload = f32le(EMB_FP + K_FP + V_FP)
+    comp = zstd_raw(payload)
+    return prefix(1) + le64(0x5101) + dims() + le64(len(comp)) + sha(comp) + comp
+
+
+def build_v2():
+    payload = f32le(EMB_FP + K_FP + V_FP)  # 288 bytes -> 2 chunks of 256
+    body, _ = chunk_body(payload, 256)
+    return prefix(2) + le64(0x5102) + dims() + body
+
+
+def build_v3():
+    payload = f32le(K_FP + V_FP)  # chunk entry: no emb, 256 bytes -> 1 chunk
+    body, _ = chunk_body(payload, 256)
+    return prefix(3) + b"c" + le64(0x5103) + dims() + b"\x00" + body
+
+
+def build_v4():
+    payload = f32le(EMB_FP + K_FP + V_FP)  # 288 bytes -> 3 chunks of 128
+    body, _ = chunk_body(payload, 128)
+    seg = b"i" + le64(0x5104) + dims() + b"\x01"
+    return prefix(4) + lestr("tenant-gold") + seg + body
+
+
+def build_v5():
+    # Group-ordered payload, layers_per_group=2: g0 = emb ++ k/v layers
+    # 0..2 (160 bytes), g1 = k/v layers 2..4 (128 bytes); chunk_size=96
+    # so each group splits into chunks that never cross the boundary.
+    g0 = f32le(EMB_FP + K_FP[: 2 * PER_LAYER] + V_FP[: 2 * PER_LAYER])
+    g1 = f32le(K_FP[2 * PER_LAYER :] + V_FP[2 * PER_LAYER :])
+    chunk_size = 96
+    groups = [g0, g1]
+    comps, counts = [], []
+    for g in groups:
+        cs = [zstd_raw(g[i : i + chunk_size]) for i in range(0, len(g), chunk_size)]
+        counts.append(len(cs))
+        comps.extend(cs)
+    table = b"".join(le32(len(c)) + sha(c) for c in comps)
+    seg = b"i" + le64(0x5105) + dims() + b"\x01"
+    hdr = le32(2) + le32(2) + le32(chunk_size) + le32(sum(counts))
+    hdr += b"".join(le32(n) for n in counts)
+    return prefix(5) + lestr("") + seg + hdr + table + b"".join(comps)
+
+
+def build_v6():
+    # Same grouping as v5 but with quantized subpayloads: g0 int8
+    # (scale+codes per row -> 16+32+32 = 80 bytes), g1 int4 (48 bytes).
+    g0 = (
+        quant_section(EMB_Q, D_MODEL, 127.0)
+        + quant_section(K_Q[: 2 * PER_LAYER], ROW, 127.0)
+        + quant_section(V_Q[: 2 * PER_LAYER], ROW, 127.0)
+    )
+    g1 = quant_section(K_Q[2 * PER_LAYER :], ROW, 7.0) + quant_section(
+        V_Q[2 * PER_LAYER :], ROW, 7.0
+    )
+    assert len(g0) == 80 and len(g1) == 48, (len(g0), len(g1))
+    chunk_size = 64
+    comps, counts = [], []
+    for g in (g0, g1):
+        cs = [zstd_raw(g[i : i + chunk_size]) for i in range(0, len(g), chunk_size)]
+        counts.append(len(cs))
+        comps.extend(cs)
+    table = b"".join(le32(len(c)) + sha(c) for c in comps)
+    seg = b"i" + le64(0x5106) + dims() + b"\x01"
+    hdr = le32(2) + le32(2) + le32(chunk_size) + le32(sum(counts))
+    hdr += b"".join(le32(n) for n in counts)
+    hdr += bytes([1, 2])  # per-group quant levels: int8, int4
+    return prefix(6) + lestr("tenant-gold") + seg + hdr + table + b"".join(comps)
+
+
+def main():
+    here = os.path.dirname(os.path.abspath(__file__))
+    builders = {
+        "container_v1.bin": build_v1,
+        "container_v2.bin": build_v2,
+        "container_v3.bin": build_v3,
+        "container_v4.bin": build_v4,
+        "container_v5.bin": build_v5,
+        "container_v6.bin": build_v6,
+    }
+    for name, build in builders.items():
+        data = build()
+        path = os.path.join(here, name)
+        with open(path, "wb") as f:
+            f.write(data)
+        print(f"{name}: {len(data)} bytes sha256={hashlib.sha256(data).hexdigest()[:16]}")
+
+
+if __name__ == "__main__":
+    main()

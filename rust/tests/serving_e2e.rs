@@ -66,6 +66,7 @@ fn serving_end_to_end() {
     tcp_server_chunk_flow();
     tcp_server_v3_lease_lifecycle();
     tcp_server_namespace_isolation();
+    tcp_server_quant_ceiling();
     pipeline_concurrent_streaming();
     pipeline_backpressure_overload();
     pipeline_async_upload_lane();
@@ -922,6 +923,69 @@ fn tcp_server_namespace_isolation() {
     .unwrap();
     client.join().unwrap();
     println!("OK tcp server namespace isolation");
+}
+
+/// The per-tenant compression ceiling over the wire: `cache.quant` reads
+/// back the namespace default, a set is scoped to the caller's tenant,
+/// `"none"` opts a tenant out of compression entirely, and a bogus level
+/// is a `bad_value` — never a silent fallback.
+fn tcp_server_quant_ceiling() {
+    let engine = test_engine("quant");
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+
+    let client = std::thread::spawn(move || {
+        let addr = addr_rx.recv().unwrap();
+        let mut c = mpic::server::Client::connect(addr).unwrap();
+
+        // A bare read reports the default ceiling: int4, i.e. any
+        // configured tier floor applies unrestricted.
+        let cur = c.call(&v(r#"{"v":3,"op":"cache.quant"}"#)).unwrap();
+        assert_ok(&cur);
+        assert_eq!(cur.get("level").unwrap().as_str().unwrap(), "int4");
+
+        // Tighten tenant-q to int8; the write echoes the new ceiling and
+        // a follow-up read agrees.
+        let set = c
+            .call(&v(r#"{"v":3,"ns":"tenant-q","op":"cache.quant","level":"int8"}"#))
+            .unwrap();
+        assert_ok(&set);
+        assert_eq!(set.get("level").unwrap().as_str().unwrap(), "int8");
+        let back = c.call(&v(r#"{"v":3,"ns":"tenant-q","op":"cache.quant"}"#)).unwrap();
+        assert_eq!(back.get("level").unwrap().as_str().unwrap(), "int8");
+
+        // The ceiling is tenant-scoped: other namespaces keep the default.
+        let other = c.call(&v(r#"{"v":3,"ns":"tenant-r","op":"cache.quant"}"#)).unwrap();
+        assert_eq!(other.get("level").unwrap().as_str().unwrap(), "int4");
+        let root = c.call(&v(r#"{"v":3,"op":"cache.quant"}"#)).unwrap();
+        assert_eq!(root.get("level").unwrap().as_str().unwrap(), "int4");
+
+        // Opting out: "none" pins the tenant at full precision.
+        let off = c
+            .call(&v(r#"{"v":3,"ns":"tenant-q","op":"cache.quant","level":"none"}"#))
+            .unwrap();
+        assert_ok(&off);
+        assert_eq!(off.get("level").unwrap().as_str().unwrap(), "none");
+
+        // Unknown levels are rejected with a coded error.
+        assert_code(
+            &c.call(&v(r#"{"v":3,"op":"cache.quant","level":"int3"}"#)).unwrap(),
+            "bad_value",
+        );
+
+        // The op is metered like every other cache op.
+        let stats = c.call(&v(r#"{"v":3,"op":"stats"}"#)).unwrap();
+        let ops = stats.get("metrics").unwrap().get("ops").unwrap();
+        assert!(ops.get("cache.quant").unwrap().get("n").unwrap().as_f64().unwrap() >= 5.0);
+
+        assert_ok(&c.call(&v(r#"{"v":3,"op":"shutdown"}"#)).unwrap());
+    });
+
+    mpic::server::serve(&engine, "127.0.0.1:0", |a| {
+        addr_tx.send(a).unwrap();
+    })
+    .unwrap();
+    client.join().unwrap();
+    println!("OK tcp server quant ceiling");
 }
 
 /// Satellite e2e: cancel a streaming chat mid-flight. The victim gets a
